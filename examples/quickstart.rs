@@ -1,0 +1,60 @@
+//! Quickstart: quantize a weight matrix to packed INT4 in rust, run the
+//! AOT-compiled Split-K W4A16 kernel through PJRT, and check the result
+//! against the host reference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ascend_w4a16::quant;
+use ascend_w4a16::runtime::client::literal_to_host;
+use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
+use ascend_w4a16::tensor::MatF32;
+use ascend_w4a16::util::prng::Rng;
+use ascend_w4a16::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifact manifest produced by `make artifacts`.
+    let manifest = Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))?;
+    let entry = manifest.find("splitk_m16_n2048_k2048")?;
+    let (m, n, k) = entry.gemm.unwrap();
+    println!("artifact: {} (M={m}, N={n}, K={k}, S={})", entry.name, entry.splits);
+
+    // 2. Quantize a synthetic FP32 weight matrix to group-wise INT4.
+    let mut rng = Rng::new(2024);
+    let a = MatF32::from_vec(m, k, rng.normal_vec(m * k, 0.5));
+    let w = MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.05));
+    let qw = quant::quantize_groupwise(&w, manifest.group, false)?;
+    println!(
+        "weights: {} FP32 -> {} packed INT4 (+{} of scales/zeros)",
+        stats::fmt_bytes((k * n * 4) as f64),
+        stats::fmt_bytes(qw.packed_bytes() as f64),
+        stats::fmt_bytes((qw.scales.len() * 8) as f64),
+    );
+
+    // 3. Compile + execute through PJRT (this is the entire serving path —
+    //    no Python anywhere).
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load(entry)?;
+    let t0 = std::time::Instant::now();
+    let out = exe.run(&[
+        HostTensor::F32(a.data.clone()),
+        HostTensor::I8(qw.packed.clone()),
+        HostTensor::F32(qw.scales.clone()),
+        HostTensor::F32(qw.zeros.clone()),
+    ])?;
+    let elapsed = t0.elapsed();
+
+    // 4. Validate against the host reference (dequant + f16-rounded GEMM).
+    let got = MatF32::from_vec(m, n, literal_to_host(&out[0])?.as_f32()?);
+    let want = quant::w4a16_reference(&a, &qw);
+    let err = got.max_abs_diff(&want);
+    println!(
+        "executed in {} — max |err| vs reference {err:.3e}",
+        stats::fmt_ns(elapsed.as_nanos() as f64)
+    );
+    anyhow::ensure!(got.allclose(&want, 2e-2, 2e-2), "numerics mismatch");
+    println!("quickstart OK — C[0][0..4] = {:?}", &got.data[..4]);
+    Ok(())
+}

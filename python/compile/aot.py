@@ -1,0 +1,274 @@
+"""AOT lowering: jax graphs -> HLO text artifacts + manifest for the rust runtime.
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``artifacts`` target).  Python never runs again after this: the rust
+coordinator loads ``artifacts/*.hlo.txt`` through PJRT and executes them on
+the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  Lowering uses ``return_tuple=True``
+so the rust side always unwraps a tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, quantize
+
+DTYPE_NAMES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.float16): "f16",
+    np.dtype(np.int8): "i8",
+    np.dtype(np.int32): "i32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, arr_spec: jax.ShapeDtypeStruct) -> dict:
+    return {
+        "name": name,
+        "dtype": DTYPE_NAMES[np.dtype(arr_spec.dtype)],
+        "shape": list(arr_spec.shape),
+    }
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM artifacts (kernel correctness + quickstart)
+# ---------------------------------------------------------------------------
+
+# (M, N, K) shapes lowered for the rust runtime.  These are correctness /
+# example shapes; the paper-scale Figure 2/3 sweep runs on the simulator.
+GEMM_SHAPES = [
+    (16, 256, 512),
+    (16, 512, 2048),
+    (16, 2048, 2048),
+    (64, 1024, 4096),
+]
+
+STRATEGIES = ("splitk", "dp", "fused", "fp16")
+
+
+def _gemm_fn(strategy: str, cfg: configs.BlockConfig):
+    """Build the jitted artifact body for one (strategy, cfg).
+
+    Boundary dtypes are rust-friendly: activations f32 (cast to f16
+    inside), packed weights i8, scale/zero f32, output f32.
+    """
+
+    def splitk(a, packed, scales, zeros):
+        c = model.w4a16_matmul_splitk(a.astype(np.float16), packed, scales, zeros, cfg)
+        return (c.astype(np.float32),)
+
+    def dp(a, packed, scales, zeros):
+        c = model.w4a16_matmul_dp(a.astype(np.float16), packed, scales, zeros, cfg)
+        return (c.astype(np.float32),)
+
+    def fused(a, packed, scales, zeros):
+        c = model.w4a16_matmul_fused(a.astype(np.float16), packed, scales, zeros, cfg)
+        return (c.astype(np.float32),)
+
+    def fp16(a, b):
+        c = model.fp16_matmul(a.astype(np.float16), b.astype(np.float16), cfg)
+        return (c.astype(np.float32),)
+
+    return {"splitk": splitk, "dp": dp, "fused": fused, "fp16": fp16}[strategy]
+
+
+def build_gemm_artifacts(out_dir: str) -> list[dict]:
+    entries = []
+    for (m, n, k) in GEMM_SHAPES:
+        cfg = configs.select_blocks(m, n, k)
+        for strategy in STRATEGIES:
+            name = f"{strategy}_m{m}_n{n}_k{k}"
+            if strategy == "fp16":
+                in_specs = [
+                    ("a", _sds((m, k), np.float32)),
+                    ("b", _sds((k, n), np.float32)),
+                ]
+            else:
+                in_specs = [
+                    ("a", _sds((m, k), np.float32)),
+                    ("packed", _sds((k // 2, n), np.int8)),
+                    ("scales", _sds((k // cfg.group, n), np.float32)),
+                    ("zeros", _sds((k // cfg.group, n), np.float32)),
+                ]
+            fn = _gemm_fn(strategy, cfg)
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+            text = to_hlo_text(lowered)
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "kind": "gemm",
+                    "path": path,
+                    "strategy": strategy,
+                    "m": m,
+                    "n": n,
+                    "k": k,
+                    "group": cfg.group,
+                    "splits": cfg.splits if strategy == "splitk" else 1,
+                    "blocks": {"bm": cfg.bm, "bn": cfg.bn, "bk": cfg.bk},
+                    "inputs": [_spec(nm, s) for nm, s in in_specs],
+                    "outputs": [_spec("c", _sds((m, n), np.float32))],
+                }
+            )
+            print(f"  lowered {name} ({len(text)} chars, {time.time()-t0:.1f}s)")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Decode-model artifacts (+ weight blobs)
+# ---------------------------------------------------------------------------
+
+DECODE_VARIANTS = [
+    ("tiny", model.TINY, (1, 4), 0),
+    ("small100m", model.SMALL_100M, (1, 2, 4, 8), 1),
+]
+
+
+def _write_weights(out_dir: str, name: str, params: dict[str, np.ndarray]) -> dict:
+    """Concatenate weight tensors into one blob with an offset index."""
+    path = f"{name}_weights.bin"
+    index = []
+    offset = 0
+    with open(os.path.join(out_dir, path), "wb") as f:
+        for key, arr in params.items():
+            data = np.ascontiguousarray(arr).tobytes()
+            index.append(
+                {
+                    "name": key,
+                    "dtype": DTYPE_NAMES[np.dtype(arr.dtype)],
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "nbytes": len(data),
+                }
+            )
+            f.write(data)
+            offset += len(data)
+    return {"path": path, "tensors": index, "total_bytes": offset}
+
+
+def build_decode_artifacts(out_dir: str) -> list[dict]:
+    entries = []
+    for name, cfg, batch_sizes, seed in DECODE_VARIANTS:
+        params = model.init_decode_params(cfg, seed=seed)
+        weights = _write_weights(out_dir, f"decode_{name}", params)
+        param_specs = {k: _sds(v.shape, v.dtype) for k, v in params.items()}
+
+        for b in batch_sizes:
+            art = f"decode_{name}_b{b}"
+
+            def step(tokens, positions, cache, **kw):
+                return model.decode_step(kw, cfg, tokens, positions, cache)
+
+            io_specs = [
+                ("token_ids", _sds((b,), np.int32)),
+                ("positions", _sds((b,), np.int32)),
+                (
+                    "kv_cache",
+                    _sds((cfg.layers, 2, b, cfg.max_seq, cfg.hidden), np.float32),
+                ),
+            ]
+            t0 = time.time()
+            lowered = jax.jit(step).lower(
+                *[s for _, s in io_specs], **param_specs
+            )
+            text = to_hlo_text(lowered)
+            path = f"{art}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            # Keyword args are passed to XLA sorted by name after the
+            # positional ones; record the exact order for the rust loader.
+            kw_order = sorted(params.keys())
+            entries.append(
+                {
+                    "name": art,
+                    "kind": "decode",
+                    "path": path,
+                    "model": name,
+                    "batch": b,
+                    "config": {
+                        "vocab": cfg.vocab,
+                        "hidden": cfg.hidden,
+                        "layers": cfg.layers,
+                        "heads": cfg.heads,
+                        "ffn": cfg.ffn,
+                        "max_seq": cfg.max_seq,
+                        "group": cfg.group,
+                        "params": cfg.param_count(),
+                    },
+                    "weights": weights,
+                    "inputs": [_spec(nm, s) for nm, s in io_specs]
+                    + [_spec(k, param_specs[k]) for k in kw_order],
+                    "outputs": [
+                        _spec("logits", _sds((b, cfg.vocab), np.float32)),
+                        _spec("next_token", _sds((b,), np.int32)),
+                        _spec(
+                            "kv_cache",
+                            _sds(
+                                (cfg.layers, 2, b, cfg.max_seq, cfg.hidden),
+                                np.float32,
+                            ),
+                        ),
+                    ],
+                }
+            )
+            print(f"  lowered {art} ({len(text)} chars, {time.time()-t0:.1f}s)")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-decode", action="store_true",
+                    help="only lower the GEMM artifacts (fast dev loop)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("[aot] lowering GEMM artifacts")
+    entries = build_gemm_artifacts(args.out)
+    if not args.skip_decode:
+        print("[aot] lowering decode artifacts")
+        entries += build_decode_artifacts(args.out)
+
+    manifest = {
+        "version": 1,
+        "artifacts": entries,
+        "paper_shapes": [
+            {"model": s.model, "n": s.n, "k": s.k} for s in configs.PAPER_SHAPES
+        ],
+        "batch_sizes": list(configs.PAPER_BATCH_SIZES),
+        "group": configs.DEFAULT_GROUP,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(entries)} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

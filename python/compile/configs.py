@@ -1,0 +1,141 @@
+"""Shape tables and tiling configuration shared by the AOT pipeline, tests
+and benchmarks.
+
+The GEMM shape table mirrors the paper's §4.1 evaluation: decode-phase
+weight shapes drawn from OpenPangu, DeepSeek-R1, GLM-4.5 and LLaMA-3.2,
+plus the batch-size (M) sweep.  Weights are ``K x N`` (``C = A @ W`` with
+``A : M x K``), so "K >> N" is the down-projection / small-output regime the
+paper highlights for LLM decoding.
+
+The same table is duplicated on the rust side (``rust/src/model/llm.rs``);
+`python/tests/test_configs.py` and `rust/tests/schedules.rs` keep the two in
+sync through the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+DEFAULT_GROUP = 128
+
+# Cube-core granularity: MMAD operates on 16x16x16 FP16 tiles, so every
+# dimension fed to Phase 2 is padded to a multiple of 16 (the paper notes
+# small batches are padded, which is why exec time is flat in M).
+CUBE_TILE = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShape:
+    """One (model, N, K) row of the paper's Figure 2/3 sweep."""
+
+    model: str
+    n: int
+    k: int
+
+    @property
+    def tag(self) -> str:
+        return f"{self.model}-n{self.n}-k{self.k}"
+
+    @property
+    def k_dominant(self) -> bool:
+        """The paper's 'K >> N' regime (where Split-K is claimed to win)."""
+        return self.k >= 2 * self.n
+
+
+# Decode GEMM shapes per model family (hidden sizes from the public configs;
+# the paper does not list its exact table, so we take the canonical
+# projection shapes of each named model's decode path).
+PAPER_SHAPES: tuple[GemmShape, ...] = (
+    # LLaMA-3.2-1B: hidden 2048, ffn 8192
+    GemmShape("llama32", 2048, 2048),
+    GemmShape("llama32", 8192, 2048),
+    GemmShape("llama32", 2048, 8192),
+    # GLM-4.5 (dense trunk): hidden 5120, ffn 12288
+    GemmShape("glm45", 5120, 5120),
+    GemmShape("glm45", 12288, 5120),
+    GemmShape("glm45", 5120, 12288),
+    # DeepSeek-R1: hidden 7168; MoE expert inner 2048; kv-lora 1536
+    GemmShape("deepseek", 7168, 7168),
+    GemmShape("deepseek", 2048, 7168),
+    GemmShape("deepseek", 7168, 2048),
+    GemmShape("deepseek", 1536, 7168),
+    # OpenPangu (dense): hidden 7680, low-rank projection 1536
+    GemmShape("openpangu", 7680, 7680),
+    GemmShape("openpangu", 1536, 7680),
+)
+
+# Batch sizes (M) swept in Figures 2 and 3.
+PAPER_BATCH_SIZES: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Tiling for the three-phase pipeline (the paper's ``[m, n, k]``)."""
+
+    bm: int
+    bn: int
+    bk: int
+    splits: int
+    group: int = DEFAULT_GROUP
+
+    def validate(self, m: int, n: int, k: int) -> None:
+        if k % self.splits != 0:
+            raise ValueError(f"splits={self.splits} !| K={k}")
+        ks = k // self.splits
+        if m % self.bm or n % self.bn or ks % self.bk:
+            raise ValueError(
+                f"blocks ({self.bm},{self.bn},{self.bk}) must tile "
+                f"({m},{n},{ks})"
+            )
+        if self.bk % self.group:
+            raise ValueError(f"bk={self.bk} !| group={self.group}")
+
+
+def pad_to(x: int, mult: int) -> int:
+    """Round ``x`` up to a multiple of ``mult`` (cube-tile padding)."""
+    return ((x + mult - 1) // mult) * mult
+
+
+def select_blocks(m: int, n: int, k: int, *, group: int = DEFAULT_GROUP,
+                  splits: int | None = None) -> BlockConfig:
+    """Pick a legal block configuration for padded (m, n, k).
+
+    Mirrors the rust tiler (``rust/src/kernels/tiling.rs``): K blocks are a
+    multiple of the quantization group (so dequant tiles map to whole scale
+    rows), M blocks cover the whole padded batch (decode M is tiny), and N
+    blocks target the L0B capacity.
+    """
+    if splits is None:
+        splits = default_splits(n, k)
+    m_pad = pad_to(m, CUBE_TILE)
+    bm = min(m_pad, 64)
+    while m_pad % bm:
+        bm //= 2
+    bk = group
+    ks = k // splits
+    if ks % bk:
+        raise ValueError(f"K/S={ks} not a multiple of group={group}")
+    bn = 512
+    while n % bn:
+        bn //= 2
+    if bn < CUBE_TILE:
+        raise ValueError(f"N={n} not a multiple of the cube tile")
+    return BlockConfig(bm=bm, bn=bn, bk=bk, splits=splits, group=group)
+
+
+def default_splits(n: int, k: int, *, num_cores: int = 32,
+                   group: int = DEFAULT_GROUP) -> int:
+    """Heuristic split factor: enough K-splits to occupy all cube cores.
+
+    Data-parallel work items = ceil(N / bn); the Split-K factor tops up the
+    grid until ``splits * n_tiles >= num_cores`` without exceeding
+    K / group (each split must hold at least one quantization group).
+    """
+    bn = 512
+    while n % bn:
+        bn //= 2
+    n_tiles = max(1, n // bn)
+    s = 1
+    while s * n_tiles < num_cores and (k // (2 * s)) % group == 0 and k // (2 * s) >= group:
+        s *= 2
+    return s

@@ -1,0 +1,72 @@
+"""Phase 1 — INT4 -> FP16 dequantization kernel (vector-core / AIV analog).
+
+On the Ascend 910, cube cores cannot perform type conversion, so Algorithm 1
+runs dequantization on the vector cores and stages the FP16 result in a
+global-memory workspace that the cube cores later re-read.  This kernel is
+the Pallas realization of that phase: it is a *separate* ``pallas_call``
+whose output materializes as a real intermediate array between phases — the
+exact GM round trip the paper's bottleneck analysis is about.
+
+Hardware adaptation (see DESIGN.md §3): the AIV's 2048-bit SIMD lanes map to
+VPU-friendly elementwise ops on VMEM tiles; the MTE double-buffering maps to
+the Pallas grid pipeline; the Unified Buffer capacity constrains the block
+shape (checked in ``configs.select_blocks``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_kernel(packed_ref, scales_ref, zeros_ref, out_ref, *, group: int):
+    """Unpack two nibbles per byte and apply ``w = s * (q - z)``.
+
+    packed_ref: (bk // 2, bn) int8 — low nibble is row 2k, high is 2k+1.
+    scales_ref / zeros_ref: (bk // group, bn) f32.
+    out_ref: (bk, bn) f16.
+    """
+    p = packed_ref[...].astype(jnp.uint8)
+    lo = (p & 0xF).astype(jnp.float32)
+    hi = ((p >> 4) & 0xF).astype(jnp.float32)
+    half_k, bn = p.shape
+    # Interleave rows: out[2k] = lo[k], out[2k+1] = hi[k].
+    q = jnp.stack([lo, hi], axis=1).reshape(half_k * 2, bn)
+    s = jnp.repeat(scales_ref[...], group, axis=0)
+    z = jnp.repeat(zeros_ref[...], group, axis=0)
+    out_ref[...] = (s * (q - z)).astype(jnp.float16)
+
+
+def dequant(packed, scales, zeros, *, k: int, group: int, bk: int, bn: int,
+            interpret: bool = True) -> jnp.ndarray:
+    """Dequantize packed INT4 weights to an FP16 (K, N) workspace array.
+
+    Args:
+      packed: int8 (K//2, N) nibble-packed codes.
+      scales/zeros: f32 (K//group, N) group parameters.
+      k: logical K (rows of the dequantized matrix).
+      group: quantization group size along K.
+      bk/bn: block sizes; ``bk`` must be a positive multiple of ``group``
+        and divide K; ``bn`` must divide N.
+    """
+    n = packed.shape[1]
+    if bk % group != 0:
+        raise ValueError(f"bk={bk} must be a multiple of group={group}")
+    if k % bk != 0 or n % bn != 0:
+        raise ValueError(f"blocks ({bk},{bn}) must divide ({k},{n})")
+    grid = (k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk // 2, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float16),
+        interpret=interpret,
+    )(packed, scales, zeros)

@@ -1,0 +1,46 @@
+"""Native FP16 x FP16 tiled GEMM — the paper's PyTorch comparator.
+
+Single-pass data-parallel GEMM: weights are read from GM exactly once and
+no workspace round trip exists.  This is the baseline Figure 3 measures the
+W4A16 kernel against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, out_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def fp16_matmul(a, b, *, bm: int, bn: int, bk: int,
+                interpret: bool = True) -> jnp.ndarray:
+    """(M,K) f16 x (K,N) f16 -> (M,N) f16 with FP32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % bm != 0 or n % bn != 0 or k % bk != 0:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must tile ({m},{n},{k})")
+    grid = (m // bm, n // bn, k // bk)
+    acc = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float16), b.astype(jnp.float16))
+    return acc.astype(jnp.float16)

@@ -1,0 +1,65 @@
+"""Fused W4A16 GEMM — the paper's *future-work* ablation.
+
+The paper's conclusion calls for "direct data paths between vector and cube
+units or fused instructions that bypass global memory".  This kernel models
+that hypothetical hardware: dequantization happens *inside* the matmul
+kernel on the tile already staged on-chip, so the FP16 weights never make a
+global-memory round trip.  Comparing this ablation against the three-phase
+pipeline quantifies exactly how much the decoupled architecture costs
+(EXPERIMENTS.md, Ablation A).
+
+Constraint: the K block size equals the quantization group size so each
+weight tile maps to a single (scale, zero) row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(a_ref, packed_ref, scales_ref, zeros_ref, out_ref, *, group: int):
+    """Dequantize one (bk, bn) weight tile in-register and MMAD it."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = packed_ref[...].astype(jnp.uint8)
+    lo = (p & 0xF).astype(jnp.float32)
+    hi = ((p >> 4) & 0xF).astype(jnp.float32)
+    half_k, bn = p.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(half_k * 2, bn)
+    w = (scales_ref[...] * (q - zeros_ref[...])).astype(jnp.float16)
+    out_ref[...] += jnp.dot(a_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def fused_w4a16_matmul(a, packed, scales, zeros, *, group: int, bm: int, bn: int,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(M,K) f16 x packed-INT4 (K//2,N) -> (M,N) f16, dequant fused in-kernel.
+
+    The K block size is pinned to ``group`` (one scale row per tile).
+    """
+    m, k = a.shape
+    n = packed.shape[1]
+    bk = group
+    if k % bk != 0 or m % bm != 0 or n % bn != 0:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must tile ({m},{n},{k})")
+    grid = (m // bm, n // bn, k // bk)
+    acc = pl.pallas_call(
+        functools.partial(_fused_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, t: (i, t)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (t, j)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float16), packed, scales, zeros)
+    return acc.astype(jnp.float16)

@@ -1,0 +1,34 @@
+"""Phase 3 — Split-buffer reduction + FP32 -> FP16 cast (vector-core / AIV analog).
+
+After all cube cores have finished, vector cores partition the output
+elements, sum the ``S`` FP32 partial buffers elementwise and cast the result
+to FP16 (Algorithm 1, Phase 3).  The cross-phase barrier ("wait for all AIC
+cores") is realized by the data dependence between the ``pallas_call``s.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(parts_ref, out_ref):
+    """Sum the split axis of an (S, bm, bn) FP32 block, cast to FP16."""
+    out_ref[...] = parts_ref[...].sum(axis=0).astype(jnp.float16)
+
+
+def reduce_splits(partials, *, bm: int, bn: int, interpret: bool = True) -> jnp.ndarray:
+    """(S, M, N) f32 partials -> (M, N) f16 output."""
+    s, m, n = partials.shape
+    if m % bm != 0 or n % bn != 0:
+        raise ValueError(f"blocks ({bm},{bn}) must tile ({m},{n})")
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((s, bm, bn), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float16),
+        interpret=interpret,
+    )(partials)

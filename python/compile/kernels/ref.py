@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (and, transitively, the rust
+runtime executing the AOT artifacts) are validated against.  They use no
+Pallas machinery at all — plain jnp ops only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantize import unpack_int4_jnp
+
+
+def dequant_ref(packed, scales, zeros, k: int, group: int) -> jnp.ndarray:
+    """Dequantize packed INT4 codes to FP16: ``w = s * (q - z)``.
+
+    packed: int8 (K//2, N); scales/zeros: f32 (K//g, N) -> f16 (K, N).
+    """
+    q = unpack_int4_jnp(packed, k).astype(jnp.float32)
+    s = jnp.repeat(scales, group, axis=0)
+    z = jnp.repeat(zeros, group, axis=0)
+    return (s * (q - z)).astype(jnp.float16)
+
+
+def matmul_ref(a, b) -> jnp.ndarray:
+    """FP16 x FP16 -> FP16 GEMM with FP32 accumulation (cube-core semantics)."""
+    acc = jnp.dot(
+        a.astype(jnp.float16),
+        b.astype(jnp.float16),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(jnp.float16)
+
+
+def splitk_partials_ref(a, b, splits: int) -> jnp.ndarray:
+    """FP32 partial products C_i = A[:, ks] @ B[ks, :] per K-split -> (S, M, N)."""
+    m, k = a.shape
+    ks = k // splits
+    parts = []
+    for s in range(splits):
+        parts.append(
+            jnp.dot(
+                a[:, s * ks : (s + 1) * ks].astype(jnp.float16),
+                b[s * ks : (s + 1) * ks, :].astype(jnp.float16),
+                preferred_element_type=jnp.float32,
+            )
+        )
+    return jnp.stack(parts, axis=0)
+
+
+def reduce_ref(partials) -> jnp.ndarray:
+    """Phase-3 oracle: sum FP32 partials over the split axis, cast to FP16."""
+    return partials.sum(axis=0).astype(jnp.float16)
+
+
+def w4a16_ref(a, packed, scales, zeros, group: int) -> jnp.ndarray:
+    """End-to-end W4A16 oracle: dequant then FP16 GEMM (FP32 accumulate)."""
+    k = a.shape[1]
+    b = dequant_ref(packed, scales, zeros, k, group)
+    return matmul_ref(a, b)

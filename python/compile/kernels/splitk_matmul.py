@@ -1,0 +1,60 @@
+"""Phase 2 — Split-K tiled FP16 GEMM with FP32 accumulation (cube / AIC analog).
+
+Computes partial products ``C_s = A[:, s*K/S:(s+1)*K/S] @ B[...]`` for each
+of the ``S`` K-splits and writes them to an FP32 ``(S, M, N)`` split buffer
+in global memory — Phase 2 of Algorithm 1.  Each grid step performs one
+``(bm x bk) @ (bk x bn)`` MMAD-shaped dot with FP32 accumulation, the Pallas
+analog of the cube core's 16x16x16 FP16 ``Mmad`` with the L0C accumulator.
+
+The output revisiting pattern (grid dim ``k`` maps to the same output block)
+is how Pallas expresses L0C accumulation across K-steps; the split buffers
+live in "GM" (a real output array) exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _splitk_kernel(a_ref, b_ref, out_ref):
+    """One MMAD step: accumulate a (bm,bk)@(bk,bn) dot into the FP32 block."""
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )[None, :, :]
+
+
+def splitk_matmul(a, b, *, splits: int, bm: int, bn: int, bk: int,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Split-K partial GEMM: (M,K) f16 x (K,N) f16 -> (S, M, N) f32 partials.
+
+    ``splits`` must divide K, and (bm, bn, bk) must tile (M, N, K/S).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if k % splits != 0:
+        raise ValueError(f"splits={splits} must divide K={k}")
+    ks = k // splits
+    if m % bm != 0 or n % bn != 0 or ks % bk != 0:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must tile ({m},{n},{ks})")
+    ksteps = ks // bk
+    grid = (splits, m // bm, n // bn, ksteps)
+    return pl.pallas_call(
+        _splitk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda s, i, j, t: (i, s * (ks // bk) + t)),
+            pl.BlockSpec((bk, bn), lambda s, i, j, t: (s * (ks // bk) + t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda s, i, j, t: (s, i, j)),
+        out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float16), b.astype(jnp.float16))

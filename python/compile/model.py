@@ -1,0 +1,298 @@
+"""L2 — JAX compute graphs composing the Pallas kernels.
+
+Two families live here:
+
+1. **Matmul pipelines** — the paper's Algorithm 1 as a jax function: three
+   separate ``pallas_call`` phases (dequant -> Split-K MMAD -> reduce) with
+   the FP16 workspace and FP32 split buffers materializing between them,
+   plus the data-parallel, fused and native-FP16 comparators.
+2. **Decode model** — a ~100M-parameter decoder-only transformer whose every
+   linear layer runs through the W4A16 pipeline; one decode step (with KV
+   cache) is AOT-lowered for the rust serving runtime.
+
+Everything here is traced/lowered at build time only; the rust coordinator
+executes the resulting HLO artifacts through PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, quantize
+from .kernels import dequant as kdequant
+from .kernels import fp16_gemm as kfp16
+from .kernels import fused_w4a16 as kfused
+from .kernels import reduce as kreduce
+from .kernels import splitk_matmul as ksplitk
+
+# ---------------------------------------------------------------------------
+# Matmul pipelines (Algorithm 1 and its comparators)
+# ---------------------------------------------------------------------------
+
+
+def w4a16_matmul_splitk(a, packed, scales, zeros, cfg: configs.BlockConfig):
+    """Three-phase Split-K W4A16 matmul (Algorithm 1).
+
+    a: (M, K) fp16-representable; packed: int8 (K//2, N);
+    scales/zeros: f32 (K//group, N).  Returns (M, N) f16.
+    """
+    m, k = a.shape
+    n = packed.shape[1]
+    cfg.validate(m, n, k)
+    # Phase 1 (AIV): dequantize to the FP16 global-memory workspace.
+    workspace = kdequant.dequant(
+        packed, scales, zeros, k=k, group=cfg.group, bk=cfg.bk, bn=cfg.bn
+    )
+    # Phase 2 (AIC): Split-K MMAD into FP32 split buffers.
+    partials = ksplitk.splitk_matmul(
+        a.astype(jnp.float16), workspace,
+        splits=cfg.splits, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+    )
+    # Phase 3 (AIV): reduce the splits, cast to FP16.
+    return kreduce.reduce_splits(partials, bm=cfg.bm, bn=cfg.bn)
+
+
+def w4a16_matmul_dp(a, packed, scales, zeros, cfg: configs.BlockConfig):
+    """Data-parallel comparator: dequant phase + single-pass GEMM (S = 1)."""
+    m, k = a.shape
+    n = packed.shape[1]
+    workspace = kdequant.dequant(
+        packed, scales, zeros, k=k, group=cfg.group, bk=cfg.bk, bn=cfg.bn
+    )
+    return kfp16.fp16_matmul(
+        a.astype(jnp.float16), workspace, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk
+    )
+
+
+def w4a16_matmul_fused(a, packed, scales, zeros, cfg: configs.BlockConfig):
+    """Future-work ablation: dequant fused into the MMAD kernel (no workspace)."""
+    return kfused.fused_w4a16_matmul(
+        a.astype(jnp.float16), packed, scales, zeros,
+        group=cfg.group, bm=cfg.bm, bn=cfg.bn,
+    )
+
+
+def fp16_matmul(a, b, cfg: configs.BlockConfig):
+    """Native FP16 x FP16 comparator (the 'PyTorch' baseline of Figure 3)."""
+    return kfp16.fp16_matmul(
+        a.astype(jnp.float16), b.astype(jnp.float16),
+        bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+    )
+
+
+def w4a16_linear(x, packed, scales, zeros, *, group: int = configs.DEFAULT_GROUP):
+    """W4A16 linear layer for model code: pads M to the cube tile, picks
+    blocks automatically, runs the Split-K pipeline and slices the pad off."""
+    m, k = x.shape
+    n = packed.shape[1]
+    m_pad = configs.pad_to(m, configs.CUBE_TILE)
+    cfg = configs.select_blocks(m_pad, n, k, group=group)
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    out = w4a16_matmul_splitk(x, packed, scales, zeros, cfg)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Decode model (~100M parameters, every linear through W4A16)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer geometry (all dims multiples of the group)."""
+
+    vocab: int = 8192
+    hidden: int = 768
+    layers: int = 12
+    heads: int = 12
+    ffn: int = 3072
+    max_seq: int = 64
+    group: int = configs.DEFAULT_GROUP
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        """Approximate (unquantized) parameter count."""
+        per_layer = 4 * self.hidden * self.hidden + 2 * self.hidden * self.ffn
+        return self.layers * per_layer + 2 * self.vocab * self.hidden
+
+
+TINY = ModelConfig(vocab=512, hidden=256, layers=2, heads=4, ffn=512, max_seq=32)
+SMALL_100M = ModelConfig()
+
+
+def _quant_linear_params(rng, k: int, n: int, group: int, name: str):
+    w = (rng.standard_normal((k, n)) * (0.8 / np.sqrt(k))).astype(np.float32)
+    qw = quantize.quantize_groupwise(w, group=group)
+    return {
+        f"{name}.packed": qw.packed,
+        f"{name}.scales": qw.scales,
+        f"{name}.zeros": qw.zeros,
+    }
+
+
+def init_decode_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    """Synthetic-but-deterministic quantized decode weights (host arrays).
+
+    The returned dict ordering is the canonical artifact input order; the
+    rust side reads the same ordering from the manifest.
+    """
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    params["embed"] = (
+        rng.standard_normal((cfg.vocab, cfg.hidden)) * 0.02
+    ).astype(np.float32)
+    for layer in range(cfg.layers):
+        pre = f"layer{layer}"
+        params[f"{pre}.ln1"] = np.ones(cfg.hidden, dtype=np.float32)
+        params.update(
+            _quant_linear_params(rng, cfg.hidden, 3 * cfg.hidden, cfg.group, f"{pre}.qkv")
+        )
+        params.update(
+            _quant_linear_params(rng, cfg.hidden, cfg.hidden, cfg.group, f"{pre}.out")
+        )
+        params[f"{pre}.ln2"] = np.ones(cfg.hidden, dtype=np.float32)
+        params.update(
+            _quant_linear_params(rng, cfg.hidden, cfg.ffn, cfg.group, f"{pre}.up")
+        )
+        params.update(
+            _quant_linear_params(rng, cfg.ffn, cfg.hidden, cfg.group, f"{pre}.down")
+        )
+    params["ln_f"] = np.ones(cfg.hidden, dtype=np.float32)
+    params.update(
+        _quant_linear_params(rng, cfg.hidden, cfg.vocab, cfg.group, "lm_head")
+    )
+    return params
+
+
+def _rmsnorm(x, gamma):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + 1e-5) * gamma).astype(x.dtype)
+
+
+def _linear(params: dict[str, Any], name: str, x, group: int):
+    return w4a16_linear(
+        x,
+        params[f"{name}.packed"],
+        params[f"{name}.scales"],
+        params[f"{name}.zeros"],
+        group=group,
+    )
+
+
+def decode_step(params: dict[str, Any], cfg: ModelConfig, token_ids, positions,
+                kv_cache):
+    """One batched decode step.
+
+    token_ids: i32 (B,); positions: i32 (B,) — write index per sequence;
+    kv_cache: f32 (layers, 2, B, max_seq, hidden).
+    Returns (logits f32 (B, vocab), next_token i32 (B,), new_cache).
+    """
+    b = token_ids.shape[0]
+    x = params["embed"].astype(jnp.float16)[token_ids]  # (B, H)
+    pos_axis = jnp.arange(cfg.max_seq)[None, :]  # (1, T)
+    # valid[t] for key positions t <= current position
+    mask = (pos_axis <= positions[:, None]).astype(jnp.float32)  # (B, T)
+    new_cache = kv_cache
+
+    for layer in range(cfg.layers):
+        pre = f"layer{layer}"
+        h = _rmsnorm(x, params[f"{pre}.ln1"])
+        qkv = _linear(params, f"{pre}.qkv", h, cfg.group)  # (B, 3H)
+        q, k_new, v_new = jnp.split(qkv.astype(jnp.float32), 3, axis=-1)
+
+        # Scatter this step's K/V into the cache at each sequence's position.
+        k_cache = new_cache[layer, 0]  # (B, T, H)
+        v_cache = new_cache[layer, 1]
+        onehot = (pos_axis == positions[:, None]).astype(jnp.float32)  # (B, T)
+        k_cache = k_cache * (1.0 - onehot[..., None]) + onehot[..., None] * k_new[:, None, :]
+        v_cache = v_cache * (1.0 - onehot[..., None]) + onehot[..., None] * v_new[:, None, :]
+        new_cache = new_cache.at[layer, 0].set(k_cache)
+        new_cache = new_cache.at[layer, 1].set(v_cache)
+
+        # Attention over the cache (per head).
+        hd = cfg.head_dim
+        qh = q.reshape(b, cfg.heads, hd)
+        kh = k_cache.reshape(b, cfg.max_seq, cfg.heads, hd)
+        vh = v_cache.reshape(b, cfg.max_seq, cfg.heads, hd)
+        scores = jnp.einsum("bhd,bthd->bht", qh, kh) / np.sqrt(hd)
+        scores = jnp.where(mask[:, None, :] > 0, scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bht,bthd->bhd", probs, vh).reshape(b, cfg.hidden)
+
+        x = x + _linear(params, f"{pre}.out", ctx.astype(jnp.float16), cfg.group)
+        h = _rmsnorm(x, params[f"{pre}.ln2"])
+        u = _linear(params, f"{pre}.up", h, cfg.group)
+        u = jax.nn.gelu(u.astype(jnp.float32)).astype(jnp.float16)
+        x = x + _linear(params, f"{pre}.down", u, cfg.group)
+
+    h = _rmsnorm(x, params["ln_f"])
+    logits = _linear(params, "lm_head", h, cfg.group).astype(jnp.float32)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return logits, next_token, new_cache
+
+
+def decode_step_ref(params: dict[str, Any], cfg: ModelConfig, token_ids,
+                    positions, kv_cache):
+    """Oracle twin of :func:`decode_step` using dequantized FP16 weights and
+    plain jnp matmuls (no Pallas) — used by the python tests."""
+    from .kernels import ref
+
+    dense: dict[str, Any] = {}
+    for key, val in params.items():
+        if key.endswith(".packed"):
+            base = key[: -len(".packed")]
+            kdim = val.shape[0] * 2
+            dense[base] = ref.dequant_ref(
+                jnp.asarray(val), jnp.asarray(params[f"{base}.scales"]),
+                jnp.asarray(params[f"{base}.zeros"]), kdim, cfg.group,
+            )
+        elif "." not in key or key.endswith(("ln1", "ln2")) or key in ("embed", "ln_f"):
+            dense[key] = jnp.asarray(val)
+
+    def lin(name, x):
+        return ref.matmul_ref(x, dense[name])
+
+    b = token_ids.shape[0]
+    x = dense["embed"].astype(jnp.float16)[token_ids]
+    pos_axis = jnp.arange(cfg.max_seq)[None, :]
+    mask = (pos_axis <= positions[:, None]).astype(jnp.float32)
+    new_cache = kv_cache
+    for layer in range(cfg.layers):
+        pre = f"layer{layer}"
+        h = _rmsnorm(x, dense[f"{pre}.ln1"])
+        qkv = lin(f"{pre}.qkv", h)
+        q, k_new, v_new = jnp.split(qkv.astype(jnp.float32), 3, axis=-1)
+        k_cache = new_cache[layer, 0]
+        v_cache = new_cache[layer, 1]
+        onehot = (pos_axis == positions[:, None]).astype(jnp.float32)
+        k_cache = k_cache * (1.0 - onehot[..., None]) + onehot[..., None] * k_new[:, None, :]
+        v_cache = v_cache * (1.0 - onehot[..., None]) + onehot[..., None] * v_new[:, None, :]
+        new_cache = new_cache.at[layer, 0].set(k_cache)
+        new_cache = new_cache.at[layer, 1].set(v_cache)
+        hd = cfg.head_dim
+        qh = q.reshape(b, cfg.heads, hd)
+        kh = k_cache.reshape(b, cfg.max_seq, cfg.heads, hd)
+        vh = v_cache.reshape(b, cfg.max_seq, cfg.heads, hd)
+        scores = jnp.einsum("bhd,bthd->bht", qh, kh) / np.sqrt(hd)
+        scores = jnp.where(mask[:, None, :] > 0, scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bht,bthd->bhd", probs, vh).reshape(b, cfg.hidden)
+        x = x + lin(f"{pre}.out", ctx.astype(jnp.float16))
+        h = _rmsnorm(x, dense[f"{pre}.ln2"])
+        u = lin(f"{pre}.up", h)
+        u = jax.nn.gelu(u.astype(jnp.float32)).astype(jnp.float16)
+        x = x + lin(f"{pre}.down", u)
+    h = _rmsnorm(x, dense["ln_f"])
+    logits = lin("lm_head", h).astype(jnp.float32)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return logits, next_token, new_cache

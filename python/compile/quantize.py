@@ -1,0 +1,136 @@
+"""Group-wise INT4 weight quantization and nibble packing.
+
+Host-side (build-time) utilities shared by the kernels, the AOT pipeline and
+the tests.  The storage convention matches the rust side
+(``rust/src/quant``):
+
+* Weights ``W`` are ``K x N`` (activations ``A`` are ``M x K``; ``C = A @ W``).
+* Quantization is **group-wise along K** with group size ``g`` (default 128):
+  every column ``n`` and K-group ``t`` share one ``(scale, zero)`` pair, i.e.
+  ``scales``/``zeros`` have shape ``(K // g, N)``.
+* Quantized codes are **unsigned** nibbles ``q in [0, 15]`` with an affine
+  mapping ``w = s * (q - z)`` (uniform affine quantization, eq. (1)+(2) of
+  the paper).  Symmetric quantization is the special case ``z = 8``.
+* Packing: two codes per byte along K. Byte ``b[k, n]`` holds
+  ``q[2k, n]`` in the **low** nibble and ``q[2k + 1, n]`` in the **high**
+  nibble, giving a ``(K // 2, N)`` int8 array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_GROUP = 128
+QMIN = 0
+QMAX = 15
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    """A K x N weight matrix quantized to packed INT4 + group metadata."""
+
+    packed: np.ndarray  # int8 (K//2, N), two nibbles per byte along K
+    scales: np.ndarray  # float32 (K//g, N)
+    zeros: np.ndarray  # float32 (K//g, N), in code units (0..15)
+    group: int
+    k: int
+    n: int
+
+    @property
+    def packed_bytes(self) -> int:
+        return self.packed.size
+
+    def dequantize(self) -> np.ndarray:
+        """Reference host dequantization back to float32 (K, N)."""
+        q = unpack_int4(self.packed, self.k)
+        s = np.repeat(self.scales, self.group, axis=0)
+        z = np.repeat(self.zeros, self.group, axis=0)
+        return (s * (q.astype(np.float32) - z)).astype(np.float32)
+
+
+def quantize_groupwise(
+    w: np.ndarray, group: int = DEFAULT_GROUP, symmetric: bool = False
+) -> QuantizedWeight:
+    """Quantize a float (K, N) matrix to group-wise INT4.
+
+    ``symmetric=True`` pins the zero-point to the mid-code 8 and uses a
+    scale derived from ``max |w|`` per group; otherwise an asymmetric
+    min/max affine fit is used.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    k, n = w.shape
+    if k % group != 0:
+        raise ValueError(f"K={k} not divisible by group={group}")
+    if k % 2 != 0:
+        raise ValueError(f"K={k} must be even for nibble packing")
+    groups = k // group
+    wg = w.reshape(groups, group, n)
+
+    if symmetric:
+        amax = np.abs(wg).max(axis=1)  # (groups, n)
+        scales = np.where(amax == 0.0, 1.0, amax / 7.0).astype(np.float32)
+        zeros = np.full((groups, n), 8.0, dtype=np.float32)
+    else:
+        lo = wg.min(axis=1)
+        hi = wg.max(axis=1)
+        span = hi - lo
+        # Degenerate (constant) groups fall back to symmetric parameters so
+        # the constant value stays exactly representable.
+        degenerate = span == 0.0
+        sym_scale = np.where(np.abs(lo) == 0.0, 1.0, np.abs(lo) / 7.0)
+        scales = np.where(degenerate, sym_scale, span / float(QMAX)).astype(np.float32)
+        zeros = np.where(
+            degenerate, 8.0, np.clip(np.round(-lo / scales), QMIN, QMAX)
+        ).astype(np.float32)
+
+    q = np.round(wg / scales[:, None, :] + zeros[:, None, :])
+    q = np.clip(q, QMIN, QMAX).astype(np.uint8).reshape(k, n)
+    return QuantizedWeight(
+        packed=pack_int4(q), scales=scales, zeros=zeros, group=group, k=k, n=n
+    )
+
+
+def pack_int4(q: np.ndarray) -> np.ndarray:
+    """Pack unsigned nibbles (K, N) uint8 -> (K//2, N) int8.
+
+    Row ``2k`` goes to the low nibble, row ``2k+1`` to the high nibble.
+    """
+    q = np.asarray(q, dtype=np.uint8)
+    if q.ndim != 2 or q.shape[0] % 2 != 0:
+        raise ValueError(f"bad shape for packing: {q.shape}")
+    if q.max(initial=0) > QMAX:
+        raise ValueError("nibble out of range")
+    lo = q[0::2, :]
+    hi = q[1::2, :]
+    return ((hi << 4) | lo).astype(np.int8)
+
+
+def unpack_int4(packed: np.ndarray, k: int) -> np.ndarray:
+    """Unpack (K//2, N) int8 -> (K, N) uint8 codes."""
+    p = np.asarray(packed).view(np.uint8) if packed.dtype == np.int8 else np.asarray(packed, dtype=np.uint8)
+    if p.shape[0] * 2 != k:
+        raise ValueError(f"packed rows {p.shape[0]} inconsistent with K={k}")
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    out = np.empty((k, p.shape[1]), dtype=np.uint8)
+    out[0::2, :] = lo
+    out[1::2, :] = hi
+    return out
+
+
+def unpack_int4_jnp(packed: jnp.ndarray, k: int) -> jnp.ndarray:
+    """jnp twin of :func:`unpack_int4` (used in traced code / ref oracle)."""
+    p = packed.astype(jnp.uint8)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    stacked = jnp.stack([lo, hi], axis=1)  # (K//2, 2, N)
+    return stacked.reshape(k, p.shape[1])
+
+
+def random_weight(k: int, n: int, seed: int = 0, scale: float = 0.05) -> np.ndarray:
+    """Deterministic synthetic weight matrix with LLM-like magnitude."""
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((k, n)) * scale).astype(np.float32)

@@ -1,0 +1,114 @@
+"""AOT pipeline tests: HLO text generation and manifest structure.
+
+These keep the build-time contract with the rust loader honest without
+paying for a full `make artifacts` run (decode lowering is covered by the
+rust integration tests against real artifacts).
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, configs
+
+
+class TestToHloText:
+    def test_emits_parseable_entry(self):
+        def fn(x):
+            return (x * 2.0,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), np.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "f32[4]" in text
+
+    def test_tuple_return_convention(self):
+        """The rust side always unwraps a tuple — lowering must produce one."""
+        def fn(x):
+            return (x + 1.0,)
+
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2,), np.float32))
+        text = aot.to_hlo_text(lowered)
+        assert "(f32[2]" in text  # tuple-typed root
+
+
+class TestGemmArtifacts:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory, monkeypatch_class=None):
+        out = tmp_path_factory.mktemp("artifacts")
+        # Trim to one shape for speed; full set exercised by `make artifacts`.
+        orig = aot.GEMM_SHAPES
+        aot.GEMM_SHAPES = [(16, 256, 512)]
+        try:
+            entries = aot.build_gemm_artifacts(str(out))
+        finally:
+            aot.GEMM_SHAPES = orig
+        return out, entries
+
+    def test_all_strategies_emitted(self, built):
+        _, entries = built
+        assert {e["strategy"] for e in entries} == set(aot.STRATEGIES)
+
+    def test_files_exist_and_nonempty(self, built):
+        out, entries = built
+        for e in entries:
+            p = os.path.join(str(out), e["path"])
+            assert os.path.getsize(p) > 100
+
+    def test_input_specs_match_convention(self, built):
+        _, entries = built
+        for e in entries:
+            names = [i["name"] for i in e["inputs"]]
+            if e["strategy"] == "fp16":
+                assert names == ["a", "b"]
+            else:
+                assert names == ["a", "packed", "scales", "zeros"]
+                packed = e["inputs"][1]
+                assert packed["dtype"] == "i8"
+                assert packed["shape"] == [e["k"] // 2, e["n"]]
+
+    def test_splits_recorded_only_for_splitk(self, built):
+        _, entries = built
+        for e in entries:
+            if e["strategy"] == "splitk":
+                assert e["splits"] >= 1
+            else:
+                assert e["splits"] == 1
+
+    def test_manifest_round_trips_json(self, built):
+        _, entries = built
+        manifest = {
+            "version": 1,
+            "artifacts": entries,
+            "paper_shapes": [
+                {"model": s.model, "n": s.n, "k": s.k} for s in configs.PAPER_SHAPES
+            ],
+            "batch_sizes": list(configs.PAPER_BATCH_SIZES),
+            "group": configs.DEFAULT_GROUP,
+        }
+        text = json.dumps(manifest)
+        assert json.loads(text)["group"] == 128
+
+
+class TestWeightBlob:
+    def test_offsets_contiguous(self, tmp_path):
+        params = {
+            "a": np.zeros((4, 4), np.float32),
+            "b": np.ones((2,), np.int8),
+        }
+        info = aot._write_weights(str(tmp_path), "t", params)
+        assert info["tensors"][0]["offset"] == 0
+        assert info["tensors"][1]["offset"] == 64
+        assert info["total_bytes"] == 66
+        assert os.path.getsize(tmp_path / "t_weights.bin") == 66
+
+    def test_blob_content_round_trips(self, tmp_path):
+        rng = np.random.default_rng(3)
+        params = {"w": rng.standard_normal((8, 8)).astype(np.float32)}
+        info = aot._write_weights(str(tmp_path), "t2", params)
+        raw = (tmp_path / "t2_weights.bin").read_bytes()
+        back = np.frombuffer(raw, dtype=np.float32).reshape(8, 8)
+        np.testing.assert_array_equal(back, params["w"])

@@ -1,0 +1,60 @@
+"""Tiling / shape-table tests: every paper shape must produce a legal config."""
+
+import pytest
+
+from compile import configs
+
+
+class TestPaperShapes:
+    def test_table_covers_all_models(self):
+        models = {s.model for s in configs.PAPER_SHAPES}
+        assert models == {"llama32", "glm45", "deepseek", "openpangu"}
+
+    def test_k_dominant_shapes_exist(self):
+        """The paper's K >> N regime must be represented."""
+        assert any(s.k_dominant for s in configs.PAPER_SHAPES)
+        assert any(not s.k_dominant for s in configs.PAPER_SHAPES)
+
+    def test_all_dims_group_multiples(self):
+        for s in configs.PAPER_SHAPES:
+            assert s.n % configs.DEFAULT_GROUP == 0 or s.n % 512 == 0
+            assert s.k % configs.DEFAULT_GROUP == 0
+
+
+class TestSelectBlocks:
+    @pytest.mark.parametrize("shape", configs.PAPER_SHAPES, ids=lambda s: s.tag)
+    @pytest.mark.parametrize("m", configs.PAPER_BATCH_SIZES)
+    def test_valid_for_paper_sweep(self, shape, m):
+        m_pad = configs.pad_to(m, configs.CUBE_TILE)
+        cfg = configs.select_blocks(m_pad, shape.n, shape.k)
+        cfg.validate(m_pad, shape.n, shape.k)
+
+    def test_split_factor_increases_when_n_small(self):
+        s_small_n = configs.select_blocks(16, 512, 8192).splits
+        s_large_n = configs.select_blocks(16, 8192, 512).splits
+        assert s_small_n > s_large_n
+
+    def test_rejects_non_tile_n(self):
+        with pytest.raises(ValueError):
+            configs.select_blocks(16, 17, 256)
+
+    def test_pad_to(self):
+        assert configs.pad_to(1, 16) == 16
+        assert configs.pad_to(16, 16) == 16
+        assert configs.pad_to(17, 16) == 32
+
+    def test_block_config_validate_catches_bad(self):
+        cfg = configs.BlockConfig(bm=16, bn=64, bk=128, splits=3)
+        with pytest.raises(ValueError):
+            cfg.validate(16, 64, 512)  # 3 does not divide 512
+
+
+class TestDefaultSplits:
+    def test_at_least_one(self):
+        for s in configs.PAPER_SHAPES:
+            assert configs.default_splits(s.n, s.k) >= 1
+
+    def test_splits_preserve_group_alignment(self):
+        for s in configs.PAPER_SHAPES:
+            splits = configs.default_splits(s.n, s.k)
+            assert (s.k // splits) % configs.DEFAULT_GROUP == 0

@@ -1,0 +1,184 @@
+"""Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Every phase of Algorithm 1 is tested in isolation and composed, plus the
+data-parallel / fused / native-FP16 comparators.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, quantize
+from compile.kernels import dequant as kdequant
+from compile.kernels import fp16_gemm as kfp16
+from compile.kernels import fused_w4a16 as kfused
+from compile.kernels import reduce as kreduce
+from compile.kernels import ref
+from compile.kernels import splitk_matmul as ksplitk
+
+
+def make_case(m, n, k, seed=0, group=128):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray((rng.standard_normal((m, k)) * 0.5).astype(np.float32))
+    qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=seed + 1), group=group)
+    return a, jnp.asarray(qw.packed), jnp.asarray(qw.scales), jnp.asarray(qw.zeros)
+
+
+class TestDequantKernel:
+    @pytest.mark.parametrize("k,n,bk,bn", [(256, 64, 128, 64), (512, 256, 128, 128), (256, 128, 256, 32)])
+    def test_matches_ref(self, k, n, bk, bn):
+        _, packed, scales, zeros = make_case(16, n, k)
+        got = kdequant.dequant(packed, scales, zeros, k=k, group=128, bk=bk, bn=bn)
+        want = ref.dequant_ref(packed, scales, zeros, k, 128)
+        assert got.dtype == jnp.float16
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_host_dequantize(self):
+        k, n = 256, 64
+        qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=7))
+        got = np.asarray(
+            kdequant.dequant(
+                jnp.asarray(qw.packed), jnp.asarray(qw.scales), jnp.asarray(qw.zeros),
+                k=k, group=128, bk=128, bn=64,
+            ),
+            dtype=np.float32,
+        )
+        np.testing.assert_allclose(got, qw.dequantize(), atol=2e-4, rtol=1e-3)
+
+    def test_rejects_bad_blocks(self):
+        _, packed, scales, zeros = make_case(16, 64, 256)
+        with pytest.raises(ValueError):
+            kdequant.dequant(packed, scales, zeros, k=256, group=128, bk=96, bn=64)
+        with pytest.raises(ValueError):
+            kdequant.dequant(packed, scales, zeros, k=256, group=128, bk=128, bn=48)
+
+    def test_extreme_codes(self):
+        """All-0 and all-15 codes exercise both nibbles' range ends."""
+        k, n = 256, 32
+        q = np.zeros((k, n), dtype=np.uint8)
+        q[::2] = 15
+        packed = jnp.asarray(quantize.pack_int4(q))
+        scales = jnp.full((2, n), 0.01, jnp.float32)
+        zeros = jnp.full((2, n), 8.0, jnp.float32)
+        got = kdequant.dequant(packed, scales, zeros, k=k, group=128, bk=128, bn=32)
+        want = ref.dequant_ref(packed, scales, zeros, k, 128)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestSplitKKernel:
+    @pytest.mark.parametrize("splits", [1, 2, 4])
+    def test_partials_match_ref(self, splits):
+        m, n, k = 16, 128, 512
+        a, packed, scales, zeros = make_case(m, n, k)
+        b = ref.dequant_ref(packed, scales, zeros, k, 128)
+        got = ksplitk.splitk_matmul(a.astype(jnp.float16), b, splits=splits, bm=16, bn=64, bk=128)
+        want = ref.splitk_partials_ref(a, b, splits)
+        assert got.shape == (splits, m, n)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_sum_of_partials_is_full_product(self):
+        m, n, k = 16, 64, 1024
+        a, packed, scales, zeros = make_case(m, n, k, seed=5)
+        b = ref.dequant_ref(packed, scales, zeros, k, 128)
+        parts = ksplitk.splitk_matmul(a.astype(jnp.float16), b, splits=4, bm=16, bn=64, bk=128)
+        full = jnp.dot(a.astype(jnp.float16), b, preferred_element_type=jnp.float32)
+        np.testing.assert_allclose(np.asarray(parts.sum(0)), np.asarray(full), rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_splits(self):
+        a = jnp.zeros((16, 500), jnp.float16)
+        b = jnp.zeros((500, 64), jnp.float16)
+        with pytest.raises(ValueError):
+            ksplitk.splitk_matmul(a, b, splits=3, bm=16, bn=64, bk=128)
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(ValueError):
+            ksplitk.splitk_matmul(
+                jnp.zeros((16, 256), jnp.float16),
+                jnp.zeros((512, 64), jnp.float16),
+                splits=2, bm=16, bn=64, bk=128,
+            )
+
+
+class TestReduceKernel:
+    @pytest.mark.parametrize("s", [1, 2, 8])
+    def test_matches_ref(self, s):
+        rng = np.random.default_rng(s)
+        parts = jnp.asarray(rng.standard_normal((s, 32, 64)).astype(np.float32))
+        got = kreduce.reduce_splits(parts, bm=16, bn=64)
+        want = ref.reduce_ref(parts)
+        assert got.dtype == jnp.float16
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fp32_accumulation_before_cast(self):
+        """Summation must happen in FP32; casting first would lose bits."""
+        parts = jnp.asarray(
+            np.stack([np.full((16, 16), 1024.0), np.full((16, 16), 0.25)]).astype(np.float32)
+        )
+        got = np.asarray(kreduce.reduce_splits(parts, bm=16, bn=16), dtype=np.float32)
+        # fp16(1024 + 0.25) = 1024.0 vs fp16(1024) + fp16(0.25) summed in fp16
+        want = np.asarray(ref.reduce_ref(parts), dtype=np.float32)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestFp16Gemm:
+    @pytest.mark.parametrize("m,n,k", [(16, 64, 256), (32, 128, 512)])
+    def test_matches_ref(self, m, n, k):
+        rng = np.random.default_rng(9)
+        a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32) * 0.2)
+        b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32) * 0.2)
+        got = kfp16.fp16_matmul(a, b, bm=16, bn=64, bk=128)
+        want = ref.matmul_ref(a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestFusedKernel:
+    def test_matches_ref(self):
+        m, n, k = 16, 128, 512
+        a, packed, scales, zeros = make_case(m, n, k, seed=11)
+        got = kfused.fused_w4a16_matmul(
+            a.astype(jnp.float16), packed, scales, zeros, group=128, bm=16, bn=64
+        )
+        want = ref.w4a16_ref(a, packed, scales, zeros, 128)
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestPipelines:
+    """All three W4A16 strategies must agree with the oracle and each other."""
+
+    @pytest.mark.parametrize("m,n,k", [(16, 256, 512), (16, 128, 1024), (64, 512, 1024)])
+    def test_strategies_agree(self, m, n, k):
+        cfg = configs.select_blocks(m, n, k)
+        a, packed, scales, zeros = make_case(m, n, k, seed=13)
+        want = np.asarray(ref.w4a16_ref(a, packed, scales, zeros, cfg.group), dtype=np.float32)
+        for fn in (model.w4a16_matmul_splitk, model.w4a16_matmul_dp, model.w4a16_matmul_fused):
+            got = np.asarray(fn(a, packed, scales, zeros, cfg), dtype=np.float32)
+            np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3, err_msg=fn.__name__)
+
+    def test_w4a16_linear_pads_and_slices(self):
+        """Odd M (decode batch) is padded to the cube tile then sliced back."""
+        m, n, k = 3, 128, 256
+        a, packed, scales, zeros = make_case(m, n, k, seed=17)
+        got = model.w4a16_linear(a.astype(jnp.float16), packed, scales, zeros)
+        assert got.shape == (m, n)
+        want = np.asarray(ref.w4a16_ref(a, packed, scales, zeros, 128), dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=2e-3, atol=2e-3)
+
+    def test_splitk_split_invariance(self):
+        """The result must not depend on the split factor (reduction assoc.)."""
+        m, n, k = 16, 64, 1024
+        a, packed, scales, zeros = make_case(m, n, k, seed=19)
+        outs = []
+        for s in (1, 2, 4, 8):
+            cfg = configs.BlockConfig(bm=16, bn=64, bk=128, splits=s)
+            outs.append(np.asarray(
+                model.w4a16_matmul_splitk(a, packed, scales, zeros, cfg), dtype=np.float32
+            ))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-3, atol=2e-3)

@@ -1,0 +1,94 @@
+"""Decode-model tests: shapes, cache semantics, oracle agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_decode_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def step_out(params):
+    tokens = jnp.asarray([3, 7, 100, 511], dtype=jnp.int32)
+    positions = jnp.asarray([0, 5, 1, 31], dtype=jnp.int32)
+    cache = jnp.zeros((CFG.layers, 2, 4, CFG.max_seq, CFG.hidden), jnp.float32)
+    return (tokens, positions, cache) + model.decode_step(params, CFG, tokens, positions, cache)
+
+
+class TestDecodeStep:
+    def test_output_shapes(self, step_out):
+        _, _, _, logits, nxt, cache = step_out
+        assert logits.shape == (4, CFG.vocab)
+        assert nxt.shape == (4,)
+        assert nxt.dtype == jnp.int32
+        assert cache.shape == (CFG.layers, 2, 4, CFG.max_seq, CFG.hidden)
+
+    def test_matches_reference(self, params, step_out):
+        tokens, positions, cache0, logits, nxt, cache = step_out
+        l2, n2, c2 = model.decode_step_ref(params, CFG, tokens, positions, cache0)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(l2), rtol=5e-2, atol=5e-2)
+        assert np.array_equal(np.asarray(nxt), np.asarray(n2))
+        np.testing.assert_allclose(np.asarray(cache), np.asarray(c2), rtol=5e-2, atol=5e-2)
+
+    def test_cache_written_only_at_position(self, step_out):
+        """KV rows other than each sequence's position must stay zero."""
+        _, positions, _, _, _, cache = step_out
+        c = np.asarray(cache)
+        for b, pos in enumerate(np.asarray(positions)):
+            written = np.abs(c[:, :, b]).sum(axis=-1)  # (L, 2, T)
+            nonzero_t = np.nonzero(written.sum(axis=(0, 1)))[0]
+            assert list(nonzero_t) == [pos]
+
+    def test_argmax_consistent_with_logits(self, step_out):
+        _, _, _, logits, nxt, _ = step_out
+        assert np.array_equal(np.asarray(jnp.argmax(logits, -1)), np.asarray(nxt))
+
+    def test_deterministic(self, params):
+        tokens = jnp.asarray([1], dtype=jnp.int32)
+        positions = jnp.asarray([0], dtype=jnp.int32)
+        cache = jnp.zeros((CFG.layers, 2, 1, CFG.max_seq, CFG.hidden), jnp.float32)
+        a = model.decode_step(params, CFG, tokens, positions, cache)
+        b = model.decode_step(params, CFG, tokens, positions, cache)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_multi_step_cache_growth(self, params):
+        """Run 3 steps; each step's keys accumulate in the cache."""
+        b = 1
+        cache = jnp.zeros((CFG.layers, 2, b, CFG.max_seq, CFG.hidden), jnp.float32)
+        tok = jnp.asarray([5], dtype=jnp.int32)
+        for step in range(3):
+            pos = jnp.asarray([step], dtype=jnp.int32)
+            _, tok, cache = model.decode_step(params, CFG, tok, pos, cache)
+        occupancy = np.abs(np.asarray(cache[0, 0, 0])).sum(axis=-1) > 0
+        assert occupancy[:3].all() and not occupancy[3:].any()
+
+
+class TestModelConfig:
+    def test_param_count_small100m(self):
+        assert 80e6 < model.SMALL_100M.param_count() < 120e6
+
+    def test_dims_are_group_multiples(self):
+        for cfg in (model.TINY, model.SMALL_100M):
+            assert cfg.hidden % 128 == 0
+            assert cfg.ffn % 128 == 0
+            assert (3 * cfg.hidden) % 128 == 0
+            assert cfg.vocab % 128 == 0
+
+    def test_init_params_deterministic(self):
+        p1 = model.init_decode_params(CFG, seed=0)
+        p2 = model.init_decode_params(CFG, seed=0)
+        assert set(p1) == set(p2)
+        for k in p1:
+            np.testing.assert_array_equal(p1[k], p2[k])
+
+    def test_param_ordering_stable(self, params):
+        keys = list(params)
+        assert keys[0] == "embed"
+        assert keys[-1] == "lm_head.zeros"

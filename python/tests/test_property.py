@@ -1,0 +1,110 @@
+"""Hypothesis sweeps over kernel shapes, block sizes and dtypes.
+
+The strategies draw tile-multiple shapes (the kernels require exact tiling,
+as the cube core does) and check the Pallas kernels against the jnp oracle
+across the whole space.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import configs, model, quantize
+from compile.kernels import dequant as kdequant
+from compile.kernels import ref
+
+GROUP = 128
+
+
+@st.composite
+def gemm_shapes(draw):
+    """(m, n, k, splits, blocks) all mutually consistent."""
+    m = draw(st.sampled_from([16, 32, 64]))
+    n_tiles = draw(st.integers(1, 4))
+    bn = draw(st.sampled_from([32, 64, 128]))
+    n = n_tiles * bn
+    k_groups = draw(st.sampled_from([2, 4, 8]))
+    k = k_groups * GROUP
+    splits = draw(st.sampled_from([s for s in (1, 2, 4) if k_groups % s == 0]))
+    bm = draw(st.sampled_from([16, 32]))
+    if m % bm:
+        bm = 16
+    return m, n, k, splits, bm, bn
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=gemm_shapes(), seed=st.integers(0, 2**16))
+def test_splitk_pipeline_matches_oracle(shape, seed):
+    m, n, k, splits, bm, bn = shape
+    cfg = configs.BlockConfig(bm=bm, bn=bn, bk=GROUP, splits=splits, group=GROUP)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray((rng.standard_normal((m, k)) * 0.3).astype(np.float32))
+    qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=seed + 1), group=GROUP)
+    packed, scales, zeros = map(jnp.asarray, (qw.packed, qw.scales, qw.zeros))
+    got = np.asarray(
+        model.w4a16_matmul_splitk(a, packed, scales, zeros, cfg), dtype=np.float32
+    )
+    want = np.asarray(ref.w4a16_ref(a, packed, scales, zeros, GROUP), dtype=np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_groups=st.integers(1, 6),
+    bn=st.sampled_from([16, 32, 64]),
+    n_tiles=st.integers(1, 3),
+    bk_groups=st.integers(1, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_dequant_matches_oracle(k_groups, bn, n_tiles, bk_groups, seed):
+    if k_groups % bk_groups:
+        bk_groups = 1
+    k = k_groups * GROUP
+    n = n_tiles * bn
+    qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=seed), group=GROUP)
+    packed, scales, zeros = map(jnp.asarray, (qw.packed, qw.scales, qw.zeros))
+    got = kdequant.dequant(
+        packed, scales, zeros, k=k, group=GROUP, bk=bk_groups * GROUP, bn=bn
+    )
+    want = ref.dequant_ref(packed, scales, zeros, k, GROUP)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=gemm_shapes(), seed=st.integers(0, 2**16))
+def test_dp_equals_splitk(shape, seed):
+    """Strategy choice must never change the numerics (only the schedule)."""
+    m, n, k, splits, bm, bn = shape
+    cfg = configs.BlockConfig(bm=bm, bn=bn, bk=GROUP, splits=splits, group=GROUP)
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray((rng.standard_normal((m, k)) * 0.3).astype(np.float32))
+    qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=seed + 2), group=GROUP)
+    packed, scales, zeros = map(jnp.asarray, (qw.packed, qw.scales, qw.zeros))
+    sk = np.asarray(model.w4a16_matmul_splitk(a, packed, scales, zeros, cfg), np.float32)
+    dp = np.asarray(model.w4a16_matmul_dp(a, packed, scales, zeros, cfg), np.float32)
+    np.testing.assert_allclose(sk, dp, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float16, np.float32]),
+    m=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_activation_dtype_insensitivity(dtype, m, seed):
+    """f32 activations are cast to f16 at the boundary — results identical."""
+    n, k = 64, 256
+    cfg = configs.BlockConfig(bm=16, bn=64, bk=128, splits=2, group=GROUP)
+    rng = np.random.default_rng(seed)
+    a32 = (rng.standard_normal((m, k)) * 0.3).astype(np.float32)
+    a16 = a32.astype(np.float16)
+    qw = quantize.quantize_groupwise(quantize.random_weight(k, n, seed=seed + 3))
+    packed, scales, zeros = map(jnp.asarray, (qw.packed, qw.scales, qw.zeros))
+    out_from_cast = np.asarray(
+        model.w4a16_matmul_splitk(jnp.asarray(a16).astype(jnp.float16), packed, scales, zeros, cfg)
+    )
+    out_requested = np.asarray(
+        model.w4a16_matmul_splitk(jnp.asarray(a32.astype(dtype)).astype(jnp.float16), packed, scales, zeros, cfg)
+    )
+    np.testing.assert_array_equal(out_from_cast, out_requested)

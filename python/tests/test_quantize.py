@@ -1,0 +1,133 @@
+"""Unit tests for the INT4 group quantizer and nibble packing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantize
+
+
+class TestPacking:
+    def test_pack_unpack_roundtrip(self):
+        rng = np.random.default_rng(0)
+        q = rng.integers(0, 16, size=(64, 32), dtype=np.uint8)
+        packed = quantize.pack_int4(q)
+        assert packed.shape == (32, 32)
+        assert packed.dtype == np.int8
+        assert np.array_equal(quantize.unpack_int4(packed, 64), q)
+
+    def test_pack_layout_low_nibble_first(self):
+        q = np.array([[1], [2]], dtype=np.uint8)  # rows k=0,1
+        packed = quantize.pack_int4(q)
+        # low nibble = row 0 (1), high nibble = row 1 (2) -> 0x21
+        assert packed[0, 0] == 0x21
+
+    def test_pack_high_codes_sign_safe(self):
+        """Codes >= 8 set the sign bit of the int8 byte; unpack must mask."""
+        q = np.array([[15], [15]], dtype=np.uint8)
+        packed = quantize.pack_int4(q)
+        assert packed[0, 0] == np.int8(-1)  # 0xFF
+        assert np.array_equal(quantize.unpack_int4(packed, 2), q)
+
+    def test_pack_rejects_out_of_range(self):
+        with pytest.raises(ValueError):
+            quantize.pack_int4(np.full((2, 2), 16, dtype=np.uint8))
+
+    def test_pack_rejects_odd_k(self):
+        with pytest.raises(ValueError):
+            quantize.pack_int4(np.zeros((3, 2), dtype=np.uint8))
+
+    def test_unpack_jnp_matches_numpy(self):
+        rng = np.random.default_rng(1)
+        q = rng.integers(0, 16, size=(128, 8), dtype=np.uint8)
+        packed = quantize.pack_int4(q)
+        got = np.asarray(quantize.unpack_int4_jnp(packed, 128))
+        assert np.array_equal(got, q)
+
+
+class TestGroupQuantizer:
+    def test_shapes_and_dtypes(self):
+        w = quantize.random_weight(256, 64)
+        qw = quantize.quantize_groupwise(w, group=128)
+        assert qw.packed.shape == (128, 64)
+        assert qw.scales.shape == (2, 64)
+        assert qw.zeros.shape == (2, 64)
+        assert qw.packed.dtype == np.int8
+        assert qw.scales.dtype == np.float32
+
+    def test_quantization_error_bound(self):
+        """|w - dequant(quant(w))| <= scale/2 elementwise (affine fit)."""
+        w = quantize.random_weight(512, 32, seed=3)
+        qw = quantize.quantize_groupwise(w, group=128)
+        back = qw.dequantize()
+        tol = np.repeat(qw.scales, 128, axis=0) * 0.5 + 1e-7
+        assert np.all(np.abs(w - back) <= tol)
+
+    def test_symmetric_zero_point_is_mid_code(self):
+        w = quantize.random_weight(128, 16, seed=4)
+        qw = quantize.quantize_groupwise(w, group=128, symmetric=True)
+        assert np.all(qw.zeros == 8.0)
+
+    def test_symmetric_preserves_sign(self):
+        w = np.zeros((128, 2), dtype=np.float32)
+        w[:, 0] = 0.5
+        w[:, 1] = -0.5
+        qw = quantize.quantize_groupwise(w, group=128, symmetric=True)
+        back = qw.dequantize()
+        assert np.all(back[:, 0] > 0)
+        assert np.all(back[:, 1] < 0)
+
+    def test_constant_group_is_exact(self):
+        w = np.full((128, 4), 0.25, dtype=np.float32)
+        qw = quantize.quantize_groupwise(w, group=128)
+        assert np.allclose(qw.dequantize(), w, atol=1e-6)
+
+    def test_zero_weight_no_nan(self):
+        w = np.zeros((256, 8), dtype=np.float32)
+        qw = quantize.quantize_groupwise(w, group=128)
+        back = qw.dequantize()
+        assert np.all(np.isfinite(back))
+        assert np.allclose(back, 0.0, atol=1e-6)
+
+    def test_rejects_bad_group(self):
+        with pytest.raises(ValueError):
+            quantize.quantize_groupwise(np.zeros((100, 4), dtype=np.float32), group=128)
+
+    def test_memory_footprint_is_quarter_of_fp16(self):
+        """The headline 4x weight compression claim (§2.2)."""
+        k, n = 1024, 512
+        qw = quantize.quantize_groupwise(quantize.random_weight(k, n))
+        fp16_bytes = k * n * 2
+        assert qw.packed_bytes == fp16_bytes / 4
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kg=st.integers(1, 8),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**16),
+        symmetric=st.booleans(),
+    )
+    def test_roundtrip_error_bound_property(self, kg, n, seed, symmetric):
+        k = kg * 128
+        w = quantize.random_weight(k, n, seed=seed)
+        qw = quantize.quantize_groupwise(w, group=128, symmetric=symmetric)
+        back = qw.dequantize()
+        scale_rep = np.repeat(qw.scales, 128, axis=0)
+        # Affine: within half a step. Symmetric: codes clamp at 0 so allow a
+        # full step of slack on the negative edge.
+        slack = 1.0 if symmetric else 0.5
+        assert np.all(np.abs(w - back) <= scale_rep * slack + 1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kg=st.integers(1, 6),
+        n=st.integers(1, 32),
+        seed=st.integers(0, 2**16),
+    )
+    def test_pack_roundtrip_property(self, kg, n, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(0, 16, size=(kg * 128, n), dtype=np.uint8)
+        assert np.array_equal(
+            quantize.unpack_int4(quantize.pack_int4(q), kg * 128), q
+        )

@@ -1,0 +1,56 @@
+//! Ablation A — the paper's future-work hypothesis, quantified.
+//!
+//! §5: "Future work should explore ... direct data paths between vector
+//! and cube units or fused instructions that bypass global memory".  This
+//! bench compares, per paper shape at decode batch M=8:
+//!   * native FP16 (baseline),
+//!   * three-phase Split-K W4A16 (Algorithm 1, with the round trip),
+//!   * the hypothetical fused direct path (no workspace).
+//! The fused column should approach the theoretical ~4x that Algorithm 1
+//! cannot reach.  Run with `cargo bench --bench ablation_fused`.
+
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::bench::section;
+use ascend_w4a16::kernels::{self, Strategy};
+use ascend_w4a16::model::llm::paper_shapes;
+use ascend_w4a16::util::stats;
+use ascend_w4a16::workload::problem_for;
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+    let sim = Simulator::new(machine.clone());
+    const M: usize = 8;
+
+    section("Ablation A: fused direct path vs Algorithm 1 (M=8, simulated µs)");
+    println!(
+        "{:<12} {:>6} {:>6} | {:>9} {:>9} {:>9} | {:>9} {:>9}",
+        "model", "N", "K", "fp16", "splitk", "fused", "sk_spdup", "fu_spdup"
+    );
+    let mut sk_speedups = Vec::new();
+    let mut fu_speedups = Vec::new();
+    for shape in paper_shapes() {
+        let p = problem_for(&shape, M);
+        let fp16 = sim.run(&kernels::schedule(&machine, &p, Strategy::Fp16Native).unwrap()).unwrap();
+        let sk = sim.run(&kernels::schedule(&machine, &p, Strategy::SplitK).unwrap()).unwrap();
+        let fu = sim.run(&kernels::schedule(&machine, &p, Strategy::Fused).unwrap()).unwrap();
+        let sk_spdup = fp16.total_ns / sk.total_ns;
+        let fu_spdup = fp16.total_ns / fu.total_ns;
+        sk_speedups.push(sk_spdup);
+        fu_speedups.push(fu_spdup);
+        println!(
+            "{:<12} {:>6} {:>6} | {:>9.2} {:>9.2} {:>9.2} | {:>8.2}x {:>8.2}x",
+            shape.model, shape.n, shape.k,
+            fp16.total_ns / 1e3, sk.total_ns / 1e3, fu.total_ns / 1e3,
+            sk_spdup, fu_spdup,
+        );
+    }
+    println!(
+        "\ngeomean: splitk {:.2}x, fused {:.2}x (theoretical weight-traffic bound ~4x)",
+        stats::geomean(&sk_speedups),
+        stats::geomean(&fu_speedups),
+    );
+    println!(
+        "=> the workspace round trip costs {:.0}% of the attainable W4A16 speedup on this machine",
+        100.0 * (1.0 - stats::geomean(&sk_speedups) / stats::geomean(&fu_speedups)),
+    );
+}

@@ -1,0 +1,53 @@
+//! Ablation B — split-factor sweep: how does S affect Algorithm 1?
+//!
+//! More splits raise cube occupancy (helping when N/bn tiles < cores) but
+//! add FP32 partial traffic and reduce work.  The auto-tiler's chosen S
+//! should sit at or near each curve's minimum.
+//! Run with `cargo bench --bench ablation_split_factor`.
+
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::bench::section;
+use ascend_w4a16::kernels::{splitk, tiling, GemmProblem};
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+    let sim = Simulator::new(machine.clone());
+    const M: usize = 8;
+
+    for (n, k) in [(512usize, 16384usize), (1024, 7680), (2048, 7168), (7168, 2048)] {
+        section(&format!("split-factor sweep at N={n}, K={k}, M={M} (simulated µs)"));
+        let p = GemmProblem::new(M, n, k);
+        let auto = tiling::select_splitk(&machine, &p).expect("tiling");
+        println!("auto-selected S = {}", auto.splits);
+        println!("{:>4} {:>10} {:>10} {:>8}", "S", "time_us", "partials", "note");
+        let mut best: Option<(usize, f64)> = None;
+        for s in [1usize, 2, 4, 8, 16] {
+            if k % s != 0 || (k / s) % p.group != 0 {
+                println!("{s:>4} {:>10} {:>10} (K/S not group-aligned)", "-", "-");
+                continue;
+            }
+            let t = tiling::Tiling { splits: s, ..auto };
+            if t.validate(&machine, &p).is_err() {
+                continue;
+            }
+            let trace = splitk::schedule(&machine, &p, &t).expect("schedule");
+            let r = sim.run(&trace).expect("sim");
+            let us = r.total_ns / 1e3;
+            if best.map(|(_, b)| us < b).unwrap_or(true) {
+                best = Some((s, us));
+            }
+            println!(
+                "{s:>4} {us:>10.2} {:>10} {}",
+                trace.partial_bytes / 1024,
+                if s == auto.splits { "<- auto" } else { "" }
+            );
+        }
+        if let Some((s_best, _)) = best {
+            println!(
+                "best S = {s_best}; auto-tiler picked {} ({})",
+                auto.splits,
+                if s_best == auto.splits { "optimal" } else { "within model noise" }
+            );
+        }
+    }
+}

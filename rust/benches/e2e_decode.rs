@@ -1,0 +1,61 @@
+//! End-to-end decode bench: real PJRT execution of the AOT decode-step
+//! artifacts (the W4A16 pipeline inside a ~100M-parameter transformer).
+//!
+//! Absolute numbers are CPU-PJRT wallclock (the substrate is a CPU
+//! emulation of the NPU), so only the *relative* batch-scaling shape is
+//! meaningful: step latency should grow sublinearly with batch size, i.e.
+//! tokens/s should improve with batching — the premise of the serving
+//! coordinator.  Requires `make artifacts`.
+//! Run with `cargo bench --bench e2e_decode`.
+
+use ascend_w4a16::bench::{section, Bench};
+use ascend_w4a16::model::DecodeEngine;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping e2e bench: run `make artifacts` first");
+        return;
+    }
+    let mf = Manifest::load(dir).expect("manifest");
+    let rt = Runtime::cpu().expect("pjrt");
+
+    for model in ["tiny", "small100m"] {
+        section(&format!("decode step latency — model '{model}' (CPU PJRT)"));
+        // small100m steps cost seconds of CPU wallclock; probe the batch
+        // scaling shape with the extreme sizes only.
+        let batches: Vec<usize> = if model == "tiny" {
+            mf.decode_batches(model)
+        } else {
+            let all = mf.decode_batches(model);
+            vec![*all.first().unwrap(), *all.last().unwrap()]
+        };
+        for batch in batches {
+            let entry = mf.decode(model, batch).unwrap();
+            let mut engine = DecodeEngine::new(&rt, entry).expect("engine");
+            let tokens = vec![1i32; batch];
+            let mut step_no = 0usize;
+            let max_seq = engine.max_seq;
+            let iters = if model == "tiny" { 20 } else { 3 };
+            let r = Bench::new(format!("{model} b={batch} decode step"))
+                .warmup(2)
+                .iters(iters)
+                .run(|| {
+                    let positions = vec![(step_no % (max_seq - 1)) as i32; batch];
+                    if step_no % (max_seq - 1) == 0 {
+                        engine.reset().unwrap();
+                    }
+                    engine.step(&tokens, &positions).unwrap();
+                    step_no += 1;
+                });
+            let per_tok = r.summary_ns.mean / batch as f64;
+            println!(
+                "{}   -> {:.1} tokens/s aggregate",
+                r.render_row(),
+                1e9 / per_tok
+            );
+        }
+    }
+    println!("\nexpected shape: tokens/s grows with batch (weights are read once per step regardless of batch — the W4A16 premise).");
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate the paper's **Figure 2** — execution time of the
+//! INT4xFP16 kernel across N x K configurations and batch sizes, Split-K
+//! vs Data-Parallel (simulated Ascend 910).
+//!
+//! Expected shape (paper §4.1): Split-K wins when K >> N with speedups in
+//! ~[1.0, 1.8]; parity when N is large; execution time flat in M until the
+//! cube tile is filled.  Run with `cargo bench --bench fig2_splitk_vs_dp`.
+
+use ascend_w4a16::analysis::report;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::bench::{section, Bench};
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+
+    section("Figure 2 sweep (simulated)");
+    let cells = report::fig2_sweep(&machine).expect("sweep");
+    print!("{}", report::render_fig2(&cells));
+
+    // Persist the JSON series for EXPERIMENTS.md.
+    let out = "target/fig2.json";
+    std::fs::write(out, report::fig2_json(&cells).to_string()).expect("write json");
+    println!("\nwrote {out}");
+
+    section("harness wallclock (simulator throughput)");
+    let r = Bench::new("fig2 full sweep (84 cells x 2 strategies)")
+        .warmup(1)
+        .iters(5)
+        .run(|| {
+            std::hint::black_box(report::fig2_sweep(&machine).unwrap());
+        });
+    println!("{}", r.render_row());
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate the paper's **Figure 3** — speedup of the Split-K
+//! W4A16 kernel over native FP16xFP16 matmul across N x K configurations
+//! and batch sizes (simulated Ascend 910).
+//!
+//! Expected shape (paper §4.2): the speedup peaks around ~1.5x — far below
+//! the theoretical ~4x from the weight-size reduction — because the
+//! dequantized weights make an extra memory round trip between the
+//! decoupled vector and cube units; oversized workspaces spill L2 and drop
+//! below 1x.  Run with `cargo bench --bench fig3_w4a16_speedup`.
+
+use ascend_w4a16::analysis::report;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::bench::{section, Bench};
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+
+    section("Figure 3 sweep (simulated)");
+    let cells = report::fig3_sweep(&machine).expect("sweep");
+    print!("{}", report::render_fig3(&cells));
+
+    let out = "target/fig3.json";
+    std::fs::write(out, report::fig3_json(&cells).to_string()).expect("write json");
+    println!("\nwrote {out}");
+
+    section("harness wallclock (simulator throughput)");
+    let r = Bench::new("fig3 full sweep (84 cells x 2 strategies)")
+        .warmup(1)
+        .iters(5)
+        .run(|| {
+            std::hint::black_box(report::fig3_sweep(&machine).unwrap());
+        });
+    println!("{}", r.render_row());
+}

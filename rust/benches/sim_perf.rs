@@ -1,0 +1,53 @@
+//! Simulator performance bench (the L3 hot path of the analysis tooling).
+//!
+//! Tracks trace-construction and pricing throughput so the perf pass
+//! (EXPERIMENTS.md §Perf) has a stable measurement target.
+//! Run with `cargo bench --bench sim_perf`.
+
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::bench::{section, Bench};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+    let sim = Simulator::new(machine.clone());
+
+    section("schedule construction");
+    for (n, k) in [(2048usize, 7168usize), (12288, 5120)] {
+        let p = GemmProblem::new(8, n, k);
+        let r = Bench::new(format!("schedule splitk n={n} k={k}"))
+            .warmup(3)
+            .iters(30)
+            .run(|| {
+                std::hint::black_box(
+                    kernels::schedule(&machine, &p, Strategy::SplitK).unwrap(),
+                );
+            });
+        println!("{}", r.render_row());
+    }
+
+    section("trace pricing (Simulator::run)");
+    for (n, k) in [(2048usize, 7168usize), (12288, 5120)] {
+        let p = GemmProblem::new(8, n, k);
+        let trace = kernels::schedule(&machine, &p, Strategy::SplitK).unwrap();
+        let r = Bench::new(format!("simulate splitk n={n} k={k} ({} steps)",
+                trace.phases.iter().map(|p| p.total_steps()).sum::<usize>()))
+            .warmup(3)
+            .iters(30)
+            .run(|| {
+                std::hint::black_box(sim.run(&trace).unwrap());
+            });
+        println!("{}", r.render_row());
+    }
+
+    section("full figure sweeps");
+    let r = Bench::new("fig2+fig3 sweeps back to back")
+        .warmup(1)
+        .iters(5)
+        .run(|| {
+            use ascend_w4a16::analysis::report;
+            std::hint::black_box(report::fig2_sweep(&machine).unwrap());
+            std::hint::black_box(report::fig3_sweep(&machine).unwrap());
+        });
+    println!("{}", r.render_row());
+}

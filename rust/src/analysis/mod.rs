@@ -1,0 +1,13 @@
+//! Performance analysis: roofline model, memory-traffic decomposition and
+//! human/machine-readable report rendering.
+//!
+//! This module backs the paper's §4.2 bottleneck analysis: given a
+//! simulated kernel, it decomposes the byte traffic per buffer class,
+//! identifies the binding resource, and renders the comparison tables the
+//! benches print (Figures 2 and 3).
+
+pub mod report;
+pub mod roofline;
+pub mod sensitivity;
+pub mod timeline;
+pub mod traffic;

@@ -1,0 +1,282 @@
+//! Table / figure renderers shared by the CLI and the bench harnesses.
+//!
+//! Each renderer prints the same rows the paper's figures plot, plus a JSON
+//! form for machine consumption (EXPERIMENTS.md records both).
+
+use crate::ascend::{MachineConfig, SimReport};
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::traffic;
+
+/// One (shape, batch) cell of the Figure 2 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig2Cell {
+    pub model: String,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub splitk_us: f64,
+    pub dp_us: f64,
+}
+
+impl Fig2Cell {
+    pub fn speedup(&self) -> f64 {
+        self.dp_us / self.splitk_us
+    }
+}
+
+/// One (shape, batch) cell of the Figure 3 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig3Cell {
+    pub model: String,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub w4a16_us: f64,
+    pub fp16_us: f64,
+}
+
+impl Fig3Cell {
+    pub fn speedup(&self) -> f64 {
+        self.fp16_us / self.w4a16_us
+    }
+}
+
+/// Render the Figure 2 table (execution time, Split-K vs Data-Parallel).
+pub fn render_fig2(cells: &[Fig2Cell]) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 2 — INT4xFP16 execution time: Split-K vs Data-Parallel (simulated µs)\n");
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>6} {:>6} | {:>10} {:>10} {:>8} {:>6}\n",
+        "model", "N", "K", "M", "splitk_us", "dp_us", "speedup", "K>>N"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>6} {:>6} | {:>10.2} {:>10.2} {:>7.2}x {:>6}\n",
+            c.model, c.n, c.k, c.batch, c.splitk_us, c.dp_us,
+            c.speedup(),
+            if c.k >= 2 * c.n { "yes" } else { "" },
+        ));
+    }
+    let kd: Vec<f64> = cells.iter().filter(|c| c.k >= 2 * c.n).map(|c| c.speedup()).collect();
+    let all: Vec<f64> = cells.iter().map(|c| c.speedup()).collect();
+    if !kd.is_empty() {
+        out.push_str(&format!(
+            "\nK>>N regime: speedup range [{:.2}x, {:.2}x], geomean {:.2}x  (paper: 1.01x-1.74x)\n",
+            kd.iter().cloned().fold(f64::INFINITY, f64::min),
+            kd.iter().cloned().fold(0.0, f64::max),
+            stats::geomean(&kd),
+        ));
+    }
+    out.push_str(&format!(
+        "All shapes:  speedup range [{:.2}x, {:.2}x], geomean {:.2}x\n",
+        all.iter().cloned().fold(f64::INFINITY, f64::min),
+        all.iter().cloned().fold(0.0, f64::max),
+        stats::geomean(&all),
+    ));
+    out
+}
+
+/// Render the Figure 3 table (W4A16 Split-K speedup over native FP16).
+pub fn render_fig3(cells: &[Fig3Cell]) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 3 — Split-K W4A16 speedup over native FP16xFP16 (simulated)\n");
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>6} {:>6} | {:>10} {:>10} {:>8}\n",
+        "model", "N", "K", "M", "w4a16_us", "fp16_us", "speedup"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>6} {:>6} | {:>10.2} {:>10.2} {:>7.2}x\n",
+            c.model, c.n, c.k, c.batch, c.w4a16_us, c.fp16_us, c.speedup(),
+        ));
+    }
+    let all: Vec<f64> = cells.iter().map(|c| c.speedup()).collect();
+    out.push_str(&format!(
+        "\nmax speedup {:.2}x (paper: at most 1.48x, far below the theoretical ~4x)\n",
+        all.iter().cloned().fold(0.0, f64::max),
+    ));
+    out
+}
+
+/// JSON form of the Figure 2 sweep.
+pub fn fig2_json(cells: &[Fig2Cell]) -> Json {
+    Json::arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("model", Json::str(c.model.clone())),
+                    ("n", Json::num(c.n as f64)),
+                    ("k", Json::num(c.k as f64)),
+                    ("batch", Json::num(c.batch as f64)),
+                    ("splitk_us", Json::num(c.splitk_us)),
+                    ("dp_us", Json::num(c.dp_us)),
+                    ("speedup", Json::num(c.speedup())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON form of the Figure 3 sweep.
+pub fn fig3_json(cells: &[Fig3Cell]) -> Json {
+    Json::arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("model", Json::str(c.model.clone())),
+                    ("n", Json::num(c.n as f64)),
+                    ("k", Json::num(c.k as f64)),
+                    ("batch", Json::num(c.batch as f64)),
+                    ("w4a16_us", Json::num(c.w4a16_us)),
+                    ("fp16_us", Json::num(c.fp16_us)),
+                    ("speedup", Json::num(c.speedup())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Render the §4.2 bottleneck decomposition for one simulated kernel.
+pub fn render_bottleneck(machine: &MachineConfig, report: &SimReport) -> String {
+    let b = traffic::decompose(report);
+    let mut out = String::new();
+    out.push_str(&format!("Memory-traffic decomposition — {}\n", report.name));
+    out.push_str(&format!(
+        "{:<24} {:>12} {:>12}\n",
+        "buffer class", "HBM bytes", "L2 bytes"
+    ));
+    for row in &b.rows {
+        out.push_str(&format!(
+            "{:<24} {:>12} {:>12}\n",
+            row.label,
+            stats::fmt_bytes(row.hbm_bytes),
+            stats::fmt_bytes(row.l2_bytes),
+        ));
+    }
+    out.push_str(&format!(
+        "\nworkspace round trip: {} = {:.1}x the packed weight bytes\n",
+        stats::fmt_bytes(b.round_trip_bytes),
+        b.round_trip_ratio
+    ));
+    out.push_str(&format!(
+        "type-cast compute {} vs transfer streams {} -> bottleneck: {}\n",
+        stats::fmt_ns(b.cast_compute_ns),
+        stats::fmt_ns(b.transfer_ns),
+        if b.transfer_bound { "MEMORY TRANSFER (paper §4.2 confirmed)" } else { "type-cast" },
+    ));
+    out.push_str(&format!(
+        "speedup ceiling from traffic: {:.2}x (theoretical 4.0x without round trip)\n",
+        traffic::theoretical_speedup_ceiling(machine, report)
+    ));
+    for g in &report.groups {
+        out.push_str(&format!(
+            "group {:?}: {} (bound by {})\n",
+            g.phases,
+            stats::fmt_ns(g.total_ns),
+            g.bound_by
+        ));
+    }
+    out
+}
+
+/// Run the full Figure 2 sweep (every paper shape x batch size) on the
+/// simulator.  Shared by the CLI (`repro fig2`) and the bench target.
+pub fn fig2_sweep(machine: &MachineConfig) -> anyhow::Result<Vec<Fig2Cell>> {
+    use crate::ascend::Simulator;
+    use crate::kernels::{self, Strategy};
+    use crate::workload;
+
+    let sim = Simulator::new(machine.clone());
+    let mut cells = Vec::new();
+    for (shape, batch) in workload::paper_sweep() {
+        let p = workload::problem_for(&shape, batch);
+        let sk = sim.run(&kernels::schedule(machine, &p, Strategy::SplitK)?)?;
+        let dp = sim.run(&kernels::schedule(machine, &p, Strategy::DataParallel)?)?;
+        cells.push(Fig2Cell {
+            model: shape.model.to_string(),
+            n: shape.n,
+            k: shape.k,
+            batch,
+            splitk_us: sk.total_ns / 1e3,
+            dp_us: dp.total_ns / 1e3,
+        });
+    }
+    Ok(cells)
+}
+
+/// Run the full Figure 3 sweep on the simulator.
+pub fn fig3_sweep(machine: &MachineConfig) -> anyhow::Result<Vec<Fig3Cell>> {
+    use crate::ascend::Simulator;
+    use crate::kernels::{self, Strategy};
+    use crate::workload;
+
+    let sim = Simulator::new(machine.clone());
+    let mut cells = Vec::new();
+    for (shape, batch) in workload::paper_sweep() {
+        let p = workload::problem_for(&shape, batch);
+        let sk = sim.run(&kernels::schedule(machine, &p, Strategy::SplitK)?)?;
+        let fp16 = sim.run(&kernels::schedule(machine, &p, Strategy::Fp16Native)?)?;
+        cells.push(Fig3Cell {
+            model: shape.model.to_string(),
+            n: shape.n,
+            k: shape.k,
+            batch,
+            w4a16_us: sk.total_ns / 1e3,
+            fp16_us: fp16.total_ns / 1e3,
+        });
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+    use crate::kernels::{self, GemmProblem, Strategy};
+
+    #[test]
+    fn fig2_render_contains_summary() {
+        let cells = vec![Fig2Cell {
+            model: "deepseek".into(), n: 2048, k: 7168, batch: 8,
+            splitk_us: 10.0, dp_us: 14.0,
+        }];
+        let s = render_fig2(&cells);
+        assert!(s.contains("1.40x"));
+        assert!(s.contains("K>>N regime"));
+    }
+
+    #[test]
+    fn fig3_render_tracks_max() {
+        let cells = vec![
+            Fig3Cell { model: "a".into(), n: 1, k: 1, batch: 1, w4a16_us: 10.0, fp16_us: 13.0 },
+            Fig3Cell { model: "b".into(), n: 1, k: 1, batch: 1, w4a16_us: 10.0, fp16_us: 11.0 },
+        ];
+        let s = render_fig3(&cells);
+        assert!(s.contains("max speedup 1.30x"));
+    }
+
+    #[test]
+    fn bottleneck_report_renders() {
+        let m = MachineConfig::ascend910();
+        let r = Simulator::new(m.clone())
+            .run(&kernels::schedule(&m, &GemmProblem::new(8, 2048, 7168), Strategy::SplitK).unwrap())
+            .unwrap();
+        let s = render_bottleneck(&m, &r);
+        assert!(s.contains("dequant workspace"));
+        assert!(s.contains("MEMORY TRANSFER"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let cells = vec![Fig2Cell {
+            model: "x".into(), n: 2, k: 3, batch: 4, splitk_us: 1.0, dp_us: 2.0,
+        }];
+        let j = fig2_json(&cells).to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap()[0].req_usize("n").unwrap(), 2);
+    }
+}

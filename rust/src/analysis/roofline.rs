@@ -1,0 +1,88 @@
+//! Roofline model for the Ascend 910 machine description.
+//!
+//! Arithmetic intensity is measured against *HBM* bytes (the scarce
+//! resource); attainable throughput is `min(peak, AI x BW)`.  The W4A16
+//! kernel's whole premise is moving the GEMM up the roofline by shrinking
+//! weight bytes — and §4.2's finding is that the decoupled round trip
+//! pushes it back down.
+
+use crate::ascend::{MachineConfig, SimReport};
+
+/// Roofline placement of one simulated kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    /// FLOPs per HBM byte.
+    pub arithmetic_intensity: f64,
+    /// TFLOPS bound for this intensity on this machine.
+    pub attainable_tflops: f64,
+    /// TFLOPS the simulated kernel actually achieved.
+    pub achieved_tflops: f64,
+    /// achieved / attainable (the efficiency ratio reported in DESIGN.md).
+    pub efficiency: f64,
+    /// True if the kernel sits left of the ridge (bandwidth-bound).
+    pub memory_bound: bool,
+}
+
+/// Intensity at which compute and bandwidth bounds meet.
+pub fn ridge_point(machine: &MachineConfig) -> f64 {
+    machine.peak_tflops_f16() * 1000.0 / machine.hbm_bw
+}
+
+/// Place a simulated kernel on the roofline.
+pub fn place(machine: &MachineConfig, report: &SimReport) -> RooflinePoint {
+    let flops = report.total_macs as f64 * 2.0;
+    let hbm_bytes = report.ledger.hbm_total().max(1.0);
+    let ai = flops / hbm_bytes;
+    let attainable = (machine.peak_tflops_f16()).min(ai * machine.hbm_bw / 1000.0);
+    let achieved = report.achieved_tflops();
+    RooflinePoint {
+        arithmetic_intensity: ai,
+        attainable_tflops: attainable,
+        achieved_tflops: achieved,
+        efficiency: if attainable > 0.0 { achieved / attainable } else { 0.0 },
+        memory_bound: ai < ridge_point(machine),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, GemmProblem, Strategy};
+    use crate::ascend::Simulator;
+
+    #[test]
+    fn ridge_point_is_peak_over_bandwidth() {
+        let m = MachineConfig::ascend910();
+        let ridge = ridge_point(&m);
+        // 262 TFLOPS / 1.2 TB/s ~ 218 flops/byte
+        assert!((ridge - 218.0).abs() < 2.0, "ridge {ridge}");
+    }
+
+    #[test]
+    fn decode_gemm_is_memory_bound() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 2048, 7168);
+        let trace = kernels::schedule(&m, &p, Strategy::Fp16Native).unwrap();
+        let r = Simulator::new(m.clone()).run(&trace).unwrap();
+        let point = place(&m, &r);
+        assert!(point.memory_bound);
+        assert!(point.efficiency > 0.3 && point.efficiency <= 1.0,
+            "efficiency {}", point.efficiency);
+    }
+
+    #[test]
+    fn w4a16_raises_intensity_vs_fp16() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 2048, 7168);
+        let fp16 = Simulator::new(m.clone())
+            .run(&kernels::schedule(&m, &p, Strategy::Fp16Native).unwrap())
+            .unwrap();
+        let sk = Simulator::new(m.clone())
+            .run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap())
+            .unwrap();
+        // Workspace round trip stays on-chip, so HBM intensity rises.
+        assert!(
+            place(&m, &sk).arithmetic_intensity > place(&m, &fp16).arithmetic_intensity
+        );
+    }
+}

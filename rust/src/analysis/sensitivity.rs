@@ -1,0 +1,211 @@
+//! Sensitivity analysis: how the paper's headline numbers move with the
+//! architecture parameters.
+//!
+//! The paper's future-work section argues for hardware co-design (direct
+//! vector->cube paths, fused instructions).  This module quantifies the
+//! *whole* design space the conclusion points at: sweep one machine
+//! parameter (L2 bandwidth, HBM bandwidth, L2 capacity, per-core MTE
+//! bandwidth, barrier cost) and report how the W4A16-vs-FP16 cap and the
+//! Split-K-vs-DP advantage respond.  This is the analysis a hardware team
+//! would run before taping out the paper's proposal.
+
+use crate::ascend::{MachineConfig, Simulator};
+use crate::kernels::{self, GemmProblem, Strategy};
+use crate::model::llm::paper_shapes;
+use crate::util::stats;
+
+/// A machine parameter that can be swept.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Knob {
+    L2Bandwidth,
+    HbmBandwidth,
+    L2Capacity,
+    MteCoreBandwidth,
+    BarrierCost,
+}
+
+impl Knob {
+    pub fn all() -> [Knob; 5] {
+        [
+            Knob::L2Bandwidth,
+            Knob::HbmBandwidth,
+            Knob::L2Capacity,
+            Knob::MteCoreBandwidth,
+            Knob::BarrierCost,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Knob::L2Bandwidth => "l2_bw",
+            Knob::HbmBandwidth => "hbm_bw",
+            Knob::L2Capacity => "l2_bytes",
+            Knob::MteCoreBandwidth => "mte_core_bw",
+            Knob::BarrierCost => "barrier_ns",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Knob> {
+        Knob::all()
+            .into_iter()
+            .find(|k| k.name() == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown knob '{name}'"))
+    }
+
+    /// Baseline value on a machine.
+    pub fn get(&self, m: &MachineConfig) -> f64 {
+        match self {
+            Knob::L2Bandwidth => m.l2_bw,
+            Knob::HbmBandwidth => m.hbm_bw,
+            Knob::L2Capacity => m.l2_bytes as f64,
+            Knob::MteCoreBandwidth => m.mte_core_bw,
+            Knob::BarrierCost => m.barrier_ns,
+        }
+    }
+
+    /// Apply a scaled value to a machine copy.
+    pub fn apply(&self, m: &MachineConfig, scale: f64) -> MachineConfig {
+        let mut out = m.clone();
+        match self {
+            Knob::L2Bandwidth => out.l2_bw = m.l2_bw * scale,
+            Knob::HbmBandwidth => out.hbm_bw = m.hbm_bw * scale,
+            Knob::L2Capacity => out.l2_bytes = (m.l2_bytes as f64 * scale) as u64,
+            Knob::MteCoreBandwidth => out.mte_core_bw = m.mte_core_bw * scale,
+            Knob::BarrierCost => out.barrier_ns = m.barrier_ns * scale,
+        }
+        // Keep the machine self-consistent: L2 must stay >= HBM bandwidth.
+        if out.l2_bw < out.hbm_bw {
+            out.l2_bw = out.hbm_bw;
+        }
+        out
+    }
+}
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SensitivityPoint {
+    pub scale: f64,
+    pub value: f64,
+    /// Max W4A16-vs-FP16 speedup over the paper shape table (Fig 3 cap).
+    pub w4a16_cap: f64,
+    /// Geomean W4A16-vs-FP16 speedup.
+    pub w4a16_geomean: f64,
+    /// Max Split-K-vs-DP speedup over the K>>N shapes (Fig 2 headline).
+    pub splitk_max: f64,
+}
+
+/// Sweep one knob over the given scale factors at decode batch `m_batch`.
+pub fn sweep(
+    base: &MachineConfig,
+    knob: Knob,
+    scales: &[f64],
+    m_batch: usize,
+) -> anyhow::Result<Vec<SensitivityPoint>> {
+    let mut out = Vec::with_capacity(scales.len());
+    for &scale in scales {
+        let machine = knob.apply(base, scale);
+        machine.validate()?;
+        let sim = Simulator::new(machine.clone());
+        let mut w4a16 = Vec::new();
+        let mut splitk_dp = Vec::new();
+        for shape in paper_shapes() {
+            let p = GemmProblem::new(m_batch, shape.n, shape.k);
+            let sk = sim.run(&kernels::schedule(&machine, &p, Strategy::SplitK)?)?;
+            let fp = sim.run(&kernels::schedule(&machine, &p, Strategy::Fp16Native)?)?;
+            w4a16.push(fp.total_ns / sk.total_ns);
+            if shape.k_dominant() {
+                let dp = sim.run(&kernels::schedule(&machine, &p, Strategy::DataParallel)?)?;
+                splitk_dp.push(dp.total_ns / sk.total_ns);
+            }
+        }
+        out.push(SensitivityPoint {
+            scale,
+            value: knob.get(&machine),
+            w4a16_cap: w4a16.iter().cloned().fold(0.0, f64::max),
+            w4a16_geomean: stats::geomean(&w4a16),
+            splitk_max: splitk_dp.iter().cloned().fold(0.0, f64::max),
+        });
+    }
+    Ok(out)
+}
+
+/// Render a sweep as an aligned table.
+pub fn render(knob: Knob, points: &[SensitivityPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "sensitivity of the paper's headline numbers to `{}`\n",
+        knob.name()
+    ));
+    out.push_str(&format!(
+        "{:>8} {:>14} | {:>10} {:>14} {:>12}\n",
+        "scale", knob.name(), "w4a16_cap", "w4a16_geomean", "splitk_max"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>7.2}x {:>14.0} | {:>9.2}x {:>13.2}x {:>11.2}x\n",
+            p.scale, p.value, p.w4a16_cap, p.w4a16_geomean, p.splitk_max
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_round_trips() {
+        for k in Knob::all() {
+            assert_eq!(Knob::from_name(k.name()).unwrap(), k);
+        }
+        assert!(Knob::from_name("warp_size").is_err());
+    }
+
+    #[test]
+    fn apply_scales_the_right_field() {
+        let base = MachineConfig::ascend910();
+        let m = Knob::HbmBandwidth.apply(&base, 2.0);
+        assert_eq!(m.hbm_bw, 2400.0);
+        assert_eq!(m.l2_bw, base.l2_bw);
+        let m = Knob::L2Capacity.apply(&base, 0.5);
+        assert_eq!(m.l2_bytes, base.l2_bytes / 2);
+    }
+
+    #[test]
+    fn keeps_l2_at_least_hbm() {
+        let base = MachineConfig::ascend910();
+        let m = Knob::HbmBandwidth.apply(&base, 10.0);
+        assert!(m.l2_bw >= m.hbm_bw);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn more_l2_bandwidth_raises_the_w4a16_cap() {
+        // The paper's cap is L2-bandwidth-limited: doubling L2 bandwidth
+        // must raise it; halving HBM bandwidth (same ratio change) too.
+        let base = MachineConfig::ascend910();
+        let pts = sweep(&base, Knob::L2Bandwidth, &[1.0, 2.0], 8).unwrap();
+        assert!(
+            pts[1].w4a16_cap > pts[0].w4a16_cap * 1.1,
+            "{} vs {}",
+            pts[1].w4a16_cap,
+            pts[0].w4a16_cap
+        );
+    }
+
+    #[test]
+    fn smaller_l2_capacity_hurts_w4a16() {
+        let base = MachineConfig::ascend910();
+        let pts = sweep(&base, Knob::L2Capacity, &[1.0, 0.25], 8).unwrap();
+        assert!(pts[1].w4a16_geomean < pts[0].w4a16_geomean);
+    }
+
+    #[test]
+    fn render_is_tabular() {
+        let base = MachineConfig::ascend910();
+        let pts = sweep(&base, Knob::BarrierCost, &[1.0], 8).unwrap();
+        let text = render(Knob::BarrierCost, &pts);
+        assert!(text.contains("barrier_ns"));
+        assert!(text.contains("w4a16_cap"));
+    }
+}

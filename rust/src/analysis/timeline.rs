@@ -1,0 +1,132 @@
+//! Chrome-trace (about://tracing / Perfetto) export of a simulated kernel.
+//!
+//! Turns a [`SimReport`] into the Trace Event JSON format so the phase
+//! overlap, barriers and per-stream occupancy can be inspected visually —
+//! the simulator's equivalent of the NPU profiler timelines the paper's
+//! authors used for §4.2.
+
+use crate::ascend::npu::SimReport;
+use crate::ascend::trace::Unit;
+use crate::util::json::Json;
+
+/// Build the Trace Event JSON for one simulated kernel.
+///
+/// Rows (tids): 0 = sync (launch/barriers), 1 = cube stream, 2 = vector
+/// stream, 3 = HBM stream, 4 = L2 stream.  Durations are the per-group
+/// stream times laid out sequentially with barriers between groups.
+pub fn chrome_trace(report: &SimReport) -> Json {
+    let mut events = Vec::new();
+    let mut emit = |name: String, tid: u32, ts_us: f64, dur_us: f64| {
+        if dur_us <= 0.0 {
+            return;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("sim")),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(ts_us)),
+            ("dur", Json::num(dur_us)),
+        ]));
+    };
+
+    let mut cursor = 0.0f64; // µs
+    emit("launch".into(), 0, cursor, report.launch_ns / 1e3);
+    cursor += report.launch_ns / 1e3;
+
+    let barrier_each = if report.groups.len() > 1 {
+        report.barrier_ns / 1e3 / (report.groups.len() - 1) as f64
+    } else {
+        0.0
+    };
+
+    for (gi, group) in report.groups.iter().enumerate() {
+        if gi > 0 {
+            emit(format!("barrier {gi}"), 0, cursor, barrier_each);
+            cursor += barrier_each;
+        }
+        // Streams of this group run concurrently from `cursor`.
+        emit(format!("group{gi} hbm"), 3, cursor, group.hbm_ns / 1e3);
+        emit(format!("group{gi} l2"), 4, cursor, group.l2_ns / 1e3);
+        emit(format!("group{gi} cube"), 1, cursor, group.cube_ns / 1e3);
+        emit(format!("group{gi} vector"), 2, cursor, group.vector_ns / 1e3);
+        // Phase annotations on their unit's row.
+        for &pi in &group.phases {
+            let pt = &report.phase_times[pi];
+            let tid = match pt.unit {
+                Unit::Cube => 1,
+                Unit::Vector => 2,
+            };
+            emit(format!("{} ({} engines)", pt.name, pt.active_engines),
+                 tid, cursor, pt.compute_ns / 1e3);
+        }
+        emit(format!("group{gi} fill"), 0, cursor, group.fill_ns / 1e3);
+        cursor += group.total_ns / 1e3;
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ns")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("kernel", Json::str(report.name.clone())),
+                ("total_us", Json::num(report.total_ns / 1e3)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::{MachineConfig, Simulator};
+    use crate::kernels::{self, GemmProblem, Strategy};
+
+    fn report() -> SimReport {
+        let m = MachineConfig::ascend910();
+        Simulator::new(m.clone())
+            .run(&kernels::schedule(&m, &GemmProblem::new(8, 512, 16384), Strategy::SplitK).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn emits_valid_trace_json() {
+        let r = report();
+        let j = chrome_trace(&r);
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.req_arr("traceEvents").unwrap();
+        assert!(events.len() >= 5);
+        for e in events {
+            assert_eq!(e.req_str("ph").unwrap(), "X");
+            assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn timeline_spans_the_total() {
+        let r = report();
+        let j = chrome_trace(&r);
+        let events = j.req_arr("traceEvents").unwrap();
+        let end = events
+            .iter()
+            .map(|e| {
+                e.get("ts").unwrap().as_f64().unwrap()
+                    + e.get("dur").unwrap().as_f64().unwrap()
+            })
+            .fold(0.0f64, f64::max);
+        // Last event must end at (or just below) the reported total.
+        assert!((end - r.total_ns / 1e3).abs() / (r.total_ns / 1e3) < 0.05,
+            "end {end} vs total {}", r.total_ns / 1e3);
+    }
+
+    #[test]
+    fn barrier_present_for_multi_group_kernels() {
+        let r = report();
+        assert!(r.groups.len() >= 2, "need a 3-phase kernel for this test");
+        let text = chrome_trace(&r).to_string();
+        assert!(text.contains("barrier 1"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Memory-traffic decomposition — the quantitative form of §4.2.
+//!
+//! Splits a simulated kernel's bytes by buffer class and memory level, and
+//! answers the paper's question directly: how much *extra* traffic does the
+//! decoupled vector->cube workspace round trip add over the packed weight
+//! bytes, and is the type-cast compute ever the bottleneck?
+
+use crate::ascend::npu::SimReport;
+use crate::ascend::trace::{BufferClass, Unit};
+use crate::ascend::MachineConfig;
+
+/// One row of the decomposition table.
+#[derive(Debug, Clone)]
+pub struct TrafficRow {
+    pub class: BufferClass,
+    pub label: &'static str,
+    pub hbm_bytes: f64,
+    pub l2_bytes: f64,
+}
+
+/// Bottleneck verdict for one kernel execution.
+#[derive(Debug, Clone)]
+pub struct BottleneckReport {
+    pub rows: Vec<TrafficRow>,
+    /// Workspace round-trip bytes (write + re-read, both levels).
+    pub round_trip_bytes: f64,
+    /// Packed weight bytes actually read.
+    pub packed_bytes: f64,
+    /// Ratio of round-trip traffic to packed-weight traffic (the paper's
+    /// "extra global memory transfer for the weight").
+    pub round_trip_ratio: f64,
+    /// Total vector-core compute time (the type-cast cost itself).
+    pub cast_compute_ns: f64,
+    /// Total transfer-stream time across groups.
+    pub transfer_ns: f64,
+    /// True when transfers, not the cast, bound the kernel — the paper's
+    /// §4.2 claim.
+    pub transfer_bound: bool,
+}
+
+pub fn class_label(class: BufferClass) -> &'static str {
+    match class {
+        BufferClass::WeightPacked => "weights (packed INT4)",
+        BufferClass::WeightF16 => "weights (FP16)",
+        BufferClass::Activation => "activations",
+        BufferClass::Workspace => "dequant workspace",
+        BufferClass::Partial => "split-K partials",
+        BufferClass::Output => "output C",
+        BufferClass::QuantParam => "scales/zeros",
+    }
+}
+
+/// Decompose one simulated kernel.
+pub fn decompose(report: &SimReport) -> BottleneckReport {
+    let mut rows = Vec::new();
+    for (&class, t) in &report.ledger.by_class {
+        rows.push(TrafficRow {
+            class,
+            label: class_label(class),
+            hbm_bytes: t.hbm_total(),
+            l2_bytes: t.l2_total(),
+        });
+    }
+    let ws = report.ledger.class(BufferClass::Workspace);
+    let packed = report.ledger.class(BufferClass::WeightPacked);
+    let round_trip = ws.hbm_total() + ws.l2_total();
+    let packed_bytes = packed.hbm_read + packed.l2_read;
+    let cast_compute_ns: f64 = report
+        .phase_times
+        .iter()
+        .filter(|p| p.unit == Unit::Vector)
+        .map(|p| p.compute_ns)
+        .sum();
+    let transfer_ns: f64 = report
+        .groups
+        .iter()
+        .map(|g| g.hbm_ns.max(g.l2_ns))
+        .sum();
+    BottleneckReport {
+        rows,
+        round_trip_bytes: round_trip,
+        packed_bytes,
+        round_trip_ratio: if packed_bytes > 0.0 { round_trip / packed_bytes } else { 0.0 },
+        cast_compute_ns,
+        transfer_ns,
+        transfer_bound: transfer_ns > cast_compute_ns,
+    }
+}
+
+/// The theoretical W4A16 ceiling for a problem on this machine: the ratio
+/// of FP16 weight bytes to the bytes W4A16 actually moves through HBM.
+/// Equals ~4 only if the workspace round trip were free (the fused path).
+pub fn theoretical_speedup_ceiling(machine: &MachineConfig, report: &SimReport) -> f64 {
+    let _ = machine;
+    let ws = report.ledger.class(BufferClass::Workspace);
+    let packed = report.ledger.class(BufferClass::WeightPacked);
+    let fp16_equivalent = 4.0 * (packed.hbm_read + packed.l2_read);
+    let moved = packed.hbm_read + packed.l2_read + ws.hbm_total();
+    if moved > 0.0 {
+        fp16_equivalent / moved
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+    use crate::kernels::{self, GemmProblem, Strategy};
+
+    fn sim(p: &GemmProblem, s: Strategy) -> SimReport {
+        let m = MachineConfig::ascend910();
+        Simulator::new(m.clone())
+            .run(&kernels::schedule(&m, p, s).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn round_trip_is_8x_packed_bytes() {
+        // write 2KN + read 2KN vs packed KN/2 -> ratio 8 (per M-tile row).
+        let r = sim(&GemmProblem::new(8, 2048, 7168), Strategy::SplitK);
+        let b = decompose(&r);
+        assert!((b.round_trip_ratio - 8.0).abs() < 0.3, "{}", b.round_trip_ratio);
+    }
+
+    #[test]
+    fn cast_is_not_the_bottleneck() {
+        // The paper's §4.2 headline finding.
+        let r = sim(&GemmProblem::new(8, 2048, 7168), Strategy::SplitK);
+        let b = decompose(&r);
+        assert!(b.transfer_bound, "cast {} vs transfer {}", b.cast_compute_ns, b.transfer_ns);
+    }
+
+    #[test]
+    fn fp16_baseline_has_no_round_trip() {
+        let r = sim(&GemmProblem::new(8, 2048, 7168), Strategy::Fp16Native);
+        let b = decompose(&r);
+        assert_eq!(b.round_trip_bytes, 0.0);
+        assert_eq!(b.packed_bytes, 0.0);
+    }
+
+    #[test]
+    fn ceiling_well_below_4x_for_spilling_shapes() {
+        // A workspace far larger than L2 spills; the ceiling collapses.
+        let r = sim(&GemmProblem::new(8, 12288, 5120), Strategy::SplitK);
+        let m = MachineConfig::ascend910();
+        let ceil = theoretical_speedup_ceiling(&m, &r);
+        assert!(ceil < 4.0, "ceiling {ceil}");
+    }
+}

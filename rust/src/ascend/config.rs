@@ -1,0 +1,165 @@
+//! Machine description of the Ascend 910 (DaVinci Max) used by the simulator.
+//!
+//! Values are drawn from public Huawei documentation and the paper's §2.3:
+//! 32 AI cores at ~1 GHz, each with one 16x16x16-FP16 cube core, two
+//! 2048-bit vector cores, private L1/L0A/L0B/L0C/UB buffers and MTE
+//! engines; a shared on-chip buffer (L2); HBM2 at ~1.2 TB/s.  The chip
+//! peak of 32 x 4096 MAC/cycle x 2 flops x 1 GHz = 262 TFLOPS FP16 matches
+//! the marketed 256 TFLOPS within rounding.
+
+/// Full machine description.  All bandwidths are bytes/ns (== GB/s / 1e0,
+/// since 1 GB/s = 1 byte/ns exactly in our unit system).
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    /// Number of AI cores (each one cube + `vector_per_core` vector units).
+    pub ai_cores: usize,
+    /// Vector cores per AI core (paper: two on Ascend 910).
+    pub vector_per_core: usize,
+    /// Core clock in GHz (cycles per ns).
+    pub clock_ghz: f64,
+
+    // --- cube core -------------------------------------------------------
+    /// MMAD tile edge: the cube core multiplies 16x16x16 FP16 tiles.
+    pub cube_tile: usize,
+    /// MACs retired per cube core per cycle (16^3 = 4096).
+    pub cube_macs_per_cycle: f64,
+
+    // --- vector core -----------------------------------------------------
+    /// FP16 lanes per vector core per cycle (2048-bit SIMD = 128 lanes).
+    pub vector_lanes_f16: f64,
+    /// FP32 lanes per vector core per cycle (half the f16 lanes).
+    pub vector_lanes_f32: f64,
+
+    // --- on-chip buffers (per AI core, bytes) ------------------------------
+    pub l1_bytes: u64,
+    pub l0a_bytes: u64,
+    pub l0b_bytes: u64,
+    pub l0c_bytes: u64,
+    pub ub_bytes: u64,
+
+    // --- memory system -----------------------------------------------------
+    /// Shared on-chip buffer capacity (bytes).
+    pub l2_bytes: u64,
+    /// Aggregate L2 bandwidth (bytes/ns).
+    pub l2_bw: f64,
+    /// Aggregate HBM bandwidth (bytes/ns).
+    pub hbm_bw: f64,
+    /// Per-core MTE bandwidth cap (bytes/ns): one core cannot saturate HBM.
+    pub mte_core_bw: f64,
+    /// L2 residency retention factor in [0,1]: fraction of capacity that
+    /// usefully survives between producer and consumer phases (conflict
+    /// misses, other traffic).
+    pub l2_retention: f64,
+    /// DMA burst size (bytes) below which MTE transfers lose efficiency:
+    /// a transfer whose contiguous row segment is `b < dma_burst_bytes`
+    /// achieves only `b / dma_burst_bytes` of peak bandwidth.  This is why
+    /// narrow B tiles cannot substitute for Split-K occupancy.
+    pub dma_burst_bytes: f64,
+
+    // --- synchronization ----------------------------------------------------
+    /// One-time kernel launch latency (ns).
+    pub launch_ns: f64,
+    /// Grid-wide barrier between phases (ns) — the "wait for all AIC cores"
+    /// event sync of Algorithm 1.
+    pub barrier_ns: f64,
+    /// Per-tile event handshake between MTE and compute (ns); the double
+    /// buffering pipeline hides most but not all of it.
+    pub event_ns: f64,
+}
+
+impl MachineConfig {
+    /// The Ascend 910 description used throughout the paper reproduction.
+    pub fn ascend910() -> MachineConfig {
+        MachineConfig {
+            ai_cores: 32,
+            vector_per_core: 2,
+            clock_ghz: 1.0,
+            cube_tile: 16,
+            cube_macs_per_cycle: 4096.0,
+            vector_lanes_f16: 128.0,
+            vector_lanes_f32: 64.0,
+            l1_bytes: 1 << 20,        // 1 MiB
+            l0a_bytes: 64 << 10,      // 64 KiB
+            l0b_bytes: 64 << 10,      // 64 KiB
+            l0c_bytes: 256 << 10,     // 256 KiB
+            ub_bytes: 256 << 10,      // 256 KiB
+            l2_bytes: 32 << 20,       // 32 MiB shared
+            l2_bw: 3600.0,            // 3.6 TB/s aggregate on-chip buffer
+            hbm_bw: 1200.0,           // 1.2 TB/s
+            mte_core_bw: 500.0,       // 500 GB/s per core (L1 <-> L2/GM port)
+            l2_retention: 0.90,
+            dma_burst_bytes: 256.0,
+            launch_ns: 5_000.0,
+            barrier_ns: 2_000.0,
+            event_ns: 50.0,
+        }
+    }
+
+    /// Total vector cores on the chip.
+    pub fn total_vector_cores(&self) -> usize {
+        self.ai_cores * self.vector_per_core
+    }
+
+    /// Chip peak FP16 throughput in TFLOPS (2 flops per MAC).
+    pub fn peak_tflops_f16(&self) -> f64 {
+        self.ai_cores as f64 * self.cube_macs_per_cycle * 2.0 * self.clock_ghz / 1000.0
+    }
+
+    /// Cube-core cycles for one (m, n, k) MMAD block (FP16, FP32 accumulate).
+    pub fn mmad_cycles(&self, m: usize, n: usize, k: usize) -> f64 {
+        (m * n * k) as f64 / self.cube_macs_per_cycle
+    }
+
+    /// Nanoseconds for `cycles` at the core clock.
+    pub fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.clock_ghz
+    }
+
+    /// Sanity-check invariants (used by tests and the CLI on startup).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.ai_cores > 0, "need at least one AI core");
+        anyhow::ensure!(self.hbm_bw > 0.0 && self.l2_bw >= self.hbm_bw,
+            "L2 must be at least as fast as HBM");
+        anyhow::ensure!((0.0..=1.0).contains(&self.l2_retention));
+        anyhow::ensure!(self.l0a_bytes <= self.l1_bytes);
+        Ok(())
+    }
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        MachineConfig::ascend910()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascend910_peak_matches_datasheet() {
+        let m = MachineConfig::ascend910();
+        let tflops = m.peak_tflops_f16();
+        assert!((tflops - 262.144).abs() < 1.0, "got {tflops}");
+    }
+
+    #[test]
+    fn mmad_cycles_for_native_tile_is_one() {
+        let m = MachineConfig::ascend910();
+        assert_eq!(m.mmad_cycles(16, 16, 16), 1.0);
+        assert_eq!(m.mmad_cycles(16, 256, 128), 128.0);
+    }
+
+    #[test]
+    fn validates() {
+        MachineConfig::ascend910().validate().unwrap();
+        let mut bad = MachineConfig::ascend910();
+        bad.l2_bw = 1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn vector_core_count() {
+        assert_eq!(MachineConfig::ascend910().total_vector_cores(), 64);
+    }
+}

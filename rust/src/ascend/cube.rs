@@ -1,0 +1,75 @@
+//! Cube-core (AIC) timing: the 16x16x16 FP16 MMAD systolic unit.
+//!
+//! The cube core retires one 16x16x16 FP16 multiply-accumulate tile per
+//! cycle into the FP32 L0C accumulator.  It cannot perform type
+//! conversion or general elementwise arithmetic — the architectural fact
+//! Algorithm 1 is built around.
+
+use super::config::MachineConfig;
+use super::trace::ComputeOp;
+
+/// Nanoseconds for one compute op on a cube core; `None` if the op is not
+/// executable on this unit (type conversion / elementwise work).
+pub fn op_ns(machine: &MachineConfig, op: ComputeOp) -> Option<f64> {
+    match op {
+        ComputeOp::Mmad { m, n, k } => {
+            // Dimensions are padded up to whole cube tiles by the hardware
+            // (the paper: small batches are padded, hence flat time in M).
+            let t = machine.cube_tile;
+            let pad = |x: usize| x.div_ceil(t) * t;
+            let cycles = machine.mmad_cycles(pad(m), pad(n), pad(k));
+            Some(machine.cycles_to_ns(cycles))
+        }
+        ComputeOp::Nop => Some(0.0),
+        // No conversion / elementwise datapath on the cube core.
+        ComputeOp::Dequant { .. } | ComputeOp::Reduce { .. } | ComputeOp::Cast { .. } => None,
+    }
+}
+
+/// Check L0 capacity for an MMAD block: A tile in L0A, B tile in L0B
+/// (double-buffered: x2), C tile in L0C (FP32).
+pub fn block_fits_l0(machine: &MachineConfig, bm: usize, bn: usize, bk: usize) -> bool {
+    let a = 2 * bm * bk * 2; // f16, double buffered
+    let b = 2 * bk * bn * 2;
+    let c = bm * bn * 4; // f32 accumulator
+    (a as u64) <= machine.l0a_bytes && (b as u64) <= machine.l0b_bytes && (c as u64) <= machine.l0c_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::trace::ComputeOp;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn native_tile_is_one_cycle() {
+        assert_eq!(op_ns(&m(), ComputeOp::Mmad { m: 16, n: 16, k: 16 }), Some(1.0));
+    }
+
+    #[test]
+    fn padding_to_cube_tile() {
+        // m=1 is padded to 16: same cost as m=16 (flat-in-M behaviour)
+        let one = op_ns(&m(), ComputeOp::Mmad { m: 1, n: 256, k: 128 }).unwrap();
+        let sixteen = op_ns(&m(), ComputeOp::Mmad { m: 16, n: 256, k: 128 }).unwrap();
+        assert_eq!(one, sixteen);
+    }
+
+    #[test]
+    fn cube_cannot_convert_types() {
+        assert_eq!(op_ns(&m(), ComputeOp::Dequant { elems: 10 }), None);
+        assert_eq!(op_ns(&m(), ComputeOp::Cast { elems: 10 }), None);
+    }
+
+    #[test]
+    fn l0_capacity_check() {
+        // B tile double-buffered: 2*128*128*2 = 64 KiB == L0B exactly
+        assert!(block_fits_l0(&m(), 16, 128, 128));
+        // 2*128*256*2 = 128 KiB > 64 KiB L0B
+        assert!(!block_fits_l0(&m(), 16, 256, 128));
+        // 512x512 f32 accumulator = 1 MiB > 256 KiB L0C
+        assert!(!block_fits_l0(&m(), 512, 512, 128));
+    }
+}

@@ -1,0 +1,59 @@
+//! Synchronization-cost model: kernel launch, inter-phase barriers and
+//! per-tile MTE/compute event handshakes.
+//!
+//! Algorithm 1 synchronizes (a) globally between phases ("wait for all AIC
+//! cores to finish") and (b) per tile between the Memory Transfer Engines
+//! and the compute pipes (double-buffering events).  Double buffering
+//! hides the per-tile events except for the pipeline fill; barriers and
+//! launch latency are exposed in full.
+
+use super::config::MachineConfig;
+
+/// Cost accumulator for a kernel's synchronization events.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SyncCosts {
+    pub launch_ns: f64,
+    pub barrier_ns: f64,
+    pub fill_ns: f64,
+    pub barriers: usize,
+}
+
+impl SyncCosts {
+    pub fn total_ns(&self) -> f64 {
+        self.launch_ns + self.barrier_ns + self.fill_ns
+    }
+}
+
+/// One kernel launch.
+pub fn launch(machine: &MachineConfig) -> f64 {
+    machine.launch_ns
+}
+
+/// One grid-wide barrier (phase boundary).
+pub fn barrier(machine: &MachineConfig) -> f64 {
+    machine.barrier_ns
+}
+
+/// Pipeline-fill cost for a double-buffered phase: the first tile's
+/// transfer cannot overlap anything, and each engine pays one event
+/// handshake entering the steady state.
+pub fn pipeline_fill(machine: &MachineConfig, first_transfer_ns: f64) -> f64 {
+    first_transfer_ns + machine.event_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_accumulate() {
+        let m = MachineConfig::ascend910();
+        let c = SyncCosts {
+            launch_ns: launch(&m),
+            barrier_ns: 2.0 * barrier(&m),
+            fill_ns: pipeline_fill(&m, 100.0),
+            barriers: 2,
+        };
+        assert_eq!(c.total_ns(), 5_000.0 + 4_000.0 + 150.0);
+    }
+}

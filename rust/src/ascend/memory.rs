@@ -1,0 +1,176 @@
+//! Memory-system model: L2 residency for producer-consumer traffic and
+//! fair-share bandwidth partitioning between engines.
+//!
+//! The decisive mechanism of the paper's §4.2 lives here: the dequantized
+//! FP16 workspace written by the vector cores must be re-read by the cube
+//! cores through the memory system.  Whatever fraction of it is still
+//! resident in the shared L2 when Phase 2 starts is served at L2 bandwidth;
+//! the rest spills to HBM.  Since Algorithm 1 places a full barrier between
+//! the phases, residency is capacity-shaped: `min(1, retention * L2 / WS)`.
+
+use super::config::MachineConfig;
+use super::trace::BufferClass;
+
+/// Where a transfer class is served from, split into L2-hit and HBM parts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceSplit {
+    /// Fraction served from L2 (0..1); the rest goes to HBM.
+    pub l2_fraction: f64,
+    /// Extra HBM write-back bytes per byte written (spill on the write path).
+    pub writeback_fraction: f64,
+}
+
+impl ServiceSplit {
+    pub const COLD: ServiceSplit = ServiceSplit { l2_fraction: 0.0, writeback_fraction: 1.0 };
+}
+
+/// L2 residency model for one kernel execution.
+#[derive(Debug, Clone)]
+pub struct L2Model {
+    /// Residency of the workspace when re-read (0..1).
+    pub workspace_hit: f64,
+    /// Residency of the Split-K partial buffers when re-read (0..1).
+    pub partial_hit: f64,
+}
+
+impl L2Model {
+    /// Compute residency from buffer footprints.
+    ///
+    /// With a barrier between producer and consumer phases, the whole
+    /// buffer is produced before any consumption: L2 retains at most
+    /// `retention * capacity` bytes of it, so the expected hit fraction on
+    /// the consumer side is `min(1, retention * capacity / footprint)`.
+    /// The workspace and the partial buffers share capacity in proportion
+    /// to their sizes.
+    pub fn new(machine: &MachineConfig, workspace_bytes: u64, partial_bytes: u64) -> L2Model {
+        let cap = machine.l2_retention * machine.l2_bytes as f64;
+        let hit = |bytes: u64| -> f64 {
+            if bytes == 0 {
+                return 0.0;
+            }
+            let total = (workspace_bytes + partial_bytes) as f64;
+            // Each buffer gets a proportional share of retained capacity.
+            let share = cap * bytes as f64 / total;
+            (share / bytes as f64).min(1.0)
+        };
+        L2Model {
+            workspace_hit: hit(workspace_bytes),
+            partial_hit: hit(partial_bytes),
+        }
+    }
+
+    /// Service split for a *read* of the given class.
+    pub fn read_split(&self, class: BufferClass) -> ServiceSplit {
+        match class {
+            BufferClass::Workspace => ServiceSplit {
+                l2_fraction: self.workspace_hit,
+                writeback_fraction: 0.0,
+            },
+            BufferClass::Partial => ServiceSplit {
+                l2_fraction: self.partial_hit,
+                writeback_fraction: 0.0,
+            },
+            // Activations are small and typically L2-resident after first
+            // touch, but the first touch is cold; model them as cold reads
+            // (they are negligible at decode shapes either way).
+            _ => ServiceSplit::COLD,
+        }
+    }
+
+    /// Service split for a *write* of the given class.  Writes land in L2;
+    /// the fraction that will not survive until the consumer phase is
+    /// charged as HBM write-back bandwidth.
+    pub fn write_split(&self, class: BufferClass) -> ServiceSplit {
+        match class {
+            BufferClass::Workspace => ServiceSplit {
+                l2_fraction: 1.0,
+                writeback_fraction: 1.0 - self.workspace_hit,
+            },
+            BufferClass::Partial => ServiceSplit {
+                l2_fraction: 1.0,
+                writeback_fraction: 1.0 - self.partial_hit,
+            },
+            // Outputs are written once and consumed by the host: write-back.
+            _ => ServiceSplit { l2_fraction: 1.0, writeback_fraction: 1.0 },
+        }
+    }
+}
+
+/// Effective per-engine bandwidths for a phase with `active` engines.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseBandwidth {
+    /// Bytes/ns one engine can move against HBM.
+    pub hbm_per_engine: f64,
+    /// Bytes/ns one engine can move against L2.
+    pub l2_per_engine: f64,
+}
+
+/// Fair-share bandwidth partitioning: each engine is capped by its MTE and
+/// by an equal share of the aggregate L2/HBM bandwidth.  This is the
+/// occupancy lever behind Figure 2: a data-parallel schedule that keeps
+/// only 4 of 32 cores busy moves at most 4 x min(MTE, HBM/4) bytes/ns.
+pub fn phase_bandwidth(machine: &MachineConfig, active_engines: usize) -> PhaseBandwidth {
+    let active = active_engines.max(1) as f64;
+    PhaseBandwidth {
+        hbm_per_engine: machine.mte_core_bw.min(machine.hbm_bw / active),
+        l2_per_engine: machine.mte_core_bw.min(machine.l2_bw / active),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn workspace_fitting_l2_hits_fully() {
+        // 16 MiB workspace < 0.9 * 32 MiB retained capacity
+        let l2 = L2Model::new(&m(), 16 << 20, 0);
+        assert_eq!(l2.workspace_hit, 1.0);
+    }
+
+    #[test]
+    fn oversized_workspace_hits_partially() {
+        // 128 MiB workspace >> 32 MiB L2: hit ~ 0.9*32/128 = 0.225
+        let l2 = L2Model::new(&m(), 128 << 20, 0);
+        assert!((l2.workspace_hit - 0.225).abs() < 1e-9, "{}", l2.workspace_hit);
+    }
+
+    #[test]
+    fn shared_capacity_splits_proportionally() {
+        let l2 = L2Model::new(&m(), 64 << 20, 64 << 20);
+        // each gets 0.9*32/2 = 14.4 MiB of 64 MiB -> 0.225
+        assert!((l2.workspace_hit - 0.225).abs() < 1e-9);
+        assert!((l2.partial_hit - 0.225).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cold_classes_go_to_hbm() {
+        let l2 = L2Model::new(&m(), 1 << 20, 0);
+        let split = l2.read_split(BufferClass::WeightPacked);
+        assert_eq!(split.l2_fraction, 0.0);
+    }
+
+    #[test]
+    fn write_spill_complements_hit() {
+        let l2 = L2Model::new(&m(), 128 << 20, 0);
+        let ws = l2.write_split(BufferClass::Workspace);
+        assert!((ws.writeback_fraction - (1.0 - l2.workspace_hit)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_fair_share_caps() {
+        let bw = phase_bandwidth(&m(), 4);
+        // 4 cores: HBM/4 = 300 < MTE 500 -> 300 each
+        assert!((bw.hbm_per_engine - 300.0).abs() < 1e-9);
+        let bw32 = phase_bandwidth(&m(), 32);
+        // 32 cores: HBM/32 = 37.5 each
+        assert!((bw32.hbm_per_engine - 37.5).abs() < 1e-9);
+        // one core is MTE-capped against L2 (4800 > 500)
+        let bw1 = phase_bandwidth(&m(), 1);
+        assert_eq!(bw1.l2_per_engine, 500.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Cycle-approximate, event-driven simulator of the Ascend 910's decoupled
+//! AI-core architecture.
+//!
+//! This is the substrate substitution for the paper's hardware (see
+//! DESIGN.md §2): the findings under reproduction are *architectural* —
+//! they follow from (a) cube and vector units that communicate only
+//! through global memory, (b) the ratio of HBM bandwidth to MMAD
+//! throughput, and (c) Split-K occupancy at decode shapes — so a simulator
+//! that models exactly those mechanisms reproduces the shape of the
+//! paper's Figures 2 and 3 from first principles.
+//!
+//! Model summary:
+//! * [`config::MachineConfig`] — machine description (32 AI cores, each
+//!   1 cube + 2 vector cores; L1/L0A/L0B/L0C/UB buffers; MTE engines;
+//!   shared L2; HBM).
+//! * [`trace`] — the kernel-schedule IR: phases of per-core tile steps,
+//!   each step naming its compute op and its traffic per buffer class.
+//! * [`memory`] — L2 residency / spill model and bandwidth fair-sharing.
+//! * [`cube`] / [`vector`] — compute-unit timing (MMAD tiles, SIMD lanes).
+//! * [`mte`] — memory-transfer-engine timing with double buffering.
+//! * [`event`] — synchronization costs (event latency, phase barriers,
+//!   kernel launch).
+//! * [`npu`] — the chip-level executor: walks a trace, resolves bandwidth
+//!   contention, applies double buffering, and returns a [`npu::SimReport`]
+//!   with per-phase times and a byte-accurate traffic ledger.
+
+pub mod config;
+pub mod cube;
+pub mod event;
+pub mod memory;
+pub mod mte;
+pub mod npu;
+pub mod trace;
+pub mod vector;
+
+pub use config::MachineConfig;
+pub use npu::{SimReport, Simulator};
+pub use trace::{BufferClass, ComputeOp, KernelTrace, Phase, TileStep, Unit};

@@ -1,0 +1,206 @@
+//! Memory-Transfer-Engine model: converts a phase's tile steps into
+//! bandwidth demand against HBM and L2, honouring the L2 residency splits.
+//!
+//! Each engine's MTE moves its steps' bytes; double buffering overlaps the
+//! moves with compute, so the executor prices a phase as the *maximum* of
+//! its transfer streams and its compute stream (plus pipeline fill).
+
+use super::config::MachineConfig;
+use super::memory::L2Model;
+use super::trace::{Phase, TileStep, Unit};
+use super::{cube, vector};
+
+/// Aggregated demand of one phase, with straggler (max-engine) loads.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseDemand {
+    pub active: usize,
+    /// Total bytes against HBM / L2 across all engines.
+    pub hbm_total: f64,
+    pub l2_total: f64,
+    /// Heaviest single engine's bytes (stragglers gate the phase).
+    pub hbm_max_engine: f64,
+    pub l2_max_engine: f64,
+    /// Heaviest single engine's compute time.
+    pub compute_ns_max_engine: f64,
+    /// Total compute time across engines (utilization reporting).
+    pub compute_ns_total: f64,
+    /// Average first-step transfer bytes of the heaviest engine (pipeline fill).
+    pub fill_bytes: f64,
+    pub steps: usize,
+}
+
+/// Price one step's compute on the phase's unit; errors if the unit cannot
+/// execute the op (e.g. a type conversion scheduled on a cube core).
+fn step_compute_ns(machine: &MachineConfig, unit: Unit, step: &TileStep) -> anyhow::Result<f64> {
+    let ns = match unit {
+        Unit::Cube => cube::op_ns(machine, step.compute),
+        Unit::Vector => vector::op_ns(machine, step.compute),
+    };
+    ns.ok_or_else(|| {
+        anyhow::anyhow!("op {:?} not executable on {:?} unit", step.compute, unit)
+    })
+}
+
+/// Split one step's traffic into (hbm_bytes, l2_bytes) under the L2 model.
+fn step_traffic(l2: &L2Model, step: &TileStep) -> (f64, f64) {
+    let mut hbm = 0.0;
+    let mut l2b = 0.0;
+    for &(class, bytes) in &step.reads {
+        if bytes == 0 {
+            continue;
+        }
+        let split = l2.read_split(class);
+        l2b += bytes as f64 * split.l2_fraction;
+        hbm += bytes as f64 * (1.0 - split.l2_fraction);
+    }
+    for &(class, bytes) in &step.writes {
+        if bytes == 0 {
+            continue;
+        }
+        let split = l2.write_split(class);
+        l2b += bytes as f64 * split.l2_fraction;
+        hbm += bytes as f64 * split.writeback_fraction;
+    }
+    (hbm, l2b)
+}
+
+/// Compute the demand profile of a phase.
+pub fn phase_demand(
+    machine: &MachineConfig,
+    l2: &L2Model,
+    phase: &Phase,
+) -> anyhow::Result<PhaseDemand> {
+    let mut d = PhaseDemand { active: phase.active_engines(), ..Default::default() };
+    let mut max_engine_bytes = 0.0f64;
+    for steps in &phase.steps_per_engine {
+        if steps.is_empty() {
+            continue;
+        }
+        let mut e_hbm = 0.0;
+        let mut e_l2 = 0.0;
+        let mut e_compute = 0.0;
+        // Hot path: schedules emit long runs of identical steps (the K
+        // walk of one tile).  Price each run once and multiply.
+        let mut i = 0;
+        while i < steps.len() {
+            let step = &steps[i];
+            let mut run = 1usize;
+            while i + run < steps.len() && steps[i + run] == *step {
+                run += 1;
+            }
+            let (hbm, l2b) = step_traffic(l2, step);
+            // Short row segments waste DMA bandwidth: charge the effective
+            // (inflated) byte count against the transfer streams.
+            let eff = burst_efficiency(machine, step.burst);
+            e_hbm += hbm / eff * run as f64;
+            e_l2 += l2b / eff * run as f64;
+            e_compute += step_compute_ns(machine, phase.unit, step)? * run as f64;
+            i += run;
+        }
+        d.hbm_total += e_hbm;
+        d.l2_total += e_l2;
+        d.compute_ns_total += e_compute;
+        d.hbm_max_engine = d.hbm_max_engine.max(e_hbm);
+        d.l2_max_engine = d.l2_max_engine.max(e_l2);
+        d.compute_ns_max_engine = d.compute_ns_max_engine.max(e_compute);
+        d.steps += steps.len();
+        if e_hbm + e_l2 > max_engine_bytes {
+            max_engine_bytes = e_hbm + e_l2;
+            d.fill_bytes = (e_hbm + e_l2) / steps.len() as f64;
+        }
+    }
+    Ok(d)
+}
+
+/// Bandwidth efficiency of a transfer whose contiguous row segment is
+/// `burst` bytes (1.0 when 0 = contiguous or >= the machine burst size).
+pub fn burst_efficiency(machine: &MachineConfig, burst: u64) -> f64 {
+    if burst == 0 {
+        return 1.0;
+    }
+    (burst as f64 / machine.dma_burst_bytes).min(1.0)
+}
+
+/// Effective per-engine bandwidth against a shared resource: the engine's
+/// MTE cap or a fair share of the aggregate, whichever binds.
+pub fn effective_bw(machine: &MachineConfig, shared_bw: f64, active: usize) -> f64 {
+    machine.mte_core_bw.min(shared_bw / active.max(1) as f64)
+}
+
+/// Aggregate bandwidth the phase's active engines can raise against a
+/// shared resource (each engine capped by its MTE).
+pub fn aggregate_bw(machine: &MachineConfig, shared_bw: f64, active: usize) -> f64 {
+    (machine.mte_core_bw * active.max(1) as f64).min(shared_bw)
+}
+
+/// Transfer time of the phase against HBM.
+///
+/// Bandwidth-bound transfers see no straggler penalty: when the tail wave
+/// leaves engines idle, the remaining MTEs absorb their share of the
+/// aggregate bandwidth (work imbalance only gates the *compute* stream).
+pub fn hbm_time_ns(machine: &MachineConfig, d: &PhaseDemand) -> f64 {
+    if d.hbm_total == 0.0 {
+        return 0.0;
+    }
+    d.hbm_total / aggregate_bw(machine, machine.hbm_bw, d.active)
+}
+
+/// Transfer time of the phase against L2.
+pub fn l2_time_ns(machine: &MachineConfig, d: &PhaseDemand) -> f64 {
+    if d.l2_total == 0.0 {
+        return 0.0;
+    }
+    d.l2_total / aggregate_bw(machine, machine.l2_bw, d.active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::trace::{BufferClass, ComputeOp};
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    fn phase(steps_per_engine: Vec<Vec<TileStep>>, unit: Unit) -> Phase {
+        Phase { name: "t", unit, steps_per_engine, pipelined_with_prev: false }
+    }
+
+    #[test]
+    fn demand_accumulates_and_tracks_straggler() {
+        let l2 = L2Model::new(&m(), 0, 0);
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::WeightPacked, 1000);
+        let p = phase(vec![vec![step; 2], vec![step]], Unit::Vector);
+        let d = phase_demand(&m(), &l2, &p).unwrap();
+        assert_eq!(d.active, 2);
+        assert_eq!(d.hbm_total, 3000.0);
+        assert_eq!(d.hbm_max_engine, 2000.0);
+        assert_eq!(d.l2_total, 0.0);
+    }
+
+    #[test]
+    fn workspace_reads_split_by_residency() {
+        // Oversized workspace: hit 0.225 (see memory tests)
+        let l2 = L2Model::new(&m(), 128 << 20, 0);
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::Workspace, 1000);
+        let p = phase(vec![vec![step]], Unit::Cube);
+        let d = phase_demand(&m(), &l2, &p).unwrap();
+        assert!((d.l2_total - 225.0).abs() < 1e-9);
+        assert!((d.hbm_total - 775.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_op_for_unit_errors() {
+        let l2 = L2Model::new(&m(), 0, 0);
+        let step = TileStep::new(ComputeOp::Dequant { elems: 128 });
+        let p = phase(vec![vec![step]], Unit::Cube);
+        assert!(phase_demand(&m(), &l2, &p).is_err());
+    }
+
+    #[test]
+    fn effective_bandwidth_caps() {
+        // 1 engine: MTE-capped; 32 engines: fair-share capped
+        assert_eq!(effective_bw(&m(), 1200.0, 1), m().mte_core_bw.min(1200.0));
+        assert_eq!(effective_bw(&m(), 1200.0, 32), 37.5);
+    }
+}

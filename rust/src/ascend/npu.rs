@@ -1,0 +1,436 @@
+//! Chip-level executor: prices a [`KernelTrace`] on a [`MachineConfig`].
+//!
+//! Execution model (see DESIGN.md §7):
+//! * Phases are grouped by `pipelined_with_prev`: inside a group, different
+//!   engine classes and transfer streams overlap (double buffering); the
+//!   group takes the *maximum* of its resource-stream times.  Between
+//!   groups there is a grid-wide barrier (Algorithm 1's event sync).
+//! * Resource streams: HBM bytes, L2 bytes, cube compute, vector compute.
+//!   Transfer streams honour per-engine MTE caps and fair-shared aggregate
+//!   bandwidth; the straggler engine gates each phase.
+//! * The L2 residency model decides which Workspace/Partial bytes are
+//!   served on-chip versus spilled to HBM — the mechanism behind the
+//!   paper's §4.2 bottleneck analysis.
+
+use std::collections::BTreeMap;
+
+use super::config::MachineConfig;
+use super::event;
+use super::memory::L2Model;
+use super::mte::{self, PhaseDemand};
+use super::trace::{BufferClass, KernelTrace, Phase, Unit};
+
+/// Byte ledger for one buffer class.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassTraffic {
+    pub hbm_read: f64,
+    pub hbm_write: f64,
+    pub l2_read: f64,
+    pub l2_write: f64,
+}
+
+impl ClassTraffic {
+    pub fn hbm_total(&self) -> f64 {
+        self.hbm_read + self.hbm_write
+    }
+
+    pub fn l2_total(&self) -> f64 {
+        self.l2_read + self.l2_write
+    }
+}
+
+/// Byte-accurate traffic decomposition of one kernel execution.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficLedger {
+    pub by_class: BTreeMap<BufferClass, ClassTraffic>,
+}
+
+impl TrafficLedger {
+    pub fn class(&self, c: BufferClass) -> ClassTraffic {
+        self.by_class.get(&c).copied().unwrap_or_default()
+    }
+
+    pub fn hbm_total(&self) -> f64 {
+        self.by_class.values().map(|t| t.hbm_total()).sum()
+    }
+
+    pub fn l2_total(&self) -> f64 {
+        self.by_class.values().map(|t| t.l2_total()).sum()
+    }
+}
+
+/// Timing of one phase (within its group).
+#[derive(Debug, Clone)]
+pub struct PhaseTime {
+    pub name: &'static str,
+    pub unit: Unit,
+    pub group: usize,
+    pub active_engines: usize,
+    pub steps: usize,
+    pub hbm_ns: f64,
+    pub l2_ns: f64,
+    pub compute_ns: f64,
+    /// This phase's own critical time (max of its streams) if it ran alone.
+    pub standalone_ns: f64,
+}
+
+/// Timing of one pipelined group.
+#[derive(Debug, Clone)]
+pub struct GroupTime {
+    pub phases: Vec<usize>,
+    pub hbm_ns: f64,
+    pub l2_ns: f64,
+    pub cube_ns: f64,
+    pub vector_ns: f64,
+    pub fill_ns: f64,
+    /// max over streams + fill
+    pub total_ns: f64,
+    /// Which stream bound the group ("hbm", "l2", "cube", "vector").
+    pub bound_by: &'static str,
+}
+
+/// Full result of simulating one kernel.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub total_ns: f64,
+    pub launch_ns: f64,
+    pub barrier_ns: f64,
+    pub groups: Vec<GroupTime>,
+    pub phase_times: Vec<PhaseTime>,
+    pub ledger: TrafficLedger,
+    pub total_macs: u64,
+    pub l2_model: L2Model,
+}
+
+impl SimReport {
+    /// Achieved FP16 TFLOPS (2 flops per MAC).
+    pub fn achieved_tflops(&self) -> f64 {
+        if self.total_ns == 0.0 {
+            return 0.0;
+        }
+        self.total_macs as f64 * 2.0 / self.total_ns / 1000.0
+    }
+
+    /// Fraction of machine peak FP16 throughput achieved.
+    pub fn mxu_utilization(&self, machine: &MachineConfig) -> f64 {
+        self.achieved_tflops() / machine.peak_tflops_f16()
+    }
+
+    /// Average HBM bandwidth utilization over the run.
+    pub fn hbm_utilization(&self, machine: &MachineConfig) -> f64 {
+        if self.total_ns == 0.0 {
+            return 0.0;
+        }
+        (self.ledger.hbm_total() / self.total_ns) / machine.hbm_bw
+    }
+}
+
+/// The simulator: a machine description plus the pricing logic.
+#[derive(Debug, Clone, Default)]
+pub struct Simulator {
+    pub machine: MachineConfig,
+}
+
+impl Simulator {
+    pub fn new(machine: MachineConfig) -> Simulator {
+        Simulator { machine }
+    }
+
+    /// Validate a trace against the machine (engine counts, op legality).
+    pub fn validate(&self, trace: &KernelTrace) -> anyhow::Result<()> {
+        for phase in &trace.phases {
+            let limit = match phase.unit {
+                Unit::Cube => self.machine.ai_cores,
+                Unit::Vector => self.machine.total_vector_cores(),
+            };
+            anyhow::ensure!(
+                phase.steps_per_engine.len() <= limit,
+                "phase '{}' uses {} engines, machine has {limit}",
+                phase.name,
+                phase.steps_per_engine.len()
+            );
+        }
+        anyhow::ensure!(!trace.phases.is_empty(), "trace has no phases");
+        anyhow::ensure!(
+            !trace.phases[0].pipelined_with_prev,
+            "first phase cannot pipeline with a predecessor"
+        );
+        Ok(())
+    }
+
+    /// Simulate one kernel execution.
+    pub fn run(&self, trace: &KernelTrace) -> anyhow::Result<SimReport> {
+        self.validate(trace)?;
+        let m = &self.machine;
+        let l2 = L2Model::new(m, trace.workspace_bytes, trace.partial_bytes);
+
+        // Price every phase.
+        let mut demands: Vec<PhaseDemand> = Vec::with_capacity(trace.phases.len());
+        for phase in &trace.phases {
+            demands.push(mte::phase_demand(m, &l2, phase)?);
+        }
+
+        // Group phases by pipelining.
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, phase) in trace.phases.iter().enumerate() {
+            if i == 0 || !phase.pipelined_with_prev {
+                groups.push(vec![i]);
+            } else {
+                groups.last_mut().unwrap().push(i);
+            }
+        }
+
+        let mut phase_times = Vec::new();
+        let mut group_times = Vec::new();
+        let mut total = event::launch(m);
+        let launch_ns = total;
+        let barrier_ns = event::barrier(m) * (groups.len().saturating_sub(1)) as f64;
+        total += barrier_ns;
+
+        for (gi, group) in groups.iter().enumerate() {
+            let mut g = GroupTime {
+                phases: group.clone(),
+                hbm_ns: 0.0,
+                l2_ns: 0.0,
+                cube_ns: 0.0,
+                vector_ns: 0.0,
+                fill_ns: 0.0,
+                total_ns: 0.0,
+                bound_by: "hbm",
+            };
+            for &pi in group {
+                let d = &demands[pi];
+                let phase = &trace.phases[pi];
+                let hbm_ns = mte::hbm_time_ns(m, d);
+                let l2_ns = mte::l2_time_ns(m, d);
+                let compute_ns = d.compute_ns_max_engine;
+                g.hbm_ns += hbm_ns;
+                g.l2_ns += l2_ns;
+                match phase.unit {
+                    Unit::Cube => g.cube_ns += compute_ns,
+                    Unit::Vector => g.vector_ns += compute_ns,
+                }
+                phase_times.push(PhaseTime {
+                    name: phase.name,
+                    unit: phase.unit,
+                    group: gi,
+                    active_engines: d.active,
+                    steps: d.steps,
+                    hbm_ns,
+                    l2_ns,
+                    compute_ns,
+                    standalone_ns: hbm_ns.max(l2_ns).max(compute_ns),
+                });
+            }
+            let streams = [
+                (g.hbm_ns, "hbm"),
+                (g.l2_ns, "l2"),
+                (g.cube_ns, "cube"),
+                (g.vector_ns, "vector"),
+            ];
+            let (max_ns, bound) = streams
+                .iter()
+                .cloned()
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                .unwrap();
+            // Pipeline fill: before steady-state overlap, one step of the
+            // group's first phase is exposed.  The exposed latency is
+            // bounded by the *smaller* of the two stream step times — the
+            // other stream overlaps it from the second step on (double
+            // buffering hides the rest).
+            let first = &demands[group[0]];
+            let steps_per_engine =
+                (first.steps as f64 / first.active.max(1) as f64).max(1.0);
+            let transfer_step_ns =
+                (mte::hbm_time_ns(m, first) + mte::l2_time_ns(m, first)) / steps_per_engine;
+            let compute_step_ns = first.compute_ns_max_engine / steps_per_engine;
+            g.fill_ns = event::pipeline_fill(m, transfer_step_ns.min(compute_step_ns));
+            g.total_ns = max_ns + g.fill_ns;
+            g.bound_by = bound;
+            total += g.total_ns;
+            group_times.push(g);
+        }
+
+        Ok(SimReport {
+            name: trace.name.clone(),
+            total_ns: total,
+            launch_ns,
+            barrier_ns,
+            groups: group_times,
+            phase_times,
+            ledger: build_ledger(&l2, &trace.phases),
+            total_macs: trace.total_macs(),
+            l2_model: l2,
+        })
+    }
+}
+
+/// Accumulate the byte ledger (independent of timing).  Like the demand
+/// pass, runs of identical steps are priced once and multiplied.
+fn build_ledger(l2: &L2Model, phases: &[Phase]) -> TrafficLedger {
+    let mut ledger = TrafficLedger::default();
+    for phase in phases {
+        for steps in &phase.steps_per_engine {
+            let mut i = 0;
+            while i < steps.len() {
+                let step = &steps[i];
+                let mut run = 1usize;
+                while i + run < steps.len() && steps[i + run] == *step {
+                    run += 1;
+                }
+                for &(class, bytes) in &step.reads {
+                    if bytes == 0 {
+                        continue;
+                    }
+                    let split = l2.read_split(class);
+                    let t = ledger.by_class.entry(class).or_default();
+                    t.l2_read += (bytes * run as u64) as f64 * split.l2_fraction;
+                    t.hbm_read += (bytes * run as u64) as f64 * (1.0 - split.l2_fraction);
+                }
+                for &(class, bytes) in &step.writes {
+                    if bytes == 0 {
+                        continue;
+                    }
+                    let split = l2.write_split(class);
+                    let t = ledger.by_class.entry(class).or_default();
+                    t.l2_write += (bytes * run as u64) as f64 * split.l2_fraction;
+                    t.hbm_write += (bytes * run as u64) as f64 * split.writeback_fraction;
+                }
+                i += run;
+            }
+        }
+    }
+    ledger
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::trace::{ComputeOp, TileStep};
+
+    fn machine() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    fn simple_phase(unit: Unit, engines: usize, steps: usize, step: TileStep) -> Phase {
+        Phase {
+            name: "p",
+            unit,
+            steps_per_engine: vec![vec![step; steps]; engines],
+            pipelined_with_prev: false,
+        }
+    }
+
+    fn trace_of(phases: Vec<Phase>) -> KernelTrace {
+        KernelTrace { name: "t".into(), phases, workspace_bytes: 0, partial_bytes: 0 }
+    }
+
+    #[test]
+    fn single_phase_bandwidth_bound() {
+        // 32 cube engines each read 1 MiB of cold weights: 32 MiB over
+        // 1200 B/ns (fair-shared) ~ 27962 ns + launch + fill.
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::WeightF16, 1 << 20);
+        let t = trace_of(vec![simple_phase(Unit::Cube, 32, 1, step)]);
+        let sim = Simulator::new(machine());
+        let r = sim.run(&t).unwrap();
+        let expect_stream = (1 << 20) as f64 / 37.5;
+        assert!((r.groups[0].hbm_ns - expect_stream).abs() < 1.0);
+        assert_eq!(r.groups[0].bound_by, "hbm");
+        assert!(r.total_ns > r.launch_ns + expect_stream);
+    }
+
+    #[test]
+    fn fewer_engines_take_longer() {
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::WeightF16, 1 << 20);
+        let sim = Simulator::new(machine());
+        // Same total bytes (8 MiB), spread over 2 vs 8 engines.
+        let r2 = sim
+            .run(&trace_of(vec![simple_phase(Unit::Cube, 2, 4, step)]))
+            .unwrap();
+        let r8 = sim
+            .run(&trace_of(vec![simple_phase(Unit::Cube, 8, 1, step)]))
+            .unwrap();
+        assert!(r2.total_ns > r8.total_ns, "{} vs {}", r2.total_ns, r8.total_ns);
+    }
+
+    #[test]
+    fn pipelined_group_takes_max_not_sum() {
+        let read = TileStep::new(ComputeOp::Nop).read(BufferClass::WeightF16, 1 << 20);
+        let mmad = TileStep::new(ComputeOp::Mmad { m: 256, n: 256, k: 256 });
+        let mut p2 = simple_phase(Unit::Cube, 8, 4, mmad);
+        p2.pipelined_with_prev = true;
+        let p1 = simple_phase(Unit::Vector, 8, 1, read);
+        let piped = trace_of(vec![p1.clone(), p2.clone()]);
+        let mut unpiped_p2 = p2.clone();
+        unpiped_p2.pipelined_with_prev = false;
+        let unpiped = trace_of(vec![p1, unpiped_p2]);
+        let sim = Simulator::new(machine());
+        let rp = sim.run(&piped).unwrap();
+        let ru = sim.run(&unpiped).unwrap();
+        assert!(rp.total_ns < ru.total_ns);
+        assert_eq!(rp.groups.len(), 1);
+        assert_eq!(ru.groups.len(), 2);
+        // The unpipelined version also pays a barrier.
+        assert!(ru.barrier_ns > 0.0 && rp.barrier_ns == 0.0);
+    }
+
+    #[test]
+    fn workspace_round_trip_appears_in_ledger() {
+        let write = TileStep::new(ComputeOp::Dequant { elems: 1024 })
+            .write(BufferClass::Workspace, 2048);
+        let read = TileStep::new(ComputeOp::Mmad { m: 16, n: 16, k: 16 })
+            .read(BufferClass::Workspace, 2048);
+        let p1 = simple_phase(Unit::Vector, 1, 1, write);
+        let p2 = simple_phase(Unit::Cube, 1, 1, read);
+        let mut t = trace_of(vec![p1, p2]);
+        t.workspace_bytes = 2048; // fits L2 -> full residency
+        let r = Simulator::new(machine()).run(&t).unwrap();
+        let ws = r.ledger.class(BufferClass::Workspace);
+        assert_eq!(ws.l2_write, 2048.0);
+        assert_eq!(ws.l2_read, 2048.0);
+        assert_eq!(ws.hbm_read, 0.0); // resident
+        assert_eq!(ws.hbm_write, 0.0); // no spill
+    }
+
+    #[test]
+    fn oversized_workspace_spills() {
+        let bytes = 128u64 << 20;
+        let write = TileStep::new(ComputeOp::Nop).write(BufferClass::Workspace, bytes);
+        let read = TileStep::new(ComputeOp::Nop).read(BufferClass::Workspace, bytes);
+        let mut t = trace_of(vec![
+            simple_phase(Unit::Vector, 1, 1, write),
+            simple_phase(Unit::Cube, 1, 1, read),
+        ]);
+        t.workspace_bytes = bytes;
+        let r = Simulator::new(machine()).run(&t).unwrap();
+        let ws = r.ledger.class(BufferClass::Workspace);
+        assert!(ws.hbm_write > 0.0, "spill write-back expected");
+        assert!(ws.hbm_read > 0.0, "miss reads expected");
+        assert!(ws.l2_read > 0.0);
+    }
+
+    #[test]
+    fn rejects_too_many_engines() {
+        let step = TileStep::new(ComputeOp::Nop);
+        let t = trace_of(vec![simple_phase(Unit::Cube, 33, 1, step)]);
+        assert!(Simulator::new(machine()).run(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_illegal_op_placement() {
+        let step = TileStep::new(ComputeOp::Dequant { elems: 4 });
+        let t = trace_of(vec![simple_phase(Unit::Cube, 1, 1, step)]);
+        assert!(Simulator::new(machine()).run(&t).is_err());
+    }
+
+    #[test]
+    fn utilization_metrics() {
+        let mmad = TileStep::new(ComputeOp::Mmad { m: 16, n: 16, k: 16 });
+        let t = trace_of(vec![simple_phase(Unit::Cube, 32, 1000, mmad)]);
+        let r = Simulator::new(machine()).run(&t).unwrap();
+        assert_eq!(r.total_macs, 32 * 1000 * 4096);
+        let util = r.mxu_utilization(&machine());
+        assert!(util > 0.0 && util <= 1.0, "util {util}");
+    }
+}

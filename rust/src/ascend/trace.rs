@@ -1,0 +1,238 @@
+//! Kernel-schedule IR: what a kernel *does*, independent of how long it takes.
+//!
+//! Schedules (`kernels/*`) compile a GEMM problem into a [`KernelTrace`]:
+//! an ordered list of [`Phase`]s, each a set of per-engine [`TileStep`]
+//! sequences.  The simulator ([`super::npu`]) then prices the trace on a
+//! [`super::MachineConfig`].  Keeping schedule and timing separate lets the
+//! tests assert *coverage* invariants (every tile computed exactly once)
+//! without any timing model in the loop.
+
+/// Which engine class executes a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Cube (AIC) — matrix multiply only; cannot convert types.
+    Cube,
+    /// Vector (AIV) — SIMD elementwise / reduction / type conversion.
+    Vector,
+}
+
+/// Traffic class of a transfer, for the §4.2 bottleneck decomposition.
+/// The memory model also uses the class to decide L2 residency: workspace
+/// and partials are producer-consumer traffic between phases and may hit
+/// L2; weights and activations are cold HBM reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BufferClass {
+    /// Packed INT4 weights (cold read from HBM).
+    WeightPacked,
+    /// FP16 weights (cold read from HBM — native FP16 baseline only).
+    WeightF16,
+    /// FP16 activations A.
+    Activation,
+    /// Dequantized-weight workspace (vector -> cube round trip).
+    Workspace,
+    /// FP32 Split-K partial buffers.
+    Partial,
+    /// Final FP16 output C.
+    Output,
+    /// Quantization scales / zero points.
+    QuantParam,
+}
+
+/// One compute operation on a tile, with enough shape info to price it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ComputeOp {
+    /// Cube MMAD of an (m, k) x (k, n) block, FP32 accumulate in L0C.
+    Mmad { m: usize, n: usize, k: usize },
+    /// Vector dequantization of `elems` INT4 codes -> FP16 (unpack, sub, mul).
+    Dequant { elems: usize },
+    /// Vector elementwise reduction of `elems` FP32 values over `terms`
+    /// split buffers, then cast to FP16.
+    Reduce { elems: usize, terms: usize },
+    /// Vector FP32 -> FP16 cast of `elems` values.
+    Cast { elems: usize },
+    /// No computation (pure data movement step).
+    Nop,
+}
+
+/// One pipelined step of an engine: bytes moved in/out plus a compute op.
+/// The MTE double-buffers transfers against compute across steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileStep {
+    pub compute: ComputeOp,
+    /// Bytes read, by class (max two distinct classes per step keeps this
+    /// flat and copy-friendly; schedules split steps if they need more).
+    pub reads: [(BufferClass, u64); 2],
+    /// Bytes written, by class.
+    pub writes: [(BufferClass, u64); 2],
+    /// Contiguous row-segment length of this step's dominant transfer in
+    /// bytes (0 = fully contiguous).  Segments shorter than the machine's
+    /// DMA burst size waste bandwidth proportionally.
+    pub burst: u64,
+}
+
+impl TileStep {
+    pub fn new(compute: ComputeOp) -> TileStep {
+        TileStep {
+            compute,
+            reads: [(BufferClass::Activation, 0), (BufferClass::Activation, 0)],
+            writes: [(BufferClass::Output, 0), (BufferClass::Output, 0)],
+            burst: 0,
+        }
+    }
+
+    /// Set the contiguous row-segment length of the step's transfers.
+    pub fn with_burst(mut self, bytes: u64) -> TileStep {
+        self.burst = bytes;
+        self
+    }
+
+    pub fn read(mut self, class: BufferClass, bytes: u64) -> TileStep {
+        if self.reads[0].1 == 0 {
+            self.reads[0] = (class, bytes);
+        } else {
+            debug_assert_eq!(self.reads[1].1, 0, "more than two read classes");
+            self.reads[1] = (class, bytes);
+        }
+        self
+    }
+
+    pub fn write(mut self, class: BufferClass, bytes: u64) -> TileStep {
+        if self.writes[0].1 == 0 {
+            self.writes[0] = (class, bytes);
+        } else {
+            debug_assert_eq!(self.writes[1].1, 0, "more than two write classes");
+            self.writes[1] = (class, bytes);
+        }
+        self
+    }
+
+    pub fn read_bytes(&self) -> u64 {
+        self.reads[0].1 + self.reads[1].1
+    }
+
+    pub fn write_bytes(&self) -> u64 {
+        self.writes[0].1 + self.writes[1].1
+    }
+}
+
+/// A phase: one engine class, one step sequence per engine instance, and a
+/// barrier before the next phase (Algorithm 1's event synchronization)
+/// unless `pipelined_with_prev` marks it as double-buffered against the
+/// previous phase (producer-consumer overlap at tile granularity, the
+/// paper's §3 "hide the dequantization latency in data copy operations").
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub unit: Unit,
+    /// `steps[i]` is the step sequence of engine instance `i`; instances
+    /// with no work get an empty vec.  Length must not exceed the machine's
+    /// engine count for `unit` (validated by the simulator).
+    pub steps_per_engine: Vec<Vec<TileStep>>,
+    /// If true, this phase streams concurrently with the previous phase
+    /// (shared resources are serialized, different engines overlap).
+    pub pipelined_with_prev: bool,
+}
+
+impl Phase {
+    pub fn active_engines(&self) -> usize {
+        self.steps_per_engine.iter().filter(|s| !s.is_empty()).count()
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.steps_per_engine.iter().map(|s| s.len()).sum()
+    }
+
+    /// Total bytes read in a given class across all engines.
+    pub fn read_bytes(&self, class: BufferClass) -> u64 {
+        self.steps_per_engine
+            .iter()
+            .flatten()
+            .flat_map(|s| s.reads.iter())
+            .filter(|(c, _)| *c == class)
+            .map(|(_, b)| b)
+            .sum()
+    }
+
+    pub fn write_bytes(&self, class: BufferClass) -> u64 {
+        self.steps_per_engine
+            .iter()
+            .flatten()
+            .flat_map(|s| s.writes.iter())
+            .filter(|(c, _)| *c == class)
+            .map(|(_, b)| b)
+            .sum()
+    }
+}
+
+/// A whole kernel: named phases plus the GM workspace footprint (drives the
+/// L2 residency model for Workspace-class traffic).
+#[derive(Debug, Clone)]
+pub struct KernelTrace {
+    pub name: String,
+    pub phases: Vec<Phase>,
+    /// Bytes of the dequantized-weight workspace allocated in GM.
+    pub workspace_bytes: u64,
+    /// Bytes of the Split-K partial buffers allocated in GM.
+    pub partial_bytes: u64,
+}
+
+impl KernelTrace {
+    /// Total MACs across all MMAD ops (for roofline / utilization).
+    pub fn total_macs(&self) -> u64 {
+        self.phases
+            .iter()
+            .flat_map(|p| p.steps_per_engine.iter().flatten())
+            .map(|s| match s.compute {
+                ComputeOp::Mmad { m, n, k } => (m * n * k) as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_step_builder_accumulates_classes() {
+        let s = TileStep::new(ComputeOp::Nop)
+            .read(BufferClass::WeightPacked, 100)
+            .read(BufferClass::QuantParam, 10)
+            .write(BufferClass::Workspace, 400);
+        assert_eq!(s.read_bytes(), 110);
+        assert_eq!(s.write_bytes(), 400);
+    }
+
+    #[test]
+    fn phase_byte_accounting() {
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::Workspace, 64);
+        let phase = Phase {
+            name: "p",
+            unit: Unit::Cube,
+            steps_per_engine: vec![vec![step; 3], vec![], vec![step]],
+            pipelined_with_prev: false,
+        };
+        assert_eq!(phase.active_engines(), 2);
+        assert_eq!(phase.total_steps(), 4);
+        assert_eq!(phase.read_bytes(BufferClass::Workspace), 256);
+        assert_eq!(phase.read_bytes(BufferClass::Activation), 0);
+    }
+
+    #[test]
+    fn trace_mac_count() {
+        let step = TileStep::new(ComputeOp::Mmad { m: 16, n: 16, k: 16 });
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![Phase {
+                name: "mm",
+                unit: Unit::Cube,
+                steps_per_engine: vec![vec![step, step]],
+                pipelined_with_prev: false,
+            }],
+            workspace_bytes: 0,
+            partial_bytes: 0,
+        };
+        assert_eq!(t.total_macs(), 2 * 4096);
+    }
+}

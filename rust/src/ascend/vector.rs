@@ -1,0 +1,82 @@
+//! Vector-core (AIV) timing: 2048-bit SIMD elementwise / conversion unit.
+//!
+//! The vector core is the only unit that can convert types on the Ascend
+//! 910, so Phase 1 (INT4 -> FP16 dequantization) and Phase 3 (FP32 split
+//! reduction + cast) of Algorithm 1 run here.
+
+use super::config::MachineConfig;
+use super::trace::ComputeOp;
+
+/// SIMD operations per element for the dequant sequence:
+/// unpack shift + mask, subtract zero point, multiply by scale (the
+/// "native data type-cast" path the paper chooses over Marlin-style bit
+/// tricks, since the conversion runs on a real vector unit here).
+const DEQUANT_OPS_PER_ELEM: f64 = 4.0;
+
+/// Nanoseconds for one compute op on a vector core; `None` for MMAD (the
+/// vector unit has no matrix datapath).
+pub fn op_ns(machine: &MachineConfig, op: ComputeOp) -> Option<f64> {
+    match op {
+        ComputeOp::Dequant { elems } => {
+            let cycles = elems as f64 * DEQUANT_OPS_PER_ELEM / machine.vector_lanes_f16;
+            Some(machine.cycles_to_ns(cycles))
+        }
+        ComputeOp::Reduce { elems, terms } => {
+            // (terms - 1) adds in f32 plus one cast per output element.
+            let adds = elems as f64 * (terms.saturating_sub(1)) as f64;
+            let casts = elems as f64;
+            let cycles =
+                adds / machine.vector_lanes_f32 + casts / machine.vector_lanes_f16;
+            Some(machine.cycles_to_ns(cycles))
+        }
+        ComputeOp::Cast { elems } => {
+            Some(machine.cycles_to_ns(elems as f64 / machine.vector_lanes_f16))
+        }
+        ComputeOp::Nop => Some(0.0),
+        ComputeOp::Mmad { .. } => None,
+    }
+}
+
+/// Check UB capacity for a dequant tile: packed in + f16 out, double buffered.
+pub fn dequant_tile_fits_ub(machine: &MachineConfig, bk: usize, bn: usize) -> bool {
+    let packed = bk * bn / 2;
+    let out = bk * bn * 2;
+    (2 * (packed + out)) as u64 <= machine.ub_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn dequant_throughput() {
+        // 128 lanes, 4 ops/elem: 128 elems = 4 cycles = 4 ns at 1 GHz
+        assert_eq!(op_ns(&m(), ComputeOp::Dequant { elems: 128 }), Some(4.0));
+    }
+
+    #[test]
+    fn reduce_cost_scales_with_terms() {
+        let r2 = op_ns(&m(), ComputeOp::Reduce { elems: 64, terms: 2 }).unwrap();
+        let r8 = op_ns(&m(), ComputeOp::Reduce { elems: 64, terms: 8 }).unwrap();
+        assert!(r8 > r2);
+        // terms=1 degenerates to a pure cast
+        let r1 = op_ns(&m(), ComputeOp::Reduce { elems: 64, terms: 1 }).unwrap();
+        let cast = op_ns(&m(), ComputeOp::Cast { elems: 64 }).unwrap();
+        assert_eq!(r1, cast);
+    }
+
+    #[test]
+    fn vector_cannot_mmad() {
+        assert_eq!(op_ns(&m(), ComputeOp::Mmad { m: 16, n: 16, k: 16 }), None);
+    }
+
+    #[test]
+    fn ub_capacity() {
+        assert!(dequant_tile_fits_ub(&m(), 128, 256)); // 2*(16K+64K)=160K < 256K
+        assert!(!dequant_tile_fits_ub(&m(), 512, 512));
+    }
+}

@@ -1,0 +1,103 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup + timed iterations, robust summary statistics, aligned output
+//! rows, and optional JSON dumps for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::stats::{self, Summary};
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary_ns: Summary,
+}
+
+impl BenchResult {
+    pub fn render_row(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p50 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            stats::fmt_ns(self.summary_ns.mean),
+            stats::fmt_ns(self.summary_ns.p50),
+            stats::fmt_ns(self.summary_ns.p90),
+            self.iters,
+        )
+    }
+}
+
+/// Timed-run builder.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench { name: name.into(), warmup: 3, iters: 20 }
+    }
+
+    pub fn warmup(mut self, w: usize) -> Bench {
+        self.warmup = w;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Run `f` warmup + iters times, timing each call.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: self.name,
+            iters: self.iters,
+            summary_ns: Summary::of(&samples),
+        }
+    }
+}
+
+/// Print a bench-section header (keeps `cargo bench` output scannable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Standard entry: print each result row as it lands.
+pub fn report(result: &BenchResult) {
+    println!("{}", result.render_row());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_exactly_warmup_plus_iters() {
+        let mut count = 0;
+        let r = Bench::new("t").warmup(2).iters(5).run(|| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.summary_ns.mean >= 0.0);
+    }
+
+    #[test]
+    fn row_renders() {
+        let r = Bench::new("demo").warmup(0).iters(3).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.render_row().contains("demo"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Dynamic batcher: groups queued decode requests into fixed-size decode
+//! groups matching the available AOT artifact batch sizes.
+//!
+//! The AOT decode artifacts are compiled per batch size (1, 2, 4, 8, ...),
+//! so the batcher picks the smallest available size that fits the waiting
+//! requests (or the largest size if more are waiting), padding unused
+//! slots.  Padding slots replay token 0 at position 0 and their outputs
+//! are discarded — exactly the hardware padding the paper notes makes
+//! small-batch time flat.
+
+use std::collections::VecDeque;
+
+use super::request::DecodeRequest;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Batch sizes with a compiled artifact, ascending (e.g. [1, 2, 4, 8]).
+    pub available_sizes: Vec<usize>,
+    /// Form a group as soon as this many requests wait (<= max size).
+    pub target_fill: usize,
+}
+
+impl BatchPolicy {
+    pub fn new(mut available_sizes: Vec<usize>) -> anyhow::Result<BatchPolicy> {
+        anyhow::ensure!(!available_sizes.is_empty(), "no batch sizes available");
+        available_sizes.sort_unstable();
+        let target_fill = *available_sizes.last().unwrap();
+        Ok(BatchPolicy { available_sizes, target_fill })
+    }
+
+    /// Smallest available batch size that holds `waiting` requests, or the
+    /// largest size if the queue overflows it.
+    pub fn pick_size(&self, waiting: usize) -> usize {
+        for &s in &self.available_sizes {
+            if waiting <= s {
+                return s;
+            }
+        }
+        *self.available_sizes.last().unwrap()
+    }
+}
+
+/// A formed decode group: up to `batch` member requests plus padding.
+#[derive(Debug)]
+pub struct DecodeGroup {
+    pub batch: usize,
+    pub members: Vec<DecodeRequest>,
+}
+
+impl DecodeGroup {
+    /// Number of real (non-padding) slots.
+    pub fn occupancy(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Decode steps the group needs: the longest member's budget.
+    pub fn steps(&self) -> usize {
+        self.members.iter().map(|r| r.total_steps()).max().unwrap_or(0)
+    }
+}
+
+/// FIFO queue + group formation.
+#[derive(Debug)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<DecodeRequest>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: DecodeRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next group if the queue is non-empty.  `drain=true` forms a
+    /// group regardless of fill level (shutdown / idle flush); otherwise a
+    /// group forms only when the target fill is reached.
+    pub fn form_group(&mut self, drain: bool) -> Option<DecodeGroup> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        if !drain && self.queue.len() < self.policy.target_fill {
+            return None;
+        }
+        let batch = self.policy.pick_size(self.queue.len());
+        let take = batch.min(self.queue.len());
+        let members = self.queue.drain(..take).collect();
+        Some(DecodeGroup { batch, members })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> DecodeRequest {
+        DecodeRequest::new(id, vec![1, 2], 4)
+    }
+
+    fn batcher(sizes: Vec<usize>) -> Batcher {
+        Batcher::new(BatchPolicy::new(sizes).unwrap())
+    }
+
+    #[test]
+    fn picks_smallest_fitting_size() {
+        let p = BatchPolicy::new(vec![8, 1, 2, 4]).unwrap();
+        assert_eq!(p.pick_size(1), 1);
+        assert_eq!(p.pick_size(3), 4);
+        assert_eq!(p.pick_size(8), 8);
+        assert_eq!(p.pick_size(20), 8);
+    }
+
+    #[test]
+    fn waits_for_fill_unless_draining() {
+        let mut b = batcher(vec![1, 4]);
+        b.push(req(1));
+        b.push(req(2));
+        assert!(b.form_group(false).is_none(), "should wait for fill");
+        let g = b.form_group(true).unwrap();
+        assert_eq!(g.batch, 4); // smallest available size >= 2
+        assert_eq!(g.occupancy(), 2);
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn full_queue_forms_immediately() {
+        let mut b = batcher(vec![1, 2, 4]);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let g = b.form_group(false).unwrap();
+        assert_eq!(g.batch, 4);
+        assert_eq!(g.occupancy(), 4);
+        assert_eq!(b.waiting(), 1);
+    }
+
+    #[test]
+    fn group_steps_is_max_member_budget() {
+        let mut b = batcher(vec![4]);
+        b.push(DecodeRequest::new(1, vec![1], 2)); // 3 steps
+        b.push(DecodeRequest::new(2, vec![1, 2, 3], 7)); // 10 steps
+        let g = b.form_group(true).unwrap();
+        assert_eq!(g.steps(), 10);
+    }
+
+    #[test]
+    fn empty_queue_never_forms() {
+        let mut b = batcher(vec![1]);
+        assert!(b.form_group(true).is_none());
+    }
+}

@@ -1,0 +1,133 @@
+//! Serving metrics: counters and latency summaries.
+
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+/// Shared metrics sink (cheap Mutex; the hot path touches it once per
+/// request completion, not per step).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests_completed: u64,
+    tokens_generated: u64,
+    steps_executed: u64,
+    groups_formed: u64,
+    padded_slots: u64,
+    ttft_s: Vec<f64>,
+    total_s: Vec<f64>,
+}
+
+/// A point-in-time snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub steps_executed: u64,
+    pub groups_formed: u64,
+    pub padded_slots: u64,
+    pub ttft: Summary,
+    pub total: Summary,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_group(&self, batch: usize, occupancy: usize, steps: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.groups_formed += 1;
+        g.padded_slots += (batch - occupancy) as u64;
+        g.steps_executed += steps as u64;
+    }
+
+    pub fn record_completion(&self, tokens: usize, ttft_s: f64, total_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_completed += 1;
+        g.tokens_generated += tokens as u64;
+        g.ttft_s.push(ttft_s);
+        g.total_s.push(total_s);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests_completed: g.requests_completed,
+            tokens_generated: g.tokens_generated,
+            steps_executed: g.steps_executed,
+            groups_formed: g.groups_formed,
+            padded_slots: g.padded_slots,
+            ttft: Summary::of(&g.ttft_s),
+            total: Summary::of(&g.total_s),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Render a human-readable metrics block.
+    pub fn render(&self, wall_s: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests: {}  tokens: {}  groups: {}  padded slots: {}  steps: {}\n",
+            self.requests_completed,
+            self.tokens_generated,
+            self.groups_formed,
+            self.padded_slots,
+            self.steps_executed,
+        ));
+        if wall_s > 0.0 {
+            out.push_str(&format!(
+                "throughput: {:.1} tokens/s, {:.2} requests/s\n",
+                self.tokens_generated as f64 / wall_s,
+                self.requests_completed as f64 / wall_s,
+            ));
+        }
+        out.push_str(&format!(
+            "ttft    p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms\n",
+            self.ttft.p50 * 1e3,
+            self.ttft.p90 * 1e3,
+            self.ttft.p99 * 1e3,
+        ));
+        out.push_str(&format!(
+            "latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms\n",
+            self.total.p50 * 1e3,
+            self.total.p90 * 1e3,
+            self.total.p99 * 1e3,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_group(4, 3, 10);
+        m.record_group(2, 2, 5);
+        m.record_completion(8, 0.010, 0.050);
+        m.record_completion(4, 0.020, 0.030);
+        let s = m.snapshot();
+        assert_eq!(s.groups_formed, 2);
+        assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.steps_executed, 15);
+        assert_eq!(s.requests_completed, 2);
+        assert_eq!(s.tokens_generated, 12);
+        assert!((s.ttft.mean - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_throughput() {
+        let m = Metrics::new();
+        m.record_completion(10, 0.01, 0.02);
+        let text = m.snapshot().render(2.0);
+        assert!(text.contains("5.0 tokens/s"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Decode-serving coordinator — the L3 runtime exercising the W4A16
+//! pipeline on the paper's motivating workload (LLM decoding).
+//!
+//! Architecture (vLLM-router-inspired, std-thread based):
+//!
+//! ```text
+//!  clients --> RequestQueue --> Batcher (group formation, padding)
+//!                  |                |
+//!                  v                v
+//!              Metrics        Router (batch size -> DecodeEngine)
+//!                                   |
+//!                                   v
+//!                          PJRT decode-step artifact
+//! ```
+//!
+//! * [`request`] — request/response types.
+//! * [`batcher`] — groups queued requests into fixed-size decode groups
+//!   (the AOT artifacts are compiled per batch size), padding idle slots.
+//! * [`router`] — lazily constructs and caches one [`DecodeEngine`]
+//!   (weights staged, executable compiled) per batch size.
+//! * [`server`] — the serving loop: drain queue -> form group -> decode
+//!   until every member finishes -> publish results + metrics.
+//! * [`metrics`] — latency/throughput counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy, DecodeGroup};
+pub use metrics::Metrics;
+pub use request::{DecodeRequest, DecodeResult};
+pub use router::Router;
+pub use server::Server;

@@ -1,0 +1,74 @@
+//! Request / response types of the decode-serving coordinator.
+
+use std::time::Instant;
+
+/// A decode request: a prompt plus a generation budget.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Enqueue timestamp (set by the server when admitted).
+    pub arrived: Option<Instant>,
+}
+
+impl DecodeRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> DecodeRequest {
+        DecodeRequest { id, prompt, max_new_tokens, arrived: None }
+    }
+
+    /// Steps this request needs: prompt ingestion + generation.
+    pub fn total_steps(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+
+    pub fn validate(&self, vocab: usize, max_seq: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            self.total_steps() <= max_seq,
+            "prompt {} + generation {} exceeds max_seq {max_seq}",
+            self.prompt.len(),
+            self.max_new_tokens
+        );
+        for &t in &self.prompt {
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < vocab,
+                "token {t} outside vocab {vocab}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub id: u64,
+    /// Generated tokens (prompt not included).
+    pub tokens: Vec<i32>,
+    /// Queue-to-first-token latency (seconds).
+    pub ttft_s: f64,
+    /// Queue-to-completion latency (seconds).
+    pub total_s: f64,
+    /// Decode steps this request's group executed while it was active.
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        let r = DecodeRequest::new(1, vec![1, 2, 3], 10);
+        assert!(r.validate(512, 32).is_ok());
+        assert!(r.validate(512, 12).is_err()); // 13 steps > 12
+        assert!(r.validate(2, 32).is_err()); // token 3 outside vocab
+        assert!(DecodeRequest::new(2, vec![], 4).validate(512, 32).is_err());
+    }
+
+    #[test]
+    fn step_budget() {
+        assert_eq!(DecodeRequest::new(1, vec![1, 2], 5).total_steps(), 7);
+    }
+}

@@ -1,0 +1,58 @@
+//! Router: maps a decode group to the engine compiled for its batch size.
+//!
+//! Engines are constructed lazily (compiling an HLO module and staging
+//! ~100M parameters of weight literals is expensive) and cached for the
+//! server's lifetime — the per-shape executable pool of the serving stack.
+
+use std::collections::HashMap;
+
+use crate::model::DecodeEngine;
+use crate::runtime::{Manifest, Runtime};
+
+/// Engine pool keyed by batch size for one decode model.
+pub struct Router<'rt> {
+    rt: &'rt Runtime,
+    manifest: Manifest,
+    model: String,
+    engines: HashMap<usize, DecodeEngine>,
+}
+
+impl<'rt> Router<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: Manifest, model: &str) -> anyhow::Result<Router<'rt>> {
+        anyhow::ensure!(
+            !manifest.decode_batches(model).is_empty(),
+            "no decode artifacts for model '{model}'"
+        );
+        Ok(Router { rt, manifest, model: model.to_string(), engines: HashMap::new() })
+    }
+
+    /// Batch sizes this model was compiled for (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.manifest.decode_batches(&self.model)
+    }
+
+    /// Get (or build) the engine for a batch size.
+    pub fn engine(&mut self, batch: usize) -> anyhow::Result<&mut DecodeEngine> {
+        if !self.engines.contains_key(&batch) {
+            let entry = self.manifest.decode(&self.model, batch)?;
+            let engine = DecodeEngine::new(self.rt, entry)?;
+            self.engines.insert(batch, engine);
+        }
+        Ok(self.engines.get_mut(&batch).unwrap())
+    }
+
+    /// Number of engines built so far.
+    pub fn engines_built(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Router construction needs real artifacts + a PJRT client; exercised
+    // by rust/tests/coordinator.rs.
+}

@@ -1,0 +1,155 @@
+//! The serving loop: queue -> batcher -> router -> decode engine.
+//!
+//! Group-synchronous iteration batching: the server drains the queue into
+//! a fixed-size decode group (padding idle slots), then steps the group's
+//! engine until every member has consumed its prompt and produced its
+//! generation budget.  Prompt tokens are ingested through the same decode
+//! step (teacher-forced positions), so the whole serving path — prefill
+//! and decode — runs the W4A16 pipeline under test.
+
+use std::time::Instant;
+
+use super::batcher::{Batcher, DecodeGroup};
+use super::metrics::Metrics;
+use super::request::{DecodeRequest, DecodeResult};
+use super::router::Router;
+
+/// Per-slot decode state inside a running group.
+struct Slot<'r> {
+    req: &'r DecodeRequest,
+    /// Next position to write in the KV cache.
+    position: usize,
+    /// Token to feed next step.
+    next_input: i32,
+    generated: Vec<i32>,
+    first_token_at: Option<Instant>,
+    done: bool,
+}
+
+/// The decode server for one model.
+pub struct Server<'rt> {
+    pub router: Router<'rt>,
+    pub batcher: Batcher,
+    pub metrics: Metrics,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(router: Router<'rt>, batcher: Batcher) -> Server<'rt> {
+        Server { router, batcher, metrics: Metrics::new() }
+    }
+
+    /// Admit a request into the queue.
+    pub fn submit(&mut self, mut req: DecodeRequest) {
+        req.arrived = Some(Instant::now());
+        self.batcher.push(req);
+    }
+
+    /// Serve until the queue is empty; returns all results.
+    pub fn drain(&mut self) -> anyhow::Result<Vec<DecodeResult>> {
+        let mut results = Vec::new();
+        while let Some(group) = self.batcher.form_group(true) {
+            results.extend(self.run_group(group)?);
+        }
+        Ok(results)
+    }
+
+    /// Serve exactly one group if one can be formed.
+    pub fn serve_one(&mut self, drain: bool) -> anyhow::Result<Vec<DecodeResult>> {
+        match self.batcher.form_group(drain) {
+            Some(group) => self.run_group(group),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Decode one group to completion.
+    fn run_group(&mut self, group: DecodeGroup) -> anyhow::Result<Vec<DecodeResult>> {
+        let engine = self.router.engine(group.batch)?;
+        engine.reset()?;
+        let vocab = engine.vocab;
+        let max_seq = engine.max_seq;
+        for req in &group.members {
+            req.validate(vocab, max_seq)?;
+        }
+
+        let mut slots: Vec<Slot> = group
+            .members
+            .iter()
+            .map(|req| Slot {
+                req,
+                position: 0,
+                next_input: req.prompt[0],
+                generated: Vec::new(),
+                first_token_at: None,
+                done: false,
+            })
+            .collect();
+
+        let mut steps = 0usize;
+        while slots.iter().any(|s| !s.done) {
+            // Assemble the step: idle/finished/padding slots replay token 0
+            // at their last written position (harmless rewrite).
+            let mut tokens = vec![0i32; group.batch];
+            let mut positions = vec![0i32; group.batch];
+            for (i, slot) in slots.iter().enumerate() {
+                tokens[i] = if slot.done { 0 } else { slot.next_input };
+                positions[i] = slot.position as i32;
+            }
+            let out = engine.step(&tokens, &positions)?;
+            steps += 1;
+
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if slot.done {
+                    continue;
+                }
+                let produced = out.next_tokens[i];
+                slot.position += 1;
+                if slot.position < slot.req.prompt.len() {
+                    // Still ingesting the prompt (teacher forcing).
+                    slot.next_input = slot.req.prompt[slot.position];
+                } else {
+                    // Generating.
+                    if slot.first_token_at.is_none() {
+                        slot.first_token_at = Some(Instant::now());
+                    }
+                    slot.generated.push(produced);
+                    slot.next_input = produced;
+                    if slot.generated.len() >= slot.req.max_new_tokens
+                        || slot.position + 1 >= max_seq
+                    {
+                        slot.done = true;
+                    }
+                }
+            }
+        }
+
+        self.metrics.record_group(group.batch, group.occupancy(), steps);
+        let now = Instant::now();
+        let results = slots
+            .into_iter()
+            .map(|slot| {
+                let arrived = slot.req.arrived.unwrap_or(now);
+                let ttft = slot
+                    .first_token_at
+                    .map(|t| t.duration_since(arrived).as_secs_f64())
+                    .unwrap_or(0.0);
+                let total = now.duration_since(arrived).as_secs_f64();
+                self.metrics
+                    .record_completion(slot.generated.len(), ttft, total);
+                DecodeResult {
+                    id: slot.req.id,
+                    tokens: slot.generated,
+                    ttft_s: ttft,
+                    total_s: total,
+                    steps,
+                }
+            })
+            .collect();
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Full server behaviour needs artifacts + PJRT; see
+    // rust/tests/coordinator.rs and examples/llm_decode.rs.
+}

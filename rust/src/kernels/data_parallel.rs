@@ -1,0 +1,149 @@
+//! Data-parallel W4A16 comparator (CATLASS-style).
+//!
+//! Each active AI core owns an output strip `(bm x bn)` end-to-end: its own
+//! two vector cores dequantize the strip's weight slice into the workspace
+//! and its cube core consumes the slice over the full K range — no K split,
+//! no reduce phase.  The FP32 -> FP16 epilogue rides the MTE3 write (the
+//! transfer engines do on-the-fly format conversion, §2.3); summation
+//! across splits is what *cannot* be done by an MTE, which is why Split-K
+//! needs its vector-core Phase 3 while DP does not.
+//!
+//! Weakness (the paper's §4.1 point): at decode shapes the strip count
+//! `ceil(N/bn) * ceil(M/bm)` can be far below the 32 cube cores, leaving
+//! compute and MTE bandwidth idle exactly when K is large.
+
+use crate::ascend::{
+    BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+};
+
+use super::{round_robin, splitk::dequant_phase, tiling::Tiling, GemmProblem};
+
+/// Build the data-parallel trace.
+pub fn schedule(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+) -> anyhow::Result<KernelTrace> {
+    t.validate(machine, p)?;
+    anyhow::ensure!(t.splits == 1, "data-parallel schedule requires S = 1");
+    let m_pad = p.m_padded(machine);
+    let strips = (m_pad / t.bm) * (p.n / t.bn);
+    let active_cores = strips.min(machine.ai_cores);
+
+    // Phase 1: dequant restricted to the active cores' own vector units.
+    let p1 = dequant_phase(
+        machine,
+        p,
+        t,
+        (active_cores * machine.vector_per_core).min(machine.total_vector_cores()),
+        false,
+    );
+
+    // Phase 2: full-K GEMM per strip, pipelined against the dequant.
+    let k_steps = p.k / t.bk;
+    let a_tile = (t.bm * t.bk * 2) as u64;
+    let b_tile = (t.bk * t.bn * 2) as u64;
+    let out_tile = (t.bm * t.bn * 2) as u64; // f16 via MTE3 on-the-fly cast
+    let assign = round_robin(strips, machine.ai_cores);
+    let steps_per_engine: Vec<Vec<TileStep>> = assign
+        .iter()
+        .map(|engine_items| {
+            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
+            for _ in engine_items {
+                for kstep in 0..k_steps {
+                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+                        .with_burst((t.bn * 2) as u64)
+                        .read(BufferClass::Workspace, b_tile)
+                        .read(BufferClass::Activation, a_tile);
+                    if kstep == k_steps - 1 {
+                        s = s.write(BufferClass::Output, out_tile);
+                    }
+                    steps.push(s);
+                }
+            }
+            steps
+        })
+        .collect();
+    let p2 = Phase {
+        name: "dp_mmad",
+        unit: Unit::Cube,
+        steps_per_engine,
+        pipelined_with_prev: true,
+    };
+
+    Ok(KernelTrace {
+        name: format!("dp_m{}_n{}_k{}", p.m, p.n, p.k),
+        phases: vec![p1, p2],
+        workspace_bytes: p.f16_weight_bytes(),
+        partial_bytes: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+    use crate::kernels::tiling;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    fn build(mm: usize, n: usize, k: usize) -> (GemmProblem, KernelTrace) {
+        let p = GemmProblem::new(mm, n, k);
+        let t = tiling::select_data_parallel(&m(), &p).unwrap();
+        (p, schedule(&m(), &p, &t).unwrap())
+    }
+
+    #[test]
+    fn two_phases_no_reduce() {
+        let (_, tr) = build(16, 2048, 7168);
+        assert_eq!(tr.phases.len(), 2);
+        assert_eq!(tr.partial_bytes, 0);
+        assert!(tr.phases[1].pipelined_with_prev);
+    }
+
+    #[test]
+    fn low_occupancy_at_decode_shapes() {
+        // N=1024, M<=16: only 4 strips of 256 -> 4 of 32 cube cores busy.
+        let (_, tr) = build(8, 1024, 16384);
+        assert_eq!(tr.phases[1].active_engines(), 4);
+    }
+
+    #[test]
+    fn full_occupancy_when_n_large() {
+        let (_, tr) = build(8, 12288, 5120);
+        assert_eq!(tr.phases[1].active_engines(), 32);
+    }
+
+    #[test]
+    fn covers_all_macs() {
+        let (p, tr) = build(16, 2048, 7168);
+        assert_eq!(tr.total_macs(), p.macs(&m()));
+    }
+
+    #[test]
+    fn writes_f16_output_directly() {
+        let (p, tr) = build(16, 1024, 4096);
+        assert_eq!(
+            tr.phases[1].write_bytes(BufferClass::Output),
+            (p.m_padded(&m()) * p.n * 2) as u64
+        );
+        assert_eq!(tr.phases[1].write_bytes(BufferClass::Partial), 0);
+    }
+
+    #[test]
+    fn splitk_beats_dp_when_k_dominant() {
+        // The paper's Figure 2 headline, as a unit test.
+        let machine = m();
+        let sim = Simulator::new(machine.clone());
+        let p = GemmProblem::new(8, 1024, 16384);
+        let t_dp = tiling::select_data_parallel(&machine, &p).unwrap();
+        let dp_ns = sim.run(&schedule(&machine, &p, &t_dp).unwrap()).unwrap().total_ns;
+        let t_sk = tiling::select_splitk(&machine, &p).unwrap();
+        let sk = crate::kernels::splitk::schedule(&machine, &p, &t_sk).unwrap();
+        let sk_ns = sim.run(&sk).unwrap().total_ns;
+        let speedup = dp_ns / sk_ns;
+        assert!(speedup > 1.0, "expected Split-K win, got {speedup:.3}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Native FP16 x FP16 GEMM — the "PyTorch" baseline of Figure 3.
+//!
+//! Single-pass data-parallel GEMM over FP16 weights: every weight byte is
+//! read from HBM exactly once, no dequant phase, no workspace round trip,
+//! no reduce.  The weight traffic is 4x the packed INT4 bytes — that 4x is
+//! the *theoretical* W4A16 speedup that the workspace round trip then eats
+//! (the paper's §4.2).
+
+use crate::ascend::{
+    BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+};
+
+use super::{round_robin, tiling::Tiling, GemmProblem};
+
+/// Build the native-FP16 trace.
+pub fn schedule(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+) -> anyhow::Result<KernelTrace> {
+    t.validate(machine, p)?;
+    anyhow::ensure!(t.splits == 1, "native schedule has no K split");
+    let m_pad = p.m_padded(machine);
+    let strips = (m_pad / t.bm) * (p.n / t.bn);
+    let k_steps = p.k / t.bk;
+    let a_tile = (t.bm * t.bk * 2) as u64;
+    let b_tile = (t.bk * t.bn * 2) as u64;
+    let out_tile = (t.bm * t.bn * 2) as u64;
+    let assign = round_robin(strips, machine.ai_cores);
+    let steps_per_engine: Vec<Vec<TileStep>> = assign
+        .iter()
+        .map(|engine_items| {
+            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
+            for _ in engine_items {
+                for kstep in 0..k_steps {
+                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+                        .with_burst((t.bn * 2) as u64)
+                        .read(BufferClass::WeightF16, b_tile)
+                        .read(BufferClass::Activation, a_tile);
+                    if kstep == k_steps - 1 {
+                        s = s.write(BufferClass::Output, out_tile);
+                    }
+                    steps.push(s);
+                }
+            }
+            steps
+        })
+        .collect();
+    let phase = Phase {
+        name: "fp16_mmad",
+        unit: Unit::Cube,
+        steps_per_engine,
+        pipelined_with_prev: false,
+    };
+    Ok(KernelTrace {
+        name: format!("fp16_m{}_n{}_k{}", p.m, p.n, p.k),
+        phases: vec![phase],
+        workspace_bytes: 0,
+        partial_bytes: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+    use crate::kernels::tiling;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn single_phase_reads_weights_once() {
+        let p = GemmProblem::new(16, 2048, 7168);
+        let t = tiling::select_data_parallel(&m(), &p).unwrap();
+        let tr = schedule(&m(), &p, &t).unwrap();
+        assert_eq!(tr.phases.len(), 1);
+        assert_eq!(
+            tr.phases[0].read_bytes(BufferClass::WeightF16),
+            p.f16_weight_bytes()
+        );
+        assert_eq!(tr.workspace_bytes, 0);
+    }
+
+    #[test]
+    fn flat_in_m_below_cube_tile() {
+        // The paper: small batches are padded to the tile, so exec time is
+        // flat in M for M <= 16.
+        let sim = Simulator::new(m());
+        let times: Vec<f64> = [1, 2, 4, 8, 16]
+            .iter()
+            .map(|&batch| {
+                let p = GemmProblem::new(batch, 2048, 7168);
+                let t = tiling::select_data_parallel(&m(), &p).unwrap();
+                sim.run(&schedule(&m(), &p, &t).unwrap()).unwrap().total_ns
+            })
+            .collect();
+        for w in times.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6, "{times:?}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_bound_at_decode_shapes() {
+        let p = GemmProblem::new(8, 2048, 7168);
+        let t = tiling::select_data_parallel(&m(), &p).unwrap();
+        let r = Simulator::new(m()).run(&schedule(&m(), &p, &t).unwrap()).unwrap();
+        assert_eq!(r.groups[0].bound_by, "hbm");
+    }
+}

@@ -1,0 +1,156 @@
+//! Fused direct-path ablation — the paper's future-work hypothesis.
+//!
+//! "Future work should explore hardware-software co-design to enable
+//! direct data paths between vector and cube units or fused instructions
+//! that bypass global memory" (§5).  This schedule models that machine:
+//! the cube pipeline ingests packed INT4 tiles directly (a hypothetical
+//! in-pipe dequant, akin to an MTE format conversion on the L1 -> L0B
+//! path), so the FP16 workspace never exists.  Split-K and the reduce
+//! phase are kept so the only delta versus Algorithm 1 is the round trip —
+//! Ablation A quantifies exactly the §4.2 bottleneck.
+
+use crate::ascend::{
+    BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+};
+
+use super::{round_robin, tiling::Tiling, GemmProblem};
+
+/// Build the fused-path trace.
+pub fn schedule(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+) -> anyhow::Result<KernelTrace> {
+    t.validate(machine, p)?;
+    let m_pad = p.m_padded(machine);
+    let ks = p.k / t.splits;
+    let k_steps = ks / t.bk;
+    let single_split = t.splits == 1;
+    let items = t.mmad_items(machine, p);
+    let a_tile = (t.bm * t.bk * 2) as u64;
+    let b_packed_tile = (t.bk * t.bn / 2) as u64;
+    let qparam_tile = (2 * (t.bk / p.group).max(1) * t.bn * 4) as u64;
+    // S = 1 writes FP16 output directly (MTE3 cast), no partials/reduce.
+    let c_tile = if single_split {
+        (t.bm * t.bn * 2) as u64
+    } else {
+        (t.bm * t.bn * 4) as u64
+    };
+    let c_class = if single_split { BufferClass::Output } else { BufferClass::Partial };
+    let assign = round_robin(items, machine.ai_cores);
+    let steps_per_engine: Vec<Vec<TileStep>> = assign
+        .iter()
+        .map(|engine_items| {
+            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
+            for _ in engine_items {
+                for kstep in 0..k_steps {
+                    // Packed weights flow straight into the cube pipe; the
+                    // hypothetical fused conversion rides the transfer.
+                    // Weights are static, so a real fused design repacks
+                    // them offline into the pipe's native tile order
+                    // (Marlin-style) — transfers are fully contiguous.
+                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+                        .read(BufferClass::WeightPacked, b_packed_tile + qparam_tile)
+                        .read(BufferClass::Activation, a_tile);
+                    if kstep == k_steps - 1 {
+                        s = s.write(c_class, c_tile);
+                    }
+                    steps.push(s);
+                }
+            }
+            steps
+        })
+        .collect();
+    let p1 = Phase {
+        name: "fused_mmad",
+        unit: Unit::Cube,
+        steps_per_engine,
+        pipelined_with_prev: false,
+    };
+    if single_split {
+        return Ok(KernelTrace {
+            name: format!("fused_m{}_n{}_k{}_s1", p.m, p.n, p.k),
+            phases: vec![p1],
+            workspace_bytes: 0,
+            partial_bytes: 0,
+        });
+    }
+
+    // Reduce phase (unchanged from Algorithm 1).
+    let out_tiles = (m_pad / t.bm) * (p.n / t.bn);
+    let elems = t.bm * t.bn;
+    let reduce_step = TileStep::new(ComputeOp::Reduce { elems, terms: t.splits })
+        .read(BufferClass::Partial, (t.splits * elems * 4) as u64)
+        .write(BufferClass::Output, (elems * 2) as u64);
+    let steps_per_engine = round_robin(out_tiles, machine.total_vector_cores())
+        .into_iter()
+        .map(|items| vec![reduce_step; items.len()])
+        .collect();
+    let p2 = Phase {
+        name: "reduce",
+        unit: Unit::Vector,
+        steps_per_engine,
+        pipelined_with_prev: false,
+    };
+
+    Ok(KernelTrace {
+        name: format!("fused_m{}_n{}_k{}_s{}", p.m, p.n, p.k, t.splits),
+        phases: vec![p1, p2],
+        workspace_bytes: 0,
+        partial_bytes: (t.splits * m_pad * p.n * 4) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+    use crate::kernels::{fp16_native, splitk, tiling};
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn no_workspace_traffic() {
+        let p = GemmProblem::new(16, 2048, 7168);
+        let t = tiling::select_splitk(&m(), &p).unwrap();
+        let tr = schedule(&m(), &p, &t).unwrap();
+        for phase in &tr.phases {
+            assert_eq!(phase.read_bytes(BufferClass::Workspace), 0);
+            assert_eq!(phase.write_bytes(BufferClass::Workspace), 0);
+        }
+        assert_eq!(tr.workspace_bytes, 0);
+    }
+
+    #[test]
+    fn fused_beats_three_phase_splitk() {
+        // Removing the round trip must strictly help: that is the paper's
+        // whole future-work argument.
+        let machine = m();
+        let sim = Simulator::new(machine.clone());
+        let p = GemmProblem::new(8, 2048, 7168);
+        let t = tiling::select_splitk(&machine, &p).unwrap();
+        let fused_ns = sim.run(&schedule(&machine, &p, &t).unwrap()).unwrap().total_ns;
+        let splitk_ns = sim.run(&splitk::schedule(&machine, &p, &t).unwrap()).unwrap().total_ns;
+        assert!(fused_ns < splitk_ns, "{fused_ns} !< {splitk_ns}");
+    }
+
+    #[test]
+    fn fused_approaches_the_4x_promise() {
+        // Against the FP16 native baseline the fused path should recover
+        // most of the 4x weight-traffic reduction at decode shapes.
+        let machine = m();
+        let sim = Simulator::new(machine.clone());
+        let p = GemmProblem::new(8, 2048, 7168);
+        let t_sk = tiling::select_splitk(&machine, &p).unwrap();
+        let fused_ns = sim.run(&schedule(&machine, &p, &t_sk).unwrap()).unwrap().total_ns;
+        let t_dp = tiling::select_data_parallel(&machine, &p).unwrap();
+        let fp16_ns = sim
+            .run(&fp16_native::schedule(&machine, &p, &t_dp).unwrap())
+            .unwrap()
+            .total_ns;
+        let speedup = fp16_ns / fused_ns;
+        assert!(speedup > 1.8, "fused speedup only {speedup:.2}");
+    }
+}

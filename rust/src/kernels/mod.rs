@@ -1,0 +1,170 @@
+//! Kernel schedules: compile a W4A16 (or FP16) GEMM problem into a
+//! simulator [`KernelTrace`](crate::ascend::KernelTrace).
+//!
+//! Four strategies, mirroring the paper's evaluation:
+//! * [`splitk`] — **Algorithm 1**: vector-core dequant into a GM workspace,
+//!   Split-K cube MMAD into FP32 split buffers, vector-core reduce.
+//! * [`data_parallel`] — the CATLASS-style comparator: each active AI core
+//!   owns an output strip end-to-end (dequant + full-K GEMM), no K split.
+//! * [`fp16_native`] — native FP16xFP16 single-pass GEMM (the "PyTorch"
+//!   baseline of Figure 3).
+//! * [`fused`] — the paper's future-work ablation: a hypothetical direct
+//!   vector->cube path that skips the workspace round trip entirely.
+
+pub mod data_parallel;
+pub mod fp16_native;
+pub mod fused;
+pub mod splitk;
+pub mod tiling;
+
+use crate::ascend::{KernelTrace, MachineConfig};
+
+/// A GEMM problem: `C[M,N] = A[M,K] @ W[K,N]` with group-quantized weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmProblem {
+    /// Batch dimension (decode batch size before padding).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Quantization group size along K.
+    pub group: usize,
+}
+
+impl GemmProblem {
+    pub fn new(m: usize, n: usize, k: usize) -> GemmProblem {
+        GemmProblem { m, n, k, group: 128 }
+    }
+
+    /// M padded to the cube tile (the hardware pads small batches).
+    pub fn m_padded(&self, machine: &MachineConfig) -> usize {
+        let t = machine.cube_tile;
+        self.m.div_ceil(t) * t
+    }
+
+    /// Total multiply-accumulates of the padded problem.
+    pub fn macs(&self, machine: &MachineConfig) -> u64 {
+        (self.m_padded(machine) * self.n * self.k) as u64
+    }
+
+    /// Packed INT4 weight bytes.
+    pub fn packed_weight_bytes(&self) -> u64 {
+        (self.k * self.n) as u64 / 2
+    }
+
+    /// FP16 weight bytes (native baseline, and the workspace footprint).
+    pub fn f16_weight_bytes(&self) -> u64 {
+        (self.k * self.n * 2) as u64
+    }
+
+    pub fn validate(&self, group: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.m >= 1, "M must be positive");
+        anyhow::ensure!(self.k % group == 0, "K={} not a multiple of group={group}", self.k);
+        anyhow::ensure!(self.n % 16 == 0, "N={} not a multiple of the cube tile", self.n);
+        Ok(())
+    }
+}
+
+/// Strategy selector used by the CLI / benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    SplitK,
+    DataParallel,
+    Fp16Native,
+    Fused,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::SplitK => "splitk",
+            Strategy::DataParallel => "data_parallel",
+            Strategy::Fp16Native => "fp16_native",
+            Strategy::Fused => "fused",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Strategy> {
+        Ok(match name {
+            "splitk" => Strategy::SplitK,
+            "dp" | "data_parallel" => Strategy::DataParallel,
+            "fp16" | "fp16_native" => Strategy::Fp16Native,
+            "fused" => Strategy::Fused,
+            other => anyhow::bail!("unknown strategy '{other}'"),
+        })
+    }
+}
+
+/// Build the trace for a (problem, strategy) pair with auto-selected tiling.
+pub fn schedule(
+    machine: &MachineConfig,
+    problem: &GemmProblem,
+    strategy: Strategy,
+) -> anyhow::Result<KernelTrace> {
+    match strategy {
+        Strategy::SplitK => {
+            let t = tiling::select_splitk(machine, problem)?;
+            splitk::schedule(machine, problem, &t)
+        }
+        Strategy::DataParallel => {
+            let t = tiling::select_data_parallel(machine, problem)?;
+            data_parallel::schedule(machine, problem, &t)
+        }
+        Strategy::Fp16Native => {
+            let t = tiling::select_fp16(machine, problem)?;
+            fp16_native::schedule(machine, problem, &t)
+        }
+        Strategy::Fused => {
+            let t = tiling::select_splitk(machine, problem)?;
+            fused::schedule(machine, problem, &t)
+        }
+    }
+}
+
+/// Assign `items` work items round-robin over `engines` engine slots,
+/// returning the item indices per engine (empty vecs for idle engines).
+pub(crate) fn round_robin(items: usize, engines: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); engines];
+    for item in 0..items {
+        out[item % engines].push(item);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_padding_and_sizes() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(3, 2048, 7168);
+        assert_eq!(p.m_padded(&m), 16);
+        assert_eq!(p.packed_weight_bytes(), 7168 * 2048 / 2);
+        assert_eq!(p.f16_weight_bytes(), 7168 * 2048 * 2);
+        assert_eq!(p.macs(&m), 16 * 2048 * 7168);
+    }
+
+    #[test]
+    fn round_robin_covers_all_items() {
+        let assign = round_robin(10, 4);
+        let total: usize = assign.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 10);
+        assert_eq!(assign[0], vec![0, 4, 8]);
+        assert_eq!(assign[3], vec![3, 7]);
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+            assert_eq!(Strategy::from_name(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn problem_validation() {
+        assert!(GemmProblem::new(1, 2048, 7168).validate(128).is_ok());
+        assert!(GemmProblem::new(1, 2048, 100).validate(128).is_err());
+        assert!(GemmProblem::new(1, 17, 256).validate(128).is_err());
+    }
+}

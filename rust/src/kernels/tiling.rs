@@ -1,0 +1,287 @@
+//! Block-size and split-factor selection under L0/UB capacity constraints.
+//!
+//! Mirrors `python/compile/configs.select_blocks` for the Pallas side, with
+//! the hardware-capacity checks the simulator cares about:
+//! * Phase-2 MMAD blocks must fit L0A/L0B (double-buffered) and L0C;
+//! * Phase-1 dequant tiles must fit the Unified Buffer;
+//! * the K block is a multiple of the quantization group so every dequant
+//!   tile maps to whole scale rows.
+
+use crate::ascend::{cube, vector, MachineConfig};
+
+use super::GemmProblem;
+
+/// Complete tiling decision for one kernel execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    /// Cube MMAD block (the paper's `[m, n, k]`).
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    /// Split-K factor S (1 = data-parallel / native).
+    pub splits: usize,
+    /// Vector-core dequant tile (Phase 1).
+    pub dequant_bk: usize,
+    pub dequant_bn: usize,
+}
+
+impl Tiling {
+    pub fn validate(&self, machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<()> {
+        let m_pad = p.m_padded(machine);
+        anyhow::ensure!(
+            cube::block_fits_l0(machine, self.bm, self.bn, self.bk),
+            "MMAD block ({},{},{}) exceeds L0 capacity", self.bm, self.bn, self.bk
+        );
+        anyhow::ensure!(
+            vector::dequant_tile_fits_ub(machine, self.dequant_bk, self.dequant_bn),
+            "dequant tile ({},{}) exceeds UB capacity", self.dequant_bk, self.dequant_bn
+        );
+        anyhow::ensure!(p.k % self.splits == 0, "splits {} !| K={}", self.splits, p.k);
+        let ks = p.k / self.splits;
+        anyhow::ensure!(ks % self.bk == 0, "bk {} !| K/S={ks}", self.bk);
+        anyhow::ensure!(m_pad % self.bm == 0, "bm {} !| M_pad={m_pad}", self.bm);
+        anyhow::ensure!(p.n % self.bn == 0, "bn {} !| N={}", self.bn, p.n);
+        anyhow::ensure!(self.dequant_bk % p.group == 0, "dequant bk not group-aligned");
+        anyhow::ensure!(p.k % self.dequant_bk == 0 && p.n % self.dequant_bn == 0,
+            "dequant tile must tile (K, N)");
+        Ok(())
+    }
+
+    /// Number of Phase-2 work items (s, m-tile, n-tile) for a problem.
+    pub fn mmad_items(&self, machine: &MachineConfig, p: &GemmProblem) -> usize {
+        self.splits * (p.m_padded(machine) / self.bm) * (p.n / self.bn)
+    }
+}
+
+/// Largest power-of-two divisor of `n` that is `<= cap` (at least `floor`).
+fn pow2_divisor(n: usize, cap: usize, floor: usize) -> usize {
+    let mut b = cap;
+    while b > floor && n % b != 0 {
+        b /= 2;
+    }
+    b
+}
+
+/// Estimated Phase-2 cost of a candidate tiling: a two-stream transfer
+/// model (workspace bytes against L2, activation re-reads + split partials
+/// against HBM) with aggregate bandwidth limited by the candidate's cube
+/// occupancy.  This is the tiler's internal objective — the full simulator
+/// scores the resulting schedule exactly.
+fn phase2_cost(machine: &MachineConfig, p: &GemmProblem, t: &Tiling) -> f64 {
+    let m_pad = p.m_padded(machine);
+    let items = t.mmad_items(machine, p);
+    let active = items.min(machine.ai_cores).max(1) as f64;
+    let agg = |shared: f64| (machine.mte_core_bw * active).min(shared);
+    let ws_bytes = p.f16_weight_bytes() as f64 * (m_pad / t.bm) as f64;
+    // A is re-read once per (s, m-tile, n-tile) item over its K/S range;
+    // partials are written + re-read.
+    let a_bytes = items as f64 * (t.bm * (p.k / t.splits) * 2) as f64;
+    let partial_bytes = (t.splits * m_pad * p.n * 4 * 2) as f64;
+    // Narrow B tiles read short row segments and waste DMA bandwidth.
+    let eff = (t.bn as f64 * 2.0 / machine.dma_burst_bytes).min(1.0);
+    let t_l2 = ws_bytes / eff / agg(machine.l2_bw);
+    let t_hbm = (a_bytes / eff + partial_bytes) / agg(machine.hbm_bw);
+    // S > 1 pays the Phase-3 barrier and the reduce pass; for tiny
+    // problems that overhead outweighs the occupancy gain.
+    let sync = if t.splits > 1 { machine.barrier_ns } else { 0.0 };
+    t_l2.max(t_hbm) + sync
+}
+
+/// Tiling for Algorithm 1 (Split-K).
+///
+/// Candidate search over B-tile widths: for each legal `bn` the split
+/// factor S doubles until `S * n_tiles * m_tiles >= ai_cores` (subject to
+/// `K/S` staying group-aligned), then candidates are ranked by the
+/// estimated Phase-2 cost (occupancy vs activation re-read traffic), with
+/// a preference for wider tiles on near-ties — mirroring how CATLASS
+/// swizzles its Split-K grid.
+pub fn select_splitk(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
+    p.validate(p.group)?;
+    let m_pad = p.m_padded(machine);
+    let bm = pow2_divisor(m_pad, 64, 16);
+    let m_tiles = m_pad / bm;
+
+    let mut best: Option<(f64, Tiling)> = None;
+    for bn in [256usize, 128, 64, 32, 16] {
+        if p.n % bn != 0 {
+            continue;
+        }
+        // Largest group-divisor bk that fits L0B double-buffered.
+        let mut bk = p.group.min(p.k);
+        while !cube::block_fits_l0(machine, bm, bn, bk) && bk > 16 {
+            bk /= 2;
+        }
+        let n_tiles = p.n / bn;
+        let base = n_tiles * m_tiles;
+        // Score every legal split factor up to full occupancy.
+        let mut splits = 1;
+        loop {
+            let t = Tiling {
+                bm,
+                bn,
+                bk,
+                splits,
+                dequant_bk: p.group,
+                dequant_bn: pow2_divisor(p.n, 256, 16),
+            };
+            if t.validate(machine, p).is_ok() {
+                let score = phase2_cost(machine, p, &t);
+                let better = match &best {
+                    None => true,
+                    // Require a >5% cost win to justify a narrower tile
+                    // (wide tiles stream better on real hardware).
+                    Some((best_score, best_t)) => {
+                        score < best_score * 0.95
+                            || (score <= *best_score && bn > best_t.bn)
+                    }
+                };
+                if better {
+                    best = Some((score, t));
+                }
+            }
+            if splits * base >= machine.ai_cores
+                || p.k % (2 * splits) != 0
+                || (p.k / (2 * splits)) % p.group != 0
+                || (p.k / (2 * splits)) % bk != 0
+            {
+                break;
+            }
+            splits *= 2;
+        }
+    }
+    let (_, t) = best.ok_or_else(|| anyhow::anyhow!("no legal splitk tiling"))?;
+    Ok(t)
+}
+
+/// Tiling for the native FP16 baseline ("PyTorch"): a *tuned* single-pass
+/// GEMM.  Unlike the paper's fixed-tile DP W4A16 baseline, the vendor
+/// FP16 GEMM picks its strip width per problem, so we search candidates
+/// and take the one minimizing max(weight-transfer, compute) time.
+pub fn select_fp16(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
+    p.validate(p.group)?;
+    let m_pad = p.m_padded(machine);
+    let mut best: Option<(f64, Tiling)> = None;
+    for bn in [256usize, 128, 64, 32, 16] {
+        if p.n % bn != 0 {
+            continue;
+        }
+        for bm in [128usize, 64, 32, 16] {
+            if m_pad % bm != 0 {
+                continue;
+            }
+            let mut bk = p.group.min(p.k);
+            while !cube::block_fits_l0(machine, bm, bn, bk) && bk > 16 {
+                bk /= 2;
+            }
+            let t = Tiling {
+                bm,
+                bn,
+                bk,
+                splits: 1,
+                dequant_bk: p.group,
+                dequant_bn: pow2_divisor(p.n, 256, 16),
+            };
+            if t.validate(machine, p).is_err() {
+                continue;
+            }
+            let strips = (m_pad / bm) * (p.n / bn);
+            let active = strips.min(machine.ai_cores).max(1) as f64;
+            let weight_bytes = p.f16_weight_bytes() as f64 * (m_pad / bm) as f64;
+            let t_hbm = weight_bytes / (machine.mte_core_bw * active).min(machine.hbm_bw);
+            let macs = p.macs(machine) as f64;
+            let t_compute =
+                machine.cycles_to_ns(macs / machine.cube_macs_per_cycle) / active;
+            let score = t_hbm.max(t_compute);
+            let better = match &best {
+                None => true,
+                Some((s, bt)) => score < s * 0.98 || (score <= *s && bn + bm > bt.bn + bt.bm),
+            };
+            if better {
+                best = Some((score, t));
+            }
+        }
+    }
+    let (_, t) = best.ok_or_else(|| anyhow::anyhow!("no legal fp16 tiling"))?;
+    Ok(t)
+}
+
+/// Tiling for the data-parallel comparator: CATLASS-style fixed 256-wide
+/// output strips, full-K per strip, S = 1 (the paper's baseline kernel is
+/// a fixed-template implementation, not an auto-tuned one).
+pub fn select_data_parallel(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
+    p.validate(p.group)?;
+    let m_pad = p.m_padded(machine);
+    let bn = pow2_divisor(p.n, 256, 16);
+    // bk shrinks so the double-buffered B tile fits L0B: 2*bk*bn*2 <= L0B.
+    let mut bk = p.group;
+    while !cube::block_fits_l0(machine, 16, bn, bk) && bk > 16 {
+        bk /= 2;
+    }
+    let bm = pow2_divisor(m_pad, 128, 16);
+    let t = Tiling {
+        bm,
+        bn,
+        bk,
+        splits: 1,
+        dequant_bk: p.group,
+        dequant_bn: pow2_divisor(p.n, 256, 16),
+    };
+    t.validate(machine, p)?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn splitk_increases_splits_when_n_small() {
+        let small_n = select_splitk(&m(), &GemmProblem::new(16, 512, 8192)).unwrap();
+        let large_n = select_splitk(&m(), &GemmProblem::new(16, 8192, 512)).unwrap();
+        assert!(small_n.splits > large_n.splits,
+            "{} vs {}", small_n.splits, large_n.splits);
+    }
+
+    #[test]
+    fn splitk_keeps_group_alignment() {
+        for (n, k) in [(512, 8192), (2048, 7168), (1024, 16384), (7680, 7680)] {
+            let t = select_splitk(&m(), &GemmProblem::new(8, n, k)).unwrap();
+            assert_eq!((k / t.splits) % 128, 0, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn dp_is_single_split_with_wide_strips() {
+        let t = select_data_parallel(&m(), &GemmProblem::new(16, 2048, 7168)).unwrap();
+        assert_eq!(t.splits, 1);
+        assert_eq!(t.bn, 256);
+        assert!(cube::block_fits_l0(&m(), t.bm, t.bn, t.bk));
+    }
+
+    #[test]
+    fn all_paper_shapes_tile() {
+        for (n, k) in [
+            (2048, 2048), (8192, 2048), (2048, 8192),
+            (5120, 5120), (12288, 5120), (5120, 12288),
+            (7168, 7168), (2048, 7168), (7168, 2048), (1536, 7168),
+            (7680, 7680), (1024, 7680),
+        ] {
+            for batch in [1, 2, 4, 8, 16, 32, 64] {
+                let p = GemmProblem::new(batch, n, k);
+                select_splitk(&m(), &p).unwrap_or_else(|e| panic!("splitk {n}x{k} m={batch}: {e}"));
+                select_data_parallel(&m(), &p).unwrap_or_else(|e| panic!("dp {n}x{k} m={batch}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mmad_item_count() {
+        let p = GemmProblem::new(16, 1024, 4096);
+        let t = select_splitk(&m(), &p).unwrap();
+        assert_eq!(t.mmad_items(&m(), &p), t.splits * (1024 / t.bn));
+    }
+}

@@ -1,0 +1,39 @@
+//! # ascend-w4a16
+//!
+//! Production-quality reproduction of *"W4A16 Mixed-Precision Matrix
+//! Multiplication on Decoupled Architecture: Kernel Design and Memory
+//! Bottleneck Analysis for Ascend NPUs"* (CS.DC 2026).
+//!
+//! The library has four pillars:
+//!
+//! * [`ascend`] — a cycle-approximate, event-driven simulator of the
+//!   Ascend 910's decoupled AI-core architecture (cube + vector cores,
+//!   L1/L0/UB buffers, MTE transfer engines, shared L2, HBM contention).
+//! * [`kernels`] — kernel *schedules* (the paper's Algorithm 1 Split-K
+//!   pipeline plus the data-parallel, native-FP16 and fused comparators)
+//!   that compile GEMM problems into simulator traces.
+//! * [`runtime`] — a PJRT-backed executor that loads the AOT-compiled
+//!   HLO artifacts (JAX + Pallas, lowered at build time) and runs the
+//!   real numerics on the request path with no Python anywhere.
+//! * [`coordinator`] — a decode-serving runtime (request queue, dynamic
+//!   batcher, shape router, KV-cache/session management) exercising the
+//!   W4A16 pipeline on the paper's motivating workload: LLM decoding.
+//!
+//! Supporting substrates: [`quant`] (INT4 group quantization + nibble
+//! packing), [`tensor`] (host tensors), [`analysis`] (roofline + traffic
+//! decomposition behind the paper's §4.2 bottleneck analysis),
+//! [`model`] (LLM geometry tables), [`workload`] (request generators)
+//! and [`util`] (JSON, CLI, f16, PRNG, stats — the build environment is
+//! fully offline, so these are implemented here rather than pulled in).
+
+pub mod analysis;
+pub mod ascend;
+pub mod bench;
+pub mod coordinator;
+pub mod kernels;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,285 @@
+//! `repro` — CLI front end for the W4A16 reproduction.
+//!
+//! Subcommands:
+//! * `machine`    — print the simulated Ascend 910 description.
+//! * `simulate`   — simulate one GEMM (`--n --k --batch --strategy`).
+//! * `fig2`       — regenerate the paper's Figure 2 (Split-K vs DP sweep).
+//! * `fig3`       — regenerate Figure 3 (W4A16 vs native FP16 sweep).
+//! * `analyze`    — §4.2 memory-bottleneck decomposition for one shape.
+//! * `quickstart` — execute a real W4A16 artifact through PJRT.
+//! * `serve`      — run the decode-serving coordinator on synthetic load.
+
+use ascend_w4a16::analysis::{report, roofline, sensitivity, timeline, traffic};
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::quant;
+use ascend_w4a16::runtime::client::literal_to_host;
+use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
+use ascend_w4a16::tensor::MatF32;
+use ascend_w4a16::util::cli::Args;
+use ascend_w4a16::util::prng::Rng;
+use ascend_w4a16::util::stats;
+use ascend_w4a16::workload::RequestGenerator;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("machine") => cmd_machine(),
+        Some("simulate") => cmd_simulate(args),
+        Some("fig2") => cmd_fig2(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("sensitivity") => cmd_sensitivity(args),
+        Some("trace") => cmd_trace(args),
+        Some("quickstart") => cmd_quickstart(args),
+        Some("serve") => cmd_serve(args),
+        other => {
+            if let Some(name) = other {
+                eprintln!("unknown subcommand '{name}'\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — W4A16 mixed-precision matmul on a decoupled NPU (paper reproduction)
+
+USAGE: repro <subcommand> [options]
+
+  machine                          print the simulated Ascend 910 description
+  simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused]
+  fig2 [--json PATH]               Figure 2: Split-K vs Data-Parallel sweep
+  fig3 [--json PATH]               Figure 3: W4A16 vs native FP16 sweep
+  analyze [--n N --k K --batch M]  §4.2 memory-bottleneck decomposition
+  sensitivity [--knob l2_bw|hbm_bw|l2_bytes|mte_core_bw|barrier_ns] [--batch M]
+                                   how the paper's headline numbers move with
+                                   the architecture (co-design exploration)
+  trace --out FILE.json [--n N --k K --batch M --strategy S]
+                                   chrome://tracing timeline of one kernel
+  quickstart [--artifacts DIR]     run a real W4A16 artifact through PJRT
+  serve [--model tiny|small100m] [--requests N] [--seed S] [--artifacts DIR]"
+    );
+}
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+fn cmd_machine() -> anyhow::Result<()> {
+    let m = machine();
+    m.validate()?;
+    println!("Ascend 910 (simulated)");
+    println!("  AI cores            : {} (x{} vector cores each)", m.ai_cores, m.vector_per_core);
+    println!("  clock               : {:.1} GHz", m.clock_ghz);
+    println!("  peak FP16           : {:.1} TFLOPS", m.peak_tflops_f16());
+    println!("  HBM bandwidth       : {:.0} GB/s", m.hbm_bw);
+    println!("  L2 buffer           : {} @ {:.0} GB/s", stats::fmt_bytes(m.l2_bytes as f64), m.l2_bw);
+    println!("  per-core MTE        : {:.0} GB/s", m.mte_core_bw);
+    println!("  L1/L0A/L0B/L0C/UB   : {}/{}/{}/{}/{}",
+        stats::fmt_bytes(m.l1_bytes as f64),
+        stats::fmt_bytes(m.l0a_bytes as f64),
+        stats::fmt_bytes(m.l0b_bytes as f64),
+        stats::fmt_bytes(m.l0c_bytes as f64),
+        stats::fmt_bytes(m.ub_bytes as f64));
+    println!("  roofline ridge      : {:.0} flops/byte", roofline::ridge_point(&m));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 2048)?;
+    let k = args.get_usize("k", 7168)?;
+    let batch = args.get_usize("batch", 8)?;
+    let strategy = Strategy::from_name(args.get_or("strategy", "splitk"))?;
+    let m = machine();
+    let p = GemmProblem::new(batch, n, k);
+    let trace = kernels::schedule(&m, &p, strategy)?;
+    let r = Simulator::new(m.clone()).run(&trace)?;
+    println!("kernel {}  ({} phases)", r.name, r.phase_times.len());
+    println!("total: {}   (launch {} + barriers {})",
+        stats::fmt_ns(r.total_ns), stats::fmt_ns(r.launch_ns), stats::fmt_ns(r.barrier_ns));
+    for pt in &r.phase_times {
+        println!(
+            "  phase {:<12} [{:?}] engines={:<3} steps={:<6} hbm {:>10} l2 {:>10} compute {:>10}",
+            pt.name, pt.unit, pt.active_engines, pt.steps,
+            stats::fmt_ns(pt.hbm_ns), stats::fmt_ns(pt.l2_ns), stats::fmt_ns(pt.compute_ns)
+        );
+    }
+    for g in &r.groups {
+        println!("  group {:?}: {} (bound by {})", g.phases, stats::fmt_ns(g.total_ns), g.bound_by);
+    }
+    let point = roofline::place(&m, &r);
+    println!(
+        "achieved {:.1} TFLOPS ({:.1}% of attainable {:.1}; {})",
+        point.achieved_tflops,
+        100.0 * point.efficiency,
+        point.attainable_tflops,
+        if point.memory_bound { "memory-bound" } else { "compute-bound" }
+    );
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
+    let m = machine();
+    let cells = report::fig2_sweep(&m)?;
+    print!("{}", report::render_fig2(&cells));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report::fig2_json(&cells).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> anyhow::Result<()> {
+    let m = machine();
+    let cells = report::fig3_sweep(&m)?;
+    print!("{}", report::render_fig3(&cells));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report::fig3_json(&cells).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 2048)?;
+    let k = args.get_usize("k", 7168)?;
+    let batch = args.get_usize("batch", 8)?;
+    let m = machine();
+    let p = GemmProblem::new(batch, n, k);
+    let sim = Simulator::new(m.clone());
+    let sk = sim.run(&kernels::schedule(&m, &p, Strategy::SplitK)?)?;
+    println!("{}", report::render_bottleneck(&m, &sk));
+    let fp16 = sim.run(&kernels::schedule(&m, &p, Strategy::Fp16Native)?)?;
+    let fused = sim.run(&kernels::schedule(&m, &p, Strategy::Fused)?)?;
+    println!("cross-strategy timing at M={batch}, N={n}, K={k}:");
+    println!("  fp16 native : {}", stats::fmt_ns(fp16.total_ns));
+    println!("  w4a16 splitk: {}  ({:.2}x vs fp16)", stats::fmt_ns(sk.total_ns), fp16.total_ns / sk.total_ns);
+    println!("  fused (hypothetical direct path): {}  ({:.2}x vs fp16)",
+        stats::fmt_ns(fused.total_ns), fp16.total_ns / fused.total_ns);
+    let b = traffic::decompose(&sk);
+    println!(
+        "\nthe workspace round trip moves {} vs {} of packed weights — removing it (fused) \
+         recovers the latency headroom the paper attributes to the decoupled architecture.",
+        stats::fmt_bytes(b.round_trip_bytes),
+        stats::fmt_bytes(b.packed_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> anyhow::Result<()> {
+    let batch = args.get_usize("batch", 8)?;
+    let base = machine();
+    let scales = [0.25, 0.5, 1.0, 2.0, 4.0];
+    let knobs: Vec<sensitivity::Knob> = match args.get("knob") {
+        Some(name) => vec![sensitivity::Knob::from_name(name)?],
+        None => sensitivity::Knob::all().to_vec(),
+    };
+    println!("baseline = simulated Ascend 910; scale 1.00x rows reproduce Figures 2/3\n");
+    for knob in knobs {
+        let points = sensitivity::sweep(&base, knob, &scales, batch)?;
+        print!("{}\n", sensitivity::render(knob, &points));
+    }
+    println!("reading: the W4A16 cap tracks the L2:HBM bandwidth ratio and L2 \
+              capacity — the quantitative form of the paper's co-design call.");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 512)?;
+    let k = args.get_usize("k", 16384)?;
+    let batch = args.get_usize("batch", 8)?;
+    let strategy = Strategy::from_name(args.get_or("strategy", "splitk"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE.json is required"))?;
+    let m = machine();
+    let p = GemmProblem::new(batch, n, k);
+    let r = Simulator::new(m.clone()).run(&kernels::schedule(&m, &p, strategy)?)?;
+    std::fs::write(out, timeline::chrome_trace(&r).to_string())?;
+    println!(
+        "wrote {out} ({}; open in chrome://tracing or ui.perfetto.dev)",
+        stats::fmt_ns(r.total_ns)
+    );
+    Ok(())
+}
+
+fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let mf = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let entry = mf.find("splitk_m16_n256_k512")?;
+    let (m, n, k) = entry.gemm.unwrap();
+    let mut rng = Rng::new(42);
+    let a = MatF32::from_vec(m, k, rng.normal_vec(m * k, 0.5));
+    let w = MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.05));
+    let qw = quant::quantize_groupwise(&w, mf.group, false)?;
+    println!(
+        "quantized {}x{} weights: {} packed (4x smaller than FP16)",
+        k, n, stats::fmt_bytes(qw.packed_bytes() as f64)
+    );
+    let exe = rt.load(entry)?;
+    let t0 = std::time::Instant::now();
+    let out = exe.run(&[
+        HostTensor::F32(a.data.clone()),
+        HostTensor::I8(qw.packed.clone()),
+        HostTensor::F32(qw.scales.clone()),
+        HostTensor::F32(qw.zeros.clone()),
+    ])?;
+    let got = MatF32::from_vec(m, n, literal_to_host(&out[0])?.as_f32()?);
+    let want = quant::w4a16_reference(&a, &qw);
+    println!(
+        "executed {} in {} — max |err| vs host reference: {:.2e}",
+        entry.name,
+        stats::fmt_ns(t0.elapsed().as_nanos() as f64),
+        got.max_abs_diff(&want)
+    );
+    anyhow::ensure!(got.allclose(&want, 2e-2, 2e-2), "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny").to_string();
+    let n_requests = args.get_usize("requests", 16)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let mf = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let router = Router::new(&rt, mf, &model)?;
+    let sizes = router.batch_sizes();
+    println!("serving model '{model}' with batch sizes {sizes:?}");
+    let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
+
+    // Peek model limits from the first engine.
+    let (vocab, max_seq) = {
+        let first = *server.router.batch_sizes().first().unwrap();
+        let e = server.router.engine(first)?;
+        (e.vocab, e.max_seq)
+    };
+    let mut generator = RequestGenerator::new(seed, vocab, max_seq);
+    let t0 = std::time::Instant::now();
+    for req in generator.burst(n_requests) {
+        server.submit(req);
+    }
+    let results = server.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {} requests in {wall:.2}s", results.len());
+    print!("{}", server.metrics.snapshot().render(wall));
+    Ok(())
+}

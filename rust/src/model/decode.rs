@@ -1,0 +1,139 @@
+//! Decode engine: drives one AOT decode-step artifact (fixed batch size)
+//! with persistent KV-cache state and pre-staged weight literals.
+//!
+//! The engine owns the serving hot path: per step it builds two tiny i32
+//! literals (tokens, positions), reuses the weight literals staged at
+//! construction and the KV-cache literal produced by the previous step,
+//! and executes the compiled module.  No Python, no re-compilation, no
+//! weight re-conversion anywhere on this path.
+
+use crate::runtime::client::literal_to_host;
+use crate::runtime::{ArtifactEntry, Executable, HostTensor, Runtime};
+
+use std::sync::Arc;
+
+/// Output of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// Next token per slot (argmax over logits, computed in-graph).
+    pub next_tokens: Vec<i32>,
+}
+
+/// A decode engine bound to one (model, batch-size) artifact.
+pub struct DecodeEngine {
+    exe: Arc<Executable>,
+    /// Weight literals in artifact input order (inputs[3..]).
+    weights: Vec<xla::Literal>,
+    /// Persistent KV cache literal (output of the previous step).
+    cache: xla::Literal,
+    pub batch: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    steps_taken: usize,
+}
+
+impl DecodeEngine {
+    /// Compile the artifact and stage its weights.
+    pub fn new(rt: &Runtime, entry: &ArtifactEntry) -> anyhow::Result<DecodeEngine> {
+        anyhow::ensure!(entry.kind == "decode", "'{}' is not a decode artifact", entry.name);
+        let cfg = entry
+            .config
+            .ok_or_else(|| anyhow::anyhow!("decode artifact missing config"))?;
+        let batch = entry
+            .batch
+            .ok_or_else(|| anyhow::anyhow!("decode artifact missing batch"))?;
+        let blob = entry
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("decode artifact missing weights"))?
+            .load()?;
+        let exe = rt.load(entry)?;
+
+        let mut weights = Vec::with_capacity(entry.inputs.len() - 3);
+        for spec in &entry.inputs[3..] {
+            let raw = blob
+                .get(&spec.name)
+                .ok_or_else(|| anyhow::anyhow!("weight '{}' missing from blob", spec.name))?;
+            weights.push(HostTensor::from_bytes(spec.dtype, raw)?.to_literal(&spec.shape)?);
+        }
+        let cache_elems = cfg.layers * 2 * batch * cfg.max_seq * cfg.hidden;
+        let cache = HostTensor::F32(vec![0.0; cache_elems])
+            .to_literal(&entry.inputs[2].shape)?;
+        Ok(DecodeEngine {
+            exe,
+            weights,
+            cache,
+            batch,
+            vocab: cfg.vocab,
+            max_seq: cfg.max_seq,
+            layers: cfg.layers,
+            hidden: cfg.hidden,
+            steps_taken: 0,
+        })
+    }
+
+    /// Reset the KV cache to zeros (new decode group).
+    pub fn reset(&mut self) -> anyhow::Result<()> {
+        let elems = self.layers * 2 * self.batch * self.max_seq * self.hidden;
+        self.cache = HostTensor::F32(vec![0.0; elems]).to_literal(&[
+            self.layers,
+            2,
+            self.batch,
+            self.max_seq,
+            self.hidden,
+        ])?;
+        self.steps_taken = 0;
+        Ok(())
+    }
+
+    /// One batched decode step. `tokens`/`positions` must have `batch`
+    /// entries; idle slots should pass token 0 at their previous position.
+    pub fn step(&mut self, tokens: &[i32], positions: &[i32]) -> anyhow::Result<StepOutput> {
+        anyhow::ensure!(tokens.len() == self.batch, "expected {} tokens", self.batch);
+        anyhow::ensure!(positions.len() == self.batch, "positions arity");
+        for &p in positions {
+            anyhow::ensure!(
+                (p as usize) < self.max_seq,
+                "position {p} exceeds max_seq {}", self.max_seq
+            );
+        }
+        let tok = HostTensor::I32(tokens.to_vec()).to_literal(&[self.batch])?;
+        let pos = HostTensor::I32(positions.to_vec()).to_literal(&[self.batch])?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weights.len());
+        args.push(&tok);
+        args.push(&pos);
+        args.push(&self.cache);
+        args.extend(self.weights.iter());
+
+        let mut outs = self.exe.run_literals_ref(&args)?;
+        // outputs: (logits, next_token, kv_cache)
+        anyhow::ensure!(outs.len() == 3, "decode artifact must return 3 outputs");
+        let cache = outs.pop().unwrap();
+        let next = outs.pop().unwrap();
+        self.cache = cache;
+        self.steps_taken += 1;
+        let next_tokens = match literal_to_host(&next)? {
+            HostTensor::I32(v) => v,
+            other => anyhow::bail!("next_token dtype {:?}", other.dtype()),
+        };
+        Ok(StepOutput { next_tokens })
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.steps_taken
+    }
+
+    /// Approximate bytes of the persistent KV cache (capacity planning).
+    pub fn cache_bytes(&self) -> usize {
+        self.layers * 2 * self.batch * self.max_seq * self.hidden * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine construction requires real artifacts; covered by
+    // rust/tests/e2e.rs and rust/tests/coordinator.rs.
+}

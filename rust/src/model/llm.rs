@@ -1,0 +1,78 @@
+//! The paper's evaluation shape table (§4.1): decode-phase GEMM shapes
+//! from OpenPangu, DeepSeek-R1, GLM-4.5 and LLaMA-3.2.
+//!
+//! Rust twin of `python/compile/configs.PAPER_SHAPES`; the integration
+//! tests cross-check this table against the artifact manifest so the two
+//! sides cannot drift.
+
+/// One (model, N, K) row: weights are `K x N`, activations `M x K`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlmShape {
+    pub model: &'static str,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl LlmShape {
+    /// The paper's "K >> N" decode regime where Split-K is claimed to win.
+    pub fn k_dominant(&self) -> bool {
+        self.k >= 2 * self.n
+    }
+
+    pub fn tag(&self) -> String {
+        format!("{}-n{}-k{}", self.model, self.n, self.k)
+    }
+}
+
+/// Batch sizes (M) swept in Figures 2 and 3.
+pub const PAPER_BATCH_SIZES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// The twelve decode GEMM shapes of the evaluation sweep.
+pub fn paper_shapes() -> Vec<LlmShape> {
+    vec![
+        // LLaMA-3.2-1B: hidden 2048, ffn 8192
+        LlmShape { model: "llama32", n: 2048, k: 2048 },
+        LlmShape { model: "llama32", n: 8192, k: 2048 },
+        LlmShape { model: "llama32", n: 2048, k: 8192 },
+        // GLM-4.5 dense trunk: hidden 5120, ffn 12288
+        LlmShape { model: "glm45", n: 5120, k: 5120 },
+        LlmShape { model: "glm45", n: 12288, k: 5120 },
+        LlmShape { model: "glm45", n: 5120, k: 12288 },
+        // DeepSeek-R1: hidden 7168, expert inner 2048, kv-lora 1536
+        LlmShape { model: "deepseek", n: 7168, k: 7168 },
+        LlmShape { model: "deepseek", n: 2048, k: 7168 },
+        LlmShape { model: "deepseek", n: 7168, k: 2048 },
+        LlmShape { model: "deepseek", n: 1536, k: 7168 },
+        // OpenPangu dense: hidden 7680, low-rank projection 1536
+        LlmShape { model: "openpangu", n: 7680, k: 7680 },
+        LlmShape { model: "openpangu", n: 1536, k: 7680 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_shapes_four_models() {
+        let shapes = paper_shapes();
+        assert_eq!(shapes.len(), 12);
+        let models: std::collections::BTreeSet<_> =
+            shapes.iter().map(|s| s.model).collect();
+        assert_eq!(models.len(), 4);
+    }
+
+    #[test]
+    fn both_regimes_present() {
+        let shapes = paper_shapes();
+        assert!(shapes.iter().any(|s| s.k_dominant()));
+        assert!(shapes.iter().any(|s| !s.k_dominant()));
+    }
+
+    #[test]
+    fn group_aligned() {
+        for s in paper_shapes() {
+            assert_eq!(s.k % 128, 0, "{}", s.tag());
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-level definitions: the paper's LLM shape tables and the decode
+//! engine that drives the AOT decode-step artifacts.
+
+pub mod decode;
+pub mod llm;
+
+pub use decode::DecodeEngine;
+pub use llm::{paper_shapes, LlmShape, PAPER_BATCH_SIZES};

@@ -1,0 +1,220 @@
+//! INT4 group quantization and nibble packing — rust twin of
+//! `python/compile/quantize.py`.
+//!
+//! Storage convention (identical to the python side, asserted by the
+//! cross-language tests in `rust/tests/quant_roundtrip.rs`):
+//! * weights `W` are `K x N`, quantized group-wise along K (group `g`);
+//! * codes are unsigned nibbles `q in [0, 15]`, `w = s * (q - z)`;
+//! * two codes per byte along K: byte `b[k][n]` holds `q[2k][n]` in the low
+//!   nibble, `q[2k+1][n]` in the high nibble -> `(K/2, N)` i8.
+
+use crate::tensor::MatF32;
+
+pub const DEFAULT_GROUP: usize = 128;
+pub const QMAX: u8 = 15;
+
+/// A quantized `K x N` weight matrix (packed codes + group parameters).
+#[derive(Debug, Clone)]
+pub struct QuantizedWeight {
+    /// Nibble-packed codes, row-major `(K/2, N)`.
+    pub packed: Vec<i8>,
+    /// Per-(group, column) scales, row-major `(K/g, N)`.
+    pub scales: Vec<f32>,
+    /// Per-(group, column) zero points in code units, row-major `(K/g, N)`.
+    pub zeros: Vec<f32>,
+    pub k: usize,
+    pub n: usize,
+    pub group: usize,
+}
+
+impl QuantizedWeight {
+    pub fn groups(&self) -> usize {
+        self.k / self.group
+    }
+
+    /// Packed weight bytes (the 4x-compression denominator of §2.2).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Dequantize to a dense f32 matrix (host reference path).
+    pub fn dequantize(&self) -> MatF32 {
+        let mut out = MatF32::zeros(self.k, self.n);
+        for kk in 0..self.k {
+            let g = kk / self.group;
+            let byte_row = kk / 2;
+            let hi = kk % 2 == 1;
+            for nn in 0..self.n {
+                let byte = self.packed[byte_row * self.n + nn] as u8;
+                let q = if hi { (byte >> 4) & 0xF } else { byte & 0xF };
+                let s = self.scales[g * self.n + nn];
+                let z = self.zeros[g * self.n + nn];
+                out.set(kk, nn, s * (q as f32 - z));
+            }
+        }
+        out
+    }
+}
+
+/// Pack unsigned nibble codes `(K, N)` into `(K/2, N)` bytes.
+pub fn pack_int4(codes: &[u8], k: usize, n: usize) -> anyhow::Result<Vec<i8>> {
+    anyhow::ensure!(codes.len() == k * n, "codes length mismatch");
+    anyhow::ensure!(k % 2 == 0, "K must be even for nibble packing");
+    anyhow::ensure!(codes.iter().all(|&q| q <= QMAX), "nibble out of range");
+    let mut out = vec![0i8; k / 2 * n];
+    for kk in (0..k).step_by(2) {
+        for nn in 0..n {
+            let lo = codes[kk * n + nn];
+            let hi = codes[(kk + 1) * n + nn];
+            out[(kk / 2) * n + nn] = ((hi << 4) | lo) as i8;
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack `(K/2, N)` bytes back to `(K, N)` nibble codes.
+pub fn unpack_int4(packed: &[i8], k: usize, n: usize) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(packed.len() * 2 == k * n, "packed length mismatch");
+    let mut out = vec![0u8; k * n];
+    for row in 0..k / 2 {
+        for nn in 0..n {
+            let byte = packed[row * n + nn] as u8;
+            out[(2 * row) * n + nn] = byte & 0xF;
+            out[(2 * row + 1) * n + nn] = (byte >> 4) & 0xF;
+        }
+    }
+    Ok(out)
+}
+
+/// Group-wise INT4 quantization of a `K x N` f32 matrix.
+///
+/// `symmetric=true` pins the zero point at mid-code 8 with a max-|w| scale;
+/// otherwise a min/max affine fit per group is used (degenerate constant
+/// groups fall back to the symmetric form so constants stay representable).
+pub fn quantize_groupwise(
+    w: &MatF32,
+    group: usize,
+    symmetric: bool,
+) -> anyhow::Result<QuantizedWeight> {
+    let (k, n) = (w.rows, w.cols);
+    anyhow::ensure!(k % group == 0, "K={k} not divisible by group={group}");
+    anyhow::ensure!(k % 2 == 0, "K={k} must be even");
+    let groups = k / group;
+    let mut scales = vec![0f32; groups * n];
+    let mut zeros = vec![0f32; groups * n];
+    let mut codes = vec![0u8; k * n];
+
+    for g in 0..groups {
+        for nn in 0..n {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for kk in g * group..(g + 1) * group {
+                let v = w.at(kk, nn);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let (s, z) = if symmetric || hi == lo {
+                let amax = lo.abs().max(hi.abs());
+                (if amax == 0.0 { 1.0 } else { amax / 7.0 }, 8.0)
+            } else {
+                let s = (hi - lo) / QMAX as f32;
+                (s, (-lo / s).round().clamp(0.0, QMAX as f32))
+            };
+            scales[g * n + nn] = s;
+            zeros[g * n + nn] = z;
+            for kk in g * group..(g + 1) * group {
+                let q = (w.at(kk, nn) / s + z).round().clamp(0.0, QMAX as f32);
+                codes[kk * n + nn] = q as u8;
+            }
+        }
+    }
+
+    Ok(QuantizedWeight {
+        packed: pack_int4(&codes, k, n)?,
+        scales,
+        zeros,
+        k,
+        n,
+        group,
+    })
+}
+
+/// W4A16 host reference: dequantize then f16-rounded GEMM with f32 accumulate.
+/// This is what every artifact's output is compared against.
+pub fn w4a16_reference(a: &MatF32, qw: &QuantizedWeight) -> MatF32 {
+    let b = qw.dequantize();
+    // Weights pass through f16 in the kernel (workspace dtype).
+    a.matmul_f16acc(&b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_mat(k: usize, n: usize, seed: u64) -> MatF32 {
+        let mut rng = Rng::new(seed);
+        MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.05))
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..256u32).map(|i| (i % 16) as u8).collect();
+        let packed = pack_int4(&codes, 16, 16).unwrap();
+        assert_eq!(unpack_int4(&packed, 16, 16).unwrap(), codes);
+    }
+
+    #[test]
+    fn pack_layout_matches_python() {
+        // q[0]=1 (low), q[1]=2 (high) -> byte 0x21
+        let packed = pack_int4(&[1, 2], 2, 1).unwrap();
+        assert_eq!(packed[0], 0x21);
+        // codes >= 8 set the sign bit; must still round-trip
+        let packed = pack_int4(&[15, 15], 2, 1).unwrap();
+        assert_eq!(packed[0] as u8, 0xFF);
+        assert_eq!(unpack_int4(&packed, 2, 1).unwrap(), vec![15, 15]);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        let w = random_mat(256, 16, 3);
+        let qw = quantize_groupwise(&w, 128, false).unwrap();
+        let back = qw.dequantize();
+        for kk in 0..256 {
+            for nn in 0..16 {
+                let s = qw.scales[(kk / 128) * 16 + nn];
+                assert!(
+                    (w.at(kk, nn) - back.at(kk, nn)).abs() <= s * 0.5 + 1e-6,
+                    "({kk},{nn})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_zero_is_mid_code() {
+        let w = random_mat(128, 8, 5);
+        let qw = quantize_groupwise(&w, 128, true).unwrap();
+        assert!(qw.zeros.iter().all(|&z| z == 8.0));
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        let w = MatF32::from_vec(128, 2, vec![0.25; 256]);
+        let qw = quantize_groupwise(&w, 128, false).unwrap();
+        let back = qw.dequantize();
+        assert!(back.data.iter().all(|&v| (v - 0.25).abs() < 1e-6));
+    }
+
+    #[test]
+    fn compression_is_4x_vs_fp16() {
+        let qw = quantize_groupwise(&random_mat(512, 64, 7), 128, false).unwrap();
+        assert_eq!(qw.packed_bytes() * 4, 512 * 64 * 2);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(quantize_groupwise(&MatF32::zeros(100, 4), 128, false).is_err());
+        assert!(pack_int4(&[16, 0], 2, 1).is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! Artifact manifest: the build-time contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            dtype: DType::from_name(j.req_str("dtype")?)?,
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape")))
+                .collect::<Result<_, _>>()?,
+        })
+    }
+}
+
+/// One tensor inside a weight blob.
+#[derive(Debug, Clone)]
+pub struct WeightRecord {
+    pub spec: TensorSpec,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// A weight blob: raw bytes + per-tensor index.
+#[derive(Debug, Clone)]
+pub struct WeightBlob {
+    pub path: PathBuf,
+    pub records: Vec<WeightRecord>,
+    pub total_bytes: usize,
+}
+
+impl WeightBlob {
+    fn from_json(dir: &Path, j: &Json) -> anyhow::Result<WeightBlob> {
+        let records = j
+            .req_arr("tensors")?
+            .iter()
+            .map(|t| {
+                Ok(WeightRecord {
+                    spec: TensorSpec::from_json(t)?,
+                    offset: t.req_usize("offset")?,
+                    nbytes: t.req_usize("nbytes")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(WeightBlob {
+            path: dir.join(j.req_str("path")?),
+            records,
+            total_bytes: j.req_usize("total_bytes")?,
+        })
+    }
+
+    /// Read the blob and split it into per-tensor byte vectors by name.
+    pub fn load(&self) -> anyhow::Result<BTreeMap<String, Vec<u8>>> {
+        let raw = std::fs::read(&self.path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", self.path.display()))?;
+        anyhow::ensure!(
+            raw.len() == self.total_bytes,
+            "weight blob {} has {} bytes, manifest says {}",
+            self.path.display(),
+            raw.len(),
+            self.total_bytes
+        );
+        let mut out = BTreeMap::new();
+        for rec in &self.records {
+            anyhow::ensure!(rec.offset + rec.nbytes <= raw.len(), "record out of range");
+            anyhow::ensure!(
+                rec.nbytes == rec.spec.bytes(),
+                "record {} size mismatch", rec.spec.name
+            );
+            out.insert(
+                rec.spec.name.clone(),
+                raw[rec.offset..rec.offset + rec.nbytes].to_vec(),
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Decode-model geometry recorded in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub group: usize,
+    pub params: usize,
+}
+
+impl DecodeConfig {
+    fn from_json(j: &Json) -> anyhow::Result<DecodeConfig> {
+        Ok(DecodeConfig {
+            vocab: j.req_usize("vocab")?,
+            hidden: j.req_usize("hidden")?,
+            layers: j.req_usize("layers")?,
+            heads: j.req_usize("heads")?,
+            ffn: j.req_usize("ffn")?,
+            max_seq: j.req_usize("max_seq")?,
+            group: j.req_usize("group")?,
+            params: j.req_usize("params")?,
+        })
+    }
+}
+
+/// One AOT artifact (a compiled HLO module plus its I/O contract).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub hlo_path: PathBuf,
+    pub strategy: Option<String>,
+    pub gemm: Option<(usize, usize, usize)>, // (m, n, k)
+    pub splits: usize,
+    pub batch: Option<usize>,
+    pub model: Option<String>,
+    pub config: Option<DecodeConfig>,
+    pub weights: Option<WeightBlob>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// The paper's (model, N, K) sweep table (kept in sync with python).
+    pub paper_shapes: Vec<(String, usize, usize)>,
+    pub batch_sizes: Vec<usize>,
+    pub group: usize,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {}/manifest.json (run `make artifacts` first): {e}",
+                dir.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            let gemm = match (a.get("m"), a.get("n"), a.get("k")) {
+                (Some(m), Some(n), Some(k)) => Some((
+                    m.as_usize().unwrap_or(0),
+                    n.as_usize().unwrap_or(0),
+                    k.as_usize().unwrap_or(0),
+                )),
+                _ => None,
+            };
+            artifacts.push(ArtifactEntry {
+                name: a.req_str("name")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                hlo_path: dir.join(a.req_str("path")?),
+                strategy: a.get("strategy").and_then(|s| s.as_str()).map(String::from),
+                gemm,
+                splits: a.get("splits").and_then(|s| s.as_usize()).unwrap_or(1),
+                batch: a.get("batch").and_then(|s| s.as_usize()),
+                model: a.get("model").and_then(|s| s.as_str()).map(String::from),
+                config: match a.get("config") {
+                    Some(c) => Some(DecodeConfig::from_json(c)?),
+                    None => None,
+                },
+                weights: match a.get("weights") {
+                    Some(w) => Some(WeightBlob::from_json(&dir, w)?),
+                    None => None,
+                },
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_, _>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_, _>>()?,
+            });
+        }
+        let paper_shapes = j
+            .req_arr("paper_shapes")?
+            .iter()
+            .map(|s| {
+                Ok((
+                    s.req_str("model")?.to_string(),
+                    s.req_usize("n")?,
+                    s.req_usize("k")?,
+                ))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let batch_sizes = j
+            .req_arr("batch_sizes")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        Ok(Manifest {
+            dir,
+            artifacts,
+            paper_shapes,
+            batch_sizes,
+            group: j.req_usize("group")?,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// All GEMM artifacts of one strategy.
+    pub fn gemms(&self, strategy: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "gemm" && a.strategy.as_deref() == Some(strategy))
+            .collect()
+    }
+
+    /// Decode artifact for (model, batch).
+    pub fn decode(&self, model: &str, batch: usize) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == "decode"
+                    && a.model.as_deref() == Some(model)
+                    && a.batch == Some(batch)
+            })
+            .ok_or_else(|| anyhow::anyhow!("no decode artifact for {model} b={batch}"))
+    }
+
+    /// Batch sizes available for a decode model, ascending.
+    pub fn decode_batches(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode" && a.model.as_deref() == Some(model))
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REPO_ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(REPO_ARTIFACTS).join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(REPO_ARTIFACTS).unwrap();
+        assert_eq!(m.group, 128);
+        assert!(m.artifacts.len() >= 16);
+        assert_eq!(m.paper_shapes.len(), 12);
+        // every strategy present
+        for s in ["splitk", "dp", "fused", "fp16"] {
+            assert!(!m.gemms(s).is_empty(), "missing {s} artifacts");
+        }
+    }
+
+    #[test]
+    fn gemm_artifact_contract() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(REPO_ARTIFACTS).unwrap();
+        let a = m.find("splitk_m16_n256_k512").unwrap();
+        assert_eq!(a.gemm, Some((16, 256, 512)));
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].dtype, DType::I8);
+        assert_eq!(a.inputs[1].shape, vec![256, 256]);
+        assert_eq!(a.outputs[0].shape, vec![16, 256]);
+        assert!(a.hlo_path.exists());
+    }
+
+    #[test]
+    fn decode_artifact_and_weights() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(REPO_ARTIFACTS).unwrap();
+        let a = m.decode("tiny", 1).unwrap();
+        let cfg = a.config.unwrap();
+        assert_eq!(cfg.layers, 2);
+        let weights = a.weights.as_ref().unwrap().load().unwrap();
+        assert!(weights.contains_key("embed"));
+        assert!(weights.contains_key("layer0.qkv.packed"));
+        // decode inputs: 3 io + all params
+        assert_eq!(a.inputs.len(), 3 + weights.len());
+        assert_eq!(m.decode_batches("tiny"), vec![1, 4]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(REPO_ARTIFACTS).unwrap();
+        assert!(m.find("nope").is_err());
+        assert!(m.decode("tiny", 999).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! PJRT client wrapper: compile HLO text, move typed host tensors across
+//! the boundary, cache compiled executables.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::tensor::DType;
+use crate::util::f16;
+
+use super::artifacts::{ArtifactEntry, TensorSpec};
+
+/// A typed host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    /// Raw little-endian f16 payloads (the host treats them as opaque).
+    F16Bytes(Vec<u8>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I8(_) => DType::I8,
+            HostTensor::I32(_) => DType::I32,
+            HostTensor::F16Bytes(_) => DType::F16,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I8(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::F16Bytes(v) => v.len() / 2,
+        }
+    }
+
+    fn bytes(&self) -> Vec<u8> {
+        match self {
+            HostTensor::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            HostTensor::I8(v) => v.iter().map(|&x| x as u8).collect(),
+            HostTensor::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            HostTensor::F16Bytes(v) => v.clone(),
+        }
+    }
+
+    fn element_type(&self) -> xla::ElementType {
+        match self {
+            HostTensor::F32(_) => xla::ElementType::F32,
+            HostTensor::I8(_) => xla::ElementType::S8,
+            HostTensor::I32(_) => xla::ElementType::S32,
+            HostTensor::F16Bytes(_) => xla::ElementType::F16,
+        }
+    }
+
+    /// Convert into a PJRT literal of the given shape.
+    pub fn to_literal(&self, shape: &[usize]) -> anyhow::Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            n == self.elements(),
+            "shape {shape:?} has {n} elements, tensor has {}",
+            self.elements()
+        );
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.element_type(),
+            shape,
+            &self.bytes(),
+        )
+        .map_err(|e| anyhow::anyhow!("literal creation failed: {e}"))
+    }
+
+    /// Build from raw bytes + a manifest spec (weight blobs).
+    pub fn from_bytes(dtype: DType, raw: &[u8]) -> anyhow::Result<HostTensor> {
+        Ok(match dtype {
+            DType::F32 => HostTensor::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I8 => HostTensor::I8(raw.iter().map(|&b| b as i8).collect()),
+            DType::I32 => HostTensor::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::F16 => HostTensor::F16Bytes(raw.to_vec()),
+        })
+    }
+
+    /// View as f32s (converting f16 payloads; errors on integer tensors).
+    pub fn as_f32(&self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v.clone()),
+            HostTensor::F16Bytes(v) => Ok(f16::f16_bytes_to_f32_vec(v)),
+            other => anyhow::bail!("tensor is {:?}, not float", other.dtype()),
+        }
+    }
+}
+
+/// Read a literal back into a typed host tensor.
+pub fn literal_to_host(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+    use xla::ElementType as E;
+    Ok(match lit.ty()? {
+        E::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        E::S8 => HostTensor::I8(lit.to_vec::<i8>()?),
+        E::S32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        E::F16 => {
+            // No native f16 host type: copy raw u16 payloads.
+            let n = lit.element_count();
+            let mut buf = vec![0u16; n];
+            lit.copy_raw_to::<u16>(&mut buf)
+                .map_err(|e| anyhow::anyhow!("raw f16 copy: {e}"))?;
+            HostTensor::F16Bytes(buf.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    })
+}
+
+/// A compiled artifact bound to its I/O contract.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns decomposed output literals.
+    pub fn run(&self, args: &[HostTensor]) -> anyhow::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.inputs.len(),
+            "{}: got {} args, artifact expects {}",
+            self.name,
+            args.len(),
+            self.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.inputs) {
+            anyhow::ensure!(
+                arg.dtype() == spec.dtype,
+                "{}: input '{}' expects {:?}, got {:?}",
+                self.name, spec.name, spec.dtype, arg.dtype()
+            );
+            literals.push(arg.to_literal(&spec.shape)?);
+        }
+        self.run_literals(&literals)
+    }
+
+    /// Execute with prepared literals (hot path: no host conversion).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow::anyhow!("{}: execute failed: {e}", self.name))?;
+        Self::unwrap_tuple(&self.name, result)
+    }
+
+    /// Execute with borrowed literals — avoids cloning staged weights on
+    /// the serving hot path.
+    pub fn run_literals_ref(
+        &self,
+        literals: &[&xla::Literal],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(literals)
+            .map_err(|e| anyhow::anyhow!("{}: execute failed: {e}", self.name))?;
+        Self::unwrap_tuple(&self.name, result)
+    }
+
+    fn unwrap_tuple(
+        name: &str,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name}: readback failed: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: tuple decompose failed: {e}"))
+    }
+}
+
+/// The PJRT runtime: one CPU client + a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile HLO text from a file (uncached).
+    pub fn compile_file(
+        &self,
+        name: &str,
+        path: &Path,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<TensorSpec>,
+    ) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        Ok(Executable { name: name.to_string(), inputs, outputs, exe })
+    }
+
+    /// Compile a manifest artifact, with caching by name.
+    pub fn load(&self, entry: &ArtifactEntry) -> anyhow::Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(&entry.name) {
+            return Ok(hit.clone());
+        }
+        let exe = std::sync::Arc::new(self.compile_file(
+            &entry.name,
+            &entry.hlo_path,
+            entry.inputs.clone(),
+            entry.outputs.clone(),
+        )?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of cached executables (metrics).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_round_trips_bytes() {
+        let t = HostTensor::F32(vec![1.0, -2.5]);
+        let b = t.bytes();
+        let back = HostTensor::from_bytes(DType::F32, &b).unwrap();
+        assert_eq!(back.as_f32().unwrap(), vec![1.0, -2.5]);
+    }
+
+    #[test]
+    fn i8_preserves_sign_bits() {
+        let t = HostTensor::I8(vec![-1, 0x21]);
+        let b = t.bytes();
+        assert_eq!(b, vec![0xFF, 0x21]);
+        match HostTensor::from_bytes(DType::I8, &b).unwrap() {
+            HostTensor::I8(v) => assert_eq!(v, vec![-1, 0x21]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn f16_payloads_convert() {
+        let raw = crate::util::f16::f32_slice_to_f16_bytes(&[0.5, -1.0]);
+        let t = HostTensor::from_bytes(DType::F16, &raw).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![0.5, -1.0]);
+        assert_eq!(t.elements(), 2);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        let t = HostTensor::F32(vec![1.0; 6]);
+        assert!(t.to_literal(&[2, 2]).is_err());
+        assert!(t.to_literal(&[2, 3]).is_ok());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (lowered from
+//! JAX + Pallas at build time) and executes them on the request path.
+//!
+//! Python never runs here.  The interchange format is HLO *text*
+//! (`artifacts/*.hlo.txt`): jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects, while the text parser
+//! reassigns ids cleanly (see `python/compile/aot.py`).
+//!
+//! * [`artifacts`] — manifest parsing (`artifacts/manifest.json`) and
+//!   weight-blob loading.
+//! * [`client`] — `PjRtClient` wrapper: compile HLO text, typed host
+//!   tensors <-> literals, executable cache.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, Manifest, TensorSpec, WeightBlob};
+pub use client::{Executable, HostTensor, Runtime};

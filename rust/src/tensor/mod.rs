@@ -1,0 +1,154 @@
+//! Minimal host tensor: row-major, typed, with the comparisons the runtime
+//! tests need.  This is deliberately small — the heavy numerics run inside
+//! the AOT-compiled XLA executables; the host only prepares inputs and
+//! checks outputs.
+
+use crate::util::f16;
+
+/// Element type of a host tensor / artifact parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    /// Parse the manifest's dtype name.
+    pub fn from_name(name: &str) -> anyhow::Result<DType> {
+        Ok(match name {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "i8" => DType::I8,
+            "i32" => DType::I32,
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        })
+    }
+}
+
+/// Row-major f32 host matrix (the lingua franca of the host side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF32 {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> MatF32 {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Dense f32 GEMM (reference for artifact-output checks; not a hot path).
+    pub fn matmul(&self, rhs: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, rhs.rows, "inner dimension mismatch");
+        let mut out = MatF32::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// GEMM with cube-core semantics: inputs rounded to f16, f32 accumulate.
+    pub fn matmul_f16acc(&self, rhs: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, rhs.rows, "inner dimension mismatch");
+        let a16: Vec<f32> = self.data.iter().map(|&x| f16::round_to_f16(x)).collect();
+        let b16: Vec<f32> = rhs.data.iter().map(|&x| f16::round_to_f16(x)).collect();
+        let a = MatF32::from_vec(self.rows, self.cols, a16);
+        let b = MatF32::from_vec(rhs.rows, rhs.cols, b16);
+        a.matmul(&b)
+    }
+
+    /// Max |a - b| over all elements (panics on shape mismatch).
+    pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative error check with a mixed abs/rel tolerance.
+    pub fn allclose(&self, other: &MatF32, rtol: f32, atol: f32) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = MatF32::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = MatF32::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&b), a);
+        let c = a.matmul(&a);
+        assert_eq!(c.data, vec![7.0, 10.0, 15.0, 22.0]);
+    }
+
+    #[test]
+    fn f16acc_rounds_inputs() {
+        // 1 + 2^-12 is not representable in f16 -> rounds to 1.0 before GEMM
+        let a = MatF32::from_vec(1, 1, vec![1.0 + 2.0f32.powi(-12)]);
+        let b = MatF32::from_vec(1, 1, vec![1.0]);
+        assert_eq!(a.matmul_f16acc(&b).data, vec![1.0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = MatF32::from_vec(1, 2, vec![1.0, 100.0]);
+        let b = MatF32::from_vec(1, 2, vec![1.001, 100.1]);
+        assert!(a.allclose(&b, 2e-3, 1e-6));
+        assert!(!a.allclose(&b, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::from_name("i8").unwrap(), DType::I8);
+        assert!(DType::from_name("bf16").is_err());
+    }
+}

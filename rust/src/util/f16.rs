@@ -1,0 +1,153 @@
+//! IEEE 754 binary16 <-> binary32 conversion.
+//!
+//! The W4A16 pipeline keeps activations and dequantized weights in FP16;
+//! the rust side needs bit-exact conversions to prepare PJRT literals and
+//! to check artifact outputs against host references.
+
+/// Convert an f32 to its IEEE binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: preserve a quiet-NaN payload bit if any mantissa bit set.
+        let nan = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | nan;
+    }
+    // Re-bias: f32 exp-127 == f16 exp-15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal range: keep top 10 mantissa bits, round to nearest even.
+        let mant16 = mant >> 13;
+        let rest = mant & 0x1FFF;
+        let mut h = sign | (((unbiased + 15) as u16) << 10) | mant16 as u16;
+        if rest > 0x1000 || (rest == 0x1000 && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent: still correct
+        }
+        return h;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: shift mantissa (with implicit 1) into place.
+        let full = mant | 0x80_0000;
+        let shift = (-unbiased - 14 + 13) as u32;
+        let mant16 = (full >> shift) as u16;
+        let rest = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | mant16;
+        if rest > half || (rest == half && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert an IEEE binary16 bit pattern to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize by shifting until
+            // the implicit bit (0x400) is set; the exponent drops per shift.
+            let mut shifts = 0u32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                shifts += 1;
+            }
+            m &= 0x3FF;
+            sign | ((113 - shifts) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (quantize-to-f16 then widen).
+pub fn round_to_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Convert a slice of f32 to packed little-endian f16 bytes (PJRT literal payload).
+pub fn f32_slice_to_f16_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Convert packed little-endian f16 bytes back to f32s.
+pub fn f16_bytes_to_f32_vec(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // overflow -> inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+    }
+
+    #[test]
+    fn round_trip_exact_for_f16_values() {
+        for h in 0..=0xFFFFu16 {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(f), h, "bits 0x{h:04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals() {
+        let smallest = f16_bits_to_f32(0x0001);
+        assert!((smallest - 5.960_464_5e-8).abs() < 1e-12);
+        assert_eq!(f32_to_f16_bits(smallest), 0x0001);
+    }
+
+    #[test]
+    fn rounding_nearest_even() {
+        // 1.0 + 2^-11 is exactly between 1.0 and the next f16; ties-to-even -> 1.0
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+        // slightly above the midpoint rounds up
+        let y = 1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20);
+        assert_eq!(f32_to_f16_bits(y), 0x3C01);
+    }
+
+    #[test]
+    fn byte_helpers() {
+        let xs = [0.5f32, -1.25, 100.0];
+        let bytes = f32_slice_to_f16_bytes(&xs);
+        assert_eq!(bytes.len(), 6);
+        let back = f16_bytes_to_f32_vec(&bytes);
+        assert_eq!(back, vec![0.5, -1.25, 100.0]);
+    }
+}

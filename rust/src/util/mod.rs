@@ -1,0 +1,14 @@
+//! Offline-environment substrates: JSON, CLI parsing, IEEE half-precision
+//! conversion, PRNG, statistics and a miniature property-testing kit.
+//!
+//! The build image has no network access and only the `xla` crate's
+//! dependency closure cached, so the usual suspects (serde_json, clap,
+//! half, rand, proptest, criterion) are reimplemented here at the size
+//! this project actually needs.
+
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

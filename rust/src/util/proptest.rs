@@ -1,0 +1,66 @@
+//! Miniature property-testing kit (proptest is unavailable offline).
+//!
+//! `forall` runs a property over many PRNG-generated cases; failures report
+//! the case index and seed so they can be replayed exactly:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath in this image)
+//! use ascend_w4a16::util::proptest::forall;
+//! forall("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.next_u64() as u32, rng.next_u64() as u32);
+//!     let ok = a.wrapping_add(b) == b.wrapping_add(a);
+//!     (ok, format!("a={a} b={b}"))
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Base seed; override with `PROPTEST_SEED` to replay a failing run.
+fn base_seed() -> u64 {
+    std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5CE_4D91)
+}
+
+/// Run `prop` against `cases` generated inputs.  The property returns
+/// `(holds, description)`; on failure, panics with the replay seed.
+pub fn forall<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> (bool, String),
+{
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let (ok, desc) = prop(&mut rng);
+        assert!(
+            ok,
+            "property '{name}' failed on case {case} (PROPTEST_SEED={seed}): {desc}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, |_| {
+            count += 1;
+            (true, String::new())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("fails", 10, |rng| {
+            let x = rng.usize_range(0, 9);
+            (x < 5, format!("x={x}"))
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! Workload generators for benches, examples and tests.
+
+use crate::coordinator::DecodeRequest;
+use crate::kernels::GemmProblem;
+use crate::model::llm::{paper_shapes, LlmShape, PAPER_BATCH_SIZES};
+use crate::util::prng::Rng;
+
+/// The full Figure 2/3 sweep: every paper shape x every batch size.
+pub fn paper_sweep() -> Vec<(LlmShape, usize)> {
+    let mut out = Vec::new();
+    for shape in paper_shapes() {
+        for &batch in &PAPER_BATCH_SIZES {
+            out.push((shape, batch));
+        }
+    }
+    out
+}
+
+/// GEMM problem for one sweep cell.
+pub fn problem_for(shape: &LlmShape, batch: usize) -> GemmProblem {
+    GemmProblem::new(batch, shape.n, shape.k)
+}
+
+/// Synthetic decode request stream with geometric-ish prompt lengths.
+pub struct RequestGenerator {
+    rng: Rng,
+    vocab: usize,
+    max_seq: usize,
+    next_id: u64,
+}
+
+impl RequestGenerator {
+    pub fn new(seed: u64, vocab: usize, max_seq: usize) -> RequestGenerator {
+        RequestGenerator { rng: Rng::new(seed), vocab, max_seq, next_id: 0 }
+    }
+
+    /// One request: prompt length in [2, max_seq/4], budget in [4, max_seq/2],
+    /// clamped so prompt + budget fits the cache.
+    pub fn next_request(&mut self) -> DecodeRequest {
+        let prompt_len = self.rng.usize_range(2, (self.max_seq / 4).max(2));
+        let budget_cap = (self.max_seq - prompt_len).saturating_sub(1).max(1);
+        let budget = self.rng.usize_range(4.min(budget_cap), (self.max_seq / 2).min(budget_cap));
+        let prompt = (0..prompt_len)
+            .map(|_| self.rng.usize_range(1, self.vocab - 1) as i32)
+            .collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        DecodeRequest::new(id, prompt, budget)
+    }
+
+    /// A batch of requests.
+    pub fn burst(&mut self, count: usize) -> Vec<DecodeRequest> {
+        (0..count).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_cells() {
+        let sweep = paper_sweep();
+        assert_eq!(sweep.len(), 12 * 7);
+    }
+
+    #[test]
+    fn generated_requests_validate() {
+        let mut g = RequestGenerator::new(3, 512, 32);
+        for _ in 0..200 {
+            let r = g.next_request();
+            r.validate(512, 32).unwrap();
+        }
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut g = RequestGenerator::new(5, 512, 32);
+        let ids: std::collections::BTreeSet<u64> =
+            g.burst(50).iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 50);
+    }
+}

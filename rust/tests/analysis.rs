@@ -1,0 +1,122 @@
+//! Analysis-layer integration: the §4.2 decomposition and the figure
+//! renderers over real simulated kernels.
+
+use ascend_w4a16::analysis::{report, roofline, traffic};
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::util::json::Json;
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+fn simulate(p: &GemmProblem, s: Strategy) -> ascend_w4a16::ascend::SimReport {
+    let m = machine();
+    Simulator::new(m.clone())
+        .run(&kernels::schedule(&m, p, s).unwrap())
+        .unwrap()
+}
+
+#[test]
+fn fig2_sweep_produces_all_cells_and_summary_bands() {
+    let cells = report::fig2_sweep(&machine()).unwrap();
+    assert_eq!(cells.len(), 12 * 7);
+    // Headline: Split-K wins in the K>>N regime.
+    let kd: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.k >= 2 * c.n)
+        .map(|c| c.speedup())
+        .collect();
+    assert!(!kd.is_empty());
+    let geomean = ascend_w4a16::util::stats::geomean(&kd);
+    assert!(
+        (1.05..2.2).contains(&geomean),
+        "K>>N geomean speedup {geomean:.2} outside plausible band"
+    );
+    let max = kd.iter().cloned().fold(0.0f64, f64::max);
+    assert!(max >= 1.3, "no strong Split-K win found (max {max:.2})");
+}
+
+#[test]
+fn fig3_sweep_reproduces_the_cap() {
+    let cells = report::fig3_sweep(&machine()).unwrap();
+    assert_eq!(cells.len(), 12 * 7);
+    let max = cells.iter().map(|c| c.speedup()).fold(0.0f64, f64::max);
+    // Paper: at most ~1.48x; our simulator must stay well below 4x and
+    // above 1.2x at the best shape.
+    assert!((1.2..2.2).contains(&max), "max W4A16 speedup {max:.2}");
+    // And some oversized-workspace shapes must lose (spill regime).
+    let min = cells.iter().map(|c| c.speedup()).fold(f64::INFINITY, f64::min);
+    assert!(min < 1.0, "spill regime should drop below 1x (min {min:.2})");
+}
+
+#[test]
+fn bottleneck_is_transfer_not_cast_across_the_sweep() {
+    // §4.2's claim, verified over every K>>N shape.
+    let m = machine();
+    for shape in ascend_w4a16::model::llm::paper_shapes() {
+        let p = GemmProblem::new(8, shape.n, shape.k);
+        let r = simulate(&p, Strategy::SplitK);
+        let b = traffic::decompose(&r);
+        assert!(
+            b.transfer_bound,
+            "{}: cast {} vs transfer {}",
+            shape.tag(),
+            b.cast_compute_ns,
+            b.transfer_ns
+        );
+    }
+}
+
+#[test]
+fn round_trip_ratio_is_8x_packed() {
+    let r = simulate(&GemmProblem::new(8, 2048, 7168), Strategy::SplitK);
+    let b = traffic::decompose(&r);
+    assert!((b.round_trip_ratio - 8.0).abs() < 0.5, "{}", b.round_trip_ratio);
+}
+
+#[test]
+fn roofline_efficiency_reasonable_for_all_strategies() {
+    let m = machine();
+    let p = GemmProblem::new(8, 2048, 7168);
+    for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+        let r = simulate(&p, s);
+        let pt = roofline::place(&m, &r);
+        assert!(pt.memory_bound, "{s:?} should be memory-bound at decode shapes");
+        assert!(
+            (0.2..=1.0).contains(&pt.efficiency),
+            "{s:?} efficiency {}",
+            pt.efficiency
+        );
+    }
+}
+
+#[test]
+fn renderers_emit_paper_comparisons() {
+    let m = machine();
+    let fig2 = report::render_fig2(&report::fig2_sweep(&m).unwrap());
+    assert!(fig2.contains("paper: 1.01x-1.74x"));
+    let fig3 = report::render_fig3(&report::fig3_sweep(&m).unwrap());
+    assert!(fig3.contains("at most 1.48x"));
+}
+
+#[test]
+fn json_outputs_parse_and_cover_sweep() {
+    let m = machine();
+    let j = report::fig3_json(&report::fig3_sweep(&m).unwrap()).to_string();
+    let parsed = Json::parse(&j).unwrap();
+    assert_eq!(parsed.as_arr().unwrap().len(), 84);
+    let first = &parsed.as_arr().unwrap()[0];
+    assert!(first.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn fused_ceiling_approaches_4x_when_l2_resident() {
+    let m = machine();
+    let r = simulate(&GemmProblem::new(8, 2048, 7168), Strategy::SplitK);
+    let ceiling = traffic::theoretical_speedup_ceiling(&m, &r);
+    // With the workspace resident in L2, almost no HBM round trip remains:
+    // the *traffic* ceiling approaches 4x even though the *time* cap is
+    // ~1.5x (L2 bandwidth is finite) — exactly the paper's distinction.
+    assert!(ceiling > 3.0, "ceiling {ceiling}");
+}

@@ -1,0 +1,112 @@
+//! Coordinator integration: the serving stack against the real tiny decode
+//! artifact (requires `make artifacts`; skips politely otherwise).
+
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest, Router, Server};
+use ascend_w4a16::runtime::{Manifest, Runtime};
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn setup(rt: &Runtime) -> Option<Server<'_>> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let mf = Manifest::load(ARTIFACTS).unwrap();
+    let router = Router::new(rt, mf, "tiny").unwrap();
+    let sizes = router.batch_sizes();
+    Some(Server::new(router, Batcher::new(BatchPolicy::new(sizes).unwrap())))
+}
+
+#[test]
+fn serves_a_single_request() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![5, 9, 17], 6));
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.id, 1);
+    assert_eq!(r.tokens.len(), 6);
+    assert!(r.tokens.iter().all(|&t| t >= 0 && t < 512));
+    assert!(r.ttft_s >= 0.0 && r.total_s >= r.ttft_s);
+}
+
+#[test]
+fn decoding_is_deterministic_across_groups() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![7, 3], 5));
+    let a = server.drain().unwrap();
+    server.submit(DecodeRequest::new(2, vec![7, 3], 5));
+    let b = server.drain().unwrap();
+    assert_eq!(a[0].tokens, b[0].tokens, "same prompt must yield same tokens");
+}
+
+#[test]
+fn batched_group_matches_solo_decoding() {
+    // Group members must not contaminate each other: decoding a prompt in
+    // a padded batch-4 group yields the same tokens as decoding it alone.
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![11, 22, 33], 5));
+    let solo = server.drain().unwrap();
+
+    for (id, prompt) in [(10u64, vec![11, 22, 33]), (11, vec![100, 200]), (12, vec![42])] {
+        server.submit(DecodeRequest::new(id, prompt, 5));
+    }
+    let grouped = server.drain().unwrap();
+    let in_group = grouped.iter().find(|r| r.id == 10).unwrap();
+    assert_eq!(in_group.tokens, solo[0].tokens);
+}
+
+#[test]
+fn mixed_lengths_complete_and_respect_budgets() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![1], 2));
+    server.submit(DecodeRequest::new(2, vec![2, 3, 4, 5], 8));
+    server.submit(DecodeRequest::new(3, vec![6, 7], 1));
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 3);
+    let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(by_id(1).tokens.len(), 2);
+    assert_eq!(by_id(2).tokens.len(), 8);
+    assert_eq!(by_id(3).tokens.len(), 1);
+}
+
+#[test]
+fn invalid_requests_surface_errors() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    // token outside the tiny model's 512 vocab
+    server.submit(DecodeRequest::new(1, vec![100000], 2));
+    assert!(server.drain().is_err());
+}
+
+#[test]
+fn metrics_track_groups_and_padding() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![5], 3));
+    server.submit(DecodeRequest::new(2, vec![6], 3));
+    server.submit(DecodeRequest::new(3, vec![7], 3));
+    let _ = server.drain().unwrap();
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_completed, 3);
+    assert!(snap.groups_formed >= 1);
+    // 3 requests into batch-4 artifact -> at least one padded slot.
+    assert!(snap.padded_slots >= 1);
+    assert_eq!(snap.tokens_generated, 9);
+}
+
+#[test]
+fn router_caches_engines_per_batch_size() {
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![1], 1));
+    let _ = server.drain().unwrap();
+    let first = server.router.engines_built();
+    server.submit(DecodeRequest::new(2, vec![2], 1));
+    let _ = server.drain().unwrap();
+    assert_eq!(server.router.engines_built(), first, "engine must be reused");
+}

@@ -1,0 +1,91 @@
+//! Full-stack end-to-end test: the ~100M-parameter decode model served
+//! through the coordinator, plus engine-level decode semantics.
+//! (Requires `make artifacts`; skips politely otherwise.)
+
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
+use ascend_w4a16::model::DecodeEngine;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::workload::RequestGenerator;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn manifest() -> Option<Manifest> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(ARTIFACTS).unwrap())
+}
+
+#[test]
+fn tiny_engine_multi_step_decode_advances_state() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut engine = DecodeEngine::new(&rt, mf.decode("tiny", 1).unwrap()).unwrap();
+    let mut token = 3i32;
+    let mut produced = Vec::new();
+    for pos in 0..6 {
+        let out = engine.step(&[token], &[pos]).unwrap();
+        token = out.next_tokens[0];
+        produced.push(token);
+    }
+    assert_eq!(engine.steps_taken(), 6);
+    assert!(produced.iter().all(|&t| t >= 0 && (t as usize) < engine.vocab));
+    // A non-trivial model should not emit a constant stream.
+    assert!(produced.windows(2).any(|w| w[0] != w[1]), "{produced:?}");
+}
+
+#[test]
+fn engine_reset_restores_initial_behaviour() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut engine = DecodeEngine::new(&rt, mf.decode("tiny", 1).unwrap()).unwrap();
+    let a = engine.step(&[9], &[0]).unwrap().next_tokens.clone();
+    engine.step(&[a[0]], &[1]).unwrap();
+    engine.reset().unwrap();
+    let b = engine.step(&[9], &[0]).unwrap().next_tokens.clone();
+    assert_eq!(a, b, "reset must clear the KV cache");
+}
+
+#[test]
+fn engine_rejects_bad_arity_and_positions() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut engine = DecodeEngine::new(&rt, mf.decode("tiny", 4).unwrap()).unwrap();
+    assert!(engine.step(&[1], &[0]).is_err(), "arity");
+    let max = engine.max_seq as i32;
+    assert!(engine.step(&[1, 1, 1, 1], &[max, 0, 0, 0]).is_err(), "position bound");
+}
+
+/// The headline E2E: serve batched requests against the ~100M model and
+/// verify the serving stack end to end.  One group of batch<=2 keeps the
+/// CPU wallclock reasonable.
+#[test]
+fn small100m_serves_batched_requests() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let router = Router::new(&rt, mf, "small100m").unwrap();
+    let sizes: Vec<usize> = router.batch_sizes().into_iter().filter(|&b| b <= 2).collect();
+    assert!(!sizes.is_empty());
+    let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes).unwrap()));
+
+    let (vocab, max_seq) = {
+        let e = server.router.engine(1).unwrap();
+        assert!(e.hidden == 768 && e.layers == 12, "100M geometry");
+        (e.vocab, e.max_seq)
+    };
+    let mut generator = RequestGenerator::new(11, vocab, max_seq.min(24));
+    for mut req in generator.burst(2) {
+        req.max_new_tokens = req.max_new_tokens.min(4);
+        server.submit(req);
+    }
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.iter().all(|&t| t >= 0 && (t as usize) < vocab));
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_completed, 2);
+    assert!(snap.steps_executed > 0);
+}

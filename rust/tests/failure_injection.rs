@@ -1,0 +1,151 @@
+//! Failure injection: corrupt manifests, truncated weight blobs, malformed
+//! HLO — every boundary the runtime trusts must fail loudly, not silently.
+
+use std::io::Write;
+
+use ascend_w4a16::runtime::{Manifest, Runtime};
+
+fn write_file(dir: &std::path::Path, name: &str, content: &str) {
+    let mut f = std::fs::File::create(dir.join(name)).unwrap();
+    f.write_all(content.as_bytes()).unwrap();
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-fi-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const MINIMAL_MANIFEST: &str = r#"{
+  "version": 1,
+  "artifacts": [
+    {
+      "name": "gemm_a", "kind": "gemm", "path": "gemm_a.hlo.txt",
+      "strategy": "splitk", "m": 4, "n": 8, "k": 16, "group": 128, "splits": 1,
+      "inputs": [{"name": "a", "dtype": "f32", "shape": [4, 16]}],
+      "outputs": [{"name": "c", "dtype": "f32", "shape": [4, 8]}]
+    }
+  ],
+  "paper_shapes": [{"model": "x", "n": 8, "k": 16}],
+  "batch_sizes": [1],
+  "group": 128
+}"#;
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let dir = tmpdir("nomanifest");
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn malformed_json_reports_position() {
+    let dir = tmpdir("badjson");
+    write_file(&dir, "manifest.json", "{\"version\": 1, \"artifacts\": [");
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("json parse error"), "{err}");
+}
+
+#[test]
+fn missing_required_key_is_named() {
+    let dir = tmpdir("nokey");
+    write_file(
+        &dir,
+        "manifest.json",
+        r#"{"version": 1, "artifacts": [{"kind": "gemm"}], "paper_shapes": [], "batch_sizes": [], "group": 128}"#,
+    );
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("'name'"), "{err}");
+}
+
+#[test]
+fn unknown_dtype_rejected() {
+    let dir = tmpdir("baddtype");
+    write_file(
+        &dir,
+        "manifest.json",
+        &MINIMAL_MANIFEST.replace("\"dtype\": \"f32\", \"shape\": [4, 16]",
+                                   "\"dtype\": \"bf8\", \"shape\": [4, 16]"),
+    );
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("bf8"), "{err}");
+}
+
+#[test]
+fn truncated_weight_blob_detected() {
+    let dir = tmpdir("shortblob");
+    let manifest = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "d", "kind": "decode", "path": "d.hlo.txt", "model": "t", "batch": 1,
+          "config": {"vocab": 8, "hidden": 8, "layers": 1, "heads": 1, "ffn": 8,
+                     "max_seq": 4, "group": 128, "params": 64},
+          "weights": {"path": "d_weights.bin", "total_bytes": 256, "tensors": [
+            {"name": "w", "dtype": "f32", "shape": [8, 8], "offset": 0, "nbytes": 256}
+          ]},
+          "inputs": [], "outputs": []
+        }
+      ],
+      "paper_shapes": [], "batch_sizes": [1], "group": 128
+    }"#;
+    write_file(&dir, "manifest.json", manifest);
+    std::fs::write(dir.join("d_weights.bin"), vec![0u8; 100]).unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let err = mf.artifacts[0]
+        .weights
+        .as_ref()
+        .unwrap()
+        .load()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("256"), "{err}");
+}
+
+#[test]
+fn record_size_mismatch_detected() {
+    let dir = tmpdir("badrecord");
+    let manifest = r#"{
+      "version": 1,
+      "artifacts": [
+        {
+          "name": "d", "kind": "decode", "path": "d.hlo.txt", "model": "t", "batch": 1,
+          "weights": {"path": "d_weights.bin", "total_bytes": 100, "tensors": [
+            {"name": "w", "dtype": "f32", "shape": [8, 8], "offset": 0, "nbytes": 100}
+          ]},
+          "inputs": [], "outputs": []
+        }
+      ],
+      "paper_shapes": [], "batch_sizes": [1], "group": 128
+    }"#;
+    write_file(&dir, "manifest.json", manifest);
+    std::fs::write(dir.join("d_weights.bin"), vec![0u8; 100]).unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    // nbytes (100) != 8*8*4 (256): must be rejected.
+    let err = mf.artifacts[0].weights.as_ref().unwrap().load().unwrap_err().to_string();
+    assert!(err.contains("size mismatch"), "{err}");
+}
+
+#[test]
+fn garbage_hlo_fails_at_compile_not_execute() {
+    let dir = tmpdir("badhlo");
+    write_file(&dir, "manifest.json", MINIMAL_MANIFEST);
+    write_file(&dir, "gemm_a.hlo.txt", "this is not an HLO module");
+    let mf = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    assert!(rt.load(mf.find("gemm_a").unwrap()).is_err());
+}
+
+#[test]
+fn missing_hlo_file_is_a_clean_error() {
+    let dir = tmpdir("nohlo");
+    write_file(&dir, "manifest.json", MINIMAL_MANIFEST);
+    let mf = Manifest::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let err = match rt.load(mf.find("gemm_a").unwrap()) {
+        Ok(_) => panic!("loading a missing HLO file must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("gemm_a.hlo.txt"), "{err}");
+}

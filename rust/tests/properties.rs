@@ -1,0 +1,130 @@
+//! Cross-cutting property tests on coordinator invariants (routing,
+//! batching, request state) — the proptest deliverable for L3.
+
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::util::proptest::forall;
+
+#[test]
+fn batcher_never_loses_or_duplicates_requests() {
+    forall("batcher conservation", 60, |rng| {
+        let sizes: Vec<usize> = match rng.usize_range(0, 2) {
+            0 => vec![1, 2, 4],
+            1 => vec![1, 2, 4, 8],
+            _ => vec![4],
+        };
+        let mut b = Batcher::new(BatchPolicy::new(sizes).unwrap());
+        let n = rng.usize_range(1, 40);
+        for id in 0..n as u64 {
+            b.push(DecodeRequest::new(id, vec![1, 2], 4));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        while let Some(g) = b.form_group(true) {
+            if g.occupancy() == 0 || g.occupancy() > g.batch {
+                return (false, format!("bad group occupancy {}", g.occupancy()));
+            }
+            for m in &g.members {
+                if !seen.insert(m.id) {
+                    return (false, format!("duplicate id {}", m.id));
+                }
+            }
+        }
+        (seen.len() == n, format!("saw {} of {n}", seen.len()))
+    });
+}
+
+#[test]
+fn batcher_groups_fit_available_sizes() {
+    forall("group size legal", 60, |rng| {
+        let sizes = vec![1, 2, 4, 8];
+        let mut b = Batcher::new(BatchPolicy::new(sizes.clone()).unwrap());
+        let n = rng.usize_range(1, 30);
+        for id in 0..n as u64 {
+            b.push(DecodeRequest::new(id, vec![1], 2));
+        }
+        while let Some(g) = b.form_group(true) {
+            if !sizes.contains(&g.batch) {
+                return (false, format!("illegal batch {}", g.batch));
+            }
+            if g.occupancy() > g.batch {
+                return (false, "overfull".into());
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn request_validation_total_order() {
+    forall("validation is consistent", 60, |rng| {
+        let prompt_len = rng.usize_range(1, 20);
+        let budget = rng.usize_range(1, 20);
+        let max_seq = rng.usize_range(4, 40);
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.usize_range(0, 255) as i32).collect();
+        let r = DecodeRequest::new(0, prompt, budget);
+        let valid = r.validate(256, max_seq).is_ok();
+        let expected = prompt_len + budget <= max_seq;
+        (valid == expected, format!("len={prompt_len} budget={budget} max={max_seq}"))
+    });
+}
+
+#[test]
+fn tiling_validates_for_random_legal_problems() {
+    let m = MachineConfig::ascend910();
+    forall("tiler total", 60, |rng| {
+        let n = 16 * rng.usize_range(1, 512);
+        let k = 128 * rng.usize_range(1, 128);
+        let batch = rng.usize_range(1, 64);
+        let p = GemmProblem::new(batch, n, k);
+        match kernels::tiling::select_splitk(&m, &p) {
+            Ok(t) => (t.validate(&m, &p).is_ok(), format!("n={n} k={k}")),
+            Err(e) => (false, format!("n={n} k={k}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn simulated_time_strictly_positive_and_finite() {
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    forall("finite time", 40, |rng| {
+        let n = 16 * rng.usize_range(1, 256);
+        let k = 128 * rng.usize_range(1, 64);
+        let p = GemmProblem::new(rng.usize_range(1, 64), n, k);
+        let strategy = *rng.choose(&[
+            Strategy::SplitK,
+            Strategy::DataParallel,
+            Strategy::Fp16Native,
+            Strategy::Fused,
+        ]);
+        match kernels::schedule(&m, &p, strategy).and_then(|t| sim.run(&t)) {
+            Ok(r) => (
+                r.total_ns.is_finite() && r.total_ns > 0.0,
+                format!("n={n} k={k} {strategy:?} t={}", r.total_ns),
+            ),
+            Err(e) => (false, format!("n={n} k={k} {strategy:?}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn splitk_time_monotone_in_problem_size() {
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    forall("monotone in K", 30, |rng| {
+        let n = 16 * rng.usize_range(4, 128);
+        let kg = rng.usize_range(1, 32);
+        let p1 = GemmProblem::new(8, n, 128 * kg);
+        let p2 = GemmProblem::new(8, n, 128 * (kg + rng.usize_range(1, 32)));
+        let t1 = sim
+            .run(&kernels::schedule(&m, &p1, Strategy::SplitK).unwrap())
+            .unwrap()
+            .total_ns;
+        let t2 = sim
+            .run(&kernels::schedule(&m, &p2, Strategy::SplitK).unwrap())
+            .unwrap()
+            .total_ns;
+        (t2 >= t1 * 0.999, format!("n={n} k1={} k2={}", p1.k, p2.k))
+    });
+}

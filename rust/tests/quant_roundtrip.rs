@@ -1,0 +1,109 @@
+//! Cross-language quantization contract: the rust quantizer must agree
+//! with the python one bit-for-bit on packing layout and within rounding
+//! on values.  The python side's conventions are frozen in the manifest
+//! artifacts, so these tests also guard the rust<->artifact boundary.
+
+use ascend_w4a16::quant::{self, QuantizedWeight};
+use ascend_w4a16::tensor::MatF32;
+use ascend_w4a16::util::prng::Rng;
+use ascend_w4a16::util::proptest::forall;
+
+fn random_weight(k: usize, n: usize, seed: u64) -> MatF32 {
+    let mut rng = Rng::new(seed);
+    MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.05))
+}
+
+#[test]
+fn packing_layout_matches_python_convention() {
+    // python: byte = (q[2k+1] << 4) | q[2k]; int8 storage.
+    let codes: Vec<u8> = vec![0x3, 0xA, 0xF, 0x0];
+    let packed = quant::pack_int4(&codes, 4, 1).unwrap();
+    assert_eq!(packed, vec![(0xA << 4 | 0x3) as i8, 0x0F]);
+}
+
+#[test]
+fn dequantize_reconstructs_within_half_step_property() {
+    forall("quant error bound", 40, |rng| {
+        let kg = rng.usize_range(1, 4);
+        let n = rng.usize_range(1, 24);
+        let k = kg * 128;
+        let w = random_weight(k, n, rng.next_u64());
+        let qw = quant::quantize_groupwise(&w, 128, false).unwrap();
+        let back = qw.dequantize();
+        for kk in 0..k {
+            for nn in 0..n {
+                let s = qw.scales[(kk / 128) * n + nn];
+                if (w.at(kk, nn) - back.at(kk, nn)).abs() > s * 0.5 + 1e-6 {
+                    return (false, format!("k={kk} n={nn}"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn symmetric_roundtrip_error_property() {
+    forall("symmetric quant bound", 40, |rng| {
+        let k = 128 * rng.usize_range(1, 3);
+        let n = rng.usize_range(1, 16);
+        let w = random_weight(k, n, rng.next_u64());
+        let qw = quant::quantize_groupwise(&w, 128, true).unwrap();
+        let back = qw.dequantize();
+        for kk in 0..k {
+            for nn in 0..n {
+                let s = qw.scales[(kk / 128) * n + nn];
+                // symmetric clamps at code 0: allow a full step
+                if (w.at(kk, nn) - back.at(kk, nn)).abs() > s * 1.0 + 1e-6 {
+                    return (false, format!("k={kk} n={nn}"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn w4a16_reference_is_close_to_full_precision() {
+    let a = random_weight(16, 256, 1); // reuse as activations
+    let w = random_weight(256, 64, 2);
+    let qw = quant::quantize_groupwise(&w, 128, false).unwrap();
+    let quantized = quant::w4a16_reference(&a, &qw);
+    let full = a.matmul(&w);
+    // 4-bit weights: expect small but nonzero degradation.
+    let diff = quantized.max_abs_diff(&full);
+    assert!(diff > 0.0, "quantization should not be exact on random data");
+    assert!(diff < 0.5, "quantization error too large: {diff}");
+}
+
+#[test]
+fn compression_ratio_is_exactly_4x() {
+    forall("4x compression", 20, |rng| {
+        let k = 128 * rng.usize_range(1, 6);
+        let n = 16 * rng.usize_range(1, 8);
+        let qw = quant::quantize_groupwise(&random_weight(k, n, rng.next_u64()), 128, false)
+            .unwrap();
+        (qw.packed_bytes() * 4 == k * n * 2, format!("k={k} n={n}"))
+    });
+}
+
+#[test]
+fn unpack_is_left_inverse_of_pack_property() {
+    forall("pack/unpack", 60, |rng| {
+        let k = 2 * rng.usize_range(1, 64);
+        let n = rng.usize_range(1, 32);
+        let codes: Vec<u8> = (0..k * n).map(|_| (rng.next_u64() % 16) as u8).collect();
+        let packed = quant::pack_int4(&codes, k, n).unwrap();
+        let back = quant::unpack_int4(&packed, k, n).unwrap();
+        (back == codes, format!("k={k} n={n}"))
+    });
+}
+
+#[test]
+fn quantized_weight_accessors() {
+    let qw: QuantizedWeight =
+        quant::quantize_groupwise(&random_weight(256, 8, 3), 128, false).unwrap();
+    assert_eq!(qw.groups(), 2);
+    assert_eq!(qw.packed.len(), 128 * 8);
+    assert_eq!(qw.scales.len(), 2 * 8);
+}

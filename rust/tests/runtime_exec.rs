@@ -1,0 +1,170 @@
+//! Integration: load real AOT artifacts through PJRT and validate the
+//! numerics against the rust host reference (quantize -> dequantize ->
+//! f16-rounded GEMM).  This is the end-to-end proof that the three layers
+//! (Pallas kernel, JAX graph, rust runtime) compose.
+//!
+//! Requires `make artifacts` (skips itself politely otherwise).
+
+use ascend_w4a16::quant;
+use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
+use ascend_w4a16::runtime::client::literal_to_host;
+use ascend_w4a16::tensor::MatF32;
+use ascend_w4a16::util::prng::Rng;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn manifest() -> Option<Manifest> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(ARTIFACTS).expect("manifest parses"))
+}
+
+/// Build a random quantized GEMM case matching an artifact's (m, n, k).
+fn gemm_case(m: usize, n: usize, k: usize, seed: u64) -> (MatF32, quant::QuantizedWeight) {
+    let mut rng = Rng::new(seed);
+    let a = MatF32::from_vec(m, k, rng.normal_vec(m * k, 0.5));
+    let w = MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.05));
+    let qw = quant::quantize_groupwise(&w, 128, false).unwrap();
+    (a, qw)
+}
+
+fn run_w4a16_artifact(rt: &Runtime, mf: &Manifest, name: &str) -> (MatF32, MatF32) {
+    let entry = mf.find(name).unwrap();
+    let (m, n, k) = entry.gemm.unwrap();
+    let (a, qw) = gemm_case(m, n, k, 7);
+    let exe = rt.load(entry).unwrap();
+    let out = exe
+        .run(&[
+            HostTensor::F32(a.data.clone()),
+            HostTensor::I8(qw.packed.clone()),
+            HostTensor::F32(qw.scales.clone()),
+            HostTensor::F32(qw.zeros.clone()),
+        ])
+        .unwrap();
+    let got = MatF32::from_vec(
+        m,
+        n,
+        literal_to_host(&out[0]).unwrap().as_f32().unwrap(),
+    );
+    let want = quant::w4a16_reference(&a, &qw);
+    (got, want)
+}
+
+#[test]
+fn splitk_artifact_matches_reference() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (got, want) = run_w4a16_artifact(&rt, &mf, "splitk_m16_n256_k512");
+    assert!(
+        got.allclose(&want, 2e-2, 2e-2),
+        "max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn dp_and_fused_agree_with_splitk() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (sk, want) = run_w4a16_artifact(&rt, &mf, "splitk_m16_n256_k512");
+    let (dp, _) = run_w4a16_artifact(&rt, &mf, "dp_m16_n256_k512");
+    let (fu, _) = run_w4a16_artifact(&rt, &mf, "fused_m16_n256_k512");
+    assert!(dp.allclose(&want, 2e-2, 2e-2));
+    assert!(fu.allclose(&want, 2e-2, 2e-2));
+    // Strategies are numerically interchangeable (schedule-only change).
+    assert!(sk.allclose(&dp, 1e-2, 1e-2));
+    assert!(sk.allclose(&fu, 1e-2, 1e-2));
+}
+
+#[test]
+fn fp16_artifact_matches_host_gemm() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = mf.find("fp16_m16_n256_k512").unwrap();
+    let (m, n, k) = entry.gemm.unwrap();
+    let mut rng = Rng::new(11);
+    let a = MatF32::from_vec(m, k, rng.normal_vec(m * k, 0.5));
+    let b = MatF32::from_vec(k, n, rng.normal_vec(k * n, 0.1));
+    let exe = rt.load(entry).unwrap();
+    let out = exe
+        .run(&[HostTensor::F32(a.data.clone()), HostTensor::F32(b.data.clone())])
+        .unwrap();
+    let got = MatF32::from_vec(m, n, literal_to_host(&out[0]).unwrap().as_f32().unwrap());
+    let want = a.matmul_f16acc(&b);
+    assert!(got.allclose(&want, 2e-2, 2e-2), "max diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn larger_shape_splitk() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let (got, want) = run_w4a16_artifact(&rt, &mf, "splitk_m16_n512_k2048");
+    assert!(got.allclose(&want, 3e-2, 3e-2), "max diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn executable_cache_dedups() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = mf.find("fp16_m16_n256_k512").unwrap();
+    let a = rt.load(entry).unwrap();
+    let b = rt.load(entry).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn wrong_arity_and_dtype_rejected() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = mf.find("fp16_m16_n256_k512").unwrap();
+    let exe = rt.load(entry).unwrap();
+    assert!(exe.run(&[HostTensor::F32(vec![0.0; 16 * 512])]).is_err());
+    assert!(exe
+        .run(&[
+            HostTensor::I8(vec![0; 16 * 512]),
+            HostTensor::F32(vec![0.0; 512 * 256]),
+        ])
+        .is_err());
+}
+
+#[test]
+fn tiny_decode_step_executes() {
+    let Some(mf) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = mf.decode("tiny", 1).unwrap();
+    let cfg = entry.config.unwrap();
+    let weights = entry.weights.as_ref().unwrap().load().unwrap();
+    let exe = rt.load(entry).unwrap();
+
+    // Input order: token_ids, positions, kv_cache, then params sorted by name.
+    let mut args = vec![
+        HostTensor::I32(vec![5]),
+        HostTensor::I32(vec![0]),
+        HostTensor::F32(vec![0.0; cfg.layers * 2 * cfg.max_seq * cfg.hidden]),
+    ];
+    for spec in &entry.inputs[3..] {
+        let raw = weights.get(&spec.name).expect("weight present");
+        args.push(HostTensor::from_bytes(spec.dtype, raw).unwrap());
+    }
+    let out = exe.run(&args).unwrap();
+    assert_eq!(out.len(), 3);
+    let logits = literal_to_host(&out[0]).unwrap().as_f32().unwrap();
+    assert_eq!(logits.len(), cfg.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    let next = match literal_to_host(&out[1]).unwrap() {
+        HostTensor::I32(v) => v,
+        other => panic!("next_token dtype {:?}", other.dtype()),
+    };
+    assert!(next[0] >= 0 && (next[0] as usize) < cfg.vocab);
+    // argmax(logits) must equal next_token
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax as i32, next[0]);
+}

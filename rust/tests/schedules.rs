@@ -1,0 +1,163 @@
+//! Schedule-level integration tests: the paper's headline behaviours as
+//! executable assertions, across the whole shape table.
+
+use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator, Unit};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::model::llm::{paper_shapes, PAPER_BATCH_SIZES};
+use ascend_w4a16::util::proptest::forall;
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+#[test]
+fn every_sweep_cell_schedules_and_simulates() {
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    for shape in paper_shapes() {
+        for &batch in &PAPER_BATCH_SIZES {
+            let p = GemmProblem::new(batch, shape.n, shape.k);
+            for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+                let trace = kernels::schedule(&m, &p, s)
+                    .unwrap_or_else(|e| panic!("{} M={batch} {:?}: {e}", shape.tag(), s));
+                let r = sim
+                    .run(&trace)
+                    .unwrap_or_else(|e| panic!("{} M={batch} {:?}: {e}", shape.tag(), s));
+                assert!(r.total_ns > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_conservation_across_strategies_property() {
+    // Every strategy must schedule exactly the padded problem's MACs.
+    let m = machine();
+    forall("macs conserved", 30, |rng| {
+        let shape = paper_shapes()[rng.usize_range(0, 11)];
+        let batch = PAPER_BATCH_SIZES[rng.usize_range(0, 6)];
+        let p = GemmProblem::new(batch, shape.n, shape.k);
+        let want = p.macs(&m);
+        for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+            let t = kernels::schedule(&m, &p, s).unwrap();
+            if t.total_macs() != want {
+                return (
+                    false,
+                    format!("{} M={batch} {:?}: {} != {want}", shape.tag(), s, t.total_macs()),
+                );
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn splitk_wins_in_k_dominant_regime() {
+    // Paper §4.1: Split-K outperforms DP when K >> N (band 1.01x-1.74x).
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    for shape in paper_shapes().iter().filter(|s| s.k_dominant()) {
+        let p = GemmProblem::new(8, shape.n, shape.k);
+        let sk = sim.run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap()).unwrap();
+        let dp = sim.run(&kernels::schedule(&m, &p, Strategy::DataParallel).unwrap()).unwrap();
+        let speedup = dp.total_ns / sk.total_ns;
+        assert!(
+            speedup >= 0.95,
+            "{}: Split-K lost badly ({speedup:.3}x)",
+            shape.tag()
+        );
+    }
+}
+
+#[test]
+fn w4a16_speedup_capped_well_below_4x() {
+    // Paper §4.2: max ~1.48x, never approaching the theoretical 4x.
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    let mut max_speedup: f64 = 0.0;
+    for shape in paper_shapes() {
+        for &batch in &[1usize, 8, 64] {
+            let p = GemmProblem::new(batch, shape.n, shape.k);
+            let sk = sim.run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap()).unwrap();
+            let fp = sim.run(&kernels::schedule(&m, &p, Strategy::Fp16Native).unwrap()).unwrap();
+            max_speedup = max_speedup.max(fp.total_ns / sk.total_ns);
+        }
+    }
+    assert!(max_speedup < 2.5, "max speedup {max_speedup:.2}x too close to 4x");
+    assert!(max_speedup > 1.2, "W4A16 never wins at all ({max_speedup:.2}x)");
+}
+
+#[test]
+fn execution_time_flat_in_m_below_cube_tile() {
+    // Paper: the cube core pads small batches to its tile, so M in
+    // {1..16} costs the same.
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    for strategy in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native] {
+        let times: Vec<f64> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&batch| {
+                let p = GemmProblem::new(batch, 2048, 7168);
+                sim.run(&kernels::schedule(&m, &p, strategy).unwrap()).unwrap().total_ns
+            })
+            .collect();
+        for w in times.windows(2) {
+            assert!(
+                (w[0] - w[1]).abs() / w[0] < 0.01,
+                "{strategy:?}: {times:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dequant_always_on_vector_mmad_always_on_cube() {
+    // The architectural constraint the paper is built around.
+    let m = machine();
+    for shape in paper_shapes().iter().take(4) {
+        let p = GemmProblem::new(8, shape.n, shape.k);
+        for s in [Strategy::SplitK, Strategy::DataParallel] {
+            let t = kernels::schedule(&m, &p, s).unwrap();
+            for phase in &t.phases {
+                match phase.name {
+                    "dequant" | "reduce" => assert_eq!(phase.unit, Unit::Vector),
+                    _ => assert_eq!(phase.unit, Unit::Cube, "phase {}", phase.name),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn workspace_traffic_only_for_w4a16_strategies() {
+    let m = machine();
+    let p = GemmProblem::new(8, 2048, 7168);
+    let ws_bytes = |s: Strategy| {
+        let t = kernels::schedule(&m, &p, s).unwrap();
+        t.phases
+            .iter()
+            .map(|ph| ph.read_bytes(BufferClass::Workspace) + ph.write_bytes(BufferClass::Workspace))
+            .sum::<u64>()
+    };
+    assert!(ws_bytes(Strategy::SplitK) > 0);
+    assert!(ws_bytes(Strategy::DataParallel) > 0);
+    assert_eq!(ws_bytes(Strategy::Fp16Native), 0);
+    assert_eq!(ws_bytes(Strategy::Fused), 0);
+}
+
+#[test]
+fn fused_strictly_dominates_splitk_property() {
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    forall("fused < splitk", 20, |rng| {
+        let shape = paper_shapes()[rng.usize_range(0, 11)];
+        let batch = PAPER_BATCH_SIZES[rng.usize_range(0, 6)];
+        let p = GemmProblem::new(batch, shape.n, shape.k);
+        let sk = sim.run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap()).unwrap();
+        let fu = sim.run(&kernels::schedule(&m, &p, Strategy::Fused).unwrap()).unwrap();
+        (
+            fu.total_ns <= sk.total_ns,
+            format!("{} M={batch}: fused {} vs sk {}", shape.tag(), fu.total_ns, sk.total_ns),
+        )
+    });
+}

@@ -1,0 +1,166 @@
+//! Simulator integration tests: physical sanity of the timing model
+//! (monotonicity, conservation, calibration anchors).
+
+use ascend_w4a16::ascend::{
+    BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, Simulator, TileStep, Unit,
+};
+use ascend_w4a16::util::proptest::forall;
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+fn phase(unit: Unit, engines: usize, steps: Vec<TileStep>) -> Phase {
+    Phase {
+        name: "t",
+        unit,
+        steps_per_engine: vec![steps; engines],
+        pipelined_with_prev: false,
+    }
+}
+
+fn trace(phases: Vec<Phase>, ws: u64, partial: u64) -> KernelTrace {
+    KernelTrace { name: "t".into(), phases, workspace_bytes: ws, partial_bytes: partial }
+}
+
+#[test]
+fn time_monotone_in_bytes_property() {
+    let sim = Simulator::new(machine());
+    forall("more bytes, more time", 50, |rng| {
+        let b1 = rng.usize_range(1_000, 1_000_000) as u64;
+        let b2 = b1 + rng.usize_range(1, 1_000_000) as u64;
+        let mk = |b: u64| {
+            trace(
+                vec![phase(
+                    Unit::Cube,
+                    8,
+                    vec![TileStep::new(ComputeOp::Nop).read(BufferClass::WeightF16, b)],
+                )],
+                0,
+                0,
+            )
+        };
+        let t1 = sim.run(&mk(b1)).unwrap().total_ns;
+        let t2 = sim.run(&mk(b2)).unwrap().total_ns;
+        (t2 >= t1, format!("b1={b1} b2={b2} t1={t1} t2={t2}"))
+    });
+}
+
+#[test]
+fn time_monotone_in_compute_property() {
+    let sim = Simulator::new(machine());
+    forall("more macs, more time", 50, |rng| {
+        let k1 = 16 * rng.usize_range(1, 64);
+        let k2 = k1 + 16 * rng.usize_range(1, 64);
+        let mk = |k: usize| {
+            trace(
+                vec![phase(
+                    Unit::Cube,
+                    4,
+                    vec![TileStep::new(ComputeOp::Mmad { m: 16, n: 256, k })],
+                )],
+                0,
+                0,
+            )
+        };
+        let t1 = sim.run(&mk(k1)).unwrap().total_ns;
+        let t2 = sim.run(&mk(k2)).unwrap().total_ns;
+        (t2 >= t1, format!("k1={k1} k2={k2}"))
+    });
+}
+
+#[test]
+fn ledger_conserves_bytes_property() {
+    let sim = Simulator::new(machine());
+    forall("ledger conservation", 40, |rng| {
+        // multiple of 8 so the per-engine division below is exact
+        let ws_bytes = (rng.usize_range(1 << 10, 1 << 26) as u64 / 8) * 8;
+        let t = trace(
+            vec![
+                phase(
+                    Unit::Vector,
+                    8,
+                    vec![TileStep::new(ComputeOp::Nop).write(BufferClass::Workspace, ws_bytes / 8)],
+                ),
+                phase(
+                    Unit::Cube,
+                    8,
+                    vec![TileStep::new(ComputeOp::Nop).read(BufferClass::Workspace, ws_bytes / 8)],
+                ),
+            ],
+            ws_bytes,
+            0,
+        );
+        let r = sim.run(&t).unwrap();
+        let ws = r.ledger.class(BufferClass::Workspace);
+        // reads: l2 + hbm must equal the bytes requested
+        let read_total = ws.l2_read + ws.hbm_read;
+        let ok = (read_total - ws_bytes as f64).abs() < 1.0
+            && (ws.l2_write - ws_bytes as f64).abs() < 1.0;
+        (ok, format!("ws={ws_bytes} read={read_total}"))
+    });
+}
+
+#[test]
+fn hbm_utilization_never_exceeds_one() {
+    let sim = Simulator::new(machine());
+    forall("hbm util <= 1", 40, |rng| {
+        let bytes = rng.usize_range(1 << 16, 1 << 27) as u64;
+        let engines = rng.usize_range(1, 32);
+        let t = trace(
+            vec![phase(
+                Unit::Cube,
+                engines,
+                vec![TileStep::new(ComputeOp::Nop).read(BufferClass::WeightF16, bytes / engines as u64)],
+            )],
+            0,
+            0,
+        );
+        let r = sim.run(&t).unwrap();
+        let util = r.hbm_utilization(&machine());
+        (util <= 1.0 + 1e-9, format!("util={util}"))
+    });
+}
+
+#[test]
+fn calibration_anchor_fp16_gemm_time() {
+    // 2 * K * N bytes over 1.2 TB/s for (M=8, N=2048, K=7168) ~ 24.5 µs
+    // of pure weight streaming; total with launch + fill must sit within
+    // [24.5, 33] µs. This anchors Figure 3's baseline.
+    use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+    let m = machine();
+    let p = GemmProblem::new(8, 2048, 7168);
+    let r = Simulator::new(m.clone())
+        .run(&kernels::schedule(&m, &p, Strategy::Fp16Native).unwrap())
+        .unwrap();
+    let us = r.total_ns / 1e3;
+    assert!((24.5..33.0).contains(&us), "fp16 native = {us} µs");
+}
+
+#[test]
+fn empty_trace_rejected() {
+    let sim = Simulator::new(machine());
+    assert!(sim.run(&trace(vec![], 0, 0)).is_err());
+}
+
+#[test]
+fn barrier_cost_scales_with_group_count() {
+    let sim = Simulator::new(machine());
+    let step = TileStep::new(ComputeOp::Nop).read(BufferClass::Activation, 1024);
+    let two_groups = trace(
+        vec![phase(Unit::Vector, 1, vec![step]), phase(Unit::Cube, 1, vec![step])],
+        0,
+        0,
+    );
+    let mut pipelined = two_groups.clone();
+    pipelined.phases[1].pipelined_with_prev = true;
+    let r2 = sim.run(&two_groups).unwrap();
+    let r1 = sim.run(&pipelined).unwrap();
+    assert_eq!(r2.barrier_ns, machine().barrier_ns);
+    assert_eq!(r1.barrier_ns, 0.0);
+}
+
+#[test]
+fn machine_validation_wired_into_cli_configs() {
+    machine().validate().unwrap();
+}

@@ -1,0 +1,98 @@
+//! Integration tests over the util substrates (JSON/CLI/f16/PRNG/stats)
+//! plus property tests with the mini-proptest kit.
+
+use ascend_w4a16::util::f16;
+use ascend_w4a16::util::json::Json;
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::util::stats::{geomean, Summary};
+
+#[test]
+fn json_parses_manifest_like_document() {
+    let doc = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "a", "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 3]}]}
+        ],
+        "batch_sizes": [1, 2, 4],
+        "group": 128
+    }"#;
+    let j = Json::parse(doc).unwrap();
+    assert_eq!(j.req_usize("group").unwrap(), 128);
+    let arts = j.req_arr("artifacts").unwrap();
+    assert_eq!(arts[0].req_str("name").unwrap(), "a");
+    let spec = &arts[0].req_arr("inputs").unwrap()[0];
+    assert_eq!(spec.req_arr("shape").unwrap().len(), 2);
+}
+
+#[test]
+fn json_serialization_is_reparseable_property() {
+    forall("json round trip", 100, |rng| {
+        // build a random small document
+        let mut pairs = Vec::new();
+        let n = rng.usize_range(0, 5);
+        for i in 0..n {
+            let v = match rng.usize_range(0, 3) {
+                0 => Json::num(rng.f64() * 1000.0 - 500.0),
+                1 => Json::str(format!("value-{}\"quoted\"", rng.next_u64() % 100)),
+                2 => Json::Bool(rng.next_u64() % 2 == 0),
+                _ => Json::Null,
+            };
+            pairs.push((format!("key{i}"), v));
+        }
+        let doc = Json::Obj(pairs.into_iter().collect());
+        let text = doc.to_string();
+        let ok = match Json::parse(&text) {
+            Ok(back) => {
+                // numeric equality within f64 print precision
+                format!("{back}") == text
+            }
+            Err(_) => false,
+        };
+        (ok, text)
+    });
+}
+
+#[test]
+fn f16_round_trip_preserves_order_property() {
+    forall("f16 rounding is monotone", 300, |rng| {
+        let a = rng.f32_range(-1000.0, 1000.0);
+        let b = rng.f32_range(-1000.0, 1000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let ok = f16::round_to_f16(lo) <= f16::round_to_f16(hi);
+        (ok, format!("lo={lo} hi={hi}"))
+    });
+}
+
+#[test]
+fn f16_error_bounded_by_half_ulp_property() {
+    forall("f16 relative error < 2^-11", 300, |rng| {
+        let x = rng.f32_range(-60000.0, 60000.0);
+        let r = f16::round_to_f16(x);
+        let tol = x.abs().max(6.1e-5) * 4.9e-4; // 2^-11 relative
+        let ok = (x - r).abs() <= tol;
+        (ok, format!("x={x} r={r}"))
+    });
+}
+
+#[test]
+fn summary_is_translation_equivariant_property() {
+    forall("summary translation", 50, |rng| {
+        let n = rng.usize_range(2, 30);
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+        let shift = 42.0;
+        let shifted: Vec<f64> = xs.iter().map(|x| x + shift).collect();
+        let s0 = Summary::of(&xs);
+        let s1 = Summary::of(&shifted);
+        let ok = (s1.mean - s0.mean - shift).abs() < 1e-9
+            && (s1.stddev - s0.stddev).abs() < 1e-9
+            && (s1.p50 - s0.p50 - shift).abs() < 1e-9;
+        (ok, format!("n={n}"))
+    });
+}
+
+#[test]
+fn geomean_of_reciprocals_inverts() {
+    let xs = [1.5, 2.0, 0.8];
+    let inv: Vec<f64> = xs.iter().map(|x| 1.0 / x).collect();
+    assert!((geomean(&xs) * geomean(&inv) - 1.0).abs() < 1e-12);
+}
