@@ -1,0 +1,71 @@
+//! Bench: the chunk-pipelined Split-K ablation — chunked vs Algorithm 1
+//! (splitk) vs native FP16 across the paper's shape sweep, plus the
+//! Workspace HBM traffic each schedule moves (the §4.2 bottleneck in
+//! bytes).  Emits a machine-readable `target/BENCH_chunked.json` so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Run with `cargo bench --bench ablation_chunked`.
+
+use ascend_w4a16::analysis::report;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::bench::{section, Bench};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::json::Json;
+use ascend_w4a16::util::stats;
+use ascend_w4a16::kernels::GemmProblem;
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+
+    section("chunked ablation sweep (simulated)");
+    let cells = report::chunked_sweep(&machine).expect("sweep");
+    print!("{}", report::render_chunked(&cells));
+
+    // Tuned (auto) comparison on the acceptance decode shape.
+    section("tuned schedule on the decode bottleneck shape");
+    let mut tuner = Tuner::new(machine.clone());
+    let p = GemmProblem::new(8, 512, 16384);
+    let e = tuner.resolve(&p).expect("tune");
+    println!(
+        "M=8 N=512 K=16384 -> {} (S={}, C={}) at {}",
+        e.strategy.name(),
+        e.tiling.splits,
+        e.tiling.chunks,
+        stats::fmt_ns(e.total_ns)
+    );
+
+    // Machine-readable snapshot for cross-PR trajectory tracking.
+    let kd: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.k >= 2 * c.n)
+        .map(|c| c.speedup_vs_splitk())
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("ablation_chunked")),
+        ("cells", report::chunked_json(&cells)),
+        ("geomean_speedup_vs_splitk_k_dominant", Json::num(stats::geomean(&kd))),
+        (
+            "ws_hbm_bytes_splitk_total",
+            Json::num(cells.iter().map(|c| c.ws_hbm_splitk).sum()),
+        ),
+        (
+            "ws_hbm_bytes_chunked_total",
+            Json::num(cells.iter().map(|c| c.ws_hbm_chunked).sum()),
+        ),
+        ("tuned_decode_strategy", Json::str(e.strategy.name())),
+        ("tuned_decode_ns", Json::num(e.total_ns)),
+    ]);
+    std::fs::create_dir_all("target").expect("target dir");
+    let out = "target/BENCH_chunked.json";
+    std::fs::write(out, doc.to_string()).expect("write json");
+    println!("\nwrote {out}");
+
+    section("harness wallclock (simulator throughput)");
+    let r = Bench::new("chunked sweep (84 cells x 3 strategies)")
+        .warmup(1)
+        .iters(3)
+        .run(|| {
+            std::hint::black_box(report::chunked_sweep(&machine).unwrap());
+        });
+    println!("{}", r.render_row());
+}

@@ -140,6 +140,138 @@ pub fn fig3_json(cells: &[Fig3Cell]) -> Json {
     )
 }
 
+/// One (shape, batch) cell of the chunked-ablation sweep.
+#[derive(Debug, Clone)]
+pub struct ChunkedCell {
+    pub model: String,
+    pub n: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub chunks: usize,
+    pub chunked_us: f64,
+    pub splitk_us: f64,
+    pub fp16_us: f64,
+    /// Workspace bytes that touched HBM under each W4A16 schedule.
+    pub ws_hbm_splitk: f64,
+    pub ws_hbm_chunked: f64,
+}
+
+impl ChunkedCell {
+    pub fn speedup_vs_splitk(&self) -> f64 {
+        self.splitk_us / self.chunked_us
+    }
+
+    pub fn speedup_vs_fp16(&self) -> f64 {
+        self.fp16_us / self.chunked_us
+    }
+}
+
+/// Run the chunked-vs-splitk-vs-fp16 ablation over the paper sweep.
+pub fn chunked_sweep(machine: &MachineConfig) -> anyhow::Result<Vec<ChunkedCell>> {
+    use crate::ascend::{BufferClass, Simulator};
+    use crate::kernels::{self, tiling, Strategy};
+    use crate::workload;
+
+    let sim = Simulator::new(machine.clone());
+    let mut cells = Vec::new();
+    for (shape, batch) in workload::paper_sweep() {
+        let p = workload::problem_for(&shape, batch);
+        let t = tiling::select_chunked(machine, &p)?;
+        let ck = sim.run(&kernels::schedule_with(machine, &p, Strategy::Chunked, &t)?)?;
+        let sk = sim.run(&kernels::schedule(machine, &p, Strategy::SplitK)?)?;
+        let fp16 = sim.run(&kernels::schedule(machine, &p, Strategy::Fp16Native)?)?;
+        cells.push(ChunkedCell {
+            model: shape.model.to_string(),
+            n: shape.n,
+            k: shape.k,
+            batch,
+            chunks: t.chunks,
+            chunked_us: ck.total_ns / 1e3,
+            splitk_us: sk.total_ns / 1e3,
+            fp16_us: fp16.total_ns / 1e3,
+            ws_hbm_splitk: sk.ledger.class(BufferClass::Workspace).hbm_total(),
+            ws_hbm_chunked: ck.ledger.class(BufferClass::Workspace).hbm_total(),
+        });
+    }
+    Ok(cells)
+}
+
+/// Render the chunked-ablation table: the analysis-report section showing
+/// Workspace HBM traffic dropping to ~0 under the chunk pipeline.
+pub fn render_chunked(cells: &[ChunkedCell]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Chunk-pipelined Split-K vs Algorithm 1 vs native FP16 (simulated µs)\n",
+    );
+    out.push_str(&format!(
+        "{:<12} {:>6} {:>6} {:>6} {:>3} | {:>10} {:>10} {:>10} {:>8} | {:>11} {:>11}\n",
+        "model", "N", "K", "M", "C", "chunked_us", "splitk_us", "fp16_us", "vs_sk",
+        "wsHBM_sk", "wsHBM_ck"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<12} {:>6} {:>6} {:>6} {:>3} | {:>10.2} {:>10.2} {:>10.2} {:>7.2}x | {:>11} {:>11}\n",
+            c.model,
+            c.n,
+            c.k,
+            c.batch,
+            c.chunks,
+            c.chunked_us,
+            c.splitk_us,
+            c.fp16_us,
+            c.speedup_vs_splitk(),
+            stats::fmt_bytes(c.ws_hbm_splitk),
+            stats::fmt_bytes(c.ws_hbm_chunked),
+        ));
+    }
+    let kd: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.k >= 2 * c.n)
+        .map(|c| c.speedup_vs_splitk())
+        .collect();
+    if !kd.is_empty() {
+        out.push_str(&format!(
+            "\nK>>N regime: chunked vs splitk geomean {:.2}x (max {:.2}x)\n",
+            stats::geomean(&kd),
+            kd.iter().cloned().fold(0.0, f64::max),
+        ));
+    }
+    let spilled: f64 = cells.iter().map(|c| c.ws_hbm_splitk).sum();
+    let pinned: f64 = cells.iter().map(|c| c.ws_hbm_chunked).sum();
+    out.push_str(&format!(
+        "workspace HBM traffic across the sweep: splitk {} -> chunked {} \
+         (the rotating slice pair stays pinned in L2)\n",
+        stats::fmt_bytes(spilled),
+        stats::fmt_bytes(pinned),
+    ));
+    out
+}
+
+/// JSON form of the chunked-ablation sweep (BENCH_chunked.json).
+pub fn chunked_json(cells: &[ChunkedCell]) -> Json {
+    Json::arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("model", Json::str(c.model.clone())),
+                    ("n", Json::num(c.n as f64)),
+                    ("k", Json::num(c.k as f64)),
+                    ("batch", Json::num(c.batch as f64)),
+                    ("chunks", Json::num(c.chunks as f64)),
+                    ("chunked_us", Json::num(c.chunked_us)),
+                    ("splitk_us", Json::num(c.splitk_us)),
+                    ("fp16_us", Json::num(c.fp16_us)),
+                    ("speedup_vs_splitk", Json::num(c.speedup_vs_splitk())),
+                    ("speedup_vs_fp16", Json::num(c.speedup_vs_fp16())),
+                    ("ws_hbm_splitk_bytes", Json::num(c.ws_hbm_splitk)),
+                    ("ws_hbm_chunked_bytes", Json::num(c.ws_hbm_chunked)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Render the §4.2 bottleneck decomposition for one simulated kernel.
 pub fn render_bottleneck(machine: &MachineConfig, report: &SimReport) -> String {
     let b = traffic::decompose(report);
@@ -268,6 +400,28 @@ mod tests {
         let s = render_bottleneck(&m, &r);
         assert!(s.contains("dequant workspace"));
         assert!(s.contains("MEMORY TRANSFER"));
+    }
+
+    #[test]
+    fn chunked_render_reports_traffic_drop() {
+        let cells = vec![ChunkedCell {
+            model: "deepseek".into(),
+            n: 512,
+            k: 16384,
+            batch: 8,
+            chunks: 4,
+            chunked_us: 10.0,
+            splitk_us: 14.0,
+            fp16_us: 20.0,
+            ws_hbm_splitk: 4.0e6,
+            ws_hbm_chunked: 0.0,
+        }];
+        let s = render_chunked(&cells);
+        assert!(s.contains("1.40x"));
+        assert!(s.contains("workspace HBM traffic"));
+        let j = chunked_json(&cells).to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap()[0].req_usize("chunks").unwrap(), 4);
     }
 
     #[test]

@@ -41,6 +41,13 @@ pub fn pipeline_fill(machine: &MachineConfig, first_transfer_ns: f64) -> f64 {
     first_transfer_ns + machine.event_ns
 }
 
+/// Rotating the pinned workspace slice of a chunk-pipelined group: one
+/// event handshake per chunk boundary (the vector cores flip the double
+/// buffer and signal the cube cores; no grid-wide barrier).
+pub fn chunk_rotation(machine: &MachineConfig) -> f64 {
+    machine.event_ns
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,7 +9,7 @@
 //! the phases, residency is capacity-shaped: `min(1, retention * L2 / WS)`.
 
 use super::config::MachineConfig;
-use super::trace::BufferClass;
+use super::trace::{BufferClass, KernelTrace, WorkspacePolicy};
 
 /// Where a transfer class is served from, split into L2-hit and HBM parts.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -56,6 +56,39 @@ impl L2Model {
         L2Model {
             workspace_hit: hit(workspace_bytes),
             partial_hit: hit(partial_bytes),
+        }
+    }
+
+    /// Residency for a whole trace, honouring its workspace policy.
+    ///
+    /// * [`WorkspacePolicy::Buffered`] — the capacity-shaped model above.
+    /// * [`WorkspacePolicy::Pinned`] — the schedule guarantees that only a
+    ///   rotating set of slices (`resident_bytes`) is ever live, and the
+    ///   chunk-granular producer-consumer handoff keeps them hot: the hit
+    ///   fraction is 1.0 whenever the slices fit the retained capacity
+    ///   (and degrades proportionally when they do not).  Partial buffers
+    ///   get whatever capacity the pinned slices leave behind.
+    pub fn for_trace(machine: &MachineConfig, trace: &KernelTrace) -> L2Model {
+        match trace.workspace_policy {
+            WorkspacePolicy::Buffered => {
+                L2Model::new(machine, trace.workspace_bytes, trace.partial_bytes)
+            }
+            WorkspacePolicy::Pinned { resident_bytes } => {
+                let cap = machine.l2_retention * machine.l2_bytes as f64;
+                let pinned = (resident_bytes as f64).min(cap);
+                let workspace_hit = if resident_bytes == 0 {
+                    0.0
+                } else {
+                    pinned / resident_bytes as f64
+                };
+                let leftover = (cap - pinned).max(0.0);
+                let partial_hit = if trace.partial_bytes == 0 {
+                    0.0
+                } else {
+                    (leftover / trace.partial_bytes as f64).min(1.0)
+                };
+                L2Model { workspace_hit, partial_hit }
+            }
         }
     }
 
@@ -159,6 +192,44 @@ mod tests {
         let l2 = L2Model::new(&m(), 128 << 20, 0);
         let ws = l2.write_split(BufferClass::Workspace);
         assert!((ws.writeback_fraction - (1.0 - l2.workspace_hit)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pinned_slices_stay_resident_regardless_of_footprint() {
+        use crate::ascend::trace::{KernelTrace, WorkspacePolicy};
+        // A 128 MiB workspace would spill badly under Buffered, but the
+        // chunked schedule only keeps 2 x 4 MiB slices live.
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![],
+            workspace_bytes: 8 << 20,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Pinned { resident_bytes: 8 << 20 },
+        };
+        let l2 = L2Model::for_trace(&m(), &t);
+        assert_eq!(l2.workspace_hit, 1.0);
+        // Oversized slices degrade proportionally instead of thrashing.
+        let big = KernelTrace {
+            workspace_policy: WorkspacePolicy::Pinned { resident_bytes: 64 << 20 },
+            ..t
+        };
+        let l2 = L2Model::for_trace(&m(), &big);
+        assert!((l2.workspace_hit - 0.45).abs() < 1e-9, "{}", l2.workspace_hit);
+    }
+
+    #[test]
+    fn pinned_leftover_capacity_serves_partials() {
+        use crate::ascend::trace::{KernelTrace, WorkspacePolicy};
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![],
+            workspace_bytes: 8 << 20,
+            partial_bytes: 4 << 20,
+            workspace_policy: WorkspacePolicy::Pinned { resident_bytes: 8 << 20 },
+        };
+        let l2 = L2Model::for_trace(&m(), &t);
+        // 0.9*32 - 8 = 20.8 MiB leftover > 4 MiB of partials.
+        assert_eq!(l2.partial_hit, 1.0);
     }
 
     #[test]

@@ -35,4 +35,4 @@ pub mod vector;
 
 pub use config::MachineConfig;
 pub use npu::{SimReport, Simulator};
-pub use trace::{BufferClass, ComputeOp, KernelTrace, Phase, TileStep, Unit};
+pub use trace::{BufferClass, ComputeOp, KernelTrace, Phase, TileStep, Unit, WorkspacePolicy};

@@ -163,7 +163,7 @@ mod tests {
     }
 
     fn phase(steps_per_engine: Vec<Vec<TileStep>>, unit: Unit) -> Phase {
-        Phase { name: "t", unit, steps_per_engine, pipelined_with_prev: false }
+        Phase { name: "t", unit, steps_per_engine, pipelined_with_prev: false, chunk: None }
     }
 
     #[test]

@@ -83,7 +83,10 @@ pub struct GroupTime {
     pub cube_ns: f64,
     pub vector_ns: f64,
     pub fill_ns: f64,
-    /// max over streams + fill
+    /// Buffer-rotation handshakes of a chunk-pipelined group: one event
+    /// per chunk boundary (double buffering hides everything else).
+    pub chunk_sync_ns: f64,
+    /// max over streams + fill + chunk sync
     pub total_ns: f64,
     /// Which stream bound the group ("hbm", "l2", "cube", "vector").
     pub bound_by: &'static str,
@@ -156,6 +159,32 @@ impl Simulator {
             !trace.phases[0].pipelined_with_prev,
             "first phase cannot pipeline with a predecessor"
         );
+        // Chunk indices must be non-decreasing inside a pipelined group:
+        // the rotating workspace slice is a FIFO, chunk i+1 cannot be
+        // produced before chunk i has been scheduled.
+        let mut prev_chunk: Option<u32> = None;
+        for phase in &trace.phases {
+            if !phase.pipelined_with_prev {
+                prev_chunk = None;
+            }
+            if let Some(c) = phase.chunk {
+                if let Some(p) = prev_chunk {
+                    anyhow::ensure!(
+                        c >= p,
+                        "phase '{}' rewinds chunk {c} after chunk {p}",
+                        phase.name
+                    );
+                }
+                prev_chunk = Some(c);
+            }
+        }
+        if let super::trace::WorkspacePolicy::Pinned { resident_bytes } = trace.workspace_policy
+        {
+            anyhow::ensure!(
+                resident_bytes > 0,
+                "pinned workspace policy with zero resident bytes"
+            );
+        }
         Ok(())
     }
 
@@ -163,7 +192,7 @@ impl Simulator {
     pub fn run(&self, trace: &KernelTrace) -> anyhow::Result<SimReport> {
         self.validate(trace)?;
         let m = &self.machine;
-        let l2 = L2Model::new(m, trace.workspace_bytes, trace.partial_bytes);
+        let l2 = L2Model::for_trace(m, trace);
 
         // Price every phase.
         let mut demands: Vec<PhaseDemand> = Vec::with_capacity(trace.phases.len());
@@ -196,6 +225,7 @@ impl Simulator {
                 cube_ns: 0.0,
                 vector_ns: 0.0,
                 fill_ns: 0.0,
+                chunk_sync_ns: 0.0,
                 total_ns: 0.0,
                 bound_by: "hbm",
             };
@@ -246,7 +276,23 @@ impl Simulator {
                 (mte::hbm_time_ns(m, first) + mte::l2_time_ns(m, first)) / steps_per_engine;
             let compute_step_ns = first.compute_ns_max_engine / steps_per_engine;
             g.fill_ns = event::pipeline_fill(m, transfer_step_ns.min(compute_step_ns));
-            g.total_ns = max_ns + g.fill_ns;
+            // Chunk-pipelined groups rotate the pinned workspace slice once
+            // per chunk boundary; each rotation costs one event handshake
+            // (the transfers themselves are double-buffered as usual).  The
+            // boundary count is the chunk-index span of the group, so a
+            // group covering a window [lo..hi] is charged hi - lo events.
+            let mut chunk_ids = group.iter().filter_map(|&pi| trace.phases[pi].chunk);
+            let rotations = match chunk_ids.next() {
+                Some(first) => {
+                    let (lo, hi) = chunk_ids.fold((first, first), |(lo, hi), c| {
+                        (lo.min(c), hi.max(c))
+                    });
+                    (hi - lo) as f64
+                }
+                None => 0.0,
+            };
+            g.chunk_sync_ns = event::chunk_rotation(m) * rotations;
+            g.total_ns = max_ns + g.fill_ns + g.chunk_sync_ns;
             g.bound_by = bound;
             total += g.total_ns;
             group_times.push(g);
@@ -313,17 +359,26 @@ mod tests {
         MachineConfig::ascend910()
     }
 
+    use crate::ascend::trace::WorkspacePolicy;
+
     fn simple_phase(unit: Unit, engines: usize, steps: usize, step: TileStep) -> Phase {
         Phase {
             name: "p",
             unit,
             steps_per_engine: vec![vec![step; steps]; engines],
             pipelined_with_prev: false,
+            chunk: None,
         }
     }
 
     fn trace_of(phases: Vec<Phase>) -> KernelTrace {
-        KernelTrace { name: "t".into(), phases, workspace_bytes: 0, partial_bytes: 0 }
+        KernelTrace {
+            name: "t".into(),
+            phases,
+            workspace_bytes: 0,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        }
     }
 
     #[test]
@@ -408,6 +463,61 @@ mod tests {
         assert!(ws.hbm_write > 0.0, "spill write-back expected");
         assert!(ws.hbm_read > 0.0, "miss reads expected");
         assert!(ws.l2_read > 0.0);
+    }
+
+    #[test]
+    fn pinned_workspace_never_spills() {
+        // Same oversized footprint as `oversized_workspace_spills`, but the
+        // trace pins a rotating slice set that fits L2: zero HBM traffic.
+        let bytes = 128u64 << 20;
+        let write = TileStep::new(ComputeOp::Nop).write(BufferClass::Workspace, bytes);
+        let read = TileStep::new(ComputeOp::Nop).read(BufferClass::Workspace, bytes);
+        let mut p1 = simple_phase(Unit::Vector, 1, 1, write);
+        p1.chunk = Some(0);
+        let mut p2 = simple_phase(Unit::Cube, 1, 1, read);
+        p2.pipelined_with_prev = true;
+        p2.chunk = Some(0);
+        let mut t = trace_of(vec![p1, p2]);
+        t.workspace_bytes = bytes;
+        t.workspace_policy = WorkspacePolicy::Pinned { resident_bytes: 8 << 20 };
+        let r = Simulator::new(machine()).run(&t).unwrap();
+        let ws = r.ledger.class(BufferClass::Workspace);
+        assert_eq!(ws.hbm_read, 0.0);
+        assert_eq!(ws.hbm_write, 0.0);
+        assert_eq!(ws.l2_read, bytes as f64);
+    }
+
+    #[test]
+    fn chunk_rotations_cost_one_event_each() {
+        let step = TileStep::new(ComputeOp::Nop).read(BufferClass::Activation, 1024);
+        let mut phases = Vec::new();
+        for c in 0..4u32 {
+            let mut p = simple_phase(Unit::Cube, 1, 1, step);
+            p.pipelined_with_prev = c > 0;
+            p.chunk = Some(c);
+            phases.push(p);
+        }
+        let t = trace_of(phases);
+        let r = Simulator::new(machine()).run(&t).unwrap();
+        assert_eq!(r.groups.len(), 1);
+        assert_eq!(r.groups[0].chunk_sync_ns, 3.0 * machine().event_ns);
+
+        // A group covering a single (offset) chunk has no boundaries.
+        let mut lone = simple_phase(Unit::Cube, 1, 1, step);
+        lone.chunk = Some(3);
+        let r = Simulator::new(machine()).run(&trace_of(vec![lone])).unwrap();
+        assert_eq!(r.groups[0].chunk_sync_ns, 0.0);
+    }
+
+    #[test]
+    fn rejects_chunk_rewind_within_group() {
+        let step = TileStep::new(ComputeOp::Nop);
+        let mut p1 = simple_phase(Unit::Cube, 1, 1, step);
+        p1.chunk = Some(1);
+        let mut p2 = simple_phase(Unit::Cube, 1, 1, step);
+        p2.pipelined_with_prev = true;
+        p2.chunk = Some(0);
+        assert!(Simulator::new(machine()).run(&trace_of(vec![p1, p2])).is_err());
     }
 
     #[test]

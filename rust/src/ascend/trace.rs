@@ -131,6 +131,11 @@ pub struct Phase {
     /// If true, this phase streams concurrently with the previous phase
     /// (shared resources are serialized, different engines overlap).
     pub pipelined_with_prev: bool,
+    /// K-chunk index for chunk-pipelined schedules (`None` for monolithic
+    /// phases).  Within a pipelined group the chunk indices must be
+    /// non-decreasing; the executor charges one buffer-rotation event per
+    /// chunk boundary (DESIGN.md §8).
+    pub chunk: Option<u32>,
 }
 
 impl Phase {
@@ -164,6 +169,22 @@ impl Phase {
     }
 }
 
+/// How Workspace-class traffic is kept resident in L2 — the §4.2 lever.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkspacePolicy {
+    /// Whole-buffer handoff (Algorithm 1): the full workspace is produced
+    /// before consumption, so residency is capacity-shaped and spills once
+    /// the footprint exceeds the retained L2 capacity.
+    Buffered,
+    /// Chunk-rotated slices pinned in L2 (the chunked schedule): only
+    /// `resident_bytes` of rotating double-buffered slices are ever live,
+    /// so Workspace traffic stays on-chip as long as they fit.
+    Pinned {
+        /// Live bytes of the rotating slice set (typically 2 slices).
+        resident_bytes: u64,
+    },
+}
+
 /// A whole kernel: named phases plus the GM workspace footprint (drives the
 /// L2 residency model for Workspace-class traffic).
 #[derive(Debug, Clone)]
@@ -174,6 +195,8 @@ pub struct KernelTrace {
     pub workspace_bytes: u64,
     /// Bytes of the Split-K partial buffers allocated in GM.
     pub partial_bytes: u64,
+    /// Residency policy for Workspace-class traffic.
+    pub workspace_policy: WorkspacePolicy,
 }
 
 impl KernelTrace {
@@ -212,6 +235,7 @@ mod tests {
             unit: Unit::Cube,
             steps_per_engine: vec![vec![step; 3], vec![], vec![step]],
             pipelined_with_prev: false,
+            chunk: None,
         };
         assert_eq!(phase.active_engines(), 2);
         assert_eq!(phase.total_steps(), 4);
@@ -229,9 +253,11 @@ mod tests {
                 unit: Unit::Cube,
                 steps_per_engine: vec![vec![step, step]],
                 pipelined_with_prev: false,
+                chunk: None,
             }],
             workspace_bytes: 0,
             partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
         };
         assert_eq!(t.total_macs(), 2 * 4096);
     }

@@ -1,5 +1,6 @@
 //! Serving metrics: counters and latency summaries.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::stats::Summary;
@@ -20,6 +21,9 @@ struct Inner {
     padded_slots: u64,
     ttft_s: Vec<f64>,
     total_s: Vec<f64>,
+    /// Groups served per kernel-schedule strategy ("untuned" when no tune
+    /// cache backed the group's batch size).
+    schedules: BTreeMap<String, u64>,
 }
 
 /// A point-in-time snapshot.
@@ -32,6 +36,7 @@ pub struct MetricsSnapshot {
     pub padded_slots: u64,
     pub ttft: Summary,
     pub total: Summary,
+    pub schedules: BTreeMap<String, u64>,
 }
 
 impl Metrics {
@@ -44,6 +49,12 @@ impl Metrics {
         g.groups_formed += 1;
         g.padded_slots += (batch - occupancy) as u64;
         g.steps_executed += steps as u64;
+    }
+
+    /// Record which kernel-schedule strategy served a decode group.
+    pub fn record_schedule(&self, strategy: &str) {
+        let mut g = self.inner.lock().unwrap();
+        *g.schedules.entry(strategy.to_string()).or_insert(0) += 1;
     }
 
     pub fn record_completion(&self, tokens: usize, ttft_s: f64, total_s: f64) {
@@ -64,6 +75,7 @@ impl Metrics {
             padded_slots: g.padded_slots,
             ttft: Summary::of(&g.ttft_s),
             total: Summary::of(&g.total_s),
+            schedules: g.schedules.clone(),
         }
     }
 }
@@ -99,6 +111,14 @@ impl MetricsSnapshot {
             self.total.p90 * 1e3,
             self.total.p99 * 1e3,
         ));
+        if !self.schedules.is_empty() {
+            let parts: Vec<String> = self
+                .schedules
+                .iter()
+                .map(|(s, n)| format!("{s}={n}"))
+                .collect();
+            out.push_str(&format!("schedules: {}\n", parts.join("  ")));
+        }
         out
     }
 }
@@ -106,6 +126,18 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn schedule_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_schedule("chunked");
+        m.record_schedule("chunked");
+        m.record_schedule("untuned");
+        let s = m.snapshot();
+        assert_eq!(s.schedules.get("chunked"), Some(&2));
+        assert_eq!(s.schedules.get("untuned"), Some(&1));
+        assert!(s.render(1.0).contains("chunked=2"));
+    }
 
     #[test]
     fn counters_accumulate() {

@@ -31,5 +31,5 @@ pub mod server;
 pub use batcher::{Batcher, BatchPolicy, DecodeGroup};
 pub use metrics::Metrics;
 pub use request::{DecodeRequest, DecodeResult};
-pub use router::Router;
+pub use router::{Router, TunedPlan};
 pub use server::Server;

@@ -1,13 +1,32 @@
-//! Router: maps a decode group to the engine compiled for its batch size.
+//! Router: maps a decode group to the engine compiled for its batch size,
+//! and to the tuned kernel schedule for its dominant GEMM shape.
 //!
 //! Engines are constructed lazily (compiling an HLO module and staging
 //! ~100M parameters of weight literals is expensive) and cached for the
 //! server's lifetime — the per-shape executable pool of the serving stack.
+//!
+//! Schedule tuning: if a tune cache (`tune_cache.json`, written by
+//! `repro tune`) sits next to the artifact manifest, the router resolves
+//! each decode batch size's bottleneck GEMM — the FFN down-projection
+//! `(M=batch, N=hidden, K=ffn)`, the paper's K >> N decode shape —
+//! through it, so every group is served under its tuned strategy.  The
+//! lookup is cache-only: the serving hot path never pays a search.
 
 use std::collections::HashMap;
 
+use crate::ascend::MachineConfig;
+use crate::kernels::{GemmProblem, Strategy};
 use crate::model::DecodeEngine;
 use crate::runtime::{Manifest, Runtime};
+use crate::tune::{Tuner, DEFAULT_CACHE_FILE};
+
+/// The tuned plan for one decode batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedPlan {
+    pub strategy: Strategy,
+    /// Simulated kernel time of the tuned schedule (ns).
+    pub predicted_ns: f64,
+}
 
 /// Engine pool keyed by batch size for one decode model.
 pub struct Router<'rt> {
@@ -15,6 +34,10 @@ pub struct Router<'rt> {
     manifest: Manifest,
     model: String,
     engines: HashMap<usize, DecodeEngine>,
+    /// Schedule tuner backed by the cache next to the artifacts (None when
+    /// no cache file exists — groups then serve under the default splitk).
+    tuner: Option<Tuner>,
+    plans: HashMap<usize, Option<TunedPlan>>,
 }
 
 impl<'rt> Router<'rt> {
@@ -23,7 +46,20 @@ impl<'rt> Router<'rt> {
             !manifest.decode_batches(model).is_empty(),
             "no decode artifacts for model '{model}'"
         );
-        Ok(Router { rt, manifest, model: model.to_string(), engines: HashMap::new() })
+        let cache_path = manifest.dir.join(DEFAULT_CACHE_FILE);
+        let tuner = if cache_path.exists() {
+            Some(Tuner::load(MachineConfig::ascend910(), &cache_path)?)
+        } else {
+            None
+        };
+        Ok(Router {
+            rt,
+            manifest,
+            model: model.to_string(),
+            engines: HashMap::new(),
+            tuner,
+            plans: HashMap::new(),
+        })
     }
 
     /// Batch sizes this model was compiled for (ascending).
@@ -41,6 +77,38 @@ impl<'rt> Router<'rt> {
         Ok(self.engines.get_mut(&batch).unwrap())
     }
 
+    /// The tuned schedule for a batch size's bottleneck decode GEMM, from
+    /// the persisted cache (`None` when untuned: no cache, cache miss, or
+    /// the artifact has no decode config).  Memoized per batch size.
+    pub fn tuned_plan(&mut self, batch: usize) -> Option<TunedPlan> {
+        if let Some(plan) = self.plans.get(&batch) {
+            return *plan;
+        }
+        let plan = self.resolve_plan(batch);
+        self.plans.insert(batch, plan);
+        plan
+    }
+
+    fn resolve_plan(&mut self, batch: usize) -> Option<TunedPlan> {
+        let cfg = self
+            .manifest
+            .decode(&self.model, batch)
+            .ok()
+            .and_then(|e| e.config)?;
+        let tuner = self.tuner.as_mut()?;
+        // The FFN down-projection is the decode GEMM the paper profiles:
+        // K = ffn >> N = hidden once the batch is small.
+        let mut p = GemmProblem::new(batch, cfg.hidden, cfg.ffn);
+        p.group = cfg.group;
+        let e = tuner.lookup(&p)?;
+        Some(TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns })
+    }
+
+    /// Whether a tune cache was found next to the artifacts.
+    pub fn has_tune_cache(&self) -> bool {
+        self.tuner.is_some()
+    }
+
     /// Number of engines built so far.
     pub fn engines_built(&self) -> usize {
         self.engines.len()
@@ -54,5 +122,5 @@ impl<'rt> Router<'rt> {
 #[cfg(test)]
 mod tests {
     // Router construction needs real artifacts + a PJRT client; exercised
-    // by rust/tests/coordinator.rs.
+    // by rust/tests/coordinator.rs (including the tuned-plan path).
 }

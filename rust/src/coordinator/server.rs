@@ -63,6 +63,14 @@ impl<'rt> Server<'rt> {
 
     /// Decode one group to completion.
     fn run_group(&mut self, group: DecodeGroup) -> anyhow::Result<Vec<DecodeResult>> {
+        // Which kernel schedule serves this group's bottleneck GEMM: the
+        // tuned winner from the persisted cache, or the untuned default.
+        let schedule = self
+            .router
+            .tuned_plan(group.batch)
+            .map(|p| p.strategy.name())
+            .unwrap_or("untuned");
+        self.metrics.record_schedule(schedule);
         let engine = self.router.engine(group.batch)?;
         engine.reset()?;
         let vocab = engine.vocab;

@@ -14,9 +14,10 @@
 
 use crate::ascend::{
     BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+    WorkspacePolicy,
 };
 
-use super::{round_robin, splitk::dequant_phase, tiling::Tiling, GemmProblem};
+use super::{round_robin_steps, splitk::dequant_phase, tiling::Tiling, GemmProblem};
 
 /// Build the data-parallel trace.
 pub fn schedule(
@@ -44,31 +45,19 @@ pub fn schedule(
     let a_tile = (t.bm * t.bk * 2) as u64;
     let b_tile = (t.bk * t.bn * 2) as u64;
     let out_tile = (t.bm * t.bn * 2) as u64; // f16 via MTE3 on-the-fly cast
-    let assign = round_robin(strips, machine.ai_cores);
-    let steps_per_engine: Vec<Vec<TileStep>> = assign
-        .iter()
-        .map(|engine_items| {
-            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
-            for _ in engine_items {
-                for kstep in 0..k_steps {
-                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
-                        .with_burst((t.bn * 2) as u64)
-                        .read(BufferClass::Workspace, b_tile)
-                        .read(BufferClass::Activation, a_tile);
-                    if kstep == k_steps - 1 {
-                        s = s.write(BufferClass::Output, out_tile);
-                    }
-                    steps.push(s);
-                }
-            }
-            steps
-        })
-        .collect();
+    let mid_step = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+        .with_burst((t.bn * 2) as u64)
+        .read(BufferClass::Workspace, b_tile)
+        .read(BufferClass::Activation, a_tile);
+    let last_step = mid_step.write(BufferClass::Output, out_tile);
+    let steps_per_engine =
+        round_robin_steps(strips, machine.ai_cores, k_steps, mid_step, last_step);
     let p2 = Phase {
         name: "dp_mmad",
         unit: Unit::Cube,
         steps_per_engine,
         pipelined_with_prev: true,
+        chunk: None,
     };
 
     Ok(KernelTrace {
@@ -76,6 +65,7 @@ pub fn schedule(
         phases: vec![p1, p2],
         workspace_bytes: p.f16_weight_bytes(),
         partial_bytes: 0,
+        workspace_policy: WorkspacePolicy::Buffered,
     })
 }
 

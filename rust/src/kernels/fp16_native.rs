@@ -8,9 +8,10 @@
 
 use crate::ascend::{
     BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+    WorkspacePolicy,
 };
 
-use super::{round_robin, tiling::Tiling, GemmProblem};
+use super::{round_robin_steps, tiling::Tiling, GemmProblem};
 
 /// Build the native-FP16 trace.
 pub fn schedule(
@@ -26,37 +27,26 @@ pub fn schedule(
     let a_tile = (t.bm * t.bk * 2) as u64;
     let b_tile = (t.bk * t.bn * 2) as u64;
     let out_tile = (t.bm * t.bn * 2) as u64;
-    let assign = round_robin(strips, machine.ai_cores);
-    let steps_per_engine: Vec<Vec<TileStep>> = assign
-        .iter()
-        .map(|engine_items| {
-            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
-            for _ in engine_items {
-                for kstep in 0..k_steps {
-                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
-                        .with_burst((t.bn * 2) as u64)
-                        .read(BufferClass::WeightF16, b_tile)
-                        .read(BufferClass::Activation, a_tile);
-                    if kstep == k_steps - 1 {
-                        s = s.write(BufferClass::Output, out_tile);
-                    }
-                    steps.push(s);
-                }
-            }
-            steps
-        })
-        .collect();
+    let mid_step = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+        .with_burst((t.bn * 2) as u64)
+        .read(BufferClass::WeightF16, b_tile)
+        .read(BufferClass::Activation, a_tile);
+    let last_step = mid_step.write(BufferClass::Output, out_tile);
+    let steps_per_engine =
+        round_robin_steps(strips, machine.ai_cores, k_steps, mid_step, last_step);
     let phase = Phase {
         name: "fp16_mmad",
         unit: Unit::Cube,
         steps_per_engine,
         pipelined_with_prev: false,
+        chunk: None,
     };
     Ok(KernelTrace {
         name: format!("fp16_m{}_n{}_k{}", p.m, p.n, p.k),
         phases: vec![phase],
         workspace_bytes: 0,
         partial_bytes: 0,
+        workspace_policy: WorkspacePolicy::Buffered,
     })
 }
 

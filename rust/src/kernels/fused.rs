@@ -11,9 +11,10 @@
 
 use crate::ascend::{
     BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+    WorkspacePolicy,
 };
 
-use super::{round_robin, tiling::Tiling, GemmProblem};
+use super::{round_robin, round_robin_steps, tiling::Tiling, GemmProblem};
 
 /// Build the fused-path trace.
 pub fn schedule(
@@ -37,35 +38,21 @@ pub fn schedule(
         (t.bm * t.bn * 4) as u64
     };
     let c_class = if single_split { BufferClass::Output } else { BufferClass::Partial };
-    let assign = round_robin(items, machine.ai_cores);
-    let steps_per_engine: Vec<Vec<TileStep>> = assign
-        .iter()
-        .map(|engine_items| {
-            let mut steps = Vec::with_capacity(engine_items.len() * k_steps);
-            for _ in engine_items {
-                for kstep in 0..k_steps {
-                    // Packed weights flow straight into the cube pipe; the
-                    // hypothetical fused conversion rides the transfer.
-                    // Weights are static, so a real fused design repacks
-                    // them offline into the pipe's native tile order
-                    // (Marlin-style) — transfers are fully contiguous.
-                    let mut s = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
-                        .read(BufferClass::WeightPacked, b_packed_tile + qparam_tile)
-                        .read(BufferClass::Activation, a_tile);
-                    if kstep == k_steps - 1 {
-                        s = s.write(c_class, c_tile);
-                    }
-                    steps.push(s);
-                }
-            }
-            steps
-        })
-        .collect();
+    // Packed weights flow straight into the cube pipe; the hypothetical
+    // fused conversion rides the transfer.  Weights are static, so a real
+    // fused design repacks them offline into the pipe's native tile order
+    // (Marlin-style) — transfers are fully contiguous.
+    let mid_step = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
+        .read(BufferClass::WeightPacked, b_packed_tile + qparam_tile)
+        .read(BufferClass::Activation, a_tile);
+    let last_step = mid_step.write(c_class, c_tile);
+    let steps_per_engine = round_robin_steps(items, machine.ai_cores, k_steps, mid_step, last_step);
     let p1 = Phase {
         name: "fused_mmad",
         unit: Unit::Cube,
         steps_per_engine,
         pipelined_with_prev: false,
+        chunk: None,
     };
     if single_split {
         return Ok(KernelTrace {
@@ -73,6 +60,7 @@ pub fn schedule(
             phases: vec![p1],
             workspace_bytes: 0,
             partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
         });
     }
 
@@ -91,6 +79,7 @@ pub fn schedule(
         unit: Unit::Vector,
         steps_per_engine,
         pipelined_with_prev: false,
+        chunk: None,
     };
 
     Ok(KernelTrace {
@@ -98,6 +87,7 @@ pub fn schedule(
         phases: vec![p1, p2],
         workspace_bytes: 0,
         partial_bytes: (t.splits * m_pad * p.n * 4) as u64,
+        workspace_policy: WorkspacePolicy::Buffered,
     })
 }
 

@@ -1,7 +1,7 @@
 //! Kernel schedules: compile a W4A16 (or FP16) GEMM problem into a
 //! simulator [`KernelTrace`](crate::ascend::KernelTrace).
 //!
-//! Four strategies, mirroring the paper's evaluation:
+//! Strategies, mirroring the paper's evaluation plus this repo's additions:
 //! * [`splitk`] — **Algorithm 1**: vector-core dequant into a GM workspace,
 //!   Split-K cube MMAD into FP32 split buffers, vector-core reduce.
 //! * [`data_parallel`] — the CATLASS-style comparator: each active AI core
@@ -10,14 +10,19 @@
 //!   baseline of Figure 3).
 //! * [`fused`] — the paper's future-work ablation: a hypothetical direct
 //!   vector->cube path that skips the workspace round trip entirely.
+//! * [`chunked`] — chunk-pipelined Split-K: K is partitioned into chunks
+//!   whose dequanted FP16 slice rotates through a pinned L2 double buffer,
+//!   so Workspace bytes never touch HBM (DESIGN.md §8).
+//! * `Auto` — resolved per shape through the [`crate::tune`] cache.
 
+pub mod chunked;
 pub mod data_parallel;
 pub mod fp16_native;
 pub mod fused;
 pub mod splitk;
 pub mod tiling;
 
-use crate::ascend::{KernelTrace, MachineConfig};
+use crate::ascend::{KernelTrace, MachineConfig, TileStep};
 
 /// A GEMM problem: `C[M,N] = A[M,K] @ W[K,N]` with group-quantized weights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,21 +61,31 @@ impl GemmProblem {
         (self.k * self.n * 2) as u64
     }
 
-    pub fn validate(&self, group: usize) -> anyhow::Result<()> {
+    pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.m >= 1, "M must be positive");
-        anyhow::ensure!(self.k % group == 0, "K={} not a multiple of group={group}", self.k);
+        anyhow::ensure!(self.group >= 1, "group must be positive");
+        anyhow::ensure!(
+            self.k % self.group == 0,
+            "K={} not a multiple of group={}",
+            self.k,
+            self.group
+        );
         anyhow::ensure!(self.n % 16 == 0, "N={} not a multiple of the cube tile", self.n);
         Ok(())
     }
 }
 
-/// Strategy selector used by the CLI / benches.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Strategy selector used by the CLI / benches / router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Strategy {
     SplitK,
     DataParallel,
     Fp16Native,
     Fused,
+    Chunked,
+    /// Resolved per shape through the persisted tune cache (see
+    /// [`crate::tune`]); cannot be scheduled directly.
+    Auto,
 }
 
 impl Strategy {
@@ -80,17 +95,51 @@ impl Strategy {
             Strategy::DataParallel => "data_parallel",
             Strategy::Fp16Native => "fp16_native",
             Strategy::Fused => "fused",
+            Strategy::Chunked => "chunked",
+            Strategy::Auto => "auto",
         }
     }
 
+    /// Parse a strategy name (case-insensitive, accepts the short aliases
+    /// used by the CLI and the python manifest).
     pub fn from_name(name: &str) -> anyhow::Result<Strategy> {
-        Ok(match name {
-            "splitk" => Strategy::SplitK,
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "splitk" | "split_k" => Strategy::SplitK,
             "dp" | "data_parallel" => Strategy::DataParallel,
             "fp16" | "fp16_native" => Strategy::Fp16Native,
             "fused" => Strategy::Fused,
+            "chunked" => Strategy::Chunked,
+            "auto" => Strategy::Auto,
             other => anyhow::bail!("unknown strategy '{other}'"),
         })
+    }
+
+    /// Every directly schedulable strategy (excludes `Auto`).
+    pub fn all_concrete() -> [Strategy; 5] {
+        [
+            Strategy::SplitK,
+            Strategy::DataParallel,
+            Strategy::Fp16Native,
+            Strategy::Fused,
+            Strategy::Chunked,
+        ]
+    }
+}
+
+/// Auto-select a tiling for a (problem, strategy) pair.
+pub fn select_tiling(
+    machine: &MachineConfig,
+    problem: &GemmProblem,
+    strategy: Strategy,
+) -> anyhow::Result<tiling::Tiling> {
+    match strategy {
+        Strategy::SplitK | Strategy::Fused => tiling::select_splitk(machine, problem),
+        Strategy::DataParallel => tiling::select_data_parallel(machine, problem),
+        Strategy::Fp16Native => tiling::select_fp16(machine, problem),
+        Strategy::Chunked => tiling::select_chunked(machine, problem),
+        Strategy::Auto => anyhow::bail!(
+            "Strategy::Auto must be resolved through the tune cache (crate::tune)"
+        ),
     }
 }
 
@@ -100,23 +149,27 @@ pub fn schedule(
     problem: &GemmProblem,
     strategy: Strategy,
 ) -> anyhow::Result<KernelTrace> {
+    let t = select_tiling(machine, problem, strategy)?;
+    schedule_with(machine, problem, strategy, &t)
+}
+
+/// Build the trace for a (problem, strategy) pair with an explicit tiling
+/// (the tuner's entry point: cached winners carry their tiling).
+pub fn schedule_with(
+    machine: &MachineConfig,
+    problem: &GemmProblem,
+    strategy: Strategy,
+    t: &tiling::Tiling,
+) -> anyhow::Result<KernelTrace> {
     match strategy {
-        Strategy::SplitK => {
-            let t = tiling::select_splitk(machine, problem)?;
-            splitk::schedule(machine, problem, &t)
-        }
-        Strategy::DataParallel => {
-            let t = tiling::select_data_parallel(machine, problem)?;
-            data_parallel::schedule(machine, problem, &t)
-        }
-        Strategy::Fp16Native => {
-            let t = tiling::select_fp16(machine, problem)?;
-            fp16_native::schedule(machine, problem, &t)
-        }
-        Strategy::Fused => {
-            let t = tiling::select_splitk(machine, problem)?;
-            fused::schedule(machine, problem, &t)
-        }
+        Strategy::SplitK => splitk::schedule(machine, problem, t),
+        Strategy::DataParallel => data_parallel::schedule(machine, problem, t),
+        Strategy::Fp16Native => fp16_native::schedule(machine, problem, t),
+        Strategy::Fused => fused::schedule(machine, problem, t),
+        Strategy::Chunked => chunked::schedule(machine, problem, t),
+        Strategy::Auto => anyhow::bail!(
+            "Strategy::Auto must be resolved through the tune cache (crate::tune)"
+        ),
     }
 }
 
@@ -128,6 +181,42 @@ pub(crate) fn round_robin(items: usize, engines: usize) -> Vec<Vec<usize>> {
         out[item % engines].push(item);
     }
     out
+}
+
+/// Expand a round-robin item assignment into per-engine step sequences:
+/// each item contributes `k_steps` steps — `mid` for every step but the
+/// last, `last` for the final one (the epilogue write).  Engines carry
+/// only two distinct item counts (ceil/floor of the round-robin), so the
+/// two sequences are built once and cloned — shared by every schedule.
+pub(crate) fn round_robin_steps(
+    items: usize,
+    engines: usize,
+    k_steps: usize,
+    mid: TileStep,
+    last: TileStep,
+) -> Vec<Vec<TileStep>> {
+    debug_assert!(k_steps >= 1, "each work item needs at least one step");
+    let assign = round_robin(items, engines);
+    let mut cache: [(usize, Vec<TileStep>); 2] =
+        [(usize::MAX, Vec::new()), (usize::MAX, Vec::new())];
+    assign
+        .iter()
+        .map(|engine_items| {
+            let count = engine_items.len();
+            if let Some((_, v)) = cache.iter().find(|(c, _)| *c == count) {
+                return v.clone();
+            }
+            let mut steps = Vec::with_capacity(count * k_steps);
+            for _ in 0..count {
+                for kstep in 0..k_steps {
+                    steps.push(if kstep == k_steps - 1 { last } else { mid });
+                }
+            }
+            let slot = if cache[0].0 == usize::MAX { 0 } else { 1 };
+            cache[slot] = (count, steps.clone());
+            steps
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -154,17 +243,74 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_steps_places_epilogue_last() {
+        use crate::ascend::{BufferClass, ComputeOp};
+        let mid = TileStep::new(ComputeOp::Nop).read(BufferClass::Activation, 1);
+        let last = mid.write(BufferClass::Output, 2);
+        let steps = round_robin_steps(5, 2, 3, mid, last);
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].len(), 3 * 3, "ceil engine gets 3 items");
+        assert_eq!(steps[1].len(), 2 * 3, "floor engine gets 2 items");
+        for engine in &steps {
+            for (i, s) in engine.iter().enumerate() {
+                let is_last = i % 3 == 2;
+                assert_eq!(s.write_bytes() == 2, is_last, "step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_steps_single_step_items_are_all_epilogues() {
+        use crate::ascend::{BufferClass, ComputeOp};
+        let mid = TileStep::new(ComputeOp::Nop);
+        let last = TileStep::new(ComputeOp::Nop).write(BufferClass::Output, 2);
+        let steps = round_robin_steps(3, 8, 1, mid, last);
+        let total_writes: u64 = steps
+            .iter()
+            .flatten()
+            .map(|s| s.write_bytes())
+            .sum();
+        assert_eq!(total_writes, 6);
+    }
+
+    #[test]
     fn strategy_names_round_trip() {
-        for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+        for s in [
+            Strategy::SplitK,
+            Strategy::DataParallel,
+            Strategy::Fp16Native,
+            Strategy::Fused,
+            Strategy::Chunked,
+            Strategy::Auto,
+        ] {
             assert_eq!(Strategy::from_name(s.name()).unwrap(), s);
         }
         assert!(Strategy::from_name("bogus").is_err());
     }
 
     #[test]
-    fn problem_validation() {
-        assert!(GemmProblem::new(1, 2048, 7168).validate(128).is_ok());
-        assert!(GemmProblem::new(1, 2048, 100).validate(128).is_err());
-        assert!(GemmProblem::new(1, 17, 256).validate(128).is_err());
+    fn strategy_names_case_insensitive() {
+        assert_eq!(Strategy::from_name("SplitK").unwrap(), Strategy::SplitK);
+        assert_eq!(Strategy::from_name("CHUNKED").unwrap(), Strategy::Chunked);
+        assert_eq!(Strategy::from_name("Auto").unwrap(), Strategy::Auto);
+        assert_eq!(Strategy::from_name("DP").unwrap(), Strategy::DataParallel);
+    }
+
+    #[test]
+    fn problem_validation_uses_own_group() {
+        assert!(GemmProblem::new(1, 2048, 7168).validate().is_ok());
+        assert!(GemmProblem::new(1, 2048, 100).validate().is_err());
+        assert!(GemmProblem::new(1, 17, 256).validate().is_err());
+        let coarse = GemmProblem { group: 256, ..GemmProblem::new(1, 2048, 384) };
+        assert!(coarse.validate().is_err(), "K=384 not a multiple of group=256");
+        let fine = GemmProblem { group: 64, ..GemmProblem::new(1, 2048, 384) };
+        assert!(fine.validate().is_ok());
+    }
+
+    #[test]
+    fn auto_cannot_schedule_directly() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 512, 16384);
+        assert!(schedule(&m, &p, Strategy::Auto).is_err());
     }
 }

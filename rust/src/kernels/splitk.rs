@@ -21,12 +21,14 @@
 
 use crate::ascend::{
     BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+    WorkspacePolicy,
 };
 
-use super::{round_robin, tiling::Tiling, GemmProblem};
+use super::{round_robin, round_robin_steps, tiling::Tiling, GemmProblem};
 
-/// Build the Phase-1 dequant phase (shared with the data-parallel schedule,
-/// which restricts it to the active cores' vector units).
+/// Build the Phase-1 dequant phase (shared with the data-parallel and
+/// chunked schedules; the former restricts it to the active cores' vector
+/// units, the latter builds one per K chunk).
 pub(crate) fn dequant_phase(
     machine: &MachineConfig,
     p: &GemmProblem,
@@ -56,6 +58,7 @@ pub(crate) fn dequant_phase(
         unit: Unit::Vector,
         steps_per_engine,
         pipelined_with_prev,
+        chunk: None,
     }
 }
 
@@ -87,38 +90,18 @@ pub fn schedule(
         (t.bm * t.bn * 4) as u64
     };
     let c_class = if single_split { BufferClass::Output } else { BufferClass::Partial };
-    let assign = round_robin(items, machine.ai_cores);
     let mid_step = TileStep::new(ComputeOp::Mmad { m: t.bm, n: t.bn, k: t.bk })
         .with_burst((t.bn * 2) as u64)
         .read(BufferClass::Workspace, b_tile)
         .read(BufferClass::Activation, a_tile);
     let last_step = mid_step.write(c_class, c_tile);
-    // Engines carry only two distinct item counts (ceil/floor of the
-    // round-robin); build each step sequence once and clone.
-    let mut cache: [(usize, Vec<TileStep>); 2] = [(usize::MAX, Vec::new()), (usize::MAX, Vec::new())];
-    let steps_per_engine: Vec<Vec<TileStep>> = assign
-        .iter()
-        .map(|engine_items| {
-            let count = engine_items.len();
-            if let Some((_, v)) = cache.iter().find(|(c, _)| *c == count) {
-                return v.clone();
-            }
-            let mut steps = Vec::with_capacity(count * k_steps);
-            for _ in 0..count {
-                for kstep in 0..k_steps {
-                    steps.push(if kstep == k_steps - 1 { last_step } else { mid_step });
-                }
-            }
-            let slot = if cache[0].0 == usize::MAX { 0 } else { 1 };
-            cache[slot] = (count, steps.clone());
-            steps
-        })
-        .collect();
+    let steps_per_engine = round_robin_steps(items, machine.ai_cores, k_steps, mid_step, last_step);
     let p2 = Phase {
         name: "splitk_mmad",
         unit: Unit::Cube,
         steps_per_engine,
         pipelined_with_prev: true,
+        chunk: None,
     };
     if single_split {
         return Ok(KernelTrace {
@@ -126,6 +109,7 @@ pub fn schedule(
             phases: vec![p1, p2],
             workspace_bytes: p.f16_weight_bytes(),
             partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
         });
     }
 
@@ -144,6 +128,7 @@ pub fn schedule(
         unit: Unit::Vector,
         steps_per_engine,
         pipelined_with_prev: false,
+        chunk: None,
     };
 
     Ok(KernelTrace {
@@ -151,6 +136,7 @@ pub fn schedule(
         phases: vec![p1, p2, p3],
         workspace_bytes: p.f16_weight_bytes(),
         partial_bytes: (t.splits * m_pad * p.n * 4) as u64,
+        workspace_policy: WorkspacePolicy::Buffered,
     })
 }
 

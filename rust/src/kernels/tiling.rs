@@ -20,6 +20,10 @@ pub struct Tiling {
     pub bk: usize,
     /// Split-K factor S (1 = data-parallel / native).
     pub splits: usize,
+    /// K-chunk count C for the chunk-pipelined schedule (1 = monolithic).
+    /// Each chunk's dequanted FP16 slice is `(K/C) x N`; the chunked
+    /// schedule keeps two slices live in a pinned L2 double buffer.
+    pub chunks: usize,
     /// Vector-core dequant tile (Phase 1).
     pub dequant_bk: usize,
     pub dequant_bn: usize,
@@ -44,6 +48,17 @@ impl Tiling {
         anyhow::ensure!(self.dequant_bk % p.group == 0, "dequant bk not group-aligned");
         anyhow::ensure!(p.k % self.dequant_bk == 0 && p.n % self.dequant_bn == 0,
             "dequant tile must tile (K, N)");
+        anyhow::ensure!(self.chunks >= 1, "chunk count must be positive");
+        if self.chunks > 1 {
+            anyhow::ensure!(p.k % self.chunks == 0, "chunks {} !| K={}", self.chunks, p.k);
+            let kc = p.k / self.chunks;
+            anyhow::ensure!(kc % self.splits == 0, "splits {} !| K/C={kc}", self.splits);
+            anyhow::ensure!(
+                (kc / self.splits) % self.bk == 0,
+                "bk {} !| K/C/S={}", self.bk, kc / self.splits
+            );
+            anyhow::ensure!(kc % self.dequant_bk == 0, "dequant bk !| chunk extent {kc}");
+        }
         Ok(())
     }
 
@@ -96,7 +111,7 @@ fn phase2_cost(machine: &MachineConfig, p: &GemmProblem, t: &Tiling) -> f64 {
 /// a preference for wider tiles on near-ties — mirroring how CATLASS
 /// swizzles its Split-K grid.
 pub fn select_splitk(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
-    p.validate(p.group)?;
+    p.validate()?;
     let m_pad = p.m_padded(machine);
     let bm = pow2_divisor(m_pad, 64, 16);
     let m_tiles = m_pad / bm;
@@ -121,6 +136,7 @@ pub fn select_splitk(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result
                 bn,
                 bk,
                 splits,
+                chunks: 1,
                 dequant_bk: p.group,
                 dequant_bn: pow2_divisor(p.n, 256, 16),
             };
@@ -158,7 +174,7 @@ pub fn select_splitk(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result
 /// FP16 GEMM picks its strip width per problem, so we search candidates
 /// and take the one minimizing max(weight-transfer, compute) time.
 pub fn select_fp16(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
-    p.validate(p.group)?;
+    p.validate()?;
     let m_pad = p.m_padded(machine);
     let mut best: Option<(f64, Tiling)> = None;
     for bn in [256usize, 128, 64, 32, 16] {
@@ -178,6 +194,7 @@ pub fn select_fp16(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<T
                 bn,
                 bk,
                 splits: 1,
+                chunks: 1,
                 dequant_bk: p.group,
                 dequant_bn: pow2_divisor(p.n, 256, 16),
             };
@@ -209,7 +226,7 @@ pub fn select_fp16(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<T
 /// output strips, full-K per strip, S = 1 (the paper's baseline kernel is
 /// a fixed-template implementation, not an auto-tuned one).
 pub fn select_data_parallel(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
-    p.validate(p.group)?;
+    p.validate()?;
     let m_pad = p.m_padded(machine);
     let bn = pow2_divisor(p.n, 256, 16);
     // bk shrinks so the double-buffered B tile fits L0B: 2*bk*bn*2 <= L0B.
@@ -223,11 +240,70 @@ pub fn select_data_parallel(machine: &MachineConfig, p: &GemmProblem) -> anyhow:
         bn,
         bk,
         splits: 1,
+        chunks: 1,
         dequant_bk: p.group,
         dequant_bn: pow2_divisor(p.n, 256, 16),
     };
     t.validate(machine, p)?;
     Ok(t)
+}
+
+/// Tiling for the chunk-pipelined schedule: start from the Split-K
+/// decision (occupancy within a chunk obeys the same math), then pick the
+/// chunk count C.
+///
+/// Candidates: C = 1 (which degenerates to Algorithm 1's buffered
+/// handoff — best when the whole workspace fits, or when chunking would
+/// move the bottleneck onto the L2 stream), and the shallowest legal C
+/// whose double-buffered FP16 slice pair `2 * (K/C) * N * 2` fits the
+/// retained L2 capacity (or the deepest legal C when none fits —
+/// smallest slices degrade most gracefully).  The two candidates are
+/// scored by the full simulator: chunk rotation trades HBM spill traffic
+/// for extra L2 stream occupancy, and which side wins is exactly the
+/// max-of-streams question the simulator answers.  Because C = 1 is
+/// always in the candidate set, the chunked strategy never loses to the
+/// heuristic Split-K schedule.
+pub fn select_chunked(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
+    use crate::ascend::Simulator;
+    use crate::kernels::chunked;
+
+    let base = select_splitk(machine, p)?;
+    let budget = machine.l2_retention * machine.l2_bytes as f64;
+    let resident = |c: usize| {
+        let slice = (p.k / c) * p.n * 2;
+        (slice * c.min(2)) as f64
+    };
+    if resident(1) <= budget {
+        // The whole workspace pins: chunking could only add rotations.
+        return Ok(base);
+    }
+    let legal = |c: usize| {
+        let cand = Tiling { chunks: c, ..base };
+        cand.validate(machine, p).is_ok()
+    };
+    let max_chunks = (p.k / base.dequant_bk).min(64);
+    let mut fit: Option<usize> = None;
+    let mut deepest = 1usize;
+    for c in 2..=max_chunks {
+        if !legal(c) {
+            continue;
+        }
+        deepest = c;
+        if resident(c) <= budget {
+            fit = Some(c);
+            break;
+        }
+    }
+    let candidate = fit.unwrap_or(deepest);
+    if candidate == 1 {
+        return Ok(base);
+    }
+    let sim = Simulator::new(machine.clone());
+    let mono = base; // chunks == 1
+    let chunky = Tiling { chunks: candidate, ..base };
+    let mono_ns = sim.run(&chunked::schedule(machine, p, &mono)?)?.total_ns;
+    let chunky_ns = sim.run(&chunked::schedule(machine, p, &chunky)?)?.total_ns;
+    Ok(if chunky_ns <= mono_ns { chunky } else { mono })
 }
 
 #[cfg(test)]
@@ -283,5 +359,57 @@ mod tests {
         let p = GemmProblem::new(16, 1024, 4096);
         let t = select_splitk(&m(), &p).unwrap();
         assert_eq!(t.mmad_items(&m(), &p), t.splits * (1024 / t.bn));
+    }
+
+    #[test]
+    fn chunked_picks_resident_slices_for_spilling_shapes() {
+        let machine = m();
+        let budget = machine.l2_retention * machine.l2_bytes as f64;
+        // Workspaces far beyond L2 (120+ MiB): chunking must win and the
+        // chosen rotating slice pair must stay resident.
+        for (n, k) in [(12288, 5120), (5120, 12288), (7168, 7168)] {
+            let p = GemmProblem::new(8, n, k);
+            let t = select_chunked(&machine, &p).unwrap();
+            assert!(t.chunks > 1, "n={n} k={k}: expected chunking, got C={}", t.chunks);
+            let slice = ((k / t.chunks) * n * 2) as f64;
+            assert!(
+                slice * 2.0 <= budget,
+                "n={n} k={k}: C={} slice pair {} exceeds {budget}",
+                t.chunks,
+                slice * 2.0
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_skips_chunking_when_workspace_fits() {
+        // 16 MiB of FP16 weights fit the retained 28.8 MiB outright.
+        let t = select_chunked(&m(), &GemmProblem::new(8, 512, 16384)).unwrap();
+        assert_eq!(t.chunks, 1);
+    }
+
+    #[test]
+    fn all_paper_shapes_tile_chunked() {
+        for (n, k) in [
+            (2048, 2048), (8192, 2048), (2048, 8192),
+            (5120, 5120), (12288, 5120), (5120, 12288),
+            (7168, 7168), (2048, 7168), (7168, 2048), (1536, 7168),
+            (7680, 7680), (1024, 7680),
+        ] {
+            for batch in [1, 8, 64] {
+                let p = GemmProblem::new(batch, n, k);
+                let t = select_chunked(&m(), &p)
+                    .unwrap_or_else(|e| panic!("chunked {n}x{k} m={batch}: {e}"));
+                t.validate(&m(), &p).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_validation_rejects_misaligned_counts() {
+        let p = GemmProblem::new(8, 512, 16384);
+        let base = select_splitk(&m(), &p).unwrap();
+        let bad = Tiling { chunks: 3, ..base }; // 3 does not divide 16384
+        assert!(bad.validate(&m(), &p).is_err());
     }
 }

@@ -10,8 +10,12 @@
 //!   Ascend 910's decoupled AI-core architecture (cube + vector cores,
 //!   L1/L0/UB buffers, MTE transfer engines, shared L2, HBM contention).
 //! * [`kernels`] — kernel *schedules* (the paper's Algorithm 1 Split-K
-//!   pipeline plus the data-parallel, native-FP16 and fused comparators)
-//!   that compile GEMM problems into simulator traces.
+//!   pipeline, the chunk-pipelined Split-K that pins its workspace in L2,
+//!   plus the data-parallel, native-FP16 and fused comparators) that
+//!   compile GEMM problems into simulator traces.
+//! * [`tune`] — the per-shape schedule autotuner: searches strategies x
+//!   tilings on the simulator, persists winners to a JSON cache, and
+//!   resolves `Strategy::Auto` for the CLI, benches and router.
 //! * [`runtime`] — a PJRT-backed executor that loads the AOT-compiled
 //!   HLO artifacts (JAX + Pallas, lowered at build time) and runs the
 //!   real numerics on the request path with no Python anywhere.
@@ -35,5 +39,6 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod tune;
 pub mod util;
 pub mod workload;

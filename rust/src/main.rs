@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //! * `machine`    — print the simulated Ascend 910 description.
-//! * `simulate`   — simulate one GEMM (`--n --k --batch --strategy`).
+//! * `simulate`   — simulate one GEMM (`--n --k --batch --strategy`,
+//!   including `--strategy auto` through the tune cache).
+//! * `tune`       — autotune the paper sweep, persist the winners.
 //! * `fig2`       — regenerate the paper's Figure 2 (Split-K vs DP sweep).
 //! * `fig3`       — regenerate Figure 3 (W4A16 vs native FP16 sweep).
 //! * `analyze`    — §4.2 memory-bottleneck decomposition for one shape.
@@ -10,17 +12,18 @@
 //! * `serve`      — run the decode-serving coordinator on synthetic load.
 
 use ascend_w4a16::analysis::{report, roofline, sensitivity, timeline, traffic};
-use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::quant;
 use ascend_w4a16::runtime::client::literal_to_host;
 use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
 use ascend_w4a16::tensor::MatF32;
+use ascend_w4a16::tune::{self, Tuner};
 use ascend_w4a16::util::cli::Args;
 use ascend_w4a16::util::prng::Rng;
 use ascend_w4a16::util::stats;
-use ascend_w4a16::workload::RequestGenerator;
+use ascend_w4a16::workload::{self, RequestGenerator};
 
 fn main() {
     let args = Args::from_env();
@@ -38,6 +41,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("machine") => cmd_machine(),
         Some("simulate") => cmd_simulate(args),
+        Some("tune") => cmd_tune(args),
         Some("fig2") => cmd_fig2(args),
         Some("fig3") => cmd_fig3(args),
         Some("analyze") => cmd_analyze(args),
@@ -62,7 +66,13 @@ fn print_usage() {
 USAGE: repro <subcommand> [options]
 
   machine                          print the simulated Ascend 910 description
-  simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused]
+  simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused|chunked|auto]
+           [--tune-cache PATH]     ('auto' resolves through the tune cache)
+  tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]]
+                                   autotune strategies x tilings (the paper
+                                   sweep, plus DIR's decode-model shapes)
+                                   and persist the winners to PATH
+                                   (default tune_cache.json)
   fig2 [--json PATH]               Figure 2: Split-K vs Data-Parallel sweep
   fig3 [--json PATH]               Figure 3: W4A16 vs native FP16 sweep
   analyze [--n N --k K --batch M]  §4.2 memory-bottleneck decomposition
@@ -100,6 +110,30 @@ fn cmd_machine() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve a CLI strategy for one problem: concrete strategies keep their
+/// heuristic tiling; `auto` goes through the tune cache at `--tune-cache`
+/// (falling back to a live search that warms the cache file).
+fn resolve_cli_strategy(
+    args: &Args,
+    m: &MachineConfig,
+    p: &GemmProblem,
+    strategy: Strategy,
+) -> anyhow::Result<(Strategy, kernels::tiling::Tiling)> {
+    if strategy != Strategy::Auto {
+        return Ok((strategy, kernels::select_tiling(m, p, strategy)?));
+    }
+    let path = args.get_or("tune-cache", tune::DEFAULT_CACHE_FILE);
+    let mut tuner = Tuner::load(m.clone(), path)?;
+    let resolved = tuner.resolve_strategy(p, Strategy::Auto)?;
+    if tuner.searches > 0 {
+        tuner.save()?;
+        println!("auto: searched {} (cache warmed at {path})", resolved.0.name());
+    } else {
+        println!("auto: cache hit -> {}", resolved.0.name());
+    }
+    Ok(resolved)
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("n", 2048)?;
     let k = args.get_usize("k", 7168)?;
@@ -107,7 +141,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let strategy = Strategy::from_name(args.get_or("strategy", "splitk"))?;
     let m = machine();
     let p = GemmProblem::new(batch, n, k);
-    let trace = kernels::schedule(&m, &p, strategy)?;
+    let (strategy, tiling) = resolve_cli_strategy(args, &m, &p, strategy)?;
+    let trace = kernels::schedule_with(&m, &p, strategy, &tiling)?;
     let r = Simulator::new(m.clone()).run(&trace)?;
     println!("kernel {}  ({} phases)", r.name, r.phase_times.len());
     println!("total: {}   (launch {} + barriers {})",
@@ -130,6 +165,78 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         point.attainable_tflops,
         if point.memory_bound { "memory-bound" } else { "compute-bound" }
     );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let m = machine();
+    let out = args.get_or("out", tune::DEFAULT_CACHE_FILE);
+    let mut tuner = Tuner::load(m.clone(), out)?;
+    let sim = Simulator::new(m.clone());
+
+    // One explicit shape, or the full paper sweep; with --artifacts, also
+    // every decode model's bottleneck GEMM per compiled batch size so the
+    // serving router's cache-only lookups actually hit.
+    let problems: Vec<GemmProblem> = match (args.get("n"), args.get("k")) {
+        (Some(_), _) | (_, Some(_)) => {
+            let n = args.get_usize("n", 2048)?;
+            let k = args.get_usize("k", 7168)?;
+            let batch = args.get_usize("batch", 8)?;
+            vec![GemmProblem::new(batch, n, k)]
+        }
+        _ => {
+            let mut problems: Vec<GemmProblem> = workload::paper_sweep()
+                .iter()
+                .map(|(shape, batch)| workload::problem_for(shape, *batch))
+                .collect();
+            if let Some(dir) = args.get("artifacts") {
+                let mf = Manifest::load(dir)?;
+                for entry in mf.artifacts.iter().filter(|a| a.kind == "decode") {
+                    let (Some(cfg), Some(batch)) = (entry.config, entry.batch) else {
+                        continue;
+                    };
+                    let mut p = GemmProblem::new(batch, cfg.hidden, cfg.ffn);
+                    p.group = cfg.group;
+                    if p.validate().is_ok() {
+                        problems.push(p);
+                    }
+                }
+            }
+            problems
+        }
+    };
+
+    println!(
+        "{:<28} {:>12} {:>10} {:>10} {:>9}",
+        "shape", "winner", "tuned_us", "splitk_us", "speedup"
+    );
+    let mut speedups = Vec::new();
+    for p in &problems {
+        let e = tuner.resolve(p)?;
+        let sk = sim.run(&kernels::schedule(&m, p, Strategy::SplitK)?)?;
+        let speedup = sk.total_ns / e.total_ns;
+        speedups.push(speedup);
+        println!(
+            "{:<28} {:>12} {:>10.2} {:>10.2} {:>8.2}x",
+            format!("m{}_n{}_k{}", p.m, p.n, p.k),
+            e.strategy.name(),
+            e.total_ns / 1e3,
+            sk.total_ns / 1e3,
+            speedup,
+        );
+    }
+    tuner.save()?;
+    println!(
+        "\ntuned {} shapes ({} searched, {} cache hits) -> {out}",
+        problems.len(),
+        tuner.searches,
+        tuner.hits
+    );
+    println!(
+        "geomean speedup over heuristic splitk: {:.2}x",
+        stats::geomean(&speedups)
+    );
+    println!("serving picks these up automatically (tune_cache.json next to the artifacts).");
     Ok(())
 }
 
@@ -166,9 +273,12 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     println!("{}", report::render_bottleneck(&m, &sk));
     let fp16 = sim.run(&kernels::schedule(&m, &p, Strategy::Fp16Native)?)?;
     let fused = sim.run(&kernels::schedule(&m, &p, Strategy::Fused)?)?;
+    let chunked = sim.run(&kernels::schedule(&m, &p, Strategy::Chunked)?)?;
     println!("cross-strategy timing at M={batch}, N={n}, K={k}:");
     println!("  fp16 native : {}", stats::fmt_ns(fp16.total_ns));
     println!("  w4a16 splitk: {}  ({:.2}x vs fp16)", stats::fmt_ns(sk.total_ns), fp16.total_ns / sk.total_ns);
+    println!("  w4a16 chunked: {}  ({:.2}x vs fp16)",
+        stats::fmt_ns(chunked.total_ns), fp16.total_ns / chunked.total_ns);
     println!("  fused (hypothetical direct path): {}  ({:.2}x vs fp16)",
         stats::fmt_ns(fused.total_ns), fp16.total_ns / fused.total_ns);
     let b = traffic::decompose(&sk);
@@ -177,6 +287,14 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
          recovers the latency headroom the paper attributes to the decoupled architecture.",
         stats::fmt_bytes(b.round_trip_bytes),
         stats::fmt_bytes(b.packed_bytes),
+    );
+    let sk_ws = sk.ledger.class(BufferClass::Workspace);
+    let ck_ws = chunked.ledger.class(BufferClass::Workspace);
+    println!(
+        "workspace HBM traffic: splitk {} -> chunked {} (the chunk pipeline keeps the \
+         rotating slice pinned in L2; see DESIGN.md §8)",
+        stats::fmt_bytes(sk_ws.hbm_total()),
+        stats::fmt_bytes(ck_ws.hbm_total()),
     );
     Ok(())
 }
@@ -209,7 +327,8 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--out FILE.json is required"))?;
     let m = machine();
     let p = GemmProblem::new(batch, n, k);
-    let r = Simulator::new(m.clone()).run(&kernels::schedule(&m, &p, strategy)?)?;
+    let (strategy, tiling) = resolve_cli_strategy(args, &m, &p, strategy)?;
+    let r = Simulator::new(m.clone()).run(&kernels::schedule_with(&m, &p, strategy, &tiling)?)?;
     std::fs::write(out, timeline::chrome_trace(&r).to_string())?;
     println!(
         "wrote {out} ({}; open in chrome://tracing or ui.perfetto.dev)",
@@ -265,6 +384,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let sizes = router.batch_sizes();
     println!("serving model '{model}' with batch sizes {sizes:?}");
     let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
+    println!(
+        "tune cache: {}",
+        if server.router.has_tune_cache() {
+            "found — decode groups serve their tuned schedules"
+        } else {
+            "absent — run `repro tune --artifacts DIR --out DIR/tune_cache.json` to tune"
+        }
+    );
 
     // Peek model limits from the first engine.
     let (vocab, max_seq) = {

@@ -7,7 +7,7 @@
 //! and executes the compiled module.  No Python, no re-compilation, no
 //! weight re-conversion anywhere on this path.
 
-use crate::runtime::client::literal_to_host;
+use crate::runtime::client::{literal_to_host, Literal};
 use crate::runtime::{ArtifactEntry, Executable, HostTensor, Runtime};
 
 use std::sync::Arc;
@@ -23,9 +23,9 @@ pub struct StepOutput {
 pub struct DecodeEngine {
     exe: Arc<Executable>,
     /// Weight literals in artifact input order (inputs[3..]).
-    weights: Vec<xla::Literal>,
+    weights: Vec<Literal>,
     /// Persistent KV cache literal (output of the previous step).
-    cache: xla::Literal,
+    cache: Literal,
     pub batch: usize,
     pub vocab: usize,
     pub max_seq: usize,
@@ -102,7 +102,7 @@ impl DecodeEngine {
         let tok = HostTensor::I32(tokens.to_vec()).to_literal(&[self.batch])?;
         let pos = HostTensor::I32(positions.to_vec()).to_literal(&[self.batch])?;
 
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weights.len());
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 + self.weights.len());
         args.push(&tok);
         args.push(&pos);
         args.push(&self.cache);

@@ -1,14 +1,41 @@
 //! PJRT client wrapper: compile HLO text, move typed host tensors across
 //! the boundary, cache compiled executables.
+//!
+//! The `xla` bindings are only present when the `pjrt` cargo feature is
+//! enabled (the offline build image does not ship them).  Without the
+//! feature this module compiles a stub with the same API surface whose
+//! operations fail cleanly at artifact-load / literal-conversion time, so
+//! the simulator, tuner and coordinator logic build and test everywhere.
 
-use std::collections::HashMap;
 use std::path::Path;
+
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use crate::tensor::DType;
 use crate::util::f16;
 
 use super::artifacts::{ArtifactEntry, TensorSpec};
+
+/// Device-side literal handle.  With `pjrt` this is the real
+/// `xla::Literal`; otherwise an opaque placeholder that can never be
+/// constructed through the public API (every constructor errors).
+#[cfg(feature = "pjrt")]
+pub type Literal = xla::Literal;
+
+/// Stub literal for builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Literal {
+    _opaque: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn no_pjrt<T>(what: &str) -> anyhow::Result<T> {
+    anyhow::bail!("{what} requires the 'pjrt' cargo feature (xla bindings not built in)")
+}
 
 /// A typed host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone)]
@@ -39,6 +66,8 @@ impl HostTensor {
         }
     }
 
+    // Only the real `to_literal` consumes this outside of tests.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn bytes(&self) -> Vec<u8> {
         match self {
             HostTensor::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
@@ -48,6 +77,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn element_type(&self) -> xla::ElementType {
         match self {
             HostTensor::F32(_) => xla::ElementType::F32,
@@ -58,7 +88,8 @@ impl HostTensor {
     }
 
     /// Convert into a PJRT literal of the given shape.
-    pub fn to_literal(&self, shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    #[cfg(feature = "pjrt")]
+    pub fn to_literal(&self, shape: &[usize]) -> anyhow::Result<Literal> {
         let n: usize = shape.iter().product();
         anyhow::ensure!(
             n == self.elements(),
@@ -71,6 +102,18 @@ impl HostTensor {
             &self.bytes(),
         )
         .map_err(|e| anyhow::anyhow!("literal creation failed: {e}"))
+    }
+
+    /// Convert into a PJRT literal of the given shape (stub: errors).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn to_literal(&self, shape: &[usize]) -> anyhow::Result<Literal> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(
+            n == self.elements(),
+            "shape {shape:?} has {n} elements, tensor has {}",
+            self.elements()
+        );
+        no_pjrt("literal creation")
     }
 
     /// Build from raw bytes + a manifest spec (weight blobs).
@@ -102,7 +145,8 @@ impl HostTensor {
 }
 
 /// Read a literal back into a typed host tensor.
-pub fn literal_to_host(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+#[cfg(feature = "pjrt")]
+pub fn literal_to_host(lit: &Literal) -> anyhow::Result<HostTensor> {
     use xla::ElementType as E;
     Ok(match lit.ty()? {
         E::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
@@ -120,17 +164,25 @@ pub fn literal_to_host(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
     })
 }
 
+/// Read a literal back into a typed host tensor (stub: unreachable, since
+/// stub literals cannot be constructed).
+#[cfg(not(feature = "pjrt"))]
+pub fn literal_to_host(_lit: &Literal) -> anyhow::Result<HostTensor> {
+    no_pjrt("literal readback")
+}
+
 /// A compiled artifact bound to its I/O contract.
 pub struct Executable {
     pub name: String,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl Executable {
     /// Execute with host tensors; returns decomposed output literals.
-    pub fn run(&self, args: &[HostTensor]) -> anyhow::Result<Vec<xla::Literal>> {
+    pub fn run(&self, args: &[HostTensor]) -> anyhow::Result<Vec<Literal>> {
         anyhow::ensure!(
             args.len() == self.inputs.len(),
             "{}: got {} args, artifact expects {}",
@@ -151,31 +203,41 @@ impl Executable {
     }
 
     /// Execute with prepared literals (hot path: no host conversion).
-    pub fn run_literals(&self, literals: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+    #[cfg(feature = "pjrt")]
+    pub fn run_literals(&self, literals: &[Literal]) -> anyhow::Result<Vec<Literal>> {
         let result = self
             .exe
-            .execute::<xla::Literal>(literals)
+            .execute::<Literal>(literals)
             .map_err(|e| anyhow::anyhow!("{}: execute failed: {e}", self.name))?;
         Self::unwrap_tuple(&self.name, result)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_literals(&self, _literals: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        no_pjrt("execution")
     }
 
     /// Execute with borrowed literals — avoids cloning staged weights on
     /// the serving hot path.
-    pub fn run_literals_ref(
-        &self,
-        literals: &[&xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
+    #[cfg(feature = "pjrt")]
+    pub fn run_literals_ref(&self, literals: &[&Literal]) -> anyhow::Result<Vec<Literal>> {
         let result = self
             .exe
-            .execute::<&xla::Literal>(literals)
+            .execute::<&Literal>(literals)
             .map_err(|e| anyhow::anyhow!("{}: execute failed: {e}", self.name))?;
         Self::unwrap_tuple(&self.name, result)
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_literals_ref(&self, _literals: &[&Literal]) -> anyhow::Result<Vec<Literal>> {
+        no_pjrt("execution")
+    }
+
+    #[cfg(feature = "pjrt")]
     fn unwrap_tuple(
         name: &str,
         result: Vec<Vec<xla::PjRtBuffer>>,
-    ) -> anyhow::Result<Vec<xla::Literal>> {
+    ) -> anyhow::Result<Vec<Literal>> {
         let tuple = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("{name}: readback failed: {e}"))?;
@@ -188,23 +250,43 @@ impl Executable {
 
 /// The PJRT runtime: one CPU client + a compiled-executable cache.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    #[cfg(not(feature = "pjrt"))]
+    _private: (),
 }
 
 impl Runtime {
     /// Create a CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> anyhow::Result<Runtime> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
         Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// Create a stub runtime (no PJRT): succeeds so callers can construct
+    /// the serving stack, but any artifact load errors cleanly.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Ok(Runtime { _private: () })
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "stub (built without the 'pjrt' feature)".to_string()
+        }
     }
 
     /// Compile HLO text from a file (uncached).
+    #[cfg(feature = "pjrt")]
     pub fn compile_file(
         &self,
         name: &str,
@@ -224,7 +306,23 @@ impl Runtime {
         Ok(Executable { name: name.to_string(), inputs, outputs, exe })
     }
 
+    /// Compile HLO text from a file (stub: reads the file so missing-path
+    /// errors stay informative, then reports the missing feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compile_file(
+        &self,
+        name: &str,
+        path: &Path,
+        _inputs: Vec<TensorSpec>,
+        _outputs: Vec<TensorSpec>,
+    ) -> anyhow::Result<Executable> {
+        std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        no_pjrt(&format!("compiling '{name}'"))
+    }
+
     /// Compile a manifest artifact, with caching by name.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, entry: &ArtifactEntry) -> anyhow::Result<std::sync::Arc<Executable>> {
         if let Some(hit) = self.cache.lock().unwrap().get(&entry.name) {
             return Ok(hit.clone());
@@ -242,9 +340,27 @@ impl Runtime {
         Ok(exe)
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, entry: &ArtifactEntry) -> anyhow::Result<std::sync::Arc<Executable>> {
+        self.compile_file(
+            &entry.name,
+            &entry.hlo_path,
+            entry.inputs.clone(),
+            entry.outputs.clone(),
+        )
+        .map(std::sync::Arc::new)
+    }
+
     /// Number of cached executables (metrics).
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        #[cfg(feature = "pjrt")]
+        {
+            self.cache.lock().unwrap().len()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            0
+        }
     }
 }
 
@@ -283,6 +399,20 @@ mod tests {
     fn literal_shape_mismatch_errors() {
         let t = HostTensor::F32(vec![1.0; 6]);
         assert!(t.to_literal(&[2, 2]).is_err());
+        #[cfg(feature = "pjrt")]
         assert!(t.to_literal(&[2, 3]).is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_constructs_but_cannot_compile() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().contains("stub"));
+        assert_eq!(rt.cached(), 0);
+        let err = rt
+            .compile_file("x", Path::new("/nonexistent.hlo.txt"), vec![], vec![])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent.hlo.txt"), "{err}");
     }
 }

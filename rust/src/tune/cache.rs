@@ -1,0 +1,243 @@
+//! Persistent tune cache: maps `(machine, M_pad, N, K, group)` shapes to
+//! their winning (strategy, tiling) schedule, as found by [`super::search`].
+//!
+//! The on-disk format is a single JSON document (`util::json`-based, no
+//! external serializer):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": {
+//!     "aic32_l233554432_hbm1200/m16_n512_k16384_g128": {
+//!       "strategy": "chunked",
+//!       "total_ns": 28514.2,
+//!       "tiling": {"bm":16,"bn":256,"bk":128,"splits":16,"chunks":1,
+//!                  "dequant_bk":128,"dequant_bn":256}
+//!     }
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::ascend::MachineConfig;
+use crate::kernels::tiling::Tiling;
+use crate::kernels::{GemmProblem, Strategy};
+use crate::util::json::Json;
+
+/// One cached winner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedEntry {
+    pub strategy: Strategy,
+    pub tiling: Tiling,
+    /// Simulated execution time of the winner (for reporting / staleness).
+    pub total_ns: f64,
+}
+
+/// A machine tag that keys the cache to the architecture it was tuned on:
+/// winners are invalid once core counts, L2 capacity or HBM bandwidth move.
+pub fn machine_tag(machine: &MachineConfig) -> String {
+    format!(
+        "aic{}_l2{}_hbm{}",
+        machine.ai_cores, machine.l2_bytes, machine.hbm_bw as u64
+    )
+}
+
+/// Cache key for one problem on one machine.  M is padded to the cube tile
+/// so every decode batch in 1..=16 shares one entry, as the hardware does.
+pub fn shape_key(machine: &MachineConfig, p: &GemmProblem) -> String {
+    format!(
+        "{}/m{}_n{}_k{}_g{}",
+        machine_tag(machine),
+        p.m_padded(machine),
+        p.n,
+        p.k,
+        p.group
+    )
+}
+
+/// The cache proper.
+#[derive(Debug, Clone, Default)]
+pub struct TuneCache {
+    entries: BTreeMap<String, TunedEntry>,
+}
+
+impl TuneCache {
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TunedEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, entry: TunedEntry) {
+        self.entries.insert(key, entry);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &TunedEntry)> {
+        self.entries.iter()
+    }
+
+    // ----- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(k, e)| (k.clone(), entry_to_json(e)))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TuneCache> {
+        let version = j.req_usize("version")?;
+        anyhow::ensure!(version == 1, "unsupported tune cache version {version}");
+        let mut cache = TuneCache::new();
+        let entries = j
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("'entries' is not an object"))?;
+        for (key, e) in entries {
+            cache.insert(key.clone(), entry_from_json(e)?);
+        }
+        Ok(cache)
+    }
+
+    /// Load from a file; a missing file is an empty cache (first run).
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TuneCache> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(TuneCache::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        Self::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("parsing tune cache {}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+fn entry_to_json(e: &TunedEntry) -> Json {
+    Json::obj(vec![
+        ("strategy", Json::str(e.strategy.name())),
+        ("total_ns", Json::num(e.total_ns)),
+        (
+            "tiling",
+            Json::obj(vec![
+                ("bm", Json::num(e.tiling.bm as f64)),
+                ("bn", Json::num(e.tiling.bn as f64)),
+                ("bk", Json::num(e.tiling.bk as f64)),
+                ("splits", Json::num(e.tiling.splits as f64)),
+                ("chunks", Json::num(e.tiling.chunks as f64)),
+                ("dequant_bk", Json::num(e.tiling.dequant_bk as f64)),
+                ("dequant_bn", Json::num(e.tiling.dequant_bn as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> anyhow::Result<TunedEntry> {
+    let t = j.req("tiling")?;
+    Ok(TunedEntry {
+        strategy: Strategy::from_name(j.req_str("strategy")?)?,
+        total_ns: j
+            .req("total_ns")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("total_ns is not a number"))?,
+        tiling: Tiling {
+            bm: t.req_usize("bm")?,
+            bn: t.req_usize("bn")?,
+            bk: t.req_usize("bk")?,
+            splits: t.req_usize("splits")?,
+            chunks: t.req_usize("chunks")?,
+            dequant_bk: t.req_usize("dequant_bk")?,
+            dequant_bn: t.req_usize("dequant_bn")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> TunedEntry {
+        TunedEntry {
+            strategy: Strategy::Chunked,
+            total_ns: 1234.5,
+            tiling: Tiling {
+                bm: 16,
+                bn: 256,
+                bk: 128,
+                splits: 4,
+                chunks: 8,
+                dequant_bk: 128,
+                dequant_bn: 256,
+            },
+        }
+    }
+
+    #[test]
+    fn json_round_trips_entries() {
+        let mut c = TuneCache::new();
+        c.insert("k1".into(), entry());
+        let j = c.to_json();
+        let back = TuneCache::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.get("k1").copied().unwrap(), entry());
+    }
+
+    #[test]
+    fn shape_key_pads_m_to_cube_tile() {
+        let m = MachineConfig::ascend910();
+        let a = shape_key(&m, &GemmProblem::new(3, 512, 16384));
+        let b = shape_key(&m, &GemmProblem::new(16, 512, 16384));
+        assert_eq!(a, b, "batches below the cube tile share one schedule");
+        let c = shape_key(&m, &GemmProblem::new(17, 512, 16384));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn load_missing_file_is_empty() {
+        let c = TuneCache::load("/nonexistent/tune_cache.json").unwrap();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!("w4a16-tune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune_cache.json");
+        let mut c = TuneCache::new();
+        c.insert("a/b".into(), entry());
+        c.save(&path).unwrap();
+        let back = TuneCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.get("a/b").unwrap().strategy, Strategy::Chunked);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let j = Json::parse(r#"{"version": 9, "entries": {}}"#).unwrap();
+        assert!(TuneCache::from_json(&j).is_err());
+    }
+}

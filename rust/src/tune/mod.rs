@@ -1,0 +1,186 @@
+//! Per-shape schedule autotuner with a persisted cache.
+//!
+//! The tuner closes the loop between the kernel schedules and the serving
+//! stack (DESIGN.md §9): `repro tune` searches strategies x tilings per
+//! `(machine, M_pad, N, K, group)` shape with [`search`], persists the
+//! winners to a JSON [`cache::TuneCache`], and everything downstream —
+//! `simulate --strategy auto`, the benches, the coordinator router —
+//! resolves [`Strategy::Auto`](crate::kernels::Strategy) through that
+//! cache without re-searching.
+//!
+//! Cache misses at resolve time fall back to a live search (and populate
+//! the in-memory cache) so first runs still work; [`Tuner::lookup`] is
+//! the search-free variant the serving hot path uses.
+
+pub mod cache;
+pub mod search;
+
+pub use cache::{machine_tag, shape_key, TuneCache, TunedEntry};
+pub use search::{search, SearchResult};
+
+use std::path::{Path, PathBuf};
+
+use crate::ascend::{KernelTrace, MachineConfig};
+use crate::kernels::{self, GemmProblem, Strategy};
+
+/// Default cache file name (next to the artifacts / working directory).
+pub const DEFAULT_CACHE_FILE: &str = "tune_cache.json";
+
+/// The autotuner: a machine, its cache, and hit/search accounting.
+#[derive(Debug, Clone)]
+pub struct Tuner {
+    machine: MachineConfig,
+    pub cache: TuneCache,
+    /// Where `save()` writes (set by `load`; `None` for in-memory tuners).
+    path: Option<PathBuf>,
+    /// Resolutions served from the cache.
+    pub hits: usize,
+    /// Resolutions that required a live search.
+    pub searches: usize,
+}
+
+impl Tuner {
+    pub fn new(machine: MachineConfig) -> Tuner {
+        Tuner { machine, cache: TuneCache::new(), path: None, hits: 0, searches: 0 }
+    }
+
+    /// Load (or start) the cache at `path`.
+    pub fn load(machine: MachineConfig, path: impl AsRef<Path>) -> anyhow::Result<Tuner> {
+        let path = path.as_ref().to_path_buf();
+        let cache = TuneCache::load(&path)?;
+        Ok(Tuner { machine, cache, path: Some(path), hits: 0, searches: 0 })
+    }
+
+    pub fn machine(&self) -> &MachineConfig {
+        &self.machine
+    }
+
+    pub fn key(&self, p: &GemmProblem) -> String {
+        shape_key(&self.machine, p)
+    }
+
+    /// Cache-only resolution — never searches (the serving hot path).
+    pub fn lookup(&mut self, p: &GemmProblem) -> Option<TunedEntry> {
+        let hit = self.cache.get(&self.key(p)).copied();
+        if hit.is_some() {
+            self.hits += 1;
+        }
+        hit
+    }
+
+    /// Resolve a shape to its tuned schedule: cache hit, or search + fill.
+    pub fn resolve(&mut self, p: &GemmProblem) -> anyhow::Result<TunedEntry> {
+        let key = self.key(p);
+        if let Some(e) = self.cache.get(&key) {
+            self.hits += 1;
+            return Ok(*e);
+        }
+        let result = search::search(&self.machine, p)?;
+        self.searches += 1;
+        self.cache.insert(key, result.best);
+        Ok(result.best)
+    }
+
+    /// Resolve a strategy selector: `Auto` goes through the cache/search,
+    /// concrete strategies keep their heuristic tiling.
+    pub fn resolve_strategy(
+        &mut self,
+        p: &GemmProblem,
+        strategy: Strategy,
+    ) -> anyhow::Result<(Strategy, kernels::tiling::Tiling)> {
+        if strategy == Strategy::Auto {
+            let e = self.resolve(p)?;
+            Ok((e.strategy, e.tiling))
+        } else {
+            Ok((strategy, kernels::select_tiling(&self.machine, p, strategy)?))
+        }
+    }
+
+    /// Build the tuned trace for a problem (resolving `Auto`).
+    pub fn schedule(&mut self, p: &GemmProblem, strategy: Strategy) -> anyhow::Result<KernelTrace> {
+        let (s, t) = self.resolve_strategy(p, strategy)?;
+        kernels::schedule_with(&self.machine, p, s, &t)
+    }
+
+    /// Persist the cache to its load path (no-op destination error if the
+    /// tuner was created in-memory).
+    pub fn save(&self) -> anyhow::Result<()> {
+        let path = self
+            .path
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("in-memory tuner has no cache path"))?;
+        self.cache.save(path)
+    }
+
+    /// Persist the cache to an explicit path.
+    pub fn save_to(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        self.cache.save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+
+    fn machine() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn resolve_searches_once_then_hits() {
+        let mut tuner = Tuner::new(machine());
+        let p = GemmProblem::new(8, 512, 16384);
+        let a = tuner.resolve(&p).unwrap();
+        assert_eq!((tuner.searches, tuner.hits), (1, 0));
+        let b = tuner.resolve(&p).unwrap();
+        assert_eq!((tuner.searches, tuner.hits), (1, 1));
+        assert_eq!(a, b);
+        // Padded-M aliasing: batch 3 resolves to the same entry, no search.
+        let c = tuner.resolve(&GemmProblem::new(3, 512, 16384)).unwrap();
+        assert_eq!((tuner.searches, tuner.hits), (1, 2));
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn persisted_cache_resolves_without_search() {
+        let dir = std::env::temp_dir().join(format!("w4a16-tuner-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(DEFAULT_CACHE_FILE);
+        let p = GemmProblem::new(8, 512, 16384);
+
+        let mut warm = Tuner::load(machine(), &path).unwrap();
+        warm.resolve(&p).unwrap();
+        warm.save().unwrap();
+
+        let mut cold = Tuner::load(machine(), &path).unwrap();
+        let e = cold.resolve(&p).unwrap();
+        assert_eq!(cold.searches, 0, "persisted winner must be reused");
+        assert_eq!(cold.hits, 1);
+        assert!(e.total_ns > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_schedules_through_the_tuner() {
+        let mut tuner = Tuner::new(machine());
+        let p = GemmProblem::new(8, 512, 16384);
+        let trace = tuner.schedule(&p, Strategy::Auto).unwrap();
+        let r = Simulator::new(machine()).run(&trace).unwrap();
+        assert!(r.total_ns > 0.0);
+        // The tuned schedule can never lose to the heuristic splitk pick.
+        let sk = Simulator::new(machine())
+            .run(&kernels::schedule(&machine(), &p, Strategy::SplitK).unwrap())
+            .unwrap();
+        assert!(r.total_ns <= sk.total_ns * 1.000001);
+    }
+
+    #[test]
+    fn concrete_strategy_passes_through() {
+        let mut tuner = Tuner::new(machine());
+        let p = GemmProblem::new(8, 512, 16384);
+        let (s, _) = tuner.resolve_strategy(&p, Strategy::DataParallel).unwrap();
+        assert_eq!(s, Strategy::DataParallel);
+        assert_eq!(tuner.searches, 0);
+    }
+}

@@ -85,6 +85,58 @@ fn tiling_validates_for_random_legal_problems() {
 }
 
 #[test]
+fn chunked_tiler_total_and_mac_conserving() {
+    // The chunked tiler must produce a legal tiling for every legal
+    // problem, and the resulting schedule must conserve MACs exactly.
+    let m = MachineConfig::ascend910();
+    forall("chunked tiler total", 40, |rng| {
+        let n = 16 * rng.usize_range(1, 512);
+        let k = 128 * rng.usize_range(1, 128);
+        let batch = rng.usize_range(1, 64);
+        let p = GemmProblem::new(batch, n, k);
+        let t = match kernels::tiling::select_chunked(&m, &p) {
+            Ok(t) => t,
+            Err(e) => return (false, format!("n={n} k={k}: {e}")),
+        };
+        if t.validate(&m, &p).is_err() {
+            return (false, format!("n={n} k={k}: illegal tiling {t:?}"));
+        }
+        match kernels::schedule(&m, &p, Strategy::Chunked) {
+            Ok(trace) => (
+                trace.total_macs() == p.macs(&m),
+                format!("n={n} k={k} C={}: {} != {}", t.chunks, trace.total_macs(), p.macs(&m)),
+            ),
+            Err(e) => (false, format!("n={n} k={k}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn chunked_never_loses_to_splitk_property() {
+    // The chunked selector falls back to monolithic pinning, so across
+    // random shapes it can tie but never meaningfully lose to Algorithm 1.
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    forall("chunked <= splitk", 25, |rng| {
+        let n = 16 * rng.usize_range(1, 256);
+        let k = 128 * rng.usize_range(1, 64);
+        let p = GemmProblem::new(8, n, k);
+        let sk = sim
+            .run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap())
+            .unwrap()
+            .total_ns;
+        let ck = sim
+            .run(&kernels::schedule(&m, &p, Strategy::Chunked).unwrap())
+            .unwrap()
+            .total_ns;
+        // The chunked selector simulates its candidates and degenerates to
+        // Algorithm 1 (identical trace) when chunking doesn't pay, so it
+        // can tie but never lose beyond float noise.
+        (ck <= sk * 1.000001, format!("n={n} k={k}: chunked {ck} vs splitk {sk}"))
+    });
+}
+
+#[test]
 fn simulated_time_strictly_positive_and_finite() {
     let m = MachineConfig::ascend910();
     let sim = Simulator::new(m.clone());
@@ -97,6 +149,7 @@ fn simulated_time_strictly_positive_and_finite() {
             Strategy::DataParallel,
             Strategy::Fp16Native,
             Strategy::Fused,
+            Strategy::Chunked,
         ]);
         match kernels::schedule(&m, &p, strategy).and_then(|t| sim.run(&t)) {
             Ok(r) => (

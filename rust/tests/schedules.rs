@@ -17,7 +17,7 @@ fn every_sweep_cell_schedules_and_simulates() {
     for shape in paper_shapes() {
         for &batch in &PAPER_BATCH_SIZES {
             let p = GemmProblem::new(batch, shape.n, shape.k);
-            for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+            for s in Strategy::all_concrete() {
                 let trace = kernels::schedule(&m, &p, s)
                     .unwrap_or_else(|e| panic!("{} M={batch} {:?}: {e}", shape.tag(), s));
                 let r = sim
@@ -38,7 +38,7 @@ fn mac_conservation_across_strategies_property() {
         let batch = PAPER_BATCH_SIZES[rng.usize_range(0, 6)];
         let p = GemmProblem::new(batch, shape.n, shape.k);
         let want = p.macs(&m);
-        for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Fp16Native, Strategy::Fused] {
+        for s in Strategy::all_concrete() {
             let t = kernels::schedule(&m, &p, s).unwrap();
             if t.total_macs() != want {
                 return (
@@ -116,11 +116,13 @@ fn dequant_always_on_vector_mmad_always_on_cube() {
     let m = machine();
     for shape in paper_shapes().iter().take(4) {
         let p = GemmProblem::new(8, shape.n, shape.k);
-        for s in [Strategy::SplitK, Strategy::DataParallel] {
+        for s in [Strategy::SplitK, Strategy::DataParallel, Strategy::Chunked] {
             let t = kernels::schedule(&m, &p, s).unwrap();
             for phase in &t.phases {
                 match phase.name {
-                    "dequant" | "reduce" => assert_eq!(phase.unit, Unit::Vector),
+                    "dequant" | "chunk_dequant" | "reduce" => {
+                        assert_eq!(phase.unit, Unit::Vector)
+                    }
                     _ => assert_eq!(phase.unit, Unit::Cube, "phase {}", phase.name),
                 }
             }
@@ -141,8 +143,51 @@ fn workspace_traffic_only_for_w4a16_strategies() {
     };
     assert!(ws_bytes(Strategy::SplitK) > 0);
     assert!(ws_bytes(Strategy::DataParallel) > 0);
+    assert!(ws_bytes(Strategy::Chunked) > 0, "chunked still moves workspace bytes (via L2)");
     assert_eq!(ws_bytes(Strategy::Fp16Native), 0);
     assert_eq!(ws_bytes(Strategy::Fused), 0);
+}
+
+#[test]
+fn chunked_workspace_hbm_is_zero_on_decode_shapes() {
+    // The chunk pipeline's whole point: Workspace-class traffic stays in
+    // L2 on the paper's decode shapes — the simulator ledger must show
+    // exactly zero HBM bytes for it (acceptance criterion).
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    for (n, k) in [(512usize, 16384usize), (1536, 7168), (1024, 7680), (2048, 7168)] {
+        let p = GemmProblem::new(8, n, k);
+        let r = sim.run(&kernels::schedule(&m, &p, Strategy::Chunked).unwrap()).unwrap();
+        let ws = r.ledger.class(BufferClass::Workspace);
+        assert_eq!(ws.hbm_read, 0.0, "n={n} k={k}");
+        assert_eq!(ws.hbm_write, 0.0, "n={n} k={k}");
+        assert!(ws.l2_total() > 0.0, "n={n} k={k}");
+    }
+}
+
+#[test]
+fn chunked_at_least_as_fast_as_splitk_in_k_dominant_regime() {
+    // Satellite acceptance: chunked >= splitk on EVERY K >> N decode shape
+    // of the fig2 sweep, strictly faster somewhere (the spilling shapes).
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    let mut strict_win = false;
+    for shape in paper_shapes().iter().filter(|s| s.k_dominant()) {
+        let p = GemmProblem::new(8, shape.n, shape.k);
+        let sk = sim.run(&kernels::schedule(&m, &p, Strategy::SplitK).unwrap()).unwrap();
+        let ck = sim.run(&kernels::schedule(&m, &p, Strategy::Chunked).unwrap()).unwrap();
+        assert!(
+            ck.total_ns <= sk.total_ns * 1.000001,
+            "{}: chunked {} slower than splitk {}",
+            shape.tag(),
+            ck.total_ns,
+            sk.total_ns
+        );
+        if ck.total_ns < sk.total_ns * 0.98 {
+            strict_win = true;
+        }
+    }
+    assert!(strict_win, "chunked never strictly beat splitk in the K>>N regime");
 }
 
 #[test]

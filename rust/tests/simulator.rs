@@ -3,6 +3,7 @@
 
 use ascend_w4a16::ascend::{
     BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, Simulator, TileStep, Unit,
+    WorkspacePolicy,
 };
 use ascend_w4a16::util::proptest::forall;
 
@@ -16,11 +17,18 @@ fn phase(unit: Unit, engines: usize, steps: Vec<TileStep>) -> Phase {
         unit,
         steps_per_engine: vec![steps; engines],
         pipelined_with_prev: false,
+        chunk: None,
     }
 }
 
 fn trace(phases: Vec<Phase>, ws: u64, partial: u64) -> KernelTrace {
-    KernelTrace { name: "t".into(), phases, workspace_bytes: ws, partial_bytes: partial }
+    KernelTrace {
+        name: "t".into(),
+        phases,
+        workspace_bytes: ws,
+        partial_bytes: partial,
+        workspace_policy: WorkspacePolicy::Buffered,
+    }
 }
 
 #[test]
