@@ -1,0 +1,63 @@
+//! Decode-layer graph bench: simulate all four projection GEMMs (qkv,
+//! attn_out, up_gate, down) per paper model and batch size, every node
+//! resolved through the autotuner, and track what the pipelined reduce
+//! buys over Algorithm 1's barrier reduce at the whole-layer level — the
+//! granularity LiquidGEMM and Multi-Scale Dequant evaluate at.
+//!
+//! Emits a machine-readable `target/BENCH_layer.json` so the per-layer
+//! latency trajectory is tracked across PRs.
+//!
+//! Run with `cargo bench --bench e2e_layer`.
+
+use ascend_w4a16::analysis::layer;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::bench::section;
+use ascend_w4a16::model::llm::paper_layer_geometries;
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::json::Json;
+use ascend_w4a16::workload::DecodeLayer;
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+    let mut tuner = Tuner::new(machine.clone());
+    let mut cells = Vec::new();
+
+    for (model, geom) in paper_layer_geometries() {
+        section(&format!("decode layer — {model} (simulated, tuned per node)"));
+        for batch in [1usize, 8, 64] {
+            let decode_layer = DecodeLayer::new(geom, batch);
+            let rep = layer::simulate_layer_tuned(&machine, &decode_layer, &mut tuner)
+                .expect("simulate layer");
+            let speedup = rep.layer_barrier_ns() / rep.layer_ns();
+            let strategies: Vec<String> = rep
+                .nodes
+                .iter()
+                .map(|n| format!("{}={}", n.kind.name(), n.strategy.name()))
+                .collect();
+            println!(
+                "b={batch:<3} layer {:>10.2} us  (barrier-reduce {:>10.2} us, {:.3}x)  {}",
+                rep.layer_ns() / 1e3,
+                rep.layer_barrier_ns() / 1e3,
+                speedup,
+                strategies.join(" "),
+            );
+            cells.push(Json::obj(vec![
+                ("model", Json::str(model)),
+                ("batch", Json::num(batch as f64)),
+                ("layer_us", Json::num(rep.layer_ns() / 1e3)),
+                ("layer_barrier_us", Json::num(rep.layer_barrier_ns() / 1e3)),
+                ("reduce_pipeline_speedup", Json::num(speedup)),
+                ("detail", layer::layer_json(&rep)),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("e2e_layer")),
+        ("cells", Json::arr(cells)),
+    ]);
+    std::fs::create_dir_all("target").expect("target dir");
+    let out = "target/BENCH_layer.json";
+    std::fs::write(out, doc.to_string()).expect("write json");
+    println!("\nwrote {out}");
+}

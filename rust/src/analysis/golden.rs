@@ -1,0 +1,121 @@
+//! Golden-trace serialization: a stable, diffable JSON digest of a
+//! [`KernelTrace`] for the snapshot tests under `rust/tests/fixtures/`.
+//!
+//! The digest captures what a schedule *does* — phase structure, engine
+//! occupancy, step counts, and per-class byte totals — without any timing,
+//! so schedule refactors diff against known-good traces while timing-model
+//! changes leave the fixtures untouched.  Regenerate with
+//! `BLESS=1 cargo test --test golden_traces`.
+
+use crate::ascend::{BufferClass, KernelTrace, Phase, Unit, WorkspacePolicy};
+use crate::util::json::Json;
+
+/// Every buffer class with its stable fixture label.
+const CLASSES: [(BufferClass, &str); 7] = [
+    (BufferClass::WeightPacked, "weight_packed"),
+    (BufferClass::WeightF16, "weight_f16"),
+    (BufferClass::Activation, "activation"),
+    (BufferClass::Workspace, "workspace"),
+    (BufferClass::Partial, "partial"),
+    (BufferClass::Output, "output"),
+    (BufferClass::QuantParam, "quant_param"),
+];
+
+fn bytes_obj(phase: &Phase, write: bool) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    for (class, label) in CLASSES {
+        let b = if write { phase.write_bytes(class) } else { phase.read_bytes(class) };
+        if b > 0 {
+            pairs.push((label, Json::num(b as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+/// Serialize one trace to its golden digest.
+pub fn trace_to_json(trace: &KernelTrace) -> Json {
+    let phases = trace
+        .phases
+        .iter()
+        .map(|ph| {
+            Json::obj(vec![
+                ("name", Json::str(ph.name)),
+                (
+                    "unit",
+                    Json::str(match ph.unit {
+                        Unit::Cube => "cube",
+                        Unit::Vector => "vector",
+                    }),
+                ),
+                ("pipelined_with_prev", Json::Bool(ph.pipelined_with_prev)),
+                (
+                    "chunk",
+                    ph.chunk.map(|c| Json::num(c as f64)).unwrap_or(Json::Null),
+                ),
+                ("engines", Json::num(ph.active_engines() as f64)),
+                ("steps", Json::num(ph.total_steps() as f64)),
+                ("reads", bytes_obj(ph, false)),
+                ("writes", bytes_obj(ph, true)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::str(trace.name.clone())),
+        ("workspace_bytes", Json::num(trace.workspace_bytes as f64)),
+        ("partial_bytes", Json::num(trace.partial_bytes as f64)),
+        (
+            "workspace_policy",
+            match trace.workspace_policy {
+                WorkspacePolicy::Buffered => Json::str("buffered"),
+                WorkspacePolicy::Pinned { resident_bytes } => Json::obj(vec![(
+                    "pinned_resident_bytes",
+                    Json::num(resident_bytes as f64),
+                )]),
+            },
+        ),
+        ("total_macs", Json::num(trace.total_macs() as f64)),
+        ("phases", Json::arr(phases)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::MachineConfig;
+    use crate::kernels::{self, GemmProblem, Strategy};
+
+    #[test]
+    fn digest_round_trips_through_the_parser() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 512, 16384);
+        let tr = kernels::schedule(&m, &p, Strategy::SplitK).unwrap();
+        let j = trace_to_json(&tr);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j, "digest must survive serialize -> parse");
+        assert_eq!(back.req_str("name").unwrap(), tr.name);
+        let phases = back.req("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), tr.phases.len());
+        // Phase-0 dequant writes exactly the FP16 workspace.
+        let ws = phases[0]
+            .req("writes")
+            .unwrap()
+            .req("workspace")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(ws, p.f16_weight_bytes() as f64);
+    }
+
+    #[test]
+    fn pinned_policy_is_structured() {
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 12288, 5120);
+        let tr = kernels::schedule(&m, &p, Strategy::Chunked).unwrap();
+        let j = trace_to_json(&tr);
+        let policy = j.req("workspace_policy").unwrap();
+        assert!(
+            policy.get("pinned_resident_bytes").is_some(),
+            "spilling shape must pin its rotating slices"
+        );
+    }
+}

@@ -1,0 +1,278 @@
+//! Decode-layer graph simulator: composes per-GEMM [`KernelTrace`]
+//! results into per-layer and per-step latency, with a strategy
+//! assignment per node (DESIGN.md §10).
+//!
+//! The graph is a chain — each projection consumes the previous one's
+//! activations — so layer latency is the sum of the node kernel times
+//! (each node already overlaps its own dequant/MMAD/reduce internally;
+//! attention itself and the elementwise glue are out of scope, as in the
+//! paper's evaluation).  Every node is priced twice: under the served
+//! reduce schedule (`ReduceMode::Auto`, pipelined fixup when it wins) and
+//! under Algorithm 1's barrier reduce, so the report shows exactly what
+//! the reduce pipelining buys per node and per layer.
+//!
+//! [`KernelTrace`]: crate::ascend::KernelTrace
+
+use crate::ascend::{MachineConfig, Simulator};
+use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
+use crate::tune::Tuner;
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::workload::decode_layer::{DecodeLayer, GemmKind};
+
+/// How one graph node's (strategy, tiling) assignment was determined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// Served from the persisted tune cache (the hot-path lookup).
+    CacheHit,
+    /// A live search filled the cache (first run / cold cache).
+    Searched,
+    /// A concrete strategy with its heuristic tiling (no tuner involved).
+    Heuristic,
+}
+
+impl Resolution {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Resolution::CacheHit => "cache",
+            Resolution::Searched => "searched",
+            Resolution::Heuristic => "heuristic",
+        }
+    }
+}
+
+/// One simulated graph node.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub kind: GemmKind,
+    pub problem: GemmProblem,
+    pub strategy: Strategy,
+    pub tiling: Tiling,
+    pub resolution: Resolution,
+    /// Simulated kernel time under the served (auto) reduce schedule.
+    pub total_ns: f64,
+    /// The same schedule under Algorithm 1's barrier reduce (>= total_ns).
+    pub barrier_ns: f64,
+}
+
+impl NodeReport {
+    /// What the pipelined reduce buys on this node (>= 1.0 by construction).
+    pub fn reduce_speedup(&self) -> f64 {
+        if self.total_ns == 0.0 {
+            return 1.0;
+        }
+        self.barrier_ns / self.total_ns
+    }
+}
+
+/// The simulated layer: all four nodes at one batch size.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub batch: usize,
+    pub nodes: Vec<NodeReport>,
+}
+
+impl LayerReport {
+    /// Layer GEMM latency under the served schedules.
+    pub fn layer_ns(&self) -> f64 {
+        self.nodes.iter().map(|n| n.total_ns).sum()
+    }
+
+    /// Layer GEMM latency with every reduce behind the grid barrier.
+    pub fn layer_barrier_ns(&self) -> f64 {
+        self.nodes.iter().map(|n| n.barrier_ns).sum()
+    }
+
+    /// Per-decode-step GEMM latency for a model with `layers` layers.
+    pub fn step_ns(&self, layers: usize) -> f64 {
+        self.layer_ns() * layers as f64
+    }
+
+    pub fn node(&self, kind: GemmKind) -> Option<&NodeReport> {
+        self.nodes.iter().find(|n| n.kind == kind)
+    }
+}
+
+/// Simulate one decode layer.  `resolve` assigns each node its
+/// (strategy, tiling) — a tuner closure on the tuned path, a constant on
+/// the fixed-strategy path.
+pub fn simulate_layer(
+    machine: &MachineConfig,
+    layer: &DecodeLayer,
+    mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+) -> anyhow::Result<LayerReport> {
+    let sim = Simulator::new(machine.clone());
+    let mut nodes = Vec::with_capacity(4);
+    for (kind, p) in layer.problems() {
+        let (strategy, tiling, resolution) = resolve(&p)?;
+        let served =
+            kernels::schedule_with_reduce(machine, &p, strategy, &tiling, ReduceMode::Auto)?;
+        let total_ns = sim.run(&served)?.total_ns;
+        // Only the Split-K family has a reduce; for the other strategies
+        // the barrier variant IS the served trace — skip the re-build.
+        let barrier_ns = match strategy {
+            Strategy::SplitK | Strategy::Chunked => {
+                let barrier = kernels::schedule_with_reduce(
+                    machine,
+                    &p,
+                    strategy,
+                    &tiling,
+                    ReduceMode::Barrier,
+                )?;
+                sim.run(&barrier)?.total_ns
+            }
+            _ => total_ns,
+        };
+        nodes.push(NodeReport {
+            kind,
+            problem: p,
+            strategy,
+            tiling,
+            resolution,
+            total_ns,
+            barrier_ns,
+        });
+    }
+    Ok(LayerReport { batch: layer.batch, nodes })
+}
+
+/// Simulate a layer with every node resolved through the tuner (cache
+/// hit, or live search that warms the cache) — the `repro layer
+/// --strategy auto` and `e2e_layer` bench path.
+pub fn simulate_layer_tuned(
+    machine: &MachineConfig,
+    layer: &DecodeLayer,
+    tuner: &mut Tuner,
+) -> anyhow::Result<LayerReport> {
+    simulate_layer(machine, layer, |p| {
+        let before = tuner.searches;
+        let e = tuner.resolve(p)?;
+        let resolution = if tuner.searches > before {
+            Resolution::Searched
+        } else {
+            Resolution::CacheHit
+        };
+        Ok((e.strategy, e.tiling, resolution))
+    })
+}
+
+/// Render the per-node table plus layer / step totals.
+pub fn render_layer(report: &LayerReport, layers: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Decode-layer GEMM graph — batch {} (simulated)\n",
+        report.batch
+    ));
+    out.push_str(&format!(
+        "{:<9} {:<20} {:>12} {:>10} | {:>10} {:>11} {:>8}\n",
+        "node", "shape", "strategy", "via", "served_us", "barrier_us", "reduce"
+    ));
+    for n in &report.nodes {
+        out.push_str(&format!(
+            "{:<9} {:<20} {:>12} {:>10} | {:>10.2} {:>11.2} {:>7.2}x\n",
+            n.kind.name(),
+            format!("m{}_n{}_k{}", n.problem.m, n.problem.n, n.problem.k),
+            n.strategy.name(),
+            n.resolution.name(),
+            n.total_ns / 1e3,
+            n.barrier_ns / 1e3,
+            n.reduce_speedup(),
+        ));
+    }
+    out.push_str(&format!(
+        "\nlayer: {} served vs {} barrier-reduce ({:.3}x from reduce pipelining)\n",
+        stats::fmt_ns(report.layer_ns()),
+        stats::fmt_ns(report.layer_barrier_ns()),
+        report.layer_barrier_ns() / report.layer_ns(),
+    ));
+    out.push_str(&format!(
+        "step ({layers} layers): {}  -> {:.0} decode steps/s of pure GEMM headroom\n",
+        stats::fmt_ns(report.step_ns(layers)),
+        1e9 / report.step_ns(layers),
+    ));
+    out
+}
+
+/// JSON form of a layer report (BENCH_layer.json, `repro layer --json`).
+pub fn layer_json(report: &LayerReport) -> Json {
+    let nodes = report
+        .nodes
+        .iter()
+        .map(|n| {
+            Json::obj(vec![
+                ("kind", Json::str(n.kind.name())),
+                ("m", Json::num(n.problem.m as f64)),
+                ("n", Json::num(n.problem.n as f64)),
+                ("k", Json::num(n.problem.k as f64)),
+                ("strategy", Json::str(n.strategy.name())),
+                ("resolution", Json::str(n.resolution.name())),
+                ("served_ns", Json::num(n.total_ns)),
+                ("barrier_ns", Json::num(n.barrier_ns)),
+                ("reduce_speedup", Json::num(n.reduce_speedup())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("batch", Json::num(report.batch as f64)),
+        ("layer_ns", Json::num(report.layer_ns())),
+        ("layer_barrier_ns", Json::num(report.layer_barrier_ns())),
+        ("nodes", Json::arr(nodes)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llm::layer_geometry;
+
+    fn fixed(
+        machine: &MachineConfig,
+        strategy: Strategy,
+    ) -> impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)> + '_ {
+        move |p| {
+            Ok((strategy, kernels::select_tiling(machine, p, strategy)?, Resolution::Heuristic))
+        }
+    }
+
+    #[test]
+    fn simulates_all_four_nodes() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let r = simulate_layer(&m, &layer, fixed(&m, Strategy::SplitK)).unwrap();
+        assert_eq!(r.nodes.len(), 4);
+        for n in &r.nodes {
+            assert!(n.total_ns > 0.0 && n.total_ns.is_finite());
+            assert!(
+                n.total_ns <= n.barrier_ns * 1.000001,
+                "{}: served {} slower than barrier {}",
+                n.kind.name(),
+                n.total_ns,
+                n.barrier_ns
+            );
+        }
+        assert!(r.layer_ns() > r.nodes[0].total_ns);
+        assert_eq!(r.step_ns(2), 2.0 * r.layer_ns());
+    }
+
+    #[test]
+    fn render_and_json_carry_all_nodes() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let r = simulate_layer(&m, &layer, fixed(&m, Strategy::Chunked)).unwrap();
+        let text = render_layer(&r, 16);
+        for kind in GemmKind::all() {
+            assert!(text.contains(kind.name()), "missing {}", kind.name());
+        }
+        let j = layer_json(&r).to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.req("nodes").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn resolver_errors_propagate() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let r = simulate_layer(&m, &layer, |_| anyhow::bail!("no assignment"));
+        assert!(r.is_err());
+    }
+}

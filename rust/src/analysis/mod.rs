@@ -6,6 +6,8 @@
 //! identifies the binding resource, and renders the comparison tables the
 //! benches print (Figures 2 and 3).
 
+pub mod golden;
+pub mod layer;
 pub mod report;
 pub mod roofline;
 pub mod sensitivity;

@@ -24,6 +24,32 @@ struct Inner {
     /// Groups served per kernel-schedule strategy ("untuned" when no tune
     /// cache backed the group's batch size).
     schedules: BTreeMap<String, u64>,
+    /// Per-(projection GEMM kind, strategy) serving tallies: every routed
+    /// decode batch records all four layer nodes (qkv, attn_out, up_gate,
+    /// down), so per-GEMM tuning coverage and predicted kernel latency are
+    /// visible at a glance.
+    gemm_schedules: BTreeMap<String, BTreeMap<String, GemmScheduleStat>>,
+}
+
+/// Serving tally of one (GEMM kind, strategy) pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GemmScheduleStat {
+    /// Decode groups served under this strategy.
+    pub groups: u64,
+    /// Summed predicted kernel time of the tuned schedule (ns; untuned
+    /// nodes contribute 0 — no prediction exists for them).
+    pub predicted_ns_sum: f64,
+}
+
+impl GemmScheduleStat {
+    /// Mean predicted kernel time per group, in µs.
+    pub fn mean_predicted_us(&self) -> f64 {
+        if self.groups == 0 {
+            0.0
+        } else {
+            self.predicted_ns_sum / self.groups as f64 / 1e3
+        }
+    }
 }
 
 /// A point-in-time snapshot.
@@ -37,6 +63,7 @@ pub struct MetricsSnapshot {
     pub ttft: Summary,
     pub total: Summary,
     pub schedules: BTreeMap<String, u64>,
+    pub gemm_schedules: BTreeMap<String, BTreeMap<String, GemmScheduleStat>>,
 }
 
 impl Metrics {
@@ -55,6 +82,20 @@ impl Metrics {
     pub fn record_schedule(&self, strategy: &str) {
         let mut g = self.inner.lock().unwrap();
         *g.schedules.entry(strategy.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record the strategy serving one projection GEMM of a routed group,
+    /// with the tuned schedule's predicted kernel time when available.
+    pub fn record_gemm_schedule(&self, kind: &str, strategy: &str, predicted_ns: Option<f64>) {
+        let mut g = self.inner.lock().unwrap();
+        let stat = g
+            .gemm_schedules
+            .entry(kind.to_string())
+            .or_default()
+            .entry(strategy.to_string())
+            .or_default();
+        stat.groups += 1;
+        stat.predicted_ns_sum += predicted_ns.unwrap_or(0.0);
     }
 
     pub fn record_completion(&self, tokens: usize, ttft_s: f64, total_s: f64) {
@@ -76,6 +117,7 @@ impl Metrics {
             ttft: Summary::of(&g.ttft_s),
             total: Summary::of(&g.total_s),
             schedules: g.schedules.clone(),
+            gemm_schedules: g.gemm_schedules.clone(),
         }
     }
 }
@@ -119,6 +161,19 @@ impl MetricsSnapshot {
                 .collect();
             out.push_str(&format!("schedules: {}\n", parts.join("  ")));
         }
+        for (kind, stats) in &self.gemm_schedules {
+            let parts: Vec<String> = stats
+                .iter()
+                .map(|(s, st)| {
+                    if st.predicted_ns_sum > 0.0 {
+                        format!("{s}={} (~{:.1} us)", st.groups, st.mean_predicted_us())
+                    } else {
+                        format!("{s}={}", st.groups)
+                    }
+                })
+                .collect();
+            out.push_str(&format!("gemm {:<8}: {}\n", kind, parts.join("  ")));
+        }
         out
     }
 }
@@ -137,6 +192,27 @@ mod tests {
         assert_eq!(s.schedules.get("chunked"), Some(&2));
         assert_eq!(s.schedules.get("untuned"), Some(&1));
         assert!(s.render(1.0).contains("chunked=2"));
+    }
+
+    #[test]
+    fn gemm_schedule_counters_track_kind_strategy_and_latency() {
+        let m = Metrics::new();
+        for kind in ["qkv", "attn_out", "up_gate", "down"] {
+            m.record_gemm_schedule(kind, "chunked", Some(12_000.0));
+        }
+        m.record_gemm_schedule("down", "chunked", Some(18_000.0));
+        m.record_gemm_schedule("down", "untuned", None);
+        let s = m.snapshot();
+        assert_eq!(s.gemm_schedules.len(), 4);
+        let down = &s.gemm_schedules["down"]["chunked"];
+        assert_eq!(down.groups, 2);
+        assert!((down.mean_predicted_us() - 15.0).abs() < 1e-9);
+        assert_eq!(s.gemm_schedules["down"]["untuned"].groups, 1);
+        let text = s.render(1.0);
+        for kind in ["qkv", "attn_out", "up_gate", "down"] {
+            assert!(text.contains(&format!("gemm {kind:<8}")), "missing {kind} in:\n{text}");
+        }
+        assert!(text.contains("(~15.0 us)"), "latency missing in:\n{text}");
     }
 
     #[test]

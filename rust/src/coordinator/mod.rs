@@ -29,7 +29,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy, DecodeGroup};
-pub use metrics::Metrics;
+pub use metrics::{GemmScheduleStat, Metrics};
 pub use request::{DecodeRequest, DecodeResult};
-pub use router::{Router, TunedPlan};
+pub use router::{LayerPlan, Router, TunedPlan};
 pub use server::Server;

@@ -7,25 +7,58 @@
 //!
 //! Schedule tuning: if a tune cache (`tune_cache.json`, written by
 //! `repro tune`) sits next to the artifact manifest, the router resolves
-//! each decode batch size's bottleneck GEMM — the FFN down-projection
-//! `(M=batch, N=hidden, K=ffn)`, the paper's K >> N decode shape —
-//! through it, so every group is served under its tuned strategy.  The
-//! lookup is cache-only: the serving hot path never pays a search.
+//! every projection GEMM of the decode layer — QKV, attention-out,
+//! up/gate and the FFN down-projection (the paper's K >> N bottleneck) —
+//! through it, so each group is served under its per-node tuned
+//! strategies.  The lookup is cache-only: the serving hot path never pays
+//! a search.
 
 use std::collections::HashMap;
 
 use crate::ascend::MachineConfig;
-use crate::kernels::{GemmProblem, Strategy};
+use crate::kernels::Strategy;
 use crate::model::DecodeEngine;
 use crate::runtime::{Manifest, Runtime};
 use crate::tune::{Tuner, DEFAULT_CACHE_FILE};
+use crate::workload::decode_layer::{DecodeLayer, GemmKind};
 
-/// The tuned plan for one decode batch size.
+/// The tuned plan for one GEMM node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunedPlan {
     pub strategy: Strategy,
     /// Simulated kernel time of the tuned schedule (ns).
     pub predicted_ns: f64,
+}
+
+/// Tuned plans for all four projection GEMMs of one decode layer
+/// (`None` per node on a cache miss — that node serves untuned).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerPlan {
+    pub nodes: [(GemmKind, Option<TunedPlan>); 4],
+}
+
+impl LayerPlan {
+    pub fn get(&self, kind: GemmKind) -> Option<TunedPlan> {
+        self.nodes.iter().find(|(k, _)| *k == kind).and_then(|(_, plan)| *plan)
+    }
+
+    /// Strategy label for the metrics sink ("untuned" on a cache miss).
+    pub fn strategy_label(&self, kind: GemmKind) -> &'static str {
+        self.get(kind).map(|p| p.strategy.name()).unwrap_or("untuned")
+    }
+
+    /// Whether every node resolved through the cache.
+    pub fn fully_resolved(&self) -> bool {
+        self.nodes.iter().all(|(_, plan)| plan.is_some())
+    }
+
+    /// Predicted GEMM time of the whole layer (only when fully resolved).
+    pub fn predicted_layer_ns(&self) -> Option<f64> {
+        self.nodes
+            .iter()
+            .map(|&(_, plan)| plan.map(|p| p.predicted_ns))
+            .sum::<Option<f64>>()
+    }
 }
 
 /// Engine pool keyed by batch size for one decode model.
@@ -37,7 +70,7 @@ pub struct Router<'rt> {
     /// Schedule tuner backed by the cache next to the artifacts (None when
     /// no cache file exists — groups then serve under the default splitk).
     tuner: Option<Tuner>,
-    plans: HashMap<usize, Option<TunedPlan>>,
+    plans: HashMap<usize, Option<LayerPlan>>,
 }
 
 impl<'rt> Router<'rt> {
@@ -77,31 +110,46 @@ impl<'rt> Router<'rt> {
         Ok(self.engines.get_mut(&batch).unwrap())
     }
 
-    /// The tuned schedule for a batch size's bottleneck decode GEMM, from
-    /// the persisted cache (`None` when untuned: no cache, cache miss, or
-    /// the artifact has no decode config).  Memoized per batch size.
-    pub fn tuned_plan(&mut self, batch: usize) -> Option<TunedPlan> {
+    /// Tuned plans for all four projection GEMMs of a batch size's decode
+    /// layer, from the persisted cache (`None` when the artifact has no
+    /// decode config or no cache file was found; per-node `None` on a
+    /// cache miss).  Memoized per batch size.
+    pub fn layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
         if let Some(plan) = self.plans.get(&batch) {
             return *plan;
         }
-        let plan = self.resolve_plan(batch);
+        let plan = self.resolve_layer_plan(batch);
         self.plans.insert(batch, plan);
         plan
     }
 
-    fn resolve_plan(&mut self, batch: usize) -> Option<TunedPlan> {
+    /// The tuned schedule for the batch's bottleneck GEMM — the FFN
+    /// down-projection the paper profiles (K = ffn >> N = hidden).
+    pub fn tuned_plan(&mut self, batch: usize) -> Option<TunedPlan> {
+        self.layer_plan(batch).and_then(|plan| plan.get(GemmKind::Down))
+    }
+
+    fn resolve_layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
         let cfg = self
             .manifest
             .decode(&self.model, batch)
             .ok()
             .and_then(|e| e.config)?;
         let tuner = self.tuner.as_mut()?;
-        // The FFN down-projection is the decode GEMM the paper profiles:
-        // K = ffn >> N = hidden once the batch is small.
-        let mut p = GemmProblem::new(batch, cfg.hidden, cfg.ffn);
-        p.group = cfg.group;
-        let e = tuner.lookup(&p)?;
-        Some(TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns })
+        let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        let mut nodes = [(GemmKind::Down, None); 4];
+        for (slot, (kind, p)) in nodes.iter_mut().zip(layer.problems()) {
+            // Cache-only: the serving hot path never pays a search.
+            let plan = if p.validate().is_ok() {
+                tuner
+                    .lookup(&p)
+                    .map(|e| TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns })
+            } else {
+                None
+            };
+            *slot = (kind, plan);
+        }
+        Some(LayerPlan { nodes })
     }
 
     /// Whether a tune cache was found next to the artifacts.

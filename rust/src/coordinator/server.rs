@@ -12,7 +12,8 @@ use std::time::Instant;
 use super::batcher::{Batcher, DecodeGroup};
 use super::metrics::Metrics;
 use super::request::{DecodeRequest, DecodeResult};
-use super::router::Router;
+use super::router::{LayerPlan, Router};
+use crate::workload::decode_layer::GemmKind;
 
 /// Per-slot decode state inside a running group.
 struct Slot<'r> {
@@ -61,16 +62,28 @@ impl<'rt> Server<'rt> {
         }
     }
 
-    /// Decode one group to completion.
-    fn run_group(&mut self, group: DecodeGroup) -> anyhow::Result<Vec<DecodeResult>> {
-        // Which kernel schedule serves this group's bottleneck GEMM: the
-        // tuned winner from the persisted cache, or the untuned default.
-        let schedule = self
-            .router
-            .tuned_plan(group.batch)
+    /// Record which tuned schedule serves each of a routed group's four
+    /// projection GEMMs; the down-projection (the paper's bottleneck)
+    /// doubles as the group's headline schedule counter.
+    pub fn record_group_schedules(metrics: &Metrics, plan: Option<&LayerPlan>) {
+        for kind in GemmKind::all() {
+            let node = plan.and_then(|p| p.get(kind));
+            let label = node.map(|p| p.strategy.name()).unwrap_or("untuned");
+            metrics.record_gemm_schedule(kind.name(), label, node.map(|p| p.predicted_ns));
+        }
+        let headline = plan
+            .and_then(|p| p.get(GemmKind::Down))
             .map(|p| p.strategy.name())
             .unwrap_or("untuned");
-        self.metrics.record_schedule(schedule);
+        metrics.record_schedule(headline);
+    }
+
+    /// Decode one group to completion.
+    fn run_group(&mut self, group: DecodeGroup) -> anyhow::Result<Vec<DecodeResult>> {
+        // Which kernel schedules serve this group's decode-layer GEMMs:
+        // the tuned winners from the persisted cache, or untuned defaults.
+        let plan = self.router.layer_plan(group.batch);
+        Server::record_group_schedules(&self.metrics, plan.as_ref());
         let engine = self.router.engine(group.batch)?;
         engine.reset()?;
         let vocab = engine.vocab;

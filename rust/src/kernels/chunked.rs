@@ -33,14 +33,41 @@ use crate::ascend::{
     WorkspacePolicy,
 };
 
-use super::{round_robin, round_robin_steps, splitk::dequant_phase, tiling::Tiling, GemmProblem};
+use super::{
+    round_robin_steps,
+    splitk::{dequant_phase, reduce_phases},
+    tiling::Tiling,
+    GemmProblem, ReduceMode,
+};
 
-/// Build the chunk-pipelined trace.
+/// Build the chunk-pipelined trace (reduce mode resolved automatically).
 pub fn schedule(
     machine: &MachineConfig,
     p: &GemmProblem,
     t: &Tiling,
 ) -> anyhow::Result<KernelTrace> {
+    schedule_reduce(machine, p, t, ReduceMode::Auto)
+}
+
+/// Build the chunk-pipelined trace with an explicit reduce mode.  The
+/// cube accumulators stay live in L0C across every chunk, so physically
+/// the reduce can only overlap the *tail* chunk's MMAD waves; in the
+/// trace the streamed reduce phase joins the tail of the chunked
+/// pipeline group, and the §7 group-granular executor prices its overlap
+/// against the group's pooled streams (same-engine vector work still
+/// serializes — the group sums per-stream — but cross-stream slack from
+/// any chunk can hide it, the same coarse approximation the model makes
+/// for dequant/MMAD overlap).  The exposed tail wave bounds the optimism
+/// and `ReduceMode::Auto` keeps the never-slower guarantee model-exact.
+pub fn schedule_reduce(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+    reduce: ReduceMode,
+) -> anyhow::Result<KernelTrace> {
+    if reduce == ReduceMode::Auto {
+        return super::resolve_reduce_auto(machine, |mode| schedule_reduce(machine, p, t, mode));
+    }
     t.validate(machine, p)?;
     let chunks = t.chunks.max(1);
     anyhow::ensure!(p.k % chunks == 0, "chunks {chunks} !| K={}", p.k);
@@ -101,23 +128,10 @@ pub fn schedule(
     }
 
     if !single_split {
-        // Reduce the S split partials after a grid barrier, as Algorithm 1.
-        let out_tiles = (m_pad / t.bm) * (p.n / t.bn);
-        let elems = t.bm * t.bn;
-        let reduce_step = TileStep::new(ComputeOp::Reduce { elems, terms: t.splits })
-            .read(BufferClass::Partial, (t.splits * elems * 4) as u64)
-            .write(BufferClass::Output, (elems * 2) as u64);
-        let steps_per_engine = round_robin(out_tiles, machine.total_vector_cores())
-            .into_iter()
-            .map(|tiles| vec![reduce_step; tiles.len()])
-            .collect();
-        phases.push(Phase {
-            name: "reduce",
-            unit: Unit::Vector,
-            steps_per_engine,
-            pipelined_with_prev: false,
-            chunk: None,
-        });
+        // Reduce the S split partials (streamed into the tail of the
+        // chunked group where the mode and tile count allow, otherwise
+        // after a grid barrier as Algorithm 1).
+        phases.extend(reduce_phases(machine, p, t, reduce));
     }
 
     // With C = 1 there is no rotation: the schedule IS Algorithm 1 and
@@ -165,7 +179,11 @@ mod tests {
     fn phase_structure_alternates_dequant_and_mmad() {
         let (_, t, tr) = build(8, 5120, 12288);
         assert!(t.chunks > 1, "shape chosen to require chunking");
-        let body = if t.splits > 1 { &tr.phases[..tr.phases.len() - 1] } else { &tr.phases[..] };
+        let body: Vec<&Phase> = tr
+            .phases
+            .iter()
+            .filter(|ph| !ph.name.starts_with("reduce"))
+            .collect();
         assert_eq!(body.len(), 2 * t.chunks);
         for (i, phase) in body.iter().enumerate() {
             let expect_chunk = (i / 2) as u32;
@@ -268,6 +286,40 @@ mod tests {
             .unwrap();
         let rel = (ck.total_ns - sk.total_ns).abs() / sk.total_ns;
         assert!(rel < 1e-9, "chunked {} vs splitk {}", ck.total_ns, sk.total_ns);
+    }
+
+    #[test]
+    fn pipelined_reduce_joins_chunk_group_and_never_loses() {
+        // 192 output tiles over 64 vector engines (even, three waves): the
+        // streamed reduce overlaps the tail chunk's MMAD.
+        let machine = m();
+        let p = GemmProblem::new(8, 12288, 5120);
+        let t = Tiling {
+            bm: 16,
+            bn: 64,
+            bk: 128,
+            splits: 2,
+            chunks: 4,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&machine, &p).unwrap();
+        let pip = schedule_reduce(&machine, &p, &t, ReduceMode::Pipelined).unwrap();
+        let names: Vec<&str> = pip.phases.iter().map(|ph| ph.name).collect();
+        assert_eq!(&names[names.len() - 2..], &["reduce_stream", "reduce_tail"]);
+        assert!(pip.phases[pip.phases.len() - 2].pipelined_with_prev);
+        let sim = Simulator::new(machine.clone());
+        let pip_ns = sim.run(&pip).unwrap().total_ns;
+        let bar_ns = sim
+            .run(&schedule_reduce(&machine, &p, &t, ReduceMode::Barrier).unwrap())
+            .unwrap()
+            .total_ns;
+        assert!(
+            pip_ns <= bar_ns * 1.000001,
+            "pipelined {pip_ns} slower than barrier {bar_ns}"
+        );
+        let auto_ns = sim.run(&schedule(&machine, &p, &t).unwrap()).unwrap().total_ns;
+        assert!(auto_ns <= pip_ns.min(bar_ns) * 1.000001);
     }
 
     #[test]

@@ -75,6 +75,45 @@ impl GemmProblem {
     }
 }
 
+/// How Split-K partials are reduced into the FP16 output (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReduceMode {
+    /// Algorithm 1's listing: wait for the grid barrier, then reduce every
+    /// output tile on the vector cores.
+    Barrier,
+    /// Stream-K-style fixup: the early waves of output tiles are reduced
+    /// while the cube cores drain the tail MMAD waves; only the final wave
+    /// (one tile per vector engine) stays behind the grid barrier.  Emitted
+    /// only when the output-tile count divides evenly over the vector
+    /// engines with at least two waves — the regime where the overlapped
+    /// schedule is provably never slower (DESIGN.md §10); otherwise the
+    /// trace degenerates to the barrier reduce exactly.
+    Pipelined,
+    /// Build both variants, simulate them, keep the faster (ties go to the
+    /// pipelined trace).  This is what `schedule`/`schedule_with` serve.
+    #[default]
+    Auto,
+}
+
+impl ReduceMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceMode::Barrier => "barrier",
+            ReduceMode::Pipelined => "pipelined",
+            ReduceMode::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<ReduceMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "barrier" => ReduceMode::Barrier,
+            "pipelined" => ReduceMode::Pipelined,
+            "auto" => ReduceMode::Auto,
+            other => anyhow::bail!("unknown reduce mode '{other}'"),
+        })
+    }
+}
+
 /// Strategy selector used by the CLI / benches / router.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Strategy {
@@ -161,16 +200,49 @@ pub fn schedule_with(
     strategy: Strategy,
     t: &tiling::Tiling,
 ) -> anyhow::Result<KernelTrace> {
+    schedule_with_reduce(machine, problem, strategy, t, ReduceMode::Auto)
+}
+
+/// Build the trace with an explicit tiling *and* reduce mode.  Only the
+/// Split-K family (splitk, chunked) has a reduce phase; the other
+/// strategies ignore the mode.
+pub fn schedule_with_reduce(
+    machine: &MachineConfig,
+    problem: &GemmProblem,
+    strategy: Strategy,
+    t: &tiling::Tiling,
+    reduce: ReduceMode,
+) -> anyhow::Result<KernelTrace> {
     match strategy {
-        Strategy::SplitK => splitk::schedule(machine, problem, t),
+        Strategy::SplitK => splitk::schedule_reduce(machine, problem, t, reduce),
         Strategy::DataParallel => data_parallel::schedule(machine, problem, t),
         Strategy::Fp16Native => fp16_native::schedule(machine, problem, t),
         Strategy::Fused => fused::schedule(machine, problem, t),
-        Strategy::Chunked => chunked::schedule(machine, problem, t),
+        Strategy::Chunked => chunked::schedule_reduce(machine, problem, t, reduce),
         Strategy::Auto => anyhow::bail!(
             "Strategy::Auto must be resolved through the tune cache (crate::tune)"
         ),
     }
+}
+
+/// Resolve `ReduceMode::Auto` for a schedule builder: build the pipelined
+/// variant, and if it actually streams (a tail-only pipelined reduce IS
+/// the barrier reduce), simulate it against the barrier variant and keep
+/// the faster (ties go to pipelined, so the served schedule is never
+/// slower than Algorithm 1's barrier reduce).
+pub(crate) fn resolve_reduce_auto(
+    machine: &MachineConfig,
+    mut build: impl FnMut(ReduceMode) -> anyhow::Result<KernelTrace>,
+) -> anyhow::Result<KernelTrace> {
+    let pipelined = build(ReduceMode::Pipelined)?;
+    if !pipelined.phases.iter().any(|ph| ph.name == "reduce_stream") {
+        return Ok(pipelined);
+    }
+    let barrier = build(ReduceMode::Barrier)?;
+    let sim = crate::ascend::Simulator::new(machine.clone());
+    let p_ns = sim.run(&pipelined)?.total_ns;
+    let b_ns = sim.run(&barrier)?.total_ns;
+    Ok(if p_ns <= b_ns { pipelined } else { barrier })
 }
 
 /// Assign `items` work items round-robin over `engines` engine slots,

@@ -24,7 +24,7 @@ use crate::ascend::{
     WorkspacePolicy,
 };
 
-use super::{round_robin, round_robin_steps, tiling::Tiling, GemmProblem};
+use super::{round_robin, round_robin_steps, tiling::Tiling, GemmProblem, ReduceMode};
 
 /// Build the Phase-1 dequant phase (shared with the data-parallel and
 /// chunked schedules; the former restricts it to the active cores' vector
@@ -62,12 +62,91 @@ pub(crate) fn dequant_phase(
     }
 }
 
-/// Build the full Split-K trace.
+/// Build the Phase-3 reduce as one or more phases, shared by the splitk
+/// and chunked schedules (DESIGN.md §10).
+///
+/// * [`ReduceMode::Barrier`] — Algorithm 1: a single vector phase behind
+///   the grid barrier covering every output tile.
+/// * [`ReduceMode::Pipelined`] — stream-K-style fixup: output tiles whose
+///   partials have drained from the cube cores are reduced concurrently
+///   with the tail MMAD waves ("reduce_stream", pipelined into the MMAD
+///   group), and only the final wave — one tile per vector engine — waits
+///   behind the barrier ("reduce_tail").  The stream phase is emitted only
+///   when the output tiles divide evenly over the vector engines with at
+///   least two waves: there every engine runs `W - 1` streamed steps plus
+///   one tail step, the streamed steps add to each resource stream exactly
+///   what the barrier reduce would have charged after the barrier, and the
+///   group-max execution model makes the overlapped total provably never
+///   slower.  Uneven assignments degenerate to the barrier reduce exactly.
+/// * [`ReduceMode::Auto`] is resolved by the schedule entry points (both
+///   variants are simulated and the faster kept), never passed here.
+pub(crate) fn reduce_phases(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+    mode: ReduceMode,
+) -> Vec<Phase> {
+    let m_pad = p.m_padded(machine);
+    let out_tiles = (m_pad / t.bm) * (p.n / t.bn);
+    let elems = t.bm * t.bn;
+    let step = TileStep::new(ComputeOp::Reduce { elems, terms: t.splits })
+        .read(BufferClass::Partial, (t.splits * elems * 4) as u64)
+        .write(BufferClass::Output, (elems * 2) as u64);
+    let engines = machine.total_vector_cores();
+    let assign = round_robin(out_tiles, engines);
+    let streamable =
+        mode == ReduceMode::Pipelined && out_tiles % engines == 0 && out_tiles >= 2 * engines;
+    if !streamable {
+        return vec![Phase {
+            name: "reduce",
+            unit: Unit::Vector,
+            steps_per_engine: assign.iter().map(|tiles| vec![step; tiles.len()]).collect(),
+            pipelined_with_prev: false,
+            chunk: None,
+        }];
+    }
+    let stream: Vec<Vec<TileStep>> = assign
+        .iter()
+        .map(|tiles| vec![step; tiles.len() - 1])
+        .collect();
+    let tail: Vec<Vec<TileStep>> = assign.iter().map(|_| vec![step; 1]).collect();
+    vec![
+        Phase {
+            name: "reduce_stream",
+            unit: Unit::Vector,
+            steps_per_engine: stream,
+            pipelined_with_prev: true,
+            chunk: None,
+        },
+        Phase {
+            name: "reduce_tail",
+            unit: Unit::Vector,
+            steps_per_engine: tail,
+            pipelined_with_prev: false,
+            chunk: None,
+        },
+    ]
+}
+
+/// Build the full Split-K trace (reduce mode resolved automatically).
 pub fn schedule(
     machine: &MachineConfig,
     p: &GemmProblem,
     t: &Tiling,
 ) -> anyhow::Result<KernelTrace> {
+    schedule_reduce(machine, p, t, ReduceMode::Auto)
+}
+
+/// Build the full Split-K trace with an explicit reduce mode.
+pub fn schedule_reduce(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+    reduce: ReduceMode,
+) -> anyhow::Result<KernelTrace> {
+    if reduce == ReduceMode::Auto {
+        return super::resolve_reduce_auto(machine, |mode| schedule_reduce(machine, p, t, mode));
+    }
     t.validate(machine, p)?;
     let m_pad = p.m_padded(machine);
     let ks = p.k / t.splits;
@@ -113,27 +192,14 @@ pub fn schedule(
         });
     }
 
-    // Phase 3: reduce output tiles over all vector cores (after barrier).
-    let out_tiles = (m_pad / t.bm) * (p.n / t.bn);
-    let elems = t.bm * t.bn;
-    let reduce_step = TileStep::new(ComputeOp::Reduce { elems, terms: t.splits })
-        .read(BufferClass::Partial, (t.splits * elems * 4) as u64)
-        .write(BufferClass::Output, (elems * 2) as u64);
-    let steps_per_engine = round_robin(out_tiles, machine.total_vector_cores())
-        .into_iter()
-        .map(|items| vec![reduce_step; items.len()])
-        .collect();
-    let p3 = Phase {
-        name: "reduce",
-        unit: Unit::Vector,
-        steps_per_engine,
-        pipelined_with_prev: false,
-        chunk: None,
-    };
+    // Phase 3: reduce the split partials into the FP16 output (streamed
+    // into the MMAD group where the mode and tile count allow).
+    let mut phases = vec![p1, p2];
+    phases.extend(reduce_phases(machine, p, t, reduce));
 
     Ok(KernelTrace {
         name: format!("splitk_m{}_n{}_k{}_s{}", p.m, p.n, p.k, t.splits),
-        phases: vec![p1, p2, p3],
+        phases,
         workspace_bytes: p.f16_weight_bytes(),
         partial_bytes: (t.splits * m_pad * p.n * 4) as u64,
         workspace_policy: WorkspacePolicy::Buffered,
@@ -222,6 +288,84 @@ mod tests {
         let r = Simulator::new(m()).run(&tr).unwrap();
         assert!(r.total_ns > 0.0);
         assert_eq!(r.groups.len(), 2, "ph1+ph2 pipelined, ph3 separate");
+    }
+
+    /// Explicit tiling whose output-tile count (192) divides the 64 vector
+    /// engines evenly with three waves: the streaming gate is open.
+    fn streaming_tiling() -> (GemmProblem, Tiling) {
+        let p = GemmProblem::new(16, 12288, 5120);
+        let t = Tiling {
+            bm: 16,
+            bn: 64,
+            bk: 128,
+            splits: 2,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        (p, t)
+    }
+
+    #[test]
+    fn pipelined_reduce_streams_all_but_final_wave() {
+        let (p, t) = streaming_tiling();
+        let tr = schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();
+        let names: Vec<&str> = tr.phases.iter().map(|ph| ph.name).collect();
+        assert_eq!(names, vec!["dequant", "splitk_mmad", "reduce_stream", "reduce_tail"]);
+        let stream = &tr.phases[2];
+        let tail = &tr.phases[3];
+        assert!(stream.pipelined_with_prev, "stream overlaps the MMAD group");
+        assert!(!tail.pipelined_with_prev, "final wave waits for the grid");
+        let out_tiles = (p.m_padded(&m()) / t.bm) * (p.n / t.bn);
+        let engines = m().total_vector_cores();
+        assert_eq!(stream.total_steps(), out_tiles - engines);
+        assert_eq!(tail.total_steps(), engines);
+        // Every output tile reduced exactly once across the two phases.
+        let out: u64 = tr.phases[2..]
+            .iter()
+            .map(|ph| ph.write_bytes(BufferClass::Output))
+            .sum();
+        assert_eq!(out, (p.m_padded(&m()) * p.n * 2) as u64);
+    }
+
+    #[test]
+    fn pipelined_reduce_never_slower_than_barrier() {
+        let machine = m();
+        let sim = Simulator::new(machine.clone());
+        let (p, t) = streaming_tiling();
+        let pip = sim
+            .run(&schedule_reduce(&machine, &p, &t, ReduceMode::Pipelined).unwrap())
+            .unwrap();
+        let bar = sim
+            .run(&schedule_reduce(&machine, &p, &t, ReduceMode::Barrier).unwrap())
+            .unwrap();
+        assert!(
+            pip.total_ns <= bar.total_ns * 1.000001,
+            "pipelined {} slower than barrier {}",
+            pip.total_ns,
+            bar.total_ns
+        );
+        // Auto picks the winner, so the default schedule matches the min.
+        let auto = sim.run(&schedule(&machine, &p, &t).unwrap()).unwrap();
+        assert!(auto.total_ns <= pip.total_ns.min(bar.total_ns) * 1.000001);
+    }
+
+    #[test]
+    fn pipelined_reduce_degenerates_on_uneven_tile_counts() {
+        // 4 output tiles over 64 engines: no streaming, the pipelined trace
+        // IS the barrier trace (Algorithm 1 preserved).
+        let p = GemmProblem::new(16, 1024, 8192);
+        let t = Tiling {
+            splits: 4,
+            ..tiling::select_splitk(&m(), &p).unwrap()
+        };
+        let pip = schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();
+        let bar = schedule_reduce(&m(), &p, &t, ReduceMode::Barrier).unwrap();
+        assert_eq!(pip.phases.len(), bar.phases.len());
+        let last = pip.phases.last().unwrap();
+        assert_eq!(last.name, "reduce");
+        assert!(!last.pipelined_with_prev);
     }
 
     #[test]

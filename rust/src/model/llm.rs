@@ -49,6 +49,54 @@ pub fn paper_shapes() -> Vec<LlmShape> {
     ]
 }
 
+/// Geometry of one dense decoder layer: the four projection GEMMs a decode
+/// step issues are fully determined by these widths (see
+/// [`crate::workload::decode_layer::DecodeLayer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerGeometry {
+    /// Model hidden width (activations, attention output, down output).
+    pub hidden: usize,
+    /// FFN inner width (the K of the paper's bottleneck down-projection).
+    pub ffn: usize,
+    /// K/V projection width: `hidden` for vanilla MHA, lower for the
+    /// GQA / low-rank (MLA-style) variants in the shape table.
+    pub kv: usize,
+    /// Weight-quantization group size along K.
+    pub group: usize,
+}
+
+impl LayerGeometry {
+    /// Vanilla multi-head attention: K/V width equals the hidden width.
+    pub fn mha(hidden: usize, ffn: usize) -> LayerGeometry {
+        LayerGeometry { hidden, ffn, kv: hidden, group: 128 }
+    }
+}
+
+/// Decoder-layer geometry per evaluated model, consistent with the
+/// [`paper_shapes`] table (the up/down projections of each model appear
+/// there as (N, K) rows; the kv widths come from the low-rank rows).
+pub fn paper_layer_geometries() -> Vec<(&'static str, LayerGeometry)> {
+    vec![
+        ("llama32", LayerGeometry::mha(2048, 8192)),
+        ("glm45", LayerGeometry::mha(5120, 12288)),
+        // DeepSeek-R1: expert inner 2048, kv-lora rank 1536.
+        ("deepseek", LayerGeometry { hidden: 7168, ffn: 2048, kv: 1536, group: 128 }),
+        // OpenPangu dense: low-rank projection 1536.
+        ("openpangu", LayerGeometry { hidden: 7680, ffn: 7680, kv: 1536, group: 128 }),
+    ]
+}
+
+/// Look up a paper model's decoder-layer geometry by name.
+pub fn layer_geometry(model: &str) -> anyhow::Result<LayerGeometry> {
+    paper_layer_geometries()
+        .into_iter()
+        .find(|(name, _)| *name == model)
+        .map(|(_, g)| g)
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown model '{model}' (try llama32, glm45, deepseek, openpangu)")
+        })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +122,18 @@ mod tests {
         for s in paper_shapes() {
             assert_eq!(s.k % 128, 0, "{}", s.tag());
         }
+    }
+
+    #[test]
+    fn layer_geometries_cover_all_models_and_align() {
+        let geoms = paper_layer_geometries();
+        assert_eq!(geoms.len(), 4);
+        for (model, g) in &geoms {
+            assert_eq!(g.hidden % g.group, 0, "{model}: hidden not group-aligned");
+            assert_eq!(g.ffn % g.group, 0, "{model}: ffn not group-aligned");
+            assert_eq!(g.kv % 16, 0, "{model}: kv not cube-tile aligned");
+        }
+        assert_eq!(layer_geometry("glm45").unwrap(), LayerGeometry::mha(5120, 12288));
+        assert!(layer_geometry("nope").is_err());
     }
 }

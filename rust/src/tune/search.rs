@@ -109,6 +109,22 @@ fn candidates(machine: &MachineConfig, p: &GemmProblem, strategy: Strategy) -> V
         let bk = fit_bk(machine, base.bm, bn, p.group.min(p.k));
         push(Tiling { bn, bk, ..base });
     }
+
+    // M-tile neighborhood: a narrower bm raises the grid for mid-size
+    // batches (ROADMAP follow-up: bm perturbations; halving bm keeps the
+    // block inside L0, so no bk refit is needed).
+    if base.bm > 16 {
+        push(Tiling { bm: base.bm / 2, ..base });
+    }
+
+    // Dequant-tile width neighborhood (ROADMAP follow-up: dequant_bn):
+    // narrower vector tiles trade UB pressure for Phase-1 grid size.
+    for dequant_bn in [256usize, 128, 64] {
+        if dequant_bn == base.dequant_bn || p.n % dequant_bn != 0 {
+            continue;
+        }
+        push(Tiling { dequant_bn, ..base });
+    }
     out
 }
 

@@ -1,0 +1,160 @@
+//! Decode-layer GEMM graph: the four projection GEMMs one transformer
+//! decoder layer issues per decode step (DESIGN.md §10).
+//!
+//! The paper profiles a single decode GEMM (the K >> N FFN
+//! down-projection), but a real decode step runs four per layer — QKV,
+//! attention-out, up/gate, and down — and the shapes straddle the paper's
+//! K >> N boundary, so per-node strategy selection through the tune cache
+//! is exactly where the autotuner pays off.  `DecodeLayer` enumerates the
+//! nodes for a model geometry and batch; the graph simulator
+//! ([`crate::analysis::layer`]) composes their traces into per-layer and
+//! per-step latency, and the coordinator router resolves every node
+//! through the tune cache on the serving path.
+
+use crate::kernels::GemmProblem;
+use crate::model::llm::LayerGeometry;
+use crate::runtime::artifacts::DecodeConfig;
+
+/// Which projection GEMM a graph node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GemmKind {
+    /// Fused Q/K/V projection: `N = hidden + 2 * kv`, `K = hidden`.
+    Qkv,
+    /// Attention output projection: `N = hidden`, `K = hidden`.
+    AttnOut,
+    /// Fused up + gate projection: `N = 2 * ffn`, `K = hidden`.
+    UpGate,
+    /// FFN down-projection (the paper's bottleneck): `N = hidden`, `K = ffn`.
+    Down,
+}
+
+impl GemmKind {
+    /// All four nodes in issue order.
+    pub fn all() -> [GemmKind; 4] {
+        [GemmKind::Qkv, GemmKind::AttnOut, GemmKind::UpGate, GemmKind::Down]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GemmKind::Qkv => "qkv",
+            GemmKind::AttnOut => "attn_out",
+            GemmKind::UpGate => "up_gate",
+            GemmKind::Down => "down",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<GemmKind> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "qkv" => GemmKind::Qkv,
+            "attn_out" | "attnout" | "o" => GemmKind::AttnOut,
+            "up_gate" | "upgate" | "up" => GemmKind::UpGate,
+            "down" => GemmKind::Down,
+            other => anyhow::bail!("unknown GEMM kind '{other}'"),
+        })
+    }
+}
+
+/// One decoder layer's GEMM graph for a given decode batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeLayer {
+    pub geometry: LayerGeometry,
+    /// Decode batch size (the M of every node).
+    pub batch: usize,
+}
+
+impl DecodeLayer {
+    pub fn new(geometry: LayerGeometry, batch: usize) -> DecodeLayer {
+        DecodeLayer { geometry, batch }
+    }
+
+    /// Layer graph of an AOT decode artifact's model config (the serving
+    /// path; those models use vanilla MHA, so `kv = hidden`).
+    pub fn from_decode_config(cfg: &DecodeConfig, batch: usize) -> DecodeLayer {
+        DecodeLayer::new(
+            LayerGeometry { hidden: cfg.hidden, ffn: cfg.ffn, kv: cfg.hidden, group: cfg.group },
+            batch,
+        )
+    }
+
+    /// The GEMM problem of one node.
+    pub fn problem(&self, kind: GemmKind) -> GemmProblem {
+        let g = self.geometry;
+        let (n, k) = match kind {
+            GemmKind::Qkv => (g.hidden + 2 * g.kv, g.hidden),
+            GemmKind::AttnOut => (g.hidden, g.hidden),
+            GemmKind::UpGate => (2 * g.ffn, g.hidden),
+            GemmKind::Down => (g.hidden, g.ffn),
+        };
+        GemmProblem { m: self.batch, n, k, group: g.group }
+    }
+
+    /// All four nodes in issue order.
+    pub fn problems(&self) -> [(GemmKind, GemmProblem); 4] {
+        GemmKind::all().map(|kind| (kind, self.problem(kind)))
+    }
+
+    /// Every node must be a legal GEMM (group-aligned K, tile-aligned N).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (kind, p) in self.problems() {
+            p.validate().map_err(|e| {
+                anyhow::anyhow!("{} node (M={} N={} K={}): {e}", kind.name(), p.m, p.n, p.k)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Packed INT4 weight bytes of the whole layer (capacity planning).
+    pub fn packed_weight_bytes(&self) -> u64 {
+        self.problems().iter().map(|(_, p)| p.packed_weight_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llm::{layer_geometry, paper_layer_geometries, PAPER_BATCH_SIZES};
+
+    #[test]
+    fn glm45_nodes_have_expected_shapes() {
+        let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let p = |kind| layer.problem(kind);
+        assert_eq!((p(GemmKind::Qkv).n, p(GemmKind::Qkv).k), (3 * 5120, 5120));
+        assert_eq!((p(GemmKind::AttnOut).n, p(GemmKind::AttnOut).k), (5120, 5120));
+        assert_eq!((p(GemmKind::UpGate).n, p(GemmKind::UpGate).k), (2 * 12288, 5120));
+        assert_eq!((p(GemmKind::Down).n, p(GemmKind::Down).k), (5120, 12288));
+        assert!(p(GemmKind::Down).k >= 2 * p(GemmKind::Down).n, "down is the K>>N node");
+    }
+
+    #[test]
+    fn deepseek_uses_low_rank_kv() {
+        let layer = DecodeLayer::new(layer_geometry("deepseek").unwrap(), 8);
+        assert_eq!(layer.problem(GemmKind::Qkv).n, 7168 + 2 * 1536);
+    }
+
+    #[test]
+    fn every_paper_geometry_validates_at_every_batch() {
+        for (model, geom) in paper_layer_geometries() {
+            for &batch in &PAPER_BATCH_SIZES {
+                DecodeLayer::new(geom, batch)
+                    .validate()
+                    .unwrap_or_else(|e| panic!("{model} b={batch}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in GemmKind::all() {
+            assert_eq!(GemmKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(GemmKind::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn packed_bytes_sum_all_nodes() {
+        let layer = DecodeLayer::new(LayerGeometry::mha(2048, 8192), 4);
+        // qkv 2048x6144 + attn_out 2048x2048 + up_gate 2048x16384 + down 8192x2048
+        let elems: u64 = (2048 * 6144) + (2048 * 2048) + (2048 * 16384) + (8192 * 2048);
+        assert_eq!(layer.packed_weight_bytes(), elems / 2);
+    }
+}

@@ -1,4 +1,9 @@
-//! Workload generators for benches, examples and tests.
+//! Workload generators for benches, examples and tests, plus the
+//! decode-layer GEMM graph ([`decode_layer`]).
+
+pub mod decode_layer;
+
+pub use decode_layer::{DecodeLayer, GemmKind};
 
 use crate::coordinator::DecodeRequest;
 use crate::kernels::GemmProblem;

@@ -100,6 +100,24 @@ fn metrics_track_groups_and_padding() {
 }
 
 #[test]
+fn all_four_gemm_kinds_appear_after_one_routed_batch() {
+    // Regression: metrics must cover every routed projection GEMM, not
+    // just the down-projection.
+    let rt = Runtime::cpu().unwrap();
+    let Some(mut server) = setup(&rt) else { return };
+    server.submit(DecodeRequest::new(1, vec![5], 2));
+    let _ = server.drain().unwrap();
+    let snap = server.metrics.snapshot();
+    for kind in ["qkv", "attn_out", "up_gate", "down"] {
+        assert!(
+            snap.gemm_schedules.contains_key(kind),
+            "missing '{kind}' in gemm_schedules: {:?}",
+            snap.gemm_schedules
+        );
+    }
+}
+
+#[test]
 fn router_caches_engines_per_batch_size() {
     let rt = Runtime::cpu().unwrap();
     let Some(mut server) = setup(&rt) else { return };

@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Offline generator for the golden-trace fixtures.
+
+Mirrors the byte accounting of `rust/src/kernels/{splitk,chunked,
+data_parallel}.rs` + `analysis/golden.rs` for the pinned-tiling cases in
+`rust/tests/golden_traces.rs`.  The canonical regeneration path is
+`BLESS=1 cargo test --test golden_traces`; this script exists so the
+fixtures can be (re)derived without a Rust toolchain and cross-checks the
+schedule math independently.
+"""
+
+import json
+import os
+
+AI_CORES = 32
+VEC_CORES = 64
+CUBE_TILE = 16
+
+
+def m_padded(m):
+    return (m + CUBE_TILE - 1) // CUBE_TILE * CUBE_TILE
+
+
+def round_robin_counts(items, engines):
+    return [len(range(e, items, engines)) for e in range(engines)]
+
+
+def phase(name, unit, pipelined, chunk, engines, steps, reads, writes):
+    return {
+        "name": name,
+        "unit": unit,
+        "pipelined_with_prev": pipelined,
+        "chunk": chunk,
+        "engines": engines,
+        "steps": steps,
+        "reads": {k: v for k, v in reads.items() if v > 0},
+        "writes": {k: v for k, v in writes.items() if v > 0},
+    }
+
+
+def dequant_phase(name, chunk, n, k, t, engines, pipelined, group=128):
+    k_tiles = k // t["dequant_bk"]
+    n_tiles = n // t["dequant_bn"]
+    tiles = k_tiles * n_tiles
+    elems = t["dequant_bk"] * t["dequant_bn"]
+    wp = tiles * elems // 2
+    qp = tiles * 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4
+    ws = tiles * elems * 2
+    return phase(
+        name, "vector", pipelined, chunk, min(tiles, engines), tiles,
+        {"weight_packed": wp, "quant_param": qp}, {"workspace": ws},
+    )
+
+
+def mmad_phase(name, chunk, pipelined, m, n, t, k_steps, with_epilogue):
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    steps = items * k_steps
+    b_tile = t["bk"] * t["bn"] * 2
+    a_tile = t["bm"] * t["bk"] * 2
+    reads = {"workspace": steps * b_tile, "activation": steps * a_tile}
+    writes = {}
+    if with_epilogue:
+        if t["splits"] == 1:
+            writes["output"] = items * t["bm"] * t["bn"] * 2
+        else:
+            writes["partial"] = items * t["bm"] * t["bn"] * 4
+    return phase(name, "cube", pipelined, chunk, min(items, AI_CORES), steps, reads, writes)
+
+
+def reduce_phases(m, n, t, mode):
+    out_tiles = (m_padded(m) // t["bm"]) * (n // t["bn"])
+    elems = t["bm"] * t["bn"]
+    rd = t["splits"] * elems * 4
+    wr = elems * 2
+    streamable = mode == "pipelined" and out_tiles % VEC_CORES == 0 and out_tiles >= 2 * VEC_CORES
+    if not streamable:
+        return [phase(
+            "reduce", "vector", False, None, min(out_tiles, VEC_CORES), out_tiles,
+            {"partial": out_tiles * rd}, {"output": out_tiles * wr},
+        )]
+    stream = out_tiles - VEC_CORES
+    return [
+        phase("reduce_stream", "vector", True, None, VEC_CORES, stream,
+              {"partial": stream * rd}, {"output": stream * wr}),
+        phase("reduce_tail", "vector", False, None, VEC_CORES, VEC_CORES,
+              {"partial": VEC_CORES * rd}, {"output": VEC_CORES * wr}),
+    ]
+
+
+def trace(name, phases, workspace_bytes, partial_bytes, policy, macs):
+    return {
+        "name": name,
+        "workspace_bytes": workspace_bytes,
+        "partial_bytes": partial_bytes,
+        "workspace_policy": policy,
+        "total_macs": macs,
+        "phases": phases,
+    }
+
+
+def splitk(m, n, k, t, mode):
+    mp = m_padded(m)
+    k_steps = (k // t["splits"]) // t["bk"]
+    phases = [
+        dequant_phase("dequant", None, n, k, t, VEC_CORES, False),
+        mmad_phase("splitk_mmad", None, True, m, n, t, k_steps, True),
+    ]
+    assert t["splits"] > 1
+    phases += reduce_phases(m, n, t, mode)
+    return trace(
+        f"splitk_m{m}_n{n}_k{k}_s{t['splits']}", phases,
+        k * n * 2, t["splits"] * mp * n * 4, "buffered", mp * n * k,
+    )
+
+
+def chunked(m, n, k, t, mode):
+    mp = m_padded(m)
+    chunks = t["chunks"]
+    kc = k // chunks
+    k_steps = (kc // t["splits"]) // t["bk"]
+    phases = []
+    for c in range(chunks):
+        phases.append(dequant_phase("chunk_dequant", c, n, kc, t, VEC_CORES, c > 0))
+        phases.append(mmad_phase("chunk_mmad", c, True, m, n, t, k_steps, c == chunks - 1))
+    if t["splits"] > 1:
+        phases += reduce_phases(m, n, t, mode)
+    slice_bytes = kc * n * 2
+    resident = slice_bytes * min(chunks, 2)
+    return trace(
+        f"chunked_m{m}_n{n}_k{k}_s{t['splits']}_c{chunks}", phases,
+        resident, t["splits"] * mp * n * 4,
+        {"pinned_resident_bytes": resident}, mp * n * k,
+    )
+
+
+def data_parallel(m, n, k, t):
+    mp = m_padded(m)
+    strips = (mp // t["bm"]) * (n // t["bn"])
+    engines = min(strips, AI_CORES) * 2
+    phases = [
+        dequant_phase("dequant", None, n, k, t, min(engines, VEC_CORES), False),
+        mmad_phase("dp_mmad", None, True, m, n, t, k // t["bk"], True),
+    ]
+    return trace(f"dp_m{m}_n{n}_k{k}", phases, k * n * 2, 0, "buffered", mp * n * k)
+
+
+def tiling(bm, bn, bk, splits, chunks):
+    return {"bm": bm, "bn": bn, "bk": bk, "splits": splits, "chunks": chunks,
+            "dequant_bk": 128, "dequant_bn": 256}
+
+
+FIXTURES = {
+    "splitk_m8_n512_k16384_pipelined":
+        splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "pipelined"),
+    "splitk_m16_n12288_k5120_pipelined":
+        splitk(16, 12288, 5120, tiling(16, 64, 128, 2, 1), "pipelined"),
+    "splitk_m8_n512_k16384_barrier":
+        splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "barrier"),
+    "chunked_m8_n5120_k12288_pipelined":
+        chunked(8, 5120, 12288, tiling(16, 256, 64, 4, 4), "pipelined"),
+    "chunked_m8_n2048_k8192_pipelined":
+        chunked(8, 2048, 8192, tiling(16, 128, 128, 2, 4), "pipelined"),
+    "dp_m8_n2048_k7168":
+        data_parallel(8, 2048, 7168, tiling(16, 256, 64, 1, 1)),
+}
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name, doc in FIXTURES.items():
+        path = os.path.join(here, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+//! Golden-trace snapshot tests: canonical kernel schedules serialized to
+//! committed JSON fixtures under `tests/fixtures/`, so schedule refactors
+//! diff against known-good traces.
+//!
+//! Regenerate after an intentional schedule change with
+//! `BLESS=1 cargo test --test golden_traces` and commit the diff.
+//!
+//! Every case pins its tiling explicitly (rather than going through the
+//! heuristic tilers) so the fixtures are stable against tiler changes and
+//! capture exactly the schedule construction.
+
+use std::path::PathBuf;
+
+use ascend_w4a16::analysis::golden;
+use ascend_w4a16::ascend::{KernelTrace, MachineConfig};
+use ascend_w4a16::kernels::tiling::Tiling;
+use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
+use ascend_w4a16::util::json::Json;
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures")).join(format!("{name}.json"))
+}
+
+fn bless_requested() -> bool {
+    std::env::var("BLESS").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Compare a trace's digest against its committed fixture (or regenerate
+/// it under `BLESS=1`).
+fn check(name: &str, trace: &KernelTrace) {
+    let got = golden::trace_to_json(trace);
+    let path = fixture_path(name);
+    if bless_requested() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_string()).unwrap();
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        // Write the candidate so the diff is easy to inspect, then fail:
+        // a missing fixture must be blessed and committed deliberately.
+        let _ = std::fs::create_dir_all(path.parent().unwrap());
+        let _ = std::fs::write(&path, got.to_string());
+        panic!(
+            "fixture {} was missing ({e}); wrote the current digest — \
+             inspect and commit it (or run BLESS=1 to regenerate all)",
+            path.display()
+        );
+    });
+    let want = Json::parse(&text)
+        .unwrap_or_else(|e| panic!("fixture {} is not valid JSON: {e}", path.display()));
+    assert_eq!(
+        got,
+        want,
+        "trace '{name}' diverges from its golden fixture {} — if the schedule \
+         change is intentional, regenerate with BLESS=1 cargo test --test golden_traces",
+        path.display()
+    );
+}
+
+#[test]
+fn splitk_decode_shape_matches_golden() {
+    // The paper's acceptance decode shape (K >> N), tail-only reduce.
+    let p = GemmProblem::new(8, 512, 16384);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("splitk_m8_n512_k16384_pipelined", &tr);
+}
+
+#[test]
+fn splitk_streaming_reduce_matches_golden() {
+    // 192 output tiles over 64 vector engines: the streamed reduce phases
+    // (reduce_stream + reduce_tail) are part of the digest.
+    let p = GemmProblem::new(16, 12288, 5120);
+    let t = Tiling { bm: 16, bn: 64, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("splitk_m16_n12288_k5120_pipelined", &tr);
+}
+
+#[test]
+fn splitk_barrier_reduce_matches_golden() {
+    // Algorithm 1's barrier reduce on the acceptance shape (the C=1 /
+    // barrier degeneration the pipelining must preserve).
+    let p = GemmProblem::new(8, 512, 16384);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Barrier).unwrap();
+    check("splitk_m8_n512_k16384_barrier", &tr);
+}
+
+#[test]
+fn chunked_spilling_shape_matches_golden() {
+    // 120 MiB FP16 workspace: 4 chunks rotating through the pinned pair.
+    let p = GemmProblem::new(8, 5120, 12288);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 4, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("chunked_m8_n5120_k12288_pipelined", &tr);
+}
+
+#[test]
+fn chunked_mid_shape_matches_golden() {
+    let p = GemmProblem::new(8, 2048, 8192);
+    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("chunked_m8_n2048_k8192_pipelined", &tr);
+}
+
+#[test]
+fn data_parallel_decode_shape_matches_golden() {
+    let p = GemmProblem::new(8, 2048, 7168);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 1, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = data_parallel::schedule(&machine(), &p, &t).unwrap();
+    check("dp_m8_n2048_k7168", &tr);
+}

@@ -1,0 +1,204 @@
+//! Decode-layer GEMM-graph integration: the graph simulator over every
+//! paper model, and the coordinator router resolving all four projection
+//! GEMMs through the tune cache (exercised against a synthetic manifest,
+//! so it runs without artifacts or PJRT).
+
+use ascend_w4a16::analysis::layer;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::coordinator::{Metrics, Router, Server};
+use ascend_w4a16::kernels::Strategy;
+use ascend_w4a16::model::llm::paper_layer_geometries;
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::workload::{DecodeLayer, GemmKind};
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+#[test]
+fn every_paper_model_layer_simulates_with_tuned_nodes() {
+    // Acceptance: a full decode layer with all four GEMMs resolved through
+    // the tuner, served reduce never slower than the barrier reduce.
+    let m = machine();
+    let mut tuner = Tuner::new(m.clone());
+    for (model, geom) in paper_layer_geometries() {
+        for batch in [1usize, 8, 64] {
+            let decode_layer = DecodeLayer::new(geom, batch);
+            let rep = layer::simulate_layer_tuned(&m, &decode_layer, &mut tuner)
+                .unwrap_or_else(|e| panic!("{model} b={batch}: {e}"));
+            assert_eq!(rep.nodes.len(), 4, "{model} b={batch}");
+            for n in &rep.nodes {
+                assert!(n.total_ns > 0.0 && n.total_ns.is_finite());
+                assert!(
+                    n.total_ns <= n.barrier_ns * 1.000001,
+                    "{model} b={batch} {}: served {} > barrier {}",
+                    n.kind.name(),
+                    n.total_ns,
+                    n.barrier_ns
+                );
+            }
+            assert!(
+                rep.layer_ns() <= rep.layer_barrier_ns() * 1.000001,
+                "{model} b={batch}: layer served slower than barrier"
+            );
+        }
+    }
+}
+
+#[test]
+fn tuned_layer_beats_all_splitk_layer() {
+    // Per-node strategy selection is the point of the graph: the tuned
+    // layer can tie but never lose to serving every node under the
+    // heuristic splitk schedule.
+    let m = machine();
+    let mut tuner = Tuner::new(m.clone());
+    for (model, geom) in paper_layer_geometries() {
+        let decode_layer = DecodeLayer::new(geom, 8);
+        let tuned = layer::simulate_layer_tuned(&m, &decode_layer, &mut tuner).unwrap();
+        let splitk = layer::simulate_layer(&m, &decode_layer, |p| {
+            Ok((
+                Strategy::SplitK,
+                ascend_w4a16::kernels::select_tiling(&m, p, Strategy::SplitK)?,
+                layer::Resolution::Heuristic,
+            ))
+        })
+        .unwrap();
+        assert!(
+            tuned.layer_ns() <= splitk.layer_ns() * 1.000001,
+            "{model}: tuned layer {} slower than splitk layer {}",
+            tuned.layer_ns(),
+            splitk.layer_ns()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router wiring against a synthetic manifest (no artifacts, no PJRT).
+// ---------------------------------------------------------------------------
+
+fn tiny_config() -> DecodeConfig {
+    DecodeConfig {
+        vocab: 512,
+        hidden: 256,
+        layers: 2,
+        heads: 4,
+        ffn: 1024,
+        max_seq: 64,
+        group: 128,
+        params: 0,
+    }
+}
+
+/// Write a minimal manifest (one decode artifact) + a warmed tune cache
+/// into a fresh temp dir.
+fn synthetic_artifacts(tag: &str, warm_cache: bool) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-layer-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = r#"{
+  "group": 128,
+  "batch_sizes": [4],
+  "paper_shapes": [],
+  "artifacts": [
+    {
+      "name": "decode_tiny_b4",
+      "kind": "decode",
+      "path": "decode_tiny_b4.hlo.txt",
+      "model": "tiny",
+      "batch": 4,
+      "config": {"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0},
+      "inputs": [],
+      "outputs": []
+    }
+  ]
+}"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    if warm_cache {
+        let mut tuner = Tuner::new(machine());
+        let decode_layer = DecodeLayer::from_decode_config(&tiny_config(), 4);
+        for (_, p) in decode_layer.problems() {
+            tuner.resolve(&p).unwrap();
+        }
+        tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    }
+    dir
+}
+
+#[test]
+fn router_resolves_all_four_gemms_through_the_cache() {
+    let dir = synthetic_artifacts("warm", true);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(router.has_tune_cache());
+
+    let plan = router.layer_plan(4).expect("decode config present");
+    assert!(
+        plan.fully_resolved(),
+        "all four projection GEMMs must resolve cache-only: {plan:?}"
+    );
+    assert!(plan.predicted_layer_ns().unwrap() > 0.0);
+    // The headline (down-projection) plan matches the layer plan's node.
+    let down = router.tuned_plan(4).unwrap();
+    assert_eq!(Some(down), plan.get(GemmKind::Down));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn routed_batch_records_all_four_gemm_kinds() {
+    // Regression (metrics): after one routed decode batch, every GEMM kind
+    // appears in the per-GEMM schedule counters.
+    let dir = synthetic_artifacts("metrics", true);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    let plan = router.layer_plan(4);
+
+    let metrics = Metrics::new();
+    Server::record_group_schedules(&metrics, plan.as_ref());
+    let snap = metrics.snapshot();
+    for kind in GemmKind::all() {
+        let counts = snap
+            .gemm_schedules
+            .get(kind.name())
+            .unwrap_or_else(|| panic!("kind '{}' missing after a routed batch", kind.name()));
+        assert_eq!(counts.values().map(|st| st.groups).sum::<u64>(), 1);
+        assert!(
+            !counts.contains_key("untuned"),
+            "{}: warmed cache must resolve, got {counts:?}",
+            kind.name()
+        );
+        // Tuned nodes surface their predicted kernel latency.
+        assert!(
+            counts.values().all(|st| st.mean_predicted_us() > 0.0),
+            "{}: predicted latency missing, got {counts:?}",
+            kind.name()
+        );
+    }
+    assert_eq!(snap.schedules.values().sum::<u64>(), 1, "headline counter");
+    let rendered = snap.render(1.0);
+    for kind in GemmKind::all() {
+        assert!(rendered.contains(kind.name()), "render missing {}", kind.name());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cold_cache_serves_untuned_but_still_covers_all_kinds() {
+    let dir = synthetic_artifacts("cold", false);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(!router.has_tune_cache());
+    assert!(router.layer_plan(4).is_none(), "no cache file -> no plan");
+
+    let metrics = Metrics::new();
+    Server::record_group_schedules(&metrics, None);
+    let snap = metrics.snapshot();
+    for kind in GemmKind::all() {
+        assert_eq!(snap.gemm_schedules[kind.name()]["untuned"].groups, 1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,9 +1,13 @@
 //! Cross-cutting property tests on coordinator invariants (routing,
-//! batching, request state) — the proptest deliverable for L3.
+//! batching, request state) — the proptest deliverable for L3 — plus the
+//! pipelined-reduce and tune-cache invariants of DESIGN.md §10.
 
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest};
-use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
-use ascend_w4a16::ascend::{MachineConfig, Simulator};
+use ascend_w4a16::kernels::tiling::Tiling;
+use ascend_w4a16::kernels::{self, chunked, splitk, GemmProblem, ReduceMode, Strategy};
+use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
+use ascend_w4a16::tune::{machine_tag, shape_key, TuneCache, TunedEntry, Tuner};
+use ascend_w4a16::util::json::Json;
 use ascend_w4a16::util::proptest::forall;
 
 #[test]
@@ -159,6 +163,155 @@ fn simulated_time_strictly_positive_and_finite() {
             Err(e) => (false, format!("n={n} k={k} {strategy:?}: {e}")),
         }
     });
+}
+
+#[test]
+fn pipelined_reduce_reduces_every_output_tile_exactly_once() {
+    // Schedule-level invariants of the reduce pipelining: every output
+    // tile reduced exactly once (so the FP16 output is written exactly
+    // once), chunk indices never rewind (the simulator's validator), and
+    // the phase split loses no tiles.
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    forall("reduce covers tiles once", 40, |rng| {
+        let n = 16 * rng.usize_range(1, 512);
+        let k = 128 * rng.usize_range(1, 96);
+        let batch = rng.usize_range(1, 64);
+        let p = GemmProblem::new(batch, n, k);
+        let splitk_t = kernels::tiling::select_splitk(&m, &p).unwrap();
+        let chunked_t = kernels::tiling::select_chunked(&m, &p).unwrap();
+        let traces = [
+            splitk::schedule_reduce(&m, &p, &splitk_t, ReduceMode::Pipelined).unwrap(),
+            chunked::schedule_reduce(&m, &p, &chunked_t, ReduceMode::Pipelined).unwrap(),
+        ];
+        for (trace, t) in traces.iter().zip([&splitk_t, &chunked_t]) {
+            if let Err(e) = sim.validate(trace) {
+                return (false, format!("n={n} k={k} {}: {e}", trace.name));
+            }
+            let out: u64 = trace
+                .phases
+                .iter()
+                .map(|ph| ph.write_bytes(BufferClass::Output))
+                .sum();
+            let want = (p.m_padded(&m) * n * 2) as u64;
+            if out != want {
+                return (false, format!("n={n} k={k} {}: output {out} != {want}", trace.name));
+            }
+            if t.splits > 1 {
+                let reduce_steps: usize = trace
+                    .phases
+                    .iter()
+                    .filter(|ph| ph.name.starts_with("reduce"))
+                    .map(|ph| ph.total_steps())
+                    .sum();
+                let out_tiles = (p.m_padded(&m) / t.bm) * (n / t.bn);
+                if reduce_steps != out_tiles {
+                    return (
+                        false,
+                        format!("n={n} k={k} {}: {reduce_steps} != {out_tiles}", trace.name),
+                    );
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn served_reduce_never_slower_than_barrier_reduce() {
+    // The served schedule (ReduceMode::Auto) picks the faster of the
+    // pipelined and barrier reduces, so across a randomized shape sweep it
+    // can tie but never lose to Algorithm 1's barrier reduce.
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    forall("pipelined reduce <= barrier", 30, |rng| {
+        let n = 16 * rng.usize_range(1, 512);
+        let k = 128 * rng.usize_range(1, 96);
+        let batch = rng.usize_range(1, 64);
+        let p = GemmProblem::new(batch, n, k);
+        for strategy in [Strategy::SplitK, Strategy::Chunked] {
+            let t = kernels::select_tiling(&m, &p, strategy).unwrap();
+            let served = sim
+                .run(&kernels::schedule_with_reduce(&m, &p, strategy, &t, ReduceMode::Auto).unwrap())
+                .unwrap()
+                .total_ns;
+            let barrier = sim
+                .run(&kernels::schedule_with_reduce(&m, &p, strategy, &t, ReduceMode::Barrier).unwrap())
+                .unwrap()
+                .total_ns;
+            if served > barrier * 1.000001 {
+                return (
+                    false,
+                    format!("n={n} k={k} {strategy:?}: served {served} > barrier {barrier}"),
+                );
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn tune_cache_round_trips_identical_lookups() {
+    // serialize -> deserialize -> every key resolves to the identical entry.
+    forall("tune cache round trip", 40, |rng| {
+        let mut cache = TuneCache::new();
+        let mut keys = Vec::new();
+        for i in 0..rng.usize_range(1, 12) {
+            let entry = TunedEntry {
+                strategy: *rng.choose(&Strategy::all_concrete()),
+                total_ns: rng.usize_range(1, 1 << 30) as f64,
+                tiling: Tiling {
+                    bm: 16 << rng.usize_range(0, 3),
+                    bn: 16 << rng.usize_range(0, 4),
+                    bk: 16 << rng.usize_range(0, 3),
+                    splits: 1 << rng.usize_range(0, 5),
+                    chunks: 1 << rng.usize_range(0, 6),
+                    dequant_bk: 128,
+                    dequant_bn: 16 << rng.usize_range(0, 4),
+                },
+            };
+            let key = format!("machine{}/m16_n{}_k{}_g128", i % 3, 16 * (i + 1), 128 * (i + 1));
+            cache.insert(key.clone(), entry);
+            keys.push((key, entry));
+        }
+        let json = cache.to_json().to_string();
+        let back = TuneCache::from_json(&Json::parse(&json).unwrap()).unwrap();
+        if back.len() != cache.len() {
+            return (false, format!("{} entries became {}", cache.len(), back.len()));
+        }
+        for (key, entry) in &keys {
+            if back.get(key) != Some(entry) {
+                return (false, format!("lookup '{key}' changed across the round trip"));
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn tune_cache_never_serves_another_machines_entry() {
+    // Staleness: an entry keyed to a different machine tag is never
+    // returned, even for the identical GEMM shape.
+    let machine = MachineConfig::ascend910();
+    let mut other = MachineConfig::ascend910();
+    other.ai_cores = 24; // different architecture -> different tag
+    assert_ne!(machine_tag(&machine), machine_tag(&other));
+
+    let p = GemmProblem::new(8, 512, 16384);
+    let entry = TunedEntry {
+        strategy: Strategy::Chunked,
+        total_ns: 123.0,
+        tiling: kernels::tiling::select_chunked(&machine, &p).unwrap(),
+    };
+    let mut tuner = Tuner::new(machine.clone());
+    tuner.cache.insert(shape_key(&other, &p), entry);
+    assert!(
+        tuner.lookup(&p).is_none(),
+        "stale entry from another machine must not be served"
+    );
+    // The same entry under the current machine's key IS served.
+    tuner.cache.insert(shape_key(&machine, &p), entry);
+    assert_eq!(tuner.lookup(&p), Some(entry));
 }
 
 #[test]

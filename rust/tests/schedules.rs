@@ -120,9 +120,8 @@ fn dequant_always_on_vector_mmad_always_on_cube() {
             let t = kernels::schedule(&m, &p, s).unwrap();
             for phase in &t.phases {
                 match phase.name {
-                    "dequant" | "chunk_dequant" | "reduce" => {
-                        assert_eq!(phase.unit, Unit::Vector)
-                    }
+                    "dequant" | "chunk_dequant" | "reduce" | "reduce_stream"
+                    | "reduce_tail" => assert_eq!(phase.unit, Unit::Vector),
                     _ => assert_eq!(phase.unit, Unit::Cube, "phase {}", phase.name),
                 }
             }
@@ -188,6 +187,40 @@ fn chunked_at_least_as_fast_as_splitk_in_k_dominant_regime() {
         }
     }
     assert!(strict_win, "chunked never strictly beat splitk in the K>>N regime");
+}
+
+#[test]
+fn served_reduce_never_slower_on_every_paper_decode_shape() {
+    // Acceptance criterion: the simulator ledger shows the pipelined
+    // (served, ReduceMode::Auto) reduce strictly faster or equal — never
+    // slower — than the barrier reduce on every paper decode shape, for
+    // both Split-K schedules.
+    use ascend_w4a16::kernels::ReduceMode;
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    for shape in paper_shapes() {
+        for &batch in &[1usize, 8, 64] {
+            let p = GemmProblem::new(batch, shape.n, shape.k);
+            for strategy in [Strategy::SplitK, Strategy::Chunked] {
+                let t = kernels::select_tiling(&m, &p, strategy).unwrap();
+                let served = sim
+                    .run(&kernels::schedule_with_reduce(&m, &p, strategy, &t, ReduceMode::Auto)
+                        .unwrap())
+                    .unwrap()
+                    .total_ns;
+                let barrier = sim
+                    .run(&kernels::schedule_with_reduce(&m, &p, strategy, &t, ReduceMode::Barrier)
+                        .unwrap())
+                    .unwrap()
+                    .total_ns;
+                assert!(
+                    served <= barrier * 1.000001,
+                    "{} M={batch} {strategy:?}: served {served} > barrier {barrier}",
+                    shape.tag()
+                );
+            }
+        }
+    }
 }
 
 #[test]
