@@ -1,21 +1,82 @@
-//! Decode-layer graph bench: simulate all four projection GEMMs (qkv,
-//! attn_out, up_gate, down) per paper model and batch size, every node
-//! resolved through the autotuner, and track what the pipelined reduce
-//! buys over Algorithm 1's barrier reduce at the whole-layer level — the
-//! granularity LiquidGEMM and Multi-Scale Dequant evaluate at.
+//! Decode-layer / decode-step bench: simulate every paper model — dense
+//! trunks AND the MoE decoding scenario — with every GEMM node resolved
+//! through the autotuner, and track (a) what the pipelined reduce buys
+//! over Algorithm 1's barrier reduce at the whole-layer level and (b)
+//! what the cross-node reduce/dequant overlap ledger buys over the
+//! sequential chain at the full-step level — the granularity LiquidGEMM
+//! and Multi-Scale Dequant evaluate at.
 //!
 //! Emits a machine-readable `target/BENCH_layer.json` so the per-layer
-//! latency trajectory is tracked across PRs.
+//! and per-step latency trajectories are tracked across PRs.
 //!
 //! Run with `cargo bench --bench e2e_layer`.
 
-use ascend_w4a16::analysis::layer;
+use ascend_w4a16::analysis::layer::{self, OverlapMode};
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
-use ascend_w4a16::model::llm::paper_layer_geometries;
+use ascend_w4a16::model::llm::{paper_layer_geometries, paper_moe_geometries, MoeGeometry};
 use ascend_w4a16::tune::Tuner;
 use ascend_w4a16::util::json::Json;
-use ascend_w4a16::workload::DecodeLayer;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
+
+const KV_LEN: usize = 2048;
+
+fn bench_model(
+    machine: &MachineConfig,
+    tuner: &mut Tuner,
+    model: &str,
+    geom: ascend_w4a16::model::llm::LayerGeometry,
+    moe: Option<MoeGeometry>,
+    cells: &mut Vec<Json>,
+) {
+    section(&format!(
+        "decode {} — {model} (simulated, tuned per node)",
+        if moe.is_some() { "step [MoE]" } else { "step" }
+    ));
+    for batch in [1usize, 8, 64] {
+        let mut decode_layer = DecodeLayer::new(geom, batch);
+        if let Some(moe) = moe {
+            decode_layer = decode_layer.with_moe(moe);
+        }
+        let step = DecodeStep::new(decode_layer, KV_LEN, DecodeStep::default_heads(&geom));
+        let srep = layer::simulate_step_tuned(machine, &step, OverlapMode::Auto, tuner)
+            .expect("simulate step");
+        // The step's GEMM sub-chain IS the layer report — no second pass.
+        let rep = srep.gemm_report();
+        let reduce_speedup = rep.layer_barrier_ns() / rep.layer_ns();
+        let overlap_speedup = srep.sequential_ns / srep.served_ns();
+        let strategies: Vec<String> = rep
+            .nodes
+            .iter()
+            .map(|n| format!("{}={}", n.kind.name(), n.strategy.name()))
+            .collect();
+        println!(
+            "b={batch:<3} gemm {:>9.2} us (barrier {:>9.2} us, {:.3}x)  \
+             step {:>9.2} us (seq {:>9.2} us, overlap {:.3}x)  {}",
+            rep.layer_ns() / 1e3,
+            rep.layer_barrier_ns() / 1e3,
+            reduce_speedup,
+            srep.served_ns() / 1e3,
+            srep.sequential_ns / 1e3,
+            overlap_speedup,
+            strategies.join(" "),
+        );
+        cells.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("moe", Json::Bool(moe.is_some())),
+            ("batch", Json::num(batch as f64)),
+            ("layer_us", Json::num(rep.layer_ns() / 1e3)),
+            ("layer_barrier_us", Json::num(rep.layer_barrier_ns() / 1e3)),
+            ("reduce_pipeline_speedup", Json::num(reduce_speedup)),
+            ("step_us", Json::num(srep.served_ns() / 1e3)),
+            ("step_sequential_us", Json::num(srep.sequential_ns / 1e3)),
+            ("overlap_speedup", Json::num(overlap_speedup)),
+            ("overlap_gain_us", Json::num(srep.overlap_gain_ns() / 1e3)),
+            ("detail", layer::layer_json(&rep)),
+            ("step_detail", layer::step_json(&srep)),
+        ]));
+    }
+}
 
 fn main() {
     let machine = MachineConfig::ascend910();
@@ -23,37 +84,15 @@ fn main() {
     let mut cells = Vec::new();
 
     for (model, geom) in paper_layer_geometries() {
-        section(&format!("decode layer — {model} (simulated, tuned per node)"));
-        for batch in [1usize, 8, 64] {
-            let decode_layer = DecodeLayer::new(geom, batch);
-            let rep = layer::simulate_layer_tuned(&machine, &decode_layer, &mut tuner)
-                .expect("simulate layer");
-            let speedup = rep.layer_barrier_ns() / rep.layer_ns();
-            let strategies: Vec<String> = rep
-                .nodes
-                .iter()
-                .map(|n| format!("{}={}", n.kind.name(), n.strategy.name()))
-                .collect();
-            println!(
-                "b={batch:<3} layer {:>10.2} us  (barrier-reduce {:>10.2} us, {:.3}x)  {}",
-                rep.layer_ns() / 1e3,
-                rep.layer_barrier_ns() / 1e3,
-                speedup,
-                strategies.join(" "),
-            );
-            cells.push(Json::obj(vec![
-                ("model", Json::str(model)),
-                ("batch", Json::num(batch as f64)),
-                ("layer_us", Json::num(rep.layer_ns() / 1e3)),
-                ("layer_barrier_us", Json::num(rep.layer_barrier_ns() / 1e3)),
-                ("reduce_pipeline_speedup", Json::num(speedup)),
-                ("detail", layer::layer_json(&rep)),
-            ]));
-        }
+        bench_model(&machine, &mut tuner, model, geom, None, &mut cells);
+    }
+    for (model, geom, moe) in paper_moe_geometries() {
+        bench_model(&machine, &mut tuner, model, geom, Some(moe), &mut cells);
     }
 
     let doc = Json::obj(vec![
         ("bench", Json::str("e2e_layer")),
+        ("kv_len", Json::num(KV_LEN as f64)),
         ("cells", Json::arr(cells)),
     ]);
     std::fs::create_dir_all("target").expect("target dir");

@@ -1,14 +1,17 @@
 //! Golden-trace serialization: a stable, diffable JSON digest of a
-//! [`KernelTrace`] for the snapshot tests under `rust/tests/fixtures/`.
+//! [`KernelTrace`] — and of a full [`DecodeStep`] graph — for the
+//! snapshot tests under `rust/tests/fixtures/`.
 //!
-//! The digest captures what a schedule *does* — phase structure, engine
-//! occupancy, step counts, and per-class byte totals — without any timing,
-//! so schedule refactors diff against known-good traces while timing-model
+//! The digests capture what a schedule / step graph *does* — phase
+//! structure, engine occupancy, step counts, per-class byte totals, node
+//! ordering and problem shapes — without any timing, so schedule and
+//! graph refactors diff against known-good structures while timing-model
 //! changes leave the fixtures untouched.  Regenerate with
 //! `BLESS=1 cargo test --test golden_traces`.
 
 use crate::ascend::{BufferClass, KernelTrace, Phase, Unit, WorkspacePolicy};
 use crate::util::json::Json;
+use crate::workload::decode_layer::{DecodeStep, StepNode};
 
 /// Every buffer class with its stable fixture label.
 const CLASSES: [(BufferClass, &str); 7] = [
@@ -78,6 +81,53 @@ pub fn trace_to_json(trace: &KernelTrace) -> Json {
     ])
 }
 
+/// Serialize a full decode-step graph to its golden digest: the ordered
+/// node list with problem shapes, expert counts and vector-pass sizing —
+/// everything the step simulator consumes, nothing it produces.
+pub fn step_to_json(step: &DecodeStep) -> Json {
+    let nodes = step
+        .nodes()
+        .iter()
+        .map(|node| match node {
+            StepNode::Gemm(g) => Json::obj(vec![
+                ("node", Json::str("gemm")),
+                ("kind", Json::str(g.kind.name())),
+                ("m", Json::num(g.problem.m as f64)),
+                ("n", Json::num(g.problem.n as f64)),
+                ("k", Json::num(g.problem.k as f64)),
+                ("group", Json::num(g.problem.group as f64)),
+                ("count", Json::num(g.count as f64)),
+            ]),
+            StepNode::Vector(v) => Json::obj(vec![
+                ("node", Json::str("vector")),
+                ("kind", Json::str(v.kind.name())),
+                ("elems", Json::num(v.elems as f64)),
+                ("ops_per_elem", Json::num(v.ops_per_elem)),
+                ("hbm_bytes", Json::num(v.hbm_bytes as f64)),
+                ("l2_bytes", Json::num(v.l2_bytes as f64)),
+            ]),
+        })
+        .collect();
+    let moe = match step.layer.moe {
+        Some(m) => Json::obj(vec![
+            ("experts", Json::num(m.experts as f64)),
+            ("topk", Json::num(m.topk as f64)),
+            ("expert_ffn", Json::num(m.expert_ffn as f64)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("batch", Json::num(step.layer.batch as f64)),
+        ("kv_len", Json::num(step.kv_len as f64)),
+        ("heads", Json::num(step.heads as f64)),
+        ("hidden", Json::num(step.layer.geometry.hidden as f64)),
+        ("ffn", Json::num(step.layer.geometry.ffn as f64)),
+        ("kv", Json::num(step.layer.geometry.kv as f64)),
+        ("moe", moe),
+        ("nodes", Json::arr(nodes)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,5 +167,21 @@ mod tests {
             policy.get("pinned_resident_bytes").is_some(),
             "spilling shape must pin its rotating slices"
         );
+    }
+
+    #[test]
+    fn step_digest_round_trips_and_orders_nodes() {
+        use crate::model::llm::{layer_geometry, moe_geometry};
+        use crate::workload::decode_layer::DecodeLayer;
+        let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+            .with_moe(moe_geometry("deepseek-moe").unwrap());
+        let step = DecodeStep::new(layer, 2048, 56);
+        let j = step_to_json(&step);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+        let nodes = back.req("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), step.nodes().len());
+        assert_eq!(nodes[1].req_str("kind").unwrap(), "qkv");
+        assert!(back.req("moe").unwrap().get("experts").is_some());
     }
 }

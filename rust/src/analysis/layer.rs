@@ -1,24 +1,32 @@
-//! Decode-layer graph simulator: composes per-GEMM [`KernelTrace`]
-//! results into per-layer and per-step latency, with a strategy
-//! assignment per node (DESIGN.md §10).
+//! Decode-layer / decode-step graph simulator: composes per-GEMM
+//! [`KernelTrace`] results and [`vecpass`] vector passes into per-layer
+//! and per-step latency, with a strategy assignment per GEMM node and a
+//! cross-node overlap ledger (DESIGN.md §10–§11).
 //!
-//! The graph is a chain — each projection consumes the previous one's
-//! activations — so layer latency is the sum of the node kernel times
-//! (each node already overlaps its own dequant/MMAD/reduce internally;
-//! attention itself and the elementwise glue are out of scope, as in the
-//! paper's evaluation).  Every node is priced twice: under the served
-//! reduce schedule (`ReduceMode::Auto`, pipelined fixup when it wins) and
-//! under Algorithm 1's barrier reduce, so the report shows exactly what
-//! the reduce pipelining buys per node and per layer.
+//! Two granularities:
+//! * [`simulate_layer`] — the GEMM sub-chain only (PR-2 surface): layer
+//!   latency is the sum of the node kernel times, each priced under the
+//!   served reduce and under Algorithm 1's barrier reduce.
+//! * [`simulate_step`] — the full decode step: attention score/softmax/AV,
+//!   RMSNorm/residual/activation glue and MoE routing priced by the
+//!   [`vecpass`] bandwidth model, the MoE expert fan-out as batched GEMM
+//!   nodes, and an [`OverlapMode`] ledger that overlaps node i's exposed
+//!   Split-K reduce with node i+1's weight-only dequant prologue (same
+//!   vector cores, disjoint buffers).  `Auto` prices both ledgers and
+//!   serves the winner, so the served plan is never slower than the
+//!   sequential chain.
 //!
 //! [`KernelTrace`]: crate::ascend::KernelTrace
+//! [`vecpass`]: crate::ascend::vecpass
 
-use crate::ascend::{MachineConfig, Simulator};
+use crate::ascend::{vecpass, MachineConfig, SimReport, Simulator};
 use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
 use crate::tune::Tuner;
 use crate::util::json::Json;
 use crate::util::stats;
-use crate::workload::decode_layer::{DecodeLayer, GemmKind};
+use crate::workload::decode_layer::{
+    DecodeLayer, DecodeStep, GemmKind, GemmNode, StepNode, VectorOp,
+};
 
 /// How one graph node's (strategy, tiling) assignment was determined.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,18 +49,71 @@ impl Resolution {
     }
 }
 
-/// One simulated graph node.
+/// Whether the step simulator may overlap adjacent GEMM nodes
+/// (DESIGN.md §11): node i's exposed post-barrier reduce runs in the
+/// vector-engine slack of node i+1's weight-only dequant prologue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// PR-2's ledger: nodes priced strictly back to back.
+    Sequential,
+    /// Every eligible adjacent pair overlaps.  With today's ledger
+    /// (gains clamped non-negative) this is never slower than
+    /// `Sequential` by construction.
+    Overlapped,
+    /// Price both ledgers, serve `min(sequential, overlapped)`.  Today
+    /// that always equals `Overlapped`; the min makes the never-slower
+    /// guarantee *structural* — a future ledger that prices overlap
+    /// penalties (buffer pressure, merged-phase contention) can return
+    /// negative gains without ever regressing the served plan.
+    #[default]
+    Auto,
+}
+
+impl OverlapMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Sequential => "sequential",
+            OverlapMode::Overlapped => "overlapped",
+            OverlapMode::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<OverlapMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => OverlapMode::Sequential,
+            "overlapped" | "overlap" => OverlapMode::Overlapped,
+            "auto" => OverlapMode::Auto,
+            other => anyhow::bail!("unknown overlap mode '{other}'"),
+        })
+    }
+}
+
+/// One simulated GEMM node (`count` identical GEMMs for expert batches).
 #[derive(Debug, Clone)]
 pub struct NodeReport {
     pub kind: GemmKind,
     pub problem: GemmProblem,
+    /// Identical GEMMs this node issues back to back (1 for dense nodes).
+    pub count: usize,
     pub strategy: Strategy,
     pub tiling: Tiling,
     pub resolution: Resolution,
-    /// Simulated kernel time under the served (auto) reduce schedule.
+    /// Simulated time of ONE GEMM under the served (auto) reduce schedule.
+    pub unit_ns: f64,
+    /// One GEMM under Algorithm 1's barrier reduce (>= unit_ns).
+    pub unit_barrier_ns: f64,
+    /// `count * unit_ns` — the node's sequential contribution.
     pub total_ns: f64,
-    /// The same schedule under Algorithm 1's barrier reduce (>= total_ns).
+    /// `count * unit_barrier_ns`.
     pub barrier_ns: f64,
+    /// Exposed post-barrier reduce group of one GEMM (0 when the reduce
+    /// streams entirely, or the strategy has no reduce) — what a
+    /// downstream dequant can hide (DESIGN.md §11).
+    pub reduce_tail_ns: f64,
+    /// Vector-engine idle headroom of one GEMM's leading weight-only
+    /// dequant phase (transfer time minus SIMD time) — where an upstream
+    /// reduce can hide.
+    pub dequant_slack_ns: f64,
 }
 
 impl NodeReport {
@@ -65,7 +126,7 @@ impl NodeReport {
     }
 }
 
-/// The simulated layer: all four nodes at one batch size.
+/// The simulated layer: the GEMM sub-chain at one batch size.
 #[derive(Debug, Clone)]
 pub struct LayerReport {
     pub batch: usize,
@@ -93,9 +154,79 @@ impl LayerReport {
     }
 }
 
-/// Simulate one decode layer.  `resolve` assigns each node its
-/// (strategy, tiling) — a tuner closure on the tuned path, a constant on
-/// the fixed-strategy path.
+/// The overlap terms of one served trace: (exposed post-barrier reduce
+/// group time, vector-engine slack of the leading dequant phase).
+fn overlap_terms(r: &SimReport) -> (f64, f64) {
+    let reduce_tail = match r.groups.last() {
+        Some(g) if r.groups.len() > 1 => {
+            let all_reduce = g
+                .phases
+                .iter()
+                .all(|&pi| r.phase_times[pi].name.starts_with("reduce"));
+            if all_reduce {
+                g.total_ns
+            } else {
+                0.0
+            }
+        }
+        _ => 0.0,
+    };
+    // The weight-only prologue: the first dequant phase's transfer time is
+    // independent of upstream activations, so its vector-compute headroom
+    // (standalone minus SIMD time) is where an upstream reduce can hide.
+    let dequant_slack = r
+        .phase_times
+        .iter()
+        .find(|pt| pt.name.contains("dequant"))
+        .map(|pt| (pt.standalone_ns - pt.compute_ns).max(0.0))
+        .unwrap_or(0.0);
+    (reduce_tail, dequant_slack)
+}
+
+/// Simulate one GEMM node: served (auto-reduce) and barrier-reduce
+/// pricing plus the overlap terms, multiplied over the node's count.
+fn simulate_gemm_node(
+    machine: &MachineConfig,
+    sim: &Simulator,
+    node: &GemmNode,
+    assignment: (Strategy, Tiling, Resolution),
+) -> anyhow::Result<NodeReport> {
+    let (strategy, tiling, resolution) = assignment;
+    let p = &node.problem;
+    let served = kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Auto)?;
+    let served_run = sim.run(&served)?;
+    let unit_ns = served_run.total_ns;
+    let (reduce_tail_ns, dequant_slack_ns) = overlap_terms(&served_run);
+    // Only the Split-K family has a reduce; for the other strategies
+    // the barrier variant IS the served trace — skip the re-build.
+    let unit_barrier_ns = match strategy {
+        Strategy::SplitK | Strategy::Chunked => {
+            let barrier =
+                kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Barrier)?;
+            sim.run(&barrier)?.total_ns
+        }
+        _ => unit_ns,
+    };
+    let count = node.count.max(1) as f64;
+    Ok(NodeReport {
+        kind: node.kind,
+        problem: *p,
+        count: node.count.max(1),
+        strategy,
+        tiling,
+        resolution,
+        unit_ns,
+        unit_barrier_ns,
+        total_ns: unit_ns * count,
+        barrier_ns: unit_barrier_ns * count,
+        reduce_tail_ns,
+        dequant_slack_ns,
+    })
+}
+
+/// Simulate one decode layer's GEMM chain.  `resolve` assigns each node
+/// its (strategy, tiling) — a tuner closure on the tuned path, a constant
+/// on the fixed-strategy path.
 pub fn simulate_layer(
     machine: &MachineConfig,
     layer: &DecodeLayer,
@@ -103,60 +234,275 @@ pub fn simulate_layer(
 ) -> anyhow::Result<LayerReport> {
     let sim = Simulator::new(machine.clone());
     let mut nodes = Vec::with_capacity(4);
-    for (kind, p) in layer.problems() {
-        let (strategy, tiling, resolution) = resolve(&p)?;
-        let served =
-            kernels::schedule_with_reduce(machine, &p, strategy, &tiling, ReduceMode::Auto)?;
-        let total_ns = sim.run(&served)?.total_ns;
-        // Only the Split-K family has a reduce; for the other strategies
-        // the barrier variant IS the served trace — skip the re-build.
-        let barrier_ns = match strategy {
-            Strategy::SplitK | Strategy::Chunked => {
-                let barrier = kernels::schedule_with_reduce(
-                    machine,
-                    &p,
-                    strategy,
-                    &tiling,
-                    ReduceMode::Barrier,
-                )?;
-                sim.run(&barrier)?.total_ns
-            }
-            _ => total_ns,
-        };
-        nodes.push(NodeReport {
-            kind,
-            problem: p,
-            strategy,
-            tiling,
-            resolution,
-            total_ns,
-            barrier_ns,
-        });
+    for node in layer.gemm_nodes() {
+        let assignment = resolve(&node.problem)?;
+        nodes.push(simulate_gemm_node(machine, &sim, &node, assignment)?);
     }
     Ok(LayerReport { batch: layer.batch, nodes })
 }
 
-/// Simulate a layer with every node resolved through the tuner (cache
-/// hit, or live search that warms the cache) — the `repro layer
-/// --strategy auto` and `e2e_layer` bench path.
+/// Resolve through a tuner (cache hit, or live search that warms the
+/// cache), tracking how each node was resolved.
+fn tuner_resolve(
+    tuner: &mut Tuner,
+    p: &GemmProblem,
+) -> anyhow::Result<(Strategy, Tiling, Resolution)> {
+    let before = tuner.searches;
+    let e = tuner.resolve(p)?;
+    let resolution = if tuner.searches > before {
+        Resolution::Searched
+    } else {
+        Resolution::CacheHit
+    };
+    Ok((e.strategy, e.tiling, resolution))
+}
+
+/// Simulate a layer with every node resolved through the tuner — the
+/// `repro layer --strategy auto` and `e2e_layer` bench path.
 pub fn simulate_layer_tuned(
     machine: &MachineConfig,
     layer: &DecodeLayer,
     tuner: &mut Tuner,
 ) -> anyhow::Result<LayerReport> {
-    simulate_layer(machine, layer, |p| {
-        let before = tuner.searches;
-        let e = tuner.resolve(p)?;
-        let resolution = if tuner.searches > before {
-            Resolution::Searched
-        } else {
-            Resolution::CacheHit
-        };
-        Ok((e.strategy, e.tiling, resolution))
+    simulate_layer(machine, layer, |p| tuner_resolve(tuner, p))
+}
+
+/// One simulated non-GEMM node of the step graph.
+#[derive(Debug, Clone)]
+pub struct VectorNodeReport {
+    pub op: VectorOp,
+    pub total_ns: f64,
+    pub compute_ns: f64,
+    pub hbm_ns: f64,
+    pub l2_ns: f64,
+}
+
+/// One node of the simulated decode-step graph, in issue order.
+#[derive(Debug, Clone)]
+pub enum StepNodeReport {
+    Gemm(NodeReport),
+    Vector(VectorNodeReport),
+}
+
+impl StepNodeReport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepNodeReport::Gemm(n) => n.kind.name(),
+            StepNodeReport::Vector(v) => v.op.kind.name(),
+        }
+    }
+
+    pub fn total_ns(&self) -> f64 {
+        match self {
+            StepNodeReport::Gemm(n) => n.total_ns,
+            StepNodeReport::Vector(v) => v.total_ns,
+        }
+    }
+}
+
+/// One entry of the overlap ledger: `pairs` adjacent (producer reduce,
+/// consumer dequant) overlaps, each hiding `gain_ns` of vector work.
+/// Within an expert batch the producer and consumer are instances of the
+/// same node (`producer == consumer`, `pairs == count - 1`).
+#[derive(Debug, Clone)]
+pub struct OverlapPair {
+    /// Index into [`StepReport::nodes`] of the node whose reduce moves.
+    pub producer: usize,
+    /// Index of the node whose dequant prologue hides it.
+    pub consumer: usize,
+    /// Adjacent GEMM pairs this entry covers.
+    pub pairs: usize,
+    /// Exposed reduce time available per pair (the producer's tail).
+    pub reduce_ns: f64,
+    /// Vector slack available per pair (the consumer's dequant headroom).
+    pub slack_ns: f64,
+    /// min(reduce_ns, slack_ns) — hidden per pair.
+    pub gain_ns: f64,
+}
+
+impl OverlapPair {
+    pub fn total_gain_ns(&self) -> f64 {
+        self.pairs as f64 * self.gain_ns
+    }
+}
+
+/// The simulated full decode step of one layer.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub batch: usize,
+    pub kv_len: usize,
+    /// The requested overlap mode (what `served_ns` prices).
+    pub mode: OverlapMode,
+    pub nodes: Vec<StepNodeReport>,
+    /// Every eligible adjacent overlap (empty under zero-gain graphs).
+    pub ledger: Vec<OverlapPair>,
+    /// Sum of all node times, strictly back to back (PR-2's ledger).
+    pub sequential_ns: f64,
+    /// `sequential_ns` minus every ledger gain (never larger).
+    pub overlapped_ns: f64,
+}
+
+impl StepReport {
+    /// The step latency the requested mode serves.
+    pub fn served_ns(&self) -> f64 {
+        match self.mode {
+            OverlapMode::Sequential => self.sequential_ns,
+            OverlapMode::Overlapped => self.overlapped_ns,
+            OverlapMode::Auto => self.overlapped_ns.min(self.sequential_ns),
+        }
+    }
+
+    /// Per-decode-step latency for a model with `layers` layers.
+    pub fn step_ns(&self, layers: usize) -> f64 {
+        self.served_ns() * layers as f64
+    }
+
+    /// Total overlap gain of the ledger.
+    pub fn overlap_gain_ns(&self) -> f64 {
+        self.ledger.iter().map(|p| p.total_gain_ns()).sum()
+    }
+
+    /// Summed GEMM node time (sequential pricing).
+    pub fn gemm_ns(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, StepNodeReport::Gemm(_)))
+            .map(|n| n.total_ns())
+            .sum()
+    }
+
+    /// Summed non-GEMM (attention + glue) node time.
+    pub fn vector_ns(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, StepNodeReport::Vector(_)))
+            .map(|n| n.total_ns())
+            .sum()
+    }
+
+    /// The GEMM sub-chain as a [`LayerReport`] (issue order preserved).
+    pub fn gemm_report(&self) -> LayerReport {
+        LayerReport {
+            batch: self.batch,
+            nodes: self
+                .nodes
+                .iter()
+                .filter_map(|n| match n {
+                    StepNodeReport::Gemm(g) => Some(g.clone()),
+                    StepNodeReport::Vector(_) => None,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Build the overlap ledger over the step's GEMM sub-chain: expert
+/// batches overlap internally (`count - 1` pairs), and each GEMM's
+/// trailing reduce overlaps the next GEMM's dequant prologue.  Vector
+/// glue between two GEMMs does not break eligibility — the consumer's
+/// dequant touches only its own weights, so it is independent of every
+/// intervening activation op (DESIGN.md §11).
+fn build_ledger(nodes: &[StepNodeReport]) -> Vec<OverlapPair> {
+    let gemms: Vec<(usize, &NodeReport)> = nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| match n {
+            StepNodeReport::Gemm(g) => Some((i, g)),
+            StepNodeReport::Vector(_) => None,
+        })
+        .collect();
+    let mut ledger = Vec::new();
+    for (i, g) in &gemms {
+        if g.count > 1 {
+            let gain = g.reduce_tail_ns.min(g.dequant_slack_ns);
+            if gain > 0.0 {
+                ledger.push(OverlapPair {
+                    producer: *i,
+                    consumer: *i,
+                    pairs: g.count - 1,
+                    reduce_ns: g.reduce_tail_ns,
+                    slack_ns: g.dequant_slack_ns,
+                    gain_ns: gain,
+                });
+            }
+        }
+    }
+    for w in gemms.windows(2) {
+        let (pi, producer) = w[0];
+        let (ci, consumer) = w[1];
+        let gain = producer.reduce_tail_ns.min(consumer.dequant_slack_ns);
+        if gain > 0.0 {
+            ledger.push(OverlapPair {
+                producer: pi,
+                consumer: ci,
+                pairs: 1,
+                reduce_ns: producer.reduce_tail_ns,
+                slack_ns: consumer.dequant_slack_ns,
+                gain_ns: gain,
+            });
+        }
+    }
+    ledger
+}
+
+/// Simulate the full decode-step graph under an overlap mode.
+pub fn simulate_step(
+    machine: &MachineConfig,
+    step: &DecodeStep,
+    mode: OverlapMode,
+    mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+) -> anyhow::Result<StepReport> {
+    let sim = Simulator::new(machine.clone());
+    let mut nodes = Vec::new();
+    for spec in step.nodes() {
+        nodes.push(match spec {
+            StepNode::Gemm(node) => {
+                let assignment = resolve(&node.problem)?;
+                StepNodeReport::Gemm(simulate_gemm_node(machine, &sim, &node, assignment)?)
+            }
+            StepNode::Vector(op) => {
+                let c = vecpass::price_pass(
+                    machine,
+                    op.elems,
+                    op.ops_per_elem,
+                    op.hbm_bytes,
+                    op.l2_bytes,
+                );
+                StepNodeReport::Vector(VectorNodeReport {
+                    op,
+                    total_ns: c.total_ns,
+                    compute_ns: c.compute_ns,
+                    hbm_ns: c.hbm_ns,
+                    l2_ns: c.l2_ns,
+                })
+            }
+        });
+    }
+    let sequential_ns: f64 = nodes.iter().map(|n| n.total_ns()).sum();
+    let ledger = build_ledger(&nodes);
+    let gain: f64 = ledger.iter().map(|p| p.total_gain_ns()).sum();
+    Ok(StepReport {
+        batch: step.layer.batch,
+        kv_len: step.kv_len,
+        mode,
+        nodes,
+        ledger,
+        sequential_ns,
+        overlapped_ns: sequential_ns - gain,
     })
 }
 
-/// Render the per-node table plus layer / step totals.
+/// Simulate the full step with every GEMM node resolved through the tuner.
+pub fn simulate_step_tuned(
+    machine: &MachineConfig,
+    step: &DecodeStep,
+    mode: OverlapMode,
+    tuner: &mut Tuner,
+) -> anyhow::Result<StepReport> {
+    simulate_step(machine, step, mode, |p| tuner_resolve(tuner, p))
+}
+
+/// Render the per-node table plus layer / step totals (GEMM chain only).
 pub fn render_layer(report: &LayerReport, layers: usize) -> String {
     let mut out = String::new();
     out.push_str(&format!(
@@ -164,14 +510,15 @@ pub fn render_layer(report: &LayerReport, layers: usize) -> String {
         report.batch
     ));
     out.push_str(&format!(
-        "{:<9} {:<20} {:>12} {:>10} | {:>10} {:>11} {:>8}\n",
-        "node", "shape", "strategy", "via", "served_us", "barrier_us", "reduce"
+        "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10} {:>11} {:>8}\n",
+        "node", "shape", "x", "strategy", "via", "served_us", "barrier_us", "reduce"
     ));
     for n in &report.nodes {
         out.push_str(&format!(
-            "{:<9} {:<20} {:>12} {:>10} | {:>10.2} {:>11.2} {:>7.2}x\n",
+            "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10.2} {:>11.2} {:>7.2}x\n",
             n.kind.name(),
             format!("m{}_n{}_k{}", n.problem.m, n.problem.n, n.problem.k),
+            n.count,
             n.strategy.name(),
             n.resolution.name(),
             n.total_ns / 1e3,
@@ -193,6 +540,63 @@ pub fn render_layer(report: &LayerReport, layers: usize) -> String {
     out
 }
 
+/// Render the full decode-step graph with the overlap ledger.
+pub fn render_step(report: &StepReport, layers: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Full decode-step graph — batch {}, kv_len {} (simulated, overlap {})\n",
+        report.batch,
+        report.kv_len,
+        report.mode.name()
+    ));
+    out.push_str(&format!(
+        "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10}\n",
+        "node", "shape", "x", "strategy", "via", "served_us"
+    ));
+    for n in &report.nodes {
+        match n {
+            StepNodeReport::Gemm(g) => out.push_str(&format!(
+                "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
+                g.kind.name(),
+                format!("m{}_n{}_k{}", g.problem.m, g.problem.n, g.problem.k),
+                g.count,
+                g.strategy.name(),
+                g.resolution.name(),
+                g.total_ns / 1e3,
+            )),
+            StepNodeReport::Vector(v) => out.push_str(&format!(
+                "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
+                v.op.kind.name(),
+                format!("{} elems", v.op.elems),
+                1,
+                "-",
+                "-",
+                v.total_ns / 1e3,
+            )),
+        }
+    }
+    let pairs: usize = report.ledger.iter().map(|p| p.pairs).sum();
+    out.push_str(&format!(
+        "\ngemm {} + attention/glue {}  ({} eligible reduce/dequant overlaps hide {})\n",
+        stats::fmt_ns(report.gemm_ns()),
+        stats::fmt_ns(report.vector_ns()),
+        pairs,
+        stats::fmt_ns(report.overlap_gain_ns()),
+    ));
+    out.push_str(&format!(
+        "layer: {} sequential vs {} overlapped -> served {}\n",
+        stats::fmt_ns(report.sequential_ns),
+        stats::fmt_ns(report.overlapped_ns),
+        stats::fmt_ns(report.served_ns()),
+    ));
+    out.push_str(&format!(
+        "step ({layers} layers): {}  -> {:.0} decode steps/s end to end\n",
+        stats::fmt_ns(report.step_ns(layers)),
+        1e9 / report.step_ns(layers),
+    ));
+    out
+}
+
 /// JSON form of a layer report (BENCH_layer.json, `repro layer --json`).
 pub fn layer_json(report: &LayerReport) -> Json {
     let nodes = report
@@ -204,6 +608,7 @@ pub fn layer_json(report: &LayerReport) -> Json {
                 ("m", Json::num(n.problem.m as f64)),
                 ("n", Json::num(n.problem.n as f64)),
                 ("k", Json::num(n.problem.k as f64)),
+                ("count", Json::num(n.count as f64)),
                 ("strategy", Json::str(n.strategy.name())),
                 ("resolution", Json::str(n.resolution.name())),
                 ("served_ns", Json::num(n.total_ns)),
@@ -220,10 +625,70 @@ pub fn layer_json(report: &LayerReport) -> Json {
     ])
 }
 
+/// JSON form of a full decode-step report (`repro layer --overlap --json`).
+pub fn step_json(report: &StepReport) -> Json {
+    let nodes = report
+        .nodes
+        .iter()
+        .map(|n| match n {
+            StepNodeReport::Gemm(g) => Json::obj(vec![
+                ("node", Json::str("gemm")),
+                ("kind", Json::str(g.kind.name())),
+                ("m", Json::num(g.problem.m as f64)),
+                ("n", Json::num(g.problem.n as f64)),
+                ("k", Json::num(g.problem.k as f64)),
+                ("count", Json::num(g.count as f64)),
+                ("strategy", Json::str(g.strategy.name())),
+                ("resolution", Json::str(g.resolution.name())),
+                ("served_ns", Json::num(g.total_ns)),
+                ("barrier_ns", Json::num(g.barrier_ns)),
+                ("reduce_tail_ns", Json::num(g.reduce_tail_ns)),
+                ("dequant_slack_ns", Json::num(g.dequant_slack_ns)),
+            ]),
+            StepNodeReport::Vector(v) => Json::obj(vec![
+                ("node", Json::str("vector")),
+                ("kind", Json::str(v.op.kind.name())),
+                ("elems", Json::num(v.op.elems as f64)),
+                ("served_ns", Json::num(v.total_ns)),
+                ("compute_ns", Json::num(v.compute_ns)),
+                ("hbm_ns", Json::num(v.hbm_ns)),
+                ("l2_ns", Json::num(v.l2_ns)),
+            ]),
+        })
+        .collect();
+    let overlap = report
+        .ledger
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("producer", Json::num(p.producer as f64)),
+                ("consumer", Json::num(p.consumer as f64)),
+                ("pairs", Json::num(p.pairs as f64)),
+                ("reduce_ns", Json::num(p.reduce_ns)),
+                ("slack_ns", Json::num(p.slack_ns)),
+                ("gain_ns", Json::num(p.gain_ns)),
+                ("total_gain_ns", Json::num(p.total_gain_ns())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("batch", Json::num(report.batch as f64)),
+        ("kv_len", Json::num(report.kv_len as f64)),
+        ("overlap_mode", Json::str(report.mode.name())),
+        ("sequential_ns", Json::num(report.sequential_ns)),
+        ("overlapped_ns", Json::num(report.overlapped_ns)),
+        ("served_ns", Json::num(report.served_ns())),
+        ("gemm_ns", Json::num(report.gemm_ns())),
+        ("vector_ns", Json::num(report.vector_ns())),
+        ("nodes", Json::arr(nodes)),
+        ("overlap", Json::arr(overlap)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::llm::layer_geometry;
+    use crate::model::llm::{layer_geometry, moe_geometry};
 
     fn fixed(
         machine: &MachineConfig,
@@ -249,6 +714,8 @@ mod tests {
                 n.total_ns,
                 n.barrier_ns
             );
+            assert_eq!(n.count, 1);
+            assert_eq!(n.total_ns, n.unit_ns);
         }
         assert!(r.layer_ns() > r.nodes[0].total_ns);
         assert_eq!(r.step_ns(2), 2.0 * r.layer_ns());
@@ -274,5 +741,66 @@ mod tests {
         let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
         let r = simulate_layer(&m, &layer, |_| anyhow::bail!("no assignment"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn moe_layer_multiplies_expert_batches() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+            .with_moe(moe_geometry("deepseek-moe").unwrap());
+        let r = simulate_layer(&m, &layer, fixed(&m, Strategy::SplitK)).unwrap();
+        assert_eq!(r.nodes.len(), 4);
+        let experts: Vec<&NodeReport> =
+            r.nodes.iter().filter(|n| n.kind == GemmKind::MoeExpert).collect();
+        assert_eq!(experts.len(), 2);
+        for e in experts {
+            assert_eq!(e.count, 64);
+            assert!((e.total_ns - 64.0 * e.unit_ns).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn step_covers_gemm_and_vector_nodes() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let r = simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::SplitK)).unwrap();
+        assert_eq!(r.nodes.len(), 12);
+        assert!(r.gemm_ns() > 0.0 && r.vector_ns() > 0.0);
+        assert!((r.sequential_ns - r.gemm_ns() - r.vector_ns()).abs() < 1e-6);
+        assert!(r.overlapped_ns <= r.sequential_ns);
+        assert!(r.served_ns() <= r.sequential_ns);
+        assert_eq!(r.gemm_report().nodes.len(), 4);
+        // The overlap accounting balances exactly.
+        assert!(
+            (r.sequential_ns - r.overlap_gain_ns() - r.overlapped_ns).abs() < 1e-6,
+            "ledger must price every gain exactly once"
+        );
+        let text = render_step(&r, 32);
+        for name in ["attn_score", "rmsnorm", "qkv", "down", "overlap"] {
+            assert!(text.contains(name), "render missing {name}:\n{text}");
+        }
+        let parsed = Json::parse(&step_json(&r).to_string()).unwrap();
+        assert_eq!(parsed.req("nodes").unwrap().as_arr().unwrap().len(), 12);
+    }
+
+    #[test]
+    fn overlap_modes_order_correctly() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+            .with_moe(moe_geometry("deepseek-moe").unwrap());
+        let step = DecodeStep::new(layer, 2048, 56);
+        let seq = simulate_step(&m, &step, OverlapMode::Sequential, fixed(&m, Strategy::SplitK))
+            .unwrap();
+        let auto =
+            simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::SplitK)).unwrap();
+        assert_eq!(seq.served_ns(), seq.sequential_ns);
+        assert!(auto.served_ns() <= seq.served_ns() * 1.000001);
+        // Expert batches expose internal overlap pairs.
+        assert!(
+            auto.ledger.iter().any(|p| p.producer == p.consumer && p.pairs > 1)
+                || auto.ledger.is_empty(),
+            "expert fan-out should ledger internal pairs when any gain exists"
+        );
     }
 }

@@ -23,6 +23,8 @@
 //! * [`npu`] — the chip-level executor: walks a trace, resolves bandwidth
 //!   contention, applies double buffering, and returns a [`npu::SimReport`]
 //!   with per-phase times and a byte-accurate traffic ledger.
+//! * [`vecpass`] — whole-chip vector passes: the bandwidth/compute model
+//!   pricing the non-GEMM decode-step nodes (attention, norms, glue).
 
 pub mod config;
 pub mod cube;
@@ -31,8 +33,10 @@ pub mod memory;
 pub mod mte;
 pub mod npu;
 pub mod trace;
+pub mod vecpass;
 pub mod vector;
 
 pub use config::MachineConfig;
 pub use npu::{SimReport, Simulator};
 pub use trace::{BufferClass, ComputeOp, KernelTrace, Phase, TileStep, Unit, WorkspacePolicy};
+pub use vecpass::VecPassCost;

@@ -1,0 +1,113 @@
+//! Whole-chip vector passes: the bandwidth/compute model behind the
+//! non-GEMM decode-step nodes (attention score/softmax/AV, RMSNorm,
+//! residual adds, activation glue, MoE routing — DESIGN.md §11).
+//!
+//! A pass streams `elems` elements through every vector engine with a
+//! fixed SIMD cost per element, moving `hbm_bytes` against HBM (cold
+//! reads: KV cache, router weights) and `l2_bytes` against the shared L2
+//! (activation-sized producer/consumer traffic).  The MTEs double-buffer
+//! transfers against compute, so — exactly as in the §7 group execution
+//! model — the pass costs the *maximum* of its three streams, plus one
+//! grid barrier for the phase boundary.  This is deliberately the same
+//! pricing a one-phase vector [`KernelTrace`](super::KernelTrace) would
+//! get from the simulator, without building per-tile step lists for ops
+//! whose only levers are bytes and lanes.
+
+use super::config::MachineConfig;
+use super::{event, mte};
+
+/// Priced streams of one vector pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct VecPassCost {
+    /// SIMD time of the straggler engine (perfect element spread).
+    pub compute_ns: f64,
+    /// HBM transfer time at the engines' aggregate bandwidth.
+    pub hbm_ns: f64,
+    /// L2 transfer time at the engines' aggregate bandwidth.
+    pub l2_ns: f64,
+    /// Phase-boundary synchronization (one grid barrier).
+    pub sync_ns: f64,
+    /// max(streams) + sync.
+    pub total_ns: f64,
+}
+
+/// Price one whole-chip vector pass.
+pub fn price_pass(
+    machine: &MachineConfig,
+    elems: u64,
+    ops_per_elem: f64,
+    hbm_bytes: u64,
+    l2_bytes: u64,
+) -> VecPassCost {
+    let engines = machine.total_vector_cores().max(1);
+    let per_engine = elems as f64 / engines as f64;
+    let compute_ns =
+        machine.cycles_to_ns(per_engine * ops_per_elem / machine.vector_lanes_f16);
+    let hbm_ns = if hbm_bytes == 0 {
+        0.0
+    } else {
+        hbm_bytes as f64 / mte::aggregate_bw(machine, machine.hbm_bw, engines)
+    };
+    let l2_ns = if l2_bytes == 0 {
+        0.0
+    } else {
+        l2_bytes as f64 / mte::aggregate_bw(machine, machine.l2_bw, engines)
+    };
+    let sync_ns = event::barrier(machine);
+    VecPassCost {
+        compute_ns,
+        hbm_ns,
+        l2_ns,
+        sync_ns,
+        total_ns: compute_ns.max(hbm_ns).max(l2_ns) + sync_ns,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    #[test]
+    fn empty_pass_costs_one_barrier() {
+        let c = price_pass(&m(), 0, 4.0, 0, 0);
+        assert_eq!(c.total_ns, m().barrier_ns);
+        assert_eq!((c.compute_ns, c.hbm_ns, c.l2_ns), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn compute_bound_pass_matches_lane_math() {
+        // 64 engines x 128 lanes at 1 GHz = 8192 elem-ops/ns.
+        let c = price_pass(&m(), 8192 * 1000, 1.0, 0, 0);
+        assert!((c.compute_ns - 1000.0).abs() < 1e-9);
+        assert_eq!(c.total_ns, c.compute_ns + c.sync_ns);
+    }
+
+    #[test]
+    fn hbm_bound_pass_uses_aggregate_bandwidth() {
+        // 64 engines saturate the 1200 B/ns HBM stream.
+        let c = price_pass(&m(), 64, 1.0, 1_200_000, 0);
+        assert!((c.hbm_ns - 1000.0).abs() < 1e-9);
+        assert!(c.total_ns >= c.hbm_ns);
+    }
+
+    #[test]
+    fn streams_take_max_not_sum() {
+        let c = price_pass(&m(), 8192 * 500, 1.0, 600_000, 360_000);
+        let max = c.compute_ns.max(c.hbm_ns).max(c.l2_ns);
+        assert_eq!(c.total_ns, max + c.sync_ns);
+        assert!(c.compute_ns > 0.0 && c.hbm_ns > 0.0 && c.l2_ns > 0.0);
+    }
+
+    #[test]
+    fn cost_monotone_in_every_input() {
+        let base = price_pass(&m(), 1 << 20, 4.0, 1 << 20, 1 << 20);
+        assert!(price_pass(&m(), 1 << 21, 4.0, 1 << 20, 1 << 20).total_ns >= base.total_ns);
+        assert!(price_pass(&m(), 1 << 20, 8.0, 1 << 20, 1 << 20).total_ns >= base.total_ns);
+        assert!(price_pass(&m(), 1 << 20, 4.0, 1 << 22, 1 << 20).total_ns >= base.total_ns);
+        assert!(price_pass(&m(), 1 << 20, 4.0, 1 << 20, 1 << 22).total_ns >= base.total_ns);
+    }
+}

@@ -36,6 +36,9 @@ struct Inner {
 pub struct GemmScheduleStat {
     /// Decode groups served under this strategy.
     pub groups: u64,
+    /// GEMM instances issued: equals `groups` for dense nodes; MoE expert
+    /// nodes contribute their active-expert fan-out per group.
+    pub gemms: u64,
     /// Summed predicted kernel time of the tuned schedule (ns; untuned
     /// nodes contribute 0 — no prediction exists for them).
     pub predicted_ns_sum: f64,
@@ -87,6 +90,19 @@ impl Metrics {
     /// Record the strategy serving one projection GEMM of a routed group,
     /// with the tuned schedule's predicted kernel time when available.
     pub fn record_gemm_schedule(&self, kind: &str, strategy: &str, predicted_ns: Option<f64>) {
+        self.record_gemm_schedule_n(kind, strategy, predicted_ns, 1);
+    }
+
+    /// Like [`Metrics::record_gemm_schedule`], for a node that issues
+    /// `count` identical GEMMs per group (MoE expert fan-outs).
+    /// `predicted_ns` is the node total (already count-multiplied).
+    pub fn record_gemm_schedule_n(
+        &self,
+        kind: &str,
+        strategy: &str,
+        predicted_ns: Option<f64>,
+        count: u64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let stat = g
             .gemm_schedules
@@ -95,6 +111,7 @@ impl Metrics {
             .entry(strategy.to_string())
             .or_default();
         stat.groups += 1;
+        stat.gemms += count.max(1);
         stat.predicted_ns_sum += predicted_ns.unwrap_or(0.0);
     }
 
@@ -165,14 +182,17 @@ impl MetricsSnapshot {
             let parts: Vec<String> = stats
                 .iter()
                 .map(|(s, st)| {
-                    if st.predicted_ns_sum > 0.0 {
-                        format!("{s}={} (~{:.1} us)", st.groups, st.mean_predicted_us())
-                    } else {
-                        format!("{s}={}", st.groups)
+                    let mut part = format!("{s}={}", st.groups);
+                    if st.gemms > st.groups {
+                        part.push_str(&format!(" [{} gemms]", st.gemms));
                     }
+                    if st.predicted_ns_sum > 0.0 {
+                        part.push_str(&format!(" (~{:.1} us)", st.mean_predicted_us()));
+                    }
+                    part
                 })
                 .collect();
-            out.push_str(&format!("gemm {:<8}: {}\n", kind, parts.join("  ")));
+            out.push_str(&format!("gemm {:<10}: {}\n", kind, parts.join("  ")));
         }
         out
     }
@@ -206,13 +226,31 @@ mod tests {
         assert_eq!(s.gemm_schedules.len(), 4);
         let down = &s.gemm_schedules["down"]["chunked"];
         assert_eq!(down.groups, 2);
+        assert_eq!(down.gemms, 2, "dense nodes issue one GEMM per group");
         assert!((down.mean_predicted_us() - 15.0).abs() < 1e-9);
         assert_eq!(s.gemm_schedules["down"]["untuned"].groups, 1);
         let text = s.render(1.0);
         for kind in ["qkv", "attn_out", "up_gate", "down"] {
-            assert!(text.contains(&format!("gemm {kind:<8}")), "missing {kind} in:\n{text}");
+            assert!(text.contains(&format!("gemm {kind:<10}")), "missing {kind} in:\n{text}");
         }
         assert!(text.contains("(~15.0 us)"), "latency missing in:\n{text}");
+    }
+
+    #[test]
+    fn moe_expert_fanout_counts_gemm_instances() {
+        let m = Metrics::new();
+        // Two expert nodes (up + down) of 64 active experts each, twice.
+        for _ in 0..2 {
+            m.record_gemm_schedule_n("moe_expert", "chunked", Some(640_000.0), 64);
+            m.record_gemm_schedule_n("moe_expert", "splitk", Some(320_000.0), 64);
+        }
+        let s = m.snapshot();
+        let chunked = &s.gemm_schedules["moe_expert"]["chunked"];
+        assert_eq!(chunked.groups, 2);
+        assert_eq!(chunked.gemms, 128, "per-kind expert counts");
+        let text = s.render(1.0);
+        assert!(text.contains("moe_expert"), "render missing moe_expert:\n{text}");
+        assert!(text.contains("[128 gemms]"), "render missing expert count:\n{text}");
     }
 
     #[test]

@@ -31,5 +31,5 @@ pub mod server;
 pub use batcher::{Batcher, BatchPolicy, DecodeGroup};
 pub use metrics::{GemmScheduleStat, Metrics};
 pub use request::{DecodeRequest, DecodeResult};
-pub use router::{LayerPlan, Router, TunedPlan};
+pub use router::{LayerPlan, PlanNode, Router, TunedPlan};
 pub use server::Server;

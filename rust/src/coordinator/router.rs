@@ -7,11 +7,11 @@
 //!
 //! Schedule tuning: if a tune cache (`tune_cache.json`, written by
 //! `repro tune`) sits next to the artifact manifest, the router resolves
-//! every projection GEMM of the decode layer — QKV, attention-out,
-//! up/gate and the FFN down-projection (the paper's K >> N bottleneck) —
-//! through it, so each group is served under its per-node tuned
-//! strategies.  The lookup is cache-only: the serving hot path never pays
-//! a search.
+//! every GEMM node of the decode layer — QKV, attention-out, the dense
+//! up/gate + down pair (the paper's K >> N bottleneck), or the routed
+//! MoE expert fan-out — through it, so each group is served under its
+//! per-node tuned strategies.  The lookup is cache-only: the serving hot
+//! path never pays a search.
 
 use std::collections::HashMap;
 
@@ -26,20 +26,32 @@ use crate::workload::decode_layer::{DecodeLayer, GemmKind};
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunedPlan {
     pub strategy: Strategy,
-    /// Simulated kernel time of the tuned schedule (ns).
+    /// Simulated kernel time of ONE tuned GEMM (ns).
     pub predicted_ns: f64,
 }
 
-/// Tuned plans for all four projection GEMMs of one decode layer
-/// (`None` per node on a cache miss — that node serves untuned).
+/// One resolved node of a decode layer's GEMM graph.
 #[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanNode {
+    pub kind: GemmKind,
+    /// Identical GEMMs the node issues per decode step (the active-expert
+    /// fan-out on MoE layers, 1 for dense projections).
+    pub count: usize,
+    /// `None` on a cache miss — that node serves untuned.
+    pub plan: Option<TunedPlan>,
+}
+
+/// Tuned plans for every GEMM node of one decode layer — the four dense
+/// projections, or the attention pair plus the MoE expert fan-out.
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
-    pub nodes: [(GemmKind, Option<TunedPlan>); 4],
+    pub nodes: Vec<PlanNode>,
 }
 
 impl LayerPlan {
+    /// First node of a kind (MoE layers carry two `MoeExpert` nodes).
     pub fn get(&self, kind: GemmKind) -> Option<TunedPlan> {
-        self.nodes.iter().find(|(k, _)| *k == kind).and_then(|(_, plan)| *plan)
+        self.nodes.iter().find(|n| n.kind == kind).and_then(|n| n.plan)
     }
 
     /// Strategy label for the metrics sink ("untuned" on a cache miss).
@@ -49,15 +61,28 @@ impl LayerPlan {
 
     /// Whether every node resolved through the cache.
     pub fn fully_resolved(&self) -> bool {
-        self.nodes.iter().all(|(_, plan)| plan.is_some())
+        self.nodes.iter().all(|n| n.plan.is_some())
     }
 
-    /// Predicted GEMM time of the whole layer (only when fully resolved).
+    /// Predicted GEMM time of the whole layer (only when fully resolved);
+    /// expert nodes contribute their full fan-out.
     pub fn predicted_layer_ns(&self) -> Option<f64> {
         self.nodes
             .iter()
-            .map(|&(_, plan)| plan.map(|p| p.predicted_ns))
+            .map(|n| n.plan.map(|p| p.predicted_ns * n.count as f64))
             .sum::<Option<f64>>()
+    }
+
+    /// The group's headline plan: the paper's bottleneck down-projection,
+    /// or the expert down-projection (the last expert node) on MoE layers.
+    pub fn headline(&self) -> Option<TunedPlan> {
+        self.get(GemmKind::Down).or_else(|| {
+            self.nodes
+                .iter()
+                .rev()
+                .find(|n| n.kind == GemmKind::MoeExpert)
+                .and_then(|n| n.plan)
+        })
     }
 }
 
@@ -110,23 +135,26 @@ impl<'rt> Router<'rt> {
         Ok(self.engines.get_mut(&batch).unwrap())
     }
 
-    /// Tuned plans for all four projection GEMMs of a batch size's decode
-    /// layer, from the persisted cache (`None` when the artifact has no
-    /// decode config or no cache file was found; per-node `None` on a
-    /// cache miss).  Memoized per batch size.
+    /// Plans for every GEMM node of a batch size's decode layer (dense
+    /// projections plus the MoE expert fan-out when the config routes
+    /// experts).  `None` only when the artifact has no decode config —
+    /// without a tune cache the nodes are still enumerated (so metrics
+    /// stay kind-accurate) but every per-node plan is `None` (untuned).
+    /// Memoized per batch size.
     pub fn layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
         if let Some(plan) = self.plans.get(&batch) {
-            return *plan;
+            return plan.clone();
         }
         let plan = self.resolve_layer_plan(batch);
-        self.plans.insert(batch, plan);
+        self.plans.insert(batch, plan.clone());
         plan
     }
 
     /// The tuned schedule for the batch's bottleneck GEMM — the FFN
-    /// down-projection the paper profiles (K = ffn >> N = hidden).
+    /// down-projection the paper profiles (K = ffn >> N = hidden), or
+    /// the expert down-projection on MoE models.
     pub fn tuned_plan(&mut self, batch: usize) -> Option<TunedPlan> {
-        self.layer_plan(batch).and_then(|plan| plan.get(GemmKind::Down))
+        self.layer_plan(batch).and_then(|plan| plan.headline())
     }
 
     fn resolve_layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
@@ -135,20 +163,24 @@ impl<'rt> Router<'rt> {
             .decode(&self.model, batch)
             .ok()
             .and_then(|e| e.config)?;
-        let tuner = self.tuner.as_mut()?;
         let layer = DecodeLayer::from_decode_config(&cfg, batch);
-        let mut nodes = [(GemmKind::Down, None); 4];
-        for (slot, (kind, p)) in nodes.iter_mut().zip(layer.problems()) {
-            // Cache-only: the serving hot path never pays a search.
-            let plan = if p.validate().is_ok() {
-                tuner
-                    .lookup(&p)
-                    .map(|e| TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns })
-            } else {
-                None
-            };
-            *slot = (kind, plan);
-        }
+        let mut tuner = self.tuner.as_mut();
+        let nodes = layer
+            .gemm_nodes()
+            .into_iter()
+            .map(|node| {
+                // Cache-only: the serving hot path never pays a search.
+                // With no cache file the node list still describes the
+                // layer; every plan is just untuned.
+                let plan = match tuner.as_deref_mut() {
+                    Some(t) if node.problem.validate().is_ok() => t
+                        .lookup(&node.problem)
+                        .map(|e| TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns }),
+                    _ => None,
+                };
+                PlanNode { kind: node.kind, count: node.count, plan }
+            })
+            .collect();
         Some(LayerPlan { nodes })
     }
 

@@ -62,17 +62,32 @@ impl<'rt> Server<'rt> {
         }
     }
 
-    /// Record which tuned schedule serves each of a routed group's four
-    /// projection GEMMs; the down-projection (the paper's bottleneck)
-    /// doubles as the group's headline schedule counter.
+    /// Record which tuned schedule serves each GEMM node of a routed
+    /// group — the dense projections or the MoE expert fan-out, with its
+    /// per-kind expert counts; the down-projection (the paper's
+    /// bottleneck; the expert down-projection on MoE models) doubles as
+    /// the group's headline schedule counter.
     pub fn record_group_schedules(metrics: &Metrics, plan: Option<&LayerPlan>) {
-        for kind in GemmKind::all() {
-            let node = plan.and_then(|p| p.get(kind));
-            let label = node.map(|p| p.strategy.name()).unwrap_or("untuned");
-            metrics.record_gemm_schedule(kind.name(), label, node.map(|p| p.predicted_ns));
+        match plan {
+            Some(p) => {
+                for node in &p.nodes {
+                    let label = node.plan.map(|t| t.strategy.name()).unwrap_or("untuned");
+                    metrics.record_gemm_schedule_n(
+                        node.kind.name(),
+                        label,
+                        node.plan.map(|t| t.predicted_ns * node.count as f64),
+                        node.count as u64,
+                    );
+                }
+            }
+            None => {
+                for kind in GemmKind::all() {
+                    metrics.record_gemm_schedule(kind.name(), "untuned", None);
+                }
+            }
         }
         let headline = plan
-            .and_then(|p| p.get(GemmKind::Down))
+            .and_then(|p| p.headline())
             .map(|p| p.strategy.name())
             .unwrap_or("untuned");
         metrics.record_schedule(headline);

@@ -71,13 +71,15 @@ pub(crate) fn dequant_phase(
 ///   partials have drained from the cube cores are reduced concurrently
 ///   with the tail MMAD waves ("reduce_stream", pipelined into the MMAD
 ///   group), and only the final wave — one tile per vector engine — waits
-///   behind the barrier ("reduce_tail").  The stream phase is emitted only
-///   when the output tiles divide evenly over the vector engines with at
-///   least two waves: there every engine runs `W - 1` streamed steps plus
-///   one tail step, the streamed steps add to each resource stream exactly
-///   what the barrier reduce would have charged after the barrier, and the
-///   group-max execution model makes the overlapped total provably never
-///   slower.  Uneven assignments degenerate to the barrier reduce exactly.
+///   behind the barrier ("reduce_tail").  The stream phase is emitted
+///   whenever every vector engine owns at least two tiles (`out_tiles >=
+///   2 * engines`): each engine streams all but its last tile and tails
+///   exactly one.  When the tiles divide evenly the overlapped total is
+///   provably never slower under the group-max model (DESIGN.md §10); on
+///   uneven assignments the ceil-wave engines stream one extra step — the
+///   floor-wave generalization of §11 — and [`ReduceMode::Auto`]'s
+///   simulate-both guarantee keeps the *served* schedule never slower.
+///   Tile counts below two waves degenerate to the barrier reduce exactly.
 /// * [`ReduceMode::Auto`] is resolved by the schedule entry points (both
 ///   variants are simulated and the faster kept), never passed here.
 pub(crate) fn reduce_phases(
@@ -94,8 +96,7 @@ pub(crate) fn reduce_phases(
         .write(BufferClass::Output, (elems * 2) as u64);
     let engines = machine.total_vector_cores();
     let assign = round_robin(out_tiles, engines);
-    let streamable =
-        mode == ReduceMode::Pipelined && out_tiles % engines == 0 && out_tiles >= 2 * engines;
+    let streamable = mode == ReduceMode::Pipelined && out_tiles >= 2 * engines;
     if !streamable {
         return vec![Phase {
             name: "reduce",
@@ -352,7 +353,7 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_reduce_degenerates_on_uneven_tile_counts() {
+    fn pipelined_reduce_degenerates_below_two_waves() {
         // 4 output tiles over 64 engines: no streaming, the pipelined trace
         // IS the barrier trace (Algorithm 1 preserved).
         let p = GemmProblem::new(16, 1024, 8192);
@@ -366,6 +367,44 @@ mod tests {
         let last = pip.phases.last().unwrap();
         assert_eq!(last.name, "reduce");
         assert!(!last.pipelined_with_prev);
+    }
+
+    #[test]
+    fn pipelined_reduce_streams_floor_wave_on_uneven_tiles() {
+        // 224 output tiles over 64 engines (3.5 waves): the ceil engines
+        // own 4 tiles and the floor engines 3; every engine streams all but
+        // its last tile and tails exactly one (DESIGN.md §11).
+        let p = GemmProblem::new(8, 7168, 2048);
+        let t = Tiling {
+            bm: 16,
+            bn: 32,
+            bk: 128,
+            splits: 4,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        let out_tiles = (p.m_padded(&m()) / t.bm) * (p.n / t.bn);
+        let engines = m().total_vector_cores();
+        assert_eq!(out_tiles, 224);
+        assert!(out_tiles % engines != 0, "shape chosen to be uneven");
+        let tr = schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();
+        let names: Vec<&str> = tr.phases.iter().map(|ph| ph.name).collect();
+        assert_eq!(names, vec!["dequant", "splitk_mmad", "reduce_stream", "reduce_tail"]);
+        let stream = &tr.phases[2];
+        let tail = &tr.phases[3];
+        assert_eq!(stream.total_steps(), out_tiles - engines);
+        assert_eq!(tail.total_steps(), engines);
+        let lens: Vec<usize> = stream.steps_per_engine.iter().map(|s| s.len()).collect();
+        assert_eq!(lens.iter().max(), Some(&3), "ceil engines stream W tiles");
+        assert_eq!(lens.iter().min(), Some(&2), "floor engines stream W-1 tiles");
+        // Every output tile still reduced exactly once across both phases.
+        let out: u64 = tr.phases[2..]
+            .iter()
+            .map(|ph| ph.write_bytes(BufferClass::Output))
+            .sum();
+        assert_eq!(out, (p.m_padded(&m()) * p.n * 2) as u64);
     }
 
     #[test]

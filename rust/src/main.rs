@@ -4,8 +4,9 @@
 //! * `machine`    — print the simulated Ascend 910 description.
 //! * `simulate`   — simulate one GEMM (`--n --k --batch --strategy`,
 //!   including `--strategy auto` through the tune cache).
-//! * `layer`      — simulate one decode layer's four projection GEMMs
-//!   (the DESIGN.md §10 graph), each resolved through the tune cache.
+//! * `layer`      — simulate one full decode step (attention, glue, the
+//!   projection GEMMs or MoE expert fan-out, cross-node overlap — the
+//!   DESIGN.md §10–§11 graph), GEMMs resolved through the tune cache.
 //! * `tune`       — autotune the paper sweep + the decode-layer graphs,
 //!   persist the winners.
 //! * `fig2`       — regenerate the paper's Figure 2 (Split-K vs DP sweep).
@@ -18,7 +19,7 @@ use ascend_w4a16::analysis::{layer, report, roofline, sensitivity, timeline, tra
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
-use ascend_w4a16::model::llm::{self, LayerGeometry};
+use ascend_w4a16::model::llm::{self, LayerGeometry, MoeGeometry};
 use ascend_w4a16::quant;
 use ascend_w4a16::runtime::client::literal_to_host;
 use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
@@ -27,7 +28,7 @@ use ascend_w4a16::tune::{self, Tuner};
 use ascend_w4a16::util::cli::Args;
 use ascend_w4a16::util::prng::Rng;
 use ascend_w4a16::util::stats;
-use ascend_w4a16::workload::{self, DecodeLayer, RequestGenerator};
+use ascend_w4a16::workload::{self, DecodeLayer, DecodeStep, RequestGenerator};
 
 fn main() {
     let args = Args::from_env();
@@ -73,12 +74,18 @@ USAGE: repro <subcommand> [options]
   machine                          print the simulated Ascend 910 description
   simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused|chunked|auto]
            [--tune-cache PATH]     ('auto' resolves through the tune cache)
-  layer [--model llama32|glm45|deepseek|openpangu | --hidden H --ffn F [--kv W] [--group G]]
-        [--batch M] [--layers L] [--strategy auto|...] [--tune-cache PATH]
-        [--json PATH]              simulate one decode layer's four projection
-                                   GEMMs (qkv, attn_out, up_gate, down), each
+  layer [--model llama32|glm45|deepseek|openpangu|deepseek-moe
+         | --hidden H --ffn F [--kv W] [--group G]]
+        [--batch M] [--layers L] [--kv-len T] [--heads H]
+        [--moe-experts E] [--moe-topk K] [--overlap sequential|overlapped|auto]
+        [--strategy auto|...] [--tune-cache PATH] [--json PATH]
+                                   simulate one FULL decode step: attention
+                                   score/softmax/AV + RMSNorm/residual/glue on
+                                   the vector cores, the projection GEMMs (or
+                                   the routed MoE expert fan-out), each GEMM
                                    resolved through the tune cache with 'auto',
-                                   with the pipelined-vs-barrier reduce ledger
+                                   and the cross-node reduce/dequant overlap
+                                   ledger ('auto' never slower than sequential)
   tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]]
                                    autotune strategies x tilings (the paper
                                    sweep, plus DIR's decode-model shapes)
@@ -184,41 +191,61 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 8)?;
     let layers = args.get_usize("layers", 32)?;
     let strategy = Strategy::from_name(args.get_or("strategy", "auto"))?;
-    let geometry = match args.get("model") {
-        Some(name) => llm::layer_geometry(name)?,
+    let overlap = layer::OverlapMode::from_name(args.get_or("overlap", "auto"))?;
+    let (geometry, preset_moe) = match args.get("model") {
+        Some(name) => (llm::layer_geometry(name)?, llm::moe_geometry(name)),
         None => {
             let hidden = args.get_usize("hidden", 5120)?;
-            LayerGeometry {
+            let geometry = LayerGeometry {
                 hidden,
                 ffn: args.get_usize("ffn", 12288)?,
                 kv: args.get_usize("kv", hidden)?,
                 group: args.get_usize("group", 128)?,
-            }
+            };
+            (geometry, None)
         }
     };
-    let decode_layer = DecodeLayer::new(geometry, batch);
+    // --moe-experts/--moe-topk enable (or override a preset's) routed
+    // expert fan-out; the expert inner width defaults to the FFN width.
+    let experts = args.get_usize("moe-experts", preset_moe.map_or(0, |mo| mo.experts))?;
+    let moe = if experts > 0 {
+        Some(MoeGeometry {
+            experts,
+            topk: args.get_usize("moe-topk", preset_moe.map_or(2, |mo| mo.topk))?,
+            expert_ffn: preset_moe.map_or(geometry.ffn, |mo| mo.expert_ffn),
+        })
+    } else {
+        None
+    };
+    let mut decode_layer = DecodeLayer::new(geometry, batch);
+    if let Some(moe) = moe {
+        decode_layer = decode_layer.with_moe(moe);
+    }
     decode_layer.validate()?;
+    let kv_len = args.get_usize("kv-len", 2048)?;
+    let heads = args.get_usize("heads", DecodeStep::default_heads(&geometry))?;
+    let step = DecodeStep::new(decode_layer, kv_len, heads);
 
     let rep = if strategy == Strategy::Auto {
         let path = args.get_or("tune-cache", tune::DEFAULT_CACHE_FILE);
         let mut tuner = Tuner::load(m.clone(), path)?;
-        let rep = layer::simulate_layer_tuned(&m, &decode_layer, &mut tuner)?;
+        let rep = layer::simulate_step_tuned(&m, &step, overlap, &mut tuner)?;
         if tuner.searches > 0 {
             tuner.save()?;
             println!("auto: searched {} shapes (cache warmed at {path})\n", tuner.searches);
         } else {
-            println!("auto: all four GEMMs served from the tune cache at {path}\n");
+            println!("auto: every GEMM node served from the tune cache at {path}\n");
         }
         rep
     } else {
-        layer::simulate_layer(&m, &decode_layer, |p| {
+        layer::simulate_step(&m, &step, overlap, |p| {
             Ok((strategy, kernels::select_tiling(&m, p, strategy)?, layer::Resolution::Heuristic))
         })?
     };
 
-    print!("{}", layer::render_layer(&rep, layers));
+    print!("{}", layer::render_step(&rep, layers));
     if let Some(path) = args.get("json") {
-        std::fs::write(path, layer::layer_json(&rep).to_string())?;
+        std::fs::write(path, layer::step_json(&rep).to_string())?;
         println!("wrote {path}");
     }
     Ok(())
@@ -250,8 +277,17 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             // --strategy auto` is a pure cache hit afterwards.
             for (_, geom) in llm::paper_layer_geometries() {
                 for &batch in &llm::PAPER_BATCH_SIZES {
-                    for (_, p) in DecodeLayer::new(geom, batch).problems() {
-                        problems.push(p);
+                    for node in DecodeLayer::new(geom, batch).gemm_nodes() {
+                        problems.push(node.problem);
+                    }
+                }
+            }
+            // MoE decoding: seed the routed expert GEMM pair of every MoE
+            // model too, so expert nodes also resolve cache-only.
+            for (_, geom, moe) in llm::paper_moe_geometries() {
+                for &batch in &llm::PAPER_BATCH_SIZES {
+                    for node in DecodeLayer::new(geom, batch).with_moe(moe).gemm_nodes() {
+                        problems.push(node.problem);
                     }
                 }
             }
@@ -261,9 +297,9 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
                     let (Some(cfg), Some(batch)) = (entry.config, entry.batch) else {
                         continue;
                     };
-                    for (_, p) in DecodeLayer::from_decode_config(&cfg, batch).problems() {
-                        if p.validate().is_ok() {
-                            problems.push(p);
+                    for node in DecodeLayer::from_decode_config(&cfg, batch).gemm_nodes() {
+                        if node.problem.validate().is_ok() {
+                            problems.push(node.problem);
                         }
                     }
                 }

@@ -72,6 +72,55 @@ impl LayerGeometry {
     }
 }
 
+/// Routed mixture-of-experts geometry of one decoder layer: the FFN block
+/// is replaced by `experts` routed experts of inner width `expert_ffn`,
+/// `topk` of which fire per token.  At decode batch M the M·topk routed
+/// (token, expert) pairs group into batched small-N / large-K expert GEMMs
+/// (see [`crate::workload::decode_layer::DecodeLayer::gemm_nodes`]) — the
+/// regime LiquidGEMM's serving-level evaluation argues matters most, and a
+/// natural fit for the chunked schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeGeometry {
+    /// Routed expert count E.
+    pub experts: usize,
+    /// Experts activated per token (top-k routing).
+    pub topk: usize,
+    /// Expert FFN inner width (the K of the expert down-projection).
+    pub expert_ffn: usize,
+}
+
+impl MoeGeometry {
+    /// Routed (token, expert) pairs at decode batch `batch`.
+    pub fn routed_pairs(&self, batch: usize) -> usize {
+        batch * self.topk
+    }
+
+    /// Experts with at least one routed token, under the balanced-routing
+    /// assumption the simulator prices (load balancing is the router's
+    /// job; imbalance only shifts work between identical GEMMs).
+    pub fn active_experts(&self, batch: usize) -> usize {
+        self.routed_pairs(batch).min(self.experts).max(1)
+    }
+
+    /// Tokens each active expert batches into its GEMMs (balanced routing,
+    /// rounded up — stragglers pad to the cube tile anyway).
+    pub fn tokens_per_expert(&self, batch: usize) -> usize {
+        self.routed_pairs(batch).div_ceil(self.active_experts(batch))
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.experts >= 1, "MoE needs at least one expert");
+        anyhow::ensure!(
+            self.topk >= 1 && self.topk <= self.experts,
+            "topk={} must be in 1..=experts={}",
+            self.topk,
+            self.experts
+        );
+        anyhow::ensure!(self.expert_ffn >= 1, "expert_ffn must be positive");
+        Ok(())
+    }
+}
+
 /// Decoder-layer geometry per evaluated model, consistent with the
 /// [`paper_shapes`] table (the up/down projections of each model appear
 /// there as (N, K) rows; the kv widths come from the low-rank rows).
@@ -86,15 +135,42 @@ pub fn paper_layer_geometries() -> Vec<(&'static str, LayerGeometry)> {
     ]
 }
 
-/// Look up a paper model's decoder-layer geometry by name.
+/// MoE decoding scenarios: the evaluated models whose FFN block routes
+/// over experts.  DeepSeek-R1's 256 routed experts (top-8, inner 2048)
+/// batch-multiply many small down-projections per decode step.
+pub fn paper_moe_geometries() -> Vec<(&'static str, LayerGeometry, MoeGeometry)> {
+    vec![(
+        "deepseek-moe",
+        LayerGeometry { hidden: 7168, ffn: 2048, kv: 1536, group: 128 },
+        MoeGeometry { experts: 256, topk: 8, expert_ffn: 2048 },
+    )]
+}
+
+/// Look up a paper model's decoder-layer geometry by name (MoE model
+/// names resolve to their dense trunk geometry; pair with
+/// [`moe_geometry`] for the expert fan-out).
 pub fn layer_geometry(model: &str) -> anyhow::Result<LayerGeometry> {
+    if let Some((_, g, _)) = paper_moe_geometries().into_iter().find(|(name, _, _)| *name == model)
+    {
+        return Ok(g);
+    }
     paper_layer_geometries()
         .into_iter()
         .find(|(name, _)| *name == model)
         .map(|(_, g)| g)
         .ok_or_else(|| {
-            anyhow::anyhow!("unknown model '{model}' (try llama32, glm45, deepseek, openpangu)")
+            anyhow::anyhow!(
+                "unknown model '{model}' (try llama32, glm45, deepseek, openpangu, deepseek-moe)"
+            )
         })
+}
+
+/// The expert fan-out of a named MoE model (`None` for dense models).
+pub fn moe_geometry(model: &str) -> Option<MoeGeometry> {
+    paper_moe_geometries()
+        .into_iter()
+        .find(|(name, _, _)| *name == model)
+        .map(|(_, _, m)| m)
 }
 
 #[cfg(test)]
@@ -135,5 +211,31 @@ mod tests {
         }
         assert_eq!(layer_geometry("glm45").unwrap(), LayerGeometry::mha(5120, 12288));
         assert!(layer_geometry("nope").is_err());
+    }
+
+    #[test]
+    fn moe_models_resolve_and_balance_routing() {
+        let (name, geom, moe) = paper_moe_geometries().remove(0);
+        assert_eq!(layer_geometry(name).unwrap(), geom);
+        assert_eq!(moe_geometry(name), Some(moe));
+        assert_eq!(moe_geometry("glm45"), None);
+        moe.validate().unwrap();
+        // b=8, top-8 over 256 experts: 64 routed pairs, 64 active experts,
+        // one token each.
+        assert_eq!(moe.routed_pairs(8), 64);
+        assert_eq!(moe.active_experts(8), 64);
+        assert_eq!(moe.tokens_per_expert(8), 1);
+        // b=64: 512 pairs saturate all 256 experts with two tokens each.
+        assert_eq!(moe.active_experts(64), 256);
+        assert_eq!(moe.tokens_per_expert(64), 2);
+        // Routed work is never lost: pairs <= active * tokens_per_expert.
+        for batch in [1usize, 3, 8, 17, 64] {
+            assert!(
+                moe.active_experts(batch) * moe.tokens_per_expert(batch)
+                    >= moe.routed_pairs(batch)
+            );
+        }
+        let bad = MoeGeometry { experts: 4, topk: 8, expert_ffn: 2048 };
+        assert!(bad.validate().is_err());
     }
 }

@@ -111,11 +111,17 @@ pub struct DecodeConfig {
     pub max_seq: usize,
     pub group: usize,
     pub params: usize,
+    /// Routed expert count (0 = dense FFN; optional in the manifest).
+    pub moe_experts: usize,
+    /// Experts activated per token (meaningful when `moe_experts > 0`).
+    pub moe_topk: usize,
 }
 
 impl DecodeConfig {
     fn from_json(j: &Json) -> anyhow::Result<DecodeConfig> {
         Ok(DecodeConfig {
+            moe_experts: j.get("moe_experts").and_then(|v| v.as_usize()).unwrap_or(0),
+            moe_topk: j.get("moe_topk").and_then(|v| v.as_usize()).unwrap_or(0),
             vocab: j.req_usize("vocab")?,
             hidden: j.req_usize("hidden")?,
             layers: j.req_usize("layers")?,

@@ -1,18 +1,23 @@
-//! Decode-layer GEMM graph: the four projection GEMMs one transformer
-//! decoder layer issues per decode step (DESIGN.md §10).
+//! Decode-layer graph: the GEMM nodes one transformer decoder layer
+//! issues per decode step, plus the full decode-step graph with the
+//! non-GEMM work around them (DESIGN.md §10–§11).
 //!
 //! The paper profiles a single decode GEMM (the K >> N FFN
-//! down-projection), but a real decode step runs four per layer — QKV,
-//! attention-out, up/gate, and down — and the shapes straddle the paper's
-//! K >> N boundary, so per-node strategy selection through the tune cache
-//! is exactly where the autotuner pays off.  `DecodeLayer` enumerates the
-//! nodes for a model geometry and batch; the graph simulator
-//! ([`crate::analysis::layer`]) composes their traces into per-layer and
-//! per-step latency, and the coordinator router resolves every node
-//! through the tune cache on the serving path.
+//! down-projection), but a real decode step runs four dense projections
+//! per layer — QKV, attention-out, up/gate, and down — and the shapes
+//! straddle the paper's K >> N boundary, so per-node strategy selection
+//! through the tune cache is exactly where the autotuner pays off.
+//! MoE layers replace the dense FFN pair with a routed expert fan-out
+//! ([`GemmKind::MoeExpert`]): the M·topk routed (token, expert) pairs
+//! group into batched small-N / large-K expert GEMMs.  [`DecodeStep`]
+//! adds the non-GEMM nodes (attention score/softmax/AV, RMSNorm,
+//! residuals, activation glue, MoE routing) priced by the
+//! [`crate::ascend::vecpass`] bandwidth model, so the graph simulator
+//! ([`crate::analysis::layer`]) predicts *full* decode-step latency, not
+//! just GEMM headroom.
 
 use crate::kernels::GemmProblem;
-use crate::model::llm::LayerGeometry;
+use crate::model::llm::{LayerGeometry, MoeGeometry};
 use crate::runtime::artifacts::DecodeConfig;
 
 /// Which projection GEMM a graph node is.
@@ -26,10 +31,15 @@ pub enum GemmKind {
     UpGate,
     /// FFN down-projection (the paper's bottleneck): `N = hidden`, `K = ffn`.
     Down,
+    /// One routed expert's batched GEMM (MoE layers): the up/gate and
+    /// down projections of an expert, issued once per active expert.
+    MoeExpert,
 }
 
 impl GemmKind {
-    /// All four nodes in issue order.
+    /// The four dense projection nodes in issue order (MoE layers swap
+    /// the FFN pair for [`GemmKind::MoeExpert`] fan-outs — see
+    /// [`DecodeLayer::gemm_nodes`]).
     pub fn all() -> [GemmKind; 4] {
         [GemmKind::Qkv, GemmKind::AttnOut, GemmKind::UpGate, GemmKind::Down]
     }
@@ -40,6 +50,7 @@ impl GemmKind {
             GemmKind::AttnOut => "attn_out",
             GemmKind::UpGate => "up_gate",
             GemmKind::Down => "down",
+            GemmKind::MoeExpert => "moe_expert",
         }
     }
 
@@ -49,34 +60,69 @@ impl GemmKind {
             "attn_out" | "attnout" | "o" => GemmKind::AttnOut,
             "up_gate" | "upgate" | "up" => GemmKind::UpGate,
             "down" => GemmKind::Down,
+            "moe_expert" | "moe" | "expert" => GemmKind::MoeExpert,
             other => anyhow::bail!("unknown GEMM kind '{other}'"),
         })
     }
+}
+
+/// One GEMM node of the layer graph: `count` identical GEMMs issued back
+/// to back (1 for the dense projections; the active-expert count for the
+/// MoE fan-out — the expert batch the chunked schedule pipelines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmNode {
+    pub kind: GemmKind,
+    pub problem: GemmProblem,
+    pub count: usize,
 }
 
 /// One decoder layer's GEMM graph for a given decode batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DecodeLayer {
     pub geometry: LayerGeometry,
-    /// Decode batch size (the M of every node).
+    /// Decode batch size (the M of every dense node).
     pub batch: usize,
+    /// Routed expert fan-out replacing the dense FFN pair (`None` = dense).
+    pub moe: Option<MoeGeometry>,
 }
 
 impl DecodeLayer {
     pub fn new(geometry: LayerGeometry, batch: usize) -> DecodeLayer {
-        DecodeLayer { geometry, batch }
+        DecodeLayer { geometry, batch, moe: None }
+    }
+
+    /// Attach a routed expert fan-out (the MoE decoding scenario).
+    pub fn with_moe(mut self, moe: MoeGeometry) -> DecodeLayer {
+        self.moe = Some(moe);
+        self
     }
 
     /// Layer graph of an AOT decode artifact's model config (the serving
-    /// path; those models use vanilla MHA, so `kv = hidden`).
+    /// path; those models use vanilla MHA, so `kv = hidden`).  Configs
+    /// with `moe_experts > 0` route their FFN over experts of inner
+    /// width `ffn`.
     pub fn from_decode_config(cfg: &DecodeConfig, batch: usize) -> DecodeLayer {
-        DecodeLayer::new(
+        let layer = DecodeLayer::new(
             LayerGeometry { hidden: cfg.hidden, ffn: cfg.ffn, kv: cfg.hidden, group: cfg.group },
             batch,
-        )
+        );
+        if cfg.moe_experts > 0 {
+            layer.with_moe(MoeGeometry {
+                experts: cfg.moe_experts,
+                topk: cfg.moe_topk.max(1),
+                expert_ffn: cfg.ffn,
+            })
+        } else {
+            layer
+        }
     }
 
-    /// The GEMM problem of one node.
+    /// The GEMM problem of one dense node.  Expert shapes depend on the
+    /// routed batch, so they live in [`DecodeLayer::moe_nodes`] only.
+    ///
+    /// # Panics
+    /// On [`GemmKind::MoeExpert`] — there is no single expert problem
+    /// (the fan-out carries an up/gate and a down shape per expert).
     pub fn problem(&self, kind: GemmKind) -> GemmProblem {
         let g = self.geometry;
         let (n, k) = match kind {
@@ -84,35 +130,288 @@ impl DecodeLayer {
             GemmKind::AttnOut => (g.hidden, g.hidden),
             GemmKind::UpGate => (2 * g.ffn, g.hidden),
             GemmKind::Down => (g.hidden, g.ffn),
+            GemmKind::MoeExpert => {
+                panic!("MoeExpert has no single dense problem; use DecodeLayer::moe_nodes()")
+            }
         };
         GemmProblem { m: self.batch, n, k, group: g.group }
     }
 
-    /// All four nodes in issue order.
+    /// The four dense projection problems in issue order (the serving
+    /// shape of non-MoE layers; see [`DecodeLayer::gemm_nodes`] for the
+    /// actual graph including the expert fan-out).
     pub fn problems(&self) -> [(GemmKind, GemmProblem); 4] {
         GemmKind::all().map(|kind| (kind, self.problem(kind)))
     }
 
+    /// The expert-batch GEMM pair of a MoE layer: the up/gate and down
+    /// projections one active expert runs over its routed tokens, plus
+    /// how many such experts fire (`count`).
+    pub fn moe_nodes(&self) -> Option<[GemmNode; 2]> {
+        let moe = self.moe?;
+        let g = self.geometry;
+        let m = moe.tokens_per_expert(self.batch);
+        let count = moe.active_experts(self.batch);
+        Some([
+            GemmNode {
+                kind: GemmKind::MoeExpert,
+                problem: GemmProblem { m, n: 2 * moe.expert_ffn, k: g.hidden, group: g.group },
+                count,
+            },
+            GemmNode {
+                kind: GemmKind::MoeExpert,
+                problem: GemmProblem { m, n: g.hidden, k: moe.expert_ffn, group: g.group },
+                count,
+            },
+        ])
+    }
+
+    /// The layer's GEMM graph in issue order: the dense projections, with
+    /// the FFN pair replaced by the routed expert fan-out on MoE layers.
+    pub fn gemm_nodes(&self) -> Vec<GemmNode> {
+        let dense = |kind| GemmNode { kind, problem: self.problem(kind), count: 1 };
+        match self.moe_nodes() {
+            None => GemmKind::all().map(dense).to_vec(),
+            Some([up, down]) => {
+                vec![dense(GemmKind::Qkv), dense(GemmKind::AttnOut), up, down]
+            }
+        }
+    }
+
     /// Every node must be a legal GEMM (group-aligned K, tile-aligned N).
     pub fn validate(&self) -> anyhow::Result<()> {
-        for (kind, p) in self.problems() {
-            p.validate().map_err(|e| {
-                anyhow::anyhow!("{} node (M={} N={} K={}): {e}", kind.name(), p.m, p.n, p.k)
+        if let Some(moe) = self.moe {
+            moe.validate()?;
+        }
+        for node in self.gemm_nodes() {
+            node.problem.validate().map_err(|e| {
+                anyhow::anyhow!(
+                    "{} node (M={} N={} K={} x{}): {e}",
+                    node.kind.name(),
+                    node.problem.m,
+                    node.problem.n,
+                    node.problem.k,
+                    node.count
+                )
             })?;
         }
         Ok(())
     }
 
     /// Packed INT4 weight bytes of the whole layer (capacity planning).
+    /// MoE layers hold *every* expert resident, not just the active ones.
     pub fn packed_weight_bytes(&self) -> u64 {
-        self.problems().iter().map(|(_, p)| p.packed_weight_bytes()).sum()
+        let dense = |kind| self.problem(kind).packed_weight_bytes();
+        match self.moe {
+            None => GemmKind::all().iter().map(|&k| dense(k)).sum(),
+            Some(moe) => {
+                let g = self.geometry;
+                let per_expert =
+                    (2 * moe.expert_ffn * g.hidden + g.hidden * moe.expert_ffn) as u64 / 2;
+                dense(GemmKind::Qkv)
+                    + dense(GemmKind::AttnOut)
+                    + moe.experts as u64 * per_expert
+            }
+        }
+    }
+}
+
+/// Which non-GEMM vector pass a step node is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VectorOpKind {
+    /// RMSNorm over the batch activations (pre-attention and pre-FFN).
+    RmsNorm,
+    /// Attention scores: per-head Q · Kᵀ over the KV-cache length.
+    AttnScore,
+    /// Row softmax over the score matrix.
+    AttnSoftmax,
+    /// Attention-weighted value gather: scores · V.
+    AttnAv,
+    /// Residual add back into the hidden stream.
+    Residual,
+    /// Gated activation (SwiGLU) between up/gate and down.
+    Activation,
+    /// MoE router: gate logits + top-k expert selection.
+    MoeRoute,
+}
+
+impl VectorOpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VectorOpKind::RmsNorm => "rmsnorm",
+            VectorOpKind::AttnScore => "attn_score",
+            VectorOpKind::AttnSoftmax => "attn_softmax",
+            VectorOpKind::AttnAv => "attn_av",
+            VectorOpKind::Residual => "residual",
+            VectorOpKind::Activation => "activation",
+            VectorOpKind::MoeRoute => "moe_route",
+        }
+    }
+}
+
+/// One non-GEMM node: a whole-chip vector pass sized for the
+/// [`crate::ascend::vecpass`] bandwidth model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VectorOp {
+    pub kind: VectorOpKind,
+    /// Output elements the pass produces.
+    pub elems: u64,
+    /// SIMD operations per output element.
+    pub ops_per_elem: f64,
+    /// Cold HBM bytes (KV cache, router weights).
+    pub hbm_bytes: u64,
+    /// Activation-sized L2 traffic (reads + writes).
+    pub l2_bytes: u64,
+}
+
+/// One node of the full decode-step graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepNode {
+    Gemm(GemmNode),
+    Vector(VectorOp),
+}
+
+/// The full decode-step graph of one decoder layer: the GEMM chain plus
+/// attention, normalization and elementwise glue, in issue order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeStep {
+    pub layer: DecodeLayer,
+    /// KV-cache length the attention nodes read (the decode position).
+    pub kv_len: usize,
+    /// Attention head count (scores are priced per head).
+    pub heads: usize,
+}
+
+impl DecodeStep {
+    pub fn new(layer: DecodeLayer, kv_len: usize, heads: usize) -> DecodeStep {
+        DecodeStep { layer, kv_len: kv_len.max(1), heads: heads.max(1) }
+    }
+
+    /// Default head count for a geometry (128-wide heads, at least one).
+    pub fn default_heads(geometry: &LayerGeometry) -> usize {
+        (geometry.hidden / 128).max(1)
+    }
+
+    /// All step nodes in issue order: norm → QKV → attention (score /
+    /// softmax / AV) → attn-out → residual → norm → FFN or MoE fan-out →
+    /// residual.  Byte/op sizes follow the f16 activation layout; KV
+    /// cache reads are the cold HBM traffic of the step.
+    pub fn nodes(&self) -> Vec<StepNode> {
+        let g = self.layer.geometry;
+        let m = self.layer.batch as u64;
+        let h = g.hidden as u64;
+        let kvw = g.kv as u64;
+        let heads = self.heads as u64;
+        let kv_len = self.kv_len as u64;
+        let head_dim = g.hidden as f64 / self.heads as f64;
+        let scores = m * heads * kv_len;
+
+        let norm = StepNode::Vector(VectorOp {
+            kind: VectorOpKind::RmsNorm,
+            elems: m * h,
+            ops_per_elem: 6.0,
+            hbm_bytes: 0,
+            l2_bytes: 2 * m * h * 2,
+        });
+        let residual = StepNode::Vector(VectorOp {
+            kind: VectorOpKind::Residual,
+            elems: m * h,
+            ops_per_elem: 1.0,
+            hbm_bytes: 0,
+            l2_bytes: 3 * m * h * 2,
+        });
+        let gemm = |node: GemmNode| StepNode::Gemm(node);
+        let dense = |kind| GemmNode { kind, problem: self.layer.problem(kind), count: 1 };
+
+        let mut nodes = vec![
+            norm,
+            gemm(dense(GemmKind::Qkv)),
+            // Q · Kᵀ: one `head_dim`-deep dot (2 ops each) per score; the
+            // K cache is the cold read, Q and the scores stay on-chip.
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnScore,
+                elems: scores,
+                ops_per_elem: 2.0 * head_dim,
+                hbm_bytes: m * kv_len * kvw * 2,
+                l2_bytes: m * h * 2 + scores * 2,
+            }),
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnSoftmax,
+                elems: scores,
+                ops_per_elem: 8.0,
+                hbm_bytes: 0,
+                l2_bytes: 2 * scores * 2,
+            }),
+            // scores · V: same dot depth, the V cache is the cold read.
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnAv,
+                elems: scores,
+                ops_per_elem: 2.0 * head_dim,
+                hbm_bytes: m * kv_len * kvw * 2,
+                l2_bytes: scores * 2 + m * h * 2,
+            }),
+            gemm(dense(GemmKind::AttnOut)),
+            residual,
+            norm,
+        ];
+
+        match self.layer.moe_nodes() {
+            None => {
+                let ffn = g.ffn as u64;
+                nodes.push(gemm(dense(GemmKind::UpGate)));
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::Activation,
+                    elems: m * ffn,
+                    ops_per_elem: 4.0,
+                    hbm_bytes: 0,
+                    l2_bytes: 3 * m * ffn * 2,
+                }));
+                nodes.push(gemm(dense(GemmKind::Down)));
+            }
+            Some([up, down]) => {
+                let moe = self.layer.moe.unwrap();
+                let experts = moe.experts as u64;
+                // Router: gate logits (one hidden-deep dot per expert per
+                // token) + softmax/top-k; the gate weight is the cold read.
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::MoeRoute,
+                    elems: m * experts,
+                    ops_per_elem: 2.0 * g.hidden as f64 + 8.0,
+                    hbm_bytes: h * experts * 2,
+                    l2_bytes: m * h * 2 + m * experts * 2,
+                }));
+                nodes.push(gemm(up));
+                // Gated activation over every routed token's expert slice
+                // (the batched m may pad beyond the routed pairs).
+                let routed = (up.count * up.problem.m) as u64;
+                let ef = moe.expert_ffn as u64;
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::Activation,
+                    elems: routed * ef,
+                    ops_per_elem: 4.0,
+                    hbm_bytes: 0,
+                    l2_bytes: 3 * routed * ef * 2,
+                }));
+                nodes.push(gemm(down));
+            }
+        }
+        nodes.push(residual);
+        nodes
+    }
+
+    /// The GEMM sub-chain of the step, in issue order.
+    pub fn gemm_nodes(&self) -> Vec<GemmNode> {
+        self.layer.gemm_nodes()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::llm::{layer_geometry, paper_layer_geometries, PAPER_BATCH_SIZES};
+    use crate::model::llm::{
+        layer_geometry, moe_geometry, paper_layer_geometries, paper_moe_geometries,
+        PAPER_BATCH_SIZES,
+    };
 
     #[test]
     fn glm45_nodes_have_expected_shapes() {
@@ -140,11 +439,19 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{model} b={batch}: {e}"));
             }
         }
+        for (model, geom, moe) in paper_moe_geometries() {
+            for &batch in &PAPER_BATCH_SIZES {
+                DecodeLayer::new(geom, batch)
+                    .with_moe(moe)
+                    .validate()
+                    .unwrap_or_else(|e| panic!("{model} b={batch}: {e}"));
+            }
+        }
     }
 
     #[test]
     fn kind_names_round_trip() {
-        for kind in GemmKind::all() {
+        for kind in GemmKind::all().into_iter().chain([GemmKind::MoeExpert]) {
             assert_eq!(GemmKind::from_name(kind.name()).unwrap(), kind);
         }
         assert!(GemmKind::from_name("bogus").is_err());
@@ -156,5 +463,114 @@ mod tests {
         // qkv 2048x6144 + attn_out 2048x2048 + up_gate 2048x16384 + down 8192x2048
         let elems: u64 = (2048 * 6144) + (2048 * 2048) + (2048 * 16384) + (8192 * 2048);
         assert_eq!(layer.packed_weight_bytes(), elems / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "MoeExpert has no single dense problem")]
+    fn moe_expert_has_no_dense_problem() {
+        let _ = DecodeLayer::new(LayerGeometry::mha(2048, 8192), 4).problem(GemmKind::MoeExpert);
+    }
+
+    #[test]
+    fn moe_layer_swaps_ffn_pair_for_expert_fanout() {
+        let geom = layer_geometry("deepseek-moe").unwrap();
+        let moe = moe_geometry("deepseek-moe").unwrap();
+        let layer = DecodeLayer::new(geom, 8).with_moe(moe);
+        let nodes = layer.gemm_nodes();
+        assert_eq!(nodes.len(), 4);
+        assert_eq!(nodes[0].kind, GemmKind::Qkv);
+        assert_eq!(nodes[1].kind, GemmKind::AttnOut);
+        let (up, down) = (&nodes[2], &nodes[3]);
+        assert_eq!((up.kind, down.kind), (GemmKind::MoeExpert, GemmKind::MoeExpert));
+        // b=8 top-8: 64 active experts of one token each.
+        assert_eq!((up.count, down.count), (64, 64));
+        assert_eq!((up.problem.m, up.problem.n, up.problem.k), (1, 2 * 2048, 7168));
+        assert_eq!((down.problem.m, down.problem.n, down.problem.k), (1, 7168, 2048));
+        assert!(up.problem.k > up.problem.n, "expert GEMMs are small-N / large-K");
+        layer.validate().unwrap();
+        // All 256 experts stay weight-resident, not just the 64 active.
+        let per_expert = (2 * 2048 * 7168 + 7168 * 2048) as u64 / 2;
+        let dense = DecodeLayer::new(geom, 8);
+        let attn_bytes = dense.problem(GemmKind::Qkv).packed_weight_bytes()
+            + dense.problem(GemmKind::AttnOut).packed_weight_bytes();
+        assert_eq!(layer.packed_weight_bytes(), attn_bytes + 256 * per_expert);
+    }
+
+    #[test]
+    fn dense_gemm_nodes_match_problems() {
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let nodes = layer.gemm_nodes();
+        assert_eq!(nodes.len(), 4);
+        for (node, (kind, p)) in nodes.iter().zip(layer.problems()) {
+            assert_eq!((node.kind, node.problem, node.count), (kind, p, 1));
+        }
+    }
+
+    #[test]
+    fn step_graph_orders_attention_between_qkv_and_attn_out() {
+        let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let names: Vec<&str> = step
+            .nodes()
+            .iter()
+            .map(|n| match n {
+                StepNode::Gemm(g) => g.kind.name(),
+                StepNode::Vector(v) => v.kind.name(),
+            })
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "rmsnorm", "qkv", "attn_score", "attn_softmax", "attn_av", "attn_out",
+                "residual", "rmsnorm", "up_gate", "activation", "down", "residual",
+            ]
+        );
+    }
+
+    #[test]
+    fn moe_step_graph_routes_before_the_expert_fanout() {
+        let geom = layer_geometry("deepseek-moe").unwrap();
+        let moe = moe_geometry("deepseek-moe").unwrap();
+        let layer = DecodeLayer::new(geom, 8).with_moe(moe);
+        let step = DecodeStep::new(layer, 2048, 56);
+        let names: Vec<&str> = step
+            .nodes()
+            .iter()
+            .map(|n| match n {
+                StepNode::Gemm(g) => g.kind.name(),
+                StepNode::Vector(v) => v.kind.name(),
+            })
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "rmsnorm", "qkv", "attn_score", "attn_softmax", "attn_av", "attn_out",
+                "residual", "rmsnorm", "moe_route", "moe_expert", "activation",
+                "moe_expert", "residual",
+            ]
+        );
+    }
+
+    #[test]
+    fn attention_traffic_scales_with_kv_len_and_batch() {
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let heads = DecodeStep::default_heads(&layer.geometry);
+        let score_hbm = |kv_len: usize, batch: usize| {
+            let step =
+                DecodeStep::new(DecodeLayer::new(layer.geometry, batch), kv_len, heads);
+            step.nodes()
+                .iter()
+                .find_map(|n| match n {
+                    StepNode::Vector(v) if v.kind == VectorOpKind::AttnScore => {
+                        Some(v.hbm_bytes)
+                    }
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(score_hbm(4096, 8), 2 * score_hbm(2048, 8));
+        assert_eq!(score_hbm(2048, 16), 2 * score_hbm(2048, 8));
+        // The K cache read is batch * kv_len * kv_width * 2 bytes exactly.
+        assert_eq!(score_hbm(2048, 8), (8 * 2048 * 2048 * 2) as u64);
     }
 }

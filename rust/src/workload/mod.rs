@@ -1,9 +1,11 @@
 //! Workload generators for benches, examples and tests, plus the
-//! decode-layer GEMM graph ([`decode_layer`]).
+//! decode-layer GEMM graph and full decode-step graph ([`decode_layer`]).
 
 pub mod decode_layer;
 
-pub use decode_layer::{DecodeLayer, GemmKind};
+pub use decode_layer::{
+    DecodeLayer, DecodeStep, GemmKind, GemmNode, StepNode, VectorOp, VectorOpKind,
+};
 
 use crate::coordinator::DecodeRequest;
 use crate::kernels::GemmProblem;

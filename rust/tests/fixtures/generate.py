@@ -3,10 +3,12 @@
 
 Mirrors the byte accounting of `rust/src/kernels/{splitk,chunked,
 data_parallel}.rs` + `analysis/golden.rs` for the pinned-tiling cases in
-`rust/tests/golden_traces.rs`.  The canonical regeneration path is
-`BLESS=1 cargo test --test golden_traces`; this script exists so the
-fixtures can be (re)derived without a Rust toolchain and cross-checks the
-schedule math independently.
+`rust/tests/golden_traces.rs`, and the decode-step graph construction of
+`rust/src/workload/decode_layer.rs` (`DecodeStep::nodes` +
+`golden::step_to_json`) for the full-step fixtures.  The canonical
+regeneration path is `BLESS=1 cargo test --test golden_traces`; this
+script exists so the fixtures can be (re)derived without a Rust toolchain
+and cross-checks the schedule math independently.
 """
 
 import json
@@ -72,7 +74,9 @@ def reduce_phases(m, n, t, mode):
     elems = t["bm"] * t["bn"]
     rd = t["splits"] * elems * 4
     wr = elems * 2
-    streamable = mode == "pipelined" and out_tiles % VEC_CORES == 0 and out_tiles >= 2 * VEC_CORES
+    # The §11 floor-wave generalization: streaming only needs every engine
+    # to own at least two tiles; uneven assignments stream their floor wave.
+    streamable = mode == "pipelined" and out_tiles >= 2 * VEC_CORES
     if not streamable:
         return [phase(
             "reduce", "vector", False, None, min(out_tiles, VEC_CORES), out_tiles,
@@ -149,6 +153,61 @@ def tiling(bm, bn, bk, splits, chunks):
             "dequant_bk": 128, "dequant_bn": 256}
 
 
+# --- full decode-step graph (workload/decode_layer.rs DecodeStep::nodes) ---
+
+def vec_node(kind, elems, ops, hbm, l2):
+    return {"node": "vector", "kind": kind, "elems": elems,
+            "ops_per_elem": ops, "hbm_bytes": hbm, "l2_bytes": l2}
+
+
+def gemm_node(kind, m, n, k, count, group=128):
+    return {"node": "gemm", "kind": kind, "m": m, "n": n, "k": k,
+            "group": group, "count": count}
+
+
+def decode_step(batch, kv_len, heads, hidden, ffn, kv, moe=None):
+    m, h = batch, hidden
+    head_dim = hidden // heads  # presets use 128-wide heads exactly
+    assert head_dim * heads == hidden
+    scores = m * heads * kv_len
+    norm = vec_node("rmsnorm", m * h, 6, 0, 2 * m * h * 2)
+    residual = vec_node("residual", m * h, 1, 0, 3 * m * h * 2)
+    nodes = [
+        norm,
+        gemm_node("qkv", m, h + 2 * kv, h, 1),
+        vec_node("attn_score", scores, 2 * head_dim,
+                 m * kv_len * kv * 2, m * h * 2 + scores * 2),
+        vec_node("attn_softmax", scores, 8, 0, 2 * scores * 2),
+        vec_node("attn_av", scores, 2 * head_dim,
+                 m * kv_len * kv * 2, scores * 2 + m * h * 2),
+        gemm_node("attn_out", m, h, h, 1),
+        residual,
+        norm,
+    ]
+    if moe is None:
+        nodes += [
+            gemm_node("up_gate", m, 2 * ffn, h, 1),
+            vec_node("activation", m * ffn, 4, 0, 3 * m * ffn * 2),
+            gemm_node("down", m, h, ffn, 1),
+        ]
+    else:
+        experts, topk, ef = moe["experts"], moe["topk"], moe["expert_ffn"]
+        pairs = m * topk
+        active = max(1, min(experts, pairs))
+        tokens = -(-pairs // active)  # ceil division (balanced routing)
+        routed = active * tokens
+        nodes += [
+            vec_node("moe_route", m * experts, 2 * h + 8,
+                     h * experts * 2, m * h * 2 + m * experts * 2),
+            gemm_node("moe_expert", tokens, 2 * ef, h, active),
+            vec_node("activation", routed * ef, 4, 0, 3 * routed * ef * 2),
+            gemm_node("moe_expert", tokens, h, ef, active),
+        ]
+    nodes.append(residual)
+    return {"batch": batch, "kv_len": kv_len, "heads": heads,
+            "hidden": hidden, "ffn": ffn, "kv": kv, "moe": moe, "nodes": nodes}
+
+
 FIXTURES = {
     "splitk_m8_n512_k16384_pipelined":
         splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "pipelined"),
@@ -156,12 +215,22 @@ FIXTURES = {
         splitk(16, 12288, 5120, tiling(16, 64, 128, 2, 1), "pipelined"),
     "splitk_m8_n512_k16384_barrier":
         splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "barrier"),
+    # One routed expert's down-projection (DeepSeek-R1 shape): 224 output
+    # tiles over 64 engines pin the uneven floor-wave streaming gate.
+    "splitk_m1_n7168_k2048_pipelined":
+        splitk(1, 7168, 2048, tiling(16, 32, 128, 4, 1), "pipelined"),
     "chunked_m8_n5120_k12288_pipelined":
         chunked(8, 5120, 12288, tiling(16, 256, 64, 4, 4), "pipelined"),
     "chunked_m8_n2048_k8192_pipelined":
         chunked(8, 2048, 8192, tiling(16, 128, 128, 2, 4), "pipelined"),
     "dp_m8_n2048_k7168":
         data_parallel(8, 2048, 7168, tiling(16, 256, 64, 1, 1)),
+    # Full decode-step graphs: GLM-4.5 dense and DeepSeek-MoE at batch 8.
+    "decode_step_glm45_b8":
+        decode_step(8, 2048, 40, 5120, 12288, 5120),
+    "decode_step_deepseek_moe_b8":
+        decode_step(8, 2048, 56, 7168, 2048, 1536,
+                    moe={"experts": 256, "topk": 8, "expert_ffn": 2048}),
 }
 
 

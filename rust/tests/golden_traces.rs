@@ -15,7 +15,9 @@ use ascend_w4a16::analysis::golden;
 use ascend_w4a16::ascend::{KernelTrace, MachineConfig};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
+use ascend_w4a16::model::llm::{layer_geometry, moe_geometry};
 use ascend_w4a16::util::json::Json;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
 
 fn machine() -> MachineConfig {
     MachineConfig::ascend910()
@@ -32,7 +34,11 @@ fn bless_requested() -> bool {
 /// Compare a trace's digest against its committed fixture (or regenerate
 /// it under `BLESS=1`).
 fn check(name: &str, trace: &KernelTrace) {
-    let got = golden::trace_to_json(trace);
+    check_json(name, golden::trace_to_json(trace));
+}
+
+/// Compare any golden digest against its committed fixture.
+fn check_json(name: &str, got: Json) {
     let path = fixture_path(name);
     if bless_requested() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
@@ -119,4 +125,37 @@ fn data_parallel_decode_shape_matches_golden() {
     t.validate(&machine(), &p).unwrap();
     let tr = data_parallel::schedule(&machine(), &p, &t).unwrap();
     check("dp_m8_n2048_k7168", &tr);
+}
+
+#[test]
+fn moe_expert_batch_trace_matches_golden() {
+    // One routed expert's down-projection at decode (m=1 token, N=7168,
+    // K=2048 — DeepSeek-R1's expert shape): 224 output tiles over 64
+    // vector engines exercise the UNEVEN floor-wave streaming gate, so
+    // this fixture pins both the expert-batch schedule and the §11
+    // generalized reduce stream.
+    let p = GemmProblem::new(1, 7168, 2048);
+    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("splitk_m1_n7168_k2048_pipelined", &tr);
+}
+
+#[test]
+fn dense_decode_step_graph_matches_golden() {
+    // The full GLM-4.5 decode step at batch 8: attention + glue + the
+    // four projection GEMMs, in issue order.
+    let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+    let step = DecodeStep::new(layer, 2048, 40);
+    check_json("decode_step_glm45_b8", golden::step_to_json(&step));
+}
+
+#[test]
+fn moe_decode_step_graph_matches_golden() {
+    // The full DeepSeek-MoE decode step at batch 8: routing + the 64
+    // active-expert fan-out replacing the dense FFN pair.
+    let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+        .with_moe(moe_geometry("deepseek-moe").unwrap());
+    let step = DecodeStep::new(layer, 2048, 56);
+    check_json("decode_step_deepseek_moe_b8", golden::step_to_json(&step));
 }

@@ -1,7 +1,8 @@
 //! Decode-layer GEMM-graph integration: the graph simulator over every
-//! paper model, and the coordinator router resolving all four projection
-//! GEMMs through the tune cache (exercised against a synthetic manifest,
-//! so it runs without artifacts or PJRT).
+//! paper model (dense and MoE), and the coordinator router resolving
+//! every GEMM node — the dense projections or the routed expert fan-out —
+//! through the tune cache (exercised against synthetic manifests, so it
+//! runs without artifacts or PJRT).
 
 use ascend_w4a16::analysis::layer;
 use ascend_w4a16::ascend::MachineConfig;
@@ -88,38 +89,51 @@ fn tiny_config() -> DecodeConfig {
         max_seq: 64,
         group: 128,
         params: 0,
+        moe_experts: 0,
+        moe_topk: 0,
     }
 }
 
+/// The tiny model with its FFN routed over 4 experts (top-2): the MoE
+/// serving scenario with no artifacts or PJRT anywhere.
+fn tiny_moe_config() -> DecodeConfig {
+    DecodeConfig { moe_experts: 4, moe_topk: 2, ..tiny_config() }
+}
+
 /// Write a minimal manifest (one decode artifact) + a warmed tune cache
-/// into a fresh temp dir.
-fn synthetic_artifacts(tag: &str, warm_cache: bool) -> std::path::PathBuf {
+/// into a fresh temp dir.  `moe` routes the tiny model's FFN over
+/// experts (via the manifest's optional `moe_experts`/`moe_topk` keys).
+fn synthetic_artifacts(tag: &str, warm_cache: bool, moe: bool) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("w4a16-layer-{tag}-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let manifest = r#"{
+    let moe_keys = if moe { r#""moe_experts": 4, "moe_topk": 2, "# } else { "" };
+    let manifest = format!(
+        r#"{{
   "group": 128,
   "batch_sizes": [4],
   "paper_shapes": [],
   "artifacts": [
-    {
+    {{
       "name": "decode_tiny_b4",
       "kind": "decode",
       "path": "decode_tiny_b4.hlo.txt",
       "model": "tiny",
       "batch": 4,
-      "config": {"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
-                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0},
+      "config": {{{moe_keys}"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0}},
       "inputs": [],
       "outputs": []
-    }
+    }}
   ]
-}"#;
+}}"#
+    );
     std::fs::write(dir.join("manifest.json"), manifest).unwrap();
     if warm_cache {
         let mut tuner = Tuner::new(machine());
-        let decode_layer = DecodeLayer::from_decode_config(&tiny_config(), 4);
-        for (_, p) in decode_layer.problems() {
-            tuner.resolve(&p).unwrap();
+        let cfg = if moe { tiny_moe_config() } else { tiny_config() };
+        let decode_layer = DecodeLayer::from_decode_config(&cfg, 4);
+        for node in decode_layer.gemm_nodes() {
+            tuner.resolve(&node.problem).unwrap();
         }
         tuner.save_to(dir.join("tune_cache.json")).unwrap();
     }
@@ -128,7 +142,7 @@ fn synthetic_artifacts(tag: &str, warm_cache: bool) -> std::path::PathBuf {
 
 #[test]
 fn router_resolves_all_four_gemms_through_the_cache() {
-    let dir = synthetic_artifacts("warm", true);
+    let dir = synthetic_artifacts("warm", true, false);
     let rt = Runtime::cpu().unwrap();
     let mf = Manifest::load(&dir).unwrap();
     let mut router = Router::new(&rt, mf, "tiny").unwrap();
@@ -150,7 +164,7 @@ fn router_resolves_all_four_gemms_through_the_cache() {
 fn routed_batch_records_all_four_gemm_kinds() {
     // Regression (metrics): after one routed decode batch, every GEMM kind
     // appears in the per-GEMM schedule counters.
-    let dir = synthetic_artifacts("metrics", true);
+    let dir = synthetic_artifacts("metrics", true, false);
     let rt = Runtime::cpu().unwrap();
     let mf = Manifest::load(&dir).unwrap();
     let mut router = Router::new(&rt, mf, "tiny").unwrap();
@@ -186,19 +200,125 @@ fn routed_batch_records_all_four_gemm_kinds() {
 }
 
 #[test]
+fn moe_manifest_resolves_expert_gemms_cache_only() {
+    // Satellite acceptance: a synthetic MoE manifest (no artifacts/PJRT)
+    // through Router::layer_plan resolves the expert GEMMs cache-only and
+    // they appear in the metrics snapshot with their fan-out counts.
+    let dir = synthetic_artifacts("moe", true, true);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(router.has_tune_cache());
+
+    let plan = router.layer_plan(4).expect("decode config present");
+    assert!(
+        plan.fully_resolved(),
+        "attention + expert GEMMs must resolve cache-only: {plan:?}"
+    );
+    let experts: Vec<_> =
+        plan.nodes.iter().filter(|n| n.kind == GemmKind::MoeExpert).collect();
+    assert_eq!(experts.len(), 2, "expert up/gate + down nodes: {plan:?}");
+    for node in &experts {
+        // b=4 top-2 over 4 experts: all 4 experts fire, 2 tokens each.
+        assert_eq!(node.count, 4);
+        assert!(node.plan.unwrap().predicted_ns > 0.0);
+    }
+    assert!(plan.get(GemmKind::Down).is_none(), "MoE layers have no dense down node");
+    // The headline (bottleneck) plan is the expert down-projection.
+    let headline = router.tuned_plan(4).unwrap();
+    assert_eq!(Some(headline), experts.last().unwrap().plan);
+    assert!(plan.predicted_layer_ns().unwrap() > 0.0);
+
+    let metrics = Metrics::new();
+    Server::record_group_schedules(&metrics, router.layer_plan(4).as_ref());
+    let snap = metrics.snapshot();
+    let moe_stats = snap
+        .gemm_schedules
+        .get("moe_expert")
+        .expect("moe_expert kind missing from the snapshot");
+    assert_eq!(moe_stats.values().map(|st| st.groups).sum::<u64>(), 2);
+    assert_eq!(
+        moe_stats.values().map(|st| st.gemms).sum::<u64>(),
+        8,
+        "per-kind expert counts: 2 nodes x 4 active experts"
+    );
+    assert!(!moe_stats.contains_key("untuned"), "warmed cache must resolve: {moe_stats:?}");
+    let rendered = snap.render(1.0);
+    assert!(rendered.contains("moe_expert"), "render missing moe_expert:\n{rendered}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn moe_layer_plan_predicts_full_fanout_latency() {
+    // The plan's layer prediction multiplies each expert node by its
+    // fan-out, so it matches the graph simulator's sequential GEMM total.
+    let dir = synthetic_artifacts("moe-pred", true, true);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    let plan = router.layer_plan(4).unwrap();
+    let predicted = plan.predicted_layer_ns().unwrap();
+    let per_node: f64 = plan
+        .nodes
+        .iter()
+        .map(|n| n.plan.unwrap().predicted_ns * n.count as f64)
+        .sum();
+    assert!((predicted - per_node).abs() < 1e-9);
+    let dense_dir = synthetic_artifacts("dense-pred", true, false);
+    let dense_mf = Manifest::load(&dense_dir).unwrap();
+    let mut dense_router = Router::new(&rt, dense_mf, "tiny").unwrap();
+    let dense = dense_router.layer_plan(4).unwrap().predicted_layer_ns().unwrap();
+    assert!(
+        predicted > dense,
+        "8 expert GEMMs must out-cost the dense FFN pair ({predicted} vs {dense})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dense_dir);
+}
+
+#[test]
 fn cold_cache_serves_untuned_but_still_covers_all_kinds() {
-    let dir = synthetic_artifacts("cold", false);
+    let dir = synthetic_artifacts("cold", false, false);
     let rt = Runtime::cpu().unwrap();
     let mf = Manifest::load(&dir).unwrap();
     let mut router = Router::new(&rt, mf, "tiny").unwrap();
     assert!(!router.has_tune_cache());
-    assert!(router.layer_plan(4).is_none(), "no cache file -> no plan");
+    // No cache file: the plan still enumerates the layer's nodes (so
+    // metrics stay kind-accurate) but every node serves untuned.
+    let plan = router.layer_plan(4).expect("decode config present");
+    assert!(!plan.fully_resolved());
+    assert!(plan.nodes.iter().all(|n| n.plan.is_none()));
+    assert!(router.tuned_plan(4).is_none());
 
     let metrics = Metrics::new();
-    Server::record_group_schedules(&metrics, None);
+    Server::record_group_schedules(&metrics, Some(&plan));
     let snap = metrics.snapshot();
     for kind in GemmKind::all() {
         assert_eq!(snap.gemm_schedules[kind.name()]["untuned"].groups, 1);
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cold_cache_moe_metrics_name_the_expert_nodes() {
+    // The finding this guards: a MoE manifest with no tune cache must
+    // surface `moe_expert` (with its fan-out), not phantom dense nodes.
+    let dir = synthetic_artifacts("cold-moe", false, true);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    let plan = router.layer_plan(4).expect("decode config present");
+    assert!(!plan.fully_resolved());
+
+    let metrics = Metrics::new();
+    Server::record_group_schedules(&metrics, Some(&plan));
+    let snap = metrics.snapshot();
+    assert_eq!(snap.gemm_schedules["moe_expert"]["untuned"].groups, 2);
+    assert_eq!(snap.gemm_schedules["moe_expert"]["untuned"].gemms, 8);
+    assert!(
+        !snap.gemm_schedules.contains_key("up_gate")
+            && !snap.gemm_schedules.contains_key("down"),
+        "MoE layers must not record phantom dense FFN nodes"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,14 +1,18 @@
 //! Cross-cutting property tests on coordinator invariants (routing,
 //! batching, request state) — the proptest deliverable for L3 — plus the
-//! pipelined-reduce and tune-cache invariants of DESIGN.md §10.
+//! pipelined-reduce, tune-cache and cross-node overlap-ledger invariants
+//! of DESIGN.md §10–§11.
 
+use ascend_w4a16::analysis::layer::{self, OverlapMode, Resolution, StepNodeReport};
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{self, chunked, splitk, GemmProblem, ReduceMode, Strategy};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
+use ascend_w4a16::model::llm::{LayerGeometry, MoeGeometry};
 use ascend_w4a16::tune::{machine_tag, shape_key, TuneCache, TunedEntry, Tuner};
 use ascend_w4a16::util::json::Json;
 use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
 
 #[test]
 fn batcher_never_loses_or_duplicates_requests() {
@@ -247,6 +251,200 @@ fn served_reduce_never_slower_than_barrier_reduce() {
             }
         }
         (true, String::new())
+    });
+}
+
+#[test]
+fn uneven_tile_counts_stream_their_floor_wave() {
+    // ROADMAP PR-2 follow-up: when output tiles do NOT divide evenly over
+    // the vector engines, the floor-wave still streams (each engine keeps
+    // exactly one tail tile) and the served (Auto) schedule is never
+    // slower than the barrier reduce.
+    let m = MachineConfig::ascend910();
+    let sim = Simulator::new(m.clone());
+    let engines = m.total_vector_cores();
+    forall("uneven floor-wave streams", 25, |rng| {
+        // bn = 16 gives out_tiles = (m_pad/16) * (n/16): sample a tile
+        // count in [130, 380) so every draw clears the two-wave gate and
+        // most draws are uneven.
+        let n_tiles = rng.usize_range(130, 380);
+        let n = 16 * n_tiles;
+        let k = 128 * rng.usize_range(2, 24);
+        let splits = 2usize;
+        if (k / splits) % 128 != 0 {
+            return (true, String::new());
+        }
+        let batch = rng.usize_range(1, 16); // m_pad = 16 -> one m-tile row
+        let p = GemmProblem::new(batch, n, k);
+        let t = Tiling {
+            bm: 16,
+            bn: 16,
+            bk: 128,
+            splits,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 16,
+        };
+        if t.validate(&m, &p).is_err() {
+            return (false, format!("n={n} k={k}: tiling must be legal"));
+        }
+        let out_tiles = (p.m_padded(&m) / t.bm) * (p.n / t.bn);
+        assert!(out_tiles >= 2 * engines);
+        let tr = splitk::schedule_reduce(&m, &p, &t, ReduceMode::Pipelined).unwrap();
+        let names: Vec<&str> = tr.phases.iter().map(|ph| ph.name).collect();
+        if names != vec!["dequant", "splitk_mmad", "reduce_stream", "reduce_tail"] {
+            return (false, format!("n={n} k={k}: phases {names:?}"));
+        }
+        let stream = &tr.phases[2];
+        let tail = &tr.phases[3];
+        if stream.total_steps() != out_tiles - engines || tail.total_steps() != engines {
+            return (
+                false,
+                format!(
+                    "n={n} k={k}: stream {} + tail {} != {out_tiles} tiles",
+                    stream.total_steps(),
+                    tail.total_steps()
+                ),
+            );
+        }
+        // Every engine keeps exactly one tail tile; stream counts differ
+        // by at most one (ceil vs floor wave).
+        let lens: Vec<usize> =
+            stream.steps_per_engine.iter().map(|s| s.len()).collect();
+        let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        if hi - lo > 1 {
+            return (false, format!("n={n} k={k}: stream imbalance {lo}..{hi}"));
+        }
+        if out_tiles % engines != 0 && hi == lo {
+            return (false, format!("n={n} k={k}: uneven count must split waves"));
+        }
+        // Every output tile reduced exactly once.
+        let out: u64 = tr.phases[2..]
+            .iter()
+            .map(|ph| ph.write_bytes(BufferClass::Output))
+            .sum();
+        if out != (p.m_padded(&m) * p.n * 2) as u64 {
+            return (false, format!("n={n} k={k}: output bytes {out}"));
+        }
+        // served (Auto) <= barrier, even though the uneven stream has no
+        // construction-level proof: Auto simulates both and keeps the winner.
+        let served = sim
+            .run(&kernels::schedule_with_reduce(&m, &p, Strategy::SplitK, &t, ReduceMode::Auto)
+                .unwrap())
+            .unwrap()
+            .total_ns;
+        let barrier = sim
+            .run(&kernels::schedule_with_reduce(
+                &m,
+                &p,
+                Strategy::SplitK,
+                &t,
+                ReduceMode::Barrier,
+            )
+            .unwrap())
+            .unwrap()
+            .total_ns;
+        (
+            served <= barrier * 1.000001,
+            format!("n={n} k={k}: served {served} > barrier {barrier}"),
+        )
+    });
+}
+
+/// Random legal decoder-layer geometry (group-aligned widths), sometimes
+/// with a routed expert fan-out.
+fn random_step(rng: &mut ascend_w4a16::util::prng::Rng) -> DecodeStep {
+    let hidden = 128 * rng.usize_range(2, 24);
+    let ffn = 128 * rng.usize_range(2, 32);
+    let kv = 16 * rng.usize_range(1, hidden / 16);
+    let geometry = LayerGeometry { hidden, ffn, kv, group: 128 };
+    let batch = rng.usize_range(1, 64);
+    let mut layer = DecodeLayer::new(geometry, batch);
+    if rng.usize_range(0, 1) == 1 {
+        let experts = *rng.choose(&[4usize, 8, 64]);
+        let topk = (*rng.choose(&[1usize, 2])).min(experts);
+        layer = layer.with_moe(MoeGeometry { experts, topk, expert_ffn: ffn });
+    }
+    let kv_len = 128 * rng.usize_range(1, 32);
+    DecodeStep::new(layer, kv_len, DecodeStep::default_heads(&geometry))
+}
+
+#[test]
+fn overlap_ledger_prices_each_node_once_and_never_double_books() {
+    // DESIGN.md §11 invariants: (a) the overlapped total equals the
+    // sequential total minus every ledger gain — each node's reduce and
+    // dequant priced exactly once; (b) no pair hides more vector work
+    // than the consumer's idle vector headroom (no engine double-booked
+    // in the same tick) nor more than the producer's exposed reduce; (c)
+    // each GEMM acts as producer at most once and consumer at most once.
+    let m = MachineConfig::ascend910();
+    forall("overlap ledger balances", 12, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        let strategy = *rng.choose(&[Strategy::SplitK, Strategy::Chunked]);
+        let force_split = rng.usize_range(0, 1) == 1;
+        let rep = match layer::simulate_step(&m, &step, OverlapMode::Auto, |p| {
+            let mut t = kernels::select_tiling(&m, p, strategy)?;
+            // Half the cases force a K split so nodes carry a reduce
+            // phase and the ledger is non-trivially exercised.
+            if force_split {
+                let split = Tiling { splits: t.splits.max(2), ..t };
+                if split.validate(&m, p).is_ok() {
+                    t = split;
+                }
+            }
+            Ok((strategy, t, Resolution::Heuristic))
+        }) {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        let gain: f64 = rep.ledger.iter().map(|p| p.total_gain_ns()).sum();
+        if (rep.sequential_ns - gain - rep.overlapped_ns).abs() > 1e-6 {
+            return (false, format!("ledger does not balance: {gain}"));
+        }
+        let mut producers = std::collections::BTreeSet::new();
+        let mut consumers = std::collections::BTreeSet::new();
+        for pair in &rep.ledger {
+            if pair.gain_ns > pair.reduce_ns + 1e-9 || pair.gain_ns > pair.slack_ns + 1e-9 {
+                return (
+                    false,
+                    format!(
+                        "pair {}->{} double-books: gain {} reduce {} slack {}",
+                        pair.producer, pair.consumer, pair.gain_ns, pair.reduce_ns, pair.slack_ns
+                    ),
+                );
+            }
+            if pair.gain_ns <= 0.0 || pair.pairs == 0 {
+                return (false, "ledger must only carry positive gains".into());
+            }
+            let internal = pair.producer == pair.consumer;
+            if !internal && !producers.insert(pair.producer) {
+                return (false, format!("node {} produces twice", pair.producer));
+            }
+            if !internal && !consumers.insert(pair.consumer) {
+                return (false, format!("node {} consumes twice", pair.consumer));
+            }
+            match &rep.nodes[pair.producer] {
+                StepNodeReport::Gemm(g) => {
+                    if internal && pair.pairs != g.count - 1 {
+                        return (
+                            false,
+                            format!("internal pairs {} != count-1 {}", pair.pairs, g.count - 1),
+                        );
+                    }
+                }
+                StepNodeReport::Vector(_) => {
+                    return (false, "vector nodes cannot join the ledger".into())
+                }
+            }
+        }
+        // Auto is never slower than the sequential chain.
+        (
+            rep.served_ns() <= rep.sequential_ns * 1.000001,
+            format!("served {} > sequential {}", rep.served_ns(), rep.sequential_ns),
+        )
     });
 }
 

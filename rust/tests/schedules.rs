@@ -1,10 +1,14 @@
 //! Schedule-level integration tests: the paper's headline behaviours as
 //! executable assertions, across the whole shape table.
 
+use ascend_w4a16::analysis::layer::{self, OverlapMode, Resolution};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator, Unit};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
-use ascend_w4a16::model::llm::{paper_shapes, PAPER_BATCH_SIZES};
+use ascend_w4a16::model::llm::{
+    paper_layer_geometries, paper_moe_geometries, paper_shapes, PAPER_BATCH_SIZES,
+};
 use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
 
 fn machine() -> MachineConfig {
     MachineConfig::ascend910()
@@ -221,6 +225,63 @@ fn served_reduce_never_slower_on_every_paper_decode_shape() {
             }
         }
     }
+}
+
+#[test]
+fn auto_overlap_never_slower_than_sequential_across_paper_models() {
+    // Acceptance criterion: the Auto overlap plan is never slower than
+    // PR-2's sequential ledger across the paper-shape sweep — every dense
+    // trunk and the MoE decoding scenario, at small/medium/large batch.
+    let m = machine();
+    let mut steps: Vec<(String, DecodeStep)> = Vec::new();
+    for (model, geom) in paper_layer_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+            ));
+        }
+    }
+    for (model, geom, moe) in paper_moe_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch).with_moe(moe);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+            ));
+        }
+    }
+    let mut some_gain = false;
+    for (tag, step) in steps {
+        let rep = layer::simulate_step(&m, &step, OverlapMode::Auto, |p| {
+            // Force a K split where legal so every node carries a reduce
+            // phase: the never-slower guarantee must hold for ANY tiling,
+            // and the wide-N heuristic alone would pick S = 1 everywhere
+            // (no reduce, nothing to overlap — a vacuous sweep).
+            let mut t = kernels::select_tiling(&m, p, Strategy::SplitK)?;
+            let split = ascend_w4a16::kernels::tiling::Tiling { splits: t.splits.max(2), ..t };
+            if split.validate(&m, p).is_ok() {
+                t = split;
+            }
+            Ok((Strategy::SplitK, t, Resolution::Heuristic))
+        })
+        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert!(
+            rep.served_ns() <= rep.sequential_ns * 1.000001,
+            "{tag}: served {} slower than sequential {}",
+            rep.served_ns(),
+            rep.sequential_ns
+        );
+        assert!(rep.sequential_ns.is_finite() && rep.sequential_ns > 0.0, "{tag}");
+        // The step covers attention + glue, not just GEMMs.
+        assert!(rep.vector_ns() > 0.0, "{tag}: non-GEMM nodes missing");
+        some_gain |= rep.overlap_gain_ns() > 0.0;
+    }
+    assert!(
+        some_gain,
+        "the overlap ledger never found a reduce/dequant pair across the whole sweep"
+    );
 }
 
 #[test]
