@@ -14,7 +14,9 @@
 use ascend_w4a16::analysis::layer::{self, OverlapMode};
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
-use ascend_w4a16::model::llm::{paper_layer_geometries, paper_moe_geometries, MoeGeometry};
+use ascend_w4a16::model::llm::{
+    layer_geometry, moe_geometry, paper_layer_geometries, paper_moe_geometries, MoeGeometry,
+};
 use ascend_w4a16::tune::Tuner;
 use ascend_w4a16::util::json::Json;
 use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
@@ -45,6 +47,10 @@ fn bench_model(
         let rep = srep.gemm_report();
         let reduce_speedup = rep.layer_barrier_ns() / rep.layer_ns();
         let overlap_speedup = srep.sequential_ns / srep.served_ns();
+        // What the phase-level co-scheduler buys over the sequential chain
+        // (DESIGN.md §12) — and over PR 3's first-order ledger.
+        let overlap_exact_speedup = srep.sequential_ns / srep.exact_ns;
+        let exact_vs_ledger = srep.overlapped_ns / srep.exact_ns;
         let strategies: Vec<String> = rep
             .nodes
             .iter()
@@ -52,13 +58,14 @@ fn bench_model(
             .collect();
         println!(
             "b={batch:<3} gemm {:>9.2} us (barrier {:>9.2} us, {:.3}x)  \
-             step {:>9.2} us (seq {:>9.2} us, overlap {:.3}x)  {}",
+             step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x)  {}",
             rep.layer_ns() / 1e3,
             rep.layer_barrier_ns() / 1e3,
             reduce_speedup,
             srep.served_ns() / 1e3,
             srep.sequential_ns / 1e3,
             overlap_speedup,
+            overlap_exact_speedup,
             strategies.join(" "),
         );
         cells.push(Json::obj(vec![
@@ -70,12 +77,59 @@ fn bench_model(
             ("reduce_pipeline_speedup", Json::num(reduce_speedup)),
             ("step_us", Json::num(srep.served_ns() / 1e3)),
             ("step_sequential_us", Json::num(srep.sequential_ns / 1e3)),
+            ("step_exact_us", Json::num(srep.exact_ns / 1e3)),
             ("overlap_speedup", Json::num(overlap_speedup)),
+            ("overlap_exact_speedup", Json::num(overlap_exact_speedup)),
+            ("overlap_exact_vs_ledger", Json::num(exact_vs_ledger)),
             ("overlap_gain_us", Json::num(srep.overlap_gain_ns() / 1e3)),
+            ("overlap_exact_gain_us", Json::num(srep.exact_gain_ns() / 1e3)),
             ("detail", layer::layer_json(&rep)),
             ("step_detail", layer::step_json(&srep)),
         ]));
     }
+}
+
+/// Co-scheduler stress leg: force a K split on every node so each carries
+/// an exposed reduce tail (the tuned sweep above legitimately picks
+/// reduce-free winners on most shapes, leaving nothing to overlap) — this
+/// is where `overlap_exact_speedup` strictly beats 1.0 and the exact
+/// pricing separates from the first-order ledger (DESIGN.md §12).
+fn bench_forced_split(machine: &MachineConfig, model: &str, cells: &mut Vec<Json>) {
+    let geom = layer_geometry(model).expect("paper model");
+    let mut decode_layer = DecodeLayer::new(geom, 8);
+    if let Some(moe) = moe_geometry(model) {
+        decode_layer = decode_layer.with_moe(moe);
+    }
+    let step = DecodeStep::new(decode_layer, 2048, DecodeStep::default_heads(&geom));
+    let srep = layer::simulate_step(
+        machine,
+        &step,
+        OverlapMode::Auto,
+        layer::forced_split_resolver(machine),
+    )
+    .expect("simulate forced-split step");
+    let exact_speedup = srep.sequential_ns / srep.exact_ns;
+    println!(
+        "{model:<14} b=8  step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x)",
+        srep.served_ns() / 1e3,
+        srep.sequential_ns / 1e3,
+        srep.sequential_ns / srep.overlapped_ns,
+        exact_speedup,
+    );
+    cells.push(Json::obj(vec![
+        ("model", Json::str(format!("{model}-forced-split"))),
+        ("moe", Json::Bool(moe_geometry(model).is_some())),
+        ("batch", Json::num(8.0)),
+        ("step_us", Json::num(srep.served_ns() / 1e3)),
+        ("step_sequential_us", Json::num(srep.sequential_ns / 1e3)),
+        ("step_exact_us", Json::num(srep.exact_ns / 1e3)),
+        ("overlap_speedup", Json::num(srep.sequential_ns / srep.overlapped_ns)),
+        ("overlap_exact_speedup", Json::num(exact_speedup)),
+        ("overlap_exact_vs_ledger", Json::num(srep.overlapped_ns / srep.exact_ns)),
+        ("overlap_gain_us", Json::num(srep.overlap_gain_ns() / 1e3)),
+        ("overlap_exact_gain_us", Json::num(srep.exact_gain_ns() / 1e3)),
+        ("step_detail", layer::step_json(&srep)),
+    ]));
 }
 
 fn main() {
@@ -88,6 +142,11 @@ fn main() {
     }
     for (model, geom, moe) in paper_moe_geometries() {
         bench_model(&machine, &mut tuner, model, geom, Some(moe), &mut cells);
+    }
+
+    section("co-scheduler stress — forced K-splits (exact vs ledger overlap)");
+    for model in ["llama32", "deepseek-moe"] {
+        bench_forced_split(&machine, model, &mut cells);
     }
 
     let doc = Json::obj(vec![

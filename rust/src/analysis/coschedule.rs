@@ -1,0 +1,303 @@
+//! Phase-level cross-node co-scheduler (DESIGN.md §12).
+//!
+//! PR 3's overlap ledger prices the reduce/dequant overlap to first order:
+//! `min(exposed_reduce, vector_slack)` per adjacent GEMM pair.  This
+//! module prices it *exactly* by restructuring the schedules themselves:
+//!
+//! 1. [`splice`] takes two adjacent kernel traces, removes the producer's
+//!    exposed reduce tail (the trailing barrier group of reduce phases)
+//!    and splices those steps — engine tags preserved, intra-engine
+//!    ordering preserved, partial reads re-classed as
+//!    [`BufferClass::CarriedPartial`] so the boundary residency is the
+//!    producer's — into the consumer's weight-only dequant prologue.
+//! 2. [`pair_decision`] re-runs the cycle-accurate simulator on the merged
+//!    trace ([`Simulator::run_merged`]) and compares it against the
+//!    sequential pair.  The co-scheduler *declines* to merge when the
+//!    merged trace prices slower, so the decision's gain is clamped at
+//!    zero and `OverlapMode::Exact` is never slower than `Sequential` by
+//!    construction.
+//!
+//! The splice is sound because the two workloads touch disjoint buffers:
+//! the reduce reads the producer's split partials and writes the
+//! producer's output; the dequant prologue reads only the consumer's
+//! packed weights and quant params.  They share only the vector engines,
+//! and the splice serializes them *per engine* (no engine is ever
+//! double-booked at any simulated cycle — each engine's step list is a
+//! single sequence).  The consumer's chunk-group tags are untouched, so
+//! the chunked pipeline's rotation events are unchanged.
+
+use crate::ascend::{
+    BufferClass, KernelTrace, MergedTrace, Phase, Simulator, TileStep,
+};
+
+/// Exact pricing of one co-scheduled adjacent pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairDecision {
+    /// The pair priced back to back (producer + consumer, full traces).
+    pub sequential_ns: f64,
+    /// The merged trace's simulated latency.
+    pub merged_ns: f64,
+    /// What the co-scheduler realizes: `max(0, sequential - merged)` —
+    /// zero when it declines to merge.
+    pub gain_ns: f64,
+}
+
+impl PairDecision {
+    /// Whether the co-scheduler actually serves the merged trace.
+    pub fn merged_applied(&self) -> bool {
+        self.gain_ns > 0.0
+    }
+}
+
+/// Re-class a step's `Partial` reads as `CarriedPartial`: once spliced
+/// into the downstream kernel, the bytes belong to the *upstream* kernel's
+/// split buffers and must be priced under its residency.
+fn carry_step(step: &TileStep) -> TileStep {
+    let mut s = *step;
+    for read in s.reads.iter_mut() {
+        if read.0 == BufferClass::Partial && read.1 > 0 {
+            read.0 = BufferClass::CarriedPartial;
+        }
+    }
+    s
+}
+
+/// Splice `producer`'s exposed reduce tail into `consumer`'s dequant
+/// prologue, returning the merged two-kernel trace — or `None` when either
+/// side has no spliceable sub-trace (no exposed reduce, or the consumer
+/// does not open with a weight-only dequant phase).
+pub fn splice(producer: &KernelTrace, consumer: &KernelTrace) -> Option<MergedTrace> {
+    let tail = producer.exposed_reduce_range()?;
+    let dq = consumer.dequant_prologue()?;
+
+    // The producer loses its tail group (and, in simulation, the barrier
+    // that fronted it — one fewer group).
+    let mut head = producer.clone();
+    head.phases.truncate(tail.start);
+    head.name = format!("{}_head", producer.name);
+
+    // Collect the tail's steps per engine, preserving phase order and each
+    // engine's intra-phase ordering, with partial reads carried.
+    let mut carried: Vec<Vec<TileStep>> = Vec::new();
+    for phase in &producer.phases[tail] {
+        if phase.steps_per_engine.len() > carried.len() {
+            carried.resize(phase.steps_per_engine.len(), Vec::new());
+        }
+        for (e, steps) in phase.steps_per_engine.iter().enumerate() {
+            carried[e].extend(steps.iter().map(carry_step));
+        }
+    }
+
+    // Prepend the carried steps to the prologue's engines: the leftover
+    // reduce work drains first on each engine, then its dequant steps run
+    // — both sequences keep their own order, and no engine is ever booked
+    // twice in the same slot.
+    let mut spliced = consumer.clone();
+    let phase: &mut Phase = &mut spliced.phases[dq];
+    if carried.len() > phase.steps_per_engine.len() {
+        phase.steps_per_engine.resize(carried.len(), Vec::new());
+    }
+    for (e, mut steps) in carried.into_iter().enumerate() {
+        if steps.is_empty() {
+            continue;
+        }
+        steps.append(&mut phase.steps_per_engine[e]);
+        phase.steps_per_engine[e] = steps;
+    }
+    phase.name = "spliced_dequant";
+    spliced.name = format!("{}_spliced", consumer.name);
+
+    Some(MergedTrace {
+        name: format!("merged_{}__{}", producer.name, consumer.name),
+        kernels: vec![head, spliced],
+    })
+}
+
+/// Price one adjacent pair exactly: splice, simulate the merged trace, and
+/// decide.  `sequential_ns` is the pair's back-to-back latency under the
+/// served schedules (the caller already has it from pricing the nodes —
+/// `producer_ns + consumer_ns`, one GEMM each).  Returns `None` when the
+/// pair is not spliceable.
+pub fn pair_decision(
+    sim: &Simulator,
+    producer: &KernelTrace,
+    consumer: &KernelTrace,
+    sequential_ns: f64,
+) -> anyhow::Result<Option<PairDecision>> {
+    let Some(merged) = splice(producer, consumer) else {
+        return Ok(None);
+    };
+    let merged_ns = sim.run_merged(&merged)?.total_ns;
+    Ok(Some(PairDecision {
+        sequential_ns,
+        merged_ns,
+        gain_ns: (sequential_ns - merged_ns).max(0.0),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::{ComputeOp, MachineConfig};
+    use crate::kernels::tiling::Tiling;
+    use crate::kernels::{chunked, splitk, GemmProblem, ReduceMode};
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    /// A small resident-partial producer: N=512, K=16384, S=16 (the
+    /// paper's acceptance decode shape; partials + workspace fit L2).
+    fn producer() -> KernelTrace {
+        let p = GemmProblem::new(8, 512, 16384);
+        let t = Tiling {
+            bm: 16,
+            bn: 256,
+            bk: 64,
+            splits: 16,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
+    }
+
+    fn consumer() -> KernelTrace {
+        let p = GemmProblem::new(8, 2048, 8192);
+        let t = Tiling {
+            bm: 16,
+            bn: 128,
+            bk: 128,
+            splits: 2,
+            chunks: 4,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        chunked::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
+    }
+
+    #[test]
+    fn splice_moves_the_tail_and_conserves_work() {
+        let prod = producer();
+        let cons = consumer();
+        let merged = splice(&prod, &cons).expect("pair must be spliceable");
+        assert_eq!(merged.kernels.len(), 2);
+        let (head, spliced) = (&merged.kernels[0], &merged.kernels[1]);
+
+        // The head lost exactly the exposed reduce group.
+        let tail = prod.exposed_reduce_range().unwrap();
+        assert_eq!(head.phases.len(), tail.start);
+        assert_eq!(head.exposed_reduce_range(), None);
+
+        // MACs and reduce steps are conserved across the splice.
+        let macs = head.total_macs() + spliced.total_macs();
+        assert_eq!(macs, prod.total_macs() + cons.total_macs());
+        let reduces = head.reduce_steps() + spliced.reduce_steps();
+        assert_eq!(reduces, prod.reduce_steps() + cons.reduce_steps());
+
+        // The spliced prologue serializes per engine: carried steps first
+        // (reduce ops on CarriedPartial), then the original dequant steps.
+        let phase = &spliced.phases[0];
+        assert_eq!(phase.name, "spliced_dequant");
+        let moved: usize = prod.phases[tail].iter().map(|p| p.total_steps()).sum();
+        assert_eq!(phase.total_steps(), cons.phases[0].total_steps() + moved);
+        for steps in &phase.steps_per_engine {
+            let first_dequant = steps
+                .iter()
+                .position(|s| matches!(s.compute, ComputeOp::Dequant { .. }));
+            if let Some(i) = first_dequant {
+                assert!(
+                    steps[..i]
+                        .iter()
+                        .all(|s| matches!(s.compute, ComputeOp::Reduce { .. })),
+                    "carried reduce steps must precede every dequant step"
+                );
+                assert!(
+                    steps[i..]
+                        .iter()
+                        .all(|s| matches!(s.compute, ComputeOp::Dequant { .. })),
+                    "dequant steps must keep their contiguous order"
+                );
+            }
+        }
+        // Partial reads were re-classed; no spliced step still reads the
+        // producer's partials under this kernel's own residency.
+        assert_eq!(phase.read_bytes(BufferClass::Partial), 0);
+        assert!(phase.read_bytes(BufferClass::CarriedPartial) > 0);
+        // The consumer's chunk tag survived (chunked prologue = chunk 0).
+        assert_eq!(phase.chunk, cons.phases[0].chunk);
+    }
+
+    #[test]
+    fn merged_trace_simulates_and_never_overbooks_engines() {
+        let merged = splice(&producer(), &consumer()).unwrap();
+        let sim = Simulator::new(m());
+        for k in &merged.kernels {
+            assert!(
+                k.phases
+                    .iter()
+                    .all(|p| p.steps_per_engine.len() <= m().total_vector_cores().max(m().ai_cores)),
+                "engine lists must stay within the machine"
+            );
+        }
+        let r = sim.run_merged(&merged).unwrap();
+        assert!(r.total_ns > 0.0 && r.total_ns.is_finite());
+    }
+
+    #[test]
+    fn decision_gain_is_exact_and_clamped() {
+        let sim = Simulator::new(m());
+        let prod = producer();
+        let cons = consumer();
+        let seq = sim.run(&prod).unwrap().total_ns + sim.run(&cons).unwrap().total_ns;
+        let d = pair_decision(&sim, &prod, &cons, seq).unwrap().unwrap();
+        assert!((d.sequential_ns - seq).abs() < 1e-9);
+        assert!(d.gain_ns >= 0.0);
+        assert!((d.gain_ns - (seq - d.merged_ns).max(0.0)).abs() < 1e-9);
+        // This pair's partials are L2-resident, so the merged trace
+        // recovers the tail group plus its barrier: a strict win.
+        assert!(d.merged_applied(), "resident-partial pair must merge: {d:?}");
+    }
+
+    #[test]
+    fn unspliceable_pairs_return_none() {
+        let m = m();
+        // S=1 producer: no reduce at all, nothing exposed.
+        let p = GemmProblem::new(8, 2048, 7168);
+        let t = crate::kernels::tiling::select_data_parallel(&m, &p).unwrap();
+        let dp = crate::kernels::data_parallel::schedule(&m, &p, &t).unwrap();
+        assert!(splice(&dp, &consumer()).is_none());
+        // FP16-native consumer: no dequant prologue.
+        let t = crate::kernels::tiling::select_fp16(&m, &p).unwrap();
+        let fp16 = crate::kernels::fp16_native::schedule(&m, &p, &t).unwrap();
+        assert!(splice(&producer(), &fp16).is_none());
+        let sim = Simulator::new(m);
+        assert!(pair_decision(&sim, &producer(), &fp16, 1.0).unwrap().is_none());
+    }
+
+    #[test]
+    fn internal_expert_pair_splices_with_itself() {
+        // One routed expert's down-projection (the MoE expert-batch
+        // internal pair: instance i's tail hides in instance i+1's
+        // prologue).
+        let p = GemmProblem::new(1, 7168, 2048);
+        let t = Tiling {
+            bm: 16,
+            bn: 32,
+            bk: 128,
+            splits: 4,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        let tr = splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();
+        let sim = Simulator::new(m());
+        let unit = sim.run(&tr).unwrap().total_ns;
+        let d = pair_decision(&sim, &tr, &tr, 2.0 * unit).unwrap().unwrap();
+        assert!(d.merged_ns > 0.0);
+        assert!(d.gain_ns >= 0.0);
+    }
+}

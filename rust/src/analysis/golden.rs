@@ -14,7 +14,7 @@ use crate::util::json::Json;
 use crate::workload::decode_layer::{DecodeStep, StepNode};
 
 /// Every buffer class with its stable fixture label.
-const CLASSES: [(BufferClass, &str); 7] = [
+const CLASSES: [(BufferClass, &str); 8] = [
     (BufferClass::WeightPacked, "weight_packed"),
     (BufferClass::WeightF16, "weight_f16"),
     (BufferClass::Activation, "activation"),
@@ -22,6 +22,7 @@ const CLASSES: [(BufferClass, &str); 7] = [
     (BufferClass::Partial, "partial"),
     (BufferClass::Output, "output"),
     (BufferClass::QuantParam, "quant_param"),
+    (BufferClass::CarriedPartial, "carried_partial"),
 ];
 
 fn bytes_obj(phase: &Phase, write: bool) -> Json {
@@ -78,6 +79,19 @@ pub fn trace_to_json(trace: &KernelTrace) -> Json {
         ),
         ("total_macs", Json::num(trace.total_macs() as f64)),
         ("phases", Json::arr(phases)),
+    ])
+}
+
+/// Serialize a merged multi-kernel trace (the co-scheduler's splice,
+/// DESIGN.md §12) to its golden digest: the merged name plus each spliced
+/// kernel's trace digest, in issue order.
+pub fn merged_to_json(merged: &crate::ascend::MergedTrace) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(merged.name.clone())),
+        (
+            "kernels",
+            Json::arr(merged.kernels.iter().map(trace_to_json).collect()),
+        ),
     ])
 }
 

@@ -19,7 +19,8 @@
 //! [`KernelTrace`]: crate::ascend::KernelTrace
 //! [`vecpass`]: crate::ascend::vecpass
 
-use crate::ascend::{vecpass, MachineConfig, SimReport, Simulator};
+use super::coschedule::{self, PairDecision};
+use crate::ascend::{vecpass, KernelTrace, MachineConfig, SimReport, Simulator};
 use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
 use crate::tune::Tuner;
 use crate::util::json::Json;
@@ -50,21 +51,28 @@ impl Resolution {
 }
 
 /// Whether the step simulator may overlap adjacent GEMM nodes
-/// (DESIGN.md §11): node i's exposed post-barrier reduce runs in the
+/// (DESIGN.md §11–§12): node i's exposed post-barrier reduce runs in the
 /// vector-engine slack of node i+1's weight-only dequant prologue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum OverlapMode {
     /// PR-2's ledger: nodes priced strictly back to back.
     Sequential,
-    /// Every eligible adjacent pair overlaps.  With today's ledger
-    /// (gains clamped non-negative) this is never slower than
-    /// `Sequential` by construction.
+    /// Every eligible adjacent pair overlaps under the first-order ledger
+    /// (`min(exposed_reduce, vector_slack)` per pair).  With the ledger's
+    /// gains clamped non-negative this is never slower than `Sequential`
+    /// by construction.
     Overlapped,
-    /// Price both ledgers, serve `min(sequential, overlapped)`.  Today
-    /// that always equals `Overlapped`; the min makes the never-slower
-    /// guarantee *structural* — a future ledger that prices overlap
-    /// penalties (buffer pressure, merged-phase contention) can return
-    /// negative gains without ever regressing the served plan.
+    /// The phase-level co-scheduler (DESIGN.md §12): node i's reduce tail
+    /// is spliced into node i+1's dequant phase and the merged trace is
+    /// re-simulated, replacing the first-order ledger term with the exact
+    /// simulated gain wherever a merged trace is available.  Each pair's
+    /// merge is declined when it prices slower, so `Exact` is never
+    /// slower than `Sequential` by construction.
+    Exact,
+    /// Price all three, serve `min(sequential, overlapped, exact)` — the
+    /// never-slower guarantee is *structural*: neither a pessimistic
+    /// ledger nor an adversarial merged trace can regress the served
+    /// plan below the sequential chain or PR 3's ledger.
     #[default]
     Auto,
 }
@@ -74,6 +82,7 @@ impl OverlapMode {
         match self {
             OverlapMode::Sequential => "sequential",
             OverlapMode::Overlapped => "overlapped",
+            OverlapMode::Exact => "exact",
             OverlapMode::Auto => "auto",
         }
     }
@@ -81,7 +90,8 @@ impl OverlapMode {
     pub fn from_name(name: &str) -> anyhow::Result<OverlapMode> {
         Ok(match name.to_ascii_lowercase().as_str() {
             "sequential" | "seq" => OverlapMode::Sequential,
-            "overlapped" | "overlap" => OverlapMode::Overlapped,
+            "overlapped" | "overlap" | "ledger" => OverlapMode::Overlapped,
+            "exact" | "coschedule" => OverlapMode::Exact,
             "auto" => OverlapMode::Auto,
             other => anyhow::bail!("unknown overlap mode '{other}'"),
         })
@@ -185,12 +195,13 @@ fn overlap_terms(r: &SimReport) -> (f64, f64) {
 
 /// Simulate one GEMM node: served (auto-reduce) and barrier-reduce
 /// pricing plus the overlap terms, multiplied over the node's count.
+/// Also returns the served trace itself — the co-scheduler splices it.
 fn simulate_gemm_node(
     machine: &MachineConfig,
     sim: &Simulator,
     node: &GemmNode,
     assignment: (Strategy, Tiling, Resolution),
-) -> anyhow::Result<NodeReport> {
+) -> anyhow::Result<(NodeReport, KernelTrace)> {
     let (strategy, tiling, resolution) = assignment;
     let p = &node.problem;
     let served = kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Auto)?;
@@ -208,7 +219,7 @@ fn simulate_gemm_node(
         _ => unit_ns,
     };
     let count = node.count.max(1) as f64;
-    Ok(NodeReport {
+    let report = NodeReport {
         kind: node.kind,
         problem: *p,
         count: node.count.max(1),
@@ -221,7 +232,8 @@ fn simulate_gemm_node(
         barrier_ns: unit_barrier_ns * count,
         reduce_tail_ns,
         dequant_slack_ns,
-    })
+    };
+    Ok((report, served))
 }
 
 /// Simulate one decode layer's GEMM chain.  `resolve` assigns each node
@@ -236,7 +248,8 @@ pub fn simulate_layer(
     let mut nodes = Vec::with_capacity(4);
     for node in layer.gemm_nodes() {
         let assignment = resolve(&node.problem)?;
-        nodes.push(simulate_gemm_node(machine, &sim, &node, assignment)?);
+        let (report, _) = simulate_gemm_node(machine, &sim, &node, assignment)?;
+        nodes.push(report);
     }
     Ok(LayerReport { batch: layer.batch, nodes })
 }
@@ -301,9 +314,12 @@ impl StepNodeReport {
 }
 
 /// One entry of the overlap ledger: `pairs` adjacent (producer reduce,
-/// consumer dequant) overlaps, each hiding `gain_ns` of vector work.
-/// Within an expert batch the producer and consumer are instances of the
-/// same node (`producer == consumer`, `pairs == count - 1`).
+/// consumer dequant) overlaps, each hiding `gain_ns` of vector work under
+/// the first-order ledger — plus, when the pair's schedules are
+/// spliceable, the co-scheduler's exact pricing of the same overlap
+/// (DESIGN.md §12).  Within an expert batch the producer and consumer are
+/// instances of the same node (`producer == consumer`, `pairs == count -
+/// 1`).
 #[derive(Debug, Clone)]
 pub struct OverlapPair {
     /// Index into [`StepReport::nodes`] of the node whose reduce moves.
@@ -316,13 +332,32 @@ pub struct OverlapPair {
     pub reduce_ns: f64,
     /// Vector slack available per pair (the consumer's dequant headroom).
     pub slack_ns: f64,
-    /// min(reduce_ns, slack_ns) — hidden per pair.
+    /// min(reduce_ns, slack_ns) — the first-order ledger's gain per pair.
     pub gain_ns: f64,
+    /// The co-scheduler's exact decision for one pair (merged-trace
+    /// re-simulation), `None` when no merged trace is available.
+    pub exact: Option<PairDecision>,
 }
 
 impl OverlapPair {
     pub fn total_gain_ns(&self) -> f64 {
         self.pairs as f64 * self.gain_ns
+    }
+
+    /// The per-pair gain `OverlapMode::Exact` realizes: the co-schedule
+    /// decision where a merged trace exists, the ledger term otherwise.
+    pub fn exact_gain_ns(&self) -> f64 {
+        self.exact.map(|d| d.gain_ns).unwrap_or(self.gain_ns)
+    }
+
+    pub fn total_exact_gain_ns(&self) -> f64 {
+        self.pairs as f64 * self.exact_gain_ns()
+    }
+
+    /// Exact minus ledger, per pair (positive when the merged trace beats
+    /// the first-order estimate).
+    pub fn exact_vs_ledger_ns(&self) -> f64 {
+        self.exact_gain_ns() - self.gain_ns
     }
 }
 
@@ -340,6 +375,11 @@ pub struct StepReport {
     pub sequential_ns: f64,
     /// `sequential_ns` minus every ledger gain (never larger).
     pub overlapped_ns: f64,
+    /// `sequential_ns` minus every co-scheduled exact gain (DESIGN.md
+    /// §12); equals `overlapped_ns` where no merged trace was available —
+    /// including under `Sequential`/`Overlapped`, which skip the
+    /// merged-trace simulations entirely (they never serve this value).
+    pub exact_ns: f64,
 }
 
 impl StepReport {
@@ -348,7 +388,10 @@ impl StepReport {
         match self.mode {
             OverlapMode::Sequential => self.sequential_ns,
             OverlapMode::Overlapped => self.overlapped_ns,
-            OverlapMode::Auto => self.overlapped_ns.min(self.sequential_ns),
+            OverlapMode::Exact => self.exact_ns,
+            OverlapMode::Auto => {
+                self.exact_ns.min(self.overlapped_ns).min(self.sequential_ns)
+            }
         }
     }
 
@@ -357,9 +400,15 @@ impl StepReport {
         self.served_ns() * layers as f64
     }
 
-    /// Total overlap gain of the ledger.
+    /// Total overlap gain of the first-order ledger.
     pub fn overlap_gain_ns(&self) -> f64 {
         self.ledger.iter().map(|p| p.total_gain_ns()).sum()
+    }
+
+    /// Total gain the co-scheduler realizes (exact terms where merged
+    /// traces exist, ledger terms elsewhere).
+    pub fn exact_gain_ns(&self) -> f64 {
+        self.ledger.iter().map(|p| p.total_exact_gain_ns()).sum()
     }
 
     /// Summed GEMM node time (sequential pricing).
@@ -402,7 +451,21 @@ impl StepReport {
 /// glue between two GEMMs does not break eligibility — the consumer's
 /// dequant touches only its own weights, so it is independent of every
 /// intervening activation op (DESIGN.md §11).
-fn build_ledger(nodes: &[StepNodeReport]) -> Vec<OverlapPair> {
+///
+/// `traces` holds each node's served kernel trace (aligned with `nodes`,
+/// `None` for vector nodes): when `price_exact` is set (the `Exact` and
+/// `Auto` modes — `Sequential`/`Overlapped` never serve the result, so
+/// they skip the extra merged-trace simulations), wherever the
+/// producer's reduce tail and the consumer's dequant prologue are
+/// spliceable, the pair also carries the co-scheduler's exact
+/// merged-trace pricing (DESIGN.md §12).  An entry appears whenever
+/// either pricing finds a positive gain.
+fn build_ledger(
+    sim: &Simulator,
+    nodes: &[StepNodeReport],
+    traces: &[Option<KernelTrace>],
+    price_exact: bool,
+) -> anyhow::Result<Vec<OverlapPair>> {
     let gemms: Vec<(usize, &NodeReport)> = nodes
         .iter()
         .enumerate()
@@ -412,37 +475,41 @@ fn build_ledger(nodes: &[StepNodeReport]) -> Vec<OverlapPair> {
         })
         .collect();
     let mut ledger = Vec::new();
-    for (i, g) in &gemms {
-        if g.count > 1 {
-            let gain = g.reduce_tail_ns.min(g.dequant_slack_ns);
-            if gain > 0.0 {
-                ledger.push(OverlapPair {
-                    producer: *i,
-                    consumer: *i,
-                    pairs: g.count - 1,
-                    reduce_ns: g.reduce_tail_ns,
-                    slack_ns: g.dequant_slack_ns,
-                    gain_ns: gain,
-                });
+    let mut push = |producer: (usize, &NodeReport),
+                    consumer: (usize, &NodeReport),
+                    pairs: usize|
+     -> anyhow::Result<()> {
+        let (pi, p) = producer;
+        let (ci, c) = consumer;
+        let gain = p.reduce_tail_ns.min(c.dequant_slack_ns);
+        let exact = match (&traces[pi], &traces[ci]) {
+            (Some(pt), Some(ct)) if price_exact => {
+                coschedule::pair_decision(sim, pt, ct, p.unit_ns + c.unit_ns)?
             }
-        }
-    }
-    for w in gemms.windows(2) {
-        let (pi, producer) = w[0];
-        let (ci, consumer) = w[1];
-        let gain = producer.reduce_tail_ns.min(consumer.dequant_slack_ns);
-        if gain > 0.0 {
+            _ => None,
+        };
+        if gain > 0.0 || exact.is_some_and(|d| d.gain_ns > 0.0) {
             ledger.push(OverlapPair {
                 producer: pi,
                 consumer: ci,
-                pairs: 1,
-                reduce_ns: producer.reduce_tail_ns,
-                slack_ns: consumer.dequant_slack_ns,
+                pairs,
+                reduce_ns: p.reduce_tail_ns,
+                slack_ns: c.dequant_slack_ns,
                 gain_ns: gain,
+                exact,
             });
         }
+        Ok(())
+    };
+    for &(i, g) in &gemms {
+        if g.count > 1 {
+            push((i, g), (i, g), g.count - 1)?;
+        }
     }
-    ledger
+    for w in gemms.windows(2) {
+        push(w[0], w[1], 1)?;
+    }
+    Ok(ledger)
 }
 
 /// Simulate the full decode-step graph under an overlap mode.
@@ -454,11 +521,14 @@ pub fn simulate_step(
 ) -> anyhow::Result<StepReport> {
     let sim = Simulator::new(machine.clone());
     let mut nodes = Vec::new();
+    let mut traces: Vec<Option<KernelTrace>> = Vec::new();
     for spec in step.nodes() {
         nodes.push(match spec {
             StepNode::Gemm(node) => {
                 let assignment = resolve(&node.problem)?;
-                StepNodeReport::Gemm(simulate_gemm_node(machine, &sim, &node, assignment)?)
+                let (report, trace) = simulate_gemm_node(machine, &sim, &node, assignment)?;
+                traces.push(Some(trace));
+                StepNodeReport::Gemm(report)
             }
             StepNode::Vector(op) => {
                 let c = vecpass::price_pass(
@@ -468,6 +538,7 @@ pub fn simulate_step(
                     op.hbm_bytes,
                     op.l2_bytes,
                 );
+                traces.push(None);
                 StepNodeReport::Vector(VectorNodeReport {
                     op,
                     total_ns: c.total_ns,
@@ -479,8 +550,10 @@ pub fn simulate_step(
         });
     }
     let sequential_ns: f64 = nodes.iter().map(|n| n.total_ns()).sum();
-    let ledger = build_ledger(&nodes);
+    let price_exact = matches!(mode, OverlapMode::Exact | OverlapMode::Auto);
+    let ledger = build_ledger(&sim, &nodes, &traces, price_exact)?;
     let gain: f64 = ledger.iter().map(|p| p.total_gain_ns()).sum();
+    let exact_gain: f64 = ledger.iter().map(|p| p.total_exact_gain_ns()).sum();
     Ok(StepReport {
         batch: step.layer.batch,
         kv_len: step.kv_len,
@@ -489,7 +562,27 @@ pub fn simulate_step(
         ledger,
         sequential_ns,
         overlapped_ns: sequential_ns - gain,
+        exact_ns: sequential_ns - exact_gain,
     })
+}
+
+/// A Split-K resolver that forces a K split where legal — the overlap
+/// sweep harness shared by the tests and the bench stress leg.  The
+/// wide-N heuristics (and the tuner, which mostly prefers the fused
+/// ablation) pick S = 1 on most decode shapes — no reduce, nothing to
+/// overlap — so overlap-focused sweeps force S >= 2 to exercise the
+/// ledger and the co-scheduler non-vacuously.
+pub fn forced_split_resolver(
+    machine: &MachineConfig,
+) -> impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)> + '_ {
+    move |p| {
+        let mut t = kernels::select_tiling(machine, p, Strategy::SplitK)?;
+        let split = Tiling { splits: t.splits.max(2), ..t };
+        if split.validate(machine, p).is_ok() {
+            t = split;
+        }
+        Ok((Strategy::SplitK, t, Resolution::Heuristic))
+    }
 }
 
 /// Simulate the full step with every GEMM node resolved through the tuner.
@@ -577,16 +670,39 @@ pub fn render_step(report: &StepReport, layers: usize) -> String {
     }
     let pairs: usize = report.ledger.iter().map(|p| p.pairs).sum();
     out.push_str(&format!(
-        "\ngemm {} + attention/glue {}  ({} eligible reduce/dequant overlaps hide {})\n",
+        "\ngemm {} + attention/glue {}  ({} eligible reduce/dequant overlaps hide {} \
+         ledger / {} exact)\n",
         stats::fmt_ns(report.gemm_ns()),
         stats::fmt_ns(report.vector_ns()),
         pairs,
         stats::fmt_ns(report.overlap_gain_ns()),
+        stats::fmt_ns(report.exact_gain_ns()),
     ));
+    for p in &report.ledger {
+        let exact = match p.exact {
+            Some(d) => format!(
+                "exact {}/pair (merged {}, {}{} vs ledger)",
+                stats::fmt_ns(d.gain_ns),
+                stats::fmt_ns(d.merged_ns),
+                if p.exact_vs_ledger_ns() >= 0.0 { "+" } else { "" },
+                stats::fmt_ns(p.exact_vs_ledger_ns()),
+            ),
+            None => "no merged trace (ledger term serves)".to_string(),
+        };
+        out.push_str(&format!(
+            "  overlap {}->{} x{}: ledger {}/pair  {}\n",
+            report.nodes[p.producer].name(),
+            report.nodes[p.consumer].name(),
+            p.pairs,
+            stats::fmt_ns(p.gain_ns),
+            exact,
+        ));
+    }
     out.push_str(&format!(
-        "layer: {} sequential vs {} overlapped -> served {}\n",
+        "layer: {} sequential vs {} overlapped vs {} exact -> served {}\n",
         stats::fmt_ns(report.sequential_ns),
         stats::fmt_ns(report.overlapped_ns),
+        stats::fmt_ns(report.exact_ns),
         stats::fmt_ns(report.served_ns()),
     ));
     out.push_str(&format!(
@@ -668,6 +784,15 @@ pub fn step_json(report: &StepReport) -> Json {
                 ("slack_ns", Json::num(p.slack_ns)),
                 ("gain_ns", Json::num(p.gain_ns)),
                 ("total_gain_ns", Json::num(p.total_gain_ns())),
+                (
+                    "exact_merged_ns",
+                    p.exact.map(|d| Json::num(d.merged_ns)).unwrap_or(Json::Null),
+                ),
+                (
+                    "exact_gain_ns",
+                    p.exact.map(|d| Json::num(d.gain_ns)).unwrap_or(Json::Null),
+                ),
+                ("exact_vs_ledger_ns", Json::num(p.exact_vs_ledger_ns())),
             ])
         })
         .collect();
@@ -677,6 +802,7 @@ pub fn step_json(report: &StepReport) -> Json {
         ("overlap_mode", Json::str(report.mode.name())),
         ("sequential_ns", Json::num(report.sequential_ns)),
         ("overlapped_ns", Json::num(report.overlapped_ns)),
+        ("exact_ns", Json::num(report.exact_ns)),
         ("served_ns", Json::num(report.served_ns())),
         ("gemm_ns", Json::num(report.gemm_ns())),
         ("vector_ns", Json::num(report.vector_ns())),
@@ -796,11 +922,61 @@ mod tests {
             simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::SplitK)).unwrap();
         assert_eq!(seq.served_ns(), seq.sequential_ns);
         assert!(auto.served_ns() <= seq.served_ns() * 1.000001);
+        // Auto serves the min of all three plans — structurally never
+        // slower than PR 3's ledger or the exact co-schedule.
+        assert!(auto.served_ns() <= auto.overlapped_ns * 1.000001);
+        assert!(auto.served_ns() <= auto.exact_ns * 1.000001);
+        // Exact itself never loses to the sequential chain: every merge
+        // is declined when it prices slower.
+        assert!(auto.exact_ns <= auto.sequential_ns * 1.000001);
         // Expert batches expose internal overlap pairs.
         assert!(
             auto.ledger.iter().any(|p| p.producer == p.consumer && p.pairs > 1)
                 || auto.ledger.is_empty(),
             "expert fan-out should ledger internal pairs when any gain exists"
         );
+    }
+
+    #[test]
+    fn exact_mode_prices_merged_traces_on_forced_splits() {
+        // Force a K split on every node so each carries an exposed reduce
+        // tail: the co-scheduler must find spliceable pairs, and the
+        // served Exact plan must beat (or tie) the sequential chain.
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let rep =
+            simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m)).unwrap();
+        assert_eq!(rep.served_ns(), rep.exact_ns);
+        assert!(rep.exact_ns <= rep.sequential_ns * 1.000001);
+        let with_merged: Vec<&OverlapPair> =
+            rep.ledger.iter().filter(|p| p.exact.is_some()).collect();
+        assert!(
+            !with_merged.is_empty(),
+            "forced splits must yield at least one spliceable pair: {:?}",
+            rep.ledger
+        );
+        for p in &with_merged {
+            let d = p.exact.unwrap();
+            assert!(d.gain_ns >= 0.0);
+            assert!(d.merged_ns > 0.0 && d.merged_ns.is_finite());
+            assert!(
+                (d.gain_ns - (d.sequential_ns - d.merged_ns).max(0.0)).abs() < 1e-6,
+                "exact gain must be the clamped merged-vs-sequential delta"
+            );
+        }
+        // The accounting balances: exact_ns = sequential - exact gains.
+        assert!(
+            (rep.sequential_ns - rep.exact_gain_ns() - rep.exact_ns).abs() < 1e-6,
+            "exact ledger must price every gain exactly once"
+        );
+        // JSON carries the exact cells.
+        let j = Json::parse(&step_json(&rep).to_string()).unwrap();
+        assert_eq!(j.req_str("overlap_mode").unwrap(), "exact");
+        assert!(j.req("exact_ns").unwrap().as_f64().unwrap() > 0.0);
+        let overlap = j.req("overlap").unwrap().as_arr().unwrap();
+        assert!(overlap
+            .iter()
+            .any(|o| o.req("exact_gain_ns").unwrap().as_f64().is_some()));
     }
 }

@@ -6,6 +6,7 @@
 //! identifies the binding resource, and renders the comparison tables the
 //! benches print (Figures 2 and 3).
 
+pub mod coschedule;
 pub mod golden;
 pub mod layer;
 pub mod report;

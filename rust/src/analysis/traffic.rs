@@ -47,6 +47,7 @@ pub fn class_label(class: BufferClass) -> &'static str {
         BufferClass::Partial => "split-K partials",
         BufferClass::Output => "output C",
         BufferClass::QuantParam => "scales/zeros",
+        BufferClass::CarriedPartial => "carried split-K partials",
     }
 }
 

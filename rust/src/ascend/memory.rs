@@ -31,6 +31,11 @@ pub struct L2Model {
     pub workspace_hit: f64,
     /// Residency of the Split-K partial buffers when re-read (0..1).
     pub partial_hit: f64,
+    /// Residency of an *upstream kernel's* partial buffers read by spliced
+    /// [`BufferClass::CarriedPartial`] steps (0..1).  Standalone runs price
+    /// them cold (0.0 — conservative); `Simulator::run_merged` sets this to
+    /// the producer kernel's `partial_hit` when it crosses the boundary.
+    pub carried_hit: f64,
 }
 
 impl L2Model {
@@ -56,6 +61,7 @@ impl L2Model {
         L2Model {
             workspace_hit: hit(workspace_bytes),
             partial_hit: hit(partial_bytes),
+            carried_hit: 0.0,
         }
     }
 
@@ -87,7 +93,7 @@ impl L2Model {
                 } else {
                     (leftover / trace.partial_bytes as f64).min(1.0)
                 };
-                L2Model { workspace_hit, partial_hit }
+                L2Model { workspace_hit, partial_hit, carried_hit: 0.0 }
             }
         }
     }
@@ -101,6 +107,12 @@ impl L2Model {
             },
             BufferClass::Partial => ServiceSplit {
                 l2_fraction: self.partial_hit,
+                writeback_fraction: 0.0,
+            },
+            // Carried partials: the upstream kernel's residency (0 when no
+            // merged context carried one over).
+            BufferClass::CarriedPartial => ServiceSplit {
+                l2_fraction: self.carried_hit,
                 writeback_fraction: 0.0,
             },
             // Activations are small and typically L2-resident after first
@@ -185,6 +197,18 @@ mod tests {
         let l2 = L2Model::new(&m(), 1 << 20, 0);
         let split = l2.read_split(BufferClass::WeightPacked);
         assert_eq!(split.l2_fraction, 0.0);
+    }
+
+    #[test]
+    fn carried_partials_use_the_carried_residency() {
+        let mut l2 = L2Model::new(&m(), 1 << 20, 1 << 20);
+        // Standalone: carried reads are cold.
+        assert_eq!(l2.read_split(BufferClass::CarriedPartial).l2_fraction, 0.0);
+        // Merged context: the producer's residency crosses the boundary.
+        l2.carried_hit = 0.75;
+        assert_eq!(l2.read_split(BufferClass::CarriedPartial).l2_fraction, 0.75);
+        // This kernel's own partials are unaffected.
+        assert_eq!(l2.read_split(BufferClass::Partial).l2_fraction, l2.partial_hit);
     }
 
     #[test]

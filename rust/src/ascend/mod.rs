@@ -37,6 +37,8 @@ pub mod vecpass;
 pub mod vector;
 
 pub use config::MachineConfig;
-pub use npu::{SimReport, Simulator};
-pub use trace::{BufferClass, ComputeOp, KernelTrace, Phase, TileStep, Unit, WorkspacePolicy};
+pub use npu::{MergedReport, SimReport, Simulator};
+pub use trace::{
+    BufferClass, ComputeOp, KernelTrace, MergedTrace, Phase, TileStep, Unit, WorkspacePolicy,
+};
 pub use vecpass::VecPassCost;

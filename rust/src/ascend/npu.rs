@@ -18,7 +18,7 @@ use super::config::MachineConfig;
 use super::event;
 use super::memory::L2Model;
 use super::mte::{self, PhaseDemand};
-use super::trace::{BufferClass, KernelTrace, Phase, Unit};
+use super::trace::{BufferClass, KernelTrace, MergedTrace, Phase, Unit};
 
 /// Byte ledger for one buffer class.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -129,6 +129,19 @@ impl SimReport {
     }
 }
 
+/// Result of simulating a merged multi-kernel trace: the kernels run back
+/// to back (each pays its own launch and intra-kernel barriers; a spliced
+/// producer has already lost its tail group and the barrier in front of
+/// it), with the producer's partial-buffer residency carried into each
+/// successor's [`BufferClass::CarriedPartial`] reads.
+#[derive(Debug, Clone)]
+pub struct MergedReport {
+    pub name: String,
+    pub total_ns: f64,
+    /// Per-kernel reports, in issue order.
+    pub kernels: Vec<SimReport>,
+}
+
 /// The simulator: a machine description plus the pricing logic.
 #[derive(Debug, Clone, Default)]
 pub struct Simulator {
@@ -188,11 +201,20 @@ impl Simulator {
         Ok(())
     }
 
-    /// Simulate one kernel execution.
+    /// Simulate one kernel execution.  Carried-partial reads (spliced
+    /// steps of a merged trace run standalone) are priced cold.
     pub fn run(&self, trace: &KernelTrace) -> anyhow::Result<SimReport> {
+        self.run_with_carry(trace, 0.0)
+    }
+
+    /// Simulate one kernel with an explicit residency for
+    /// [`BufferClass::CarriedPartial`] reads — the cross-kernel state a
+    /// merged trace carries over the kernel boundary (DESIGN.md §12).
+    pub fn run_with_carry(&self, trace: &KernelTrace, carried_hit: f64) -> anyhow::Result<SimReport> {
         self.validate(trace)?;
         let m = &self.machine;
-        let l2 = L2Model::for_trace(m, trace);
+        let mut l2 = L2Model::for_trace(m, trace);
+        l2.carried_hit = carried_hit.clamp(0.0, 1.0);
 
         // Price every phase.
         let mut demands: Vec<PhaseDemand> = Vec::with_capacity(trace.phases.len());
@@ -309,6 +331,25 @@ impl Simulator {
             total_macs: trace.total_macs(),
             l2_model: l2,
         })
+    }
+
+    /// Simulate a merged multi-kernel trace (the co-scheduler's output):
+    /// kernels are priced back to back, and each kernel after the first
+    /// reads its spliced [`BufferClass::CarriedPartial`] bytes at its
+    /// *predecessor's* partial residency — the cross-kernel event the
+    /// first-order overlap ledger cannot model.
+    pub fn run_merged(&self, merged: &MergedTrace) -> anyhow::Result<MergedReport> {
+        anyhow::ensure!(!merged.kernels.is_empty(), "merged trace has no kernels");
+        let mut kernels = Vec::with_capacity(merged.kernels.len());
+        let mut total = 0.0;
+        let mut carried_hit = 0.0;
+        for trace in &merged.kernels {
+            let r = self.run_with_carry(trace, carried_hit)?;
+            carried_hit = r.l2_model.partial_hit;
+            total += r.total_ns;
+            kernels.push(r);
+        }
+        Ok(MergedReport { name: merged.name.clone(), total_ns: total, kernels })
     }
 }
 
@@ -532,6 +573,49 @@ mod tests {
         let step = TileStep::new(ComputeOp::Dequant { elems: 4 });
         let t = trace_of(vec![simple_phase(Unit::Cube, 1, 1, step)]);
         assert!(Simulator::new(machine()).run(&t).is_err());
+    }
+
+    #[test]
+    fn run_merged_carries_partial_residency_across_kernels() {
+        use crate::ascend::trace::MergedTrace;
+        // 8 engines x 1 MiB: aggregate HBM (1200 B/ns) vs L2 (4000 B/ns)
+        // diverge (a single engine is MTE-capped at 500 either way).
+        let engines = 8u64;
+        let bytes = 1u64 << 20;
+        let total = engines * bytes; // 8 MiB fits L2 -> partial_hit = 1.0
+        let producer = {
+            let write = TileStep::new(ComputeOp::Nop).write(BufferClass::Partial, bytes);
+            let mut t = trace_of(vec![simple_phase(Unit::Cube, engines as usize, 1, write)]);
+            t.partial_bytes = total;
+            t
+        };
+        let carried_read =
+            TileStep::new(ComputeOp::Nop).read(BufferClass::CarriedPartial, bytes);
+        let consumer =
+            trace_of(vec![simple_phase(Unit::Vector, engines as usize, 1, carried_read)]);
+        let sim = Simulator::new(machine());
+
+        // Standalone, the carried read is cold (all HBM).
+        let solo = sim.run(&consumer).unwrap();
+        let cp = solo.ledger.class(BufferClass::CarriedPartial);
+        assert_eq!(cp.hbm_read, total as f64);
+        assert_eq!(cp.l2_read, 0.0);
+
+        // Merged, it inherits the producer's full residency (all L2).
+        let merged = MergedTrace {
+            name: "m".into(),
+            kernels: vec![producer.clone(), consumer.clone()],
+        };
+        let r = sim.run_merged(&merged).unwrap();
+        assert_eq!(r.kernels.len(), 2);
+        let cp = r.kernels[1].ledger.class(BufferClass::CarriedPartial);
+        assert_eq!(cp.hbm_read, 0.0);
+        assert_eq!(cp.l2_read, total as f64);
+        // The merged total is the per-kernel sum (launches included).
+        let want: f64 = r.kernels.iter().map(|k| k.total_ns).sum();
+        assert!((r.total_ns - want).abs() < 1e-9);
+        // And faster than running the consumer cold.
+        assert!(r.kernels[1].total_ns < solo.total_ns);
     }
 
     #[test]

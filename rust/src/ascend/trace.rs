@@ -36,6 +36,13 @@ pub enum BufferClass {
     Output,
     /// Quantization scales / zero points.
     QuantParam,
+    /// Split-K partials of an *upstream* kernel, carried across a kernel
+    /// boundary by the phase-level co-scheduler (DESIGN.md §12): a spliced
+    /// reduce step reads them inside the downstream kernel, so their L2
+    /// residency is the producer kernel's, not this kernel's.  A standalone
+    /// `Simulator::run` prices them cold (conservative);
+    /// `Simulator::run_merged` carries the producer's residency over.
+    CarriedPartial,
 }
 
 /// One compute operation on a tile, with enough shape info to price it.
@@ -139,6 +146,23 @@ pub struct Phase {
 }
 
 impl Phase {
+    /// Stable splice tag: a vector-core reduce phase (barrier `reduce`,
+    /// streamed `reduce_stream`, or the final `reduce_tail` wave).  The
+    /// phase names are part of the schedule contract (golden fixtures pin
+    /// them), so the co-scheduler keys off them rather than positions.
+    pub fn is_reduce(&self) -> bool {
+        self.unit == Unit::Vector && self.name.starts_with("reduce")
+    }
+
+    /// Stable splice tag: a weight-only dequant phase (`dequant`,
+    /// `chunk_dequant`, or an already-spliced `spliced_dequant`).  These
+    /// read only weights + quant params — never upstream activations — so
+    /// an upstream kernel's exposed reduce can legally share their vector
+    /// engines (disjoint buffers).
+    pub fn is_dequant(&self) -> bool {
+        self.unit == Unit::Vector && self.name.contains("dequant")
+    }
+
     pub fn active_engines(&self) -> usize {
         self.steps_per_engine.iter().filter(|s| !s.is_empty()).count()
     }
@@ -211,6 +235,58 @@ impl KernelTrace {
             })
             .sum()
     }
+
+    /// Total reduce steps across all phases (conservation checks for the
+    /// co-scheduler: a splice moves reduce steps, it never drops them).
+    pub fn reduce_steps(&self) -> usize {
+        self.phases
+            .iter()
+            .flat_map(|p| p.steps_per_engine.iter().flatten())
+            .filter(|s| matches!(s.compute, ComputeOp::Reduce { .. }))
+            .count()
+    }
+
+    /// The *exposed* reduce sub-trace: the trailing barrier group, when it
+    /// consists solely of reduce phases.  This is the spliceable producer
+    /// side of the phase-level co-scheduler (DESIGN.md §12) — the vector
+    /// work a downstream kernel's dequant prologue can absorb.  `None`
+    /// when the trace is a single pipelined group (nothing is exposed) or
+    /// the trailing group carries non-reduce work.
+    pub fn exposed_reduce_range(&self) -> Option<std::ops::Range<usize>> {
+        let n = self.phases.len();
+        if n == 0 {
+            return None;
+        }
+        let mut start = n - 1;
+        while start > 0 && self.phases[start].pipelined_with_prev {
+            start -= 1;
+        }
+        if start == 0 {
+            return None;
+        }
+        self.phases[start..].iter().all(|p| p.is_reduce()).then_some(start..n)
+    }
+
+    /// The dequant prologue: the spliceable consumer side — the kernel's
+    /// opening weight-only vector phase.  The prologue must *open* the
+    /// trace (no upstream dependency inside this kernel) for the splice to
+    /// be sound, so anything later does not qualify.
+    pub fn dequant_prologue(&self) -> Option<usize> {
+        self.phases.first()?.is_dequant().then_some(0)
+    }
+}
+
+/// A merged multi-kernel trace, as produced by the phase-level
+/// co-scheduler ([`crate::analysis::coschedule`]): the kernels run back to
+/// back, each keeping its own launch and intra-kernel barriers, and
+/// cross-kernel state (the producer's split buffers read by spliced
+/// [`BufferClass::CarriedPartial`] steps) is carried across the boundary
+/// by [`super::npu::Simulator::run_merged`].
+#[derive(Debug, Clone)]
+pub struct MergedTrace {
+    pub name: String,
+    /// The spliced kernels in issue order.
+    pub kernels: Vec<KernelTrace>,
 }
 
 #[cfg(test)]
@@ -241,6 +317,57 @@ mod tests {
         assert_eq!(phase.total_steps(), 4);
         assert_eq!(phase.read_bytes(BufferClass::Workspace), 256);
         assert_eq!(phase.read_bytes(BufferClass::Activation), 0);
+    }
+
+    #[test]
+    fn splice_tags_and_exposed_reduce_range() {
+        let reduce_step = TileStep::new(ComputeOp::Reduce { elems: 64, terms: 2 });
+        let dequant = Phase {
+            name: "dequant",
+            unit: Unit::Vector,
+            steps_per_engine: vec![vec![TileStep::new(ComputeOp::Dequant { elems: 64 })]],
+            pipelined_with_prev: false,
+            chunk: None,
+        };
+        let mmad = Phase {
+            name: "splitk_mmad",
+            unit: Unit::Cube,
+            steps_per_engine: vec![vec![TileStep::new(ComputeOp::Mmad { m: 16, n: 16, k: 16 })]],
+            pipelined_with_prev: true,
+            chunk: None,
+        };
+        let reduce = Phase {
+            name: "reduce",
+            unit: Unit::Vector,
+            steps_per_engine: vec![vec![reduce_step; 2]],
+            pipelined_with_prev: false,
+            chunk: None,
+        };
+        assert!(dequant.is_dequant() && !dequant.is_reduce());
+        assert!(reduce.is_reduce() && !reduce.is_dequant());
+        assert!(!mmad.is_reduce() && !mmad.is_dequant());
+
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![dequant.clone(), mmad.clone(), reduce],
+            workspace_bytes: 0,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        };
+        assert_eq!(t.exposed_reduce_range(), Some(2..3));
+        assert_eq!(t.dequant_prologue(), Some(0));
+        assert_eq!(t.reduce_steps(), 2);
+
+        // Single pipelined group: nothing exposed.
+        let single = KernelTrace {
+            name: "s".into(),
+            phases: vec![dequant, mmad],
+            workspace_bytes: 0,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        };
+        assert_eq!(single.exposed_reduce_range(), None);
+        assert_eq!(single.reduce_steps(), 0);
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Bench-trajectory comparator: diffs a machine-readable `BENCH_*.json`
+//! document against a committed baseline and gates on regressions.
+//!
+//! The simulator is deterministic (pure f64 arithmetic, no wall-clock
+//! anywhere in the JSON the benches emit), so a tight relative threshold
+//! is safe: any simulated-cycle cell that grows by more than the
+//! threshold is a real behavioral regression, not noise.
+//!
+//! What gates: numeric leaves whose key ends in `_ns` or `_us` — the
+//! simulated-latency cells — where *lower is better*.  Keys that name
+//! gains, slack, deltas or overlap internals (`gain`, `slack`, `vs_`,
+//! `reduce`, `merged`) are direction-ambiguous and never gated.  Cells present
+//! in the baseline but missing from the current run fail the gate (a
+//! silently dropped cell is how a trajectory gate rots); new cells are
+//! allowed (benches grow columns across PRs).
+//!
+//! Baselines bootstrap: a committed baseline with `"bootstrap": true`
+//! (and no cells) records intent without numbers — the comparator reports
+//! but passes, and `repro bench-diff --bless` writes the current run over
+//! the baseline so the next PR enforces it.
+
+use crate::util::json::Json;
+
+/// Default regression threshold: 2% (the sim is deterministic).
+pub const DEFAULT_THRESHOLD: f64 = 0.02;
+
+/// One compared time cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellDiff {
+    /// JSON path of the cell, e.g. `cells[3].step_us`.
+    pub path: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl CellDiff {
+    /// current / baseline (lower is better; >1 is slower).
+    pub fn ratio(&self) -> f64 {
+        if self.baseline.abs() < 1e-12 {
+            if self.current.abs() < 1e-12 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.current / self.baseline
+        }
+    }
+}
+
+/// Outcome of one baseline-vs-current comparison.
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub threshold: f64,
+    /// Baseline had `"bootstrap": true` — report-only, never gate.
+    pub bootstrap: bool,
+    /// Gated time cells compared.
+    pub checked: usize,
+    /// Cells slower than `baseline * (1 + threshold)`.
+    pub regressions: Vec<CellDiff>,
+    /// Cells faster than `baseline * (1 - threshold)` (informational).
+    pub improvements: Vec<CellDiff>,
+    /// Baseline cells absent (or non-numeric) in the current run.
+    pub missing: Vec<String>,
+}
+
+impl DiffReport {
+    /// Whether the CI gate passes.
+    pub fn gate_passes(&self) -> bool {
+        self.bootstrap || (self.regressions.is_empty() && self.missing.is_empty())
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.bootstrap {
+            out.push_str(
+                "baseline is a bootstrap placeholder — report only, gate passes; \
+                 run `repro bench-diff --bless` and commit the baseline to arm the gate\n",
+            );
+        }
+        out.push_str(&format!(
+            "checked {} time cells at {:.1}% threshold: {} regressions, {} improvements, \
+             {} missing\n",
+            self.checked,
+            self.threshold * 100.0,
+            self.regressions.len(),
+            self.improvements.len(),
+            self.missing.len(),
+        ));
+        for c in &self.regressions {
+            out.push_str(&format!(
+                "  REGRESSION {}: {:.3} -> {:.3} ({:+.2}%)\n",
+                c.path,
+                c.baseline,
+                c.current,
+                (c.ratio() - 1.0) * 100.0,
+            ));
+        }
+        for path in &self.missing {
+            out.push_str(&format!("  MISSING {path}: baseline cell absent from current run\n"));
+        }
+        for c in &self.improvements {
+            out.push_str(&format!(
+                "  improvement {}: {:.3} -> {:.3} ({:+.2}%)\n",
+                c.path,
+                c.baseline,
+                c.current,
+                (c.ratio() - 1.0) * 100.0,
+            ));
+        }
+        out.push_str(if self.gate_passes() { "gate: PASS\n" } else { "gate: FAIL\n" });
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cell = |c: &CellDiff| {
+            Json::obj(vec![
+                ("path", Json::str(c.path.clone())),
+                ("baseline", Json::num(c.baseline)),
+                ("current", Json::num(c.current)),
+                ("ratio", Json::num(c.ratio())),
+            ])
+        };
+        Json::obj(vec![
+            ("threshold", Json::num(self.threshold)),
+            ("bootstrap", Json::Bool(self.bootstrap)),
+            ("checked", Json::num(self.checked as f64)),
+            ("gate_passes", Json::Bool(self.gate_passes())),
+            ("regressions", Json::arr(self.regressions.iter().map(cell).collect())),
+            ("improvements", Json::arr(self.improvements.iter().map(cell).collect())),
+            (
+                "missing",
+                Json::arr(self.missing.iter().map(|p| Json::str(p.clone())).collect()),
+            ),
+        ])
+    }
+}
+
+/// Whether a key names a gated simulated-latency cell (lower is better).
+/// Direction-ambiguous cells are excluded: gains/slack/deltas grow when
+/// the overlap improves, exposed-reduce cells (`reduce_ns`,
+/// `reduce_tail_ns`) can legitimately grow when the tail is then hidden,
+/// `exact_merged_ns` is Null whenever a pair stops being spliceable (a
+/// schema change, not a regression), and `barrier_ns`/`layer_barrier_us`
+/// price a *counterfactual* schedule that a better tuner pick may
+/// legitimately worsen while the served plan improves.
+pub fn is_gated_time_cell(key: &str) -> bool {
+    let timed = key.ends_with("_ns") || key.ends_with("_us");
+    let ambiguous = key.contains("gain")
+        || key.contains("slack")
+        || key.contains("vs_")
+        || key.contains("reduce")
+        || key.contains("merged")
+        || key.contains("barrier");
+    timed && !ambiguous
+}
+
+/// Compare `current` against `baseline` at a relative `threshold`.
+pub fn diff(baseline: &Json, current: &Json, threshold: f64) -> DiffReport {
+    let mut report = DiffReport {
+        threshold,
+        bootstrap: baseline
+            .get("bootstrap")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+        ..DiffReport::default()
+    };
+    walk("", baseline, current, &mut report);
+    report
+}
+
+fn walk(path: &str, baseline: &Json, current: &Json, report: &mut DiffReport) {
+    match baseline {
+        Json::Obj(map) => {
+            for (key, base_val) in map {
+                let child = if path.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{path}.{key}")
+                };
+                let cur_val = current.get(key);
+                if is_gated_time_cell(key) {
+                    if let Some(base) = base_val.as_f64() {
+                        match cur_val.and_then(Json::as_f64) {
+                            Some(cur) => compare(child, base, cur, report),
+                            None => report.missing.push(child),
+                        }
+                        continue;
+                    }
+                }
+                match cur_val {
+                    Some(cur) => walk(&child, base_val, cur, report),
+                    None => {
+                        if subtree_has_time_cells(base_val) {
+                            report.missing.push(child);
+                        }
+                    }
+                }
+            }
+        }
+        Json::Arr(items) => {
+            let empty = Vec::new();
+            let cur_items = current.as_arr().unwrap_or(&empty);
+            // Bench cell arrays carry (model, batch) identities: match by
+            // identity so inserting or reordering sweep entries shifts
+            // nothing.  Arrays without identities (node lists, overlap
+            // entries) align by index — there, order IS the schema.
+            let by_identity = !items.is_empty() && items.iter().all(|v| cell_identity(v).is_some());
+            if by_identity {
+                let mut used = vec![false; cur_items.len()];
+                for base_val in items {
+                    let id = cell_identity(base_val).unwrap();
+                    let child = format!("{path}[{id}]");
+                    let found = cur_items.iter().enumerate().find(|(i, v)| {
+                        !used[*i] && cell_identity(v).as_deref() == Some(id.as_str())
+                    });
+                    match found {
+                        Some((i, cur)) => {
+                            used[i] = true;
+                            walk(&child, base_val, cur, report);
+                        }
+                        None => {
+                            if subtree_has_time_cells(base_val) {
+                                report.missing.push(child);
+                            }
+                        }
+                    }
+                }
+            } else {
+                for (i, base_val) in items.iter().enumerate() {
+                    let child = format!("{path}[{i}]");
+                    match cur_items.get(i) {
+                        Some(cur) => walk(&child, base_val, cur, report),
+                        None => {
+                            if subtree_has_time_cells(base_val) {
+                                report.missing.push(child);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// A bench cell's identity, when it has one: `model` plus the optional
+/// `batch` (the e2e_layer / ablation sweeps key their cells this way).
+fn cell_identity(v: &Json) -> Option<String> {
+    let model = v.get("model")?.as_str()?;
+    match v.get("batch").and_then(Json::as_f64) {
+        Some(b) => Some(format!("{model} b{b}")),
+        None => Some(model.to_string()),
+    }
+}
+
+fn subtree_has_time_cells(v: &Json) -> bool {
+    match v {
+        Json::Obj(map) => map
+            .iter()
+            .any(|(k, v)| (is_gated_time_cell(k) && v.as_f64().is_some()) || subtree_has_time_cells(v)),
+        Json::Arr(items) => items.iter().any(subtree_has_time_cells),
+        _ => false,
+    }
+}
+
+fn compare(path: String, baseline: f64, current: f64, report: &mut DiffReport) {
+    report.checked += 1;
+    let cell = CellDiff { path, baseline, current };
+    // An exact-zero baseline cell compares by absolute epsilon (e.g. a
+    // vector node with zero HBM traffic must stay zero).
+    if baseline.abs() < 1e-12 {
+        if current.abs() > 1e-9 {
+            report.regressions.push(cell);
+        }
+        return;
+    }
+    if current > baseline * (1.0 + report.threshold) {
+        report.regressions.push(cell);
+    } else if current < baseline * (1.0 - report.threshold) {
+        report.improvements.push(cell);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(step_us: f64, extra: Option<(&str, f64)>) -> Json {
+        let mut cell = vec![
+            ("model", Json::str("glm45")),
+            ("step_us", Json::num(step_us)),
+            ("overlap_speedup", Json::num(1.05)),
+            ("overlap_gain_us", Json::num(3.0)),
+        ];
+        if let Some((k, v)) = extra {
+            cell.push((k, Json::num(v)));
+        }
+        Json::obj(vec![
+            ("bench", Json::str("e2e_layer")),
+            ("cells", Json::arr(vec![Json::obj(cell)])),
+        ])
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let r = diff(&doc(100.0, None), &doc(100.0, None), DEFAULT_THRESHOLD);
+        assert!(r.gate_passes());
+        assert_eq!(r.checked, 1, "only the time cell is gated");
+        assert!(r.regressions.is_empty() && r.improvements.is_empty() && r.missing.is_empty());
+    }
+
+    #[test]
+    fn injected_regression_fails_the_gate() {
+        // The acceptance demo: a >2% simulated-cycle regression trips it.
+        let r = diff(&doc(100.0, None), &doc(103.0, None), DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].path, "cells[0].step_us");
+        assert!((r.regressions[0].ratio() - 1.03).abs() < 1e-9);
+        assert!(r.render().contains("REGRESSION"));
+        // Within threshold passes.
+        assert!(diff(&doc(100.0, None), &doc(101.9, None), DEFAULT_THRESHOLD).gate_passes());
+    }
+
+    #[test]
+    fn improvements_pass_and_are_reported() {
+        let r = diff(&doc(100.0, None), &doc(80.0, None), DEFAULT_THRESHOLD);
+        assert!(r.gate_passes());
+        assert_eq!(r.improvements.len(), 1);
+    }
+
+    #[test]
+    fn gain_slack_and_speedup_cells_never_gate() {
+        // overlap_gain_us grows 10x and overlap_speedup moves: both fine.
+        let base = doc(100.0, Some(("dequant_slack_ns", 5.0)));
+        let mut cur = doc(100.0, Some(("dequant_slack_ns", 50.0)));
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.insert("overlap_gain_us".into(), Json::num(30.0));
+                }
+            }
+        }
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1);
+    }
+
+    #[test]
+    fn direction_ambiguous_reduce_and_merged_cells_never_gate() {
+        // A grown exposed-reduce tail and a pair that stopped being
+        // spliceable (exact_merged_ns number -> Null) are schema/ledger
+        // movements, not latency regressions.
+        let base = doc(100.0, Some(("reduce_ns", 10.0)));
+        let cur = doc(100.0, Some(("reduce_ns", 100.0)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1);
+        let base = doc(100.0, Some(("exact_merged_ns", 40.0)));
+        let cur = doc(100.0, None); // the key is simply gone / Null now
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+    }
+
+    #[test]
+    fn missing_baseline_cells_fail_new_cells_pass() {
+        // Baseline carries a cell the current run dropped.
+        let base = doc(100.0, Some(("layer_us", 40.0)));
+        let cur = doc(100.0, None);
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.missing, vec!["cells[0].layer_us"]);
+        // The other direction (current grew a column) passes.
+        let r = diff(&cur, &base, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes());
+    }
+
+    #[test]
+    fn cells_match_by_model_and_batch_not_index() {
+        // The current run inserted a new model BEFORE the baseline's cell:
+        // identity matching still pairs glm45-with-glm45.
+        let base = doc(100.0, None);
+        let newcomer = Json::obj(vec![
+            ("model", Json::str("new-model")),
+            ("step_us", Json::num(999.0)),
+        ]);
+        let mut cur = doc(100.0, None);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(cells)) = m.get_mut("cells") {
+                cells.insert(0, newcomer);
+            }
+        }
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1);
+        // A baseline cell whose identity disappears entirely is missing.
+        let gone = Json::obj(vec![
+            ("bench", Json::str("e2e_layer")),
+            ("cells", Json::arr(vec![Json::obj(vec![
+                ("model", Json::str("other")),
+                ("step_us", Json::num(5.0)),
+            ])])),
+        ]);
+        let r = diff(&base, &gone, DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.missing.len(), 1);
+    }
+
+    #[test]
+    fn bootstrap_baseline_reports_but_passes() {
+        let base = Json::obj(vec![
+            ("bench", Json::str("e2e_layer")),
+            ("bootstrap", Json::Bool(true)),
+            ("cells", Json::arr(vec![])),
+        ]);
+        let r = diff(&base, &doc(100.0, None), DEFAULT_THRESHOLD);
+        assert!(r.gate_passes());
+        assert!(r.bootstrap);
+        assert!(r.render().contains("bootstrap"));
+    }
+
+    #[test]
+    fn zero_baseline_cells_must_stay_zero() {
+        let base = doc(0.0, None);
+        assert!(diff(&base, &doc(0.0, None), DEFAULT_THRESHOLD).gate_passes());
+        assert!(!diff(&base, &doc(1.0, None), DEFAULT_THRESHOLD).gate_passes());
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let r = diff(&doc(100.0, None), &doc(110.0, None), DEFAULT_THRESHOLD);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.req("gate_passes").unwrap().as_bool(), Some(false));
+        assert_eq!(j.req("regressions").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -4,6 +4,8 @@
 //! warmup + timed iterations, robust summary statistics, aligned output
 //! rows, and optional JSON dumps for EXPERIMENTS.md.
 
+pub mod diff;
+
 use std::time::Instant;
 
 use crate::util::stats::{self, Summary};

@@ -46,6 +46,13 @@ pub struct PlanNode {
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerPlan {
     pub nodes: Vec<PlanNode>,
+    /// Total exact co-schedule gain of the layer's adjacent
+    /// (reduce -> dequant) pairs — expert batches contribute `count - 1`
+    /// internal pairs — resolved *cache-only* through the tune cache's
+    /// pair decisions (DESIGN.md §12).  `None` when any pair is missing
+    /// from the cache (the plan still serves; it just carries no overlap
+    /// prediction).
+    pub overlap_gain_ns: Option<f64>,
 }
 
 impl LayerPlan {
@@ -71,6 +78,12 @@ impl LayerPlan {
             .iter()
             .map(|n| n.plan.map(|p| p.predicted_ns * n.count as f64))
             .sum::<Option<f64>>()
+    }
+
+    /// Predicted layer GEMM time with the co-scheduled overlap applied
+    /// (only when both the node plans and every pair decision resolved).
+    pub fn predicted_overlapped_ns(&self) -> Option<f64> {
+        Some((self.predicted_layer_ns()? - self.overlap_gain_ns?).max(0.0))
     }
 
     /// The group's headline plan: the paper's bottleneck down-projection,
@@ -164,10 +177,10 @@ impl<'rt> Router<'rt> {
             .ok()
             .and_then(|e| e.config)?;
         let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        let gemm_nodes = layer.gemm_nodes();
         let mut tuner = self.tuner.as_mut();
-        let nodes = layer
-            .gemm_nodes()
-            .into_iter()
+        let nodes = gemm_nodes
+            .iter()
             .map(|node| {
                 // Cache-only: the serving hot path never pays a search.
                 // With no cache file the node list still describes the
@@ -181,7 +194,17 @@ impl<'rt> Router<'rt> {
                 PlanNode { kind: node.kind, count: node.count, plan }
             })
             .collect();
-        Some(LayerPlan { nodes })
+        // Co-schedule decisions for the layer's adjacent pairs, also
+        // cache-only (`repro tune` seeds the same `overlap_pairs` set,
+        // so a warmed cache always hits here).
+        let overlap_gain_ns = tuner.and_then(|t| {
+            let mut total = 0.0;
+            for pair in layer.overlap_pairs() {
+                total += pair.pairs as f64 * t.lookup_overlap(&pair.producer, &pair.consumer)?;
+            }
+            Some(total)
+        });
+        Some(LayerPlan { nodes, overlap_gain_ns })
     }
 
     /// Whether a tune cache was found next to the artifacts.

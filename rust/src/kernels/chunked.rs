@@ -323,6 +323,36 @@ mod tests {
     }
 
     #[test]
+    fn chunked_schedules_expose_spliceable_sub_traces() {
+        // Co-scheduler contract (DESIGN.md §12): the chunk-0 dequant is
+        // the prologue (weight-only, opens the trace), and whatever
+        // reduce stays behind the barrier is the exposed tail — the
+        // streamed reduce joins the chunk group and is NOT exposed.
+        let machine = m();
+        let p = GemmProblem::new(8, 12288, 5120);
+        let t = Tiling {
+            bm: 16,
+            bn: 64,
+            bk: 128,
+            splits: 2,
+            chunks: 4,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&machine, &p).unwrap();
+        let tr = schedule_reduce(&machine, &p, &t, ReduceMode::Pipelined).unwrap();
+        assert_eq!(tr.dequant_prologue(), Some(0));
+        assert_eq!(tr.phases[0].name, "chunk_dequant");
+        assert_eq!(tr.phases[0].chunk, Some(0));
+        let tail = tr.exposed_reduce_range().expect("tail wave stays exposed");
+        assert!(tr.phases[tail.start..].iter().all(|ph| ph.name == "reduce_tail"));
+        assert!(
+            tr.phases[..tail.start].iter().any(|ph| ph.name == "reduce_stream"),
+            "the streamed reduce belongs to the chunk group, not the exposed tail"
+        );
+    }
+
+    #[test]
     fn simulates_clean_across_batches() {
         for batch in [1, 8, 64] {
             let (_, _, tr) = build(batch, 5120, 12288);

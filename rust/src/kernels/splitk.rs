@@ -408,6 +408,32 @@ mod tests {
     }
 
     #[test]
+    fn schedules_expose_spliceable_sub_traces() {
+        // The co-scheduler contract (DESIGN.md §12): every Split-K trace
+        // with a reduce exposes its tail as the trailing barrier group,
+        // and every trace opens with a weight-only dequant prologue.
+        let (p, t) = streaming_tiling();
+        let pip = schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();
+        let tail = pip.exposed_reduce_range().expect("streamed reduce exposes its tail wave");
+        assert_eq!(tail.len(), 1);
+        assert_eq!(pip.phases[tail.start].name, "reduce_tail");
+        assert_eq!(pip.dequant_prologue(), Some(0));
+        assert!(pip.phases[0].is_dequant());
+        let bar = schedule_reduce(&m(), &p, &t, ReduceMode::Barrier).unwrap();
+        let tail = bar.exposed_reduce_range().expect("barrier reduce is fully exposed");
+        assert_eq!(bar.phases[tail.start].name, "reduce");
+        // S = 1: no reduce anywhere, nothing exposed — and the reduce
+        // step count helper agrees.
+        let p1 = GemmProblem::new(8, 4096, 2048);
+        let t1 = Tiling { splits: 1, ..tiling::select_splitk(&m(), &p1).unwrap() };
+        t1.validate(&m(), &p1).unwrap();
+        let tr = schedule(&m(), &p1, &t1).unwrap();
+        assert_eq!(tr.exposed_reduce_range(), None);
+        assert_eq!(tr.reduce_steps(), 0);
+        assert!(bar.reduce_steps() > 0);
+    }
+
+    #[test]
     fn occupancy_raised_when_k_dominant() {
         // N=512 gives only ~2 data-parallel strips; the split factor must
         // raise cube occupancy until the MTEs saturate the L2 stream

@@ -48,6 +48,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("layer") => cmd_layer(args),
         Some("tune") => cmd_tune(args),
+        Some("bench-diff") => cmd_bench_diff(args),
         Some("fig2") => cmd_fig2(args),
         Some("fig3") => cmd_fig3(args),
         Some("analyze") => cmd_analyze(args),
@@ -77,20 +78,33 @@ USAGE: repro <subcommand> [options]
   layer [--model llama32|glm45|deepseek|openpangu|deepseek-moe
          | --hidden H --ffn F [--kv W] [--group G]]
         [--batch M] [--layers L] [--kv-len T] [--heads H]
-        [--moe-experts E] [--moe-topk K] [--overlap sequential|overlapped|auto]
+        [--moe-experts E] [--moe-topk K]
+        [--overlap sequential|overlapped|exact|auto]
         [--strategy auto|...] [--tune-cache PATH] [--json PATH]
                                    simulate one FULL decode step: attention
                                    score/softmax/AV + RMSNorm/residual/glue on
                                    the vector cores, the projection GEMMs (or
                                    the routed MoE expert fan-out), each GEMM
                                    resolved through the tune cache with 'auto',
-                                   and the cross-node reduce/dequant overlap
-                                   ledger ('auto' never slower than sequential)
+                                   and the cross-node reduce/dequant overlap —
+                                   'overlapped' prices the first-order ledger,
+                                   'exact' re-simulates the co-scheduled merged
+                                   traces (DESIGN.md §12), 'auto' serves
+                                   min(sequential, overlapped, exact)
   tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]]
                                    autotune strategies x tilings (the paper
                                    sweep, plus DIR's decode-model shapes)
                                    and persist the winners to PATH
-                                   (default tune_cache.json)
+                                   (default tune_cache.json); also seeds the
+                                   co-schedule pair decisions so the router
+                                   resolves cross-node overlap cache-only
+  bench-diff --baseline B.json --current C.json [--threshold 0.02]
+             [--out REPORT.json] [--bless]
+                                   gate a BENCH_*.json run against its
+                                   committed baseline: any simulated-cycle
+                                   cell slower by more than the threshold
+                                   fails (exit 1); --bless overwrites the
+                                   baseline with the current run
   fig2 [--json PATH]               Figure 2: Split-K vs Data-Parallel sweep
   fig3 [--json PATH]               Figure 3: W4A16 vs native FP16 sweep
   analyze [--n N --k K --batch M]  §4.2 memory-bottleneck decomposition
@@ -258,49 +272,51 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let sim = Simulator::new(m.clone());
 
     // One explicit shape, or the full paper sweep; with --artifacts, also
-    // every decode model's bottleneck GEMM per compiled batch size so the
-    // serving router's cache-only lookups actually hit.
+    // every decode model's layer graph per compiled batch size so the
+    // serving router's cache-only lookups actually hit.  The layer list
+    // is built ONCE and drives both the per-shape tuning below and the
+    // co-schedule pair seeding after it — the shape cache and the pair
+    // cache can never enumerate different graphs.
+    let mut layers: Vec<DecodeLayer> = Vec::new();
     let problems: Vec<GemmProblem> = match (args.get("n"), args.get("k")) {
         (Some(_), _) | (_, Some(_)) => {
+            // Single-shape run: no layer graph, so no pairs to seed.
             let n = args.get_usize("n", 2048)?;
             let k = args.get_usize("k", 7168)?;
             let batch = args.get_usize("batch", 8)?;
             vec![GemmProblem::new(batch, n, k)]
         }
         _ => {
-            let mut problems: Vec<GemmProblem> = workload::paper_sweep()
-                .iter()
-                .map(|(shape, batch)| workload::problem_for(shape, *batch))
-                .collect();
             // Every paper model's full decode-layer GEMM graph (qkv,
-            // attn_out, up_gate, down) per batch size, so `repro layer
-            // --strategy auto` is a pure cache hit afterwards.
+            // attn_out, up_gate, down — or the routed expert pair) per
+            // batch size, so `repro layer --strategy auto` is a pure
+            // cache hit afterwards.
             for (_, geom) in llm::paper_layer_geometries() {
                 for &batch in &llm::PAPER_BATCH_SIZES {
-                    for node in DecodeLayer::new(geom, batch).gemm_nodes() {
-                        problems.push(node.problem);
-                    }
+                    layers.push(DecodeLayer::new(geom, batch));
                 }
             }
-            // MoE decoding: seed the routed expert GEMM pair of every MoE
-            // model too, so expert nodes also resolve cache-only.
             for (_, geom, moe) in llm::paper_moe_geometries() {
                 for &batch in &llm::PAPER_BATCH_SIZES {
-                    for node in DecodeLayer::new(geom, batch).with_moe(moe).gemm_nodes() {
-                        problems.push(node.problem);
-                    }
+                    layers.push(DecodeLayer::new(geom, batch).with_moe(moe));
                 }
             }
             if let Some(dir) = args.get("artifacts") {
                 let mf = Manifest::load(dir)?;
                 for entry in mf.artifacts.iter().filter(|a| a.kind == "decode") {
-                    let (Some(cfg), Some(batch)) = (entry.config, entry.batch) else {
-                        continue;
-                    };
-                    for node in DecodeLayer::from_decode_config(&cfg, batch).gemm_nodes() {
-                        if node.problem.validate().is_ok() {
-                            problems.push(node.problem);
-                        }
+                    if let (Some(cfg), Some(batch)) = (entry.config, entry.batch) {
+                        layers.push(DecodeLayer::from_decode_config(&cfg, batch));
+                    }
+                }
+            }
+            let mut problems: Vec<GemmProblem> = workload::paper_sweep()
+                .iter()
+                .map(|(shape, batch)| workload::problem_for(shape, *batch))
+                .collect();
+            for decode_layer in &layers {
+                for node in decode_layer.gemm_nodes() {
+                    if node.problem.validate().is_ok() {
+                        problems.push(node.problem);
                     }
                 }
             }
@@ -331,6 +347,16 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             speedup,
         );
     }
+    // Seed the co-schedule pair decisions for every enumerated layer
+    // graph (paper presets, MoE presets, artifact configs — the same
+    // `layers` the shape tuning above came from), so `Router::layer_plan`
+    // and `repro layer --overlap exact/auto` resolve the cross-node
+    // overlap cache-only (DESIGN.md §12).
+    for decode_layer in &layers {
+        for pair in decode_layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer)?;
+        }
+    }
     tuner.save()?;
     println!(
         "\ntuned {} shapes ({} searched, {} cache hits) -> {out}",
@@ -339,10 +365,59 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         tuner.hits
     );
     println!(
+        "co-schedule pairs: {} cached ({} simulated, {} hits)",
+        tuner.cache.overlap_len(),
+        tuner.overlap_searches,
+        tuner.overlap_hits
+    );
+    println!(
         "geomean speedup over heuristic splitk: {:.2}x",
         stats::geomean(&speedups)
     );
     println!("serving picks these up automatically (tune_cache.json next to the artifacts).");
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> anyhow::Result<()> {
+    use ascend_w4a16::bench::diff;
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow::anyhow!("--baseline BENCH.json is required"))?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| anyhow::anyhow!("--current BENCH.json is required"))?;
+    let threshold = args.get_f64("threshold", diff::DEFAULT_THRESHOLD)?;
+    anyhow::ensure!(threshold > 0.0, "--threshold must be positive");
+
+    let current_text = std::fs::read_to_string(current_path)
+        .map_err(|e| anyhow::anyhow!("reading {current_path}: {e}"))?;
+    // Parse before anything else: a truncated bench output must neither
+    // gate nor (worse) be blessed over a good baseline.
+    let current = ascend_w4a16::util::json::Json::parse(&current_text)
+        .map_err(|e| anyhow::anyhow!("parsing {current_path}: {e}"))?;
+    if args.flag("bless") {
+        if let Some(parent) = std::path::Path::new(baseline_path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(baseline_path, &current_text)?;
+        println!("blessed {current_path} -> {baseline_path}");
+        return Ok(());
+    }
+    let baseline_text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| anyhow::anyhow!("reading {baseline_path}: {e}"))?;
+    let baseline = ascend_w4a16::util::json::Json::parse(&baseline_text)
+        .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+
+    let report = diff::diff(&baseline, &current, threshold);
+    print!("{}", report.render());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string())?;
+        println!("wrote {out}");
+    }
+    anyhow::ensure!(
+        report.gate_passes(),
+        "bench trajectory regressed vs {baseline_path} (see report above)"
+    );
     Ok(())
 }
 

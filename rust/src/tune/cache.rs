@@ -57,10 +57,27 @@ pub fn shape_key(machine: &MachineConfig, p: &GemmProblem) -> String {
     )
 }
 
-/// The cache proper.
+/// Cache key for one adjacent (producer reduce -> consumer dequant) pair:
+/// the co-scheduler's exact gain is a function of both tuned schedules,
+/// which the shape keys determine on a given machine (DESIGN.md §12).
+pub fn pair_key(machine: &MachineConfig, producer: &GemmProblem, consumer: &GemmProblem) -> String {
+    format!(
+        "{}->m{}_n{}_k{}_g{}",
+        shape_key(machine, producer),
+        consumer.m_padded(machine),
+        consumer.n,
+        consumer.k,
+        consumer.group
+    )
+}
+
+/// The cache proper: per-shape schedule winners plus per-adjacent-pair
+/// co-schedule decisions (the exact overlap gain in ns per pair; 0.0 means
+/// the co-scheduler declined to merge that pair).
 #[derive(Debug, Clone, Default)]
 pub struct TuneCache {
     entries: BTreeMap<String, TunedEntry>,
+    overlaps: BTreeMap<String, f64>,
 }
 
 impl TuneCache {
@@ -88,6 +105,20 @@ impl TuneCache {
         self.entries.iter()
     }
 
+    // ----- co-schedule pair decisions --------------------------------------
+
+    pub fn overlap_get(&self, key: &str) -> Option<f64> {
+        self.overlaps.get(key).copied()
+    }
+
+    pub fn overlap_insert(&mut self, key: String, gain_ns: f64) {
+        self.overlaps.insert(key, gain_ns);
+    }
+
+    pub fn overlap_len(&self) -> usize {
+        self.overlaps.len()
+    }
+
     // ----- persistence ------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -96,9 +127,15 @@ impl TuneCache {
             .iter()
             .map(|(k, e)| (k.clone(), entry_to_json(e)))
             .collect();
+        let overlaps = self
+            .overlaps
+            .iter()
+            .map(|(k, &gain)| (k.clone(), Json::num(gain)))
+            .collect();
         Json::obj(vec![
             ("version", Json::num(1.0)),
             ("entries", Json::Obj(entries)),
+            ("overlaps", Json::Obj(overlaps)),
         ])
     }
 
@@ -112,6 +149,16 @@ impl TuneCache {
             .ok_or_else(|| anyhow::anyhow!("'entries' is not an object"))?;
         for (key, e) in entries {
             cache.insert(key.clone(), entry_from_json(e)?);
+        }
+        // Pre-PR-4 caches have no pair decisions: absent = empty (the
+        // shape entries stay valid; pairs re-resolve on demand).
+        if let Some(overlaps) = j.get("overlaps").and_then(|o| o.as_obj()) {
+            for (key, gain) in overlaps {
+                let gain = gain
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("overlap '{key}' is not a number"))?;
+                cache.overlap_insert(key.clone(), gain);
+            }
         }
         Ok(cache)
     }
@@ -199,10 +246,36 @@ mod tests {
     fn json_round_trips_entries() {
         let mut c = TuneCache::new();
         c.insert("k1".into(), entry());
+        c.overlap_insert("k1->m16_n512_k16384_g128".into(), 2345.5);
+        c.overlap_insert("declined".into(), 0.0);
         let j = c.to_json();
         let back = TuneCache::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.len(), 1);
         assert_eq!(back.get("k1").copied().unwrap(), entry());
+        assert_eq!(back.overlap_len(), 2);
+        assert_eq!(back.overlap_get("k1->m16_n512_k16384_g128"), Some(2345.5));
+        assert_eq!(back.overlap_get("declined"), Some(0.0));
+        assert_eq!(back.overlap_get("missing"), None);
+    }
+
+    #[test]
+    fn caches_without_overlaps_still_parse() {
+        // Pre-co-scheduler cache files carry no "overlaps" key.
+        let j = Json::parse(r#"{"version": 1, "entries": {}}"#).unwrap();
+        let c = TuneCache::from_json(&j).unwrap();
+        assert_eq!(c.overlap_len(), 0);
+    }
+
+    #[test]
+    fn pair_key_pads_both_sides_and_orders() {
+        let m = MachineConfig::ascend910();
+        let a = GemmProblem::new(3, 512, 16384);
+        let b = GemmProblem::new(16, 2048, 7168);
+        let ab = pair_key(&m, &a, &b);
+        // Padded-M aliasing applies to both sides.
+        assert_eq!(ab, pair_key(&m, &GemmProblem::new(16, 512, 16384), &b));
+        // Direction matters: a->b is not b->a.
+        assert_ne!(ab, pair_key(&m, &b, &a));
     }
 
     #[test]

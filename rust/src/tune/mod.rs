@@ -15,12 +15,13 @@
 pub mod cache;
 pub mod search;
 
-pub use cache::{machine_tag, shape_key, TuneCache, TunedEntry};
+pub use cache::{machine_tag, pair_key, shape_key, TuneCache, TunedEntry};
 pub use search::{search, SearchResult};
 
 use std::path::{Path, PathBuf};
 
-use crate::ascend::{KernelTrace, MachineConfig};
+use crate::analysis::coschedule;
+use crate::ascend::{KernelTrace, MachineConfig, Simulator};
 use crate::kernels::{self, GemmProblem, Strategy};
 
 /// Default cache file name (next to the artifacts / working directory).
@@ -37,18 +38,38 @@ pub struct Tuner {
     pub hits: usize,
     /// Resolutions that required a live search.
     pub searches: usize,
+    /// Co-schedule pair decisions served from the cache.
+    pub overlap_hits: usize,
+    /// Pair decisions that required a live merged-trace simulation.
+    pub overlap_searches: usize,
 }
 
 impl Tuner {
     pub fn new(machine: MachineConfig) -> Tuner {
-        Tuner { machine, cache: TuneCache::new(), path: None, hits: 0, searches: 0 }
+        Tuner {
+            machine,
+            cache: TuneCache::new(),
+            path: None,
+            hits: 0,
+            searches: 0,
+            overlap_hits: 0,
+            overlap_searches: 0,
+        }
     }
 
     /// Load (or start) the cache at `path`.
     pub fn load(machine: MachineConfig, path: impl AsRef<Path>) -> anyhow::Result<Tuner> {
         let path = path.as_ref().to_path_buf();
         let cache = TuneCache::load(&path)?;
-        Ok(Tuner { machine, cache, path: Some(path), hits: 0, searches: 0 })
+        Ok(Tuner {
+            machine,
+            cache,
+            path: Some(path),
+            hits: 0,
+            searches: 0,
+            overlap_hits: 0,
+            overlap_searches: 0,
+        })
     }
 
     pub fn machine(&self) -> &MachineConfig {
@@ -100,6 +121,49 @@ impl Tuner {
     pub fn schedule(&mut self, p: &GemmProblem, strategy: Strategy) -> anyhow::Result<KernelTrace> {
         let (s, t) = self.resolve_strategy(p, strategy)?;
         kernels::schedule_with(&self.machine, p, s, &t)
+    }
+
+    /// Cache-only lookup of the co-schedule decision for one adjacent
+    /// (producer, consumer) pair — the serving hot path (`Router::
+    /// layer_plan`) never pays a merged-trace simulation.
+    pub fn lookup_overlap(&mut self, producer: &GemmProblem, consumer: &GemmProblem) -> Option<f64> {
+        let key = cache::pair_key(&self.machine, producer, consumer);
+        let hit = self.cache.overlap_get(&key);
+        if hit.is_some() {
+            self.overlap_hits += 1;
+        }
+        hit
+    }
+
+    /// Resolve the co-schedule decision for one adjacent pair: cache hit,
+    /// or splice the pair's tuned schedules, re-simulate the merged trace
+    /// (DESIGN.md §12) and cache the exact gain.  A cached 0.0 means the
+    /// pair is not spliceable (or the merge priced slower) — either way,
+    /// resolving it again is a pure cache hit.
+    pub fn resolve_overlap(
+        &mut self,
+        producer: &GemmProblem,
+        consumer: &GemmProblem,
+    ) -> anyhow::Result<f64> {
+        let key = cache::pair_key(&self.machine, producer, consumer);
+        if let Some(gain) = self.cache.overlap_get(&key) {
+            self.overlap_hits += 1;
+            return Ok(gain);
+        }
+        let pe = self.resolve(producer)?;
+        let ce = self.resolve(consumer)?;
+        let pt = kernels::schedule_with(&self.machine, producer, pe.strategy, &pe.tiling)?;
+        let ct = kernels::schedule_with(&self.machine, consumer, ce.strategy, &ce.tiling)?;
+        let sim = Simulator::new(self.machine.clone());
+        // The tuned entries carry each schedule's simulated unit time, so
+        // the sequential pair price is cache-exact.
+        let gain = match coschedule::pair_decision(&sim, &pt, &ct, pe.total_ns + ce.total_ns)? {
+            Some(d) => d.gain_ns,
+            None => 0.0,
+        };
+        self.overlap_searches += 1;
+        self.cache.overlap_insert(key, gain);
+        Ok(gain)
     }
 
     /// Persist the cache to its load path (no-op destination error if the
@@ -173,6 +237,31 @@ mod tests {
             .run(&kernels::schedule(&machine(), &p, Strategy::SplitK).unwrap())
             .unwrap();
         assert!(r.total_ns <= sk.total_ns * 1.000001);
+    }
+
+    #[test]
+    fn overlap_resolves_once_then_hits_and_persists() {
+        let dir = std::env::temp_dir().join(format!("w4a16-overlap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(DEFAULT_CACHE_FILE);
+        let prod = GemmProblem::new(8, 512, 16384);
+        let cons = GemmProblem::new(8, 2048, 8192);
+
+        let mut warm = Tuner::load(machine(), &path).unwrap();
+        assert_eq!(warm.lookup_overlap(&prod, &cons), None, "cold cache");
+        let gain = warm.resolve_overlap(&prod, &cons).unwrap();
+        assert_eq!(warm.overlap_searches, 1);
+        assert!(gain >= 0.0 && gain.is_finite());
+        let again = warm.resolve_overlap(&prod, &cons).unwrap();
+        assert_eq!(warm.overlap_searches, 1, "second resolve must hit");
+        assert_eq!(again, gain);
+        warm.save().unwrap();
+
+        // A fresh tuner serves the pair cache-only (the router hot path).
+        let mut cold = Tuner::load(machine(), &path).unwrap();
+        assert_eq!(cold.lookup_overlap(&prod, &cons), Some(gain));
+        assert_eq!((cold.overlap_hits, cold.overlap_searches), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

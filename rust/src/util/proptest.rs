@@ -23,13 +23,27 @@ fn base_seed() -> u64 {
         .unwrap_or(0xA5CE_4D91)
 }
 
-/// Run `prop` against `cases` generated inputs.  The property returns
-/// `(holds, description)`; on failure, panics with the replay seed.
+/// Case-count multiplier; override with `PROPTEST_MULT` (the nightly CI
+/// job runs the whole property suite at 25x depth — same seeds first, so
+/// any failure it finds beyond the default depth is still replayable via
+/// `PROPTEST_SEED`).
+fn case_mult() -> u32 {
+    std::env::var("PROPTEST_MULT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&m| m >= 1)
+        .unwrap_or(1)
+}
+
+/// Run `prop` against `cases` generated inputs (scaled by
+/// `PROPTEST_MULT`).  The property returns `(holds, description)`; on
+/// failure, panics with the replay seed.
 pub fn forall<F>(name: &str, cases: u32, mut prop: F)
 where
     F: FnMut(&mut Rng) -> (bool, String),
 {
     let seed0 = base_seed();
+    let cases = cases.saturating_mul(case_mult());
     for case in 0..cases {
         let seed = seed0.wrapping_add(case as u64);
         let mut rng = Rng::new(seed);
@@ -52,7 +66,8 @@ mod tests {
             count += 1;
             (true, String::new())
         });
-        assert_eq!(count, 50);
+        // The nightly job scales depth via PROPTEST_MULT; the default is 1.
+        assert_eq!(count, 50 * case_mult());
     }
 
     #[test]

@@ -198,6 +198,40 @@ impl DecodeLayer {
         Ok(())
     }
 
+    /// The layer's adjacent (producer reduce -> consumer dequant)
+    /// co-schedule pairs (DESIGN.md §12): expert batches pair internally
+    /// (`pairs = count - 1`), and each adjacent window pairs once.  This
+    /// is THE pair enumeration — shared by `repro tune`'s seeding, the
+    /// router's cache-only resolution and the test fixtures, so the
+    /// cached pair set always matches what serving looks up.  (The step
+    /// simulator prices the same pairs, at report-node granularity, in
+    /// `analysis::layer::build_ledger`.)  Invalid problems are skipped —
+    /// they cannot be scheduled, so they cannot be spliced.
+    pub fn overlap_pairs(&self) -> Vec<OverlapPairSpec> {
+        let nodes = self.gemm_nodes();
+        let valid = |p: &GemmProblem| p.validate().is_ok();
+        let mut out = Vec::new();
+        for node in &nodes {
+            if node.count > 1 && valid(&node.problem) {
+                out.push(OverlapPairSpec {
+                    producer: node.problem,
+                    consumer: node.problem,
+                    pairs: node.count - 1,
+                });
+            }
+        }
+        for w in nodes.windows(2) {
+            if valid(&w[0].problem) && valid(&w[1].problem) {
+                out.push(OverlapPairSpec {
+                    producer: w[0].problem,
+                    consumer: w[1].problem,
+                    pairs: 1,
+                });
+            }
+        }
+        out
+    }
+
     /// Packed INT4 weight bytes of the whole layer (capacity planning).
     /// MoE layers hold *every* expert resident, not just the active ones.
     pub fn packed_weight_bytes(&self) -> u64 {
@@ -214,6 +248,17 @@ impl DecodeLayer {
             }
         }
     }
+}
+
+/// One adjacent co-schedule pair of a layer's GEMM chain: `pairs`
+/// identical (producer reduce -> consumer dequant) adjacencies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapPairSpec {
+    pub producer: GemmProblem,
+    pub consumer: GemmProblem,
+    /// Adjacencies this spec covers (`count - 1` for expert-internal
+    /// pairs, 1 for a window between two distinct nodes).
+    pub pairs: usize,
 }
 
 /// Which non-GEMM vector pass a step node is.
@@ -494,6 +539,27 @@ mod tests {
         let attn_bytes = dense.problem(GemmKind::Qkv).packed_weight_bytes()
             + dense.problem(GemmKind::AttnOut).packed_weight_bytes();
         assert_eq!(layer.packed_weight_bytes(), attn_bytes + 256 * per_expert);
+    }
+
+    #[test]
+    fn overlap_pairs_cover_windows_and_expert_internals() {
+        // Dense: three adjacent windows, no internal pairs.
+        let dense = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
+        let pairs = dense.overlap_pairs();
+        assert_eq!(pairs.len(), 3);
+        assert!(pairs.iter().all(|p| p.pairs == 1));
+        let nodes = dense.gemm_nodes();
+        for (spec, w) in pairs.iter().zip(nodes.windows(2)) {
+            assert_eq!((spec.producer, spec.consumer), (w[0].problem, w[1].problem));
+        }
+        // MoE: two expert-internal specs (count - 1 each) plus the windows.
+        let moe = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+            .with_moe(moe_geometry("deepseek-moe").unwrap());
+        let pairs = moe.overlap_pairs();
+        assert_eq!(pairs.len(), 5);
+        let internal: Vec<_> = pairs.iter().filter(|p| p.producer == p.consumer).collect();
+        assert_eq!(internal.len(), 2, "up + down expert batches pair internally");
+        assert!(internal.iter().all(|p| p.pairs == 63), "b=8 top-8 -> 64 instances");
     }
 
     #[test]

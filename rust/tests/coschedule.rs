@@ -1,0 +1,288 @@
+//! Phase-level co-scheduler invariants (DESIGN.md §12): the splice
+//! conserves work and never double-books an engine, the merged-trace
+//! pricing never serves a slower plan than the sequential chain, and
+//! `OverlapMode::Auto` never serves a slower plan than PR 3's first-order
+//! ledger — on randomized geometries (dense and MoE) and across the
+//! paper-model decode-step sweep.
+
+use ascend_w4a16::analysis::coschedule;
+use ascend_w4a16::analysis::layer::{self, forced_split_resolver, OverlapMode};
+use ascend_w4a16::ascend::{ComputeOp, MachineConfig, Simulator};
+use ascend_w4a16::kernels::tiling::Tiling;
+use ascend_w4a16::kernels::{self, splitk, GemmProblem, ReduceMode};
+use ascend_w4a16::model::llm::{paper_layer_geometries, paper_moe_geometries, LayerGeometry, MoeGeometry};
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+/// A forced-split splitk trace for a random legal problem: every node
+/// carries a reduce, so the producer side of the splice always exists.
+fn forced_split_trace(m: &MachineConfig, p: &GemmProblem) -> ascend_w4a16::ascend::KernelTrace {
+    let base = kernels::tiling::select_splitk(m, p).unwrap();
+    let mut t = Tiling { splits: base.splits.max(2), ..base };
+    if t.validate(m, p).is_err() {
+        t = base;
+    }
+    splitk::schedule_reduce(m, p, &t, ReduceMode::Pipelined).unwrap()
+}
+
+
+#[test]
+fn merged_trace_conserves_macs_and_reduce_steps_property() {
+    let m = machine();
+    forall("splice conserves work", 25, |rng| {
+        let pn = 16 * rng.usize_range(1, 256);
+        let pk = 128 * rng.usize_range(2, 64);
+        let cn = 16 * rng.usize_range(1, 256);
+        let ck = 128 * rng.usize_range(2, 64);
+        let batch = rng.usize_range(1, 32);
+        let prod = forced_split_trace(&m, &GemmProblem::new(batch, pn, pk));
+        let cons = forced_split_trace(&m, &GemmProblem::new(batch, cn, ck));
+        let Some(merged) = coschedule::splice(&prod, &cons) else {
+            // A producer whose reduce streamed entirely has no exposed
+            // tail; that is a legal non-spliceable draw.
+            return (true, String::new());
+        };
+        let macs: u64 = merged.kernels.iter().map(|k| k.total_macs()).sum();
+        if macs != prod.total_macs() + cons.total_macs() {
+            return (false, format!("n={pn}/{cn}: MACs {macs} not conserved"));
+        }
+        let reduces: usize = merged.kernels.iter().map(|k| k.reduce_steps()).sum();
+        if reduces != prod.reduce_steps() + cons.reduce_steps() {
+            return (false, format!("n={pn}/{cn}: reduce steps {reduces} not conserved"));
+        }
+        // The merged trace still validates and simulates.
+        match Simulator::new(m.clone()).run_merged(&merged) {
+            Ok(r) if r.total_ns > 0.0 && r.total_ns.is_finite() => (true, String::new()),
+            Ok(r) => (false, format!("degenerate merged time {}", r.total_ns)),
+            Err(e) => (false, format!("n={pn}/{cn}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn spliced_phase_never_double_books_an_engine_property() {
+    // Structural no-double-booking: after the splice, each vector engine
+    // owns ONE serialized step sequence — the carried reduce steps (in
+    // their original order) followed by its dequant steps (in theirs) —
+    // and the engine list stays within the machine's vector cores.
+    let m = machine();
+    forall("no double booking", 25, |rng| {
+        let pn = 16 * rng.usize_range(1, 256);
+        let pk = 128 * rng.usize_range(2, 64);
+        let cn = 16 * rng.usize_range(1, 256);
+        let ck = 128 * rng.usize_range(2, 64);
+        let batch = rng.usize_range(1, 32);
+        let prod = forced_split_trace(&m, &GemmProblem::new(batch, pn, pk));
+        let cons = forced_split_trace(&m, &GemmProblem::new(batch, cn, ck));
+        let Some(merged) = coschedule::splice(&prod, &cons) else {
+            return (true, String::new());
+        };
+        let spliced = &merged.kernels[1];
+        let phase = &spliced.phases[0];
+        if phase.steps_per_engine.len() > m.total_vector_cores() {
+            return (false, format!("{} engines booked", phase.steps_per_engine.len()));
+        }
+        let tail = prod.exposed_reduce_range().unwrap();
+        let moved: usize = prod.phases[tail].iter().map(|p| p.total_steps()).sum();
+        if phase.total_steps() != cons.phases[0].total_steps() + moved {
+            return (false, "spliced phase must carry every moved step exactly once".into());
+        }
+        for steps in &phase.steps_per_engine {
+            let mut seen_dequant = false;
+            for s in steps {
+                match s.compute {
+                    ComputeOp::Reduce { .. } if seen_dequant => {
+                        return (false, "reduce step after dequant: ordering broken".into());
+                    }
+                    ComputeOp::Dequant { .. } => seen_dequant = true,
+                    _ => {}
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+/// Random legal decoder-layer geometry, sometimes MoE (mirrors
+/// `tests/properties.rs`).
+fn random_step(rng: &mut ascend_w4a16::util::prng::Rng) -> DecodeStep {
+    let hidden = 128 * rng.usize_range(2, 24);
+    let ffn = 128 * rng.usize_range(2, 32);
+    let kv = 16 * rng.usize_range(1, hidden / 16);
+    let geometry = LayerGeometry { hidden, ffn, kv, group: 128 };
+    let batch = rng.usize_range(1, 64);
+    let mut layer = DecodeLayer::new(geometry, batch);
+    if rng.usize_range(0, 1) == 1 {
+        let experts = *rng.choose(&[4usize, 8, 64]);
+        let topk = (*rng.choose(&[1usize, 2])).min(experts);
+        layer = layer.with_moe(MoeGeometry { experts, topk, expert_ffn: ffn });
+    }
+    let kv_len = 128 * rng.usize_range(1, 32);
+    DecodeStep::new(layer, kv_len, DecodeStep::default_heads(&geometry))
+}
+
+#[test]
+fn exact_never_slower_than_sequential_on_random_geometries() {
+    // The co-scheduler declines every merge that prices slower, so
+    // `Exact <= Sequential` holds on ANY geometry — dense and MoE.
+    let m = machine();
+    forall("exact <= sequential", 10, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        let rep =
+            match layer::simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m)) {
+                Ok(rep) => rep,
+                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+            };
+        if rep.served_ns() != rep.exact_ns {
+            return (false, "Exact mode must serve exact_ns".into());
+        }
+        (
+            rep.exact_ns <= rep.sequential_ns * 1.000001,
+            format!("exact {} > sequential {}", rep.exact_ns, rep.sequential_ns),
+        )
+    });
+}
+
+#[test]
+fn auto_never_slower_than_ledger_on_random_geometries() {
+    // Acceptance: `Auto` (min of sequential, ledger, exact) never serves
+    // a slower plan than PR 3's first-order ledger.
+    let m = machine();
+    forall("auto <= ledger", 10, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        let auto =
+            match layer::simulate_step(&m, &step, OverlapMode::Auto, forced_split_resolver(&m)) {
+                Ok(rep) => rep,
+                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+            };
+        let ledger = match layer::simulate_step(
+            &m,
+            &step,
+            OverlapMode::Overlapped,
+            forced_split_resolver(&m),
+        ) {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        (
+            auto.served_ns() <= ledger.served_ns() * 1.000001,
+            format!("auto {} > ledger {}", auto.served_ns(), ledger.served_ns()),
+        )
+    });
+}
+
+#[test]
+fn exact_beats_ledger_on_resident_partial_pair() {
+    // Deterministic pinned pair: the producer's partials are L2-resident,
+    // so the merged trace recovers the whole exposed tail group PLUS the
+    // barrier in front of it — strictly more than the first-order
+    // `min(reduce, slack)` term can claim.
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    let p = GemmProblem::new(8, 512, 16384);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&m, &p).unwrap();
+    let prod = splitk::schedule_reduce(&m, &p, &t, ReduceMode::Pipelined).unwrap();
+    let c = GemmProblem::new(8, 2048, 8192);
+    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    ct.validate(&m, &c).unwrap();
+    let cons = splitk::schedule_reduce(&m, &c, &ct, ReduceMode::Pipelined).unwrap();
+    let prod_rep = sim.run(&prod).unwrap();
+    let seq = prod_rep.total_ns + sim.run(&cons).unwrap().total_ns;
+    let d = coschedule::pair_decision(&sim, &prod, &cons, seq).unwrap().unwrap();
+    assert!(d.merged_applied(), "resident pair must merge: {d:?}");
+    // The producer's partials fit L2 alongside its workspace.
+    assert_eq!(prod_rep.l2_model.partial_hit, 1.0, "test premise: resident partials");
+    // First-order term for the same pair: the ledger can claim at most
+    // the exposed tail group's time.  With resident partials the merged
+    // trace recovers that whole group plus the barrier fronting it.
+    let tail_ns = prod_rep.groups.last().unwrap().total_ns;
+    assert!(
+        d.gain_ns > tail_ns * 0.999,
+        "exact gain {} should recover at least the tail group {} (plus its barrier)",
+        d.gain_ns,
+        tail_ns
+    );
+}
+
+#[test]
+fn paper_sweep_exact_never_slower_than_ledger_and_strictly_faster_somewhere() {
+    // Acceptance criteria on the paper-model decode-step sweep (tuned
+    // strategies, like the e2e_layer bench): Exact <= Overlapped on every
+    // model/batch, and at least one K>N adjacent pair where the merged
+    // trace strictly beats the first-order term.
+    //
+    // Why the tuned half holds: tuned winners mostly have no exposed
+    // reduce (the fused ablation wins most shapes and carries no dequant
+    // prologue either), so most steps have an empty ledger and the two
+    // prices coincide; the pairs that do exist are small-N nodes whose
+    // split partials are L2-resident, where the merged trace recovers
+    // the whole tail group plus its barrier — at least the ledger's
+    // min(tail, slack) term.  If a future tuner change lands in the
+    // spilled-carried-partial regime where the exact simulation prices
+    // BELOW the (over-optimistic) first-order estimate, this assert is
+    // the alarm that the ledger's estimate needs the §12 contention
+    // terms, not a bug in the co-scheduler.
+    let m = machine();
+    let mut tuner = ascend_w4a16::tune::Tuner::new(m.clone());
+    let mut steps: Vec<(String, DecodeStep)> = Vec::new();
+    for (model, geom) in paper_layer_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+            ));
+        }
+    }
+    for (model, geom, moe) in paper_moe_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch).with_moe(moe);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+            ));
+        }
+    }
+    for (tag, step) in &steps {
+        let rep = layer::simulate_step_tuned(&m, step, OverlapMode::Auto, &mut tuner)
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert!(
+            rep.exact_ns <= rep.overlapped_ns * 1.000001,
+            "{tag}: exact {} slower than ledger {}",
+            rep.exact_ns,
+            rep.overlapped_ns
+        );
+        assert!(rep.served_ns() <= rep.sequential_ns * 1.000001, "{tag}");
+    }
+    // The strict win: forced splits on the MoE step guarantee exposed
+    // reduce tails on the K>N expert GEMMs (the tuned sweep above may
+    // legitimately pick S=1 nodes with nothing to overlap).
+    let (_, geom, moe) = paper_moe_geometries().into_iter().next().expect("a MoE preset");
+    let step = DecodeStep::new(DecodeLayer::new(geom, 8).with_moe(moe), 2048, 56);
+    let rep = layer::simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m))
+        .unwrap();
+    let strict = rep.ledger.iter().any(|pair| {
+        let producer_k_dominant = match &rep.nodes[pair.producer] {
+            layer::StepNodeReport::Gemm(g) => g.problem.k > g.problem.n,
+            layer::StepNodeReport::Vector(_) => false,
+        };
+        producer_k_dominant
+            && pair.exact.map(|d| d.gain_ns).unwrap_or(0.0) > pair.gain_ns + 1e-6
+    });
+    assert!(
+        strict,
+        "no K>N adjacent pair where the merged trace strictly beats the ledger: {:?}",
+        rep.ledger
+    );
+}

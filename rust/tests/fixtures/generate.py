@@ -153,6 +153,49 @@ def tiling(bm, bn, bk, splits, chunks):
             "dequant_bk": 128, "dequant_bn": 256}
 
 
+# --- phase-level co-scheduler splice (analysis/coschedule.rs, DESIGN §12) ---
+
+def merged(producer, consumer):
+    """Mirror of `coschedule::splice` + `golden::merged_to_json`.
+
+    The producer's exposed reduce tail (the trailing barrier group, all
+    reduce phases) moves into the consumer's opening dequant phase:
+    per-engine step sequences concatenate (reduce first, then dequant —
+    both keep their own order), Partial reads re-class as carried_partial,
+    and active engines become the union (both sides round-robin from
+    engine 0, so the union is the max).  Everything else — chunk tags,
+    workspace fields, the consumer's later phases — is untouched.
+    """
+    phases = producer["phases"]
+    start = len(phases) - 1
+    while start > 0 and phases[start]["pipelined_with_prev"]:
+        start -= 1
+    assert start > 0, "producer has no exposed group"
+    tail = phases[start:]
+    assert all(p["name"].startswith("reduce") for p in tail), "tail must be all reduce"
+    head = dict(producer, name=producer["name"] + "_head", phases=phases[:start])
+
+    dq = consumer["phases"][0]
+    assert "dequant" in dq["name"], "consumer must open with a dequant prologue"
+    reads = dict(dq["reads"])
+    writes = dict(dq["writes"])
+    steps, engines = dq["steps"], dq["engines"]
+    for t in tail:
+        steps += t["steps"]
+        engines = max(engines, t["engines"])
+        for k, v in t["reads"].items():
+            key = "carried_partial" if k == "partial" else k
+            reads[key] = reads.get(key, 0) + v
+        for k, v in t["writes"].items():
+            writes[k] = writes.get(k, 0) + v
+    spliced_dq = dict(dq, name="spliced_dequant", steps=steps, engines=engines,
+                      reads=reads, writes=writes)
+    spliced = dict(consumer, name=consumer["name"] + "_spliced",
+                   phases=[spliced_dq] + consumer["phases"][1:])
+    return {"name": f"merged_{producer['name']}__{consumer['name']}",
+            "kernels": [head, spliced]}
+
+
 # --- full decode-step graph (workload/decode_layer.rs DecodeStep::nodes) ---
 
 def vec_node(kind, elems, ops, hbm, l2):
@@ -225,6 +268,16 @@ FIXTURES = {
         chunked(8, 2048, 8192, tiling(16, 128, 128, 2, 4), "pipelined"),
     "dp_m8_n2048_k7168":
         data_parallel(8, 2048, 7168, tiling(16, 256, 64, 1, 1)),
+    # Co-scheduler splices (DESIGN §12): a dense adjacent pair (the K>>N
+    # acceptance shape's barrier reduce into a chunked consumer's chunk-0
+    # dequant) and a MoE expert-batch internal pair (one expert instance's
+    # reduce_tail into the next instance of the same schedule).
+    "merged_splitk_m8_n512_k16384__chunked_m8_n2048_k8192":
+        merged(splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "pipelined"),
+               chunked(8, 2048, 8192, tiling(16, 128, 128, 2, 4), "pipelined")),
+    "merged_moe_expert_m1_n7168_k2048_internal":
+        merged(splitk(1, 7168, 2048, tiling(16, 32, 128, 4, 1), "pipelined"),
+               splitk(1, 7168, 2048, tiling(16, 32, 128, 4, 1), "pipelined")),
     # Full decode-step graphs: GLM-4.5 dense and DeepSeek-MoE at batch 8.
     "decode_step_glm45_b8":
         decode_step(8, 2048, 40, 5120, 12288, 5120),

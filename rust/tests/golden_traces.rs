@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use ascend_w4a16::analysis::golden;
+use ascend_w4a16::analysis::{coschedule, golden};
 use ascend_w4a16::ascend::{KernelTrace, MachineConfig};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
@@ -139,6 +139,44 @@ fn moe_expert_batch_trace_matches_golden() {
     t.validate(&machine(), &p).unwrap();
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("splitk_m1_n7168_k2048_pipelined", &tr);
+}
+
+#[test]
+fn merged_dense_pair_matches_golden() {
+    // The co-scheduler's splice on a dense adjacent pair (DESIGN.md §12):
+    // the K>>N acceptance shape's exposed barrier reduce moves into a
+    // chunked consumer's chunk-0 dequant prologue — the fixture pins the
+    // moved steps, the carried_partial re-classing and the preserved
+    // chunk tag.
+    let p = GemmProblem::new(8, 512, 16384);
+    let pt = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    pt.validate(&machine(), &p).unwrap();
+    let prod = splitk::schedule_reduce(&machine(), &p, &pt, ReduceMode::Pipelined).unwrap();
+    let c = GemmProblem::new(8, 2048, 8192);
+    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    ct.validate(&machine(), &c).unwrap();
+    let cons = chunked::schedule_reduce(&machine(), &c, &ct, ReduceMode::Pipelined).unwrap();
+    let merged = coschedule::splice(&prod, &cons).expect("pair must be spliceable");
+    check_json(
+        "merged_splitk_m8_n512_k16384__chunked_m8_n2048_k8192",
+        golden::merged_to_json(&merged),
+    );
+}
+
+#[test]
+fn merged_moe_expert_internal_pair_matches_golden() {
+    // The MoE expert-batch internal pair: one expert instance's
+    // reduce_tail spliced into the NEXT instance of the same schedule
+    // (producer == consumer), streaming reduce preserved in the head.
+    let p = GemmProblem::new(1, 7168, 2048);
+    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    let merged = coschedule::splice(&tr, &tr).expect("internal pair must be spliceable");
+    check_json(
+        "merged_moe_expert_m1_n7168_k2048_internal",
+        golden::merged_to_json(&merged),
+    );
 }
 
 #[test]

@@ -132,8 +132,15 @@ fn synthetic_artifacts(tag: &str, warm_cache: bool, moe: bool) -> std::path::Pat
         let mut tuner = Tuner::new(machine());
         let cfg = if moe { tiny_moe_config() } else { tiny_config() };
         let decode_layer = DecodeLayer::from_decode_config(&cfg, 4);
-        for node in decode_layer.gemm_nodes() {
+        let nodes = decode_layer.gemm_nodes();
+        for node in &nodes {
             tuner.resolve(&node.problem).unwrap();
+        }
+        // Seed the co-schedule pair decisions too (what `repro tune`
+        // does — same `overlap_pairs` enumeration the router looks up),
+        // so the router resolves the overlap cache-only.
+        for pair in decode_layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
         }
         tuner.save_to(dir.join("tune_cache.json")).unwrap();
     }
@@ -274,6 +281,45 @@ fn moe_layer_plan_predicts_full_fanout_latency() {
     );
     let _ = std::fs::remove_dir_all(&dir);
     let _ = std::fs::remove_dir_all(&dense_dir);
+}
+
+#[test]
+fn layer_plan_resolves_coschedule_gain_cache_only() {
+    // Satellite acceptance: the co-schedule decision per adjacent pair is
+    // cached by `repro tune` (mirrored by the synthetic warm cache), so
+    // `Router::layer_plan` resolves the overlap gain without ever paying
+    // a merged-trace simulation on the serving path.
+    for moe in [false, true] {
+        let dir = synthetic_artifacts(if moe { "ov-moe" } else { "ov" }, true, moe);
+        let rt = Runtime::cpu().unwrap();
+        let mf = Manifest::load(&dir).unwrap();
+        let mut router = Router::new(&rt, mf, "tiny").unwrap();
+        let plan = router.layer_plan(4).expect("decode config present");
+        let gain = plan
+            .overlap_gain_ns
+            .unwrap_or_else(|| panic!("moe={moe}: every pair must hit the cache: {plan:?}"));
+        assert!(gain >= 0.0 && gain.is_finite());
+        assert!(
+            plan.predicted_overlapped_ns().unwrap() <= plan.predicted_layer_ns().unwrap(),
+            "overlap can only shrink the predicted layer time"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    // A cache with shape entries but no pair decisions (a pre-PR-4 cache)
+    // leaves the plan served but unpredicted for overlap.
+    let dir = synthetic_artifacts("ov-stale", false, false);
+    let mut tuner = Tuner::new(machine());
+    for node in DecodeLayer::from_decode_config(&tiny_config(), 4).gemm_nodes() {
+        tuner.resolve(&node.problem).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    let plan = router.layer_plan(4).expect("decode config present");
+    assert!(plan.fully_resolved(), "shape entries still resolve");
+    assert_eq!(plan.overlap_gain_ns, None, "missing pair decisions must not be invented");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

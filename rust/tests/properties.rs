@@ -416,8 +416,15 @@ fn overlap_ledger_prices_each_node_once_and_never_double_books() {
                     ),
                 );
             }
-            if pair.gain_ns <= 0.0 || pair.pairs == 0 {
+            // An entry exists when either pricing found a positive gain:
+            // the first-order ledger term, or the co-scheduler's exact
+            // merged-trace term (which is clamped non-negative).
+            let exact_gain = pair.exact.map(|d| d.gain_ns).unwrap_or(0.0);
+            if (pair.gain_ns <= 0.0 && exact_gain <= 0.0) || pair.pairs == 0 {
                 return (false, "ledger must only carry positive gains".into());
+            }
+            if exact_gain < 0.0 {
+                return (false, "exact co-schedule gains are clamped non-negative".into());
             }
             let internal = pair.producer == pair.consumer;
             if !internal && !producers.insert(pair.producer) {

@@ -1,7 +1,7 @@
 //! Schedule-level integration tests: the paper's headline behaviours as
 //! executable assertions, across the whole shape table.
 
-use ascend_w4a16::analysis::layer::{self, OverlapMode, Resolution};
+use ascend_w4a16::analysis::layer::{self, OverlapMode};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator, Unit};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{
@@ -254,19 +254,13 @@ fn auto_overlap_never_slower_than_sequential_across_paper_models() {
     }
     let mut some_gain = false;
     for (tag, step) in steps {
-        let rep = layer::simulate_step(&m, &step, OverlapMode::Auto, |p| {
-            // Force a K split where legal so every node carries a reduce
-            // phase: the never-slower guarantee must hold for ANY tiling,
-            // and the wide-N heuristic alone would pick S = 1 everywhere
-            // (no reduce, nothing to overlap — a vacuous sweep).
-            let mut t = kernels::select_tiling(&m, p, Strategy::SplitK)?;
-            let split = ascend_w4a16::kernels::tiling::Tiling { splits: t.splits.max(2), ..t };
-            if split.validate(&m, p).is_ok() {
-                t = split;
-            }
-            Ok((Strategy::SplitK, t, Resolution::Heuristic))
-        })
-        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        // Force a K split where legal so every node carries a reduce
+        // phase: the never-slower guarantee must hold for ANY tiling,
+        // and the wide-N heuristic alone would pick S = 1 everywhere
+        // (no reduce, nothing to overlap — a vacuous sweep).
+        let rep =
+            layer::simulate_step(&m, &step, OverlapMode::Auto, layer::forced_split_resolver(&m))
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
         assert!(
             rep.served_ns() <= rep.sequential_ns * 1.000001,
             "{tag}: served {} slower than sequential {}",
