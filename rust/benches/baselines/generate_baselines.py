@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Generate the committed bench baselines from the offline timing mirror.
+
+The CI bench-diff gate (rust/src/bench/diff.rs) compares each
+`BENCH_*.json` produced by `cargo bench` against the files in this
+directory and fails on any gated latency cell more than 2% slower.  The
+authoring environment has no Rust toolchain, so these baselines come
+from `mirror_sim.py` — a double-precision mirror of the simulator whose
+values agree with the Rust run to ~1e-12 relative (the simulator is
+pure, deterministic f64 arithmetic; see mirror_sim.py's header).
+
+The baselines are deliberately a *subset* of the bench output: the
+top-level gated latency cells per (model, batch) identity, without the
+`detail`/`step_detail` subtrees.  bench-diff only checks keys present
+in the baseline, so the benches stay free to grow columns; re-bless
+with `repro bench-diff --bless` from a green `cargo bench` run whenever
+a PR intentionally moves the numbers (see README.md).
+"""
+
+import json
+import math
+import os
+
+import mirror_sim as M
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+PAPER_SHAPES = [
+    ("llama32", 2048, 2048), ("llama32", 8192, 2048), ("llama32", 2048, 8192),
+    ("glm45", 5120, 5120), ("glm45", 12288, 5120), ("glm45", 5120, 12288),
+    ("deepseek", 7168, 7168), ("deepseek", 2048, 7168), ("deepseek", 7168, 2048),
+    ("deepseek", 1536, 7168),
+    ("openpangu", 7680, 7680), ("openpangu", 1536, 7680),
+]
+PAPER_BATCHES = [1, 2, 4, 8, 16, 32, 64]
+
+LAYER_MODELS = [
+    ("llama32", 2048, 8192, 2048, None),
+    ("glm45", 5120, 12288, 5120, None),
+    ("deepseek", 7168, 2048, 1536, None),
+    ("openpangu", 7680, 7680, 1536, None),
+    ("deepseek-moe", 7168, 2048, 1536, (256, 8, 2048)),
+]
+
+
+def geomean(xs):
+    if not xs:
+        return 0.0
+    return math.exp(sum(math.log(max(x, 1e-300)) for x in xs) / float(len(xs)))
+
+
+def bench_chunked():
+    cells = []
+    for model, n, k in PAPER_SHAPES:
+        for batch in PAPER_BATCHES:
+            p = (batch, n, k, 128)
+            t = M.select_chunked(p)
+            ck = M.run(M.chunked_schedule(p, t), want_ledger=True)
+            sk = M.run(M.schedule(p, "splitk"), want_ledger=True)
+            fp16 = M.run(M.schedule(p, "fp16_native"))
+            ws_sk = sk.ledger.get(M.WS, [0.0] * 4)
+            ws_ck = ck.ledger.get(M.WS, [0.0] * 4)
+            cells.append({
+                "model": model, "n": n, "k": k, "batch": batch,
+                "chunks": t["chunks"],
+                "chunked_us": ck.total_ns / 1e3,
+                "splitk_us": sk.total_ns / 1e3,
+                "fp16_us": fp16.total_ns / 1e3,
+                "speedup_vs_splitk": sk.total_ns / ck.total_ns,
+                "speedup_vs_fp16": fp16.total_ns / ck.total_ns,
+                "ws_hbm_splitk_bytes": ws_sk[0] + ws_sk[1],
+                "ws_hbm_chunked_bytes": ws_ck[0] + ws_ck[1],
+            })
+    kd = [c["splitk_us"] / c["chunked_us"] for c in cells if c["k"] >= 2 * c["n"]]
+    strategy, _, tuned_ns = M.tune_search((8, 512, 16384, 128))
+    return {
+        "bench": "ablation_chunked",
+        "cells": cells,
+        "geomean_speedup_vs_splitk_k_dominant": geomean(kd),
+        "ws_hbm_bytes_splitk_total": sum(c["ws_hbm_splitk_bytes"] for c in cells),
+        "ws_hbm_bytes_chunked_total": sum(c["ws_hbm_chunked_bytes"] for c in cells),
+        "tuned_decode_strategy": strategy,
+        "tuned_decode_ns": tuned_ns,
+    }
+
+
+def bench_layer():
+    tuner = M.Tuner()
+
+    def tuned(problem):
+        s, t, _ = tuner.resolve(problem)
+        return s, t
+
+    def forced_split(problem):
+        t = M.select_tiling(problem, "splitk")
+        t2 = dict(t, splits=max(t["splits"], 2))
+        if M.tiling_validate(t2, problem):
+            t = t2
+        return "splitk", t
+
+    def cell(model, moe, batch, rep):
+        gemms = [n for n in rep["nodes"] if isinstance(n, dict)]
+        layer_ns = 0.0
+        barrier_ns = 0.0
+        for g in gemms:
+            layer_ns += g["total_ns"]
+        for g in gemms:
+            barrier_ns += g["barrier_ns"]
+        auto_base = min(rep["exact_ns"], rep["overlapped_ns"], rep["sequential_ns"])
+        plan = rep["residency"]
+        return {
+            "model": model, "moe": moe, "batch": batch,
+            "layer_us": layer_ns / 1e3,
+            "layer_barrier_us": barrier_ns / 1e3,
+            "reduce_pipeline_speedup": barrier_ns / layer_ns,
+            "step_us": rep["served_ns"] / 1e3,
+            "step_sequential_us": rep["sequential_ns"] / 1e3,
+            "step_exact_us": rep["exact_ns"] / 1e3,
+            "step_resident_us": plan["resident_ns"] / 1e3,
+            "residency_speedup": auto_base / rep["served_ns"],
+            "residency_gain_us": plan["gain_ns"] / 1e3,
+            "residency_pinned_bytes": float(plan["pinned_bytes"]),
+            "overlap_speedup": rep["sequential_ns"] / rep["served_ns"],
+            "overlap_exact_speedup": rep["sequential_ns"] / rep["exact_ns"],
+            "overlap_exact_vs_ledger": rep["overlapped_ns"] / rep["exact_ns"],
+        }
+
+    cells = []
+    for model, hidden, ffn, kv, moe in LAYER_MODELS:
+        heads = max(hidden // 128, 1)
+        for batch in (1, 8, 64):
+            rep = M.simulate_step_with(batch, 2048, heads, hidden, ffn, kv, 128,
+                                       moe, tuned, "auto", "auto")
+            cells.append(cell(model, moe is not None, batch, rep))
+    for model, hidden, ffn, kv, moe in LAYER_MODELS:
+        if model not in ("llama32", "deepseek-moe"):
+            continue
+        heads = max(hidden // 128, 1)
+        rep = M.simulate_step_with(8, 2048, heads, hidden, ffn, kv, 128, moe,
+                                   forced_split, "auto", "auto")
+        auto_base = min(rep["exact_ns"], rep["overlapped_ns"], rep["sequential_ns"])
+        plan = rep["residency"]
+        cells.append({
+            "model": f"{model}-forced-split", "moe": moe is not None, "batch": 8,
+            "step_us": rep["served_ns"] / 1e3,
+            "step_sequential_us": rep["sequential_ns"] / 1e3,
+            "step_exact_us": rep["exact_ns"] / 1e3,
+            "step_resident_us": plan["resident_ns"] / 1e3,
+            "residency_speedup": auto_base / rep["served_ns"],
+            "residency_gain_us": plan["gain_ns"] / 1e3,
+            "overlap_speedup": rep["sequential_ns"] / rep["overlapped_ns"],
+            "overlap_exact_speedup": rep["sequential_ns"] / rep["exact_ns"],
+            "overlap_exact_vs_ledger": rep["overlapped_ns"] / rep["exact_ns"],
+        })
+    return {"bench": "e2e_layer", "kv_len": 2048, "cells": cells}
+
+
+def main():
+    for name, doc in [("BENCH_chunked.json", bench_chunked()),
+                      ("BENCH_layer.json", bench_layer())]:
+        path = os.path.join(HERE, name)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1441 @@
+#!/usr/bin/env python3
+"""Offline timing mirror of the Rust simulator (rust/src/ascend/*,
+kernels/*, tune/*, analysis/{layer,coschedule,residency}.rs).
+
+Purpose: the bench baselines under this directory must carry real
+numbers to arm the CI perf gate, and the authoring environment has no
+Rust toolchain (see README.md).  The simulator is pure, deterministic
+f64 arithmetic, so a faithful Python mirror — IEEE-754 doubles, the
+same expressions in the same order — reproduces the bench cells to
+double precision; the 2% gate threshold then has ~12 orders of
+magnitude of headroom.  `generate_baselines.py` drives this module;
+re-bless with a real `cargo bench` run whenever one is available (the
+bench-snapshot job uploads the `blessed-baselines` artifact for
+exactly that).
+
+Scope: everything the gated top-level BENCH cells need — the machine
+model, the five kernel schedules with their tilers, the tuner search,
+the reduce/overlap/chain co-scheduler, the vecpass step graph and the
+step-level weight-residency planner.  Structural digests (the golden
+fixtures) live in rust/tests/fixtures/generate.py.
+"""
+
+import math
+
+# --- config.rs -------------------------------------------------------------
+
+AI_CORES = 32
+VEC_PER_CORE = 2
+VEC_CORES = AI_CORES * VEC_PER_CORE
+CLOCK_GHZ = 1.0
+CUBE_TILE = 16
+CUBE_MACS = 4096.0
+LANES_F16 = 128.0
+LANES_F32 = 64.0
+L0A = 64 << 10
+L0B = 64 << 10
+L0C = 256 << 10
+UB = 256 << 10
+L2_BYTES = 32 << 20
+L2_BW = 3600.0
+HBM_BW = 1200.0
+MTE_BW = 500.0
+L2_RETENTION = 0.90
+DMA_BURST = 256.0
+LAUNCH_NS = 5000.0
+BARRIER_NS = 2000.0
+EVENT_NS = 50.0
+
+# Buffer classes (order = the Rust enum's Ord, for ledger iteration).
+WP, WF16, ACT, WS, PART, OUT, QP, CPART, CWEIGHT = range(9)
+
+
+def m_padded(m):
+    return -(-m // CUBE_TILE) * CUBE_TILE
+
+
+def packed_weight_bytes(n, k):
+    return k * n // 2
+
+
+def f16_weight_bytes(n, k):
+    return k * n * 2
+
+
+def macs(m, n, k):
+    return m_padded(m) * n * k
+
+
+# --- cube.rs / vector.rs ---------------------------------------------------
+
+def cube_op_ns(op):
+    if op[0] == "mmad":
+        _, m, n, k = op
+        pad = lambda x: -(-x // CUBE_TILE) * CUBE_TILE
+        return float(pad(m) * pad(n) * pad(k)) / CUBE_MACS / CLOCK_GHZ
+    if op[0] == "nop":
+        return 0.0
+    return None
+
+
+def vector_op_ns(op):
+    if op[0] == "dequant":
+        return float(op[1]) * 4.0 / LANES_F16 / CLOCK_GHZ
+    if op[0] == "reduce":
+        _, elems, terms = op
+        adds = float(elems) * float(max(terms - 1, 0))
+        casts = float(elems)
+        return (adds / LANES_F32 + casts / LANES_F16) / CLOCK_GHZ
+    if op[0] == "cast":
+        return float(op[1]) / LANES_F16 / CLOCK_GHZ
+    if op[0] == "nop":
+        return 0.0
+    return None
+
+
+def block_fits_l0(bm, bn, bk):
+    return 2 * bm * bk * 2 <= L0A and 2 * bk * bn * 2 <= L0B and bm * bn * 4 <= L0C
+
+
+def dequant_tile_fits_ub(bk, bn):
+    return 2 * (bk * bn // 2 + bk * bn * 2) <= UB
+
+
+# --- trace IR --------------------------------------------------------------
+# Step: (compute, reads, writes, burst); reads/writes: tuple of (class, bytes).
+# Phase: dict(name, unit('cube'|'vector'), steps: list[(step, run)] per engine
+#   as a run-length list, pipelined, chunk).
+# Trace: dict(name, phases, workspace_bytes, partial_bytes, policy)
+#   policy: ('buffered',) | ('pinned', resident_bytes)
+
+
+def step(compute, reads=(), writes=(), burst=0):
+    return (compute, tuple(reads), tuple(writes), burst)
+
+
+def phase(name, unit, runs_per_engine, pipelined, chunk=None):
+    return {"name": name, "unit": unit, "engines": runs_per_engine,
+            "pipelined": pipelined, "chunk": chunk}
+
+
+def trace(name, phases, ws, part, policy):
+    return {"name": name, "phases": phases, "workspace_bytes": ws,
+            "partial_bytes": part, "policy": policy}
+
+
+def phase_total_steps(ph):
+    return sum(r for e in ph["engines"] for _, r in e)
+
+
+def phase_active_engines(ph):
+    return sum(1 for e in ph["engines"] if e)
+
+
+def is_reduce(ph):
+    return ph["unit"] == "vector" and ph["name"].startswith("reduce")
+
+
+def is_dequant(ph):
+    return ph["unit"] == "vector" and "dequant" in ph["name"]
+
+
+def trace_reduce_steps(tr):
+    return sum(r for ph in tr["phases"] for e in ph["engines"]
+               for s, r in e if s[0][0] == "reduce")
+
+
+def exposed_reduce_range(tr):
+    phases = tr["phases"]
+    n = len(phases)
+    if n == 0:
+        return None
+    start = n - 1
+    while start > 0 and phases[start]["pipelined"]:
+        start -= 1
+    if start == 0:
+        return None
+    if all(is_reduce(p) for p in phases[start:]):
+        return (start, n)
+    return None
+
+
+def dequant_prologue(tr):
+    if tr["phases"] and is_dequant(tr["phases"][0]):
+        return 0
+    return None
+
+
+# --- memory.rs -------------------------------------------------------------
+
+class Ledger:
+    __slots__ = ("carried_partial_hit", "carried_weight_hit", "reserved_bytes")
+
+    def __init__(self, carried_partial_hit=0.0, carried_weight_hit=0.0,
+                 reserved_bytes=0):
+        self.carried_partial_hit = carried_partial_hit
+        self.carried_weight_hit = carried_weight_hit
+        self.reserved_bytes = reserved_bytes
+
+    def available_capacity(self):
+        return max(L2_RETENTION * float(L2_BYTES) - float(self.reserved_bytes), 0.0)
+
+    def attenuation(self, tr):
+        cap = self.available_capacity()
+        if cap <= 0.0:
+            return 0.0
+        if tr["policy"][0] == "pinned":
+            footprint = tr["policy"][1] + tr["partial_bytes"]
+        else:
+            footprint = tr["workspace_bytes"] + tr["partial_bytes"]
+        return max(1.0 - float(footprint) / cap, 0.0)
+
+
+class L2Model:
+    __slots__ = ("workspace_hit", "partial_hit", "carried_hit", "carried_weight_hit")
+
+    def __init__(self, ws, part, carried, cweight):
+        self.workspace_hit = ws
+        self.partial_hit = part
+        self.carried_hit = carried
+        self.carried_weight_hit = cweight
+
+
+def l2_with_capacity(cap, ws_bytes, part_bytes):
+    def hit(b):
+        if b == 0:
+            return 0.0
+        total = float(ws_bytes + part_bytes)
+        share = cap * float(b) / total
+        return min(share / float(b), 1.0)
+    return L2Model(hit(ws_bytes), hit(part_bytes), 0.0, 0.0)
+
+
+def l2_for_trace(tr, ledger):
+    cap = ledger.available_capacity()
+    if tr["policy"][0] == "buffered":
+        model = l2_with_capacity(cap, tr["workspace_bytes"], tr["partial_bytes"])
+    else:
+        resident = tr["policy"][1]
+        pinned = min(float(resident), cap)
+        ws_hit = 0.0 if resident == 0 else pinned / float(resident)
+        leftover = max(cap - pinned, 0.0)
+        pb = tr["partial_bytes"]
+        part_hit = 0.0 if pb == 0 else min(leftover / float(pb), 1.0)
+        model = L2Model(ws_hit, part_hit, 0.0, 0.0)
+    model.carried_hit = min(max(ledger.carried_partial_hit, 0.0), 1.0)
+    model.carried_weight_hit = min(max(ledger.carried_weight_hit, 0.0), 1.0)
+    return model
+
+
+def read_l2_fraction(l2, cls):
+    if cls == WS:
+        return l2.workspace_hit
+    if cls == PART:
+        return l2.partial_hit
+    if cls == CPART:
+        return l2.carried_hit
+    if cls == CWEIGHT:
+        return l2.carried_weight_hit
+    return 0.0
+
+
+def write_split(l2, cls):
+    # (l2_fraction, writeback_fraction)
+    if cls == WS:
+        return (1.0, 1.0 - l2.workspace_hit)
+    if cls == PART:
+        return (1.0, 1.0 - l2.partial_hit)
+    return (1.0, 1.0)
+
+
+# --- mte.rs ----------------------------------------------------------------
+
+def burst_efficiency(burst):
+    if burst == 0:
+        return 1.0
+    return min(float(burst) / DMA_BURST, 1.0)
+
+
+def step_traffic(l2, st):
+    hbm = 0.0
+    l2b = 0.0
+    for cls, b in st[1]:
+        if b == 0:
+            continue
+        frac = read_l2_fraction(l2, cls)
+        l2b += float(b) * frac
+        hbm += float(b) * (1.0 - frac)
+    for cls, b in st[2]:
+        if b == 0:
+            continue
+        lf, wb = write_split(l2, cls)
+        l2b += float(b) * lf
+        hbm += float(b) * wb
+    return hbm, l2b
+
+
+def step_compute_ns(unit, st):
+    ns = cube_op_ns(st[0]) if unit == "cube" else vector_op_ns(st[0])
+    if ns is None:
+        raise ValueError(f"op {st[0]} not executable on {unit}")
+    return ns
+
+
+class Demand:
+    __slots__ = ("active", "hbm_total", "l2_total", "hbm_max", "l2_max",
+                 "compute_max", "compute_total", "steps")
+
+    def __init__(self):
+        self.active = 0
+        self.hbm_total = 0.0
+        self.l2_total = 0.0
+        self.hbm_max = 0.0
+        self.l2_max = 0.0
+        self.compute_max = 0.0
+        self.compute_total = 0.0
+        self.steps = 0
+
+
+def phase_demand(l2, ph):
+    d = Demand()
+    d.active = phase_active_engines(ph)
+    for runs in ph["engines"]:
+        if not runs:
+            continue
+        e_hbm = 0.0
+        e_l2 = 0.0
+        e_compute = 0.0
+        n_steps = 0
+        for st, run in runs:
+            hbm, l2b = step_traffic(l2, st)
+            eff = burst_efficiency(st[3])
+            e_hbm += hbm / eff * float(run)
+            e_l2 += l2b / eff * float(run)
+            e_compute += step_compute_ns(ph["unit"], st) * float(run)
+            n_steps += run
+        d.hbm_total += e_hbm
+        d.l2_total += e_l2
+        d.compute_total += e_compute
+        d.hbm_max = max(d.hbm_max, e_hbm)
+        d.l2_max = max(d.l2_max, e_l2)
+        d.compute_max = max(d.compute_max, e_compute)
+        d.steps += n_steps
+    return d
+
+
+def aggregate_bw(shared, active):
+    return min(MTE_BW * float(max(active, 1)), shared)
+
+
+def hbm_time_ns(d):
+    if d.hbm_total == 0.0:
+        return 0.0
+    return d.hbm_total / aggregate_bw(HBM_BW, d.active)
+
+
+def l2_time_ns(d):
+    if d.l2_total == 0.0:
+        return 0.0
+    return d.l2_total / aggregate_bw(L2_BW, d.active)
+
+
+# --- npu.rs ----------------------------------------------------------------
+
+class SimReport:
+    __slots__ = ("name", "total_ns", "launch_ns", "barrier_ns", "groups",
+                 "phase_times", "l2", "ledger")
+
+
+def build_byte_ledger(l2, phases):
+    ledger = {}
+    for ph in phases:
+        for runs in ph["engines"]:
+            for st, run in runs:
+                for cls, b in st[1]:
+                    if b == 0:
+                        continue
+                    frac = read_l2_fraction(l2, cls)
+                    t = ledger.setdefault(cls, [0.0, 0.0, 0.0, 0.0])
+                    t[2] += float(b * run) * frac           # l2_read
+                    t[0] += float(b * run) * (1.0 - frac)   # hbm_read
+                for cls, b in st[2]:
+                    if b == 0:
+                        continue
+                    lf, wb = write_split(l2, cls)
+                    t = ledger.setdefault(cls, [0.0, 0.0, 0.0, 0.0])
+                    t[3] += float(b * run) * lf             # l2_write
+                    t[1] += float(b * run) * wb             # hbm_write
+    return ledger
+
+
+def run_with_residency(tr, ledger_in=None, want_ledger=False):
+    ledger_in = ledger_in or Ledger()
+    l2 = l2_for_trace(tr, ledger_in)
+    demands = [phase_demand(l2, ph) for ph in tr["phases"]]
+
+    groups = []
+    for i, ph in enumerate(tr["phases"]):
+        if i == 0 or not ph["pipelined"]:
+            groups.append([i])
+        else:
+            groups[-1].append(i)
+
+    r = SimReport()
+    r.name = tr["name"]
+    r.phase_times = []
+    r.groups = []
+    total = LAUNCH_NS
+    r.launch_ns = LAUNCH_NS
+    r.barrier_ns = BARRIER_NS * float(max(len(groups) - 1, 0))
+    total += r.barrier_ns
+
+    for gi, group in enumerate(groups):
+        g_hbm = g_l2 = g_cube = g_vector = 0.0
+        for pi in group:
+            d = demands[pi]
+            ph = tr["phases"][pi]
+            h = hbm_time_ns(d)
+            l = l2_time_ns(d)
+            c = d.compute_max
+            g_hbm += h
+            g_l2 += l
+            if ph["unit"] == "cube":
+                g_cube += c
+            else:
+                g_vector += c
+            r.phase_times.append({
+                "name": ph["name"], "unit": ph["unit"], "group": gi,
+                "hbm_ns": h, "l2_ns": l, "compute_ns": c,
+                "standalone_ns": max(h, l, c),
+            })
+        max_ns = max(g_hbm, g_l2, g_cube, g_vector)
+        first = demands[group[0]]
+        steps_per_engine = max(float(first.steps) / float(max(first.active, 1)), 1.0)
+        transfer_step = (hbm_time_ns(first) + l2_time_ns(first)) / steps_per_engine
+        compute_step = first.compute_max / steps_per_engine
+        fill = min(transfer_step, compute_step) + EVENT_NS
+        chunk_ids = [tr["phases"][pi]["chunk"] for pi in group
+                     if tr["phases"][pi]["chunk"] is not None]
+        rotations = float(max(chunk_ids) - min(chunk_ids)) if chunk_ids else 0.0
+        g_total = max_ns + fill + EVENT_NS * rotations
+        r.groups.append({
+            "phases": group, "hbm_ns": g_hbm, "l2_ns": g_l2,
+            "cube_ns": g_cube, "vector_ns": g_vector, "total_ns": g_total,
+        })
+        total += g_total
+
+    r.total_ns = total
+    r.l2 = l2
+    r.ledger = build_byte_ledger(l2, tr["phases"]) if want_ledger else None
+    return r
+
+
+def run(tr, want_ledger=False):
+    return run_with_residency(tr, None, want_ledger)
+
+
+def run_merged_with(kernels, base=None):
+    base = base or Ledger()
+    total = 0.0
+    carried = 0.0
+    reports = []
+    for i, tr in enumerate(kernels):
+        led = Ledger(carried, base.carried_weight_hit, base.reserved_bytes)
+        r = run_with_residency(tr, led)
+        if i == 0:
+            carried = r.l2.partial_hit
+        else:
+            carried *= led.attenuation(tr)
+        total += r.total_ns
+        reports.append(r)
+    return total, reports
+
+
+# --- kernels ---------------------------------------------------------------
+
+def round_robin_counts(items, engines):
+    return [len(range(e, items, engines)) for e in range(engines)]
+
+
+def round_robin_steps(items, engines, k_steps, mid, last):
+    """Per-engine run lists for `items` work items of k_steps steps each
+    (mid x (k_steps-1) then last), mirroring kernels::round_robin_steps.
+    Consecutive identical steps merge exactly as Rust's pricing loop
+    groups them."""
+    out = []
+    for count in round_robin_counts(items, engines):
+        if count == 0:
+            out.append([])
+            continue
+        runs = []
+        if k_steps == 1:
+            runs.append((last, count))
+        else:
+            for _ in range(count):
+                runs.append((mid, k_steps - 1))
+                runs.append((last, 1))
+        out.append(runs)
+    return out
+
+
+def dequant_phase(name, n, k, t, engines, pipelined, group, chunk=None):
+    k_tiles = k // t["dequant_bk"]
+    n_tiles = n // t["dequant_bn"]
+    tiles = k_tiles * n_tiles
+    elems = t["dequant_bk"] * t["dequant_bn"]
+    st = step(("dequant", elems),
+              reads=((WP, elems // 2),
+                     (QP, 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4)),
+              writes=((WS, elems * 2),))
+    runs = [[(st, c)] if c else [] for c in round_robin_counts(tiles, engines)]
+    return phase(name, "vector", runs, pipelined, chunk)
+
+
+def reduce_phases(m, n, t, mode):
+    out_tiles = (m_padded(m) // t["bm"]) * (n // t["bn"])
+    elems = t["bm"] * t["bn"]
+    st = step(("reduce", elems, t["splits"]),
+              reads=((PART, t["splits"] * elems * 4),),
+              writes=((OUT, elems * 2),))
+    engines = VEC_CORES
+    counts = round_robin_counts(out_tiles, engines)
+    streamable = mode == "pipelined" and out_tiles >= 2 * engines
+    if not streamable:
+        return [phase("reduce", "vector",
+                      [[(st, c)] if c else [] for c in counts], False)]
+    stream = [[(st, c - 1)] if c - 1 else [] for c in counts]
+    tail = [[(st, 1)] for _ in counts]
+    return [phase("reduce_stream", "vector", stream, True),
+            phase("reduce_tail", "vector", tail, False)]
+
+
+def splitk_schedule(p, t, mode="auto"):
+    if mode == "auto":
+        return resolve_reduce_auto(lambda md: splitk_schedule(p, t, md))
+    m, n, k, group = p
+    ks = k // t["splits"]
+    k_steps = ks // t["bk"]
+    p1 = dequant_phase("dequant", n, k, t, VEC_CORES, False, group)
+    single = t["splits"] == 1
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    a_tile = t["bm"] * t["bk"] * 2
+    b_tile = t["bk"] * t["bn"] * 2
+    c_tile = t["bm"] * t["bn"] * (2 if single else 4)
+    c_class = OUT if single else PART
+    mid = step(("mmad", t["bm"], t["bn"], t["bk"]),
+               reads=((WS, b_tile), (ACT, a_tile)), burst=t["bn"] * 2)
+    last = step(("mmad", t["bm"], t["bn"], t["bk"]),
+                reads=((WS, b_tile), (ACT, a_tile)),
+                writes=((c_class, c_tile),), burst=t["bn"] * 2)
+    p2 = phase("splitk_mmad", "cube",
+               round_robin_steps(items, AI_CORES, k_steps, mid, last), True)
+    if single:
+        return trace(f"splitk_m{m}_n{n}_k{k}_s1", [p1, p2],
+                     f16_weight_bytes(n, k), 0, ("buffered",))
+    phases = [p1, p2] + reduce_phases(m, n, t, mode)
+    return trace(f"splitk_m{m}_n{n}_k{k}_s{t['splits']}", phases,
+                 f16_weight_bytes(n, k),
+                 t["splits"] * m_padded(m) * n * 4, ("buffered",))
+
+
+def chunked_schedule(p, t, mode="auto"):
+    if mode == "auto":
+        return resolve_reduce_auto(lambda md: chunked_schedule(p, t, md))
+    m, n, k, group = p
+    chunks = max(t["chunks"], 1)
+    kc = k // chunks
+    k_steps = (kc // t["splits"]) // t["bk"]
+    single = t["splits"] == 1
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    a_tile = t["bm"] * t["bk"] * 2
+    b_tile = t["bk"] * t["bn"] * 2
+    c_tile = t["bm"] * t["bn"] * (2 if single else 4)
+    c_class = OUT if single else PART
+    mid = step(("mmad", t["bm"], t["bn"], t["bk"]),
+               reads=((WS, b_tile), (ACT, a_tile)), burst=t["bn"] * 2)
+    last = step(("mmad", t["bm"], t["bn"], t["bk"]),
+                reads=((WS, b_tile), (ACT, a_tile)),
+                writes=((c_class, c_tile),), burst=t["bn"] * 2)
+    phases = []
+    for c in range(chunks):
+        dq = dequant_phase("chunk_dequant", n, kc, t, VEC_CORES, c > 0, group, c)
+        phases.append(dq)
+        tail = last if c == chunks - 1 else mid
+        phases.append(phase("chunk_mmad", "cube",
+                            round_robin_steps(items, AI_CORES, k_steps, mid, tail),
+                            True, c))
+    if not single:
+        phases += reduce_phases(m, n, t, mode)
+    slice_bytes = kc * n * 2
+    resident = slice_bytes * min(chunks, 2)
+    if chunks > 1:
+        ws, policy = resident, ("pinned", resident)
+    else:
+        ws, policy = f16_weight_bytes(n, k), ("buffered",)
+    return trace(f"chunked_m{m}_n{n}_k{k}_s{t['splits']}_c{chunks}", phases, ws,
+                 0 if single else t["splits"] * m_padded(m) * n * 4, policy)
+
+
+def dp_schedule(p, t):
+    m, n, k, group = p
+    assert t["splits"] == 1
+    strips = (m_padded(m) // t["bm"]) * (n // t["bn"])
+    active = min(strips, AI_CORES)
+    p1 = dequant_phase("dequant", n, k, t,
+                       min(active * VEC_PER_CORE, VEC_CORES), False, group)
+    k_steps = k // t["bk"]
+    a_tile = t["bm"] * t["bk"] * 2
+    b_tile = t["bk"] * t["bn"] * 2
+    out_tile = t["bm"] * t["bn"] * 2
+    mid = step(("mmad", t["bm"], t["bn"], t["bk"]),
+               reads=((WS, b_tile), (ACT, a_tile)), burst=t["bn"] * 2)
+    last = step(("mmad", t["bm"], t["bn"], t["bk"]),
+                reads=((WS, b_tile), (ACT, a_tile)),
+                writes=((OUT, out_tile),), burst=t["bn"] * 2)
+    p2 = phase("dp_mmad", "cube",
+               round_robin_steps(strips, AI_CORES, k_steps, mid, last), True)
+    return trace(f"dp_m{m}_n{n}_k{k}", [p1, p2], f16_weight_bytes(n, k), 0,
+                 ("buffered",))
+
+
+def fp16_schedule(p, t):
+    m, n, k, _ = p
+    assert t["splits"] == 1
+    strips = (m_padded(m) // t["bm"]) * (n // t["bn"])
+    k_steps = k // t["bk"]
+    a_tile = t["bm"] * t["bk"] * 2
+    b_tile = t["bk"] * t["bn"] * 2
+    out_tile = t["bm"] * t["bn"] * 2
+    mid = step(("mmad", t["bm"], t["bn"], t["bk"]),
+               reads=((WF16, b_tile), (ACT, a_tile)), burst=t["bn"] * 2)
+    last = step(("mmad", t["bm"], t["bn"], t["bk"]),
+                reads=((WF16, b_tile), (ACT, a_tile)),
+                writes=((OUT, out_tile),), burst=t["bn"] * 2)
+    ph = phase("fp16_mmad", "cube",
+               round_robin_steps(strips, AI_CORES, k_steps, mid, last), False)
+    return trace(f"fp16_m{m}_n{n}_k{k}", [ph], 0, 0, ("buffered",))
+
+
+def fused_schedule(p, t):
+    m, n, k, group = p
+    ks = k // t["splits"]
+    k_steps = ks // t["bk"]
+    single = t["splits"] == 1
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    a_tile = t["bm"] * t["bk"] * 2
+    b_packed = t["bk"] * t["bn"] // 2
+    qparam = 2 * max(t["bk"] // group, 1) * t["bn"] * 4
+    c_tile = t["bm"] * t["bn"] * (2 if single else 4)
+    c_class = OUT if single else PART
+    mid = step(("mmad", t["bm"], t["bn"], t["bk"]),
+               reads=((WP, b_packed + qparam), (ACT, a_tile)))
+    last = step(("mmad", t["bm"], t["bn"], t["bk"]),
+                reads=((WP, b_packed + qparam), (ACT, a_tile)),
+                writes=((c_class, c_tile),))
+    p1 = phase("fused_mmad", "cube",
+               round_robin_steps(items, AI_CORES, k_steps, mid, last), False)
+    if single:
+        return trace(f"fused_m{m}_n{n}_k{k}_s1", [p1], 0, 0, ("buffered",))
+    out_tiles = (m_padded(m) // t["bm"]) * (n // t["bn"])
+    elems = t["bm"] * t["bn"]
+    rstep = step(("reduce", elems, t["splits"]),
+                 reads=((PART, t["splits"] * elems * 4),),
+                 writes=((OUT, elems * 2),))
+    runs = [[(rstep, c)] if c else []
+            for c in round_robin_counts(out_tiles, VEC_CORES)]
+    p2 = phase("reduce", "vector", runs, False)
+    return trace(f"fused_m{m}_n{n}_k{k}_s{t['splits']}", [p1, p2], 0,
+                 t["splits"] * m_padded(m) * n * 4, ("buffered",))
+
+
+def resolve_reduce_auto(build):
+    pipelined = build("pipelined")
+    if not any(ph["name"] == "reduce_stream" for ph in pipelined["phases"]):
+        return pipelined
+    barrier = build("barrier")
+    p_ns = run(pipelined).total_ns
+    b_ns = run(barrier).total_ns
+    return pipelined if p_ns <= b_ns else barrier
+
+
+# --- tiling.rs -------------------------------------------------------------
+
+def tiling(bm, bn, bk, splits, chunks, dq_bk, dq_bn):
+    return {"bm": bm, "bn": bn, "bk": bk, "splits": splits, "chunks": chunks,
+            "dequant_bk": dq_bk, "dequant_bn": dq_bn}
+
+
+def tiling_validate(t, p):
+    m, n, k, group = p
+    mp = m_padded(m)
+    if not block_fits_l0(t["bm"], t["bn"], t["bk"]):
+        return False
+    if not dequant_tile_fits_ub(t["dequant_bk"], t["dequant_bn"]):
+        return False
+    if k % t["splits"] != 0:
+        return False
+    ks = k // t["splits"]
+    if ks % t["bk"] != 0 or mp % t["bm"] != 0 or n % t["bn"] != 0:
+        return False
+    if t["dequant_bk"] % group != 0:
+        return False
+    if k % t["dequant_bk"] != 0 or n % t["dequant_bn"] != 0:
+        return False
+    if t["chunks"] < 1:
+        return False
+    if t["chunks"] > 1:
+        if k % t["chunks"] != 0:
+            return False
+        kc = k // t["chunks"]
+        if kc % t["splits"] != 0:
+            return False
+        if (kc // t["splits"]) % t["bk"] != 0:
+            return False
+        if kc % t["dequant_bk"] != 0:
+            return False
+    return True
+
+
+def pow2_divisor(n, cap, floor):
+    b = cap
+    while b > floor and n % b != 0:
+        b //= 2
+    return b
+
+
+def phase2_cost(p, t):
+    m, n, k, _ = p
+    mp = m_padded(m)
+    items = t["splits"] * (mp // t["bm"]) * (n // t["bn"])
+    active = float(max(min(items, AI_CORES), 1))
+    agg = lambda shared: min(MTE_BW * active, shared)
+    ws_bytes = float(f16_weight_bytes(n, k)) * float(mp // t["bm"])
+    a_bytes = float(items) * float(t["bm"] * (k // t["splits"]) * 2)
+    partial_bytes = float(t["splits"] * mp * n * 4 * 2)
+    eff = min(float(t["bn"]) * 2.0 / DMA_BURST, 1.0)
+    t_l2 = ws_bytes / eff / agg(L2_BW)
+    t_hbm = (a_bytes / eff + partial_bytes) / agg(HBM_BW)
+    sync = BARRIER_NS if t["splits"] > 1 else 0.0
+    return max(t_l2, t_hbm) + sync
+
+
+def fit_bk(bm, bn, bk):
+    while not block_fits_l0(bm, bn, bk) and bk > 16:
+        bk //= 2
+    return bk
+
+
+def select_splitk(p):
+    m, n, k, group = p
+    mp = m_padded(m)
+    bm = pow2_divisor(mp, 64, 16)
+    m_tiles = mp // bm
+    best = None  # (score, tiling)
+    for bn in (256, 128, 64, 32, 16):
+        if n % bn != 0:
+            continue
+        bk = min(group, k)
+        while not block_fits_l0(bm, bn, bk) and bk > 16:
+            bk //= 2
+        n_tiles = n // bn
+        base = n_tiles * m_tiles
+        splits = 1
+        while True:
+            t = tiling(bm, bn, bk, splits, 1, group, pow2_divisor(n, 256, 16))
+            if tiling_validate(t, p):
+                score = phase2_cost(p, t)
+                if best is None:
+                    better = True
+                else:
+                    bscore, bt = best
+                    better = score < bscore * 0.95 or (score <= bscore and bn > bt["bn"])
+                if better:
+                    best = (score, t)
+            if (splits * base >= AI_CORES or k % (2 * splits) != 0
+                    or (k // (2 * splits)) % group != 0
+                    or (k // (2 * splits)) % bk != 0):
+                break
+            splits *= 2
+    assert best is not None, f"no legal splitk tiling for {p}"
+    return best[1]
+
+
+def select_fp16(p):
+    m, n, k, group = p
+    mp = m_padded(m)
+    best = None
+    for bn in (256, 128, 64, 32, 16):
+        if n % bn != 0:
+            continue
+        for bm in (128, 64, 32, 16):
+            if mp % bm != 0:
+                continue
+            bk = min(group, k)
+            while not block_fits_l0(bm, bn, bk) and bk > 16:
+                bk //= 2
+            t = tiling(bm, bn, bk, 1, 1, group, pow2_divisor(n, 256, 16))
+            if not tiling_validate(t, p):
+                continue
+            strips = (mp // bm) * (n // bn)
+            active = float(max(min(strips, AI_CORES), 1))
+            weight_bytes = float(f16_weight_bytes(n, k)) * float(mp // bm)
+            t_hbm = weight_bytes / min(MTE_BW * active, HBM_BW)
+            t_compute = (float(macs(m, n, k)) / CUBE_MACS) / CLOCK_GHZ / active
+            score = max(t_hbm, t_compute)
+            if best is None:
+                better = True
+            else:
+                bscore, bt = best
+                better = score < bscore * 0.98 or (
+                    score <= bscore and bn + bm > bt["bn"] + bt["bm"])
+            if better:
+                best = (score, t)
+    assert best is not None
+    return best[1]
+
+
+def select_data_parallel(p):
+    m, n, k, group = p
+    mp = m_padded(m)
+    bn = pow2_divisor(n, 256, 16)
+    bk = group
+    while not block_fits_l0(16, bn, bk) and bk > 16:
+        bk //= 2
+    bm = pow2_divisor(mp, 128, 16)
+    t = tiling(bm, bn, bk, 1, 1, group, pow2_divisor(n, 256, 16))
+    assert tiling_validate(t, p)
+    return t
+
+
+def select_chunked(p):
+    m, n, k, group = p
+    base = select_splitk(p)
+    budget = L2_RETENTION * float(L2_BYTES)
+    resident = lambda c: float((k // c) * n * 2 * min(c, 2))
+    if resident(1) <= budget:
+        return base
+    legal = lambda c: tiling_validate(dict(base, chunks=c), p)
+    max_chunks = min(k // base["dequant_bk"], 64)
+    fit = None
+    deepest = 1
+    for c in range(2, max_chunks + 1):
+        if not legal(c):
+            continue
+        deepest = c
+        if resident(c) <= budget:
+            fit = c
+            break
+    candidate = fit if fit is not None else deepest
+    if candidate == 1:
+        return base
+    mono = base
+    chunky = dict(base, chunks=candidate)
+    mono_ns = run(chunked_schedule(p, mono)).total_ns
+    chunky_ns = run(chunked_schedule(p, chunky)).total_ns
+    return chunky if chunky_ns <= mono_ns else mono
+
+
+STRATEGIES = ("splitk", "data_parallel", "fp16_native", "fused", "chunked")
+
+
+def select_tiling(p, strategy):
+    if strategy in ("splitk", "fused"):
+        return select_splitk(p)
+    if strategy == "data_parallel":
+        return select_data_parallel(p)
+    if strategy == "fp16_native":
+        return select_fp16(p)
+    if strategy == "chunked":
+        return select_chunked(p)
+    raise ValueError(strategy)
+
+
+def schedule_with_reduce(p, strategy, t, mode="auto"):
+    if strategy == "splitk":
+        return splitk_schedule(p, t, mode)
+    if strategy == "data_parallel":
+        return dp_schedule(p, t)
+    if strategy == "fp16_native":
+        return fp16_schedule(p, t)
+    if strategy == "fused":
+        return fused_schedule(p, t)
+    if strategy == "chunked":
+        return chunked_schedule(p, t, mode)
+    raise ValueError(strategy)
+
+
+def schedule(p, strategy):
+    return schedule_with_reduce(p, strategy, select_tiling(p, strategy))
+
+
+# --- tune/search.rs --------------------------------------------------------
+
+def search_candidates(p, strategy):
+    try:
+        base = select_tiling(p, strategy)
+    except AssertionError:
+        return []
+    out = [base]
+
+    def push(t):
+        if t not in out:
+            out.append(t)
+
+    _, n, k, group = p
+    if strategy in ("splitk", "fused", "chunked"):
+        if base["splits"] > 1:
+            push(dict(base, splits=base["splits"] // 2))
+        push(dict(base, splits=base["splits"] * 2))
+    if strategy == "chunked":
+        if base["chunks"] > 1:
+            push(dict(base, chunks=base["chunks"] // 2))
+            push(dict(base, chunks=1))
+        push(dict(base, chunks=base["chunks"] * 2))
+    for bn in (256, 128, 64):
+        if bn == base["bn"] or n % bn != 0:
+            continue
+        bk = fit_bk(base["bm"], bn, min(group, k))
+        push(dict(base, bn=bn, bk=bk))
+    if base["bm"] > 16:
+        push(dict(base, bm=base["bm"] // 2))
+    for dq_bn in (256, 128, 64):
+        if dq_bn == base["dequant_bn"] or n % dq_bn != 0:
+            continue
+        push(dict(base, dequant_bn=dq_bn))
+    return out
+
+
+def tune_search(p):
+    scored = []
+    for strategy in STRATEGIES:
+        for t in search_candidates(p, strategy):
+            if not tiling_validate(t, p):
+                continue
+            try:
+                tr = schedule_with_reduce(p, strategy, t)
+            except AssertionError:
+                continue
+            scored.append((strategy, t, run(tr).total_ns))
+    assert scored, f"no legal schedule for {p}"
+    scored.sort(key=lambda e: e[2])
+    return scored[0]
+
+
+class Tuner:
+    def __init__(self):
+        self.cache = {}
+
+    def key(self, p):
+        m, n, k, group = p
+        return (m_padded(m), n, k, group)
+
+    def resolve(self, p):
+        key = self.key(p)
+        if key not in self.cache:
+            self.cache[key] = tune_search(p)
+        return self.cache[key]
+
+
+# --- coschedule.rs ---------------------------------------------------------
+
+def carry_step(st):
+    reads = tuple((CPART if cls == PART and b > 0 else cls, b)
+                  for cls, b in st[1])
+    return (st[0], reads, st[2], st[3])
+
+
+def merge_runs(runs):
+    """Merge adjacent equal-step runs — the Rust pricing loop groups a
+    flat step list maximally, so concatenated run lists must re-merge to
+    keep the float accumulation order identical."""
+    out = []
+    for st, r in runs:
+        if out and out[-1][0] == st:
+            out[-1] = (st, out[-1][1] + r)
+        else:
+            out.append((st, r))
+    return out
+
+
+def splice(producer, consumer):
+    rng = exposed_reduce_range(producer)
+    dq = dequant_prologue(consumer)
+    if rng is None or dq is None:
+        return None
+    start, end = rng
+    head = dict(producer, name=producer["name"] + "_head",
+                phases=producer["phases"][:start])
+    carried = []
+    for ph in producer["phases"][start:end]:
+        if len(ph["engines"]) > len(carried):
+            carried += [[] for _ in range(len(ph["engines"]) - len(carried))]
+        for e, runs in enumerate(ph["engines"]):
+            carried[e] += [(carry_step(s), r) for s, r in runs]
+    new_phases = [dict(p) for p in consumer["phases"]]
+    proto = new_phases[dq]
+    engines = [list(r) for r in proto["engines"]]
+    if len(carried) > len(engines):
+        engines += [[] for _ in range(len(carried) - len(engines))]
+    for e, runs in enumerate(carried):
+        if runs:
+            engines[e] = merge_runs(runs + engines[e])
+    proto = dict(proto, name="spliced_dequant", engines=engines)
+    new_phases[dq] = proto
+    spliced = dict(consumer, name=consumer["name"] + "_spliced",
+                   phases=new_phases)
+    return {"name": f"merged_{producer['name']}__{consumer['name']}",
+            "kernels": [head, spliced]}
+
+
+def pair_decision_with(producer, consumer, sequential_ns, base=None):
+    merged = splice(producer, consumer)
+    if merged is None:
+        return None
+    merged_ns, _ = run_merged_with(merged["kernels"], base)
+    return (sequential_ns, merged_ns, max(sequential_ns - merged_ns, 0.0))
+
+
+def exposed_tail_steps(producer):
+    rng = exposed_reduce_range(producer)
+    if rng is None:
+        return 0
+    return sum(phase_total_steps(p) for p in producer["phases"][rng[0]:rng[1]])
+
+
+def prologue_steps(consumer):
+    dq = dequant_prologue(consumer)
+    if dq is None:
+        return 0
+    return phase_total_steps(consumer["phases"][dq])
+
+
+def saturates(producer, consumer):
+    tail = exposed_tail_steps(producer)
+    return tail > 0 and tail > prologue_steps(consumer)
+
+
+def distribute_balanced(proto, carried_steps, vec_engines):
+    """carried_steps: flat list of steps (not run-length)."""
+    if not carried_steps:
+        return proto
+    engines = [list(r) for r in proto["engines"]]
+    slots = max(vec_engines, len(engines))
+    engines += [[] for _ in range(slots - len(engines))]
+    load = [sum(r for _, r in e) for e in engines]
+    assigned = [[] for _ in range(slots)]
+    for st in carried_steps:
+        e = min(range(slots), key=lambda i: (load[i], i))
+        load[e] += 1
+        assigned[e].append(st)
+    for e in range(slots):
+        if not assigned[e]:
+            continue
+        runs = []
+        for st in assigned[e]:
+            if runs and runs[-1][0] == st:
+                runs[-1] = (st, runs[-1][1] + 1)
+            else:
+                runs.append((st, 1))
+        engines[e] = merge_runs(runs + engines[e])
+    return dict(proto, name="spliced_dequant", engines=engines)
+
+
+def splice_chain(vec_engines, producer, first, second):
+    rng = exposed_reduce_range(producer)
+    dq1 = dequant_prologue(first)
+    dq2 = dequant_prologue(second)
+    if rng is None or dq1 is None or dq2 is None:
+        return None
+    start, end = rng
+    head = dict(producer, name=producer["name"] + "_head",
+                phases=producer["phases"][:start])
+    carried = []
+    for ph in producer["phases"][start:end]:
+        for runs in ph["engines"]:
+            for st, r in runs:
+                carried += [carry_step(st)] * r
+    cap1 = min(prologue_steps(first), len(carried))
+    to_first, to_second = carried[:cap1], carried[cap1:]
+    s1_phases = [dict(p) for p in first["phases"]]
+    s1_phases[dq1] = distribute_balanced(s1_phases[dq1], to_first, vec_engines)
+    s1 = dict(first, name=first["name"] + "_spliced", phases=s1_phases)
+    s2_phases = [dict(p) for p in second["phases"]]
+    s2_phases[dq2] = distribute_balanced(s2_phases[dq2], to_second, vec_engines)
+    s2 = dict(second, name=second["name"] + "_spliced2", phases=s2_phases)
+    return {"name": f"chain_{producer['name']}__{first['name']}__{second['name']}",
+            "kernels": [head, s1, s2]}
+
+
+def chain_decision(producer, first, second, sequential_ns):
+    merged = splice_chain(VEC_CORES, producer, first, second)
+    if merged is None:
+        return None
+    merged_ns, _ = run_merged_with(merged["kernels"])
+    return (sequential_ns, merged_ns, max(sequential_ns - merged_ns, 0.0))
+
+
+# --- residency.rs ----------------------------------------------------------
+
+def weight_footprint_bytes(p):
+    _, n, k, group = p
+    return packed_weight_bytes(n, k) + 2 * (k // group) * n * 4
+
+
+def pin_budget_bytes():
+    return int(L2_RETENTION * float(L2_BYTES))
+
+
+def carry_weights(tr):
+    phases = []
+    for ph in tr["phases"]:
+        engines = []
+        for runs in ph["engines"]:
+            new_runs = []
+            for st, r in runs:
+                reads = tuple((CWEIGHT if cls in (WP, QP) and b > 0 else cls, b)
+                              for cls, b in st[1])
+                new_runs.append(((st[0], reads, st[2], st[3]), r))
+            engines.append(new_runs)
+        phases.append(dict(ph, engines=engines))
+    return dict(tr, name=tr["name"] + "_resident", phases=phases)
+
+
+def packed_read_bytes(tr):
+    return sum(b * r for ph in tr["phases"] for e in ph["engines"]
+               for st, r in e for cls, b in st[1] if cls in (WP, QP))
+
+
+def price_pins(inputs, pins, extra_ns, price_exact):
+    pinned_bytes = sum(inst * ub for _, inst, ub in pins)
+    ledger = Ledger(0.0, 1.0, pinned_bytes)
+    by_node = {node: inst for node, inst, _ in pins}
+    cold = []       # per node: (trace, unit_ns) or None
+    resident = []   # per node: (trace, unit_ns) or None
+    pinned = []
+    total = extra_ns
+    for i, inp in enumerate(inputs):
+        count = max(inp["count"], 1)
+        p = min(by_node.get(i, 0), count)
+        if p < count:
+            ns = run_with_residency(inp["trace"], ledger).total_ns
+            c = (inp["trace"], ns)
+        else:
+            c = None
+        if p > 0:
+            carried = carry_weights(inp["trace"])
+            ns = run_with_residency(carried, ledger).total_ns
+            r = (carried, ns)
+        else:
+            r = None
+        total += (float(p) * (r[1] if r is not None else 0.0)
+                  + float(count - p) * (c[1] if c is not None else 0.0))
+        cold.append(c)
+        resident.append(r)
+        pinned.append(p)
+    if price_exact:
+        gain = 0.0
+        for i, inp in enumerate(inputs):
+            count = max(inp["count"], 1)
+            if count < 2:
+                continue
+            # Resident instances first: p-1 resident pairs, count-p-1 cold
+            # pairs, the one mixed adjacency contributes nothing.
+            p = pinned[i]
+            if p > 1:
+                rt, rns = resident[i]
+                d = pair_decision_with(rt, rt, 2.0 * rns, ledger)
+                if d is not None:
+                    gain += float(p - 1) * d[2]
+            if count - p > 1:
+                ct, cns = cold[i]
+                d = pair_decision_with(ct, ct, 2.0 * cns, ledger)
+                if d is not None:
+                    gain += float(count - p - 1) * d[2]
+        boundary = lambda i: cold[i] if cold[i] is not None else resident[i]
+        for i in range(1, len(inputs)):
+            pt, pns = boundary(i - 1)
+            ct, cns = boundary(i)
+            d = pair_decision_with(pt, ct, pns + cns, ledger)
+            if d is not None:
+                gain += d[2]
+        total -= gain
+    return total
+
+
+def plan_nodes(inputs, extra_ns, price_exact):
+    import functools
+    budget = pin_budget_bytes()
+    candidates = []
+    for i, inp in enumerate(inputs):
+        if packed_read_bytes(inp["trace"]) == 0:
+            continue
+        unit_bytes = weight_footprint_bytes(inp["problem"])
+        if unit_bytes == 0 or unit_bytes > budget:
+            continue
+        ledger = Ledger(0.0, 1.0, unit_bytes)
+        resident_ns = run_with_residency(carry_weights(inp["trace"]), ledger).total_ns
+        density = (inp["unit_ns"] - resident_ns) / float(unit_bytes)
+        if density > 0.0:
+            candidates.append((i, unit_bytes, density))
+
+    def cmp(a, b):
+        if a[2] != b[2]:
+            return -1 if b[2] < a[2] else 1
+        return -1 if a[0] < b[0] else (1 if a[0] > b[0] else 0)
+
+    candidates.sort(key=functools.cmp_to_key(cmp))
+    pins = []
+    pinned_bytes = 0
+    for node, unit_bytes, _ in candidates:
+        room = (budget - pinned_bytes) // unit_bytes
+        instances = min(inputs[node]["count"], room)
+        if instances == 0:
+            continue
+        pinned_bytes += instances * unit_bytes
+        pins.append((node, instances, unit_bytes))
+    baseline_ns = price_pins(inputs, [], extra_ns, price_exact)
+    best_ns = baseline_ns
+    best_len = 0
+    for ln in range(1, len(pins) + 1):
+        ns = price_pins(inputs, pins[:ln], extra_ns, price_exact)
+        if ns < best_ns:
+            best_ns = ns
+            best_len = ln
+    pins = pins[:best_len]
+    return {"pins": pins,
+            "pinned_bytes": sum(inst * ub for _, inst, ub in pins),
+            "budget_bytes": budget,
+            "resident_ns": best_ns,
+            "baseline_ns": baseline_ns,
+            "gain_ns": max(baseline_ns - best_ns, 0.0)}
+
+
+# --- vecpass.rs + decode step graph ---------------------------------------
+
+def price_pass(elems, ops_per_elem, hbm_bytes, l2_bytes):
+    engines = max(VEC_CORES, 1)
+    per_engine = float(elems) / float(engines)
+    compute_ns = per_engine * ops_per_elem / LANES_F16 / CLOCK_GHZ
+    hbm_ns = 0.0 if hbm_bytes == 0 else float(hbm_bytes) / aggregate_bw(HBM_BW, engines)
+    l2_ns = 0.0 if l2_bytes == 0 else float(l2_bytes) / aggregate_bw(L2_BW, engines)
+    return max(compute_ns, hbm_ns, l2_ns) + BARRIER_NS
+
+
+def moe_active(experts, topk, batch):
+    pairs = batch * topk
+    return max(min(experts, pairs), 1)
+
+
+def moe_tokens(experts, topk, batch):
+    pairs = batch * topk
+    active = moe_active(experts, topk, batch)
+    return -(-pairs // active)
+
+
+def step_nodes(batch, kv_len, heads, hidden, ffn, kv, group, moe=None):
+    """Mirror of DecodeStep::nodes: list of ('gemm', kind, problem, count)
+    and ('vector', kind, elems, ops_per_elem(float), hbm, l2)."""
+    m, h = batch, hidden
+    head_dim = float(hidden) / float(heads)
+    scores = m * heads * kv_len
+    norm = ("vector", "rmsnorm", m * h, 6.0, 0, 2 * m * h * 2)
+    residual = ("vector", "residual", m * h, 1.0, 0, 3 * m * h * 2)
+    nodes = [
+        norm,
+        ("gemm", "qkv", (m, h + 2 * kv, h, group), 1),
+        ("vector", "attn_score", scores, 2.0 * head_dim,
+         m * kv_len * kv * 2, m * h * 2 + scores * 2),
+        ("vector", "attn_softmax", scores, 8.0, 0, 2 * scores * 2),
+        ("vector", "attn_av", scores, 2.0 * head_dim,
+         m * kv_len * kv * 2, scores * 2 + m * h * 2),
+        ("gemm", "attn_out", (m, h, h, group), 1),
+        residual,
+        norm,
+    ]
+    if moe is None:
+        nodes += [
+            ("gemm", "up_gate", (m, 2 * ffn, h, group), 1),
+            ("vector", "activation", m * ffn, 4.0, 0, 3 * m * ffn * 2),
+            ("gemm", "down", (m, h, ffn, group), 1),
+        ]
+    else:
+        experts, topk, ef = moe
+        active = moe_active(experts, topk, m)
+        tokens = moe_tokens(experts, topk, m)
+        routed = active * tokens
+        nodes += [
+            ("vector", "moe_route", m * experts, 2.0 * float(h) + 8.0,
+             h * experts * 2, m * h * 2 + m * experts * 2),
+            ("gemm", "moe_expert", (tokens, 2 * ef, h, group), active),
+            ("vector", "activation", routed * ef, 4.0, 0, 3 * routed * ef * 2),
+            ("gemm", "moe_expert", (tokens, h, ef, group), active),
+        ]
+    nodes.append(residual)
+    return nodes
+
+
+# --- analysis/layer.rs -----------------------------------------------------
+
+def overlap_terms(r):
+    reduce_tail = 0.0
+    if len(r.groups) > 1:
+        g = r.groups[-1]
+        if all(r.phase_times[pi]["name"].startswith("reduce") for pi in g["phases"]):
+            reduce_tail = g["total_ns"]
+    dequant_slack = 0.0
+    for pt in r.phase_times:
+        if "dequant" in pt["name"]:
+            dequant_slack = max(pt["standalone_ns"] - pt["compute_ns"], 0.0)
+            break
+    return reduce_tail, dequant_slack
+
+
+def simulate_gemm_node(problem, count, strategy, t):
+    served = schedule_with_reduce(problem, strategy, t, "auto")
+    r = run(served)
+    unit_ns = r.total_ns
+    reduce_tail, slack = overlap_terms(r)
+    if strategy in ("splitk", "chunked"):
+        barrier = schedule_with_reduce(problem, strategy, t, "barrier")
+        unit_barrier = run(barrier).total_ns
+    else:
+        unit_barrier = unit_ns
+    return {"problem": problem, "count": max(count, 1), "strategy": strategy,
+            "unit_ns": unit_ns, "unit_barrier_ns": unit_barrier,
+            "total_ns": unit_ns * float(max(count, 1)),
+            "barrier_ns": unit_barrier * float(max(count, 1)),
+            "reduce_tail_ns": reduce_tail, "dequant_slack_ns": slack,
+            "trace": served}
+
+
+def build_ledger_pairs(nodes, price_exact):
+    """nodes: mixed list; gemm entries are dicts from simulate_gemm_node
+    (with an extra 'index' into the step list)."""
+    gemms = [(i, n) for i, n in enumerate(nodes) if isinstance(n, dict)]
+    ledger = []
+
+    def push(pi, p, ci, c, pairs):
+        gain = min(p["reduce_tail_ns"], c["dequant_slack_ns"])
+        exact = None
+        if price_exact:
+            exact = pair_decision_with(p["trace"], c["trace"],
+                                       p["unit_ns"] + c["unit_ns"])
+        if gain > 0.0 or (exact is not None and exact[2] > 0.0):
+            ledger.append({"producer": pi, "consumer": ci, "pairs": pairs,
+                           "gain_ns": gain, "exact": exact, "chain": None,
+                           "superseded": False})
+
+    for i, g in gemms:
+        if g["count"] > 1:
+            push(i, g, i, g, g["count"] - 1)
+    for (ai, a), (bi, b) in zip(gemms, gemms[1:]):
+        push(ai, a, bi, b, 1)
+
+    if price_exact:
+        for w in range(len(gemms) - 2):
+            (ai, a), (bi, b), (ci, c) = gemms[w], gemms[w + 1], gemms[w + 2]
+            # Chains only over single-instance nodes (an expert batch in
+            # the middle would run count-1 more instances between the
+            # spliced consumers than the 3-kernel simulation prices).
+            if a["count"] != 1 or b["count"] != 1 or c["count"] != 1:
+                continue
+            if not saturates(a["trace"], b["trace"]):
+                continue
+
+            def pos(p, q):
+                for idx, e in enumerate(ledger):
+                    if e["producer"] == p and e["consumer"] == q:
+                        return idx
+                return None
+
+            first = pos(ai, bi)
+            if first is not None and (ledger[first]["chain"] is not None
+                                      or ledger[first]["superseded"]):
+                continue
+            second = pos(bi, ci)
+            if second is not None and (ledger[second]["chain"] is not None
+                                       or ledger[second]["superseded"]):
+                continue
+            sequential = a["unit_ns"] + b["unit_ns"] + c["unit_ns"]
+            decision = chain_decision(a["trace"], b["trace"], c["trace"], sequential)
+            if decision is None:
+                continue
+
+            def exact_gain(idx):
+                if idx is None:
+                    return 0.0
+                e = ledger[idx]
+                return e["exact"][2] if e["exact"] is not None else e["gain_ns"]
+
+            replaced_exact = exact_gain(first) + exact_gain(second)
+            replaced_ledger = ((ledger[first]["gain_ns"] if first is not None else 0.0)
+                               + (ledger[second]["gain_ns"] if second is not None else 0.0))
+            if decision[2] <= max(replaced_exact, replaced_ledger) + 1e-9:
+                continue
+            chain = (ci, decision)
+            if first is not None:
+                ledger[first]["chain"] = chain
+            else:
+                ledger.append({"producer": ai, "consumer": bi, "pairs": 1,
+                               "gain_ns": min(a["reduce_tail_ns"], b["dequant_slack_ns"]),
+                               "exact": None, "chain": chain, "superseded": False})
+            if second is not None:
+                ledger[second]["superseded"] = True
+    return ledger
+
+
+def served_exact_gain(e):
+    if e["superseded"]:
+        return 0.0
+    if e["chain"] is not None:
+        return e["chain"][1][2]
+    return e["exact"][2] if e["exact"] is not None else e["gain_ns"]
+
+
+def simulate_step_with(batch, kv_len, heads, hidden, ffn, kv, group, moe,
+                       resolve, overlap_mode="auto", residency_mode="auto"):
+    nodes = []
+    for spec in step_nodes(batch, kv_len, heads, hidden, ffn, kv, group, moe):
+        if spec[0] == "gemm":
+            _, kind, problem, count = spec
+            strategy, t = resolve(problem)
+            node = simulate_gemm_node(problem, count, strategy, t)
+            node["kind"] = kind
+            nodes.append(node)
+        else:
+            _, kind, elems, ops, hbm, l2b = spec
+            nodes.append(price_pass(elems, ops, hbm, l2b))
+    sequential_ns = 0.0
+    for n in nodes:
+        sequential_ns += n["total_ns"] if isinstance(n, dict) else n
+    price_exact = overlap_mode in ("exact", "auto")
+    ledger = build_ledger_pairs(nodes, price_exact)
+    gain = sum(float(e["pairs"]) * e["gain_ns"] for e in ledger)
+    exact_gain = sum(float(e["pairs"]) * served_exact_gain(e) for e in ledger)
+    residency = None
+    if residency_mode == "auto":
+        inputs = []
+        extra_ns = 0.0
+        for n in nodes:
+            if isinstance(n, dict):
+                inputs.append({"problem": n["problem"], "count": n["count"],
+                               "unit_ns": n["unit_ns"], "trace": n["trace"]})
+            else:
+                extra_ns += n
+        residency = plan_nodes(inputs, extra_ns, price_exact)
+    rep = {
+        "nodes": nodes,
+        "sequential_ns": sequential_ns,
+        "overlapped_ns": sequential_ns - gain,
+        "exact_ns": sequential_ns - exact_gain,
+        "residency": residency,
+    }
+    base = {
+        "sequential": rep["sequential_ns"],
+        "overlapped": rep["overlapped_ns"],
+        "exact": rep["exact_ns"],
+        "auto": min(rep["exact_ns"], rep["overlapped_ns"], rep["sequential_ns"]),
+    }[overlap_mode]
+    rep["served_ns"] = min(base, residency["resident_ns"]) if residency else base
+    rep["mode_base_ns"] = base
+    return rep

@@ -12,6 +12,7 @@
 //! Run with `cargo bench --bench e2e_layer`.
 
 use ascend_w4a16::analysis::layer::{self, OverlapMode};
+use ascend_w4a16::analysis::residency::ResidencyMode;
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
 use ascend_w4a16::model::llm::{
@@ -41,8 +42,14 @@ fn bench_model(
             decode_layer = decode_layer.with_moe(moe);
         }
         let step = DecodeStep::new(decode_layer, KV_LEN, DecodeStep::default_heads(&geom));
-        let srep = layer::simulate_step_tuned(machine, &step, OverlapMode::Auto, tuner)
-            .expect("simulate step");
+        let srep = layer::simulate_step_tuned_with(
+            machine,
+            &step,
+            OverlapMode::Auto,
+            ResidencyMode::Auto,
+            tuner,
+        )
+        .expect("simulate step");
         // The step's GEMM sub-chain IS the layer report — no second pass.
         let rep = srep.gemm_report();
         let reduce_speedup = rep.layer_barrier_ns() / rep.layer_ns();
@@ -51,6 +58,12 @@ fn bench_model(
         // (DESIGN.md §12) — and over PR 3's first-order ledger.
         let overlap_exact_speedup = srep.sequential_ns / srep.exact_ns;
         let exact_vs_ledger = srep.overlapped_ns / srep.exact_ns;
+        // What the step-level weight-residency plan buys over the PR-4
+        // Auto plan (DESIGN.md §13): served = min(auto, resident), so the
+        // speedup is >= 1 by construction.
+        let auto_base = srep.auto_ns();
+        let resident_us = srep.resident_ns().unwrap_or(auto_base) / 1e3;
+        let residency_speedup = auto_base / srep.served_ns();
         let strategies: Vec<String> = rep
             .nodes
             .iter()
@@ -58,7 +71,8 @@ fn bench_model(
             .collect();
         println!(
             "b={batch:<3} gemm {:>9.2} us (barrier {:>9.2} us, {:.3}x)  \
-             step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x)  {}",
+             step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x, \
+             resident {:.3}x)  {}",
             rep.layer_ns() / 1e3,
             rep.layer_barrier_ns() / 1e3,
             reduce_speedup,
@@ -66,6 +80,7 @@ fn bench_model(
             srep.sequential_ns / 1e3,
             overlap_speedup,
             overlap_exact_speedup,
+            residency_speedup,
             strategies.join(" "),
         );
         cells.push(Json::obj(vec![
@@ -78,6 +93,13 @@ fn bench_model(
             ("step_us", Json::num(srep.served_ns() / 1e3)),
             ("step_sequential_us", Json::num(srep.sequential_ns / 1e3)),
             ("step_exact_us", Json::num(srep.exact_ns / 1e3)),
+            ("step_resident_us", Json::num(resident_us)),
+            ("residency_speedup", Json::num(residency_speedup)),
+            ("residency_gain_us", Json::num(srep.residency_gain_ns() / 1e3)),
+            (
+                "residency_pinned_bytes",
+                Json::num(srep.residency.as_ref().map(|p| p.pinned_bytes as f64).unwrap_or(0.0)),
+            ),
             ("overlap_speedup", Json::num(overlap_speedup)),
             ("overlap_exact_speedup", Json::num(overlap_exact_speedup)),
             ("overlap_exact_vs_ledger", Json::num(exact_vs_ledger)),
@@ -101,20 +123,24 @@ fn bench_forced_split(machine: &MachineConfig, model: &str, cells: &mut Vec<Json
         decode_layer = decode_layer.with_moe(moe);
     }
     let step = DecodeStep::new(decode_layer, 2048, DecodeStep::default_heads(&geom));
-    let srep = layer::simulate_step(
+    let srep = layer::simulate_step_with(
         machine,
         &step,
         OverlapMode::Auto,
+        ResidencyMode::Auto,
         layer::forced_split_resolver(machine),
     )
     .expect("simulate forced-split step");
     let exact_speedup = srep.sequential_ns / srep.exact_ns;
+    let auto_base = srep.auto_ns();
     println!(
-        "{model:<14} b=8  step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x)",
+        "{model:<14} b=8  step {:>9.2} us (seq {:>9.2} us, ledger {:.3}x, exact {:.3}x, \
+         resident {:.3}x)",
         srep.served_ns() / 1e3,
         srep.sequential_ns / 1e3,
         srep.sequential_ns / srep.overlapped_ns,
         exact_speedup,
+        auto_base / srep.served_ns(),
     );
     cells.push(Json::obj(vec![
         ("model", Json::str(format!("{model}-forced-split"))),
@@ -123,6 +149,9 @@ fn bench_forced_split(machine: &MachineConfig, model: &str, cells: &mut Vec<Json
         ("step_us", Json::num(srep.served_ns() / 1e3)),
         ("step_sequential_us", Json::num(srep.sequential_ns / 1e3)),
         ("step_exact_us", Json::num(srep.exact_ns / 1e3)),
+        ("step_resident_us", Json::num(srep.resident_ns().unwrap_or(auto_base) / 1e3)),
+        ("residency_speedup", Json::num(auto_base / srep.served_ns())),
+        ("residency_gain_us", Json::num(srep.residency_gain_ns() / 1e3)),
         ("overlap_speedup", Json::num(srep.sequential_ns / srep.overlapped_ns)),
         ("overlap_exact_speedup", Json::num(exact_speedup)),
         ("overlap_exact_vs_ledger", Json::num(srep.overlapped_ns / srep.exact_ns)),

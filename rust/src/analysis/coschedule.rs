@@ -25,9 +25,19 @@
 //! double-booked at any simulated cycle — each engine's step list is a
 //! single sequence).  The consumer's chunk-group tags are untouched, so
 //! the chunked pipeline's rotation events are unchanged.
+//!
+//! PR 5 adds the *chain-level* schedule (DESIGN.md §13): when the
+//! producer's exposed tail [`saturates`] the first prologue (more carried
+//! steps than the prologue has dequant steps to hide them under),
+//! [`splice_chain`] spreads the overflow across up to TWO downstream
+//! dequant prologues and re-balances each merged phase least-loaded over
+//! the machine's full vector-engine set.  The overflow crosses two kernel
+//! boundaries, so `Simulator::run_merged` attenuates its carried-partial
+//! residency by the intervening kernel's working set; [`chain_decision`]
+//! declines chains that price slower, exactly like the pair decision.
 
 use crate::ascend::{
-    BufferClass, KernelTrace, MergedTrace, Phase, Simulator, TileStep,
+    BufferClass, KernelTrace, MergedTrace, Phase, ResidencyLedger, Simulator, TileStep,
 };
 
 /// Exact pricing of one co-scheduled adjacent pair.
@@ -124,7 +134,155 @@ pub fn pair_decision(
     consumer: &KernelTrace,
     sequential_ns: f64,
 ) -> anyhow::Result<Option<PairDecision>> {
+    pair_decision_with(sim, producer, consumer, sequential_ns, &ResidencyLedger::default())
+}
+
+/// [`pair_decision`] under a step-level base ledger: the residency
+/// planner prices the same splices with the pinned-weight residency and
+/// its capacity carve-out applied to both kernels (DESIGN.md §13).
+pub fn pair_decision_with(
+    sim: &Simulator,
+    producer: &KernelTrace,
+    consumer: &KernelTrace,
+    sequential_ns: f64,
+    base: &ResidencyLedger,
+) -> anyhow::Result<Option<PairDecision>> {
     let Some(merged) = splice(producer, consumer) else {
+        return Ok(None);
+    };
+    let merged_ns = sim.run_merged_with(&merged, base)?.total_ns;
+    Ok(Some(PairDecision {
+        sequential_ns,
+        merged_ns,
+        gain_ns: (sequential_ns - merged_ns).max(0.0),
+    }))
+}
+
+/// Steps in the producer's exposed reduce tail (0 when nothing is
+/// exposed) — the work a splice has to place downstream.
+pub fn exposed_tail_steps(producer: &KernelTrace) -> usize {
+    match producer.exposed_reduce_range() {
+        Some(range) => producer.phases[range].iter().map(|p| p.total_steps()).sum(),
+        None => 0,
+    }
+}
+
+/// Steps in the consumer's dequant prologue (0 when it has none) — the
+/// splice capacity of one downstream kernel: one carried reduce step per
+/// dequant step keeps the merged phase's transfer stream able to hide the
+/// moved compute, so a tail larger than this *saturates* the prologue.
+pub fn prologue_steps(consumer: &KernelTrace) -> usize {
+    match consumer.dequant_prologue() {
+        Some(dq) => consumer.phases[dq].total_steps(),
+        None => 0,
+    }
+}
+
+/// Whether `producer`'s exposed tail overflows `consumer`'s prologue —
+/// the gate for trying the two-consumer chain splice (DESIGN.md §13).
+pub fn saturates(producer: &KernelTrace, consumer: &KernelTrace) -> bool {
+    let tail = exposed_tail_steps(producer);
+    tail > 0 && tail > prologue_steps(consumer)
+}
+
+/// Distribute carried steps over a prologue's engines *least-loaded*:
+/// unlike the adjacent-pair splice (which preserves the producer's engine
+/// tags), the chain splice re-balances — each carried step goes to the
+/// engine with the fewest total (dequant + carried) steps, ties to the
+/// lowest index, and the engine list may grow up to the machine's vector
+/// cores.  Sound for the same reason the pair splice is: every carried
+/// reduce step is independent of every other (each reduces a distinct
+/// output tile) and of every dequant step (disjoint buffers), so any
+/// serialized per-engine order is legal; carried steps still run before
+/// the engine's dequant steps.
+fn distribute_balanced(phase: &mut Phase, carried: &[TileStep], vec_engines: usize) {
+    if carried.is_empty() {
+        return;
+    }
+    let slots = vec_engines.max(phase.steps_per_engine.len());
+    phase.steps_per_engine.resize(slots, Vec::new());
+    let mut load: Vec<usize> = phase.steps_per_engine.iter().map(|s| s.len()).collect();
+    let mut assigned: Vec<Vec<TileStep>> = vec![Vec::new(); slots];
+    for step in carried {
+        let e = (0..slots).min_by_key(|&e| (load[e], e)).unwrap();
+        load[e] += 1;
+        assigned[e].push(*step);
+    }
+    for (e, mut steps) in assigned.into_iter().enumerate() {
+        if steps.is_empty() {
+            continue;
+        }
+        steps.append(&mut phase.steps_per_engine[e]);
+        phase.steps_per_engine[e] = steps;
+    }
+    phase.name = "spliced_dequant";
+}
+
+/// Chain-level splice (DESIGN.md §13): when `producer`'s exposed tail
+/// saturates `first`'s dequant prologue, hide the overflow in `second`'s
+/// prologue as well — `first` absorbs one carried step per dequant step
+/// (its capacity), `second` takes the rest — and re-balance each merged
+/// phase least-loaded across the machine's vector engines.  Returns the
+/// three-kernel merged trace, or `None` when any side lacks its
+/// spliceable sub-trace.  The overflow steps read the producer's partials
+/// across TWO kernel boundaries, which `Simulator::run_merged` prices
+/// with one attenuation step — the chain only serves when the exact
+/// re-simulation still beats the alternatives.
+pub fn splice_chain(
+    vec_engines: usize,
+    producer: &KernelTrace,
+    first: &KernelTrace,
+    second: &KernelTrace,
+) -> Option<MergedTrace> {
+    let tail = producer.exposed_reduce_range()?;
+    let dq1 = first.dequant_prologue()?;
+    let dq2 = second.dequant_prologue()?;
+
+    let mut head = producer.clone();
+    head.phases.truncate(tail.start);
+    head.name = format!("{}_head", producer.name);
+
+    // Flatten the tail's steps (phase order, then engine order) with
+    // partial reads carried; the re-balance re-assigns engines anyway.
+    let mut carried: Vec<TileStep> = Vec::new();
+    for phase in &producer.phases[tail] {
+        for steps in &phase.steps_per_engine {
+            carried.extend(steps.iter().map(carry_step));
+        }
+    }
+
+    let cap1 = prologue_steps(first).min(carried.len());
+    let (to_first, to_second) = carried.split_at(cap1);
+
+    let mut spliced1 = first.clone();
+    distribute_balanced(&mut spliced1.phases[dq1], to_first, vec_engines);
+    spliced1.name = format!("{}_spliced", first.name);
+
+    let mut spliced2 = second.clone();
+    distribute_balanced(&mut spliced2.phases[dq2], to_second, vec_engines);
+    spliced2.name = format!("{}_spliced2", second.name);
+
+    Some(MergedTrace {
+        name: format!(
+            "chain_{}__{}__{}",
+            producer.name, first.name, second.name
+        ),
+        kernels: vec![head, spliced1, spliced2],
+    })
+}
+
+/// Price one two-consumer chain exactly (DESIGN.md §13).  `sequential_ns`
+/// is the three nodes' back-to-back latency under the served schedules.
+/// Returns `None` when the chain is not spliceable.
+pub fn chain_decision(
+    sim: &Simulator,
+    producer: &KernelTrace,
+    first: &KernelTrace,
+    second: &KernelTrace,
+    sequential_ns: f64,
+) -> anyhow::Result<Option<PairDecision>> {
+    let engines = sim.machine.total_vector_cores();
+    let Some(merged) = splice_chain(engines, producer, first, second) else {
         return Ok(None);
     };
     let merged_ns = sim.run_merged(&merged)?.total_ns;
@@ -275,6 +433,128 @@ mod tests {
         assert!(splice(&producer(), &fp16).is_none());
         let sim = Simulator::new(m);
         assert!(pair_decision(&sim, &producer(), &fp16, 1.0).unwrap().is_none());
+    }
+
+    /// A saturating producer: the expert down-projection shape under a
+    /// barrier reduce exposes all 224 output tiles.
+    fn saturating_producer() -> KernelTrace {
+        let p = GemmProblem::new(8, 7168, 2048);
+        let t = Tiling {
+            bm: 16,
+            bn: 32,
+            bk: 128,
+            splits: 4,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Barrier).unwrap()
+    }
+
+    /// A consumer with a small (32-step) dequant prologue.
+    fn small_consumer() -> KernelTrace {
+        let p = GemmProblem::new(8, 512, 2048);
+        let t = Tiling {
+            bm: 16,
+            bn: 256,
+            bk: 128,
+            splits: 2,
+            chunks: 1,
+            dequant_bk: 128,
+            dequant_bn: 256,
+        };
+        t.validate(&m(), &p).unwrap();
+        splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
+    }
+
+    #[test]
+    fn chain_splice_splits_at_prologue_capacity_and_rebalances() {
+        let m = m();
+        let prod = saturating_producer();
+        let c1 = small_consumer();
+        let c2 = small_consumer();
+        assert_eq!(exposed_tail_steps(&prod), 224, "barrier reduce exposes every tile");
+        assert_eq!(prologue_steps(&c1), 32);
+        assert!(saturates(&prod, &c1));
+        assert!(!saturates(&c1, &c2), "the small pair itself does not saturate");
+        let merged = splice_chain(m.total_vector_cores(), &prod, &c1, &c2)
+            .expect("chain must be spliceable");
+        assert_eq!(merged.kernels.len(), 3);
+        let (head, s1, s2) = (&merged.kernels[0], &merged.kernels[1], &merged.kernels[2]);
+
+        // Work conservation across the three kernels.
+        let macs: u64 = merged.kernels.iter().map(|k| k.total_macs()).sum();
+        assert_eq!(macs, prod.total_macs() + c1.total_macs() + c2.total_macs());
+        let reduces: usize = merged.kernels.iter().map(|k| k.reduce_steps()).sum();
+        assert_eq!(reduces, prod.reduce_steps() + c1.reduce_steps() + c2.reduce_steps());
+        assert_eq!(head.exposed_reduce_range(), None);
+
+        // The split lands exactly at the first prologue's capacity.
+        let tail_steps = exposed_tail_steps(&prod);
+        let cap1 = prologue_steps(&c1).min(tail_steps);
+        assert_eq!(s1.phases[0].total_steps(), prologue_steps(&c1) + cap1);
+        assert_eq!(
+            s2.phases[0].total_steps(),
+            prologue_steps(&c2) + (tail_steps - cap1)
+        );
+
+        // Re-balance: engine lists stay within the machine, per-engine
+        // ordering keeps carried reduce steps ahead of dequant steps, and
+        // the carried load is near-even (least-loaded greedy).
+        for spliced in [s1, s2] {
+            let phase = &spliced.phases[0];
+            assert!(phase.steps_per_engine.len() <= m.total_vector_cores());
+            for steps in &phase.steps_per_engine {
+                let mut seen_dequant = false;
+                for s in steps {
+                    match s.compute {
+                        ComputeOp::Reduce { .. } => {
+                            assert!(!seen_dequant, "reduce after dequant: ordering broken")
+                        }
+                        ComputeOp::Dequant { .. } => seen_dequant = true,
+                        _ => {}
+                    }
+                }
+            }
+            let loads: Vec<usize> =
+                phase.steps_per_engine.iter().map(|s| s.len()).filter(|&l| l > 0).collect();
+            let (min, max) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+            assert!(max - min <= 1, "least-loaded fill must stay near-even: {loads:?}");
+            // Carried reads were re-classed.
+            assert_eq!(phase.read_bytes(BufferClass::Partial), 0);
+            assert!(phase.read_bytes(BufferClass::CarriedWeight) == 0);
+        }
+        assert!(
+            s1.phases[0].read_bytes(BufferClass::CarriedPartial) > 0
+                && s2.phases[0].read_bytes(BufferClass::CarriedPartial) > 0,
+            "both prologues carry part of the tail"
+        );
+
+        // The merged chain validates and prices.
+        let sim = Simulator::new(m.clone());
+        let r = sim.run_merged(&merged).unwrap();
+        assert!(r.total_ns > 0.0 && r.total_ns.is_finite());
+    }
+
+    #[test]
+    fn chain_decision_clamps_and_declines() {
+        let m = m();
+        let sim = Simulator::new(m.clone());
+        let prod = producer();
+        let cons = consumer();
+        let unit_p = sim.run(&prod).unwrap().total_ns;
+        let unit_c = sim.run(&cons).unwrap().total_ns;
+        let seq = unit_p + 2.0 * unit_c;
+        let d = chain_decision(&sim, &prod, &cons, &cons, seq).unwrap().unwrap();
+        assert!(d.gain_ns >= 0.0);
+        assert!((d.gain_ns - (seq - d.merged_ns).max(0.0)).abs() < 1e-9);
+        // Unspliceable chains return None (fp16 consumer has no prologue).
+        let p = GemmProblem::new(8, 2048, 7168);
+        let t = crate::kernels::tiling::select_fp16(&m, &p).unwrap();
+        let fp16 = crate::kernels::fp16_native::schedule(&m, &p, &t).unwrap();
+        assert!(chain_decision(&sim, &prod, &cons, &fp16, seq).unwrap().is_none());
+        assert!(chain_decision(&sim, &prod, &fp16, &cons, seq).unwrap().is_none());
     }
 
     #[test]

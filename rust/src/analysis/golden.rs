@@ -14,7 +14,7 @@ use crate::util::json::Json;
 use crate::workload::decode_layer::{DecodeStep, StepNode};
 
 /// Every buffer class with its stable fixture label.
-const CLASSES: [(BufferClass, &str); 8] = [
+const CLASSES: [(BufferClass, &str); 9] = [
     (BufferClass::WeightPacked, "weight_packed"),
     (BufferClass::WeightF16, "weight_f16"),
     (BufferClass::Activation, "activation"),
@@ -23,6 +23,7 @@ const CLASSES: [(BufferClass, &str); 8] = [
     (BufferClass::Output, "output"),
     (BufferClass::QuantParam, "quant_param"),
     (BufferClass::CarriedPartial, "carried_partial"),
+    (BufferClass::CarriedWeight, "carried_weight"),
 ];
 
 fn bytes_obj(phase: &Phase, write: bool) -> Json {

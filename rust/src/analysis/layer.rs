@@ -20,6 +20,7 @@
 //! [`vecpass`]: crate::ascend::vecpass
 
 use super::coschedule::{self, PairDecision};
+use super::residency::{self, ResidencyMode, ResidencyPlan};
 use crate::ascend::{vecpass, KernelTrace, MachineConfig, SimReport, Simulator};
 use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
 use crate::tune::Tuner;
@@ -337,6 +338,24 @@ pub struct OverlapPair {
     /// The co-scheduler's exact decision for one pair (merged-trace
     /// re-simulation), `None` when no merged trace is available.
     pub exact: Option<PairDecision>,
+    /// The chain-level schedule for a saturating producer (DESIGN.md
+    /// §13): the tail spread across this consumer's AND the next
+    /// prologue, re-balanced.  Set only when the chain priced strictly
+    /// better than the two pair decisions it replaces.
+    pub chain: Option<ChainOverlap>,
+    /// This pair's prologue was consumed by an upstream chain; its own
+    /// exact gain is not served (the ledger estimate still renders).
+    pub superseded: bool,
+}
+
+/// The chain-level decision attached to a saturating producer's entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainOverlap {
+    /// Index into [`StepReport::nodes`] of the SECOND consumer whose
+    /// prologue absorbs the tail overflow.
+    pub second_consumer: usize,
+    /// Exact three-kernel pricing (sequential covers all three nodes).
+    pub decision: PairDecision,
 }
 
 impl OverlapPair {
@@ -350,8 +369,22 @@ impl OverlapPair {
         self.exact.map(|d| d.gain_ns).unwrap_or(self.gain_ns)
     }
 
+    /// The per-pair gain the exact plan actually serves once chain-level
+    /// decisions are resolved: the chain's gain where one was applied,
+    /// zero where an upstream chain consumed this prologue, the pair
+    /// decision (or ledger fallback) otherwise.
+    pub fn served_exact_gain_ns(&self) -> f64 {
+        if self.superseded {
+            return 0.0;
+        }
+        match self.chain {
+            Some(c) => c.decision.gain_ns,
+            None => self.exact_gain_ns(),
+        }
+    }
+
     pub fn total_exact_gain_ns(&self) -> f64 {
-        self.pairs as f64 * self.exact_gain_ns()
+        self.pairs as f64 * self.served_exact_gain_ns()
     }
 
     /// Exact minus ledger, per pair (positive when the merged trace beats
@@ -380,19 +413,44 @@ pub struct StepReport {
     /// including under `Sequential`/`Overlapped`, which skip the
     /// merged-trace simulations entirely (they never serve this value).
     pub exact_ns: f64,
+    /// The step-level weight-residency plan (DESIGN.md §13), present when
+    /// the residency mode asked for one.  Its `resident_ns` is the exact
+    /// price of the step with the plan's weights pinned; `served_ns`
+    /// takes `min(mode plan, resident plan)`, so residency is never
+    /// slower by construction.
+    pub residency: Option<ResidencyPlan>,
 }
 
 impl StepReport {
+    /// What `OverlapMode::Auto` would serve WITHOUT the residency plan —
+    /// the PR-4 Auto base the residency speedup is measured against.
+    pub fn auto_ns(&self) -> f64 {
+        self.exact_ns.min(self.overlapped_ns).min(self.sequential_ns)
+    }
+
     /// The step latency the requested mode serves.
     pub fn served_ns(&self) -> f64 {
-        match self.mode {
+        let base = match self.mode {
             OverlapMode::Sequential => self.sequential_ns,
             OverlapMode::Overlapped => self.overlapped_ns,
             OverlapMode::Exact => self.exact_ns,
-            OverlapMode::Auto => {
-                self.exact_ns.min(self.overlapped_ns).min(self.sequential_ns)
-            }
+            OverlapMode::Auto => self.auto_ns(),
+        };
+        match &self.residency {
+            Some(plan) => base.min(plan.resident_ns),
+            None => base,
         }
+    }
+
+    /// The resident plan's exact step price (`None` when residency was
+    /// off or planning found nothing to pin beyond the baseline).
+    pub fn resident_ns(&self) -> Option<f64> {
+        self.residency.as_ref().map(|p| p.resident_ns)
+    }
+
+    /// What the weight-residency plan buys over its unpinned baseline.
+    pub fn residency_gain_ns(&self) -> f64 {
+        self.residency.as_ref().map(|p| p.gain_ns()).unwrap_or(0.0)
     }
 
     /// Per-decode-step latency for a model with `layers` layers.
@@ -475,7 +533,8 @@ fn build_ledger(
         })
         .collect();
     let mut ledger = Vec::new();
-    let mut push = |producer: (usize, &NodeReport),
+    let mut push = |ledger: &mut Vec<OverlapPair>,
+                    producer: (usize, &NodeReport),
                     consumer: (usize, &NodeReport),
                     pairs: usize|
      -> anyhow::Result<()> {
@@ -497,26 +556,121 @@ fn build_ledger(
                 slack_ns: c.dequant_slack_ns,
                 gain_ns: gain,
                 exact,
+                chain: None,
+                superseded: false,
             });
         }
         Ok(())
     };
     for &(i, g) in &gemms {
         if g.count > 1 {
-            push((i, g), (i, g), g.count - 1)?;
+            push(&mut ledger, (i, g), (i, g), g.count - 1)?;
         }
     }
     for w in gemms.windows(2) {
-        push(w[0], w[1], 1)?;
+        push(&mut ledger, w[0], w[1], 1)?;
+    }
+
+    if price_exact {
+        resolve_chains(sim, &gemms, traces, &mut ledger)?;
     }
     Ok(ledger)
 }
 
-/// Simulate the full decode-step graph under an overlap mode.
+/// Chain-level co-scheduling pass (DESIGN.md §13): for every consecutive
+/// GEMM triple whose producer tail saturates the first prologue, price
+/// the two-consumer chain splice and apply it greedily when it strictly
+/// beats BOTH the two pair decisions it replaces and their first-order
+/// ledger terms.  Each prologue is consumed by at most one splice: a
+/// chained producer's second consumer supersedes the (first consumer ->
+/// second consumer) pair, and a superseded or already-chained entry is
+/// never chained again — no vector engine is double-booked across
+/// decisions.
+fn resolve_chains(
+    sim: &Simulator,
+    gemms: &[(usize, &NodeReport)],
+    traces: &[Option<KernelTrace>],
+    ledger: &mut Vec<OverlapPair>,
+) -> anyhow::Result<()> {
+    for w in gemms.windows(3) {
+        let [(ai, a), (bi, b), (ci, c)] = [w[0], w[1], w[2]];
+        // Chains only over single-instance nodes: an expert batch in the
+        // middle would run count-1 more instances between the spliced
+        // first consumer and the second one, evicting the carried
+        // partials far beyond the one attenuation step the merged trace
+        // prices — the three-kernel simulation would overstate the gain.
+        if a.count != 1 || b.count != 1 || c.count != 1 {
+            continue;
+        }
+        let (Some(ta), Some(tb), Some(tc)) = (&traces[ai], &traces[bi], &traces[ci]) else {
+            continue;
+        };
+        if !coschedule::saturates(ta, tb) {
+            continue;
+        }
+        let entry_pos = |p: usize, q: usize, l: &[OverlapPair]| {
+            l.iter().position(|e| e.producer == p && e.consumer == q)
+        };
+        // Skip when either prologue is already spoken for.
+        let first = entry_pos(ai, bi, ledger);
+        if first.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
+            continue;
+        }
+        let second = entry_pos(bi, ci, ledger);
+        if second.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
+            continue;
+        }
+        let sequential = a.unit_ns + b.unit_ns + c.unit_ns;
+        let Some(decision) = coschedule::chain_decision(sim, ta, tb, tc, sequential)? else {
+            continue;
+        };
+        let replaced_exact = first.map_or(0.0, |i| ledger[i].exact_gain_ns())
+            + second.map_or(0.0, |i| ledger[i].exact_gain_ns());
+        let replaced_ledger =
+            first.map_or(0.0, |i| ledger[i].gain_ns) + second.map_or(0.0, |i| ledger[i].gain_ns);
+        if decision.gain_ns <= replaced_exact.max(replaced_ledger) + 1e-9 {
+            continue;
+        }
+        let chain = ChainOverlap { second_consumer: ci, decision };
+        match first {
+            Some(i) => ledger[i].chain = Some(chain),
+            None => ledger.push(OverlapPair {
+                producer: ai,
+                consumer: bi,
+                pairs: 1,
+                reduce_ns: a.reduce_tail_ns,
+                slack_ns: b.dequant_slack_ns,
+                gain_ns: a.reduce_tail_ns.min(b.dequant_slack_ns),
+                exact: None,
+                chain: Some(chain),
+                superseded: false,
+            }),
+        }
+        if let Some(i) = second {
+            ledger[i].superseded = true;
+        }
+    }
+    Ok(())
+}
+
+/// Simulate the full decode-step graph under an overlap mode (weight
+/// residency off — the PR-4 surface).
 pub fn simulate_step(
     machine: &MachineConfig,
     step: &DecodeStep,
     mode: OverlapMode,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+) -> anyhow::Result<StepReport> {
+    simulate_step_with(machine, step, mode, ResidencyMode::Off, resolve)
+}
+
+/// Simulate the full decode-step graph under an overlap mode AND a
+/// step-level weight-residency mode (DESIGN.md §13).
+pub fn simulate_step_with(
+    machine: &MachineConfig,
+    step: &DecodeStep,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
     mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
 ) -> anyhow::Result<StepReport> {
     let sim = Simulator::new(machine.clone());
@@ -554,6 +708,26 @@ pub fn simulate_step(
     let ledger = build_ledger(&sim, &nodes, &traces, price_exact)?;
     let gain: f64 = ledger.iter().map(|p| p.total_gain_ns()).sum();
     let exact_gain: f64 = ledger.iter().map(|p| p.total_exact_gain_ns()).sum();
+    let residency = match residency_mode {
+        ResidencyMode::Off => None,
+        ResidencyMode::Auto => {
+            let mut inputs = Vec::new();
+            let mut extra_ns = 0.0;
+            for (node, trace) in nodes.iter().zip(&traces) {
+                match (node, trace) {
+                    (StepNodeReport::Gemm(g), Some(t)) => inputs.push(residency::PlanNodeInput {
+                        kind: g.kind,
+                        problem: g.problem,
+                        count: g.count,
+                        unit_ns: g.unit_ns,
+                        trace: t.clone(),
+                    }),
+                    _ => extra_ns += node.total_ns(),
+                }
+            }
+            Some(residency::plan_nodes(machine, &inputs, extra_ns, price_exact)?)
+        }
+    };
     Ok(StepReport {
         batch: step.layer.batch,
         kv_len: step.kv_len,
@@ -563,6 +737,7 @@ pub fn simulate_step(
         sequential_ns,
         overlapped_ns: sequential_ns - gain,
         exact_ns: sequential_ns - exact_gain,
+        residency,
     })
 }
 
@@ -593,6 +768,18 @@ pub fn simulate_step_tuned(
     tuner: &mut Tuner,
 ) -> anyhow::Result<StepReport> {
     simulate_step(machine, step, mode, |p| tuner_resolve(tuner, p))
+}
+
+/// Tuned full-step simulation with an explicit residency mode — the
+/// `repro layer --residency` and `e2e_layer` bench path.
+pub fn simulate_step_tuned_with(
+    machine: &MachineConfig,
+    step: &DecodeStep,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
+    tuner: &mut Tuner,
+) -> anyhow::Result<StepReport> {
+    simulate_step_with(machine, step, mode, residency_mode, |p| tuner_resolve(tuner, p))
 }
 
 /// Render the per-node table plus layer / step totals (GEMM chain only).
@@ -697,12 +884,42 @@ pub fn render_step(report: &StepReport, layers: usize) -> String {
             stats::fmt_ns(p.gain_ns),
             exact,
         ));
+        if let Some(c) = p.chain {
+            out.push_str(&format!(
+                "    chain ->{} (saturated prologue, re-balanced): {} served over the \
+                 pair decisions\n",
+                report.nodes[c.second_consumer].name(),
+                stats::fmt_ns(c.decision.gain_ns),
+            ));
+        }
+        if p.superseded {
+            out.push_str("    (prologue consumed by the upstream chain)\n");
+        }
+    }
+    if let Some(plan) = &report.residency {
+        let pins: Vec<String> = plan
+            .pins
+            .iter()
+            .map(|pin| format!("{}x{}", pin.kind.name(), pin.instances))
+            .collect();
+        out.push_str(&format!(
+            "residency: pinned {} of {} budget ({}) -> resident {} ({} vs unpinned)\n",
+            stats::fmt_bytes(plan.pinned_bytes as f64),
+            stats::fmt_bytes(plan.budget_bytes as f64),
+            if pins.is_empty() { "nothing worth pinning".to_string() } else { pins.join(" ") },
+            stats::fmt_ns(plan.resident_ns),
+            stats::fmt_ns(plan.gain_ns()),
+        ));
     }
     out.push_str(&format!(
-        "layer: {} sequential vs {} overlapped vs {} exact -> served {}\n",
+        "layer: {} sequential vs {} overlapped vs {} exact{} -> served {}\n",
         stats::fmt_ns(report.sequential_ns),
         stats::fmt_ns(report.overlapped_ns),
         stats::fmt_ns(report.exact_ns),
+        match report.resident_ns() {
+            Some(r) => format!(" vs {} resident", stats::fmt_ns(r)),
+            None => String::new(),
+        },
         stats::fmt_ns(report.served_ns()),
     ));
     out.push_str(&format!(
@@ -793,6 +1010,17 @@ pub fn step_json(report: &StepReport) -> Json {
                     p.exact.map(|d| Json::num(d.gain_ns)).unwrap_or(Json::Null),
                 ),
                 ("exact_vs_ledger_ns", Json::num(p.exact_vs_ledger_ns())),
+                (
+                    "chain_gain_ns",
+                    p.chain.map(|c| Json::num(c.decision.gain_ns)).unwrap_or(Json::Null),
+                ),
+                (
+                    "chain_second_consumer",
+                    p.chain
+                        .map(|c| Json::num(c.second_consumer as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                ("superseded", Json::Bool(p.superseded)),
             ])
         })
         .collect();
@@ -803,6 +1031,19 @@ pub fn step_json(report: &StepReport) -> Json {
         ("sequential_ns", Json::num(report.sequential_ns)),
         ("overlapped_ns", Json::num(report.overlapped_ns)),
         ("exact_ns", Json::num(report.exact_ns)),
+        (
+            "resident_ns",
+            report.resident_ns().map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("residency_gain_ns", Json::num(report.residency_gain_ns())),
+        (
+            "residency",
+            report
+                .residency
+                .as_ref()
+                .map(|p| p.to_json())
+                .unwrap_or(Json::Null),
+        ),
         ("served_ns", Json::num(report.served_ns())),
         ("gemm_ns", Json::num(report.gemm_ns())),
         ("vector_ns", Json::num(report.vector_ns())),
@@ -935,6 +1176,44 @@ mod tests {
                 || auto.ledger.is_empty(),
             "expert fan-out should ledger internal pairs when any gain exists"
         );
+    }
+
+    #[test]
+    fn residency_auto_never_slower_and_json_carries_the_plan() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let off = simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::Fused)).unwrap();
+        let on = simulate_step_with(
+            &m,
+            &step,
+            OverlapMode::Auto,
+            ResidencyMode::Auto,
+            fixed(&m, Strategy::Fused),
+        )
+        .unwrap();
+        // Identical chain, so the non-residency prices agree; the resident
+        // plan can only improve the served step.
+        assert!((on.sequential_ns - off.sequential_ns).abs() < 1e-6);
+        assert!(on.served_ns() <= off.served_ns() * 1.000001);
+        let plan = on.residency.as_ref().expect("residency auto must carry a plan");
+        assert!(plan.pinned_bytes <= plan.budget_bytes);
+        assert!(plan.resident_ns <= plan.baseline_ns * 1.000001);
+        // llama32's fused K>>N nodes fit the budget: pinning must win.
+        assert!(
+            on.residency_gain_ns() > 0.0,
+            "resident weights must pay on the llama32 fused chain: {plan:?}"
+        );
+        assert!(on.served_ns() < off.served_ns(), "strictly faster with residency");
+        let j = Json::parse(&step_json(&on).to_string()).unwrap();
+        assert!(j.req("resident_ns").unwrap().as_f64().is_some());
+        assert!(j.req("residency").unwrap().get("pins").is_some());
+        let rendered = render_step(&on, 16);
+        assert!(rendered.contains("residency:"), "render missing residency:\n{rendered}");
+        // Residency off leaves the PR-4 JSON shape (null cells).
+        let j = Json::parse(&step_json(&off).to_string()).unwrap();
+        assert!(j.req("resident_ns").unwrap().as_f64().is_none());
+        assert_eq!(j.req("residency_gain_ns").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

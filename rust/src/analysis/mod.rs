@@ -10,6 +10,7 @@ pub mod coschedule;
 pub mod golden;
 pub mod layer;
 pub mod report;
+pub mod residency;
 pub mod roofline;
 pub mod sensitivity;
 pub mod timeline;

@@ -1,0 +1,503 @@
+//! Step-level L2 weight-residency planner (DESIGN.md §13).
+//!
+//! The paper's §4.2 conclusion is that W4A16's ceiling is set by *extra
+//! global-memory transfer for the weight*, not by dequant compute — and
+//! decode re-reads the same packed-INT4 weights and quant params token
+//! after token.  This module decides which GEMM nodes' weights to keep
+//! pinned in the shared L2 across the whole decode step:
+//!
+//! * a pinned node's weight reads are re-classed as
+//!   [`BufferClass::CarriedWeight`] and served at L2 bandwidth under the
+//!   step-level [`ResidencyLedger`];
+//! * every kernel in the step — pinned or not — loses the pinned bytes
+//!   from its retained L2 capacity (the pins squeeze the workspace and
+//!   partial buffers), so over-pinning prices itself out;
+//! * the plan is priced *exactly*: each candidate prefix of the greedy
+//!   pin order re-simulates every GEMM node (and, where the overlap mode
+//!   asks for it, the co-scheduled pair splices) under the plan's ledger,
+//!   and the cheapest prefix wins.  Prefix 0 is the unpinned chain, so a
+//!   plan's gain is non-negative by construction and `Auto` serving
+//!   `min(PR-4 Auto, resident plan)` stays structurally never slower.
+//!
+//! Candidates are ordered by *gain density* (saved ns per pinned byte),
+//! which puts the small-N / large-K expert and projection weights first —
+//! exactly the K >> N decode regime the paper targets.  Expert batches
+//! pin at instance granularity: pinning `p` of `count` experts prices
+//! `p` resident instances and `count - p` cold ones.
+
+use crate::ascend::{BufferClass, KernelTrace, MachineConfig, ResidencyLedger, Simulator};
+use crate::kernels::GemmProblem;
+use crate::util::json::Json;
+use crate::workload::decode_layer::GemmKind;
+
+use super::coschedule;
+
+/// Whether the step simulator may plan step-level weight residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResidencyMode {
+    /// PR-4 pricing: every weight read is cold HBM traffic each step.
+    Off,
+    /// Plan which nodes' weights to pin under the L2 capacity budget and
+    /// serve `min(PR-4 plan, resident plan)` — never slower.
+    #[default]
+    Auto,
+}
+
+impl ResidencyMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResidencyMode::Off => "off",
+            ResidencyMode::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<ResidencyMode> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "off" | "none" => ResidencyMode::Off,
+            "auto" | "on" => ResidencyMode::Auto,
+            other => anyhow::bail!("unknown residency mode '{other}'"),
+        })
+    }
+}
+
+/// One GEMM node of the chain being planned: everything the planner
+/// needs, shared by the step simulator and the tuner's layer seeding.
+#[derive(Debug, Clone)]
+pub struct PlanNodeInput {
+    pub kind: GemmKind,
+    pub problem: GemmProblem,
+    /// Identical GEMMs the node issues per step (expert fan-out).
+    pub count: usize,
+    /// Simulated time of one cold GEMM under the served schedule.
+    pub unit_ns: f64,
+    /// The served kernel trace (weights read cold).
+    pub trace: KernelTrace,
+}
+
+/// One pinned node of the plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodePin {
+    /// Index into the planner's node inputs (GEMM sub-chain order).
+    pub node: usize,
+    pub kind: GemmKind,
+    /// Instances pinned (`<= count`; expert batches pin partially).
+    pub instances: usize,
+    /// Weight footprint of ONE instance: packed INT4 + quant params.
+    pub unit_bytes: u64,
+}
+
+impl NodePin {
+    pub fn bytes(&self) -> u64 {
+        self.instances as u64 * self.unit_bytes
+    }
+}
+
+/// The step-level residency plan, priced exactly.
+#[derive(Debug, Clone)]
+pub struct ResidencyPlan {
+    pub pins: Vec<NodePin>,
+    /// Total weight bytes held resident across the step.
+    pub pinned_bytes: u64,
+    /// The retained-L2 budget the plan had to fit (bytes).
+    pub budget_bytes: u64,
+    /// Exact per-step latency of the served plan (the cheapest prefix —
+    /// equals `baseline_ns` when pinning never paid).
+    pub resident_ns: f64,
+    /// Prefix-0 price: the same chain with nothing pinned.
+    pub baseline_ns: f64,
+}
+
+impl ResidencyPlan {
+    /// What the plan buys over the unpinned chain (>= 0 by construction).
+    pub fn gain_ns(&self) -> f64 {
+        (self.baseline_ns - self.resident_ns).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pins = self
+            .pins
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("node", Json::num(p.node as f64)),
+                    ("kind", Json::str(p.kind.name())),
+                    ("instances", Json::num(p.instances as f64)),
+                    ("unit_bytes", Json::num(p.unit_bytes as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("pinned_bytes", Json::num(self.pinned_bytes as f64)),
+            ("budget_bytes", Json::num(self.budget_bytes as f64)),
+            ("resident_ns", Json::num(self.resident_ns)),
+            ("baseline_ns", Json::num(self.baseline_ns)),
+            ("residency_gain_ns", Json::num(self.gain_ns())),
+            ("pins", Json::arr(pins)),
+        ])
+    }
+}
+
+/// Weight footprint of one GEMM instance: packed INT4 codes plus the
+/// f32 scale + zero rows (one pair per K group).
+pub fn weight_footprint_bytes(p: &GemmProblem) -> u64 {
+    p.packed_weight_bytes() + (2 * (p.k / p.group) * p.n * 4) as u64
+}
+
+/// The retained-L2 budget the planner may pin (bytes).
+pub fn pin_budget_bytes(machine: &MachineConfig) -> u64 {
+    (machine.l2_retention * machine.l2_bytes as f64) as u64
+}
+
+/// Re-class a trace's packed-weight and quant-param reads as
+/// [`BufferClass::CarriedWeight`]: under a pinning ledger they are served
+/// from L2; standalone they still price cold (conservative).  Byte counts
+/// are untouched — pinning changes *where* weight bytes are served, never
+/// *how many* move.
+pub fn carry_weights(trace: &KernelTrace) -> KernelTrace {
+    let mut carried = trace.clone();
+    for phase in &mut carried.phases {
+        for steps in &mut phase.steps_per_engine {
+            for step in steps.iter_mut() {
+                for read in step.reads.iter_mut() {
+                    if matches!(read.0, BufferClass::WeightPacked | BufferClass::QuantParam)
+                        && read.1 > 0
+                    {
+                        read.0 = BufferClass::CarriedWeight;
+                    }
+                }
+            }
+        }
+    }
+    carried.name = format!("{}_resident", trace.name);
+    carried
+}
+
+/// Bytes of packed-weight + quant-param reads in a trace (0 for
+/// strategies that read FP16 weights — those are not pinnable).
+fn packed_read_bytes(trace: &KernelTrace) -> u64 {
+    trace
+        .phases
+        .iter()
+        .map(|p| {
+            p.read_bytes(BufferClass::WeightPacked) + p.read_bytes(BufferClass::QuantParam)
+        })
+        .sum()
+}
+
+/// Exact price of the GEMM chain under one pin set: every node is
+/// re-simulated with the plan's ledger (pinned instances on the carried
+/// trace, the rest on the cold trace — both under the reduced retained
+/// capacity), and, when `price_exact` is set, the co-scheduled pair
+/// splices are re-priced under the same ledger.  `extra_ns` carries the
+/// chain's non-GEMM node time (unaffected by the plan).
+fn price_pins(
+    sim: &Simulator,
+    inputs: &[PlanNodeInput],
+    pins: &[NodePin],
+    extra_ns: f64,
+    price_exact: bool,
+) -> anyhow::Result<f64> {
+    let pinned_bytes: u64 = pins.iter().map(|p| p.bytes()).sum();
+    let ledger = ResidencyLedger::with_pinned_weights(pinned_bytes);
+    let pinned_instances = |node: usize| {
+        pins.iter().find(|p| p.node == node).map(|p| p.instances).unwrap_or(0)
+    };
+
+    // Per-node pricing: the cold variant (weight reads under the reduced
+    // capacity) and the resident variant (carried weights), each present
+    // only when instances actually serve it.
+    let mut cold: Vec<Option<(KernelTrace, f64)>> = Vec::with_capacity(inputs.len());
+    let mut resident: Vec<Option<(KernelTrace, f64)>> = Vec::with_capacity(inputs.len());
+    let mut pinned: Vec<usize> = Vec::with_capacity(inputs.len());
+    let mut total = extra_ns;
+    for (i, input) in inputs.iter().enumerate() {
+        let count = input.count.max(1);
+        let p = pinned_instances(i).min(count);
+        let c = if p < count {
+            let ns = sim.run_with_residency(&input.trace, &ledger)?.total_ns;
+            Some((input.trace.clone(), ns))
+        } else {
+            None
+        };
+        let r = if p > 0 {
+            let carried = carry_weights(&input.trace);
+            let ns = sim.run_with_residency(&carried, &ledger)?.total_ns;
+            Some((carried, ns))
+        } else {
+            None
+        };
+        total += p as f64 * r.as_ref().map(|(_, ns)| *ns).unwrap_or(0.0)
+            + (count - p) as f64 * c.as_ref().map(|(_, ns)| *ns).unwrap_or(0.0);
+        cold.push(c);
+        resident.push(r);
+        pinned.push(p);
+    }
+
+    if price_exact {
+        // The same adjacency set the overlap ledger prices: expert-batch
+        // internal pairs plus each adjacent window, each declined when
+        // the merged trace prices slower (gain clamped at zero).
+        let mut gain = 0.0;
+        for (i, input) in inputs.iter().enumerate() {
+            let count = input.count.max(1);
+            if count < 2 {
+                continue;
+            }
+            // A partially pinned batch orders resident instances first:
+            // p-1 resident->resident adjacencies, count-p-1 cold->cold
+            // ones, each priced on its own variant; the single mixed
+            // adjacency contributes nothing (conservative) — so the
+            // subtracted gains always match instances the total priced.
+            let p = pinned[i];
+            if p > 1 {
+                let (rt, rns) = resident[i].as_ref().expect("p > 0 has a resident variant");
+                if let Some(d) =
+                    coschedule::pair_decision_with(sim, rt, rt, 2.0 * rns, &ledger)?
+                {
+                    gain += (p - 1) as f64 * d.gain_ns;
+                }
+            }
+            if count - p > 1 {
+                let (ct, cns) = cold[i].as_ref().expect("p < count has a cold variant");
+                if let Some(d) =
+                    coschedule::pair_decision_with(sim, ct, ct, 2.0 * cns, &ledger)?
+                {
+                    gain += (count - p - 1) as f64 * d.gain_ns;
+                }
+            }
+        }
+        // Window pairs splice at the batch boundary: the adjacency is
+        // between one instance of each node, priced on the variant a
+        // boundary instance actually serves (a partially pinned batch
+        // always has a cold instance at its boundary by the ordering
+        // above; fully pinned nodes splice their resident trace).
+        let boundary = |i: usize| {
+            cold[i].as_ref().or(resident[i].as_ref()).expect("every node has a variant")
+        };
+        for i in 1..inputs.len() {
+            let (pt, pns) = boundary(i - 1);
+            let (ct, cns) = boundary(i);
+            if let Some(d) =
+                coschedule::pair_decision_with(sim, pt, ct, pns + cns, &ledger)?
+            {
+                gain += d.gain_ns;
+            }
+        }
+        total -= gain;
+    }
+    Ok(total)
+}
+
+/// Plan which nodes' weights to pin for one decode-step GEMM chain.
+///
+/// Greedy by exact gain density (saved ns per pinned byte), filled under
+/// the capacity budget, then every prefix of the fill order is priced
+/// exactly and the cheapest kept — prefix 0 being the unpinned chain, so
+/// the plan never loses to it.
+pub fn plan_nodes(
+    machine: &MachineConfig,
+    inputs: &[PlanNodeInput],
+    extra_ns: f64,
+    price_exact: bool,
+) -> anyhow::Result<ResidencyPlan> {
+    let sim = Simulator::new(machine.clone());
+    let budget = pin_budget_bytes(machine);
+
+    // Candidate nodes: packed-INT4 weights that fit the budget at all.
+    struct Candidate {
+        node: usize,
+        unit_bytes: u64,
+        density: f64,
+    }
+    let mut candidates: Vec<Candidate> = Vec::new();
+    for (i, input) in inputs.iter().enumerate() {
+        if packed_read_bytes(&input.trace) == 0 {
+            continue;
+        }
+        let unit_bytes = weight_footprint_bytes(&input.problem);
+        if unit_bytes == 0 || unit_bytes > budget {
+            continue;
+        }
+        // Exact unit gain of pinning ONE instance of this node alone.
+        let ledger = ResidencyLedger::with_pinned_weights(unit_bytes);
+        let resident_ns =
+            sim.run_with_residency(&carry_weights(&input.trace), &ledger)?.total_ns;
+        let density = (input.unit_ns - resident_ns) / unit_bytes as f64;
+        if density > 0.0 {
+            candidates.push(Candidate { node: i, unit_bytes, density });
+        }
+    }
+    candidates.sort_by(|a, b| {
+        b.density.partial_cmp(&a.density).unwrap().then(a.node.cmp(&b.node))
+    });
+
+    // Greedy fill under the budget.
+    let mut pins: Vec<NodePin> = Vec::new();
+    let mut pinned_bytes = 0u64;
+    for c in &candidates {
+        let room = (budget - pinned_bytes) / c.unit_bytes;
+        let instances = (inputs[c.node].count as u64).min(room) as usize;
+        if instances == 0 {
+            continue;
+        }
+        pinned_bytes += instances as u64 * c.unit_bytes;
+        pins.push(NodePin {
+            node: c.node,
+            kind: inputs[c.node].kind,
+            instances,
+            unit_bytes: c.unit_bytes,
+        });
+    }
+
+    // Exact prefix pricing: prefix 0 is the unpinned chain.
+    let baseline_ns = price_pins(&sim, inputs, &[], extra_ns, price_exact)?;
+    let mut best_ns = baseline_ns;
+    let mut best_len = 0usize;
+    for len in 1..=pins.len() {
+        let ns = price_pins(&sim, inputs, &pins[..len], extra_ns, price_exact)?;
+        if ns < best_ns {
+            best_ns = ns;
+            best_len = len;
+        }
+    }
+    pins.truncate(best_len);
+    let pinned_bytes: u64 = pins.iter().map(|p| p.bytes()).sum();
+    Ok(ResidencyPlan {
+        pins,
+        pinned_bytes,
+        budget_bytes: budget,
+        resident_ns: best_ns,
+        baseline_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::MachineConfig;
+    use crate::kernels::{self, Strategy};
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    fn input(
+        kind: GemmKind,
+        strategy: Strategy,
+        mm: usize,
+        n: usize,
+        k: usize,
+        count: usize,
+    ) -> PlanNodeInput {
+        let machine = m();
+        let p = GemmProblem::new(mm, n, k);
+        let trace = kernels::schedule(&machine, &p, strategy).unwrap();
+        let unit_ns = Simulator::new(machine).run(&trace).unwrap().total_ns;
+        PlanNodeInput { kind, problem: p, count, unit_ns, trace }
+    }
+
+    #[test]
+    fn carry_weights_preserves_byte_totals_and_reclasses() {
+        let machine = m();
+        let p = GemmProblem::new(8, 2048, 8192);
+        let trace = kernels::schedule(&machine, &p, Strategy::SplitK).unwrap();
+        let carried = carry_weights(&trace);
+        assert_eq!(carried.phases.len(), trace.phases.len());
+        let sum = |t: &KernelTrace, c: BufferClass| -> u64 {
+            t.phases.iter().map(|ph| ph.read_bytes(c)).sum()
+        };
+        let packed = sum(&trace, BufferClass::WeightPacked);
+        let qparam = sum(&trace, BufferClass::QuantParam);
+        assert!(packed > 0 && qparam > 0);
+        assert_eq!(sum(&carried, BufferClass::WeightPacked), 0);
+        assert_eq!(sum(&carried, BufferClass::QuantParam), 0);
+        assert_eq!(sum(&carried, BufferClass::CarriedWeight), packed + qparam);
+        // Everything else is untouched.
+        for c in [BufferClass::Activation, BufferClass::Workspace, BufferClass::Partial] {
+            assert_eq!(sum(&carried, c), sum(&trace, c));
+        }
+        assert_eq!(carried.total_macs(), trace.total_macs());
+    }
+
+    #[test]
+    fn pinned_node_prices_faster_and_plan_never_exceeds_budget() {
+        let machine = m();
+        // The llama32 K>>N down-projection under the fused schedule (the
+        // tuner's usual winner): its group is HBM-bound on the packed
+        // weight stream, so keeping the 9 MiB of weights + qparams
+        // resident moves the whole stream onto L2.
+        let inputs = vec![
+            input(GemmKind::Down, Strategy::Fused, 8, 2048, 8192, 1),
+            input(GemmKind::Qkv, Strategy::Fused, 8, 6144, 2048, 1),
+        ];
+        let plan = plan_nodes(&machine, &inputs, 0.0, false).unwrap();
+        assert!(plan.pinned_bytes <= plan.budget_bytes);
+        assert!(plan.resident_ns <= plan.baseline_ns);
+        assert!(
+            !plan.pins.is_empty() && plan.gain_ns() > 0.0,
+            "resident weights must win on the K>>N decode shape: {plan:?}"
+        );
+        // Density ordering put a pin on the down node.
+        assert!(plan.pins.iter().any(|p| p.kind == GemmKind::Down));
+    }
+
+    #[test]
+    fn planner_declines_when_pinning_prices_slower() {
+        let machine = m();
+        // The splitk schedule on a spilling-workspace shape: its group is
+        // bound by the L2 workspace stream, and reserving capacity for
+        // weights would squeeze the workspace residency — the exact
+        // prefix pricing must keep the unpinned chain.
+        let inputs = vec![input(GemmKind::Down, Strategy::SplitK, 8, 2048, 8192, 1)];
+        let plan = plan_nodes(&machine, &inputs, 0.0, false).unwrap();
+        assert!(plan.resident_ns <= plan.baseline_ns, "never slower, by construction");
+        assert!(plan.pinned_bytes <= plan.budget_bytes);
+    }
+
+    #[test]
+    fn oversized_weights_are_not_pinned() {
+        let machine = m();
+        // glm45 down: 31.5 MiB packed alone exceeds the 28.8 MiB budget.
+        let inputs = vec![input(GemmKind::Down, Strategy::Fused, 8, 5120, 12288, 1)];
+        let plan = plan_nodes(&machine, &inputs, 0.0, false).unwrap();
+        assert!(plan.pins.is_empty());
+        assert_eq!(plan.resident_ns, plan.baseline_ns);
+        assert_eq!(plan.gain_ns(), 0.0);
+    }
+
+    #[test]
+    fn expert_batches_pin_at_instance_granularity() {
+        let machine = m();
+        // One expert's weights are ~8 MiB; 64 experts cannot all fit, so
+        // any pin must cover a strict subset of the instances.
+        let inputs = vec![input(GemmKind::MoeExpert, Strategy::Fused, 1, 7168, 2048, 64)];
+        let plan = plan_nodes(&machine, &inputs, 0.0, false).unwrap();
+        assert!(plan.pinned_bytes <= plan.budget_bytes);
+        if let Some(pin) = plan.pins.first() {
+            assert!(pin.instances < 64, "64 experts cannot all be resident");
+            assert!(pin.instances >= 1);
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [ResidencyMode::Off, ResidencyMode::Auto] {
+            assert_eq!(ResidencyMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert!(ResidencyMode::from_name("bogus").is_err());
+        assert_eq!(ResidencyMode::default(), ResidencyMode::Auto);
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let machine = m();
+        let inputs = vec![input(GemmKind::Down, Strategy::Fused, 8, 2048, 8192, 1)];
+        let plan = plan_nodes(&machine, &inputs, 0.0, false).unwrap();
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert!(j.req("residency_gain_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            j.req("pins").unwrap().as_arr().unwrap().len(),
+            plan.pins.len()
+        );
+    }
+}

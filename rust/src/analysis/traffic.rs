@@ -48,6 +48,7 @@ pub fn class_label(class: BufferClass) -> &'static str {
         BufferClass::Output => "output C",
         BufferClass::QuantParam => "scales/zeros",
         BufferClass::CarriedPartial => "carried split-K partials",
+        BufferClass::CarriedWeight => "pinned weights (L2-resident)",
     }
 }
 

@@ -24,6 +24,69 @@ impl ServiceSplit {
     pub const COLD: ServiceSplit = ServiceSplit { l2_fraction: 0.0, writeback_fraction: 1.0 };
 }
 
+/// Cross-kernel residency state threaded through a chain of kernels — the
+/// single ledger that owns everything crossing a kernel boundary
+/// (DESIGN.md §13).  PR 4's merged-pair carry and the step-level pinned
+/// weights both live here: one ledger, not per-feature carries.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResidencyLedger {
+    /// Residency of the splice producer's partial buffers for this
+    /// kernel's [`BufferClass::CarriedPartial`] reads (0..1).
+    pub carried_partial_hit: f64,
+    /// Residency of the step-level weight pins for this kernel's
+    /// [`BufferClass::CarriedWeight`] reads (0..1).  The planner only
+    /// pins whole weight footprints that fit the retained budget, so a
+    /// pinned node reads at 1.0 and an unpinned node never carries the
+    /// class at all.
+    pub carried_weight_hit: f64,
+    /// Weight bytes the step-level plan keeps pinned chip-wide for the
+    /// whole decode step: every kernel in the chain loses this much
+    /// retained L2 capacity for its own workspace / partial buffers —
+    /// the capacity shaping that keeps the plan honest.
+    pub reserved_bytes: u64,
+}
+
+impl ResidencyLedger {
+    /// The PR-4 merged-pair carry: only the producer's partial residency
+    /// crosses the boundary.
+    pub fn with_carried_partials(hit: f64) -> ResidencyLedger {
+        ResidencyLedger { carried_partial_hit: hit, ..ResidencyLedger::default() }
+    }
+
+    /// A step-level weight-pinning ledger: `reserved_bytes` of weights
+    /// held resident (served at full L2 residency), no partial carry.
+    pub fn with_pinned_weights(reserved_bytes: u64) -> ResidencyLedger {
+        ResidencyLedger {
+            carried_weight_hit: 1.0,
+            reserved_bytes,
+            ..ResidencyLedger::default()
+        }
+    }
+
+    /// Retained L2 capacity left for a kernel's own buffers after the
+    /// step-level pins.
+    pub fn available_capacity(&self, machine: &MachineConfig) -> f64 {
+        (machine.l2_retention * machine.l2_bytes as f64 - self.reserved_bytes as f64).max(0.0)
+    }
+
+    /// Fraction of carried-partial residency that survives one more
+    /// intervening kernel in a chain splice: the kernel's own resident
+    /// footprint evicts the producer's partials proportionally
+    /// (DESIGN.md §13).  1.0 when the kernel leaves the whole capacity
+    /// untouched, 0.0 when its working set covers it.
+    pub fn attenuation(&self, machine: &MachineConfig, trace: &KernelTrace) -> f64 {
+        let cap = self.available_capacity(machine);
+        if cap <= 0.0 {
+            return 0.0;
+        }
+        let footprint = match trace.workspace_policy {
+            WorkspacePolicy::Buffered => trace.workspace_bytes + trace.partial_bytes,
+            WorkspacePolicy::Pinned { resident_bytes } => resident_bytes + trace.partial_bytes,
+        };
+        (1.0 - footprint as f64 / cap).max(0.0)
+    }
+}
+
 /// L2 residency model for one kernel execution.
 #[derive(Debug, Clone)]
 pub struct L2Model {
@@ -36,6 +99,9 @@ pub struct L2Model {
     /// them cold (0.0 — conservative); `Simulator::run_merged` sets this to
     /// the producer kernel's `partial_hit` when it crosses the boundary.
     pub carried_hit: f64,
+    /// Residency of the step-level weight pins for
+    /// [`BufferClass::CarriedWeight`] reads (0..1); cold standalone.
+    pub carried_weight_hit: f64,
 }
 
 impl L2Model {
@@ -49,6 +115,13 @@ impl L2Model {
     /// to their sizes.
     pub fn new(machine: &MachineConfig, workspace_bytes: u64, partial_bytes: u64) -> L2Model {
         let cap = machine.l2_retention * machine.l2_bytes as f64;
+        L2Model::with_capacity(cap, workspace_bytes, partial_bytes)
+    }
+
+    /// The capacity-shaped model against an explicit retained capacity —
+    /// the step-level residency ledger reduces it by the pinned weight
+    /// bytes (DESIGN.md §13).
+    fn with_capacity(cap: f64, workspace_bytes: u64, partial_bytes: u64) -> L2Model {
         let hit = |bytes: u64| -> f64 {
             if bytes == 0 {
                 return 0.0;
@@ -62,6 +135,7 @@ impl L2Model {
             workspace_hit: hit(workspace_bytes),
             partial_hit: hit(partial_bytes),
             carried_hit: 0.0,
+            carried_weight_hit: 0.0,
         }
     }
 
@@ -75,12 +149,24 @@ impl L2Model {
     ///   (and degrades proportionally when they do not).  Partial buffers
     ///   get whatever capacity the pinned slices leave behind.
     pub fn for_trace(machine: &MachineConfig, trace: &KernelTrace) -> L2Model {
-        match trace.workspace_policy {
+        L2Model::for_trace_with_ledger(machine, trace, &ResidencyLedger::default())
+    }
+
+    /// Residency for a trace under a cross-kernel [`ResidencyLedger`]:
+    /// the ledger's pinned weight bytes are carved out of the retained
+    /// capacity before the kernel's own buffers shape their residency,
+    /// and the carried hits cross the boundary into the carried classes.
+    pub fn for_trace_with_ledger(
+        machine: &MachineConfig,
+        trace: &KernelTrace,
+        ledger: &ResidencyLedger,
+    ) -> L2Model {
+        let cap = ledger.available_capacity(machine);
+        let mut model = match trace.workspace_policy {
             WorkspacePolicy::Buffered => {
-                L2Model::new(machine, trace.workspace_bytes, trace.partial_bytes)
+                L2Model::with_capacity(cap, trace.workspace_bytes, trace.partial_bytes)
             }
             WorkspacePolicy::Pinned { resident_bytes } => {
-                let cap = machine.l2_retention * machine.l2_bytes as f64;
                 let pinned = (resident_bytes as f64).min(cap);
                 let workspace_hit = if resident_bytes == 0 {
                     0.0
@@ -93,9 +179,17 @@ impl L2Model {
                 } else {
                     (leftover / trace.partial_bytes as f64).min(1.0)
                 };
-                L2Model { workspace_hit, partial_hit, carried_hit: 0.0 }
+                L2Model {
+                    workspace_hit,
+                    partial_hit,
+                    carried_hit: 0.0,
+                    carried_weight_hit: 0.0,
+                }
             }
-        }
+        };
+        model.carried_hit = ledger.carried_partial_hit.clamp(0.0, 1.0);
+        model.carried_weight_hit = ledger.carried_weight_hit.clamp(0.0, 1.0);
+        model
     }
 
     /// Service split for a *read* of the given class.
@@ -113,6 +207,12 @@ impl L2Model {
             // merged context carried one over).
             BufferClass::CarriedPartial => ServiceSplit {
                 l2_fraction: self.carried_hit,
+                writeback_fraction: 0.0,
+            },
+            // Step-level pinned weights: the residency plan's hit (0 when
+            // no step-level ledger pinned this kernel's weights).
+            BufferClass::CarriedWeight => ServiceSplit {
+                l2_fraction: self.carried_weight_hit,
                 writeback_fraction: 0.0,
             },
             // Activations are small and typically L2-resident after first
@@ -254,6 +354,78 @@ mod tests {
         let l2 = L2Model::for_trace(&m(), &t);
         // 0.9*32 - 8 = 20.8 MiB leftover > 4 MiB of partials.
         assert_eq!(l2.partial_hit, 1.0);
+    }
+
+    #[test]
+    fn reserved_weight_bytes_shrink_workspace_capacity() {
+        use crate::ascend::trace::{KernelTrace, WorkspacePolicy};
+        // 16 MiB workspace fits the full 28.8 MiB retained capacity, but
+        // not once the step-level plan pins 20 MiB of weights.
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![],
+            workspace_bytes: 16 << 20,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        };
+        let free = L2Model::for_trace_with_ledger(&m(), &t, &ResidencyLedger::default());
+        assert_eq!(free.workspace_hit, 1.0);
+        let pinned = ResidencyLedger::with_pinned_weights(20 << 20);
+        let l2 = L2Model::for_trace_with_ledger(&m(), &t, &pinned);
+        // (0.9*32 - 20) MiB / 16 MiB = 0.55
+        assert!((l2.workspace_hit - 0.55).abs() < 1e-9, "{}", l2.workspace_hit);
+        assert_eq!(l2.carried_weight_hit, 1.0);
+        // The pinned-policy path also loses the reserved capacity.
+        let pt = KernelTrace {
+            workspace_policy: WorkspacePolicy::Pinned { resident_bytes: 16 << 20 },
+            ..t
+        };
+        let l2 = L2Model::for_trace_with_ledger(&m(), &pt, &pinned);
+        assert!((l2.workspace_hit - 0.55).abs() < 1e-9, "{}", l2.workspace_hit);
+    }
+
+    #[test]
+    fn carried_weight_reads_use_the_ledger_hit() {
+        let l2 = L2Model::new(&m(), 1 << 20, 0);
+        // Standalone: pinned-weight reads are cold.
+        assert_eq!(l2.read_split(BufferClass::CarriedWeight).l2_fraction, 0.0);
+        use crate::ascend::trace::{KernelTrace, WorkspacePolicy};
+        let t = KernelTrace {
+            name: "t".into(),
+            phases: vec![],
+            workspace_bytes: 1 << 20,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        };
+        let l2 =
+            L2Model::for_trace_with_ledger(&m(), &t, &ResidencyLedger::with_pinned_weights(1));
+        assert_eq!(l2.read_split(BufferClass::CarriedWeight).l2_fraction, 1.0);
+        // Plain weight reads stay cold — only the re-classed pins hit.
+        assert_eq!(l2.read_split(BufferClass::WeightPacked).l2_fraction, 0.0);
+    }
+
+    #[test]
+    fn attenuation_tracks_intervening_footprint() {
+        use crate::ascend::trace::{KernelTrace, WorkspacePolicy};
+        let ledger = ResidencyLedger::default();
+        let cap = ledger.available_capacity(&m());
+        let t = |ws: u64| KernelTrace {
+            name: "t".into(),
+            phases: vec![],
+            workspace_bytes: ws,
+            partial_bytes: 0,
+            workspace_policy: WorkspacePolicy::Buffered,
+        };
+        // A tiny intervening kernel barely evicts anything.
+        assert!(ledger.attenuation(&m(), &t(1 << 10)) > 0.999);
+        // A capacity-sized working set evicts everything.
+        assert_eq!(ledger.attenuation(&m(), &t(cap as u64 + 1)), 0.0);
+        // Half the capacity evicts half.
+        let half = ledger.attenuation(&m(), &t((cap / 2.0) as u64));
+        assert!((half - 0.5).abs() < 1e-6, "{half}");
+        // With everything reserved, nothing survives.
+        let full = ResidencyLedger::with_pinned_weights(cap as u64);
+        assert_eq!(full.attenuation(&m(), &t(1)), 0.0);
     }
 
     #[test]

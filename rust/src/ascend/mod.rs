@@ -37,6 +37,7 @@ pub mod vecpass;
 pub mod vector;
 
 pub use config::MachineConfig;
+pub use memory::ResidencyLedger;
 pub use npu::{MergedReport, SimReport, Simulator};
 pub use trace::{
     BufferClass, ComputeOp, KernelTrace, MergedTrace, Phase, TileStep, Unit, WorkspacePolicy,

@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 
 use super::config::MachineConfig;
 use super::event;
-use super::memory::L2Model;
+use super::memory::{L2Model, ResidencyLedger};
 use super::mte::{self, PhaseDemand};
 use super::trace::{BufferClass, KernelTrace, MergedTrace, Phase, Unit};
 
@@ -201,20 +201,32 @@ impl Simulator {
         Ok(())
     }
 
-    /// Simulate one kernel execution.  Carried-partial reads (spliced
-    /// steps of a merged trace run standalone) are priced cold.
+    /// Simulate one kernel execution.  Carried-partial and carried-weight
+    /// reads (spliced / pinned steps run standalone) are priced cold.
     pub fn run(&self, trace: &KernelTrace) -> anyhow::Result<SimReport> {
-        self.run_with_carry(trace, 0.0)
+        self.run_with_residency(trace, &ResidencyLedger::default())
     }
 
     /// Simulate one kernel with an explicit residency for
     /// [`BufferClass::CarriedPartial`] reads — the cross-kernel state a
     /// merged trace carries over the kernel boundary (DESIGN.md §12).
     pub fn run_with_carry(&self, trace: &KernelTrace, carried_hit: f64) -> anyhow::Result<SimReport> {
+        self.run_with_residency(trace, &ResidencyLedger::with_carried_partials(carried_hit))
+    }
+
+    /// Simulate one kernel under a cross-kernel [`ResidencyLedger`] — the
+    /// one owner of everything that crosses a kernel boundary (DESIGN.md
+    /// §13): the splice producer's partial residency, the step-level
+    /// pinned-weight residency, and the retained-capacity carve-out those
+    /// pins impose on this kernel's own buffers.
+    pub fn run_with_residency(
+        &self,
+        trace: &KernelTrace,
+        ledger: &ResidencyLedger,
+    ) -> anyhow::Result<SimReport> {
         self.validate(trace)?;
         let m = &self.machine;
-        let mut l2 = L2Model::for_trace(m, trace);
-        l2.carried_hit = carried_hit.clamp(0.0, 1.0);
+        let l2 = L2Model::for_trace_with_ledger(m, trace, ledger);
 
         // Price every phase.
         let mut demands: Vec<PhaseDemand> = Vec::with_capacity(trace.phases.len());
@@ -334,18 +346,41 @@ impl Simulator {
     }
 
     /// Simulate a merged multi-kernel trace (the co-scheduler's output):
-    /// kernels are priced back to back, and each kernel after the first
-    /// reads its spliced [`BufferClass::CarriedPartial`] bytes at its
-    /// *predecessor's* partial residency — the cross-kernel event the
-    /// first-order overlap ledger cannot model.
+    /// kernels are priced back to back, and every kernel after the first
+    /// reads its spliced [`BufferClass::CarriedPartial`] bytes at the
+    /// *splice producer's* (the head kernel's) partial residency — the
+    /// cross-kernel event the first-order overlap ledger cannot model.
+    /// On chains longer than one consumer the carried residency is
+    /// attenuated once per intervening kernel (its own resident working
+    /// set evicts the producer's partials proportionally — DESIGN.md §13).
     pub fn run_merged(&self, merged: &MergedTrace) -> anyhow::Result<MergedReport> {
+        self.run_merged_with(merged, &ResidencyLedger::default())
+    }
+
+    /// [`Simulator::run_merged`] under a step-level base ledger: the
+    /// pinned-weight residency and its capacity carve-out apply to every
+    /// kernel of the chain on top of the merged-pair partial carry.
+    pub fn run_merged_with(
+        &self,
+        merged: &MergedTrace,
+        base: &ResidencyLedger,
+    ) -> anyhow::Result<MergedReport> {
         anyhow::ensure!(!merged.kernels.is_empty(), "merged trace has no kernels");
         let mut kernels = Vec::with_capacity(merged.kernels.len());
         let mut total = 0.0;
         let mut carried_hit = 0.0;
-        for trace in &merged.kernels {
-            let r = self.run_with_carry(trace, carried_hit)?;
-            carried_hit = r.l2_model.partial_hit;
+        for (i, trace) in merged.kernels.iter().enumerate() {
+            let ledger = ResidencyLedger { carried_partial_hit: carried_hit, ..*base };
+            let r = self.run_with_residency(trace, &ledger)?;
+            if i == 0 {
+                // The head kernel owns the spliced partials.
+                carried_hit = r.l2_model.partial_hit;
+            } else {
+                // Each intervening consumer's own working set evicts part
+                // of the producer's partials before the next consumer's
+                // carried steps read them.
+                carried_hit *= ledger.attenuation(&self.machine, trace);
+            }
             total += r.total_ns;
             kernels.push(r);
         }
@@ -616,6 +651,72 @@ mod tests {
         assert!((r.total_ns - want).abs() < 1e-9);
         // And faster than running the consumer cold.
         assert!(r.kernels[1].total_ns < solo.total_ns);
+    }
+
+    #[test]
+    fn pinned_weight_reads_serve_from_l2_under_the_ledger() {
+        use crate::ascend::memory::ResidencyLedger;
+        // 32 engines each read 1 MiB of weights: cold the phase moves
+        // 32 MiB over HBM; pinned, over L2 (3x the bandwidth).
+        let bytes = 1u64 << 20;
+        let cold_step = TileStep::new(ComputeOp::Nop).read(BufferClass::WeightPacked, bytes);
+        let pinned_step = TileStep::new(ComputeOp::Nop).read(BufferClass::CarriedWeight, bytes);
+        let sim = Simulator::new(machine());
+        let cold = sim
+            .run(&trace_of(vec![simple_phase(Unit::Cube, 32, 1, cold_step)]))
+            .unwrap();
+        // Standalone (no ledger), carried weights price cold — identical.
+        let unpinned = sim
+            .run(&trace_of(vec![simple_phase(Unit::Cube, 32, 1, pinned_step)]))
+            .unwrap();
+        assert!((unpinned.total_ns - cold.total_ns).abs() < 1e-9);
+        let ledger = ResidencyLedger::with_pinned_weights(32 << 20);
+        let resident = sim
+            .run_with_residency(
+                &trace_of(vec![simple_phase(Unit::Cube, 32, 1, pinned_step)]),
+                &ledger,
+            )
+            .unwrap();
+        assert!(resident.total_ns < cold.total_ns);
+        let cw = resident.ledger.class(BufferClass::CarriedWeight);
+        assert_eq!(cw.hbm_read, 0.0);
+        assert_eq!(cw.l2_read, (32u64 << 20) as f64);
+        // Byte conservation: pinning moved the bytes, it did not shrink them.
+        let cold_w = cold.ledger.class(BufferClass::WeightPacked);
+        assert_eq!(cw.l2_read + cw.hbm_read, cold_w.l2_read + cold_w.hbm_read);
+    }
+
+    #[test]
+    fn chain_carry_attenuates_across_intervening_kernels() {
+        use crate::ascend::memory::ResidencyLedger;
+        use crate::ascend::trace::MergedTrace;
+        let bytes = 1u64 << 20;
+        let producer = {
+            let write = TileStep::new(ComputeOp::Nop).write(BufferClass::Partial, bytes);
+            let mut t = trace_of(vec![simple_phase(Unit::Cube, 8, 1, write)]);
+            t.partial_bytes = 8 * bytes; // fits L2 -> partial_hit = 1.0
+            t
+        };
+        let carried_read = TileStep::new(ComputeOp::Nop).read(BufferClass::CarriedPartial, bytes);
+        let consumer = trace_of(vec![simple_phase(Unit::Vector, 8, 1, carried_read)]);
+        // An intervening kernel whose buffered working set covers half the
+        // retained capacity: the second consumer's carried reads see the
+        // producer's residency halved.
+        let cap = ResidencyLedger::default().available_capacity(&machine());
+        let mut intervening = consumer.clone();
+        intervening.workspace_bytes = (cap / 2.0) as u64;
+        let merged = MergedTrace {
+            name: "chain".into(),
+            kernels: vec![producer, intervening, consumer.clone()],
+        };
+        let sim = Simulator::new(machine());
+        let r = sim.run_merged(&merged).unwrap();
+        assert_eq!(r.kernels.len(), 3);
+        // First consumer: full producer residency.
+        assert_eq!(r.kernels[1].l2_model.carried_hit, 1.0);
+        // Second consumer: attenuated by the intervening working set.
+        let hit = r.kernels[2].l2_model.carried_hit;
+        assert!((hit - 0.5).abs() < 1e-6, "expected ~0.5, got {hit}");
     }
 
     #[test]

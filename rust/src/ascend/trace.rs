@@ -43,6 +43,14 @@ pub enum BufferClass {
     /// `Simulator::run` prices them cold (conservative);
     /// `Simulator::run_merged` carries the producer's residency over.
     CarriedPartial,
+    /// Packed INT4 weights + quant params that the step-level residency
+    /// planner (DESIGN.md §13) pinned in L2 across the decode step: decode
+    /// re-reads the same weights token after token, so a pinned node's
+    /// weight reads are served at L2 bandwidth instead of cold HBM.  The
+    /// residency is owned by the step-level `ResidencyLedger`
+    /// (`crate::ascend::memory`), not by any single kernel; a standalone
+    /// `Simulator::run` prices these cold (conservative).
+    CarriedWeight,
 }
 
 /// One compute operation on a tile, with enough shape info to price it.

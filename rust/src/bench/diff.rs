@@ -8,8 +8,9 @@
 //!
 //! What gates: numeric leaves whose key ends in `_ns` or `_us` — the
 //! simulated-latency cells — where *lower is better*.  Keys that name
-//! gains, slack, deltas or overlap internals (`gain`, `slack`, `vs_`,
-//! `reduce`, `merged`) are direction-ambiguous and never gated.  Cells present
+//! gains, slack, deltas, overlap internals or counterfactual plans
+//! (`gain`, `slack`, `vs_`, `reduce`, `merged`, `barrier`, `resident`)
+//! are direction-ambiguous and never gated.  Cells present
 //! in the baseline but missing from the current run fail the gate (a
 //! silently dropped cell is how a trajectory gate rots); new cells are
 //! allowed (benches grow columns across PRs).
@@ -144,6 +145,17 @@ impl DiffReport {
 /// schema change, not a regression), and `barrier_ns`/`layer_barrier_us`
 /// price a *counterfactual* schedule that a better tuner pick may
 /// legitimately worsen while the served plan improves.
+///
+/// The PR-5 residency cells follow the same rule: the *resident-plan*
+/// price (`step_resident_us`, `resident_ns`) is a counterfactual — the
+/// served plan is `min(PR-4 plan, resident plan)`, so a better tuner
+/// pick can legitimately snap the resident price back to its unpinned
+/// baseline while the served latency improves — and is excluded like
+/// `barrier_ns`.  The served latency (`step_us`) already folds the
+/// residency min in, so a genuine residency regression still gates
+/// there.  `residency_gain_us` / `residency_speedup` /
+/// `residency_pinned_bytes` / `chain_gain_ns` are gains, ratios or
+/// byte counts and never gate.
 pub fn is_gated_time_cell(key: &str) -> bool {
     let timed = key.ends_with("_ns") || key.ends_with("_us");
     let ambiguous = key.contains("gain")
@@ -151,7 +163,8 @@ pub fn is_gated_time_cell(key: &str) -> bool {
         || key.contains("vs_")
         || key.contains("reduce")
         || key.contains("merged")
-        || key.contains("barrier");
+        || key.contains("barrier")
+        || key.contains("resident");
     timed && !ambiguous
 }
 
@@ -328,6 +341,32 @@ mod tests {
         let r = diff(&doc(100.0, None), &doc(80.0, None), DEFAULT_THRESHOLD);
         assert!(r.gate_passes());
         assert_eq!(r.improvements.len(), 1);
+    }
+
+    #[test]
+    fn residency_cells_classify_as_designed() {
+        // The resident-plan price is a counterfactual (served is
+        // min(PR-4 plan, resident plan)) and never gates — like
+        // barrier_ns; neither do the plan's side channels (gain, speedup
+        // ratio, pinned bytes).  The served step_us folds the residency
+        // min in, so residency regressions still gate there.
+        assert!(!is_gated_time_cell("step_resident_us"));
+        assert!(!is_gated_time_cell("resident_ns"));
+        assert!(!is_gated_time_cell("residency_gain_us"));
+        assert!(!is_gated_time_cell("residency_gain_ns"));
+        assert!(!is_gated_time_cell("residency_speedup"));
+        assert!(!is_gated_time_cell("residency_pinned_bytes"));
+        assert!(!is_gated_time_cell("chain_gain_ns"));
+        // A snapped-back resident price alone never trips the gate...
+        let base = doc(100.0, Some(("step_resident_us", 50.0)));
+        let cur = doc(100.0, Some(("step_resident_us", 60.0)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1, "only step_us gates");
+        // ...but a lost residency win shows up in the served cell.
+        let r = diff(&doc(50.0, None), &doc(60.0, None), DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.regressions[0].path, "cells[0].step_us");
     }
 
     #[test]

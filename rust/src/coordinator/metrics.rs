@@ -29,6 +29,46 @@ struct Inner {
     /// down), so per-GEMM tuning coverage and predicted kernel latency are
     /// visible at a glance.
     gemm_schedules: BTreeMap<String, BTreeMap<String, GemmScheduleStat>>,
+    /// Per-batch-size predicted cross-node gains of the served plans: the
+    /// co-scheduled overlap (`LayerPlan::overlap_gain_ns`) and the
+    /// step-level weight-residency gain, both resolved cache-only by the
+    /// router — the predicted-overlap column of the serving report.
+    plan_gains: BTreeMap<usize, PlanGainStat>,
+}
+
+/// Predicted-gain tally of one decode-group batch size.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlanGainStat {
+    /// Groups served at this batch size.
+    pub groups: u64,
+    /// Groups whose layer plan carried a resolved overlap prediction.
+    pub overlap_resolved: u64,
+    /// Summed predicted overlap gain (ns) over resolved groups.
+    pub overlap_gain_ns_sum: f64,
+    /// Groups whose plan carried a resolved residency prediction.
+    pub residency_resolved: u64,
+    /// Summed predicted residency gain (ns) over resolved groups.
+    pub residency_gain_ns_sum: f64,
+}
+
+impl PlanGainStat {
+    /// Mean predicted overlap gain per resolved group, in µs.
+    pub fn mean_overlap_us(&self) -> f64 {
+        if self.overlap_resolved == 0 {
+            0.0
+        } else {
+            self.overlap_gain_ns_sum / self.overlap_resolved as f64 / 1e3
+        }
+    }
+
+    /// Mean predicted residency gain per resolved group, in µs.
+    pub fn mean_residency_us(&self) -> f64 {
+        if self.residency_resolved == 0 {
+            0.0
+        } else {
+            self.residency_gain_ns_sum / self.residency_resolved as f64 / 1e3
+        }
+    }
 }
 
 /// Serving tally of one (GEMM kind, strategy) pair.
@@ -67,6 +107,7 @@ pub struct MetricsSnapshot {
     pub total: Summary,
     pub schedules: BTreeMap<String, u64>,
     pub gemm_schedules: BTreeMap<String, BTreeMap<String, GemmScheduleStat>>,
+    pub plan_gains: BTreeMap<usize, PlanGainStat>,
 }
 
 impl Metrics {
@@ -115,6 +156,28 @@ impl Metrics {
         stat.predicted_ns_sum += predicted_ns.unwrap_or(0.0);
     }
 
+    /// Record the predicted cross-node gains of the layer plan serving
+    /// one routed decode group (`None` = the prediction did not resolve
+    /// from the tune cache — the group still serves, unpredicted).
+    pub fn record_group_plan(
+        &self,
+        batch: usize,
+        overlap_gain_ns: Option<f64>,
+        residency_gain_ns: Option<f64>,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let stat = g.plan_gains.entry(batch).or_default();
+        stat.groups += 1;
+        if let Some(ns) = overlap_gain_ns {
+            stat.overlap_resolved += 1;
+            stat.overlap_gain_ns_sum += ns;
+        }
+        if let Some(ns) = residency_gain_ns {
+            stat.residency_resolved += 1;
+            stat.residency_gain_ns_sum += ns;
+        }
+    }
+
     pub fn record_completion(&self, tokens: usize, ttft_s: f64, total_s: f64) {
         let mut g = self.inner.lock().unwrap();
         g.requests_completed += 1;
@@ -135,6 +198,7 @@ impl Metrics {
             total: Summary::of(&g.total_s),
             schedules: g.schedules.clone(),
             gemm_schedules: g.gemm_schedules.clone(),
+            plan_gains: g.plan_gains.clone(),
         }
     }
 }
@@ -194,6 +258,19 @@ impl MetricsSnapshot {
                 .collect();
             out.push_str(&format!("gemm {:<10}: {}\n", kind, parts.join("  ")));
         }
+        // Predicted cross-node gains per group (cache-only layer plans):
+        // the co-scheduled overlap and the step-level weight residency.
+        for (batch, st) in &self.plan_gains {
+            out.push_str(&format!(
+                "plan b{batch:<4}: {} groups, predicted overlap ~{:.1} us/group ({} resolved), \
+                 residency ~{:.1} us/group ({} resolved)\n",
+                st.groups,
+                st.mean_overlap_us(),
+                st.overlap_resolved,
+                st.mean_residency_us(),
+                st.residency_resolved,
+            ));
+        }
         out
     }
 }
@@ -251,6 +328,26 @@ mod tests {
         let text = s.render(1.0);
         assert!(text.contains("moe_expert"), "render missing moe_expert:\n{text}");
         assert!(text.contains("[128 gemms]"), "render missing expert count:\n{text}");
+    }
+
+    #[test]
+    fn plan_gain_column_tracks_overlap_and_residency_per_group() {
+        let m = Metrics::new();
+        m.record_group_plan(8, Some(12_000.0), Some(4_000.0));
+        m.record_group_plan(8, Some(8_000.0), None);
+        m.record_group_plan(16, None, None);
+        let s = m.snapshot();
+        let b8 = &s.plan_gains[&8];
+        assert_eq!(b8.groups, 2);
+        assert_eq!(b8.overlap_resolved, 2);
+        assert!((b8.mean_overlap_us() - 10.0).abs() < 1e-9);
+        assert_eq!(b8.residency_resolved, 1);
+        assert!((b8.mean_residency_us() - 4.0).abs() < 1e-9);
+        let b16 = &s.plan_gains[&16];
+        assert_eq!((b16.groups, b16.overlap_resolved, b16.residency_resolved), (1, 0, 0));
+        let text = s.render(1.0);
+        assert!(text.contains("plan b8"), "render missing plan column:\n{text}");
+        assert!(text.contains("residency"), "render missing residency column:\n{text}");
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub struct LayerPlan {
     /// from the cache (the plan still serves; it just carries no overlap
     /// prediction).
     pub overlap_gain_ns: Option<f64>,
+    /// What the step-level weight-residency plan buys per step (DESIGN.md
+    /// §13), resolved cache-only from the tune cache's `residency` map.
+    /// `None` when the layer's plan is missing from the cache.
+    pub residency_gain_ns: Option<f64>,
+    /// Weight bytes that plan holds L2-resident (0 when nothing pins).
+    pub residency_pinned_bytes: Option<u64>,
 }
 
 impl LayerPlan {
@@ -84,6 +90,13 @@ impl LayerPlan {
     /// (only when both the node plans and every pair decision resolved).
     pub fn predicted_overlapped_ns(&self) -> Option<f64> {
         Some((self.predicted_layer_ns()? - self.overlap_gain_ns?).max(0.0))
+    }
+
+    /// Predicted layer GEMM time with the overlap AND the step-level
+    /// weight-residency gains applied (the two compose: the residency
+    /// gain is a delta between two chains that both price the overlap).
+    pub fn predicted_resident_ns(&self) -> Option<f64> {
+        Some((self.predicted_overlapped_ns()? - self.residency_gain_ns?).max(0.0))
     }
 
     /// The group's headline plan: the paper's bottleneck down-projection,
@@ -197,14 +210,22 @@ impl<'rt> Router<'rt> {
         // Co-schedule decisions for the layer's adjacent pairs, also
         // cache-only (`repro tune` seeds the same `overlap_pairs` set,
         // so a warmed cache always hits here).
-        let overlap_gain_ns = tuner.and_then(|t| {
+        let overlap_gain_ns = tuner.as_deref_mut().and_then(|t| {
             let mut total = 0.0;
             for pair in layer.overlap_pairs() {
                 total += pair.pairs as f64 * t.lookup_overlap(&pair.producer, &pair.consumer)?;
             }
             Some(total)
         });
-        Some(LayerPlan { nodes, overlap_gain_ns })
+        // The step-level weight-residency plan, cache-only as well
+        // (`repro tune` seeds every enumerated layer graph's plan).
+        let residency = tuner.and_then(|t| t.lookup_residency(&layer));
+        Some(LayerPlan {
+            nodes,
+            overlap_gain_ns,
+            residency_gain_ns: residency.map(|r| r.gain_ns),
+            residency_pinned_bytes: residency.map(|r| r.pinned_bytes),
+        })
     }
 
     /// Whether a tune cache was found next to the artifacts.

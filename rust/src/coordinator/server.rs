@@ -99,6 +99,11 @@ impl<'rt> Server<'rt> {
         // the tuned winners from the persisted cache, or untuned defaults.
         let plan = self.router.layer_plan(group.batch);
         Server::record_group_schedules(&self.metrics, plan.as_ref());
+        // The plan's predicted cross-node gains (overlap + residency),
+        // cache-only — the predicted-overlap column of the metrics report.
+        if let Some(p) = plan.as_ref() {
+            self.metrics.record_group_plan(group.batch, p.overlap_gain_ns, p.residency_gain_ns);
+        }
         let engine = self.router.engine(group.batch)?;
         engine.reset()?;
         let vocab = engine.vocab;

@@ -15,7 +15,7 @@
 //! * `quickstart` — execute a real W4A16 artifact through PJRT.
 //! * `serve`      — run the decode-serving coordinator on synthetic load.
 
-use ascend_w4a16::analysis::{layer, report, roofline, sensitivity, timeline, traffic};
+use ascend_w4a16::analysis::{layer, report, residency, roofline, sensitivity, timeline, traffic};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
@@ -80,6 +80,7 @@ USAGE: repro <subcommand> [options]
         [--batch M] [--layers L] [--kv-len T] [--heads H]
         [--moe-experts E] [--moe-topk K]
         [--overlap sequential|overlapped|exact|auto]
+        [--residency off|auto]
         [--strategy auto|...] [--tune-cache PATH] [--json PATH]
                                    simulate one FULL decode step: attention
                                    score/softmax/AV + RMSNorm/residual/glue on
@@ -90,14 +91,21 @@ USAGE: repro <subcommand> [options]
                                    'overlapped' prices the first-order ledger,
                                    'exact' re-simulates the co-scheduled merged
                                    traces (DESIGN.md §12), 'auto' serves
-                                   min(sequential, overlapped, exact)
-  tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]]
+                                   min(sequential, overlapped, exact);
+                                   '--residency auto' (default) additionally
+                                   plans step-level L2 weight pinning
+                                   (DESIGN.md §13) and serves
+                                   min(plan, resident plan) — never slower
+  tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]] [--prune]
                                    autotune strategies x tilings (the paper
                                    sweep, plus DIR's decode-model shapes)
                                    and persist the winners to PATH
                                    (default tune_cache.json); also seeds the
-                                   co-schedule pair decisions so the router
-                                   resolves cross-node overlap cache-only
+                                   co-schedule pair decisions and the
+                                   step-level residency plans so the router
+                                   resolves both cache-only; --prune drops
+                                   entries whose machine tag no longer
+                                   matches this machine, then exits
   bench-diff --baseline B.json --current C.json [--threshold 0.02]
              [--out REPORT.json] [--bless]
                                    gate a BENCH_*.json run against its
@@ -206,6 +214,8 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     let layers = args.get_usize("layers", 32)?;
     let strategy = Strategy::from_name(args.get_or("strategy", "auto"))?;
     let overlap = layer::OverlapMode::from_name(args.get_or("overlap", "auto"))?;
+    let residency_mode =
+        residency::ResidencyMode::from_name(args.get_or("residency", "auto"))?;
     let (geometry, preset_moe) = match args.get("model") {
         Some(name) => (llm::layer_geometry(name)?, llm::moe_geometry(name)),
         None => {
@@ -243,7 +253,8 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     let rep = if strategy == Strategy::Auto {
         let path = args.get_or("tune-cache", tune::DEFAULT_CACHE_FILE);
         let mut tuner = Tuner::load(m.clone(), path)?;
-        let rep = layer::simulate_step_tuned(&m, &step, overlap, &mut tuner)?;
+        let rep =
+            layer::simulate_step_tuned_with(&m, &step, overlap, residency_mode, &mut tuner)?;
         if tuner.searches > 0 {
             tuner.save()?;
             println!("auto: searched {} shapes (cache warmed at {path})\n", tuner.searches);
@@ -252,7 +263,7 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
         }
         rep
     } else {
-        layer::simulate_step(&m, &step, overlap, |p| {
+        layer::simulate_step_with(&m, &step, overlap, residency_mode, |p| {
             Ok((strategy, kernels::select_tiling(&m, p, strategy)?, layer::Resolution::Heuristic))
         })?
     };
@@ -269,6 +280,20 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let m = machine();
     let out = args.get_or("out", tune::DEFAULT_CACHE_FILE);
     let mut tuner = Tuner::load(m.clone(), out)?;
+    if args.flag("prune") {
+        // Eviction of machine-tag-mismatched entries: the tag key already
+        // guarantees stale entries are never served; pruning reclaims the
+        // cache file after a machine-config change.
+        let tag = tune::machine_tag(&m);
+        let before =
+            tuner.cache.len() + tuner.cache.overlap_len() + tuner.cache.residency_len();
+        let removed = tuner.cache.prune_mismatched(&tag);
+        tuner.save()?;
+        println!(
+            "pruned {removed} of {before} cached entries whose machine tag != {tag} -> {out}"
+        );
+        return Ok(());
+    }
     let sim = Simulator::new(m.clone());
 
     // One explicit shape, or the full paper sweep; with --artifacts, also
@@ -351,11 +376,14 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     // graph (paper presets, MoE presets, artifact configs — the same
     // `layers` the shape tuning above came from), so `Router::layer_plan`
     // and `repro layer --overlap exact/auto` resolve the cross-node
-    // overlap cache-only (DESIGN.md §12).
+    // overlap cache-only (DESIGN.md §12) — and the step-level residency
+    // plans (DESIGN.md §13) for the same graphs, so the router's
+    // residency column resolves cache-only too.
     for decode_layer in &layers {
         for pair in decode_layer.overlap_pairs() {
             tuner.resolve_overlap(&pair.producer, &pair.consumer)?;
         }
+        tuner.resolve_residency(decode_layer)?;
     }
     tuner.save()?;
     println!(
@@ -369,6 +397,12 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         tuner.cache.overlap_len(),
         tuner.overlap_searches,
         tuner.overlap_hits
+    );
+    println!(
+        "residency plans: {} cached ({} planned, {} hits)",
+        tuner.cache.residency_len(),
+        tuner.residency_searches,
+        tuner.residency_hits
     );
     println!(
         "geomean speedup over heuristic splitk: {:.2}x",

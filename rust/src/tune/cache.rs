@@ -2,11 +2,12 @@
 //! their winning (strategy, tiling) schedule, as found by [`super::search`].
 //!
 //! The on-disk format is a single JSON document (`util::json`-based, no
-//! external serializer):
+//! external serializer), format v2 (DESIGN.md §13) — v1 documents (no
+//! `"overlaps"` / `"residency"` maps) still parse, with those maps empty:
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "entries": {
 //!     "aic32_l233554432_hbm1200/m16_n512_k16384_g128": {
 //!       "strategy": "chunked",
@@ -14,7 +15,9 @@
 //!       "tiling": {"bm":16,"bn":256,"bk":128,"splits":16,"chunks":1,
 //!                  "dequant_bk":128,"dequant_bn":256}
 //!     }
-//!   }
+//!   },
+//!   "overlaps": {"<pair_key>": 2345.5},
+//!   "residency": {"<layer_key>": {"gain_ns": 5120.0, "pinned_bytes": 9961472}}
 //! }
 //! ```
 
@@ -25,6 +28,7 @@ use crate::ascend::MachineConfig;
 use crate::kernels::tiling::Tiling;
 use crate::kernels::{GemmProblem, Strategy};
 use crate::util::json::Json;
+use crate::workload::decode_layer::DecodeLayer;
 
 /// One cached winner.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -71,13 +75,47 @@ pub fn pair_key(machine: &MachineConfig, producer: &GemmProblem, consumer: &Gemm
     )
 }
 
+/// Cache key for one decode layer's step-level weight-residency plan
+/// (DESIGN.md §13): the plan is a function of the layer's whole GEMM
+/// chain on one machine, so the key concatenates every node's padded
+/// shape (and expert fan-out) in issue order.
+pub fn layer_key(machine: &MachineConfig, layer: &DecodeLayer) -> String {
+    let nodes: Vec<String> = layer
+        .gemm_nodes()
+        .iter()
+        .map(|n| {
+            format!(
+                "{}x{}:m{}_n{}_k{}_g{}",
+                n.kind.name(),
+                n.count,
+                n.problem.m_padded(machine),
+                n.problem.n,
+                n.problem.k,
+                n.problem.group
+            )
+        })
+        .collect();
+    format!("{}/layer[{}]", machine_tag(machine), nodes.join(","))
+}
+
+/// One cached step-level residency decision: what the plan buys and how
+/// many weight bytes it holds resident (0/0 = planning found nothing
+/// worth pinning — still a pure cache hit on re-resolve).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResidencyEntry {
+    pub gain_ns: f64,
+    pub pinned_bytes: u64,
+}
+
 /// The cache proper: per-shape schedule winners plus per-adjacent-pair
 /// co-schedule decisions (the exact overlap gain in ns per pair; 0.0 means
-/// the co-scheduler declined to merge that pair).
+/// the co-scheduler declined to merge that pair) plus per-layer
+/// step-level residency decisions.
 #[derive(Debug, Clone, Default)]
 pub struct TuneCache {
     entries: BTreeMap<String, TunedEntry>,
     overlaps: BTreeMap<String, f64>,
+    residency: BTreeMap<String, ResidencyEntry>,
 }
 
 impl TuneCache {
@@ -119,6 +157,36 @@ impl TuneCache {
         self.overlaps.len()
     }
 
+    // ----- step-level residency decisions ----------------------------------
+
+    pub fn residency_get(&self, key: &str) -> Option<ResidencyEntry> {
+        self.residency.get(key).copied()
+    }
+
+    pub fn residency_insert(&mut self, key: String, entry: ResidencyEntry) {
+        self.residency.insert(key, entry);
+    }
+
+    pub fn residency_len(&self) -> usize {
+        self.residency.len()
+    }
+
+    // ----- staleness --------------------------------------------------------
+
+    /// Drop every entry (shape winners, pair decisions, residency plans)
+    /// whose machine tag no longer matches `tag` — the `repro tune
+    /// --prune` eviction policy.  The machine-tag key already guarantees
+    /// stale entries are never *served*; pruning reclaims the file.
+    /// Returns how many entries were removed.
+    pub fn prune_mismatched(&mut self, tag: &str) -> usize {
+        let prefix = format!("{tag}/");
+        let before = self.entries.len() + self.overlaps.len() + self.residency.len();
+        self.entries.retain(|k, _| k.starts_with(&prefix));
+        self.overlaps.retain(|k, _| k.starts_with(&prefix));
+        self.residency.retain(|k, _| k.starts_with(&prefix));
+        before - (self.entries.len() + self.overlaps.len() + self.residency.len())
+    }
+
     // ----- persistence ------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
@@ -132,16 +200,33 @@ impl TuneCache {
             .iter()
             .map(|(k, &gain)| (k.clone(), Json::num(gain)))
             .collect();
+        let residency = self
+            .residency
+            .iter()
+            .map(|(k, e)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("gain_ns", Json::num(e.gain_ns)),
+                        ("pinned_bytes", Json::num(e.pinned_bytes as f64)),
+                    ]),
+                )
+            })
+            .collect();
         Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(2.0)),
             ("entries", Json::Obj(entries)),
             ("overlaps", Json::Obj(overlaps)),
+            ("residency", Json::Obj(residency)),
         ])
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<TuneCache> {
         let version = j.req_usize("version")?;
-        anyhow::ensure!(version == 1, "unsupported tune cache version {version}");
+        anyhow::ensure!(
+            version == 1 || version == 2,
+            "unsupported tune cache version {version}"
+        );
         let mut cache = TuneCache::new();
         let entries = j
             .req("entries")?
@@ -158,6 +243,17 @@ impl TuneCache {
                     .as_f64()
                     .ok_or_else(|| anyhow::anyhow!("overlap '{key}' is not a number"))?;
                 cache.overlap_insert(key.clone(), gain);
+            }
+        }
+        // Pre-PR-5 caches have no residency plans: absent = empty.
+        if let Some(residency) = j.get("residency").and_then(|o| o.as_obj()) {
+            for (key, e) in residency {
+                let gain_ns = e
+                    .req("gain_ns")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("residency '{key}' gain is not a number"))?;
+                let pinned_bytes = e.req_usize("pinned_bytes")? as u64;
+                cache.residency_insert(key.clone(), ResidencyEntry { gain_ns, pinned_bytes });
             }
         }
         Ok(cache)
@@ -248,6 +344,10 @@ mod tests {
         c.insert("k1".into(), entry());
         c.overlap_insert("k1->m16_n512_k16384_g128".into(), 2345.5);
         c.overlap_insert("declined".into(), 0.0);
+        c.residency_insert(
+            "tag/layer[down x1:m16_n2048_k8192_g128]".into(),
+            ResidencyEntry { gain_ns: 5120.0, pinned_bytes: 9 << 20 },
+        );
         let j = c.to_json();
         let back = TuneCache::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.len(), 1);
@@ -256,6 +356,12 @@ mod tests {
         assert_eq!(back.overlap_get("k1->m16_n512_k16384_g128"), Some(2345.5));
         assert_eq!(back.overlap_get("declined"), Some(0.0));
         assert_eq!(back.overlap_get("missing"), None);
+        assert_eq!(back.residency_len(), 1);
+        assert_eq!(
+            back.residency_get("tag/layer[down x1:m16_n2048_k8192_g128]"),
+            Some(ResidencyEntry { gain_ns: 5120.0, pinned_bytes: 9 << 20 })
+        );
+        assert_eq!(back.residency_get("missing"), None);
     }
 
     #[test]
@@ -264,6 +370,61 @@ mod tests {
         let j = Json::parse(r#"{"version": 1, "entries": {}}"#).unwrap();
         let c = TuneCache::from_json(&j).unwrap();
         assert_eq!(c.overlap_len(), 0);
+        assert_eq!(c.residency_len(), 0);
+    }
+
+    #[test]
+    fn v1_caches_without_residency_still_parse() {
+        // Pre-PR-5 caches carry overlaps but no "residency" map.
+        let j = Json::parse(r#"{"version": 1, "entries": {}, "overlaps": {"a": 1.5}}"#).unwrap();
+        let c = TuneCache::from_json(&j).unwrap();
+        assert_eq!(c.overlap_get("a"), Some(1.5));
+        assert_eq!(c.residency_len(), 0);
+    }
+
+    #[test]
+    fn layer_key_is_machine_and_chain_specific() {
+        use crate::model::llm::{layer_geometry, moe_geometry};
+        let m = MachineConfig::ascend910();
+        let dense = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let key = layer_key(&m, &dense);
+        assert!(key.starts_with(&format!("{}/layer[", machine_tag(&m))));
+        assert!(key.contains("qkv") && key.contains("down"));
+        // Padded-M aliasing: batches below the cube tile share a plan.
+        let small = DecodeLayer::new(layer_geometry("llama32").unwrap(), 3);
+        assert_eq!(key, layer_key(&m, &small));
+        // A different chain (MoE fan-out) gets a different key.
+        let moe = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
+            .with_moe(moe_geometry("deepseek-moe").unwrap());
+        assert_ne!(key, layer_key(&m, &moe));
+        assert!(layer_key(&m, &moe).contains("moe_expertx64"));
+    }
+
+    #[test]
+    fn prune_drops_only_mismatched_machine_tags() {
+        let m = MachineConfig::ascend910();
+        let tag = machine_tag(&m);
+        let mut c = TuneCache::new();
+        c.insert(format!("{tag}/m16_n512_k16384_g128"), entry());
+        c.insert("aic16_l216777216_hbm600/m16_n512_k16384_g128".into(), entry());
+        c.overlap_insert(format!("{tag}/m16_n512_k16384_g128->m16_n2048_k8192_g128"), 1.0);
+        c.overlap_insert("aic16_l216777216_hbm600/stale->pair".into(), 2.0);
+        c.residency_insert(
+            format!("{tag}/layer[downx1:m16_n2048_k8192_g128]"),
+            ResidencyEntry::default(),
+        );
+        c.residency_insert(
+            "aic16_l216777216_hbm600/layer[stale]".into(),
+            ResidencyEntry::default(),
+        );
+        let removed = c.prune_mismatched(&tag);
+        assert_eq!(removed, 3);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.overlap_len(), 1);
+        assert_eq!(c.residency_len(), 1);
+        assert!(c.get(&format!("{tag}/m16_n512_k16384_g128")).is_some());
+        // Idempotent: a second prune removes nothing.
+        assert_eq!(c.prune_mismatched(&tag), 0);
     }
 
     #[test]

@@ -15,14 +15,15 @@
 pub mod cache;
 pub mod search;
 
-pub use cache::{machine_tag, pair_key, shape_key, TuneCache, TunedEntry};
+pub use cache::{layer_key, machine_tag, pair_key, shape_key, ResidencyEntry, TuneCache, TunedEntry};
 pub use search::{search, SearchResult};
 
 use std::path::{Path, PathBuf};
 
-use crate::analysis::coschedule;
+use crate::analysis::{coschedule, residency};
 use crate::ascend::{KernelTrace, MachineConfig, Simulator};
 use crate::kernels::{self, GemmProblem, Strategy};
+use crate::workload::decode_layer::DecodeLayer;
 
 /// Default cache file name (next to the artifacts / working directory).
 pub const DEFAULT_CACHE_FILE: &str = "tune_cache.json";
@@ -42,6 +43,10 @@ pub struct Tuner {
     pub overlap_hits: usize,
     /// Pair decisions that required a live merged-trace simulation.
     pub overlap_searches: usize,
+    /// Step-level residency plans served from the cache.
+    pub residency_hits: usize,
+    /// Residency plans that required live planning.
+    pub residency_searches: usize,
 }
 
 impl Tuner {
@@ -54,6 +59,8 @@ impl Tuner {
             searches: 0,
             overlap_hits: 0,
             overlap_searches: 0,
+            residency_hits: 0,
+            residency_searches: 0,
         }
     }
 
@@ -69,6 +76,8 @@ impl Tuner {
             searches: 0,
             overlap_hits: 0,
             overlap_searches: 0,
+            residency_hits: 0,
+            residency_searches: 0,
         })
     }
 
@@ -164,6 +173,92 @@ impl Tuner {
         self.overlap_searches += 1;
         self.cache.overlap_insert(key, gain);
         Ok(gain)
+    }
+
+    /// The full cache key of a layer's residency plan: the shape chain
+    /// ([`cache::layer_key`]) plus a fingerprint of every node's cached
+    /// schedule *winner* — the plan was priced under those exact
+    /// schedules, so a re-tuned winner (a search-space change, the PR-2
+    /// precedent) invalidates it instead of serving a stale gain.
+    /// `None` when any node's shape entry is missing from the cache.
+    fn residency_key(&self, layer: &DecodeLayer) -> Option<String> {
+        let mut key = cache::layer_key(&self.machine, layer);
+        key.push('@');
+        for node in layer.gemm_nodes() {
+            if node.problem.validate().is_err() {
+                continue;
+            }
+            let e = self.cache.get(&shape_key(&self.machine, &node.problem))?;
+            let t = e.tiling;
+            key.push_str(&format!(
+                "{}:bm{}bn{}bk{}s{}c{}dk{}dn{};",
+                e.strategy.name(),
+                t.bm,
+                t.bn,
+                t.bk,
+                t.splits,
+                t.chunks,
+                t.dequant_bk,
+                t.dequant_bn
+            ));
+        }
+        Some(key)
+    }
+
+    /// Cache-only lookup of the step-level residency plan for one decode
+    /// layer's GEMM chain (DESIGN.md §13) — the serving hot path
+    /// (`Router::layer_plan`) never pays a planning pass.  Misses when
+    /// the plan was never seeded OR when any node's tuned winner changed
+    /// since it was priced.
+    pub fn lookup_residency(&mut self, layer: &DecodeLayer) -> Option<ResidencyEntry> {
+        let key = self.residency_key(layer)?;
+        let hit = self.cache.residency_get(&key);
+        if hit.is_some() {
+            self.residency_hits += 1;
+        }
+        hit
+    }
+
+    /// Resolve the step-level residency decision for one decode layer:
+    /// cache hit, or run the planner over the layer's tuned GEMM chain
+    /// (DESIGN.md §13) and cache what it buys.  A cached zero-gain entry
+    /// means planning found nothing worth pinning — re-resolving it is a
+    /// pure cache hit either way.
+    pub fn resolve_residency(&mut self, layer: &DecodeLayer) -> anyhow::Result<ResidencyEntry> {
+        let mut inputs = Vec::new();
+        for node in layer.gemm_nodes() {
+            if node.problem.validate().is_err() {
+                continue;
+            }
+            let tuned = self.resolve(&node.problem)?;
+            let trace = kernels::schedule_with(
+                &self.machine,
+                &node.problem,
+                tuned.strategy,
+                &tuned.tiling,
+            )?;
+            inputs.push(residency::PlanNodeInput {
+                kind: node.kind,
+                problem: node.problem,
+                count: node.count.max(1),
+                unit_ns: tuned.total_ns,
+                trace,
+            });
+        }
+        // Every shape entry resolved above, so the winner-fingerprinted
+        // key always exists here.
+        let key = self
+            .residency_key(layer)
+            .ok_or_else(|| anyhow::anyhow!("residency key missing after resolving all nodes"))?;
+        if let Some(e) = self.cache.residency_get(&key) {
+            self.residency_hits += 1;
+            return Ok(e);
+        }
+        let plan = residency::plan_nodes(&self.machine, &inputs, 0.0, true)?;
+        let entry = ResidencyEntry { gain_ns: plan.gain_ns(), pinned_bytes: plan.pinned_bytes };
+        self.residency_searches += 1;
+        self.cache.residency_insert(key, entry);
+        Ok(entry)
     }
 
     /// Persist the cache to its load path (no-op destination error if the
@@ -262,6 +357,57 @@ mod tests {
         assert_eq!(cold.lookup_overlap(&prod, &cons), Some(gain));
         assert_eq!((cold.overlap_hits, cold.overlap_searches), (1, 0));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn residency_resolves_once_then_hits_and_persists() {
+        use crate::model::llm::layer_geometry;
+        let dir = std::env::temp_dir().join(format!("w4a16-residency-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(DEFAULT_CACHE_FILE);
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+
+        let mut warm = Tuner::load(machine(), &path).unwrap();
+        assert_eq!(warm.lookup_residency(&layer), None, "cold cache");
+        let e = warm.resolve_residency(&layer).unwrap();
+        assert_eq!(warm.residency_searches, 1);
+        assert!(e.gain_ns >= 0.0 && e.gain_ns.is_finite());
+        assert!(e.pinned_bytes as f64 <= machine().l2_retention * machine().l2_bytes as f64);
+        let again = warm.resolve_residency(&layer).unwrap();
+        assert_eq!(warm.residency_searches, 1, "second resolve must hit");
+        assert_eq!(again, e);
+        warm.save().unwrap();
+
+        // A fresh tuner serves the plan cache-only (the router hot path).
+        let mut cold = Tuner::load(machine(), &path).unwrap();
+        assert_eq!(cold.lookup_residency(&layer), Some(e));
+        assert_eq!((cold.residency_hits, cold.residency_searches), (1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn residency_plan_invalidates_when_a_tuned_winner_changes() {
+        use crate::model::llm::layer_geometry;
+        let mut tuner = Tuner::new(machine());
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        tuner.resolve_residency(&layer).unwrap();
+        assert!(tuner.lookup_residency(&layer).is_some());
+        // Re-tune one node to a different winner (the search-space-change
+        // scenario): the plan was priced under the old schedule, so it
+        // must MISS, not serve a stale gain.
+        let down = layer.problem(crate::workload::decode_layer::GemmKind::Down);
+        let key = tuner.key(&down);
+        let old = *tuner.cache.get(&key).unwrap();
+        let flipped = TunedEntry {
+            strategy: if old.strategy == Strategy::SplitK {
+                Strategy::Chunked
+            } else {
+                Strategy::SplitK
+            },
+            ..old
+        };
+        tuner.cache.insert(key, flipped);
+        assert_eq!(tuner.lookup_residency(&layer), None, "stale plan must not serve");
     }
 
     #[test]

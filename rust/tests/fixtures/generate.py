@@ -196,6 +196,87 @@ def merged(producer, consumer):
             "kernels": [head, spliced]}
 
 
+# --- step-level weight residency (analysis/residency.rs, DESIGN §13) ------
+
+
+def resident(trace_doc):
+    """Mirror of `residency::carry_weights` + `golden::trace_to_json`.
+
+    Every phase's weight_packed and quant_param reads re-class as one
+    carried_weight total; byte counts, writes, engines, steps, macs and
+    the workspace fields are untouched (pinning changes where weight
+    bytes are served, never how many).
+    """
+    phases = []
+    for p in trace_doc["phases"]:
+        reads = dict(p["reads"])
+        carried = reads.pop("weight_packed", 0) + reads.pop("quant_param", 0)
+        if carried:
+            reads["carried_weight"] = carried
+        phases.append(dict(p, reads=reads))
+    return dict(trace_doc, name=trace_doc["name"] + "_resident", phases=phases)
+
+
+# --- chain-level co-scheduler splice (coschedule.rs splice_chain, DESIGN §13)
+
+
+def round_robin_loads(items, slots):
+    return [len(range(e, items, slots)) for e in range(slots)]
+
+
+def chain(producer, c1, c2):
+    """Mirror of `coschedule::splice_chain` + `golden::merged_to_json`.
+
+    The producer's exposed tail steps flatten into one carried list;
+    the first consumer's dequant prologue absorbs one carried step per
+    dequant step (its capacity), the second takes the overflow, and each
+    prologue re-balances least-loaded over the 64 vector engines (the
+    digest only needs the resulting active-engine count, which the same
+    greedy integer loop computes here).  Tail steps are identical reduce
+    steps, so per-step bytes divide out of the phase totals exactly.
+    """
+    phases = producer["phases"]
+    start = len(phases) - 1
+    while start > 0 and phases[start]["pipelined_with_prev"]:
+        start -= 1
+    assert start > 0, "producer has no exposed group"
+    tail = phases[start:]
+    assert all(p["name"].startswith("reduce") for p in tail), "tail must be all reduce"
+    head = dict(producer, name=producer["name"] + "_head", phases=phases[:start])
+
+    carried_steps = sum(p["steps"] for p in tail)
+    rd = sum(p["reads"]["partial"] for p in tail) // carried_steps
+    wr = sum(p["writes"]["output"] for p in tail) // carried_steps
+
+    def spliced(consumer, n_carried, suffix):
+        dq = consumer["phases"][0]
+        assert "dequant" in dq["name"], "consumer must open with a dequant prologue"
+        loads = round_robin_loads(dq["steps"], VEC_CORES)
+        assigned = [0] * VEC_CORES
+        for _ in range(n_carried):
+            e = min(range(VEC_CORES), key=lambda i: (loads[i], i))
+            loads[e] += 1
+            assigned[e] += 1
+        engines = sum(1 for e in range(VEC_CORES)
+                      if assigned[e] > 0 or e in range(min(dq["steps"], VEC_CORES)))
+        reads = dict(dq["reads"])
+        writes = dict(dq["writes"])
+        if n_carried:
+            reads["carried_partial"] = reads.get("carried_partial", 0) + n_carried * rd
+            writes["output"] = writes.get("output", 0) + n_carried * wr
+        name = "spliced_dequant" if n_carried else dq["name"]
+        new_dq = dict(dq, name=name, steps=dq["steps"] + n_carried,
+                      engines=engines, reads=reads, writes=writes)
+        return dict(consumer, name=consumer["name"] + suffix,
+                    phases=[new_dq] + consumer["phases"][1:])
+
+    cap1 = min(c1["phases"][0]["steps"], carried_steps)
+    return {"name": f"chain_{producer['name']}__{c1['name']}__{c2['name']}",
+            "kernels": [head,
+                        spliced(c1, cap1, "_spliced"),
+                        spliced(c2, carried_steps - cap1, "_spliced2")]}
+
+
 # --- full decode-step graph (workload/decode_layer.rs DecodeStep::nodes) ---
 
 def vec_node(kind, elems, ops, hbm, l2):
@@ -278,6 +359,17 @@ FIXTURES = {
     "merged_moe_expert_m1_n7168_k2048_internal":
         merged(splitk(1, 7168, 2048, tiling(16, 32, 128, 4, 1), "pipelined"),
                splitk(1, 7168, 2048, tiling(16, 32, 128, 4, 1), "pipelined")),
+    # Step-level weight residency (DESIGN §13): the chunked mid shape with
+    # its packed-weight + qparam reads re-classed carried_weight.
+    "chunked_m8_n2048_k8192_pipelined_resident":
+        resident(chunked(8, 2048, 8192, tiling(16, 128, 128, 2, 4), "pipelined")),
+    # Chain-level co-scheduler splice (DESIGN §13): a barrier-reduce
+    # producer (224 exposed tiles) saturating a 32-step prologue; the
+    # overflow re-balances into the second consumer's prologue.
+    "chain_splitk_m8_n7168_k2048__splitk_m8_n512_k2048x2":
+        chain(splitk(8, 7168, 2048, tiling(16, 32, 128, 4, 1), "barrier"),
+              splitk(8, 512, 2048, tiling(16, 256, 128, 2, 1), "pipelined"),
+              splitk(8, 512, 2048, tiling(16, 256, 128, 2, 1), "pipelined")),
     # Full decode-step graphs: GLM-4.5 dense and DeepSeek-MoE at batch 8.
     "decode_step_glm45_b8":
         decode_step(8, 2048, 40, 5120, 12288, 5120),

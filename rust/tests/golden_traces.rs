@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use ascend_w4a16::analysis::{coschedule, golden};
+use ascend_w4a16::analysis::{coschedule, golden, residency};
 use ascend_w4a16::ascend::{KernelTrace, MachineConfig};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
@@ -175,6 +175,43 @@ fn merged_moe_expert_internal_pair_matches_golden() {
     let merged = coschedule::splice(&tr, &tr).expect("internal pair must be spliceable");
     check_json(
         "merged_moe_expert_m1_n7168_k2048_internal",
+        golden::merged_to_json(&merged),
+    );
+}
+
+#[test]
+fn resident_weight_trace_matches_golden() {
+    // The residency planner's carried-weight re-class (DESIGN.md §13) on
+    // the chunked mid shape: identical phase structure, with every
+    // packed-weight and quant-param read re-classed carried_weight — the
+    // fixture pins that byte conservation at digest level.
+    let p = GemmProblem::new(8, 2048, 8192);
+    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("chunked_m8_n2048_k8192_pipelined_resident", &residency::carry_weights(&tr));
+}
+
+#[test]
+fn chain_splice_matches_golden() {
+    // The chain-level co-scheduler (DESIGN.md §13): a barrier-reduce
+    // producer whose 224 exposed tiles saturate the first consumer's
+    // 32-step dequant prologue; the overflow lands in the second
+    // prologue, both re-balanced least-loaded over the 64 vector engines.
+    let m = machine();
+    let p = GemmProblem::new(8, 7168, 2048);
+    let pt = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    pt.validate(&m, &p).unwrap();
+    let prod = splitk::schedule_reduce(&m, &p, &pt, ReduceMode::Barrier).unwrap();
+    let c = GemmProblem::new(8, 512, 2048);
+    let ct = Tiling { bm: 16, bn: 256, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    ct.validate(&m, &c).unwrap();
+    let cons = splitk::schedule_reduce(&m, &c, &ct, ReduceMode::Pipelined).unwrap();
+    assert!(coschedule::saturates(&prod, &cons), "fixture premise: saturating tail");
+    let merged = coschedule::splice_chain(m.total_vector_cores(), &prod, &cons, &cons)
+        .expect("chain must be spliceable");
+    check_json(
+        "chain_splitk_m8_n7168_k2048__splitk_m8_n512_k2048x2",
         golden::merged_to_json(&merged),
     );
 }

@@ -142,6 +142,10 @@ fn synthetic_artifacts(tag: &str, warm_cache: bool, moe: bool) -> std::path::Pat
         for pair in decode_layer.overlap_pairs() {
             tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
         }
+        // And the step-level residency plan (DESIGN.md §13), also what
+        // `repro tune` seeds, so the router's residency column resolves
+        // cache-only.
+        tuner.resolve_residency(&decode_layer).unwrap();
         tuner.save_to(dir.join("tune_cache.json")).unwrap();
     }
     dir
@@ -303,10 +307,20 @@ fn layer_plan_resolves_coschedule_gain_cache_only() {
             plan.predicted_overlapped_ns().unwrap() <= plan.predicted_layer_ns().unwrap(),
             "overlap can only shrink the predicted layer time"
         );
+        // The step-level residency plan resolves cache-only too.
+        let res_gain = plan
+            .residency_gain_ns
+            .unwrap_or_else(|| panic!("moe={moe}: residency plan must hit the cache: {plan:?}"));
+        assert!(res_gain >= 0.0 && res_gain.is_finite());
+        assert!(plan.residency_pinned_bytes.is_some());
+        assert!(
+            plan.predicted_resident_ns().unwrap() <= plan.predicted_overlapped_ns().unwrap(),
+            "residency can only shrink the predicted layer time further"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
     // A cache with shape entries but no pair decisions (a pre-PR-4 cache)
-    // leaves the plan served but unpredicted for overlap.
+    // leaves the plan served but unpredicted for overlap and residency.
     let dir = synthetic_artifacts("ov-stale", false, false);
     let mut tuner = Tuner::new(machine());
     for node in DecodeLayer::from_decode_config(&tiny_config(), 4).gemm_nodes() {
@@ -319,6 +333,7 @@ fn layer_plan_resolves_coschedule_gain_cache_only() {
     let plan = router.layer_plan(4).expect("decode config present");
     assert!(plan.fully_resolved(), "shape entries still resolve");
     assert_eq!(plan.overlap_gain_ns, None, "missing pair decisions must not be invented");
+    assert_eq!(plan.residency_gain_ns, None, "missing residency plans must not be invented");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -416,15 +416,19 @@ fn overlap_ledger_prices_each_node_once_and_never_double_books() {
                     ),
                 );
             }
-            // An entry exists when either pricing found a positive gain:
-            // the first-order ledger term, or the co-scheduler's exact
-            // merged-trace term (which is clamped non-negative).
+            // An entry exists when one of the pricings found a positive
+            // gain: the first-order ledger term, the co-scheduler's exact
+            // merged-trace term, or (PR 5) a chain-level decision — all
+            // clamped non-negative.
             let exact_gain = pair.exact.map(|d| d.gain_ns).unwrap_or(0.0);
-            if (pair.gain_ns <= 0.0 && exact_gain <= 0.0) || pair.pairs == 0 {
+            let chain_gain = pair.chain.map(|c| c.decision.gain_ns).unwrap_or(0.0);
+            if (pair.gain_ns <= 0.0 && exact_gain <= 0.0 && chain_gain <= 0.0)
+                || pair.pairs == 0
+            {
                 return (false, "ledger must only carry positive gains".into());
             }
-            if exact_gain < 0.0 {
-                return (false, "exact co-schedule gains are clamped non-negative".into());
+            if exact_gain < 0.0 || chain_gain < 0.0 {
+                return (false, "co-schedule gains are clamped non-negative".into());
             }
             let internal = pair.producer == pair.consumer;
             if !internal && !producers.insert(pair.producer) {

@@ -1,0 +1,219 @@
+//! Step-level weight-residency invariants (DESIGN.md §13): the planner
+//! never pins past the retained L2 capacity, the resident plan is never
+//! slower than the PR-4 Auto plan (structural — `Auto` serves the min),
+//! and pinning conserves weight bytes — it changes *where* they are
+//! served, never *how many* move — on randomized dense and MoE decode
+//! geometries.
+
+use ascend_w4a16::analysis::layer::{self, forced_split_resolver, OverlapMode, Resolution};
+use ascend_w4a16::analysis::residency::{
+    self, carry_weights, pin_budget_bytes, ResidencyMode,
+};
+use ascend_w4a16::ascend::{BufferClass, MachineConfig, ResidencyLedger, Simulator};
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::model::llm::{LayerGeometry, MoeGeometry};
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+/// Random legal decoder-layer geometry, sometimes MoE (mirrors
+/// `tests/coschedule.rs`).
+fn random_step(rng: &mut ascend_w4a16::util::prng::Rng) -> DecodeStep {
+    let hidden = 128 * rng.usize_range(2, 24);
+    let ffn = 128 * rng.usize_range(2, 32);
+    let kv = 16 * rng.usize_range(1, hidden / 16);
+    let geometry = LayerGeometry { hidden, ffn, kv, group: 128 };
+    let batch = rng.usize_range(1, 64);
+    let mut layer = DecodeLayer::new(geometry, batch);
+    if rng.usize_range(0, 1) == 1 {
+        let experts = *rng.choose(&[4usize, 8, 64]);
+        let topk = (*rng.choose(&[1usize, 2])).min(experts);
+        layer = layer.with_moe(MoeGeometry { experts, topk, expert_ffn: ffn });
+    }
+    let kv_len = 128 * rng.usize_range(1, 32);
+    DecodeStep::new(layer, kv_len, DecodeStep::default_heads(&geometry))
+}
+
+type Assignment = (Strategy, kernels::tiling::Tiling, Resolution);
+
+/// Fixed-strategy resolver (fused — the planner's main beneficiary).
+fn fused(m: &MachineConfig) -> impl FnMut(&GemmProblem) -> anyhow::Result<Assignment> + '_ {
+    move |p| {
+        Ok((
+            Strategy::Fused,
+            kernels::select_tiling(m, p, Strategy::Fused)?,
+            Resolution::Heuristic,
+        ))
+    }
+}
+
+#[test]
+fn pinning_never_exceeds_capacity_property() {
+    let m = machine();
+    let budget = pin_budget_bytes(&m);
+    forall("pins fit the retained capacity", 6, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        let rep = match layer::simulate_step_with(
+            &m,
+            &step,
+            OverlapMode::Sequential,
+            ResidencyMode::Auto,
+            fused(&m),
+        ) {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        let plan = rep.residency.as_ref().expect("residency auto must plan");
+        if plan.pinned_bytes > plan.budget_bytes || plan.budget_bytes != budget {
+            return (
+                false,
+                format!("pinned {} over budget {}", plan.pinned_bytes, plan.budget_bytes),
+            );
+        }
+        // Per-pin accounting matches the plan total.
+        let sum: u64 = plan.pins.iter().map(|p| p.bytes()).sum();
+        (sum == plan.pinned_bytes, format!("pin sum {sum} != {}", plan.pinned_bytes))
+    });
+}
+
+#[test]
+fn resident_plan_never_slower_than_pr4_auto_property() {
+    // The acceptance invariant: `--residency auto` serves
+    // min(PR-4 Auto, resident plan), so it can never lose — on ANY
+    // geometry, dense or MoE, under forced splits (reduce tails
+    // everywhere) as under the fused resolver.
+    let m = machine();
+    forall("resident <= PR-4 auto", 4, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        for use_fused in [true, false] {
+            let run = |mode: ResidencyMode| {
+                if use_fused {
+                    layer::simulate_step_with(&m, &step, OverlapMode::Auto, mode, fused(&m))
+                } else {
+                    layer::simulate_step_with(
+                        &m,
+                        &step,
+                        OverlapMode::Auto,
+                        mode,
+                        forced_split_resolver(&m),
+                    )
+                }
+            };
+            let without = match run(ResidencyMode::Off) {
+                Ok(rep) => rep,
+                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+            };
+            let with = match run(ResidencyMode::Auto) {
+                Ok(rep) => rep,
+                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+            };
+            if with.served_ns() > without.served_ns() * 1.000001 {
+                return (
+                    false,
+                    format!(
+                        "fused={use_fused}: resident {} > PR-4 auto {}",
+                        with.served_ns(),
+                        without.served_ns()
+                    ),
+                );
+            }
+            let plan = with.residency.as_ref().expect("plan present");
+            if plan.resident_ns > plan.baseline_ns * 1.000001 {
+                return (false, "plan must never beat its own baseline backwards".into());
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn pinning_conserves_weight_bytes_property() {
+    // Byte conservation: the carried trace moves exactly the same read
+    // bytes as the cold trace — pinning changes the *service point*
+    // (HBM -> L2), never the byte count.
+    let m = machine();
+    let sim = Simulator::new(m.clone());
+    forall("pinning conserves bytes", 10, |rng| {
+        let n = 16 * rng.usize_range(1, 256);
+        let k = 128 * rng.usize_range(2, 64);
+        let batch = rng.usize_range(1, 32);
+        let p = GemmProblem::new(batch, n, k);
+        let strategy = *rng.choose(&[Strategy::SplitK, Strategy::Chunked, Strategy::Fused]);
+        let trace = match kernels::schedule(&m, &p, strategy) {
+            Ok(t) => t,
+            Err(e) => return (false, format!("{strategy:?} n={n} k={k}: {e}")),
+        };
+        let carried = carry_weights(&trace);
+        let read_total = |t: &ascend_w4a16::ascend::KernelTrace| -> u64 {
+            t.phases
+                .iter()
+                .flat_map(|ph| ph.steps_per_engine.iter().flatten())
+                .map(|s| s.read_bytes())
+                .sum()
+        };
+        if read_total(&carried) != read_total(&trace) {
+            return (false, format!("{strategy:?} n={n} k={k}: read bytes changed"));
+        }
+        // And the simulated ledgers agree on totals: cold run vs pinned
+        // run move the same bytes, split differently between HBM and L2.
+        let cold = sim.run(&trace).unwrap();
+        let footprint = residency::weight_footprint_bytes(&p);
+        let pinned = sim
+            .run_with_residency(&carried, &ResidencyLedger::with_pinned_weights(footprint))
+            .unwrap();
+        let weight_reads = |r: &ascend_w4a16::ascend::SimReport| -> f64 {
+            [BufferClass::WeightPacked, BufferClass::QuantParam, BufferClass::CarriedWeight]
+                .iter()
+                .map(|&c| {
+                    let t = r.ledger.class(c);
+                    t.hbm_read + t.l2_read
+                })
+                .sum()
+        };
+        let (cw, pw) = (weight_reads(&cold), weight_reads(&pinned));
+        if (cw - pw).abs() > 1e-6 {
+            return (false, format!("{strategy:?}: weight read bytes {cw} -> {pw}"));
+        }
+        // The pinned run serves every weight byte from L2.
+        let carried_cls = pinned.ledger.class(BufferClass::CarriedWeight);
+        (
+            carried_cls.hbm_read == 0.0,
+            format!("{strategy:?}: pinned weights still read {} from HBM", carried_cls.hbm_read),
+        )
+    });
+}
+
+#[test]
+fn residency_composes_with_chain_level_overlap() {
+    // Exact + residency on a forced-split dense step: the report carries
+    // both machineries and the accounting stays consistent.
+    let m = machine();
+    let geom = LayerGeometry::mha(2048, 8192);
+    let step = DecodeStep::new(DecodeLayer::new(geom, 8), 2048, DecodeStep::default_heads(&geom));
+    let rep = layer::simulate_step_with(
+        &m,
+        &step,
+        OverlapMode::Exact,
+        ResidencyMode::Auto,
+        forced_split_resolver(&m),
+    )
+    .unwrap();
+    assert!(rep.exact_ns <= rep.sequential_ns * 1.000001);
+    assert!(rep.served_ns() <= rep.exact_ns * 1.000001);
+    let plan = rep.residency.as_ref().unwrap();
+    assert!(plan.pinned_bytes <= plan.budget_bytes);
+    // Accounting balances exactly on the exact side.
+    assert!(
+        (rep.sequential_ns - rep.exact_gain_ns() - rep.exact_ns).abs() < 1e-6,
+        "exact ledger must price every gain exactly once"
+    );
+}

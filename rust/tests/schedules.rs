@@ -279,6 +279,78 @@ fn auto_overlap_never_slower_than_sequential_across_paper_models() {
 }
 
 #[test]
+fn residency_auto_never_slower_than_pr4_auto_across_paper_sweep() {
+    // PR-5 acceptance criterion: on the full paper-model decode-step
+    // sweep (the e2e_layer bench's tuned cells), `--residency auto` is
+    // never slower than PR-4 `--overlap auto` on ANY shape, and strictly
+    // faster on at least one K >> N decode shape — the regime the paper
+    // targets, where the tuned (fused) winners are HBM-bound on the
+    // packed-weight stream and pinning moves it onto L2.
+    use ascend_w4a16::analysis::residency::ResidencyMode;
+    let m = machine();
+    let mut tuner = ascend_w4a16::tune::Tuner::new(m.clone());
+    let mut steps: Vec<(String, DecodeStep, bool)> = Vec::new();
+    for (model, geom) in paper_layer_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch);
+            let k_dominant =
+                layer.gemm_nodes().iter().any(|n| n.problem.k >= 2 * n.problem.n);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+                k_dominant,
+            ));
+        }
+    }
+    for (model, geom, moe) in paper_moe_geometries() {
+        for batch in [1usize, 8, 64] {
+            let layer = DecodeLayer::new(geom, batch).with_moe(moe);
+            let k_dominant =
+                layer.gemm_nodes().iter().any(|n| n.problem.k >= 2 * n.problem.n);
+            steps.push((
+                format!("{model} b={batch}"),
+                DecodeStep::new(layer, 2048, DecodeStep::default_heads(&geom)),
+                k_dominant,
+            ));
+        }
+    }
+    let mut strict_k_dominant_win = false;
+    for (tag, step, k_dominant) in &steps {
+        let without =
+            layer::simulate_step_tuned(&m, step, OverlapMode::Auto, &mut tuner)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let with = layer::simulate_step_tuned_with(
+            &m,
+            step,
+            OverlapMode::Auto,
+            ResidencyMode::Auto,
+            &mut tuner,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        assert!(
+            with.served_ns() <= without.served_ns() * 1.000001,
+            "{tag}: residency auto {} slower than PR-4 auto {}",
+            with.served_ns(),
+            without.served_ns()
+        );
+        let plan = with.residency.as_ref().unwrap_or_else(|| panic!("{tag}: plan missing"));
+        assert!(
+            plan.pinned_bytes <= plan.budget_bytes,
+            "{tag}: pinned {} over budget {}",
+            plan.pinned_bytes,
+            plan.budget_bytes
+        );
+        if *k_dominant && with.served_ns() < without.served_ns() * 0.999999 {
+            strict_k_dominant_win = true;
+        }
+    }
+    assert!(
+        strict_k_dominant_win,
+        "the resident plan never strictly beat PR-4 Auto on any K>>N decode shape"
+    );
+}
+
+#[test]
 fn fused_strictly_dominates_splitk_property() {
     let m = machine();
     let sim = Simulator::new(m.clone());
