@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Cross-check the offline timing mirror against a real `cargo bench` run.
+
+`repro bench-diff` is the *regression* gate: it is deliberately
+one-sided (only slower-than-baseline fails) and only covers the gated
+`*_ns`/`*_us` latency cells.  This script is the *drift* gate for the
+mirror itself: every cell the mirror emits — latencies, speedups,
+byte counts, tuned chunk counts — must agree with the Rust run to a
+symmetric relative tolerance (default 1e-9; the simulator is pure f64
+arithmetic mirrored expression-for-expression, so real agreement is
+~1e-12).  A mismatch in either direction means the mirror and the
+simulator have diverged and one of them is wrong about the timing
+model; fix the divergence or re-bless the baselines from the green
+cargo run (the ci job uploads it) and update the mirror in the same
+PR.
+
+Usage: cross_check.py MIRROR.json CARGO.json [--tol 1e-9]
+
+The cargo output is a superset (detail/step_detail subtrees); only
+keys present in the mirror document are checked.  Cells are matched by
+identity (model/n/k/batch/moe), not list order, so the benches stay
+free to reorder sweeps.
+"""
+
+import json
+import sys
+
+IDENT_KEYS = ("model", "n", "k", "batch", "moe", "kv_len")
+TOL = 1e-9
+
+
+def rel_close(a, b, tol):
+    scale = max(abs(a), abs(b))
+    return scale == 0.0 or abs(a - b) <= tol * scale
+
+
+def ident(cell):
+    return tuple((k, cell[k]) for k in IDENT_KEYS if k in cell)
+
+
+def check_value(path, mirror_v, cargo_v, errors, tol):
+    if isinstance(mirror_v, bool) or isinstance(mirror_v, str):
+        if mirror_v != cargo_v:
+            errors.append(f"{path}: mirror={mirror_v!r} cargo={cargo_v!r}")
+    elif isinstance(mirror_v, (int, float)):
+        if not isinstance(cargo_v, (int, float)) or isinstance(cargo_v, bool):
+            errors.append(f"{path}: cargo value {cargo_v!r} is not numeric")
+        elif not rel_close(float(mirror_v), float(cargo_v), tol):
+            rel = abs(mirror_v - cargo_v) / max(abs(mirror_v), abs(cargo_v))
+            errors.append(
+                f"{path}: mirror={mirror_v!r} cargo={cargo_v!r} (rel {rel:.3e})"
+            )
+    else:
+        errors.append(f"{path}: unsupported mirror value {mirror_v!r}")
+
+
+def check_cell(path, mirror_cell, cargo_cell, errors, tol):
+    for key, mirror_v in sorted(mirror_cell.items()):
+        if key not in cargo_cell:
+            errors.append(f"{path}.{key}: missing from cargo output")
+            continue
+        check_value(f"{path}.{key}", mirror_v, cargo_cell[key], errors, tol)
+
+
+def check_doc(mirror, cargo, errors, tol):
+    for key, mirror_v in sorted(mirror.items()):
+        if key not in cargo:
+            errors.append(f"{key}: missing from cargo output")
+            continue
+        if key == "cells":
+            by_ident = {}
+            for cell in cargo[key]:
+                by_ident.setdefault(ident(cell), cell)
+            for i, cell in enumerate(mirror_v):
+                label = ", ".join(f"{k}={v}" for k, v in ident(cell))
+                match = by_ident.get(ident(cell))
+                if match is None:
+                    errors.append(f"cells[{label}]: no cargo cell matches")
+                else:
+                    check_cell(f"cells[{label}]", cell, match, errors, tol)
+        else:
+            check_value(key, mirror_v, cargo[key], errors, tol)
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--tol")]
+    tol = TOL
+    for a in argv[1:]:
+        if a.startswith("--tol="):
+            tol = float(a.split("=", 1)[1])
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    with open(args[0]) as f:
+        mirror = json.load(f)
+    with open(args[1]) as f:
+        cargo = json.load(f)
+    errors = []
+    check_doc(mirror, cargo, errors, tol)
+    if errors:
+        print(f"MIRROR DRIFT: {len(errors)} cell(s) disagree (tol {tol:g}):")
+        for e in errors[:50]:
+            print(f"  {e}")
+        if len(errors) > 50:
+            print(f"  ... ({len(errors) - 50} more)")
+        return 1
+    n = sum(len(c) for c in mirror.get("cells", [])) + len(mirror)
+    print(f"mirror == cargo bench: {args[0]} vs {args[1]} ({n} values, tol {tol:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

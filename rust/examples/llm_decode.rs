@@ -11,6 +11,7 @@
 //! ```
 
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
+use ascend_w4a16::model::Engine;
 use ascend_w4a16::runtime::{Manifest, Runtime};
 use ascend_w4a16::util::cli::Args;
 use ascend_w4a16::workload::RequestGenerator;
@@ -31,16 +32,21 @@ fn main() -> anyhow::Result<()> {
     let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
 
     // Model limits for the request generator.
-    let (vocab, max_seq, params) = {
+    let (vocab, max_seq) = {
         let first = *server.router.batch_sizes().first().unwrap();
         let e = server.router.engine(first)?;
-        println!(
-            "engine ready: {} layers, hidden {}, vocab {}, KV cache {} KiB/group",
-            e.layers, e.hidden, e.vocab, e.cache_bytes() / 1024
-        );
-        (e.vocab, e.max_seq, e.layers)
+        match e {
+            Engine::Real(d) => println!(
+                "engine ready: {} layers, hidden {}, vocab {}, KV cache {} KiB/group",
+                d.layers,
+                d.hidden,
+                d.vocab,
+                d.cache_bytes() / 1024
+            ),
+            Engine::Synthetic(_) => println!("engine ready: synthetic (weightless artifact)"),
+        }
+        (e.vocab(), e.max_seq())
     };
-    let _ = params;
 
     // Submit a burst of synthetic decode requests.
     let mut generator = RequestGenerator::new(seed, vocab, max_seq);

@@ -7,10 +7,23 @@
 //! slots.  Padding slots replay token 0 at position 0 and their outputs
 //! are discarded — exactly the hardware padding the paper notes makes
 //! small-batch time flat.
+//!
+//! Admission control (DESIGN.md §14): the queue is bounded — a push past
+//! `queue_cap` returns a typed [`Admission::Shed`] with a retry-after
+//! hint instead of growing without bound or erroring.  Group formation
+//! carries a max-wait timer: once the oldest waiter has waited
+//! `max_wait_us` (virtual µs), a group forms below `target_fill`, so a
+//! lone request cannot starve.  Already-expired requests are dropped by
+//! [`Batcher::expire`] before they can occupy (and pad) a group.
 
 use std::collections::VecDeque;
 
 use super::request::DecodeRequest;
+
+/// Default max-wait before a sub-`target_fill` group forms (virtual µs).
+pub const DEFAULT_MAX_WAIT_US: u64 = 50_000;
+/// Default admission-queue bound.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -19,6 +32,11 @@ pub struct BatchPolicy {
     pub available_sizes: Vec<usize>,
     /// Form a group as soon as this many requests wait (<= max size).
     pub target_fill: usize,
+    /// Form a group below `target_fill` once the oldest waiter has waited
+    /// this long (virtual µs) — a lone request must not starve.
+    pub max_wait_us: u64,
+    /// Admission-queue bound: pushes beyond this shed (typed, not error).
+    pub queue_cap: usize,
 }
 
 impl BatchPolicy {
@@ -26,7 +44,22 @@ impl BatchPolicy {
         anyhow::ensure!(!available_sizes.is_empty(), "no batch sizes available");
         available_sizes.sort_unstable();
         let target_fill = *available_sizes.last().unwrap();
-        Ok(BatchPolicy { available_sizes, target_fill })
+        Ok(BatchPolicy {
+            available_sizes,
+            target_fill,
+            max_wait_us: DEFAULT_MAX_WAIT_US,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        })
+    }
+
+    pub fn with_max_wait_us(mut self, max_wait_us: u64) -> BatchPolicy {
+        self.max_wait_us = max_wait_us;
+        self
+    }
+
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> BatchPolicy {
+        self.queue_cap = queue_cap.max(1);
+        self
     }
 
     /// Smallest available batch size that holds `waiting` requests, or the
@@ -39,6 +72,17 @@ impl BatchPolicy {
         }
         *self.available_sizes.last().unwrap()
     }
+}
+
+/// Typed admission decision: the queue either took the request or shed
+/// it with a backpressure hint.  Shedding is an expected overload
+/// response, not an error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    /// The queue is full; retry after roughly this many virtual µs (one
+    /// max-wait window — by then at least one group must have formed).
+    Shed { retry_after_us: u64 },
 }
 
 /// A formed decode group: up to `batch` member requests plus padding.
@@ -72,22 +116,56 @@ impl Batcher {
         Batcher { policy, queue: VecDeque::new() }
     }
 
-    pub fn push(&mut self, req: DecodeRequest) {
+    /// Admit a request at virtual time `now_us`, or shed it if the queue
+    /// is at capacity.  Stamps `enqueued_at_us` (unless the caller did).
+    pub fn push(&mut self, mut req: DecodeRequest, now_us: u64) -> Admission {
+        if self.queue.len() >= self.policy.queue_cap {
+            return Admission::Shed { retry_after_us: self.policy.max_wait_us.max(1) };
+        }
+        if req.enqueued_at_us.is_none() {
+            req.enqueued_at_us = Some(now_us);
+        }
         self.queue.push_back(req);
+        Admission::Admitted
     }
 
     pub fn waiting(&self) -> usize {
         self.queue.len()
     }
 
-    /// Form the next group if the queue is non-empty.  `drain=true` forms a
-    /// group regardless of fill level (shutdown / idle flush); otherwise a
-    /// group forms only when the target fill is reached.
-    pub fn form_group(&mut self, drain: bool) -> Option<DecodeGroup> {
+    /// Remove and return every queued request whose deadline has passed
+    /// at `now_us` — dropped *before* group formation so an expired
+    /// request never occupies (or pads) an engine slot.
+    pub fn expire(&mut self, now_us: u64) -> Vec<DecodeRequest> {
+        let mut expired = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            if req.expired(now_us) {
+                expired.push(req);
+            } else {
+                kept.push_back(req);
+            }
+        }
+        self.queue = kept;
+        expired
+    }
+
+    /// Form the next group if the queue is non-empty.  `drain=true` forms
+    /// a group regardless of fill level (shutdown / idle flush); otherwise
+    /// a group forms when the target fill is reached OR the oldest waiter
+    /// has exceeded the policy's max wait at `now_us`.
+    pub fn form_group(&mut self, drain: bool, now_us: u64) -> Option<DecodeGroup> {
         if self.queue.is_empty() {
             return None;
         }
-        if !drain && self.queue.len() < self.policy.target_fill {
+        let oldest_wait_us = self
+            .queue
+            .front()
+            .and_then(|r| r.enqueued_at_us)
+            .map(|t0| now_us.saturating_sub(t0))
+            .unwrap_or(0);
+        let overdue = oldest_wait_us >= self.policy.max_wait_us;
+        if !drain && !overdue && self.queue.len() < self.policy.target_fill {
             return None;
         }
         let batch = self.policy.pick_size(self.queue.len());
@@ -121,10 +199,10 @@ mod tests {
     #[test]
     fn waits_for_fill_unless_draining() {
         let mut b = batcher(vec![1, 4]);
-        b.push(req(1));
-        b.push(req(2));
-        assert!(b.form_group(false).is_none(), "should wait for fill");
-        let g = b.form_group(true).unwrap();
+        b.push(req(1), 0);
+        b.push(req(2), 0);
+        assert!(b.form_group(false, 0).is_none(), "should wait for fill");
+        let g = b.form_group(true, 0).unwrap();
         assert_eq!(g.batch, 4); // smallest available size >= 2
         assert_eq!(g.occupancy(), 2);
         assert_eq!(b.waiting(), 0);
@@ -134,9 +212,9 @@ mod tests {
     fn full_queue_forms_immediately() {
         let mut b = batcher(vec![1, 2, 4]);
         for i in 0..5 {
-            b.push(req(i));
+            b.push(req(i), 0);
         }
-        let g = b.form_group(false).unwrap();
+        let g = b.form_group(false, 0).unwrap();
         assert_eq!(g.batch, 4);
         assert_eq!(g.occupancy(), 4);
         assert_eq!(b.waiting(), 1);
@@ -145,15 +223,69 @@ mod tests {
     #[test]
     fn group_steps_is_max_member_budget() {
         let mut b = batcher(vec![4]);
-        b.push(DecodeRequest::new(1, vec![1], 2)); // 3 steps
-        b.push(DecodeRequest::new(2, vec![1, 2, 3], 7)); // 10 steps
-        let g = b.form_group(true).unwrap();
+        b.push(DecodeRequest::new(1, vec![1], 2), 0); // 3 steps
+        b.push(DecodeRequest::new(2, vec![1, 2, 3], 7), 0); // 10 steps
+        let g = b.form_group(true, 0).unwrap();
         assert_eq!(g.steps(), 10);
     }
 
     #[test]
     fn empty_queue_never_forms() {
         let mut b = batcher(vec![1]);
-        assert!(b.form_group(true).is_none());
+        assert!(b.form_group(true, 0).is_none());
+    }
+
+    #[test]
+    fn lone_request_groups_at_batch_one_after_max_wait() {
+        // The starvation bugfix: a single waiter below target_fill must
+        // form once the max-wait timer fires, at the smallest batch size.
+        let mut b = Batcher::new(
+            BatchPolicy::new(vec![1, 4]).unwrap().with_max_wait_us(1_000),
+        );
+        b.push(req(1), 0);
+        assert!(b.form_group(false, 0).is_none(), "fresh waiter holds");
+        assert!(b.form_group(false, 999).is_none(), "still inside the window");
+        let g = b.form_group(false, 1_000).expect("max wait must force a group");
+        assert_eq!(g.batch, 1);
+        assert_eq!(g.occupancy(), 1);
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_with_retry_hint() {
+        let mut b = Batcher::new(
+            BatchPolicy::new(vec![1, 2]).unwrap().with_queue_cap(2).with_max_wait_us(500),
+        );
+        assert_eq!(b.push(req(1), 0), Admission::Admitted);
+        assert_eq!(b.push(req(2), 0), Admission::Admitted);
+        match b.push(req(3), 0) {
+            Admission::Shed { retry_after_us } => assert_eq!(retry_after_us, 500),
+            Admission::Admitted => panic!("push past queue_cap must shed"),
+        }
+        assert_eq!(b.waiting(), 2, "shed requests never enter the queue");
+    }
+
+    #[test]
+    fn expire_drops_only_overdue_requests_in_order() {
+        let mut b = batcher(vec![4]);
+        b.push(req(1).with_deadline_us(100), 0);
+        b.push(req(2), 0); // no deadline
+        b.push(req(3).with_deadline_us(10_000), 0);
+        let dropped = b.expire(101);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].id, 1);
+        assert_eq!(b.waiting(), 2);
+        let g = b.form_group(true, 101).unwrap();
+        assert_eq!(g.members[0].id, 2, "FIFO order preserved across expiry");
+    }
+
+    #[test]
+    fn push_preserves_caller_stamped_admission_time() {
+        let mut b = batcher(vec![1]);
+        let mut r = req(1);
+        r.enqueued_at_us = Some(42);
+        b.push(r, 100);
+        let g = b.form_group(true, 100).unwrap();
+        assert_eq!(g.members[0].enqueued_at_us, Some(42));
     }
 }

@@ -1,0 +1,173 @@
+//! Seeded, deterministic fault injection for the serving loop.
+//!
+//! A [`FaultPlan`] is a *stateless* function of `(seed, group, step,
+//! attempt)`: every decision is derived by hashing the coordinates, never
+//! by advancing shared PRNG state.  That makes the chaos harness
+//! order-independent — retrying one step re-rolls only that step's
+//! `attempt + 1` coordinate, while every other step's fate is unchanged,
+//! and two servers given the same seed inject the identical fault
+//! schedule regardless of how their groups interleave.
+//!
+//! Three fault kinds cover the failure modes the coordinator must absorb
+//! (DESIGN.md §14): straggler steps (a latency multiplier on the virtual
+//! clock — the step still succeeds), transient engine failures (the step
+//! errors before execution), and runtime-client errors (the
+//! execute/readback boundary errors).  The latter two are retryable; a
+//! fresh attempt re-rolls, so transient faults usually clear under the
+//! retry policy.
+
+/// One injected fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The step completes but takes `mult_x100 / 100` times its budget
+    /// (e.g. 300 = a 3x straggler).  Never retried — slow is not failed.
+    Straggler { mult_x100: u32 },
+    /// Transient whole-step engine failure (retryable).
+    EngineFault,
+    /// Runtime-client error at the execute/readback boundary (retryable).
+    ClientError,
+}
+
+impl FaultKind {
+    /// Stable label for the metrics sink.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::EngineFault => "engine_fault",
+            FaultKind::ClientError => "client_error",
+        }
+    }
+}
+
+/// A seeded fault schedule over the serving loop's step coordinates.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Probability in [0, 1] that any one (group, step, attempt) faults.
+    rate: f64,
+}
+
+/// splitmix64 finalizer — the same mixer `util::prng` seeds with.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { seed, rate: rate.clamp(0.0, 1.0) }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Hash the step coordinates into one 64-bit decision word.
+    fn word(&self, group: u64, step: u64, attempt: u32) -> u64 {
+        let mut h = mix64(self.seed);
+        h = mix64(h ^ group.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ step.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        mix64(h ^ attempt as u64)
+    }
+
+    /// The fault (if any) injected at one step attempt.  Deterministic in
+    /// the coordinates alone: call order and call count never matter.
+    pub fn step_fault(&self, group: u64, step: u64, attempt: u32) -> Option<FaultKind> {
+        if self.rate <= 0.0 {
+            return None;
+        }
+        let h = self.word(group, step, attempt);
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= self.rate {
+            return None;
+        }
+        // Split the fault budget: half stragglers, the rest transient
+        // failures split between the engine and the client boundary.
+        let k = mix64(h);
+        Some(match k % 10 {
+            0..=4 => FaultKind::Straggler { mult_x100: 200 + 100 * (k / 10 % 6) as u32 },
+            5..=7 => FaultKind::EngineFault,
+            _ => FaultKind::ClientError,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_order_independent() {
+        let p = FaultPlan::new(42, 0.5);
+        let forward: Vec<_> = (0..64).map(|s| p.step_fault(3, s, 0)).collect();
+        let backward: Vec<_> = (0..64).rev().map(|s| p.step_fault(3, s, 0)).collect();
+        let reversed: Vec<_> = backward.into_iter().rev().collect();
+        assert_eq!(forward, reversed, "decisions must not depend on call order");
+        let again: Vec<_> = (0..64).map(|s| p.step_fault(3, s, 0)).collect();
+        assert_eq!(forward, again, "decisions must not depend on call count");
+    }
+
+    #[test]
+    fn zero_rate_never_faults_and_full_rate_always_faults() {
+        let none = FaultPlan::new(7, 0.0);
+        let all = FaultPlan::new(7, 1.0);
+        for s in 0..256 {
+            assert_eq!(none.step_fault(0, s, 0), None);
+            assert!(all.step_fault(0, s, 0).is_some());
+        }
+    }
+
+    #[test]
+    fn rate_is_roughly_respected() {
+        let p = FaultPlan::new(11, 0.1);
+        let faults = (0..10_000).filter(|&s| p.step_fault(0, s, 0).is_some()).count();
+        assert!((800..1200).contains(&faults), "10% rate gave {faults}/10000");
+    }
+
+    #[test]
+    fn retries_reroll_the_attempt_coordinate() {
+        let p = FaultPlan::new(13, 0.3);
+        // Find a faulting step whose first retry clears: with a 30% rate
+        // the expected search is short, and determinism makes it stable.
+        let step = (0..10_000)
+            .find(|&s| p.step_fault(0, s, 0).is_some() && p.step_fault(0, s, 1).is_none())
+            .expect("some fault must clear on retry");
+        assert!(p.step_fault(0, step, 0).is_some());
+        assert_eq!(p.step_fault(0, step, 1), None);
+    }
+
+    #[test]
+    fn kinds_cover_all_three_and_stragglers_bound_their_multiplier() {
+        let p = FaultPlan::new(17, 1.0);
+        let mut seen = std::collections::BTreeSet::new();
+        for s in 0..512 {
+            match p.step_fault(0, s, 0).unwrap() {
+                FaultKind::Straggler { mult_x100 } => {
+                    assert!((200..=700).contains(&mult_x100), "mult {mult_x100}");
+                    seen.insert("straggler");
+                }
+                FaultKind::EngineFault => {
+                    seen.insert("engine_fault");
+                }
+                FaultKind::ClientError => {
+                    seen.insert("client_error");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3, "all kinds must appear: {seen:?}");
+    }
+
+    #[test]
+    fn different_groups_fault_independently() {
+        let p = FaultPlan::new(19, 0.5);
+        let a: Vec<_> = (0..128).map(|s| p.step_fault(0, s, 0)).collect();
+        let b: Vec<_> = (0..128).map(|s| p.step_fault(1, s, 0)).collect();
+        assert_ne!(a, b, "group coordinate must decorrelate schedules");
+    }
+}

@@ -14,11 +14,31 @@ pub struct Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
+    /// Requests offered to the server (admitted + shed): the left side of
+    /// the conservation law `admitted = completed + shed + expired +
+    /// failed` (DESIGN.md §14).
+    requests_admitted: u64,
     requests_completed: u64,
+    /// Requests shed at admission (bounded queue overflow).
+    requests_shed: u64,
+    /// Requests whose deadline passed before completion.
+    requests_expired: u64,
+    /// Requests that failed (invalid, or retry-exhausted step).
+    requests_failed: u64,
     tokens_generated: u64,
     steps_executed: u64,
     groups_formed: u64,
     padded_slots: u64,
+    /// Groups served per degradation-ladder rung ("full", "tuned_only",
+    /// "retuned", "default_splitk") — the per-rung fallback counters.
+    route_rungs: BTreeMap<String, u64>,
+    /// Why routing left the top rung (keyed by `RouteReason::name`).
+    route_reasons: BTreeMap<String, u64>,
+    /// Injected faults observed, per kind ("straggler", "engine_fault",
+    /// "client_error").
+    faults: BTreeMap<String, u64>,
+    /// Step retries executed under the retry policy.
+    retries: u64,
     ttft_s: Vec<f64>,
     total_s: Vec<f64>,
     /// Groups served per kernel-schedule strategy ("untuned" when no tune
@@ -98,7 +118,11 @@ impl GemmScheduleStat {
 /// A point-in-time snapshot.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    pub requests_admitted: u64,
     pub requests_completed: u64,
+    pub requests_shed: u64,
+    pub requests_expired: u64,
+    pub requests_failed: u64,
     pub tokens_generated: u64,
     pub steps_executed: u64,
     pub groups_formed: u64,
@@ -108,6 +132,22 @@ pub struct MetricsSnapshot {
     pub schedules: BTreeMap<String, u64>,
     pub gemm_schedules: BTreeMap<String, BTreeMap<String, GemmScheduleStat>>,
     pub plan_gains: BTreeMap<usize, PlanGainStat>,
+    pub route_rungs: BTreeMap<String, u64>,
+    pub route_reasons: BTreeMap<String, u64>,
+    pub faults: BTreeMap<String, u64>,
+    pub retries: u64,
+}
+
+impl MetricsSnapshot {
+    /// The conservation law: every offered request is accounted for in
+    /// exactly one terminal counter.
+    pub fn outcomes_accounted(&self) -> bool {
+        self.requests_admitted
+            == self.requests_completed
+                + self.requests_shed
+                + self.requests_expired
+                + self.requests_failed
+    }
 }
 
 impl Metrics {
@@ -186,10 +226,54 @@ impl Metrics {
         g.total_s.push(total_s);
     }
 
+    /// Record one request offered to the server (before the admission
+    /// decision; shed requests are counted here too).
+    pub fn record_admitted(&self) {
+        self.inner.lock().unwrap().requests_admitted += 1;
+    }
+
+    /// Record requests shed at admission (bounded-queue overflow).
+    pub fn record_shed(&self, n: u64) {
+        self.inner.lock().unwrap().requests_shed += n;
+    }
+
+    /// Record requests whose deadline passed before completion.
+    pub fn record_expired(&self, n: u64) {
+        self.inner.lock().unwrap().requests_expired += n;
+    }
+
+    /// Record requests that failed (invalid, or retry-exhausted step).
+    pub fn record_failed(&self, n: u64) {
+        self.inner.lock().unwrap().requests_failed += n;
+    }
+
+    /// Record which degradation-ladder rung served a routed group, and
+    /// why routing landed there.
+    pub fn record_route(&self, rung: &str, reason: &str) {
+        let mut g = self.inner.lock().unwrap();
+        *g.route_rungs.entry(rung.to_string()).or_insert(0) += 1;
+        *g.route_reasons.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one injected (or observed) fault by kind.
+    pub fn record_fault(&self, kind: &str) {
+        let mut g = self.inner.lock().unwrap();
+        *g.faults.entry(kind.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one step retry executed under the retry policy.
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
+            requests_admitted: g.requests_admitted,
             requests_completed: g.requests_completed,
+            requests_shed: g.requests_shed,
+            requests_expired: g.requests_expired,
+            requests_failed: g.requests_failed,
             tokens_generated: g.tokens_generated,
             steps_executed: g.steps_executed,
             groups_formed: g.groups_formed,
@@ -199,6 +283,10 @@ impl Metrics {
             schedules: g.schedules.clone(),
             gemm_schedules: g.gemm_schedules.clone(),
             plan_gains: g.plan_gains.clone(),
+            route_rungs: g.route_rungs.clone(),
+            route_reasons: g.route_reasons.clone(),
+            faults: g.faults.clone(),
+            retries: g.retries,
         }
     }
 }
@@ -215,6 +303,17 @@ impl MetricsSnapshot {
             self.padded_slots,
             self.steps_executed,
         ));
+        if self.requests_admitted > 0 {
+            out.push_str(&format!(
+                "outcomes: admitted {} = completed {} + shed {} + expired {} + failed {}{}\n",
+                self.requests_admitted,
+                self.requests_completed,
+                self.requests_shed,
+                self.requests_expired,
+                self.requests_failed,
+                if self.outcomes_accounted() { "" } else { "  [IMBALANCED]" },
+            ));
+        }
         if wall_s > 0.0 {
             out.push_str(&format!(
                 "throughput: {:.1} tokens/s, {:.2} requests/s\n",
@@ -269,6 +368,26 @@ impl MetricsSnapshot {
                 st.overlap_resolved,
                 st.mean_residency_us(),
                 st.residency_resolved,
+            ));
+        }
+        if !self.route_rungs.is_empty() {
+            let rungs: Vec<String> =
+                self.route_rungs.iter().map(|(r, n)| format!("{r}={n}")).collect();
+            let reasons: Vec<String> =
+                self.route_reasons.iter().map(|(r, n)| format!("{r}={n}")).collect();
+            out.push_str(&format!(
+                "routing: {}  (reasons: {})\n",
+                rungs.join("  "),
+                reasons.join("  "),
+            ));
+        }
+        if !self.faults.is_empty() || self.retries > 0 {
+            let parts: Vec<String> =
+                self.faults.iter().map(|(k, n)| format!("{k}={n}")).collect();
+            out.push_str(&format!(
+                "faults: {}  retries: {}\n",
+                if parts.is_empty() { "none".to_string() } else { parts.join("  ") },
+                self.retries,
             ));
         }
         out
@@ -364,6 +483,46 @@ mod tests {
         assert_eq!(s.requests_completed, 2);
         assert_eq!(s.tokens_generated, 12);
         assert!((s.ttft.mean - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_conservation_holds_and_imbalance_is_flagged() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_admitted();
+        }
+        m.record_completion(4, 0.0, 0.0);
+        m.record_completion(4, 0.0, 0.0);
+        m.record_shed(1);
+        m.record_expired(1);
+        m.record_failed(1);
+        let s = m.snapshot();
+        assert!(s.outcomes_accounted(), "2+1+1+1 = 5");
+        assert!(s.render(1.0).contains("admitted 5 = completed 2 + shed 1"));
+        m.record_admitted();
+        let s2 = m.snapshot();
+        assert!(!s2.outcomes_accounted());
+        assert!(s2.render(1.0).contains("[IMBALANCED]"));
+    }
+
+    #[test]
+    fn route_rung_and_fault_counters_render() {
+        let m = Metrics::new();
+        m.record_route("full", "warm_cache");
+        m.record_route("retuned", "shape_miss");
+        m.record_route("retuned", "shape_miss");
+        m.record_fault("straggler");
+        m.record_fault("engine_fault");
+        m.record_retry();
+        let s = m.snapshot();
+        assert_eq!(s.route_rungs.get("retuned"), Some(&2));
+        assert_eq!(s.route_reasons.get("shape_miss"), Some(&2));
+        assert_eq!(s.faults.get("straggler"), Some(&1));
+        assert_eq!(s.retries, 1);
+        let text = s.render(1.0);
+        assert!(text.contains("routing: full=1  retuned=2"), "{text}");
+        assert!(text.contains("reasons:"), "{text}");
+        assert!(text.contains("faults: engine_fault=1  straggler=1  retries: 1"), "{text}");
     }
 
     #[test]

@@ -4,32 +4,46 @@
 //! Architecture (vLLM-router-inspired, std-thread based):
 //!
 //! ```text
-//!  clients --> RequestQueue --> Batcher (group formation, padding)
+//!  clients --> bounded queue --> Batcher (admission, deadlines, padding)
 //!                  |                |
 //!                  v                v
-//!              Metrics        Router (batch size -> DecodeEngine)
-//!                                   |
-//!                                   v
-//!                          PJRT decode-step artifact
+//!              Metrics        Router (degradation ladder -> Engine)
+//!                  ^                |
+//!                  |                v
+//!              FaultPlan ~~> PJRT / synthetic decode-step engine
 //! ```
 //!
-//! * [`request`] — request/response types.
+//! * [`request`] — request/response types, deadlines, typed [`Outcome`].
 //! * [`batcher`] — groups queued requests into fixed-size decode groups
-//!   (the AOT artifacts are compiled per batch size), padding idle slots.
-//! * [`router`] — lazily constructs and caches one [`DecodeEngine`]
-//!   (weights staged, executable compiled) per batch size.
+//!   (the AOT artifacts are compiled per batch size), padding idle
+//!   slots; bounded admission queue (typed shed) + max-wait timer.
+//! * [`router`] — lazily constructs and caches one engine per batch
+//!   size, and routes each group down the degradation ladder
+//!   (full -> tuned_only -> retuned -> default_splitk) so routing never
+//!   fails a request.
 //! * [`server`] — the serving loop: drain queue -> form group -> decode
-//!   until every member finishes -> publish results + metrics.
-//! * [`metrics`] — latency/throughput counters.
+//!   until every member finishes -> publish results + metrics; virtual
+//!   clock, deadline enforcement, fault injection and step retry.
+//! * [`faults`] — the seeded, coordinate-keyed fault plan (stragglers,
+//!   transient engine/client errors) behind the chaos harness.
+//! * [`metrics`] — latency/throughput counters, outcome conservation,
+//!   per-rung fallback and fault/retry counters.
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatchPolicy, DecodeGroup};
-pub use metrics::{GemmScheduleStat, Metrics};
-pub use request::{DecodeRequest, DecodeResult};
-pub use router::{LayerPlan, PlanNode, Router, TunedPlan};
-pub use server::Server;
+pub use batcher::{
+    Admission, Batcher, BatchPolicy, DecodeGroup, DEFAULT_MAX_WAIT_US, DEFAULT_QUEUE_CAP,
+};
+pub use faults::{FaultKind, FaultPlan};
+pub use metrics::{GemmScheduleStat, Metrics, MetricsSnapshot};
+pub use request::{DecodeRequest, DecodeResult, Outcome};
+pub use router::{
+    LayerPlan, PlanNode, RouteOutcome, RouteReason, RouteRung, RoutedPlan, Router, TunedPlan,
+    DEFAULT_RETUNE_BUDGET,
+};
+pub use server::{Server, ServerConfig, DEFAULT_STEP_US};

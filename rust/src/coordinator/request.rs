@@ -2,7 +2,8 @@
 
 use std::time::Instant;
 
-/// A decode request: a prompt plus a generation budget.
+/// A decode request: a prompt plus a generation budget, with an optional
+/// per-request deadline (SLO).
 #[derive(Debug, Clone)]
 pub struct DecodeRequest {
     pub id: u64,
@@ -10,11 +11,38 @@ pub struct DecodeRequest {
     pub max_new_tokens: usize,
     /// Enqueue timestamp (set by the server when admitted).
     pub arrived: Option<Instant>,
+    /// Optional SLO: the request expires this many *virtual* microseconds
+    /// after admission (DESIGN.md §14).  `None` = no deadline.
+    pub deadline_us: Option<u64>,
+    /// Virtual admission timestamp (set by the server when admitted).
+    pub enqueued_at_us: Option<u64>,
 }
 
 impl DecodeRequest {
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> DecodeRequest {
-        DecodeRequest { id, prompt, max_new_tokens, arrived: None }
+        DecodeRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: None,
+            deadline_us: None,
+            enqueued_at_us: None,
+        }
+    }
+
+    /// Attach a deadline (virtual µs after admission).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> DecodeRequest {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    /// Whether the deadline has passed at virtual time `now_us`.  A
+    /// request with no deadline (or not yet admitted) never expires.
+    pub fn expired(&self, now_us: u64) -> bool {
+        match (self.deadline_us, self.enqueued_at_us) {
+            (Some(d), Some(t0)) => now_us.saturating_sub(t0) > d,
+            _ => false,
+        }
     }
 
     /// Steps this request needs: prompt ingestion + generation.
@@ -40,11 +68,36 @@ impl DecodeRequest {
     }
 }
 
+/// How a request left the server.  Every *admitted* request ends in
+/// exactly one of these (shed requests never enter the queue and are
+/// counted separately) — the metrics conservation law of DESIGN.md §14.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// The full generation budget was produced.
+    Completed,
+    /// The deadline passed before completion; `tokens` holds the partial
+    /// generation produced before expiry.
+    Expired,
+    /// The request failed (invalid, or its group's step exhausted the
+    /// retry policy); `error` names the cause.
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Expired => "expired",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
 /// A finished request.
 #[derive(Debug, Clone)]
 pub struct DecodeResult {
     pub id: u64,
-    /// Generated tokens (prompt not included).
+    /// Generated tokens (prompt not included; partial on expiry/failure).
     pub tokens: Vec<i32>,
     /// Queue-to-first-token latency (seconds).
     pub ttft_s: f64,
@@ -52,6 +105,10 @@ pub struct DecodeResult {
     pub total_s: f64,
     /// Decode steps this request's group executed while it was active.
     pub steps: usize,
+    /// How the request ended.
+    pub outcome: Outcome,
+    /// Failure detail (`None` unless `outcome == Failed`).
+    pub error: Option<String>,
 }
 
 #[cfg(test)]
@@ -70,5 +127,23 @@ mod tests {
     #[test]
     fn step_budget() {
         assert_eq!(DecodeRequest::new(1, vec![1, 2], 5).total_steps(), 7);
+    }
+
+    #[test]
+    fn deadlines_expire_relative_to_admission() {
+        let mut r = DecodeRequest::new(1, vec![1], 4).with_deadline_us(100);
+        assert!(!r.expired(1_000), "unadmitted requests never expire");
+        r.enqueued_at_us = Some(500);
+        assert!(!r.expired(600), "deadline is inclusive");
+        assert!(r.expired(601));
+        let no_deadline = DecodeRequest::new(2, vec![1], 4);
+        assert!(!no_deadline.expired(u64::MAX));
+    }
+
+    #[test]
+    fn outcome_names_are_stable() {
+        assert_eq!(Outcome::Completed.name(), "completed");
+        assert_eq!(Outcome::Expired.name(), "expired");
+        assert_eq!(Outcome::Failed.name(), "failed");
     }
 }

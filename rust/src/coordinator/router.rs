@@ -4,23 +4,42 @@
 //! Engines are constructed lazily (compiling an HLO module and staging
 //! ~100M parameters of weight literals is expensive) and cached for the
 //! server's lifetime — the per-shape executable pool of the serving stack.
+//! Weightless decode artifacts (a config but no weight blob, as the test
+//! manifests ship) get a [`SimEngine`] instead, so the serving loop runs
+//! end to end without PJRT.
 //!
-//! Schedule tuning: if a tune cache (`tune_cache.json`, written by
-//! `repro tune`) sits next to the artifact manifest, the router resolves
-//! every GEMM node of the decode layer — QKV, attention-out, the dense
-//! up/gate + down pair (the paper's K >> N bottleneck), or the routed
-//! MoE expert fan-out — through it, so each group is served under its
-//! per-node tuned strategies.  The lookup is cache-only: the serving hot
-//! path never pays a search.
+//! Routing never fails a request (DESIGN.md §14).  On a tune-cache miss,
+//! a stale machine tag, or an unreadable cache file, the router walks an
+//! explicit degradation ladder:
+//!
+//! 1. **full** — tuned winners + co-schedule overlap + residency gains,
+//!    all cache-only (the fast path; never pays a search).
+//! 2. **tuned_only** — tuned winners, but some cross-node gain (pair or
+//!    residency decision) is missing; the plan serves unpredicted gains.
+//! 3. **retuned** — some shape missed the cache; it is re-tuned inline
+//!    (`Strategy::Auto` search) under a per-router budget.
+//! 4. **default_splitk** — budget exhausted (or search failed): the safe
+//!    default splitk schedule, priced by the simulator.
+//!
+//! Each rung is priced by the same simulator, and each rung is
+//! never-slower than the rung below it *by construction*: the gains of
+//! rung 1 subtract via `max(0, ·)` (so `resident <= overlapped <=
+//! layer`), and a tuned/retuned winner is the argmin of a search space
+//! that contains splitk, so `tuned_ns <= splitk_ns` on every shape.
 
 use std::collections::HashMap;
 
-use crate::ascend::MachineConfig;
-use crate::kernels::Strategy;
-use crate::model::DecodeEngine;
+use crate::ascend::{MachineConfig, Simulator};
+use crate::kernels::{self, GemmProblem, Strategy};
+use crate::model::{DecodeEngine, Engine, SimEngine};
 use crate::runtime::{Manifest, Runtime};
-use crate::tune::{Tuner, DEFAULT_CACHE_FILE};
+use crate::tune::{machine_tag, Tuner, DEFAULT_CACHE_FILE};
 use crate::workload::decode_layer::{DecodeLayer, GemmKind};
+
+/// Inline re-tunes a router may pay over its lifetime (rung 3).  Each
+/// search prices one shape; the budget bounds worst-case serve latency
+/// when the cache is cold or stale.
+pub const DEFAULT_RETUNE_BUDGET: usize = 32;
 
 /// The tuned plan for one GEMM node.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,7 +56,8 @@ pub struct PlanNode {
     /// Identical GEMMs the node issues per decode step (the active-expert
     /// fan-out on MoE layers, 1 for dense projections).
     pub count: usize,
-    /// `None` on a cache miss — that node serves untuned.
+    /// `None` only for structurally unpriceable nodes (invalid problem);
+    /// cache misses resolve down the ladder instead.
     pub plan: Option<TunedPlan>,
 }
 
@@ -99,6 +119,14 @@ impl LayerPlan {
         Some((self.predicted_overlapped_ns()? - self.residency_gain_ns?).max(0.0))
     }
 
+    /// The best available step-time prediction: resident if both gains
+    /// resolved, else overlapped, else the bare layer sum.
+    pub fn predicted_served_ns(&self) -> Option<f64> {
+        self.predicted_resident_ns()
+            .or_else(|| self.predicted_overlapped_ns())
+            .or_else(|| self.predicted_layer_ns())
+    }
+
     /// The group's headline plan: the paper's bottleneck down-projection,
     /// or the expert down-projection (the last expert node) on MoE layers.
     pub fn headline(&self) -> Option<TunedPlan> {
@@ -112,37 +140,158 @@ impl LayerPlan {
     }
 }
 
+/// Which degradation-ladder rung served a routed group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RouteRung {
+    /// Tuned winners + overlap + residency, all cache-only.
+    Full,
+    /// Tuned winners; some cross-node gain missing from the cache.
+    TunedOnly,
+    /// At least one shape re-tuned inline under the budget.
+    Retuned,
+    /// At least one node fell to the safe default splitk schedule.
+    DefaultSplitk,
+}
+
+impl RouteRung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteRung::Full => "full",
+            RouteRung::TunedOnly => "tuned_only",
+            RouteRung::Retuned => "retuned",
+            RouteRung::DefaultSplitk => "default_splitk",
+        }
+    }
+}
+
+/// Why routing landed on its rung.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteReason {
+    /// Everything resolved cache-only (rung `full`).
+    WarmCache,
+    /// Shape winners hit, but a pair/residency decision is missing.
+    GainsMissing,
+    /// Some shape key missed a present, current-tagged cache.
+    ShapeMiss,
+    /// The cache holds entries, but none tuned on this machine.
+    StaleMachineTag,
+    /// The cache file exists but failed to parse (corrupt/truncated).
+    CacheUnreadable,
+    /// No cache file next to the artifacts.
+    NoCacheFile,
+    /// Misses remained after the inline re-tune budget ran out.
+    RetuneBudgetExhausted,
+    /// The artifact carries no decode config: nothing to plan over.
+    NoDecodeConfig,
+}
+
+impl RouteReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouteReason::WarmCache => "warm_cache",
+            RouteReason::GainsMissing => "gains_missing",
+            RouteReason::ShapeMiss => "shape_miss",
+            RouteReason::StaleMachineTag => "stale_machine_tag",
+            RouteReason::CacheUnreadable => "cache_unreadable",
+            RouteReason::NoCacheFile => "no_cache_file",
+            RouteReason::RetuneBudgetExhausted => "retune_budget_exhausted",
+            RouteReason::NoDecodeConfig => "no_decode_config",
+        }
+    }
+}
+
+/// The typed routing decision: which rung served, why, and how many
+/// nodes each fallback mechanism touched.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteOutcome {
+    pub rung: RouteRung,
+    pub reason: RouteReason,
+    /// Detail for the unreadable-cache reason (the parse error).
+    pub detail: Option<String>,
+    /// Nodes re-tuned inline (rung 3).
+    pub retuned_nodes: usize,
+    /// Nodes served by the default splitk schedule (rung 4).
+    pub defaulted_nodes: usize,
+}
+
+/// A routed plan: the (possibly degraded) layer plan plus the typed
+/// outcome that tells metrics which rung served it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedPlan {
+    /// `None` only when the artifact has no decode config.
+    pub plan: Option<LayerPlan>,
+    pub outcome: RouteOutcome,
+}
+
+/// Price one problem under the safe default splitk schedule (rung 4).
+fn splitk_plan(machine: &MachineConfig, p: &GemmProblem) -> Option<TunedPlan> {
+    let trace = kernels::schedule(machine, p, Strategy::SplitK).ok()?;
+    let report = Simulator::new(machine.clone()).run(&trace).ok()?;
+    Some(TunedPlan { strategy: Strategy::SplitK, predicted_ns: report.total_ns })
+}
+
 /// Engine pool keyed by batch size for one decode model.
 pub struct Router<'rt> {
     rt: &'rt Runtime,
     manifest: Manifest,
     model: String,
-    engines: HashMap<usize, DecodeEngine>,
-    /// Schedule tuner backed by the cache next to the artifacts (None when
-    /// no cache file exists — groups then serve under the default splitk).
+    machine: MachineConfig,
+    engines: HashMap<usize, Engine>,
+    /// Schedule tuner backed by the cache next to the artifacts.  `None`
+    /// until the ladder needs one (no cache file, or unreadable file) —
+    /// an inline re-tune then creates an in-memory tuner on demand.
     tuner: Option<Tuner>,
-    plans: HashMap<usize, Option<LayerPlan>>,
+    /// Whether a cache file existed next to the artifacts at startup.
+    cache_file_found: bool,
+    /// The parse error, when the cache file existed but was unreadable.
+    cache_load_error: Option<String>,
+    /// Whether the loaded cache holds entries for a *different* machine
+    /// tag only (tuned on other hardware) — computed once at startup.
+    stale_tag: bool,
+    /// Remaining inline re-tune searches (rung 3).
+    retune_budget: usize,
+    routes: HashMap<usize, RoutedPlan>,
 }
 
 impl<'rt> Router<'rt> {
+    /// Build the router.  An unreadable tune cache is *not* an error: it
+    /// is recorded, and every route degrades down the ladder instead.
     pub fn new(rt: &'rt Runtime, manifest: Manifest, model: &str) -> anyhow::Result<Router<'rt>> {
         anyhow::ensure!(
             !manifest.decode_batches(model).is_empty(),
             "no decode artifacts for model '{model}'"
         );
+        let machine = MachineConfig::ascend910();
         let cache_path = manifest.dir.join(DEFAULT_CACHE_FILE);
-        let tuner = if cache_path.exists() {
-            Some(Tuner::load(MachineConfig::ascend910(), &cache_path)?)
+        let cache_file_found = cache_path.exists();
+        let mut cache_load_error = None;
+        let tuner = if cache_file_found {
+            match Tuner::load(machine.clone(), &cache_path) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    cache_load_error = Some(format!("{e:#}"));
+                    None
+                }
+            }
         } else {
             None
         };
+        let stale_tag = tuner
+            .as_ref()
+            .map(|t| t.cache.total_len() > 0 && !t.cache.has_tag(&machine_tag(&machine)))
+            .unwrap_or(false);
         Ok(Router {
             rt,
             manifest,
             model: model.to_string(),
+            machine,
             engines: HashMap::new(),
             tuner,
-            plans: HashMap::new(),
+            cache_file_found,
+            cache_load_error,
+            stale_tag,
+            retune_budget: DEFAULT_RETUNE_BUDGET,
+            routes: HashMap::new(),
         })
     }
 
@@ -151,29 +300,42 @@ impl<'rt> Router<'rt> {
         self.manifest.decode_batches(&self.model)
     }
 
-    /// Get (or build) the engine for a batch size.
-    pub fn engine(&mut self, batch: usize) -> anyhow::Result<&mut DecodeEngine> {
+    /// Get (or build) the engine for a batch size: PJRT-backed when the
+    /// artifact ships weights, synthetic when it only carries a config.
+    pub fn engine(&mut self, batch: usize) -> anyhow::Result<&mut Engine> {
         if !self.engines.contains_key(&batch) {
             let entry = self.manifest.decode(&self.model, batch)?;
-            let engine = DecodeEngine::new(self.rt, entry)?;
+            let engine = if entry.weights.is_some() {
+                Engine::Real(DecodeEngine::new(self.rt, entry)?)
+            } else {
+                let cfg = entry.config.ok_or_else(|| {
+                    anyhow::anyhow!("decode artifact '{}' has neither weights nor config", entry.name)
+                })?;
+                Engine::Synthetic(SimEngine::new(&cfg, batch))
+            };
             self.engines.insert(batch, engine);
         }
         Ok(self.engines.get_mut(&batch).unwrap())
     }
 
+    /// Route a batch size down the degradation ladder.  Never fails:
+    /// the worst case is an unplanned group (no decode config) served
+    /// under rung 4 accounting.  Memoized per batch size.
+    pub fn route(&mut self, batch: usize) -> RoutedPlan {
+        if let Some(hit) = self.routes.get(&batch) {
+            return hit.clone();
+        }
+        let routed = self.resolve_route(batch);
+        self.routes.insert(batch, routed.clone());
+        routed
+    }
+
     /// Plans for every GEMM node of a batch size's decode layer (dense
     /// projections plus the MoE expert fan-out when the config routes
-    /// experts).  `None` only when the artifact has no decode config —
-    /// without a tune cache the nodes are still enumerated (so metrics
-    /// stay kind-accurate) but every per-node plan is `None` (untuned).
-    /// Memoized per batch size.
+    /// experts).  `None` only when the artifact has no decode config.
+    /// Degraded resolution per the ladder; memoized per batch size.
     pub fn layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
-        if let Some(plan) = self.plans.get(&batch) {
-            return plan.clone();
-        }
-        let plan = self.resolve_layer_plan(batch);
-        self.plans.insert(batch, plan.clone());
-        plan
+        self.route(batch).plan
     }
 
     /// The tuned schedule for the batch's bottleneck GEMM — the FFN
@@ -183,54 +345,124 @@ impl<'rt> Router<'rt> {
         self.layer_plan(batch).and_then(|plan| plan.headline())
     }
 
-    fn resolve_layer_plan(&mut self, batch: usize) -> Option<LayerPlan> {
-        let cfg = self
-            .manifest
-            .decode(&self.model, batch)
-            .ok()
-            .and_then(|e| e.config)?;
+    fn resolve_route(&mut self, batch: usize) -> RoutedPlan {
+        let no_config = RouteOutcome {
+            rung: RouteRung::DefaultSplitk,
+            reason: RouteReason::NoDecodeConfig,
+            detail: None,
+            retuned_nodes: 0,
+            defaulted_nodes: 0,
+        };
+        let cfg = match self.manifest.decode(&self.model, batch).ok().and_then(|e| e.config) {
+            Some(cfg) => cfg,
+            None => return RoutedPlan { plan: None, outcome: no_config },
+        };
+        let machine = self.machine.clone();
         let layer = DecodeLayer::from_decode_config(&cfg, batch);
         let gemm_nodes = layer.gemm_nodes();
-        let mut tuner = self.tuner.as_mut();
-        let nodes = gemm_nodes
-            .iter()
-            .map(|node| {
-                // Cache-only: the serving hot path never pays a search.
-                // With no cache file the node list still describes the
-                // layer; every plan is just untuned.
-                let plan = match tuner.as_deref_mut() {
-                    Some(t) if node.problem.validate().is_ok() => t
-                        .lookup(&node.problem)
-                        .map(|e| TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns }),
-                    _ => None,
-                };
-                PlanNode { kind: node.kind, count: node.count, plan }
-            })
-            .collect();
-        // Co-schedule decisions for the layer's adjacent pairs, also
-        // cache-only (`repro tune` seeds the same `overlap_pairs` set,
-        // so a warmed cache always hits here).
-        let overlap_gain_ns = tuner.as_deref_mut().and_then(|t| {
+        let mut retuned = 0usize;
+        let mut defaulted = 0usize;
+        let mut nodes = Vec::with_capacity(gemm_nodes.len());
+        for node in &gemm_nodes {
+            if node.problem.validate().is_err() {
+                // Structurally unpriceable: no rung can serve a plan.
+                nodes.push(PlanNode { kind: node.kind, count: node.count, plan: None });
+                continue;
+            }
+            // Rungs 1/2: cache-only tuned lookup (the fast path).
+            let mut plan = self
+                .tuner
+                .as_mut()
+                .and_then(|t| t.lookup(&node.problem))
+                .map(|e| TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns });
+            if plan.is_none() {
+                // Rung 3: inline re-tune under the budget.  The search
+                // fills the (in-memory) cache, so aliased shapes and
+                // later groups hit rungs 1/2 again.
+                if self.retune_budget > 0 {
+                    let tuner =
+                        self.tuner.get_or_insert_with(|| Tuner::new(machine.clone()));
+                    if let Ok(e) = tuner.resolve(&node.problem) {
+                        plan = Some(TunedPlan { strategy: e.strategy, predicted_ns: e.total_ns });
+                        retuned += 1;
+                    }
+                    self.retune_budget -= 1;
+                }
+                if plan.is_none() {
+                    // Rung 4: the safe default, priced by the simulator.
+                    defaulted += 1;
+                    plan = splitk_plan(&machine, &node.problem);
+                }
+            }
+            nodes.push(PlanNode { kind: node.kind, count: node.count, plan });
+        }
+        // Cross-node gains stay cache-only: re-deriving a pair or
+        // residency decision costs merged-trace simulations, which the
+        // serving path never pays.  Missing gains degrade the rung, not
+        // the plan.
+        let overlap_gain_ns = self.tuner.as_mut().and_then(|t| {
             let mut total = 0.0;
             for pair in layer.overlap_pairs() {
                 total += pair.pairs as f64 * t.lookup_overlap(&pair.producer, &pair.consumer)?;
             }
             Some(total)
         });
-        // The step-level weight-residency plan, cache-only as well
-        // (`repro tune` seeds every enumerated layer graph's plan).
-        let residency = tuner.and_then(|t| t.lookup_residency(&layer));
-        Some(LayerPlan {
-            nodes,
-            overlap_gain_ns,
-            residency_gain_ns: residency.map(|r| r.gain_ns),
-            residency_pinned_bytes: residency.map(|r| r.pinned_bytes),
-        })
+        let residency = self.tuner.as_mut().and_then(|t| t.lookup_residency(&layer));
+        let rung = if defaulted > 0 {
+            RouteRung::DefaultSplitk
+        } else if retuned > 0 {
+            RouteRung::Retuned
+        } else if overlap_gain_ns.is_some() && residency.is_some() {
+            RouteRung::Full
+        } else {
+            RouteRung::TunedOnly
+        };
+        let reason = if self.cache_load_error.is_some() {
+            RouteReason::CacheUnreadable
+        } else if !self.cache_file_found {
+            RouteReason::NoCacheFile
+        } else if self.stale_tag && retuned + defaulted > 0 {
+            RouteReason::StaleMachineTag
+        } else {
+            match rung {
+                RouteRung::Full => RouteReason::WarmCache,
+                RouteRung::TunedOnly => RouteReason::GainsMissing,
+                RouteRung::Retuned => RouteReason::ShapeMiss,
+                RouteRung::DefaultSplitk => RouteReason::RetuneBudgetExhausted,
+            }
+        };
+        RoutedPlan {
+            plan: Some(LayerPlan {
+                nodes,
+                overlap_gain_ns,
+                residency_gain_ns: residency.map(|r| r.gain_ns),
+                residency_pinned_bytes: residency.map(|r| r.pinned_bytes),
+            }),
+            outcome: RouteOutcome {
+                rung,
+                reason,
+                detail: self.cache_load_error.clone(),
+                retuned_nodes: retuned,
+                defaulted_nodes: defaulted,
+            },
+        }
     }
 
-    /// Whether a tune cache was found next to the artifacts.
+    /// Whether a readable tune cache was found next to the artifacts.
     pub fn has_tune_cache(&self) -> bool {
-        self.tuner.is_some()
+        self.cache_file_found && self.cache_load_error.is_none()
+    }
+
+    /// Remaining inline re-tune searches (rung 3 of the ladder).
+    pub fn retune_budget(&self) -> usize {
+        self.retune_budget
+    }
+
+    /// Override the inline re-tune budget (0 forces rung 4 on misses).
+    /// Clears memoized routes so the new budget applies to every batch.
+    pub fn set_retune_budget(&mut self, budget: usize) {
+        self.retune_budget = budget;
+        self.routes.clear();
     }
 
     /// Number of engines built so far.
@@ -245,6 +477,8 @@ impl<'rt> Router<'rt> {
 
 #[cfg(test)]
 mod tests {
-    // Router construction needs real artifacts + a PJRT client; exercised
-    // by rust/tests/coordinator.rs (including the tuned-plan path).
+    // Router construction needs a manifest on disk; the ladder is
+    // exercised end to end by rust/tests/layer_graph.rs (synthetic
+    // manifests), rust/tests/failure_injection.rs (corrupt/stale caches)
+    // and rust/tests/coordinator.rs (real artifacts + PJRT).
 }

@@ -6,14 +6,46 @@
 //! generation budget.  Prompt tokens are ingested through the same decode
 //! step (teacher-forced positions), so the whole serving path — prefill
 //! and decode — runs the W4A16 pipeline under test.
+//!
+//! Fault tolerance (DESIGN.md §14): the server owns a *virtual clock*
+//! (µs) that advances by the routed plan's predicted step time, so
+//! deadlines, max-wait batching, stragglers and retry backoff are all
+//! deterministic — no wall-clock sleeps anywhere.  An optional seeded
+//! [`FaultPlan`] injects stragglers (the step lands late but correct)
+//! and transient engine/client errors (the step is retried with
+//! exponential backoff under [`RetryPolicy`]).  A group step that
+//! exhausts its retries fails only that group's unfinished members —
+//! never the server: `drain` always returns a result for every admitted
+//! request, each carrying exactly one [`Outcome`].
 
 use std::time::Instant;
 
-use super::batcher::{Batcher, DecodeGroup};
+use super::batcher::{Admission, Batcher, DecodeGroup};
+use super::faults::{FaultKind, FaultPlan};
 use super::metrics::Metrics;
-use super::request::{DecodeRequest, DecodeResult};
+use super::request::{DecodeRequest, DecodeResult, Outcome};
 use super::router::{LayerPlan, Router};
+use crate::runtime::RetryPolicy;
+use crate::util::prng::Rng;
 use crate::workload::decode_layer::GemmKind;
+
+/// Virtual step cost when the routed plan carries no prediction (µs).
+pub const DEFAULT_STEP_US: u64 = 1_000;
+
+/// Serving-loop knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Retry policy for group decode steps (injected or real failures).
+    pub retry: RetryPolicy,
+    /// Virtual step cost when no plan prices the group (µs).
+    pub default_step_us: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { retry: RetryPolicy::default(), default_step_us: DEFAULT_STEP_US }
+    }
+}
 
 /// Per-slot decode state inside a running group.
 struct Slot<'r> {
@@ -25,6 +57,10 @@ struct Slot<'r> {
     generated: Vec<i32>,
     first_token_at: Option<Instant>,
     done: bool,
+    /// Final outcome once `done` (starts `Completed`; expiry/failure
+    /// overwrite it).
+    outcome: Outcome,
+    error: Option<String>,
 }
 
 /// The decode server for one model.
@@ -32,34 +68,142 @@ pub struct Server<'rt> {
     pub router: Router<'rt>,
     pub batcher: Batcher,
     pub metrics: Metrics,
+    pub config: ServerConfig,
+    faults: Option<FaultPlan>,
+    /// Jitter source for retry backoff — seeded, so runs are replayable.
+    rng: Rng,
+    /// Virtual time (µs): advances by predicted step cost, straggler
+    /// penalties and retry backoff.  Drives deadlines and max-wait.
+    clock_us: u64,
+    /// Groups started so far — the fault plan's group coordinate.
+    groups_started: u64,
 }
 
 impl<'rt> Server<'rt> {
     pub fn new(router: Router<'rt>, batcher: Batcher) -> Server<'rt> {
-        Server { router, batcher, metrics: Metrics::new() }
+        Server {
+            router,
+            batcher,
+            metrics: Metrics::new(),
+            config: ServerConfig::default(),
+            faults: None,
+            rng: Rng::new(0x5eed),
+            clock_us: 0,
+            groups_started: 0,
+        }
     }
 
-    /// Admit a request into the queue.
-    pub fn submit(&mut self, mut req: DecodeRequest) {
+    pub fn with_config(mut self, config: ServerConfig) -> Server<'rt> {
+        self.config = config;
+        self
+    }
+
+    /// Arm (or disarm) deterministic fault injection.
+    pub fn set_faults(&mut self, faults: Option<FaultPlan>) {
+        self.faults = faults;
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> Server<'rt> {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Current virtual time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.clock_us
+    }
+
+    /// Advance the virtual clock (e.g. to model arrival gaps between
+    /// bursts, or to let a max-wait window elapse in tests).
+    pub fn advance_clock(&mut self, us: u64) {
+        self.clock_us = self.clock_us.saturating_add(us);
+    }
+
+    /// Offer a request to the bounded queue.  Every offered request is
+    /// counted as admitted traffic; a shed one is typed backpressure,
+    /// not an error, and is accounted under the shed outcome.
+    pub fn submit(&mut self, mut req: DecodeRequest) -> Admission {
         req.arrived = Some(Instant::now());
-        self.batcher.push(req);
+        self.metrics.record_admitted();
+        let admission = self.batcher.push(req, self.clock_us);
+        if let Admission::Shed { .. } = admission {
+            self.metrics.record_shed(1);
+        }
+        admission
     }
 
-    /// Serve until the queue is empty; returns all results.
+    /// Serve until the queue is empty; returns a result for every queued
+    /// request.  Group failures mark their members [`Outcome::Failed`] —
+    /// they never abort the drain.
     pub fn drain(&mut self) -> anyhow::Result<Vec<DecodeResult>> {
         let mut results = Vec::new();
-        while let Some(group) = self.batcher.form_group(true) {
-            results.extend(self.run_group(group)?);
+        loop {
+            results.extend(self.expire_queued());
+            match self.batcher.form_group(true, self.clock_us) {
+                Some(group) => results.extend(self.run_group(group)),
+                None => break,
+            }
         }
         Ok(results)
     }
 
-    /// Serve exactly one group if one can be formed.
+    /// Serve exactly one group if the policy forms one at the current
+    /// virtual time (`drain=true` forces formation below target fill).
     pub fn serve_one(&mut self, drain: bool) -> anyhow::Result<Vec<DecodeResult>> {
-        match self.batcher.form_group(drain) {
-            Some(group) => self.run_group(group),
-            None => Ok(Vec::new()),
+        let mut results = self.expire_queued();
+        if let Some(group) = self.batcher.form_group(drain, self.clock_us) {
+            results.extend(self.run_group(group));
         }
+        Ok(results)
+    }
+
+    /// Drop queued requests whose deadline has already passed — they
+    /// must not occupy (or pad) an engine slot.
+    fn expire_queued(&mut self) -> Vec<DecodeResult> {
+        let now = Instant::now();
+        self.batcher
+            .expire(self.clock_us)
+            .into_iter()
+            .map(|req| {
+                self.metrics.record_expired(1);
+                DecodeResult {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft_s: 0.0,
+                    total_s: req
+                        .arrived
+                        .map(|a| now.duration_since(a).as_secs_f64())
+                        .unwrap_or(0.0),
+                    steps: 0,
+                    outcome: Outcome::Expired,
+                    error: None,
+                }
+            })
+            .collect()
+    }
+
+    /// Fail every member of a group (engine could not be built/reset).
+    fn fail_group(&self, group: &DecodeGroup, error: &str) -> Vec<DecodeResult> {
+        let now = Instant::now();
+        group
+            .members
+            .iter()
+            .map(|req| {
+                self.metrics.record_failed(1);
+                DecodeResult {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft_s: 0.0,
+                    total_s: req
+                        .arrived
+                        .map(|a| now.duration_since(a).as_secs_f64())
+                        .unwrap_or(0.0),
+                    steps: 0,
+                    outcome: Outcome::Failed,
+                    error: Some(error.to_string()),
+                }
+            })
+            .collect()
     }
 
     /// Record which tuned schedule serves each GEMM node of a routed
@@ -93,40 +237,77 @@ impl<'rt> Server<'rt> {
         metrics.record_schedule(headline);
     }
 
-    /// Decode one group to completion.
-    fn run_group(&mut self, group: DecodeGroup) -> anyhow::Result<Vec<DecodeResult>> {
-        // Which kernel schedules serve this group's decode-layer GEMMs:
-        // the tuned winners from the persisted cache, or untuned defaults.
-        let plan = self.router.layer_plan(group.batch);
+    /// Decode one group to completion.  Infallible by design: engine or
+    /// step failures convert into per-member [`Outcome::Failed`] results.
+    fn run_group(&mut self, group: DecodeGroup) -> Vec<DecodeResult> {
+        let group_seq = self.groups_started;
+        self.groups_started += 1;
+        // Route down the degradation ladder: which kernel schedules
+        // serve this group's decode-layer GEMMs, and which rung supplied
+        // them (warm cache, inline re-tune, or the splitk default).
+        let routed = self.router.route(group.batch);
+        self.metrics
+            .record_route(routed.outcome.rung.name(), routed.outcome.reason.name());
+        let plan = routed.plan;
         Server::record_group_schedules(&self.metrics, plan.as_ref());
         // The plan's predicted cross-node gains (overlap + residency),
         // cache-only — the predicted-overlap column of the metrics report.
         if let Some(p) = plan.as_ref() {
             self.metrics.record_group_plan(group.batch, p.overlap_gain_ns, p.residency_gain_ns);
         }
-        let engine = self.router.engine(group.batch)?;
-        engine.reset()?;
-        let vocab = engine.vocab;
-        let max_seq = engine.max_seq;
-        for req in &group.members {
-            req.validate(vocab, max_seq)?;
-        }
+        // What one decode step costs on the virtual clock: the routed
+        // plan's best prediction (resident <= overlapped <= layer), or
+        // the configured default when the group is unpriced.
+        let step_us = plan
+            .as_ref()
+            .and_then(|p| p.predicted_served_ns())
+            .map(|ns| ((ns / 1_000.0).ceil() as u64).max(1))
+            .unwrap_or(self.config.default_step_us);
 
+        if let Err(e) = self.router.engine(group.batch).and_then(|eng| eng.reset()) {
+            return self.fail_group(&group, &format!("engine unavailable: {e:#}"));
+        }
+        let engine = self.router.engine(group.batch).expect("engine just built");
+        let vocab = engine.vocab();
+        let max_seq = engine.max_seq();
+
+        // Invalid members fail at admission-to-group time (their slot is
+        // born done); the rest of the group still decodes.
         let mut slots: Vec<Slot> = group
             .members
             .iter()
-            .map(|req| Slot {
-                req,
-                position: 0,
-                next_input: req.prompt[0],
-                generated: Vec::new(),
-                first_token_at: None,
-                done: false,
+            .map(|req| {
+                let (done, outcome, error) = match req.validate(vocab, max_seq) {
+                    Ok(()) => (false, Outcome::Completed, None),
+                    Err(e) => (true, Outcome::Failed, Some(format!("invalid request: {e:#}"))),
+                };
+                Slot {
+                    req,
+                    position: 0,
+                    next_input: req.prompt.first().copied().unwrap_or(0),
+                    generated: Vec::new(),
+                    first_token_at: None,
+                    done,
+                    outcome,
+                    error,
+                }
             })
             .collect();
 
         let mut steps = 0usize;
-        while slots.iter().any(|s| !s.done) {
+        'group: while slots.iter().any(|s| !s.done) {
+            // Deadlines are checked between steps on the virtual clock:
+            // an expired slot stops consuming steps and keeps its
+            // partial generation.
+            for slot in slots.iter_mut() {
+                if !slot.done && slot.req.expired(self.clock_us) {
+                    slot.done = true;
+                    slot.outcome = Outcome::Expired;
+                }
+            }
+            if slots.iter().all(|s| s.done) {
+                break;
+            }
             // Assemble the step: idle/finished/padding slots replay token 0
             // at their last written position (harmless rewrite).
             let mut tokens = vec![0i32; group.batch];
@@ -135,8 +316,60 @@ impl<'rt> Server<'rt> {
                 tokens[i] = if slot.done { 0 } else { slot.next_input };
                 positions[i] = slot.position as i32;
             }
-            let out = engine.step(&tokens, &positions)?;
+            // Execute the step under the fault plan + retry policy.  A
+            // straggler lands late but correct; an injected engine/client
+            // error is retried with (virtual) exponential backoff.  The
+            // fault plan is keyed on (group, step, attempt), so a retry
+            // re-rolls its fate deterministically.
+            let mut attempt = 0u32;
+            let out = loop {
+                let fault = self
+                    .faults
+                    .as_ref()
+                    .and_then(|f| f.step_fault(group_seq, steps as u64, attempt));
+                let step_res = match fault {
+                    Some(FaultKind::Straggler { mult_x100 }) => {
+                        self.metrics.record_fault("straggler");
+                        let penalty =
+                            step_us.saturating_mul(mult_x100.saturating_sub(100) as u64) / 100;
+                        self.clock_us = self.clock_us.saturating_add(penalty);
+                        engine.step(&tokens, &positions)
+                    }
+                    Some(kind) => {
+                        self.metrics.record_fault(kind.name());
+                        Err(anyhow::anyhow!(
+                            "injected {} (group {group_seq}, step {steps}, attempt {attempt})",
+                            kind.name()
+                        ))
+                    }
+                    None => engine.step(&tokens, &positions),
+                };
+                match step_res {
+                    Ok(out) => break out,
+                    Err(e) => {
+                        if attempt + 1 >= self.config.retry.max_attempts.max(1) {
+                            // Retries exhausted: fail the group's
+                            // unfinished members, keep the server alive.
+                            let msg = format!(
+                                "step {steps} failed after {} attempts: {e:#}",
+                                attempt + 1
+                            );
+                            for slot in slots.iter_mut().filter(|s| !s.done) {
+                                slot.done = true;
+                                slot.outcome = Outcome::Failed;
+                                slot.error = Some(msg.clone());
+                            }
+                            break 'group;
+                        }
+                        self.metrics.record_retry();
+                        let backoff = self.config.retry.backoff_us(attempt, &mut self.rng);
+                        self.clock_us = self.clock_us.saturating_add(backoff);
+                        attempt += 1;
+                    }
+                }
+            };
             steps += 1;
+            self.clock_us = self.clock_us.saturating_add(step_us);
 
             for (i, slot) in slots.iter_mut().enumerate() {
                 if slot.done {
@@ -165,7 +398,7 @@ impl<'rt> Server<'rt> {
 
         self.metrics.record_group(group.batch, group.occupancy(), steps);
         let now = Instant::now();
-        let results = slots
+        slots
             .into_iter()
             .map(|slot| {
                 let arrived = slot.req.arrived.unwrap_or(now);
@@ -174,23 +407,31 @@ impl<'rt> Server<'rt> {
                     .map(|t| t.duration_since(arrived).as_secs_f64())
                     .unwrap_or(0.0);
                 let total = now.duration_since(arrived).as_secs_f64();
-                self.metrics
-                    .record_completion(slot.generated.len(), ttft, total);
+                match slot.outcome {
+                    Outcome::Completed => {
+                        self.metrics.record_completion(slot.generated.len(), ttft, total)
+                    }
+                    Outcome::Expired => self.metrics.record_expired(1),
+                    Outcome::Failed => self.metrics.record_failed(1),
+                }
                 DecodeResult {
                     id: slot.req.id,
                     tokens: slot.generated,
                     ttft_s: ttft,
                     total_s: total,
                     steps,
+                    outcome: slot.outcome,
+                    error: slot.error,
                 }
             })
-            .collect();
-        Ok(results)
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Full server behaviour needs artifacts + PJRT; see
-    // rust/tests/coordinator.rs and examples/llm_decode.rs.
+    // Full server behaviour needs a manifest on disk; the fault-tolerant
+    // serving loop is exercised end to end by rust/tests/chaos.rs
+    // (synthetic manifests, seeded fault plans) and, against real
+    // artifacts + PJRT, by rust/tests/coordinator.rs.
 }

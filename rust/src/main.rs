@@ -17,7 +17,10 @@
 
 use ascend_w4a16::analysis::{layer, report, residency, roofline, sensitivity, timeline, traffic};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
-use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
+use ascend_w4a16::coordinator::{
+    Admission, BatchPolicy, Batcher, FaultPlan, Router, Server, DEFAULT_MAX_WAIT_US,
+    DEFAULT_QUEUE_CAP,
+};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{self, LayerGeometry, MoeGeometry};
 use ascend_w4a16::quant;
@@ -122,7 +125,16 @@ USAGE: repro <subcommand> [options]
   trace --out FILE.json [--n N --k K --batch M --strategy S]
                                    chrome://tracing timeline of one kernel
   quickstart [--artifacts DIR]     run a real W4A16 artifact through PJRT
-  serve [--model tiny|small100m] [--requests N] [--seed S] [--artifacts DIR]"
+  serve [--model tiny|small100m] [--requests N] [--seed S] [--artifacts DIR]
+        [--fault-rate P --fault-seed S] [--deadline-us D]
+        [--queue-cap N] [--max-wait-us W]
+                                   run the decode-serving coordinator on
+                                   synthetic load; --fault-rate injects
+                                   seeded stragglers / transient step
+                                   failures (retried with backoff),
+                                   --deadline-us attaches a per-request
+                                   SLO, --queue-cap bounds admission
+                                   (overflow sheds with a retry hint)"
     );
 }
 
@@ -593,18 +605,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let model = args.get_or("model", "tiny").to_string();
     let n_requests = args.get_usize("requests", 16)?;
     let seed = args.get_usize("seed", 7)? as u64;
+    let fault_rate = args.get_f64("fault-rate", 0.0)?;
+    let fault_seed = args.get_usize("fault-seed", 0x5eed)? as u64;
+    let deadline_us = args.get_usize("deadline-us", 0)? as u64;
+    let queue_cap = args.get_usize("queue-cap", DEFAULT_QUEUE_CAP)?;
+    let max_wait_us = args.get_usize("max-wait-us", DEFAULT_MAX_WAIT_US as usize)? as u64;
     let mf = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
     let router = Router::new(&rt, mf, &model)?;
     let sizes = router.batch_sizes();
     println!("serving model '{model}' with batch sizes {sizes:?}");
-    let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
+    let policy = BatchPolicy::new(sizes)?
+        .with_queue_cap(queue_cap)
+        .with_max_wait_us(max_wait_us);
+    let mut server = Server::new(router, Batcher::new(policy));
+    if fault_rate > 0.0 {
+        println!("fault injection: rate {fault_rate:.3}, seed {fault_seed} (deterministic)");
+        server.set_faults(Some(FaultPlan::new(fault_seed, fault_rate)));
+    }
     println!(
         "tune cache: {}",
         if server.router.has_tune_cache() {
             "found — decode groups serve their tuned schedules"
         } else {
-            "absent — run `repro tune --artifacts DIR --out DIR/tune_cache.json` to tune"
+            "absent/unreadable — groups route down the degradation ladder \
+             (run `repro tune --artifacts DIR --out DIR/tune_cache.json` to warm)"
         }
     );
 
@@ -612,16 +637,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let (vocab, max_seq) = {
         let first = *server.router.batch_sizes().first().unwrap();
         let e = server.router.engine(first)?;
-        (e.vocab, e.max_seq)
+        (e.vocab(), e.max_seq())
     };
     let mut generator = RequestGenerator::new(seed, vocab, max_seq);
     let t0 = std::time::Instant::now();
+    let mut shed = 0usize;
     for req in generator.burst(n_requests) {
-        server.submit(req);
+        let req = if deadline_us > 0 { req.with_deadline_us(deadline_us) } else { req };
+        if let Admission::Shed { .. } = server.submit(req) {
+            shed += 1;
+        }
     }
     let results = server.drain()?;
     let wall = t0.elapsed().as_secs_f64();
-    println!("completed {} requests in {wall:.2}s", results.len());
-    print!("{}", server.metrics.snapshot().render(wall));
+    let mut tally: std::collections::BTreeMap<&str, usize> = Default::default();
+    for r in &results {
+        *tally.entry(r.outcome.name()).or_insert(0) += 1;
+    }
+    let tally = tally
+        .iter()
+        .map(|(k, v)| format!("{v} {k}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!(
+        "served {} of {n_requests} offered requests in {wall:.2}s ({}; {shed} shed) — {} virtual µs",
+        results.len(),
+        if tally.is_empty() { "none".to_string() } else { tally },
+        server.now_us()
+    );
+    let snapshot = server.metrics.snapshot();
+    print!("{}", snapshot.render(wall));
+    anyhow::ensure!(
+        snapshot.outcomes_accounted(),
+        "metrics conservation violated: admitted != completed + shed + expired + failed"
+    );
     Ok(())
 }

@@ -4,5 +4,5 @@
 pub mod decode;
 pub mod llm;
 
-pub use decode::DecodeEngine;
+pub use decode::{synthetic_next_token, DecodeEngine, Engine, SimEngine, StepOutput};
 pub use llm::{paper_shapes, LlmShape, PAPER_BATCH_SIZES};

@@ -16,8 +16,76 @@ use std::sync::Mutex;
 
 use crate::tensor::DType;
 use crate::util::f16;
+use crate::util::prng::Rng;
 
 use super::artifacts::{ArtifactEntry, TensorSpec};
+
+/// Retry-with-exponential-backoff policy for transient execution faults
+/// (DESIGN.md §14).  Backoff is *virtual*: [`RetryPolicy::backoff_us`]
+/// returns the wait instead of sleeping it, so the serving loop advances
+/// its own clock and tests stay fast and deterministic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry (µs).
+    pub base_backoff_us: u64,
+    /// Backoff ceiling (µs) — the exponential curve saturates here.
+    pub cap_backoff_us: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 4, base_backoff_us: 500, cap_backoff_us: 8_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Virtual backoff before retrying after failed attempt `attempt`
+    /// (0-based): exponential in the attempt, capped, with ±25% jitter
+    /// drawn from the caller's seeded PRNG so replays are bit-identical.
+    pub fn backoff_us(&self, attempt: u32, rng: &mut Rng) -> u64 {
+        let exp = self.base_backoff_us.saturating_mul(1u64 << attempt.min(20));
+        let capped = exp.min(self.cap_backoff_us).max(1);
+        let jitter = 0.75 + 0.5 * rng.f64();
+        ((capped as f64 * jitter) as u64).max(1)
+    }
+}
+
+/// What a retried operation cost: attempts burned and virtual backoff
+/// accumulated (the caller charges it to its clock).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Attempts executed (1 = first try succeeded).
+    pub attempts: u32,
+    /// Summed virtual backoff between attempts (µs).
+    pub backoff_us: u64,
+}
+
+/// Run `op` under a retry policy.  `op` receives the 0-based attempt
+/// index; the final error propagates once attempts are exhausted.  The
+/// stats are returned in both cases so callers can charge the backoff.
+pub fn retry_with_backoff<T>(
+    policy: &RetryPolicy,
+    rng: &mut Rng,
+    mut op: impl FnMut(u32) -> anyhow::Result<T>,
+) -> (anyhow::Result<T>, RetryStats) {
+    let mut stats = RetryStats::default();
+    let attempts = policy.max_attempts.max(1);
+    for attempt in 0..attempts {
+        stats.attempts = attempt + 1;
+        match op(attempt) {
+            Ok(v) => return (Ok(v), stats),
+            Err(e) => {
+                if attempt + 1 >= attempts {
+                    return (Err(e), stats);
+                }
+                stats.backoff_us += policy.backoff_us(attempt, rng);
+            }
+        }
+    }
+    unreachable!("retry loop returns on the final attempt")
+}
 
 /// Device-side literal handle.  With `pjrt` this is the real
 /// `xla::Literal`; otherwise an opaque placeholder that can never be
@@ -200,6 +268,18 @@ impl Executable {
             literals.push(arg.to_literal(&spec.shape)?);
         }
         self.run_literals(&literals)
+    }
+
+    /// Execute with host tensors under a retry policy: transient execute
+    /// failures back off (virtually — see [`RetryPolicy`]) and retry up
+    /// to `policy.max_attempts` times before the last error propagates.
+    pub fn run_with_retry(
+        &self,
+        args: &[HostTensor],
+        policy: &RetryPolicy,
+        rng: &mut Rng,
+    ) -> (anyhow::Result<Vec<Literal>>, RetryStats) {
+        retry_with_backoff(policy, rng, |_| self.run(args))
     }
 
     /// Execute with prepared literals (hot path: no host conversion).
@@ -401,6 +481,59 @@ mod tests {
         assert!(t.to_literal(&[2, 2]).is_err());
         #[cfg(feature = "pjrt")]
         assert!(t.to_literal(&[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn retry_succeeds_after_transient_failures() {
+        let policy = RetryPolicy::default();
+        let mut rng = Rng::new(1);
+        let mut calls = 0;
+        let (result, stats) = retry_with_backoff(&policy, &mut rng, |attempt| {
+            calls += 1;
+            anyhow::ensure!(attempt >= 2, "transient failure at attempt {attempt}");
+            Ok(attempt)
+        });
+        assert_eq!(result.unwrap(), 2);
+        assert_eq!(calls, 3);
+        assert_eq!(stats.attempts, 3);
+        assert!(stats.backoff_us > 0, "two retries must accumulate backoff");
+    }
+
+    #[test]
+    fn retry_exhaustion_returns_last_error() {
+        let policy = RetryPolicy { max_attempts: 3, base_backoff_us: 10, cap_backoff_us: 20 };
+        let mut rng = Rng::new(2);
+        let (result, stats) =
+            retry_with_backoff(&policy, &mut rng, |attempt| -> anyhow::Result<()> {
+                anyhow::bail!("always fails (attempt {attempt})")
+            });
+        let err = result.unwrap_err().to_string();
+        assert!(err.contains("attempt 2"), "last error must surface: {err}");
+        assert_eq!(stats.attempts, 3);
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_deterministic() {
+        let policy = RetryPolicy { max_attempts: 8, base_backoff_us: 100, cap_backoff_us: 1_000 };
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for attempt in 0..8 {
+            let ba = policy.backoff_us(attempt, &mut a);
+            assert_eq!(ba, policy.backoff_us(attempt, &mut b), "same seed, same jitter");
+            // ±25% jitter around min(base * 2^attempt, cap).
+            let nominal = (100u64 << attempt).min(1_000) as f64;
+            assert!(ba as f64 >= nominal * 0.75 - 1.0, "attempt {attempt}: {ba}");
+            assert!(ba as f64 <= nominal * 1.25 + 1.0, "attempt {attempt}: {ba}");
+        }
+    }
+
+    #[test]
+    fn zero_attempt_policy_still_runs_once() {
+        let policy = RetryPolicy { max_attempts: 0, base_backoff_us: 1, cap_backoff_us: 1 };
+        let mut rng = Rng::new(3);
+        let (result, stats) = retry_with_backoff(&policy, &mut rng, |_| Ok(7));
+        assert_eq!(result.unwrap(), 7);
+        assert_eq!(stats.attempts, 1);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -15,4 +15,4 @@ pub mod artifacts;
 pub mod client;
 
 pub use artifacts::{ArtifactEntry, Manifest, TensorSpec, WeightBlob};
-pub use client::{Executable, HostTensor, Runtime};
+pub use client::{retry_with_backoff, Executable, HostTensor, RetryPolicy, RetryStats, Runtime};

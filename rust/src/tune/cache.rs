@@ -173,6 +173,22 @@ impl TuneCache {
 
     // ----- staleness --------------------------------------------------------
 
+    /// Whether any entry (shape winner, pair decision, or residency plan)
+    /// was tuned under machine tag `tag`.  A non-empty cache with no
+    /// matching tag is *stale* — tuned on different hardware — and the
+    /// router's degradation ladder treats it like a miss (DESIGN.md §14).
+    pub fn has_tag(&self, tag: &str) -> bool {
+        let prefix = format!("{tag}/");
+        self.entries.keys().any(|k| k.starts_with(&prefix))
+            || self.overlaps.keys().any(|k| k.starts_with(&prefix))
+            || self.residency.keys().any(|k| k.starts_with(&prefix))
+    }
+
+    /// Total decisions across all three maps (staleness reporting).
+    pub fn total_len(&self) -> usize {
+        self.entries.len() + self.overlaps.len() + self.residency.len()
+    }
+
     /// Drop every entry (shape winners, pair decisions, residency plans)
     /// whose machine tag no longer matches `tag` — the `repro tune
     /// --prune` eviction policy.  The machine-tag key already guarantees
@@ -398,6 +414,22 @@ mod tests {
             .with_moe(moe_geometry("deepseek-moe").unwrap());
         assert_ne!(key, layer_key(&m, &moe));
         assert!(layer_key(&m, &moe).contains("moe_expertx64"));
+    }
+
+    #[test]
+    fn has_tag_detects_stale_caches_across_all_maps() {
+        let m = MachineConfig::ascend910();
+        let tag = machine_tag(&m);
+        let mut c = TuneCache::new();
+        assert!(!c.has_tag(&tag), "empty cache has no tags");
+        c.insert("aic16_l216777216_hbm600/m16_n512_k16384_g128".into(), entry());
+        assert!(!c.has_tag(&tag), "foreign-tag cache is stale for this machine");
+        assert!(c.has_tag("aic16_l216777216_hbm600"));
+        assert_eq!(c.total_len(), 1);
+        // A matching overlap decision alone also counts as current.
+        c.overlap_insert(format!("{tag}/a->b"), 1.0);
+        assert!(c.has_tag(&tag));
+        assert_eq!(c.total_len(), 2);
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Deterministic chaos harness (DESIGN.md §14): the fault-tolerant
+//! serving loop under seeded stragglers, transient step failures,
+//! bounded-queue shedding and per-request deadlines — all on synthetic
+//! (config-only) manifests, so no artifacts or PJRT are needed.
+//!
+//! The invariants:
+//! * the server never panics and `drain` never errors under chaos;
+//! * outcome conservation — every offered request ends in exactly one of
+//!   {completed, shed, expired, failed};
+//! * determinism — the same seeds reproduce the same results, and every
+//!   COMPLETED request's tokens are bit-identical to the fault-free run;
+//! * the degradation ladder prices each rung no faster than the rung
+//!   below it (resident <= overlapped <= layer <= splitk default).
+
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::coordinator::{
+    Admission, BatchPolicy, Batcher, DecodeRequest, DecodeResult, FaultKind, FaultPlan, Outcome,
+    RouteRung, Router, Server,
+};
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, RequestGenerator};
+
+/// Three config-only decode artifacts (batch 1/2/4) — the router builds
+/// synthetic engines, so the whole coordinator stack runs end to end.
+fn manifest_json() -> String {
+    let artifact = |batch: usize| {
+        format!(
+            r#"    {{
+      "name": "decode_tiny_b{batch}",
+      "kind": "decode",
+      "path": "decode_tiny_b{batch}.hlo.txt",
+      "model": "tiny",
+      "batch": {batch},
+      "config": {{"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0}},
+      "inputs": [],
+      "outputs": []
+    }}"#
+        )
+    };
+    format!(
+        "{{\n  \"group\": 128,\n  \"batch_sizes\": [1, 2, 4],\n  \"paper_shapes\": [],\n  \"artifacts\": [\n{},\n{},\n{}\n  ]\n}}",
+        artifact(1),
+        artifact(2),
+        artifact(4)
+    )
+}
+
+fn decode_config() -> DecodeConfig {
+    DecodeConfig {
+        vocab: 512,
+        hidden: 256,
+        layers: 2,
+        heads: 4,
+        ffn: 1024,
+        max_seq: 64,
+        group: 128,
+        params: 0,
+        moe_experts: 0,
+        moe_topk: 0,
+    }
+}
+
+/// Write the manifest plus a fully warmed tune cache (shape winners,
+/// pair decisions, residency plans for every compiled batch), so routing
+/// serves the `full` rung and the tests run cache-only.
+fn chaos_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+    let mut tuner = Tuner::new(MachineConfig::ascend910());
+    for batch in [1usize, 2, 4] {
+        let layer = DecodeLayer::from_decode_config(&decode_config(), batch);
+        for node in layer.gemm_nodes() {
+            tuner.resolve(&node.problem).unwrap();
+        }
+        for pair in layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
+        }
+        tuner.resolve_residency(&layer).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    dir
+}
+
+fn build_server<'rt>(
+    rt: &'rt Runtime,
+    dir: &std::path::Path,
+    queue_cap: usize,
+    faults: Option<FaultPlan>,
+) -> Server<'rt> {
+    let mf = Manifest::load(dir).unwrap();
+    let router = Router::new(rt, mf, "tiny").unwrap();
+    let sizes = router.batch_sizes();
+    let policy = BatchPolicy::new(sizes).unwrap().with_queue_cap(queue_cap);
+    let mut server = Server::new(router, Batcher::new(policy));
+    server.set_faults(faults);
+    server
+}
+
+/// Submit a seeded burst (optionally deadlined) and drain; returns the
+/// results, the shed count, and the server for metric inspection.
+fn run_burst<'rt>(
+    rt: &'rt Runtime,
+    dir: &std::path::Path,
+    n: usize,
+    req_seed: u64,
+    queue_cap: usize,
+    deadline_us: Option<u64>,
+    faults: Option<FaultPlan>,
+) -> (Vec<DecodeResult>, usize, Server<'rt>) {
+    let mut server = build_server(rt, dir, queue_cap, faults);
+    let mut generator = RequestGenerator::new(req_seed, 512, 64);
+    let mut shed = 0usize;
+    for mut req in generator.burst(n) {
+        if let Some(d) = deadline_us {
+            req = req.with_deadline_us(d);
+        }
+        if let Admission::Shed { retry_after_us } = server.submit(req) {
+            assert!(retry_after_us > 0, "shed must carry a retry hint");
+            shed += 1;
+        }
+    }
+    let results = server.drain().expect("drain never errors under chaos");
+    (results, shed, server)
+}
+
+#[test]
+fn acceptance_64_request_drain_under_10pct_faults() {
+    // The PR's headline acceptance: 10% step fault rate, bounded queue,
+    // 64-request drain — zero panics, every request accounted.
+    let dir = chaos_dir("accept");
+    let rt = Runtime::cpu().unwrap();
+    let (results, shed, server) =
+        run_burst(&rt, &dir, 64, 7, 32, None, Some(FaultPlan::new(0xC0FFEE, 0.10)));
+    assert_eq!(shed, 32, "a 32-cap queue sheds the second half of the burst");
+    assert_eq!(results.len() + shed, 64, "every offered request is accounted");
+    let snap = server.metrics.snapshot();
+    assert!(snap.outcomes_accounted(), "conservation violated");
+    assert_eq!(snap.requests_admitted, 64);
+    assert_eq!(snap.requests_shed, 32);
+    assert!(
+        snap.requests_completed > 0,
+        "a 10% fault rate with retries must still complete work: {snap:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_free_run_is_deterministic_and_chaos_completions_match_it() {
+    let dir = chaos_dir("det");
+    let rt = Runtime::cpu().unwrap();
+    let (baseline, _, _) = run_burst(&rt, &dir, 24, 11, 1024, None, None);
+    let (again, _, _) = run_burst(&rt, &dir, 24, 11, 1024, None, None);
+    assert_eq!(baseline.len(), 24);
+    assert!(baseline.iter().all(|r| r.outcome == Outcome::Completed));
+    for (a, b) in baseline.iter().zip(&again) {
+        assert_eq!((a.id, &a.tokens), (b.id, &b.tokens), "fault-free serving must replay");
+    }
+
+    // Under seeded chaos, whatever COMPLETES is bit-identical to the
+    // fault-free run: stragglers land late but correct, retried steps
+    // re-execute the same deterministic step, and failures never corrupt
+    // surviving groupmates.
+    for fault_seed in [1u64, 0xDEAD, 42] {
+        let (chaos, _, server) = run_burst(
+            &rt,
+            &dir,
+            24,
+            11,
+            1024,
+            None,
+            Some(FaultPlan::new(fault_seed, 0.25)),
+        );
+        assert_eq!(chaos.len(), 24);
+        assert!(server.metrics.snapshot().outcomes_accounted());
+        for r in chaos.iter().filter(|r| r.outcome == Outcome::Completed) {
+            let base = baseline.iter().find(|b| b.id == r.id).unwrap();
+            assert_eq!(
+                r.tokens, base.tokens,
+                "seed {fault_seed}: completed request {} diverged from the fault-free run",
+                r.id
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_property_outcomes_conserve_and_never_panic() {
+    let dir = chaos_dir("prop");
+    let rt = Runtime::cpu().unwrap();
+    forall("chaos conservation", 12, |rng| {
+        let n = rng.usize_range(1, 40);
+        let rate = rng.f64() * 0.6;
+        let fault_seed = rng.next_u64();
+        let queue_cap = rng.usize_range(1, 48);
+        let deadline_us =
+            if rng.f64() < 0.4 { Some(rng.usize_range(1, 60_000) as u64) } else { None };
+        let (results, shed, server) = run_burst(
+            &rt,
+            &dir,
+            n,
+            rng.next_u64(),
+            queue_cap,
+            deadline_us,
+            Some(FaultPlan::new(fault_seed, rate)),
+        );
+        let snap = server.metrics.snapshot();
+        if !snap.outcomes_accounted() {
+            return (
+                false,
+                format!(
+                    "admitted {} != {} + {} + {} + {}",
+                    snap.requests_admitted,
+                    snap.requests_completed,
+                    snap.requests_shed,
+                    snap.requests_expired,
+                    snap.requests_failed
+                ),
+            );
+        }
+        if results.len() + shed != n {
+            return (false, format!("{} results + {shed} shed != {n} offered", results.len()));
+        }
+        for r in &results {
+            match r.outcome {
+                Outcome::Completed => {
+                    if r.tokens.is_empty() {
+                        return (false, format!("completed {} with no tokens", r.id));
+                    }
+                    if r.error.is_some() {
+                        return (false, format!("completed {} carries an error", r.id));
+                    }
+                }
+                Outcome::Failed => {
+                    if r.error.is_none() {
+                        return (false, format!("failed {} without a cause", r.id));
+                    }
+                }
+                Outcome::Expired => {}
+            }
+        }
+        (true, String::new())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn expired_queue_requests_take_no_steps() {
+    let dir = chaos_dir("expire");
+    let rt = Runtime::cpu().unwrap();
+    let mut server = build_server(&rt, &dir, 1024, None);
+    server.submit(DecodeRequest::new(1, vec![3, 4], 8).with_deadline_us(5));
+    server.advance_clock(6); // the deadline passes while queued
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].outcome, Outcome::Expired);
+    assert!(results[0].tokens.is_empty(), "expired in queue: no engine work");
+    assert_eq!(results[0].steps, 0);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_expired, 1);
+    assert_eq!(snap.groups_formed, 0, "an expired request must not occupy a group");
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mid_flight_deadline_keeps_partial_tokens_and_frees_the_group() {
+    // One deadlined member expires mid-decode (partial generation kept);
+    // its groupmate still completes its full budget.
+    let dir = chaos_dir("midflight");
+    let rt = Runtime::cpu().unwrap();
+
+    // Baseline: both complete (no deadlines).
+    let mut server = build_server(&rt, &dir, 1024, None);
+    server.submit(DecodeRequest::new(1, vec![9], 10));
+    server.submit(DecodeRequest::new(2, vec![8], 10));
+    let baseline = server.drain().unwrap();
+    let base1 = baseline.iter().find(|r| r.id == 1).unwrap().tokens.clone();
+    assert_eq!(base1.len(), 10);
+
+    // What one step costs on the virtual clock for this batch-2 group.
+    let mut server = build_server(&rt, &dir, 1024, None);
+    let step_us = {
+        let plan = server.router.layer_plan(2).unwrap();
+        ((plan.predicted_served_ns().unwrap() / 1_000.0).ceil() as u64).max(1)
+    };
+    // Expires strictly between step 2 and the 10-step budget.
+    server.submit(DecodeRequest::new(1, vec![9], 10).with_deadline_us(2 * step_us));
+    server.submit(DecodeRequest::new(2, vec![8], 10));
+    let results = server.drain().unwrap();
+    let r1 = results.iter().find(|r| r.id == 1).unwrap();
+    let r2 = results.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(r1.outcome, Outcome::Expired);
+    assert!(
+        !r1.tokens.is_empty() && r1.tokens.len() < 10,
+        "partial generation expected, got {} tokens",
+        r1.tokens.len()
+    );
+    assert_eq!(r1.tokens[..], base1[..r1.tokens.len()], "partial must prefix the baseline");
+    assert_eq!(r2.outcome, Outcome::Completed);
+    assert_eq!(r2.tokens.len(), 10, "groupmate must not be dragged down by the expiry");
+    assert!(server.metrics.snapshot().outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_step_fault_retries_then_completes_identically() {
+    // Pick a fault seed whose plan fails the first attempt of group 0's
+    // step 0 but passes some retry of every early step — the request must
+    // complete bit-identically, with the retry and fault counted.
+    let dir = chaos_dir("retry");
+    let rt = Runtime::cpu().unwrap();
+    let (baseline, _, _) = run_burst(&rt, &dir, 1, 5, 1024, None, None);
+    assert_eq!(baseline[0].outcome, Outcome::Completed);
+
+    let rate = 0.08;
+    let plan = (0u64..)
+        .map(|seed| FaultPlan::new(seed, rate))
+        .find(|p| {
+            let first = matches!(
+                p.step_fault(0, 0, 0),
+                Some(FaultKind::EngineFault) | Some(FaultKind::ClientError)
+            );
+            // Every step of the only group must survive within 4 attempts.
+            let survivable =
+                (0..64u64).all(|s| (0..4u32).any(|a| p.step_fault(0, s, a).is_none()));
+            first && survivable
+        })
+        .unwrap();
+    let (results, _, server) = run_burst(&rt, &dir, 1, 5, 1024, None, Some(plan));
+    assert_eq!(results[0].outcome, Outcome::Completed);
+    assert_eq!(results[0].tokens, baseline[0].tokens, "retried steps must replay exactly");
+    let snap = server.metrics.snapshot();
+    assert!(snap.retries >= 1, "the injected failure must surface as a retry: {snap:?}");
+    assert!(!snap.faults.is_empty());
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exhausted_retries_fail_members_not_the_server() {
+    // A fault plan whose group-0 step-0 draws a transient error on every
+    // attempt: the retry budget exhausts, the member ends Failed (typed,
+    // with a cause) — and the server keeps serving.
+    let dir = chaos_dir("exhaust");
+    let rt = Runtime::cpu().unwrap();
+    let lethal = (0u64..)
+        .map(|seed| FaultPlan::new(seed, 1.0))
+        .find(|p| {
+            (0..4u32).all(|a| {
+                matches!(
+                    p.step_fault(0, 0, a),
+                    Some(FaultKind::EngineFault) | Some(FaultKind::ClientError)
+                )
+            })
+        })
+        .unwrap();
+    let mut server = build_server(&rt, &dir, 1024, Some(lethal));
+    server.submit(DecodeRequest::new(1, vec![3], 4));
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].outcome, Outcome::Failed);
+    assert!(results[0].error.as_deref().unwrap().contains("attempts"));
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_failed, 1);
+    assert!(snap.retries >= 1);
+    assert!(snap.outcomes_accounted());
+
+    // Disarm faults: the SAME server immediately serves again.
+    server.set_faults(None);
+    server.submit(DecodeRequest::new(2, vec![3], 4));
+    let results = server.drain().unwrap();
+    assert_eq!(results[0].outcome, Outcome::Completed);
+    assert!(server.metrics.snapshot().outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn full_rung_prices_monotonically_down_the_ladder() {
+    // The never-worse argument, priced: resident <= overlapped <= layer,
+    // and the warm (full-rung) route is never slower than the splitk
+    // default the bottom rung would serve.
+    let dir = chaos_dir("ladder");
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.rung, RouteRung::Full, "warm cache must serve rung 1");
+    let plan = routed.plan.unwrap();
+    let resident = plan.predicted_resident_ns().unwrap();
+    let overlapped = plan.predicted_overlapped_ns().unwrap();
+    let layer = plan.predicted_layer_ns().unwrap();
+    assert!(resident <= overlapped && overlapped <= layer, "{resident} {overlapped} {layer}");
+    assert_eq!(plan.predicted_served_ns(), Some(resident));
+
+    // Bottom rung on a cold router with no re-tune budget: all splitk.
+    let cold = std::env::temp_dir()
+        .join(format!("w4a16-chaos-ladder-cold-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cold);
+    std::fs::create_dir_all(&cold).unwrap();
+    std::fs::write(cold.join("manifest.json"), manifest_json()).unwrap();
+    let cold_mf = Manifest::load(&cold).unwrap();
+    let mut cold_router = Router::new(&rt, cold_mf, "tiny").unwrap();
+    cold_router.set_retune_budget(0);
+    let bottom = cold_router.route(4);
+    assert_eq!(bottom.outcome.rung, RouteRung::DefaultSplitk);
+    let splitk_layer = bottom.plan.unwrap().predicted_layer_ns().unwrap();
+    assert!(
+        layer <= splitk_layer * 1.000001,
+        "tuned layer {layer} must not be slower than the splitk default {splitk_layer}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&cold);
+}

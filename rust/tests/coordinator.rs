@@ -1,7 +1,7 @@
 //! Coordinator integration: the serving stack against the real tiny decode
 //! artifact (requires `make artifacts`; skips politely otherwise).
 
-use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest, Router, Server};
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest, Outcome, Router, Server};
 use ascend_w4a16::runtime::{Manifest, Runtime};
 
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -75,12 +75,28 @@ fn mixed_lengths_complete_and_respect_budgets() {
 }
 
 #[test]
-fn invalid_requests_surface_errors() {
+fn invalid_requests_fail_without_aborting_the_drain() {
+    // DESIGN.md §14: an invalid request ends as a typed Failed outcome —
+    // it never takes the serving loop (or its groupmates) down.
     let rt = Runtime::cpu().unwrap();
     let Some(mut server) = setup(&rt) else { return };
     // token outside the tiny model's 512 vocab
     server.submit(DecodeRequest::new(1, vec![100000], 2));
-    assert!(server.drain().is_err());
+    server.submit(DecodeRequest::new(2, vec![5, 9], 2));
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 2);
+    let by_id = |id: u64| results.iter().find(|r| r.id == id).unwrap();
+    let bad = by_id(1);
+    assert_eq!(bad.outcome, Outcome::Failed);
+    assert!(bad.tokens.is_empty());
+    assert!(bad.error.as_deref().unwrap_or("").contains("vocab"));
+    let good = by_id(2);
+    assert_eq!(good.outcome, Outcome::Completed);
+    assert_eq!(good.tokens.len(), 2, "groupmates of an invalid request still decode");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_failed, 1);
+    assert_eq!(snap.requests_completed, 1);
+    assert!(snap.outcomes_accounted());
 }
 
 #[test]

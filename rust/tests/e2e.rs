@@ -3,7 +3,7 @@
 //! (Requires `make artifacts`; skips politely otherwise.)
 
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, Server};
-use ascend_w4a16::model::DecodeEngine;
+use ascend_w4a16::model::{DecodeEngine, Engine};
 use ascend_w4a16::runtime::{Manifest, Runtime};
 use ascend_w4a16::workload::RequestGenerator;
 
@@ -71,8 +71,11 @@ fn small100m_serves_batched_requests() {
 
     let (vocab, max_seq) = {
         let e = server.router.engine(1).unwrap();
-        assert!(e.hidden == 768 && e.layers == 12, "100M geometry");
-        (e.vocab, e.max_seq)
+        match e {
+            Engine::Real(d) => assert!(d.hidden == 768 && d.layers == 12, "100M geometry"),
+            Engine::Synthetic(_) => panic!("weighted artifact must build a real engine"),
+        }
+        (e.vocab(), e.max_seq())
     };
     let mut generator = RequestGenerator::new(11, vocab, max_seq.min(24));
     for mut req in generator.burst(2) {

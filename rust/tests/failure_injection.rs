@@ -1,9 +1,21 @@
 //! Failure injection: corrupt manifests, truncated weight blobs, malformed
 //! HLO — every boundary the runtime trusts must fail loudly, not silently.
+//!
+//! Plus the DESIGN.md §14 routing half: a corrupt, truncated or
+//! stale-tagged *tune cache* is NOT fatal — the router records the
+//! condition and walks the degradation ladder, and the serving loop keeps
+//! completing requests.
 
 use std::io::Write;
 
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::coordinator::{
+    BatchPolicy, Batcher, DecodeRequest, Outcome, RouteReason, RouteRung, Router, Server,
+};
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::workload::DecodeLayer;
 
 fn write_file(dir: &std::path::Path, name: &str, content: &str) {
     let mut f = std::fs::File::create(dir.join(name)).unwrap();
@@ -148,4 +160,169 @@ fn missing_hlo_file_is_a_clean_error() {
         Err(e) => e.to_string(),
     };
     assert!(err.contains("gemm_a.hlo.txt"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Tune-cache failure injection: the degradation ladder (DESIGN.md §14).
+// ---------------------------------------------------------------------------
+
+/// A config-only decode artifact (no weights, no HLO on disk): the router
+/// builds a synthetic engine for it, so the full serving loop runs.
+const DECODE_MANIFEST: &str = r#"{
+  "group": 128,
+  "batch_sizes": [4],
+  "paper_shapes": [],
+  "artifacts": [
+    {
+      "name": "decode_tiny_b4",
+      "kind": "decode",
+      "path": "decode_tiny_b4.hlo.txt",
+      "model": "tiny",
+      "batch": 4,
+      "config": {"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0},
+      "inputs": [],
+      "outputs": []
+    }
+  ]
+}"#;
+
+fn decode_config() -> DecodeConfig {
+    DecodeConfig {
+        vocab: 512,
+        hidden: 256,
+        layers: 2,
+        heads: 4,
+        ffn: 1024,
+        max_seq: 64,
+        group: 128,
+        params: 0,
+        moe_experts: 0,
+        moe_topk: 0,
+    }
+}
+
+/// Tune every shape of the decode layer on `machine` and persist the
+/// cache next to the manifest in `dir`.
+fn warm_cache_for(dir: &std::path::Path, machine: MachineConfig) {
+    let mut tuner = Tuner::new(machine);
+    for node in DecodeLayer::from_decode_config(&decode_config(), 4).gemm_nodes() {
+        tuner.resolve(&node.problem).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+}
+
+/// Serve two requests end to end and return the server for inspection.
+fn serve_two<'rt>(rt: &'rt Runtime, dir: &std::path::Path) -> Server<'rt> {
+    let mf = Manifest::load(dir).unwrap();
+    let router = Router::new(rt, mf, "tiny").unwrap();
+    let sizes = router.batch_sizes();
+    let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes).unwrap()));
+    server.submit(DecodeRequest::new(1, vec![3, 5], 4));
+    server.submit(DecodeRequest::new(2, vec![7], 4));
+    let results = server.drain().unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(results.iter().all(|r| r.outcome == Outcome::Completed), "{results:?}");
+    server
+}
+
+#[test]
+fn corrupt_tune_cache_routes_down_the_ladder_not_abort() {
+    let dir = tmpdir("badcache");
+    write_file(&dir, "manifest.json", DECODE_MANIFEST);
+    write_file(&dir, "tune_cache.json", "{ this is not json ]");
+    let rt = Runtime::cpu().unwrap();
+    // Router construction must survive the unreadable cache...
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(!router.has_tune_cache());
+    // ...and routing lands on the re-tune rung, naming the cause.
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.reason, RouteReason::CacheUnreadable);
+    assert_eq!(routed.outcome.rung, RouteRung::Retuned);
+    assert!(routed.outcome.detail.is_some(), "parse error must be carried");
+    assert!(routed.plan.unwrap().fully_resolved());
+
+    // The full serving loop completes, and the rung lands in metrics.
+    let server = serve_two(&rt, &dir);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.route_rungs.get("retuned"), Some(&1));
+    assert_eq!(snap.route_reasons.get("cache_unreadable"), Some(&1));
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_tune_cache_degrades_like_a_corrupt_one() {
+    let dir = tmpdir("shortcache");
+    write_file(&dir, "manifest.json", DECODE_MANIFEST);
+    warm_cache_for(&dir, MachineConfig::ascend910());
+    // Truncate the valid cache mid-document.
+    let full = std::fs::read_to_string(dir.join("tune_cache.json")).unwrap();
+    assert!(full.len() > 40, "cache unexpectedly small");
+    std::fs::write(dir.join("tune_cache.json"), &full[..full.len() / 2]).unwrap();
+
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(!router.has_tune_cache());
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.reason, RouteReason::CacheUnreadable);
+    assert_eq!(routed.outcome.rung, RouteRung::Retuned);
+    assert!(routed.plan.unwrap().fully_resolved());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_machine_tag_retunes_for_this_machine() {
+    // A cache tuned on different hardware (its keys carry another machine
+    // tag) must not serve: every lookup misses, the router re-tunes for
+    // THIS machine and names the staleness as the reason.
+    let dir = tmpdir("staletag");
+    write_file(&dir, "manifest.json", DECODE_MANIFEST);
+    let mut other = MachineConfig::ascend910();
+    other.ai_cores = 8; // different tag prefix: aic8_...
+    warm_cache_for(&dir, other);
+
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(router.has_tune_cache(), "the file itself is readable");
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.reason, RouteReason::StaleMachineTag);
+    assert_eq!(routed.outcome.rung, RouteRung::Retuned);
+    assert!(routed.plan.unwrap().fully_resolved());
+
+    let server = serve_two(&rt, &dir);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.route_reasons.get("stale_machine_tag"), Some(&1));
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tune_cache_deleted_mid_serve_degrades_on_the_next_router() {
+    // Acceptance: deleting the cache file between serves routes the next
+    // router down the ladder (counted fallback) instead of erroring.
+    let dir = tmpdir("delcache");
+    write_file(&dir, "manifest.json", DECODE_MANIFEST);
+    warm_cache_for(&dir, MachineConfig::ascend910());
+    let rt = Runtime::cpu().unwrap();
+    {
+        let mf = Manifest::load(&dir).unwrap();
+        let mut router = Router::new(&rt, mf, "tiny").unwrap();
+        let routed = router.route(4);
+        assert!(
+            matches!(routed.outcome.rung, RouteRung::Full | RouteRung::TunedOnly),
+            "warm cache must serve tuned: {:?}",
+            routed.outcome
+        );
+    }
+    std::fs::remove_file(dir.join("tune_cache.json")).unwrap();
+    let server = serve_two(&rt, &dir);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.route_reasons.get("no_cache_file"), Some(&1));
+    assert_eq!(snap.route_rungs.get("retuned"), Some(&1));
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -6,7 +6,7 @@
 
 use ascend_w4a16::analysis::layer;
 use ascend_w4a16::ascend::MachineConfig;
-use ascend_w4a16::coordinator::{Metrics, Router, Server};
+use ascend_w4a16::coordinator::{Metrics, RouteReason, RouteRung, Router, Server};
 use ascend_w4a16::kernels::Strategy;
 use ascend_w4a16::model::llm::paper_layer_geometries;
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
@@ -338,24 +338,69 @@ fn layer_plan_resolves_coschedule_gain_cache_only() {
 }
 
 #[test]
-fn cold_cache_serves_untuned_but_still_covers_all_kinds() {
+fn cold_cache_retunes_inline_and_still_covers_all_kinds() {
+    // DESIGN.md §14 ladder: a missing cache file no longer serves untuned
+    // nodes — the router re-tunes inline under its budget (rung 3), so
+    // the plan fully resolves and the outcome names the ladder rung.
     let dir = synthetic_artifacts("cold", false, false);
     let rt = Runtime::cpu().unwrap();
     let mf = Manifest::load(&dir).unwrap();
     let mut router = Router::new(&rt, mf, "tiny").unwrap();
     assert!(!router.has_tune_cache());
-    // No cache file: the plan still enumerates the layer's nodes (so
-    // metrics stay kind-accurate) but every node serves untuned.
-    let plan = router.layer_plan(4).expect("decode config present");
-    assert!(!plan.fully_resolved());
-    assert!(plan.nodes.iter().all(|n| n.plan.is_none()));
-    assert!(router.tuned_plan(4).is_none());
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.rung, RouteRung::Retuned);
+    assert_eq!(routed.outcome.reason, RouteReason::NoCacheFile);
+    assert!(routed.outcome.retuned_nodes > 0);
+    assert_eq!(routed.outcome.defaulted_nodes, 0);
+    let plan = routed.plan.expect("decode config present");
+    assert!(plan.fully_resolved(), "inline re-tunes must resolve every node: {plan:?}");
+    assert!(router.tuned_plan(4).is_some());
 
     let metrics = Metrics::new();
     Server::record_group_schedules(&metrics, Some(&plan));
     let snap = metrics.snapshot();
     for kind in GemmKind::all() {
-        assert_eq!(snap.gemm_schedules[kind.name()]["untuned"].groups, 1);
+        let counts = &snap.gemm_schedules[kind.name()];
+        assert_eq!(counts.values().map(|st| st.groups).sum::<u64>(), 1);
+        assert!(!counts.contains_key("untuned"), "{}: {counts:?}", kind.name());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exhausted_retune_budget_falls_to_priced_splitk_default() {
+    // Rung 4 of the ladder: with the inline re-tune budget forced to 0
+    // every miss serves the safe splitk default — still priced by the
+    // simulator, and never faster than a tuned winner for the same shape.
+    let dir = synthetic_artifacts("cold-b0", false, false);
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    router.set_retune_budget(0);
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.rung, RouteRung::DefaultSplitk);
+    assert_eq!(routed.outcome.reason, RouteReason::NoCacheFile);
+    assert_eq!(routed.outcome.retuned_nodes, 0);
+    assert!(routed.outcome.defaulted_nodes > 0);
+    let default_plan = routed.plan.expect("decode config present");
+    assert!(default_plan.fully_resolved(), "splitk default must price every node");
+    for node in &default_plan.nodes {
+        assert_eq!(node.plan.unwrap().strategy, Strategy::SplitK);
+    }
+
+    // Never-worse ladder: the retuned plan (budget restored) serves each
+    // node at most as slow as the splitk default rung below it.
+    let mut tuned_router =
+        Router::new(&rt, Manifest::load(&dir).unwrap(), "tiny").unwrap();
+    let tuned_plan = tuned_router.route(4).plan.unwrap();
+    for (tuned, dflt) in tuned_plan.nodes.iter().zip(&default_plan.nodes) {
+        assert!(
+            tuned.plan.unwrap().predicted_ns <= dflt.plan.unwrap().predicted_ns * 1.000001,
+            "{:?}: retuned {} slower than splitk default {}",
+            tuned.kind,
+            tuned.plan.unwrap().predicted_ns,
+            dflt.plan.unwrap().predicted_ns
+        );
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -369,13 +414,18 @@ fn cold_cache_moe_metrics_name_the_expert_nodes() {
     let mf = Manifest::load(&dir).unwrap();
     let mut router = Router::new(&rt, mf, "tiny").unwrap();
     let plan = router.layer_plan(4).expect("decode config present");
-    assert!(!plan.fully_resolved());
+    assert!(plan.fully_resolved(), "the ladder resolves MoE nodes too");
 
     let metrics = Metrics::new();
     Server::record_group_schedules(&metrics, Some(&plan));
     let snap = metrics.snapshot();
-    assert_eq!(snap.gemm_schedules["moe_expert"]["untuned"].groups, 2);
-    assert_eq!(snap.gemm_schedules["moe_expert"]["untuned"].gemms, 8);
+    let moe_stats = &snap.gemm_schedules["moe_expert"];
+    assert_eq!(moe_stats.values().map(|st| st.groups).sum::<u64>(), 2);
+    assert_eq!(
+        moe_stats.values().map(|st| st.gemms).sum::<u64>(),
+        8,
+        "per-kind expert counts: 2 nodes x 4 active experts"
+    );
     assert!(
         !snap.gemm_schedules.contains_key("up_gate")
             && !snap.gemm_schedules.contains_key("down"),

@@ -25,10 +25,10 @@ fn batcher_never_loses_or_duplicates_requests() {
         let mut b = Batcher::new(BatchPolicy::new(sizes).unwrap());
         let n = rng.usize_range(1, 40);
         for id in 0..n as u64 {
-            b.push(DecodeRequest::new(id, vec![1, 2], 4));
+            b.push(DecodeRequest::new(id, vec![1, 2], 4), 0);
         }
         let mut seen = std::collections::BTreeSet::new();
-        while let Some(g) = b.form_group(true) {
+        while let Some(g) = b.form_group(true, 0) {
             if g.occupancy() == 0 || g.occupancy() > g.batch {
                 return (false, format!("bad group occupancy {}", g.occupancy()));
             }
@@ -49,9 +49,9 @@ fn batcher_groups_fit_available_sizes() {
         let mut b = Batcher::new(BatchPolicy::new(sizes.clone()).unwrap());
         let n = rng.usize_range(1, 30);
         for id in 0..n as u64 {
-            b.push(DecodeRequest::new(id, vec![1], 2));
+            b.push(DecodeRequest::new(id, vec![1], 2), 0);
         }
-        while let Some(g) = b.form_group(true) {
+        while let Some(g) = b.form_group(true, 0) {
             if !sizes.contains(&g.batch) {
                 return (false, format!("illegal batch {}", g.batch));
             }
