@@ -155,9 +155,81 @@ def bench_layer():
     return {"bench": "e2e_layer", "kv_len": 2048, "cells": cells}
 
 
+SERVE_MODELS = [
+    ("llama32", {"hidden": 2048, "layers": 16, "heads": 16, "ffn": 8192,
+                 "max_seq": 256, "group": 128, "moe": None}),
+    ("deepseek-moe", {"hidden": 7168, "layers": 4, "heads": 56, "ffn": 2048,
+                      "max_seq": 256, "group": 128, "moe": (256, 8, 2048)}),
+]
+SERVE_BATCH = 8
+SERVE_CHUNK = 32
+SERVE_QUEUE_CAP = 12
+SERVE_REQUESTS = 48
+SERVE_SEED = 11
+SERVE_GAPS = [20_000.0, 2_000.0, 200.0, 20.0]
+
+
+def bench_serve():
+    """Replay of benches/e2e_serve.rs: warm the tune caches in the bench's
+    exact seeding order (m = 1..=chunk then the decode batch — padded-M
+    aliasing means the first m of each class prices the entry), then run
+    the serve event loop per (model, mean-gap) cell."""
+    cells = []
+    for model, cfg in SERVE_MODELS:
+        planner = M.ServePlanner()
+        for m in list(range(1, SERVE_CHUNK + 1)) + [SERVE_BATCH]:
+            planner.warm(M.decode_gemm_nodes(m, cfg["hidden"], cfg["ffn"],
+                                             cfg["group"], cfg["moe"]))
+        for gap in SERVE_GAPS:
+            arrivals = M.poisson_plan(SERVE_SEED, gap, SERVE_REQUESTS,
+                                      cfg["max_seq"])
+            offered = sum(a[2] for a in arrivals)
+            plan_horizon = arrivals[-1][0] if arrivals else 0
+            rep = M.serve_load(cfg, planner, arrivals, SERVE_BATCH,
+                               SERVE_CHUNK, SERVE_QUEUE_CAP)
+            assert rep["admitted"] == rep["completed"] + rep["shed"]
+            ttft = sorted(rep["ttft_us"])
+            gaps = sorted(rep["gap_us"])
+            horizon = rep["horizon_us"]
+            goodput = (rep["tokens_generated"] / (horizon / 1e6)
+                       if horizon > 0 else 0.0)
+            cells.append({
+                "model": model,
+                "moe": cfg["moe"] is not None,
+                "mean_gap_us": gap,
+                "offered_tokens": offered,
+                "offered_tok_per_s": offered / (max(plan_horizon, 1) / 1e6),
+                "goodput_tok_per_s": goodput,
+                "horizon_us": horizon,
+                "admitted": rep["admitted"],
+                "completed": rep["completed"],
+                "shed": rep["shed"],
+                "shed_queue_full": rep["shed_queue_full"],
+                "shed_kv_capacity": rep["shed_kv_capacity"],
+                "expired": 0,
+                "failed": 0,
+                "tokens_generated": rep["tokens_generated"],
+                "ttft_p50_us": M.percentile(ttft, 0.50),
+                "ttft_p99_us": M.percentile(ttft, 0.99),
+                "tok_gap_p50_us": M.percentile(gaps, 0.50),
+                "tok_gap_p99_us": M.percentile(gaps, 0.99),
+                "prefill_steps": rep["prefill_steps"],
+                "prefill_tokens": rep["prefill_tokens"],
+                "decode_steps": rep["decode_steps"],
+                "repins": rep["repins"],
+                "repin_us_sum": rep["repin_ns_sum"] / 1e3,
+                "kv_peak_pages": rep["kv_peak_pages"],
+                "kv_capacity_pages": rep["kv_capacity_pages"],
+            })
+    return {"bench": "e2e_serve", "batch": SERVE_BATCH, "chunk": SERVE_CHUNK,
+            "queue_cap": SERVE_QUEUE_CAP, "requests": SERVE_REQUESTS,
+            "seed": SERVE_SEED, "cells": cells}
+
+
 def main():
     for name, doc in [("BENCH_chunked.json", bench_chunked()),
-                      ("BENCH_layer.json", bench_layer())]:
+                      ("BENCH_layer.json", bench_layer()),
+                      ("BENCH_serve.json", bench_serve())]:
         path = os.path.join(HERE, name)
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -1439,3 +1439,416 @@ def simulate_step_with(batch, kv_len, heads, hidden, ffn, kv, group, moe,
     rep["served_ns"] = min(base, residency["resident_ns"]) if residency else base
     rep["mode_base_ns"] = base
     return rep
+
+
+# --- coordinator/server.rs: continuous-batching serve mirror ---------------
+#
+# Mirror of `Server::serve_load` for the e2e_serve bench: fault-free,
+# deadline-free runs over a warmed tune cache.  Token *values* never
+# influence scheduling (the done condition depends only on counts and
+# positions), so the decode engine itself is not mirrored — only the
+# seeded arrival plan, the KV pager, the warmed-cache router pricing and
+# the integer-microsecond event loop.
+
+MASK64 = (1 << 64) - 1
+
+
+def _rotl64(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """xoshiro256** seeded via splitmix64 (util/prng.rs)."""
+
+    def __init__(self, seed):
+        sm = seed & MASK64
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl64((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl64(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / float(1 << 53))
+
+    def usize_range(self, lo, hi):
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def exponential(self, rate):
+        return -math.log(max(self.f64(), 1e-300)) / rate
+
+
+def poisson_plan(seed, mean_gap_us, count, max_seq):
+    """Mirror of ArrivalPlan::poisson: list of (at_us, prompt_len,
+    max_new_tokens), drawn in the exact Rust order."""
+    rng = Rng(seed)
+    rate = 1.0 / max(mean_gap_us, 1.0)
+    at_us = 0
+    arrivals = []
+    for _ in range(count):
+        at_us += max(int(math.ceil(rng.exponential(rate))), 1)
+        prompt_len = rng.usize_range(2, max(max_seq // 4, 2))
+        budget_cap = max(max_seq - prompt_len - 1, 1)
+        max_new = rng.usize_range(min(4, budget_cap), min(max_seq // 2, budget_cap))
+        arrivals.append((at_us, prompt_len, max_new))
+    return arrivals
+
+
+# --- model/kv_cache.rs -----------------------------------------------------
+
+DEFAULT_PAGE_BYTES = 2 << 20
+HBM_CAPACITY_BYTES = 32 << 30  # MachineConfig::ascend910
+
+
+def kv_bytes_per_token(layers, kv_width):
+    return layers * 2 * kv_width * 2
+
+
+class KvPager:
+    """Mirror of model::kv_cache::KvPager: fixed-size pages, conservative
+    worst-case reservation at admission, growth per decoded token."""
+
+    def __init__(self, page_bytes, capacity_bytes):
+        self.page_bytes = max(page_bytes, 1)
+        self.capacity_pages = capacity_bytes // self.page_bytes
+        self.allocated = 0
+        self.reserved = 0
+        self.peak = 0
+        self.seqs = {}  # id -> [bytes_per_token, worst, pages, tokens]
+
+    def pages_for(self, tokens, bytes_per_token):
+        return -(-(tokens * bytes_per_token) // self.page_bytes)
+
+    def try_admit(self, sid, prompt_tokens, max_new, bytes_per_token):
+        worst = self.pages_for(prompt_tokens + max_new, bytes_per_token)
+        if self.reserved + worst > self.capacity_pages:
+            return False
+        pages = self.pages_for(prompt_tokens, bytes_per_token)
+        self.reserved += worst
+        self.allocated += pages
+        self.peak = max(self.peak, self.allocated)
+        self.seqs[sid] = [bytes_per_token, worst, pages, prompt_tokens]
+        return True
+
+    def grow(self, sid):
+        s = self.seqs[sid]
+        s[3] += 1
+        need = self.pages_for(s[3], s[0])
+        if need > s[2]:
+            self.allocated += need - s[2]
+            s[2] = need
+            self.peak = max(self.peak, self.allocated)
+
+    def release(self, sid):
+        s = self.seqs.pop(sid)
+        self.reserved -= s[1]
+        self.allocated -= s[2]
+        return s[2]
+
+    def idle(self):
+        return not self.seqs and self.allocated == 0 and self.reserved == 0
+
+
+# --- workload/prefill.rs ---------------------------------------------------
+
+def prefill_nodes(m, kv_base, heads, hidden, ffn, kv, group, moe=None):
+    """Mirror of PrefillStep::nodes: the decode graph with the attention
+    passes sized by the exact causal context
+    ctx = m*kv_base + m*(m+1)/2 and scores = heads*ctx."""
+    h = hidden
+    heads = max(heads, 1)
+    head_dim = float(hidden) / float(heads)
+    ctx = m * kv_base + m * (m + 1) // 2
+    scores = heads * ctx
+    norm = ("vector", "rmsnorm", m * h, 6.0, 0, 2 * m * h * 2)
+    residual = ("vector", "residual", m * h, 1.0, 0, 3 * m * h * 2)
+    nodes = [
+        norm,
+        ("gemm", "qkv", (m, h + 2 * kv, h, group), 1),
+        ("vector", "attn_score", scores, 2.0 * head_dim,
+         ctx * kv * 2, m * h * 2 + scores * 2),
+        ("vector", "attn_softmax", scores, 8.0, 0, 2 * scores * 2),
+        ("vector", "attn_av", scores, 2.0 * head_dim,
+         ctx * kv * 2, scores * 2 + m * h * 2),
+        ("gemm", "attn_out", (m, h, h, group), 1),
+        residual,
+        norm,
+    ]
+    if moe is None:
+        nodes += [
+            ("gemm", "up_gate", (m, 2 * ffn, h, group), 1),
+            ("vector", "activation", m * ffn, 4.0, 0, 3 * m * ffn * 2),
+            ("gemm", "down", (m, h, ffn, group), 1),
+        ]
+    else:
+        experts, topk, ef = moe
+        topk = max(topk, 1)
+        active = moe_active(experts, topk, m)
+        tokens = moe_tokens(experts, topk, m)
+        routed = active * tokens
+        nodes += [
+            ("vector", "moe_route", m * experts, 2.0 * float(h) + 8.0,
+             h * experts * 2, m * h * 2 + m * experts * 2),
+            ("gemm", "moe_expert", (tokens, 2 * ef, h, group), active),
+            ("vector", "activation", routed * ef, 4.0, 0, 3 * routed * ef * 2),
+            ("gemm", "moe_expert", (tokens, h, ef, group), active),
+        ]
+    nodes.append(residual)
+    return nodes
+
+
+def prefill_vector_ns(m, kv_base, heads, hidden, ffn, kv, group, moe=None):
+    """Mirror of coordinator::server::prefill_vector_ns."""
+    total = 0.0
+    for spec in prefill_nodes(m, kv_base, heads, hidden, ffn, kv, group, moe):
+        if spec[0] == "vector":
+            _, _, elems, ops, hbm, l2b = spec
+            total += price_pass(elems, ops, hbm, l2b)
+    return total
+
+
+# --- coordinator/router.rs: warmed-cache pricing ---------------------------
+
+def decode_gemm_nodes(m, hidden, ffn, group, moe=None):
+    """Mirror of DecodeLayer::from_decode_config(cfg, m).gemm_nodes():
+    the decode geometry sets kv = hidden; MoE (experts, topk, expert_ffn
+    = cfg.ffn) replaces the dense FFN pair with the routed expert pair.
+    Entries are (kind, problem, count)."""
+    h = hidden
+    kv = hidden
+    nodes = [("qkv", (m, h + 2 * kv, h, group), 1),
+             ("attn_out", (m, h, h, group), 1)]
+    if moe is None:
+        nodes += [("up_gate", (m, 2 * ffn, h, group), 1),
+                  ("down", (m, h, ffn, group), 1)]
+    else:
+        experts, topk, ef = moe
+        topk = max(topk, 1)
+        active = moe_active(experts, topk, m)
+        tokens = moe_tokens(experts, topk, m)
+        nodes += [("moe_expert", (tokens, 2 * ef, h, group), active),
+                  ("moe_expert", (tokens, h, ef, group), active)]
+    return nodes
+
+
+def overlap_pair_list(gemms):
+    """Mirror of DecodeLayer::overlap_pairs over a gemm-node list: the
+    internal (self) pairs of multi-count nodes in node order, then the
+    adjacent windows.  Entries are (producer, consumer, pairs)."""
+    pairs = [(p, p, count - 1) for _, p, count in gemms if count > 1]
+    pairs += [(a[1], b[1], 1) for a, b in zip(gemms, gemms[1:])]
+    return pairs
+
+
+class ServePlanner:
+    """Mirror of the Router's warmed-cache pricing (LayerPlan at the
+    `full` rung): layer ns from cached tuned totals, overlap gains from
+    the pair cache, residency gain / pinned bytes from the layer-keyed
+    residency cache (tune/mod.rs + tune/cache.rs).
+
+    Cache keys alias by *padded* M (tune/cache.rs), and the layer key
+    carries per-node counts — so warming order matters: the first
+    problem of each padded class prices the entry.  `warm` must replay
+    the bench's exact seeding order (m in 1..=chunk, then the batch)."""
+
+    def __init__(self):
+        self.tuner = Tuner()
+        self.pair_cache = {}
+        self.residency_cache = {}
+
+    def _trace(self, p):
+        s, t, _ = self.tuner.resolve(p)
+        return schedule_with_reduce(p, s, t, "auto")
+
+    def pair_gain(self, pp, cp):
+        key = (self.tuner.key(pp), self.tuner.key(cp))
+        if key not in self.pair_cache:
+            _, _, pns = self.tuner.resolve(pp)
+            _, _, cns = self.tuner.resolve(cp)
+            d = pair_decision_with(self._trace(pp), self._trace(cp), pns + cns)
+            self.pair_cache[key] = d[2] if d is not None else 0.0
+        return self.pair_cache[key]
+
+    def residency(self, gemms):
+        key = tuple((kind, count) + self.tuner.key(p) for kind, p, count in gemms)
+        if key not in self.residency_cache:
+            inputs = []
+            for _, p, count in gemms:
+                _, _, unit_ns = self.tuner.resolve(p)
+                inputs.append({"problem": p, "count": max(count, 1),
+                               "unit_ns": unit_ns, "trace": self._trace(p)})
+            plan = plan_nodes(inputs, 0.0, True)
+            self.residency_cache[key] = (plan["gain_ns"], plan["pinned_bytes"])
+        return self.residency_cache[key]
+
+    def warm(self, gemms):
+        """Mirror of the bench's tune-cache seeding for one layer graph."""
+        for _, p, _ in gemms:
+            self.tuner.resolve(p)
+        for pp, cp, _ in overlap_pair_list(gemms):
+            self.pair_gain(pp, cp)
+        self.residency(gemms)
+
+    def layer_plan(self, gemms):
+        """(predicted_served_ns, residency_pinned_bytes) for a warmed
+        cache: max(max(layer - overlap, 0) - residency_gain, 0)."""
+        layer_ns = 0.0
+        for _, p, count in gemms:
+            _, _, unit_ns = self.tuner.resolve(p)
+            layer_ns += unit_ns * float(count)
+        overlap = sum(float(pairs) * self.pair_gain(pp, cp)
+                      for pp, cp, pairs in overlap_pair_list(gemms))
+        gain, pinned = self.residency(gemms)
+        served = max(max(layer_ns - overlap, 0.0) - gain, 0.0)
+        return served, pinned
+
+
+# --- util/stats.rs ---------------------------------------------------------
+
+def percentile(sorted_xs, q):
+    """Mirror of util::stats::percentile (linear interpolation)."""
+    n = len(sorted_xs)
+    if n == 0:
+        return 0.0
+    if n == 1:
+        return sorted_xs[0]
+    pos = min(max(q, 0.0), 1.0) * float(n - 1)
+    lo = int(math.floor(pos))
+    hi = int(math.ceil(pos))
+    frac = pos - float(lo)
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+# --- coordinator/server.rs: the serve event loop ---------------------------
+
+def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
+    """Mirror of Server::serve_load on a warmed cache with no fault plan
+    and no deadlines: one dict of the counters the e2e_serve bench
+    reports.  cfg keys: hidden, layers, heads, ffn, max_seq, group, moe
+    (None or (experts, topk, expert_ffn))."""
+    hidden, layers = cfg["hidden"], cfg["layers"]
+    heads = max(cfg["heads"], 1)
+    ffn, max_seq, group = cfg["ffn"], cfg["max_seq"], cfg["group"]
+    moe = cfg.get("moe")
+    chunk = max(chunk, 1)
+    queue_cap = max(queue_cap, 1)
+    bpt = kv_bytes_per_token(max(layers, 1), max(hidden, 1))
+    pager = KvPager(DEFAULT_PAGE_BYTES, HBM_CAPACITY_BYTES)
+    served_ns, pinned = planner.layer_plan(
+        decode_gemm_nodes(max(batch, 1), hidden, ffn, group, moe))
+    decode_step_us = max(int(math.ceil(served_ns / 1000.0)), 1)
+    repin_tick_ns = float(pinned) / HBM_BW if pinned > 0 else 0.0
+
+    slots = [None] * max(batch, 1)
+    queue = []
+    clock = 0
+    next_arrival = 0
+    met = {"admitted": 0, "completed": 0, "shed": 0,
+           "shed_queue_full": 0, "shed_kv_capacity": 0,
+           "tokens_generated": 0, "ttft_us": [], "gap_us": [],
+           "prefill_steps": 0, "prefill_tokens": 0, "decode_steps": 0,
+           "repins": 0, "repin_ns_sum": 0.0}
+    last_was_prefill = False
+    needs_repin = False
+
+    def remaining(s):
+        return s["prompt_len"] - 1 - s["prefilled"]
+
+    while True:
+        # Admit every arrival at or before the clock (record_admitted,
+        # queue-cap shed, conservative KV reservation, FIFO enqueue).
+        while next_arrival < len(arrivals) and arrivals[next_arrival][0] <= clock:
+            at_us, prompt_len, max_new = arrivals[next_arrival]
+            rid = next_arrival
+            next_arrival += 1
+            met["admitted"] += 1
+            if len(queue) >= queue_cap:
+                met["shed"] += 1
+                met["shed_queue_full"] += 1
+                continue
+            if not pager.try_admit(rid, prompt_len, max_new, bpt):
+                met["shed"] += 1
+                met["shed_kv_capacity"] += 1
+                continue
+            queue.append({"id": rid, "prompt_len": prompt_len,
+                          "max_new": max_new, "enqueued": at_us,
+                          "prefilled": 0, "position": 0, "generated": 0})
+        # (Deadline expiry paths are no-ops: the bench sets no deadline.)
+        # Refill free slots FIFO.
+        for i in range(len(slots)):
+            if slots[i] is None and queue:
+                slots[i] = queue.pop(0)
+        if all(s is None for s in slots):
+            if next_arrival < len(arrivals):
+                clock = max(clock, arrivals[next_arrival][0])
+                continue
+            break
+        # One tick: prefill and decode strictly alternate while both wait.
+        has_prefill = any(s is not None and remaining(s) > 0 for s in slots)
+        has_decode = any(s is not None and remaining(s) == 0 for s in slots)
+        if has_prefill and (not has_decode or not last_was_prefill):
+            i = next(i for i, s in enumerate(slots)
+                     if s is not None and remaining(s) > 0)
+            s = slots[i]
+            m = min(remaining(s), chunk)
+            gemm_ns, _ = planner.layer_plan(
+                decode_gemm_nodes(m, hidden, ffn, group, moe))
+            vec_ns = prefill_vector_ns(m, s["position"], heads, hidden,
+                                       ffn, hidden, group, moe)
+            clock += max(int(math.ceil((gemm_ns + vec_ns) / 1000.0)), 1)
+            s["prefilled"] += m
+            s["position"] += m
+            met["prefill_steps"] += 1
+            met["prefill_tokens"] += m
+            needs_repin = True
+            last_was_prefill = True
+        else:
+            active = [i for i, s in enumerate(slots)
+                      if s is not None and remaining(s) == 0]
+            tick_start = clock
+            tick_us = decode_step_us
+            if needs_repin:
+                if repin_tick_ns > 0.0:
+                    met["repins"] += 1
+                    met["repin_ns_sum"] += repin_tick_ns
+                    tick_us += max(int(math.ceil(repin_tick_ns / 1000.0)), 1)
+                needs_repin = False
+            clock += tick_us
+            met["decode_steps"] += 1
+            emitted = 0
+            for i in active:
+                s = slots[i]
+                s["position"] += 1
+                pager.grow(s["id"])
+                emitted += 1
+                if s["generated"] == 0:
+                    met["ttft_us"].append(float(clock - s["enqueued"]))
+                s["generated"] += 1
+                if s["generated"] >= s["max_new"] or s["position"] + 1 >= max_seq:
+                    pager.release(s["id"])
+                    met["completed"] += 1
+                    met["tokens_generated"] += s["generated"]
+                    slots[i] = None
+            met["gap_us"].extend([float(clock - tick_start)] * emitted)
+            last_was_prefill = False
+
+    assert pager.idle(), "kv pager must drain"
+    met["horizon_us"] = clock
+    met["kv_peak_pages"] = pager.peak
+    met["kv_capacity_pages"] = pager.capacity_pages
+    return met

@@ -1,0 +1,240 @@
+//! Continuous-batching serve bench (DESIGN.md §15): offered-load sweeps
+//! over two paper models — the dense llama32 trunk and the deepseek-moe
+//! decoding scenario — on the virtual clock, with chunked prefill
+//! interleaved against in-flight decode, KV-cache paging and the warmed
+//! tune cache pricing every tick.
+//!
+//! Each cell submits a seeded Poisson arrival plan at one mean gap and
+//! reports the SLO surface: TTFT and per-token-gap p50/p99 (virtual µs),
+//! goodput (completed-output tokens per virtual second) against the
+//! offered rate, the typed shed breakdown, and the KV-pager high-water
+//! mark.  At overload the goodput must plateau while `queue_full` sheds
+//! grow — the admission-control acceptance of the serve loop.
+//!
+//! Everything is deterministic (seeded arrivals, warmed cache, no fault
+//! plan), so `target/BENCH_serve.json` is bit-reproducible and gated
+//! against the mirror-generated `benches/baselines/BENCH_serve.json`.
+//!
+//! Run with `cargo bench --bench e2e_serve`.
+
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::bench::section;
+use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, ServeOptions, Server};
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::json::Json;
+use ascend_w4a16::workload::{ArrivalPlan, DecodeLayer};
+
+/// Engine batch size (slot count) — one compiled decode artifact.
+const BATCH: usize = 8;
+/// Prompt tokens one prefill tick ingests.
+const CHUNK: usize = 32;
+/// Admission-queue bound: small enough that overload sheds visibly.
+const QUEUE_CAP: usize = 12;
+/// Requests per cell.
+const REQUESTS: usize = 48;
+/// Arrival-plan seed (shared across cells; the gap scales the load).
+const SEED: u64 = 11;
+/// Mean arrival gaps (µs), spanning under- to over-capacity.
+const MEAN_GAP_US: [f64; 4] = [20_000.0, 2_000.0, 200.0, 20.0];
+
+struct ModelSpec {
+    name: &'static str,
+    cfg: DecodeConfig,
+}
+
+/// The two serve models: the dense llama32 trunk geometry and the
+/// deepseek-moe expert geometry (256 routed experts, top-8), both at a
+/// bench-sized `max_seq` so prompts span several prefill chunks.
+fn models() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "llama32",
+            cfg: DecodeConfig {
+                vocab: 4096,
+                hidden: 2048,
+                layers: 16,
+                heads: 16,
+                ffn: 8192,
+                max_seq: 256,
+                group: 128,
+                params: 0,
+                moe_experts: 0,
+                moe_topk: 0,
+            },
+        },
+        ModelSpec {
+            name: "deepseek-moe",
+            cfg: DecodeConfig {
+                vocab: 4096,
+                hidden: 7168,
+                layers: 4,
+                heads: 56,
+                ffn: 2048,
+                max_seq: 256,
+                group: 128,
+                params: 0,
+                moe_experts: 256,
+                moe_topk: 8,
+            },
+        },
+    ]
+}
+
+/// Config-only decode manifest for one model at the bench batch size —
+/// the router builds a synthetic engine, so no artifacts are needed.
+fn manifest_json(spec: &ModelSpec) -> String {
+    let c = &spec.cfg;
+    format!(
+        r#"{{
+  "group": {group},
+  "batch_sizes": [{batch}],
+  "paper_shapes": [],
+  "artifacts": [
+    {{
+      "name": "decode_{name}_b{batch}",
+      "kind": "decode",
+      "path": "decode_{name}_b{batch}.hlo.txt",
+      "model": "{name}",
+      "batch": {batch},
+      "config": {{"vocab": {vocab}, "hidden": {hidden}, "layers": {layers},
+                 "heads": {heads}, "ffn": {ffn}, "max_seq": {max_seq},
+                 "group": {group}, "params": 0,
+                 "moe_experts": {experts}, "moe_topk": {topk}}},
+      "inputs": [],
+      "outputs": []
+    }}
+  ]
+}}"#,
+        name = spec.name,
+        batch = BATCH,
+        vocab = c.vocab,
+        hidden = c.hidden,
+        layers = c.layers,
+        heads = c.heads,
+        ffn = c.ffn,
+        max_seq = c.max_seq,
+        group = c.group,
+        experts = c.moe_experts,
+        topk = c.moe_topk,
+    )
+}
+
+/// Write the manifest plus a tune cache warmed for the decode batch and
+/// every prefill chunk size the serve loop can route (1..=CHUNK; padded-M
+/// aliasing dedups the searches), so every tick prices cache-only at the
+/// `full` rung — exactly what the python mirror replays.
+fn serve_dir(machine: &MachineConfig, spec: &ModelSpec) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("w4a16-serve-bench-{}-{}", spec.name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json(spec)).unwrap();
+    let mut tuner = Tuner::new(machine.clone());
+    let mut ms: Vec<usize> = (1..=CHUNK).collect();
+    ms.push(BATCH);
+    for m in ms {
+        let layer = DecodeLayer::from_decode_config(&spec.cfg, m);
+        for node in layer.gemm_nodes() {
+            tuner.resolve(&node.problem).unwrap();
+        }
+        for pair in layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
+        }
+        tuner.resolve_residency(&layer).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    dir
+}
+
+fn bench_model(rt: &Runtime, machine: &MachineConfig, spec: &ModelSpec, cells: &mut Vec<Json>) {
+    section(&format!(
+        "serve load — {}{} (b={BATCH}, chunk={CHUNK}, queue_cap={QUEUE_CAP}, \
+         {REQUESTS} requests/cell)",
+        spec.name,
+        if spec.cfg.moe_experts > 0 { " [MoE]" } else { "" },
+    ));
+    let dir = serve_dir(machine, spec);
+    for mean_gap_us in MEAN_GAP_US {
+        let plan = ArrivalPlan::poisson(SEED, mean_gap_us, REQUESTS, spec.cfg.max_seq);
+        let offered_tok_per_s =
+            plan.offered_tokens() as f64 / (plan.horizon_us().max(1) as f64 / 1e6);
+        let mf = Manifest::load(&dir).unwrap();
+        let router = Router::new(rt, mf, spec.name).unwrap();
+        let policy = BatchPolicy::new(router.batch_sizes()).unwrap();
+        let mut server = Server::new(router, Batcher::new(policy));
+        let opts = ServeOptions::new(BATCH, CHUNK).with_queue_cap(QUEUE_CAP);
+        let report = server.serve_load(&plan, &opts).expect("serve_load");
+        assert!(report.kv_idle, "kv pager must drain");
+        let snap = server.metrics.snapshot();
+        assert!(snap.outcomes_accounted(), "conservation violated: {snap:?}");
+        assert!(snap.sheds_accounted(), "typed sheds must close: {snap:?}");
+        let goodput = snap.goodput_tokens_per_s(report.horizon_us);
+        let shed_queue_full = snap.shed_reasons.get("queue_full").copied().unwrap_or(0);
+        let shed_kv = snap.shed_reasons.get("kv_capacity").copied().unwrap_or(0);
+        println!(
+            "gap={mean_gap_us:>8.0} us  offered {offered_tok_per_s:>9.0} tok/s  \
+             goodput {goodput:>9.0} tok/s  ttft p50 {:>8.0} p99 {:>8.0} us  \
+             gap p50 {:>6.0} p99 {:>6.0} us  done {}  shed {}  kv peak {} pg",
+            snap.serve_ttft_us.p50,
+            snap.serve_ttft_us.p99,
+            snap.serve_token_gap_us.p50,
+            snap.serve_token_gap_us.p99,
+            snap.requests_completed,
+            snap.requests_shed,
+            report.kv_peak_pages,
+        );
+        cells.push(Json::obj(vec![
+            ("model", Json::str(spec.name)),
+            ("moe", Json::Bool(spec.cfg.moe_experts > 0)),
+            ("mean_gap_us", Json::num(mean_gap_us)),
+            ("offered_tokens", Json::num(plan.offered_tokens() as f64)),
+            ("offered_tok_per_s", Json::num(offered_tok_per_s)),
+            ("goodput_tok_per_s", Json::num(goodput)),
+            ("horizon_us", Json::num(report.horizon_us as f64)),
+            ("admitted", Json::num(snap.requests_admitted as f64)),
+            ("completed", Json::num(snap.requests_completed as f64)),
+            ("shed", Json::num(snap.requests_shed as f64)),
+            ("shed_queue_full", Json::num(shed_queue_full as f64)),
+            ("shed_kv_capacity", Json::num(shed_kv as f64)),
+            ("expired", Json::num(snap.requests_expired as f64)),
+            ("failed", Json::num(snap.requests_failed as f64)),
+            ("tokens_generated", Json::num(snap.tokens_generated as f64)),
+            ("ttft_p50_us", Json::num(snap.serve_ttft_us.p50)),
+            ("ttft_p99_us", Json::num(snap.serve_ttft_us.p99)),
+            ("tok_gap_p50_us", Json::num(snap.serve_token_gap_us.p50)),
+            ("tok_gap_p99_us", Json::num(snap.serve_token_gap_us.p99)),
+            ("prefill_steps", Json::num(snap.prefill_steps as f64)),
+            ("prefill_tokens", Json::num(snap.prefill_tokens as f64)),
+            ("decode_steps", Json::num(snap.decode_steps as f64)),
+            ("repins", Json::num(snap.repins as f64)),
+            ("repin_us_sum", Json::num(snap.repin_ns_sum / 1e3)),
+            ("kv_peak_pages", Json::num(report.kv_peak_pages as f64)),
+            ("kv_capacity_pages", Json::num(report.kv_capacity_pages as f64)),
+        ]));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn main() {
+    let machine = MachineConfig::ascend910();
+    let rt = Runtime::cpu().expect("cpu runtime");
+    let mut cells = Vec::new();
+    for spec in models() {
+        bench_model(&rt, &machine, &spec, &mut cells);
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("e2e_serve")),
+        ("batch", Json::num(BATCH as f64)),
+        ("chunk", Json::num(CHUNK as f64)),
+        ("queue_cap", Json::num(QUEUE_CAP as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("seed", Json::num(SEED as f64)),
+        ("cells", Json::arr(cells)),
+    ]);
+    std::fs::create_dir_all("target").expect("target dir");
+    let out = "target/BENCH_serve.json";
+    std::fs::write(out, doc.to_string()).expect("write json");
+    println!("\nwrote {out}");
+}

@@ -12,6 +12,7 @@
 use crate::ascend::{BufferClass, KernelTrace, Phase, Unit, WorkspacePolicy};
 use crate::util::json::Json;
 use crate::workload::decode_layer::{DecodeStep, StepNode};
+use crate::workload::PrefillStep;
 
 /// Every buffer class with its stable fixture label.
 const CLASSES: [(BufferClass, &str); 9] = [
@@ -96,33 +97,41 @@ pub fn merged_to_json(merged: &crate::ascend::MergedTrace) -> Json {
     ])
 }
 
+/// Serialize a step-graph node list (shared by the decode and prefill
+/// digests): problem shapes, expert counts and vector-pass sizing, in
+/// issue order.
+fn nodes_to_json(nodes: &[StepNode]) -> Json {
+    Json::arr(
+        nodes
+            .iter()
+            .map(|node| match node {
+                StepNode::Gemm(g) => Json::obj(vec![
+                    ("node", Json::str("gemm")),
+                    ("kind", Json::str(g.kind.name())),
+                    ("m", Json::num(g.problem.m as f64)),
+                    ("n", Json::num(g.problem.n as f64)),
+                    ("k", Json::num(g.problem.k as f64)),
+                    ("group", Json::num(g.problem.group as f64)),
+                    ("count", Json::num(g.count as f64)),
+                ]),
+                StepNode::Vector(v) => Json::obj(vec![
+                    ("node", Json::str("vector")),
+                    ("kind", Json::str(v.kind.name())),
+                    ("elems", Json::num(v.elems as f64)),
+                    ("ops_per_elem", Json::num(v.ops_per_elem)),
+                    ("hbm_bytes", Json::num(v.hbm_bytes as f64)),
+                    ("l2_bytes", Json::num(v.l2_bytes as f64)),
+                ]),
+            })
+            .collect(),
+    )
+}
+
 /// Serialize a full decode-step graph to its golden digest: the ordered
 /// node list with problem shapes, expert counts and vector-pass sizing —
 /// everything the step simulator consumes, nothing it produces.
 pub fn step_to_json(step: &DecodeStep) -> Json {
-    let nodes = step
-        .nodes()
-        .iter()
-        .map(|node| match node {
-            StepNode::Gemm(g) => Json::obj(vec![
-                ("node", Json::str("gemm")),
-                ("kind", Json::str(g.kind.name())),
-                ("m", Json::num(g.problem.m as f64)),
-                ("n", Json::num(g.problem.n as f64)),
-                ("k", Json::num(g.problem.k as f64)),
-                ("group", Json::num(g.problem.group as f64)),
-                ("count", Json::num(g.count as f64)),
-            ]),
-            StepNode::Vector(v) => Json::obj(vec![
-                ("node", Json::str("vector")),
-                ("kind", Json::str(v.kind.name())),
-                ("elems", Json::num(v.elems as f64)),
-                ("ops_per_elem", Json::num(v.ops_per_elem)),
-                ("hbm_bytes", Json::num(v.hbm_bytes as f64)),
-                ("l2_bytes", Json::num(v.l2_bytes as f64)),
-            ]),
-        })
-        .collect();
+    let nodes = nodes_to_json(&step.nodes());
     let moe = match step.layer.moe {
         Some(m) => Json::obj(vec![
             ("experts", Json::num(m.experts as f64)),
@@ -139,7 +148,35 @@ pub fn step_to_json(step: &DecodeStep) -> Json {
         ("ffn", Json::num(step.layer.geometry.ffn as f64)),
         ("kv", Json::num(step.layer.geometry.kv as f64)),
         ("moe", moe),
-        ("nodes", Json::arr(nodes)),
+        ("nodes", nodes),
+    ])
+}
+
+/// Serialize a causal prefill chunk graph to its golden digest
+/// (DESIGN.md §15): the decode digest's shape plus the chunk's causal
+/// coordinates (`kv_base`, `kv_end`, the exact `causal_ctx`), so a
+/// change to the causal-context arithmetic diffs loudly.
+pub fn prefill_step_to_json(step: &PrefillStep) -> Json {
+    let nodes = nodes_to_json(&step.nodes());
+    let moe = match step.layer.moe {
+        Some(m) => Json::obj(vec![
+            ("experts", Json::num(m.experts as f64)),
+            ("topk", Json::num(m.topk as f64)),
+            ("expert_ffn", Json::num(m.expert_ffn as f64)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("chunk", Json::num(step.chunk_tokens() as f64)),
+        ("kv_base", Json::num(step.kv_base as f64)),
+        ("kv_end", Json::num(step.kv_end() as f64)),
+        ("causal_ctx", Json::num(step.causal_ctx() as f64)),
+        ("heads", Json::num(step.heads as f64)),
+        ("hidden", Json::num(step.layer.geometry.hidden as f64)),
+        ("ffn", Json::num(step.layer.geometry.ffn as f64)),
+        ("kv", Json::num(step.layer.geometry.kv as f64)),
+        ("moe", moe),
+        ("nodes", nodes),
     ])
 }
 
@@ -198,5 +235,27 @@ mod tests {
         assert_eq!(nodes.len(), step.nodes().len());
         assert_eq!(nodes[1].req_str("kind").unwrap(), "qkv");
         assert!(back.req("moe").unwrap().get("experts").is_some());
+    }
+
+    #[test]
+    fn prefill_digest_carries_causal_coordinates() {
+        use crate::model::llm::layer_geometry;
+        use crate::workload::decode_layer::DecodeLayer;
+        use crate::workload::PrefillStep;
+        let geometry = layer_geometry("llama32").unwrap();
+        let heads = PrefillStep::default_heads(&geometry);
+        let step = PrefillStep::new(DecodeLayer::new(geometry, 512), 1024, heads);
+        let j = prefill_step_to_json(&step);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.req("chunk").unwrap().as_f64().unwrap(), 512.0);
+        assert_eq!(back.req("kv_base").unwrap().as_f64().unwrap(), 1024.0);
+        assert_eq!(back.req("kv_end").unwrap().as_f64().unwrap(), 1536.0);
+        assert_eq!(
+            back.req("causal_ctx").unwrap().as_f64().unwrap(),
+            step.causal_ctx() as f64
+        );
+        let nodes = back.req("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), step.nodes().len());
     }
 }

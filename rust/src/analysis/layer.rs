@@ -671,12 +671,71 @@ pub fn simulate_step_with(
     step: &DecodeStep,
     mode: OverlapMode,
     residency_mode: ResidencyMode,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+) -> anyhow::Result<StepReport> {
+    simulate_step_nodes(
+        machine,
+        step.nodes(),
+        step.layer.batch,
+        step.kv_len,
+        mode,
+        residency_mode,
+        resolve,
+    )
+}
+
+/// Simulate a causal prefill chunk (DESIGN.md §15) under the same
+/// overlap + residency machinery as decode: the graph shape is identical
+/// (same GEMM chain at M = chunk tokens, same ledger eligibility, same
+/// residency planner), only the attention passes are causal-context
+/// sized.  `batch` in the report is the chunk's token count and `kv_len`
+/// the cache length after the chunk lands.
+pub fn simulate_prefill_step_with(
+    machine: &MachineConfig,
+    step: &crate::workload::PrefillStep,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+) -> anyhow::Result<StepReport> {
+    simulate_step_nodes(
+        machine,
+        step.nodes(),
+        step.chunk_tokens(),
+        step.kv_end(),
+        mode,
+        residency_mode,
+        resolve,
+    )
+}
+
+/// Tuned prefill-chunk simulation — the serving warm-up and
+/// `e2e_serve` bench path.
+pub fn simulate_prefill_step_tuned_with(
+    machine: &MachineConfig,
+    step: &crate::workload::PrefillStep,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
+    tuner: &mut Tuner,
+) -> anyhow::Result<StepReport> {
+    simulate_prefill_step_with(machine, step, mode, residency_mode, |p| tuner_resolve(tuner, p))
+}
+
+/// Shared step-graph core: price an issue-ordered node list (decode or
+/// prefill — the simulator only consumes the nodes, the batch label and
+/// the kv length) under an overlap mode and a residency mode.
+fn simulate_step_nodes(
+    machine: &MachineConfig,
+    specs: Vec<StepNode>,
+    batch: usize,
+    kv_len: usize,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
     mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
 ) -> anyhow::Result<StepReport> {
     let sim = Simulator::new(machine.clone());
     let mut nodes = Vec::new();
     let mut traces: Vec<Option<KernelTrace>> = Vec::new();
-    for spec in step.nodes() {
+    for spec in specs {
         nodes.push(match spec {
             StepNode::Gemm(node) => {
                 let assignment = resolve(&node.problem)?;
@@ -729,8 +788,8 @@ pub fn simulate_step_with(
         }
     };
     Ok(StepReport {
-        batch: step.layer.batch,
-        kv_len: step.kv_len,
+        batch,
+        kv_len,
         mode,
         nodes,
         ledger,
@@ -780,6 +839,16 @@ pub fn simulate_step_tuned_with(
     tuner: &mut Tuner,
 ) -> anyhow::Result<StepReport> {
     simulate_step_with(machine, step, mode, residency_mode, |p| tuner_resolve(tuner, p))
+}
+
+/// Cost of re-establishing a residency plan's L2 pins after a prefill
+/// chunk (or any other burst) streamed its own weights and activations
+/// through the shared buffer (DESIGN.md §15): the pinned packed weights
+/// re-stream from HBM once before the next decode step regains the
+/// plan's residency_gain.  Pure bandwidth term — integer bytes over the
+/// machine's HBM rate — so the serve-loop mirror reproduces it exactly.
+pub fn repin_ns(machine: &MachineConfig, pinned_bytes: u64) -> f64 {
+    pinned_bytes as f64 / machine.hbm_bw
 }
 
 /// Render the per-node table plus layer / step totals (GEMM chain only).

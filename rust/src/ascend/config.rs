@@ -44,6 +44,9 @@ pub struct MachineConfig {
     pub l2_bw: f64,
     /// Aggregate HBM bandwidth (bytes/ns).
     pub hbm_bw: f64,
+    /// HBM device-memory capacity (bytes) — the budget the KV-cache pager
+    /// allocates against after weights are resident (Ascend 910: 32 GiB).
+    pub hbm_capacity_bytes: u64,
     /// Per-core MTE bandwidth cap (bytes/ns): one core cannot saturate HBM.
     pub mte_core_bw: f64,
     /// L2 residency retention factor in [0,1]: fraction of capacity that
@@ -86,6 +89,7 @@ impl MachineConfig {
             l2_bytes: 32 << 20,       // 32 MiB shared
             l2_bw: 3600.0,            // 3.6 TB/s aggregate on-chip buffer
             hbm_bw: 1200.0,           // 1.2 TB/s
+            hbm_capacity_bytes: 32 << 30, // 32 GiB HBM2
             mte_core_bw: 500.0,       // 500 GB/s per core (L1 <-> L2/GM port)
             l2_retention: 0.90,
             dma_burst_bytes: 256.0,
@@ -122,6 +126,10 @@ impl MachineConfig {
             "L2 must be at least as fast as HBM");
         anyhow::ensure!((0.0..=1.0).contains(&self.l2_retention));
         anyhow::ensure!(self.l0a_bytes <= self.l1_bytes);
+        anyhow::ensure!(
+            self.hbm_capacity_bytes > self.l2_bytes,
+            "HBM capacity must exceed the on-chip buffer"
+        );
         Ok(())
     }
 }

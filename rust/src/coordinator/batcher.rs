@@ -133,6 +133,12 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Pop the oldest waiting request — the continuous-batching slot
+    /// refill path (group formation stays the burst-mode path).
+    pub fn pop_next(&mut self) -> Option<DecodeRequest> {
+        self.queue.pop_front()
+    }
+
     /// Remove and return every queued request whose deadline has passed
     /// at `now_us` — dropped *before* group formation so an expired
     /// request never occupies (or pads) an engine slot.
@@ -277,6 +283,16 @@ mod tests {
         assert_eq!(b.waiting(), 2);
         let g = b.form_group(true, 101).unwrap();
         assert_eq!(g.members[0].id, 2, "FIFO order preserved across expiry");
+    }
+
+    #[test]
+    fn pop_next_is_fifo() {
+        let mut b = batcher(vec![4]);
+        b.push(req(1), 0);
+        b.push(req(2), 0);
+        assert_eq!(b.pop_next().map(|r| r.id), Some(1));
+        assert_eq!(b.pop_next().map(|r| r.id), Some(2));
+        assert!(b.pop_next().is_none());
     }
 
     #[test]

@@ -15,6 +15,16 @@
 //! execute/readback boundary errors).  The latter two are retryable; a
 //! fresh attempt re-rolls, so transient faults usually clear under the
 //! retry policy.
+//!
+//! Two further *request-keyed* fault surfaces cover the serving control
+//! plane (DESIGN.md §15): [`FaultPlan::admission_fault`] fails the
+//! admission path itself (the request is shed, typed, before it ever
+//! queues — never retried, because the client owns the retry), and
+//! [`FaultPlan::cache_write_fault`] fails a KV-cache page write for one
+//! (request, decode-token) coordinate, failing the request
+//! deterministically.  Both chain the same splitmix64 mixer under
+//! distinct salts, so they are independent of the step-fault schedule
+//! and of each other.
 
 /// One injected fault.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,7 +106,45 @@ impl FaultPlan {
             _ => FaultKind::ClientError,
         })
     }
+
+    /// Whether the admission path faults for this request id.  Keyed by
+    /// the request alone (salt [`ADMISSION_SALT`]): re-offering the same
+    /// id re-faults, so the decision is replay-stable.
+    pub fn admission_fault(&self, request_id: u64) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let mut h = mix64(self.seed ^ ADMISSION_SALT);
+        h = mix64(h ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
+
+    /// Whether the KV-cache write for `(request, generated-token index)`
+    /// faults (salt [`CACHE_WRITE_SALT`]).  A cache-write fault is not
+    /// retryable — the page content is lost — so the serving loop fails
+    /// the request deterministically.
+    pub fn cache_write_fault(&self, request_id: u64, token_index: u64) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let mut h = mix64(self.seed ^ CACHE_WRITE_SALT);
+        h = mix64(h ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ token_index.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
 }
+
+/// Salt decorrelating the admission-fault chain from step faults.
+pub const ADMISSION_SALT: u64 = 0xAD31_55D0_0FA1_7001;
+/// Salt decorrelating the cache-write-fault chain from both others.
+pub const CACHE_WRITE_SALT: u64 = 0xCAC8_E3B1_7E5A_1002;
+
+/// Metrics label for admission-path faults.
+pub const ADMISSION_FAULT_NAME: &str = "admission_fault";
+/// Metrics label for KV-cache write faults.
+pub const CACHE_WRITE_FAULT_NAME: &str = "cache_write_fault";
 
 #[cfg(test)]
 mod tests {
@@ -161,6 +209,31 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 3, "all kinds must appear: {seen:?}");
+    }
+
+    #[test]
+    fn admission_faults_are_request_keyed_and_rate_bounded() {
+        let p = FaultPlan::new(23, 0.2);
+        let first: Vec<bool> = (0..4096u64).map(|id| p.admission_fault(id)).collect();
+        let again: Vec<bool> = (0..4096u64).map(|id| p.admission_fault(id)).collect();
+        assert_eq!(first, again, "admission decision must be pure in the id");
+        let hits = first.iter().filter(|&&b| b).count();
+        assert!((600..1100).contains(&hits), "20% admission rate gave {hits}/4096");
+        assert!(!FaultPlan::new(23, 0.0).admission_fault(0));
+        assert!(FaultPlan::new(23, 1.0).admission_fault(0));
+    }
+
+    #[test]
+    fn cache_write_faults_are_independent_of_step_and_admission_chains() {
+        let p = FaultPlan::new(29, 0.5);
+        let writes: Vec<bool> = (0..256u64).map(|t| p.cache_write_fault(7, t)).collect();
+        let admits: Vec<bool> = (0..256u64).map(|id| p.admission_fault(id)).collect();
+        let steps: Vec<bool> = (0..256u64).map(|s| p.step_fault(7, s, 0).is_some()).collect();
+        assert_ne!(writes, admits, "salts must decorrelate the chains");
+        assert_ne!(writes, steps, "salts must decorrelate the chains");
+        let other_req: Vec<bool> = (0..256u64).map(|t| p.cache_write_fault(8, t)).collect();
+        assert_ne!(writes, other_req, "request coordinate must matter");
+        assert_eq!(writes, (0..256u64).map(|t| p.cache_write_fault(7, t)).collect::<Vec<_>>());
     }
 
     #[test]

@@ -54,6 +54,30 @@ struct Inner {
     /// step-level weight-residency gain, both resolved cache-only by the
     /// router — the predicted-overlap column of the serving report.
     plan_gains: BTreeMap<usize, PlanGainStat>,
+    /// Continuous-serve TTFT samples on the *virtual* clock (µs from
+    /// arrival to the first generated token) — wall-clock `ttft_s` stays
+    /// for the group-mode path (DESIGN.md §15).
+    serve_ttft_us: Vec<f64>,
+    /// Continuous-serve per-generated-token gap samples (virtual µs).
+    serve_token_gap_us: Vec<f64>,
+    /// Prefill chunk ticks executed by the continuous serve loop.
+    prefill_steps: u64,
+    /// Prompt tokens ingested by prefill ticks.
+    prefill_tokens: u64,
+    /// Decode ticks executed by the continuous serve loop.
+    decode_steps: u64,
+    /// Decode ticks that paid the residency re-pin cost because a prefill
+    /// burst invalidated the decode-steady pin set.
+    repins: u64,
+    /// Summed re-pin cost paid (ns).
+    repin_ns_sum: f64,
+    /// Shed breakdown by cause ("queue_full", "kv_capacity",
+    /// "admission_fault") — sums to `requests_shed` on the serve path.
+    shed_reasons: BTreeMap<String, u64>,
+    /// KV-pager high-water mark (pages) observed by the serve loop.
+    pager_peak_pages: u64,
+    /// KV-pager capacity (pages) the serve loop ran against.
+    pager_capacity_pages: u64,
 }
 
 /// Predicted-gain tally of one decode-group batch size.
@@ -136,6 +160,18 @@ pub struct MetricsSnapshot {
     pub route_reasons: BTreeMap<String, u64>,
     pub faults: BTreeMap<String, u64>,
     pub retries: u64,
+    /// Virtual-clock TTFT summary (µs) from the continuous serve loop.
+    pub serve_ttft_us: Summary,
+    /// Virtual-clock per-token gap summary (µs), continuous serve loop.
+    pub serve_token_gap_us: Summary,
+    pub prefill_steps: u64,
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub repins: u64,
+    pub repin_ns_sum: f64,
+    pub shed_reasons: BTreeMap<String, u64>,
+    pub pager_peak_pages: u64,
+    pub pager_capacity_pages: u64,
 }
 
 impl MetricsSnapshot {
@@ -147,6 +183,25 @@ impl MetricsSnapshot {
                 + self.requests_shed
                 + self.requests_expired
                 + self.requests_failed
+    }
+
+    /// The serve-path shed breakdown must itself account for every shed
+    /// request (trivially true when the breakdown was never used, i.e.
+    /// the group-mode path recorded untyped sheds).
+    pub fn sheds_accounted(&self) -> bool {
+        let typed: u64 = self.shed_reasons.values().sum();
+        typed == 0 || typed == self.requests_shed
+    }
+
+    /// Completed-output tokens per second of virtual time — the goodput
+    /// axis of the serve-load curves.  `horizon_us` is the virtual clock
+    /// at drain.
+    pub fn goodput_tokens_per_s(&self, horizon_us: u64) -> f64 {
+        if horizon_us == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (horizon_us as f64 / 1e6)
+        }
     }
 }
 
@@ -266,6 +321,58 @@ impl Metrics {
         self.inner.lock().unwrap().retries += 1;
     }
 
+    /// Record a shed request with its cause ("queue_full", "kv_capacity",
+    /// "admission_fault") — the serve-path counterpart of
+    /// [`Metrics::record_shed`]; increments the conservation counter too.
+    pub fn record_shed_reason(&self, reason: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_shed += 1;
+        *g.shed_reasons.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one continuous-serve TTFT sample (virtual µs from arrival
+    /// to the first generated token).
+    pub fn record_serve_ttft_us(&self, ttft_us: u64) {
+        self.inner.lock().unwrap().serve_ttft_us.push(ttft_us as f64);
+    }
+
+    /// Record `n` per-token gaps of `gap_us` virtual µs each (one decode
+    /// tick emits one token per active slot, all at the same gap).
+    pub fn record_serve_token_gaps_us(&self, gap_us: u64, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.serve_token_gap_us.extend(std::iter::repeat(gap_us as f64).take(n));
+    }
+
+    /// Record one prefill chunk tick that ingested `tokens` prompt tokens.
+    pub fn record_prefill_step(&self, tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefill_steps += 1;
+        g.prefill_tokens += tokens as u64;
+        g.steps_executed += 1;
+    }
+
+    /// Record one continuous-mode decode tick.
+    pub fn record_decode_step(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.decode_steps += 1;
+        g.steps_executed += 1;
+    }
+
+    /// Record a paid residency re-pin (a decode tick following a prefill
+    /// burst re-established the pin set at `repin_ns` cost).
+    pub fn record_repin(&self, repin_ns: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.repins += 1;
+        g.repin_ns_sum += repin_ns;
+    }
+
+    /// Publish the KV-pager high-water mark and capacity (pages).
+    pub fn set_pager_stats(&self, peak_pages: u64, capacity_pages: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.pager_peak_pages = g.pager_peak_pages.max(peak_pages);
+        g.pager_capacity_pages = capacity_pages;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -287,6 +394,16 @@ impl Metrics {
             route_reasons: g.route_reasons.clone(),
             faults: g.faults.clone(),
             retries: g.retries,
+            serve_ttft_us: Summary::of(&g.serve_ttft_us),
+            serve_token_gap_us: Summary::of(&g.serve_token_gap_us),
+            prefill_steps: g.prefill_steps,
+            prefill_tokens: g.prefill_tokens,
+            decode_steps: g.decode_steps,
+            repins: g.repins,
+            repin_ns_sum: g.repin_ns_sum,
+            shed_reasons: g.shed_reasons.clone(),
+            pager_peak_pages: g.pager_peak_pages,
+            pager_capacity_pages: g.pager_capacity_pages,
         }
     }
 }
@@ -333,6 +450,40 @@ impl MetricsSnapshot {
             self.total.p90 * 1e3,
             self.total.p99 * 1e3,
         ));
+        if self.serve_ttft_us.n > 0 {
+            out.push_str(&format!(
+                "serve ttft   p50 {:.0} us  p99 {:.0} us   token gap p50 {:.0} us  p99 {:.0} us\n",
+                self.serve_ttft_us.p50,
+                self.serve_ttft_us.p99,
+                self.serve_token_gap_us.p50,
+                self.serve_token_gap_us.p99,
+            ));
+        }
+        if self.prefill_steps > 0 || self.decode_steps > 0 {
+            out.push_str(&format!(
+                "serve ticks: {} prefill ({} tokens), {} decode, {} re-pins (~{:.1} us total)\n",
+                self.prefill_steps,
+                self.prefill_tokens,
+                self.decode_steps,
+                self.repins,
+                self.repin_ns_sum / 1e3,
+            ));
+        }
+        if !self.shed_reasons.is_empty() {
+            let parts: Vec<String> =
+                self.shed_reasons.iter().map(|(r, n)| format!("{r}={n}")).collect();
+            out.push_str(&format!(
+                "shed: {}{}\n",
+                parts.join("  "),
+                if self.sheds_accounted() { "" } else { "  [IMBALANCED]" },
+            ));
+        }
+        if self.pager_capacity_pages > 0 {
+            out.push_str(&format!(
+                "kv pager: peak {} / {} pages\n",
+                self.pager_peak_pages, self.pager_capacity_pages,
+            ));
+        }
         if !self.schedules.is_empty() {
             let parts: Vec<String> = self
                 .schedules
@@ -523,6 +674,51 @@ mod tests {
         assert!(text.contains("routing: full=1  retuned=2"), "{text}");
         assert!(text.contains("reasons:"), "{text}");
         assert!(text.contains("faults: engine_fault=1  straggler=1  retries: 1"), "{text}");
+    }
+
+    #[test]
+    fn serve_mode_counters_and_goodput() {
+        let m = Metrics::new();
+        m.record_admitted();
+        m.record_admitted();
+        m.record_shed_reason("queue_full");
+        m.record_shed_reason("kv_capacity");
+        m.record_serve_ttft_us(1_500);
+        m.record_serve_token_gaps_us(400, 3);
+        m.record_prefill_step(128);
+        m.record_decode_step();
+        m.record_decode_step();
+        m.record_repin(25_000.0);
+        m.set_pager_stats(7, 64);
+        m.set_pager_stats(5, 64); // peak is a high-water mark
+        m.record_completion(10, 0.0, 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests_shed, 2);
+        assert_eq!(s.shed_reasons.get("queue_full"), Some(&1));
+        assert!(s.sheds_accounted());
+        assert_eq!(s.serve_ttft_us.n, 1);
+        assert_eq!(s.serve_token_gap_us.n, 3);
+        assert!((s.serve_token_gap_us.p50 - 400.0).abs() < 1e-9);
+        assert_eq!((s.prefill_steps, s.prefill_tokens, s.decode_steps), (1, 128, 2));
+        assert_eq!(s.steps_executed, 3, "serve ticks feed the shared step counter");
+        assert_eq!((s.repins, s.pager_peak_pages, s.pager_capacity_pages), (1, 7, 64));
+        assert!((s.goodput_tokens_per_s(2_000_000) - 5.0).abs() < 1e-9);
+        assert_eq!(s.goodput_tokens_per_s(0), 0.0);
+        let text = s.render(1.0);
+        assert!(text.contains("serve ttft"), "{text}");
+        assert!(text.contains("re-pins"), "{text}");
+        assert!(text.contains("kv pager: peak 7 / 64 pages"), "{text}");
+        assert!(text.contains("shed: kv_capacity=1  queue_full=1"), "{text}");
+    }
+
+    #[test]
+    fn untyped_sheds_keep_the_breakdown_trivially_accounted() {
+        let m = Metrics::new();
+        m.record_admitted();
+        m.record_shed(1);
+        let s = m.snapshot();
+        assert!(s.sheds_accounted(), "empty breakdown is vacuously consistent");
+        assert!(s.outcomes_accounted());
     }
 
     #[test]

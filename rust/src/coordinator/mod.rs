@@ -21,13 +21,20 @@
 //!   size, and routes each group down the degradation ladder
 //!   (full -> tuned_only -> retuned -> default_splitk) so routing never
 //!   fails a request.
-//! * [`server`] — the serving loop: drain queue -> form group -> decode
-//!   until every member finishes -> publish results + metrics; virtual
-//!   clock, deadline enforcement, fault injection and step retry.
+//! * [`server`] — the serving loops: the group-synchronous burst path
+//!   (drain queue -> form group -> decode until every member finishes)
+//!   and the continuous-batching path ([`Server::serve_load`]): arrival
+//!   plans on the virtual clock, chunked prefill interleaved against
+//!   in-flight decode, KV-cache paging, SLO latencies; both share the
+//!   virtual clock, deadline enforcement, fault injection and step
+//!   retry.
 //! * [`faults`] — the seeded, coordinate-keyed fault plan (stragglers,
-//!   transient engine/client errors) behind the chaos harness.
-//! * [`metrics`] — latency/throughput counters, outcome conservation,
-//!   per-rung fallback and fault/retry counters.
+//!   transient engine/client errors, admission and KV-cache-write
+//!   faults) behind the chaos harness.
+//! * [`metrics`] — latency/throughput counters, outcome conservation
+//!   (with a typed shed breakdown on the serve path), per-rung fallback
+//!   and fault/retry counters, TTFT/token-gap percentiles and KV-pager
+//!   occupancy.
 
 pub mod batcher;
 pub mod faults;
@@ -39,11 +46,17 @@ pub mod server;
 pub use batcher::{
     Admission, Batcher, BatchPolicy, DecodeGroup, DEFAULT_MAX_WAIT_US, DEFAULT_QUEUE_CAP,
 };
-pub use faults::{FaultKind, FaultPlan};
+pub use faults::{
+    FaultKind, FaultPlan, ADMISSION_FAULT_NAME, ADMISSION_SALT, CACHE_WRITE_FAULT_NAME,
+    CACHE_WRITE_SALT,
+};
 pub use metrics::{GemmScheduleStat, Metrics, MetricsSnapshot};
 pub use request::{DecodeRequest, DecodeResult, Outcome};
 pub use router::{
     LayerPlan, PlanNode, RouteOutcome, RouteReason, RouteRung, RoutedPlan, Router, TunedPlan,
-    DEFAULT_RETUNE_BUDGET,
+    DEFAULT_RETUNE_BUDGET, DEFAULT_RETUNE_REFILL_INTERVAL_US,
 };
-pub use server::{Server, ServerConfig, DEFAULT_STEP_US};
+pub use server::{
+    prefill_vector_ns, ServeOptions, ServeReport, Server, ServerConfig, DEFAULT_PREFILL_CHUNK,
+    DEFAULT_STEP_US,
+};

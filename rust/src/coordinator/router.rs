@@ -41,6 +41,12 @@ use crate::workload::decode_layer::{DecodeLayer, GemmKind};
 /// when the cache is cold or stale.
 pub const DEFAULT_RETUNE_BUDGET: usize = 32;
 
+/// Default token-bucket refill interval for the re-tune budget (virtual
+/// µs per credit) when refill is enabled (DESIGN.md §15): one search per
+/// quarter virtual second keeps inline re-tunes off the hot path while
+/// letting a long-running server recover from a cold or stale cache.
+pub const DEFAULT_RETUNE_REFILL_INTERVAL_US: u64 = 250_000;
+
 /// The tuned plan for one GEMM node.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunedPlan {
@@ -250,7 +256,18 @@ pub struct Router<'rt> {
     stale_tag: bool,
     /// Remaining inline re-tune searches (rung 3).
     retune_budget: usize,
+    /// Token-bucket refill: one re-tune credit per this many virtual µs
+    /// (`None` = the fixed lifetime budget of DESIGN.md §14, no refill).
+    retune_refill_interval_us: Option<u64>,
+    /// Bucket capacity the refill credits up to.
+    retune_budget_cap: usize,
+    /// Virtual time through which refill credits have been granted.
+    last_refill_us: u64,
     routes: HashMap<usize, RoutedPlan>,
+    /// Memoized prefill-chunk routes, keyed by chunk token count `m`
+    /// (disjoint from `routes`: a decode batch and a prefill chunk of
+    /// the same size share GEMM shapes but are distinct route entries).
+    prefill_routes: HashMap<usize, RoutedPlan>,
 }
 
 impl<'rt> Router<'rt> {
@@ -291,7 +308,11 @@ impl<'rt> Router<'rt> {
             cache_load_error,
             stale_tag,
             retune_budget: DEFAULT_RETUNE_BUDGET,
+            retune_refill_interval_us: None,
+            retune_budget_cap: DEFAULT_RETUNE_BUDGET,
+            last_refill_us: 0,
             routes: HashMap::new(),
+            prefill_routes: HashMap::new(),
         })
     }
 
@@ -345,20 +366,124 @@ impl<'rt> Router<'rt> {
         self.layer_plan(batch).and_then(|plan| plan.headline())
     }
 
-    fn resolve_route(&mut self, batch: usize) -> RoutedPlan {
-        let no_config = RouteOutcome {
+    /// Route a prefill chunk of `chunk` prompt tokens down the same
+    /// degradation ladder (DESIGN.md §15).  The chunk's projection GEMMs
+    /// are the decode problems at M = chunk, so tuned winners, pair
+    /// decisions and residency plans resolve through the same tune
+    /// cache; no compiled per-M artifact is needed — the simulator
+    /// prices any M.  Memoized per chunk size.
+    pub fn route_prefill(&mut self, chunk: usize) -> RoutedPlan {
+        if let Some(hit) = self.prefill_routes.get(&chunk) {
+            return hit.clone();
+        }
+        let routed = match self.first_decode_config() {
+            None => RoutedPlan { plan: None, outcome: Self::no_config_outcome() },
+            Some(cfg) => {
+                let layer = DecodeLayer::from_decode_config(&cfg, chunk);
+                self.resolve_layer_route(&layer)
+            }
+        };
+        self.prefill_routes.insert(chunk, routed.clone());
+        routed
+    }
+
+    /// The model's decode config from its first (smallest-batch)
+    /// artifact — the geometry source for prefill-chunk routing.
+    pub fn first_decode_config(&self) -> Option<crate::runtime::artifacts::DecodeConfig> {
+        self.manifest
+            .decode_batches(&self.model)
+            .into_iter()
+            .find_map(|b| self.manifest.decode(&self.model, b).ok().and_then(|e| e.config))
+    }
+
+    /// Enable token-bucket refill of the re-tune budget: one credit per
+    /// `interval_us` virtual µs, up to `cap` banked credits (DESIGN.md
+    /// §15).  Replaces PR 6's fixed lifetime budget with a sustainable
+    /// background rate.
+    pub fn set_retune_refill(&mut self, interval_us: u64, cap: usize) {
+        self.retune_refill_interval_us = Some(interval_us.max(1));
+        self.retune_budget_cap = cap.max(1);
+    }
+
+    /// Advance the router's view of the virtual clock, crediting the
+    /// re-tune token bucket.  When credits land, memoized routes are
+    /// cleared so batches that degraded on an empty bucket re-walk the
+    /// ladder (cache-only for warm shapes — re-resolution is cheap).
+    pub fn advance_clock(&mut self, now_us: u64) {
+        let Some(interval) = self.retune_refill_interval_us else {
+            return;
+        };
+        if now_us <= self.last_refill_us {
+            return;
+        }
+        let credits = (now_us - self.last_refill_us) / interval;
+        if credits == 0 {
+            return;
+        }
+        self.last_refill_us += credits * interval;
+        if self.retune_budget < self.retune_budget_cap {
+            self.retune_budget =
+                (self.retune_budget + credits as usize).min(self.retune_budget_cap);
+            self.routes.clear();
+            self.prefill_routes.clear();
+        }
+    }
+
+    /// Re-tune one decode batch in the background: fully resolve its
+    /// shape winners, pair decisions and residency plan into the tuner
+    /// (paying the searches now, off the serving path), then drop the
+    /// memoized route so the next [`Router::route`] call lands on rung
+    /// `full`.  Does not consume the inline re-tune bucket.
+    pub fn background_retune(&mut self, batch: usize) -> anyhow::Result<()> {
+        let cfg = self
+            .manifest
+            .decode(&self.model, batch)
+            .ok()
+            .and_then(|e| e.config)
+            .ok_or_else(|| anyhow::anyhow!("no decode config for batch {batch}"))?;
+        let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        let machine = self.machine.clone();
+        let tuner = self.tuner.get_or_insert_with(|| Tuner::new(machine));
+        for node in layer.gemm_nodes() {
+            if node.problem.validate().is_ok() {
+                tuner.resolve(&node.problem)?;
+            }
+        }
+        for pair in layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer)?;
+        }
+        tuner.resolve_residency(&layer)?;
+        self.routes.remove(&batch);
+        Ok(())
+    }
+
+    /// A `no decode config` outcome (the only unplanned route).
+    fn no_config_outcome() -> RouteOutcome {
+        RouteOutcome {
             rung: RouteRung::DefaultSplitk,
             reason: RouteReason::NoDecodeConfig,
             detail: None,
             retuned_nodes: 0,
             defaulted_nodes: 0,
-        };
+        }
+    }
+
+    fn resolve_route(&mut self, batch: usize) -> RoutedPlan {
         let cfg = match self.manifest.decode(&self.model, batch).ok().and_then(|e| e.config) {
             Some(cfg) => cfg,
-            None => return RoutedPlan { plan: None, outcome: no_config },
+            None => return RoutedPlan { plan: None, outcome: Self::no_config_outcome() },
         };
-        let machine = self.machine.clone();
         let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        self.resolve_layer_route(&layer)
+    }
+
+    /// The shared ladder body: price every GEMM node of one layer graph
+    /// down the degradation ladder and resolve the cross-node gains
+    /// cache-only.  Decode batches and prefill chunks both route here —
+    /// their projection GEMMs differ only in M, so they key through the
+    /// same tune cache.
+    fn resolve_layer_route(&mut self, layer: &DecodeLayer) -> RoutedPlan {
+        let machine = self.machine.clone();
         let gemm_nodes = layer.gemm_nodes();
         let mut retuned = 0usize;
         let mut defaulted = 0usize;
@@ -407,7 +532,7 @@ impl<'rt> Router<'rt> {
             }
             Some(total)
         });
-        let residency = self.tuner.as_mut().and_then(|t| t.lookup_residency(&layer));
+        let residency = self.tuner.as_mut().and_then(|t| t.lookup_residency(layer));
         let rung = if defaulted > 0 {
             RouteRung::DefaultSplitk
         } else if retuned > 0 {
@@ -459,15 +584,22 @@ impl<'rt> Router<'rt> {
     }
 
     /// Override the inline re-tune budget (0 forces rung 4 on misses).
-    /// Clears memoized routes so the new budget applies to every batch.
+    /// Clears memoized routes so the new budget applies to every batch
+    /// and chunk.
     pub fn set_retune_budget(&mut self, budget: usize) {
         self.retune_budget = budget;
         self.routes.clear();
+        self.prefill_routes.clear();
     }
 
     /// Number of engines built so far.
     pub fn engines_built(&self) -> usize {
         self.engines.len()
+    }
+
+    /// The machine model the router prices against.
+    pub fn machine(&self) -> &MachineConfig {
+        &self.machine
     }
 
     pub fn model(&self) -> &str {

@@ -21,16 +21,178 @@
 use std::time::Instant;
 
 use super::batcher::{Admission, Batcher, DecodeGroup};
-use super::faults::{FaultKind, FaultPlan};
+use super::faults::{FaultKind, FaultPlan, ADMISSION_FAULT_NAME, CACHE_WRITE_FAULT_NAME};
 use super::metrics::Metrics;
 use super::request::{DecodeRequest, DecodeResult, Outcome};
 use super::router::{LayerPlan, Router};
+use crate::analysis::layer::repin_ns;
+use crate::ascend::{vecpass, MachineConfig};
+use crate::model::{kv_bytes_per_token, KvPager, DEFAULT_PAGE_BYTES};
+use crate::runtime::artifacts::DecodeConfig;
 use crate::runtime::RetryPolicy;
 use crate::util::prng::Rng;
-use crate::workload::decode_layer::GemmKind;
+use crate::workload::decode_layer::{DecodeLayer, GemmKind, StepNode};
+use crate::workload::{ArrivalPlan, PrefillStep};
 
 /// Virtual step cost when the routed plan carries no prediction (µs).
 pub const DEFAULT_STEP_US: u64 = 1_000;
+
+/// Default prompt tokens one prefill tick ingests (DESIGN.md §15).
+pub const DEFAULT_PREFILL_CHUNK: usize = 128;
+
+/// Knobs of one continuous-batching serve run (DESIGN.md §15).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Engine batch size (the slot count) — must have a compiled decode
+    /// artifact.
+    pub batch: usize,
+    /// Max prompt tokens one prefill tick ingests.
+    pub chunk: usize,
+    /// Admission-queue bound (waiting requests, not counting slots).
+    pub queue_cap: usize,
+    /// Optional per-request SLO (virtual µs from arrival).
+    pub deadline_us: Option<u64>,
+    /// KV-cache page size (bytes).
+    pub page_bytes: u64,
+    /// HBM bytes already claimed by resident weights (subtracted from
+    /// the machine's capacity before paging).
+    pub weight_bytes: u64,
+    /// Override the KV budget outright (tests force small capacities);
+    /// `None` derives it from the machine config minus `weight_bytes`.
+    pub hbm_capacity_bytes: Option<u64>,
+}
+
+impl ServeOptions {
+    pub fn new(batch: usize, chunk: usize) -> ServeOptions {
+        ServeOptions {
+            batch,
+            chunk: chunk.max(1),
+            queue_cap: super::batcher::DEFAULT_QUEUE_CAP,
+            deadline_us: None,
+            page_bytes: DEFAULT_PAGE_BYTES,
+            weight_bytes: 0,
+            hbm_capacity_bytes: None,
+        }
+    }
+
+    pub fn with_queue_cap(mut self, queue_cap: usize) -> ServeOptions {
+        self.queue_cap = queue_cap.max(1);
+        self
+    }
+
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> ServeOptions {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    pub fn with_page_bytes(mut self, page_bytes: u64) -> ServeOptions {
+        self.page_bytes = page_bytes.max(1);
+        self
+    }
+
+    pub fn with_weight_bytes(mut self, weight_bytes: u64) -> ServeOptions {
+        self.weight_bytes = weight_bytes;
+        self
+    }
+
+    pub fn with_kv_capacity_bytes(mut self, capacity_bytes: u64) -> ServeOptions {
+        self.hbm_capacity_bytes = Some(capacity_bytes);
+        self
+    }
+}
+
+/// What one continuous-batching serve run produced.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Terminal result of every request that entered the queue (shed
+    /// requests are metrics-only — they never held state).
+    pub results: Vec<DecodeResult>,
+    /// Virtual clock at drain (µs) — the goodput denominator.
+    pub horizon_us: u64,
+    /// KV-pager high-water mark (pages).
+    pub kv_peak_pages: u64,
+    /// KV-pager capacity (pages).
+    pub kv_capacity_pages: u64,
+    /// Whether the pager drained to zero pages (leak check).
+    pub kv_idle: bool,
+}
+
+/// Per-slot state inside the continuous-batching serve loop (owned —
+/// a request lives in its slot from refill to terminal outcome).
+struct ServeSlot {
+    req: DecodeRequest,
+    /// Prompt positions already ingested by prefill ticks.
+    prefilled: usize,
+    /// Next KV position to write.
+    position: usize,
+    /// Token the next decode tick feeds.
+    next_input: i32,
+    generated: Vec<i32>,
+    /// Virtual time of the first generated token.
+    first_token_us: Option<u64>,
+    /// Ticks (prefill + decode) this slot participated in.
+    ticks: usize,
+    outcome: Outcome,
+    error: Option<String>,
+}
+
+impl ServeSlot {
+    /// Prompt positions still to ingest by prefill ticks.  The *final*
+    /// prompt token is fed by the slot's first decode tick — exactly the
+    /// position the group-mode teacher forcing feeds it at, so both
+    /// paths produce bit-identical token streams.
+    fn prefill_remaining(&self) -> usize {
+        self.req.prompt.len() - 1 - self.prefilled
+    }
+}
+
+/// Release the slot's KV pages, record its terminal outcome, and emit
+/// its result (virtual-clock latencies, in seconds for the shared
+/// [`DecodeResult`] fields).
+fn finalize_serve_slot(
+    metrics: &Metrics,
+    pager: &mut KvPager,
+    slot: ServeSlot,
+    now_us: u64,
+) -> DecodeResult {
+    pager.release(slot.req.id);
+    let enqueued_us = slot.req.enqueued_at_us.unwrap_or(0);
+    let ttft_s = slot
+        .first_token_us
+        .map(|t| t.saturating_sub(enqueued_us) as f64 / 1e6)
+        .unwrap_or(0.0);
+    let total_s = now_us.saturating_sub(enqueued_us) as f64 / 1e6;
+    match slot.outcome {
+        Outcome::Completed => metrics.record_completion(slot.generated.len(), ttft_s, total_s),
+        Outcome::Expired => metrics.record_expired(1),
+        Outcome::Failed => metrics.record_failed(1),
+    }
+    DecodeResult {
+        id: slot.req.id,
+        tokens: slot.generated,
+        ttft_s,
+        total_s,
+        steps: slot.ticks,
+        outcome: slot.outcome,
+        error: slot.error,
+    }
+}
+
+/// Analytic vector-pass cost (ns) of one causal prefill chunk: every
+/// non-GEMM node of the chunk graph priced by the vecpass bandwidth
+/// model — the same pricing `simulate_prefill_step_with` charges them.
+pub fn prefill_vector_ns(machine: &MachineConfig, step: &PrefillStep) -> f64 {
+    step.nodes()
+        .iter()
+        .map(|node| match node {
+            StepNode::Vector(op) => {
+                vecpass::price_pass(machine, op.elems, op.ops_per_elem, op.hbm_bytes, op.l2_bytes)
+                    .total_ns
+            }
+            StepNode::Gemm(_) => 0.0,
+        })
+        .sum()
+}
 
 /// Serving-loop knobs.
 #[derive(Debug, Clone)]
@@ -426,12 +588,407 @@ impl<'rt> Server<'rt> {
             })
             .collect()
     }
+
+    /// Virtual cost (µs) of one prefill tick: the routed chunk plan's
+    /// GEMM prediction (same degradation ladder and tune cache as
+    /// decode) plus the analytic vector passes of the causal chunk graph
+    /// at this KV depth.  Falls back to the configured default step cost
+    /// when the chunk GEMMs are unpriced.
+    fn prefill_tick_us(
+        &mut self,
+        cfg: &DecodeConfig,
+        machine: &MachineConfig,
+        m: usize,
+        kv_base: usize,
+        seen_chunks: &mut std::collections::BTreeSet<usize>,
+    ) -> u64 {
+        let routed = self.router.route_prefill(m);
+        if seen_chunks.insert(m) {
+            self.metrics.record_route(routed.outcome.rung.name(), routed.outcome.reason.name());
+        }
+        let layer = DecodeLayer::from_decode_config(cfg, m);
+        let step = PrefillStep::new(layer, kv_base, cfg.heads.max(1));
+        let vector_ns = prefill_vector_ns(machine, &step);
+        match routed.plan.as_ref().and_then(|p| p.predicted_served_ns()) {
+            Some(gemm_ns) => (((gemm_ns + vector_ns) / 1_000.0).ceil() as u64).max(1),
+            None => self.config.default_step_us,
+        }
+    }
+
+    /// Continuous-batching serve loop (DESIGN.md §15): admit the arrival
+    /// plan onto the virtual clock, interleave chunked prefill against
+    /// in-flight decode on one fixed-batch engine, page the KV cache
+    /// against the HBM budget, and drain to completion.
+    ///
+    /// Every offered request ends in exactly one terminal account — the
+    /// §14 conservation law extends to the serve path with a typed shed
+    /// breakdown (`queue_full`, `kv_capacity`, `admission_fault`) — and
+    /// the pager provably drains: the report carries its high-water mark
+    /// and a leak check.  The loop itself only errors when the engine
+    /// cannot be built at all.
+    pub fn serve_load(
+        &mut self,
+        plan: &ArrivalPlan,
+        opts: &ServeOptions,
+    ) -> anyhow::Result<ServeReport> {
+        anyhow::ensure!(opts.batch >= 1, "serve batch must be >= 1");
+        let machine = self.router.machine().clone();
+        let cfg = self
+            .router
+            .first_decode_config()
+            .ok_or_else(|| anyhow::anyhow!("serve-load needs a decode config"))?;
+        self.batcher.policy.queue_cap = opts.queue_cap.max(1);
+        let bytes_per_token = kv_bytes_per_token(cfg.layers.max(1), cfg.hidden.max(1));
+        let mut pager = match opts.hbm_capacity_bytes {
+            Some(capacity) => KvPager::new(opts.page_bytes, capacity),
+            None => KvPager::for_machine(&machine, opts.weight_bytes, opts.page_bytes),
+        };
+
+        self.router.engine(opts.batch).and_then(|e| e.reset())?;
+        let (vocab, max_seq) = {
+            let engine = self.router.engine(opts.batch)?;
+            (engine.vocab(), engine.max_seq())
+        };
+
+        // Route the decode batch once; the plan prices every decode tick.
+        let routed = self.router.route(opts.batch);
+        self.metrics.record_route(routed.outcome.rung.name(), routed.outcome.reason.name());
+        Server::record_group_schedules(&self.metrics, routed.plan.as_ref());
+        if let Some(p) = routed.plan.as_ref() {
+            self.metrics.record_group_plan(opts.batch, p.overlap_gain_ns, p.residency_gain_ns);
+        }
+        let decode_step_us = routed
+            .plan
+            .as_ref()
+            .and_then(|p| p.predicted_served_ns())
+            .map(|ns| ((ns / 1_000.0).ceil() as u64).max(1))
+            .unwrap_or(self.config.default_step_us);
+        // The decode-steady residency pins a prefill burst invalidates:
+        // the first decode tick after any prefill tick re-streams them.
+        let pinned_bytes =
+            routed.plan.as_ref().and_then(|p| p.residency_pinned_bytes).unwrap_or(0);
+        let repin_tick_ns = if pinned_bytes > 0 { repin_ns(&machine, pinned_bytes) } else { 0.0 };
+        let group_seq = self.groups_started;
+        self.groups_started += 1;
+
+        let mut slots: Vec<Option<ServeSlot>> = (0..opts.batch).map(|_| None).collect();
+        let mut results: Vec<DecodeResult> = Vec::new();
+        let mut seen_chunks = std::collections::BTreeSet::new();
+        let mut next_arrival = 0usize;
+        let mut needs_repin = false;
+        let mut last_was_prefill = false;
+        let mut decode_ticks = 0u64;
+
+        loop {
+            // Credit the router's re-tune token bucket (DESIGN.md §15).
+            self.router.advance_clock(self.clock_us);
+
+            // 1. Admit every arrival due at the current virtual time.
+            while next_arrival < plan.arrivals.len()
+                && plan.arrivals[next_arrival].at_us <= self.clock_us
+            {
+                let a = plan.arrivals[next_arrival];
+                let id = next_arrival as u64;
+                next_arrival += 1;
+                self.metrics.record_admitted();
+                if self.faults.as_ref().map(|f| f.admission_fault(id)).unwrap_or(false) {
+                    self.metrics.record_fault(ADMISSION_FAULT_NAME);
+                    self.metrics.record_shed_reason(ADMISSION_FAULT_NAME);
+                    continue;
+                }
+                let prompt: Vec<i32> = (0..a.prompt_len)
+                    .map(|p| crate::workload::prompt_token(id, p, vocab))
+                    .collect();
+                let mut req = DecodeRequest::new(id, prompt, a.max_new_tokens);
+                req.deadline_us = opts.deadline_us;
+                req.enqueued_at_us = Some(a.at_us);
+                if let Err(e) = req.validate(vocab, max_seq) {
+                    self.metrics.record_failed(1);
+                    results.push(DecodeResult {
+                        id,
+                        tokens: Vec::new(),
+                        ttft_s: 0.0,
+                        total_s: 0.0,
+                        steps: 0,
+                        outcome: Outcome::Failed,
+                        error: Some(format!("invalid request: {e:#}")),
+                    });
+                    continue;
+                }
+                if self.batcher.waiting() >= self.batcher.policy.queue_cap {
+                    self.metrics.record_shed_reason("queue_full");
+                    continue;
+                }
+                // Conservative KV admission: reserve the worst case now
+                // so per-token growth can never fail mid-flight.
+                if !pager.try_admit(id, a.prompt_len, a.max_new_tokens, bytes_per_token) {
+                    self.metrics.record_shed_reason("kv_capacity");
+                    continue;
+                }
+                let admission = self.batcher.push(req, self.clock_us);
+                debug_assert_eq!(admission, Admission::Admitted);
+            }
+
+            // 2. Expired queued requests release their KV reservations.
+            for req in self.batcher.expire(self.clock_us) {
+                pager.release(req.id);
+                let enqueued_us = req.enqueued_at_us.unwrap_or(0);
+                self.metrics.record_expired(1);
+                results.push(DecodeResult {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft_s: 0.0,
+                    total_s: self.clock_us.saturating_sub(enqueued_us) as f64 / 1e6,
+                    steps: 0,
+                    outcome: Outcome::Expired,
+                    error: None,
+                });
+            }
+
+            // 3. Mid-flight deadline expiry: the slot keeps its partial
+            // generation and frees its pages.
+            for slot in slots.iter_mut() {
+                if slot.as_ref().map(|s| s.req.expired(self.clock_us)).unwrap_or(false) {
+                    let mut s = slot.take().unwrap();
+                    s.outcome = Outcome::Expired;
+                    results.push(finalize_serve_slot(&self.metrics, &mut pager, s, self.clock_us));
+                }
+            }
+
+            // 4. Refill free slots FIFO from the queue.
+            for slot in slots.iter_mut() {
+                if slot.is_none() {
+                    match self.batcher.pop_next() {
+                        Some(req) => {
+                            let next_input = req.prompt.first().copied().unwrap_or(0);
+                            *slot = Some(ServeSlot {
+                                req,
+                                prefilled: 0,
+                                position: 0,
+                                next_input,
+                                generated: Vec::new(),
+                                first_token_us: None,
+                                ticks: 0,
+                                outcome: Outcome::Completed,
+                                error: None,
+                            });
+                        }
+                        None => break,
+                    }
+                }
+            }
+
+            // 5. Idle: jump to the next arrival, or drain out.
+            if slots.iter().all(|s| s.is_none()) {
+                match plan.arrivals.get(next_arrival) {
+                    Some(a) => {
+                        self.clock_us = self.clock_us.max(a.at_us);
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            // 6. One tick.  Prefill and decode alternate strictly when
+            // both have work, so a prefill burst can neither starve
+            // in-flight decode nor be starved by it.
+            let has_prefill = slots.iter().flatten().any(|s| s.prefill_remaining() > 0);
+            let has_decode = slots.iter().flatten().any(|s| s.prefill_remaining() == 0);
+            if has_prefill && (!has_decode || !last_was_prefill) {
+                // Prefill tick: one chunk of the lowest-index slot that
+                // still has prompt to ingest.
+                let idx = slots
+                    .iter()
+                    .position(|s| s.as_ref().map(|s| s.prefill_remaining() > 0).unwrap_or(false))
+                    .expect("has_prefill implies a prefill slot");
+                let (m, kv_base) = {
+                    let s = slots[idx].as_ref().unwrap();
+                    (s.prefill_remaining().min(opts.chunk.max(1)), s.position)
+                };
+                let tick_us = self.prefill_tick_us(&cfg, &machine, m, kv_base, &mut seen_chunks);
+                self.clock_us = self.clock_us.saturating_add(tick_us);
+                let s = slots[idx].as_mut().unwrap();
+                s.prefilled += m;
+                s.position += m;
+                s.next_input = s.req.prompt[s.position];
+                s.ticks += 1;
+                self.metrics.record_prefill_step(m);
+                needs_repin = true;
+                last_was_prefill = true;
+            } else {
+                // Decode tick: every slot whose prompt is fully staged.
+                let active: Vec<usize> = slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| {
+                        s.as_ref().map(|s| s.prefill_remaining() == 0).unwrap_or(false)
+                    })
+                    .map(|(i, _)| i)
+                    .collect();
+                let tick_start_us = self.clock_us;
+                let mut tokens = vec![0i32; opts.batch];
+                let mut positions = vec![0i32; opts.batch];
+                for &i in &active {
+                    let s = slots[i].as_ref().unwrap();
+                    tokens[i] = s.next_input;
+                    positions[i] = s.position as i32;
+                }
+                // Fault + retry loop, keyed (serve session, decode tick,
+                // attempt) — same coordinates as the group-mode path.
+                let mut attempt = 0u32;
+                let step_out = loop {
+                    let fault = self
+                        .faults
+                        .as_ref()
+                        .and_then(|f| f.step_fault(group_seq, decode_ticks, attempt));
+                    let step_res = match fault {
+                        Some(FaultKind::Straggler { mult_x100 }) => {
+                            self.metrics.record_fault("straggler");
+                            let penalty = decode_step_us
+                                .saturating_mul(mult_x100.saturating_sub(100) as u64)
+                                / 100;
+                            self.clock_us = self.clock_us.saturating_add(penalty);
+                            self.router
+                                .engine(opts.batch)
+                                .expect("engine built at serve start")
+                                .step(&tokens, &positions)
+                        }
+                        Some(kind) => {
+                            self.metrics.record_fault(kind.name());
+                            Err(anyhow::anyhow!(
+                                "injected {} (serve {group_seq}, tick {decode_ticks}, \
+                                 attempt {attempt})",
+                                kind.name()
+                            ))
+                        }
+                        None => self
+                            .router
+                            .engine(opts.batch)
+                            .expect("engine built at serve start")
+                            .step(&tokens, &positions),
+                    };
+                    match step_res {
+                        Ok(out) => break Ok(out),
+                        Err(e) => {
+                            if attempt + 1 >= self.config.retry.max_attempts.max(1) {
+                                break Err(format!(
+                                    "tick {decode_ticks} failed after {} attempts: {e:#}",
+                                    attempt + 1
+                                ));
+                            }
+                            self.metrics.record_retry();
+                            let backoff = self.config.retry.backoff_us(attempt, &mut self.rng);
+                            self.clock_us = self.clock_us.saturating_add(backoff);
+                            attempt += 1;
+                        }
+                    }
+                };
+                decode_ticks += 1;
+                match step_out {
+                    Err(msg) => {
+                        // Retries exhausted: fail the decode-ready slots
+                        // (their step can never land).  Prefill-pending
+                        // slots and the queue keep serving — the server
+                        // never dies.
+                        self.clock_us = self.clock_us.saturating_add(decode_step_us);
+                        self.metrics.record_decode_step();
+                        for &i in &active {
+                            let mut s = slots[i].take().unwrap();
+                            s.outcome = Outcome::Failed;
+                            s.error = Some(msg.clone());
+                            results.push(finalize_serve_slot(
+                                &self.metrics,
+                                &mut pager,
+                                s,
+                                self.clock_us,
+                            ));
+                        }
+                    }
+                    Ok(out) => {
+                        let mut tick_us = decode_step_us;
+                        if needs_repin {
+                            if repin_tick_ns > 0.0 {
+                                self.metrics.record_repin(repin_tick_ns);
+                                tick_us = tick_us.saturating_add(
+                                    ((repin_tick_ns / 1_000.0).ceil() as u64).max(1),
+                                );
+                            }
+                            needs_repin = false;
+                        }
+                        self.clock_us = self.clock_us.saturating_add(tick_us);
+                        self.metrics.record_decode_step();
+                        let mut emitted = 0usize;
+                        for &i in &active {
+                            let produced = out.next_tokens[i];
+                            let finished = {
+                                let s = slots[i].as_mut().unwrap();
+                                s.ticks += 1;
+                                s.position += 1;
+                                let token_index = s.generated.len() as u64;
+                                let write_fault = self
+                                    .faults
+                                    .as_ref()
+                                    .map(|f| f.cache_write_fault(s.req.id, token_index))
+                                    .unwrap_or(false);
+                                if write_fault {
+                                    self.metrics.record_fault(CACHE_WRITE_FAULT_NAME);
+                                    s.outcome = Outcome::Failed;
+                                    s.error = Some(format!(
+                                        "kv cache write fault at token {token_index}"
+                                    ));
+                                    true
+                                } else {
+                                    pager.grow(s.req.id);
+                                    emitted += 1;
+                                    if s.generated.is_empty() {
+                                        s.first_token_us = Some(self.clock_us);
+                                        let enqueued_us = s.req.enqueued_at_us.unwrap_or(0);
+                                        self.metrics.record_serve_ttft_us(
+                                            self.clock_us.saturating_sub(enqueued_us),
+                                        );
+                                    }
+                                    s.generated.push(produced);
+                                    s.next_input = produced;
+                                    s.generated.len() >= s.req.max_new_tokens
+                                        || s.position + 1 >= max_seq
+                                }
+                            };
+                            if finished {
+                                let s = slots[i].take().unwrap();
+                                results.push(finalize_serve_slot(
+                                    &self.metrics,
+                                    &mut pager,
+                                    s,
+                                    self.clock_us,
+                                ));
+                            }
+                        }
+                        let gap_us = self.clock_us.saturating_sub(tick_start_us);
+                        self.metrics.record_serve_token_gaps_us(gap_us, emitted);
+                    }
+                }
+                last_was_prefill = false;
+            }
+        }
+
+        self.metrics.set_pager_stats(pager.peak_allocated_pages(), pager.capacity_pages());
+        debug_assert!(pager.idle(), "kv pager must drain with the queue");
+        Ok(ServeReport {
+            horizon_us: self.clock_us,
+            kv_peak_pages: pager.peak_allocated_pages(),
+            kv_capacity_pages: pager.capacity_pages(),
+            kv_idle: pager.idle(),
+            results,
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     // Full server behaviour needs a manifest on disk; the fault-tolerant
     // serving loop is exercised end to end by rust/tests/chaos.rs
-    // (synthetic manifests, seeded fault plans) and, against real
-    // artifacts + PJRT, by rust/tests/coordinator.rs.
+    // (synthetic manifests, seeded fault plans), the continuous-batching
+    // loop by rust/tests/serve_load.rs (conservation, pager invariants,
+    // seed replay), and the real-artifact path by
+    // rust/tests/coordinator.rs.
 }

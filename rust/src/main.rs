@@ -14,12 +14,14 @@
 //! * `analyze`    — §4.2 memory-bottleneck decomposition for one shape.
 //! * `quickstart` — execute a real W4A16 artifact through PJRT.
 //! * `serve`      — run the decode-serving coordinator on synthetic load.
+//! * `serve-load` — continuous-batching serve: Poisson/trace arrivals,
+//!   chunked prefill interleaved with decode, KV paging, SLO metrics.
 
 use ascend_w4a16::analysis::{layer, report, residency, roofline, sensitivity, timeline, traffic};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{
-    Admission, BatchPolicy, Batcher, FaultPlan, Router, Server, DEFAULT_MAX_WAIT_US,
-    DEFAULT_QUEUE_CAP,
+    Admission, BatchPolicy, Batcher, FaultPlan, Router, ServeOptions, Server,
+    DEFAULT_MAX_WAIT_US, DEFAULT_PREFILL_CHUNK, DEFAULT_QUEUE_CAP,
 };
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{self, LayerGeometry, MoeGeometry};
@@ -59,6 +61,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("trace") => cmd_trace(args),
         Some("quickstart") => cmd_quickstart(args),
         Some("serve") => cmd_serve(args),
+        Some("serve-load") => cmd_serve_load(args),
         other => {
             if let Some(name) = other {
                 eprintln!("unknown subcommand '{name}'\n");
@@ -134,7 +137,20 @@ USAGE: repro <subcommand> [options]
                                    failures (retried with backoff),
                                    --deadline-us attaches a per-request
                                    SLO, --queue-cap bounds admission
-                                   (overflow sheds with a retry hint)"
+                                   (overflow sheds with a retry hint)
+  serve-load [--model tiny|small100m] [--artifacts DIR] [--batch B]
+             [--requests N] [--mean-gap-us G] [--seed S] [--chunk C]
+             [--queue-cap N] [--deadline-us D]
+             [--fault-rate P --fault-seed S]
+             [--kv-capacity-bytes BYTES] [--page-bytes BYTES]
+             [--trace IN.json] [--trace-out OUT.json]
+                                   continuous-batching serve on the
+                                   virtual clock: seeded Poisson arrivals
+                                   (or a replayed --trace file), chunked
+                                   prefill interleaved against in-flight
+                                   decode, KV-cache paging against the
+                                   HBM budget; reports TTFT / per-token
+                                   latency percentiles and goodput"
     );
 }
 
@@ -597,6 +613,105 @@ fn cmd_quickstart(args: &Args) -> anyhow::Result<()> {
     );
     anyhow::ensure!(got.allclose(&want, 2e-2, 2e-2), "numerics mismatch");
     println!("quickstart OK");
+    Ok(())
+}
+
+fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
+    use ascend_w4a16::workload::ArrivalPlan;
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tiny").to_string();
+    let n_requests = args.get_usize("requests", 64)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let mean_gap_us = args.get_f64("mean-gap-us", 2_000.0)?;
+    let chunk = args.get_usize("chunk", DEFAULT_PREFILL_CHUNK)?;
+    let queue_cap = args.get_usize("queue-cap", DEFAULT_QUEUE_CAP)?;
+    let deadline_us = args.get_usize("deadline-us", 0)? as u64;
+    let fault_rate = args.get_f64("fault-rate", 0.0)?;
+    let fault_seed = args.get_usize("fault-seed", 0x5eed)? as u64;
+    let kv_capacity_bytes = args.get_usize("kv-capacity-bytes", 0)? as u64;
+    let page_bytes = args.get_usize("page-bytes", 0)? as u64;
+
+    let mf = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let router = Router::new(&rt, mf, &model)?;
+    let sizes = router.batch_sizes();
+    let batch = args.get_usize("batch", *sizes.last().unwrap())?;
+    println!("continuous serve on model '{model}': batch {batch}, chunk {chunk}");
+    let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
+    if fault_rate > 0.0 {
+        println!("fault injection: rate {fault_rate:.3}, seed {fault_seed} (deterministic)");
+        server.set_faults(Some(FaultPlan::new(fault_seed, fault_rate)));
+    }
+
+    let max_seq = server.router.engine(batch)?.max_seq();
+    let plan = match args.get("trace") {
+        Some(path) => {
+            let plan = ArrivalPlan::load(std::path::Path::new(path))?;
+            println!("replaying {} arrivals from {path}", plan.arrivals.len());
+            plan
+        }
+        None => {
+            println!(
+                "poisson arrivals: {n_requests} requests, mean gap {mean_gap_us:.0} µs, \
+                 seed {seed}"
+            );
+            ArrivalPlan::poisson(seed, mean_gap_us, n_requests, max_seq)
+        }
+    };
+    if let Some(out) = args.get("trace-out") {
+        plan.save(std::path::Path::new(out))?;
+        println!("wrote arrival trace -> {out}");
+    }
+
+    let mut opts = ServeOptions::new(batch, chunk).with_queue_cap(queue_cap);
+    if deadline_us > 0 {
+        opts = opts.with_deadline_us(deadline_us);
+    }
+    if kv_capacity_bytes > 0 {
+        opts = opts.with_kv_capacity_bytes(kv_capacity_bytes);
+    }
+    if page_bytes > 0 {
+        opts = opts.with_page_bytes(page_bytes);
+    }
+
+    let t0 = std::time::Instant::now();
+    let report = server.serve_load(&plan, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut tally: std::collections::BTreeMap<&str, usize> = Default::default();
+    for r in &report.results {
+        *tally.entry(r.outcome.name()).or_insert(0) += 1;
+    }
+    let tally = tally
+        .iter()
+        .map(|(k, v)| format!("{v} {k}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!(
+        "served {} of {} offered requests in {wall:.2}s ({}) — {} virtual µs",
+        report.results.len(),
+        plan.arrivals.len(),
+        if tally.is_empty() { "none".to_string() } else { tally },
+        report.horizon_us
+    );
+    println!(
+        "kv pager: peak {} / {} pages, drained: {}",
+        report.kv_peak_pages, report.kv_capacity_pages, report.kv_idle
+    );
+    let snapshot = server.metrics.snapshot();
+    println!(
+        "goodput: {:.1} generated tokens/s (virtual)",
+        snapshot.goodput_tokens_per_s(report.horizon_us)
+    );
+    print!("{}", snapshot.render(wall));
+    anyhow::ensure!(
+        snapshot.outcomes_accounted(),
+        "metrics conservation violated: admitted != completed + shed + expired + failed"
+    );
+    anyhow::ensure!(
+        snapshot.sheds_accounted(),
+        "typed shed breakdown does not sum to requests_shed"
+    );
+    anyhow::ensure!(report.kv_idle, "kv pager leaked pages after drain");
     Ok(())
 }
 

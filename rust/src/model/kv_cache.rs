@@ -1,0 +1,222 @@
+//! Paged KV-cache allocator for the continuous-batching serve loop.
+//!
+//! The pager carves the HBM budget left after weights into fixed-size
+//! pages and accounts them per sequence, vLLM-style but conservative:
+//! admission *reserves* the worst case (prompt + full output budget), so
+//! a request admitted once can never fail mid-flight for cache space —
+//! over-capacity admission is a typed shed at the door, not an eviction
+//! storm later.  Actual allocation starts at the prompt footprint and
+//! grows page-by-page as tokens decode, so the live-page telemetry still
+//! reflects real occupancy.
+//!
+//! Invariants (property-tested in `tests/serve_load.rs`):
+//! * allocated pages never exceed reserved pages never exceed capacity;
+//! * a sequence's pages are monotone non-decreasing until terminal;
+//! * after every sequence reaches a terminal outcome, zero pages remain.
+
+use std::collections::HashMap;
+
+use crate::ascend::MachineConfig;
+
+/// Default KV page size: 2 MiB, large enough that page counts stay small
+/// at paper-model token widths, small enough to track occupancy.
+pub const DEFAULT_PAGE_BYTES: u64 = 2 << 20;
+
+/// KV bytes one decoded token pins for the whole model: `layers` layers,
+/// K and V planes of `kv` width each, FP16.
+pub fn kv_bytes_per_token(layers: usize, kv_width: usize) -> u64 {
+    layers as u64 * 2 * kv_width as u64 * 2
+}
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    bytes_per_token: u64,
+    /// Worst-case pages reserved at admission (prompt + output budget).
+    reserved_pages: u64,
+    /// Pages actually allocated so far (grows with decoded tokens).
+    pages: u64,
+    /// Tokens currently resident (prompt + generated).
+    tokens: usize,
+}
+
+/// Fixed-page KV-cache allocator over an HBM capacity budget.
+#[derive(Debug, Clone)]
+pub struct KvPager {
+    page_bytes: u64,
+    capacity_pages: u64,
+    reserved_pages: u64,
+    allocated_pages: u64,
+    peak_allocated_pages: u64,
+    seqs: HashMap<u64, SeqAlloc>,
+}
+
+impl KvPager {
+    pub fn new(page_bytes: u64, capacity_bytes: u64) -> KvPager {
+        let page_bytes = page_bytes.max(1);
+        KvPager {
+            page_bytes,
+            capacity_pages: capacity_bytes / page_bytes,
+            reserved_pages: 0,
+            allocated_pages: 0,
+            peak_allocated_pages: 0,
+            seqs: HashMap::new(),
+        }
+    }
+
+    /// Pager over the machine's HBM budget net of resident weights.
+    pub fn for_machine(machine: &MachineConfig, weight_bytes: u64, page_bytes: u64) -> KvPager {
+        KvPager::new(page_bytes, machine.hbm_capacity_bytes.saturating_sub(weight_bytes))
+    }
+
+    /// Pages needed to hold `tokens` tokens at `bytes_per_token`.
+    pub fn pages_for(&self, tokens: usize, bytes_per_token: u64) -> u64 {
+        (tokens as u64 * bytes_per_token).div_ceil(self.page_bytes)
+    }
+
+    /// Admit a sequence, reserving its worst-case footprint and allocating
+    /// its prompt pages.  Returns `false` (caller sheds) when the
+    /// reservation does not fit the remaining capacity.
+    pub fn try_admit(
+        &mut self,
+        id: u64,
+        prompt_tokens: usize,
+        max_new_tokens: usize,
+        bytes_per_token: u64,
+    ) -> bool {
+        assert!(!self.seqs.contains_key(&id), "sequence {id} admitted twice");
+        let worst = self.pages_for(prompt_tokens + max_new_tokens, bytes_per_token);
+        if self.reserved_pages + worst > self.capacity_pages {
+            return false;
+        }
+        let pages = self.pages_for(prompt_tokens, bytes_per_token);
+        self.reserved_pages += worst;
+        self.allocated_pages += pages;
+        self.peak_allocated_pages = self.peak_allocated_pages.max(self.allocated_pages);
+        self.seqs.insert(
+            id,
+            SeqAlloc { bytes_per_token, reserved_pages: worst, pages, tokens: prompt_tokens },
+        );
+        true
+    }
+
+    /// Grow a sequence by one decoded token.  Cannot fail: admission
+    /// reserved the worst case, so growth stays within the reservation.
+    pub fn grow(&mut self, id: u64) {
+        let seq = self.seqs.get_mut(&id).expect("grow on unknown sequence");
+        seq.tokens += 1;
+        let need = (seq.tokens as u64 * seq.bytes_per_token).div_ceil(self.page_bytes);
+        if need > seq.pages {
+            let delta = need - seq.pages;
+            seq.pages = need;
+            self.allocated_pages += delta;
+            self.peak_allocated_pages = self.peak_allocated_pages.max(self.allocated_pages);
+        }
+        debug_assert!(seq.pages <= seq.reserved_pages, "growth escaped its reservation");
+        debug_assert!(self.allocated_pages <= self.capacity_pages);
+    }
+
+    /// Release a sequence on any terminal outcome (completed, expired,
+    /// failed).  Returns the pages freed.
+    pub fn release(&mut self, id: u64) -> u64 {
+        let seq = self.seqs.remove(&id).expect("release on unknown sequence");
+        self.reserved_pages -= seq.reserved_pages;
+        self.allocated_pages -= seq.pages;
+        seq.pages
+    }
+
+    /// Pages currently allocated to `id`, if resident.
+    pub fn pages_of(&self, id: u64) -> Option<u64> {
+        self.seqs.get(&id).map(|s| s.pages)
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn capacity_pages(&self) -> u64 {
+        self.capacity_pages
+    }
+
+    pub fn allocated_pages(&self) -> u64 {
+        self.allocated_pages
+    }
+
+    pub fn reserved_pages(&self) -> u64 {
+        self.reserved_pages
+    }
+
+    pub fn peak_allocated_pages(&self) -> u64 {
+        self.peak_allocated_pages
+    }
+
+    /// Sequences currently resident.
+    pub fn in_flight(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// True when every page has been returned — the leak check.
+    pub fn idle(&self) -> bool {
+        self.seqs.is_empty() && self.allocated_pages == 0 && self.reserved_pages == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_grow_release_round_trip() {
+        let mut p = KvPager::new(1024, 16 * 1024);
+        assert_eq!(p.capacity_pages(), 16);
+        // 4 prompt tokens at 256 B/token = 1 page; worst case 4+8 tokens = 3 pages.
+        assert!(p.try_admit(7, 4, 8, 256));
+        assert_eq!(p.allocated_pages(), 1);
+        assert_eq!(p.reserved_pages(), 3);
+        for _ in 0..8 {
+            p.grow(7);
+        }
+        assert_eq!(p.pages_of(7), Some(3));
+        assert_eq!(p.release(7), 3);
+        assert!(p.idle());
+    }
+
+    #[test]
+    fn admission_sheds_past_capacity_and_never_overcommits() {
+        let mut p = KvPager::new(1024, 4 * 1024);
+        assert!(p.try_admit(0, 4, 4, 256)); // reserves 2 pages
+        assert!(p.try_admit(1, 4, 4, 256)); // reserves 2 more: full
+        assert!(!p.try_admit(2, 1, 1, 256), "capacity exhausted must shed");
+        // Growth within reservations can never exceed capacity.
+        for _ in 0..4 {
+            p.grow(0);
+            p.grow(1);
+        }
+        assert!(p.allocated_pages() <= p.capacity_pages());
+        p.release(0);
+        assert!(p.try_admit(2, 1, 1, 256), "released pages re-admit");
+        p.release(1);
+        p.release(2);
+        assert!(p.idle());
+        assert_eq!(p.peak_allocated_pages(), 4);
+    }
+
+    #[test]
+    fn growth_is_monotone() {
+        let mut p = KvPager::new(512, 1 << 20);
+        assert!(p.try_admit(3, 2, 64, 128));
+        let mut last = p.pages_of(3).unwrap();
+        for _ in 0..64 {
+            p.grow(3);
+            let now = p.pages_of(3).unwrap();
+            assert!(now >= last, "pages must be monotone until terminal");
+            last = now;
+        }
+    }
+
+    #[test]
+    fn machine_budget_nets_out_weights() {
+        let m = MachineConfig::ascend910();
+        let p = KvPager::for_machine(&m, 8 << 30, DEFAULT_PAGE_BYTES);
+        assert_eq!(p.capacity_pages(), (24u64 << 30) / DEFAULT_PAGE_BYTES);
+    }
+}

@@ -2,7 +2,9 @@
 //! engine that drives the AOT decode-step artifacts.
 
 pub mod decode;
+pub mod kv_cache;
 pub mod llm;
 
 pub use decode::{synthetic_next_token, DecodeEngine, Engine, SimEngine, StepOutput};
+pub use kv_cache::{kv_bytes_per_token, KvPager, DEFAULT_PAGE_BYTES};
 pub use llm::{paper_shapes, LlmShape, PAPER_BATCH_SIZES};

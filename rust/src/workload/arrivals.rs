@@ -1,0 +1,195 @@
+//! Request-arrival processes for the continuous-batching serve loop:
+//! seeded Poisson traffic and replayable trace files (DESIGN.md §15).
+//!
+//! Arrivals are *plans*, not live streams: a plan is materialized up
+//! front (timestamps quantized to whole virtual-clock microseconds, so
+//! every downstream scheduling decision is integer-exact), can be saved
+//! to / loaded from a JSON trace file, and replays bit-identically — the
+//! seed-replay determinism property in `tests/serve_load.rs` and the
+//! `BENCH_serve.json` mirror both lean on this.
+//!
+//! Prompt token *values* are a pure keyed hash of (request id, position),
+//! not PRNG draws, so a trace that stores only lengths still replays the
+//! exact token stream.
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// One planned request arrival on the virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrival {
+    /// Virtual-clock arrival time (µs).
+    pub at_us: u64,
+    /// Prompt length in tokens (≥ 2: at least one prefill + one decode).
+    pub prompt_len: usize,
+    /// Output budget in tokens.
+    pub max_new_tokens: usize,
+}
+
+/// A materialized arrival schedule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArrivalPlan {
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Deterministic prompt token for (request, position): a splitmix-style
+/// hash into [1, vocab - 1], matching the generator's "never 0 or the
+/// top id" convention.
+pub fn prompt_token(request_id: u64, position: usize, vocab: usize) -> i32 {
+    let mut z = request_id
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((position as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+        .wrapping_add(0xD6E8_FEB8_6659_FD93);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (1 + (z % (vocab.max(3) as u64 - 2))) as i32
+}
+
+impl ArrivalPlan {
+    /// Seeded Poisson arrivals: exponential gaps with the given mean,
+    /// rounded *up* to whole microseconds (never zero, so arrival order
+    /// is total), with prompt/output lengths drawn the same way the
+    /// burst-mode [`crate::workload::RequestGenerator`] draws them.
+    pub fn poisson(seed: u64, mean_gap_us: f64, count: usize, max_seq: usize) -> ArrivalPlan {
+        let mut rng = Rng::new(seed);
+        let rate = 1.0 / mean_gap_us.max(1.0);
+        let mut at_us = 0u64;
+        let mut arrivals = Vec::with_capacity(count);
+        for _ in 0..count {
+            at_us += (rng.exponential(rate).ceil() as u64).max(1);
+            let prompt_len = rng.usize_range(2, (max_seq / 4).max(2));
+            let budget_cap = (max_seq - prompt_len).saturating_sub(1).max(1);
+            let max_new_tokens =
+                rng.usize_range(4.min(budget_cap), (max_seq / 2).min(budget_cap));
+            arrivals.push(Arrival { at_us, prompt_len, max_new_tokens });
+        }
+        ArrivalPlan { arrivals }
+    }
+
+    /// Total output budget across the plan (goodput denominator bound).
+    pub fn offered_tokens(&self) -> u64 {
+        self.arrivals.iter().map(|a| a.max_new_tokens as u64).sum()
+    }
+
+    /// Makespan of the offered load (µs of the last arrival).
+    pub fn horizon_us(&self) -> u64 {
+        self.arrivals.last().map(|a| a.at_us).unwrap_or(0)
+    }
+
+    /// Serialize to the trace-file digest.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "arrivals",
+            Json::arr(
+                self.arrivals
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("at_us", Json::num(a.at_us as f64)),
+                            ("prompt_len", Json::num(a.prompt_len as f64)),
+                            ("max_new_tokens", Json::num(a.max_new_tokens as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Parse a trace-file digest (arrival times must be non-decreasing).
+    pub fn from_json(j: &Json) -> anyhow::Result<ArrivalPlan> {
+        let mut arrivals = Vec::new();
+        let mut last = 0u64;
+        for a in j.req_arr("arrivals")? {
+            let at_us = a.req("at_us")?.as_f64().unwrap_or(-1.0);
+            anyhow::ensure!(at_us >= 0.0, "at_us must be a non-negative number");
+            let at_us = at_us as u64;
+            anyhow::ensure!(at_us >= last, "trace arrivals must be time-ordered");
+            last = at_us;
+            let prompt_len = a.req_usize("prompt_len")?;
+            let max_new_tokens = a.req_usize("max_new_tokens")?;
+            anyhow::ensure!(prompt_len >= 2, "prompt_len must be >= 2");
+            anyhow::ensure!(max_new_tokens >= 1, "max_new_tokens must be >= 1");
+            arrivals.push(Arrival { at_us, prompt_len, max_new_tokens });
+        }
+        Ok(ArrivalPlan { arrivals })
+    }
+
+    /// Write the plan as a replayable trace file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Load a trace file written by [`ArrivalPlan::save`] (or by hand).
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ArrivalPlan> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e:?}", path.display()))?;
+        ArrivalPlan::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seed_deterministic_and_ordered() {
+        let a = ArrivalPlan::poisson(7, 500.0, 64, 128);
+        let b = ArrivalPlan::poisson(7, 500.0, 64, 128);
+        assert_eq!(a, b);
+        assert_ne!(a, ArrivalPlan::poisson(8, 500.0, 64, 128));
+        let mut last = 0;
+        for arr in &a.arrivals {
+            assert!(arr.at_us > last, "gaps are at least 1 µs");
+            last = arr.at_us;
+            assert!(arr.prompt_len >= 2);
+            assert!(arr.prompt_len + arr.max_new_tokens < 128);
+        }
+    }
+
+    #[test]
+    fn mean_gap_roughly_holds() {
+        let plan = ArrivalPlan::poisson(3, 1000.0, 4000, 64);
+        let mean = plan.horizon_us() as f64 / plan.arrivals.len() as f64;
+        assert!((mean - 1000.0).abs() < 100.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn trace_round_trips_bit_identically() {
+        let plan = ArrivalPlan::poisson(11, 250.0, 32, 96);
+        let back = ArrivalPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+        let dir = std::env::temp_dir().join("ascend_w4a16_arrivals_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        plan.save(&path).unwrap();
+        assert_eq!(ArrivalPlan::load(&path).unwrap(), plan);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_traces_are_rejected() {
+        let j = Json::parse(
+            r#"{"arrivals": [{"at_us": 5, "prompt_len": 4, "max_new_tokens": 2},
+                             {"at_us": 3, "prompt_len": 4, "max_new_tokens": 2}]}"#,
+        )
+        .unwrap();
+        assert!(ArrivalPlan::from_json(&j).is_err(), "out-of-order trace must fail");
+        let j = Json::parse(r#"{"arrivals": [{"at_us": 1, "prompt_len": 1, "max_new_tokens": 2}]}"#)
+            .unwrap();
+        assert!(ArrivalPlan::from_json(&j).is_err(), "prompt_len < 2 must fail");
+    }
+
+    #[test]
+    fn prompt_tokens_are_pure_and_in_range() {
+        for id in 0..8u64 {
+            for pos in 0..32usize {
+                let t = prompt_token(id, pos, 512);
+                assert_eq!(t, prompt_token(id, pos, 512));
+                assert!((1..511).contains(&t));
+            }
+        }
+        assert_ne!(prompt_token(1, 0, 512), prompt_token(2, 0, 512));
+    }
+}

@@ -1,11 +1,17 @@
 //! Workload generators for benches, examples and tests, plus the
-//! decode-layer GEMM graph and full decode-step graph ([`decode_layer`]).
+//! decode-layer GEMM graph, the full decode-step graph
+//! ([`decode_layer`]), the causal prefill chunk graph ([`prefill`]) and
+//! the serving arrival processes ([`arrivals`]).
 
+pub mod arrivals;
 pub mod decode_layer;
+pub mod prefill;
 
+pub use arrivals::{prompt_token, Arrival, ArrivalPlan};
 pub use decode_layer::{
     DecodeLayer, DecodeStep, GemmKind, GemmNode, StepNode, VectorOp, VectorOpKind,
 };
+pub use prefill::PrefillStep;
 
 use crate::coordinator::DecodeRequest;
 use crate::kernels::GemmProblem;

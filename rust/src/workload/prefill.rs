@@ -1,0 +1,253 @@
+//! Prefill step graph: the large-M chunk a serving scheduler runs to
+//! ingest prompt tokens, built from the same [`DecodeLayer`] GEMM chain
+//! and vector-pass vocabulary as the decode step (DESIGN.md §15).
+//!
+//! Where a decode step is M=batch rows each attending a full `kv_len`
+//! cache, a prefill chunk is `m` *consecutive positions of one sequence*
+//! with causal attention: row `i` (at absolute position `kv_base + i`)
+//! attends the `kv_base + i + 1` keys at or before it.  The score/AV
+//! passes are therefore sized by the exact causal context
+//!
+//! ```text
+//! ctx(m, kv_base) = m * kv_base + m * (m + 1) / 2
+//! ```
+//!
+//! — integer math, so the golden fixtures and the Python mirrors
+//! reproduce it bit-for-bit.  The projection GEMMs are the decode
+//! problems at M = m: exactly the "large-M variant" the paper's K >> N
+//! analysis says shifts shapes back toward the compute-bound regime, and
+//! why prefill chunks route through the same tune cache as decode.
+
+use crate::model::llm::LayerGeometry;
+use crate::workload::decode_layer::{DecodeLayer, GemmNode, StepNode, VectorOp, VectorOpKind};
+
+/// One causal prefill chunk of a decoder layer: `layer.batch` prompt
+/// tokens entering at absolute positions `[kv_base, kv_base + m)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillStep {
+    /// Layer graph with `batch` = the chunk's token count `m`.
+    pub layer: DecodeLayer,
+    /// KV-cache tokens already resident before this chunk.
+    pub kv_base: usize,
+    /// Attention head count (scores are priced per head).
+    pub heads: usize,
+}
+
+impl PrefillStep {
+    pub fn new(layer: DecodeLayer, kv_base: usize, heads: usize) -> PrefillStep {
+        PrefillStep { layer, kv_base, heads: heads.max(1) }
+    }
+
+    /// Default head count for a geometry (same rule as decode).
+    pub fn default_heads(geometry: &LayerGeometry) -> usize {
+        (geometry.hidden / 128).max(1)
+    }
+
+    /// Chunk token count `m`.
+    pub fn chunk_tokens(&self) -> usize {
+        self.layer.batch
+    }
+
+    /// KV-cache length after the chunk lands.
+    pub fn kv_end(&self) -> usize {
+        self.kv_base + self.layer.batch
+    }
+
+    /// Exact causal context: total (query, key) pairs the chunk attends.
+    pub fn causal_ctx(&self) -> u64 {
+        let m = self.layer.batch as u64;
+        m * self.kv_base as u64 + m * (m + 1) / 2
+    }
+
+    /// All step nodes in issue order — the decode-step graph shape with
+    /// the attention passes resized to the causal context.
+    pub fn nodes(&self) -> Vec<StepNode> {
+        let g = self.layer.geometry;
+        let m = self.layer.batch as u64;
+        let h = g.hidden as u64;
+        let kvw = g.kv as u64;
+        let heads = self.heads as u64;
+        let head_dim = g.hidden as f64 / self.heads as f64;
+        let ctx = self.causal_ctx();
+        let scores = heads * ctx;
+
+        let norm = StepNode::Vector(VectorOp {
+            kind: VectorOpKind::RmsNorm,
+            elems: m * h,
+            ops_per_elem: 6.0,
+            hbm_bytes: 0,
+            l2_bytes: 2 * m * h * 2,
+        });
+        let residual = StepNode::Vector(VectorOp {
+            kind: VectorOpKind::Residual,
+            elems: m * h,
+            ops_per_elem: 1.0,
+            hbm_bytes: 0,
+            l2_bytes: 3 * m * h * 2,
+        });
+        let gemm = |node: GemmNode| StepNode::Gemm(node);
+        let dense = |kind| GemmNode { kind, problem: self.layer.problem(kind), count: 1 };
+
+        use crate::workload::decode_layer::GemmKind;
+        let mut nodes = vec![
+            norm,
+            gemm(dense(GemmKind::Qkv)),
+            // Causal Q · Kᵀ: row i reads the kv_base + i + 1 keys at or
+            // before it, so the cold K read and the score count are both
+            // `ctx` rows, not m * kv_len.
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnScore,
+                elems: scores,
+                ops_per_elem: 2.0 * head_dim,
+                hbm_bytes: ctx * kvw * 2,
+                l2_bytes: m * h * 2 + scores * 2,
+            }),
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnSoftmax,
+                elems: scores,
+                ops_per_elem: 8.0,
+                hbm_bytes: 0,
+                l2_bytes: 2 * scores * 2,
+            }),
+            StepNode::Vector(VectorOp {
+                kind: VectorOpKind::AttnAv,
+                elems: scores,
+                ops_per_elem: 2.0 * head_dim,
+                hbm_bytes: ctx * kvw * 2,
+                l2_bytes: scores * 2 + m * h * 2,
+            }),
+            gemm(dense(GemmKind::AttnOut)),
+            residual,
+            norm,
+        ];
+
+        match self.layer.moe_nodes() {
+            None => {
+                let ffn = g.ffn as u64;
+                nodes.push(gemm(dense(GemmKind::UpGate)));
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::Activation,
+                    elems: m * ffn,
+                    ops_per_elem: 4.0,
+                    hbm_bytes: 0,
+                    l2_bytes: 3 * m * ffn * 2,
+                }));
+                nodes.push(gemm(dense(GemmKind::Down)));
+            }
+            Some([up, down]) => {
+                let moe = self.layer.moe.unwrap();
+                let experts = moe.experts as u64;
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::MoeRoute,
+                    elems: m * experts,
+                    ops_per_elem: 2.0 * g.hidden as f64 + 8.0,
+                    hbm_bytes: h * experts * 2,
+                    l2_bytes: m * h * 2 + m * experts * 2,
+                }));
+                nodes.push(gemm(up));
+                let routed = (up.count * up.problem.m) as u64;
+                let ef = moe.expert_ffn as u64;
+                nodes.push(StepNode::Vector(VectorOp {
+                    kind: VectorOpKind::Activation,
+                    elems: routed * ef,
+                    ops_per_elem: 4.0,
+                    hbm_bytes: 0,
+                    l2_bytes: 3 * routed * ef * 2,
+                }));
+                nodes.push(gemm(down));
+            }
+        }
+        nodes.push(residual);
+        nodes
+    }
+
+    /// The GEMM sub-chain of the chunk, in issue order.
+    pub fn gemm_nodes(&self) -> Vec<GemmNode> {
+        self.layer.gemm_nodes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llm::{layer_geometry, moe_geometry};
+    use crate::workload::decode_layer::{DecodeStep, GemmKind};
+
+    #[test]
+    fn causal_ctx_is_exact() {
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 4);
+        // m=4 at kv_base=10: rows attend 11 + 12 + 13 + 14 = 50 keys.
+        let step = PrefillStep::new(layer, 10, 16);
+        assert_eq!(step.causal_ctx(), 50);
+        assert_eq!(step.kv_end(), 14);
+        // First chunk (kv_base = 0): pure triangle m(m+1)/2.
+        assert_eq!(PrefillStep::new(layer, 0, 16).causal_ctx(), 10);
+    }
+
+    #[test]
+    fn graph_shape_matches_decode_with_causal_attention() {
+        let geometry = layer_geometry("llama32").unwrap();
+        let m = 512;
+        let heads = PrefillStep::default_heads(&geometry);
+        let prefill = PrefillStep::new(DecodeLayer::new(geometry, m), 0, heads);
+        let decode = DecodeStep::new(DecodeLayer::new(geometry, m), 1, heads);
+        let names = |nodes: &[StepNode]| -> Vec<&str> {
+            nodes
+                .iter()
+                .map(|n| match n {
+                    StepNode::Gemm(g) => g.kind.name(),
+                    StepNode::Vector(v) => v.kind.name(),
+                })
+                .collect()
+        };
+        assert_eq!(names(&prefill.nodes()), names(&decode.nodes()));
+        // The projection GEMMs are the decode problems at M = m.
+        for (p, d) in prefill.gemm_nodes().iter().zip(decode.gemm_nodes()) {
+            assert_eq!(p.problem, d.problem);
+        }
+        assert_eq!(prefill.gemm_nodes()[0].problem.m, m);
+    }
+
+    #[test]
+    fn attention_traffic_uses_the_causal_context() {
+        let geometry = layer_geometry("llama32").unwrap();
+        let step = PrefillStep::new(DecodeLayer::new(geometry, 512), 0, 16);
+        let ctx = step.causal_ctx();
+        assert_eq!(ctx, 512 * 513 / 2);
+        let score = step
+            .nodes()
+            .into_iter()
+            .find_map(|n| match n {
+                StepNode::Vector(v) if v.kind == VectorOpKind::AttnScore => Some(v),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(score.elems, 16 * ctx);
+        assert_eq!(score.hbm_bytes, ctx * geometry.kv as u64 * 2);
+        // A later chunk of the same sequence attends strictly more.
+        let later = PrefillStep::new(DecodeLayer::new(geometry, 512), 1024, 16);
+        assert!(later.causal_ctx() > ctx);
+    }
+
+    #[test]
+    fn moe_prefill_routes_all_chunk_tokens() {
+        let geom = layer_geometry("deepseek-moe").unwrap();
+        let moe = moe_geometry("deepseek-moe").unwrap();
+        let step = PrefillStep::new(DecodeLayer::new(geom, 256).with_moe(moe), 0, 56);
+        let kinds: Vec<&str> = step
+            .nodes()
+            .iter()
+            .map(|n| match n {
+                StepNode::Gemm(g) => g.kind.name(),
+                StepNode::Vector(v) => v.kind.name(),
+            })
+            .collect();
+        assert!(kinds.contains(&"moe_route"));
+        let experts = step.gemm_nodes().iter().filter(|n| n.kind == GemmKind::MoeExpert).count();
+        assert_eq!(experts, 2);
+        // 256 tokens top-8 saturate all 256 experts with 8 tokens each.
+        let up = step.gemm_nodes()[2];
+        assert_eq!((up.count, up.problem.m), (256, 8));
+        step.layer.validate().unwrap();
+    }
+}

@@ -15,13 +15,13 @@
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::coordinator::{
     Admission, BatchPolicy, Batcher, DecodeRequest, DecodeResult, FaultKind, FaultPlan, Outcome,
-    RouteRung, Router, Server,
+    RouteRung, Router, ServeOptions, Server, ADMISSION_FAULT_NAME, CACHE_WRITE_FAULT_NAME,
 };
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
 use ascend_w4a16::tune::Tuner;
 use ascend_w4a16::util::proptest::forall;
-use ascend_w4a16::workload::{DecodeLayer, RequestGenerator};
+use ascend_w4a16::workload::{Arrival, ArrivalPlan, DecodeLayer, RequestGenerator};
 
 /// Three config-only decode artifacts (batch 1/2/4) — the router builds
 /// synthetic engines, so the whole coordinator stack runs end to end.
@@ -378,6 +378,80 @@ fn exhausted_retries_fail_members_not_the_server() {
     let results = server.drain().unwrap();
     assert_eq!(results[0].outcome, Outcome::Completed);
     assert!(server.metrics.snapshot().outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn admission_faults_shed_typed_and_close_conservation() {
+    // Rate 1.0: every serve-path admission faults, so the whole plan is
+    // shed under the `admission_fault` reason — no request ever holds a
+    // slot or a KV page, and the conservation ledger still closes.
+    let dir = chaos_dir("admit-fault");
+    let rt = Runtime::cpu().unwrap();
+    let mut server = build_server(&rt, &dir, 1024, Some(FaultPlan::new(9, 1.0)));
+    let plan = ArrivalPlan::poisson(3, 10.0, 6, 64);
+    let opts = ServeOptions::new(4, 4).with_queue_cap(1024);
+    let report = server.serve_load(&plan, &opts).unwrap();
+    assert!(report.results.is_empty(), "shed requests never reach a slot");
+    assert!(report.kv_idle);
+    assert_eq!(report.kv_peak_pages, 0, "no admission, no pages");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_admitted, 6);
+    assert_eq!(snap.requests_shed, 6);
+    assert_eq!(snap.shed_reasons.get(ADMISSION_FAULT_NAME), Some(&6));
+    assert_eq!(snap.faults.get(ADMISSION_FAULT_NAME), Some(&6));
+    assert!(snap.outcomes_accounted());
+    assert!(snap.sheds_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_write_fault_fails_the_request_with_partial_tokens() {
+    // Find a plan that admits request 0, survives every decode tick
+    // within the retry budget, but draws a KV-cache write fault before
+    // the 8-token budget completes.  Cache-write faults are not
+    // retryable — the request must end Failed with exactly the tokens
+    // generated before the lost write, typed in the fault ledger.
+    let dir = chaos_dir("cache-fault");
+    let rt = Runtime::cpu().unwrap();
+    let rate = 0.5;
+    let (plan, first_fault) = (0u64..)
+        .map(|seed| FaultPlan::new(seed, rate))
+        .find_map(|p| {
+            if p.admission_fault(0) {
+                return None;
+            }
+            let first = (0..8u64).find(|&t| p.cache_write_fault(0, t))?;
+            let survivable =
+                (0..32u64).all(|s| (0..4u32).any(|a| p.step_fault(0, s, a).is_none()));
+            survivable.then_some((p, first))
+        })
+        .unwrap();
+    let mut server = build_server(&rt, &dir, 1024, Some(plan));
+    let arrivals = ArrivalPlan {
+        arrivals: vec![Arrival { at_us: 0, prompt_len: 4, max_new_tokens: 8 }],
+    };
+    let opts = ServeOptions::new(1, 4).with_queue_cap(8);
+    let report = server.serve_load(&arrivals, &opts).unwrap();
+    assert!(report.kv_idle, "the failed slot must release its pages");
+    assert_eq!(report.results.len(), 1);
+    let r = &report.results[0];
+    assert_eq!(r.outcome, Outcome::Failed);
+    assert!(
+        r.error.as_deref().unwrap().contains("cache write fault"),
+        "typed cause expected: {:?}",
+        r.error
+    );
+    assert_eq!(
+        r.tokens.len() as u64,
+        first_fault,
+        "generation must stop at the lost write"
+    );
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests_failed, 1);
+    assert!(snap.faults.get(CACHE_WRITE_FAULT_NAME).copied().unwrap_or(0) >= 1);
+    assert!(snap.outcomes_accounted());
+    assert!(snap.sheds_accounted());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

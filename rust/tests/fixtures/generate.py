@@ -332,6 +332,57 @@ def decode_step(batch, kv_len, heads, hidden, ffn, kv, moe=None):
             "hidden": hidden, "ffn": ffn, "kv": kv, "moe": moe, "nodes": nodes}
 
 
+# --- causal prefill chunk graph (workload/prefill.rs PrefillStep::nodes) ---
+
+def prefill_step(m, kv_base, heads, hidden, ffn, kv, moe=None):
+    """Mirror of `PrefillStep::nodes` + `golden::prefill_step_to_json`:
+    the decode graph with the attention passes sized by the exact causal
+    context ctx = m*kv_base + m*(m+1)/2 (row i attends kv_base + i + 1
+    keys), scores = heads*ctx."""
+    h = hidden
+    head_dim = hidden // heads  # presets use 128-wide heads exactly
+    assert head_dim * heads == hidden
+    ctx = m * kv_base + m * (m + 1) // 2
+    scores = heads * ctx
+    norm = vec_node("rmsnorm", m * h, 6, 0, 2 * m * h * 2)
+    residual = vec_node("residual", m * h, 1, 0, 3 * m * h * 2)
+    nodes = [
+        norm,
+        gemm_node("qkv", m, h + 2 * kv, h, 1),
+        vec_node("attn_score", scores, 2 * head_dim,
+                 ctx * kv * 2, m * h * 2 + scores * 2),
+        vec_node("attn_softmax", scores, 8, 0, 2 * scores * 2),
+        vec_node("attn_av", scores, 2 * head_dim,
+                 ctx * kv * 2, scores * 2 + m * h * 2),
+        gemm_node("attn_out", m, h, h, 1),
+        residual,
+        norm,
+    ]
+    if moe is None:
+        nodes += [
+            gemm_node("up_gate", m, 2 * ffn, h, 1),
+            vec_node("activation", m * ffn, 4, 0, 3 * m * ffn * 2),
+            gemm_node("down", m, h, ffn, 1),
+        ]
+    else:
+        experts, topk, ef = moe["experts"], moe["topk"], moe["expert_ffn"]
+        pairs = m * topk
+        active = max(1, min(experts, pairs))
+        tokens = -(-pairs // active)  # ceil division (balanced routing)
+        routed = active * tokens
+        nodes += [
+            vec_node("moe_route", m * experts, 2 * h + 8,
+                     h * experts * 2, m * h * 2 + m * experts * 2),
+            gemm_node("moe_expert", tokens, 2 * ef, h, active),
+            vec_node("activation", routed * ef, 4, 0, 3 * routed * ef * 2),
+            gemm_node("moe_expert", tokens, h, ef, active),
+        ]
+    nodes.append(residual)
+    return {"chunk": m, "kv_base": kv_base, "kv_end": kv_base + m,
+            "causal_ctx": ctx, "heads": heads, "hidden": hidden, "ffn": ffn,
+            "kv": kv, "moe": moe, "nodes": nodes}
+
+
 FIXTURES = {
     "splitk_m8_n512_k16384_pipelined":
         splitk(8, 512, 16384, tiling(16, 256, 64, 16, 1), "pipelined"),
@@ -376,6 +427,14 @@ FIXTURES = {
     "decode_step_deepseek_moe_b8":
         decode_step(8, 2048, 56, 7168, 2048, 1536,
                     moe={"experts": 256, "topk": 8, "expert_ffn": 2048}),
+    # Causal prefill chunk graphs (DESIGN §15): the LLaMA-3.2 dense trunk
+    # ingesting a 512-token chunk mid-prompt, and the DeepSeek-MoE trunk
+    # whose 256-token chunk saturates all 256 routed experts.
+    "prefill_step_llama32_m512":
+        prefill_step(512, 1024, 16, 2048, 8192, 2048),
+    "prefill_step_deepseek_moe_m256":
+        prefill_step(256, 512, 56, 7168, 2048, 1536,
+                     moe={"experts": 256, "topk": 8, "expert_ffn": 2048}),
 }
 
 

@@ -17,7 +17,7 @@ use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
 use ascend_w4a16::model::llm::{layer_geometry, moe_geometry};
 use ascend_w4a16::util::json::Json;
-use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep, PrefillStep};
 
 fn machine() -> MachineConfig {
     MachineConfig::ascend910()
@@ -233,4 +233,26 @@ fn moe_decode_step_graph_matches_golden() {
         .with_moe(moe_geometry("deepseek-moe").unwrap());
     let step = DecodeStep::new(layer, 2048, 56);
     check_json("decode_step_deepseek_moe_b8", golden::step_to_json(&step));
+}
+
+#[test]
+fn dense_prefill_step_graph_matches_golden() {
+    // A 512-token LLaMA-3.2 prefill chunk landing mid-prompt (kv_base
+    // 1024): the digest pins the causal-context arithmetic (ctx =
+    // m*kv_base + m(m+1)/2) and the attention passes it sizes.
+    let geometry = layer_geometry("llama32").unwrap();
+    let heads = PrefillStep::default_heads(&geometry);
+    let step = PrefillStep::new(DecodeLayer::new(geometry, 512), 1024, heads);
+    check_json("prefill_step_llama32_m512", golden::prefill_step_to_json(&step));
+}
+
+#[test]
+fn moe_prefill_step_graph_matches_golden() {
+    // A 256-token DeepSeek-MoE prefill chunk: top-8 routing saturates
+    // all 256 experts at 8 tokens each — the large-M expert fan-out the
+    // serve loop prices between decode ticks.
+    let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 256)
+        .with_moe(moe_geometry("deepseek-moe").unwrap());
+    let step = PrefillStep::new(layer, 512, 56);
+    check_json("prefill_step_deepseek_moe_m256", golden::prefill_step_to_json(&step));
 }

@@ -1,0 +1,422 @@
+//! Continuous-batching serve-loop property suite (DESIGN.md §15):
+//! seeded Poisson arrival plans driven through `Server::serve_load` on
+//! synthetic (config-only) manifests, from idle trickle to deep
+//! overload.
+//!
+//! The invariants:
+//! * arrival plans are well-formed and replay bit-identically from the
+//!   seed, through JSON, and through disk;
+//! * outcome conservation — `admitted == completed + shed + expired +
+//!   failed` — holds for every load level, queue cap, deadline, KV
+//!   budget and fault rate, and the typed shed breakdown closes;
+//! * the KV pager never exceeds its capacity and always drains to zero
+//!   pages (no leaks), including when tight capacity sheds admissions;
+//! * the same seed reproduces the same serve run bit-for-bit, and the
+//!   completed token streams are invariant to the prefill chunk size;
+//! * the router's re-tune token bucket refills on the virtual clock and
+//!   `background_retune` promotes a degraded route to the `full` rung.
+
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::coordinator::{
+    BatchPolicy, Batcher, FaultPlan, Outcome, RouteRung, Router, ServeOptions, Server,
+};
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{ArrivalPlan, DecodeLayer};
+
+/// Three config-only decode artifacts (batch 1/2/4) — the same tiny
+/// model the chaos harness serves, so the router builds synthetic
+/// engines and no PJRT artifacts are needed.
+fn manifest_json() -> String {
+    let artifact = |batch: usize| {
+        format!(
+            r#"    {{
+      "name": "decode_tiny_b{batch}",
+      "kind": "decode",
+      "path": "decode_tiny_b{batch}.hlo.txt",
+      "model": "tiny",
+      "batch": {batch},
+      "config": {{"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0}},
+      "inputs": [],
+      "outputs": []
+    }}"#
+        )
+    };
+    format!(
+        "{{\n  \"group\": 128,\n  \"batch_sizes\": [1, 2, 4],\n  \"paper_shapes\": [],\n  \"artifacts\": [\n{},\n{},\n{}\n  ]\n}}",
+        artifact(1),
+        artifact(2),
+        artifact(4)
+    )
+}
+
+fn decode_config() -> DecodeConfig {
+    DecodeConfig {
+        vocab: 512,
+        hidden: 256,
+        layers: 2,
+        heads: 4,
+        ffn: 1024,
+        max_seq: 64,
+        group: 128,
+        params: 0,
+        moe_experts: 0,
+        moe_topk: 0,
+    }
+}
+
+/// Manifest plus a fully warmed tune cache.  Padded-M aliasing means
+/// warming the compiled batches also prices every prefill chunk the
+/// tests route (all M <= 16 share one padding class), so every serve
+/// run here is cache-only on the `full` rung.
+fn serve_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+    let mut tuner = Tuner::new(MachineConfig::ascend910());
+    for batch in [1usize, 2, 4, 32] {
+        let layer = DecodeLayer::from_decode_config(&decode_config(), batch);
+        for node in layer.gemm_nodes() {
+            tuner.resolve(&node.problem).unwrap();
+        }
+        for pair in layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
+        }
+        tuner.resolve_residency(&layer).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    dir
+}
+
+/// Manifest only — no tune cache — for the degradation-ladder tests.
+fn cold_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-serve-cold-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+    dir
+}
+
+fn build_server<'rt>(rt: &'rt Runtime, dir: &std::path::Path) -> Server<'rt> {
+    let mf = Manifest::load(dir).unwrap();
+    let router = Router::new(rt, mf, "tiny").unwrap();
+    let policy = BatchPolicy::new(router.batch_sizes()).unwrap();
+    Server::new(router, Batcher::new(policy))
+}
+
+#[test]
+fn poisson_plans_are_well_formed_and_seed_stable() {
+    forall("poisson plan shape", 24, |rng| {
+        let seed = rng.next_u64();
+        let mean_gap_us = rng.f64() * 2_000.0;
+        let count = rng.usize_range(1, 64);
+        let max_seq = rng.usize_range(8, 256);
+        let plan = ArrivalPlan::poisson(seed, mean_gap_us, count, max_seq);
+        if plan.arrivals.len() != count {
+            return (false, format!("{} arrivals != {count}", plan.arrivals.len()));
+        }
+        let mut last = 0u64;
+        for a in &plan.arrivals {
+            if a.at_us <= last {
+                return (false, format!("arrival times must strictly increase: {a:?}"));
+            }
+            last = a.at_us;
+            if a.prompt_len < 2 {
+                return (false, format!("prompt too short: {a:?}"));
+            }
+            if a.max_new_tokens < 1 {
+                return (false, format!("empty generation budget: {a:?}"));
+            }
+            if a.prompt_len + a.max_new_tokens >= max_seq {
+                return (false, format!("overflows max_seq {max_seq}: {a:?}"));
+            }
+        }
+        let offered: u64 = plan.arrivals.iter().map(|a| a.max_new_tokens as u64).sum();
+        if plan.offered_tokens() != offered {
+            return (false, "offered_tokens mismatch".into());
+        }
+        if plan.horizon_us() != last {
+            return (false, "horizon must be the last arrival".into());
+        }
+        if plan != ArrivalPlan::poisson(seed, mean_gap_us, count, max_seq) {
+            return (false, "same seed must replay the same plan".into());
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn arrival_plan_round_trips_through_json_and_disk() {
+    let plan = ArrivalPlan::poisson(17, 120.0, 32, 64);
+    let back = ArrivalPlan::from_json(&plan.to_json()).unwrap();
+    assert_eq!(plan, back, "to_json -> from_json must be the identity");
+
+    let path = std::env::temp_dir()
+        .join(format!("w4a16-serve-plan-{}.json", std::process::id()));
+    plan.save(&path).unwrap();
+    let loaded = ArrivalPlan::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(plan, loaded, "save -> load must be the identity");
+
+    // The reloaded plan drives the identical serve run.
+    let dir = serve_dir("roundtrip");
+    let rt = Runtime::cpu().unwrap();
+    let opts = ServeOptions::new(4, 4).with_queue_cap(6);
+    let mut server = build_server(&rt, &dir);
+    let a = server.serve_load(&plan, &opts).unwrap();
+    let mut server = build_server(&rt, &dir);
+    let b = server.serve_load(&loaded, &opts).unwrap();
+    assert_eq!(a.horizon_us, b.horizon_us);
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!((x.id, &x.tokens, x.outcome), (y.id, &y.tokens, y.outcome));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_conservation_property_up_to_overload() {
+    // The §14 conservation law on the serve path, across the whole knob
+    // space: mean gaps from idle to deep overload, random queue caps,
+    // deadlines, tight KV budgets and fault rates.  Every case must
+    // account every request, close the typed shed breakdown, respect the
+    // pager capacity and drain the pager to zero.
+    let dir = serve_dir("conserve");
+    let rt = Runtime::cpu().unwrap();
+    forall("serve conservation", 10, |rng| {
+        let n = rng.usize_range(1, 40);
+        let mean_gap_us = 10f64.powf(rng.f64() * 4.0); // 1 us .. 10 ms
+        let plan = ArrivalPlan::poisson(rng.next_u64(), mean_gap_us, n, 64);
+        let batch = [1usize, 2, 4][rng.usize_range(0, 2)];
+        let chunk = rng.usize_range(1, 8);
+        let mut opts =
+            ServeOptions::new(batch, chunk).with_queue_cap(rng.usize_range(1, 16));
+        if rng.f64() < 0.4 {
+            opts = opts.with_deadline_us(rng.usize_range(1, 60_000) as u64);
+        }
+        if rng.f64() < 0.4 {
+            // Tight paging: worst-case requests need up to 24 such pages.
+            let pages = rng.usize_range(1, 64) as u64;
+            opts = opts.with_page_bytes(4096).with_kv_capacity_bytes(pages * 4096);
+        }
+        let mut server = build_server(&rt, &dir);
+        if rng.f64() < 0.5 {
+            server.set_faults(Some(FaultPlan::new(rng.next_u64(), rng.f64() * 0.5)));
+        }
+        let report = match server.serve_load(&plan, &opts) {
+            Ok(r) => r,
+            Err(e) => return (false, format!("serve_load errored: {e:#}")),
+        };
+        if !report.kv_idle {
+            return (false, "kv pager leaked pages".into());
+        }
+        if report.kv_peak_pages > report.kv_capacity_pages {
+            return (
+                false,
+                format!(
+                    "pager peak {} exceeds capacity {}",
+                    report.kv_peak_pages, report.kv_capacity_pages
+                ),
+            );
+        }
+        let snap = server.metrics.snapshot();
+        if snap.requests_admitted != n as u64 {
+            return (false, format!("admitted {} != offered {n}", snap.requests_admitted));
+        }
+        if !snap.outcomes_accounted() {
+            return (
+                false,
+                format!(
+                    "admitted {} != {} + {} + {} + {}",
+                    snap.requests_admitted,
+                    snap.requests_completed,
+                    snap.requests_shed,
+                    snap.requests_expired,
+                    snap.requests_failed
+                ),
+            );
+        }
+        if !snap.sheds_accounted() {
+            return (false, format!("typed sheds must close: {:?}", snap.shed_reasons));
+        }
+        let terminal = snap.requests_completed + snap.requests_expired + snap.requests_failed;
+        if report.results.len() as u64 != terminal {
+            return (
+                false,
+                format!("{} results != {terminal} terminal outcomes", report.results.len()),
+            );
+        }
+        for r in &report.results {
+            match r.outcome {
+                Outcome::Completed => {
+                    if r.tokens.is_empty() || r.error.is_some() {
+                        return (false, format!("malformed completion {}", r.id));
+                    }
+                }
+                Outcome::Failed => {
+                    if r.error.is_none() {
+                        return (false, format!("failed {} without a cause", r.id));
+                    }
+                }
+                Outcome::Expired => {}
+            }
+        }
+        (true, String::new())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tight_kv_capacity_sheds_typed_and_never_leaks() {
+    // One worst-case reservation (~24 pages of 4 KiB at 48 tokens of
+    // 2 KiB each) nearly fills a 30-page budget, so a rapid burst must
+    // shed `kv_capacity` while the admitted requests all complete.
+    let dir = serve_dir("kvtight");
+    let rt = Runtime::cpu().unwrap();
+    let plan = ArrivalPlan::poisson(5, 2.0, 24, 64);
+    let opts = ServeOptions::new(4, 4)
+        .with_queue_cap(1024)
+        .with_page_bytes(4096)
+        .with_kv_capacity_bytes(30 * 4096);
+    let mut server = build_server(&rt, &dir);
+    let report = server.serve_load(&plan, &opts).unwrap();
+    assert!(report.kv_idle, "pager must drain");
+    assert_eq!(report.kv_capacity_pages, 30);
+    assert!(report.kv_peak_pages <= 30, "peak {} > capacity", report.kv_peak_pages);
+    let snap = server.metrics.snapshot();
+    assert!(snap.outcomes_accounted());
+    assert!(snap.sheds_accounted());
+    let kv_sheds = snap.shed_reasons.get("kv_capacity").copied().unwrap_or(0);
+    assert!(kv_sheds > 0, "a 30-page budget must shed this burst: {:?}", snap.shed_reasons);
+    assert!(snap.requests_completed > 0, "admitted requests must still complete");
+    assert_eq!(snap.requests_completed + snap.requests_shed, 24);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_replay_is_bit_identical() {
+    // Same plan, same knobs, fresh servers: the virtual clock, outcome
+    // ledger and every token stream must replay exactly — including
+    // under overload where shed decisions interleave with ticks.
+    let dir = serve_dir("replay");
+    let rt = Runtime::cpu().unwrap();
+    let plan = ArrivalPlan::poisson(29, 5.0, 24, 64);
+    let opts = ServeOptions::new(4, 4).with_queue_cap(4);
+
+    let mut server_a = build_server(&rt, &dir);
+    let a = server_a.serve_load(&plan, &opts).unwrap();
+    let mut server_b = build_server(&rt, &dir);
+    let b = server_b.serve_load(&plan, &opts).unwrap();
+
+    assert_eq!(a.horizon_us, b.horizon_us, "virtual clocks diverged");
+    assert_eq!(a.kv_peak_pages, b.kv_peak_pages);
+    assert_eq!(a.results.len(), b.results.len());
+    for (x, y) in a.results.iter().zip(&b.results) {
+        assert_eq!(x.id, y.id, "result order diverged");
+        assert_eq!(x.outcome, y.outcome, "outcome diverged for {}", x.id);
+        assert_eq!(x.tokens, y.tokens, "tokens diverged for {}", x.id);
+        assert_eq!(x.steps, y.steps, "tick counts diverged for {}", x.id);
+    }
+    let sa = server_a.metrics.snapshot();
+    let sb = server_b.metrics.snapshot();
+    assert_eq!(
+        (sa.requests_completed, sa.requests_shed, sa.tokens_generated),
+        (sb.requests_completed, sb.requests_shed, sb.tokens_generated)
+    );
+    assert_eq!(
+        (sa.prefill_steps, sa.prefill_tokens, sa.decode_steps, sa.repins),
+        (sb.prefill_steps, sb.prefill_tokens, sb.decode_steps, sb.repins)
+    );
+    assert!(sa.requests_shed > 0, "this overload case must exercise shedding");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn completed_tokens_are_invariant_to_prefill_chunk_size() {
+    // The chunk size moves prefill tick boundaries (and therefore the
+    // clock), but never the token streams: the final prompt token is
+    // always fed by the first decode tick, so generation is position-
+    // exact for any chunking.  With an unbounded queue every request
+    // completes, whatever the chunking.
+    let dir = serve_dir("chunkinv");
+    let rt = Runtime::cpu().unwrap();
+    let plan = ArrivalPlan::poisson(21, 50.0, 10, 64);
+    let mut baseline: Option<std::collections::BTreeMap<u64, Vec<i32>>> = None;
+    for chunk in [1usize, 2, 5, 32] {
+        let opts = ServeOptions::new(4, chunk).with_queue_cap(1024);
+        let mut server = build_server(&rt, &dir);
+        let report = server.serve_load(&plan, &opts).unwrap();
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests_completed, 10, "chunk {chunk}: all must complete");
+        assert!(snap.outcomes_accounted());
+        assert!(report.kv_idle);
+        let tokens: std::collections::BTreeMap<u64, Vec<i32>> =
+            report.results.into_iter().map(|r| (r.id, r.tokens)).collect();
+        match &baseline {
+            None => baseline = Some(tokens),
+            Some(base) => {
+                assert_eq!(base, &tokens, "chunk {chunk} changed a completed token stream")
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn retune_token_bucket_refills_on_the_virtual_clock() {
+    // The DESIGN.md §15 token bucket, walked up the ladder: an empty
+    // bucket serves the splitk default; banked credits pay inline
+    // re-tunes (rung `retuned`); once the shape winners are cached the
+    // cleared route re-resolves at `tuned_only`; and a background
+    // re-tune fills the cross-node gains, promoting the route to `full`.
+    let dir = cold_dir("bucket");
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    router.set_retune_budget(0);
+    router.set_retune_refill(1_000, 8);
+
+    assert_eq!(router.route(4).outcome.rung, RouteRung::DefaultSplitk);
+    router.advance_clock(999); // below one interval: no credit lands
+    assert_eq!(router.retune_budget(), 0);
+    assert_eq!(router.route(4).outcome.rung, RouteRung::DefaultSplitk);
+
+    // Four intervals bank four credits — one per GEMM node of the tiny
+    // dense layer — and clear the memoized routes.
+    router.advance_clock(4_000);
+    assert_eq!(router.retune_budget(), 4);
+    assert_eq!(router.route(4).outcome.rung, RouteRung::Retuned);
+    assert_eq!(router.retune_budget(), 0, "each inline re-tune spends a credit");
+
+    // The winners are cached now: after the next refill clears the
+    // route, re-resolution is cache-only but the gains are still cold.
+    router.advance_clock(5_500);
+    assert_eq!(router.retune_budget(), 1);
+    assert_eq!(router.route(4).outcome.rung, RouteRung::TunedOnly);
+
+    // Background re-tune pays the pair + residency searches off the
+    // serving path and drops the route: the next lookup serves `full`.
+    router.background_retune(4).unwrap();
+    assert_eq!(router.route(4).outcome.rung, RouteRung::Full);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn background_retune_promotes_a_cold_route_to_full() {
+    let dir = cold_dir("promote");
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    router.set_retune_budget(16);
+    assert_eq!(router.route(2).outcome.rung, RouteRung::Retuned);
+    router.background_retune(2).unwrap();
+    let routed = router.route(2);
+    assert_eq!(routed.outcome.rung, RouteRung::Full);
+    let plan = routed.plan.unwrap();
+    assert!(plan.predicted_served_ns().is_some(), "a full route must price the group");
+    let _ = std::fs::remove_dir_all(&dir);
+}
