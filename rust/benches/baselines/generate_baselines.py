@@ -152,6 +152,22 @@ def bench_layer():
             "overlap_exact_speedup": rep["sequential_ns"] / rep["exact_ns"],
             "overlap_exact_vs_ledger": rep["overlapped_ns"] / rep["exact_ns"],
         })
+    # Precision-family sweep (benches/e2e_layer.rs bench_precision_sweep):
+    # the tuned W4A16 winner vs the tuned W4A8-tagged winner per paper
+    # shape at batch 8, plus the paper's headline decode shape.  The
+    # `w4a16_us`/`w4a8_us` cells gate; `w4a8_speedup` is a ratio.
+    for model, n, k in PAPER_SHAPES + [("decode", 512, 16384)]:
+        p = (8, n, k, 128)
+        s16, _, ns16 = M.tune_search(p)
+        s8, _, ns8 = M.tune_search_w4a8(p)
+        cells.append({
+            "model": f"{model}:{n}x{k}", "n": n, "k": k, "batch": 8,
+            "w4a16_us": ns16 / 1e3,
+            "w4a16_strategy": s16,
+            "w4a8_us": ns8 / 1e3,
+            "w4a8_strategy": s8,
+            "w4a8_speedup": ns16 / ns8,
+        })
     return {"bench": "e2e_layer", "kv_len": 2048, "cells": cells}
 
 

@@ -30,6 +30,7 @@ VEC_CORES = AI_CORES * VEC_PER_CORE
 CLOCK_GHZ = 1.0
 CUBE_TILE = 16
 CUBE_MACS = 4096.0
+CUBE_MACS_INT8 = 8192.0
 LANES_F16 = 128.0
 LANES_F32 = 64.0
 L0A = 64 << 10
@@ -73,6 +74,10 @@ def cube_op_ns(op):
         _, m, n, k = op
         pad = lambda x: -(-x // CUBE_TILE) * CUBE_TILE
         return float(pad(m) * pad(n) * pad(k)) / CUBE_MACS / CLOCK_GHZ
+    if op[0] == "mmad_i8":
+        _, m, n, k = op
+        pad = lambda x: -(-x // CUBE_TILE) * CUBE_TILE
+        return float(pad(m) * pad(n) * pad(k)) / CUBE_MACS_INT8 / CLOCK_GHZ
     if op[0] == "nop":
         return 0.0
     return None
@@ -88,6 +93,8 @@ def vector_op_ns(op):
         return (adds / LANES_F32 + casts / LANES_F16) / CLOCK_GHZ
     if op[0] == "cast":
         return float(op[1]) / LANES_F16 / CLOCK_GHZ
+    if op[0] == "quantize_act":
+        return float(op[1]) * 3.0 / LANES_F16 / CLOCK_GHZ
     if op[0] == "nop":
         return 0.0
     return None
@@ -660,9 +667,9 @@ def resolve_reduce_auto(build):
 
 # --- tiling.rs -------------------------------------------------------------
 
-def tiling(bm, bn, bk, splits, chunks, dq_bk, dq_bn):
+def tiling(bm, bn, bk, splits, chunks, dq_bk, dq_bn, rebalance=0):
     return {"bm": bm, "bn": bn, "bk": bk, "splits": splits, "chunks": chunks,
-            "dequant_bk": dq_bk, "dequant_bn": dq_bn}
+            "dequant_bk": dq_bk, "dequant_bn": dq_bn, "rebalance": rebalance}
 
 
 def tiling_validate(t, p):
@@ -671,6 +678,8 @@ def tiling_validate(t, p):
     if not block_fits_l0(t["bm"], t["bn"], t["bk"]):
         return False
     if not dequant_tile_fits_ub(t["dequant_bk"], t["dequant_bn"]):
+        return False
+    if t.get("rebalance", 0) > 100:
         return False
     if k % t["splits"] != 0:
         return False
@@ -868,6 +877,124 @@ def schedule(p, strategy):
     return schedule_with_reduce(p, strategy, select_tiling(p, strategy))
 
 
+# --- kernels/w4a8.rs -------------------------------------------------------
+#
+# Problems in this mirror are bare (m, n, k, group) tuples with no
+# precision tag, so the W4A8 family lives behind its own entry points
+# (`select_w4a8`, `w4a8_schedule`, `tune_search_w4a8`) — exactly the
+# split the Rust side enforces with `Precision::W4A8` tagging: untagged
+# searches never see these functions, tagged searches add them on top
+# of the five precision-agnostic strategies.
+
+def deferred_tiles(tiles, rebalance):
+    return tiles * rebalance // 100
+
+
+def w4a8_weight_convert_phase(p, t):
+    _, n, k, group = p
+    k_tiles = k // t["dequant_bk"]
+    n_tiles = n // t["dequant_bn"]
+    tiles = k_tiles * n_tiles
+    deferred = deferred_tiles(tiles, t["rebalance"])
+    elems = t["dequant_bk"] * t["dequant_bn"]
+    param_bytes = 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4
+    reads = ((WP, elems // 2), (QP, param_bytes))
+    writes = ((WS, elems),)
+    full_step = step(("dequant", elems), reads=reads, writes=writes)
+    deferred_step = step(("cast", elems), reads=reads, writes=writes)
+    # Tiles [0, deferred) defer; round-robin gives engine e the items
+    # e, e+E, e+2E, ..., so its deferred prefix has len(range(e,
+    # deferred, E)) steps and the pricing loop merges each kind into
+    # one run.
+    engines = VEC_CORES
+    runs_per_engine = []
+    for e in range(engines):
+        count = len(range(e, tiles, engines))
+        d = len(range(e, deferred, engines))
+        runs = []
+        if d:
+            runs.append((deferred_step, d))
+        if count - d:
+            runs.append((full_step, count - d))
+        runs_per_engine.append(runs)
+    return phase("w4a8_dequant", "vector", runs_per_engine, False)
+
+
+def w4a8_act_quant_phase(p, t):
+    m, _, k, _ = p
+    rows = m_padded(m) // 16
+    tiles = rows * (k // t["dequant_bk"])
+    elems = 16 * t["dequant_bk"]
+    st = step(("quantize_act", elems),
+              reads=((ACT, elems * 2),), writes=((WS, elems),))
+    runs = [[(st, c)] if c else []
+            for c in round_robin_counts(tiles, VEC_CORES)]
+    return phase("act_quant", "vector", runs, True)
+
+
+def w4a8_reduce_scale_phase(p, t, pipelined_with_prev):
+    m, n, k, group = p
+    k_tiles = k // t["dequant_bk"]
+    n_tiles = n // t["dequant_bn"]
+    deferred = deferred_tiles(k_tiles * n_tiles, t["rebalance"])
+    if deferred == 0:
+        return None
+    mp = m_padded(m)
+    elems = mp * t["dequant_bn"] * (t["dequant_bk"] // group)
+    st = step(("cast", elems),
+              reads=((OUT, mp * t["dequant_bn"] * 2),
+                     (QP, 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4)),
+              writes=((OUT, mp * t["dequant_bn"] * 2),))
+    runs = [[(st, c)] if c else []
+            for c in round_robin_counts(deferred, VEC_CORES)]
+    return phase("reduce_scale", "vector", runs, pipelined_with_prev)
+
+
+def w4a8_schedule(p, t, mode="auto"):
+    if mode == "auto":
+        return resolve_reduce_auto(lambda md: w4a8_schedule(p, t, md))
+    m, n, k, group = p
+    ks = k // t["splits"]
+    k_steps = ks // t["bk"]
+    p1 = w4a8_weight_convert_phase(p, t)
+    p2 = w4a8_act_quant_phase(p, t)
+    single = t["splits"] == 1
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    a_tile = t["bm"] * t["bk"]   # INT8 activations
+    b_tile = t["bk"] * t["bn"]   # INT8 weights
+    c_tile = t["bm"] * t["bn"] * (2 if single else 4)
+    c_class = OUT if single else PART
+    mid = step(("mmad_i8", t["bm"], t["bn"], t["bk"]),
+               reads=((WS, b_tile), (WS, a_tile)), burst=t["bn"])
+    last = step(("mmad_i8", t["bm"], t["bn"], t["bk"]),
+                reads=((WS, b_tile), (WS, a_tile)),
+                writes=((c_class, c_tile),), burst=t["bn"])
+    p3 = phase("w4a8_mmad", "cube",
+               round_robin_steps(items, AI_CORES, k_steps, mid, last), True)
+    phases = [p1, p2, p3]
+    if not single:
+        phases += reduce_phases(m, n, t, mode)
+    scale = w4a8_reduce_scale_phase(p, t, not single)
+    if scale is not None:
+        phases.append(scale)
+    ws = k * n + m_padded(m) * k
+    part = 0 if single else t["splits"] * m_padded(m) * n * 4
+    return trace(f"w4a8_m{m}_n{n}_k{k}_s{t['splits']}", phases, ws, part,
+                 ("buffered",))
+
+
+def select_w4a8(p):
+    base = select_splitk(p)
+    best = None
+    for rebalance in (0, 50, 100):
+        t = dict(base, rebalance=rebalance)
+        ns = run(w4a8_schedule(p, t)).total_ns
+        if best is None or ns < best[0]:
+            best = (ns, t)
+    assert best is not None, f"no legal w4a8 tiling for {p}"
+    return best[1]
+
+
 # --- tune/search.rs --------------------------------------------------------
 
 def search_candidates(p, strategy):
@@ -916,6 +1043,65 @@ def tune_search(p):
             except AssertionError:
                 continue
             scored.append((strategy, t, run(tr).total_ns))
+    assert scored, f"no legal schedule for {p}"
+    scored.sort(key=lambda e: e[2])
+    return scored[0]
+
+
+def w4a8_search_candidates(p):
+    """Mirror of tune/search.rs `candidates` for Strategy::W4A8 on a
+    W4A8-tagged problem (pushed in the Rust neighborhood order so
+    stable-sort ties resolve identically)."""
+    try:
+        base = select_w4a8(p)
+    except AssertionError:
+        return []
+    out = [base]
+
+    def push(t):
+        if t not in out:
+            out.append(t)
+
+    _, n, k, group = p
+    if base["splits"] > 1:
+        push(dict(base, splits=base["splits"] // 2))
+    push(dict(base, splits=base["splits"] * 2))
+    for bn in (256, 128, 64):
+        if bn == base["bn"] or n % bn != 0:
+            continue
+        bk = fit_bk(base["bm"], bn, min(group, k))
+        push(dict(base, bn=bn, bk=bk))
+    if base["bm"] > 16:
+        push(dict(base, bm=base["bm"] // 2))
+    for dq_bn in (256, 128, 64):
+        if dq_bn == base["dequant_bn"] or n % dq_bn != 0:
+            continue
+        push(dict(base, dequant_bn=dq_bn))
+    for rebalance in (0, 50, 100):
+        if rebalance != base["rebalance"]:
+            push(dict(base, rebalance=rebalance))
+    return out
+
+
+def tune_search_w4a8(p):
+    """Mirror of tune::search on a W4A8-tagged problem: the five
+    precision-agnostic strategies keep their exact W4A16 candidate sets
+    (their tilers ignore the tag), and the w4a8 family lands on top —
+    the strict-superset construction behind Auto-never-slower."""
+    scored = []
+    for strategy in STRATEGIES:
+        for t in search_candidates(p, strategy):
+            if not tiling_validate(t, p):
+                continue
+            try:
+                tr = schedule_with_reduce(p, strategy, t)
+            except AssertionError:
+                continue
+            scored.append((strategy, t, run(tr).total_ns))
+    for t in w4a8_search_candidates(p):
+        if not tiling_validate(t, p):
+            continue
+        scored.append(("w4a8", t, run(w4a8_schedule(p, t)).total_ns))
     assert scored, f"no legal schedule for {p}"
     scored.sort(key=lambda e: e[2])
     return scored[0]
@@ -1503,8 +1689,10 @@ def poisson_plan(seed, mean_gap_us, count, max_seq):
     for _ in range(count):
         at_us += max(int(math.ceil(rng.exponential(rate))), 1)
         prompt_len = rng.usize_range(2, max(max_seq // 4, 2))
-        budget_cap = max(max_seq - prompt_len - 1, 1)
-        max_new = rng.usize_range(min(4, budget_cap), min(max_seq // 2, budget_cap))
+        budget_cap = max(max(max_seq - prompt_len, 0) - 1, 1)
+        new_lo = min(4, budget_cap)
+        new_hi = max(min(max_seq // 2, budget_cap), new_lo)
+        max_new = rng.usize_range(new_lo, new_hi)
         arrivals.append((at_us, prompt_len, max_new))
     return arrivals
 

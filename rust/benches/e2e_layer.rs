@@ -15,10 +15,13 @@ use ascend_w4a16::analysis::layer::{self, OverlapMode};
 use ascend_w4a16::analysis::residency::ResidencyMode;
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
+use ascend_w4a16::kernels::GemmProblem;
 use ascend_w4a16::model::llm::{
-    layer_geometry, moe_geometry, paper_layer_geometries, paper_moe_geometries, MoeGeometry,
+    layer_geometry, moe_geometry, paper_layer_geometries, paper_moe_geometries, paper_shapes,
+    MoeGeometry,
 };
-use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::model::Precision;
+use ascend_w4a16::tune::{self, Tuner};
 use ascend_w4a16::util::json::Json;
 use ascend_w4a16::workload::{DecodeLayer, DecodeStep};
 
@@ -161,6 +164,49 @@ fn bench_forced_split(machine: &MachineConfig, model: &str, cells: &mut Vec<Json
     ]));
 }
 
+/// Precision-family sweep: the tuned W4A16 winner vs the tuned
+/// W4A8-tagged winner (Auto over all six strategies, so the W4A8 column
+/// is never slower by construction — the W4A16 family stays searchable)
+/// for every paper shape at batch 8, plus the paper's headline decode
+/// shape.  `w4a8_us`/`w4a16_us` gate in bench-diff; `w4a8_speedup` is a
+/// ratio and never gates.
+fn bench_precision_sweep(machine: &MachineConfig, cells: &mut Vec<Json>) {
+    section("precision family — tuned W4A16 vs tuned W4A8 (batch 8)");
+    let mut shapes: Vec<(String, usize, usize)> = paper_shapes()
+        .iter()
+        .map(|s| (s.model.to_string(), s.n, s.k))
+        .collect();
+    shapes.push(("decode".to_string(), 512, 16384));
+    for (model, n, k) in shapes {
+        let batch = 8usize;
+        let a16 = tune::search(machine, &GemmProblem::new(batch, n, k))
+            .expect("w4a16 search")
+            .best;
+        let p8 = GemmProblem::new(batch, n, k).with_precision(Precision::W4A8);
+        let a8 = tune::search(machine, &p8).expect("w4a8 search").best;
+        let speedup = a16.total_ns / a8.total_ns;
+        println!(
+            "{model:<10} n={n:<6} k={k:<6} w4a16 {:>9.2} us ({}) -> w4a8 {:>9.2} us ({}) \
+             {speedup:.3}x",
+            a16.total_ns / 1e3,
+            a16.strategy.name(),
+            a8.total_ns / 1e3,
+            a8.strategy.name(),
+        );
+        cells.push(Json::obj(vec![
+            ("model", Json::str(format!("{model}:{n}x{k}"))),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(k as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("w4a16_us", Json::num(a16.total_ns / 1e3)),
+            ("w4a16_strategy", Json::str(a16.strategy.name())),
+            ("w4a8_us", Json::num(a8.total_ns / 1e3)),
+            ("w4a8_strategy", Json::str(a8.strategy.name())),
+            ("w4a8_speedup", Json::num(speedup)),
+        ]));
+    }
+}
+
 fn main() {
     let machine = MachineConfig::ascend910();
     let mut tuner = Tuner::new(machine.clone());
@@ -177,6 +223,8 @@ fn main() {
     for model in ["llama32", "deepseek-moe"] {
         bench_forced_split(&machine, model, &mut cells);
     }
+
+    bench_precision_sweep(&machine, &mut cells);
 
     let doc = Json::obj(vec![
         ("bench", Json::str("e2e_layer")),

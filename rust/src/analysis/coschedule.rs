@@ -316,6 +316,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
@@ -331,6 +332,7 @@ mod tests {
             chunks: 4,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         chunked::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
@@ -447,6 +449,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Barrier).unwrap()
@@ -463,6 +466,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap()
@@ -571,6 +575,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         let tr = splitk::schedule_reduce(&m(), &p, &t, ReduceMode::Pipelined).unwrap();

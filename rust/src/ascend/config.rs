@@ -23,6 +23,10 @@ pub struct MachineConfig {
     pub cube_tile: usize,
     /// MACs retired per cube core per cycle (16^3 = 4096).
     pub cube_macs_per_cycle: f64,
+    /// MACs retired per cube core per cycle on the INT8 datapath: the
+    /// narrower operands double the systolic throughput (2 x 4096), the
+    /// lever the W4A8 precision family rides (DESIGN.md §16).
+    pub cube_macs_per_cycle_int8: f64,
 
     // --- vector core -----------------------------------------------------
     /// FP16 lanes per vector core per cycle (2048-bit SIMD = 128 lanes).
@@ -79,6 +83,7 @@ impl MachineConfig {
             clock_ghz: 1.0,
             cube_tile: 16,
             cube_macs_per_cycle: 4096.0,
+            cube_macs_per_cycle_int8: 8192.0,
             vector_lanes_f16: 128.0,
             vector_lanes_f32: 64.0,
             l1_bytes: 1 << 20,        // 1 MiB
@@ -125,6 +130,10 @@ impl MachineConfig {
         anyhow::ensure!(self.hbm_bw > 0.0 && self.l2_bw >= self.hbm_bw,
             "L2 must be at least as fast as HBM");
         anyhow::ensure!((0.0..=1.0).contains(&self.l2_retention));
+        anyhow::ensure!(
+            self.cube_macs_per_cycle_int8 >= self.cube_macs_per_cycle,
+            "the INT8 datapath cannot be slower than FP16"
+        );
         anyhow::ensure!(self.l0a_bytes <= self.l1_bytes);
         anyhow::ensure!(
             self.hbm_capacity_bytes > self.l2_bytes,
@@ -169,5 +178,14 @@ mod tests {
     #[test]
     fn vector_core_count() {
         assert_eq!(MachineConfig::ascend910().total_vector_cores(), 64);
+    }
+
+    #[test]
+    fn int8_datapath_doubles_the_mac_rate() {
+        let m = MachineConfig::ascend910();
+        assert_eq!(m.cube_macs_per_cycle_int8, 2.0 * m.cube_macs_per_cycle);
+        let mut bad = MachineConfig::ascend910();
+        bad.cube_macs_per_cycle_int8 = 1024.0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -20,9 +20,19 @@ pub fn op_ns(machine: &MachineConfig, op: ComputeOp) -> Option<f64> {
             let cycles = machine.mmad_cycles(pad(m), pad(n), pad(k));
             Some(machine.cycles_to_ns(cycles))
         }
+        ComputeOp::MmadInt8 { m, n, k } => {
+            // Same padded-tile walk at the INT8 datapath's MAC rate.
+            let t = machine.cube_tile;
+            let pad = |x: usize| x.div_ceil(t) * t;
+            let macs = (pad(m) * pad(n) * pad(k)) as f64;
+            Some(machine.cycles_to_ns(macs / machine.cube_macs_per_cycle_int8))
+        }
         ComputeOp::Nop => Some(0.0),
         // No conversion / elementwise datapath on the cube core.
-        ComputeOp::Dequant { .. } | ComputeOp::Reduce { .. } | ComputeOp::Cast { .. } => None,
+        ComputeOp::Dequant { .. }
+        | ComputeOp::Reduce { .. }
+        | ComputeOp::Cast { .. }
+        | ComputeOp::QuantizeAct { .. } => None,
     }
 }
 
@@ -61,6 +71,17 @@ mod tests {
     fn cube_cannot_convert_types() {
         assert_eq!(op_ns(&m(), ComputeOp::Dequant { elems: 10 }), None);
         assert_eq!(op_ns(&m(), ComputeOp::Cast { elems: 10 }), None);
+        assert_eq!(op_ns(&m(), ComputeOp::QuantizeAct { elems: 10 }), None);
+    }
+
+    #[test]
+    fn int8_mmad_runs_at_twice_the_fp16_rate() {
+        let f16 = op_ns(&m(), ComputeOp::Mmad { m: 16, n: 256, k: 128 }).unwrap();
+        let i8 = op_ns(&m(), ComputeOp::MmadInt8 { m: 16, n: 256, k: 128 }).unwrap();
+        assert_eq!(i8 * 2.0, f16);
+        // Padding applies to the INT8 path identically.
+        let one = op_ns(&m(), ComputeOp::MmadInt8 { m: 1, n: 256, k: 128 }).unwrap();
+        assert_eq!(one, i8);
     }
 
     #[test]

@@ -58,6 +58,9 @@ pub enum BufferClass {
 pub enum ComputeOp {
     /// Cube MMAD of an (m, k) x (k, n) block, FP32 accumulate in L0C.
     Mmad { m: usize, n: usize, k: usize },
+    /// Cube MMAD on the INT8 datapath (W4A8): same block shape, INT32
+    /// accumulate, retired at the machine's INT8 MAC rate.
+    MmadInt8 { m: usize, n: usize, k: usize },
     /// Vector dequantization of `elems` INT4 codes -> FP16 (unpack, sub, mul).
     Dequant { elems: usize },
     /// Vector elementwise reduction of `elems` FP32 values over `terms`
@@ -65,6 +68,9 @@ pub enum ComputeOp {
     Reduce { elems: usize, terms: usize },
     /// Vector FP32 -> FP16 cast of `elems` values.
     Cast { elems: usize },
+    /// Vector FP16 -> INT8 activation quantization of `elems` values
+    /// (scale, round, clamp — the W4A8 prologue).
+    QuantizeAct { elems: usize },
     /// No computation (pure data movement step).
     Nop,
 }
@@ -238,7 +244,7 @@ impl KernelTrace {
             .iter()
             .flat_map(|p| p.steps_per_engine.iter().flatten())
             .map(|s| match s.compute {
-                ComputeOp::Mmad { m, n, k } => (m * n * k) as u64,
+                ComputeOp::Mmad { m, n, k } | ComputeOp::MmadInt8 { m, n, k } => (m * n * k) as u64,
                 _ => 0,
             })
             .sum()

@@ -13,6 +13,10 @@ use super::trace::ComputeOp;
 /// tricks, since the conversion runs on a real vector unit here).
 const DEQUANT_OPS_PER_ELEM: f64 = 4.0;
 
+/// SIMD operations per element for FP16 -> INT8 activation quantization
+/// (W4A8 prologue): multiply by the inverse scale, round, clamp.
+const QUANTIZE_ACT_OPS_PER_ELEM: f64 = 3.0;
+
 /// Nanoseconds for one compute op on a vector core; `None` for MMAD (the
 /// vector unit has no matrix datapath).
 pub fn op_ns(machine: &MachineConfig, op: ComputeOp) -> Option<f64> {
@@ -32,8 +36,12 @@ pub fn op_ns(machine: &MachineConfig, op: ComputeOp) -> Option<f64> {
         ComputeOp::Cast { elems } => {
             Some(machine.cycles_to_ns(elems as f64 / machine.vector_lanes_f16))
         }
+        ComputeOp::QuantizeAct { elems } => {
+            let cycles = elems as f64 * QUANTIZE_ACT_OPS_PER_ELEM / machine.vector_lanes_f16;
+            Some(machine.cycles_to_ns(cycles))
+        }
         ComputeOp::Nop => Some(0.0),
-        ComputeOp::Mmad { .. } => None,
+        ComputeOp::Mmad { .. } | ComputeOp::MmadInt8 { .. } => None,
     }
 }
 
@@ -72,6 +80,17 @@ mod tests {
     #[test]
     fn vector_cannot_mmad() {
         assert_eq!(op_ns(&m(), ComputeOp::Mmad { m: 16, n: 16, k: 16 }), None);
+        assert_eq!(op_ns(&m(), ComputeOp::MmadInt8 { m: 16, n: 16, k: 16 }), None);
+    }
+
+    #[test]
+    fn quantize_act_throughput() {
+        // 128 lanes, 3 ops/elem: 128 elems = 3 cycles = 3 ns at 1 GHz —
+        // cheaper than dequant (no unpack) but not free.
+        assert_eq!(op_ns(&m(), ComputeOp::QuantizeAct { elems: 128 }), Some(3.0));
+        let q = op_ns(&m(), ComputeOp::QuantizeAct { elems: 256 }).unwrap();
+        let d = op_ns(&m(), ComputeOp::Dequant { elems: 256 }).unwrap();
+        assert!(q < d);
     }
 
     #[test]

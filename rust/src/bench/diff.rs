@@ -156,6 +156,11 @@ impl DiffReport {
 /// there.  `residency_gain_us` / `residency_speedup` /
 /// `residency_pinned_bytes` / `chain_gain_ns` are gains, ratios or
 /// byte counts and never gate.
+///
+/// The precision-sweep cells (DESIGN.md §16) need no special case:
+/// `w4a16_us` and `w4a8_us` are absolute tuned latencies and gate like
+/// any other `_us` cell; `w4a8_speedup` is a ratio of the two (it moves
+/// whenever either column legitimately improves) and never gates.
 pub fn is_gated_time_cell(key: &str) -> bool {
     let timed = key.ends_with("_ns") || key.ends_with("_us");
     let ambiguous = key.contains("gain")
@@ -367,6 +372,25 @@ mod tests {
         let r = diff(&doc(50.0, None), &doc(60.0, None), DEFAULT_THRESHOLD);
         assert!(!r.gate_passes());
         assert_eq!(r.regressions[0].path, "cells[0].step_us");
+    }
+
+    #[test]
+    fn precision_sweep_cells_classify_as_designed() {
+        // Both tuned latency columns gate (a slower W4A8 winner is a
+        // real regression even while W4A16 holds); the ratio never does.
+        assert!(is_gated_time_cell("w4a16_us"));
+        assert!(is_gated_time_cell("w4a8_us"));
+        assert!(!is_gated_time_cell("w4a8_speedup"));
+        // A >2% regression in the W4A8 column trips the gate on its own.
+        let base = doc(100.0, Some(("w4a8_us", 50.0)));
+        let cur = doc(100.0, Some(("w4a8_us", 53.0)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.regressions[0].path, "cells[0].w4a8_us");
+        // A moved speedup ratio alone is fine.
+        let base = doc(100.0, Some(("w4a8_speedup", 1.4)));
+        let cur = doc(100.0, Some(("w4a8_speedup", 1.1)));
+        assert!(diff(&base, &cur, DEFAULT_THRESHOLD).gate_passes());
     }
 
     #[test]

@@ -80,8 +80,10 @@ impl BatchPolicy {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
     Admitted,
-    /// The queue is full; retry after roughly this many virtual µs (one
-    /// max-wait window — by then at least one group must have formed).
+    /// The queue is full; retry after roughly this many virtual µs —
+    /// queue depth × observed mean step time (how long the backlog
+    /// actually takes to drain), or one max-wait window before any step
+    /// has completed.
     Shed { retry_after_us: u64 },
 }
 
@@ -109,18 +111,50 @@ impl DecodeGroup {
 pub struct Batcher {
     pub policy: BatchPolicy,
     queue: VecDeque<DecodeRequest>,
+    /// Completed-step count feeding the shed hint's drain-rate estimate.
+    steps_noted: u64,
+    /// Summed step time (virtual µs) over `steps_noted`.
+    step_us_sum: u64,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, queue: VecDeque::new() }
+        Batcher { policy, queue: VecDeque::new(), steps_noted: 0, step_us_sum: 0 }
+    }
+
+    /// Note one completed decode step's virtual duration.  The running
+    /// mean prices the shed hint: a full queue drains at roughly one
+    /// request per mean step, so a shed client should retry after
+    /// `queue_len * mean_step_us`, not a constant.
+    pub fn note_step_time(&mut self, step_us: u64) {
+        self.steps_noted += 1;
+        self.step_us_sum = self.step_us_sum.saturating_add(step_us);
+    }
+
+    /// Mean completed-step time (virtual µs), if any step has been noted.
+    pub fn mean_step_us(&self) -> Option<u64> {
+        if self.steps_noted == 0 {
+            None
+        } else {
+            Some((self.step_us_sum / self.steps_noted).max(1))
+        }
+    }
+
+    /// Backpressure hint for a shed at the current backlog: queue depth
+    /// times the observed mean step time (>= 1µs), falling back to one
+    /// max-wait window before any step has completed.
+    fn shed_retry_after_us(&self) -> u64 {
+        match self.mean_step_us() {
+            Some(mean) => (self.queue.len() as u64).saturating_mul(mean).max(1),
+            None => self.policy.max_wait_us.max(1),
+        }
     }
 
     /// Admit a request at virtual time `now_us`, or shed it if the queue
     /// is at capacity.  Stamps `enqueued_at_us` (unless the caller did).
     pub fn push(&mut self, mut req: DecodeRequest, now_us: u64) -> Admission {
         if self.queue.len() >= self.policy.queue_cap {
-            return Admission::Shed { retry_after_us: self.policy.max_wait_us.max(1) };
+            return Admission::Shed { retry_after_us: self.shed_retry_after_us() };
         }
         if req.enqueued_at_us.is_none() {
             req.enqueued_at_us = Some(now_us);
@@ -269,6 +303,42 @@ mod tests {
             Admission::Admitted => panic!("push past queue_cap must shed"),
         }
         assert_eq!(b.waiting(), 2, "shed requests never enter the queue");
+    }
+
+    #[test]
+    fn shed_hint_scales_with_backlog_and_step_time() {
+        // Regression: the hint used to be the constant `max_wait_us`, so
+        // overloaded clients retried into a still-full queue.  It must now
+        // track queue depth × recent mean step time.
+        let mut b = Batcher::new(
+            BatchPolicy::new(vec![1]).unwrap().with_queue_cap(3).with_max_wait_us(500),
+        );
+        b.note_step_time(200);
+        b.note_step_time(400); // mean 300 µs
+        for i in 0..3 {
+            assert_eq!(b.push(req(i), 0), Admission::Admitted);
+        }
+        let hint_full = match b.push(req(10), 0) {
+            Admission::Shed { retry_after_us } => retry_after_us,
+            Admission::Admitted => panic!("must shed at cap"),
+        };
+        assert_eq!(hint_full, 3 * 300, "depth 3 x mean 300 µs");
+
+        // A deeper backlog (larger cap, same mean) hints a longer wait.
+        let mut deep = Batcher::new(
+            BatchPolicy::new(vec![1]).unwrap().with_queue_cap(8).with_max_wait_us(500),
+        );
+        deep.note_step_time(300);
+        for i in 0..8 {
+            assert_eq!(deep.push(req(i), 0), Admission::Admitted);
+        }
+        match deep.push(req(20), 0) {
+            Admission::Shed { retry_after_us } => {
+                assert_eq!(retry_after_us, 8 * 300);
+                assert!(retry_after_us > hint_full, "hint grows with backlog");
+            }
+            Admission::Admitted => panic!("must shed at cap"),
+        }
     }
 
     #[test]

@@ -99,9 +99,11 @@ impl FaultPlan {
         }
         // Split the fault budget: half stragglers, the rest transient
         // failures split between the engine and the client boundary.
+        // Straggler multipliers span 1.5x..7x — the mild (sub-2x) end is
+        // what exposed the penalty-truncation bug on sub-µs steps.
         let k = mix64(h);
         Some(match k % 10 {
-            0..=4 => FaultKind::Straggler { mult_x100: 200 + 100 * (k / 10 % 6) as u32 },
+            0..=4 => FaultKind::Straggler { mult_x100: 150 + 50 * (k / 10 % 12) as u32 },
             5..=7 => FaultKind::EngineFault,
             _ => FaultKind::ClientError,
         })
@@ -197,7 +199,8 @@ mod tests {
         for s in 0..512 {
             match p.step_fault(0, s, 0).unwrap() {
                 FaultKind::Straggler { mult_x100 } => {
-                    assert!((200..=700).contains(&mult_x100), "mult {mult_x100}");
+                    assert!((150..=700).contains(&mult_x100), "mult {mult_x100}");
+                    assert_eq!(mult_x100 % 50, 0, "multiplier grid is 0.5x steps");
                     seen.insert("straggler");
                 }
                 FaultKind::EngineFault => {

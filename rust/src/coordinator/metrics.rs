@@ -39,6 +39,10 @@ struct Inner {
     faults: BTreeMap<String, u64>,
     /// Step retries executed under the retry policy.
     retries: u64,
+    /// Summed virtual-clock penalty charged by injected stragglers (µs).
+    /// Every injected straggler charges >= 1µs (the truncation-bug
+    /// regression in `tests/chaos.rs` asserts this stays positive).
+    straggler_penalty_us: u64,
     ttft_s: Vec<f64>,
     total_s: Vec<f64>,
     /// Groups served per kernel-schedule strategy ("untuned" when no tune
@@ -160,6 +164,8 @@ pub struct MetricsSnapshot {
     pub route_reasons: BTreeMap<String, u64>,
     pub faults: BTreeMap<String, u64>,
     pub retries: u64,
+    /// Summed virtual-clock penalty charged by injected stragglers (µs).
+    pub straggler_penalty_us: u64,
     /// Virtual-clock TTFT summary (µs) from the continuous serve loop.
     pub serve_ttft_us: Summary,
     /// Virtual-clock per-token gap summary (µs), continuous serve loop.
@@ -321,6 +327,11 @@ impl Metrics {
         self.inner.lock().unwrap().retries += 1;
     }
 
+    /// Record the virtual-clock penalty one injected straggler charged.
+    pub fn record_straggler_penalty_us(&self, us: u64) {
+        self.inner.lock().unwrap().straggler_penalty_us += us;
+    }
+
     /// Record a shed request with its cause ("queue_full", "kv_capacity",
     /// "admission_fault") — the serve-path counterpart of
     /// [`Metrics::record_shed`]; increments the conservation counter too.
@@ -394,6 +405,7 @@ impl Metrics {
             route_reasons: g.route_reasons.clone(),
             faults: g.faults.clone(),
             retries: g.retries,
+            straggler_penalty_us: g.straggler_penalty_us,
             serve_ttft_us: Summary::of(&g.serve_ttft_us),
             serve_token_gap_us: Summary::of(&g.serve_token_gap_us),
             prefill_steps: g.prefill_steps,
@@ -536,9 +548,14 @@ impl MetricsSnapshot {
             let parts: Vec<String> =
                 self.faults.iter().map(|(k, n)| format!("{k}={n}")).collect();
             out.push_str(&format!(
-                "faults: {}  retries: {}\n",
+                "faults: {}  retries: {}{}\n",
                 if parts.is_empty() { "none".to_string() } else { parts.join("  ") },
                 self.retries,
+                if self.straggler_penalty_us > 0 {
+                    format!("  straggler penalty: {} us", self.straggler_penalty_us)
+                } else {
+                    String::new()
+                },
             ));
         }
         out
@@ -665,15 +682,19 @@ mod tests {
         m.record_fault("straggler");
         m.record_fault("engine_fault");
         m.record_retry();
+        m.record_straggler_penalty_us(3);
+        m.record_straggler_penalty_us(1);
         let s = m.snapshot();
         assert_eq!(s.route_rungs.get("retuned"), Some(&2));
         assert_eq!(s.route_reasons.get("shape_miss"), Some(&2));
         assert_eq!(s.faults.get("straggler"), Some(&1));
         assert_eq!(s.retries, 1);
+        assert_eq!(s.straggler_penalty_us, 4);
         let text = s.render(1.0);
         assert!(text.contains("routing: full=1  retuned=2"), "{text}");
         assert!(text.contains("reasons:"), "{text}");
         assert!(text.contains("faults: engine_fault=1  straggler=1  retries: 1"), "{text}");
+        assert!(text.contains("straggler penalty: 4 us"), "{text}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use std::collections::HashMap;
 
 use crate::ascend::{MachineConfig, Simulator};
 use crate::kernels::{self, GemmProblem, Strategy};
-use crate::model::{DecodeEngine, Engine, SimEngine};
+use crate::model::{DecodeEngine, Engine, Precision, SimEngine};
 use crate::runtime::{Manifest, Runtime};
 use crate::tune::{machine_tag, Tuner, DEFAULT_CACHE_FILE};
 use crate::workload::decode_layer::{DecodeLayer, GemmKind};
@@ -263,6 +263,11 @@ pub struct Router<'rt> {
     retune_budget_cap: usize,
     /// Virtual time through which refill credits have been granted.
     last_refill_us: u64,
+    /// Precision family every routed layer is tagged with.  W4A16 keeps
+    /// every tune-cache key byte-identical to the pre-precision format;
+    /// W4A8 keys carry the `_a8` suffix, so a stale W4A16-only cache
+    /// simply misses and the plan resolves down the ladder (never abort).
+    precision: Precision,
     routes: HashMap<usize, RoutedPlan>,
     /// Memoized prefill-chunk routes, keyed by chunk token count `m`
     /// (disjoint from `routes`: a decode batch and a prefill chunk of
@@ -311,6 +316,7 @@ impl<'rt> Router<'rt> {
             retune_refill_interval_us: None,
             retune_budget_cap: DEFAULT_RETUNE_BUDGET,
             last_refill_us: 0,
+            precision: Precision::default(),
             routes: HashMap::new(),
             prefill_routes: HashMap::new(),
         })
@@ -379,7 +385,8 @@ impl<'rt> Router<'rt> {
         let routed = match self.first_decode_config() {
             None => RoutedPlan { plan: None, outcome: Self::no_config_outcome() },
             Some(cfg) => {
-                let layer = DecodeLayer::from_decode_config(&cfg, chunk);
+                let layer =
+                    DecodeLayer::from_decode_config(&cfg, chunk).with_precision(self.precision);
                 self.resolve_layer_route(&layer)
             }
         };
@@ -441,7 +448,8 @@ impl<'rt> Router<'rt> {
             .ok()
             .and_then(|e| e.config)
             .ok_or_else(|| anyhow::anyhow!("no decode config for batch {batch}"))?;
-        let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        let layer =
+            DecodeLayer::from_decode_config(&cfg, batch).with_precision(self.precision);
         let machine = self.machine.clone();
         let tuner = self.tuner.get_or_insert_with(|| Tuner::new(machine));
         for node in layer.gemm_nodes() {
@@ -473,7 +481,8 @@ impl<'rt> Router<'rt> {
             Some(cfg) => cfg,
             None => return RoutedPlan { plan: None, outcome: Self::no_config_outcome() },
         };
-        let layer = DecodeLayer::from_decode_config(&cfg, batch);
+        let layer =
+            DecodeLayer::from_decode_config(&cfg, batch).with_precision(self.precision);
         self.resolve_layer_route(&layer)
     }
 
@@ -571,6 +580,25 @@ impl<'rt> Router<'rt> {
                 defaulted_nodes: defaulted,
             },
         }
+    }
+
+    /// Serve every layer at `precision` from now on.  Clears memoized
+    /// routes: the same batch re-walks the ladder under the new tags
+    /// (cache-only when the cache was tuned for that precision; retune /
+    /// default-splitk rungs otherwise — a pre-precision cache is a miss,
+    /// never an error).
+    pub fn set_precision(&mut self, precision: Precision) {
+        if self.precision == precision {
+            return;
+        }
+        self.precision = precision;
+        self.routes.clear();
+        self.prefill_routes.clear();
+    }
+
+    /// The precision family routed layers are tagged with.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Whether a readable tune cache was found next to the artifacts.

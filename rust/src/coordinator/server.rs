@@ -492,8 +492,15 @@ impl<'rt> Server<'rt> {
                 let step_res = match fault {
                     Some(FaultKind::Straggler { mult_x100 }) => {
                         self.metrics.record_fault("straggler");
-                        let penalty =
-                            step_us.saturating_mul(mult_x100.saturating_sub(100) as u64) / 100;
+                        // Round UP with a >=1µs floor: flooring division
+                        // charged zero for sub-µs steps (a 1µs step with a
+                        // 1.5x straggler injected nothing), silently
+                        // understating chaos-bench latency.
+                        let penalty = step_us
+                            .saturating_mul(mult_x100.saturating_sub(100) as u64)
+                            .div_ceil(100)
+                            .max(1);
+                        self.metrics.record_straggler_penalty_us(penalty);
                         self.clock_us = self.clock_us.saturating_add(penalty);
                         engine.step(&tokens, &positions)
                     }
@@ -532,6 +539,9 @@ impl<'rt> Server<'rt> {
             };
             steps += 1;
             self.clock_us = self.clock_us.saturating_add(step_us);
+            // Feed the batcher's recent-step-time window so shed hints
+            // scale with how fast the queue actually drains.
+            self.batcher.note_step_time(step_us);
 
             for (i, slot) in slots.iter_mut().enumerate() {
                 if slot.done {
@@ -844,9 +854,13 @@ impl<'rt> Server<'rt> {
                     let step_res = match fault {
                         Some(FaultKind::Straggler { mult_x100 }) => {
                             self.metrics.record_fault("straggler");
+                            // Same ceil + floor as the group path: every
+                            // injected straggler charges at least 1µs.
                             let penalty = decode_step_us
                                 .saturating_mul(mult_x100.saturating_sub(100) as u64)
-                                / 100;
+                                .div_ceil(100)
+                                .max(1);
+                            self.metrics.record_straggler_penalty_us(penalty);
                             self.clock_us = self.clock_us.saturating_add(penalty);
                             self.router
                                 .engine(opts.batch)
@@ -892,6 +906,7 @@ impl<'rt> Server<'rt> {
                         // never dies.
                         self.clock_us = self.clock_us.saturating_add(decode_step_us);
                         self.metrics.record_decode_step();
+                        self.batcher.note_step_time(decode_step_us);
                         for &i in &active {
                             let mut s = slots[i].take().unwrap();
                             s.outcome = Outcome::Failed;
@@ -917,6 +932,7 @@ impl<'rt> Server<'rt> {
                         }
                         self.clock_us = self.clock_us.saturating_add(tick_us);
                         self.metrics.record_decode_step();
+                        self.batcher.note_step_time(tick_us);
                         let mut emitted = 0usize;
                         for &i in &active {
                             let produced = out.next_tokens[i];

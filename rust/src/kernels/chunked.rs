@@ -302,6 +302,7 @@ mod tests {
             chunks: 4,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&machine, &p).unwrap();
         let pip = schedule_reduce(&machine, &p, &t, ReduceMode::Pipelined).unwrap();
@@ -338,6 +339,7 @@ mod tests {
             chunks: 4,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&machine, &p).unwrap();
         let tr = schedule_reduce(&machine, &p, &t, ReduceMode::Pipelined).unwrap();

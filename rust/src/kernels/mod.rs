@@ -21,8 +21,10 @@ pub mod fp16_native;
 pub mod fused;
 pub mod splitk;
 pub mod tiling;
+pub mod w4a8;
 
 use crate::ascend::{KernelTrace, MachineConfig, TileStep};
+use crate::model::quant::Precision;
 
 /// A GEMM problem: `C[M,N] = A[M,K] @ W[K,N]` with group-quantized weights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,11 +35,19 @@ pub struct GemmProblem {
     pub k: usize,
     /// Quantization group size along K.
     pub group: usize,
+    /// Precision family member (weight bits x activation bits) the
+    /// schedule must realize.  Defaults to the paper's W4A16.
+    pub precision: Precision,
 }
 
 impl GemmProblem {
     pub fn new(m: usize, n: usize, k: usize) -> GemmProblem {
-        GemmProblem { m, n, k, group: 128 }
+        GemmProblem { m, n, k, group: 128, precision: Precision::W4A16 }
+    }
+
+    /// The same problem at another precision (builder style).
+    pub fn with_precision(self, precision: Precision) -> GemmProblem {
+        GemmProblem { precision, ..self }
     }
 
     /// M padded to the cube tile (the hardware pads small batches).
@@ -122,6 +132,10 @@ pub enum Strategy {
     Fp16Native,
     Fused,
     Chunked,
+    /// W4A8 Split-K: INT8 activation-quantize vector prologue, INT4 -> INT8
+    /// weight conversion, INT8 MMAD at twice the MAC rate (DESIGN.md §16).
+    /// Only legal for problems tagged [`Precision::W4A8`].
+    W4A8,
     /// Resolved per shape through the persisted tune cache (see
     /// [`crate::tune`]); cannot be scheduled directly.
     Auto,
@@ -135,6 +149,7 @@ impl Strategy {
             Strategy::Fp16Native => "fp16_native",
             Strategy::Fused => "fused",
             Strategy::Chunked => "chunked",
+            Strategy::W4A8 => "w4a8",
             Strategy::Auto => "auto",
         }
     }
@@ -148,19 +163,24 @@ impl Strategy {
             "fp16" | "fp16_native" => Strategy::Fp16Native,
             "fused" => Strategy::Fused,
             "chunked" => Strategy::Chunked,
+            "w4a8" => Strategy::W4A8,
             "auto" => Strategy::Auto,
             other => anyhow::bail!("unknown strategy '{other}'"),
         })
     }
 
-    /// Every directly schedulable strategy (excludes `Auto`).
-    pub fn all_concrete() -> [Strategy; 5] {
+    /// Every directly schedulable strategy (excludes `Auto`).  W4A8 is
+    /// listed but returns an error from its tiler for W4A16-tagged
+    /// problems, so W4A16 searches see exactly the pre-existing space —
+    /// the Auto-never-slower guarantee holds by construction.
+    pub fn all_concrete() -> [Strategy; 6] {
         [
             Strategy::SplitK,
             Strategy::DataParallel,
             Strategy::Fp16Native,
             Strategy::Fused,
             Strategy::Chunked,
+            Strategy::W4A8,
         ]
     }
 }
@@ -176,6 +196,7 @@ pub fn select_tiling(
         Strategy::DataParallel => tiling::select_data_parallel(machine, problem),
         Strategy::Fp16Native => tiling::select_fp16(machine, problem),
         Strategy::Chunked => tiling::select_chunked(machine, problem),
+        Strategy::W4A8 => w4a8::select_w4a8(machine, problem),
         Strategy::Auto => anyhow::bail!(
             "Strategy::Auto must be resolved through the tune cache (crate::tune)"
         ),
@@ -219,6 +240,7 @@ pub fn schedule_with_reduce(
         Strategy::Fp16Native => fp16_native::schedule(machine, problem, t),
         Strategy::Fused => fused::schedule(machine, problem, t),
         Strategy::Chunked => chunked::schedule_reduce(machine, problem, t, reduce),
+        Strategy::W4A8 => w4a8::schedule_reduce(machine, problem, t, reduce),
         Strategy::Auto => anyhow::bail!(
             "Strategy::Auto must be resolved through the tune cache (crate::tune)"
         ),
@@ -353,11 +375,22 @@ mod tests {
             Strategy::Fp16Native,
             Strategy::Fused,
             Strategy::Chunked,
+            Strategy::W4A8,
             Strategy::Auto,
         ] {
             assert_eq!(Strategy::from_name(s.name()).unwrap(), s);
         }
         assert!(Strategy::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn w4a8_strategy_rejects_w4a16_problems() {
+        // W4A8 sits in all_concrete() but its tiler refuses precision
+        // mismatches, so W4A16 searches see the pre-existing space only.
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 512, 16384);
+        assert!(select_tiling(&m, &p, Strategy::W4A8).is_err());
+        assert!(select_tiling(&m, &p.with_precision(Precision::W4A8), Strategy::W4A8).is_ok());
     }
 
     #[test]

@@ -303,6 +303,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         (p, t)
@@ -383,6 +384,7 @@ mod tests {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 256,
+            rebalance: 0,
         };
         t.validate(&m(), &p).unwrap();
         let out_tiles = (p.m_padded(&m()) / t.bm) * (p.n / t.bn);

@@ -27,6 +27,14 @@ pub struct Tiling {
     /// Vector-core dequant tile (Phase 1).
     pub dequant_bk: usize,
     pub dequant_bn: usize,
+    /// W4A8 vector/cube rebalance knob, in percent (0..=100): the fraction
+    /// of weight tiles whose per-group scale application is *deferred*
+    /// from the dequant prologue into the reduce epilogue.  Deferred tiles
+    /// run a cheap 1-op/elem repack in the prologue instead of the full
+    /// 4-op dequant sequence; the epilogue pays the scale multiply per
+    /// group instead.  Ignored (must be 0-compatible) by the W4A16
+    /// schedules (DESIGN.md §16).
+    pub rebalance: usize,
 }
 
 impl Tiling {
@@ -49,6 +57,7 @@ impl Tiling {
         anyhow::ensure!(p.k % self.dequant_bk == 0 && p.n % self.dequant_bn == 0,
             "dequant tile must tile (K, N)");
         anyhow::ensure!(self.chunks >= 1, "chunk count must be positive");
+        anyhow::ensure!(self.rebalance <= 100, "rebalance is a percentage (0..=100)");
         if self.chunks > 1 {
             anyhow::ensure!(p.k % self.chunks == 0, "chunks {} !| K={}", self.chunks, p.k);
             let kc = p.k / self.chunks;
@@ -139,6 +148,7 @@ pub fn select_splitk(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result
                 chunks: 1,
                 dequant_bk: p.group,
                 dequant_bn: pow2_divisor(p.n, 256, 16),
+                rebalance: 0,
             };
             if t.validate(machine, p).is_ok() {
                 let score = phase2_cost(machine, p, &t);
@@ -197,6 +207,7 @@ pub fn select_fp16(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<T
                 chunks: 1,
                 dequant_bk: p.group,
                 dequant_bn: pow2_divisor(p.n, 256, 16),
+                rebalance: 0,
             };
             if t.validate(machine, p).is_err() {
                 continue;
@@ -243,6 +254,7 @@ pub fn select_data_parallel(machine: &MachineConfig, p: &GemmProblem) -> anyhow:
         chunks: 1,
         dequant_bk: p.group,
         dequant_bn: pow2_divisor(p.n, 256, 16),
+        rebalance: 0,
     };
     t.validate(machine, p)?;
     Ok(t)
@@ -411,5 +423,14 @@ mod tests {
         let base = select_splitk(&m(), &p).unwrap();
         let bad = Tiling { chunks: 3, ..base }; // 3 does not divide 16384
         assert!(bad.validate(&m(), &p).is_err());
+    }
+
+    #[test]
+    fn rebalance_is_bounded_to_a_percentage() {
+        let p = GemmProblem::new(8, 512, 16384);
+        let base = select_splitk(&m(), &p).unwrap();
+        assert_eq!(base.rebalance, 0, "W4A16 tilings never defer scales");
+        assert!(Tiling { rebalance: 100, ..base }.validate(&m(), &p).is_ok());
+        assert!(Tiling { rebalance: 101, ..base }.validate(&m(), &p).is_err());
     }
 }

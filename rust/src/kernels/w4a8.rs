@@ -1,0 +1,419 @@
+//! W4A8 Split-K: the first non-W4A16 member of the precision family
+//! (DESIGN.md §16).
+//!
+//! The schedule keeps Algorithm 1's decoupled skeleton but moves every
+//! stream to its INT8 width:
+//! 1. *Weight convert* (vector, `w4a8_dequant`): packed INT4 tiles are
+//!    expanded to INT8 codes in the GM workspace.  Per-group scale
+//!    handling is split by the [`Tiling::rebalance`] knob: full-path
+//!    tiles run the 4-op dequant sequence (scales applied here), while
+//!    deferred tiles run a 1-op repack and push their scale application
+//!    into the reduce epilogue — the vector/cube rebalancing lever, in
+//!    the APEX/LiquidGEMM lineage.
+//! 2. *Activation quantize* (vector, `act_quant`, pipelined): the FP16
+//!    activations are quantized to INT8 — the new vector prologue W4A8
+//!    pays for halving the activation MTE stream.
+//! 3. *INT8 MMAD* (cube, `w4a8_mmad`, pipelined): Split-K work items
+//!    walk their K range at the INT8 datapath's doubled MAC rate,
+//!    reading INT8 weight and activation tiles (half the W4A16 bytes).
+//! 4. *Reduce* (vector): the unchanged Split-K reduce machinery
+//!    ([`splitk::reduce_phases`]), plus a trailing `reduce_scale` wave
+//!    when `rebalance > 0` that applies the deferred per-group scales
+//!    over the output tiles.
+//!
+//! Strategy legality: [`select_w4a8`] refuses problems not tagged
+//! [`Precision::W4A8`], which is what lets the strategy sit in
+//! `Strategy::all_concrete()` without widening any W4A16 search.
+
+use crate::ascend::{
+    BufferClass, ComputeOp, KernelTrace, MachineConfig, Phase, TileStep, Unit,
+    WorkspacePolicy,
+};
+use crate::model::Precision;
+
+use super::{round_robin, round_robin_steps, splitk, tiling, tiling::Tiling, GemmProblem, ReduceMode};
+
+/// Number of dequant tiles whose scale application is deferred to the
+/// epilogue under a rebalance percentage (floor: 0% defers none, 100%
+/// defers all).
+fn deferred_tiles(tiles: usize, rebalance: usize) -> usize {
+    tiles * rebalance / 100
+}
+
+/// Phase 1: INT4 -> INT8 weight conversion into the GM workspace.
+fn weight_convert_phase(machine: &MachineConfig, p: &GemmProblem, t: &Tiling) -> Phase {
+    let k_tiles = p.k / t.dequant_bk;
+    let n_tiles = p.n / t.dequant_bn;
+    let tiles = k_tiles * n_tiles;
+    let deferred = deferred_tiles(tiles, t.rebalance);
+    let elems = t.dequant_bk * t.dequant_bn;
+    let param_bytes = (2 * (t.dequant_bk / p.group) * t.dequant_bn * 4) as u64;
+    // Full path: unpack + zero-point + scale (the W4A16 dequant op count).
+    let full_step = TileStep::new(ComputeOp::Dequant { elems })
+        .read(BufferClass::WeightPacked, (elems / 2) as u64)
+        .read(BufferClass::QuantParam, param_bytes)
+        .write(BufferClass::Workspace, elems as u64);
+    // Deferred path: bare repack, scales applied in `reduce_scale`.
+    let deferred_step = TileStep::new(ComputeOp::Cast { elems })
+        .read(BufferClass::WeightPacked, (elems / 2) as u64)
+        .read(BufferClass::QuantParam, param_bytes)
+        .write(BufferClass::Workspace, elems as u64);
+    // Tiles [0, deferred) defer, the rest run the full sequence; the
+    // round-robin keeps both kinds spread over every vector engine.
+    let steps_per_engine = round_robin(tiles, machine.total_vector_cores())
+        .into_iter()
+        .map(|items| {
+            items
+                .into_iter()
+                .map(|i| if i < deferred { deferred_step } else { full_step })
+                .collect()
+        })
+        .collect();
+    Phase {
+        name: "w4a8_dequant",
+        unit: Unit::Vector,
+        steps_per_engine,
+        pipelined_with_prev: false,
+        chunk: None,
+    }
+}
+
+/// Phase 2: FP16 -> INT8 activation quantization (the W4A8 prologue).
+fn act_quant_phase(machine: &MachineConfig, p: &GemmProblem, t: &Tiling) -> Phase {
+    let m_pad = p.m_padded(machine);
+    let rows = m_pad / 16;
+    let k_tiles = p.k / t.dequant_bk;
+    let tiles = rows * k_tiles;
+    let elems = 16 * t.dequant_bk;
+    let step = TileStep::new(ComputeOp::QuantizeAct { elems })
+        .read(BufferClass::Activation, (elems * 2) as u64)
+        .write(BufferClass::Workspace, elems as u64);
+    let steps_per_engine = round_robin(tiles, machine.total_vector_cores())
+        .into_iter()
+        .map(|items| vec![step; items.len()])
+        .collect();
+    Phase {
+        name: "act_quant",
+        unit: Unit::Vector,
+        steps_per_engine,
+        pipelined_with_prev: true,
+        chunk: None,
+    }
+}
+
+/// The trailing `reduce_scale` wave applying deferred per-group scales
+/// over the output tiles (only built when `rebalance > 0`).
+fn reduce_scale_phase(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+    pipelined_with_prev: bool,
+) -> Option<Phase> {
+    let k_tiles = p.k / t.dequant_bk;
+    let n_tiles = p.n / t.dequant_bn;
+    let deferred = deferred_tiles(k_tiles * n_tiles, t.rebalance);
+    if deferred == 0 {
+        return None;
+    }
+    let m_pad = p.m_padded(machine);
+    // One correction pass per deferred tile: its group columns scale the
+    // m_pad x dequant_bn output strip.
+    let elems = m_pad * t.dequant_bn * (t.dequant_bk / p.group);
+    let step = TileStep::new(ComputeOp::Cast { elems })
+        .read(BufferClass::Output, (m_pad * t.dequant_bn * 2) as u64)
+        .read(
+            BufferClass::QuantParam,
+            (2 * (t.dequant_bk / p.group) * t.dequant_bn * 4) as u64,
+        )
+        .write(BufferClass::Output, (m_pad * t.dequant_bn * 2) as u64);
+    let steps_per_engine = round_robin(deferred, machine.total_vector_cores())
+        .into_iter()
+        .map(|items| vec![step; items.len()])
+        .collect();
+    Some(Phase {
+        name: "reduce_scale",
+        unit: Unit::Vector,
+        steps_per_engine,
+        pipelined_with_prev,
+        chunk: None,
+    })
+}
+
+/// Build the full W4A8 trace (reduce mode resolved automatically).
+pub fn schedule(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+) -> anyhow::Result<KernelTrace> {
+    schedule_reduce(machine, p, t, ReduceMode::Auto)
+}
+
+/// Build the full W4A8 trace with an explicit reduce mode.
+pub fn schedule_reduce(
+    machine: &MachineConfig,
+    p: &GemmProblem,
+    t: &Tiling,
+    reduce: ReduceMode,
+) -> anyhow::Result<KernelTrace> {
+    anyhow::ensure!(
+        p.precision == Precision::W4A8,
+        "w4a8 schedule requires a W4A8-tagged problem (got {})",
+        p.precision.name()
+    );
+    if reduce == ReduceMode::Auto {
+        return super::resolve_reduce_auto(machine, |mode| schedule_reduce(machine, p, t, mode));
+    }
+    t.validate(machine, p)?;
+    let m_pad = p.m_padded(machine);
+    let ks = p.k / t.splits;
+    let k_steps = ks / t.bk;
+
+    let p1 = weight_convert_phase(machine, p, t);
+    let p2 = act_quant_phase(machine, p, t);
+
+    // Phase 3: (s, m, n) items over the cube cores at INT8 widths.
+    let single_split = t.splits == 1;
+    let items = t.mmad_items(machine, p);
+    let a_tile = (t.bm * t.bk) as u64; // INT8 activations
+    let b_tile = (t.bk * t.bn) as u64; // INT8 weights
+    let c_tile = if single_split {
+        (t.bm * t.bn * 2) as u64
+    } else {
+        (t.bm * t.bn * 4) as u64
+    };
+    let c_class = if single_split { BufferClass::Output } else { BufferClass::Partial };
+    let mid_step = TileStep::new(ComputeOp::MmadInt8 { m: t.bm, n: t.bn, k: t.bk })
+        .with_burst(t.bn as u64)
+        .read(BufferClass::Workspace, b_tile)
+        .read(BufferClass::Workspace, a_tile);
+    let last_step = mid_step.write(c_class, c_tile);
+    let steps_per_engine = round_robin_steps(items, machine.ai_cores, k_steps, mid_step, last_step);
+    let p3 = Phase {
+        name: "w4a8_mmad",
+        unit: Unit::Cube,
+        steps_per_engine,
+        pipelined_with_prev: true,
+        chunk: None,
+    };
+
+    let mut phases = vec![p1, p2, p3];
+    if !single_split {
+        phases.extend(splitk::reduce_phases(machine, p, t, reduce));
+    }
+    // The deferred-scale wave joins the trailing barrier group when one
+    // exists (keeping the exposed reduce tail pure-reduce); with S = 1
+    // it becomes its own barrier group behind the MMAD drain.
+    if let Some(scale) = reduce_scale_phase(machine, p, t, !single_split) {
+        phases.push(scale);
+    }
+
+    // Workspace: INT8 weight codes + INT8 quantized activations.
+    let workspace_bytes = (p.k * p.n) as u64 + (m_pad * p.k) as u64;
+    let partial_bytes = if single_split {
+        0
+    } else {
+        (t.splits * m_pad * p.n * 4) as u64
+    };
+    Ok(KernelTrace {
+        name: format!("w4a8_m{}_n{}_k{}_s{}", p.m, p.n, p.k, t.splits),
+        phases,
+        workspace_bytes,
+        partial_bytes,
+        workspace_policy: WorkspacePolicy::Buffered,
+    })
+}
+
+/// Tiling for the W4A8 schedule: start from the Split-K decision (the
+/// occupancy math is precision-independent), then pick the rebalance
+/// knob by simulating the three canonical settings (0 / 50 / 100 percent
+/// deferred) and keeping the fastest.  Refuses W4A16-tagged problems so
+/// the strategy never widens a W4A16 search.
+pub fn select_w4a8(machine: &MachineConfig, p: &GemmProblem) -> anyhow::Result<Tiling> {
+    use crate::ascend::Simulator;
+    anyhow::ensure!(
+        p.precision == Precision::W4A8,
+        "w4a8 strategy requires a W4A8-tagged problem (got {})",
+        p.precision.name()
+    );
+    let base = tiling::select_splitk(machine, p)?;
+    let sim = Simulator::new(machine.clone());
+    let mut best: Option<(f64, Tiling)> = None;
+    for rebalance in [0usize, 50, 100] {
+        let t = Tiling { rebalance, ..base };
+        let ns = match schedule(machine, p, &t) {
+            Ok(trace) => match sim.run(&trace) {
+                Ok(r) => r.total_ns,
+                Err(_) => continue,
+            },
+            Err(_) => continue,
+        };
+        let better = match &best {
+            None => true,
+            Some((b, _)) => ns < *b,
+        };
+        if better {
+            best = Some((ns, t));
+        }
+    }
+    let (_, t) = best.ok_or_else(|| anyhow::anyhow!("no legal w4a8 tiling"))?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::Simulator;
+
+    fn m() -> MachineConfig {
+        MachineConfig::ascend910()
+    }
+
+    fn problem(mm: usize, n: usize, k: usize) -> GemmProblem {
+        GemmProblem::new(mm, n, k).with_precision(Precision::W4A8)
+    }
+
+    fn build(mm: usize, n: usize, k: usize) -> (GemmProblem, Tiling, KernelTrace) {
+        let p = problem(mm, n, k);
+        let t = select_w4a8(&m(), &p).unwrap();
+        let tr = schedule(&m(), &p, &t).unwrap();
+        (p, t, tr)
+    }
+
+    #[test]
+    fn rejects_w4a16_problems() {
+        let p = GemmProblem::new(8, 512, 16384);
+        assert!(select_w4a8(&m(), &p).is_err());
+        let t = tiling::select_splitk(&m(), &p).unwrap();
+        assert!(schedule(&m(), &p, &t).is_err());
+    }
+
+    #[test]
+    fn phase_order_and_units() {
+        let (_, t, tr) = build(8, 512, 16384);
+        assert!(t.splits > 1, "large-K decode shape must split");
+        assert_eq!(tr.phases[0].name, "w4a8_dequant");
+        assert_eq!(tr.phases[0].unit, Unit::Vector);
+        assert!(!tr.phases[0].pipelined_with_prev);
+        assert_eq!(tr.phases[1].name, "act_quant");
+        assert_eq!(tr.phases[1].unit, Unit::Vector);
+        assert!(tr.phases[1].pipelined_with_prev);
+        assert_eq!(tr.phases[2].name, "w4a8_mmad");
+        assert_eq!(tr.phases[2].unit, Unit::Cube);
+        assert!(tr.phases[2].pipelined_with_prev);
+        assert!(tr.phases[3..].iter().all(|ph| ph.unit == Unit::Vector));
+    }
+
+    #[test]
+    fn covers_all_macs_exactly_once() {
+        let (p, _, tr) = build(8, 2048, 7168);
+        assert_eq!(tr.total_macs(), p.macs(&m()));
+    }
+
+    #[test]
+    fn streams_are_half_the_w4a16_widths() {
+        let machine = m();
+        let (p, t, tr) = build(8, 512, 16384);
+        // Activations: read once at FP16 by act_quant, streamed to the
+        // cube at INT8 (m_pad * K bytes per M-tile row walk).
+        assert_eq!(
+            tr.phases[1].read_bytes(BufferClass::Activation),
+            (p.m_padded(&machine) * p.k * 2) as u64
+        );
+        assert_eq!(
+            tr.phases[1].write_bytes(BufferClass::Workspace),
+            (p.m_padded(&machine) * p.k) as u64
+        );
+        // Weight workspace is INT8: half the W4A16 FP16 footprint.
+        assert_eq!(
+            tr.phases[0].write_bytes(BufferClass::Workspace),
+            (p.k * p.n) as u64
+        );
+        // The MMAD phase reads INT8 weight tiles + INT8 activation tiles.
+        let expect_b = (t.mmad_items(&machine, &p) * (p.k / t.splits / t.bk) * t.bk * t.bn) as u64;
+        let expect_a = (t.mmad_items(&machine, &p) * (p.k / t.splits / t.bk) * t.bm * t.bk) as u64;
+        assert_eq!(tr.phases[2].read_bytes(BufferClass::Workspace), expect_a + expect_b);
+    }
+
+    #[test]
+    fn rebalance_moves_vector_work_into_the_epilogue() {
+        let machine = m();
+        let p = problem(8, 512, 16384);
+        let base = tiling::select_splitk(&machine, &p).unwrap();
+        let full = schedule(&machine, &p, &Tiling { rebalance: 0, ..base }).unwrap();
+        let deferred = schedule(&machine, &p, &Tiling { rebalance: 100, ..base }).unwrap();
+        assert!(full.phases.iter().all(|ph| ph.name != "reduce_scale"));
+        assert_eq!(deferred.phases.last().unwrap().name, "reduce_scale");
+        // The prologue gets cheaper (Cast vs Dequant) tile for tile.
+        let prologue_ops = |tr: &KernelTrace| -> usize {
+            tr.phases[0]
+                .steps_per_engine
+                .iter()
+                .flatten()
+                .filter(|s| matches!(s.compute, ComputeOp::Dequant { .. }))
+                .count()
+        };
+        assert!(prologue_ops(&full) > 0);
+        assert_eq!(prologue_ops(&deferred), 0, "100% defers every tile");
+        // Both settings still cover every MAC.
+        assert_eq!(full.total_macs(), deferred.total_macs());
+    }
+
+    #[test]
+    fn half_rebalance_splits_the_prologue() {
+        let machine = m();
+        let p = problem(8, 2048, 7168);
+        let base = tiling::select_splitk(&machine, &p).unwrap();
+        let tr = schedule(&machine, &p, &Tiling { rebalance: 50, ..base }).unwrap();
+        let tiles = (p.k / base.dequant_bk) * (p.n / base.dequant_bn);
+        let casts: usize = tr.phases[0]
+            .steps_per_engine
+            .iter()
+            .flatten()
+            .filter(|s| matches!(s.compute, ComputeOp::Cast { .. }))
+            .count();
+        assert_eq!(casts, tiles / 2);
+        assert_eq!(tr.phases.last().unwrap().name, "reduce_scale");
+    }
+
+    #[test]
+    fn simulates_clean_and_exposes_splice_tags() {
+        let (_, _, tr) = build(8, 512, 16384);
+        let r = Simulator::new(m()).run(&tr).unwrap();
+        assert!(r.total_ns > 0.0);
+        // The weight-convert prologue opens the trace (splice consumer).
+        assert_eq!(tr.dequant_prologue(), Some(0));
+        assert!(tr.phases[0].is_dequant());
+        // A trailing reduce group stays exposed (splice producer) even
+        // with a deferred-scale wave appended.
+        let p = problem(8, 512, 16384);
+        let base = tiling::select_splitk(&m(), &p).unwrap();
+        let t = Tiling { rebalance: 100, ..base };
+        let tr = schedule_reduce(&m(), &p, &t, ReduceMode::Barrier).unwrap();
+        let range = tr.exposed_reduce_range().expect("barrier reduce + scale wave exposed");
+        assert!(tr.phases[range.start..].iter().all(|ph| ph.is_reduce()));
+        assert_eq!(tr.phases.last().unwrap().name, "reduce_scale");
+    }
+
+    #[test]
+    fn beats_w4a16_splitk_on_large_k_decode_shapes() {
+        // The headline claim: half the activation/weight streams plus the
+        // doubled INT8 MAC rate must win on the K >> N decode shapes.
+        let machine = m();
+        let sim = Simulator::new(machine.clone());
+        for (n, k) in [(512, 16384), (2048, 8192)] {
+            let p8 = problem(8, n, k);
+            let p16 = GemmProblem::new(8, n, k);
+            let t8 = select_w4a8(&machine, &p8).unwrap();
+            let w4a8_ns = sim.run(&schedule(&machine, &p8, &t8).unwrap()).unwrap().total_ns;
+            let t16 = tiling::select_splitk(&machine, &p16).unwrap();
+            let w4a16_ns = sim
+                .run(&splitk::schedule(&machine, &p16, &t16).unwrap())
+                .unwrap()
+                .total_ns;
+            assert!(
+                w4a8_ns < w4a16_ns,
+                "n={n} k={k}: w4a8 {w4a8_ns} not faster than splitk {w4a16_ns}"
+            );
+        }
+    }
+}

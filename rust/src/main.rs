@@ -25,6 +25,7 @@ use ascend_w4a16::coordinator::{
 };
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{self, LayerGeometry, MoeGeometry};
+use ascend_w4a16::model::Precision;
 use ascend_w4a16::quant;
 use ascend_w4a16::runtime::client::literal_to_host;
 use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
@@ -79,14 +80,16 @@ fn print_usage() {
 USAGE: repro <subcommand> [options]
 
   machine                          print the simulated Ascend 910 description
-  simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused|chunked|auto]
-           [--tune-cache PATH]     ('auto' resolves through the tune cache)
+  simulate --n N --k K [--batch M] [--strategy splitk|dp|fp16|fused|chunked|w4a8|auto]
+           [--precision w4a16|w4a8] [--tune-cache PATH]
+                                   ('auto' resolves through the tune cache;
+                                   the w4a8 strategy needs --precision w4a8)
   layer [--model llama32|glm45|deepseek|openpangu|deepseek-moe
          | --hidden H --ffn F [--kv W] [--group G]]
         [--batch M] [--layers L] [--kv-len T] [--heads H]
         [--moe-experts E] [--moe-topk K]
         [--overlap sequential|overlapped|exact|auto]
-        [--residency off|auto]
+        [--residency off|auto] [--precision w4a16|w4a8]
         [--strategy auto|...] [--tune-cache PATH] [--json PATH]
                                    simulate one FULL decode step: attention
                                    score/softmax/AV + RMSNorm/residual/glue on
@@ -103,7 +106,7 @@ USAGE: repro <subcommand> [options]
                                    (DESIGN.md §13) and serves
                                    min(plan, resident plan) — never slower
   tune [--out PATH] [--artifacts DIR] [--n N --k K [--batch M]] [--prune]
-                                   autotune strategies x tilings (the paper
+       [--precision w4a16|w4a8]    autotune strategies x tilings (the paper
                                    sweep, plus DIR's decode-model shapes)
                                    and persist the winners to PATH
                                    (default tune_cache.json); also seeds the
@@ -143,6 +146,7 @@ USAGE: repro <subcommand> [options]
              [--queue-cap N] [--deadline-us D]
              [--fault-rate P --fault-seed S]
              [--kv-capacity-bytes BYTES] [--page-bytes BYTES]
+             [--precision w4a16|w4a8]
              [--trace IN.json] [--trace-out OUT.json]
                                    continuous-batching serve on the
                                    virtual clock: seeded Poisson arrivals
@@ -156,6 +160,12 @@ USAGE: repro <subcommand> [options]
 
 fn machine() -> MachineConfig {
     MachineConfig::ascend910()
+}
+
+/// The `--precision` flag shared by simulate/layer/tune/serve-load
+/// (default: the paper's W4A16 kernel).
+fn cli_precision(args: &Args) -> anyhow::Result<Precision> {
+    Precision::from_name(args.get_or("precision", "w4a16"))
 }
 
 fn cmd_machine() -> anyhow::Result<()> {
@@ -208,7 +218,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 8)?;
     let strategy = Strategy::from_name(args.get_or("strategy", "splitk"))?;
     let m = machine();
-    let p = GemmProblem::new(batch, n, k);
+    let p = GemmProblem::new(batch, n, k).with_precision(cli_precision(args)?);
     let (strategy, tiling) = resolve_cli_strategy(args, &m, &p, strategy)?;
     let trace = kernels::schedule_with(&m, &p, strategy, &tiling)?;
     let r = Simulator::new(m.clone()).run(&trace)?;
@@ -269,7 +279,7 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
-    let mut decode_layer = DecodeLayer::new(geometry, batch);
+    let mut decode_layer = DecodeLayer::new(geometry, batch).with_precision(cli_precision(args)?);
     if let Some(moe) = moe {
         decode_layer = decode_layer.with_moe(moe);
     }
@@ -323,6 +333,9 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let sim = Simulator::new(m.clone());
+    // `--precision w4a8` tunes the same sweep under W4A8-tagged keys, so
+    // a cache can hold both families side by side (W4A16 keys unchanged).
+    let precision = cli_precision(args)?;
 
     // One explicit shape, or the full paper sweep; with --artifacts, also
     // every decode model's layer graph per compiled batch size so the
@@ -337,7 +350,7 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             let n = args.get_usize("n", 2048)?;
             let k = args.get_usize("k", 7168)?;
             let batch = args.get_usize("batch", 8)?;
-            vec![GemmProblem::new(batch, n, k)]
+            vec![GemmProblem::new(batch, n, k).with_precision(precision)]
         }
         _ => {
             // Every paper model's full decode-layer GEMM graph (qkv,
@@ -346,25 +359,32 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             // cache hit afterwards.
             for (_, geom) in llm::paper_layer_geometries() {
                 for &batch in &llm::PAPER_BATCH_SIZES {
-                    layers.push(DecodeLayer::new(geom, batch));
+                    layers.push(DecodeLayer::new(geom, batch).with_precision(precision));
                 }
             }
             for (_, geom, moe) in llm::paper_moe_geometries() {
                 for &batch in &llm::PAPER_BATCH_SIZES {
-                    layers.push(DecodeLayer::new(geom, batch).with_moe(moe));
+                    layers.push(
+                        DecodeLayer::new(geom, batch).with_moe(moe).with_precision(precision),
+                    );
                 }
             }
             if let Some(dir) = args.get("artifacts") {
                 let mf = Manifest::load(dir)?;
                 for entry in mf.artifacts.iter().filter(|a| a.kind == "decode") {
                     if let (Some(cfg), Some(batch)) = (entry.config, entry.batch) {
-                        layers.push(DecodeLayer::from_decode_config(&cfg, batch));
+                        layers.push(
+                            DecodeLayer::from_decode_config(&cfg, batch)
+                                .with_precision(precision),
+                        );
                     }
                 }
             }
             let mut problems: Vec<GemmProblem> = workload::paper_sweep()
                 .iter()
-                .map(|(shape, batch)| workload::problem_for(shape, *batch))
+                .map(|(shape, batch)| {
+                    workload::problem_for(shape, *batch).with_precision(precision)
+                })
                 .collect();
             for decode_layer in &layers {
                 for node in decode_layer.gemm_nodes() {
@@ -633,10 +653,15 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
 
     let mf = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
-    let router = Router::new(&rt, mf, &model)?;
+    let mut router = Router::new(&rt, mf, &model)?;
+    let precision = cli_precision(args)?;
+    router.set_precision(precision);
     let sizes = router.batch_sizes();
     let batch = args.get_usize("batch", *sizes.last().unwrap())?;
-    println!("continuous serve on model '{model}': batch {batch}, chunk {chunk}");
+    println!(
+        "continuous serve on model '{model}': batch {batch}, chunk {chunk}, precision {}",
+        precision.name()
+    );
     let mut server = Server::new(router, Batcher::new(BatchPolicy::new(sizes)?));
     if fault_rate > 0.0 {
         println!("fault injection: rate {fault_rate:.3}, seed {fault_seed} (deterministic)");

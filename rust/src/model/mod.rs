@@ -4,7 +4,9 @@
 pub mod decode;
 pub mod kv_cache;
 pub mod llm;
+pub mod quant;
 
 pub use decode::{synthetic_next_token, DecodeEngine, Engine, SimEngine, StepOutput};
 pub use kv_cache::{kv_bytes_per_token, KvPager, DEFAULT_PAGE_BYTES};
 pub use llm::{paper_shapes, LlmShape, PAPER_BATCH_SIZES};
+pub use quant::Precision;

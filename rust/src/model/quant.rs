@@ -1,0 +1,116 @@
+//! Precision families for mixed-precision GEMM (DESIGN.md §16).
+//!
+//! The paper's kernel is W4A16: INT4 group-quantized weights, FP16
+//! activations, FP16 MMAD on the cube core.  Opening the precision axis
+//! as a first-class model lets the schedules and the tuner reason about
+//! a *family* of precisions instead of hard-coding one: each member
+//! fixes the bits per weight, the bits per activation, and therefore the
+//! HBM stream width of every buffer class and the MACs-per-cycle the
+//! cube core retires.
+//!
+//! W4A8 (the LiquidGEMM/ANT lineage): weights stay INT4, activations
+//! are quantized to INT8 by a vector prologue, and the cube core runs
+//! INT8 MMAD at twice the FP16 MAC rate.  The activation stream to the
+//! MTEs halves; the price is the activation-quantize vector pass and a
+//! per-group rescale that the schedule may defer into the reduce
+//! epilogue (the `rebalance` tiling knob).
+
+/// One member of the precision family: weight bits x activation bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Precision {
+    /// INT4 weights, FP16 activations, FP16 MMAD (the paper's kernel).
+    #[default]
+    W4A16,
+    /// INT4 weights, INT8 activations, INT8 MMAD at 2x the MAC rate.
+    W4A8,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::W4A16 => "w4a16",
+            Precision::W4A8 => "w4a8",
+        }
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Precision> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "w4a16" => Precision::W4A16,
+            "w4a8" => Precision::W4A8,
+            other => anyhow::bail!("unknown precision '{other}' (expected w4a16 or w4a8)"),
+        })
+    }
+
+    /// Bits per packed weight element (both members pack INT4).
+    pub fn weight_bits(&self) -> u32 {
+        4
+    }
+
+    /// Bits per activation element as streamed to the cube core.
+    pub fn activation_bits(&self) -> u32 {
+        match self {
+            Precision::W4A16 => 16,
+            Precision::W4A8 => 8,
+        }
+    }
+
+    /// Bytes per activation element (the A-tile MTE stream width).
+    pub fn activation_bytes(&self) -> usize {
+        (self.activation_bits() / 8) as usize
+    }
+
+    /// Bytes per element of the dequantized/quantized weight workspace the
+    /// cube core consumes (FP16 for W4A16, INT8 codes for W4A8).
+    pub fn workspace_bytes_per_elem(&self) -> usize {
+        match self {
+            Precision::W4A16 => 2,
+            Precision::W4A8 => 1,
+        }
+    }
+
+    /// MACs per cube core per cycle at this operand width.
+    pub fn cube_macs_per_cycle(&self, machine: &crate::ascend::MachineConfig) -> f64 {
+        match self {
+            Precision::W4A16 => machine.cube_macs_per_cycle,
+            Precision::W4A8 => machine.cube_macs_per_cycle_int8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascend::MachineConfig;
+
+    #[test]
+    fn names_round_trip() {
+        for p in [Precision::W4A16, Precision::W4A8] {
+            assert_eq!(Precision::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(Precision::from_name("W4A8").unwrap(), Precision::W4A8);
+        assert!(Precision::from_name("w4a4").is_err());
+    }
+
+    #[test]
+    fn default_is_the_paper_kernel() {
+        assert_eq!(Precision::default(), Precision::W4A16);
+    }
+
+    #[test]
+    fn stream_widths_halve_from_a16_to_a8() {
+        assert_eq!(Precision::W4A16.activation_bytes(), 2);
+        assert_eq!(Precision::W4A8.activation_bytes(), 1);
+        assert_eq!(Precision::W4A16.workspace_bytes_per_elem(), 2);
+        assert_eq!(Precision::W4A8.workspace_bytes_per_elem(), 1);
+        assert_eq!(Precision::W4A16.weight_bits(), Precision::W4A8.weight_bits());
+    }
+
+    #[test]
+    fn int8_mac_rate_doubles() {
+        let m = MachineConfig::ascend910();
+        assert_eq!(
+            Precision::W4A8.cube_macs_per_cycle(&m),
+            2.0 * Precision::W4A16.cube_macs_per_cycle(&m)
+        );
+    }
+}

@@ -48,16 +48,28 @@ pub fn machine_tag(machine: &MachineConfig) -> String {
     )
 }
 
+/// Key suffix carrying the precision tag.  W4A16 — the only family member
+/// before the precision axis opened — keeps the bare key, so every
+/// pre-existing cache file parses AND routes without retuning; W4A8
+/// entries are disjoint by construction (DESIGN.md §16).
+fn precision_suffix(p: &GemmProblem) -> &'static str {
+    match p.precision {
+        crate::model::Precision::W4A16 => "",
+        crate::model::Precision::W4A8 => "_a8",
+    }
+}
+
 /// Cache key for one problem on one machine.  M is padded to the cube tile
 /// so every decode batch in 1..=16 shares one entry, as the hardware does.
 pub fn shape_key(machine: &MachineConfig, p: &GemmProblem) -> String {
     format!(
-        "{}/m{}_n{}_k{}_g{}",
+        "{}/m{}_n{}_k{}_g{}{}",
         machine_tag(machine),
         p.m_padded(machine),
         p.n,
         p.k,
-        p.group
+        p.group,
+        precision_suffix(p)
     )
 }
 
@@ -66,12 +78,13 @@ pub fn shape_key(machine: &MachineConfig, p: &GemmProblem) -> String {
 /// which the shape keys determine on a given machine (DESIGN.md §12).
 pub fn pair_key(machine: &MachineConfig, producer: &GemmProblem, consumer: &GemmProblem) -> String {
     format!(
-        "{}->m{}_n{}_k{}_g{}",
+        "{}->m{}_n{}_k{}_g{}{}",
         shape_key(machine, producer),
         consumer.m_padded(machine),
         consumer.n,
         consumer.k,
-        consumer.group
+        consumer.group,
+        precision_suffix(consumer)
     )
 }
 
@@ -85,13 +98,14 @@ pub fn layer_key(machine: &MachineConfig, layer: &DecodeLayer) -> String {
         .iter()
         .map(|n| {
             format!(
-                "{}x{}:m{}_n{}_k{}_g{}",
+                "{}x{}:m{}_n{}_k{}_g{}{}",
                 n.kind.name(),
                 n.count,
                 n.problem.m_padded(machine),
                 n.problem.n,
                 n.problem.k,
-                n.problem.group
+                n.problem.group,
+                precision_suffix(&n.problem)
             )
         })
         .collect();
@@ -309,6 +323,7 @@ fn entry_to_json(e: &TunedEntry) -> Json {
                 ("chunks", Json::num(e.tiling.chunks as f64)),
                 ("dequant_bk", Json::num(e.tiling.dequant_bk as f64)),
                 ("dequant_bn", Json::num(e.tiling.dequant_bn as f64)),
+                ("rebalance", Json::num(e.tiling.rebalance as f64)),
             ]),
         ),
     ])
@@ -330,6 +345,14 @@ fn entry_from_json(j: &Json) -> anyhow::Result<TunedEntry> {
             chunks: t.req_usize("chunks")?,
             dequant_bk: t.req_usize("dequant_bk")?,
             dequant_bn: t.req_usize("dequant_bn")?,
+            // Pre-W4A8 cache files carry no rebalance knob: absent = 0
+            // (scales applied in the prologue), so stale W4A16 caches
+            // parse and route unchanged.
+            rebalance: t
+                .get("rebalance")
+                .and_then(|v| v.as_f64())
+                .map(|v| v as usize)
+                .unwrap_or(0),
         },
     })
 }
@@ -350,6 +373,7 @@ mod tests {
                 chunks: 8,
                 dequant_bk: 128,
                 dequant_bn: 256,
+                rebalance: 0,
             },
         }
     }
@@ -469,6 +493,44 @@ mod tests {
         assert_eq!(ab, pair_key(&m, &GemmProblem::new(16, 512, 16384), &b));
         // Direction matters: a->b is not b->a.
         assert_ne!(ab, pair_key(&m, &b, &a));
+    }
+
+    #[test]
+    fn w4a8_shape_keys_are_tagged_and_disjoint() {
+        use crate::model::Precision;
+        let m = MachineConfig::ascend910();
+        let p = GemmProblem::new(8, 512, 16384);
+        let a16 = shape_key(&m, &p);
+        let a8 = shape_key(&m, &p.with_precision(Precision::W4A8));
+        assert!(!a16.ends_with("_a8"), "W4A16 keeps the legacy untagged key");
+        assert!(a8.ends_with("_a8"));
+        assert_ne!(a16, a8);
+        // Pair keys tag both endpoints independently.
+        let q = GemmProblem::new(8, 2048, 8192).with_precision(Precision::W4A8);
+        assert!(pair_key(&m, &p, &q).ends_with("_a8"));
+        assert!(!pair_key(&m, &q, &p).ends_with("_a8"));
+    }
+
+    #[test]
+    fn tilings_without_rebalance_parse_as_zero() {
+        // Pre-W4A8 cache entries carry 7-field tilings; they must load
+        // (and route) rather than abort the whole cache.
+        let j = Json::parse(
+            r#"{"version": 2, "entries": {"k": {
+                "strategy": "splitk", "total_ns": 10.0,
+                "tiling": {"bm":16,"bn":256,"bk":128,"splits":4,"chunks":1,
+                           "dequant_bk":128,"dequant_bn":256}}}}"#,
+        )
+        .unwrap();
+        let c = TuneCache::from_json(&j).unwrap();
+        assert_eq!(c.get("k").unwrap().tiling.rebalance, 0);
+        // And the current writer round-trips a non-zero knob.
+        let mut tagged = entry();
+        tagged.tiling.rebalance = 50;
+        let mut c2 = TuneCache::new();
+        c2.insert("w".into(), tagged);
+        let back = TuneCache::from_json(&Json::parse(&c2.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.get("w").unwrap().tiling.rebalance, 50);
     }
 
     #[test]

@@ -84,8 +84,12 @@ fn candidates(machine: &MachineConfig, p: &GemmProblem, strategy: Strategy) -> V
         }
     };
 
-    // Split-factor neighborhood (occupancy vs reduce overhead).
-    if matches!(strategy, Strategy::SplitK | Strategy::Fused | Strategy::Chunked) {
+    // Split-factor neighborhood (occupancy vs reduce overhead).  W4A8
+    // inherits Split-K's reduce machinery, so the same trade-off applies.
+    if matches!(
+        strategy,
+        Strategy::SplitK | Strategy::Fused | Strategy::Chunked | Strategy::W4A8
+    ) {
         if base.splits > 1 {
             push(Tiling { splits: base.splits / 2, ..base });
         }
@@ -125,6 +129,17 @@ fn candidates(machine: &MachineConfig, p: &GemmProblem, strategy: Strategy) -> V
         }
         push(Tiling { dequant_bn, ..base });
     }
+
+    // Vector/cube rebalance neighborhood (W4A8 only): `select_w4a8`
+    // already scored the coarse grid, but re-offering it here lets the
+    // knob combine with the split/width perturbations above.
+    if strategy == Strategy::W4A8 {
+        for rebalance in [0usize, 50, 100] {
+            if rebalance != base.rebalance {
+                push(Tiling { rebalance, ..base });
+            }
+        }
+    }
     out
 }
 
@@ -162,6 +177,37 @@ mod tests {
                 sk.total_ns
             );
         }
+    }
+
+    #[test]
+    fn w4a8_tagged_search_never_loses_to_the_w4a16_family() {
+        // The W4A8-tagged candidate set is a superset of the W4A16 one
+        // (the five precision-agnostic strategies stay searchable), so
+        // Auto-with-W4A8 can never be slower than W4A16-only.
+        use crate::model::Precision;
+        let machine = m();
+        for (n, k) in [(512, 16384), (2048, 7168), (12288, 5120)] {
+            let a16 = search(&machine, &GemmProblem::new(8, n, k)).unwrap().best;
+            let a8 = search(
+                &machine,
+                &GemmProblem::new(8, n, k).with_precision(Precision::W4A8),
+            )
+            .unwrap()
+            .best;
+            assert!(
+                a8.total_ns <= a16.total_ns * 1.000001,
+                "n={n} k={k}: w4a8-tagged {} vs w4a16 {}",
+                a8.total_ns,
+                a16.total_ns
+            );
+        }
+    }
+
+    #[test]
+    fn w4a16_candidate_sets_ignore_the_w4a8_strategy() {
+        // W4A8 contributes zero candidates to an untagged problem, so
+        // pre-existing searches (and their cached winners) are unchanged.
+        assert!(candidates(&m(), &GemmProblem::new(8, 2048, 7168), Strategy::W4A8).is_empty());
     }
 
     #[test]

@@ -58,10 +58,17 @@ impl ArrivalPlan {
         let mut arrivals = Vec::with_capacity(count);
         for _ in 0..count {
             at_us += (rng.exponential(rate).ceil() as u64).max(1);
+            // Both draws clamp so lo <= hi for ANY max_seq: the prompt
+            // draw's upper bound floors at the lower bound (2), and the
+            // output-budget draw's upper bound floors at its lower bound
+            // (inverted at small max_seq, e.g. max_seq = 7 gave lo=4 >
+            // hi=3 before).  For max_seq >= 18 every range is already
+            // valid, so large-seq plans are bit-identical to the old ones.
             let prompt_len = rng.usize_range(2, (max_seq / 4).max(2));
-            let budget_cap = (max_seq - prompt_len).saturating_sub(1).max(1);
-            let max_new_tokens =
-                rng.usize_range(4.min(budget_cap), (max_seq / 2).min(budget_cap));
+            let budget_cap = (max_seq.saturating_sub(prompt_len)).saturating_sub(1).max(1);
+            let new_lo = 4.min(budget_cap);
+            let new_hi = (max_seq / 2).min(budget_cap).max(new_lo);
+            let max_new_tokens = rng.usize_range(new_lo, new_hi);
             arrivals.push(Arrival { at_us, prompt_len, max_new_tokens });
         }
         ArrivalPlan { arrivals }
@@ -145,6 +152,28 @@ mod tests {
             last = arr.at_us;
             assert!(arr.prompt_len >= 2);
             assert!(arr.prompt_len + arr.max_new_tokens < 128);
+        }
+    }
+
+    #[test]
+    fn small_max_seq_plans_are_well_formed() {
+        // Regression: max_seq <= 8 used to build inverted sampling ranges
+        // (lo > hi) for the output budget, underflowing usize_range's
+        // modulus.  Every range must now clamp so the plan stays legal.
+        for max_seq in 4..=64 {
+            let plan = ArrivalPlan::poisson(13, 100.0, 32, max_seq);
+            assert_eq!(plan.arrivals.len(), 32);
+            for a in &plan.arrivals {
+                assert!(a.prompt_len >= 2, "max_seq={max_seq}");
+                assert!(a.max_new_tokens >= 1, "max_seq={max_seq}");
+                assert!(
+                    a.prompt_len + a.max_new_tokens < max_seq.max(4),
+                    "max_seq={max_seq}: prompt {} + new {} must fit",
+                    a.prompt_len,
+                    a.max_new_tokens
+                );
+            }
+            assert_eq!(plan, ArrivalPlan::poisson(13, 100.0, 32, max_seq), "seed-stable");
         }
     }
 

@@ -18,6 +18,7 @@
 
 use crate::kernels::GemmProblem;
 use crate::model::llm::{LayerGeometry, MoeGeometry};
+use crate::model::Precision;
 use crate::runtime::artifacts::DecodeConfig;
 
 /// Which projection GEMM a graph node is.
@@ -84,16 +85,26 @@ pub struct DecodeLayer {
     pub batch: usize,
     /// Routed expert fan-out replacing the dense FFN pair (`None` = dense).
     pub moe: Option<MoeGeometry>,
+    /// Precision family every node of this layer runs at (W4A16 unless
+    /// the deployment opts the layer into W4A8).
+    pub precision: Precision,
 }
 
 impl DecodeLayer {
     pub fn new(geometry: LayerGeometry, batch: usize) -> DecodeLayer {
-        DecodeLayer { geometry, batch, moe: None }
+        DecodeLayer { geometry, batch, moe: None, precision: Precision::default() }
     }
 
     /// Attach a routed expert fan-out (the MoE decoding scenario).
     pub fn with_moe(mut self, moe: MoeGeometry) -> DecodeLayer {
         self.moe = Some(moe);
+        self
+    }
+
+    /// Run every node of the layer at `precision` (the per-layer knob the
+    /// router and CLI thread down to each GEMM problem's tune-cache key).
+    pub fn with_precision(mut self, precision: Precision) -> DecodeLayer {
+        self.precision = precision;
         self
     }
 
@@ -134,7 +145,7 @@ impl DecodeLayer {
                 panic!("MoeExpert has no single dense problem; use DecodeLayer::moe_nodes()")
             }
         };
-        GemmProblem { m: self.batch, n, k, group: g.group }
+        GemmProblem { m: self.batch, n, k, group: g.group, precision: self.precision }
     }
 
     /// The four dense projection problems in issue order (the serving
@@ -155,12 +166,24 @@ impl DecodeLayer {
         Some([
             GemmNode {
                 kind: GemmKind::MoeExpert,
-                problem: GemmProblem { m, n: 2 * moe.expert_ffn, k: g.hidden, group: g.group },
+                problem: GemmProblem {
+                    m,
+                    n: 2 * moe.expert_ffn,
+                    k: g.hidden,
+                    group: g.group,
+                    precision: self.precision,
+                },
                 count,
             },
             GemmNode {
                 kind: GemmKind::MoeExpert,
-                problem: GemmProblem { m, n: g.hidden, k: moe.expert_ffn, group: g.group },
+                problem: GemmProblem {
+                    m,
+                    n: g.hidden,
+                    k: moe.expert_ffn,
+                    group: g.group,
+                    precision: self.precision,
+                },
                 count,
             },
         ])
@@ -492,6 +515,24 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{model} b={batch}: {e}"));
             }
         }
+    }
+
+    #[test]
+    fn precision_threads_to_every_node() {
+        let geom = layer_geometry("deepseek-moe").unwrap();
+        let moe = moe_geometry("deepseek-moe").unwrap();
+        let layer = DecodeLayer::new(geom, 8)
+            .with_moe(moe)
+            .with_precision(Precision::W4A8);
+        for node in layer.gemm_nodes() {
+            assert_eq!(node.problem.precision, Precision::W4A8, "{}", node.kind.name());
+        }
+        // Default stays the paper's W4A16 kernel.
+        let dense = DecodeLayer::new(geom, 8);
+        assert!(dense
+            .gemm_nodes()
+            .iter()
+            .all(|n| n.problem.precision == Precision::W4A16));
     }
 
     #[test]

@@ -26,6 +26,15 @@ use ascend_w4a16::workload::{Arrival, ArrivalPlan, DecodeLayer, RequestGenerator
 /// Three config-only decode artifacts (batch 1/2/4) — the router builds
 /// synthetic engines, so the whole coordinator stack runs end to end.
 fn manifest_json() -> String {
+    manifest_json_with_group(128)
+}
+
+/// Like [`manifest_json`], with a chosen dequant group size.  A group
+/// that divides neither `hidden` nor `ffn` makes every GEMM node
+/// structurally unpriceable, so routing serves *unpriced* and every tick
+/// costs `ServerConfig::default_step_us` — the lever the sub-µs
+/// straggler regression pulls.
+fn manifest_json_with_group(group: usize) -> String {
     let artifact = |batch: usize| {
         format!(
             r#"    {{
@@ -35,14 +44,14 @@ fn manifest_json() -> String {
       "model": "tiny",
       "batch": {batch},
       "config": {{"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
-                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0}},
+                 "ffn": 1024, "max_seq": 64, "group": {group}, "params": 0}},
       "inputs": [],
       "outputs": []
     }}"#
         )
     };
     format!(
-        "{{\n  \"group\": 128,\n  \"batch_sizes\": [1, 2, 4],\n  \"paper_shapes\": [],\n  \"artifacts\": [\n{},\n{},\n{}\n  ]\n}}",
+        "{{\n  \"group\": {group},\n  \"batch_sizes\": [1, 2, 4],\n  \"paper_shapes\": [],\n  \"artifacts\": [\n{},\n{},\n{}\n  ]\n}}",
         artifact(1),
         artifact(2),
         artifact(4)
@@ -452,6 +461,115 @@ fn cache_write_fault_fails_the_request_with_partial_tokens() {
     assert!(snap.faults.get(CACHE_WRITE_FAULT_NAME).copied().unwrap_or(0) >= 1);
     assert!(snap.outcomes_accounted());
     assert!(snap.sheds_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sub_microsecond_straggler_steps_charge_positive_penalty() {
+    // Regression for the penalty-truncation bug: the straggler charge
+    // `step_us * (mult_x100 - 100) / 100` used flooring division, so a
+    // 1µs decode tick with a 1.5x straggler (mult_x100 = 150) injected
+    // ZERO penalty — chaos runs counted stragglers whose latency never
+    // reached the clock.  The fix rounds up with a >= 1µs floor, so the
+    // total penalty is at least one µs per injected straggler.
+    //
+    // Group 192 divides neither hidden (256) nor ffn (1024), so every
+    // GEMM node is structurally unpriceable, the route serves unpriced,
+    // and each tick costs `default_step_us` — pinned here to 1µs.
+    let dir = std::env::temp_dir()
+        .join(format!("w4a16-chaos-subus-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json_with_group(192)).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(
+        router.route(2).plan.as_ref().and_then(|p| p.predicted_served_ns()).is_none(),
+        "premise: the route must be unpriced so ticks cost default_step_us"
+    );
+    let sizes = router.batch_sizes();
+    let mut server =
+        Server::new(router, Batcher::new(BatchPolicy::new(sizes).unwrap().with_queue_cap(64)));
+    server.config.default_step_us = 1;
+    // A plan that injects at least one straggler at attempt 0 of an early
+    // decode tick of serve session 0, and lets every early tick land
+    // within the retry budget (so the run keeps decoding past it).
+    let plan = (0u64..)
+        .map(|seed| FaultPlan::new(seed, 0.4))
+        .find(|p| {
+            let straggles = (0..16u64)
+                .any(|t| matches!(p.step_fault(0, t, 0), Some(FaultKind::Straggler { .. })));
+            let survivable =
+                (0..64u64).all(|s| (0..4u32).any(|a| p.step_fault(0, s, a).is_none()));
+            straggles && survivable
+        })
+        .unwrap();
+    server.set_faults(Some(plan));
+    let arrivals = ArrivalPlan {
+        arrivals: (0..4)
+            .map(|i| Arrival { at_us: i, prompt_len: 4, max_new_tokens: 24 })
+            .collect(),
+    };
+    let opts = ServeOptions::new(2, 4).with_queue_cap(64);
+    server.serve_load(&arrivals, &opts).unwrap();
+    let snap = server.metrics.snapshot();
+    let stragglers = snap.faults.get("straggler").copied().unwrap_or(0);
+    assert!(stragglers > 0, "the seed search guarantees an injected straggler: {snap:?}");
+    assert!(
+        snap.straggler_penalty_us >= stragglers,
+        "every injected straggler must charge >= 1µs: {} stragglers, {} µs total",
+        stragglers,
+        snap.straggler_penalty_us
+    );
+    assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hinted_retries_after_queue_full_shed_beat_immediate_retries() {
+    // The shed hint must price actual backlog drain time (queue depth x
+    // recent mean step time), so a client that waits the hint out while
+    // the server works retries into a queue with room — while an
+    // immediate retry always meets the same full queue.
+    let dir = chaos_dir("shed-hint");
+    let rt = Runtime::cpu().unwrap();
+    let mut server = build_server(&rt, &dir, 2, None);
+    let req = |id: u64| DecodeRequest::new(id, vec![1, 2], 4);
+    let mut immediate_ok = 0usize;
+    let mut hinted_ok = 0usize;
+    let trials = 4u64;
+    for trial in 0..trials {
+        let base = 100 * trial;
+        assert_eq!(server.submit(req(base)), Admission::Admitted);
+        assert_eq!(server.submit(req(base + 1)), Admission::Admitted);
+        let hint = match server.submit(req(base + 2)) {
+            Admission::Shed { retry_after_us } => retry_after_us,
+            Admission::Admitted => panic!("queue_cap 2 must shed the third submit"),
+        };
+        assert!(hint > 0, "shed must carry a positive retry hint");
+        if trial > 0 {
+            // Steps have completed by now: the hint is backlog-scaled,
+            // not the max-wait constant.
+            let mean = server.batcher.mean_step_us().expect("steps completed");
+            assert_eq!(hint, 2 * mean, "hint = queue depth x mean step time");
+        }
+        // Immediate retry: same virtual instant, same full queue.
+        if server.submit(req(base + 3)) == Admission::Admitted {
+            immediate_ok += 1;
+        }
+        // Hinted retry: wait the hint out while the server drains.
+        server.advance_clock(hint);
+        server.drain().unwrap();
+        if server.submit(req(base + 4)) == Admission::Admitted {
+            hinted_ok += 1;
+        }
+        server.drain().unwrap();
+    }
+    assert_eq!(immediate_ok, 0, "immediate retries always meet the full queue");
+    assert_eq!(hinted_ok as u64, trials, "hinted retries must find room");
+    assert!(hinted_ok > immediate_ok, "hinted retries must succeed more often");
+    assert!(server.metrics.snapshot().outcomes_accounted());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

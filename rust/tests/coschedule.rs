@@ -190,11 +190,11 @@ fn exact_beats_ledger_on_resident_partial_pair() {
     let m = machine();
     let sim = Simulator::new(m.clone());
     let p = GemmProblem::new(8, 512, 16384);
-    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&m, &p).unwrap();
     let prod = splitk::schedule_reduce(&m, &p, &t, ReduceMode::Pipelined).unwrap();
     let c = GemmProblem::new(8, 2048, 8192);
-    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     ct.validate(&m, &c).unwrap();
     let cons = splitk::schedule_reduce(&m, &c, &ct, ReduceMode::Pipelined).unwrap();
     let prod_rep = sim.run(&prod).unwrap();

@@ -12,6 +12,7 @@ use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::coordinator::{
     BatchPolicy, Batcher, DecodeRequest, Outcome, RouteReason, RouteRung, Router, Server,
 };
+use ascend_w4a16::model::Precision;
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
 use ascend_w4a16::tune::Tuner;
@@ -297,6 +298,58 @@ fn stale_machine_tag_retunes_for_this_machine() {
     let snap = server.metrics.snapshot();
     assert_eq!(snap.route_reasons.get("stale_machine_tag"), Some(&1));
     assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pre_precision_cache_misses_w4a8_and_routes_down_the_ladder() {
+    // A tune cache written before the precision family existed (or by a
+    // W4A16-only tuner) carries no `_a8` keys.  Switching the router to
+    // W4A8 must NOT abort and must NOT mis-serve W4A16 winners: every
+    // W4A8 lookup misses and the plan resolves down the PR 6 ladder
+    // (re-tune rung under the budget), while W4A16 routing on the same
+    // cache still serves tuned, cache-only.
+    let dir = tmpdir("prea8cache");
+    write_file(&dir, "manifest.json", DECODE_MANIFEST);
+    warm_cache_for(&dir, MachineConfig::ascend910());
+
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let mut router = Router::new(&rt, mf, "tiny").unwrap();
+    assert!(router.has_tune_cache());
+
+    // W4A16 (the default): the untagged keys hit as before.
+    let routed = router.route(4);
+    assert!(
+        matches!(routed.outcome.rung, RouteRung::Full | RouteRung::TunedOnly),
+        "untagged cache must keep serving W4A16: {:?}",
+        routed.outcome
+    );
+    assert_eq!(routed.outcome.retuned_nodes, 0);
+
+    // W4A8: every shape key now carries the `_a8` suffix, so the
+    // pre-precision cache misses and rung 3 re-tunes inline.
+    router.set_precision(Precision::W4A8);
+    assert_eq!(router.precision(), Precision::W4A8);
+    let routed = router.route(4);
+    assert_eq!(routed.outcome.rung, RouteRung::Retuned);
+    assert_eq!(routed.outcome.reason, RouteReason::ShapeMiss);
+    assert_eq!(routed.outcome.defaulted_nodes, 0);
+    assert!(routed.outcome.retuned_nodes > 0);
+    assert!(routed.plan.unwrap().fully_resolved());
+
+    // With the budget exhausted instead (a fresh router, so the inline
+    // re-tunes above haven't warmed its in-memory cache), the same miss
+    // lands on the safe splitk default — degraded accounting, still
+    // never an error.
+    let mf = Manifest::load(&dir).unwrap();
+    let mut broke = Router::new(&rt, mf, "tiny").unwrap();
+    broke.set_precision(Precision::W4A8);
+    broke.set_retune_budget(0);
+    let routed = broke.route(4);
+    assert_eq!(routed.outcome.rung, RouteRung::DefaultSplitk);
+    assert!(routed.outcome.defaulted_nodes > 0);
+    assert!(routed.plan.unwrap().fully_resolved());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

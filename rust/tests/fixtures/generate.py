@@ -148,9 +148,89 @@ def data_parallel(m, n, k, t):
     return trace(f"dp_m{m}_n{n}_k{k}", phases, k * n * 2, 0, "buffered", mp * n * k)
 
 
-def tiling(bm, bn, bk, splits, chunks):
+def tiling(bm, bn, bk, splits, chunks, rebalance=0):
     return {"bm": bm, "bn": bn, "bk": bk, "splits": splits, "chunks": chunks,
-            "dequant_bk": 128, "dequant_bn": 256}
+            "dequant_bk": 128, "dequant_bn": 256, "rebalance": rebalance}
+
+
+# --- W4A8 precision family (kernels/w4a8.rs, DESIGN §16) -------------------
+
+
+def w4a8_dequant_phase(n, k, t, group=128):
+    """INT4 -> INT8 weight conversion: same packed/qparam reads as the
+    W4A16 dequant, but the workspace lands at INT8 (half the bytes).
+    The full/deferred step split (rebalance) moves compute ops only, so
+    the byte digest is rebalance-invariant here."""
+    k_tiles = k // t["dequant_bk"]
+    n_tiles = n // t["dequant_bn"]
+    tiles = k_tiles * n_tiles
+    elems = t["dequant_bk"] * t["dequant_bn"]
+    wp = tiles * elems // 2
+    qp = tiles * 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4
+    return phase("w4a8_dequant", "vector", False, None, min(tiles, VEC_CORES),
+                 tiles, {"weight_packed": wp, "quant_param": qp},
+                 {"workspace": tiles * elems})
+
+
+def w4a8_act_quant_phase(m, k, t):
+    """FP16 -> INT8 activation quantize: reads the FP16 activations once,
+    writes the INT8 stream the cube cores consume."""
+    tiles = (m_padded(m) // 16) * (k // t["dequant_bk"])
+    elems = 16 * t["dequant_bk"]
+    return phase("act_quant", "vector", True, None, min(tiles, VEC_CORES),
+                 tiles, {"activation": tiles * elems * 2},
+                 {"workspace": tiles * elems})
+
+
+def w4a8_mmad_phase(m, n, t, k_steps):
+    """INT8 MMAD: both tile streams read from the workspace at INT8 width
+    (half the W4A16 bytes per tile)."""
+    items = t["splits"] * (m_padded(m) // t["bm"]) * (n // t["bn"])
+    steps = items * k_steps
+    b_tile = t["bk"] * t["bn"]
+    a_tile = t["bm"] * t["bk"]
+    reads = {"workspace": steps * (b_tile + a_tile)}
+    if t["splits"] == 1:
+        writes = {"output": items * t["bm"] * t["bn"] * 2}
+    else:
+        writes = {"partial": items * t["bm"] * t["bn"] * 4}
+    return phase("w4a8_mmad", "cube", True, None, min(items, AI_CORES), steps,
+                 reads, writes)
+
+
+def w4a8_reduce_scale_phase(m, n, k, t, group=128):
+    """The deferred-scale epilogue: one correction pass per deferred
+    dequant tile over its m_pad x dequant_bn output strip."""
+    deferred = ((k // t["dequant_bk"]) * (n // t["dequant_bn"])
+                * t["rebalance"] // 100)
+    assert deferred > 0, "reduce_scale only exists when tiles defer"
+    mp = m_padded(m)
+    out_bytes = deferred * mp * t["dequant_bn"] * 2
+    qp = deferred * 2 * (t["dequant_bk"] // group) * t["dequant_bn"] * 4
+    return phase("reduce_scale", "vector", t["splits"] > 1, None,
+                 min(deferred, VEC_CORES), deferred,
+                 {"output": out_bytes, "quant_param": qp},
+                 {"output": out_bytes})
+
+
+def w4a8(m, n, k, t, mode):
+    mp = m_padded(m)
+    k_steps = (k // t["splits"]) // t["bk"]
+    phases = [
+        w4a8_dequant_phase(n, k, t),
+        w4a8_act_quant_phase(m, k, t),
+        w4a8_mmad_phase(m, n, t, k_steps),
+    ]
+    if t["splits"] > 1:
+        phases += reduce_phases(m, n, t, mode)
+    if t["rebalance"] > 0:
+        phases.append(w4a8_reduce_scale_phase(m, n, k, t))
+    return trace(
+        f"w4a8_m{m}_n{n}_k{k}_s{t['splits']}", phases,
+        k * n + mp * k,
+        t["splits"] * mp * n * 4 if t["splits"] > 1 else 0,
+        "buffered", mp * n * k,
+    )
 
 
 # --- phase-level co-scheduler splice (analysis/coschedule.rs, DESIGN §12) ---
@@ -427,6 +507,16 @@ FIXTURES = {
     "decode_step_deepseek_moe_b8":
         decode_step(8, 2048, 56, 7168, 2048, 1536,
                     moe={"experts": 256, "topk": 8, "expert_ffn": 2048}),
+    # W4A8 precision family (DESIGN §16): the dense large-K acceptance
+    # shape at 50% rebalance (mixed prologue + deferred-scale epilogue
+    # riding the trailing reduce group), and one routed MoE expert
+    # down-projection at 100% rebalance (every tile deferred).
+    "w4a8_m8_n512_k16384_pipelined":
+        w4a8(8, 512, 16384, tiling(16, 256, 64, 16, 1, rebalance=50),
+             "pipelined"),
+    "w4a8_m1_n7168_k2048_pipelined":
+        w4a8(1, 7168, 2048, tiling(16, 32, 128, 4, 1, rebalance=100),
+             "pipelined"),
     # Causal prefill chunk graphs (DESIGN §15): the LLaMA-3.2 dense trunk
     # ingesting a 512-token chunk mid-prompt, and the DeepSeek-MoE trunk
     # whose 256-token chunk saturates all 256 routed experts.

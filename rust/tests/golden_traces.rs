@@ -14,8 +14,9 @@ use std::path::PathBuf;
 use ascend_w4a16::analysis::{coschedule, golden, residency};
 use ascend_w4a16::ascend::{KernelTrace, MachineConfig};
 use ascend_w4a16::kernels::tiling::Tiling;
-use ascend_w4a16::kernels::{chunked, data_parallel, splitk, GemmProblem, ReduceMode};
+use ascend_w4a16::kernels::{chunked, data_parallel, splitk, w4a8, GemmProblem, ReduceMode};
 use ascend_w4a16::model::llm::{layer_geometry, moe_geometry};
+use ascend_w4a16::model::Precision;
 use ascend_w4a16::util::json::Json;
 use ascend_w4a16::workload::{DecodeLayer, DecodeStep, PrefillStep};
 
@@ -72,7 +73,7 @@ fn check_json(name: &str, got: Json) {
 fn splitk_decode_shape_matches_golden() {
     // The paper's acceptance decode shape (K >> N), tail-only reduce.
     let p = GemmProblem::new(8, 512, 16384);
-    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("splitk_m8_n512_k16384_pipelined", &tr);
@@ -83,7 +84,7 @@ fn splitk_streaming_reduce_matches_golden() {
     // 192 output tiles over 64 vector engines: the streamed reduce phases
     // (reduce_stream + reduce_tail) are part of the digest.
     let p = GemmProblem::new(16, 12288, 5120);
-    let t = Tiling { bm: 16, bn: 64, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 64, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("splitk_m16_n12288_k5120_pipelined", &tr);
@@ -94,7 +95,7 @@ fn splitk_barrier_reduce_matches_golden() {
     // Algorithm 1's barrier reduce on the acceptance shape (the C=1 /
     // barrier degeneration the pipelining must preserve).
     let p = GemmProblem::new(8, 512, 16384);
-    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Barrier).unwrap();
     check("splitk_m8_n512_k16384_barrier", &tr);
 }
@@ -103,7 +104,7 @@ fn splitk_barrier_reduce_matches_golden() {
 fn chunked_spilling_shape_matches_golden() {
     // 120 MiB FP16 workspace: 4 chunks rotating through the pinned pair.
     let p = GemmProblem::new(8, 5120, 12288);
-    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 4, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 4, chunks: 4, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("chunked_m8_n5120_k12288_pipelined", &tr);
@@ -112,7 +113,7 @@ fn chunked_spilling_shape_matches_golden() {
 #[test]
 fn chunked_mid_shape_matches_golden() {
     let p = GemmProblem::new(8, 2048, 8192);
-    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("chunked_m8_n2048_k8192_pipelined", &tr);
@@ -121,7 +122,7 @@ fn chunked_mid_shape_matches_golden() {
 #[test]
 fn data_parallel_decode_shape_matches_golden() {
     let p = GemmProblem::new(8, 2048, 7168);
-    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 1, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 1, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = data_parallel::schedule(&machine(), &p, &t).unwrap();
     check("dp_m8_n2048_k7168", &tr);
@@ -135,10 +136,36 @@ fn moe_expert_batch_trace_matches_golden() {
     // this fixture pins both the expert-batch schedule and the §11
     // generalized reduce stream.
     let p = GemmProblem::new(1, 7168, 2048);
-    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("splitk_m1_n7168_k2048_pipelined", &tr);
+}
+
+#[test]
+fn w4a8_dense_large_k_matches_golden() {
+    // The W4A8 schedule on the dense large-K acceptance shape (DESIGN.md
+    // §16) at 50% rebalance: mixed dequant/repack prologue, the INT8
+    // activation-quantize wave, halved MMAD streams, and the
+    // deferred-scale epilogue riding the trailing reduce group.
+    let p = GemmProblem::new(8, 512, 16384).with_precision(Precision::W4A8);
+    let t = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 50 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = w4a8::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("w4a8_m8_n512_k16384_pipelined", &tr);
+}
+
+#[test]
+fn w4a8_moe_expert_batch_matches_golden() {
+    // One routed expert's down-projection at W4A8 with every dequant
+    // tile deferred (rebalance 100): the prologue is a pure INT4->INT8
+    // repack and all scale application lands in `reduce_scale` behind
+    // the streamed reduce.
+    let p = GemmProblem::new(1, 7168, 2048).with_precision(Precision::W4A8);
+    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 100 };
+    t.validate(&machine(), &p).unwrap();
+    let tr = w4a8::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
+    check("w4a8_m1_n7168_k2048_pipelined", &tr);
 }
 
 #[test]
@@ -149,11 +176,11 @@ fn merged_dense_pair_matches_golden() {
     // moved steps, the carried_partial re-classing and the preserved
     // chunk tag.
     let p = GemmProblem::new(8, 512, 16384);
-    let pt = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let pt = Tiling { bm: 16, bn: 256, bk: 64, splits: 16, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     pt.validate(&machine(), &p).unwrap();
     let prod = splitk::schedule_reduce(&machine(), &p, &pt, ReduceMode::Pipelined).unwrap();
     let c = GemmProblem::new(8, 2048, 8192);
-    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    let ct = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     ct.validate(&machine(), &c).unwrap();
     let cons = chunked::schedule_reduce(&machine(), &c, &ct, ReduceMode::Pipelined).unwrap();
     let merged = coschedule::splice(&prod, &cons).expect("pair must be spliceable");
@@ -169,7 +196,7 @@ fn merged_moe_expert_internal_pair_matches_golden() {
     // reduce_tail spliced into the NEXT instance of the same schedule
     // (producer == consumer), streaming reduce preserved in the head.
     let p = GemmProblem::new(1, 7168, 2048);
-    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = splitk::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     let merged = coschedule::splice(&tr, &tr).expect("internal pair must be spliceable");
@@ -186,7 +213,7 @@ fn resident_weight_trace_matches_golden() {
     // packed-weight and quant-param read re-classed carried_weight — the
     // fixture pins that byte conservation at digest level.
     let p = GemmProblem::new(8, 2048, 8192);
-    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256 };
+    let t = Tiling { bm: 16, bn: 128, bk: 128, splits: 2, chunks: 4, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     t.validate(&machine(), &p).unwrap();
     let tr = chunked::schedule_reduce(&machine(), &p, &t, ReduceMode::Pipelined).unwrap();
     check("chunked_m8_n2048_k8192_pipelined_resident", &residency::carry_weights(&tr));
@@ -200,11 +227,11 @@ fn chain_splice_matches_golden() {
     // prologue, both re-balanced least-loaded over the 64 vector engines.
     let m = machine();
     let p = GemmProblem::new(8, 7168, 2048);
-    let pt = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let pt = Tiling { bm: 16, bn: 32, bk: 128, splits: 4, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     pt.validate(&m, &p).unwrap();
     let prod = splitk::schedule_reduce(&m, &p, &pt, ReduceMode::Barrier).unwrap();
     let c = GemmProblem::new(8, 512, 2048);
-    let ct = Tiling { bm: 16, bn: 256, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256 };
+    let ct = Tiling { bm: 16, bn: 256, bk: 128, splits: 2, chunks: 1, dequant_bk: 128, dequant_bn: 256, rebalance: 0 };
     ct.validate(&m, &c).unwrap();
     let cons = splitk::schedule_reduce(&m, &c, &ct, ReduceMode::Pipelined).unwrap();
     assert!(coschedule::saturates(&prod, &cons), "fixture premise: saturating tail");

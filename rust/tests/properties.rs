@@ -284,6 +284,7 @@ fn uneven_tile_counts_stream_their_floor_wave() {
             chunks: 1,
             dequant_bk: 128,
             dequant_bn: 16,
+            rebalance: 0,
         };
         if t.validate(&m, &p).is_err() {
             return (false, format!("n={n} k={k}: tiling must be legal"));
@@ -477,6 +478,7 @@ fn tune_cache_round_trips_identical_lookups() {
                     chunks: 1 << rng.usize_range(0, 6),
                     dequant_bk: 128,
                     dequant_bn: 16 << rng.usize_range(0, 4),
+                    rebalance: 0,
                 },
             };
             let key = format!("machine{}/m16_n{}_k{}_g128", i % 3, 16 * (i + 1), 128 * (i + 1));
