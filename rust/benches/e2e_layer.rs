@@ -13,6 +13,7 @@
 
 use ascend_w4a16::analysis::layer::{self, OverlapMode};
 use ascend_w4a16::analysis::residency::ResidencyMode;
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
 use ascend_w4a16::kernels::GemmProblem;
@@ -45,14 +46,12 @@ fn bench_model(
             decode_layer = decode_layer.with_moe(moe);
         }
         let step = DecodeStep::new(decode_layer, KV_LEN, DecodeStep::default_heads(&geom));
-        let srep = layer::simulate_step_tuned_with(
-            machine,
-            &step,
-            OverlapMode::Auto,
-            ResidencyMode::Auto,
-            tuner,
-        )
-        .expect("simulate step");
+        let srep = StepSim::new(machine, &step)
+            .overlap(OverlapMode::Auto)
+            .residency(ResidencyMode::Auto)
+            .tuner(tuner)
+            .run()
+            .expect("simulate step");
         // The step's GEMM sub-chain IS the layer report — no second pass.
         let rep = srep.gemm_report();
         let reduce_speedup = rep.layer_barrier_ns() / rep.layer_ns();
@@ -126,14 +125,12 @@ fn bench_forced_split(machine: &MachineConfig, model: &str, cells: &mut Vec<Json
         decode_layer = decode_layer.with_moe(moe);
     }
     let step = DecodeStep::new(decode_layer, 2048, DecodeStep::default_heads(&geom));
-    let srep = layer::simulate_step_with(
-        machine,
-        &step,
-        OverlapMode::Auto,
-        ResidencyMode::Auto,
-        layer::forced_split_resolver(machine),
-    )
-    .expect("simulate forced-split step");
+    let srep = StepSim::new(machine, &step)
+        .overlap(OverlapMode::Auto)
+        .residency(ResidencyMode::Auto)
+        .resolver(layer::forced_split_resolver(machine))
+        .run()
+        .expect("simulate forced-split step");
     let exact_speedup = srep.sequential_ns / srep.exact_ns;
     let auto_base = srep.auto_ns();
     println!(

@@ -1,16 +1,89 @@
 //! Simulator performance bench (the L3 hot path of the analysis tooling).
 //!
 //! Tracks trace-construction and pricing throughput so the perf pass
-//! (EXPERIMENTS.md §Perf) has a stable measurement target.
+//! (EXPERIMENTS.md §Perf) has a stable measurement target, plus the two
+//! parallelized hot loops of the analysis stack:
+//!
+//! * tune-cache seeding — a serial `Tuner::resolve` sweep vs the pooled
+//!   `Tuner::resolve_many` (cache misses searched on the thread pool);
+//! * residency prefix re-pricing — the greedy planner's serial
+//!   per-prefix `price_pins` loop (`plan_nodes_serial`) vs the pooled
+//!   price-only loop (`plan_nodes`) on the deepseek-moe decode step
+//!   graph.
+//!
+//! Both pairs are asserted bit-identical before their wall clocks are
+//! reported, and the timings land in `target/BENCH_sim_perf.json`.
+//! Wall-clock cells (`*wall*`) measure the host machine and never gate
+//! in bench-diff.
+//!
 //! Run with `cargo bench --bench sim_perf`.
 
+use std::time::Instant;
+
+use ascend_w4a16::analysis::residency::{plan_nodes, plan_nodes_serial, PlanNodeInput, ResidencyPlan};
 use ascend_w4a16::ascend::{MachineConfig, Simulator};
 use ascend_w4a16::bench::{section, Bench};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::model::llm::{layer_geometry, moe_geometry};
+use ascend_w4a16::tune::{self, Tuner};
+use ascend_w4a16::util::json::Json;
+use ascend_w4a16::util::pool;
+use ascend_w4a16::workload::DecodeLayer;
+
+const MODEL: &str = "deepseek-moe";
+
+fn assert_plans_bit_identical(serial: &ResidencyPlan, pooled: &ResidencyPlan) {
+    assert_eq!(
+        serial.resident_ns.to_bits(),
+        pooled.resident_ns.to_bits(),
+        "pooled planner must price bit-identically to the serial reference"
+    );
+    assert_eq!(serial.baseline_ns.to_bits(), pooled.baseline_ns.to_bits());
+    assert_eq!(serial.pins, pooled.pins);
+    assert_eq!(serial.pinned_bytes, pooled.pinned_bytes);
+    assert_eq!(serial.budget_bytes, pooled.budget_bytes);
+}
+
+/// The deepseek-moe decode-step GEMM sub-chain at batch 8 as residency
+/// planner inputs (fused schedules — the planner's main beneficiary).
+fn prefix_inputs(machine: &MachineConfig) -> Vec<PlanNodeInput> {
+    let sim = Simulator::new(machine.clone());
+    let geom = layer_geometry(MODEL).expect("paper model");
+    let layer = DecodeLayer::new(geom, 8).with_moe(moe_geometry(MODEL).expect("moe preset"));
+    layer
+        .gemm_nodes()
+        .into_iter()
+        .filter(|n| n.problem.validate().is_ok())
+        .map(|n| {
+            let trace = kernels::schedule(machine, &n.problem, Strategy::Fused).expect("schedule");
+            let unit_ns = sim.run(&trace).expect("price").total_ns;
+            PlanNodeInput { kind: n.kind, problem: n.problem, count: n.count, unit_ns, trace }
+        })
+        .collect()
+}
+
+/// Unique decode-layer GEMM problems of the deepseek-moe graph across the
+/// bench batch sweep (padded-M aliases deduplicated like `repro tune`).
+fn tune_problems(machine: &MachineConfig) -> Vec<GemmProblem> {
+    let geom = layer_geometry(MODEL).expect("paper model");
+    let moe = moe_geometry(MODEL).expect("moe preset");
+    let mut seen = std::collections::BTreeSet::new();
+    let mut problems = Vec::new();
+    for batch in [1usize, 8, 64] {
+        for node in DecodeLayer::new(geom, batch).with_moe(moe).gemm_nodes() {
+            if node.problem.validate().is_ok() && seen.insert(tune::shape_key(machine, &node.problem))
+            {
+                problems.push(node.problem);
+            }
+        }
+    }
+    problems
+}
 
 fn main() {
     let machine = MachineConfig::ascend910();
     let sim = Simulator::new(machine.clone());
+    let mut cells = Vec::new();
 
     section("schedule construction");
     for (n, k) in [(2048usize, 7168usize), (12288, 5120)] {
@@ -50,4 +123,104 @@ fn main() {
             std::hint::black_box(report::fig3_sweep(&machine).unwrap());
         });
     println!("{}", r.render_row());
+
+    // ---- tune-cache seeding: serial resolve loop vs pooled resolve_many.
+    // Both start from a cold in-memory cache, so every problem is a live
+    // tiling search; the pooled leg farms the misses out to the thread
+    // pool and must return exactly what the serial loop resolved.
+    section(&format!("tune-cache seeding — serial vs pooled ({MODEL} graph)"));
+    let problems = tune_problems(&machine);
+    let workers = pool::worker_count(problems.len());
+
+    let mut serial_tuner = Tuner::new(machine.clone());
+    let start = Instant::now();
+    let serial_entries: Vec<_> = problems
+        .iter()
+        .map(|p| serial_tuner.resolve(p).expect("serial resolve"))
+        .collect();
+    let tune_serial_us = start.elapsed().as_secs_f64() * 1e6;
+
+    let mut pooled_tuner = Tuner::new(machine.clone());
+    let start = Instant::now();
+    let pooled_entries = pooled_tuner.resolve_many(&problems).expect("pooled resolve");
+    let tune_pooled_us = start.elapsed().as_secs_f64() * 1e6;
+
+    assert_eq!(serial_entries.len(), pooled_entries.len());
+    for (s, p) in serial_entries.iter().zip(&pooled_entries) {
+        assert_eq!(s.strategy, p.strategy, "pooled tuning changed a winner");
+        assert_eq!(s.total_ns.to_bits(), p.total_ns.to_bits());
+    }
+    let tune_speedup = tune_serial_us / tune_pooled_us;
+    println!(
+        "{} shapes: serial {:.0} us, pooled {:.0} us ({workers} workers) -> {tune_speedup:.2}x",
+        problems.len(),
+        tune_serial_us,
+        tune_pooled_us,
+    );
+    cells.push(Json::obj(vec![
+        ("leg", Json::str("tune_seed")),
+        ("model", Json::str(MODEL)),
+        ("problems", Json::num(problems.len() as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("tune_serial_wall_us", Json::num(tune_serial_us)),
+        ("tune_pooled_wall_us", Json::num(tune_pooled_us)),
+        ("tune_speedup", Json::num(tune_speedup)),
+    ]));
+
+    // ---- residency prefix re-pricing: the serial reference re-runs the
+    // full report-building `price_pins` per greedy prefix; the pooled
+    // planner prices every prefix through the hoisted price-only path.
+    // Identical greedy fill, identical accumulation order — the plans
+    // must match to the bit before the wall clocks mean anything.
+    section(&format!("residency prefix re-pricing — serial vs pooled ({MODEL} b=8)"));
+    let inputs = prefix_inputs(&machine);
+    for exact in [false, true] {
+        let serial_plan = plan_nodes_serial(&machine, &inputs, 0.0, exact).expect("serial plan");
+        let pooled_plan = plan_nodes(&machine, &inputs, 0.0, exact).expect("pooled plan");
+        assert_plans_bit_identical(&serial_plan, &pooled_plan);
+
+        let time = |f: &dyn Fn() -> ResidencyPlan| -> f64 {
+            std::hint::black_box(f()); // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let start = Instant::now();
+                std::hint::black_box(f());
+                best = best.min(start.elapsed().as_secs_f64() * 1e6);
+            }
+            best
+        };
+        let prefix_serial_us =
+            time(&|| plan_nodes_serial(&machine, &inputs, 0.0, exact).expect("serial plan"));
+        let prefix_pooled_us =
+            time(&|| plan_nodes(&machine, &inputs, 0.0, exact).expect("pooled plan"));
+        let prefix_speedup = prefix_serial_us / prefix_pooled_us;
+        let workers = pool::worker_count(serial_plan.pins.len() + 1);
+        println!(
+            "exact={exact:<5} {} pins: serial {:.0} us, pooled {:.0} us ({workers} workers) \
+             -> {prefix_speedup:.2}x",
+            serial_plan.pins.len(),
+            prefix_serial_us,
+            prefix_pooled_us,
+        );
+        cells.push(Json::obj(vec![
+            ("leg", Json::str("residency_prefix")),
+            ("model", Json::str(MODEL)),
+            ("batch", Json::num(8.0)),
+            ("exact", Json::Bool(exact)),
+            ("pins", Json::num(serial_plan.pins.len() as f64)),
+            ("workers", Json::num(workers as f64)),
+            ("prefix_serial_wall_us", Json::num(prefix_serial_us)),
+            ("prefix_pooled_wall_us", Json::num(prefix_pooled_us)),
+            ("prefix_speedup", Json::num(prefix_speedup)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_perf")),
+        ("cells", Json::arr(cells)),
+    ]);
+    std::fs::create_dir_all("target").expect("target dir");
+    let out = "target/BENCH_sim_perf.json";
+    std::fs::write(out, doc.to_string()).expect("write json");
+    println!("\nwrote {out}");
 }

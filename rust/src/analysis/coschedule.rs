@@ -147,15 +147,29 @@ pub fn pair_decision_with(
     sequential_ns: f64,
     base: &ResidencyLedger,
 ) -> anyhow::Result<Option<PairDecision>> {
-    let Some(merged) = splice(producer, consumer) else {
-        return Ok(None);
-    };
-    let merged_ns = sim.run_merged_with(&merged, base)?.total_ns;
-    Ok(Some(PairDecision {
+    match splice(producer, consumer) {
+        Some(merged) => Ok(Some(decide_merged(sim, &merged, sequential_ns, base)?)),
+        None => Ok(None),
+    }
+}
+
+/// Price an already-spliced merged trace against its sequential latency.
+/// Uses the simulator's detail-free price path, which is bit-identical to
+/// `run_merged_with` (the report assembly it skips never feeds the float
+/// accumulation) — this is what lets the residency planner hoist splice
+/// construction out of its prefix loop and re-price cheaply.
+pub fn decide_merged(
+    sim: &Simulator,
+    merged: &MergedTrace,
+    sequential_ns: f64,
+    base: &ResidencyLedger,
+) -> anyhow::Result<PairDecision> {
+    let merged_ns = sim.price_merged_with(merged, base)?;
+    Ok(PairDecision {
         sequential_ns,
         merged_ns,
         gain_ns: (sequential_ns - merged_ns).max(0.0),
-    }))
+    })
 }
 
 /// Steps in the producer's exposed reduce tail (0 when nothing is
@@ -282,15 +296,15 @@ pub fn chain_decision(
     sequential_ns: f64,
 ) -> anyhow::Result<Option<PairDecision>> {
     let engines = sim.machine.total_vector_cores();
-    let Some(merged) = splice_chain(engines, producer, first, second) else {
-        return Ok(None);
-    };
-    let merged_ns = sim.run_merged(&merged)?.total_ns;
-    Ok(Some(PairDecision {
-        sequential_ns,
-        merged_ns,
-        gain_ns: (sequential_ns - merged_ns).max(0.0),
-    }))
+    match splice_chain(engines, producer, first, second) {
+        Some(merged) => Ok(Some(decide_merged(
+            sim,
+            &merged,
+            sequential_ns,
+            &ResidencyLedger::default(),
+        )?)),
+        None => Ok(None),
+    }
 }
 
 #[cfg(test)]

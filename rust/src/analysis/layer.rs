@@ -1,34 +1,35 @@
-//! Decode-layer / decode-step graph simulator: composes per-GEMM
-//! [`KernelTrace`] results and [`vecpass`] vector passes into per-layer
-//! and per-step latency, with a strategy assignment per GEMM node and a
-//! cross-node overlap ledger (DESIGN.md §10–§11).
+//! Decode-layer / decode-step report types and the GEMM-chain layer
+//! simulator (DESIGN.md §10–§11).
 //!
 //! Two granularities:
 //! * [`simulate_layer`] — the GEMM sub-chain only (PR-2 surface): layer
 //!   latency is the sum of the node kernel times, each priced under the
 //!   served reduce and under Algorithm 1's barrier reduce.
-//! * [`simulate_step`] — the full decode step: attention score/softmax/AV,
-//!   RMSNorm/residual/activation glue and MoE routing priced by the
-//!   [`vecpass`] bandwidth model, the MoE expert fan-out as batched GEMM
-//!   nodes, and an [`OverlapMode`] ledger that overlaps node i's exposed
-//!   Split-K reduce with node i+1's weight-only dequant prologue (same
-//!   vector cores, disjoint buffers).  `Auto` prices both ledgers and
-//!   serves the winner, so the served plan is never slower than the
-//!   sequential chain.
+//! * the full decode/prefill step — priced by
+//!   [`StepSim`](super::stepsim::StepSim), which walks the step graph as
+//!   one uniform [`StepOp`](super::stepop::StepOp) list: attention
+//!   score/softmax/AV, RMSNorm/residual/activation glue and MoE routing
+//!   priced by the vecpass bandwidth model, the MoE expert fan-out as
+//!   batched GEMM nodes, an [`OverlapMode`] ledger that overlaps node i's
+//!   exposed Split-K reduce with node i+1's weight-only dequant prologue,
+//!   and an optional step-level weight-residency plan.
 //!
-//! [`KernelTrace`]: crate::ascend::KernelTrace
-//! [`vecpass`]: crate::ascend::vecpass
+//! The old `simulate_step*` free functions live on as thin
+//! `#[deprecated]` shims around `StepSim` for one PR — migrate
+//! `simulate_step(_with)` / `simulate_step_tuned(_with)` /
+//! `simulate_prefill_step(_tuned)_with` calls to the builder.
 
-use super::coschedule::{self, PairDecision};
-use super::residency::{self, ResidencyMode, ResidencyPlan};
-use crate::ascend::{vecpass, KernelTrace, MachineConfig, SimReport, Simulator};
-use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
+use super::coschedule::PairDecision;
+use super::report::Report;
+use super::residency::{ResidencyMode, ResidencyPlan};
+use super::stepop::{simulate_gemm_node, Assignment};
+use super::stepsim::{tuner_resolve, StepSim};
+use crate::ascend::{MachineConfig, Simulator};
+use crate::kernels::{self, tiling::Tiling, GemmProblem, Strategy};
 use crate::tune::Tuner;
 use crate::util::json::Json;
 use crate::util::stats;
-use crate::workload::decode_layer::{
-    DecodeLayer, DecodeStep, GemmKind, GemmNode, StepNode, VectorOp,
-};
+use crate::workload::decode_layer::{DecodeLayer, DecodeStep, GemmKind, VectorOp};
 
 /// How one graph node's (strategy, tiling) assignment was determined.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +80,14 @@ pub enum OverlapMode {
 }
 
 impl OverlapMode {
+    /// Accepted `--overlap` spellings, first alias canonical.
+    pub const CHOICES: &'static [(&'static [&'static str], OverlapMode)] = &[
+        (&["sequential", "seq"], OverlapMode::Sequential),
+        (&["overlapped", "overlap", "ledger"], OverlapMode::Overlapped),
+        (&["exact", "coschedule"], OverlapMode::Exact),
+        (&["auto"], OverlapMode::Auto),
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             OverlapMode::Sequential => "sequential",
@@ -89,13 +98,13 @@ impl OverlapMode {
     }
 
     pub fn from_name(name: &str) -> anyhow::Result<OverlapMode> {
-        Ok(match name.to_ascii_lowercase().as_str() {
-            "sequential" | "seq" => OverlapMode::Sequential,
-            "overlapped" | "overlap" | "ledger" => OverlapMode::Overlapped,
-            "exact" | "coschedule" => OverlapMode::Exact,
-            "auto" => OverlapMode::Auto,
-            other => anyhow::bail!("unknown overlap mode '{other}'"),
-        })
+        let lower = name.to_ascii_lowercase();
+        for (aliases, mode) in Self::CHOICES {
+            if aliases.contains(&lower.as_str()) {
+                return Ok(*mode);
+            }
+        }
+        anyhow::bail!("unknown overlap mode '{name}'")
     }
 }
 
@@ -163,78 +172,78 @@ impl LayerReport {
     pub fn node(&self, kind: GemmKind) -> Option<&NodeReport> {
         self.nodes.iter().find(|n| n.kind == kind)
     }
+
+    /// Render the per-node table plus layer / step totals, scaling the
+    /// step line to a `layers`-layer model.
+    pub fn render_scaled(&self, layers: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Decode-layer GEMM graph — batch {} (simulated)\n",
+            self.batch
+        ));
+        out.push_str(&format!(
+            "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10} {:>11} {:>8}\n",
+            "node", "shape", "x", "strategy", "via", "served_us", "barrier_us", "reduce"
+        ));
+        for n in &self.nodes {
+            out.push_str(&format!(
+                "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10.2} {:>11.2} {:>7.2}x\n",
+                n.kind.name(),
+                format!("m{}_n{}_k{}", n.problem.m, n.problem.n, n.problem.k),
+                n.count,
+                n.strategy.name(),
+                n.resolution.name(),
+                n.total_ns / 1e3,
+                n.barrier_ns / 1e3,
+                n.reduce_speedup(),
+            ));
+        }
+        out.push_str(&format!(
+            "\nlayer: {} served vs {} barrier-reduce ({:.3}x from reduce pipelining)\n",
+            stats::fmt_ns(self.layer_ns()),
+            stats::fmt_ns(self.layer_barrier_ns()),
+            self.layer_barrier_ns() / self.layer_ns(),
+        ));
+        out.push_str(&format!(
+            "step ({layers} layers): {}  -> {:.0} decode steps/s of pure GEMM headroom\n",
+            stats::fmt_ns(self.step_ns(layers)),
+            1e9 / self.step_ns(layers),
+        ));
+        out
+    }
 }
 
-/// The overlap terms of one served trace: (exposed post-barrier reduce
-/// group time, vector-engine slack of the leading dequant phase).
-fn overlap_terms(r: &SimReport) -> (f64, f64) {
-    let reduce_tail = match r.groups.last() {
-        Some(g) if r.groups.len() > 1 => {
-            let all_reduce = g
-                .phases
-                .iter()
-                .all(|&pi| r.phase_times[pi].name.starts_with("reduce"));
-            if all_reduce {
-                g.total_ns
-            } else {
-                0.0
-            }
-        }
-        _ => 0.0,
-    };
-    // The weight-only prologue: the first dequant phase's transfer time is
-    // independent of upstream activations, so its vector-compute headroom
-    // (standalone minus SIMD time) is where an upstream reduce can hide.
-    let dequant_slack = r
-        .phase_times
-        .iter()
-        .find(|pt| pt.name.contains("dequant"))
-        .map(|pt| (pt.standalone_ns - pt.compute_ns).max(0.0))
-        .unwrap_or(0.0);
-    (reduce_tail, dequant_slack)
-}
+impl Report for LayerReport {
+    fn render(&self) -> String {
+        self.render_scaled(1)
+    }
 
-/// Simulate one GEMM node: served (auto-reduce) and barrier-reduce
-/// pricing plus the overlap terms, multiplied over the node's count.
-/// Also returns the served trace itself — the co-scheduler splices it.
-fn simulate_gemm_node(
-    machine: &MachineConfig,
-    sim: &Simulator,
-    node: &GemmNode,
-    assignment: (Strategy, Tiling, Resolution),
-) -> anyhow::Result<(NodeReport, KernelTrace)> {
-    let (strategy, tiling, resolution) = assignment;
-    let p = &node.problem;
-    let served = kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Auto)?;
-    let served_run = sim.run(&served)?;
-    let unit_ns = served_run.total_ns;
-    let (reduce_tail_ns, dequant_slack_ns) = overlap_terms(&served_run);
-    // Only the Split-K family has a reduce; for the other strategies
-    // the barrier variant IS the served trace — skip the re-build.
-    let unit_barrier_ns = match strategy {
-        Strategy::SplitK | Strategy::Chunked => {
-            let barrier =
-                kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Barrier)?;
-            sim.run(&barrier)?.total_ns
-        }
-        _ => unit_ns,
-    };
-    let count = node.count.max(1) as f64;
-    let report = NodeReport {
-        kind: node.kind,
-        problem: *p,
-        count: node.count.max(1),
-        strategy,
-        tiling,
-        resolution,
-        unit_ns,
-        unit_barrier_ns,
-        total_ns: unit_ns * count,
-        barrier_ns: unit_barrier_ns * count,
-        reduce_tail_ns,
-        dequant_slack_ns,
-    };
-    Ok((report, served))
+    fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("kind", Json::str(n.kind.name())),
+                    ("m", Json::num(n.problem.m as f64)),
+                    ("n", Json::num(n.problem.n as f64)),
+                    ("k", Json::num(n.problem.k as f64)),
+                    ("count", Json::num(n.count as f64)),
+                    ("strategy", Json::str(n.strategy.name())),
+                    ("resolution", Json::str(n.resolution.name())),
+                    ("served_ns", Json::num(n.total_ns)),
+                    ("barrier_ns", Json::num(n.barrier_ns)),
+                    ("reduce_speedup", Json::num(n.reduce_speedup())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("layer_ns", Json::num(self.layer_ns())),
+            ("layer_barrier_ns", Json::num(self.layer_barrier_ns())),
+            ("nodes", Json::arr(nodes)),
+        ])
+    }
 }
 
 /// Simulate one decode layer's GEMM chain.  `resolve` assigns each node
@@ -243,7 +252,7 @@ fn simulate_gemm_node(
 pub fn simulate_layer(
     machine: &MachineConfig,
     layer: &DecodeLayer,
-    mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+    mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
 ) -> anyhow::Result<LayerReport> {
     let sim = Simulator::new(machine.clone());
     let mut nodes = Vec::with_capacity(4);
@@ -253,22 +262,6 @@ pub fn simulate_layer(
         nodes.push(report);
     }
     Ok(LayerReport { batch: layer.batch, nodes })
-}
-
-/// Resolve through a tuner (cache hit, or live search that warms the
-/// cache), tracking how each node was resolved.
-fn tuner_resolve(
-    tuner: &mut Tuner,
-    p: &GemmProblem,
-) -> anyhow::Result<(Strategy, Tiling, Resolution)> {
-    let before = tuner.searches;
-    let e = tuner.resolve(p)?;
-    let resolution = if tuner.searches > before {
-        Resolution::Searched
-    } else {
-        Resolution::CacheHit
-    };
-    Ok((e.strategy, e.tiling, resolution))
 }
 
 /// Simulate a layer with every node resolved through the tuner — the
@@ -501,215 +494,278 @@ impl StepReport {
                 .collect(),
         }
     }
-}
 
-/// Build the overlap ledger over the step's GEMM sub-chain: expert
-/// batches overlap internally (`count - 1` pairs), and each GEMM's
-/// trailing reduce overlaps the next GEMM's dequant prologue.  Vector
-/// glue between two GEMMs does not break eligibility — the consumer's
-/// dequant touches only its own weights, so it is independent of every
-/// intervening activation op (DESIGN.md §11).
-///
-/// `traces` holds each node's served kernel trace (aligned with `nodes`,
-/// `None` for vector nodes): when `price_exact` is set (the `Exact` and
-/// `Auto` modes — `Sequential`/`Overlapped` never serve the result, so
-/// they skip the extra merged-trace simulations), wherever the
-/// producer's reduce tail and the consumer's dequant prologue are
-/// spliceable, the pair also carries the co-scheduler's exact
-/// merged-trace pricing (DESIGN.md §12).  An entry appears whenever
-/// either pricing finds a positive gain.
-fn build_ledger(
-    sim: &Simulator,
-    nodes: &[StepNodeReport],
-    traces: &[Option<KernelTrace>],
-    price_exact: bool,
-) -> anyhow::Result<Vec<OverlapPair>> {
-    let gemms: Vec<(usize, &NodeReport)> = nodes
-        .iter()
-        .enumerate()
-        .filter_map(|(i, n)| match n {
-            StepNodeReport::Gemm(g) => Some((i, g)),
-            StepNodeReport::Vector(_) => None,
-        })
-        .collect();
-    let mut ledger = Vec::new();
-    let mut push = |ledger: &mut Vec<OverlapPair>,
-                    producer: (usize, &NodeReport),
-                    consumer: (usize, &NodeReport),
-                    pairs: usize|
-     -> anyhow::Result<()> {
-        let (pi, p) = producer;
-        let (ci, c) = consumer;
-        let gain = p.reduce_tail_ns.min(c.dequant_slack_ns);
-        let exact = match (&traces[pi], &traces[ci]) {
-            (Some(pt), Some(ct)) if price_exact => {
-                coschedule::pair_decision(sim, pt, ct, p.unit_ns + c.unit_ns)?
+    /// Render the full decode-step graph with the overlap ledger,
+    /// scaling the step line to a `layers`-layer model.
+    pub fn render_scaled(&self, layers: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "Full decode-step graph — batch {}, kv_len {} (simulated, overlap {})\n",
+            self.batch,
+            self.kv_len,
+            self.mode.name()
+        ));
+        out.push_str(&format!(
+            "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10}\n",
+            "node", "shape", "x", "strategy", "via", "served_us"
+        ));
+        for n in &self.nodes {
+            match n {
+                StepNodeReport::Gemm(g) => out.push_str(&format!(
+                    "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
+                    g.kind.name(),
+                    format!("m{}_n{}_k{}", g.problem.m, g.problem.n, g.problem.k),
+                    g.count,
+                    g.strategy.name(),
+                    g.resolution.name(),
+                    g.total_ns / 1e3,
+                )),
+                StepNodeReport::Vector(v) => out.push_str(&format!(
+                    "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
+                    v.op.kind.name(),
+                    format!("{} elems", v.op.elems),
+                    1,
+                    "-",
+                    "-",
+                    v.total_ns / 1e3,
+                )),
             }
-            _ => None,
-        };
-        if gain > 0.0 || exact.is_some_and(|d| d.gain_ns > 0.0) {
-            ledger.push(OverlapPair {
-                producer: pi,
-                consumer: ci,
-                pairs,
-                reduce_ns: p.reduce_tail_ns,
-                slack_ns: c.dequant_slack_ns,
-                gain_ns: gain,
+        }
+        let pairs: usize = self.ledger.iter().map(|p| p.pairs).sum();
+        out.push_str(&format!(
+            "\ngemm {} + attention/glue {}  ({} eligible reduce/dequant overlaps hide {} \
+             ledger / {} exact)\n",
+            stats::fmt_ns(self.gemm_ns()),
+            stats::fmt_ns(self.vector_ns()),
+            pairs,
+            stats::fmt_ns(self.overlap_gain_ns()),
+            stats::fmt_ns(self.exact_gain_ns()),
+        ));
+        for p in &self.ledger {
+            let exact = match p.exact {
+                Some(d) => format!(
+                    "exact {}/pair (merged {}, {}{} vs ledger)",
+                    stats::fmt_ns(d.gain_ns),
+                    stats::fmt_ns(d.merged_ns),
+                    if p.exact_vs_ledger_ns() >= 0.0 { "+" } else { "" },
+                    stats::fmt_ns(p.exact_vs_ledger_ns()),
+                ),
+                None => "no merged trace (ledger term serves)".to_string(),
+            };
+            out.push_str(&format!(
+                "  overlap {}->{} x{}: ledger {}/pair  {}\n",
+                self.nodes[p.producer].name(),
+                self.nodes[p.consumer].name(),
+                p.pairs,
+                stats::fmt_ns(p.gain_ns),
                 exact,
-                chain: None,
-                superseded: false,
-            });
+            ));
+            if let Some(c) = p.chain {
+                out.push_str(&format!(
+                    "    chain ->{} (saturated prologue, re-balanced): {} served over the \
+                     pair decisions\n",
+                    self.nodes[c.second_consumer].name(),
+                    stats::fmt_ns(c.decision.gain_ns),
+                ));
+            }
+            if p.superseded {
+                out.push_str("    (prologue consumed by the upstream chain)\n");
+            }
         }
-        Ok(())
-    };
-    for &(i, g) in &gemms {
-        if g.count > 1 {
-            push(&mut ledger, (i, g), (i, g), g.count - 1)?;
+        if let Some(plan) = &self.residency {
+            let pins: Vec<String> = plan
+                .pins
+                .iter()
+                .map(|pin| format!("{}x{}", pin.kind.name(), pin.instances))
+                .collect();
+            out.push_str(&format!(
+                "residency: pinned {} of {} budget ({}) -> resident {} ({} vs unpinned)\n",
+                stats::fmt_bytes(plan.pinned_bytes as f64),
+                stats::fmt_bytes(plan.budget_bytes as f64),
+                if pins.is_empty() { "nothing worth pinning".to_string() } else { pins.join(" ") },
+                stats::fmt_ns(plan.resident_ns),
+                stats::fmt_ns(plan.gain_ns()),
+            ));
         }
+        out.push_str(&format!(
+            "layer: {} sequential vs {} overlapped vs {} exact{} -> served {}\n",
+            stats::fmt_ns(self.sequential_ns),
+            stats::fmt_ns(self.overlapped_ns),
+            stats::fmt_ns(self.exact_ns),
+            match self.resident_ns() {
+                Some(r) => format!(" vs {} resident", stats::fmt_ns(r)),
+                None => String::new(),
+            },
+            stats::fmt_ns(self.served_ns()),
+        ));
+        out.push_str(&format!(
+            "step ({layers} layers): {}  -> {:.0} decode steps/s end to end\n",
+            stats::fmt_ns(self.step_ns(layers)),
+            1e9 / self.step_ns(layers),
+        ));
+        out
     }
-    for w in gemms.windows(2) {
-        push(&mut ledger, w[0], w[1], 1)?;
-    }
-
-    if price_exact {
-        resolve_chains(sim, &gemms, traces, &mut ledger)?;
-    }
-    Ok(ledger)
 }
 
-/// Chain-level co-scheduling pass (DESIGN.md §13): for every consecutive
-/// GEMM triple whose producer tail saturates the first prologue, price
-/// the two-consumer chain splice and apply it greedily when it strictly
-/// beats BOTH the two pair decisions it replaces and their first-order
-/// ledger terms.  Each prologue is consumed by at most one splice: a
-/// chained producer's second consumer supersedes the (first consumer ->
-/// second consumer) pair, and a superseded or already-chained entry is
-/// never chained again — no vector engine is double-booked across
-/// decisions.
-fn resolve_chains(
-    sim: &Simulator,
-    gemms: &[(usize, &NodeReport)],
-    traces: &[Option<KernelTrace>],
-    ledger: &mut Vec<OverlapPair>,
-) -> anyhow::Result<()> {
-    for w in gemms.windows(3) {
-        let [(ai, a), (bi, b), (ci, c)] = [w[0], w[1], w[2]];
-        // Chains only over single-instance nodes: an expert batch in the
-        // middle would run count-1 more instances between the spliced
-        // first consumer and the second one, evicting the carried
-        // partials far beyond the one attenuation step the merged trace
-        // prices — the three-kernel simulation would overstate the gain.
-        if a.count != 1 || b.count != 1 || c.count != 1 {
-            continue;
-        }
-        let (Some(ta), Some(tb), Some(tc)) = (&traces[ai], &traces[bi], &traces[ci]) else {
-            continue;
-        };
-        if !coschedule::saturates(ta, tb) {
-            continue;
-        }
-        let entry_pos = |p: usize, q: usize, l: &[OverlapPair]| {
-            l.iter().position(|e| e.producer == p && e.consumer == q)
-        };
-        // Skip when either prologue is already spoken for.
-        let first = entry_pos(ai, bi, ledger);
-        if first.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
-            continue;
-        }
-        let second = entry_pos(bi, ci, ledger);
-        if second.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
-            continue;
-        }
-        let sequential = a.unit_ns + b.unit_ns + c.unit_ns;
-        let Some(decision) = coschedule::chain_decision(sim, ta, tb, tc, sequential)? else {
-            continue;
-        };
-        let replaced_exact = first.map_or(0.0, |i| ledger[i].exact_gain_ns())
-            + second.map_or(0.0, |i| ledger[i].exact_gain_ns());
-        let replaced_ledger =
-            first.map_or(0.0, |i| ledger[i].gain_ns) + second.map_or(0.0, |i| ledger[i].gain_ns);
-        if decision.gain_ns <= replaced_exact.max(replaced_ledger) + 1e-9 {
-            continue;
-        }
-        let chain = ChainOverlap { second_consumer: ci, decision };
-        match first {
-            Some(i) => ledger[i].chain = Some(chain),
-            None => ledger.push(OverlapPair {
-                producer: ai,
-                consumer: bi,
-                pairs: 1,
-                reduce_ns: a.reduce_tail_ns,
-                slack_ns: b.dequant_slack_ns,
-                gain_ns: a.reduce_tail_ns.min(b.dequant_slack_ns),
-                exact: None,
-                chain: Some(chain),
-                superseded: false,
-            }),
-        }
-        if let Some(i) = second {
-            ledger[i].superseded = true;
-        }
+impl Report for StepReport {
+    fn render(&self) -> String {
+        self.render_scaled(1)
     }
-    Ok(())
+
+    fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                StepNodeReport::Gemm(g) => Json::obj(vec![
+                    ("node", Json::str("gemm")),
+                    ("kind", Json::str(g.kind.name())),
+                    ("m", Json::num(g.problem.m as f64)),
+                    ("n", Json::num(g.problem.n as f64)),
+                    ("k", Json::num(g.problem.k as f64)),
+                    ("count", Json::num(g.count as f64)),
+                    ("strategy", Json::str(g.strategy.name())),
+                    ("resolution", Json::str(g.resolution.name())),
+                    ("served_ns", Json::num(g.total_ns)),
+                    ("barrier_ns", Json::num(g.barrier_ns)),
+                    ("reduce_tail_ns", Json::num(g.reduce_tail_ns)),
+                    ("dequant_slack_ns", Json::num(g.dequant_slack_ns)),
+                ]),
+                StepNodeReport::Vector(v) => Json::obj(vec![
+                    ("node", Json::str("vector")),
+                    ("kind", Json::str(v.op.kind.name())),
+                    ("elems", Json::num(v.op.elems as f64)),
+                    ("served_ns", Json::num(v.total_ns)),
+                    ("compute_ns", Json::num(v.compute_ns)),
+                    ("hbm_ns", Json::num(v.hbm_ns)),
+                    ("l2_ns", Json::num(v.l2_ns)),
+                ]),
+            })
+            .collect();
+        let overlap = self
+            .ledger
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("producer", Json::num(p.producer as f64)),
+                    ("consumer", Json::num(p.consumer as f64)),
+                    ("pairs", Json::num(p.pairs as f64)),
+                    ("reduce_ns", Json::num(p.reduce_ns)),
+                    ("slack_ns", Json::num(p.slack_ns)),
+                    ("gain_ns", Json::num(p.gain_ns)),
+                    ("total_gain_ns", Json::num(p.total_gain_ns())),
+                    (
+                        "exact_merged_ns",
+                        p.exact.map(|d| Json::num(d.merged_ns)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "exact_gain_ns",
+                        p.exact.map(|d| Json::num(d.gain_ns)).unwrap_or(Json::Null),
+                    ),
+                    ("exact_vs_ledger_ns", Json::num(p.exact_vs_ledger_ns())),
+                    (
+                        "chain_gain_ns",
+                        p.chain.map(|c| Json::num(c.decision.gain_ns)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "chain_second_consumer",
+                        p.chain
+                            .map(|c| Json::num(c.second_consumer as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("superseded", Json::Bool(p.superseded)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("kv_len", Json::num(self.kv_len as f64)),
+            ("overlap_mode", Json::str(self.mode.name())),
+            ("sequential_ns", Json::num(self.sequential_ns)),
+            ("overlapped_ns", Json::num(self.overlapped_ns)),
+            ("exact_ns", Json::num(self.exact_ns)),
+            (
+                "resident_ns",
+                self.resident_ns().map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("residency_gain_ns", Json::num(self.residency_gain_ns())),
+            (
+                "residency",
+                self.residency
+                    .as_ref()
+                    .map(|p| p.to_json())
+                    .unwrap_or(Json::Null),
+            ),
+            ("served_ns", Json::num(self.served_ns())),
+            ("gemm_ns", Json::num(self.gemm_ns())),
+            ("vector_ns", Json::num(self.vector_ns())),
+            ("nodes", Json::arr(nodes)),
+            ("overlap", Json::arr(overlap)),
+        ])
+    }
 }
 
 /// Simulate the full decode-step graph under an overlap mode (weight
 /// residency off — the PR-4 surface).
+#[deprecated(
+    note = "use StepSim::new(machine, step).overlap(mode).resolver(resolve).run() \
+            (analysis::stepsim)"
+)]
 pub fn simulate_step(
     machine: &MachineConfig,
     step: &DecodeStep,
     mode: OverlapMode,
-    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
 ) -> anyhow::Result<StepReport> {
-    simulate_step_with(machine, step, mode, ResidencyMode::Off, resolve)
+    StepSim::new(machine, step).overlap(mode).resolver(resolve).run()
 }
 
 /// Simulate the full decode-step graph under an overlap mode AND a
 /// step-level weight-residency mode (DESIGN.md §13).
+#[deprecated(
+    note = "use StepSim::new(machine, step).overlap(mode).residency(residency_mode)\
+            .resolver(resolve).run() (analysis::stepsim)"
+)]
 pub fn simulate_step_with(
     machine: &MachineConfig,
     step: &DecodeStep,
     mode: OverlapMode,
     residency_mode: ResidencyMode,
-    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
 ) -> anyhow::Result<StepReport> {
-    simulate_step_nodes(
-        machine,
-        step.nodes(),
-        step.layer.batch,
-        step.kv_len,
-        mode,
-        residency_mode,
-        resolve,
-    )
+    StepSim::new(machine, step)
+        .overlap(mode)
+        .residency(residency_mode)
+        .resolver(resolve)
+        .run()
 }
 
 /// Simulate a causal prefill chunk (DESIGN.md §15) under the same
-/// overlap + residency machinery as decode: the graph shape is identical
-/// (same GEMM chain at M = chunk tokens, same ledger eligibility, same
-/// residency planner), only the attention passes are causal-context
-/// sized.  `batch` in the report is the chunk's token count and `kv_len`
-/// the cache length after the chunk lands.
+/// overlap + residency machinery as decode.
+#[deprecated(
+    note = "use StepSim::prefill(machine, step).overlap(mode).residency(residency_mode)\
+            .resolver(resolve).run() (analysis::stepsim)"
+)]
 pub fn simulate_prefill_step_with(
     machine: &MachineConfig,
     step: &crate::workload::PrefillStep,
     mode: OverlapMode,
     residency_mode: ResidencyMode,
-    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
+    resolve: impl FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
 ) -> anyhow::Result<StepReport> {
-    simulate_step_nodes(
-        machine,
-        step.nodes(),
-        step.chunk_tokens(),
-        step.kv_end(),
-        mode,
-        residency_mode,
-        resolve,
-    )
+    StepSim::prefill(machine, step)
+        .overlap(mode)
+        .residency(residency_mode)
+        .resolver(resolve)
+        .run()
 }
 
 /// Tuned prefill-chunk simulation — the serving warm-up and
 /// `e2e_serve` bench path.
+#[deprecated(
+    note = "use StepSim::prefill(machine, step).overlap(mode).residency(residency_mode)\
+            .tuner(tuner).run() (analysis::stepsim)"
+)]
 pub fn simulate_prefill_step_tuned_with(
     machine: &MachineConfig,
     step: &crate::workload::PrefillStep,
@@ -717,87 +773,11 @@ pub fn simulate_prefill_step_tuned_with(
     residency_mode: ResidencyMode,
     tuner: &mut Tuner,
 ) -> anyhow::Result<StepReport> {
-    simulate_prefill_step_with(machine, step, mode, residency_mode, |p| tuner_resolve(tuner, p))
-}
-
-/// Shared step-graph core: price an issue-ordered node list (decode or
-/// prefill — the simulator only consumes the nodes, the batch label and
-/// the kv length) under an overlap mode and a residency mode.
-fn simulate_step_nodes(
-    machine: &MachineConfig,
-    specs: Vec<StepNode>,
-    batch: usize,
-    kv_len: usize,
-    mode: OverlapMode,
-    residency_mode: ResidencyMode,
-    mut resolve: impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)>,
-) -> anyhow::Result<StepReport> {
-    let sim = Simulator::new(machine.clone());
-    let mut nodes = Vec::new();
-    let mut traces: Vec<Option<KernelTrace>> = Vec::new();
-    for spec in specs {
-        nodes.push(match spec {
-            StepNode::Gemm(node) => {
-                let assignment = resolve(&node.problem)?;
-                let (report, trace) = simulate_gemm_node(machine, &sim, &node, assignment)?;
-                traces.push(Some(trace));
-                StepNodeReport::Gemm(report)
-            }
-            StepNode::Vector(op) => {
-                let c = vecpass::price_pass(
-                    machine,
-                    op.elems,
-                    op.ops_per_elem,
-                    op.hbm_bytes,
-                    op.l2_bytes,
-                );
-                traces.push(None);
-                StepNodeReport::Vector(VectorNodeReport {
-                    op,
-                    total_ns: c.total_ns,
-                    compute_ns: c.compute_ns,
-                    hbm_ns: c.hbm_ns,
-                    l2_ns: c.l2_ns,
-                })
-            }
-        });
-    }
-    let sequential_ns: f64 = nodes.iter().map(|n| n.total_ns()).sum();
-    let price_exact = matches!(mode, OverlapMode::Exact | OverlapMode::Auto);
-    let ledger = build_ledger(&sim, &nodes, &traces, price_exact)?;
-    let gain: f64 = ledger.iter().map(|p| p.total_gain_ns()).sum();
-    let exact_gain: f64 = ledger.iter().map(|p| p.total_exact_gain_ns()).sum();
-    let residency = match residency_mode {
-        ResidencyMode::Off => None,
-        ResidencyMode::Auto => {
-            let mut inputs = Vec::new();
-            let mut extra_ns = 0.0;
-            for (node, trace) in nodes.iter().zip(&traces) {
-                match (node, trace) {
-                    (StepNodeReport::Gemm(g), Some(t)) => inputs.push(residency::PlanNodeInput {
-                        kind: g.kind,
-                        problem: g.problem,
-                        count: g.count,
-                        unit_ns: g.unit_ns,
-                        trace: t.clone(),
-                    }),
-                    _ => extra_ns += node.total_ns(),
-                }
-            }
-            Some(residency::plan_nodes(machine, &inputs, extra_ns, price_exact)?)
-        }
-    };
-    Ok(StepReport {
-        batch,
-        kv_len,
-        mode,
-        nodes,
-        ledger,
-        sequential_ns,
-        overlapped_ns: sequential_ns - gain,
-        exact_ns: sequential_ns - exact_gain,
-        residency,
-    })
+    StepSim::prefill(machine, step)
+        .overlap(mode)
+        .residency(residency_mode)
+        .tuner(tuner)
+        .run()
 }
 
 /// A Split-K resolver that forces a K split where legal — the overlap
@@ -808,7 +788,7 @@ fn simulate_step_nodes(
 /// ledger and the co-scheduler non-vacuously.
 pub fn forced_split_resolver(
     machine: &MachineConfig,
-) -> impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)> + '_ {
+) -> impl FnMut(&GemmProblem) -> anyhow::Result<Assignment> + '_ {
     move |p| {
         let mut t = kernels::select_tiling(machine, p, Strategy::SplitK)?;
         let split = Tiling { splits: t.splits.max(2), ..t };
@@ -820,17 +800,25 @@ pub fn forced_split_resolver(
 }
 
 /// Simulate the full step with every GEMM node resolved through the tuner.
+#[deprecated(
+    note = "use StepSim::new(machine, step).overlap(mode).tuner(tuner).run() \
+            (analysis::stepsim)"
+)]
 pub fn simulate_step_tuned(
     machine: &MachineConfig,
     step: &DecodeStep,
     mode: OverlapMode,
     tuner: &mut Tuner,
 ) -> anyhow::Result<StepReport> {
-    simulate_step(machine, step, mode, |p| tuner_resolve(tuner, p))
+    StepSim::new(machine, step).overlap(mode).tuner(tuner).run()
 }
 
 /// Tuned full-step simulation with an explicit residency mode — the
 /// `repro layer --residency` and `e2e_layer` bench path.
+#[deprecated(
+    note = "use StepSim::new(machine, step).overlap(mode).residency(residency_mode)\
+            .tuner(tuner).run() (analysis::stepsim)"
+)]
 pub fn simulate_step_tuned_with(
     machine: &MachineConfig,
     step: &DecodeStep,
@@ -838,7 +826,11 @@ pub fn simulate_step_tuned_with(
     residency_mode: ResidencyMode,
     tuner: &mut Tuner,
 ) -> anyhow::Result<StepReport> {
-    simulate_step_with(machine, step, mode, residency_mode, |p| tuner_resolve(tuner, p))
+    StepSim::new(machine, step)
+        .overlap(mode)
+        .residency(residency_mode)
+        .tuner(tuner)
+        .run()
 }
 
 /// Cost of re-establishing a residency plan's L2 pins after a prefill
@@ -853,272 +845,22 @@ pub fn repin_ns(machine: &MachineConfig, pinned_bytes: u64) -> f64 {
 
 /// Render the per-node table plus layer / step totals (GEMM chain only).
 pub fn render_layer(report: &LayerReport, layers: usize) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "Decode-layer GEMM graph — batch {} (simulated)\n",
-        report.batch
-    ));
-    out.push_str(&format!(
-        "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10} {:>11} {:>8}\n",
-        "node", "shape", "x", "strategy", "via", "served_us", "barrier_us", "reduce"
-    ));
-    for n in &report.nodes {
-        out.push_str(&format!(
-            "{:<10} {:<20} {:>5} {:>12} {:>10} | {:>10.2} {:>11.2} {:>7.2}x\n",
-            n.kind.name(),
-            format!("m{}_n{}_k{}", n.problem.m, n.problem.n, n.problem.k),
-            n.count,
-            n.strategy.name(),
-            n.resolution.name(),
-            n.total_ns / 1e3,
-            n.barrier_ns / 1e3,
-            n.reduce_speedup(),
-        ));
-    }
-    out.push_str(&format!(
-        "\nlayer: {} served vs {} barrier-reduce ({:.3}x from reduce pipelining)\n",
-        stats::fmt_ns(report.layer_ns()),
-        stats::fmt_ns(report.layer_barrier_ns()),
-        report.layer_barrier_ns() / report.layer_ns(),
-    ));
-    out.push_str(&format!(
-        "step ({layers} layers): {}  -> {:.0} decode steps/s of pure GEMM headroom\n",
-        stats::fmt_ns(report.step_ns(layers)),
-        1e9 / report.step_ns(layers),
-    ));
-    out
+    report.render_scaled(layers)
 }
 
 /// Render the full decode-step graph with the overlap ledger.
 pub fn render_step(report: &StepReport, layers: usize) -> String {
-    let mut out = String::new();
-    out.push_str(&format!(
-        "Full decode-step graph — batch {}, kv_len {} (simulated, overlap {})\n",
-        report.batch,
-        report.kv_len,
-        report.mode.name()
-    ));
-    out.push_str(&format!(
-        "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10}\n",
-        "node", "shape", "x", "strategy", "via", "served_us"
-    ));
-    for n in &report.nodes {
-        match n {
-            StepNodeReport::Gemm(g) => out.push_str(&format!(
-                "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
-                g.kind.name(),
-                format!("m{}_n{}_k{}", g.problem.m, g.problem.n, g.problem.k),
-                g.count,
-                g.strategy.name(),
-                g.resolution.name(),
-                g.total_ns / 1e3,
-            )),
-            StepNodeReport::Vector(v) => out.push_str(&format!(
-                "{:<12} {:<20} {:>5} {:>12} {:>10} | {:>10.2}\n",
-                v.op.kind.name(),
-                format!("{} elems", v.op.elems),
-                1,
-                "-",
-                "-",
-                v.total_ns / 1e3,
-            )),
-        }
-    }
-    let pairs: usize = report.ledger.iter().map(|p| p.pairs).sum();
-    out.push_str(&format!(
-        "\ngemm {} + attention/glue {}  ({} eligible reduce/dequant overlaps hide {} \
-         ledger / {} exact)\n",
-        stats::fmt_ns(report.gemm_ns()),
-        stats::fmt_ns(report.vector_ns()),
-        pairs,
-        stats::fmt_ns(report.overlap_gain_ns()),
-        stats::fmt_ns(report.exact_gain_ns()),
-    ));
-    for p in &report.ledger {
-        let exact = match p.exact {
-            Some(d) => format!(
-                "exact {}/pair (merged {}, {}{} vs ledger)",
-                stats::fmt_ns(d.gain_ns),
-                stats::fmt_ns(d.merged_ns),
-                if p.exact_vs_ledger_ns() >= 0.0 { "+" } else { "" },
-                stats::fmt_ns(p.exact_vs_ledger_ns()),
-            ),
-            None => "no merged trace (ledger term serves)".to_string(),
-        };
-        out.push_str(&format!(
-            "  overlap {}->{} x{}: ledger {}/pair  {}\n",
-            report.nodes[p.producer].name(),
-            report.nodes[p.consumer].name(),
-            p.pairs,
-            stats::fmt_ns(p.gain_ns),
-            exact,
-        ));
-        if let Some(c) = p.chain {
-            out.push_str(&format!(
-                "    chain ->{} (saturated prologue, re-balanced): {} served over the \
-                 pair decisions\n",
-                report.nodes[c.second_consumer].name(),
-                stats::fmt_ns(c.decision.gain_ns),
-            ));
-        }
-        if p.superseded {
-            out.push_str("    (prologue consumed by the upstream chain)\n");
-        }
-    }
-    if let Some(plan) = &report.residency {
-        let pins: Vec<String> = plan
-            .pins
-            .iter()
-            .map(|pin| format!("{}x{}", pin.kind.name(), pin.instances))
-            .collect();
-        out.push_str(&format!(
-            "residency: pinned {} of {} budget ({}) -> resident {} ({} vs unpinned)\n",
-            stats::fmt_bytes(plan.pinned_bytes as f64),
-            stats::fmt_bytes(plan.budget_bytes as f64),
-            if pins.is_empty() { "nothing worth pinning".to_string() } else { pins.join(" ") },
-            stats::fmt_ns(plan.resident_ns),
-            stats::fmt_ns(plan.gain_ns()),
-        ));
-    }
-    out.push_str(&format!(
-        "layer: {} sequential vs {} overlapped vs {} exact{} -> served {}\n",
-        stats::fmt_ns(report.sequential_ns),
-        stats::fmt_ns(report.overlapped_ns),
-        stats::fmt_ns(report.exact_ns),
-        match report.resident_ns() {
-            Some(r) => format!(" vs {} resident", stats::fmt_ns(r)),
-            None => String::new(),
-        },
-        stats::fmt_ns(report.served_ns()),
-    ));
-    out.push_str(&format!(
-        "step ({layers} layers): {}  -> {:.0} decode steps/s end to end\n",
-        stats::fmt_ns(report.step_ns(layers)),
-        1e9 / report.step_ns(layers),
-    ));
-    out
+    report.render_scaled(layers)
 }
 
 /// JSON form of a layer report (BENCH_layer.json, `repro layer --json`).
 pub fn layer_json(report: &LayerReport) -> Json {
-    let nodes = report
-        .nodes
-        .iter()
-        .map(|n| {
-            Json::obj(vec![
-                ("kind", Json::str(n.kind.name())),
-                ("m", Json::num(n.problem.m as f64)),
-                ("n", Json::num(n.problem.n as f64)),
-                ("k", Json::num(n.problem.k as f64)),
-                ("count", Json::num(n.count as f64)),
-                ("strategy", Json::str(n.strategy.name())),
-                ("resolution", Json::str(n.resolution.name())),
-                ("served_ns", Json::num(n.total_ns)),
-                ("barrier_ns", Json::num(n.barrier_ns)),
-                ("reduce_speedup", Json::num(n.reduce_speedup())),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("batch", Json::num(report.batch as f64)),
-        ("layer_ns", Json::num(report.layer_ns())),
-        ("layer_barrier_ns", Json::num(report.layer_barrier_ns())),
-        ("nodes", Json::arr(nodes)),
-    ])
+    report.to_json()
 }
 
 /// JSON form of a full decode-step report (`repro layer --overlap --json`).
 pub fn step_json(report: &StepReport) -> Json {
-    let nodes = report
-        .nodes
-        .iter()
-        .map(|n| match n {
-            StepNodeReport::Gemm(g) => Json::obj(vec![
-                ("node", Json::str("gemm")),
-                ("kind", Json::str(g.kind.name())),
-                ("m", Json::num(g.problem.m as f64)),
-                ("n", Json::num(g.problem.n as f64)),
-                ("k", Json::num(g.problem.k as f64)),
-                ("count", Json::num(g.count as f64)),
-                ("strategy", Json::str(g.strategy.name())),
-                ("resolution", Json::str(g.resolution.name())),
-                ("served_ns", Json::num(g.total_ns)),
-                ("barrier_ns", Json::num(g.barrier_ns)),
-                ("reduce_tail_ns", Json::num(g.reduce_tail_ns)),
-                ("dequant_slack_ns", Json::num(g.dequant_slack_ns)),
-            ]),
-            StepNodeReport::Vector(v) => Json::obj(vec![
-                ("node", Json::str("vector")),
-                ("kind", Json::str(v.op.kind.name())),
-                ("elems", Json::num(v.op.elems as f64)),
-                ("served_ns", Json::num(v.total_ns)),
-                ("compute_ns", Json::num(v.compute_ns)),
-                ("hbm_ns", Json::num(v.hbm_ns)),
-                ("l2_ns", Json::num(v.l2_ns)),
-            ]),
-        })
-        .collect();
-    let overlap = report
-        .ledger
-        .iter()
-        .map(|p| {
-            Json::obj(vec![
-                ("producer", Json::num(p.producer as f64)),
-                ("consumer", Json::num(p.consumer as f64)),
-                ("pairs", Json::num(p.pairs as f64)),
-                ("reduce_ns", Json::num(p.reduce_ns)),
-                ("slack_ns", Json::num(p.slack_ns)),
-                ("gain_ns", Json::num(p.gain_ns)),
-                ("total_gain_ns", Json::num(p.total_gain_ns())),
-                (
-                    "exact_merged_ns",
-                    p.exact.map(|d| Json::num(d.merged_ns)).unwrap_or(Json::Null),
-                ),
-                (
-                    "exact_gain_ns",
-                    p.exact.map(|d| Json::num(d.gain_ns)).unwrap_or(Json::Null),
-                ),
-                ("exact_vs_ledger_ns", Json::num(p.exact_vs_ledger_ns())),
-                (
-                    "chain_gain_ns",
-                    p.chain.map(|c| Json::num(c.decision.gain_ns)).unwrap_or(Json::Null),
-                ),
-                (
-                    "chain_second_consumer",
-                    p.chain
-                        .map(|c| Json::num(c.second_consumer as f64))
-                        .unwrap_or(Json::Null),
-                ),
-                ("superseded", Json::Bool(p.superseded)),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("batch", Json::num(report.batch as f64)),
-        ("kv_len", Json::num(report.kv_len as f64)),
-        ("overlap_mode", Json::str(report.mode.name())),
-        ("sequential_ns", Json::num(report.sequential_ns)),
-        ("overlapped_ns", Json::num(report.overlapped_ns)),
-        ("exact_ns", Json::num(report.exact_ns)),
-        (
-            "resident_ns",
-            report.resident_ns().map(Json::num).unwrap_or(Json::Null),
-        ),
-        ("residency_gain_ns", Json::num(report.residency_gain_ns())),
-        (
-            "residency",
-            report
-                .residency
-                .as_ref()
-                .map(|p| p.to_json())
-                .unwrap_or(Json::Null),
-        ),
-        ("served_ns", Json::num(report.served_ns())),
-        ("gemm_ns", Json::num(report.gemm_ns())),
-        ("vector_ns", Json::num(report.vector_ns())),
-        ("nodes", Json::arr(nodes)),
-        ("overlap", Json::arr(overlap)),
-    ])
+    report.to_json()
 }
 
 #[cfg(test)]
@@ -1129,7 +871,7 @@ mod tests {
     fn fixed(
         machine: &MachineConfig,
         strategy: Strategy,
-    ) -> impl FnMut(&GemmProblem) -> anyhow::Result<(Strategy, Tiling, Resolution)> + '_ {
+    ) -> impl FnMut(&GemmProblem) -> anyhow::Result<Assignment> + '_ {
         move |p| {
             Ok((strategy, kernels::select_tiling(machine, p, strategy)?, Resolution::Heuristic))
         }
@@ -1200,7 +942,11 @@ mod tests {
         let m = MachineConfig::ascend910();
         let layer = DecodeLayer::new(layer_geometry("glm45").unwrap(), 8);
         let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
-        let r = simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::SplitK)).unwrap();
+        let r = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(fixed(&m, Strategy::SplitK))
+            .run()
+            .unwrap();
         assert_eq!(r.nodes.len(), 12);
         assert!(r.gemm_ns() > 0.0 && r.vector_ns() > 0.0);
         assert!((r.sequential_ns - r.gemm_ns() - r.vector_ns()).abs() < 1e-6);
@@ -1226,10 +972,16 @@ mod tests {
         let layer = DecodeLayer::new(layer_geometry("deepseek-moe").unwrap(), 8)
             .with_moe(moe_geometry("deepseek-moe").unwrap());
         let step = DecodeStep::new(layer, 2048, 56);
-        let seq = simulate_step(&m, &step, OverlapMode::Sequential, fixed(&m, Strategy::SplitK))
+        let seq = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Sequential)
+            .resolver(fixed(&m, Strategy::SplitK))
+            .run()
             .unwrap();
-        let auto =
-            simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::SplitK)).unwrap();
+        let auto = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(fixed(&m, Strategy::SplitK))
+            .run()
+            .unwrap();
         assert_eq!(seq.served_ns(), seq.sequential_ns);
         assert!(auto.served_ns() <= seq.served_ns() * 1.000001);
         // Auto serves the min of all three plans — structurally never
@@ -1252,15 +1004,17 @@ mod tests {
         let m = MachineConfig::ascend910();
         let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
         let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
-        let off = simulate_step(&m, &step, OverlapMode::Auto, fixed(&m, Strategy::Fused)).unwrap();
-        let on = simulate_step_with(
-            &m,
-            &step,
-            OverlapMode::Auto,
-            ResidencyMode::Auto,
-            fixed(&m, Strategy::Fused),
-        )
-        .unwrap();
+        let off = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(fixed(&m, Strategy::Fused))
+            .run()
+            .unwrap();
+        let on = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .residency(ResidencyMode::Auto)
+            .resolver(fixed(&m, Strategy::Fused))
+            .run()
+            .unwrap();
         // Identical chain, so the non-residency prices agree; the resident
         // plan can only improve the served step.
         assert!((on.sequential_ns - off.sequential_ns).abs() < 1e-6);
@@ -1293,8 +1047,11 @@ mod tests {
         let m = MachineConfig::ascend910();
         let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
         let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
-        let rep =
-            simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m)).unwrap();
+        let rep = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Exact)
+            .resolver(forced_split_resolver(&m))
+            .run()
+            .unwrap();
         assert_eq!(rep.served_ns(), rep.exact_ns);
         assert!(rep.exact_ns <= rep.sequential_ns * 1.000001);
         let with_merged: Vec<&OverlapPair> =

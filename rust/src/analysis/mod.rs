@@ -12,6 +12,8 @@ pub mod layer;
 pub mod report;
 pub mod residency;
 pub mod roofline;
+pub mod stepop;
+pub mod stepsim;
 pub mod sensitivity;
 pub mod timeline;
 pub mod traffic;

@@ -9,6 +9,24 @@ use crate::util::stats;
 
 use super::traffic;
 
+/// A simulation artifact with a human rendering and a machine (JSON)
+/// form.  Every top-level report — [`LayerReport`], [`StepReport`],
+/// [`ServeReport`] — implements this, so the CLI and the bench harnesses
+/// print and persist through one surface; the legacy `render_layer` /
+/// `render_step` / `layer_json` / `step_json` free functions are one-line
+/// forwarders onto it.
+///
+/// [`LayerReport`]: super::layer::LayerReport
+/// [`StepReport`]: super::layer::StepReport
+/// [`ServeReport`]: crate::coordinator::server::ServeReport
+pub trait Report {
+    /// Human-readable rendering (the CLI's stdout form).
+    fn render(&self) -> String;
+
+    /// Machine-readable form (what the bench snapshots persist).
+    fn to_json(&self) -> Json;
+}
+
 /// One (shape, batch) cell of the Figure 2 sweep.
 #[derive(Debug, Clone)]
 pub struct Fig2Cell {
@@ -422,6 +440,12 @@ mod tests {
         let j = chunked_json(&cells).to_string();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.as_arr().unwrap()[0].req_usize("chunks").unwrap(), 4);
+    }
+
+    #[test]
+    fn report_trait_is_object_safe() {
+        // Reports render through dyn dispatch (mixed report lists).
+        fn _take(_: &dyn Report) {}
     }
 
     #[test]

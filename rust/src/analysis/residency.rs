@@ -25,9 +25,12 @@
 //! pin at instance granularity: pinning `p` of `count` experts prices
 //! `p` resident instances and `count - p` cold ones.
 
-use crate::ascend::{BufferClass, KernelTrace, MachineConfig, ResidencyLedger, Simulator};
+use crate::ascend::{
+    BufferClass, KernelTrace, MachineConfig, MergedTrace, ResidencyLedger, Simulator,
+};
 use crate::kernels::GemmProblem;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::workload::decode_layer::GemmKind;
 
 use super::coschedule;
@@ -44,6 +47,12 @@ pub enum ResidencyMode {
 }
 
 impl ResidencyMode {
+    /// Accepted `--residency` spellings, first alias canonical.
+    pub const CHOICES: &'static [(&'static [&'static str], ResidencyMode)] = &[
+        (&["off", "none"], ResidencyMode::Off),
+        (&["auto", "on"], ResidencyMode::Auto),
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             ResidencyMode::Off => "off",
@@ -52,11 +61,13 @@ impl ResidencyMode {
     }
 
     pub fn from_name(name: &str) -> anyhow::Result<ResidencyMode> {
-        Ok(match name.to_ascii_lowercase().as_str() {
-            "off" | "none" => ResidencyMode::Off,
-            "auto" | "on" => ResidencyMode::Auto,
-            other => anyhow::bail!("unknown residency mode '{other}'"),
-        })
+        let lower = name.to_ascii_lowercase();
+        for (aliases, mode) in Self::CHOICES {
+            if aliases.contains(&lower.as_str()) {
+                return Ok(*mode);
+            }
+        }
+        anyhow::bail!("unknown residency mode '{name}'")
     }
 }
 
@@ -288,21 +299,14 @@ fn price_pins(
     Ok(total)
 }
 
-/// Plan which nodes' weights to pin for one decode-step GEMM chain.
-///
-/// Greedy by exact gain density (saved ns per pinned byte), filled under
-/// the capacity budget, then every prefix of the fill order is priced
-/// exactly and the cheapest kept — prefix 0 being the unpinned chain, so
-/// the plan never loses to it.
-pub fn plan_nodes(
-    machine: &MachineConfig,
+/// Greedy pin fill: candidates ordered by exact unit-gain density, filled
+/// under the capacity budget.  Shared by the pooled planner and the
+/// serial reference — both prefix-price the same fill order.
+fn greedy_pins(
+    sim: &Simulator,
     inputs: &[PlanNodeInput],
-    extra_ns: f64,
-    price_exact: bool,
-) -> anyhow::Result<ResidencyPlan> {
-    let sim = Simulator::new(machine.clone());
-    let budget = pin_budget_bytes(machine);
-
+    budget: u64,
+) -> anyhow::Result<Vec<NodePin>> {
     // Candidate nodes: packed-INT4 weights that fit the budget at all.
     struct Candidate {
         node: usize,
@@ -320,8 +324,7 @@ pub fn plan_nodes(
         }
         // Exact unit gain of pinning ONE instance of this node alone.
         let ledger = ResidencyLedger::with_pinned_weights(unit_bytes);
-        let resident_ns =
-            sim.run_with_residency(&carry_weights(&input.trace), &ledger)?.total_ns;
+        let resident_ns = sim.price_with_residency(&carry_weights(&input.trace), &ledger)?;
         let density = (input.unit_ns - resident_ns) / unit_bytes as f64;
         if density > 0.0 {
             candidates.push(Candidate { node: i, unit_bytes, density });
@@ -348,6 +351,230 @@ pub fn plan_nodes(
             unit_bytes: c.unit_bytes,
         });
     }
+    Ok(pins)
+}
+
+/// Ledger-independent constructions hoisted out of the prefix loop: the
+/// carried-weight trace of every pinned node and every splice the exact
+/// pricer can ask for.  [`coschedule::splice`] never reads a ledger, so
+/// one construction serves all prefixes — each prefix then only pays the
+/// detail-free re-pricing under its own pinned-bytes ledger.
+struct PrefixPrep {
+    /// Carried-weight trace per node (`Some` only for nodes in the fill).
+    resident: Vec<Option<KernelTrace>>,
+    /// Pin instances per node when the node's pin IS in the prefix.
+    pin_instances: Vec<usize>,
+    /// `splice(resident, resident)` per node (internal pair, `p > 1`).
+    rr: Vec<Option<MergedTrace>>,
+    /// `splice(cold, cold)` per node (internal pair, `count - p > 1`).
+    cc: Vec<Option<MergedTrace>>,
+    /// Boundary splice per adjacent pair, indexed
+    /// `[left is resident][right is resident]` (a boundary instance is
+    /// resident only when its node is fully pinned).
+    boundary: Vec<[[Option<MergedTrace>; 2]; 2]>,
+}
+
+fn prefix_prep(inputs: &[PlanNodeInput], pins: &[NodePin], price_exact: bool) -> PrefixPrep {
+    let n = inputs.len();
+    let mut resident: Vec<Option<KernelTrace>> = vec![None; n];
+    let mut pin_instances = vec![0usize; n];
+    for pin in pins {
+        pin_instances[pin.node] = pin.instances;
+        resident[pin.node] = Some(carry_weights(&inputs[pin.node].trace));
+    }
+    let mut rr: Vec<Option<MergedTrace>> = Vec::new();
+    let mut cc: Vec<Option<MergedTrace>> = Vec::new();
+    let mut boundary: Vec<[[Option<MergedTrace>; 2]; 2]> = Vec::new();
+    if price_exact {
+        for (i, input) in inputs.iter().enumerate() {
+            let count = input.count.max(1);
+            rr.push(match resident[i].as_ref() {
+                Some(rt) if pin_instances[i].min(count) > 1 => coschedule::splice(rt, rt),
+                _ => None,
+            });
+            cc.push(if count >= 2 {
+                coschedule::splice(&input.trace, &input.trace)
+            } else {
+                None
+            });
+        }
+        // A node's boundary instance serves the resident variant only
+        // when every instance is pinned (partial pins order resident
+        // instances first, leaving a cold instance at each boundary).
+        let variants = |i: usize| -> Vec<(usize, &KernelTrace)> {
+            let count = inputs[i].count.max(1);
+            let mut v = vec![(0usize, &inputs[i].trace)];
+            if let Some(rt) = resident[i].as_ref() {
+                if pin_instances[i].min(count) == count {
+                    v.push((1, rt));
+                }
+            }
+            v
+        };
+        for i in 1..n {
+            let mut cell: [[Option<MergedTrace>; 2]; 2] = Default::default();
+            for &(lv, lt) in &variants(i - 1) {
+                for &(rv, rt) in &variants(i) {
+                    cell[lv][rv] = coschedule::splice(lt, rt);
+                }
+            }
+            boundary.push(cell);
+        }
+    }
+    PrefixPrep { resident, pin_instances, rr, cc, boundary }
+}
+
+/// Exact price of the GEMM chain under one prefix of the fill order,
+/// arithmetically identical to [`price_pins`] — same node walk, same
+/// accumulation order, same pair adjacencies — but re-simulating through
+/// the simulator's detail-free price path on the pre-built traces and
+/// splices from [`PrefixPrep`] instead of reconstructing them per prefix.
+fn price_prefix(
+    sim: &Simulator,
+    inputs: &[PlanNodeInput],
+    prep: &PrefixPrep,
+    pins: &[NodePin],
+    extra_ns: f64,
+    price_exact: bool,
+) -> anyhow::Result<f64> {
+    let pinned_bytes: u64 = pins.iter().map(|p| p.bytes()).sum();
+    let ledger = ResidencyLedger::with_pinned_weights(pinned_bytes);
+    let mut in_prefix = vec![false; inputs.len()];
+    for pin in pins {
+        in_prefix[pin.node] = true;
+    }
+
+    let mut cold_ns: Vec<Option<f64>> = Vec::with_capacity(inputs.len());
+    let mut res_ns: Vec<Option<f64>> = Vec::with_capacity(inputs.len());
+    let mut pinned: Vec<usize> = Vec::with_capacity(inputs.len());
+    let mut total = extra_ns;
+    for (i, input) in inputs.iter().enumerate() {
+        let count = input.count.max(1);
+        let p = if in_prefix[i] { prep.pin_instances[i].min(count) } else { 0 };
+        let c = if p < count {
+            Some(sim.price_with_residency(&input.trace, &ledger)?)
+        } else {
+            None
+        };
+        let r = if p > 0 {
+            let carried = prep.resident[i].as_ref().expect("pinned node has a resident trace");
+            Some(sim.price_with_residency(carried, &ledger)?)
+        } else {
+            None
+        };
+        total += p as f64 * r.unwrap_or(0.0) + (count - p) as f64 * c.unwrap_or(0.0);
+        cold_ns.push(c);
+        res_ns.push(r);
+        pinned.push(p);
+    }
+
+    if price_exact {
+        let mut gain = 0.0;
+        for (i, input) in inputs.iter().enumerate() {
+            let count = input.count.max(1);
+            if count < 2 {
+                continue;
+            }
+            let p = pinned[i];
+            if p > 1 {
+                if let Some(merged) = prep.rr[i].as_ref() {
+                    let rns = res_ns[i].expect("p > 0 has a resident price");
+                    let d = coschedule::decide_merged(sim, merged, 2.0 * rns, &ledger)?;
+                    gain += (p - 1) as f64 * d.gain_ns;
+                }
+            }
+            if count - p > 1 {
+                if let Some(merged) = prep.cc[i].as_ref() {
+                    let cns = cold_ns[i].expect("p < count has a cold price");
+                    let d = coschedule::decide_merged(sim, merged, 2.0 * cns, &ledger)?;
+                    gain += (count - p - 1) as f64 * d.gain_ns;
+                }
+            }
+        }
+        let variant = |i: usize| -> (usize, f64) {
+            match cold_ns[i] {
+                Some(ns) => (0, ns),
+                None => (1, res_ns[i].expect("every node has a variant")),
+            }
+        };
+        for i in 1..inputs.len() {
+            let (lv, pns) = variant(i - 1);
+            let (rv, cns) = variant(i);
+            if let Some(merged) = prep.boundary[i - 1][lv][rv].as_ref() {
+                let d = coschedule::decide_merged(sim, merged, pns + cns, &ledger)?;
+                gain += d.gain_ns;
+            }
+        }
+        total -= gain;
+    }
+    Ok(total)
+}
+
+/// Plan which nodes' weights to pin for one decode-step GEMM chain.
+///
+/// Greedy by exact gain density (saved ns per pinned byte), filled under
+/// the capacity budget, then every prefix of the fill order is priced
+/// exactly and the cheapest kept — prefix 0 being the unpinned chain, so
+/// the plan never loses to it.  Splice/trace construction is hoisted out
+/// of the prefix loop and the prefixes are priced concurrently on the
+/// [`pool`] (each is an independent pure function of its ledger), with
+/// results consumed in index order — bit-identical to
+/// [`plan_nodes_serial`], which `sim_perf` and the planner's own tests
+/// hold it to.
+pub fn plan_nodes(
+    machine: &MachineConfig,
+    inputs: &[PlanNodeInput],
+    extra_ns: f64,
+    price_exact: bool,
+) -> anyhow::Result<ResidencyPlan> {
+    let sim = Simulator::new(machine.clone());
+    let budget = pin_budget_bytes(machine);
+    let mut pins = greedy_pins(&sim, inputs, budget)?;
+
+    let prep = prefix_prep(inputs, &pins, price_exact);
+    let lens: Vec<usize> = (0..=pins.len()).collect();
+    let priced = pool::par_map(&lens, |&len| {
+        price_prefix(&sim, inputs, &prep, &pins[..len], extra_ns, price_exact)
+    });
+    let mut prices: Vec<f64> = Vec::with_capacity(priced.len());
+    for r in priced {
+        prices.push(r?);
+    }
+
+    let baseline_ns = prices[0];
+    let mut best_ns = baseline_ns;
+    let mut best_len = 0usize;
+    for (len, &ns) in prices.iter().enumerate().skip(1) {
+        if ns < best_ns {
+            best_ns = ns;
+            best_len = len;
+        }
+    }
+    pins.truncate(best_len);
+    let pinned_bytes: u64 = pins.iter().map(|p| p.bytes()).sum();
+    Ok(ResidencyPlan {
+        pins,
+        pinned_bytes,
+        budget_bytes: budget,
+        resident_ns: best_ns,
+        baseline_ns,
+    })
+}
+
+/// Serial reference planner: identical fill order, every prefix priced
+/// one after the other through [`price_pins`] (full report assembly,
+/// traces and splices rebuilt per prefix).  This is the pre-pooling
+/// implementation, kept as the bit-identity oracle for [`plan_nodes`] and
+/// as the serial leg of the `sim_perf` wall-clock cells.
+pub fn plan_nodes_serial(
+    machine: &MachineConfig,
+    inputs: &[PlanNodeInput],
+    extra_ns: f64,
+    price_exact: bool,
+) -> anyhow::Result<ResidencyPlan> {
+    let sim = Simulator::new(machine.clone());
+    let budget = pin_budget_bytes(machine);
+    let mut pins = greedy_pins(&sim, inputs, budget)?;
 
     // Exact prefix pricing: prefix 0 is the unpinned chain.
     let baseline_ns = price_pins(&sim, inputs, &[], extra_ns, price_exact)?;
@@ -476,6 +703,39 @@ mod tests {
         if let Some(pin) = plan.pins.first() {
             assert!(pin.instances < 64, "64 experts cannot all be resident");
             assert!(pin.instances >= 1);
+        }
+    }
+
+    #[test]
+    fn pooled_planner_matches_serial_reference() {
+        let machine = m();
+        // A mixed chain: dense projections, a Split-K node (spliceable
+        // exposed reduce) and a partially-pinnable expert batch, priced
+        // both heuristically and exactly.  The pooled planner hoists the
+        // trace/splice construction and prices prefixes concurrently; it
+        // must land on bit-identical numbers and the same pin set.
+        let inputs = vec![
+            input(GemmKind::Qkv, Strategy::Fused, 8, 6144, 2048, 1),
+            input(GemmKind::Down, Strategy::SplitK, 8, 2048, 8192, 1),
+            input(GemmKind::MoeExpert, Strategy::Fused, 1, 7168, 2048, 64),
+            input(GemmKind::Down, Strategy::Fused, 8, 2048, 8192, 1),
+        ];
+        for exact in [false, true] {
+            let pooled = plan_nodes(&machine, &inputs, 123.0, exact).unwrap();
+            let serial = plan_nodes_serial(&machine, &inputs, 123.0, exact).unwrap();
+            assert_eq!(pooled.pins, serial.pins, "price_exact={exact}");
+            assert_eq!(pooled.pinned_bytes, serial.pinned_bytes);
+            assert_eq!(pooled.budget_bytes, serial.budget_bytes);
+            assert_eq!(
+                pooled.resident_ns.to_bits(),
+                serial.resident_ns.to_bits(),
+                "price_exact={exact}: resident_ns diverged"
+            );
+            assert_eq!(
+                pooled.baseline_ns.to_bits(),
+                serial.baseline_ns.to_bits(),
+                "price_exact={exact}: baseline_ns diverged"
+            );
         }
     }
 

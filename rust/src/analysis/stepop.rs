@@ -1,0 +1,306 @@
+//! The uniform step-graph op contract (DESIGN.md §17).
+//!
+//! Every node kind of the decode/prefill step graph — tuned or forced
+//! GEMM, vector pass, and (inside a GEMM's schedule) the Split-K reduce —
+//! prices itself through one trait, [`StepOp`]:
+//!
+//! * **trace production** — [`StepOp::price`] returns the node's
+//!   [`StepNodeReport`] plus, for kernel-backed ops, the served
+//!   [`KernelTrace`] the co-scheduler and residency planner consume;
+//! * **residency hooks** — [`StepOp::residency_input`] converts a priced
+//!   op into the planner's [`PlanNodeInput`] (or `None` for ops whose
+//!   weights are not pinnable, which the planner then prices as
+//!   plan-independent `extra_ns`);
+//! * **splice capability** — [`StepOp::splice_capable`] marks ops whose
+//!   served trace the co-scheduler may splice (exposed reduce tail /
+//!   dequant prologue adjacency, DESIGN.md §12).
+//!
+//! The step simulator ([`StepSim`]), co-scheduler, residency planner and
+//! router all walk one op list through this trait instead of matching on
+//! node kinds — a future collective op (ROADMAP item 1) or a new
+//! precision strategy enters as one new impl, not a new match arm per
+//! subsystem.
+//!
+//! [`StepSim`]: super::stepsim::StepSim
+//! [`KernelTrace`]: crate::ascend::KernelTrace
+
+use super::layer::{NodeReport, Resolution, StepNodeReport, VectorNodeReport};
+use super::residency::PlanNodeInput;
+use crate::ascend::{vecpass, KernelTrace, MachineConfig, SimReport, Simulator};
+use crate::kernels::{self, tiling::Tiling, GemmProblem, ReduceMode, Strategy};
+use crate::workload::decode_layer::{GemmNode, StepNode, VectorOp};
+
+/// One graph node's (strategy, tiling, provenance) assignment.
+pub type Assignment = (Strategy, Tiling, Resolution);
+
+/// Everything an op needs to price itself: the machine, a shared
+/// simulator, and the resolver that assigns GEMM nodes their schedule.
+pub struct PriceCtx<'a> {
+    pub machine: &'a MachineConfig,
+    pub sim: &'a Simulator,
+    pub resolve: &'a mut dyn FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
+}
+
+/// A priced op: its report node plus, for kernel-backed ops, the served
+/// trace (what the co-scheduler splices and the residency planner pins).
+#[derive(Debug, Clone)]
+pub struct PricedOp {
+    pub report: StepNodeReport,
+    pub trace: Option<KernelTrace>,
+}
+
+/// The uniform step-graph op: anything the step simulator can price.
+pub trait StepOp {
+    /// Display name (report tables, ledger rows).
+    fn name(&self) -> &'static str;
+
+    /// Identical instances the op issues per step (expert fan-out).
+    fn count(&self) -> usize {
+        1
+    }
+
+    /// Price the op: produce its report node and, when kernel-backed,
+    /// the served trace.
+    fn price(&self, ctx: &mut PriceCtx) -> anyhow::Result<PricedOp>;
+
+    /// Whether the co-scheduler may splice this op's served trace into
+    /// an adjacent op's schedule (DESIGN.md §12).
+    fn splice_capable(&self) -> bool {
+        false
+    }
+
+    /// The residency planner's view of this priced op — `None` when the
+    /// op has no pinnable weight stream (the planner then carries its
+    /// time as plan-independent `extra_ns`).
+    fn residency_input(&self, priced: &PricedOp) -> Option<PlanNodeInput> {
+        let _ = priced;
+        None
+    }
+
+    /// The underlying GEMM node, for walkers (router, tuner seeding)
+    /// that only consume the GEMM sub-chain.
+    fn gemm(&self) -> Option<&GemmNode> {
+        None
+    }
+}
+
+/// The overlap terms of one served trace: (exposed post-barrier reduce
+/// group time, vector-engine slack of the leading dequant phase).
+pub(crate) fn overlap_terms(r: &SimReport) -> (f64, f64) {
+    let reduce_tail = match r.groups.last() {
+        Some(g) if r.groups.len() > 1 => {
+            let all_reduce = g
+                .phases
+                .iter()
+                .all(|&pi| r.phase_times[pi].name.starts_with("reduce"));
+            if all_reduce {
+                g.total_ns
+            } else {
+                0.0
+            }
+        }
+        _ => 0.0,
+    };
+    // The weight-only prologue: the first dequant phase's transfer time is
+    // independent of upstream activations, so its vector-compute headroom
+    // (standalone minus SIMD time) is where an upstream reduce can hide.
+    let dequant_slack = r
+        .phase_times
+        .iter()
+        .find(|pt| pt.name.contains("dequant"))
+        .map(|pt| (pt.standalone_ns - pt.compute_ns).max(0.0))
+        .unwrap_or(0.0);
+    (reduce_tail, dequant_slack)
+}
+
+/// Simulate one GEMM node: served (auto-reduce) and barrier-reduce
+/// pricing plus the overlap terms, multiplied over the node's count.
+/// Also returns the served trace itself — the co-scheduler splices it.
+pub(crate) fn simulate_gemm_node(
+    machine: &MachineConfig,
+    sim: &Simulator,
+    node: &GemmNode,
+    assignment: Assignment,
+) -> anyhow::Result<(NodeReport, KernelTrace)> {
+    let (strategy, tiling, resolution) = assignment;
+    let p = &node.problem;
+    let served = kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Auto)?;
+    let served_run = sim.run(&served)?;
+    let unit_ns = served_run.total_ns;
+    let (reduce_tail_ns, dequant_slack_ns) = overlap_terms(&served_run);
+    // Only the Split-K family has a reduce; for the other strategies
+    // the barrier variant IS the served trace — skip the re-build.
+    let unit_barrier_ns = match strategy {
+        Strategy::SplitK | Strategy::Chunked => {
+            let barrier =
+                kernels::schedule_with_reduce(machine, p, strategy, &tiling, ReduceMode::Barrier)?;
+            sim.run(&barrier)?.total_ns
+        }
+        _ => unit_ns,
+    };
+    let count = node.count.max(1) as f64;
+    let report = NodeReport {
+        kind: node.kind,
+        problem: *p,
+        count: node.count.max(1),
+        strategy,
+        tiling,
+        resolution,
+        unit_ns,
+        unit_barrier_ns,
+        total_ns: unit_ns * count,
+        barrier_ns: unit_barrier_ns * count,
+        reduce_tail_ns,
+        dequant_slack_ns,
+    };
+    Ok((report, served))
+}
+
+impl StepOp for GemmNode {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn count(&self) -> usize {
+        self.count.max(1)
+    }
+
+    fn price(&self, ctx: &mut PriceCtx) -> anyhow::Result<PricedOp> {
+        let assignment = (ctx.resolve)(&self.problem)?;
+        let (report, trace) = simulate_gemm_node(ctx.machine, ctx.sim, self, assignment)?;
+        Ok(PricedOp { report: StepNodeReport::Gemm(report), trace: Some(trace) })
+    }
+
+    fn splice_capable(&self) -> bool {
+        true
+    }
+
+    fn residency_input(&self, priced: &PricedOp) -> Option<PlanNodeInput> {
+        let (StepNodeReport::Gemm(g), Some(t)) = (&priced.report, &priced.trace) else {
+            return None;
+        };
+        Some(PlanNodeInput {
+            kind: g.kind,
+            problem: g.problem,
+            count: g.count,
+            unit_ns: g.unit_ns,
+            trace: t.clone(),
+        })
+    }
+
+    fn gemm(&self) -> Option<&GemmNode> {
+        Some(self)
+    }
+}
+
+impl StepOp for VectorOp {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn price(&self, ctx: &mut PriceCtx) -> anyhow::Result<PricedOp> {
+        let c = vecpass::price_pass(
+            ctx.machine,
+            self.elems,
+            self.ops_per_elem,
+            self.hbm_bytes,
+            self.l2_bytes,
+        );
+        Ok(PricedOp {
+            report: StepNodeReport::Vector(VectorNodeReport {
+                op: *self,
+                total_ns: c.total_ns,
+                compute_ns: c.compute_ns,
+                hbm_ns: c.hbm_ns,
+                l2_ns: c.l2_ns,
+            }),
+            trace: None,
+        })
+    }
+}
+
+/// View a [`StepNode`] as its trait object — the workload layer stays
+/// free of analysis dependencies, so the dispatch lives here.
+pub fn as_op(node: &StepNode) -> &dyn StepOp {
+    match node {
+        StepNode::Gemm(g) => g,
+        StepNode::Vector(v) => v,
+    }
+}
+
+impl StepOp for StepNode {
+    fn name(&self) -> &'static str {
+        as_op(self).name()
+    }
+
+    fn count(&self) -> usize {
+        as_op(self).count()
+    }
+
+    fn price(&self, ctx: &mut PriceCtx) -> anyhow::Result<PricedOp> {
+        as_op(self).price(ctx)
+    }
+
+    fn splice_capable(&self) -> bool {
+        as_op(self).splice_capable()
+    }
+
+    fn residency_input(&self, priced: &PricedOp) -> Option<PlanNodeInput> {
+        as_op(self).residency_input(priced)
+    }
+
+    fn gemm(&self) -> Option<&GemmNode> {
+        as_op(self).gemm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llm::layer_geometry;
+    use crate::workload::decode_layer::{DecodeLayer, DecodeStep};
+
+    #[test]
+    fn ops_price_like_their_kinds() {
+        let machine = MachineConfig::ascend910();
+        let sim = Simulator::new(machine.clone());
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let mut resolve = |p: &GemmProblem| -> anyhow::Result<Assignment> {
+            Ok((
+                Strategy::SplitK,
+                kernels::select_tiling(&machine, p, Strategy::SplitK)?,
+                Resolution::Heuristic,
+            ))
+        };
+        let mut ctx = PriceCtx { machine: &machine, sim: &sim, resolve: &mut resolve };
+        let mut gemms = 0;
+        let mut vectors = 0;
+        for node in step.nodes() {
+            let priced = node.price(&mut ctx).unwrap();
+            assert!(priced.report.total_ns() > 0.0);
+            match &priced.report {
+                StepNodeReport::Gemm(g) => {
+                    gemms += 1;
+                    assert!(node.splice_capable());
+                    assert!(priced.trace.is_some(), "GEMM ops must produce a trace");
+                    assert_eq!(node.gemm().unwrap().kind, g.kind);
+                    let input = node.residency_input(&priced).expect("GEMM ops are pinnable");
+                    assert_eq!(input.count, g.count);
+                    assert_eq!(input.unit_ns, g.unit_ns);
+                }
+                StepNodeReport::Vector(_) => {
+                    vectors += 1;
+                    assert!(!node.splice_capable());
+                    assert!(priced.trace.is_none());
+                    assert!(node.gemm().is_none());
+                    assert!(node.residency_input(&priced).is_none());
+                }
+            }
+            assert_eq!(node.name(), priced.report.name());
+            assert!(node.count() >= 1);
+        }
+        assert_eq!(gemms, 4);
+        assert_eq!(vectors, 8);
+    }
+}

@@ -1,0 +1,412 @@
+//! The single step-simulation entry point (DESIGN.md §17).
+//!
+//! [`StepSim`] replaces the six `simulate_step*` free functions of
+//! `analysis::layer` with one builder:
+//!
+//! ```text
+//! StepSim::new(&machine, &step)        // or ::prefill(&machine, &chunk)
+//!     .overlap(OverlapMode::Auto)
+//!     .residency(ResidencyMode::Auto)
+//!     .tuner(&mut tuner)               // or .resolver(|p| ...)
+//!     .run()?
+//! ```
+//!
+//! The builder walks the step graph as one uniform op list through the
+//! [`StepOp`] trait — pricing, co-scheduling eligibility and residency
+//! inputs all come off the trait, so a new op kind (a collective, a new
+//! precision strategy) needs no changes here.  Defaults: overlap `Auto`,
+//! residency `Off` (matching the old `simulate_step`), resolver
+//! **required** — `run` errors when neither `.tuner()` nor `.resolver()`
+//! was called.
+//!
+//! [`StepOp`]: super::stepop::StepOp
+
+use super::coschedule;
+use super::layer::{
+    ChainOverlap, NodeReport, OverlapMode, OverlapPair, Resolution, StepNodeReport, StepReport,
+};
+use super::residency::{self, ResidencyMode};
+use super::stepop::{Assignment, PriceCtx, PricedOp, StepOp};
+use crate::ascend::{KernelTrace, MachineConfig, Simulator};
+use crate::kernels::GemmProblem;
+use crate::tune::Tuner;
+use crate::workload::decode_layer::{DecodeStep, StepNode};
+use crate::workload::PrefillStep;
+
+/// Resolve through a tuner (cache hit, or live search that warms the
+/// cache), tracking how each node was resolved.
+pub(crate) fn tuner_resolve(tuner: &mut Tuner, p: &GemmProblem) -> anyhow::Result<Assignment> {
+    let before = tuner.searches;
+    let e = tuner.resolve(p)?;
+    let resolution = if tuner.searches > before {
+        Resolution::Searched
+    } else {
+        Resolution::CacheHit
+    };
+    Ok((e.strategy, e.tiling, resolution))
+}
+
+enum Resolver<'a> {
+    Tuner(&'a mut Tuner),
+    Custom(Box<dyn FnMut(&GemmProblem) -> anyhow::Result<Assignment> + 'a>),
+}
+
+/// Builder for one step-graph simulation — decode or prefill, any
+/// overlap/residency mode, tuned or custom-resolved.
+pub struct StepSim<'a> {
+    machine: &'a MachineConfig,
+    ops: Vec<StepNode>,
+    batch: usize,
+    kv_len: usize,
+    overlap: OverlapMode,
+    residency: ResidencyMode,
+    resolver: Option<Resolver<'a>>,
+}
+
+impl<'a> StepSim<'a> {
+    /// Simulate a full decode step (attention, glue, GEMM chain, MoE
+    /// fan-out).
+    pub fn new(machine: &'a MachineConfig, step: &DecodeStep) -> Self {
+        Self::over(machine, step.nodes(), step.layer.batch, step.kv_len)
+    }
+
+    /// Simulate a causal prefill chunk (DESIGN.md §15): same graph shape
+    /// as decode at M = chunk tokens, causal-context attention passes.
+    /// The report's `batch` is the chunk's token count and `kv_len` the
+    /// cache length after the chunk lands.
+    pub fn prefill(machine: &'a MachineConfig, step: &PrefillStep) -> Self {
+        Self::over(machine, step.nodes(), step.chunk_tokens(), step.kv_end())
+    }
+
+    /// Simulate an explicit op list — the escape hatch for synthetic
+    /// graphs (tests, future collectives) that no workload type builds.
+    pub fn over(
+        machine: &'a MachineConfig,
+        ops: Vec<StepNode>,
+        batch: usize,
+        kv_len: usize,
+    ) -> Self {
+        StepSim {
+            machine,
+            ops,
+            batch,
+            kv_len,
+            overlap: OverlapMode::default(),
+            residency: ResidencyMode::Off,
+            resolver: None,
+        }
+    }
+
+    /// Set the overlap mode (default `Auto`).
+    pub fn overlap(mut self, mode: OverlapMode) -> Self {
+        self.overlap = mode;
+        self
+    }
+
+    /// Set the residency mode (default `Off`).
+    pub fn residency(mut self, mode: ResidencyMode) -> Self {
+        self.residency = mode;
+        self
+    }
+
+    /// Resolve every GEMM node through the tuner (cache hit or live
+    /// search).  Overrides any previous `.tuner()`/`.resolver()`.
+    pub fn tuner(mut self, tuner: &'a mut Tuner) -> Self {
+        self.resolver = Some(Resolver::Tuner(tuner));
+        self
+    }
+
+    /// Resolve every GEMM node through a custom closure (fixed-strategy
+    /// and forced-split paths).  Overrides any previous resolver.
+    pub fn resolver(
+        mut self,
+        resolve: impl FnMut(&GemmProblem) -> anyhow::Result<Assignment> + 'a,
+    ) -> Self {
+        self.resolver = Some(Resolver::Custom(Box::new(resolve)));
+        self
+    }
+
+    /// Price the step graph.
+    pub fn run(self) -> anyhow::Result<StepReport> {
+        let StepSim { machine, ops, batch, kv_len, overlap, residency, resolver } = self;
+        let mut resolver = resolver.ok_or_else(|| {
+            anyhow::anyhow!(
+                "StepSim has no resolver: call .tuner(&mut tuner) or .resolver(|p| ...) \
+                 before .run()"
+            )
+        })?;
+        let mut resolve = |p: &GemmProblem| -> anyhow::Result<Assignment> {
+            match &mut resolver {
+                Resolver::Tuner(t) => tuner_resolve(t, p),
+                Resolver::Custom(f) => f(p),
+            }
+        };
+        simulate_ops(machine, &ops, batch, kv_len, overlap, residency, &mut resolve)
+    }
+}
+
+/// The step-graph core: price an issue-ordered op list (decode or
+/// prefill — the simulator only consumes the ops, the batch label and
+/// the kv length) under an overlap mode and a residency mode.  Every op
+/// is priced through [`StepOp::price`]; residency inputs come off
+/// [`StepOp::residency_input`].
+fn simulate_ops(
+    machine: &MachineConfig,
+    ops: &[StepNode],
+    batch: usize,
+    kv_len: usize,
+    mode: OverlapMode,
+    residency_mode: ResidencyMode,
+    resolve: &mut dyn FnMut(&GemmProblem) -> anyhow::Result<Assignment>,
+) -> anyhow::Result<StepReport> {
+    let sim = Simulator::new(machine.clone());
+    let mut priced: Vec<PricedOp> = Vec::with_capacity(ops.len());
+    {
+        let mut ctx = PriceCtx { machine, sim: &sim, resolve };
+        for op in ops {
+            priced.push(op.price(&mut ctx)?);
+        }
+    }
+    let nodes: Vec<StepNodeReport> = priced.iter().map(|p| p.report.clone()).collect();
+    let traces: Vec<Option<KernelTrace>> = priced.iter().map(|p| p.trace.clone()).collect();
+
+    let sequential_ns: f64 = nodes.iter().map(|n| n.total_ns()).sum();
+    let price_exact = matches!(mode, OverlapMode::Exact | OverlapMode::Auto);
+    let ledger = build_ledger(&sim, &nodes, &traces, price_exact)?;
+    let gain: f64 = ledger.iter().map(|p| p.total_gain_ns()).sum();
+    let exact_gain: f64 = ledger.iter().map(|p| p.total_exact_gain_ns()).sum();
+    let residency = match residency_mode {
+        ResidencyMode::Off => None,
+        ResidencyMode::Auto => {
+            let mut inputs = Vec::new();
+            let mut extra_ns = 0.0;
+            for (op, p) in ops.iter().zip(&priced) {
+                match op.residency_input(p) {
+                    Some(input) => inputs.push(input),
+                    None => extra_ns += p.report.total_ns(),
+                }
+            }
+            Some(residency::plan_nodes(machine, &inputs, extra_ns, price_exact)?)
+        }
+    };
+    Ok(StepReport {
+        batch,
+        kv_len,
+        mode,
+        nodes,
+        ledger,
+        sequential_ns,
+        overlapped_ns: sequential_ns - gain,
+        exact_ns: sequential_ns - exact_gain,
+        residency,
+    })
+}
+
+/// Build the overlap ledger over the step's GEMM sub-chain: expert
+/// batches overlap internally (`count - 1` pairs), and each GEMM's
+/// trailing reduce overlaps the next GEMM's dequant prologue.  Vector
+/// glue between two GEMMs does not break eligibility — the consumer's
+/// dequant touches only its own weights, so it is independent of every
+/// intervening activation op (DESIGN.md §11).
+///
+/// `traces` holds each node's served kernel trace (aligned with `nodes`,
+/// `None` for vector nodes): when `price_exact` is set (the `Exact` and
+/// `Auto` modes — `Sequential`/`Overlapped` never serve the result, so
+/// they skip the extra merged-trace simulations), wherever the
+/// producer's reduce tail and the consumer's dequant prologue are
+/// spliceable, the pair also carries the co-scheduler's exact
+/// merged-trace pricing (DESIGN.md §12).  An entry appears whenever
+/// either pricing finds a positive gain.
+fn build_ledger(
+    sim: &Simulator,
+    nodes: &[StepNodeReport],
+    traces: &[Option<KernelTrace>],
+    price_exact: bool,
+) -> anyhow::Result<Vec<OverlapPair>> {
+    let gemms: Vec<(usize, &NodeReport)> = nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| match n {
+            StepNodeReport::Gemm(g) => Some((i, g)),
+            StepNodeReport::Vector(_) => None,
+        })
+        .collect();
+    let mut ledger = Vec::new();
+    let mut push = |ledger: &mut Vec<OverlapPair>,
+                    producer: (usize, &NodeReport),
+                    consumer: (usize, &NodeReport),
+                    pairs: usize|
+     -> anyhow::Result<()> {
+        let (pi, p) = producer;
+        let (ci, c) = consumer;
+        let gain = p.reduce_tail_ns.min(c.dequant_slack_ns);
+        let exact = match (&traces[pi], &traces[ci]) {
+            (Some(pt), Some(ct)) if price_exact => {
+                coschedule::pair_decision(sim, pt, ct, p.unit_ns + c.unit_ns)?
+            }
+            _ => None,
+        };
+        if gain > 0.0 || exact.is_some_and(|d| d.gain_ns > 0.0) {
+            ledger.push(OverlapPair {
+                producer: pi,
+                consumer: ci,
+                pairs,
+                reduce_ns: p.reduce_tail_ns,
+                slack_ns: c.dequant_slack_ns,
+                gain_ns: gain,
+                exact,
+                chain: None,
+                superseded: false,
+            });
+        }
+        Ok(())
+    };
+    for &(i, g) in &gemms {
+        if g.count > 1 {
+            push(&mut ledger, (i, g), (i, g), g.count - 1)?;
+        }
+    }
+    for w in gemms.windows(2) {
+        push(&mut ledger, w[0], w[1], 1)?;
+    }
+
+    if price_exact {
+        resolve_chains(sim, &gemms, traces, &mut ledger)?;
+    }
+    Ok(ledger)
+}
+
+/// Chain-level co-scheduling pass (DESIGN.md §13): for every consecutive
+/// GEMM triple whose producer tail saturates the first prologue, price
+/// the two-consumer chain splice and apply it greedily when it strictly
+/// beats BOTH the two pair decisions it replaces and their first-order
+/// ledger terms.  Each prologue is consumed by at most one splice: a
+/// chained producer's second consumer supersedes the (first consumer ->
+/// second consumer) pair, and a superseded or already-chained entry is
+/// never chained again — no vector engine is double-booked across
+/// decisions.
+fn resolve_chains(
+    sim: &Simulator,
+    gemms: &[(usize, &NodeReport)],
+    traces: &[Option<KernelTrace>],
+    ledger: &mut Vec<OverlapPair>,
+) -> anyhow::Result<()> {
+    for w in gemms.windows(3) {
+        let [(ai, a), (bi, b), (ci, c)] = [w[0], w[1], w[2]];
+        // Chains only over single-instance nodes: an expert batch in the
+        // middle would run count-1 more instances between the spliced
+        // first consumer and the second one, evicting the carried
+        // partials far beyond the one attenuation step the merged trace
+        // prices — the three-kernel simulation would overstate the gain.
+        if a.count != 1 || b.count != 1 || c.count != 1 {
+            continue;
+        }
+        let (Some(ta), Some(tb), Some(tc)) = (&traces[ai], &traces[bi], &traces[ci]) else {
+            continue;
+        };
+        if !coschedule::saturates(ta, tb) {
+            continue;
+        }
+        let entry_pos = |p: usize, q: usize, l: &[OverlapPair]| {
+            l.iter().position(|e| e.producer == p && e.consumer == q)
+        };
+        // Skip when either prologue is already spoken for.
+        let first = entry_pos(ai, bi, ledger);
+        if first.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
+            continue;
+        }
+        let second = entry_pos(bi, ci, ledger);
+        if second.is_some_and(|i| ledger[i].chain.is_some() || ledger[i].superseded) {
+            continue;
+        }
+        let sequential = a.unit_ns + b.unit_ns + c.unit_ns;
+        let Some(decision) = coschedule::chain_decision(sim, ta, tb, tc, sequential)? else {
+            continue;
+        };
+        let replaced_exact = first.map_or(0.0, |i| ledger[i].exact_gain_ns())
+            + second.map_or(0.0, |i| ledger[i].exact_gain_ns());
+        let replaced_ledger =
+            first.map_or(0.0, |i| ledger[i].gain_ns) + second.map_or(0.0, |i| ledger[i].gain_ns);
+        if decision.gain_ns <= replaced_exact.max(replaced_ledger) + 1e-9 {
+            continue;
+        }
+        let chain = ChainOverlap { second_consumer: ci, decision };
+        match first {
+            Some(i) => ledger[i].chain = Some(chain),
+            None => ledger.push(OverlapPair {
+                producer: ai,
+                consumer: bi,
+                pairs: 1,
+                reduce_ns: a.reduce_tail_ns,
+                slack_ns: b.dequant_slack_ns,
+                gain_ns: a.reduce_tail_ns.min(b.dequant_slack_ns),
+                exact: None,
+                chain: Some(chain),
+                superseded: false,
+            }),
+        }
+        if let Some(i) = second {
+            ledger[i].superseded = true;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, Strategy};
+    use crate::model::llm::layer_geometry;
+    use crate::workload::decode_layer::DecodeLayer;
+
+    #[test]
+    fn run_without_a_resolver_is_a_clear_error() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let err = StepSim::new(&m, &step).run().unwrap_err();
+        assert!(err.to_string().contains("no resolver"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn builder_defaults_match_the_plain_step_path() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        let rep = StepSim::new(&m, &step)
+            .resolver(|p| {
+                Ok((
+                    Strategy::Fused,
+                    kernels::select_tiling(&m, p, Strategy::Fused)?,
+                    Resolution::Heuristic,
+                ))
+            })
+            .run()
+            .unwrap();
+        assert_eq!(rep.mode, OverlapMode::Auto);
+        assert!(rep.residency.is_none(), "residency defaults Off");
+        assert_eq!(rep.batch, 8);
+        assert_eq!(rep.kv_len, 2048);
+        assert!(rep.served_ns() > 0.0 && rep.served_ns() <= rep.sequential_ns * 1.000001);
+    }
+
+    #[test]
+    fn later_resolver_calls_override_earlier_ones() {
+        let m = MachineConfig::ascend910();
+        let layer = DecodeLayer::new(layer_geometry("llama32").unwrap(), 8);
+        let step = DecodeStep::new(layer, 2048, DecodeStep::default_heads(&layer.geometry));
+        // A failing resolver overridden by a working one must not fire.
+        let rep = StepSim::new(&m, &step)
+            .resolver(|_| anyhow::bail!("must never be called"))
+            .resolver(|p| {
+                Ok((
+                    Strategy::SplitK,
+                    kernels::select_tiling(&m, p, Strategy::SplitK)?,
+                    Resolution::Heuristic,
+                ))
+            })
+            .run()
+            .unwrap();
+        assert!(rep.sequential_ns > 0.0);
+    }
+}

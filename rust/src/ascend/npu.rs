@@ -142,6 +142,18 @@ pub struct MergedReport {
     pub kernels: Vec<SimReport>,
 }
 
+/// Timing-core output shared by the full report path and the price-only
+/// path: the scalar times plus whatever detail the caller asked for
+/// (`groups`/`phase_times` are empty on price-only runs).
+struct CoreRun {
+    total_ns: f64,
+    launch_ns: f64,
+    barrier_ns: f64,
+    groups: Vec<GroupTime>,
+    phase_times: Vec<PhaseTime>,
+    l2: L2Model,
+}
+
 /// The simulator: a machine description plus the pricing logic.
 #[derive(Debug, Clone, Default)]
 pub struct Simulator {
@@ -224,6 +236,51 @@ impl Simulator {
         trace: &KernelTrace,
         ledger: &ResidencyLedger,
     ) -> anyhow::Result<SimReport> {
+        let core = self.run_core(trace, ledger, true)?;
+        Ok(SimReport {
+            name: trace.name.clone(),
+            total_ns: core.total_ns,
+            launch_ns: core.launch_ns,
+            barrier_ns: core.barrier_ns,
+            groups: core.groups,
+            phase_times: core.phase_times,
+            ledger: build_ledger(&core.l2, &trace.phases),
+            total_macs: trace.total_macs(),
+            l2_model: core.l2,
+        })
+    }
+
+    /// Price one kernel under a ledger *without* assembling the report:
+    /// identical float arithmetic to [`Simulator::run_with_residency`]
+    /// (same demands, same stream maxima, same accumulation order — the
+    /// returned time is bit-identical to `run_with_residency(..).total_ns`),
+    /// but the byte ledger, MAC census (which walks every step of every
+    /// phase) and per-phase/group report structs are skipped.  This is the
+    /// hot path of the residency planner's prefix re-pricing and the
+    /// co-scheduler's merged-trace decisions.
+    pub fn price_with_residency(
+        &self,
+        trace: &KernelTrace,
+        ledger: &ResidencyLedger,
+    ) -> anyhow::Result<f64> {
+        Ok(self.run_core(trace, ledger, false)?.total_ns)
+    }
+
+    /// [`Simulator::price_with_residency`] with a default (cold) ledger.
+    pub fn price(&self, trace: &KernelTrace) -> anyhow::Result<f64> {
+        self.price_with_residency(trace, &ResidencyLedger::default())
+    }
+
+    /// The shared timing core.  `detail` controls only whether the
+    /// [`PhaseTime`]/[`GroupTime`] report structs are collected; every
+    /// floating-point operation that feeds `total_ns` runs identically in
+    /// both modes (the bit-identity contract the price path depends on).
+    fn run_core(
+        &self,
+        trace: &KernelTrace,
+        ledger: &ResidencyLedger,
+        detail: bool,
+    ) -> anyhow::Result<CoreRun> {
         self.validate(trace)?;
         let m = &self.machine;
         let l2 = L2Model::for_trace_with_ledger(m, trace, ledger);
@@ -253,7 +310,7 @@ impl Simulator {
 
         for (gi, group) in groups.iter().enumerate() {
             let mut g = GroupTime {
-                phases: group.clone(),
+                phases: if detail { group.clone() } else { Vec::new() },
                 hbm_ns: 0.0,
                 l2_ns: 0.0,
                 cube_ns: 0.0,
@@ -275,17 +332,19 @@ impl Simulator {
                     Unit::Cube => g.cube_ns += compute_ns,
                     Unit::Vector => g.vector_ns += compute_ns,
                 }
-                phase_times.push(PhaseTime {
-                    name: phase.name,
-                    unit: phase.unit,
-                    group: gi,
-                    active_engines: d.active,
-                    steps: d.steps,
-                    hbm_ns,
-                    l2_ns,
-                    compute_ns,
-                    standalone_ns: hbm_ns.max(l2_ns).max(compute_ns),
-                });
+                if detail {
+                    phase_times.push(PhaseTime {
+                        name: phase.name,
+                        unit: phase.unit,
+                        group: gi,
+                        active_engines: d.active,
+                        steps: d.steps,
+                        hbm_ns,
+                        l2_ns,
+                        compute_ns,
+                        standalone_ns: hbm_ns.max(l2_ns).max(compute_ns),
+                    });
+                }
             }
             let streams = [
                 (g.hbm_ns, "hbm"),
@@ -329,19 +388,18 @@ impl Simulator {
             g.total_ns = max_ns + g.fill_ns + g.chunk_sync_ns;
             g.bound_by = bound;
             total += g.total_ns;
-            group_times.push(g);
+            if detail {
+                group_times.push(g);
+            }
         }
 
-        Ok(SimReport {
-            name: trace.name.clone(),
+        Ok(CoreRun {
             total_ns: total,
             launch_ns,
             barrier_ns,
             groups: group_times,
             phase_times,
-            ledger: build_ledger(&l2, &trace.phases),
-            total_macs: trace.total_macs(),
-            l2_model: l2,
+            l2,
         })
     }
 
@@ -385,6 +443,32 @@ impl Simulator {
             kernels.push(r);
         }
         Ok(MergedReport { name: merged.name.clone(), total_ns: total, kernels })
+    }
+
+    /// Price a merged multi-kernel trace without assembling the per-kernel
+    /// reports: the same per-kernel ledger threading and carried-residency
+    /// attenuation as [`Simulator::run_merged_with`], through the
+    /// bit-identical price path — `price_merged_with(..)` equals
+    /// `run_merged_with(..).total_ns` to the last bit.
+    pub fn price_merged_with(
+        &self,
+        merged: &MergedTrace,
+        base: &ResidencyLedger,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(!merged.kernels.is_empty(), "merged trace has no kernels");
+        let mut total = 0.0;
+        let mut carried_hit = 0.0;
+        for (i, trace) in merged.kernels.iter().enumerate() {
+            let ledger = ResidencyLedger { carried_partial_hit: carried_hit, ..*base };
+            let core = self.run_core(trace, &ledger, false)?;
+            if i == 0 {
+                carried_hit = core.l2.partial_hit;
+            } else {
+                carried_hit *= ledger.attenuation(&self.machine, trace);
+            }
+            total += core.total_ns;
+        }
+        Ok(total)
     }
 }
 
@@ -717,6 +801,52 @@ mod tests {
         // Second consumer: attenuated by the intervening working set.
         let hit = r.kernels[2].l2_model.carried_hit;
         assert!((hit - 0.5).abs() < 1e-6, "expected ~0.5, got {hit}");
+    }
+
+    #[test]
+    fn price_path_is_bit_identical_to_run() {
+        use crate::ascend::memory::ResidencyLedger;
+        use crate::ascend::trace::MergedTrace;
+        use crate::kernels::{self, GemmProblem, Strategy};
+        let m = machine();
+        let sim = Simulator::new(m.clone());
+        let ledgers = [
+            ResidencyLedger::default(),
+            ResidencyLedger::with_carried_partials(0.6),
+            ResidencyLedger::with_pinned_weights(9 << 20),
+        ];
+        let mut traces = Vec::new();
+        for strategy in [Strategy::SplitK, Strategy::Chunked, Strategy::DataParallel] {
+            traces.push(
+                kernels::schedule(&m, &GemmProblem::new(8, 2048, 7168), strategy).unwrap(),
+            );
+        }
+        traces.push(kernels::schedule(&m, &GemmProblem::new(64, 512, 16384), Strategy::SplitK).unwrap());
+        for trace in &traces {
+            for ledger in &ledgers {
+                let run = sim.run_with_residency(trace, ledger).unwrap().total_ns;
+                let price = sim.price_with_residency(trace, ledger).unwrap();
+                assert_eq!(price.to_bits(), run.to_bits(), "{}", trace.name);
+            }
+        }
+        // Merged chains: the carried-residency threading must match too.
+        let merged = MergedTrace {
+            name: "pair".into(),
+            kernels: vec![traces[0].clone(), traces[1].clone(), traces[2].clone()],
+        };
+        for ledger in &ledgers {
+            let run = sim.run_merged_with(&merged, ledger).unwrap().total_ns;
+            let price = sim.price_merged_with(&merged, ledger).unwrap();
+            assert_eq!(price.to_bits(), run.to_bits());
+        }
+        // And both paths reject the same invalid traces.
+        let bad = trace_of(vec![simple_phase(
+            Unit::Cube,
+            33,
+            1,
+            TileStep::new(ComputeOp::Nop),
+        )]);
+        assert!(sim.price(&bad).is_err());
     }
 
     #[test]

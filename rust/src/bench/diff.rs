@@ -161,6 +161,10 @@ impl DiffReport {
 /// `w4a16_us` and `w4a8_us` are absolute tuned latencies and gate like
 /// any other `_us` cell; `w4a8_speedup` is a ratio of the two (it moves
 /// whenever either column legitimately improves) and never gates.
+///
+/// Wall-clock cells (`*wall*`, the `sim_perf` serial-vs-pooled timings)
+/// measure the HOST machine, not the simulated NPU — they vary with CI
+/// hardware and load and must never gate.
 pub fn is_gated_time_cell(key: &str) -> bool {
     let timed = key.ends_with("_ns") || key.ends_with("_us");
     let ambiguous = key.contains("gain")
@@ -169,7 +173,8 @@ pub fn is_gated_time_cell(key: &str) -> bool {
         || key.contains("reduce")
         || key.contains("merged")
         || key.contains("barrier")
-        || key.contains("resident");
+        || key.contains("resident")
+        || key.contains("wall");
     timed && !ambiguous
 }
 
@@ -391,6 +396,23 @@ mod tests {
         let base = doc(100.0, Some(("w4a8_speedup", 1.4)));
         let cur = doc(100.0, Some(("w4a8_speedup", 1.1)));
         assert!(diff(&base, &cur, DEFAULT_THRESHOLD).gate_passes());
+    }
+
+    #[test]
+    fn wall_clock_cells_never_gate() {
+        // Host wall-clock timings (the sim_perf serial-vs-pooled legs)
+        // track the CI machine, not the simulated NPU: a 10x swing in a
+        // `*_wall_us` cell must pass the gate untouched.
+        assert!(!is_gated_time_cell("tune_serial_wall_us"));
+        assert!(!is_gated_time_cell("tune_pooled_wall_us"));
+        assert!(!is_gated_time_cell("prefix_serial_wall_us"));
+        assert!(!is_gated_time_cell("prefix_pooled_wall_us"));
+        assert!(is_gated_time_cell("step_us"), "real sim cells still gate");
+        let base = doc(100.0, Some(("prefix_pooled_wall_us", 40.0)));
+        let cur = doc(100.0, Some(("prefix_pooled_wall_us", 400.0)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1, "only step_us gates");
     }
 
     #[test]

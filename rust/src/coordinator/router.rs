@@ -29,6 +29,7 @@
 
 use std::collections::HashMap;
 
+use crate::analysis::stepop::StepOp;
 use crate::ascend::{MachineConfig, Simulator};
 use crate::kernels::{self, GemmProblem, Strategy};
 use crate::model::{DecodeEngine, Engine, Precision, SimEngine};
@@ -452,7 +453,11 @@ impl<'rt> Router<'rt> {
             DecodeLayer::from_decode_config(&cfg, batch).with_precision(self.precision);
         let machine = self.machine.clone();
         let tuner = self.tuner.get_or_insert_with(|| Tuner::new(machine));
-        for node in layer.gemm_nodes() {
+        // Walk the layer's op list through the StepOp trait: only
+        // GEMM-backed ops key the tune cache (a future op kind without a
+        // tunable schedule just yields `None` here).
+        for op in layer.gemm_nodes() {
+            let Some(node) = StepOp::gemm(&op) else { continue };
             if node.problem.validate().is_ok() {
                 tuner.resolve(&node.problem)?;
             }
@@ -497,10 +502,15 @@ impl<'rt> Router<'rt> {
         let mut retuned = 0usize;
         let mut defaulted = 0usize;
         let mut nodes = Vec::with_capacity(gemm_nodes.len());
-        for node in &gemm_nodes {
+        // The ladder walks the op list through the StepOp trait — ops
+        // without an underlying GEMM carry no tunable schedule and are
+        // not planned (none exist in today's layer graphs).
+        for op in &gemm_nodes {
+            let Some(node) = StepOp::gemm(op) else { continue };
+            let count = StepOp::count(op);
             if node.problem.validate().is_err() {
                 // Structurally unpriceable: no rung can serve a plan.
-                nodes.push(PlanNode { kind: node.kind, count: node.count, plan: None });
+                nodes.push(PlanNode { kind: node.kind, count, plan: None });
                 continue;
             }
             // Rungs 1/2: cache-only tuned lookup (the fast path).
@@ -528,7 +538,7 @@ impl<'rt> Router<'rt> {
                     plan = splitk_plan(&machine, &node.problem);
                 }
             }
-            nodes.push(PlanNode { kind: node.kind, count: node.count, plan });
+            nodes.push(PlanNode { kind: node.kind, count, plan });
         }
         // Cross-node gains stay cache-only: re-deriving a pair or
         // residency decision costs merged-trace simulations, which the

@@ -117,6 +117,45 @@ pub struct ServeReport {
     pub kv_idle: bool,
 }
 
+impl ServeReport {
+    /// Terminal-outcome tally: (completed, expired, failed).
+    pub fn outcome_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for r in &self.results {
+            match r.outcome {
+                Outcome::Completed => counts.0 += 1,
+                Outcome::Expired => counts.1 += 1,
+                Outcome::Failed => counts.2 += 1,
+            }
+        }
+        counts
+    }
+}
+
+impl crate::analysis::report::Report for ServeReport {
+    fn render(&self) -> String {
+        format!(
+            "kv pager: peak {} / {} pages, drained: {}\n",
+            self.kv_peak_pages, self.kv_capacity_pages, self.kv_idle
+        )
+    }
+
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let (completed, expired, failed) = self.outcome_counts();
+        Json::obj(vec![
+            ("requests", Json::num(self.results.len() as f64)),
+            ("completed", Json::num(completed as f64)),
+            ("expired", Json::num(expired as f64)),
+            ("failed", Json::num(failed as f64)),
+            ("horizon_us", Json::num(self.horizon_us as f64)),
+            ("kv_peak_pages", Json::num(self.kv_peak_pages as f64)),
+            ("kv_capacity_pages", Json::num(self.kv_capacity_pages as f64)),
+            ("kv_idle", Json::Bool(self.kv_idle)),
+        ])
+    }
+}
+
 /// Per-slot state inside the continuous-batching serve loop (owned —
 /// a request lives in its slot from refill to terminal outcome).
 struct ServeSlot {
@@ -180,7 +219,7 @@ fn finalize_serve_slot(
 
 /// Analytic vector-pass cost (ns) of one causal prefill chunk: every
 /// non-GEMM node of the chunk graph priced by the vecpass bandwidth
-/// model — the same pricing `simulate_prefill_step_with` charges them.
+/// model — the same pricing `StepSim::prefill` charges them.
 pub fn prefill_vector_ns(machine: &MachineConfig, step: &PrefillStep) -> f64 {
     step.nodes()
         .iter()

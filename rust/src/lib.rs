@@ -30,6 +30,14 @@
 //! and [`util`] (JSON, CLI, f16, PRNG, stats — the build environment is
 //! fully offline, so these are implemented here rather than pulled in).
 
+// The deprecated `simulate_step*` shims (analysis::layer) stay callable
+// for one PR, but nothing inside the crate may use them: every internal
+// caller goes through `analysis::stepsim::StepSim`.  `#[deprecated]`
+// fires for same-crate use, so this turns any backslide into a build
+// error (the shims' own bodies are exempt — items inside a deprecated
+// item don't lint).
+#![deny(deprecated)]
+
 pub mod analysis;
 pub mod ascend;
 pub mod bench;

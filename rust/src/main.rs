@@ -17,6 +17,10 @@
 //! * `serve-load` — continuous-batching serve: Poisson/trace arrivals,
 //!   chunked prefill interleaved with decode, KV paging, SLO metrics.
 
+#![deny(deprecated)]
+
+use ascend_w4a16::analysis::report::Report;
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::analysis::{layer, report, residency, roofline, sensitivity, timeline, traffic};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{
@@ -32,6 +36,7 @@ use ascend_w4a16::runtime::{HostTensor, Manifest, Runtime};
 use ascend_w4a16::tensor::MatF32;
 use ascend_w4a16::tune::{self, Tuner};
 use ascend_w4a16::util::cli::Args;
+use ascend_w4a16::util::pool;
 use ascend_w4a16::util::prng::Rng;
 use ascend_w4a16::util::stats;
 use ascend_w4a16::workload::{self, DecodeLayer, DecodeStep, RequestGenerator};
@@ -165,7 +170,7 @@ fn machine() -> MachineConfig {
 /// The `--precision` flag shared by simulate/layer/tune/serve-load
 /// (default: the paper's W4A16 kernel).
 fn cli_precision(args: &Args) -> anyhow::Result<Precision> {
-    Precision::from_name(args.get_or("precision", "w4a16"))
+    args.get_choice("precision", Precision::CHOICES, Precision::W4A16)
 }
 
 fn cmd_machine() -> anyhow::Result<()> {
@@ -251,9 +256,12 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_usize("batch", 8)?;
     let layers = args.get_usize("layers", 32)?;
     let strategy = Strategy::from_name(args.get_or("strategy", "auto"))?;
-    let overlap = layer::OverlapMode::from_name(args.get_or("overlap", "auto"))?;
-    let residency_mode =
-        residency::ResidencyMode::from_name(args.get_or("residency", "auto"))?;
+    let overlap = args.get_choice("overlap", layer::OverlapMode::CHOICES, layer::OverlapMode::Auto)?;
+    let residency_mode = args.get_choice(
+        "residency",
+        residency::ResidencyMode::CHOICES,
+        residency::ResidencyMode::Auto,
+    )?;
     let (geometry, preset_moe) = match args.get("model") {
         Some(name) => (llm::layer_geometry(name)?, llm::moe_geometry(name)),
         None => {
@@ -291,8 +299,11 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
     let rep = if strategy == Strategy::Auto {
         let path = args.get_or("tune-cache", tune::DEFAULT_CACHE_FILE);
         let mut tuner = Tuner::load(m.clone(), path)?;
-        let rep =
-            layer::simulate_step_tuned_with(&m, &step, overlap, residency_mode, &mut tuner)?;
+        let rep = StepSim::new(&m, &step)
+            .overlap(overlap)
+            .residency(residency_mode)
+            .tuner(&mut tuner)
+            .run()?;
         if tuner.searches > 0 {
             tuner.save()?;
             println!("auto: searched {} shapes (cache warmed at {path})\n", tuner.searches);
@@ -301,9 +312,13 @@ fn cmd_layer(args: &Args) -> anyhow::Result<()> {
         }
         rep
     } else {
-        layer::simulate_step_with(&m, &step, overlap, residency_mode, |p| {
-            Ok((strategy, kernels::select_tiling(&m, p, strategy)?, layer::Resolution::Heuristic))
-        })?
+        StepSim::new(&m, &step)
+            .overlap(overlap)
+            .residency(residency_mode)
+            .resolver(|p| {
+                Ok((strategy, kernels::select_tiling(&m, p, strategy)?, layer::Resolution::Heuristic))
+            })
+            .run()?
     };
 
     print!("{}", layer::render_step(&rep, layers));
@@ -405,18 +420,24 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         "{:<28} {:>12} {:>10} {:>10} {:>9}",
         "shape", "winner", "tuned_us", "splitk_us", "speedup"
     );
+    // Tune-cache misses search in parallel (`resolve_many`), and the
+    // Split-K reference sims price in parallel too; rows still print in
+    // sweep order, so the report is byte-identical to the serial loop.
+    let entries = tuner.resolve_many(&problems)?;
+    let splitk_ns = pool::par_map(&problems, |p| -> anyhow::Result<f64> {
+        Ok(sim.run(&kernels::schedule(&m, p, Strategy::SplitK)?)?.total_ns)
+    });
     let mut speedups = Vec::new();
-    for p in &problems {
-        let e = tuner.resolve(p)?;
-        let sk = sim.run(&kernels::schedule(&m, p, Strategy::SplitK)?)?;
-        let speedup = sk.total_ns / e.total_ns;
+    for ((p, e), sk_ns) in problems.iter().zip(&entries).zip(splitk_ns) {
+        let sk_ns = sk_ns?;
+        let speedup = sk_ns / e.total_ns;
         speedups.push(speedup);
         println!(
             "{:<28} {:>12} {:>10.2} {:>10.2} {:>8.2}x",
             format!("m{}_n{}_k{}", p.m, p.n, p.k),
             e.strategy.name(),
             e.total_ns / 1e3,
-            sk.total_ns / 1e3,
+            sk_ns / 1e3,
             speedup,
         );
     }
@@ -718,10 +739,7 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
         if tally.is_empty() { "none".to_string() } else { tally },
         report.horizon_us
     );
-    println!(
-        "kv pager: peak {} / {} pages, drained: {}",
-        report.kv_peak_pages, report.kv_capacity_pages, report.kv_idle
-    );
+    print!("{}", Report::render(&report));
     let snapshot = server.metrics.snapshot();
     println!(
         "goodput: {:.1} generated tokens/s (virtual)",

@@ -26,6 +26,10 @@ pub enum Precision {
 }
 
 impl Precision {
+    /// Accepted `--precision` spellings, first alias canonical.
+    pub const CHOICES: &'static [(&'static [&'static str], Precision)] =
+        &[(&["w4a16"], Precision::W4A16), (&["w4a8"], Precision::W4A8)];
+
     pub fn name(&self) -> &'static str {
         match self {
             Precision::W4A16 => "w4a16",
@@ -34,11 +38,13 @@ impl Precision {
     }
 
     pub fn from_name(name: &str) -> anyhow::Result<Precision> {
-        Ok(match name.to_ascii_lowercase().as_str() {
-            "w4a16" => Precision::W4A16,
-            "w4a8" => Precision::W4A8,
-            other => anyhow::bail!("unknown precision '{other}' (expected w4a16 or w4a8)"),
-        })
+        let lower = name.to_ascii_lowercase();
+        for (aliases, precision) in Self::CHOICES {
+            if aliases.contains(&lower.as_str()) {
+                return Ok(*precision);
+            }
+        }
+        anyhow::bail!("unknown precision '{name}' (expected w4a16 or w4a8)")
     }
 
     /// Bits per packed weight element (both members pack INT4).

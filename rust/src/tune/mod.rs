@@ -111,6 +111,53 @@ impl Tuner {
         Ok(result.best)
     }
 
+    /// Resolve a whole problem list at once, running the live searches on
+    /// the worker pool (the tune-sweep seeding path).  Counter and cache
+    /// semantics replicate a serial `resolve` loop exactly: duplicate
+    /// shapes behind one miss count as hits, entries land in the cache in
+    /// first-appearance order, and the first failing search (by input
+    /// index) reports its error.
+    pub fn resolve_many(&mut self, problems: &[GemmProblem]) -> anyhow::Result<Vec<TunedEntry>> {
+        use std::collections::{HashMap, HashSet};
+        use crate::util::pool;
+
+        // Pass 1: classify in input order against the evolving key set —
+        // exactly which problems a serial loop would have searched.
+        let mut pending: HashSet<String> = HashSet::new();
+        let mut misses: Vec<GemmProblem> = Vec::new();
+        for p in problems {
+            let key = self.key(p);
+            if self.cache.get(&key).is_none() && pending.insert(key) {
+                misses.push(*p);
+            }
+        }
+        // Pass 2: the searches are independent pure functions of
+        // (machine, problem) — fan them out.
+        let machine = self.machine.clone();
+        let searched = pool::par_map(&misses, |p| search::search(&machine, p));
+        let mut found: HashMap<String, anyhow::Result<TunedEntry>> = HashMap::new();
+        for (p, result) in misses.iter().zip(searched) {
+            found.insert(self.key(p), result.map(|r| r.best));
+        }
+        // Pass 3: replay the serial loop's observable effects in order.
+        let mut out = Vec::with_capacity(problems.len());
+        for p in problems {
+            let key = self.key(p);
+            if let Some(e) = self.cache.get(&key) {
+                self.hits += 1;
+                out.push(*e);
+                continue;
+            }
+            let best = found
+                .remove(&key)
+                .ok_or_else(|| anyhow::anyhow!("resolve_many missed key {key}"))??;
+            self.searches += 1;
+            self.cache.insert(key, best);
+            out.push(best);
+        }
+        Ok(out)
+    }
+
     /// Resolve a strategy selector: `Auto` goes through the cache/search,
     /// concrete strategies keep their heuristic tiling.
     pub fn resolve_strategy(
@@ -408,6 +455,33 @@ mod tests {
         };
         tuner.cache.insert(key, flipped);
         assert_eq!(tuner.lookup_residency(&layer), None, "stale plan must not serve");
+    }
+
+    #[test]
+    fn resolve_many_matches_a_serial_resolve_loop() {
+        let problems = vec![
+            GemmProblem::new(8, 512, 16384),
+            GemmProblem::new(8, 2048, 8192),
+            // Padded-M alias of the first shape: a serial loop counts it
+            // as a hit (the first resolve already filled the cache).
+            GemmProblem::new(3, 512, 16384),
+            GemmProblem::new(8, 512, 16384),
+        ];
+        let mut serial = Tuner::new(machine());
+        let expected: Vec<TunedEntry> =
+            problems.iter().map(|p| serial.resolve(p).unwrap()).collect();
+
+        let mut pooled = Tuner::new(machine());
+        let got = pooled.resolve_many(&problems).unwrap();
+        assert_eq!(got, expected);
+        assert_eq!((pooled.hits, pooled.searches), (serial.hits, serial.searches));
+        assert_eq!((pooled.hits, pooled.searches), (2, 2));
+
+        // A warm cache serves everything without a search.
+        let again = pooled.resolve_many(&problems).unwrap();
+        assert_eq!(again, expected);
+        assert_eq!(pooled.searches, 2);
+        assert_eq!(pooled.hits, 2 + problems.len());
     }
 
     #[test]

@@ -75,6 +75,30 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
         }
     }
+
+    /// Parse an enumerated `--name` option against alias groups (the
+    /// first alias of each group is canonical).  One shared error message
+    /// lists every accepted spelling — the `--overlap` / `--residency` /
+    /// `--precision` options all route through here so the CLI rejects
+    /// unknown values identically.
+    pub fn get_choice<T: Copy>(
+        &self,
+        name: &str,
+        choices: &[(&[&str], T)],
+        default: T,
+    ) -> anyhow::Result<T> {
+        let Some(v) = self.get(name) else {
+            return Ok(default);
+        };
+        let lower = v.to_ascii_lowercase();
+        for (aliases, value) in choices {
+            if aliases.contains(&lower.as_str()) {
+                return Ok(*value);
+            }
+        }
+        let canonical: Vec<&str> = choices.iter().map(|(aliases, _)| aliases[0]).collect();
+        anyhow::bail!("--{name} must be one of {} (got '{v}')", canonical.join("|"))
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +142,24 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("x --batch nope");
         assert!(a.get_usize("batch", 1).is_err());
+    }
+
+    const MODES: &[(&[&str], u8)] = &[(&["fast", "f"], 0), (&["slow"], 1)];
+
+    #[test]
+    fn choice_resolves_aliases_and_defaults() {
+        let a = parse("x --mode f");
+        assert_eq!(a.get_choice("mode", MODES, 9).unwrap(), 0);
+        let a = parse("x --mode SLOW");
+        assert_eq!(a.get_choice("mode", MODES, 9).unwrap(), 1);
+        let a = parse("x");
+        assert_eq!(a.get_choice("mode", MODES, 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn choice_rejects_with_the_valid_list() {
+        let a = parse("x --mode warp");
+        let err = a.get_choice("mode", MODES, 9).unwrap_err().to_string();
+        assert_eq!(err, "--mode must be one of fast|slow (got 'warp')");
     }
 }

@@ -9,6 +9,7 @@
 pub mod cli;
 pub mod f16;
 pub mod json;
+pub mod pool;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

@@ -1,0 +1,105 @@
+//! Minimal deterministic fork-join helper (rayon is unavailable offline).
+//!
+//! `par_map` fans a read-only closure over a slice on scoped OS threads
+//! and merges the results **in index order**, so callers observe exactly
+//! the output a serial `iter().map().collect()` would produce — the
+//! contract the analysis layer's bit-identity guarantees rest on.  Work
+//! is claimed from a shared atomic counter, so uneven item costs load-
+//! balance without any affinity to which thread computed what.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker threads `par_map` would use for `items` work items: one per
+/// available core, never more than the item count, and 1 when the
+/// parallelism query fails (serial fallback).
+pub fn worker_count(items: usize) -> usize {
+    if items <= 1 {
+        return items.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items)
+}
+
+/// Map `f` over `items` on up to [`worker_count`] scoped threads,
+/// returning results in input order.  With one worker (or one item) this
+/// degenerates to a plain serial map — same closure, same order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = worker_count(items.len());
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, R)> = Vec::with_capacity(items.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        out.push((i, f(&items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            tagged.extend(h.join().expect("pool worker panicked"));
+        }
+    });
+    tagged.sort_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        // Uneven per-item work so threads interleave claims.
+        let out = par_map(&items, |&i| {
+            let mut acc = i as u64;
+            for _ in 0..(i % 7) * 1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            let _ = acc;
+            i * 3
+        });
+        assert_eq!(out, items.iter().map(|&i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[41u32], |&x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        let items: Vec<f64> = (1..64).map(|i| i as f64 * 0.37).collect();
+        let a = par_map(&items, |&x| (x.sin() * 1e9).to_bits());
+        let b = par_map(&items, |&x| (x.sin() * 1e9).to_bits());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_count_is_bounded_by_items() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        assert!(worker_count(4) <= 4);
+        assert!(worker_count(1000) >= 1);
+    }
+}

@@ -7,6 +7,7 @@
 
 use ascend_w4a16::analysis::coschedule;
 use ascend_w4a16::analysis::layer::{self, forced_split_resolver, OverlapMode};
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::ascend::{ComputeOp, MachineConfig, Simulator};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{self, splitk, GemmProblem, ReduceMode};
@@ -135,11 +136,14 @@ fn exact_never_slower_than_sequential_on_random_geometries() {
         if step.layer.validate().is_err() {
             return (false, format!("illegal geometry {:?}", step.layer.geometry));
         }
-        let rep =
-            match layer::simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m)) {
-                Ok(rep) => rep,
-                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
-            };
+        let rep = match StepSim::new(&m, &step)
+            .overlap(OverlapMode::Exact)
+            .resolver(forced_split_resolver(&m))
+            .run()
+        {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
         if rep.served_ns() != rep.exact_ns {
             return (false, "Exact mode must serve exact_ns".into());
         }
@@ -160,17 +164,19 @@ fn auto_never_slower_than_ledger_on_random_geometries() {
         if step.layer.validate().is_err() {
             return (false, format!("illegal geometry {:?}", step.layer.geometry));
         }
-        let auto =
-            match layer::simulate_step(&m, &step, OverlapMode::Auto, forced_split_resolver(&m)) {
-                Ok(rep) => rep,
-                Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
-            };
-        let ledger = match layer::simulate_step(
-            &m,
-            &step,
-            OverlapMode::Overlapped,
-            forced_split_resolver(&m),
-        ) {
+        let auto = match StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(forced_split_resolver(&m))
+            .run()
+        {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        let ledger = match StepSim::new(&m, &step)
+            .overlap(OverlapMode::Overlapped)
+            .resolver(forced_split_resolver(&m))
+            .run()
+        {
             Ok(rep) => rep,
             Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
         };
@@ -255,7 +261,10 @@ fn paper_sweep_exact_never_slower_than_ledger_and_strictly_faster_somewhere() {
         }
     }
     for (tag, step) in &steps {
-        let rep = layer::simulate_step_tuned(&m, step, OverlapMode::Auto, &mut tuner)
+        let rep = StepSim::new(&m, step)
+            .overlap(OverlapMode::Auto)
+            .tuner(&mut tuner)
+            .run()
             .unwrap_or_else(|e| panic!("{tag}: {e}"));
         assert!(
             rep.exact_ns <= rep.overlapped_ns * 1.000001,
@@ -270,7 +279,10 @@ fn paper_sweep_exact_never_slower_than_ledger_and_strictly_faster_somewhere() {
     // legitimately pick S=1 nodes with nothing to overlap).
     let (_, geom, moe) = paper_moe_geometries().into_iter().next().expect("a MoE preset");
     let step = DecodeStep::new(DecodeLayer::new(geom, 8).with_moe(moe), 2048, 56);
-    let rep = layer::simulate_step(&m, &step, OverlapMode::Exact, forced_split_resolver(&m))
+    let rep = StepSim::new(&m, &step)
+        .overlap(OverlapMode::Exact)
+        .resolver(forced_split_resolver(&m))
+        .run()
         .unwrap();
     let strict = rep.ledger.iter().any(|pair| {
         let producer_k_dominant = match &rep.nodes[pair.producer] {

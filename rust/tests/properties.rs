@@ -3,7 +3,8 @@
 //! pipelined-reduce, tune-cache and cross-node overlap-ledger invariants
 //! of DESIGN.md §10–§11.
 
-use ascend_w4a16::analysis::layer::{self, OverlapMode, Resolution, StepNodeReport};
+use ascend_w4a16::analysis::layer::{OverlapMode, Resolution, StepNodeReport};
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::coordinator::{BatchPolicy, Batcher, DecodeRequest};
 use ascend_w4a16::kernels::tiling::Tiling;
 use ascend_w4a16::kernels::{self, chunked, splitk, GemmProblem, ReduceMode, Strategy};
@@ -386,18 +387,22 @@ fn overlap_ledger_prices_each_node_once_and_never_double_books() {
         }
         let strategy = *rng.choose(&[Strategy::SplitK, Strategy::Chunked]);
         let force_split = rng.usize_range(0, 1) == 1;
-        let rep = match layer::simulate_step(&m, &step, OverlapMode::Auto, |p| {
-            let mut t = kernels::select_tiling(&m, p, strategy)?;
-            // Half the cases force a K split so nodes carry a reduce
-            // phase and the ledger is non-trivially exercised.
-            if force_split {
-                let split = Tiling { splits: t.splits.max(2), ..t };
-                if split.validate(&m, p).is_ok() {
-                    t = split;
+        let rep = match StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(|p| {
+                let mut t = kernels::select_tiling(&m, p, strategy)?;
+                // Half the cases force a K split so nodes carry a reduce
+                // phase and the ledger is non-trivially exercised.
+                if force_split {
+                    let split = Tiling { splits: t.splits.max(2), ..t };
+                    if split.validate(&m, p).is_ok() {
+                        t = split;
+                    }
                 }
-            }
-            Ok((strategy, t, Resolution::Heuristic))
-        }) {
+                Ok((strategy, t, Resolution::Heuristic))
+            })
+            .run()
+        {
             Ok(rep) => rep,
             Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
         };

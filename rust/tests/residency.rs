@@ -5,7 +5,8 @@
 //! served, never *how many* move — on randomized dense and MoE decode
 //! geometries.
 
-use ascend_w4a16::analysis::layer::{self, forced_split_resolver, OverlapMode, Resolution};
+use ascend_w4a16::analysis::layer::{forced_split_resolver, OverlapMode, Resolution};
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::analysis::residency::{
     self, carry_weights, pin_budget_bytes, ResidencyMode,
 };
@@ -59,13 +60,12 @@ fn pinning_never_exceeds_capacity_property() {
         if step.layer.validate().is_err() {
             return (false, format!("illegal geometry {:?}", step.layer.geometry));
         }
-        let rep = match layer::simulate_step_with(
-            &m,
-            &step,
-            OverlapMode::Sequential,
-            ResidencyMode::Auto,
-            fused(&m),
-        ) {
+        let rep = match StepSim::new(&m, &step)
+            .overlap(OverlapMode::Sequential)
+            .residency(ResidencyMode::Auto)
+            .resolver(fused(&m))
+            .run()
+        {
             Ok(rep) => rep,
             Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
         };
@@ -96,16 +96,11 @@ fn resident_plan_never_slower_than_pr4_auto_property() {
         }
         for use_fused in [true, false] {
             let run = |mode: ResidencyMode| {
+                let sim = StepSim::new(&m, &step).overlap(OverlapMode::Auto).residency(mode);
                 if use_fused {
-                    layer::simulate_step_with(&m, &step, OverlapMode::Auto, mode, fused(&m))
+                    sim.resolver(fused(&m)).run()
                 } else {
-                    layer::simulate_step_with(
-                        &m,
-                        &step,
-                        OverlapMode::Auto,
-                        mode,
-                        forced_split_resolver(&m),
-                    )
+                    sim.resolver(forced_split_resolver(&m)).run()
                 }
             };
             let without = match run(ResidencyMode::Off) {
@@ -199,14 +194,12 @@ fn residency_composes_with_chain_level_overlap() {
     let m = machine();
     let geom = LayerGeometry::mha(2048, 8192);
     let step = DecodeStep::new(DecodeLayer::new(geom, 8), 2048, DecodeStep::default_heads(&geom));
-    let rep = layer::simulate_step_with(
-        &m,
-        &step,
-        OverlapMode::Exact,
-        ResidencyMode::Auto,
-        forced_split_resolver(&m),
-    )
-    .unwrap();
+    let rep = StepSim::new(&m, &step)
+        .overlap(OverlapMode::Exact)
+        .residency(ResidencyMode::Auto)
+        .resolver(forced_split_resolver(&m))
+        .run()
+        .unwrap();
     assert!(rep.exact_ns <= rep.sequential_ns * 1.000001);
     assert!(rep.served_ns() <= rep.exact_ns * 1.000001);
     let plan = rep.residency.as_ref().unwrap();

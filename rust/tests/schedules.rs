@@ -2,6 +2,7 @@
 //! executable assertions, across the whole shape table.
 
 use ascend_w4a16::analysis::layer::{self, OverlapMode};
+use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator, Unit};
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{
@@ -258,9 +259,11 @@ fn auto_overlap_never_slower_than_sequential_across_paper_models() {
         // phase: the never-slower guarantee must hold for ANY tiling,
         // and the wide-N heuristic alone would pick S = 1 everywhere
         // (no reduce, nothing to overlap — a vacuous sweep).
-        let rep =
-            layer::simulate_step(&m, &step, OverlapMode::Auto, layer::forced_split_resolver(&m))
-                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let rep = StepSim::new(&m, &step)
+            .overlap(OverlapMode::Auto)
+            .resolver(layer::forced_split_resolver(&m))
+            .run()
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
         assert!(
             rep.served_ns() <= rep.sequential_ns * 1.000001,
             "{tag}: served {} slower than sequential {}",
@@ -316,17 +319,17 @@ fn residency_auto_never_slower_than_pr4_auto_across_paper_sweep() {
     }
     let mut strict_k_dominant_win = false;
     for (tag, step, k_dominant) in &steps {
-        let without =
-            layer::simulate_step_tuned(&m, step, OverlapMode::Auto, &mut tuner)
-                .unwrap_or_else(|e| panic!("{tag}: {e}"));
-        let with = layer::simulate_step_tuned_with(
-            &m,
-            step,
-            OverlapMode::Auto,
-            ResidencyMode::Auto,
-            &mut tuner,
-        )
-        .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let without = StepSim::new(&m, step)
+            .overlap(OverlapMode::Auto)
+            .tuner(&mut tuner)
+            .run()
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let with = StepSim::new(&m, step)
+            .overlap(OverlapMode::Auto)
+            .residency(ResidencyMode::Auto)
+            .tuner(&mut tuner)
+            .run()
+            .unwrap_or_else(|e| panic!("{tag}: {e}"));
         assert!(
             with.served_ns() <= without.served_ns() * 1.000001,
             "{tag}: residency auto {} slower than PR-4 auto {}",

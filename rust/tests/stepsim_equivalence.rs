@@ -1,0 +1,252 @@
+//! Shim-equivalence harness for the `StepSim` migration (DESIGN.md §17):
+//! every deprecated `simulate_step*` free function must produce a
+//! bit-identical [`StepReport`] to the `StepSim` builder chain it
+//! forwards to — over randomized dense AND MoE geometries, every
+//! `OverlapMode` x `ResidencyMode` combination, heuristic and tuned
+//! resolvers, decode and prefill graphs.
+//!
+//! "Bit-identical" is checked three ways at once: the JSON document
+//! (Rust's `{}` f64 formatting is shortest-roundtrip, so string equality
+//! is bit equality), the rendered table, and `to_bits` on the four
+//! served totals plus the residency plan.  The deprecated entry points
+//! are exercised deliberately — this file is their one sanctioned
+//! caller for the deprecation PR.
+#![allow(deprecated)]
+
+use ascend_w4a16::analysis::layer::{self, forced_split_resolver, OverlapMode, Resolution, StepReport};
+use ascend_w4a16::analysis::report::Report;
+use ascend_w4a16::analysis::residency::ResidencyMode;
+use ascend_w4a16::analysis::stepsim::StepSim;
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
+use ascend_w4a16::model::llm::{LayerGeometry, MoeGeometry};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{DecodeLayer, DecodeStep, PrefillStep};
+
+type Assignment = (Strategy, kernels::tiling::Tiling, Resolution);
+
+fn machine() -> MachineConfig {
+    MachineConfig::ascend910()
+}
+
+/// Random legal decoder-layer geometry, sometimes MoE (same draw as
+/// `tests/coschedule.rs` / `tests/residency.rs`).
+fn random_step(rng: &mut ascend_w4a16::util::prng::Rng) -> DecodeStep {
+    let hidden = 128 * rng.usize_range(2, 24);
+    let ffn = 128 * rng.usize_range(2, 32);
+    let kv = 16 * rng.usize_range(1, hidden / 16);
+    let geometry = LayerGeometry { hidden, ffn, kv, group: 128 };
+    let batch = rng.usize_range(1, 64);
+    let mut layer = DecodeLayer::new(geometry, batch);
+    if rng.usize_range(0, 1) == 1 {
+        let experts = *rng.choose(&[4usize, 8, 64]);
+        let topk = (*rng.choose(&[1usize, 2])).min(experts);
+        layer = layer.with_moe(MoeGeometry { experts, topk, expert_ffn: ffn });
+    }
+    let kv_len = 128 * rng.usize_range(1, 32);
+    DecodeStep::new(layer, kv_len, DecodeStep::default_heads(&geometry))
+}
+
+/// Fixed fused-strategy resolver (exercises the non-split price path).
+fn fused(m: &MachineConfig) -> impl FnMut(&GemmProblem) -> anyhow::Result<Assignment> + '_ {
+    move |p| {
+        Ok((
+            Strategy::Fused,
+            kernels::select_tiling(m, p, Strategy::Fused)?,
+            Resolution::Heuristic,
+        ))
+    }
+}
+
+/// The bit-identity oracle: None if the reports agree, else a diff tag.
+fn report_diff(old: &StepReport, new: &StepReport) -> Option<String> {
+    if old.sequential_ns.to_bits() != new.sequential_ns.to_bits() {
+        return Some(format!("sequential {} != {}", old.sequential_ns, new.sequential_ns));
+    }
+    if old.overlapped_ns.to_bits() != new.overlapped_ns.to_bits() {
+        return Some(format!("overlapped {} != {}", old.overlapped_ns, new.overlapped_ns));
+    }
+    if old.exact_ns.to_bits() != new.exact_ns.to_bits() {
+        return Some(format!("exact {} != {}", old.exact_ns, new.exact_ns));
+    }
+    if old.served_ns().to_bits() != new.served_ns().to_bits() {
+        return Some(format!("served {} != {}", old.served_ns(), new.served_ns()));
+    }
+    match (&old.residency, &new.residency) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            if a.resident_ns.to_bits() != b.resident_ns.to_bits()
+                || a.baseline_ns.to_bits() != b.baseline_ns.to_bits()
+                || a.pins != b.pins
+                || a.pinned_bytes != b.pinned_bytes
+            {
+                return Some("residency plans differ".into());
+            }
+        }
+        _ => return Some("residency plan presence differs".into()),
+    }
+    if old.to_json().to_string() != new.to_json().to_string() {
+        return Some("json documents differ".into());
+    }
+    if old.render() != new.render() {
+        return Some("rendered tables differ".into());
+    }
+    None
+}
+
+const OVERLAPS: [OverlapMode; 4] = [
+    OverlapMode::Sequential,
+    OverlapMode::Overlapped,
+    OverlapMode::Exact,
+    OverlapMode::Auto,
+];
+const RESIDENCIES: [ResidencyMode; 2] = [ResidencyMode::Off, ResidencyMode::Auto];
+
+#[test]
+fn simulate_step_with_matches_stepsim_on_random_geometries() {
+    // The full grid — every overlap x residency combination, forced
+    // splits (reduce tails everywhere, co-scheduler live) — on random
+    // dense and MoE geometries.
+    let m = machine();
+    forall("shim == StepSim over the mode grid", 3, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        for mode in OVERLAPS {
+            for residency in RESIDENCIES {
+                let old = match layer::simulate_step_with(
+                    &m,
+                    &step,
+                    mode,
+                    residency,
+                    forced_split_resolver(&m),
+                ) {
+                    Ok(rep) => rep,
+                    Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+                };
+                let new = match StepSim::new(&m, &step)
+                    .overlap(mode)
+                    .residency(residency)
+                    .resolver(forced_split_resolver(&m))
+                    .run()
+                {
+                    Ok(rep) => rep,
+                    Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+                };
+                if let Some(diff) = report_diff(&old, &new) {
+                    return (false, format!("{mode:?}/{residency:?}: {diff}"));
+                }
+            }
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn simulate_step_matches_stepsim_default_residency() {
+    // `simulate_step` had no residency parameter; the builder's default
+    // must reproduce it exactly (residency Off).
+    let m = machine();
+    forall("simulate_step == StepSim default", 4, |rng| {
+        let step = random_step(rng);
+        if step.layer.validate().is_err() {
+            return (false, format!("illegal geometry {:?}", step.layer.geometry));
+        }
+        let mode = *rng.choose(&OVERLAPS);
+        let old = match layer::simulate_step(&m, &step, mode, fused(&m)) {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        let new = match StepSim::new(&m, &step).overlap(mode).resolver(fused(&m)).run() {
+            Ok(rep) => rep,
+            Err(e) => return (false, format!("{:?}: {e}", step.layer.geometry)),
+        };
+        if old.residency.is_some() {
+            return (false, "simulate_step must not plan residency".into());
+        }
+        match report_diff(&old, &new) {
+            Some(diff) => (false, format!("{mode:?}: {diff}")),
+            None => (true, String::new()),
+        }
+    });
+}
+
+#[test]
+fn tuned_shims_match_stepsim_with_fresh_tuners() {
+    // Two FRESH tuners, so both sides search the same cold cache and
+    // every node resolves with the same `Resolution::Searched` provenance.
+    let m = machine();
+    let geom = ascend_w4a16::model::llm::layer_geometry("llama32").unwrap();
+    let step = DecodeStep::new(DecodeLayer::new(geom, 8), 2048, DecodeStep::default_heads(&geom));
+    for mode in OVERLAPS {
+        let mut old_tuner = Tuner::new(m.clone());
+        let old = layer::simulate_step_tuned(&m, &step, mode, &mut old_tuner).unwrap();
+        let mut new_tuner = Tuner::new(m.clone());
+        let new =
+            StepSim::new(&m, &step).overlap(mode).tuner(&mut new_tuner).run().unwrap();
+        assert_eq!(report_diff(&old, &new), None, "{mode:?}");
+        assert_eq!(old_tuner.searches, new_tuner.searches, "{mode:?}: search counts differ");
+
+        let mut old_tuner = Tuner::new(m.clone());
+        let old =
+            layer::simulate_step_tuned_with(&m, &step, mode, ResidencyMode::Auto, &mut old_tuner)
+                .unwrap();
+        let mut new_tuner = Tuner::new(m.clone());
+        let new = StepSim::new(&m, &step)
+            .overlap(mode)
+            .residency(ResidencyMode::Auto)
+            .tuner(&mut new_tuner)
+            .run()
+            .unwrap();
+        assert_eq!(report_diff(&old, &new), None, "{mode:?} + residency");
+    }
+}
+
+#[test]
+fn prefill_shims_match_stepsim_prefill() {
+    // The prefill graph walks the same op list: causal attention scores,
+    // chunked projections, KV append — shim and builder must agree on
+    // every mode combination, heuristic and tuned.
+    let m = machine();
+    let geom = ascend_w4a16::model::llm::layer_geometry("llama32").unwrap();
+    let chunk = PrefillStep::new(DecodeLayer::new(geom, 256), 512, PrefillStep::default_heads(&geom));
+    for mode in OVERLAPS {
+        for residency in RESIDENCIES {
+            let old = layer::simulate_prefill_step_with(
+                &m,
+                &chunk,
+                mode,
+                residency,
+                forced_split_resolver(&m),
+            )
+            .unwrap();
+            let new = StepSim::prefill(&m, &chunk)
+                .overlap(mode)
+                .residency(residency)
+                .resolver(forced_split_resolver(&m))
+                .run()
+                .unwrap();
+            assert_eq!(report_diff(&old, &new), None, "{mode:?}/{residency:?}");
+        }
+    }
+    let mut old_tuner = Tuner::new(m.clone());
+    let old = layer::simulate_prefill_step_tuned_with(
+        &m,
+        &chunk,
+        OverlapMode::Auto,
+        ResidencyMode::Auto,
+        &mut old_tuner,
+    )
+    .unwrap();
+    let mut new_tuner = Tuner::new(m.clone());
+    let new = StepSim::prefill(&m, &chunk)
+        .overlap(OverlapMode::Auto)
+        .residency(ResidencyMode::Auto)
+        .tuner(&mut new_tuner)
+        .run()
+        .unwrap();
+    assert_eq!(report_diff(&old, &new), None, "tuned prefill");
+    assert_eq!(old_tuner.searches, new_tuner.searches);
+}
