@@ -183,6 +183,17 @@ SERVE_QUEUE_CAP = 12
 SERVE_REQUESTS = 48
 SERVE_SEED = 11
 SERVE_GAPS = [20_000.0, 2_000.0, 200.0, 20.0]
+# Armed preemption overload leg (mirrors benches/e2e_serve.rs): per-model
+# KV capacity + anti-starvation window chosen so that at the deep-overload
+# gap `auto` strictly beats `off` on both goodput and p99 TTFT, while at
+# the light gap the two policies are bit-identical (preemption never arms).
+PREEMPT_GAP = 50.0
+PREEMPT_LEG = {
+    "llama32": {"capacity_bytes": 300 << 20, "max_wait_us": 6_000,
+                "light_gap_us": 20_000.0},
+    "deepseek-moe": {"capacity_bytes": 192 << 20, "max_wait_us": 50_000,
+                     "light_gap_us": 100_000.0},
+}
 
 
 def bench_serve():
@@ -237,6 +248,71 @@ def bench_serve():
                 "kv_peak_pages": rep["kv_peak_pages"],
                 "kv_capacity_pages": rep["kv_capacity_pages"],
             })
+        # Armed preemption overload leg.  Light load first: with the same
+        # capped pager and batching window, off and auto must be
+        # bit-identical (nothing ever arms the preemption path).
+        leg = PREEMPT_LEG[model]
+
+        def leg_run(gap, policy):
+            arrivals = M.poisson_plan(SERVE_SEED, gap, SERVE_REQUESTS,
+                                      cfg["max_seq"])
+            return M.serve_load(cfg, planner, arrivals, SERVE_BATCH,
+                                SERVE_CHUNK, SERVE_QUEUE_CAP, preempt=policy,
+                                capacity_bytes=leg["capacity_bytes"],
+                                max_wait_us=leg["max_wait_us"])
+
+        light_off = leg_run(leg["light_gap_us"], "off")
+        light_auto = leg_run(leg["light_gap_us"], "auto")
+        assert light_off == light_auto, \
+            f"{model}: light-load serve must be preemption-invariant"
+        assert light_auto["preempted"] == 0
+        # Deep overload: auto must strictly beat off on goodput AND p99
+        # TTFT — the acceptance gate for the whole subsystem.
+        overload = {}
+        for policy in ("off", "auto"):
+            rep = leg_run(PREEMPT_GAP, policy)
+            assert rep["admitted"] == rep["completed"] + rep["shed"]
+            assert rep["preempted"] == rep["resumed"]
+            ttft = sorted(rep["ttft_us"])
+            gaps = sorted(rep["gap_us"])
+            horizon = rep["horizon_us"]
+            goodput = (rep["tokens_generated"] / (horizon / 1e6)
+                       if horizon > 0 else 0.0)
+            p99 = M.percentile(ttft, 0.99)
+            overload[policy] = (goodput, p99)
+            cells.append({
+                "model": f"{model}+preempt-{policy}",
+                "moe": cfg["moe"] is not None,
+                "mean_gap_us": PREEMPT_GAP,
+                "preempt": policy,
+                "max_wait_us": leg["max_wait_us"],
+                "goodput_tok_per_s": goodput,
+                "horizon_us": horizon,
+                "admitted": rep["admitted"],
+                "completed": rep["completed"],
+                "shed": rep["shed"],
+                "shed_queue_full": rep["shed_queue_full"],
+                "shed_kv_capacity": rep["shed_kv_capacity"],
+                "tokens_generated": rep["tokens_generated"],
+                "ttft_p50_us": M.percentile(ttft, 0.50),
+                "ttft_p99_us": p99,
+                "tok_gap_p50_us": M.percentile(gaps, 0.50),
+                "tok_gap_p99_us": M.percentile(gaps, 0.99),
+                "prefill_steps": rep["prefill_steps"],
+                "decode_steps": rep["decode_steps"],
+                "preempted": rep["preempted"],
+                "resumed": rep["resumed"],
+                "swap_bytes": rep["swap_bytes"],
+                "preempt_swap_us": rep["swap_us_sum"],
+                "recompute_ticks": rep["recompute_ticks"],
+                "preempt_recompute_us": rep["recompute_us_sum"],
+                "kv_peak_pages": rep["kv_peak_pages"],
+                "kv_capacity_pages": rep["kv_capacity_pages"],
+            })
+        assert overload["auto"][0] > overload["off"][0], \
+            f"{model}: auto goodput must strictly beat off at deep overload"
+        assert overload["auto"][1] < overload["off"][1], \
+            f"{model}: auto p99 TTFT must strictly beat off at deep overload"
     return {"bench": "e2e_serve", "batch": SERVE_BATCH, "chunk": SERVE_CHUNK,
             "queue_cap": SERVE_QUEUE_CAP, "requests": SERVE_REQUESTS,
             "seed": SERVE_SEED, "cells": cells}

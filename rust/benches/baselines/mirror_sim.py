@@ -1701,6 +1701,9 @@ def poisson_plan(seed, mean_gap_us, count, max_seq):
 
 DEFAULT_PAGE_BYTES = 2 << 20
 HBM_CAPACITY_BYTES = 32 << 30  # MachineConfig::ascend910
+HOST_LINK_BW = 64.0  # MachineConfig::ascend910 host_link_bw (bytes/ns)
+SERVE_MAX_WAIT_US = 50_000  # batcher::DEFAULT_MAX_WAIT_US
+DEFAULT_MAX_PREEMPTIONS = 2  # server::DEFAULT_MAX_PREEMPTIONS
 
 
 def kv_bytes_per_token(layers, kv_width):
@@ -1747,6 +1750,19 @@ class KvPager:
         self.reserved -= s[1]
         self.allocated -= s[2]
         return s[2]
+
+    def preempt(self, sid):
+        """Mirror of KvPager::preempt: drop pages AND reservation;
+        returns (pages, bytes)."""
+        s = self.seqs.pop(sid)
+        self.reserved -= s[1]
+        self.allocated -= s[2]
+        return s[2], s[2] * self.page_bytes
+
+    def try_resume(self, sid, resident_tokens, remaining_new, bytes_per_token):
+        """Mirror of KvPager::try_resume (= try_admit at the resume
+        footprint: resident + remaining == prompt + max_new)."""
+        return self.try_admit(sid, resident_tokens, remaining_new, bytes_per_token)
 
     def idle(self):
         return not self.seqs and self.allocated == 0 and self.reserved == 0
@@ -1832,6 +1848,22 @@ def decode_gemm_nodes(m, hidden, ffn, group, moe=None):
         nodes += [("moe_expert", (tokens, 2 * ef, h, group), active),
                   ("moe_expert", (tokens, h, ef, group), active)]
     return nodes
+
+
+def decode_gemm_weight_bytes(m, hidden, ffn, group, moe=None):
+    """Mirror of server::prefill_chunk_weight_bytes: packed-weight bytes
+    one chunk of width m streams (count * n*k/2 over the issued GEMMs —
+    active experts only on MoE layers)."""
+    return sum(count * (p[1] * p[2] // 2)
+               for _, p, count in decode_gemm_nodes(m, hidden, ffn, group, moe))
+
+
+def swap_one_way_us(bytes_):
+    """Mirror of server::swap_tick_us: virtual µs to move bytes across
+    the host link one way."""
+    if bytes_ == 0:
+        return 0
+    return max(int(math.ceil(bytes_ / HOST_LINK_BW / 1000.0)), 1)
 
 
 def overlap_pair_list(gemms):
@@ -1924,11 +1956,18 @@ def percentile(sorted_xs, q):
 
 # --- coordinator/server.rs: the serve event loop ---------------------------
 
-def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
+def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap,
+               preempt="off", max_preemptions=DEFAULT_MAX_PREEMPTIONS,
+               capacity_bytes=HBM_CAPACITY_BYTES,
+               max_wait_us=SERVE_MAX_WAIT_US):
     """Mirror of Server::serve_load on a warmed cache with no fault plan
     and no deadlines: one dict of the counters the e2e_serve bench
     reports.  cfg keys: hidden, layers, heads, ffn, max_seq, group, moe
-    (None or (experts, topk, expert_ffn))."""
+    (None or (experts, topk, expert_ffn)).  preempt mirrors
+    PreemptPolicy (off | recompute | swap | auto); under KV pressure the
+    admission path evicts LRU victims (least-recent tick, then shortest
+    generation, then lowest slot), parking them on a resume queue that
+    seats ahead of fresh arrivals."""
     hidden, layers = cfg["hidden"], cfg["layers"]
     heads = max(cfg["heads"], 1)
     ffn, max_seq, group = cfg["ffn"], cfg["max_seq"], cfg["group"]
@@ -1936,30 +1975,96 @@ def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
     chunk = max(chunk, 1)
     queue_cap = max(queue_cap, 1)
     bpt = kv_bytes_per_token(max(layers, 1), max(hidden, 1))
-    pager = KvPager(DEFAULT_PAGE_BYTES, HBM_CAPACITY_BYTES)
+    pager = KvPager(DEFAULT_PAGE_BYTES, capacity_bytes)
     served_ns, pinned = planner.layer_plan(
         decode_gemm_nodes(max(batch, 1), hidden, ffn, group, moe))
     decode_step_us = max(int(math.ceil(served_ns / 1000.0)), 1)
-    repin_tick_ns = float(pinned) / HBM_BW if pinned > 0 else 0.0
 
     slots = [None] * max(batch, 1)
     queue = []
+    parked = []  # (slot, mode, bytes) — mode in ("recompute", "swap")
     clock = 0
     next_arrival = 0
+    tick_seq = 0
+    # Pinned bytes displaced by prefill since the last decode tick —
+    # prices the churn-fraction repin (repin_decayed_ns).
+    evicted = 0
     met = {"admitted": 0, "completed": 0, "shed": 0,
            "shed_queue_full": 0, "shed_kv_capacity": 0,
            "tokens_generated": 0, "ttft_us": [], "gap_us": [],
            "prefill_steps": 0, "prefill_tokens": 0, "decode_steps": 0,
-           "repins": 0, "repin_ns_sum": 0.0}
+           "repins": 0, "repin_ns_sum": 0.0,
+           "preempted": 0, "resumed": 0, "swap_bytes": 0, "swap_us_sum": 0,
+           "recompute_ticks": 0, "recompute_us_sum": 0}
     last_was_prefill = False
-    needs_repin = False
 
     def remaining(s):
-        return s["prompt_len"] - 1 - s["prefilled"]
+        return s["target"] - s["prefilled"]
+
+    def price_recompute(resident_tokens):
+        # Mirror of Server::price_recompute_us: the exact chunked
+        # re-prefill bill of the resident prefix.
+        target = max(resident_tokens - 1, 0)
+        done = 0
+        total = 0
+        while done < target:
+            m = min(target - done, chunk)
+            gemm_ns, _ = planner.layer_plan(
+                decode_gemm_nodes(m, hidden, ffn, group, moe))
+            vec_ns = prefill_vector_ns(m, done, heads, hidden,
+                                       ffn, hidden, group, moe)
+            total += max(int(math.ceil((gemm_ns + vec_ns) / 1000.0)), 1)
+            done += m
+        return total
+
+    def preempt_victim():
+        # Mirror of Server::preempt_victim: LRU pick over decode-phase
+        # residents, free pages and reservation, choose the recovery
+        # path, park.
+        nonlocal clock
+        best = None
+        for i, s in enumerate(slots):
+            if (s is None or s["cycles"] >= max_preemptions
+                    or remaining(s) > 0):
+                continue
+            if best is None or ((s["last_tick"], s["generated"])
+                                < (slots[best]["last_tick"],
+                                   slots[best]["generated"])):
+                best = i
+        if best is None:
+            return False
+        s = slots[best]
+        slots[best] = None
+        _pages, bytes_ = pager.preempt(s["id"])
+        s["cycles"] += 1
+        swap1 = swap_one_way_us(bytes_)
+        if preempt == "recompute":
+            mode = "recompute"
+        elif preempt == "swap":
+            mode = "swap"
+        else:  # auto: swap pays the link twice (out now, in at resume)
+            resident = s["prompt_len"] + s["generated"]
+            mode = ("swap" if swap1 * 2 <= price_recompute(resident)
+                    else "recompute")
+        met["preempted"] += 1
+        if mode == "recompute":
+            s["recovering"] = True
+            s["target"] = max(s["prompt_len"] + s["generated"] - 1, 0)
+            s["prefilled"] = 0
+            s["position"] = 0
+        else:
+            clock += swap1
+            met["swap_bytes"] += bytes_
+            met["swap_us_sum"] += swap1
+        parked.append((s, mode, bytes_))
+        return True
 
     while True:
         # Admit every arrival at or before the clock (record_admitted,
         # queue-cap shed, conservative KV reservation, FIFO enqueue).
+        # Under KV pressure a non-off policy preempts LRU victims until
+        # the reservation fits — unless the request could never fit even
+        # on an empty pager, or every resident exhausted its budget.
         while next_arrival < len(arrivals) and arrivals[next_arrival][0] <= clock:
             at_us, prompt_len, max_new = arrivals[next_arrival]
             rid = next_arrival
@@ -1970,18 +2075,65 @@ def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
                 met["shed_queue_full"] += 1
                 continue
             if not pager.try_admit(rid, prompt_len, max_new, bpt):
-                met["shed"] += 1
-                met["shed_kv_capacity"] += 1
-                continue
+                worst = pager.pages_for(prompt_len + max_new, bpt)
+                admitted_kv = False
+                if preempt != "off" and worst <= pager.capacity_pages:
+                    while preempt_victim():
+                        if pager.try_admit(rid, prompt_len, max_new, bpt):
+                            admitted_kv = True
+                            break
+                if not admitted_kv:
+                    met["shed"] += 1
+                    met["shed_kv_capacity"] += 1
+                    continue
             queue.append({"id": rid, "prompt_len": prompt_len,
                           "max_new": max_new, "enqueued": at_us,
-                          "prefilled": 0, "position": 0, "generated": 0})
+                          "prefilled": 0, "target": prompt_len - 1,
+                          "position": 0, "generated": 0,
+                          "last_tick": tick_seq, "cycles": 0,
+                          "recovering": False})
         # (Deadline expiry paths are no-ops: the bench sets no deadline.)
-        # Refill free slots FIFO.
+        # Anti-starvation: every slot busy and the queue head out-waited
+        # the batching window — preempt one victim and seat the head
+        # (already holding its KV reservation) directly into the freed
+        # slot, ahead of the resume queue's refill priority.
+        if (preempt != "off"
+                and all(s is not None for s in slots) and queue
+                and clock - queue[0]["enqueued"] >= max_wait_us
+                and preempt_victim()):
+            head = queue.pop(0)
+            head["last_tick"] = tick_seq
+            slots[next(i for i, s in enumerate(slots) if s is None)] = head
+        # Refill free slots: resume queue first (first-fit FIFO), then
+        # fresh arrivals.
         for i in range(len(slots)):
-            if slots[i] is None and queue:
+            if slots[i] is not None:
+                continue
+            seated = False
+            for pi, (ps, mode, bytes_) in enumerate(parked):
+                resident = ps["prompt_len"] + ps["generated"]
+                rem = max(ps["max_new"] - ps["generated"], 0)
+                if pager.try_resume(ps["id"], resident, rem, bpt):
+                    parked.pop(pi)
+                    if mode == "swap":
+                        swap_in = swap_one_way_us(bytes_)
+                        clock += swap_in
+                        met["swap_bytes"] += bytes_
+                        met["swap_us_sum"] += swap_in
+                    met["resumed"] += 1
+                    ps["last_tick"] = tick_seq
+                    slots[i] = ps
+                    seated = True
+                    break
+            if seated:
+                continue
+            if queue:
                 slots[i] = queue.pop(0)
+                slots[i]["last_tick"] = tick_seq
+            else:
+                break
         if all(s is None for s in slots):
+            assert not parked, "idle slots must have drained the resume queue"
             if next_arrival < len(arrivals):
                 clock = max(clock, arrivals[next_arrival][0])
                 continue
@@ -1998,29 +2150,46 @@ def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
                 decode_gemm_nodes(m, hidden, ffn, group, moe))
             vec_ns = prefill_vector_ns(m, s["position"], heads, hidden,
                                        ffn, hidden, group, moe)
-            clock += max(int(math.ceil((gemm_ns + vec_ns) / 1000.0)), 1)
+            prefill_tick_us = max(int(math.ceil((gemm_ns + vec_ns) / 1000.0)), 1)
+            clock += prefill_tick_us
+            tick_seq += 1
+            # The chunk's streamed weights displace pinned decode
+            # residents, capped at the pinned set.
+            evicted = min(
+                evicted + decode_gemm_weight_bytes(m, hidden, ffn, group, moe),
+                pinned)
             s["prefilled"] += m
             s["position"] += m
+            s["last_tick"] = tick_seq
             met["prefill_steps"] += 1
             met["prefill_tokens"] += m
-            needs_repin = True
+            if s["recovering"]:
+                met["recompute_ticks"] += 1
+                met["recompute_us_sum"] += prefill_tick_us
+                if remaining(s) == 0:
+                    s["recovering"] = False
             last_was_prefill = True
         else:
             active = [i for i, s in enumerate(slots)
                       if s is not None and remaining(s) == 0]
             tick_start = clock
+            tick_seq += 1
             tick_us = decode_step_us
-            if needs_repin:
-                if repin_tick_ns > 0.0:
+            if evicted > 0 and pinned > 0:
+                # Churn-fraction repin (repin_decayed_ns): the surcharge
+                # scales with what the burst actually displaced.
+                repin_ns = float(min(evicted, pinned)) / HBM_BW
+                if repin_ns > 0.0:
                     met["repins"] += 1
-                    met["repin_ns_sum"] += repin_tick_ns
-                    tick_us += max(int(math.ceil(repin_tick_ns / 1000.0)), 1)
-                needs_repin = False
+                    met["repin_ns_sum"] += repin_ns
+                    tick_us += max(int(math.ceil(repin_ns / 1000.0)), 1)
+            evicted = 0
             clock += tick_us
             met["decode_steps"] += 1
             emitted = 0
             for i in active:
                 s = slots[i]
+                s["last_tick"] = tick_seq
                 s["position"] += 1
                 pager.grow(s["id"])
                 emitted += 1
@@ -2036,6 +2205,7 @@ def serve_load(cfg, planner, arrivals, batch, chunk, queue_cap):
             last_was_prefill = False
 
     assert pager.idle(), "kv pager must drain"
+    assert met["preempted"] == met["resumed"], "preemption conservation"
     met["horizon_us"] = clock
     met["kv_peak_pages"] = pager.peak
     met["kv_capacity_pages"] = pager.capacity_pages

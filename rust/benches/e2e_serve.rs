@@ -19,7 +19,10 @@
 
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::bench::section;
-use ascend_w4a16::coordinator::{BatchPolicy, Batcher, Router, ServeOptions, Server};
+use ascend_w4a16::coordinator::{
+    BatchPolicy, Batcher, MetricsSnapshot, PreemptPolicy, Router, ServeOptions, ServeReport,
+    Server,
+};
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
 use ascend_w4a16::tune::Tuner;
@@ -38,6 +41,35 @@ const REQUESTS: usize = 48;
 const SEED: u64 = 11;
 /// Mean arrival gaps (µs), spanning under- to over-capacity.
 const MEAN_GAP_US: [f64; 4] = [20_000.0, 2_000.0, 200.0, 20.0];
+/// Deep-overload arrival gap for the armed preemption leg (µs).
+const PREEMPT_GAP_US: f64 = 50.0;
+
+/// Per-model armed preemption leg (DESIGN.md §18): a KV capacity and
+/// anti-starvation window where deep overload separates `auto` from
+/// `off` on both goodput and p99 TTFT, while at the light gap the two
+/// policies are bit-identical (preemption never arms).  Mirrors
+/// `PREEMPT_LEG` in `baselines/generate_baselines.py`.
+struct PreemptLeg {
+    capacity_bytes: u64,
+    max_wait_us: u64,
+    light_gap_us: f64,
+}
+
+fn preempt_leg(spec: &ModelSpec) -> PreemptLeg {
+    if spec.cfg.moe_experts > 0 {
+        PreemptLeg {
+            capacity_bytes: 192 << 20,
+            max_wait_us: 50_000,
+            light_gap_us: 100_000.0,
+        }
+    } else {
+        PreemptLeg {
+            capacity_bytes: 300 << 20,
+            max_wait_us: 6_000,
+            light_gap_us: 20_000.0,
+        }
+    }
+}
 
 struct ModelSpec {
     name: &'static str,
@@ -214,6 +246,108 @@ fn bench_model(rt: &Runtime, machine: &MachineConfig, spec: &ModelSpec, cells: &
             ("kv_capacity_pages", Json::num(report.kv_capacity_pages as f64)),
         ]));
     }
+
+    // Armed preemption overload leg (DESIGN.md §18).  Light load first:
+    // with the same capped pager and batching window, `off` and `auto`
+    // must be bit-identical — nothing ever arms the preemption path.
+    let leg = preempt_leg(spec);
+    let leg_run = |gap: f64, policy: PreemptPolicy| -> (ServeReport, MetricsSnapshot) {
+        let plan = ArrivalPlan::poisson(SEED, gap, REQUESTS, spec.cfg.max_seq);
+        let mf = Manifest::load(&dir).unwrap();
+        let router = Router::new(rt, mf, spec.name).unwrap();
+        let batch_policy = BatchPolicy::new(router.batch_sizes())
+            .unwrap()
+            .with_max_wait_us(leg.max_wait_us);
+        let mut server = Server::new(router, Batcher::new(batch_policy));
+        let opts = ServeOptions::new(BATCH, CHUNK)
+            .with_queue_cap(QUEUE_CAP)
+            .with_kv_capacity_bytes(leg.capacity_bytes)
+            .with_preempt(policy);
+        let report = server.serve_load(&plan, &opts).expect("serve_load");
+        assert!(report.kv_idle, "kv pager must drain");
+        let snap = server.metrics.snapshot();
+        assert!(snap.outcomes_accounted(), "conservation violated: {snap:?}");
+        assert!(snap.sheds_accounted(), "typed sheds must close: {snap:?}");
+        assert!(snap.preemptions_accounted(), "preemption ledger must close: {snap:?}");
+        (report, snap)
+    };
+    let leg_cell = |model: &str, pol: &str, report: &ServeReport, snap: &MetricsSnapshot| -> Json {
+        Json::obj(vec![
+            ("model", Json::str(model)),
+            ("moe", Json::Bool(spec.cfg.moe_experts > 0)),
+            ("mean_gap_us", Json::num(PREEMPT_GAP_US)),
+            ("preempt", Json::str(pol)),
+            ("max_wait_us", Json::num(leg.max_wait_us as f64)),
+            (
+                "goodput_tok_per_s",
+                Json::num(snap.goodput_tokens_per_s(report.horizon_us)),
+            ),
+            ("horizon_us", Json::num(report.horizon_us as f64)),
+            ("admitted", Json::num(snap.requests_admitted as f64)),
+            ("completed", Json::num(snap.requests_completed as f64)),
+            ("shed", Json::num(snap.requests_shed as f64)),
+            (
+                "shed_queue_full",
+                Json::num(snap.shed_reasons.get("queue_full").copied().unwrap_or(0) as f64),
+            ),
+            (
+                "shed_kv_capacity",
+                Json::num(snap.shed_reasons.get("kv_capacity").copied().unwrap_or(0) as f64),
+            ),
+            ("tokens_generated", Json::num(snap.tokens_generated as f64)),
+            ("ttft_p50_us", Json::num(snap.serve_ttft_us.p50)),
+            ("ttft_p99_us", Json::num(snap.serve_ttft_us.p99)),
+            ("tok_gap_p50_us", Json::num(snap.serve_token_gap_us.p50)),
+            ("tok_gap_p99_us", Json::num(snap.serve_token_gap_us.p99)),
+            ("prefill_steps", Json::num(snap.prefill_steps as f64)),
+            ("decode_steps", Json::num(snap.decode_steps as f64)),
+            ("preempted", Json::num(snap.requests_preempted as f64)),
+            ("resumed", Json::num(snap.requests_resumed as f64)),
+            ("swap_bytes", Json::num(snap.swap_bytes as f64)),
+            ("preempt_swap_us", Json::num(snap.swap_us_sum as f64)),
+            ("recompute_ticks", Json::num(snap.recompute_ticks as f64)),
+            ("preempt_recompute_us", Json::num(snap.recompute_us_sum as f64)),
+            ("kv_peak_pages", Json::num(report.kv_peak_pages as f64)),
+            ("kv_capacity_pages", Json::num(report.kv_capacity_pages as f64)),
+        ])
+    };
+    let (light_off_rep, light_off_snap) = leg_run(leg.light_gap_us, PreemptPolicy::Off);
+    let (light_auto_rep, light_auto_snap) = leg_run(leg.light_gap_us, PreemptPolicy::Auto);
+    assert_eq!(light_auto_snap.requests_preempted, 0, "light load must not arm preemption");
+    assert_eq!(
+        leg_cell("light", "off", &light_off_rep, &light_off_snap).to_string(),
+        leg_cell("light", "off", &light_auto_rep, &light_auto_snap).to_string(),
+        "{}: light-load serve must be preemption-invariant",
+        spec.name,
+    );
+    let (off_rep, off_snap) = leg_run(PREEMPT_GAP_US, PreemptPolicy::Off);
+    let (auto_rep, auto_snap) = leg_run(PREEMPT_GAP_US, PreemptPolicy::Auto);
+    let goodput_off = off_snap.goodput_tokens_per_s(off_rep.horizon_us);
+    let goodput_auto = auto_snap.goodput_tokens_per_s(auto_rep.horizon_us);
+    println!(
+        "preempt leg gap={PREEMPT_GAP_US:.0} us  off goodput {goodput_off:>9.0} tok/s \
+         p99 {:>8.0} us  |  auto goodput {goodput_auto:>9.0} tok/s p99 {:>8.0} us  \
+         ({} preempted, {} swap B, {} recompute ticks)",
+        off_snap.serve_ttft_us.p99,
+        auto_snap.serve_ttft_us.p99,
+        auto_snap.requests_preempted,
+        auto_snap.swap_bytes,
+        auto_snap.recompute_ticks,
+    );
+    assert!(
+        goodput_auto > goodput_off,
+        "{}: auto goodput must strictly beat off at deep overload ({goodput_auto} vs {goodput_off})",
+        spec.name,
+    );
+    assert!(
+        auto_snap.serve_ttft_us.p99 < off_snap.serve_ttft_us.p99,
+        "{}: auto p99 TTFT must strictly beat off at deep overload ({} vs {})",
+        spec.name,
+        auto_snap.serve_ttft_us.p99,
+        off_snap.serve_ttft_us.p99,
+    );
+    cells.push(leg_cell(&format!("{}+preempt-off", spec.name), "off", &off_rep, &off_snap));
+    cells.push(leg_cell(&format!("{}+preempt-auto", spec.name), "auto", &auto_rep, &auto_snap));
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -843,6 +843,17 @@ pub fn repin_ns(machine: &MachineConfig, pinned_bytes: u64) -> f64 {
     pinned_bytes as f64 / machine.hbm_bw
 }
 
+/// Churn-decayed re-pin cost (DESIGN.md §18): only the fraction of the
+/// pinned set a prefill burst actually evicted re-streams.  The serve
+/// loop tracks the bytes each prefill tick pushed through L2 (the
+/// chunk's packed-weight traffic) and caps the accumulator at the pinned
+/// footprint, so the decayed surcharge is always ≤ the binary
+/// full-re-pin cost and equals it exactly at full churn — the LRU
+/// half-life the binary model over-charged light interleave with.
+pub fn repin_decayed_ns(machine: &MachineConfig, pinned_bytes: u64, evicted_bytes: u64) -> f64 {
+    repin_ns(machine, evicted_bytes.min(pinned_bytes))
+}
+
 /// Render the per-node table plus layer / step totals (GEMM chain only).
 pub fn render_layer(report: &LayerReport, layers: usize) -> String {
     report.render_scaled(layers)
@@ -867,6 +878,25 @@ pub fn step_json(report: &StepReport) -> Json {
 mod tests {
     use super::*;
     use crate::model::llm::{layer_geometry, moe_geometry};
+
+    #[test]
+    fn repin_decay_is_bounded_by_the_full_surcharge_and_exact_at_full_churn() {
+        let m = MachineConfig::ascend910();
+        crate::util::proptest::forall("repin decay <= full surcharge", 200, |rng| {
+            let pinned = rng.next_u64() % (1 << 30);
+            let evicted = rng.next_u64() % (1 << 31);
+            let decayed = repin_decayed_ns(&m, pinned, evicted);
+            let full = repin_ns(&m, pinned);
+            let bounded = decayed <= full && decayed >= 0.0;
+            // At (or past) full churn the decayed cost IS the full re-pin.
+            let exact = evicted < pinned || decayed == full;
+            (bounded && exact, format!("pinned={pinned} evicted={evicted}"))
+        });
+        // Zero churn pays nothing; partial churn pays the evicted fraction.
+        assert_eq!(repin_decayed_ns(&m, 1 << 20, 0), 0.0);
+        let half = repin_decayed_ns(&m, 1 << 20, 1 << 19);
+        assert!((half - repin_ns(&m, 1 << 19)).abs() < 1e-12);
+    }
 
     fn fixed(
         machine: &MachineConfig,

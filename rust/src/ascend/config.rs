@@ -53,6 +53,12 @@ pub struct MachineConfig {
     pub hbm_capacity_bytes: u64,
     /// Per-core MTE bandwidth cap (bytes/ns): one core cannot saturate HBM.
     pub mte_core_bw: f64,
+    /// Host-link (PCIe/HCCS to host DRAM) bandwidth in bytes/ns — the
+    /// channel KV pages cross when a preempted sequence is swapped out to
+    /// host memory and back (DESIGN.md §18).  Roughly an order of
+    /// magnitude below HBM, which is exactly why recompute-vs-swap is a
+    /// real pricing decision and not a foregone conclusion.
+    pub host_link_bw: f64,
     /// L2 residency retention factor in [0,1]: fraction of capacity that
     /// usefully survives between producer and consumer phases (conflict
     /// misses, other traffic).
@@ -96,6 +102,7 @@ impl MachineConfig {
             hbm_bw: 1200.0,           // 1.2 TB/s
             hbm_capacity_bytes: 32 << 30, // 32 GiB HBM2
             mte_core_bw: 500.0,       // 500 GB/s per core (L1 <-> L2/GM port)
+            host_link_bw: 64.0,       // 64 GB/s host link (PCIe4 x16 class)
             l2_retention: 0.90,
             dma_burst_bytes: 256.0,
             launch_ns: 5_000.0,
@@ -139,6 +146,10 @@ impl MachineConfig {
             self.hbm_capacity_bytes > self.l2_bytes,
             "HBM capacity must exceed the on-chip buffer"
         );
+        anyhow::ensure!(
+            self.host_link_bw > 0.0 && self.host_link_bw < self.hbm_bw,
+            "the host link must be slower than HBM (and positive)"
+        );
         Ok(())
     }
 }
@@ -172,6 +183,17 @@ mod tests {
         MachineConfig::ascend910().validate().unwrap();
         let mut bad = MachineConfig::ascend910();
         bad.l2_bw = 1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn host_link_is_slower_than_hbm_and_validated() {
+        let m = MachineConfig::ascend910();
+        assert!(m.host_link_bw > 0.0 && m.host_link_bw < m.hbm_bw);
+        let mut bad = MachineConfig::ascend910();
+        bad.host_link_bw = bad.hbm_bw;
+        assert!(bad.validate().is_err());
+        bad.host_link_bw = 0.0;
         assert!(bad.validate().is_err());
     }
 

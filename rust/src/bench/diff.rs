@@ -165,6 +165,17 @@ impl DiffReport {
 /// Wall-clock cells (`*wall*`, the `sim_perf` serial-vs-pooled timings)
 /// measure the HOST machine, not the simulated NPU — they vary with CI
 /// hardware and load and must never gate.
+///
+/// The preemption-leg cells (DESIGN.md §18) gate on their *overhead*
+/// columns: `preempt_swap_us` and `preempt_recompute_us` are virtual
+/// microseconds the policy spent recovering victims — lower is strictly
+/// better at a fixed leg config, so they gate like any latency cell.
+/// The *ledger* columns (`preempted`, `resumed`, `swap_bytes`,
+/// `recompute_ticks`) are event counts with no time suffix and never
+/// gate — a policy change legitimately moves how often preemption fires;
+/// the cost of firing is what must not regress.  `max_wait_us` is the
+/// leg's anti-starvation window — a config knob echoed into the cell for
+/// self-description, not a measurement — and is excluded by name.
 pub fn is_gated_time_cell(key: &str) -> bool {
     let timed = key.ends_with("_ns") || key.ends_with("_us");
     let ambiguous = key.contains("gain")
@@ -174,7 +185,8 @@ pub fn is_gated_time_cell(key: &str) -> bool {
         || key.contains("merged")
         || key.contains("barrier")
         || key.contains("resident")
-        || key.contains("wall");
+        || key.contains("wall")
+        || key.contains("max_wait");
     timed && !ambiguous
 }
 
@@ -396,6 +408,31 @@ mod tests {
         let base = doc(100.0, Some(("w4a8_speedup", 1.4)));
         let cur = doc(100.0, Some(("w4a8_speedup", 1.1)));
         assert!(diff(&base, &cur, DEFAULT_THRESHOLD).gate_passes());
+    }
+
+    #[test]
+    fn preemption_cells_classify_as_designed() {
+        // Recovery-overhead columns are simulated time and gate; ledger
+        // counts and the echoed config knob never do.
+        assert!(is_gated_time_cell("preempt_swap_us"));
+        assert!(is_gated_time_cell("preempt_recompute_us"));
+        assert!(!is_gated_time_cell("preempted"));
+        assert!(!is_gated_time_cell("resumed"));
+        assert!(!is_gated_time_cell("swap_bytes"));
+        assert!(!is_gated_time_cell("recompute_ticks"));
+        assert!(!is_gated_time_cell("max_wait_us"));
+        // A >2% jump in the recompute bill trips the gate on its own...
+        let base = doc(100.0, Some(("preempt_recompute_us", 400.0)));
+        let cur = doc(100.0, Some(("preempt_recompute_us", 450.0)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!r.gate_passes());
+        assert_eq!(r.regressions[0].path, "cells[0].preempt_recompute_us");
+        // ...while a 10x swing in the preemption ledger passes untouched.
+        let base = doc(100.0, Some(("swap_bytes", 4.0e6)));
+        let cur = doc(100.0, Some(("swap_bytes", 4.0e7)));
+        let r = diff(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(r.gate_passes(), "{}", r.render());
+        assert_eq!(r.checked, 1, "only step_us gates");
     }
 
     #[test]

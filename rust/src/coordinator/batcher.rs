@@ -143,10 +143,25 @@ impl Batcher {
     /// Backpressure hint for a shed at the current backlog: queue depth
     /// times the observed mean step time (>= 1µs), falling back to one
     /// max-wait window before any step has completed.
-    fn shed_retry_after_us(&self) -> u64 {
+    pub fn shed_retry_after_us(&self) -> u64 {
         match self.mean_step_us() {
             Some(mean) => (self.queue.len() as u64).saturating_mul(mean).max(1),
             None => self.policy.max_wait_us.max(1),
+        }
+    }
+
+    /// Backpressure hint for a `kv_capacity` shed: the expected next page
+    /// release.  The closest-to-done in-flight request frees its pages
+    /// (and its worst-case reservation) in roughly its remaining tokens ×
+    /// the observed mean token gap — in continuous serve every noted step
+    /// is one decode tick emitting one token per active slot, so
+    /// [`Batcher::mean_step_us`] *is* the observed mean token gap.  Falls
+    /// back to the generic queue-depth hint when nothing is in flight or
+    /// nothing has ticked yet (there is no release to predict).
+    pub fn kv_retry_after_us(&self, min_remaining_tokens: Option<u64>) -> u64 {
+        match (min_remaining_tokens, self.mean_step_us()) {
+            (Some(remaining), Some(gap)) => remaining.max(1).saturating_mul(gap).max(1),
+            _ => self.shed_retry_after_us(),
         }
     }
 
@@ -165,6 +180,16 @@ impl Batcher {
 
     pub fn waiting(&self) -> usize {
         self.queue.len()
+    }
+
+    /// How long the oldest waiter has been queued at `now_us` (virtual
+    /// µs) — the serve loop's starvation signal: a head that has
+    /// out-waited the batching window with every slot busy is what the
+    /// preemption policy exists to unblock (DESIGN.md §18).
+    pub fn head_wait_us(&self, now_us: u64) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|r| r.enqueued_at_us.map(|t0| now_us.saturating_sub(t0)).unwrap_or(0))
     }
 
     /// Pop the oldest waiting request — the continuous-batching slot
@@ -339,6 +364,35 @@ mod tests {
             }
             Admission::Admitted => panic!("must shed at cap"),
         }
+    }
+
+    #[test]
+    fn kv_shed_hint_is_the_expected_next_page_release() {
+        // Regression: the kv_capacity shed used to reuse the generic
+        // queue-depth hint, which says when the QUEUE drains — useless to
+        // a client shed for PAGES.  The hint must be when the closest-to-
+        // done in-flight request releases its reservation: min remaining
+        // tokens × observed mean token gap.
+        let mut b = Batcher::new(
+            BatchPolicy::new(vec![1]).unwrap().with_queue_cap(4).with_max_wait_us(500),
+        );
+        b.note_step_time(100);
+        b.note_step_time(300); // mean token gap 200 µs
+        for i in 0..4 {
+            assert_eq!(b.push(req(i), 0), Admission::Admitted);
+        }
+        assert_eq!(b.kv_retry_after_us(Some(7)), 7 * 200, "7 tokens to the next release");
+        let generic = b.shed_retry_after_us();
+        assert_eq!(generic, 4 * 200, "queue-depth hint measures the wrong thing");
+        assert_ne!(b.kv_retry_after_us(Some(7)), generic);
+        // Nothing in flight (or nothing ticked): fall back to the generic hint.
+        assert_eq!(b.kv_retry_after_us(None), generic);
+        let idle = Batcher::new(
+            BatchPolicy::new(vec![1]).unwrap().with_queue_cap(4).with_max_wait_us(500),
+        );
+        assert_eq!(idle.kv_retry_after_us(Some(3)), 500, "pre-first-tick fallback");
+        // A zero-remaining edge still hints at least one gap.
+        assert_eq!(b.kv_retry_after_us(Some(0)), 200);
     }
 
     #[test]

@@ -136,6 +136,64 @@ impl FaultPlan {
         let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         u < self.rate
     }
+
+    /// Sub-step fault domain (salt [`MEMBER_SALT`]): a straggler hitting a
+    /// single group *member* rather than the whole step.  Only the
+    /// straggler half of the fault budget applies — a member cannot fail
+    /// the step for the rest of the batch, it can only trail it — so
+    /// roughly `rate / 2` of the (group, step, member) coordinates return
+    /// a multiplier and the rest clear.  The caller charges only the
+    /// straggled member's slot tail (DESIGN.md §18), never the whole step.
+    pub fn member_fault(&self, group: u64, step: u64, member: u64) -> Option<u32> {
+        if self.rate <= 0.0 {
+            return None;
+        }
+        let mut h = mix64(self.seed ^ MEMBER_SALT);
+        h = mix64(h ^ group.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ step.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        h = mix64(h ^ member.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= self.rate {
+            return None;
+        }
+        let k = mix64(h);
+        match k % 10 {
+            0..=4 => Some(150 + 50 * (k / 10 % 12) as u32),
+            _ => None,
+        }
+    }
+
+    /// Whether the recompute-recovery path faults for `(request,
+    /// preemption cycle)` (salt [`PREEMPT_SALT`]): the stashed generated
+    /// prefix is lost before the victim reseats, so the request fails
+    /// terminally at resume instead of re-prefilling.  Not retryable —
+    /// the state is gone.
+    pub fn preempt_fault(&self, request_id: u64, cycle: u64) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let mut h = mix64(self.seed ^ PREEMPT_SALT);
+        h = mix64(h ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ cycle.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
+
+    /// Whether the swap-in for `(request, preemption cycle)` faults (salt
+    /// [`SWAP_SALT`]): the host-side pages are lost in transit, so the
+    /// request fails terminally at resume.  Independent of the
+    /// recompute-path chain so `auto`'s pricing choice also selects which
+    /// fault surface the victim is exposed to.
+    pub fn swap_fault(&self, request_id: u64, cycle: u64) -> bool {
+        if self.rate <= 0.0 {
+            return false;
+        }
+        let mut h = mix64(self.seed ^ SWAP_SALT);
+        h = mix64(h ^ request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = mix64(h ^ cycle.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
 }
 
 /// Salt decorrelating the admission-fault chain from step faults.
@@ -143,10 +201,23 @@ pub const ADMISSION_SALT: u64 = 0xAD31_55D0_0FA1_7001;
 /// Salt decorrelating the cache-write-fault chain from both others.
 pub const CACHE_WRITE_SALT: u64 = 0xCAC8_E3B1_7E5A_1002;
 
+/// Salt decorrelating the per-member straggler chain from step faults.
+pub const MEMBER_SALT: u64 = 0x3E3B_0A57_AC6D_4003;
+/// Salt decorrelating the recompute-recovery fault chain.
+pub const PREEMPT_SALT: u64 = 0x9EE3_27F0_5CA4_D004;
+/// Salt decorrelating the swap-in fault chain.
+pub const SWAP_SALT: u64 = 0x51AB_BED5_70C1_E005;
+
 /// Metrics label for admission-path faults.
 pub const ADMISSION_FAULT_NAME: &str = "admission_fault";
 /// Metrics label for KV-cache write faults.
 pub const CACHE_WRITE_FAULT_NAME: &str = "cache_write_fault";
+/// Metrics label for single-member stragglers (sub-step fault domain).
+pub const MEMBER_FAULT_NAME: &str = "member_straggler";
+/// Metrics label for recompute-recovery faults at resume.
+pub const PREEMPT_FAULT_NAME: &str = "preempt_fault";
+/// Metrics label for swap-in faults at resume.
+pub const SWAP_FAULT_NAME: &str = "swap_fault";
 
 #[cfg(test)]
 mod tests {
@@ -237,6 +308,44 @@ mod tests {
         let other_req: Vec<bool> = (0..256u64).map(|t| p.cache_write_fault(8, t)).collect();
         assert_ne!(writes, other_req, "request coordinate must matter");
         assert_eq!(writes, (0..256u64).map(|t| p.cache_write_fault(7, t)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn member_faults_are_stragglers_only_and_member_keyed() {
+        let p = FaultPlan::new(31, 1.0);
+        let mut hit = 0usize;
+        for s in 0..512u64 {
+            if let Some(mult) = p.member_fault(0, s, 1) {
+                assert!((150..=700).contains(&mult), "mult {mult}");
+                assert_eq!(mult % 50, 0, "multiplier grid is 0.5x steps");
+                hit += 1;
+            }
+        }
+        // At rate 1.0 exactly the straggler half of the budget fires.
+        assert!((180..=330).contains(&hit), "straggler half gave {hit}/512");
+        let a: Vec<_> = (0..128u64).map(|s| p.member_fault(0, s, 0)).collect();
+        let b: Vec<_> = (0..128u64).map(|s| p.member_fault(0, s, 1)).collect();
+        assert_ne!(a, b, "member coordinate must decorrelate schedules");
+        assert_eq!(a, (0..128u64).map(|s| p.member_fault(0, s, 0)).collect::<Vec<_>>());
+        assert_eq!(FaultPlan::new(31, 0.0).member_fault(0, 0, 0), None);
+    }
+
+    #[test]
+    fn preempt_and_swap_chains_are_independent_and_cycle_keyed() {
+        let p = FaultPlan::new(37, 0.5);
+        let pre: Vec<bool> = (0..256u64).map(|c| p.preempt_fault(7, c)).collect();
+        let swp: Vec<bool> = (0..256u64).map(|c| p.swap_fault(7, c)).collect();
+        let cache: Vec<bool> = (0..256u64).map(|t| p.cache_write_fault(7, t)).collect();
+        assert_ne!(pre, swp, "salts must decorrelate the recovery chains");
+        assert_ne!(pre, cache, "salts must decorrelate the recovery chains");
+        assert_ne!(swp, cache, "salts must decorrelate the recovery chains");
+        let other: Vec<bool> = (0..256u64).map(|c| p.preempt_fault(8, c)).collect();
+        assert_ne!(pre, other, "request coordinate must matter");
+        assert_eq!(pre, (0..256u64).map(|c| p.preempt_fault(7, c)).collect::<Vec<_>>());
+        assert!(!FaultPlan::new(37, 0.0).preempt_fault(0, 0));
+        assert!(!FaultPlan::new(37, 0.0).swap_fault(0, 0));
+        assert!(FaultPlan::new(37, 1.0).preempt_fault(0, 0));
+        assert!(FaultPlan::new(37, 1.0).swap_fault(0, 0));
     }
 
     #[test]

@@ -78,10 +78,32 @@ struct Inner {
     /// Shed breakdown by cause ("queue_full", "kv_capacity",
     /// "admission_fault") — sums to `requests_shed` on the serve path.
     shed_reasons: BTreeMap<String, u64>,
+    /// Last `retry_after_us` hint issued per shed cause (the kv_capacity
+    /// hint is the expected next page release, DESIGN.md §18).
+    shed_hints_us: BTreeMap<String, u64>,
     /// KV-pager high-water mark (pages) observed by the serve loop.
     pager_peak_pages: u64,
     /// KV-pager capacity (pages) the serve loop ran against.
     pager_capacity_pages: u64,
+    /// Preemption events (a victim's pages were freed mid-flight).
+    requests_preempted: u64,
+    /// Preemptions whose priced recovery path was recompute / swap.
+    preempt_recompute: u64,
+    preempt_swap: u64,
+    /// Preempted requests successfully reseated from the resume queue.
+    requests_resumed: u64,
+    /// Preempted requests lost at resume (preempt/swap fault chains);
+    /// every one is also a `requests_failed` terminal.
+    requests_preempt_failed: u64,
+    /// Bytes moved across the host link by swap recovery (out + in).
+    swap_bytes: u64,
+    /// Virtual-clock µs charged for swap traffic (out + in).
+    swap_us_sum: u64,
+    /// Prefill ticks spent re-ingesting preempted prefixes (recompute
+    /// recovery); a subset of `prefill_steps`.
+    recompute_ticks: u64,
+    /// Virtual-clock µs those recompute ticks charged.
+    recompute_us_sum: u64,
 }
 
 /// Predicted-gain tally of one decode-group batch size.
@@ -176,8 +198,19 @@ pub struct MetricsSnapshot {
     pub repins: u64,
     pub repin_ns_sum: f64,
     pub shed_reasons: BTreeMap<String, u64>,
+    /// Last `retry_after_us` hint issued per shed cause.
+    pub shed_hints_us: BTreeMap<String, u64>,
     pub pager_peak_pages: u64,
     pub pager_capacity_pages: u64,
+    pub requests_preempted: u64,
+    pub preempt_recompute: u64,
+    pub preempt_swap: u64,
+    pub requests_resumed: u64,
+    pub requests_preempt_failed: u64,
+    pub swap_bytes: u64,
+    pub swap_us_sum: u64,
+    pub recompute_ticks: u64,
+    pub recompute_us_sum: u64,
 }
 
 impl MetricsSnapshot {
@@ -197,6 +230,16 @@ impl MetricsSnapshot {
     pub fn sheds_accounted(&self) -> bool {
         let typed: u64 = self.shed_reasons.values().sum();
         typed == 0 || typed == self.requests_shed
+    }
+
+    /// The preemption extension of the conservation law (DESIGN.md §18):
+    /// after drain every preempted request either reseated from the
+    /// resume queue or terminated on a recovery fault — preemptions only
+    /// move in-flight work, they never lose it.  The mode split must also
+    /// cover every event.
+    pub fn preemptions_accounted(&self) -> bool {
+        self.requests_preempted == self.requests_resumed + self.requests_preempt_failed
+            && self.requests_preempted == self.preempt_recompute + self.preempt_swap
     }
 
     /// Completed-output tokens per second of virtual time — the goodput
@@ -341,6 +384,53 @@ impl Metrics {
         *g.shed_reasons.entry(reason.to_string()).or_insert(0) += 1;
     }
 
+    /// Like [`Metrics::record_shed_reason`], keeping the `retry_after_us`
+    /// hint the server would hand the client (last-writer-wins per cause;
+    /// the hint is advisory telemetry, not a conservation counter).
+    pub fn record_shed_reason_with_hint(&self, reason: &str, retry_after_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_shed += 1;
+        *g.shed_reasons.entry(reason.to_string()).or_insert(0) += 1;
+        g.shed_hints_us.insert(reason.to_string(), retry_after_us);
+    }
+
+    /// Record one preemption event and which recovery path priced cheaper.
+    pub fn record_preempted(&self, swap: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_preempted += 1;
+        if swap {
+            g.preempt_swap += 1;
+        } else {
+            g.preempt_recompute += 1;
+        }
+    }
+
+    /// Record host-link swap traffic: `bytes` moved, `us` charged on the
+    /// virtual clock (one call per direction).
+    pub fn record_swap(&self, bytes: u64, us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.swap_bytes += bytes;
+        g.swap_us_sum += us;
+    }
+
+    /// Record a preempted request reseated from the resume queue.
+    pub fn record_resumed(&self) {
+        self.inner.lock().unwrap().requests_resumed += 1;
+    }
+
+    /// Record a preempted request lost at resume (recovery fault).  The
+    /// caller records the `requests_failed` terminal separately.
+    pub fn record_preempt_failed(&self) {
+        self.inner.lock().unwrap().requests_preempt_failed += 1;
+    }
+
+    /// Record one prefill tick spent re-ingesting a preempted prefix.
+    pub fn record_recompute_tick(&self, us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.recompute_ticks += 1;
+        g.recompute_us_sum += us;
+    }
+
     /// Record one continuous-serve TTFT sample (virtual µs from arrival
     /// to the first generated token).
     pub fn record_serve_ttft_us(&self, ttft_us: u64) {
@@ -414,8 +504,18 @@ impl Metrics {
             repins: g.repins,
             repin_ns_sum: g.repin_ns_sum,
             shed_reasons: g.shed_reasons.clone(),
+            shed_hints_us: g.shed_hints_us.clone(),
             pager_peak_pages: g.pager_peak_pages,
             pager_capacity_pages: g.pager_capacity_pages,
+            requests_preempted: g.requests_preempted,
+            preempt_recompute: g.preempt_recompute,
+            preempt_swap: g.preempt_swap,
+            requests_resumed: g.requests_resumed,
+            requests_preempt_failed: g.requests_preempt_failed,
+            swap_bytes: g.swap_bytes,
+            swap_us_sum: g.swap_us_sum,
+            recompute_ticks: g.recompute_ticks,
+            recompute_us_sum: g.recompute_us_sum,
         }
     }
 }
@@ -481,12 +581,35 @@ impl MetricsSnapshot {
                 self.repin_ns_sum / 1e3,
             ));
         }
+        if self.requests_preempted > 0 {
+            out.push_str(&format!(
+                "preemption: {} preempted ({} recompute, {} swap) = {} resumed + {} lost{}  \
+                 swap {} bytes (~{} us)  recompute {} ticks (~{} us)\n",
+                self.requests_preempted,
+                self.preempt_recompute,
+                self.preempt_swap,
+                self.requests_resumed,
+                self.requests_preempt_failed,
+                if self.preemptions_accounted() { "" } else { "  [IMBALANCED]" },
+                self.swap_bytes,
+                self.swap_us_sum,
+                self.recompute_ticks,
+                self.recompute_us_sum,
+            ));
+        }
         if !self.shed_reasons.is_empty() {
             let parts: Vec<String> =
                 self.shed_reasons.iter().map(|(r, n)| format!("{r}={n}")).collect();
+            let hints: Vec<String> =
+                self.shed_hints_us.iter().map(|(r, us)| format!("{r}~{us}us")).collect();
             out.push_str(&format!(
-                "shed: {}{}\n",
+                "shed: {}{}{}\n",
                 parts.join("  "),
+                if hints.is_empty() {
+                    String::new()
+                } else {
+                    format!("  (retry hints: {})", hints.join("  "))
+                },
                 if self.sheds_accounted() { "" } else { "  [IMBALANCED]" },
             ));
         }
@@ -730,6 +853,56 @@ mod tests {
         assert!(text.contains("re-pins"), "{text}");
         assert!(text.contains("kv pager: peak 7 / 64 pages"), "{text}");
         assert!(text.contains("shed: kv_capacity=1  queue_full=1"), "{text}");
+    }
+
+    #[test]
+    fn preemption_counters_conserve_and_render() {
+        let m = Metrics::new();
+        m.record_preempted(false);
+        m.record_preempted(true);
+        m.record_preempted(true);
+        m.record_swap(4096, 64);
+        m.record_swap(4096, 64);
+        m.record_recompute_tick(120);
+        m.record_recompute_tick(80);
+        m.record_resumed();
+        m.record_resumed();
+        let s = m.snapshot();
+        assert!(!s.preemptions_accounted(), "one victim still parked");
+        assert!(s.render(1.0).contains("[IMBALANCED]"));
+        m.record_preempt_failed();
+        let s2 = m.snapshot();
+        assert!(s2.preemptions_accounted(), "3 preempted = 2 resumed + 1 lost");
+        assert_eq!((s2.preempt_recompute, s2.preempt_swap), (1, 2));
+        assert_eq!((s2.swap_bytes, s2.swap_us_sum), (8192, 128));
+        assert_eq!((s2.recompute_ticks, s2.recompute_us_sum), (2, 200));
+        let text = s2.render(1.0);
+        assert!(text.contains("preemption: 3 preempted (1 recompute, 2 swap)"), "{text}");
+        assert!(text.contains("2 resumed + 1 lost"), "{text}");
+        assert!(text.contains("swap 8192 bytes"), "{text}");
+    }
+
+    #[test]
+    fn zero_preemptions_are_vacuously_accounted_and_unrendered() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert!(s.preemptions_accounted());
+        assert!(!s.render(1.0).contains("preemption:"));
+    }
+
+    #[test]
+    fn shed_hints_record_last_value_and_render() {
+        let m = Metrics::new();
+        m.record_shed_reason_with_hint("kv_capacity", 900);
+        m.record_shed_reason_with_hint("kv_capacity", 350);
+        m.record_shed_reason("queue_full");
+        let s = m.snapshot();
+        assert_eq!(s.requests_shed, 3);
+        assert_eq!(s.shed_reasons.get("kv_capacity"), Some(&2));
+        assert_eq!(s.shed_hints_us.get("kv_capacity"), Some(&350));
+        assert!(s.sheds_accounted());
+        let text = s.render(1.0);
+        assert!(text.contains("kv_capacity~350us"), "{text}");
     }
 
     #[test]

@@ -28,9 +28,10 @@
 //!   in-flight decode, KV-cache paging, SLO latencies; both share the
 //!   virtual clock, deadline enforcement, fault injection and step
 //!   retry.
-//! * [`faults`] — the seeded, coordinate-keyed fault plan (stragglers,
-//!   transient engine/client errors, admission and KV-cache-write
-//!   faults) behind the chaos harness.
+//! * [`faults`] — the seeded, coordinate-keyed fault plan (whole-step
+//!   and single-member stragglers, transient engine/client errors,
+//!   admission, KV-cache-write and preemption-recovery faults) behind
+//!   the chaos harness.
 //! * [`metrics`] — latency/throughput counters, outcome conservation
 //!   (with a typed shed breakdown on the serve path), per-rung fallback
 //!   and fault/retry counters, TTFT/token-gap percentiles and KV-pager
@@ -48,7 +49,8 @@ pub use batcher::{
 };
 pub use faults::{
     FaultKind, FaultPlan, ADMISSION_FAULT_NAME, ADMISSION_SALT, CACHE_WRITE_FAULT_NAME,
-    CACHE_WRITE_SALT,
+    CACHE_WRITE_SALT, MEMBER_FAULT_NAME, MEMBER_SALT, PREEMPT_FAULT_NAME, PREEMPT_SALT,
+    SWAP_FAULT_NAME, SWAP_SALT,
 };
 pub use metrics::{GemmScheduleStat, Metrics, MetricsSnapshot};
 pub use request::{DecodeRequest, DecodeResult, Outcome};
@@ -57,6 +59,6 @@ pub use router::{
     DEFAULT_RETUNE_BUDGET, DEFAULT_RETUNE_REFILL_INTERVAL_US,
 };
 pub use server::{
-    prefill_vector_ns, ServeOptions, ServeReport, Server, ServerConfig, DEFAULT_PREFILL_CHUNK,
-    DEFAULT_STEP_US,
+    member_tail_penalty_us, prefill_vector_ns, PreemptPolicy, ServeOptions, ServeReport, Server,
+    ServerConfig, DEFAULT_MAX_PREEMPTIONS, DEFAULT_PREFILL_CHUNK, DEFAULT_STEP_US,
 };

@@ -21,11 +21,14 @@
 use std::time::Instant;
 
 use super::batcher::{Admission, Batcher, DecodeGroup};
-use super::faults::{FaultKind, FaultPlan, ADMISSION_FAULT_NAME, CACHE_WRITE_FAULT_NAME};
+use super::faults::{
+    FaultKind, FaultPlan, ADMISSION_FAULT_NAME, CACHE_WRITE_FAULT_NAME, MEMBER_FAULT_NAME,
+    PREEMPT_FAULT_NAME, SWAP_FAULT_NAME,
+};
 use super::metrics::Metrics;
 use super::request::{DecodeRequest, DecodeResult, Outcome};
 use super::router::{LayerPlan, Router};
-use crate::analysis::layer::repin_ns;
+use crate::analysis::layer::repin_decayed_ns;
 use crate::ascend::{vecpass, MachineConfig};
 use crate::model::{kv_bytes_per_token, KvPager, DEFAULT_PAGE_BYTES};
 use crate::runtime::artifacts::DecodeConfig;
@@ -39,6 +42,82 @@ pub const DEFAULT_STEP_US: u64 = 1_000;
 
 /// Default prompt tokens one prefill tick ingests (DESIGN.md §15).
 pub const DEFAULT_PREFILL_CHUNK: usize = 128;
+
+/// How the serve loop reclaims KV pages under pressure (DESIGN.md §18).
+///
+/// With preemption off, an arrival whose worst-case reservation does not
+/// fit is a `kv_capacity` shed at the door (§15).  The other policies
+/// instead evict a resident victim — LRU by last-scheduled tick, ties to
+/// the shortest generation — and park it on a resume queue that seats
+/// ahead of new arrivals.  What differs is how the victim's KV state
+/// comes back: recompute re-prefills the prompt plus the generated
+/// prefix through the chunked prefill path; swap writes the victim's
+/// live pages across the host link and reads them back at resume;
+/// auto prices both paths per victim and takes the cheaper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptPolicy {
+    /// Never preempt: over-capacity arrivals shed at admission.
+    #[default]
+    Off,
+    /// Drop the victim's pages; re-prefill prompt + generated prefix.
+    Recompute,
+    /// Move the victim's live pages to host memory and back.
+    Swap,
+    /// Price recompute vs. swap per victim; take the cheaper path.
+    Auto,
+}
+
+impl PreemptPolicy {
+    /// CLI spellings for `--preempt`, aligned with [`PreemptPolicy::name`].
+    pub const CHOICES: &'static [(&'static [&'static str], PreemptPolicy)] = &[
+        (&["off", "none"], PreemptPolicy::Off),
+        (&["recompute"], PreemptPolicy::Recompute),
+        (&["swap"], PreemptPolicy::Swap),
+        (&["auto"], PreemptPolicy::Auto),
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PreemptPolicy::Off => "off",
+            PreemptPolicy::Recompute => "recompute",
+            PreemptPolicy::Swap => "swap",
+            PreemptPolicy::Auto => "auto",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PreemptPolicy> {
+        match name {
+            "off" => Some(PreemptPolicy::Off),
+            "recompute" => Some(PreemptPolicy::Recompute),
+            "swap" => Some(PreemptPolicy::Swap),
+            "auto" => Some(PreemptPolicy::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Surcharge one straggling batch member bills the group clock (µs).
+///
+/// A member fault serializes only the straggler's slot share of the
+/// step tail — `ceil(step/batch)` — scaled by the multiplier's excess
+/// over 1.0x, rounded up with a 1µs floor so sub-µs steps still charge
+/// (same floor as the whole-step straggler chain).  `batch = 1`
+/// degenerates to the whole-step straggler charge, which is why a
+/// member fault at `batch > 1` is always cheaper than failing the
+/// whole step for the same multiplier.
+pub fn member_tail_penalty_us(step_us: u64, batch: usize, mult_x100: u32) -> u64 {
+    step_us
+        .div_ceil(batch.max(1) as u64)
+        .saturating_mul(mult_x100.saturating_sub(100) as u64)
+        .div_ceil(100)
+        .max(1)
+}
+
+/// Default bound on how often one request may be preempted.  Each
+/// preemption increments the victim's cycle count; at the bound it stops
+/// being victim-eligible, so admission pressure can never bounce the
+/// same request forever (the no-livelock guarantee of DESIGN.md §18).
+pub const DEFAULT_MAX_PREEMPTIONS: u32 = 2;
 
 /// Knobs of one continuous-batching serve run (DESIGN.md §15).
 #[derive(Debug, Clone)]
@@ -60,6 +139,11 @@ pub struct ServeOptions {
     /// Override the KV budget outright (tests force small capacities);
     /// `None` derives it from the machine config minus `weight_bytes`.
     pub hbm_capacity_bytes: Option<u64>,
+    /// How KV pressure reclaims pages from residents (DESIGN.md §18).
+    pub preempt: PreemptPolicy,
+    /// Max preemption cycles per request before it stops being
+    /// victim-eligible (bounded preemption — no livelock).
+    pub max_preemptions: u32,
 }
 
 impl ServeOptions {
@@ -72,6 +156,8 @@ impl ServeOptions {
             page_bytes: DEFAULT_PAGE_BYTES,
             weight_bytes: 0,
             hbm_capacity_bytes: None,
+            preempt: PreemptPolicy::Off,
+            max_preemptions: DEFAULT_MAX_PREEMPTIONS,
         }
     }
 
@@ -99,6 +185,16 @@ impl ServeOptions {
         self.hbm_capacity_bytes = Some(capacity_bytes);
         self
     }
+
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> ServeOptions {
+        self.preempt = preempt;
+        self
+    }
+
+    pub fn with_max_preemptions(mut self, max_preemptions: u32) -> ServeOptions {
+        self.max_preemptions = max_preemptions;
+        self
+    }
 }
 
 /// What one continuous-batching serve run produced.
@@ -115,6 +211,14 @@ pub struct ServeReport {
     pub kv_capacity_pages: u64,
     /// Whether the pager drained to zero pages (leak check).
     pub kv_idle: bool,
+    /// Preemption cycles this run performed (0 with the policy off).
+    pub preempted: u64,
+    /// Preempted victims successfully re-seated.
+    pub resumed: u64,
+    /// Bytes moved across the host link (swap-out + swap-in).
+    pub swap_bytes: u64,
+    /// Prefill ticks spent re-ingesting preempted prefixes.
+    pub recompute_ticks: u64,
 }
 
 impl ServeReport {
@@ -134,10 +238,17 @@ impl ServeReport {
 
 impl crate::analysis::report::Report for ServeReport {
     fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "kv pager: peak {} / {} pages, drained: {}\n",
             self.kv_peak_pages, self.kv_capacity_pages, self.kv_idle
-        )
+        );
+        if self.preempted > 0 {
+            out.push_str(&format!(
+                "preemption: {} cycles, {} resumed, {} swap bytes, {} recompute ticks\n",
+                self.preempted, self.resumed, self.swap_bytes, self.recompute_ticks
+            ));
+        }
+        out
     }
 
     fn to_json(&self) -> crate::util::json::Json {
@@ -152,6 +263,10 @@ impl crate::analysis::report::Report for ServeReport {
             ("kv_peak_pages", Json::num(self.kv_peak_pages as f64)),
             ("kv_capacity_pages", Json::num(self.kv_capacity_pages as f64)),
             ("kv_idle", Json::Bool(self.kv_idle)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("resumed", Json::num(self.resumed as f64)),
+            ("swap_bytes", Json::num(self.swap_bytes as f64)),
+            ("recompute_ticks", Json::num(self.recompute_ticks as f64)),
         ])
     }
 }
@@ -160,8 +275,12 @@ impl crate::analysis::report::Report for ServeReport {
 /// a request lives in its slot from refill to terminal outcome).
 struct ServeSlot {
     req: DecodeRequest,
-    /// Prompt positions already ingested by prefill ticks.
+    /// Sequence positions already ingested by prefill ticks.
     prefilled: usize,
+    /// Positions prefill must ingest before the slot is decode-ready:
+    /// `prompt - 1` for a fresh seat, `prompt + generated - 1` for a
+    /// recompute resume re-staging its generated prefix.
+    prefill_target: usize,
     /// Next KV position to write.
     position: usize,
     /// Token the next decode tick feeds.
@@ -171,18 +290,105 @@ struct ServeSlot {
     first_token_us: Option<u64>,
     /// Ticks (prefill + decode) this slot participated in.
     ticks: usize,
+    /// Tick sequence number this slot last participated in — the LRU
+    /// coordinate victim selection minimizes over.
+    last_tick: u64,
+    /// Preemption cycles suffered so far (bounds victim eligibility).
+    preempt_count: u32,
+    /// True while a recompute resume is re-ingesting prior tokens —
+    /// those prefill ticks are the recompute overhead metric.
+    recovering: bool,
     outcome: Outcome,
     error: Option<String>,
 }
 
 impl ServeSlot {
-    /// Prompt positions still to ingest by prefill ticks.  The *final*
-    /// prompt token is fed by the slot's first decode tick — exactly the
+    /// Sequence positions still to ingest by prefill ticks.  The *final*
+    /// staged token is fed by the slot's next decode tick — exactly the
     /// position the group-mode teacher forcing feeds it at, so both
     /// paths produce bit-identical token streams.
     fn prefill_remaining(&self) -> usize {
-        self.req.prompt.len() - 1 - self.prefilled
+        self.prefill_target - self.prefilled
     }
+
+    /// Token at sequence position `pos`: the prompt, then the generated
+    /// prefix a recompute resume re-ingests (teacher-forcing its own
+    /// earlier output, so the resumed stream stays bit-identical).
+    fn ingest(&self, pos: usize) -> i32 {
+        if pos < self.req.prompt.len() {
+            self.req.prompt[pos]
+        } else {
+            self.generated[pos - self.req.prompt.len()]
+        }
+    }
+}
+
+/// How a parked victim's KV state comes back at resume.
+enum ResumeMode {
+    /// Re-prefill prompt + generated prefix through the chunk graph.
+    Recompute,
+    /// Swap the recorded live-page footprint back over the host link.
+    Swap { bytes: u64 },
+}
+
+/// A preempted request waiting to re-seat.  It holds *no* pager state —
+/// preemption dropped both pages and reservation — only the slot
+/// snapshot needed to resume, and the cycle number keying its
+/// resume-path fault chain.
+struct Parked {
+    slot: ServeSlot,
+    mode: ResumeMode,
+    cycle: u64,
+}
+
+/// LRU victim pick: the occupied, still-eligible slot least recently
+/// scheduled; ties break to the shortest generation (least work lost),
+/// then the lowest slot index.  Only decode-phase residents are
+/// eligible: a mid-prefill slot has emitted no token yet, so evicting
+/// it would push its TTFT out by a whole park/resume cycle while
+/// reclaiming pages that cost un-billed prefill work to rebuild.
+/// `None` when no resident is eligible (all mid-prefill or out of
+/// preemption budget).
+fn pick_victim(slots: &[Option<ServeSlot>], max_preemptions: u32) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, slot) in slots.iter().enumerate() {
+        let Some(s) = slot.as_ref() else { continue };
+        if s.preempt_count >= max_preemptions || s.prefill_remaining() > 0 {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let bs = slots[b].as_ref().expect("best points at an occupied slot");
+                (s.last_tick, s.generated.len()) < (bs.last_tick, bs.generated.len())
+            }
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Virtual µs to move `bytes` across the host link one way.
+fn swap_tick_us(machine: &MachineConfig, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    ((bytes as f64 / machine.host_link_bw / 1_000.0).ceil() as u64).max(1)
+}
+
+/// Packed-weight bytes one prefill chunk of width `m` streams through
+/// the cache hierarchy — the traffic that displaces decode-pinned
+/// residents, driving the churn-fraction repin decay (DESIGN.md §18).
+/// Counts the *issued* GEMMs (active experts only on MoE layers), not
+/// the resident footprint: only streamed weights churn the pin set.
+fn prefill_chunk_weight_bytes(cfg: &DecodeConfig, m: usize) -> u64 {
+    DecodeLayer::from_decode_config(cfg, m)
+        .gemm_nodes()
+        .iter()
+        .map(|node| node.count as u64 * node.problem.packed_weight_bytes())
+        .sum()
 }
 
 /// Release the slot's KV pages, record its terminal outcome, and emit
@@ -195,6 +401,14 @@ fn finalize_serve_slot(
     now_us: u64,
 ) -> DecodeResult {
     pager.release(slot.req.id);
+    finalize_unpaged(metrics, slot, now_us)
+}
+
+/// Terminal accounting for a slot the pager holds nothing for — parked
+/// victims (preemption already dropped pages and reservation) that
+/// expire or fail on the resume path.  Calling [`finalize_serve_slot`]
+/// on one would panic releasing an unknown sequence.
+fn finalize_unpaged(metrics: &Metrics, slot: ServeSlot, now_us: u64) -> DecodeResult {
     let enqueued_us = slot.req.enqueued_at_us.unwrap_or(0);
     let ttft_s = slot
         .first_token_us
@@ -581,6 +795,27 @@ impl<'rt> Server<'rt> {
             // Feed the batcher's recent-step-time window so shed hints
             // scale with how fast the queue actually drains.
             self.batcher.note_step_time(step_us);
+            // Sub-step stragglers (DESIGN.md §18): a member fault lands
+            // one slot late, serializing only that slot's share of the
+            // step tail — the group neither waits a full step nor fails.
+            // Keyed on the same step coordinate as the whole-step chain.
+            if self.faults.is_some() {
+                for (i, slot) in slots.iter().enumerate() {
+                    if slot.done {
+                        continue;
+                    }
+                    let hit = self
+                        .faults
+                        .as_ref()
+                        .and_then(|f| f.member_fault(group_seq, (steps - 1) as u64, i as u64));
+                    if let Some(mult_x100) = hit {
+                        let penalty = member_tail_penalty_us(step_us, group.batch, mult_x100);
+                        self.metrics.record_fault(MEMBER_FAULT_NAME);
+                        self.metrics.record_straggler_penalty_us(penalty);
+                        self.clock_us = self.clock_us.saturating_add(penalty);
+                    }
+                }
+            }
 
             for (i, slot) in slots.iter_mut().enumerate() {
                 if slot.done {
@@ -664,6 +899,91 @@ impl<'rt> Server<'rt> {
         }
     }
 
+    /// Price the recompute recovery path: the exact virtual cost of
+    /// re-prefilling `resident_tokens` (prompt + generated prefix), in
+    /// the same chunk schedule the resumed slot will actually run — so
+    /// the `auto` policy compares the true future bill, not an estimate.
+    fn price_recompute_us(
+        &mut self,
+        cfg: &DecodeConfig,
+        machine: &MachineConfig,
+        resident_tokens: usize,
+        chunk: usize,
+        seen_chunks: &mut std::collections::BTreeSet<usize>,
+    ) -> u64 {
+        let target = resident_tokens.saturating_sub(1);
+        let mut done = 0usize;
+        let mut total = 0u64;
+        while done < target {
+            let m = (target - done).min(chunk.max(1));
+            total = total.saturating_add(self.prefill_tick_us(cfg, machine, m, done, seen_chunks));
+            done += m;
+        }
+        total
+    }
+
+    /// Evict one LRU victim to relieve KV pressure (DESIGN.md §18):
+    /// free its pages *and* reservation, pick the recovery path per the
+    /// policy (`auto` prices swap round-trip vs. exact re-prefill), and
+    /// park it on the resume queue.  Swap-out is charged to the virtual
+    /// clock here; swap-in at the re-seat.  Returns `false` when no slot
+    /// is victim-eligible (all have exhausted their preemption budget).
+    fn preempt_victim(
+        &mut self,
+        slots: &mut [Option<ServeSlot>],
+        pager: &mut KvPager,
+        parked: &mut Vec<Parked>,
+        opts: &ServeOptions,
+        cfg: &DecodeConfig,
+        seen_chunks: &mut std::collections::BTreeSet<usize>,
+    ) -> bool {
+        let Some(idx) = pick_victim(slots, opts.max_preemptions) else {
+            return false;
+        };
+        let mut s = slots[idx].take().expect("victim slot is occupied");
+        let (_pages, bytes) = pager.preempt(s.req.id);
+        s.preempt_count += 1;
+        let cycle = s.preempt_count as u64;
+        let machine = self.router.machine().clone();
+        let swap_one_way_us = swap_tick_us(&machine, bytes);
+        let mode = match opts.preempt {
+            PreemptPolicy::Recompute => ResumeMode::Recompute,
+            PreemptPolicy::Swap => ResumeMode::Swap { bytes },
+            PreemptPolicy::Auto => {
+                let resident = s.req.prompt.len() + s.generated.len();
+                let recompute_us =
+                    self.price_recompute_us(cfg, &machine, resident, opts.chunk, seen_chunks);
+                // Swap pays the host link twice: out now, in at resume.
+                if swap_one_way_us.saturating_mul(2) <= recompute_us {
+                    ResumeMode::Swap { bytes }
+                } else {
+                    ResumeMode::Recompute
+                }
+            }
+            PreemptPolicy::Off => unreachable!("preempt_victim is never called with the policy off"),
+        };
+        match mode {
+            ResumeMode::Recompute => {
+                // Rewind to position zero; the generated prefix is kept
+                // and re-ingested by teacher-forced prefill ticks, so
+                // the resumed stream is bit-identical (§18).
+                s.recovering = true;
+                s.prefill_target = (s.req.prompt.len() + s.generated.len()).saturating_sub(1);
+                s.prefilled = 0;
+                s.position = 0;
+                s.next_input = s.req.prompt.first().copied().unwrap_or(0);
+                self.metrics.record_preempted(false);
+            }
+            ResumeMode::Swap { bytes } => {
+                self.clock_us = self.clock_us.saturating_add(swap_one_way_us);
+                self.metrics.record_swap(bytes, swap_one_way_us);
+                self.metrics.record_preempted(true);
+            }
+        }
+        parked.push(Parked { slot: s, mode, cycle });
+        true
+    }
+
     /// Continuous-batching serve loop (DESIGN.md §15): admit the arrival
     /// plan onto the virtual clock, interleave chunked prefill against
     /// in-flight decode on one fixed-batch engine, page the KV cache
@@ -681,6 +1001,9 @@ impl<'rt> Server<'rt> {
         opts: &ServeOptions,
     ) -> anyhow::Result<ServeReport> {
         anyhow::ensure!(opts.batch >= 1, "serve batch must be >= 1");
+        // Metrics accumulate across a server's lifetime; the report
+        // carries this run's preemption activity as a delta.
+        let base = self.metrics.snapshot();
         let machine = self.router.machine().clone();
         let cfg = self
             .router
@@ -713,20 +1036,26 @@ impl<'rt> Server<'rt> {
             .map(|ns| ((ns / 1_000.0).ceil() as u64).max(1))
             .unwrap_or(self.config.default_step_us);
         // The decode-steady residency pins a prefill burst invalidates:
-        // the first decode tick after any prefill tick re-streams them.
+        // the first decode tick after prefill traffic re-streams the
+        // fraction the burst actually churned (LRU half-life, §18).
         let pinned_bytes =
             routed.plan.as_ref().and_then(|p| p.residency_pinned_bytes).unwrap_or(0);
-        let repin_tick_ns = if pinned_bytes > 0 { repin_ns(&machine, pinned_bytes) } else { 0.0 };
         let group_seq = self.groups_started;
         self.groups_started += 1;
 
         let mut slots: Vec<Option<ServeSlot>> = (0..opts.batch).map(|_| None).collect();
+        let mut parked: Vec<Parked> = Vec::new();
         let mut results: Vec<DecodeResult> = Vec::new();
         let mut seen_chunks = std::collections::BTreeSet::new();
         let mut next_arrival = 0usize;
-        let mut needs_repin = false;
+        // Pinned bytes displaced by prefill traffic since the last
+        // decode tick — prices the next repin at the churned fraction.
+        let mut evicted_bytes = 0u64;
         let mut last_was_prefill = false;
         let mut decode_ticks = 0u64;
+        // Global scheduling sequence (prefill + decode ticks) — the LRU
+        // clock victim selection reads.
+        let mut tick_seq = 0u64;
 
         loop {
             // Credit the router's re-tune token bucket (DESIGN.md §15).
@@ -769,10 +1098,41 @@ impl<'rt> Server<'rt> {
                     continue;
                 }
                 // Conservative KV admission: reserve the worst case now
-                // so per-token growth can never fail mid-flight.
+                // so per-token growth can never fail mid-flight.  Under
+                // pressure the preemption policy evicts LRU victims
+                // until the reservation fits; only when no eligible
+                // victim remains (or the request could never fit even
+                // on an empty pager) does the arrival shed, carrying
+                // the expected-next-page-release retry hint.
                 if !pager.try_admit(id, a.prompt_len, a.max_new_tokens, bytes_per_token) {
-                    self.metrics.record_shed_reason("kv_capacity");
-                    continue;
+                    let worst = pager.pages_for(a.prompt_len + a.max_new_tokens, bytes_per_token);
+                    let mut admitted = false;
+                    if opts.preempt != PreemptPolicy::Off && worst <= pager.capacity_pages() {
+                        while self.preempt_victim(
+                            &mut slots,
+                            &mut pager,
+                            &mut parked,
+                            opts,
+                            &cfg,
+                            &mut seen_chunks,
+                        ) {
+                            if pager.try_admit(id, a.prompt_len, a.max_new_tokens, bytes_per_token)
+                            {
+                                admitted = true;
+                                break;
+                            }
+                        }
+                    }
+                    if !admitted {
+                        let min_remaining = slots
+                            .iter()
+                            .flatten()
+                            .map(|s| s.req.max_new_tokens.saturating_sub(s.generated.len()) as u64)
+                            .min();
+                        let hint = self.batcher.kv_retry_after_us(min_remaining);
+                        self.metrics.record_shed_reason_with_hint("kv_capacity", hint);
+                        continue;
+                    }
                 }
                 let admission = self.batcher.push(req, self.clock_us);
                 debug_assert_eq!(admission, Admission::Admitted);
@@ -803,32 +1163,164 @@ impl<'rt> Server<'rt> {
                     results.push(finalize_serve_slot(&self.metrics, &mut pager, s, self.clock_us));
                 }
             }
-
-            // 4. Refill free slots FIFO from the queue.
-            for slot in slots.iter_mut() {
-                if slot.is_none() {
-                    match self.batcher.pop_next() {
-                        Some(req) => {
-                            let next_input = req.prompt.first().copied().unwrap_or(0);
-                            *slot = Some(ServeSlot {
-                                req,
-                                prefilled: 0,
-                                position: 0,
-                                next_input,
-                                generated: Vec::new(),
-                                first_token_us: None,
-                                ticks: 0,
-                                outcome: Outcome::Completed,
-                                error: None,
-                            });
-                        }
-                        None => break,
-                    }
+            // Parked victims expire too: they hold no pages, but their
+            // deadline keeps running — a preemption that never resumes
+            // is a lost cycle in the preemption conservation law.
+            let mut pi = 0;
+            while pi < parked.len() {
+                if parked[pi].slot.req.expired(self.clock_us) {
+                    let mut s = parked.remove(pi).slot;
+                    s.outcome = Outcome::Expired;
+                    self.metrics.record_preempt_failed();
+                    results.push(finalize_unpaged(&self.metrics, s, self.clock_us));
+                } else {
+                    pi += 1;
                 }
             }
 
-            // 5. Idle: jump to the next arrival, or drain out.
+            // 3b. Anti-starvation: every slot busy and the queue head
+            // has out-waited the batching window — preempt one victim
+            // and seat the head (which already holds its KV
+            // reservation) directly into the freed slot.  The direct
+            // seat matters: the refill phase prefers the resume queue,
+            // so under light KV pressure the victim would instantly
+            // reclaim its own slot and the head would starve forever.
+            // Bounded per victim by `max_preemptions` and by victim
+            // eligibility (decode-phase only), so pressure can never
+            // livelock.
+            if opts.preempt != PreemptPolicy::Off
+                && slots.iter().all(|s| s.is_some())
+                && self
+                    .batcher
+                    .head_wait_us(self.clock_us)
+                    .map(|w| w >= self.batcher.policy.max_wait_us)
+                    .unwrap_or(false)
+                && self.preempt_victim(
+                    &mut slots,
+                    &mut pager,
+                    &mut parked,
+                    opts,
+                    &cfg,
+                    &mut seen_chunks,
+                )
+            {
+                let req = self.batcher.pop_next().expect("a starved head is queued");
+                let next_input = req.prompt.first().copied().unwrap_or(0);
+                let prefill_target = req.prompt.len().saturating_sub(1);
+                let idx = slots
+                    .iter()
+                    .position(|s| s.is_none())
+                    .expect("preempt_victim freed a slot");
+                slots[idx] = Some(ServeSlot {
+                    req,
+                    prefilled: 0,
+                    prefill_target,
+                    position: 0,
+                    next_input,
+                    generated: Vec::new(),
+                    first_token_us: None,
+                    ticks: 0,
+                    last_tick: tick_seq,
+                    preempt_count: 0,
+                    recovering: false,
+                    outcome: Outcome::Completed,
+                    error: None,
+                });
+            }
+
+            // 4. Refill free slots: the resume queue seats ahead of new
+            // arrivals, first-fit FIFO — a victim that cannot
+            // re-reserve yet never blocks one that can, nor fresh work
+            // (whose reservations it could not claim anyway).
+            'refill: for slot in slots.iter_mut() {
+                if slot.is_some() {
+                    continue;
+                }
+                let mut pi = 0;
+                while pi < parked.len() {
+                    let id = parked[pi].slot.req.id;
+                    let cycle = parked[pi].cycle;
+                    // The resume path has its own fault surface, keyed
+                    // (request, cycle): a recompute that faults lost its
+                    // recomputation; a swap that faults lost its pages.
+                    let fault_name = match parked[pi].mode {
+                        ResumeMode::Recompute => self
+                            .faults
+                            .as_ref()
+                            .map(|f| f.preempt_fault(id, cycle))
+                            .unwrap_or(false)
+                            .then_some(PREEMPT_FAULT_NAME),
+                        ResumeMode::Swap { .. } => self
+                            .faults
+                            .as_ref()
+                            .map(|f| f.swap_fault(id, cycle))
+                            .unwrap_or(false)
+                            .then_some(SWAP_FAULT_NAME),
+                    };
+                    if let Some(name) = fault_name {
+                        let mut s = parked.remove(pi).slot;
+                        self.metrics.record_fault(name);
+                        self.metrics.record_preempt_failed();
+                        s.outcome = Outcome::Failed;
+                        s.error = Some(format!("injected {name} (request {id}, cycle {cycle})"));
+                        results.push(finalize_unpaged(&self.metrics, s, self.clock_us));
+                        continue;
+                    }
+                    let (resident, remaining) = {
+                        let s = &parked[pi].slot;
+                        (
+                            s.req.prompt.len() + s.generated.len(),
+                            s.req.max_new_tokens.saturating_sub(s.generated.len()),
+                        )
+                    };
+                    // resident + remaining == prompt + max_new: the
+                    // resume re-reserves exactly the original worst
+                    // case, so a sequence that fit once always fits
+                    // again once the pager drains.
+                    if pager.try_resume(id, resident, remaining, bytes_per_token) {
+                        let p = parked.remove(pi);
+                        if let ResumeMode::Swap { bytes } = p.mode {
+                            let swap_in_us = swap_tick_us(&machine, bytes);
+                            self.clock_us = self.clock_us.saturating_add(swap_in_us);
+                            self.metrics.record_swap(bytes, swap_in_us);
+                        }
+                        self.metrics.record_resumed();
+                        let mut s = p.slot;
+                        s.last_tick = tick_seq;
+                        *slot = Some(s);
+                        continue 'refill;
+                    }
+                    pi += 1;
+                }
+                match self.batcher.pop_next() {
+                    Some(req) => {
+                        let next_input = req.prompt.first().copied().unwrap_or(0);
+                        let prefill_target = req.prompt.len().saturating_sub(1);
+                        *slot = Some(ServeSlot {
+                            req,
+                            prefilled: 0,
+                            prefill_target,
+                            position: 0,
+                            next_input,
+                            generated: Vec::new(),
+                            first_token_us: None,
+                            ticks: 0,
+                            last_tick: tick_seq,
+                            preempt_count: 0,
+                            recovering: false,
+                            outcome: Outcome::Completed,
+                            error: None,
+                        });
+                    }
+                    None => break,
+                }
+            }
+
+            // 5. Idle: jump to the next arrival, or drain out.  A
+            // non-empty resume queue with every slot idle cannot happen:
+            // an empty pager (no slots, no queue) always re-admits.
             if slots.iter().all(|s| s.is_none()) {
+                debug_assert!(parked.is_empty(), "idle slots must have drained the resume queue");
                 match plan.arrivals.get(next_arrival) {
                     Some(a) => {
                         self.clock_us = self.clock_us.max(a.at_us);
@@ -856,13 +1348,28 @@ impl<'rt> Server<'rt> {
                 };
                 let tick_us = self.prefill_tick_us(&cfg, &machine, m, kv_base, &mut seen_chunks);
                 self.clock_us = self.clock_us.saturating_add(tick_us);
+                tick_seq += 1;
+                // The chunk's streamed weights displace pinned decode
+                // residents; the next decode tick repins only what this
+                // burst actually churned (capped at the pinned set).
+                evicted_bytes = evicted_bytes
+                    .saturating_add(prefill_chunk_weight_bytes(&cfg, m))
+                    .min(pinned_bytes);
                 let s = slots[idx].as_mut().unwrap();
                 s.prefilled += m;
                 s.position += m;
-                s.next_input = s.req.prompt[s.position];
+                s.next_input = s.ingest(s.position);
                 s.ticks += 1;
+                s.last_tick = tick_seq;
                 self.metrics.record_prefill_step(m);
-                needs_repin = true;
+                if s.recovering {
+                    // Re-ingesting a preempted prefix: the recompute
+                    // overhead the §18 telemetry prices.
+                    self.metrics.record_recompute_tick(tick_us);
+                    if s.prefill_remaining() == 0 {
+                        s.recovering = false;
+                    }
+                }
                 last_was_prefill = true;
             } else {
                 // Decode tick: every slot whose prompt is fully staged.
@@ -875,6 +1382,7 @@ impl<'rt> Server<'rt> {
                     .map(|(i, _)| i)
                     .collect();
                 let tick_start_us = self.clock_us;
+                let tick_no = decode_ticks;
                 let mut tokens = vec![0i32; opts.batch];
                 let mut positions = vec![0i32; opts.batch];
                 for &i in &active {
@@ -937,6 +1445,7 @@ impl<'rt> Server<'rt> {
                     }
                 };
                 decode_ticks += 1;
+                tick_seq += 1;
                 match step_out {
                     Err(msg) => {
                         // Retries exhausted: fail the decode-ready slots
@@ -960,24 +1469,51 @@ impl<'rt> Server<'rt> {
                     }
                     Ok(out) => {
                         let mut tick_us = decode_step_us;
-                        if needs_repin {
-                            if repin_tick_ns > 0.0 {
-                                self.metrics.record_repin(repin_tick_ns);
-                                tick_us = tick_us.saturating_add(
-                                    ((repin_tick_ns / 1_000.0).ceil() as u64).max(1),
-                                );
+                        if evicted_bytes > 0 && pinned_bytes > 0 {
+                            // Churn-fraction repin (§18): the surcharge
+                            // scales with the pinned bytes the prefill
+                            // burst actually displaced, not the whole
+                            // pinned set.
+                            let repin = repin_decayed_ns(&machine, pinned_bytes, evicted_bytes);
+                            if repin > 0.0 {
+                                self.metrics.record_repin(repin);
+                                tick_us = tick_us
+                                    .saturating_add(((repin / 1_000.0).ceil() as u64).max(1));
                             }
-                            needs_repin = false;
                         }
+                        evicted_bytes = 0;
                         self.clock_us = self.clock_us.saturating_add(tick_us);
                         self.metrics.record_decode_step();
                         self.batcher.note_step_time(tick_us);
+                        // Sub-step stragglers (§18): a member fault
+                        // lands one slot late, serializing only that
+                        // slot's share of the step tail — charged on
+                        // top of the group step, never failing it.
+                        if self.faults.is_some() {
+                            for &i in &active {
+                                let hit = self
+                                    .faults
+                                    .as_ref()
+                                    .and_then(|f| f.member_fault(group_seq, tick_no, i as u64));
+                                if let Some(mult_x100) = hit {
+                                    let penalty = member_tail_penalty_us(
+                                        decode_step_us,
+                                        opts.batch,
+                                        mult_x100,
+                                    );
+                                    self.metrics.record_fault(MEMBER_FAULT_NAME);
+                                    self.metrics.record_straggler_penalty_us(penalty);
+                                    self.clock_us = self.clock_us.saturating_add(penalty);
+                                }
+                            }
+                        }
                         let mut emitted = 0usize;
                         for &i in &active {
                             let produced = out.next_tokens[i];
                             let finished = {
                                 let s = slots[i].as_mut().unwrap();
                                 s.ticks += 1;
+                                s.last_tick = tick_seq;
                                 s.position += 1;
                                 let token_index = s.generated.len() as u64;
                                 let write_fault = self
@@ -1028,11 +1564,20 @@ impl<'rt> Server<'rt> {
 
         self.metrics.set_pager_stats(pager.peak_allocated_pages(), pager.capacity_pages());
         debug_assert!(pager.idle(), "kv pager must drain with the queue");
+        let snap = self.metrics.snapshot();
+        debug_assert!(
+            snap.preemptions_accounted(),
+            "every preemption must resolve to a resume or a loss"
+        );
         Ok(ServeReport {
             horizon_us: self.clock_us,
             kv_peak_pages: pager.peak_allocated_pages(),
             kv_capacity_pages: pager.capacity_pages(),
             kv_idle: pager.idle(),
+            preempted: snap.requests_preempted - base.requests_preempted,
+            resumed: snap.requests_resumed - base.requests_resumed,
+            swap_bytes: snap.swap_bytes - base.swap_bytes,
+            recompute_ticks: snap.recompute_ticks - base.recompute_ticks,
             results,
         })
     }

@@ -24,8 +24,8 @@ use ascend_w4a16::analysis::stepsim::StepSim;
 use ascend_w4a16::analysis::{layer, report, residency, roofline, sensitivity, timeline, traffic};
 use ascend_w4a16::ascend::{BufferClass, MachineConfig, Simulator};
 use ascend_w4a16::coordinator::{
-    Admission, BatchPolicy, Batcher, FaultPlan, Router, ServeOptions, Server,
-    DEFAULT_MAX_WAIT_US, DEFAULT_PREFILL_CHUNK, DEFAULT_QUEUE_CAP,
+    Admission, BatchPolicy, Batcher, FaultPlan, PreemptPolicy, Router, ServeOptions, Server,
+    DEFAULT_MAX_PREEMPTIONS, DEFAULT_MAX_WAIT_US, DEFAULT_PREFILL_CHUNK, DEFAULT_QUEUE_CAP,
 };
 use ascend_w4a16::kernels::{self, GemmProblem, Strategy};
 use ascend_w4a16::model::llm::{self, LayerGeometry, MoeGeometry};
@@ -152,6 +152,7 @@ USAGE: repro <subcommand> [options]
              [--fault-rate P --fault-seed S]
              [--kv-capacity-bytes BYTES] [--page-bytes BYTES]
              [--precision w4a16|w4a8]
+             [--preempt off|recompute|swap|auto] [--max-preemptions N]
              [--trace IN.json] [--trace-out OUT.json]
                                    continuous-batching serve on the
                                    virtual clock: seeded Poisson arrivals
@@ -159,7 +160,12 @@ USAGE: repro <subcommand> [options]
                                    prefill interleaved against in-flight
                                    decode, KV-cache paging against the
                                    HBM budget; reports TTFT / per-token
-                                   latency percentiles and goodput"
+                                   latency percentiles and goodput.
+                                   --preempt evicts LRU victims under KV
+                                   pressure instead of shedding, resuming
+                                   them by re-prefill (recompute), host-
+                                   link paging (swap), or the cheaper of
+                                   the two (auto)"
     );
 }
 
@@ -671,6 +677,9 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     let fault_seed = args.get_usize("fault-seed", 0x5eed)? as u64;
     let kv_capacity_bytes = args.get_usize("kv-capacity-bytes", 0)? as u64;
     let page_bytes = args.get_usize("page-bytes", 0)? as u64;
+    let preempt = args.get_choice("preempt", PreemptPolicy::CHOICES, PreemptPolicy::Off)?;
+    let max_preemptions =
+        args.get_usize("max-preemptions", DEFAULT_MAX_PREEMPTIONS as usize)? as u32;
 
     let mf = Manifest::load(dir)?;
     let rt = Runtime::cpu()?;
@@ -719,6 +728,10 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     if page_bytes > 0 {
         opts = opts.with_page_bytes(page_bytes);
     }
+    if preempt != PreemptPolicy::Off {
+        println!("preemption: policy {}, max {max_preemptions} cycles/request", preempt.name());
+        opts = opts.with_preempt(preempt).with_max_preemptions(max_preemptions);
+    }
 
     let t0 = std::time::Instant::now();
     let report = server.serve_load(&plan, &opts)?;
@@ -753,6 +766,10 @@ fn cmd_serve_load(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         snapshot.sheds_accounted(),
         "typed shed breakdown does not sum to requests_shed"
+    );
+    anyhow::ensure!(
+        snapshot.preemptions_accounted(),
+        "preemption conservation violated: preempted != resumed + lost"
     );
     anyhow::ensure!(report.kv_idle, "kv pager leaked pages after drain");
     Ok(())

@@ -124,6 +124,39 @@ impl KvPager {
         seq.pages
     }
 
+    /// Preempt a resident sequence: drop its pages *and* its worst-case
+    /// reservation, exactly like [`KvPager::release`], but return the
+    /// `(pages, resident_bytes)` footprint the victim held so the caller
+    /// can price the recovery path (swap traffic is pages × page size;
+    /// recompute re-ingests the resident tokens).  The sequence re-enters
+    /// later through [`KvPager::try_resume`], so the reservation invariant
+    /// never leaks: between preempt and resume the pager holds nothing
+    /// for the victim.
+    pub fn preempt(&mut self, id: u64) -> (u64, u64) {
+        let seq = self.seqs.remove(&id).expect("preempt on unknown sequence");
+        self.reserved_pages -= seq.reserved_pages;
+        self.allocated_pages -= seq.pages;
+        (seq.pages, seq.pages * self.page_bytes)
+    }
+
+    /// Re-admit a preempted sequence at its resume footprint:
+    /// `resident_tokens` (prompt + generated prefix) allocate immediately,
+    /// `remaining_new_tokens` re-reserve the rest of the output budget.
+    /// Because `resident + remaining == prompt + max_new`, the worst case
+    /// re-reserved here never exceeds what the original admission held —
+    /// a sequence that fit once always fits again on an otherwise-empty
+    /// pager.  Returns `false` when capacity is currently occupied by
+    /// others; the caller parks the victim and retries later.
+    pub fn try_resume(
+        &mut self,
+        id: u64,
+        resident_tokens: usize,
+        remaining_new_tokens: usize,
+        bytes_per_token: u64,
+    ) -> bool {
+        self.try_admit(id, resident_tokens, remaining_new_tokens, bytes_per_token)
+    }
+
     /// Pages currently allocated to `id`, if resident.
     pub fn pages_of(&self, id: u64) -> Option<u64> {
         self.seqs.get(&id).map(|s| s.pages)
@@ -211,6 +244,43 @@ mod tests {
             assert!(now >= last, "pages must be monotone until terminal");
             last = now;
         }
+    }
+
+    #[test]
+    fn preempt_resume_conserves_the_reservation_invariant() {
+        let mut p = KvPager::new(1024, 8 * 1024);
+        // 4 prompt + 8 new at 256 B/token: worst = 3 pages, prompt = 1.
+        assert!(p.try_admit(7, 4, 8, 256));
+        for _ in 0..3 {
+            p.grow(7); // 7 tokens resident -> 2 pages
+        }
+        let (pages, bytes) = p.preempt(7);
+        assert_eq!((pages, bytes), (2, 2048));
+        assert!(p.idle(), "preempt must free pages AND reservation");
+        // Resume at 7 resident + 5 remaining: same worst case (12 tokens).
+        assert!(p.try_resume(7, 7, 5, 256));
+        assert_eq!(p.reserved_pages(), 3);
+        assert_eq!(p.pages_of(7), Some(2), "resume re-allocates the resident prefix");
+        for _ in 0..5 {
+            p.grow(7);
+        }
+        assert_eq!(p.release(7), 3);
+        assert!(p.idle());
+    }
+
+    #[test]
+    fn a_sequence_that_fit_once_fits_again_on_an_empty_pager() {
+        let mut p = KvPager::new(512, 4 * 512);
+        assert!(p.try_admit(1, 3, 5, 128)); // worst = 2 pages of 4
+        for _ in 0..2 {
+            p.grow(1);
+        }
+        p.preempt(1);
+        // Resume footprint (5 resident + 3 remaining) equals the original
+        // worst case, so an empty pager can never refuse it.
+        assert!(p.try_resume(1, 5, 3, 128));
+        p.release(1);
+        assert!(p.idle());
     }
 
     #[test]

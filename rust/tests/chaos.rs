@@ -14,8 +14,9 @@
 
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::coordinator::{
-    Admission, BatchPolicy, Batcher, DecodeRequest, DecodeResult, FaultKind, FaultPlan, Outcome,
-    RouteRung, Router, ServeOptions, Server, ADMISSION_FAULT_NAME, CACHE_WRITE_FAULT_NAME,
+    member_tail_penalty_us, Admission, BatchPolicy, Batcher, DecodeRequest, DecodeResult,
+    FaultKind, FaultPlan, Outcome, RouteRung, Router, ServeOptions, Server, ADMISSION_FAULT_NAME,
+    CACHE_WRITE_FAULT_NAME,
 };
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
@@ -523,6 +524,113 @@ fn sub_microsecond_straggler_steps_charge_positive_penalty() {
         snap.straggler_penalty_us
     );
     assert!(snap.outcomes_accounted());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn member_faults_bill_the_slot_tail_not_the_whole_step() {
+    // Satellite regression (DESIGN.md §18): a straggling batch MEMBER
+    // serializes only its own slot's share of the step tail —
+    // `ceil(step/batch)` scaled by the multiplier excess — never the
+    // whole step.  Half (a) pins the shared charge helper against the
+    // whole-step straggler charge (its `batch = 1` degenerate case)
+    // across the full multiplier grid; half (b) replays the fault chain
+    // through a real serve run and checks the billed penalty equals the
+    // slot-tail charge exactly, strictly below the whole-step cost.
+    for mult in (150u32..=700).step_by(50) {
+        for batch in [2usize, 4, 8] {
+            for step in [1u64, 3, 72, 1_000, 9_931] {
+                let member = member_tail_penalty_us(step, batch, mult);
+                let whole = member_tail_penalty_us(step, 1, mult);
+                assert!(member >= 1, "1µs floor: step {step} batch {batch} mult {mult}");
+                assert!(
+                    member <= whole,
+                    "member tail must never exceed the whole step: \
+                     step {step} batch {batch} mult {mult}: {member} > {whole}"
+                );
+                if step >= 2 * batch as u64 {
+                    assert!(
+                        member < whole,
+                        "member tail must be STRICTLY cheaper once the step \
+                         amortizes over the batch: step {step} batch {batch} \
+                         mult {mult}: {member} >= {whole}"
+                    );
+                }
+            }
+        }
+    }
+
+    // (b) End to end.  Group 192 makes the route unpriced, so every
+    // decode tick costs `default_step_us` — pinned to 1000µs for
+    // headroom.  Seed-search a plan whose ONLY fault in the live window
+    // is a single member fault: no admission faults for the two
+    // requests, no whole-step faults at attempt 0 of any tick (so no
+    // retries and no whole-step straggler charges mix into the
+    // penalty), no cache-write faults.  The billed penalty is then
+    // exactly one slot-tail charge at the chain's multiplier.
+    let dir = std::env::temp_dir().join(format!("w4a16-chaos-member-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json_with_group(192)).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mf = Manifest::load(&dir).unwrap();
+    let router = Router::new(&rt, mf, "tiny").unwrap();
+    let sizes = router.batch_sizes();
+    let mut server =
+        Server::new(router, Batcher::new(BatchPolicy::new(sizes).unwrap().with_queue_cap(64)));
+    server.config.default_step_us = 1_000;
+    let step_us = server.config.default_step_us;
+    let batch = 2usize;
+    let hits = |p: &FaultPlan| -> Vec<u32> {
+        (0..64u64)
+            .flat_map(|t| (0..batch as u64).filter_map(move |i| p.member_fault(0, t, i)))
+            .collect()
+    };
+    let plan = (0u64..200_000)
+        .map(|seed| FaultPlan::new(seed, 0.05))
+        .find(|p| {
+            let clean = (0..2u64).all(|id| !p.admission_fault(id))
+                && (0..40u64).all(|t| p.step_fault(0, t, 0).is_none())
+                && (0..2u64).all(|id| (0..26u64).all(|k| !p.cache_write_fault(id, k)));
+            let only = (0..64u64)
+                .flat_map(|t| (0..batch as u64).map(move |i| (t, i)))
+                .filter(|&(t, i)| p.member_fault(0, t, i).is_some())
+                .collect::<Vec<_>>();
+            // One hit, landing safely inside the live decode window.
+            clean && only.len() == 1 && only[0].0 < 20
+        })
+        .expect("a clean single-member-fault seed exists in range (7026)");
+    let mult = hits(&plan)[0];
+    server.set_faults(Some(plan));
+    let arrivals = ArrivalPlan {
+        arrivals: (0..2)
+            .map(|_| Arrival { at_us: 0, prompt_len: 4, max_new_tokens: 24 })
+            .collect(),
+    };
+    let opts = ServeOptions::new(batch, 4).with_queue_cap(64);
+    let report = server.serve_load(&arrivals, &opts).unwrap();
+    assert_eq!(report.outcome_counts().0, 2, "the lone member fault must not fail anything");
+    let snap = server.metrics.snapshot();
+    assert_eq!(
+        snap.faults.get("member_straggler").copied().unwrap_or(0),
+        1,
+        "the seed search guarantees exactly one member fault: {snap:?}"
+    );
+    let member = member_tail_penalty_us(step_us, batch, mult);
+    let whole = member_tail_penalty_us(step_us, 1, mult);
+    assert_eq!(
+        snap.straggler_penalty_us, member,
+        "the billed penalty must be exactly the slot-tail charge \
+         (step {step_us}µs, batch {batch}, mult {mult})"
+    );
+    assert!(
+        snap.straggler_penalty_us < whole,
+        "a member fault must bill strictly less than a whole-step \
+         straggler at the same multiplier: {} >= {whole}",
+        snap.straggler_penalty_us
+    );
+    assert!(snap.outcomes_accounted());
+    assert!(snap.preemptions_accounted());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

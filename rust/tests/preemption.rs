@@ -1,0 +1,416 @@
+//! Preemption property suite (DESIGN.md §18): the serve loop's
+//! recompute/swap/auto victim-eviction paths on synthetic (config-only)
+//! manifests, from clean runs to 50% fault rates.
+//!
+//! The invariants:
+//! * outcome conservation survives preemption — `admitted == completed +
+//!   shed + expired + failed` AND the preemption ledger closes
+//!   (`preempted == resumed + lost == recompute + swap`) at every load
+//!   level, KV budget, policy and fault rate;
+//! * the KV pager conserves pages across arbitrary preempt/resume
+//!   cycles: capacity is never exceeded, a preempted victim holds
+//!   nothing while parked, and the pager always drains to idle;
+//! * recovery is lossless — every completed request's token stream is
+//!   bit-identical to the roomy-KV no-preemption baseline, including
+//!   requests that were preempted and resumed mid-generation;
+//! * preemption is bounded — each victim is evicted at most
+//!   `max_preemptions` times, so tiny-KV overload terminates (no
+//!   livelock) with `preempted <= admitted * max_preemptions`.
+
+use ascend_w4a16::ascend::MachineConfig;
+use ascend_w4a16::coordinator::{
+    BatchPolicy, Batcher, FaultPlan, Outcome, PreemptPolicy, Router, ServeOptions, Server,
+};
+use ascend_w4a16::model::KvPager;
+use ascend_w4a16::runtime::artifacts::DecodeConfig;
+use ascend_w4a16::runtime::{Manifest, Runtime};
+use ascend_w4a16::tune::Tuner;
+use ascend_w4a16::util::proptest::forall;
+use ascend_w4a16::workload::{ArrivalPlan, DecodeLayer};
+
+/// The chaos-harness tiny model: three config-only decode artifacts
+/// (batch 1/2/4), so the router builds synthetic engines.
+fn manifest_json() -> String {
+    let artifact = |batch: usize| {
+        format!(
+            r#"    {{
+      "name": "decode_tiny_b{batch}",
+      "kind": "decode",
+      "path": "decode_tiny_b{batch}.hlo.txt",
+      "model": "tiny",
+      "batch": {batch},
+      "config": {{"vocab": 512, "hidden": 256, "layers": 2, "heads": 4,
+                 "ffn": 1024, "max_seq": 64, "group": 128, "params": 0}},
+      "inputs": [],
+      "outputs": []
+    }}"#
+        )
+    };
+    format!(
+        "{{\n  \"group\": 128,\n  \"batch_sizes\": [1, 2, 4],\n  \"paper_shapes\": [],\n  \"artifacts\": [\n{},\n{},\n{}\n  ]\n}}",
+        artifact(1),
+        artifact(2),
+        artifact(4)
+    )
+}
+
+fn decode_config() -> DecodeConfig {
+    DecodeConfig {
+        vocab: 512,
+        hidden: 256,
+        layers: 2,
+        heads: 4,
+        ffn: 1024,
+        max_seq: 64,
+        group: 128,
+        params: 0,
+        moe_experts: 0,
+        moe_topk: 0,
+    }
+}
+
+/// Manifest plus a fully warmed tune cache, so every serve run here is
+/// cache-only on the `full` rung (same scaffold as tests/serve_load.rs).
+fn preempt_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("w4a16-preempt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+    let mut tuner = Tuner::new(MachineConfig::ascend910());
+    for batch in [1usize, 2, 4, 32] {
+        let layer = DecodeLayer::from_decode_config(&decode_config(), batch);
+        for node in layer.gemm_nodes() {
+            tuner.resolve(&node.problem).unwrap();
+        }
+        for pair in layer.overlap_pairs() {
+            tuner.resolve_overlap(&pair.producer, &pair.consumer).unwrap();
+        }
+        tuner.resolve_residency(&layer).unwrap();
+    }
+    tuner.save_to(dir.join("tune_cache.json")).unwrap();
+    dir
+}
+
+fn build_server<'rt>(rt: &'rt Runtime, dir: &std::path::Path) -> Server<'rt> {
+    let mf = Manifest::load(dir).unwrap();
+    let router = Router::new(rt, mf, "tiny").unwrap();
+    let policy = BatchPolicy::new(router.batch_sizes()).unwrap();
+    Server::new(router, Batcher::new(policy))
+}
+
+const POLICIES: [PreemptPolicy; 3] =
+    [PreemptPolicy::Recompute, PreemptPolicy::Swap, PreemptPolicy::Auto];
+
+#[test]
+fn conservation_survives_preemption_under_chaos() {
+    // The §14/§15 conservation law with the preemption path armed and a
+    // fault plan firing at rates up to 50%: admission faults, step
+    // faults, cache-write faults, preempt-recovery and swap-in faults
+    // all interleave with victim eviction, and every request must still
+    // land in exactly one terminal outcome while the preemption ledger
+    // closes and the pager drains.
+    let dir = preempt_dir("chaos");
+    let rt = Runtime::cpu().unwrap();
+    forall("preempt conservation under faults", 12, |rng| {
+        let n = rng.usize_range(4, 32);
+        let mean_gap_us = 10f64.powf(rng.f64() * 2.5); // 1 µs .. ~300 µs
+        let plan = ArrivalPlan::poisson(rng.next_u64(), mean_gap_us, n, 64);
+        let policy = POLICIES[rng.usize_range(0, 2)];
+        // One worst-case tiny-model request reserves up to 32 pages of
+        // 4 KiB, so 24..72 pages spans "nothing fits" to "two fit".
+        let pages = rng.usize_range(24, 72) as u64;
+        let opts = ServeOptions::new([2usize, 4][rng.usize_range(0, 1)], rng.usize_range(1, 6))
+            .with_queue_cap(rng.usize_range(2, 16))
+            .with_page_bytes(4096)
+            .with_kv_capacity_bytes(pages * 4096)
+            .with_preempt(policy)
+            .with_max_preemptions(rng.usize_range(1, 4) as u32);
+        let mut server = build_server(&rt, &dir);
+        server.set_faults(Some(FaultPlan::new(rng.next_u64(), rng.f64() * 0.5)));
+        let report = match server.serve_load(&plan, &opts) {
+            Ok(r) => r,
+            Err(e) => return (false, format!("serve_load errored: {e:#}")),
+        };
+        if !report.kv_idle {
+            return (false, "kv pager leaked pages".into());
+        }
+        if report.kv_peak_pages > report.kv_capacity_pages {
+            return (
+                false,
+                format!("peak {} > capacity {}", report.kv_peak_pages, report.kv_capacity_pages),
+            );
+        }
+        let snap = server.metrics.snapshot();
+        if snap.requests_admitted != n as u64 {
+            return (false, format!("admitted {} != offered {n}", snap.requests_admitted));
+        }
+        if !snap.outcomes_accounted() {
+            return (
+                false,
+                format!(
+                    "admitted {} != {} + {} + {} + {}",
+                    snap.requests_admitted,
+                    snap.requests_completed,
+                    snap.requests_shed,
+                    snap.requests_expired,
+                    snap.requests_failed
+                ),
+            );
+        }
+        if !snap.sheds_accounted() {
+            return (false, format!("typed sheds must close: {:?}", snap.shed_reasons));
+        }
+        if !snap.preemptions_accounted() {
+            return (
+                false,
+                format!(
+                    "preemption ledger must close: {} preempted != {} resumed + {} lost \
+                     (or != {} recompute + {} swap)",
+                    snap.requests_preempted,
+                    snap.requests_resumed,
+                    snap.requests_preempt_failed,
+                    snap.preempt_recompute,
+                    snap.preempt_swap
+                ),
+            );
+        }
+        (true, String::new())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pager_conserves_pages_across_preempt_resume_cycles() {
+    // Direct KvPager property: random admit / grow / preempt / resume /
+    // release schedules against a shadow model.  A preempted sequence
+    // holds NOTHING (pages or reservation) while parked, a sequence that
+    // fit once always fits again on an otherwise-empty pager, and the
+    // pager ends idle once everything is released.
+    forall("pager preempt/resume conservation", 48, |rng| {
+        let page_bytes = [256u64, 1024, 4096][rng.usize_range(0, 2)];
+        let capacity_pages = rng.usize_range(8, 128) as u64;
+        let mut pager = KvPager::new(page_bytes, capacity_pages * page_bytes);
+        // id -> (tokens_now, budget_total, bytes_per_token) for resident
+        // sequences; parked carries the same tuple for preempted ones.
+        let mut resident: Vec<(u64, usize, usize, u64)> = Vec::new();
+        let mut parked: Vec<(u64, usize, usize, u64)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..rng.usize_range(20, 120) {
+            match rng.usize_range(0, 4) {
+                0 => {
+                    // Admit a fresh sequence.
+                    let prompt = rng.usize_range(1, 16);
+                    let max_new = rng.usize_range(1, 32);
+                    let bpt = [64u64, 2048][rng.usize_range(0, 1)];
+                    if pager.try_admit(next_id, prompt, max_new, bpt) {
+                        resident.push((next_id, prompt, prompt + max_new, bpt));
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    // Grow a resident sequence within its reservation.
+                    if !resident.is_empty() {
+                        let i = rng.usize_range(0, resident.len() - 1);
+                        if resident[i].1 < resident[i].2 {
+                            pager.grow(resident[i].0);
+                            resident[i].1 += 1;
+                        }
+                    }
+                }
+                2 => {
+                    // Preempt: the victim must drop its pages AND its
+                    // reservation — the returned footprint prices the
+                    // recovery path.
+                    if !resident.is_empty() {
+                        let i = rng.usize_range(0, resident.len() - 1);
+                        let held = pager.pages_of(resident[i].0).unwrap();
+                        let before = (pager.allocated_pages(), pager.reserved_pages());
+                        let (pages, bytes) = pager.preempt(resident[i].0);
+                        if pages != held || bytes != pages * page_bytes {
+                            return (
+                                false,
+                                format!("preempt returned {pages}p/{bytes}B, held {held}p"),
+                            );
+                        }
+                        if pager.allocated_pages() != before.0 - pages {
+                            return (false, "preempt must free the victim's pages".into());
+                        }
+                        if pager.reserved_pages() >= before.1 {
+                            return (false, "preempt must drop the reservation".into());
+                        }
+                        parked.push(resident.swap_remove(i));
+                    }
+                }
+                _ => {
+                    // Resume a parked victim at its resume footprint.
+                    if !parked.is_empty() {
+                        let i = rng.usize_range(0, parked.len() - 1);
+                        let (id, tokens, budget, bpt) = parked[i];
+                        if pager.try_resume(id, tokens, budget - tokens, bpt) {
+                            parked.swap_remove(i);
+                            resident.push((id, tokens, budget, bpt));
+                        }
+                    }
+                }
+            }
+            if pager.reserved_pages() > pager.capacity_pages() {
+                return (false, "reservation escaped capacity".into());
+            }
+            if pager.allocated_pages() > pager.reserved_pages() {
+                return (false, "allocation escaped the reservation".into());
+            }
+            if pager.in_flight() != resident.len() {
+                return (
+                    false,
+                    format!("{} in flight != {} resident", pager.in_flight(), resident.len()),
+                );
+            }
+        }
+        // Fit-once-fits-again: drain the residents, then every parked
+        // victim must re-seat on the now-empty pager.
+        for (id, _, _, _) in resident.drain(..) {
+            pager.release(id);
+        }
+        for (id, tokens, budget, bpt) in parked.drain(..) {
+            if !pager.try_resume(id, tokens, budget - tokens, bpt) {
+                return (false, format!("victim {id} did not fit an empty pager"));
+            }
+            pager.release(id);
+        }
+        if !pager.idle() {
+            return (
+                false,
+                format!(
+                    "pager must drain to idle: {} allocated, {} reserved, {} in flight",
+                    pager.allocated_pages(),
+                    pager.reserved_pages(),
+                    pager.in_flight()
+                ),
+            );
+        }
+        (true, String::new())
+    });
+}
+
+#[test]
+fn resumed_requests_complete_with_bit_identical_tokens() {
+    // Lossless recovery: a roomy-KV, preemption-off baseline completes
+    // all ten requests; a 32-page budget then forces victim eviction
+    // under every policy (the 80 µs mean gap lands arrivals mid-decode,
+    // so LRU victims exist).  Every request the tight run completes —
+    // which includes every preempted-and-resumed one, since nothing
+    // else is terminal here — must reproduce the baseline stream
+    // exactly: recompute re-prefills position-exact, swap restores the
+    // identical pages.
+    let dir = preempt_dir("tokens");
+    let rt = Runtime::cpu().unwrap();
+    let plan = ArrivalPlan::poisson(9, 80.0, 10, 64);
+
+    let roomy = ServeOptions::new(4, 4).with_queue_cap(1024);
+    let mut server = build_server(&rt, &dir);
+    let base = server.serve_load(&plan, &roomy).unwrap();
+    let base_snap = server.metrics.snapshot();
+    assert_eq!(base_snap.requests_completed, 10, "roomy baseline must complete everything");
+    assert_eq!(base_snap.requests_preempted, 0, "roomy baseline must never preempt");
+    let baseline: std::collections::BTreeMap<u64, Vec<i32>> =
+        base.results.into_iter().map(|r| (r.id, r.tokens)).collect();
+
+    for policy in POLICIES {
+        let opts = ServeOptions::new(4, 4)
+            .with_queue_cap(1024)
+            .with_page_bytes(4096)
+            .with_kv_capacity_bytes(32 * 4096)
+            .with_preempt(policy);
+        let mut server = build_server(&rt, &dir);
+        let report = server.serve_load(&plan, &opts).unwrap();
+        assert!(report.kv_idle, "{policy:?}: pager must drain");
+        let snap = server.metrics.snapshot();
+        assert!(snap.outcomes_accounted());
+        assert!(snap.sheds_accounted());
+        assert!(snap.preemptions_accounted());
+        assert!(
+            snap.requests_preempted > 0,
+            "{policy:?}: a 32-page budget must preempt under this plan"
+        );
+        assert_eq!(
+            snap.requests_resumed, snap.requests_preempted,
+            "{policy:?}: without faults every victim resumes"
+        );
+        match policy {
+            PreemptPolicy::Recompute => {
+                assert!(snap.recompute_ticks > 0, "recompute must re-prefill");
+                assert_eq!(snap.swap_bytes, 0, "recompute must not touch the host link");
+            }
+            PreemptPolicy::Swap => {
+                assert!(snap.swap_bytes > 0, "swap must move pages over the host link");
+                assert_eq!(snap.recompute_ticks, 0, "swap must not re-prefill");
+            }
+            _ => {}
+        }
+        let mut completed = 0usize;
+        for r in &report.results {
+            if r.outcome != Outcome::Completed {
+                continue;
+            }
+            completed += 1;
+            assert_eq!(
+                Some(&r.tokens),
+                baseline.get(&r.id),
+                "{policy:?}: request {} must reproduce the baseline stream",
+                r.id
+            );
+        }
+        assert!(completed > 0, "{policy:?}: the tight run must still complete requests");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bounded_preemption_never_livelocks_under_tiny_kv() {
+    // The no-livelock guarantee: each victim is evicted at most
+    // `max_preemptions` times, so even a budget that fits one request
+    // (or none) under sustained pressure terminates — `serve_load`
+    // returning at all is the termination proof — and the global
+    // preemption count is bounded by `admitted * max_preemptions`.
+    let dir = preempt_dir("livelock");
+    let rt = Runtime::cpu().unwrap();
+    forall("bounded preemption no livelock", 16, |rng| {
+        let n = rng.usize_range(6, 24);
+        let mean_gap_us = 10f64.powf(rng.f64() * 2.0); // 1 µs .. 100 µs
+        let plan = ArrivalPlan::poisson(rng.next_u64(), mean_gap_us, n, 64);
+        let policy = POLICIES[rng.usize_range(0, 2)];
+        let max_preemptions = rng.usize_range(1, 3) as u32;
+        let pages = rng.usize_range(24, 40) as u64;
+        let opts = ServeOptions::new(4, 4)
+            .with_queue_cap(rng.usize_range(4, 16))
+            .with_page_bytes(4096)
+            .with_kv_capacity_bytes(pages * 4096)
+            .with_preempt(policy)
+            .with_max_preemptions(max_preemptions);
+        let mut server = build_server(&rt, &dir);
+        let report = match server.serve_load(&plan, &opts) {
+            Ok(r) => r,
+            Err(e) => return (false, format!("serve_load errored: {e:#}")),
+        };
+        if !report.kv_idle {
+            return (false, "kv pager leaked pages".into());
+        }
+        let snap = server.metrics.snapshot();
+        let bound = snap.requests_admitted * max_preemptions as u64;
+        if snap.requests_preempted > bound {
+            return (
+                false,
+                format!(
+                    "preempted {} > admitted {} x max_preemptions {max_preemptions}",
+                    snap.requests_preempted, snap.requests_admitted
+                ),
+            );
+        }
+        if !snap.outcomes_accounted() || !snap.sheds_accounted() || !snap.preemptions_accounted()
+        {
+            return (false, format!("conservation must close: {snap:?}"));
+        }
+        (true, String::new())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -18,7 +18,8 @@
 
 use ascend_w4a16::ascend::MachineConfig;
 use ascend_w4a16::coordinator::{
-    BatchPolicy, Batcher, FaultPlan, Outcome, RouteRung, Router, ServeOptions, Server,
+    BatchPolicy, Batcher, FaultPlan, Outcome, PreemptPolicy, RouteRung, Router, ServeOptions,
+    Server,
 };
 use ascend_w4a16::runtime::artifacts::DecodeConfig;
 use ascend_w4a16::runtime::{Manifest, Runtime};
@@ -206,6 +207,18 @@ fn serve_conservation_property_up_to_overload() {
             let pages = rng.usize_range(1, 64) as u64;
             opts = opts.with_page_bytes(4096).with_kv_capacity_bytes(pages * 4096);
         }
+        // Half the cases arm a preemption policy, so the conservation
+        // law is exercised with victims parked, resumed and lost.
+        let preempt = [
+            PreemptPolicy::Off,
+            PreemptPolicy::Off,
+            PreemptPolicy::Recompute,
+            PreemptPolicy::Swap,
+            PreemptPolicy::Auto,
+        ][rng.usize_range(0, 4)];
+        opts = opts
+            .with_preempt(preempt)
+            .with_max_preemptions(rng.usize_range(1, 4) as u32);
         let mut server = build_server(&rt, &dir);
         if rng.f64() < 0.5 {
             server.set_faults(Some(FaultPlan::new(rng.next_u64(), rng.f64() * 0.5)));
@@ -245,6 +258,20 @@ fn serve_conservation_property_up_to_overload() {
         }
         if !snap.sheds_accounted() {
             return (false, format!("typed sheds must close: {:?}", snap.shed_reasons));
+        }
+        if !snap.preemptions_accounted() {
+            return (
+                false,
+                format!(
+                    "preemption ledger must close: {} preempted != {} resumed + {} lost \
+                     (or != {} recompute + {} swap)",
+                    snap.requests_preempted,
+                    snap.requests_resumed,
+                    snap.requests_preempt_failed,
+                    snap.preempt_recompute,
+                    snap.preempt_swap
+                ),
+            );
         }
         let terminal = snap.requests_completed + snap.requests_expired + snap.requests_failed;
         if report.results.len() as u64 != terminal {
@@ -293,6 +320,7 @@ fn tight_kv_capacity_sheds_typed_and_never_leaks() {
     let snap = server.metrics.snapshot();
     assert!(snap.outcomes_accounted());
     assert!(snap.sheds_accounted());
+    assert!(snap.preemptions_accounted());
     let kv_sheds = snap.shed_reasons.get("kv_capacity").copied().unwrap_or(0);
     assert!(kv_sheds > 0, "a 30-page budget must shed this burst: {:?}", snap.shed_reasons);
     assert!(snap.requests_completed > 0, "admitted requests must still complete");
@@ -335,6 +363,7 @@ fn serve_replay_is_bit_identical() {
         (sb.prefill_steps, sb.prefill_tokens, sb.decode_steps, sb.repins)
     );
     assert!(sa.requests_shed > 0, "this overload case must exercise shedding");
+    assert!(sa.preemptions_accounted() && sb.preemptions_accounted());
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -356,6 +385,7 @@ fn completed_tokens_are_invariant_to_prefill_chunk_size() {
         let snap = server.metrics.snapshot();
         assert_eq!(snap.requests_completed, 10, "chunk {chunk}: all must complete");
         assert!(snap.outcomes_accounted());
+        assert!(snap.preemptions_accounted());
         assert!(report.kv_idle);
         let tokens: std::collections::BTreeMap<u64, Vec<i32>> =
             report.results.into_iter().map(|r| (r.id, r.tokens)).collect();
